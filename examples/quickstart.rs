@@ -1,0 +1,61 @@
+//! Quickstart: the full PEQA lifecycle on the smallest model in ~30s.
+//!
+//!   1. pretrain (or load) an fp base model,
+//!   2. quantize it to 4-bit (Eq. 1 RTN — the Pallas `prep` artifact),
+//!   3. fine-tune ONLY the scales on wikitext-sim (Eq. 2),
+//!   4. evaluate PPL: base vs RTN-quantized vs PEQA-tuned,
+//!   5. pack to the sub-4-bit deployment file and extract the task adapter.
+//!
+//! Run: cargo run --release --example quickstart
+
+use peqa::pipeline::{self, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::new()?;
+    let size = "n1";
+
+    println!("== 1. base model ==");
+    let base = pipeline::ensure_base(&ctx, size, pipeline::pretrain_steps())?;
+    let (train_s, eval_s) = ctx.split("wikitext", pipeline::ADAPT_BYTES)?;
+    let base_ppl = pipeline::ppl(&ctx, size, &base, &eval_s)?;
+    println!("base ({} params): wikitext-sim ppl {base_ppl:.2}", base.n_params());
+
+    println!("\n== 2. RTN 4-bit quantization (no tuning) ==");
+    let rtn = pipeline::rtn_quantize(&base, 4, None)?;
+    let rtn_ppl = pipeline::ppl(&ctx, size, &rtn, &eval_s)?;
+    println!("RTN 4-bit: ppl {rtn_ppl:.2} (degraded by {:+.2})", rtn_ppl - base_ppl);
+
+    println!("\n== 3. PEQA: fine-tune only the quantization scales ==");
+    let cfg = pipeline::default_cfg("peqa_b4_gc", 120, 42);
+    let (tuned, losses) = pipeline::finetune(&ctx, size, "peqa_b4_gc", &base, &train_s, &cfg)?;
+    println!(
+        "trained {} steps, loss {:.3} → {:.3}",
+        losses.len(),
+        losses.first().unwrap(),
+        losses.last().unwrap()
+    );
+    let peqa_ppl = pipeline::ppl(&ctx, size, &tuned, &eval_s)?;
+    println!("PEQA 4-bit: ppl {peqa_ppl:.2}");
+
+    println!("\n== 4. deployment artifacts ==");
+    let dir = std::env::temp_dir().join("peqa_quickstart");
+    std::fs::create_dir_all(&dir)?;
+    let packed = tuned.save_packed(&dir.join("model.packed"), 4)?;
+    let adapter = tuned.extract_adapter(false);
+    adapter.save(&dir.join("wikitext.adapter"))?;
+    let adapter_bytes = std::fs::metadata(dir.join("wikitext.adapter"))?.len();
+    println!(
+        "packed 4-bit model: {}   (fp32 would be {})",
+        peqa::util::human_bytes(packed),
+        peqa::util::human_bytes(base.n_params() as u64 * 4),
+    );
+    println!(
+        "task adapter (just the scales): {} — swapping it IS task switching",
+        peqa::util::human_bytes(adapter_bytes)
+    );
+
+    println!("\nsummary: base {base_ppl:.2} | RTN {rtn_ppl:.2} | PEQA {peqa_ppl:.2}");
+    assert!(peqa_ppl < rtn_ppl, "PEQA tuning must beat raw RTN");
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time compile package for the PEQA reproduction.
+
+Python here runs ONCE (``make artifacts``) to author and AOT-lower the
+L2 jax model (with L1 Pallas kernels inside) to HLO text artifacts the
+rust runtime loads via PJRT. Nothing in this package runs at request time.
+"""

@@ -1,0 +1,263 @@
+"""AOT lowering: jax functions → HLO *text* artifacts + JSON metadata.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each manifest entry becomes:
+
+    artifacts/<name>.hlo.txt    the computation
+    artifacts/<name>.meta.json  io signature + ordered param table + config
+
+Usage:  python -m compile.aot [--out-dir ../artifacts] [--only REGEX]
+                              [--force] [--list]
+
+Incremental: an artifact is re-lowered only if its files are missing or
+older than any source file in compile/ (or --force).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, train
+from .configs import DISPLAY, SIZES, ArtifactSpec
+from .kernels import qmatmul, quantize_rtn
+from .model import MethodConfig
+
+
+def to_hlo_text(fn, arg_specs) -> str:
+    # keep_unused=True: the rust runtime feeds every input in the meta
+    # signature; without it XLA prunes unused params (e.g. lm_head in the
+    # hessian artifact) and the buffer counts no longer line up.
+    lowered = jax.jit(fn, keep_unused=True).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _io(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _params_meta(specs):
+    return [
+        {"name": p.name, "shape": list(p.shape), "trainable": p.trainable,
+         "init": p.init}
+        for p in specs
+    ]
+
+
+def _mcfg_meta(m: MethodConfig | None):
+    if m is None:
+        return None
+    return {
+        "kind": m.kind, "bits": m.bits, "group": m.group, "tag": m.tag(),
+        "train_scales": m.train_scales, "train_zeros": m.train_zeros,
+        "rank": m.rank, "lora_targets": list(m.lora_targets),
+        "lora_alpha": m.lora_alpha,
+    }
+
+
+def build(art: ArtifactSpec):
+    """-> (fn, arg_specs, meta dict) for one manifest entry."""
+    meta = {"name": art.name, "kind": art.kind, "batch": art.batch}
+    if art.size:
+        cfg = SIZES[art.size]
+        meta["size"] = art.size
+        meta["display"] = DISPLAY[art.size]
+        meta["model"] = {
+            "family": cfg.family, "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads, "d_ff": cfg.d_ff,
+            "seq_len": cfg.seq_len, "n_params": cfg.n_params(),
+        }
+    meta["method"] = _mcfg_meta(art.method)
+    B = art.batch
+
+    if art.kind == "train":
+        T = cfg.seq_len
+        fn, tr, fz = train.make_train_step(cfg, art.method)
+        args = [
+            _spec((B, T), jnp.int32), _spec((B, T - 1)), _spec(()), _spec(()),
+        ]
+        args += [_spec(p.shape) for p in tr]          # trainable
+        args += [_spec(p.shape) for p in fz]          # frozen
+        args += [_spec(p.shape) for p in tr] * 2      # m, v
+        meta["inputs"] = (
+            [_io("tokens", (B, T), "i32"), _io("mask", (B, T - 1)),
+             _io("lr", ()), _io("step", ())]
+            + [_io(p.name, p.shape) for p in tr]
+            + [_io(p.name, p.shape) for p in fz]
+            + [_io(f"m.{p.name}", p.shape) for p in tr]
+            + [_io(f"v.{p.name}", p.shape) for p in tr]
+        )
+        meta["outputs"] = (
+            [_io("loss", ())]
+            + [_io(p.name, p.shape) for p in tr]
+            + [_io(f"m.{p.name}", p.shape) for p in tr]
+            + [_io(f"v.{p.name}", p.shape) for p in tr]
+        )
+        meta["params_trainable"] = _params_meta(tr)
+        meta["params_frozen"] = _params_meta(fz)
+        return fn, args, meta
+
+    if art.kind == "eval":
+        T = cfg.seq_len
+        fn, table = train.make_eval(cfg)
+        args = [_spec((B, T), jnp.int32), _spec((B, T - 1))]
+        args += [_spec(p.shape) for p in table]
+        meta["inputs"] = [
+            _io("tokens", (B, T), "i32"), _io("mask", (B, T - 1)),
+        ] + [_io(p.name, p.shape) for p in table]
+        meta["outputs"] = [_io("sum_nll", ()), _io("n_tokens", ())]
+        meta["params"] = _params_meta(table)
+        return fn, args, meta
+
+    if art.kind in ("logits", "logits_q"):
+        T = cfg.seq_len
+        if art.kind == "logits":
+            fn, table = train.make_logits(cfg)
+        else:
+            fn, table = train.make_logits_q(cfg, art.method)
+        args = [_spec((B, T), jnp.int32)] + [_spec(p.shape) for p in table]
+        meta["inputs"] = [_io("tokens", (B, T), "i32")] + [
+            _io(p.name, p.shape) for p in table
+        ]
+        meta["outputs"] = [_io("logits", (B, T, cfg.vocab))]
+        meta["params"] = _params_meta(table)
+        return fn, args, meta
+
+    if art.kind == "hess":
+        T = cfg.seq_len
+        fn, table = train.make_hessians(cfg)
+        names = train.hessian_names(cfg)
+        d, f = cfg.d_model, cfg.d_ff
+        fam_shape = {"qkv": (d, d), "o": (d, d), "gateup": (d, d),
+                     "fc1": (d, d), "down": (f, f), "fc2": (f, f)}
+        args = [_spec((B, T), jnp.int32)] + [_spec(p.shape) for p in table]
+        meta["inputs"] = [_io("tokens", (B, T), "i32")] + [
+            _io(p.name, p.shape) for p in table
+        ]
+        meta["outputs"] = [
+            _io(n, fam_shape[n.rsplit(".", 1)[1]]) for n in names
+        ]
+        meta["params"] = _params_meta(table)
+        return fn, args, meta
+
+    if art.kind == "prep":
+        fn, fp_table, out_table = train.make_prep(cfg, art.method)
+        args = [_spec(p.shape) for p in fp_table]
+        meta["inputs"] = [_io(p.name, p.shape) for p in fp_table]
+        meta["outputs"] = [_io(p.name, p.shape) for p in out_table]
+        meta["params"] = _params_meta(out_table)
+        return fn, args, meta
+
+    if art.kind == "kernel":
+        ex = art.extra
+        n, m, bits, group = ex["n"], ex["m"], ex["bits"], ex["group"]
+        if ex["op"] == "qmatmul":
+            b = ex["b"]
+            G = m // group
+
+            def fn(x, wq, s, z):
+                return (qmatmul(x, wq, s, z),)
+
+            args = [_spec((b, m)), _spec((n, m)), _spec((n, G)), _spec((n, G))]
+            meta["inputs"] = [
+                _io("x", (b, m)), _io("wq", (n, m)), _io("s", (n, G)),
+                _io("z", (n, G)),
+            ]
+            meta["outputs"] = [_io("y", (b, n))]
+        elif ex["op"] == "rtn":
+            G = m // group
+
+            def fn(w):
+                return tuple(quantize_rtn(w, bits, group))
+
+            args = [_spec((n, m))]
+            meta["inputs"] = [_io("w", (n, m))]
+            meta["outputs"] = [
+                _io("wq", (n, m)), _io("s", (n, G)), _io("z", (n, G)),
+            ]
+        else:
+            raise ValueError(ex)
+        meta["extra"] = ex
+        return fn, args, meta
+
+    raise ValueError(f"unknown artifact kind {art.kind}")
+
+
+def newest_source_mtime() -> float:
+    src_dir = os.path.dirname(os.path.abspath(__file__))
+    mt = 0.0
+    for root, _, files in os.walk(src_dir):
+        for f in files:
+            if f.endswith(".py"):
+                mt = max(mt, os.path.getmtime(os.path.join(root, f)))
+    return mt
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--only", default=None, help="regex over artifact names")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    arts = configs.manifest()
+    if args.only:
+        rx = re.compile(args.only)
+        arts = [a for a in arts if rx.search(a.name)]
+    if args.list:
+        for a in arts:
+            print(f"{a.name:40s} {a.kind}")
+        return 0
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    src_mtime = newest_source_mtime()
+    done = skipped = 0
+    t0 = time.time()
+    for a in arts:
+        hlo_path = os.path.join(args.out_dir, f"{a.name}.hlo.txt")
+        meta_path = os.path.join(args.out_dir, f"{a.name}.meta.json")
+        if (
+            not args.force
+            and os.path.exists(hlo_path)
+            and os.path.exists(meta_path)
+            and os.path.getmtime(hlo_path) >= src_mtime
+        ):
+            skipped += 1
+            continue
+        t = time.time()
+        fn, arg_specs, meta = build(a)
+        text = to_hlo_text(fn, arg_specs)
+        with open(hlo_path, "w") as f:
+            f.write(text)
+        with open(meta_path, "w") as f:
+            json.dump(meta, f, indent=1)
+        done += 1
+        print(f"[aot] {a.name:44s} {len(text)/1e6:6.2f} MB  {time.time()-t:5.1f}s",
+              flush=True)
+    print(f"[aot] lowered {done}, up-to-date {skipped}, total {time.time()-t0:.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

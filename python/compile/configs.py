@@ -1,0 +1,143 @@
+"""Model families and the AOT artifact manifest.
+
+§Substitutions (DESIGN.md): the paper's 2.7B–65B model zoo is scaled to a
+family that pretrains + fine-tunes on a single CPU core while spanning a
+~30× parameter range, so every scaling trend (Tables 3/4, Fig. 2b) can be
+measured. Names carry the analogy explicitly.
+
+The MANIFEST enumerates every artifact `make artifacts` emits; each entry
+becomes artifacts/<name>.hlo.txt + artifacts/<name>.meta.json. Benches and
+the rust CLI refer to artifacts by these names.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .model import LORA_QKVO16, LORA_QV4, MethodConfig, ModelConfig
+
+TRAIN_BATCH = 8
+EVAL_BATCH = 8
+SEQ_LEN = 64
+
+# LLaMA-analog family (RMSNorm + RoPE + SwiGLU). display = paper model.
+LLAMA_SIZES: dict[str, ModelConfig] = {
+    "n1": ModelConfig("n1", "llama", 512, 64, 2, 4, 192, SEQ_LEN),
+    "n2": ModelConfig("n2", "llama", 512, 96, 2, 6, 256, SEQ_LEN),
+    "n3": ModelConfig("n3", "llama", 512, 128, 3, 8, 384, SEQ_LEN),
+    "n4": ModelConfig("n4", "llama", 512, 192, 3, 8, 512, SEQ_LEN),
+    "n5": ModelConfig("n5", "llama", 512, 256, 4, 8, 704, SEQ_LEN),
+    "n6": ModelConfig("n6", "llama", 512, 320, 4, 8, 832, SEQ_LEN),
+}
+DISPLAY = {
+    "n1": "GPT-Neo-2.7B-sim",
+    "n2": "GPT-J-6B-sim",
+    "n3": "LLaMA-7B-sim",
+    "n4": "LLaMA-13B-sim",
+    "n5": "LLaMA-30B-sim",
+    "n6": "LLaMA-65B-sim",
+    "o1": "OPT-1.3B-sim",
+    "o2": "OPT-2.7B-sim",
+    "o3": "OPT-6.7B-sim",
+    "o4": "OPT-13B-sim",
+    "o5": "OPT-30B-sim",
+    "o6": "OPT-66B-sim",
+}
+
+# OPT-analog family (LayerNorm + learned positions + GELU, d_ff = 4d).
+OPT_SIZES: dict[str, ModelConfig] = {
+    "o1": ModelConfig("o1", "opt", 512, 48, 2, 3, 192, SEQ_LEN),
+    "o2": ModelConfig("o2", "opt", 512, 64, 2, 4, 256, SEQ_LEN),
+    "o3": ModelConfig("o3", "opt", 512, 96, 2, 6, 384, SEQ_LEN),
+    "o4": ModelConfig("o4", "opt", 512, 128, 3, 8, 512, SEQ_LEN),
+    "o5": ModelConfig("o5", "opt", 512, 160, 3, 8, 640, SEQ_LEN),
+    "o6": ModelConfig("o6", "opt", 512, 192, 4, 8, 768, SEQ_LEN),
+}
+
+SIZES: dict[str, ModelConfig] = {**LLAMA_SIZES, **OPT_SIZES}
+
+# The paper's group-size sweep (Table 5), scaled: channel-wise + g∈{64,32,16}.
+GROUP_SWEEP = [64, 32, 16]
+
+
+def peqa(bits: int, group: int | None = None, **kw) -> MethodConfig:
+    return MethodConfig(kind="peqa", bits=bits, group=group, **kw)
+
+
+@dataclass(frozen=True)
+class ArtifactSpec:
+    """One AOT artifact: a jax function + shapes, lowered to HLO text."""
+
+    name: str
+    kind: str                   # train | eval | logits | logits_q | hess | prep | kernel
+    size: str | None = None     # key into SIZES
+    method: MethodConfig | None = None
+    batch: int = TRAIN_BATCH
+    extra: dict = field(default_factory=dict)
+
+
+def manifest() -> list[ArtifactSpec]:
+    """Every artifact the reproduction needs (DESIGN.md experiment index)."""
+    arts: list[ArtifactSpec] = []
+
+    def add(name, kind, size=None, method=None, **kw):
+        arts.append(ArtifactSpec(name, kind, size, method, **kw))
+
+    # -- Shared per-size artifacts (fp layout; methods dequantize into it).
+    for s in SIZES:
+        add(f"{s}_eval", "eval", s, batch=EVAL_BATCH)
+        add(f"{s}_train_full", "train", s, MethodConfig(kind="full"))
+        add(f"{s}_train_lora_qv4", "train", s, LORA_QV4)
+        add(f"{s}_train_peqa_b4_gc", "train", s, peqa(4))
+        add(f"{s}_prep_peqa_b4_gc", "prep", s, peqa(4))
+
+    llama = list(LLAMA_SIZES)
+    for s in llama:
+        # 3-bit PEQA (Tables 2/3 sub-4-bit rows) — llama family only.
+        add(f"{s}_train_peqa_b3_gc", "train", s, peqa(3))
+        add(f"{s}_prep_peqa_b3_gc", "prep", s, peqa(3))
+        # Batch logits for multiple-choice scoring (Tables 6/7) + serving.
+        add(f"{s}_logits_b8", "logits", s, batch=8)
+        # Hessian calibration (OPTQ baseline of Tables 2/3, Fig. 3).
+        add(f"{s}_hess", "hess", s, batch=EVAL_BATCH)
+        add(f"{s}_train_lora_qkvo16", "train", s, LORA_QKVO16)  # Tables 6/11
+    for s in ("n3", "n4"):
+        add(f"{s}_logits_b1", "logits", s, batch=1)  # single-stream decode
+
+    # -- QAT upper-bound baseline (Table 2: four smallest llama analogs).
+    for s in llama[:4]:
+        for bits in (3, 4):
+            add(f"{s}_train_qat_b{bits}", "train", s,
+                MethodConfig(kind="qat", bits=bits))
+
+    # -- Group-size sweep (Table 5) on the 7B/13B analogs.
+    for s in ("n3", "n4"):
+        for bits in (3, 4):
+            for g in GROUP_SWEEP:
+                add(f"{s}_train_peqa_b{bits}_g{g}", "train", s, peqa(bits, g))
+                add(f"{s}_prep_peqa_b{bits}_g{g}", "prep", s, peqa(bits, g))
+
+    # -- Zero-point ablation (Table 17) on the 7B/13B analogs, 4-bit.
+    for s in ("n3", "n4"):
+        add(f"{s}_train_peqa_zp_b4_gc", "train", s,
+            peqa(4, train_scales=False, train_zeros=True))
+        add(f"{s}_train_peqa_szp_b4_gc", "train", s,
+            peqa(4, train_scales=True, train_zeros=True))
+
+    # -- AlphaTuning baseline (Table 15) on the 1.3B-analog sizes.
+    for s in ("n1", "n2"):
+        for bits in (3, 4):
+            add(f"{s}_train_alpha_b{bits}", "train", s,
+                MethodConfig(kind="alpha", bits=bits))
+            add(f"{s}_prep_alpha_b{bits}", "prep", s,
+                MethodConfig(kind="alpha", bits=bits))
+
+    # -- Quantized-layout serving forward (Pallas qmatmul on the hot path).
+    for s in ("n3", "n4"):
+        add(f"{s}_logits_q_b4_gc_b1", "logits_q", s, peqa(4), batch=1)
+        add(f"{s}_logits_q_b4_gc_b8", "logits_q", s, peqa(4), batch=8)
+
+    # -- Standalone kernel artifacts: rust cross-checks + micro-bench.
+    add("kernel_qmatmul_256", "kernel", extra={"op": "qmatmul", "n": 256, "m": 256, "b": 8, "bits": 4, "group": 64})
+    add("kernel_rtn_256", "kernel", extra={"op": "rtn", "n": 256, "m": 256, "bits": 4, "group": 64})
+    return arts

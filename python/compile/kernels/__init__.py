@@ -1,0 +1,17 @@
+"""L1 — Pallas kernels for PEQA's compute hot-spots.
+
+``quantize.quantize_rtn``  RTN asymmetric quantization (Eq. 1 init)
+``qmatmul.qmatmul``        fused dequantize-and-matmul  y = x @ (s·(Wq−z))ᵀ
+``qmatmul.qmatmul_t``      transposed product           dx = dy @ Ŵ
+``peqa_grad.peqa_grad``    fused scale / zero-point gradients (Eq. 2 bwd)
+``ref``                    pure-jnp oracles for all of the above
+
+All kernels run interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); see DESIGN.md §Hardware-Adaptation for the TPU tiling story.
+"""
+
+from .peqa_grad import peqa_grad
+from .qmatmul import qmatmul, qmatmul_t
+from .quantize import quantize_rtn
+
+__all__ = ["quantize_rtn", "qmatmul", "qmatmul_t", "peqa_grad"]

@@ -1,0 +1,73 @@
+"""Pallas kernel for the PEQA backward pass — the *training* hot-spot.
+
+PEQA's gradient structure is what makes scale-only fine-tuning cheap
+(paper Eq. 2). With  y[b,i] = Σ_k s[i,k] · u[b,i,k]  and
+u[b,i,k] = Σ_{j∈group k} (Wq[i,j] − z[i,k]) x[b,j]:
+
+    ds[i,k] = Σ_b dy[b,i] · u[b,i,k]              (scale gradient)
+    dz[i,k] = −s[i,k] · Σ_b dy[b,i] · xsum[b,k]   (zero-point gradient)
+
+i.e. the weight-shaped gradient dŴ = dyᵀx is *never materialized*: the
+scale gradient reuses the same integer-matrix product as the forward. The
+kernel fuses the group partial product u with the dy reduction so u is
+consumed tile-by-tile in VMEM and never written to HBM.
+
+Grid = (n/nb, G); each program computes one (nb × 1) column of ds and dz.
+The B (tokens) axis is kept whole per tile: in training B = batch·seq is
+the MXU-friendly long dimension.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .util import pick_block
+
+
+def _grad_kernel(dy_ref, x_ref, wq_ref, s_ref, z_ref, ds_ref, dz_ref):
+    dy = dy_ref[...]                                  # (B, nb)
+    x = x_ref[...]                                    # (B, g)
+    wint = wq_ref[...] - z_ref[...]                   # (nb, g) integer part
+    u = jnp.dot(x, wint.T)                            # (B, nb) group partials
+    ds_ref[...] = jnp.sum(dy * u, axis=0, keepdims=True).T          # (nb, 1)
+    xsum = jnp.sum(x, axis=1, keepdims=True)                        # (B, 1)
+    dz_ref[...] = -s_ref[...] * jnp.dot(dy.T, xsum)                 # (nb, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def peqa_grad(dy, x, wq, s, z, block_n: int = 128):
+    """Fused (ds, dz) for the PEQA linear.
+
+    dy: (B, n), x: (B, m), wq: (n, m), s/z: (n, G)  →  ds, dz: (n, G).
+    dx is produced separately by qmatmul_t (it is a plain dequant-matmul).
+    """
+    B, n = dy.shape
+    _, m = x.shape
+    G = s.shape[1]
+    g = m // G
+    nb = pick_block(n, block_n)
+    ds, dz = pl.pallas_call(
+        _grad_kernel,
+        grid=(n // nb, G),
+        in_specs=[
+            pl.BlockSpec((B, nb), lambda i, k: (0, i)),
+            pl.BlockSpec((B, g), lambda i, k: (0, k)),
+            pl.BlockSpec((nb, g), lambda i, k: (i, k)),
+            pl.BlockSpec((nb, 1), lambda i, k: (i, k)),
+            pl.BlockSpec((nb, 1), lambda i, k: (i, k)),
+        ],
+        out_specs=[
+            pl.BlockSpec((nb, 1), lambda i, k: (i, k)),
+            pl.BlockSpec((nb, 1), lambda i, k: (i, k)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, G), dy.dtype),
+            jax.ShapeDtypeStruct((n, G), dy.dtype),
+        ],
+        interpret=True,
+    )(dy, x, wq, s, z)
+    return ds, dz

@@ -1,0 +1,112 @@
+"""Pallas fused dequantize-and-matmul — the deployment hot-spot.
+
+The paper's inference speedup comes from GPU weight-only-quant GEMV kernels
+(OPTQ's kernels, LUT-GEMM) that keep weights sub-4-bit in global memory and
+dequantize in registers. TPU adaptation (DESIGN.md §Hardware-Adaptation):
+
+  • HBM→VMEM streams the *quantized* weight tile (b-bit density), cutting
+    the memory-bound decode path's traffic by 16/b — the same trade the GPU
+    kernel makes with DRAM→register loads.
+  • Dequant  Ŵ = s·(Wq − z)  runs on the VPU inside VMEM, then the MXU
+    consumes the f32/bf16 tile — the analog of in-register dequant feeding
+    tensor-core WMMA.
+  • The GPU one-threadblock-per-output-tile schedule becomes
+    grid = (B/bb, n/nb, G) with the group axis as the sequential reduction
+    dimension; Pallas double-buffers the weight stream across the G axis.
+
+Two kernels live here: ``qmatmul`` (y = x @ Ŵᵀ, the forward / decode GEMV)
+and ``qmatmul_t`` (dx = dy @ Ŵ, the activation gradient in the PEQA VJP).
+Both are checked against kernels/ref.py by pytest + hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .util import pick_block
+
+
+def _qmm_kernel(x_ref, wq_ref, s_ref, z_ref, y_ref):
+    """One (bb × nb) output tile, accumulating over the group axis k."""
+    k = pl.program_id(2)
+    x = x_ref[...]                                    # (bb, g)
+    w = (wq_ref[...] - z_ref[...]) * s_ref[...]       # dequant in VMEM (nb, g)
+    part = jnp.dot(x, w.T)                            # MXU: (bb, nb)
+
+    @pl.when(k == 0)
+    def _init():
+        y_ref[...] = part
+
+    @pl.when(k != 0)
+    def _acc():
+        y_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_n"))
+def qmatmul(x, wq, s, z, block_b: int = 128, block_n: int = 128):
+    """y = x @ (s·(Wq − z))ᵀ.   x: (B, m), wq: (n, m), s/z: (n, G) → (B, n)."""
+    B, m = x.shape
+    n, m2 = wq.shape
+    assert m == m2, (x.shape, wq.shape)
+    G = s.shape[1]
+    g = m // G
+    bb = pick_block(B, block_b)
+    nb = pick_block(n, block_n)
+    return pl.pallas_call(
+        _qmm_kernel,
+        grid=(B // bb, n // nb, G),
+        in_specs=[
+            pl.BlockSpec((bb, g), lambda i, j, k: (i, k)),
+            pl.BlockSpec((nb, g), lambda i, j, k: (j, k)),
+            pl.BlockSpec((nb, 1), lambda i, j, k: (j, k)),
+            pl.BlockSpec((nb, 1), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bb, nb), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, n), x.dtype),
+        interpret=True,
+    )(x, wq, s, z)
+
+
+def _qmm_t_kernel(dy_ref, wq_ref, s_ref, z_ref, dx_ref):
+    """One (bb × g) dx tile, accumulating over row tiles r."""
+    r = pl.program_id(2)
+    dy = dy_ref[...]                                  # (bb, nr)
+    w = (wq_ref[...] - z_ref[...]) * s_ref[...]       # (nr, g)
+    part = jnp.dot(dy, w)                             # (bb, g)
+
+    @pl.when(r == 0)
+    def _init():
+        dx_ref[...] = part
+
+    @pl.when(r != 0)
+    def _acc():
+        dx_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_n"))
+def qmatmul_t(dy, wq, s, z, block_b: int = 128, block_n: int = 128):
+    """dx = dy @ (s·(Wq − z)).   dy: (B, n) → dx: (B, m)."""
+    B, n = dy.shape
+    n2, m = wq.shape
+    assert n == n2
+    G = s.shape[1]
+    g = m // G
+    bb = pick_block(B, block_b)
+    nr = pick_block(n, block_n)
+    return pl.pallas_call(
+        _qmm_t_kernel,
+        grid=(B // bb, G, n // nr),
+        in_specs=[
+            pl.BlockSpec((bb, nr), lambda i, k, r: (i, r)),
+            pl.BlockSpec((nr, g), lambda i, k, r: (r, k)),
+            pl.BlockSpec((nr, 1), lambda i, k, r: (r, k)),
+            pl.BlockSpec((nr, 1), lambda i, k, r: (r, k)),
+        ],
+        out_specs=pl.BlockSpec((bb, g), lambda i, k, r: (i, k)),
+        out_shape=jax.ShapeDtypeStruct((B, m), dy.dtype),
+        interpret=True,
+    )(dy, wq, s, z)

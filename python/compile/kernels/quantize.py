@@ -1,0 +1,68 @@
+"""Pallas RTN quantization kernel (paper Eq. 1 initialization).
+
+Grid is (row-tiles, groups): each program owns an (nb × g) slab of W —
+one quantization group for nb output channels — computes the asymmetric
+min/max scale and zero-point, and emits integer codes plus the (nb × 1)
+scale/zero-point columns.
+
+On TPU this is a single HBM→VMEM sweep of W (read once, write codes once);
+min/max/round are VPU work, there is no MXU involvement. The kernel exists
+so that quantization of a checkpoint is itself an AOT artifact the rust
+side can execute (``peqa quantize``) without Python.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import EPS
+from .util import pick_block
+
+
+def _rtn_kernel(w_ref, wq_ref, s_ref, z_ref, *, qmax: float):
+    w = w_ref[...]                                   # (nb, g)
+    # Zero forced into range — see kernels/ref.py for the rationale.
+    wmin = jnp.minimum(jnp.min(w, axis=1, keepdims=True), 0.0)
+    wmax = jnp.maximum(jnp.max(w, axis=1, keepdims=True), 0.0)
+    s = jnp.maximum((wmax - wmin) / qmax, EPS)       # (nb, 1)
+    z = jnp.clip(jnp.round(-wmin / s), 0.0, qmax)    # (nb, 1)
+    wq_ref[...] = jnp.clip(jnp.round(w / s) + z, 0.0, qmax)
+    s_ref[...] = s
+    z_ref[...] = z
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group", "row_block"))
+def quantize_rtn(w, bits: int, group: int | None = None, row_block: int = 256):
+    """Quantize (n, m) weights; returns (codes (n,m), s (n,G), z (n,G)).
+
+    Codes are returned as float32 holding exact integers in [0, 2^bits−1]
+    so that downstream HLO stays in one dtype; the rust side packs them to
+    real sub-4-bit storage (rust/src/quant/pack.rs).
+    """
+    n, m = w.shape
+    group = m if group is None else group
+    assert m % group == 0
+    ngroups = m // group
+    nb = pick_block(n, row_block)
+    kernel = functools.partial(_rtn_kernel, qmax=float(2**bits - 1))
+    wq, s, z = pl.pallas_call(
+        kernel,
+        grid=(n // nb, ngroups),
+        in_specs=[pl.BlockSpec((nb, group), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((nb, group), lambda i, j: (i, j)),
+            pl.BlockSpec((nb, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((nb, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, m), w.dtype),
+            jax.ShapeDtypeStruct((n, ngroups), w.dtype),
+            jax.ShapeDtypeStruct((n, ngroups), w.dtype),
+        ],
+        interpret=True,
+    )(w)
+    return wq, s, z

@@ -1,0 +1,121 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written in the most obvious jnp form. pytest (python/tests/test_kernels.py)
+sweeps shapes / bit-widths / group sizes with hypothesis and asserts
+allclose between kernel and oracle. The oracles are also what the L2 model
+uses when ``use_pallas=False`` (the two paths are tested equal, so either
+may be AOT-exported).
+
+Quantization convention (paper Eq. 1, asymmetric uniform, per-channel or
+per-group along the input dimension):
+
+    W ∈ R^{n×m},  group size g | m,  G = m // g
+    s, z ∈ R^{n×G}
+    Wq[i,j] = clamp(round(W[i,j]/s[i,j//g]) + z[i,j//g], 0, 2^b - 1)   (stored)
+    Ŵ[i,j] = s[i,j//g] · (Wq[i,j] − z[i,j//g])                         (Eq. 1)
+
+The paper's W̄0 is (Wq − z); we store Wq (unsigned codes) and keep z
+separate so that the Table-17 ablations (train scales, zero-points, or
+both) all read Ŵ = s·(Wq − z) with different trainable subsets.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Guard against degenerate groups (max == min): scales are clamped to EPS so
+# dequantization never divides by / multiplies with zero.
+EPS = 1e-8
+
+
+def _group(w: jnp.ndarray, group: int) -> jnp.ndarray:
+    """Reshape (n, m) -> (n, G, g) view over quantization groups."""
+    n, m = w.shape
+    assert m % group == 0, f"group {group} must divide m={m}"
+    return w.reshape(n, m // group, group)
+
+
+def quantize_rtn_ref(w: jnp.ndarray, bits: int, group: int | None = None):
+    """Round-to-nearest asymmetric quantization (paper Eq. 1 init).
+
+    Args:
+      w:     (n, m) float weights.
+      bits:  target bit-width b (2..8).
+      group: group size along m; ``None`` = per-channel (one group per row).
+
+    Returns:
+      (wq, s, z): codes (n, m) float holding integers in [0, 2^b-1],
+      scales (n, G) and zero-points (n, G) with G = m // group.
+    """
+    n, m = w.shape
+    group = m if group is None else group
+    qmax = float(2**bits - 1)
+    wg = _group(w, group)
+    # Zero is forced into the representable range (standard asymmetric
+    # min/max practice): this keeps z ∈ [0, qmax] by construction and makes
+    # constant groups reconstruct exactly instead of degenerating to s=EPS.
+    wmin = jnp.minimum(jnp.min(wg, axis=2), 0.0)
+    wmax = jnp.maximum(jnp.max(wg, axis=2), 0.0)
+    s = jnp.maximum((wmax - wmin) / qmax, EPS)
+    z = jnp.clip(jnp.round(-wmin / s), 0.0, qmax)
+    codes = jnp.clip(jnp.round(wg / s[:, :, None]) + z[:, :, None], 0.0, qmax)
+    return codes.reshape(n, m), s, z
+
+
+def dequant_ref(wq: jnp.ndarray, s: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    """Ŵ = s · (Wq − z), broadcasting (n, G) params over groups."""
+    n, m = wq.shape
+    g = m // s.shape[1]
+    what = (_group(wq, g) - z[:, :, None]) * s[:, :, None]
+    return what.reshape(n, m)
+
+
+def qmatmul_ref(x, wq, s, z):
+    """y = x @ Ŵᵀ  — the fused dequantize-and-matmul the Pallas kernel does.
+
+    x: (B, m), wq: (n, m), s/z: (n, G)  ->  y: (B, n)
+    """
+    return x @ dequant_ref(wq, s, z).T
+
+
+def qmatmul_t_ref(dy, wq, s, z):
+    """dx = dy @ Ŵ — transposed product used by the VJP. dy: (B, n) -> (B, m)."""
+    return dy @ dequant_ref(wq, s, z)
+
+
+def group_partials_ref(x, wq, z):
+    """u[b,i,k] = Σ_{j∈group k} (Wq[i,j] − z[i,k]) · x[b,j].
+
+    The per-group partial products of the *integer* matrix with the
+    activations; the PEQA forward is y = Σ_k s[:,k] ⊙ u[:,:,k] and the
+    scale gradient is ds[i,k] = Σ_b dy[b,i]·u[b,i,k] (see peqa_grad_ref).
+    x: (B, m) -> u: (B, n, G)
+    """
+    n, m = wq.shape
+    G = z.shape[1]
+    g = m // G
+    wg = _group(wq, g) - z[:, :, None]          # (n, G, g)
+    xg = x.reshape(x.shape[0], G, g)            # (B, G, g)
+    return jnp.einsum("bkj,nkj->bnk", xg, wg)   # (B, n, G)
+
+
+def peqa_grad_ref(dy, x, wq, s, z):
+    """Reference gradients for the PEQA linear (paper Eq. 2).
+
+    y[b,i] = Σ_k s[i,k] · u[b,i,k]   with u from group_partials_ref.
+
+      ds[i,k] = Σ_b dy[b,i] · u[b,i,k]
+      dz[i,k] = −s[i,k] · Σ_b dy[b,i] · (Σ_{j∈k} x[b,j])
+      dx      = dy @ Ŵ
+
+    Returns (ds, dz, dx).
+    """
+    u = group_partials_ref(x, wq, z)                     # (B, n, G)
+    ds = jnp.einsum("bi,bik->ik", dy, u)                 # (n, G)
+    G = z.shape[1]
+    g = x.shape[1] // G
+    xsum = x.reshape(x.shape[0], G, g).sum(axis=2)       # (B, G)
+    dz = -s * jnp.einsum("bi,bk->ik", dy, xsum)          # (n, G)
+    dx = qmatmul_t_ref(dy, wq, s, z)                     # (B, m)
+    return ds, dz, dx

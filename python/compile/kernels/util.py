@@ -1,0 +1,75 @@
+"""Shared helpers for the Pallas kernels: block-size selection and the
+VMEM/MXU roofline model used to pick TPU tile shapes (DESIGN.md
+§Hardware-Adaptation).
+
+All kernels in this package run under ``interpret=True`` — the CPU PJRT
+client cannot execute Mosaic custom-calls — so kernel *structure* (tiling,
+traffic) is what we optimize; wallclock is estimated from the model below.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+# TPU-v4-ish budget constants used by the roofline estimate. These are
+# deliberately round numbers: the estimate feeds a *ratio* (achieved vs
+# roofline), not absolute TFLOPs.
+VMEM_BYTES = 16 * 2**20          # per-core VMEM
+HBM_GBPS = 1200.0                # HBM bandwidth
+MXU_TFLOPS = 137.0               # bf16 peak
+
+
+def pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is ≤ ``target``.
+
+    Our model dims are powers of two (or small multiples), so this finds
+    the natural tile; worst case it degrades to 1 which is still correct.
+    """
+    if dim <= target:
+        return dim
+    for b in range(target, 0, -1):
+        if dim % b == 0:
+            return b
+    return 1
+
+
+@dataclass
+class TileEstimate:
+    """Roofline estimate for one qmatmul tile configuration."""
+
+    vmem_bytes: int        # live bytes per grid step
+    hbm_bytes: int         # total HBM traffic for the whole product
+    flops: int             # total MACs * 2
+    mxu_util: float        # flops-limited utilization estimate (0..1)
+    mem_bound_s: float     # time if purely bandwidth-bound
+    flop_bound_s: float    # time if purely MXU-bound
+
+    @property
+    def est_s(self) -> float:
+        return max(self.mem_bound_s, self.flop_bound_s)
+
+
+def qmatmul_tile_estimate(
+    batch: int, n: int, m: int, bits: int, bb: int, nb: int, gb: int
+) -> TileEstimate:
+    """VMEM footprint + traffic model for qmatmul with tiles (bb, nb, gb).
+
+    Weight codes stream HBM→VMEM at ``bits``-bit density (packed in HBM);
+    they are unpacked to int8 and dequantized to f32 in VMEM, so the VMEM
+    cost is the *unpacked* tile while the HBM cost is the packed one —
+    exactly the memory-traffic trade the paper's GPU kernels (OPTQ /
+    LUT-GEMM) make with global memory vs registers.
+    """
+    # Live per step: x tile (f32), packed+unpacked weight tile, scale/zp
+    # column, f32 dequant tile, output accumulator. Double-buffered streams
+    # count twice (Pallas pipelining).
+    w_packed = nb * gb * bits // 8
+    w_unpacked = nb * gb * 4  # dequantized f32 staged for the MXU
+    vmem = 2 * (bb * gb * 4 + w_packed) + w_unpacked + 2 * nb * 4 + bb * nb * 4
+    hbm = n * m * bits // 8 + batch * m * 4 + batch * n * 4
+    flops = 2 * batch * n * m
+    mem_s = hbm / (HBM_GBPS * 1e9)
+    flop_s = flops / (MXU_TFLOPS * 1e12)
+    # MXU prefers ≥128×128 operands; penalize thin tiles linearly.
+    util = min(1.0, bb / 128.0) * min(1.0, nb / 128.0)
+    return TileEstimate(vmem, hbm, flops, util, mem_s, flop_s)

@@ -1,0 +1,190 @@
+"""Parameter tables, initialization and method transforms.
+
+The single source of truth for *parameter layout*: ``param_table`` walks
+the model in a canonical order and emits one ``ParamSpec`` per tensor with
+its shape, trainable role and init spec. The same table drives:
+
+  • jax: packing/unpacking the flat argument list of AOT'd functions,
+  • meta.json: the ordered param manifest the rust runtime loads,
+  • rust: from-scratch init (pretraining) and checkpoint I/O.
+
+Method transforms (fp checkpoint → method representation) live here too;
+they are what the ``prep_*`` artifacts execute so the rust side can
+quantize without Python.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import peqa as P
+from .kernels import quantize_rtn
+from .model import MethodConfig, ModelConfig
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: tuple[int, ...]
+    trainable: bool
+    init: str  # "normal:<std>" | "zeros" | "ones" — used for from-scratch init
+
+
+def _linear_specs(mcfg: MethodConfig, prefix: str, n: int, m: int) -> list[ParamSpec]:
+    k = mcfg.kind
+    if k in ("full", "qat"):
+        return [ParamSpec(f"{prefix}.w", (n, m), True, "normal:0.02")]
+    if k == "lora":
+        specs = [ParamSpec(f"{prefix}.w", (n, m), False, "normal:0.02")]
+        target = prefix.split(".", 2)[-1]  # e.g. "attn.q"
+        if target in mcfg.lora_targets:
+            specs += [
+                ParamSpec(f"{prefix}.lora_a", (mcfg.rank, m), True, "normal:0.01"),
+                ParamSpec(f"{prefix}.lora_b", (n, mcfg.rank), True, "zeros"),
+            ]
+        return specs
+    if k == "peqa":
+        G = 1 if mcfg.group is None else m // mcfg.group
+        return [
+            ParamSpec(f"{prefix}.wq", (n, m), False, "zeros"),
+            ParamSpec(f"{prefix}.s", (n, G), mcfg.train_scales, "ones"),
+            ParamSpec(f"{prefix}.z", (n, G), mcfg.train_zeros, "zeros"),
+        ]
+    if k == "alpha":
+        b = mcfg.bits
+        return [
+            ParamSpec(f"{prefix}.alpha1", (n, 1), True, "ones"),
+            ParamSpec(f"{prefix}.alpha_rest", (n, b - 1), False, "ones"),
+            ParamSpec(f"{prefix}.code", (n, m, b), False, "zeros"),
+        ]
+    raise ValueError(k)
+
+
+def param_table(cfg: ModelConfig, mcfg: MethodConfig) -> list[ParamSpec]:
+    """Canonical ordered parameter manifest for (architecture, method)."""
+    base_train = mcfg.kind in ("full", "qat")
+    specs: list[ParamSpec] = [
+        ParamSpec("embed", (cfg.vocab, cfg.d_model), base_train, "normal:0.02")
+    ]
+    if cfg.family == "opt":
+        specs.append(
+            ParamSpec("pos_embed", (cfg.seq_len, cfg.d_model), base_train, "normal:0.02")
+        )
+    lin = cfg.linear_shapes()
+    for i in range(cfg.n_layers):
+        lp = f"layers.{i}"
+        for ln in ("ln1", "ln2"):
+            specs.append(ParamSpec(f"{lp}.{ln}.g", (cfg.d_model,), base_train, "ones"))
+            if cfg.family == "opt":
+                specs.append(
+                    ParamSpec(f"{lp}.{ln}.b", (cfg.d_model,), base_train, "zeros")
+                )
+        order = ["attn.q", "attn.k", "attn.v", "attn.o"] + [
+            f"mlp.{x}" for x in cfg.mlp_names()
+        ]
+        for key in order:
+            n, m = lin[key]
+            specs += _linear_specs(mcfg, f"{lp}.{key}", n, m)
+    specs.append(ParamSpec("final_norm.g", (cfg.d_model,), base_train, "ones"))
+    if cfg.family == "opt":
+        specs.append(ParamSpec("final_norm.b", (cfg.d_model,), base_train, "zeros"))
+    if not cfg.tie_head:
+        specs.append(
+            ParamSpec("lm_head", (cfg.vocab, cfg.d_model), base_train, "normal:0.02")
+        )
+    return specs
+
+
+def split_roles(table: list[ParamSpec]):
+    """-> (trainable specs, frozen specs), preserving canonical order."""
+    return [p for p in table if p.trainable], [p for p in table if not p.trainable]
+
+
+def pack(table: list[ParamSpec], Pd: dict) -> list:
+    return [Pd[p.name] for p in table]
+
+
+def unpack(table: list[ParamSpec], flat: list) -> dict:
+    assert len(table) == len(flat)
+    return {p.name: a for p, a in zip(table, flat)}
+
+
+# ---------------------------------------------------------------------------
+# Init + transforms
+# ---------------------------------------------------------------------------
+
+
+def init_from_spec(spec: ParamSpec, key) -> jnp.ndarray:
+    if spec.init.startswith("normal:"):
+        std = float(spec.init.split(":")[1])
+        return std * jax.random.normal(key, spec.shape, dtype=jnp.float32)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype=jnp.float32)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype=jnp.float32)
+    raise ValueError(spec.init)
+
+
+def init_params(cfg: ModelConfig, mcfg: MethodConfig, key) -> dict:
+    table = param_table(cfg, mcfg)
+    keys = jax.random.split(key, len(table))
+    return {p.name: init_from_spec(p, k) for p, k in zip(table, keys)}
+
+
+def linear_prefixes(cfg: ModelConfig) -> list[str]:
+    """Dotted prefixes of every quantizable projection, canonical order."""
+    order = ["attn.q", "attn.k", "attn.v", "attn.o"] + [
+        f"mlp.{x}" for x in cfg.mlp_names()
+    ]
+    return [f"layers.{i}.{k}" for i in range(cfg.n_layers) for k in order]
+
+
+def to_peqa(cfg: ModelConfig, mcfg: MethodConfig, fp: dict) -> dict:
+    """fp checkpoint → PEQA params: quantize every projection (Eq. 1 RTN init),
+    copy everything else (frozen)."""
+    out = dict(fp)
+    for lp in linear_prefixes(cfg):
+        w = out.pop(f"{lp}.w")
+        wq, s, z = quantize_rtn(w, mcfg.bits, mcfg.group)
+        out[f"{lp}.wq"], out[f"{lp}.s"], out[f"{lp}.z"] = wq, s, z
+    return out
+
+
+def to_lora(cfg: ModelConfig, mcfg: MethodConfig, fp: dict, key) -> dict:
+    out = dict(fp)
+    for lp in linear_prefixes(cfg):
+        target = lp.split(".", 2)[-1]
+        if target in mcfg.lora_targets:
+            n, m = fp[f"{lp}.w"].shape
+            key, k1 = jax.random.split(key)
+            out[f"{lp}.lora_a"] = 0.01 * jax.random.normal(k1, (mcfg.rank, m))
+            out[f"{lp}.lora_b"] = jnp.zeros((n, mcfg.rank))
+    return out
+
+
+def to_alpha(cfg: ModelConfig, mcfg: MethodConfig, fp: dict) -> dict:
+    out = dict(fp)
+    for lp in linear_prefixes(cfg):
+        w = out.pop(f"{lp}.w")
+        alpha, code = P.bcq_quantize(w, mcfg.bits)
+        out[f"{lp}.alpha1"] = alpha[:, :1]
+        out[f"{lp}.alpha_rest"] = alpha[:, 1:]
+        out[f"{lp}.code"] = code
+    return out
+
+
+def merge_lora(cfg: ModelConfig, mcfg: MethodConfig, params: dict) -> dict:
+    """Fold LoRA adapters back into the base weights (deployment merge)."""
+    out = {}
+    for name, a in params.items():
+        if name.endswith(".lora_a") or name.endswith(".lora_b"):
+            continue
+        out[name] = a
+    for lp in linear_prefixes(cfg):
+        if f"{lp}.lora_a" in params:
+            a, b = params[f"{lp}.lora_a"], params[f"{lp}.lora_b"]
+            out[f"{lp}.w"] = params[f"{lp}.w"] + b @ a * (mcfg.lora_alpha / mcfg.rank)
+    return out

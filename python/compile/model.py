@@ -1,0 +1,228 @@
+"""L2 — the transformer language model every experiment runs on.
+
+Two architecture families (DESIGN §Substitutions):
+
+  • ``llama``: RMSNorm, rotary positions, SwiGLU MLP — the analog of the
+    GPT-Neo/GPT-J/LLaMA models of Tables 2/3/5/6/7.
+  • ``opt``:   LayerNorm(+bias), learned positions, GELU MLP — the analog
+    of the OPT family of Table 10 / Appendix E.
+
+The seven projections per block (q,k,v,o + the MLP's 2–3) are "linears"
+whose representation depends on the fine-tuning method (methods.py):
+raw fp (full/LoRA/QAT), PEQA (wq, s, z), or BCQ (alpha, codes). Embeddings,
+norms and the LM head stay fp — matching the paper, which quantizes the
+fully-connected layers of the blocks.
+
+Params are a flat dict keyed by dotted names ("layers.0.attn.q.w"); the
+canonical ordering lives in methods.param_table and is exported to the
+rust side through each artifact's meta.json.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from . import peqa as P
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture description (also serialized into meta.json)."""
+
+    name: str
+    family: str = "llama"       # "llama" | "opt"
+    vocab: int = 512
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 192
+    seq_len: int = 64           # training/eval context length
+    tie_head: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def mlp_names(self):
+        return ("gate", "up", "down") if self.family == "llama" else ("fc1", "fc2")
+
+    def linear_shapes(self) -> dict[str, tuple[int, int]]:
+        """(out, in) shapes of the quantizable projections of one block."""
+        d, f = self.d_model, self.d_ff
+        shapes = {"attn.q": (d, d), "attn.k": (d, d), "attn.v": (d, d), "attn.o": (d, d)}
+        if self.family == "llama":
+            shapes.update({"mlp.gate": (f, d), "mlp.up": (f, d), "mlp.down": (d, f)})
+        else:
+            shapes.update({"mlp.fc1": (f, d), "mlp.fc2": (d, f)})
+        return shapes
+
+    def n_params(self) -> int:
+        """Total parameter count of the fp model (for Table 4 accounting)."""
+        per_block = sum(n * m for n, m in self.linear_shapes().values())
+        per_block += 2 * self.d_model                       # two norms
+        if self.family == "opt":
+            per_block += 2 * self.d_model                   # norm biases
+        total = self.n_layers * per_block
+        total += self.vocab * self.d_model                  # embedding
+        if not self.tie_head:
+            total += self.vocab * self.d_model              # lm head
+        total += self.d_model                               # final norm
+        if self.family == "opt":
+            total += self.seq_len * self.d_model + self.d_model  # pos emb + bias
+        return total
+
+
+@dataclass(frozen=True)
+class MethodConfig:
+    """How the block projections are represented / which params train."""
+
+    kind: str = "full"          # full | lora | qat | peqa | alpha
+    bits: int = 4               # qat/peqa/alpha
+    group: int | None = None    # None = per-channel
+    # peqa ablation (Table 17): train scales, zero-points, or both
+    train_scales: bool = True
+    train_zeros: bool = False
+    # lora
+    rank: int = 4
+    lora_targets: tuple[str, ...] = ("attn.q", "attn.v")
+    lora_alpha: float = 8.0
+
+    def tag(self) -> str:
+        if self.kind == "full":
+            return "full"
+        if self.kind == "lora":
+            t = "qv" if self.lora_targets == ("attn.q", "attn.v") else "qkvo"
+            return f"lora_{t}{self.rank}"
+        g = "gc" if self.group is None else f"g{self.group}"
+        if self.kind == "peqa":
+            v = {(True, False): "", (False, True): "_zp", (True, True): "_szp"}[
+                (self.train_scales, self.train_zeros)
+            ]
+            return f"peqa{v}_b{self.bits}_{g}"
+        return f"{self.kind}_b{self.bits}_{g}"
+
+
+LORA_QV4 = MethodConfig(kind="lora", rank=4, lora_targets=("attn.q", "attn.v"))
+LORA_QKVO16 = MethodConfig(
+    kind="lora", rank=16, lora_targets=("attn.q", "attn.k", "attn.v", "attn.o"),
+    lora_alpha=32.0,
+)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _rms_norm(x, g, eps=1e-6):
+    return g * x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return g * (x - mu) * jax.lax.rsqrt(var + eps) + b
+
+
+def _rope(x, positions):
+    """Rotary embedding over the last dim of x: (B, T, H, hd)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[:, :, None, None].astype(jnp.float32) * freqs  # (B,T,1,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _norm(cfg, Pd, prefix, x):
+    if cfg.family == "llama":
+        return _rms_norm(x, Pd[f"{prefix}.g"])
+    return _layer_norm(x, Pd[f"{prefix}.g"], Pd[f"{prefix}.b"])
+
+
+def _linear(mcfg: MethodConfig, Pd, prefix: str, x):
+    """Apply one quantizable projection in its method representation."""
+    k = mcfg.kind
+    if k in ("full",):
+        return x @ Pd[f"{prefix}.w"].T
+    if k == "qat":
+        return P.qat_linear(x, Pd[f"{prefix}.w"], mcfg.bits, mcfg.group)
+    if k == "lora":
+        y = x @ Pd[f"{prefix}.w"].T
+        if f"{prefix}.lora_a" in Pd:
+            a, b = Pd[f"{prefix}.lora_a"], Pd[f"{prefix}.lora_b"]
+            y = y + (x @ a.T) @ b.T * (mcfg.lora_alpha / mcfg.rank)
+        return y
+    if k == "peqa":
+        return P.peqa_linear(x, Pd[f"{prefix}.wq"], Pd[f"{prefix}.s"], Pd[f"{prefix}.z"])
+    if k == "alpha":
+        # α is stored split so only the first column trains (Table 15).
+        alpha = jnp.concatenate(
+            [Pd[f"{prefix}.alpha1"], Pd[f"{prefix}.alpha_rest"]], axis=1
+        )
+        return P.alphatuning_linear(x, alpha, Pd[f"{prefix}.code"])
+    raise ValueError(f"unknown method kind {k}")
+
+
+def _attention(cfg, mcfg, Pd, lp, x, positions):
+    B, T, d = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    q = _linear(mcfg, Pd, f"{lp}.attn.q", x).reshape(B, T, H, hd)
+    k = _linear(mcfg, Pd, f"{lp}.attn.k", x).reshape(B, T, H, hd)
+    v = _linear(mcfg, Pd, f"{lp}.attn.v", x).reshape(B, T, H, hd)
+    if cfg.family == "llama":
+        q, k = _rope(q, positions), _rope(k, positions)
+    att = jnp.einsum("bthd,bshd->bhts", q, k) / jnp.sqrt(float(hd))
+    causal = jnp.tril(jnp.ones((T, T), dtype=bool))
+    att = jnp.where(causal[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", att, v).reshape(B, T, d)
+    return _linear(mcfg, Pd, f"{lp}.attn.o", out)
+
+
+def _mlp(cfg, mcfg, Pd, lp, x):
+    if cfg.family == "llama":
+        gate = _linear(mcfg, Pd, f"{lp}.mlp.gate", x)
+        up = _linear(mcfg, Pd, f"{lp}.mlp.up", x)
+        return _linear(mcfg, Pd, f"{lp}.mlp.down", jax.nn.silu(gate) * up)
+    h = jax.nn.gelu(_linear(mcfg, Pd, f"{lp}.mlp.fc1", x))
+    return _linear(mcfg, Pd, f"{lp}.mlp.fc2", h)
+
+
+def forward(cfg: ModelConfig, mcfg: MethodConfig, Pd: dict, tokens):
+    """tokens (B, T) int32 → logits (B, T, vocab) float32."""
+    B, T = tokens.shape
+    x = Pd["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    if cfg.family == "opt":
+        x = x + Pd["pos_embed"][:T][None]
+    for i in range(cfg.n_layers):
+        lp = f"layers.{i}"
+        x = x + _attention(cfg, mcfg, Pd, lp, _norm(cfg, Pd, f"{lp}.ln1", x), positions)
+        x = x + _mlp(cfg, mcfg, Pd, lp, _norm(cfg, Pd, f"{lp}.ln2", x))
+    x = _norm(cfg, Pd, "final_norm", x)
+    head = Pd["embed"] if cfg.tie_head else Pd["lm_head"]
+    return x @ head.T
+
+
+def nll(cfg, mcfg, Pd, tokens, loss_mask):
+    """Masked next-token NLL.
+
+    tokens (B, T) int32; loss_mask (B, T−1) float32 weighting each predicted
+    position. Returns (sum_nll, sum_mask) so callers can form means/PPL.
+    """
+    logits = forward(cfg, mcfg, Pd, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tok_logp = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.sum(tok_logp * loss_mask), jnp.sum(loss_mask)
+
+
+def mean_nll(cfg, mcfg, Pd, tokens, loss_mask):
+    total, count = nll(cfg, mcfg, Pd, tokens, loss_mask)
+    return total / jnp.maximum(count, 1.0)

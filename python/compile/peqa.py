@@ -1,0 +1,150 @@
+"""PEQA linear layer (paper Eq. 2) and the other quantized-linear methods.
+
+The core contribution: a fully-connected layer whose weight is a *frozen*
+integer matrix Wq with trainable quantization scales s (and optionally
+zero-points z):
+
+    y = x @ (s · (Wq − z))ᵀ
+
+``peqa_linear`` wires the L1 Pallas kernels into jax autodiff with a
+``custom_vjp`` so that
+
+  • the integer matrix receives an exact-zero cotangent (it is frozen, and
+    the weight-shaped gradient dŴ = dyᵀx is never materialized),
+  • ds / dz come from the fused ``peqa_grad`` kernel,
+  • dx comes from the transposed dequant-matmul ``qmatmul_t``.
+
+Also here: the straight-through fake-quantizer used by the QAT baseline
+and the binary-coding (AlphaTuning) representation used by Table 15.
+
+Set env PEQA_USE_PALLAS=0 to route the forward/backward through the
+pure-jnp oracles instead of the Pallas kernels (the two are tested equal;
+the ref path lowers to marginally leaner HLO on CPU — see DESIGN §Perf).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import peqa_grad, qmatmul, qmatmul_t, quantize_rtn
+from .kernels import ref
+
+USE_PALLAS = os.environ.get("PEQA_USE_PALLAS", "1") != "0"
+
+# Block targets for model-internal kernel calls: at reproduction scale
+# (d ≤ 320, B·T ≤ 1024) these give grid≈1 so interpret-mode overhead is
+# nil; at TPU scale they are the VMEM-budget tiles from DESIGN
+# §Hardware-Adaptation. Multi-block grids are exercised by pytest.
+BLOCK_B = 512
+BLOCK_N = 512
+
+
+@jax.custom_vjp
+def _peqa_mm(x2d, wq, s, z):
+    if USE_PALLAS:
+        return qmatmul(x2d, wq, s, z, block_b=BLOCK_B, block_n=BLOCK_N)
+    return ref.qmatmul_ref(x2d, wq, s, z)
+
+
+def _peqa_mm_fwd(x2d, wq, s, z):
+    return _peqa_mm(x2d, wq, s, z), (x2d, wq, s, z)
+
+
+def _peqa_mm_bwd(res, dy):
+    x2d, wq, s, z = res
+    if USE_PALLAS:
+        ds, dz = peqa_grad(dy, x2d, wq, s, z, block_n=BLOCK_N)
+        dx = qmatmul_t(dy, wq, s, z, block_b=BLOCK_B, block_n=BLOCK_N)
+    else:
+        ds, dz, dx = ref.peqa_grad_ref(dy, x2d, wq, s, z)
+    # Frozen integer matrix: exact-zero cotangent, never dense dyᵀx.
+    return dx, jnp.zeros_like(wq), ds, dz
+
+
+_peqa_mm.defvjp(_peqa_mm_fwd, _peqa_mm_bwd)
+
+
+def peqa_linear(x, wq, s, z):
+    """y = x @ (s·(Wq − z))ᵀ for x of shape (..., m); grads reach s and z only."""
+    lead = x.shape[:-1]
+    m = x.shape[-1]
+    y = _peqa_mm(x.reshape(-1, m), wq, s, z)
+    return y.reshape(*lead, wq.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# QAT baseline: straight-through fake-quantization (trains ALL weights).
+# ---------------------------------------------------------------------------
+
+
+def fake_quant_ste(w, bits: int, group: int | None = None):
+    """RTN fake-quant with a straight-through estimator.
+
+    Forward sees the dequantized weights; backward passes gradients to w
+    unchanged (the rounding is treated as identity), which is the simple
+    QAT recipe the paper uses as its upper-bound baseline (Table 2).
+    """
+    wq, s, z = ref.quantize_rtn_ref(w, bits, group)
+    what = ref.dequant_ref(wq, s, z)
+    return w + jax.lax.stop_gradient(what - w)
+
+
+def qat_linear(x, w, bits: int, group: int | None = None):
+    return x @ fake_quant_ste(w, bits, group).T
+
+
+# ---------------------------------------------------------------------------
+# AlphaTuning baseline (Table 15): binary-coding quantization W ≈ Σ_k α_k·B_k
+# with per-channel α ∈ R^{n×b}, codes B_k ∈ {−1,+1}^{n×m}; only α_1 trains.
+# ---------------------------------------------------------------------------
+
+
+def bcq_quantize(w, bits: int, iters: int = 3):
+    """Greedy binary-coding quantization + alternating refinement.
+
+    Returns (alpha (n, bits), codes (n, m, bits) in {−1,+1}).
+    Greedy: B_k = sign(R), α_k = ⟨R, B_k⟩/m per channel on the residual R;
+    then a few alternating-least-squares sweeps re-fit each α_k.
+    """
+    n, m = w.shape
+    r = w
+    alphas, codes = [], []
+    for _ in range(bits):
+        b = jnp.where(r >= 0, 1.0, -1.0)
+        a = jnp.sum(r * b, axis=1) / m          # LS-optimal per-channel α
+        alphas.append(a)
+        codes.append(b)
+        r = r - a[:, None] * b
+    alpha = jnp.stack(alphas, axis=1)           # (n, bits)
+    code = jnp.stack(codes, axis=2)             # (n, m, bits)
+    for _ in range(iters):
+        # Coordinate-descent refit of each α_k (closed form; NO
+        # jnp.linalg.solve — LAPACK custom-calls use the typed-FFI API
+        # which xla_extension 0.5.1 cannot compile).
+        recon = jnp.einsum("nk,nmk->nm", alpha, code)
+        for k in range(bits):
+            rk = w - recon + alpha[:, k : k + 1] * code[:, :, k]
+            ak = jnp.sum(rk * code[:, :, k], axis=1) / m
+            recon = recon + (ak - alpha[:, k])[:, None] * code[:, :, k]
+            alpha = alpha.at[:, k].set(ak)
+        # Re-fit codes greedily against the new alphas.
+        r = w
+        cs = []
+        for k in range(bits):
+            b = jnp.where(r >= 0, 1.0, -1.0)
+            cs.append(b)
+            r = r - alpha[:, k : k + 1] * b
+        code = jnp.stack(cs, axis=2)
+    return alpha, code
+
+
+def bcq_dequant(alpha, code):
+    """Ŵ = Σ_k α_k ⊙ B_k.  alpha: (n, b), code: (n, m, b) → (n, m)."""
+    return jnp.einsum("nk,nmk->nm", alpha, code)
+
+
+def alphatuning_linear(x, alpha, code):
+    return x @ bcq_dequant(alpha, code).T

@@ -1,0 +1,77 @@
+"""L1 performance analysis: VMEM-footprint / MXU-utilization / HBM-traffic
+model for the qmatmul kernel (DESIGN.md §Hardware-Adaptation, §Perf).
+
+interpret=True gives CPU-numpy timings only — not a TPU proxy — so kernel
+*structure* is what we optimize: this tool sweeps tile configurations for
+every projection shape in the model family and reports, per shape:
+
+  * the chosen (bb, nb, gb) tile under the 16 MiB VMEM budget,
+  * estimated MXU utilization and memory- vs compute-boundness,
+  * HBM weight-traffic ratio vs fp16 (the source of the paper's decode
+    speedup: 4×/5.33× fewer weight bytes at 4/3-bit).
+
+Usage: python -m compile.perf_report [--bits 4] [--decode]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from .configs import LLAMA_SIZES
+from .kernels.util import qmatmul_tile_estimate, VMEM_BYTES
+
+
+def best_tile(batch: int, n: int, m: int, bits: int):
+    """Pick the tile maximizing estimated throughput under the VMEM budget."""
+    candidates = []
+    for bb in (1, 8, 32, 64, 128, 256, 512):
+        if bb > batch:
+            continue
+        for nb in (64, 128, 256, 512):
+            if nb > n:
+                continue
+            for gb in (64, 128, 256, 512):
+                if gb > m:
+                    continue
+                est = qmatmul_tile_estimate(batch, n, m, bits, bb, nb, gb)
+                if est.vmem_bytes <= VMEM_BYTES:
+                    candidates.append(((bb, nb, gb), est))
+    if not candidates:
+        return None, None
+    # Prefer the lowest estimated time; tie-break on bigger MXU tiles.
+    return min(candidates, key=lambda c: (c[1].est_s, -c[1].mxu_util))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bits", type=int, default=4)
+    ap.add_argument("--decode", action="store_true",
+                    help="B=1 decode GEMV instead of training GEMM")
+    args = ap.parse_args()
+
+    print(f"qmatmul tile report — {args.bits}-bit weights, "
+          f"{'decode (B=1)' if args.decode else 'train (B=512 tokens)'}")
+    print(f"{'shape':>16} {'tile (bb,nb,gb)':>18} {'VMEM':>10} "
+          f"{'MXU util':>9} {'bound':>8} {'W-traffic vs fp16':>18}")
+    seen = set()
+    for cfg in LLAMA_SIZES.values():
+        batch = 1 if args.decode else 8 * cfg.seq_len
+        for name, (n, m) in cfg.linear_shapes().items():
+            if (n, m) in seen:
+                continue
+            seen.add((n, m))
+            tile, est = best_tile(batch, n, m, args.bits)
+            if est is None:
+                continue
+            bound = "memory" if est.mem_bound_s > est.flop_bound_s else "MXU"
+            print(f"{f'{n}x{m}':>16} {str(tile):>18} "
+                  f"{est.vmem_bytes/2**20:>8.2f}Mi {est.mxu_util:>8.0%} "
+                  f"{bound:>8} {16/args.bits:>17.2f}x")
+    # The headline deployment claim: decode is memory-bound, so weight
+    # traffic ~ linear in bits → 16/b speedup ceiling at fixed bandwidth.
+    print(f"\ndecode weight-bytes ratio fp16 : int{args.bits} = "
+          f"{16/args.bits:.2f} : 1  (paper's 'fast inference' column)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,203 @@
+"""In-graph training step, evaluation and calibration functions.
+
+Everything here is built to be AOT-lowered: each builder returns a pure
+function over flat positional tensor arguments (order defined by
+methods.param_table) so the HLO parameter order is unambiguous for the
+rust runtime. The optimizer (AdamW, appendix A) runs *inside* the graph;
+rust owns only the learning-rate schedule and the data pipeline.
+
+Optimizer state exists ONLY for trainable tensors — this is what makes the
+Appendix-L memory claims measurable: PEQA's m/v buffers are scale-sized,
+LoRA's are adapter-sized, full FT's are model-sized.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .methods import pack, param_table, split_roles, unpack
+from .model import MethodConfig, ModelConfig, forward, mean_nll, nll
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def adamw_update(p, g, m, v, step, lr, weight_decay=0.0):
+    """One decoupled-weight-decay Adam update (Loshchilov & Hutter)."""
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    mhat = m / (1.0 - ADAM_B1**step)
+    vhat = v / (1.0 - ADAM_B2**step)
+    p = p - lr * (mhat / (jnp.sqrt(vhat) + ADAM_EPS) + weight_decay * p)
+    return p, m, v
+
+
+def make_train_step(cfg: ModelConfig, mcfg: MethodConfig, weight_decay: float = 0.0):
+    """-> (fn, train_specs, frozen_specs).
+
+    fn(tokens (B,T) i32, mask (B,T−1) f32, lr () f32, step () f32,
+       *trainable, *frozen, *m, *v)
+      -> (loss (), *new_trainable, *new_m, *new_v)
+    """
+    table = param_table(cfg, mcfg)
+    train_specs, frozen_specs = split_roles(table)
+    nt, nf = len(train_specs), len(frozen_specs)
+
+    def fn(tokens, mask, lr, step, *flat):
+        trainable = list(flat[:nt])
+        frozen = list(flat[nt : nt + nf])
+        m = list(flat[nt + nf : 2 * nt + nf])
+        v = list(flat[2 * nt + nf : 3 * nt + nf])
+
+        def loss_of(tr):
+            Pd = unpack(train_specs, tr) | unpack(frozen_specs, frozen)
+            return mean_nll(cfg, mcfg, Pd, tokens, mask)
+
+        loss, grads = jax.value_and_grad(loss_of)(trainable)
+        new_p, new_m, new_v = [], [], []
+        for p, g, mi, vi in zip(trainable, grads, m, v):
+            pn, mn, vn = adamw_update(p, g, mi, vi, step, lr, weight_decay)
+            new_p.append(pn)
+            new_m.append(mn)
+            new_v.append(vn)
+        return tuple([loss] + new_p + new_m + new_v)
+
+    return fn, train_specs, frozen_specs
+
+
+def make_eval(cfg: ModelConfig):
+    """Masked NLL over a batch, fp param layout (methods dequantize into it).
+
+    fn(tokens (B,T) i32, mask (B,T−1) f32, *params) -> (sum_nll, n_tokens)
+    """
+    mcfg = MethodConfig(kind="full")
+    table = param_table(cfg, mcfg)
+
+    def fn(tokens, mask, *flat):
+        Pd = unpack(table, list(flat))
+        return nll(cfg, mcfg, Pd, tokens, mask)
+
+    return fn, table
+
+
+def make_logits(cfg: ModelConfig):
+    """Full-context logits, fp layout. fn(tokens, *params) -> logits (B,T,V)."""
+    mcfg = MethodConfig(kind="full")
+    table = param_table(cfg, mcfg)
+
+    def fn(tokens, *flat):
+        return (forward(cfg, mcfg, unpack(table, list(flat)), tokens),)
+
+    return fn, table
+
+
+def make_logits_q(cfg: ModelConfig, mcfg: MethodConfig):
+    """Quantized-layout logits — the serving path through the Pallas
+    dequant-matmul kernels. fn(tokens, *params) -> logits (B,T,V)."""
+    table = param_table(cfg, mcfg)
+
+    def fn(tokens, *flat):
+        return (forward(cfg, mcfg, unpack(table, list(flat)), tokens),)
+
+    return fn, table
+
+
+def make_hessians(cfg: ModelConfig):
+    """Per-projection-family Hessian accumulators for OPTQ calibration.
+
+    H = Σ_t x_t x_tᵀ over every token position, for each distinct linear
+    *input* inside each block:
+
+      llama: [qkv (d,d), o (d,d), gateup (d,d), down (ff,ff)] × n_layers
+      opt:   [qkv (d,d), o (d,d), fc1 (d,d), fc2 (ff,ff)]     × n_layers
+
+    fn(tokens (B,T) i32, *fp params) -> tuple of 4·L matrices. Rust sums
+    these across calibration batches and hands them to quant::optq.
+    """
+    mcfg = MethodConfig(kind="full")
+    table = param_table(cfg, mcfg)
+
+    # Re-implement the forward but tap every linear input. Kept in lock-step
+    # with model.forward; test_model.py asserts the taps don't perturb logits.
+    from . import model as M
+
+    def fn(tokens, *flat):
+        Pd = unpack(table, list(flat))
+        B, T = tokens.shape
+        x = Pd["embed"][tokens]
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+        if cfg.family == "opt":
+            x = x + Pd["pos_embed"][:T][None]
+        hessians = []
+
+        def hess(a):  # a: (B, T, m) -> (m, m)
+            a2 = a.reshape(-1, a.shape[-1])
+            return a2.T @ a2
+
+        for i in range(cfg.n_layers):
+            lp = f"layers.{i}"
+            h_in = M._norm(cfg, Pd, f"{lp}.ln1", x)
+            hessians.append(hess(h_in))  # qkv family
+            H, hd = cfg.n_heads, cfg.head_dim
+            q = M._linear(mcfg, Pd, f"{lp}.attn.q", h_in).reshape(B, T, H, hd)
+            k = M._linear(mcfg, Pd, f"{lp}.attn.k", h_in).reshape(B, T, H, hd)
+            v = M._linear(mcfg, Pd, f"{lp}.attn.v", h_in).reshape(B, T, H, hd)
+            if cfg.family == "llama":
+                q, k = M._rope(q, positions), M._rope(k, positions)
+            att = jnp.einsum("bthd,bshd->bhts", q, k) / jnp.sqrt(float(hd))
+            causal = jnp.tril(jnp.ones((T, T), dtype=bool))
+            att = jax.nn.softmax(jnp.where(causal[None, None], att, -1e30), axis=-1)
+            o_in = jnp.einsum("bhts,bshd->bthd", att, v).reshape(B, T, cfg.d_model)
+            hessians.append(hess(o_in))  # o family
+            x = x + M._linear(mcfg, Pd, f"{lp}.attn.o", o_in)
+            m_in = M._norm(cfg, Pd, f"{lp}.ln2", x)
+            hessians.append(hess(m_in))  # gate/up (llama) or fc1 (opt)
+            if cfg.family == "llama":
+                gate = M._linear(mcfg, Pd, f"{lp}.mlp.gate", m_in)
+                up = M._linear(mcfg, Pd, f"{lp}.mlp.up", m_in)
+                d_in = jax.nn.silu(gate) * up
+                hessians.append(hess(d_in))  # down family
+                x = x + M._linear(mcfg, Pd, f"{lp}.mlp.down", d_in)
+            else:
+                d_in = jax.nn.gelu(M._linear(mcfg, Pd, f"{lp}.mlp.fc1", m_in))
+                hessians.append(hess(d_in))  # fc2 family
+                x = x + M._linear(mcfg, Pd, f"{lp}.mlp.fc2", d_in)
+        return tuple(hessians)
+
+    return fn, table
+
+
+def make_prep(cfg: ModelConfig, mcfg: MethodConfig):
+    """Checkpoint transform artifact: fp layout → method layout.
+
+    fn(*fp params) -> (*method params). Runs the Pallas RTN kernel (peqa)
+    or BCQ (alpha) on-device so rust can re-quantize a fine-tuned
+    checkpoint without Python. LoRA needs no prep: its adapters are pure
+    init-spec tensors the rust side creates (normal/zeros).
+    """
+    from .methods import to_alpha, to_peqa
+
+    fp_table = param_table(cfg, MethodConfig(kind="full"))
+    out_table = param_table(cfg, mcfg)
+
+    def fn(*flat):
+        fp = unpack(fp_table, list(flat))
+        if mcfg.kind == "peqa":
+            out = to_peqa(cfg, mcfg, fp)
+        elif mcfg.kind == "alpha":
+            out = to_alpha(cfg, mcfg, fp)
+        else:
+            raise ValueError(f"no prep for method {mcfg.kind}")
+        return tuple(pack(out_table, out))
+
+    return fn, fp_table, out_table
+
+
+def hessian_names(cfg: ModelConfig) -> list[str]:
+    """Output naming for make_hessians, aligned with its tuple order."""
+    fams = ["qkv", "o", "gateup", "down"] if cfg.family == "llama" else [
+        "qkv", "o", "fc1", "fc2"
+    ]
+    return [f"layers.{i}.hess.{f}" for i in range(cfg.n_layers) for f in fams]

@@ -1,0 +1,179 @@
+"""Pallas kernels vs pure-jnp oracles — the CORE L1 correctness signal.
+
+Hypothesis sweeps shapes, bit-widths, group sizes and dtypes; every kernel
+must match kernels/ref.py within fp tolerance under arbitrary blockings.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import peqa_grad, qmatmul, qmatmul_t, quantize_rtn
+from compile.kernels import ref
+from compile.kernels.util import pick_block
+
+# Dims are built as (#groups × group-size) so every (m, group) pair is valid.
+dims_n = st.sampled_from([8, 16, 24, 64, 96, 128])
+group_sz = st.sampled_from([4, 8, 16, 32])
+ngroups = st.integers(min_value=1, max_value=6)
+bits_st = st.sampled_from([2, 3, 4, 8])
+batch_st = st.sampled_from([1, 2, 8, 24])
+blocks = st.sampled_from([8, 32, 128])
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=dims_n, g=group_sz, G=ngroups, bits=bits_st, seed=st.integers(0, 2**31))
+def test_quantize_rtn_matches_ref(n, g, G, bits, seed):
+    rng = np.random.default_rng(seed)
+    w = _rand(rng, n, g * G)
+    wq, s, z = quantize_rtn(w, bits, g, row_block=16)
+    wq_r, s_r, z_r = ref.quantize_rtn_ref(w, bits, g)
+    # Codes may differ by 1 on round-to-nearest ties: the blocked kernel and
+    # the reshaped reference reduce min/max in different fp orders, so w/s
+    # can land on opposite sides of a .5 boundary for isolated elements.
+    diff = np.abs(np.asarray(wq) - np.asarray(wq_r))
+    assert diff.max() <= 1.0
+    assert (diff > 0).mean() < 5e-3, f"too many tie mismatches: {(diff > 0).mean()}"
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_r), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(z), np.asarray(z_r))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=dims_n, g=group_sz, G=ngroups, bits=bits_st, seed=st.integers(0, 2**31))
+def test_rtn_error_bound_and_code_range(n, g, G, bits, seed):
+    """|W − Ŵ| ≤ s/2 inside the clamp range; codes lie in [0, 2^b − 1]."""
+    rng = np.random.default_rng(seed)
+    w = _rand(rng, n, g * G)
+    wq, s, z = quantize_rtn(w, bits, g)
+    wq_np = np.asarray(wq)
+    assert wq_np.min() >= 0 and wq_np.max() <= 2**bits - 1
+    assert np.allclose(wq_np, np.round(wq_np))  # exact integer codes
+    what = np.asarray(ref.dequant_ref(wq, s, z))
+    # The asymmetric RTN grid covers [min, max] of each group up to the
+    # zero-point rounding, which can shift the grid by ≤ s/2: total ≤ s.
+    err = np.abs(np.asarray(w) - what).reshape(n, G, g).max(axis=2)
+    assert (err <= np.asarray(s) * 1.0 + 1e-6).all()
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=dims_n, g=group_sz, G=ngroups, bits=bits_st, seed=st.integers(0, 2**31))
+def test_rtn_idempotent(n, g, G, bits, seed):
+    """Quantizing a dequantized model returns the identical integer matrix."""
+    rng = np.random.default_rng(seed)
+    w = _rand(rng, n, g * G)
+    wq, s, z = quantize_rtn(w, bits, g)
+    what = ref.dequant_ref(wq, s, z)
+    wq2, s2, z2 = quantize_rtn(what, bits, g)
+    what2 = ref.dequant_ref(wq2, s2, z2)
+    np.testing.assert_allclose(np.asarray(what2), np.asarray(what), atol=1e-5)
+
+
+@settings(max_examples=18, deadline=None)
+@given(
+    B=batch_st, n=dims_n, g=group_sz, G=ngroups, bits=bits_st,
+    bb=blocks, bn=blocks, seed=st.integers(0, 2**31),
+)
+def test_qmatmul_matches_ref(B, n, g, G, bits, bb, bn, seed):
+    rng = np.random.default_rng(seed)
+    m = g * G
+    w = _rand(rng, n, m)
+    x = _rand(rng, B, m)
+    wq, s, z = quantize_rtn(w, bits, g)
+    y = qmatmul(x, wq, s, z, block_b=bb, block_n=bn)
+    y_ref = ref.qmatmul_ref(x, wq, s, z)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=18, deadline=None)
+@given(
+    B=batch_st, n=dims_n, g=group_sz, G=ngroups, bits=bits_st,
+    bb=blocks, bn=blocks, seed=st.integers(0, 2**31),
+)
+def test_qmatmul_t_matches_ref(B, n, g, G, bits, bb, bn, seed):
+    rng = np.random.default_rng(seed)
+    m = g * G
+    w = _rand(rng, n, m)
+    dy = _rand(rng, B, n)
+    wq, s, z = quantize_rtn(w, bits, g)
+    dx = qmatmul_t(dy, wq, s, z, block_b=bb, block_n=bn)
+    dx_ref = ref.qmatmul_t_ref(dy, wq, s, z)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_ref), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=18, deadline=None)
+@given(
+    B=batch_st, n=dims_n, g=group_sz, G=ngroups, bits=bits_st,
+    bn=blocks, seed=st.integers(0, 2**31),
+)
+def test_peqa_grad_matches_ref(B, n, g, G, bits, bn, seed):
+    rng = np.random.default_rng(seed)
+    m = g * G
+    w = _rand(rng, n, m)
+    x = _rand(rng, B, m)
+    dy = _rand(rng, B, n)
+    wq, s, z = quantize_rtn(w, bits, g)
+    ds, dz = peqa_grad(dy, x, wq, s, z, block_n=bn)
+    ds_r, dz_r, _ = ref.peqa_grad_ref(dy, x, wq, s, z)
+    np.testing.assert_allclose(np.asarray(ds), np.asarray(ds_r), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(dz), np.asarray(dz_r), rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    B=batch_st, n=dims_n, g=group_sz, G=ngroups, seed=st.integers(0, 2**31),
+)
+def test_peqa_grad_matches_autodiff(B, n, g, G, seed):
+    """The fused kernel equals jax.grad of the dequantized forward."""
+    import jax
+
+    rng = np.random.default_rng(seed)
+    m = g * G
+    w = _rand(rng, n, m)
+    x = _rand(rng, B, m)
+    dy = _rand(rng, B, n)
+    wq, s, z = quantize_rtn(w, 4, g)
+
+    def fwd(s_, z_):
+        return jnp.vdot(dy, ref.qmatmul_ref(x, wq, s_, z_))
+
+    ds_ad, dz_ad = jax.grad(fwd, argnums=(0, 1))(s, z)
+    ds, dz = peqa_grad(dy, x, wq, s, z)
+    np.testing.assert_allclose(np.asarray(ds), np.asarray(ds_ad), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(dz), np.asarray(dz_ad), rtol=1e-3, atol=1e-3)
+
+
+def test_qmatmul_bf16():
+    """bf16 activations round-trip through the kernel (loose tolerance)."""
+    rng = np.random.default_rng(7)
+    w = _rand(rng, 32, 64)
+    x = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32), dtype=jnp.bfloat16)
+    wq, s, z = quantize_rtn(w, 4, 16)
+    y = qmatmul(x, wq.astype(jnp.bfloat16), s.astype(jnp.bfloat16), z.astype(jnp.bfloat16))
+    y_ref = ref.qmatmul_ref(
+        x.astype(jnp.float32), wq, s, z
+    )
+    np.testing.assert_allclose(
+        np.asarray(y, dtype=np.float32), np.asarray(y_ref), rtol=0.1, atol=0.5
+    )
+
+
+def test_pick_block():
+    assert pick_block(256, 128) == 128
+    assert pick_block(96, 128) == 96
+    assert pick_block(96, 64) == 48
+    assert pick_block(7, 4) == 1
+    assert pick_block(24, 16) == 12
+
+
+@pytest.mark.parametrize("bits", [3, 4])
+def test_degenerate_constant_group(bits):
+    """All-equal groups must not divide by zero and must reconstruct exactly."""
+    w = jnp.full((4, 16), 0.75, dtype=jnp.float32)
+    wq, s, z = quantize_rtn(w, bits, 8)
+    what = ref.dequant_ref(wq, s, z)
+    np.testing.assert_allclose(np.asarray(what), np.asarray(w), atol=1e-5)

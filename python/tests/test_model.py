@@ -1,0 +1,208 @@
+"""L2 model tests: shapes, method equivalences, gradient flow."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import methods, train as T
+from compile.configs import SIZES
+from compile.kernels import ref
+from compile.model import (
+    LORA_QKVO16, LORA_QV4, MethodConfig, ModelConfig, forward, mean_nll,
+)
+
+CFG = SIZES["n1"]
+OPT_CFG = SIZES["o1"]
+FP = MethodConfig(kind="full")
+
+
+@pytest.fixture(scope="module")
+def fp_params():
+    return methods.init_params(CFG, FP, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def batch():
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, CFG.seq_len), 0, CFG.vocab)
+    mask = jnp.ones((4, CFG.seq_len - 1))
+    return tokens, mask
+
+
+def test_forward_shape(fp_params, batch):
+    tokens, _ = batch
+    logits = forward(CFG, FP, fp_params, tokens)
+    assert logits.shape == (4, CFG.seq_len, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_untrained_nll_near_uniform(fp_params, batch):
+    tokens, mask = batch
+    nll = float(mean_nll(CFG, FP, fp_params, tokens, mask))
+    assert abs(nll - np.log(CFG.vocab)) < 0.1
+
+
+def test_causality(fp_params):
+    """Changing a suffix token must not affect earlier logits."""
+    t1 = jax.random.randint(jax.random.PRNGKey(2), (1, CFG.seq_len), 0, CFG.vocab)
+    t2 = t1.at[0, -1].set((t1[0, -1] + 7) % CFG.vocab)
+    l1 = forward(CFG, FP, fp_params, t1)
+    l2 = forward(CFG, FP, fp_params, t2)
+    np.testing.assert_allclose(
+        np.asarray(l1[0, :-1]), np.asarray(l2[0, :-1]), atol=1e-5
+    )
+
+
+def test_opt_family_forward():
+    params = methods.init_params(OPT_CFG, FP, jax.random.PRNGKey(3))
+    tokens = jax.random.randint(
+        jax.random.PRNGKey(4), (2, OPT_CFG.seq_len), 0, OPT_CFG.vocab
+    )
+    logits = forward(OPT_CFG, FP, params, tokens)
+    assert logits.shape == (2, OPT_CFG.seq_len, OPT_CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("bits,group", [(4, None), (3, None), (4, 16)])
+def test_peqa_equals_dequantized_fp(fp_params, batch, bits, group):
+    """PEQA forward == fp forward over the dequantized weights (exactly the
+    claim that lets eval artifacts use the fp layout for every method)."""
+    tokens, _ = batch
+    pm = MethodConfig(kind="peqa", bits=bits, group=group)
+    pq = methods.to_peqa(CFG, pm, fp_params)
+    deq = dict(fp_params)
+    for lp in methods.linear_prefixes(CFG):
+        deq[f"{lp}.w"] = ref.dequant_ref(pq[f"{lp}.wq"], pq[f"{lp}.s"], pq[f"{lp}.z"])
+    l_peqa = forward(CFG, pm, pq, tokens)
+    l_fp = forward(CFG, FP, deq, tokens)
+    np.testing.assert_allclose(
+        np.asarray(l_peqa), np.asarray(l_fp), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_lora_zero_init_is_identity(fp_params, batch):
+    """Fresh LoRA (B = 0) must reproduce the base model exactly."""
+    tokens, _ = batch
+    lr = methods.to_lora(CFG, LORA_QV4, fp_params, jax.random.PRNGKey(5))
+    l_lora = forward(CFG, LORA_QV4, lr, tokens)
+    l_fp = forward(CFG, FP, fp_params, tokens)
+    np.testing.assert_allclose(np.asarray(l_lora), np.asarray(l_fp), atol=1e-5)
+
+
+def test_lora_merge_equivalence(fp_params, batch):
+    """merge_lora(W, A, B) must reproduce the adapted model."""
+    tokens, _ = batch
+    key = jax.random.PRNGKey(6)
+    lr = methods.to_lora(CFG, LORA_QKVO16, fp_params, key)
+    # Give B a nonzero value so the adapters actually do something.
+    for lp in methods.linear_prefixes(CFG):
+        if f"{lp}.lora_b" in lr:
+            key, k = jax.random.split(key)
+            lr[f"{lp}.lora_b"] = 0.02 * jax.random.normal(k, lr[f"{lp}.lora_b"].shape)
+    merged = methods.merge_lora(CFG, LORA_QKVO16, lr)
+    l_ad = forward(CFG, LORA_QKVO16, lr, tokens)
+    l_merged = forward(CFG, FP, merged, tokens)
+    np.testing.assert_allclose(
+        np.asarray(l_ad), np.asarray(l_merged), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_alpha_reconstruction_error_decreases_with_bits(fp_params):
+    w = fp_params["layers.0.attn.q.w"]
+    errs = []
+    for bits in (1, 2, 3, 4):
+        from compile.peqa import bcq_dequant, bcq_quantize
+
+        alpha, code = bcq_quantize(w, bits)
+        errs.append(float(jnp.linalg.norm(w - bcq_dequant(alpha, code))))
+    assert errs == sorted(errs, reverse=True), errs
+    assert errs[3] < 0.35 * errs[0]
+
+
+def test_param_table_roles():
+    """Trainable sets per method match the paper's Table 1 taxonomy."""
+    t_full = methods.param_table(CFG, FP)
+    assert all(p.trainable for p in t_full)
+
+    pm = MethodConfig(kind="peqa", bits=4)
+    t_peqa = methods.param_table(CFG, pm)
+    trainable = [p.name for p in t_peqa if p.trainable]
+    assert trainable and all(n.endswith(".s") for n in trainable)
+
+    zp = MethodConfig(kind="peqa", bits=4, train_scales=False, train_zeros=True)
+    t_zp = methods.param_table(CFG, zp)
+    assert all(p.name.endswith(".z") for p in t_zp if p.trainable)
+
+    t_lora = methods.param_table(CFG, LORA_QV4)
+    tl = [p.name for p in t_lora if p.trainable]
+    assert tl and all(("lora_a" in n or "lora_b" in n) for n in tl)
+    assert sum("lora_a" in n for n in tl) == 2 * CFG.n_layers  # q and v only
+
+
+def test_peqa_trainable_count_less_than_lora():
+    """Paper Table 4: PEQA (per-channel) has fewer learnable params than
+    LoRA QV4 for every llama-family size."""
+    for name, cfg in SIZES.items():
+        if cfg.family != "llama":
+            continue
+        pm = MethodConfig(kind="peqa", bits=4)
+        n_peqa = sum(
+            int(np.prod(p.shape))
+            for p in methods.param_table(cfg, pm) if p.trainable
+        )
+        n_lora = sum(
+            int(np.prod(p.shape))
+            for p in methods.param_table(cfg, LORA_QV4) if p.trainable
+        )
+        assert n_peqa < n_lora, (name, n_peqa, n_lora)
+
+
+def test_grads_only_reach_trainable(fp_params, batch):
+    """jax.grad through the PEQA custom_vjp: scales get nonzero grads; the
+    integer matrix would get exact zeros (it is excluded by construction)."""
+    tokens, mask = batch
+    pm = MethodConfig(kind="peqa", bits=4)
+    pq = methods.to_peqa(CFG, pm, fp_params)
+    tr_specs, fz_specs = methods.split_roles(methods.param_table(CFG, pm))
+    tr = methods.pack(tr_specs, pq)
+    fz = methods.pack(fz_specs, pq)
+
+    def loss_of(tr_list):
+        Pd = methods.unpack(tr_specs, tr_list) | methods.unpack(fz_specs, fz)
+        return mean_nll(CFG, pm, Pd, tokens, mask)
+
+    grads = jax.grad(loss_of)(tr)
+    assert all(bool(jnp.any(g != 0)) for g in grads)
+
+    # And wq really is frozen: include it and check its grad is exactly 0.
+    def loss_wq(wq0):
+        Pd = dict(pq)
+        Pd["layers.0.attn.q.wq"] = wq0
+        return mean_nll(CFG, pm, Pd, tokens, mask)
+
+    gwq = jax.grad(loss_wq)(pq["layers.0.attn.q.wq"])
+    assert float(jnp.max(jnp.abs(gwq))) == 0.0
+
+
+def test_hessian_taps_match_forward(fp_params, batch):
+    """make_hessians re-implements the forward with taps; its Hessians must
+    be PSD and consistent with an activation-capture reference."""
+    tokens, _ = batch
+    fn, table = T.make_hessians(CFG)
+    hs = fn(tokens, *methods.pack(table, fp_params))
+    names = T.hessian_names(CFG)
+    assert len(hs) == len(names)
+    for h in hs:
+        assert h.shape[0] == h.shape[1]
+        np.testing.assert_allclose(np.asarray(h), np.asarray(h).T, atol=1e-3)
+        eig = np.linalg.eigvalsh(np.asarray(h, dtype=np.float64))
+        assert eig.min() > -1e-2, eig.min()
+    # qkv Hessian of layer 0 == Gram matrix of ln1 output, computed directly.
+    from compile import model as M
+
+    x = fp_params["embed"][tokens]
+    h_in = M._rms_norm(x, fp_params["layers.0.ln1.g"])
+    a2 = np.asarray(h_in).reshape(-1, CFG.d_model)
+    np.testing.assert_allclose(
+        np.asarray(hs[0]), a2.T @ a2, rtol=5e-3, atol=5e-3
+    )

@@ -1,0 +1,69 @@
+//! Appendix L: training memory — LoRA vs PEQA vs full FT.
+//!
+//! Two measurements on the n4 (13B-analog) model:
+//!  * analytic round-trip state (trainable + AdamW m/v bytes per step),
+//!  * measured process RSS delta while training each method.
+//! Shape target: PEQA state ≪ LoRA state ≪ full-FT state; RSS ordering
+//! follows (the paper: 43 GB vs 59 GB peaks on LLaMA-7B).
+
+use peqa::bench::{steps, Table};
+use peqa::config::TrainConfig;
+use peqa::data::LmBatcher;
+use peqa::pipeline::{self, Ctx};
+use peqa::train::Trainer;
+use peqa::util::human_bytes;
+
+fn rss_kb() -> u64 {
+    let status = std::fs::read_to_string("/proc/self/status").unwrap_or_default();
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            return rest.trim().trim_end_matches(" kB").trim().parse().unwrap_or(0);
+        }
+    }
+    0
+}
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::new()?;
+    let size = "n4";
+    let base = pipeline::ensure_base(&ctx, size, pipeline::pretrain_steps())?;
+    let (train_s, _) = ctx.split("wikitext", pipeline::ADAPT_BYTES)?;
+    let n_steps = steps(30);
+
+    let mut t = Table::new(
+        "Appendix L — training-memory comparison on n4 (paper: PEQA 43 GB vs LoRA 59 GB @7B)",
+        &["Method", "Trainable+opt state", "RSS before", "RSS peak during", "RSS delta"],
+    );
+    for tag in ["peqa_b4_gc", "lora_qv4", "full"] {
+        let start = match tag {
+            "peqa_b4_gc" => pipeline::prep(&ctx, size, "peqa_b4_gc", &base)?,
+            _ => base.clone(),
+        };
+        let cfg = TrainConfig {
+            steps: n_steps,
+            lr: TrainConfig::default_lr(tag.split('_').next().unwrap()),
+            log_every: 0,
+            ..Default::default()
+        };
+        let before = rss_kb();
+        let mut trainer = Trainer::new(&ctx.rt, &format!("{size}_train_{tag}"), &start, cfg)?;
+        let state = trainer.trainable_state_bytes();
+        let mut batcher = LmBatcher::new(train_s.clone(), 8, 64, 3);
+        let mut peak = before;
+        for _ in 0..n_steps {
+            trainer.step(&batcher.next_batch())?;
+            peak = peak.max(rss_kb());
+        }
+        t.row(&[
+            tag.to_string(),
+            human_bytes(state),
+            human_bytes(before * 1024),
+            human_bytes(peak * 1024),
+            human_bytes((peak.saturating_sub(before)) * 1024),
+        ]);
+        drop(trainer);
+    }
+    t.print();
+    t.save(&ctx.paths.results, "appendixl_mempeak")?;
+    Ok(())
+}

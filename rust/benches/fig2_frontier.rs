@@ -1,0 +1,67 @@
+//! Figure 2b / Figure 3: the PPL-vs-model-size frontier — fp16 LoRA vs
+//! 3/4-bit PEQA vs 3/4-bit LoRA+OPTQ over the whole family.
+//!
+//! Shape target: at equal deployed bytes, quantized-large (PEQA) beats
+//! fp16-small (LoRA) — the "continuity of model-size options under a
+//! DRAM constraint" argument; OPTQ's 3-bit curve sits far above PEQA's.
+
+use peqa::bench::{quick_mode, steps, Table};
+use peqa::memmodel::{self, Geometry};
+use peqa::pipeline::{self, Ctx};
+
+fn packed_bytes(ctx: &Ctx, size: &str, bits: Option<u8>) -> anyhow::Result<u64> {
+    let m = ctx.rt.meta(&format!("{size}_eval"))?;
+    let mm = m.model.as_ref().unwrap();
+    let g = Geometry::llama("x", mm.vocab, mm.d_model, mm.n_layers, mm.d_ff);
+    Ok(match bits {
+        None => g.n_params() * 2, // fp16
+        Some(b) => {
+            memmodel::report(&g, memmodel::Method::Peqa { bits: b, group: None }).deploy_bytes
+        }
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::new()?;
+    let sizes: &[&str] =
+        if quick_mode() { &["n1", "n2", "n3"] } else { &["n1", "n2", "n3", "n4", "n5", "n6"] };
+    let n_steps = steps(120);
+    let (_, eval_s) = ctx.split("wikitext", pipeline::ADAPT_BYTES)?;
+
+    let mut t = Table::new(
+        "Figure 2b/3 — PPL vs deployed model bytes (wikitext-sim)",
+        &["Series", "Size", "Deploy bytes", "PPL"],
+    );
+    for size in sizes {
+        eprintln!("[fig2] {size}…");
+        let lora = pipeline::finetune_cached(&ctx, size, "lora_qv4", "wikitext", n_steps)?;
+        t.row(&[
+            "LoRA fp16".into(),
+            size.to_string(),
+            packed_bytes(&ctx, size, None)?.to_string(),
+            format!("{:.2}", pipeline::lora_ppl(&ctx, size, "lora_qv4", &lora, &eval_s)?),
+        ]);
+        for bits in [4u8, 3] {
+            let pq = pipeline::finetune_cached(
+                &ctx, size, &format!("peqa_b{bits}_gc"), "wikitext", n_steps,
+            )?;
+            t.row(&[
+                format!("PEQA {bits}-bit"),
+                size.to_string(),
+                packed_bytes(&ctx, size, Some(bits))?.to_string(),
+                format!("{:.2}", pipeline::ppl(&ctx, size, &pq, &eval_s)?),
+            ]);
+            let lo =
+                pipeline::lora_optq(&ctx, size, "lora_qv4", "wikitext", n_steps, bits, None)?;
+            t.row(&[
+                format!("LoRA+OPTQ {bits}-bit"),
+                size.to_string(),
+                packed_bytes(&ctx, size, Some(bits))?.to_string(),
+                format!("{:.2}", pipeline::ppl(&ctx, size, &lo, &eval_s)?),
+            ]);
+        }
+    }
+    t.print();
+    t.save(&ctx.paths.results, "fig2b_frontier")?;
+    Ok(())
+}

@@ -1,0 +1,138 @@
+//! Kernel & runtime micro-benchmarks (the §Perf instrumentation):
+//!  * qmatmul artifact (Pallas fused dequant-matmul) vs fp logits forward,
+//!  * train-step latency per method (PEQA vs LoRA vs full — paper's
+//!    "training cost parity" claim),
+//!  * decode-step latency fp vs quantized path,
+//!  * adapter swap vs full reload wall time (Table 1 switching axis),
+//!  * HBM-traffic model: weight bytes moved per decode step at 16/4/3 bit.
+
+use peqa::bench::{steps, time_fn, Table};
+use peqa::config::TrainConfig;
+use peqa::coordinator::{AdapterStore, BatcherConfig, Coordinator, SwitchMode};
+use peqa::data::LmBatcher;
+use peqa::eval::EvalModel;
+use peqa::pipeline::{self, Ctx};
+use peqa::train::Trainer;
+use peqa::util::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::new()?;
+    let size = "n3";
+    let base = pipeline::ensure_base(&ctx, size, pipeline::pretrain_steps())?;
+    let qck = pipeline::rtn_quantize(&base, 4, None)?;
+    let iters = steps(30);
+
+    // ---- kernel artifact micro-bench ----
+    let art = ctx.rt.load("kernel_qmatmul_256")?;
+    let mut rng = Pcg32::new(3);
+    let w = peqa::tensor::Tensor::normal(&[256, 256], 0.3, &mut rng);
+    let q = peqa::quant::quantize_rtn(&w, 4, Some(64))?;
+    let x = peqa::tensor::Tensor::normal(&[8, 256], 1.0, &mut rng);
+    let wq = peqa::tensor::Tensor::new(&[256, 256], q.codes.iter().map(|&c| c as f32).collect());
+    let xb = ctx.rt.tensor_to_device(&x)?;
+    let wqb = ctx.rt.tensor_to_device(&wq)?;
+    let sb = ctx.rt.tensor_to_device(&q.scales)?;
+    let zb = ctx.rt.tensor_to_device(&q.zeros)?;
+    let t_kernel = time_fn("qmatmul_256 (pallas artifact)", 3, iters, || {
+        art.run_b(&[&xb, &wqb, &sb, &zb]).unwrap();
+    });
+
+    // ---- decode-step latency: fp vs quantized serving path ----
+    let fp_model = EvalModel::new(&ctx.rt, &format!("{size}_logits_b8"), &base)?;
+    let q_model = EvalModel::new(&ctx.rt, &format!("{size}_logits_q_b4_gc_b8"), &qck)?;
+    let tokens = vec![7i32; 8 * 64];
+    let t_fp = time_fn("decode fp32 logits_b8", 2, iters, || {
+        fp_model.logits(&ctx.rt, &tokens).unwrap();
+    });
+    let t_q = time_fn("decode quantized logits_q_b8", 2, iters, || {
+        q_model.logits(&ctx.rt, &tokens).unwrap();
+    });
+
+    // ---- train-step latency per method ----
+    let (train_s, _) = ctx.split("wikitext", pipeline::ADAPT_BYTES)?;
+    let mut table = Table::new(
+        "§Perf — hot-path latencies (n3, CPU PJRT; see EXPERIMENTS.md §Perf)",
+        &["Path", "mean ms", "p50 ms", "min ms"],
+    );
+    for tm in [t_kernel, t_fp, t_q] {
+        table.row(&[
+            tm.label.clone(),
+            format!("{:.2}", tm.mean_s() * 1e3),
+            format!("{:.2}", tm.p50_s() * 1e3),
+            format!("{:.2}", tm.min_s() * 1e3),
+        ]);
+    }
+    for tag in ["peqa_b4_gc", "lora_qv4", "full"] {
+        let start = if tag == "peqa_b4_gc" {
+            pipeline::prep(&ctx, size, "peqa_b4_gc", &base)?
+        } else {
+            base.clone()
+        };
+        let cfg = TrainConfig { steps: 10_000, log_every: 0, ..Default::default() };
+        let mut trainer = Trainer::new(&ctx.rt, &format!("{size}_train_{tag}"), &start, cfg)?;
+        let mut batcher = LmBatcher::new(train_s.clone(), 8, 64, 3);
+        let tm = time_fn(&format!("train step {tag}"), 3, iters, || {
+            trainer.step(&batcher.next_batch()).unwrap();
+        });
+        table.row(&[
+            tm.label.clone(),
+            format!("{:.2}", tm.mean_s() * 1e3),
+            format!("{:.2}", tm.p50_s() * 1e3),
+            format!("{:.2}", tm.min_s() * 1e3),
+        ]);
+    }
+
+    // ---- adapter swap vs full reload ----
+    for (label, mode, art_name) in [
+        ("swap: scale-swap (PEQA)", SwitchMode::ScaleSwap, format!("{size}_logits_q_b4_gc_b8")),
+        ("swap: full reload (PEFT+PTQ)", SwitchMode::FullReload, format!("{size}_logits_b8")),
+    ] {
+        let mut adapters = AdapterStore::new();
+        let mut a1 = qck.extract_adapter(false);
+        adapters.insert("a", a1.clone());
+        for t in a1.names().to_vec() {
+            let mut x = a1.get(&t).unwrap().clone();
+            for v in x.data_mut() {
+                *v *= 1.01;
+            }
+            a1.insert(t, x);
+        }
+        adapters.insert("b", a1);
+        let mut coord = Coordinator::new(
+            ctx.rt.clone(),
+            &art_name,
+            qck.clone(),
+            adapters,
+            mode,
+            BatcherConfig { max_batch: 8 },
+        )?;
+        // Alternate tasks so every group forces a swap.
+        for i in 0..8 {
+            coord.submit(if i % 2 == 0 { "a" } else { "b" }, vec![7, 8, 9], 4, 0);
+        }
+        coord.run_until_idle()?;
+        table.row(&[
+            label.to_string(),
+            format!("{:.3}", coord.metrics.mean_swap_s() * 1e3),
+            String::new(),
+            String::new(),
+        ]);
+    }
+
+    // ---- HBM-traffic model (DESIGN §Hardware-Adaptation) ----
+    let m = ctx.rt.meta(&format!("{size}_eval"))?;
+    let mm = m.model.as_ref().unwrap();
+    let g = peqa::memmodel::Geometry::llama("x", mm.vocab, mm.d_model, mm.n_layers, mm.d_ff);
+    let wq_params = g.n_quantizable();
+    for (label, bits) in [("fp16", 16u64), ("int4", 4), ("int3", 3)] {
+        table.row(&[
+            format!("decode weight-bytes/token ({label})"),
+            format!("{}", wq_params * bits / 8),
+            String::new(),
+            format!("{:.2}x vs fp16", 16.0 / bits as f64),
+        ]);
+    }
+    table.print();
+    table.save(&ctx.paths.results, "perf_micro")?;
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Table 10 (appendix E): the OPT-analog family — LoRA fp16 vs 4-bit
+//! PEQA on wikitext-sim; the PPL gap should shrink as size grows.
+
+use peqa::bench::{quick_mode, steps, Table};
+use peqa::pipeline::{self, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::new()?;
+    let sizes: &[&str] =
+        if quick_mode() { &["o1", "o2"] } else { &["o1", "o2", "o3", "o4"] }; // o5/o6: same trend, trimmed for the 1-core budget
+    let n_steps = steps(120);
+    let (_, eval_s) = ctx.split("wikitext", pipeline::ADAPT_BYTES)?;
+
+    let mut t = Table::new(
+        "Table 10 — OPT-sim family PPL on wikitext-sim (paper appendix E)",
+        &{
+            let mut h = vec!["Method", "W Bits"];
+            h.extend(sizes.iter().copied());
+            h
+        },
+    );
+    let mut lora_row = vec!["LoRA(QV4)".to_string(), "16".to_string()];
+    let mut peqa_row = vec!["PEQA(Ours)".to_string(), "4".to_string()];
+    let mut gaps = vec![];
+    for size in sizes {
+        eprintln!("[table10] {size}…");
+        let lora = pipeline::finetune_cached(&ctx, size, "lora_qv4", "wikitext", n_steps)?;
+        let p_lora = pipeline::lora_ppl(&ctx, size, "lora_qv4", &lora, &eval_s)?;
+        let pq = pipeline::finetune_cached(&ctx, size, "peqa_b4_gc", "wikitext", n_steps)?;
+        let p_peqa = pipeline::ppl(&ctx, size, &pq, &eval_s)?;
+        lora_row.push(format!("{p_lora:.2}"));
+        peqa_row.push(format!("{p_peqa:.2}"));
+        gaps.push(p_peqa - p_lora);
+    }
+    t.row(&lora_row);
+    t.row(&peqa_row);
+    t.print();
+    println!("PPL gaps (PEQA − LoRA) by size: {gaps:.2?}");
+    t.save(&ctx.paths.results, "table10_opt_family")?;
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Table 14 (appendix I): zero-shot task generalization — ROUGE-L of
+//! greedy generations on *held-out* instruction families (ni-sim) after
+//! alpaca-sim tuning. Base vs +LoRA vs +LoRA+OPTQ vs +PEQA.
+
+use peqa::bench::{quick_mode, steps, Table};
+use peqa::data;
+use peqa::eval::{generate, rouge_l, EvalModel};
+use peqa::model::Checkpoint;
+use peqa::pipeline::{self, Ctx};
+use peqa::tokenizer::{BOS, EOS};
+
+fn score(ctx: &Ctx, size: &str, fp: &Checkpoint, items: &[data::Instruction]) -> anyhow::Result<f64> {
+    let model = EvalModel::new(&ctx.rt, &format!("{size}_logits_b8"), fp)?;
+    let mut total = 0.0;
+    for ins in items {
+        let mut prompt = vec![BOS];
+        prompt.extend(ctx.tok.encode(&ins.prompt));
+        let out = generate(&model, &ctx.rt, &prompt, 16, EOS)?;
+        let text = ctx.tok.decode(&out)?;
+        total += rouge_l(&text, &ins.response);
+    }
+    Ok(100.0 * total / items.len() as f64)
+}
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::new()?;
+    let sizes: &[&str] = if quick_mode() { &["n3"] } else { &["n3"] }; // n4 via PEQA_BENCH_FULL (1-core budget)
+    let n_items = if quick_mode() { 8 } else { 24 };
+    let items = data::ni_sim(&ctx.world, 21, n_items);
+    let n_steps = steps(120);
+
+    let mut t = Table::new(
+        "Table 14 — ni-sim zero-shot ROUGE-L on held-out task families (paper Table 14)",
+        &["# Params", "base", "+LoRA", "+LoRA w/ OPTQ", "+PEQA"],
+    );
+    for size in sizes {
+        eprintln!("[table14] {size}…");
+        let base = pipeline::instruct_tuned(&ctx, size, "base", 256, n_steps)?;
+        let lora = pipeline::instruct_tuned(&ctx, size, "lora_qkvo16", 256, n_steps)?;
+        let (a, r) = pipeline::lora_hparams(&ctx, size, "lora_qkvo16")?;
+        let lora_fp = lora.merge_lora(a, r)?;
+        // OPTQ the instruction-tuned merged LoRA model.
+        let (calib, _) = ctx.split("pretrain", pipeline::ADAPT_BYTES)?;
+        let h = pipeline::hessians(&ctx, size, &lora_fp, &calib, 8)?;
+        let lora_optq = pipeline::optq_quantize(&lora_fp, &h, 4, None)?.dequantize()?;
+        let peqa = pipeline::instruct_tuned(&ctx, size, "peqa_b4_gc", 256, n_steps)?
+            .dequantize()?;
+        t.row(&[
+            size.to_string(),
+            format!("{:.1}", score(&ctx, size, &base, &items)?),
+            format!("{:.1}", score(&ctx, size, &lora_fp, &items)?),
+            format!("{:.1}", score(&ctx, size, &lora_optq, &items)?),
+            format!("{:.1}", score(&ctx, size, &peqa, &items)?),
+        ]);
+    }
+    t.print();
+    t.save(&ctx.paths.results, "table14_ni")?;
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! Table 15 (appendix J): AlphaTuning (binary-coding quantization, train
+//! only α₁) vs PEQA at 3/4-bit on the 1.3B-analog sizes.
+//!
+//! Shape target: PEQA ≤ AlphaTuning at both bit-widths (paper: PEQA wins
+//! by ≥ 0.7 PPL on Wikitext2).
+
+use peqa::bench::{steps, Table};
+use peqa::pipeline::{self, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::new()?;
+    let sizes = ["n1", "n2"];
+    let n_steps = steps(120);
+    let (_, eval_s) = ctx.split("wikitext", pipeline::ADAPT_BYTES)?;
+
+    let mut t = Table::new(
+        "Table 15 — AlphaTuning vs PEQA on wikitext-sim (paper Table 15)",
+        &["Method", "# Bits", "n1 (OPT-1.3B-sim)", "n2 (GPT-Neo-1.3B-sim)"],
+    );
+    for bits in [4u8, 3] {
+        for (name, tag) in [
+            ("AlphaTuning", format!("alpha_b{bits}")),
+            ("PEQA (Ours)", format!("peqa_b{bits}_gc")),
+        ] {
+            let mut cells = vec![name.to_string(), bits.to_string()];
+            for size in sizes {
+                eprintln!("[table15] {size} {tag}…");
+                let ck = pipeline::finetune_cached(&ctx, size, &tag, "wikitext", n_steps)?;
+                cells.push(format!("{:.2}", pipeline::ppl(&ctx, size, &ck, &eval_s)?));
+            }
+            t.row(&cells);
+        }
+    }
+    t.print();
+    t.save(&ctx.paths.results, "table15_alphatuning")?;
+    Ok(())
+}

@@ -1,0 +1,29 @@
+//! Table 17 (appendix K): what should train — zero-points only, scales
+//! only (PEQA), or both? Shape target: zp-only ≫ scales-only ≈ both.
+
+use peqa::bench::{quick_mode, steps, Table};
+use peqa::pipeline::{self, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::new()?;
+    let sizes: &[&str] = if quick_mode() { &["n3"] } else { &["n3", "n4"] };
+    let n_steps = steps(120);
+    let (_, eval_s) = ctx.split("wikitext", pipeline::ADAPT_BYTES)?;
+
+    let mut t = Table::new(
+        "Table 17 — trainable-subset ablation, 4-bit, wikitext-sim (paper Table 17)",
+        &["Model", "Zero-points only", "Scales only (PEQA)", "Both"],
+    );
+    for size in sizes {
+        let mut cells = vec![size.to_string()];
+        for tag in ["peqa_zp_b4_gc", "peqa_b4_gc", "peqa_szp_b4_gc"] {
+            eprintln!("[table17] {size} {tag}…");
+            let ck = pipeline::finetune_cached(&ctx, size, tag, "wikitext", n_steps)?;
+            cells.push(format!("{:.2}", pipeline::ppl(&ctx, size, &ck, &eval_s)?));
+        }
+        t.row(&cells);
+    }
+    t.print();
+    t.save(&ctx.paths.results, "table17_zeropoints")?;
+    Ok(())
+}

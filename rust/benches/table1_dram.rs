@@ -1,0 +1,90 @@
+//! Table 1 + Figure 2a: DRAM usage / inference speed / task-switching of
+//! Full FT, PEFT, PEFT+PTQ, PTQ+PEFT, PEQA — at real LLaMA-65B dims
+//! (analytic model) AND measured on our served family (adapter-swap vs
+//! full-reload wall time, packed file sizes).
+
+use peqa::bench::Table;
+use peqa::memmodel::{self, Geometry, Method};
+use peqa::model::Checkpoint;
+use peqa::pipeline::{self, Ctx};
+use peqa::util::decimal_gb;
+
+fn main() -> anyhow::Result<()> {
+    // ---- Analytic model at paper dimensions (Table 1 / Fig. 2a). ----
+    let geom = Geometry::llama_65b();
+    let lora_t = memmodel::lora_trainable(8192, 80, 2, 4);
+    let mut t = Table::new(
+        "Table 1 — DRAM & deployment axes @ LLaMA-65B dims (paper: 457/131/131/33/33 GB)",
+        &["Method", "DRAM fine-tune", "DRAM deploy", "Inference", "Task-switching"],
+    );
+    for r in [
+        memmodel::report(&geom, Method::FullFt),
+        memmodel::report(&geom, Method::Peft { trainable_params: lora_t }),
+        memmodel::report(&geom, Method::PeftPtq { trainable_params: lora_t, bits: 4 }),
+        memmodel::report(&geom, Method::PtqPeft { trainable_params: lora_t, bits: 4 }),
+        memmodel::report(&geom, Method::Peqa { bits: 4, group: None }),
+    ] {
+        t.row(&[
+            r.method.to_string(),
+            decimal_gb(r.finetune_bytes),
+            decimal_gb(r.deploy_bytes),
+            if r.fast_inference { "Fast" } else { "Slow" }.to_string(),
+            if r.fast_switching { "Fast" } else { "Slow" }.to_string(),
+        ]);
+    }
+    t.print();
+
+    // Fig. 2a series (bar data): DRAM deploy per method.
+    let mut f = Table::new(
+        "Figure 2a — DRAM usage of LLaMA-65B by tuning method (GB, decimal)",
+        &["Method", "Deploy GB"],
+    );
+    for (name, m) in [
+        ("Full/PEFT fp16", Method::Peft { trainable_params: lora_t }),
+        ("PEQA 4-bit", Method::Peqa { bits: 4, group: None }),
+        ("PEQA 3-bit", Method::Peqa { bits: 3, group: None }),
+    ] {
+        let r = memmodel::report(&geom, m);
+        f.row(&[name.to_string(), format!("{:.2}", r.deploy_bytes as f64 / 1e9)]);
+    }
+    f.print();
+
+    // ---- Measured on our family: swap cost + packed sizes. ----
+    let ctx = Ctx::new()?;
+    let size = "n3";
+    let base = pipeline::ensure_base(&ctx, size, pipeline::pretrain_steps())?;
+    let qck = pipeline::rtn_quantize(&base, 4, None)?;
+    let dir = std::env::temp_dir().join("peqa_table1");
+    std::fs::create_dir_all(&dir)?;
+    let packed_bytes = qck.save_packed(&dir.join("m.packed"), 4)?;
+    let mut fp_ck = Checkpoint::new();
+    for (n, x) in base.iter() {
+        fp_ck.insert(n.clone(), x.clone());
+    }
+    fp_ck.save(&dir.join("m.fp.peqa"))?;
+    let fp_bytes = std::fs::metadata(dir.join("m.fp.peqa"))?.len();
+    let adapter = qck.extract_adapter(false);
+    let adapter_bytes = adapter.n_params() as u64 * 4;
+
+    let mut m = Table::new(
+        "Table 1 (measured) — our n3 model: sizes & task-switch cost",
+        &["Quantity", "Value"],
+    );
+    m.row(&["fp32 model file".into(), peqa::util::human_bytes(fp_bytes)]);
+    m.row(&["4-bit packed model file".into(), peqa::util::human_bytes(packed_bytes)]);
+    m.row(&[
+        "compression".into(),
+        format!("{:.2}x", fp_bytes as f64 / packed_bytes as f64),
+    ]);
+    m.row(&["task adapter (scales)".into(), peqa::util::human_bytes(adapter_bytes)]);
+    m.row(&[
+        "adapter/model ratio".into(),
+        format!("{:.5}", adapter_bytes as f64 / packed_bytes as f64),
+    ]);
+    m.print();
+    t.save(&ctx.paths.results, "table1_dram")?;
+    m.save(&ctx.paths.results, "table1_measured")?;
+    f.save(&ctx.paths.results, "fig2a_dram")?;
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Table 2: PPL of fine-tuned LLMs — QAT (upper bound) vs LoRA+OPTQ
+//! (lower bound) vs PEQA, 3- and 4-bit, on wikitext-sim.
+//!
+//! Reproduction target (shape): PEQA ≈ QAT at 4-bit; at 3-bit LoRA+OPTQ
+//! degrades hard while PEQA stays close to QAT (paper: 19.47 vs 6.19 on
+//! LLaMA-7B at 3-bit).
+
+use peqa::bench::{steps, Table};
+use peqa::pipeline::{self, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::new()?;
+    let sizes = ["n1", "n2", "n3", "n4"];
+    let n_steps = steps(120);
+    let dataset = "wikitext";
+    let (_, eval_s) = ctx.split(dataset, pipeline::ADAPT_BYTES)?;
+
+    let mut t = Table::new(
+        "Table 2 — Wikitext-sim PPL: QAT vs LoRA+OPTQ vs PEQA (paper Table 2)",
+        &["Method", "W Bits", "GPT-Neo-sim(n1)", "GPT-J-sim(n2)", "LLaMA-7B-sim(n3)", "LLaMA-13B-sim(n4)"],
+    );
+    for bits in [4u8, 3] {
+        let mut rows: Vec<(String, Vec<f64>)> = vec![
+            (format!("QAT"), vec![]),
+            (format!("LoRA + OPTQ"), vec![]),
+            (format!("PEQA (Ours)"), vec![]),
+        ];
+        for size in sizes {
+            eprintln!("[table2] {size} {bits}-bit…");
+            // QAT: trains all weights through the fake-quant STE.
+            let qat = pipeline::finetune_cached(&ctx, size, &format!("qat_b{bits}"), dataset, n_steps)?;
+            // QAT checkpoints are fp; quantize at the end (deployment form).
+            let qat_q = pipeline::rtn_quantize(&qat, bits, None)?;
+            rows[0].1.push(pipeline::ppl(&ctx, size, &qat_q, &eval_s)?);
+            // LoRA fp16 fine-tune → merge → OPTQ.
+            let lo = pipeline::lora_optq(&ctx, size, "lora_qv4", dataset, n_steps, bits, None)?;
+            rows[1].1.push(pipeline::ppl(&ctx, size, &lo, &eval_s)?);
+            // PEQA.
+            let pq = pipeline::finetune_cached(
+                &ctx, size, &format!("peqa_b{bits}_gc"), dataset, n_steps,
+            )?;
+            rows[2].1.push(pipeline::ppl(&ctx, size, &pq, &eval_s)?);
+        }
+        for (name, ppls) in rows {
+            let mut cells = vec![name, bits.to_string()];
+            cells.extend(ppls.iter().map(|p| format!("{p:.2}")));
+            t.row(&cells);
+        }
+    }
+    t.print();
+    t.save(&ctx.paths.results, "table2_ppl")?;
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Table 3 (+ Table 11): scalability of PEQA vs LoRA-fp16 vs LoRA+OPTQ
+//! across the whole model family on wikitext-sim AND ptb-sim.
+//!
+//! Reproduction target (shape): PEQA's gap to fp16-LoRA shrinks as the
+//! model grows; 3-bit LoRA+OPTQ blows up while 3-bit PEQA stays close.
+//! Table 11 sub-check: LoRA QV4 ≈ LoRA QKVO16.
+
+use peqa::bench::{quick_mode, steps, Table};
+use peqa::pipeline::{self, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::new()?;
+    let sizes: &[&str] =
+        if quick_mode() { &["n1", "n2", "n3"] } else { &["n1", "n2", "n3", "n4", "n5", "n6"] };
+    let n_steps = steps(120);
+
+    for dataset in ["wikitext", "ptb"] {
+        let (_, eval_s) = ctx.split(dataset, pipeline::ADAPT_BYTES)?;
+        let mut t = Table::new(
+            &format!("Table 3 — {dataset}-sim PPL across model scale (paper Table 3)"),
+            &{
+                let mut h = vec!["Method", "W Bits"];
+                h.extend(sizes.iter().copied());
+                h
+            },
+        );
+        let mut rows: Vec<(String, String, Vec<f64>)> = vec![
+            ("LoRA".into(), "16".into(), vec![]),
+            ("LoRA+OPTQ".into(), "4".into(), vec![]),
+            ("PEQA (Ours)".into(), "4".into(), vec![]),
+            ("LoRA+OPTQ".into(), "3".into(), vec![]),
+            ("PEQA (Ours)".into(), "3".into(), vec![]),
+        ];
+        for size in sizes {
+            eprintln!("[table3] {dataset} {size}…");
+            let lora = pipeline::finetune_cached(&ctx, size, "lora_qv4", dataset, n_steps)?;
+            rows[0].2.push(pipeline::lora_ppl(&ctx, size, "lora_qv4", &lora, &eval_s)?);
+            for (row, bits) in [(1usize, 4u8), (3, 3)] {
+                let q = pipeline::lora_optq(&ctx, size, "lora_qv4", dataset, n_steps, bits, None)?;
+                rows[row].2.push(pipeline::ppl(&ctx, size, &q, &eval_s)?);
+            }
+            for (row, bits) in [(2usize, 4u8), (4, 3)] {
+                let q = pipeline::finetune_cached(
+                    &ctx, size, &format!("peqa_b{bits}_gc"), dataset, n_steps,
+                )?;
+                rows[row].2.push(pipeline::ppl(&ctx, size, &q, &eval_s)?);
+            }
+        }
+        for (name, bits, ppls) in &rows {
+            let mut cells = vec![name.clone(), bits.clone()];
+            cells.extend(ppls.iter().map(|p| format!("{p:.2}")));
+            t.row(&cells);
+        }
+        t.print();
+        t.save(&ctx.paths.results, &format!("table3_{dataset}"))?;
+    }
+
+    // Table 11: LoRA target-set ablation on wikitext-sim.
+    let (_, eval_s) = ctx.split("wikitext", pipeline::ADAPT_BYTES)?;
+    let t11_sizes: &[&str] = if quick_mode() { &["n1"] } else { &["n1", "n2", "n3", "n4"] };
+    let mut t11 = Table::new(
+        "Table 11 — LoRA QV4 vs QKVO16 (should be ≈ equal)",
+        &{
+            let mut h = vec!["Config"];
+            h.extend(t11_sizes.iter().copied());
+            h
+        },
+    );
+    for tag in ["lora_qv4", "lora_qkvo16"] {
+        let mut cells = vec![tag.to_string()];
+        for size in t11_sizes {
+            let ck = pipeline::finetune_cached(&ctx, size, tag, "wikitext", steps(120))?;
+            cells.push(format!("{:.2}", pipeline::lora_ppl(&ctx, size, tag, &ck, &eval_s)?));
+        }
+        t11.row(&cells);
+    }
+    t11.print();
+    t11.save(&ctx.paths.results, "table11_lora_cfg")?;
+    Ok(())
+}

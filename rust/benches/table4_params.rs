@@ -1,0 +1,79 @@
+//! Table 4: learnable-parameter counts and model sizes, both at paper
+//! dims (analytic) and measured on our family (real packed file bytes).
+
+use peqa::bench::Table;
+use peqa::memmodel::{self, Geometry};
+use peqa::pipeline::{self, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::new()?;
+
+    // ---- Paper-dims analytic check: the real LLaMA family. ----
+    let paper: [(&str, usize, usize, usize, usize); 4] = [
+        ("LLaMA 7B", 32000, 4096, 32, 11008),
+        ("LLaMA 13B", 32000, 5120, 40, 13824),
+        ("LLaMA 30B", 32000, 6656, 60, 17920),
+        ("LLaMA 65B", 32000, 8192, 80, 22016),
+    ];
+    let mut tp = Table::new(
+        "Table 4 (paper dims) — learnable params (M) & model size (GB)",
+        &["Model", "LoRA QV4 (M)", "PEQA (M)", "fp16 (GB)", "PEQA 4-bit (GB)", "PEQA 3-bit (GB)"],
+    );
+    for (name, v, d, l, ff) in paper {
+        let g = Geometry::llama(name, v, d, l, ff);
+        let lora = memmodel::lora_trainable(d, l, 2, 4) as f64 / 1e6;
+        let peqa = memmodel::peqa_trainable(&g, None) as f64 / 1e6;
+        let fp16 = g.n_params() as f64 * 2.0 / 1e9;
+        let b4 = memmodel::report(&g, memmodel::Method::Peqa { bits: 4, group: None })
+            .deploy_bytes as f64
+            / 1e9;
+        let b3 = memmodel::report(&g, memmodel::Method::Peqa { bits: 3, group: None })
+            .deploy_bytes as f64
+            / 1e9;
+        tp.row(&[
+            name.to_string(),
+            format!("{lora:.2}"),
+            format!("{peqa:.2}"),
+            format!("{fp16:.2}"),
+            format!("{b4:.2}"),
+            format!("{b3:.2}"),
+        ]);
+    }
+    tp.print();
+    tp.save(&ctx.paths.results, "table4_paper_dims")?;
+
+    // ---- Our family: measured packed bytes from real checkpoints. ----
+    let mut tm = Table::new(
+        "Table 4 (measured) — our family: trainable params & packed bytes",
+        &["Size", "Total params", "LoRA QV4 train", "PEQA train", "fp32 bytes", "4-bit packed", "3-bit packed"],
+    );
+    let dir = std::env::temp_dir().join("peqa_table4");
+    std::fs::create_dir_all(&dir)?;
+    for size in ["n1", "n2", "n3", "n4", "n5", "n6"] {
+        let meta_peqa = ctx.rt.meta(&format!("{size}_train_peqa_b4_gc"))?;
+        let meta_lora = ctx.rt.meta(&format!("{size}_train_lora_qv4"))?;
+        let peqa_train: usize = meta_peqa.params_trainable.iter().map(|p| p.numel()).sum();
+        let lora_train: usize = meta_lora.params_trainable.iter().map(|p| p.numel()).sum();
+        let total = meta_peqa.model.as_ref().unwrap().n_params;
+        let base = pipeline::ensure_base(&ctx, size, pipeline::pretrain_steps())?;
+        let mut row = vec![
+            size.to_string(),
+            total.to_string(),
+            lora_train.to_string(),
+            peqa_train.to_string(),
+            (base.n_params() * 4).to_string(),
+        ];
+        for bits in [4u8, 3] {
+            let q = pipeline::rtn_quantize(&base, bits, None)?;
+            let bytes = q.save_packed(&dir.join(format!("{size}.b{bits}")), bits)?;
+            row.push(bytes.to_string());
+        }
+        // Sanity: PEQA has fewer trainable params than LoRA (paper claim).
+        assert!(peqa_train < lora_train, "{size}: {peqa_train} !< {lora_train}");
+        tm.row(&row);
+    }
+    tm.print();
+    tm.save(&ctx.paths.results, "table4_measured")?;
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

@@ -1,0 +1,36 @@
+//! Table 5: group-wise (multi-scale) PEQA — PPL improves monotonically as
+//! the group size shrinks (more learnable scales), on the 7B/13B analogs.
+
+use peqa::bench::{quick_mode, steps, Table};
+use peqa::pipeline::{self, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::new()?;
+    let (_, eval_s) = ctx.split("wikitext", pipeline::ADAPT_BYTES)?;
+    let sizes: &[&str] = if quick_mode() { &["n3"] } else { &["n3", "n4"] };
+    let groups = ["gc", "g64", "g32", "g16"]; // paper: chan, g256, g128, g64
+    let n_steps = steps(120);
+
+    let mut t = Table::new(
+        "Table 5 — group-wise PEQA on wikitext-sim (paper Table 5; g scaled to our dims)",
+        &["Model", "W Bits", "Channel-wise", "g64", "g32", "g16", "train params (4b)"],
+    );
+    for size in sizes {
+        for bits in [4u8, 3] {
+            let mut cells = vec![size.to_string(), bits.to_string()];
+            for g in groups {
+                eprintln!("[table5] {size} b{bits} {g}…");
+                let tag = format!("peqa_b{bits}_{g}");
+                let ck = pipeline::finetune_cached(&ctx, size, &tag, "wikitext", n_steps)?;
+                cells.push(format!("{:.2}", pipeline::ppl(&ctx, size, &ck, &eval_s)?));
+            }
+            let meta = ctx.rt.meta(&format!("{size}_train_peqa_b4_g16"))?;
+            let tp: usize = meta.params_trainable.iter().map(|p| p.numel()).sum();
+            cells.push(if bits == 4 { tp.to_string() } else { String::new() });
+            t.row(&cells);
+        }
+    }
+    t.print();
+    t.save(&ctx.paths.results, "table5_groups")?;
+    Ok(())
+}

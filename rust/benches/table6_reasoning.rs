@@ -1,0 +1,63 @@
+//! Table 6: common-sense reasoning + in-context learning after
+//! instruction-tuning on alpaca-sim — base vs +LoRA(QKVO16) vs +PEQA(4b),
+//! zero-shot and five-shot over the 5-task csr-sim suite.
+//!
+//! Shape target: +LoRA and +PEQA both ≥ base on average; PEQA within a
+//! point or two of LoRA at ~4× smaller model bytes.
+
+use peqa::bench::{quick_mode, steps, Table};
+use peqa::data;
+use peqa::eval::mc_accuracy;
+use peqa::pipeline::{self, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::new()?;
+    let sizes: &[&str] = if quick_mode() { &["n3"] } else { &["n3"] }; // n4 via PEQA_BENCH_FULL (1-core budget)
+    let n_items = if quick_mode() { 12 } else { 32 };
+    let n_steps = steps(120);
+    let suite = data::csr_suite(&ctx.world, 5, n_items);
+    let task_names: Vec<&str> = suite.iter().map(|t| t.name).collect();
+
+    for k_shot in [0usize, 5] {
+        let mut t = Table::new(
+            &format!(
+                "Table 6 — csr-sim accuracy, {}-shot (paper Table 6)",
+                k_shot
+            ),
+            &{
+                let mut h = vec!["Model", "Method"];
+                h.extend(task_names.iter().copied());
+                h.push("Average");
+                h
+            },
+        );
+        for size in sizes {
+            for method in ["base", "lora_qkvo16", "peqa_b4_gc"] {
+                eprintln!("[table6] {size} {method} {k_shot}-shot…");
+                let ck = pipeline::instruct_tuned(&ctx, size, method, 256, n_steps)?;
+                let fp = if method.starts_with("peqa") { ck.dequantize()? } else if method
+                    .starts_with("lora")
+                {
+                    let (a, r) = pipeline::lora_hparams(&ctx, size, method)?;
+                    ck.merge_lora(a, r)?
+                } else {
+                    ck
+                };
+                let art = format!("{size}_logits_b8");
+                let mut cells = vec![size.to_string(), method.to_string()];
+                let mut accs = vec![];
+                for task in &suite {
+                    let acc =
+                        mc_accuracy(&ctx.rt, &art, &fp, &ctx.tok, task, k_shot, 99)? * 100.0;
+                    accs.push(acc);
+                    cells.push(format!("{acc:.1}"));
+                }
+                cells.push(format!("{:.1}", accs.iter().sum::<f64>() / accs.len() as f64));
+                t.row(&cells);
+            }
+        }
+        t.print();
+        t.save(&ctx.paths.results, &format!("table6_csr_{k_shot}shot"))?;
+    }
+    Ok(())
+}

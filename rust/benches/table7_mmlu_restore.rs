@@ -1,0 +1,49 @@
+//! Table 7: the restoration claim — fp base vs RTN-quantized (degraded)
+//! vs RTN+PEQA-instruction-tuned (restored) on the 4-domain mmlu-sim.
+//!
+//! Shape target: RTN < base; PEQA-tuning recovers most (or all) of the
+//! gap while staying at the quantized model size.
+
+use peqa::bench::{quick_mode, steps, Table};
+use peqa::data;
+use peqa::eval::mc_accuracy;
+use peqa::pipeline::{self, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::new()?;
+    let sizes: &[&str] = if quick_mode() { &["n3"] } else { &["n3", "n4"] };
+    let n_items = if quick_mode() { 12 } else { 32 };
+    let suite = data::mmlu_sim(&ctx.world, 3, n_items);
+    let mut t = Table::new(
+        "Table 7 — mmlu-sim 5-shot accuracy: base vs RTN vs RTN+PEQA (paper Table 7)",
+        &["Model", "Method", "colors", "places", "sizes", "sounds", "Average"],
+    );
+    for size in sizes {
+        for method in ["base", "rtn_b4", "peqa_b4_gc"] {
+            eprintln!("[table7] {size} {method}…");
+            let ck = pipeline::instruct_tuned(&ctx, size, method, 256, steps(120))?;
+            let fp = if method == "base" { ck } else { ck.dequantize()? };
+            let art = format!("{size}_logits_b8");
+            let mut cells = vec![
+                size.to_string(),
+                match method {
+                    "base" => "LLaMA-sim (fp)",
+                    "rtn_b4" => "+ RTN (no tuning)",
+                    _ => "+ PEQA (Ours)",
+                }
+                .to_string(),
+            ];
+            let mut accs = vec![];
+            for task in &suite {
+                let acc = mc_accuracy(&ctx.rt, &art, &fp, &ctx.tok, task, 5, 7)? * 100.0;
+                accs.push(acc);
+                cells.push(format!("{acc:.1}"));
+            }
+            cells.push(format!("{:.1}", accs.iter().sum::<f64>() / accs.len() as f64));
+            t.row(&cells);
+        }
+    }
+    t.print();
+    t.save(&ctx.paths.results, "table7_mmlu_restore")?;
+    Ok(())
+}

@@ -1,0 +1,208 @@
+//! Benchmark framework: wall-clock measurement, paper-style table
+//! rendering, and JSON result dumps (no criterion in the vendored
+//! registry — `cargo bench` targets use this with `harness = false`).
+
+use std::time::Instant;
+
+use crate::json::Value;
+use crate::util::stats;
+
+/// Repeated-measurement timing.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub label: String,
+    pub samples_s: Vec<f64>,
+}
+
+impl Timing {
+    pub fn mean_s(&self) -> f64 {
+        stats::mean(&self.samples_s)
+    }
+
+    pub fn std_s(&self) -> f64 {
+        stats::std(&self.samples_s)
+    }
+
+    pub fn p50_s(&self) -> f64 {
+        stats::percentile(&self.samples_s, 50.0)
+    }
+
+    pub fn min_s(&self) -> f64 {
+        self.samples_s.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:32} mean {:>9.3} ms  p50 {:>9.3} ms  min {:>9.3} ms  (n={})",
+            self.label,
+            self.mean_s() * 1e3,
+            self.p50_s() * 1e3,
+            self.min_s() * 1e3,
+            self.samples_s.len()
+        )
+    }
+}
+
+/// Time `f` `iters` times after `warmup` unmeasured calls.
+pub fn time_fn(label: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Timing { label: label.to_string(), samples_s: samples }
+}
+
+/// Paper-style table: fixed-width text rendering + CSV/JSON export.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowv(&mut self, cells: Vec<String>) {
+        self.row(&cells.iter().cloned().collect::<Vec<_>>());
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let line = |cells: &[String], w: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = w[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.headers, &w));
+        out.push('\n');
+        out.push_str(&"-".repeat(w.iter().sum::<usize>() + 2 * (w.len() - 1)));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r, &w));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("title", Value::str(self.title.clone())),
+            (
+                "headers",
+                Value::Arr(self.headers.iter().map(|h| Value::str(h.clone())).collect()),
+            ),
+            (
+                "rows",
+                Value::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Value::Arr(r.iter().map(|c| Value::str(c.clone())).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write table to `results/<name>.{txt,csv,json}`.
+    pub fn save(&self, results_dir: &std::path::Path, name: &str) -> anyhow::Result<()> {
+        std::fs::create_dir_all(results_dir)?;
+        std::fs::write(results_dir.join(format!("{name}.txt")), self.render())?;
+        std::fs::write(results_dir.join(format!("{name}.csv")), self.to_csv())?;
+        std::fs::write(results_dir.join(format!("{name}.json")), self.to_json().to_string())?;
+        Ok(())
+    }
+}
+
+/// `PEQA_BENCH_QUICK=1` shrinks bench workloads (CI-speed smoke runs).
+pub fn quick_mode() -> bool {
+    std::env::var("PEQA_BENCH_QUICK").as_deref() == Ok("1")
+}
+
+/// Scale a step count down in quick mode; `PEQA_BENCH_STEPS` overrides the
+/// full budget (the 1-core testbed runs the suite at 60; see EXPERIMENTS).
+pub fn steps(full: usize) -> usize {
+    let full = std::env::var("PEQA_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(full);
+    if quick_mode() { (full / 10).max(5) } else { full }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_stats() {
+        let t = time_fn("noop", 1, 16, || { std::hint::black_box(1 + 1); });
+        assert_eq!(t.samples_s.len(), 16);
+        assert!(t.mean_s() >= 0.0 && t.min_s() <= t.mean_s());
+    }
+
+    #[test]
+    fn table_renders_and_exports() {
+        let mut t = Table::new("Table 1: demo", &["Method", "PPL"]);
+        t.row(&["PEQA".to_string(), "5.84".to_string()]);
+        t.row(&["LoRA+OPTQ".to_string(), "7.13".to_string()]);
+        let text = t.render();
+        assert!(text.contains("Table 1: demo"));
+        assert!(text.contains("PEQA"));
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        let json = t.to_json().to_string();
+        assert!(json.contains("5.84"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".to_string()]);
+    }
+}

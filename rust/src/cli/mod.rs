@@ -1,0 +1,150 @@
+//! Command-line argument parser (no clap in the vendored registry).
+//!
+//! Grammar: `peqa <command> [positional…] [--flag] [--key value|--key=value]`.
+//! Typed accessors with defaults; unknown-flag detection via `finish()`.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: BTreeSet<String>,
+    consumed: BTreeSet<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.options.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.insert(name.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&mut self, name: &str) -> bool {
+        self.consumed.insert(name.to_string());
+        self.flags.contains(name)
+    }
+
+    pub fn opt(&mut self, name: &str) -> Option<String> {
+        self.consumed.insert(name.to_string());
+        // A value-less `--name` followed by another flag parses as a flag;
+        // treat it as missing value rather than silently losing it.
+        self.options.get(name).cloned()
+    }
+
+    pub fn get(&mut self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_usize(&mut self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&mut self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&mut self, name: &str, default: u64) -> Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn require(&mut self, name: &str) -> Result<String> {
+        self.opt(name).ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    /// Error on any unconsumed option/flag (catches typos).
+    pub fn finish(&self) -> Result<()> {
+        for k in self.options.keys().chain(self.flags.iter()) {
+            if !self.consumed.contains(k) {
+                bail!("unknown option --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn commands_positionals_options_flags() {
+        let mut a = parse("train base.ckpt --size n3 --steps=200 --quiet --lr 1e-4");
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.positional, vec!["base.ckpt"]);
+        assert_eq!(a.get("size", "n1"), "n3");
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 200);
+        assert!((a.get_f64("lr", 0.0).unwrap() - 1e-4).abs() < 1e-12);
+        assert!(a.flag("quiet"));
+        assert!(!a.flag("verbose"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_option_detected() {
+        let mut a = parse("serve --prot 8080");
+        let _ = a.flag("verbose");
+        assert!(a.finish().is_err());
+        assert_eq!(a.get("prot", ""), "8080");
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let mut a = parse("eval");
+        assert_eq!(a.get_usize("batch", 8).unwrap(), 8);
+        assert!(a.require("ckpt").is_err());
+    }
+
+    #[test]
+    fn flag_before_flag_not_eaten() {
+        let mut a = parse("x --fast --size n2");
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("size", ""), "n2");
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let mut a = parse("x --steps abc");
+        assert!(a.get_usize("steps", 1).is_err());
+    }
+}

@@ -1,0 +1,129 @@
+//! Runtime configuration: paths, seeds, and the training recipes
+//! (appendix A–C analog: per-method learning rates, steps, schedules).
+//!
+//! Model *architecture* is never configured here — it always comes from
+//! the artifact's meta.json (single source of truth in python/compile).
+
+use std::path::PathBuf;
+
+/// Where artifacts / checkpoints / results live. Overridable by env vars
+/// (PEQA_ARTIFACTS, PEQA_CHECKPOINTS, PEQA_RESULTS) and CLI flags.
+#[derive(Clone, Debug)]
+pub struct Paths {
+    pub artifacts: PathBuf,
+    pub checkpoints: PathBuf,
+    pub results: PathBuf,
+}
+
+impl Default for Paths {
+    fn default() -> Self {
+        let root = repo_root();
+        Paths {
+            artifacts: env_path("PEQA_ARTIFACTS", root.join("artifacts")),
+            checkpoints: env_path("PEQA_CHECKPOINTS", root.join("checkpoints")),
+            results: env_path("PEQA_RESULTS", root.join("results")),
+        }
+    }
+}
+
+fn env_path(var: &str, default: PathBuf) -> PathBuf {
+    std::env::var_os(var).map(PathBuf::from).unwrap_or(default)
+}
+
+/// Locate the repo root: walk up from cwd looking for `artifacts/` or
+/// `Cargo.toml` so binaries work from any subdirectory (incl. cargo test).
+pub fn repo_root() -> PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        if dir.join("Cargo.toml").exists() || dir.join("artifacts").is_dir() {
+            return dir;
+        }
+        if !dir.pop() {
+            return PathBuf::from(".");
+        }
+    }
+}
+
+/// One fine-tuning run recipe (appendix A: AdamW + linear decay).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f64,
+    /// Linear decay to `lr_final_frac`·lr over the run (paper: decay to 0).
+    pub lr_final_frac: f64,
+    pub warmup_steps: usize,
+    pub seed: u64,
+    /// Evaluate every `eval_every` steps (0 = only at the end).
+    pub eval_every: usize,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 200,
+            lr: 1e-3,
+            lr_final_frac: 0.0,
+            warmup_steps: 10,
+            seed: 42,
+            eval_every: 0,
+            log_every: 25,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Default learning rate per method kind, mirroring the appendix-C
+    /// pattern: full/QAT smallest, PEQA small, LoRA largest.
+    pub fn default_lr(method_kind: &str) -> f64 {
+        match method_kind {
+            "full" => 3e-4,
+            "qat" => 3e-4,
+            "lora" => 2e-2,
+            "peqa" => 2e-3,
+            "alpha" => 2e-3,
+            _ => 1e-3,
+        }
+    }
+
+    /// Learning rate at `step` (1-based): linear warmup then linear decay.
+    pub fn lr_at(&self, step: usize) -> f64 {
+        let s = step as f64;
+        if step <= self.warmup_steps && self.warmup_steps > 0 {
+            return self.lr * s / self.warmup_steps as f64;
+        }
+        let total = self.steps.max(1) as f64;
+        let frac = ((total - s) / (total - self.warmup_steps as f64).max(1.0)).clamp(0.0, 1.0);
+        self.lr * (self.lr_final_frac + (1.0 - self.lr_final_frac) * frac)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let c = TrainConfig { steps: 100, lr: 1.0, warmup_steps: 10, ..Default::default() };
+        assert!(c.lr_at(1) < 0.2);
+        assert!((c.lr_at(10) - 1.0).abs() < 1e-9);
+        assert!(c.lr_at(55) < c.lr_at(11));
+        assert!(c.lr_at(100) < 0.01);
+        // monotone decay after warmup
+        for s in 11..100 {
+            assert!(c.lr_at(s + 1) <= c.lr_at(s) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn method_lrs_ordered() {
+        assert!(TrainConfig::default_lr("lora") > TrainConfig::default_lr("peqa"));
+        assert!(TrainConfig::default_lr("peqa") > TrainConfig::default_lr("full"));
+    }
+
+    #[test]
+    fn paths_default() {
+        let p = Paths::default();
+        assert!(p.artifacts.ends_with("artifacts"));
+    }
+}

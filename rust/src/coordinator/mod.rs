@@ -1,0 +1,384 @@
+//! L3 coordination — multi-task serving of a shared quantized model.
+//!
+//! The paper's deployment story (§3.3, Table 1): one frozen integer model
+//! is shared by every downstream task; a task is just a scale vector
+//! (s₀+Δs), so task switching is a kilobyte-sized buffer swap and
+//! inference runs through the quantized kernel. This module implements
+//! that as a serving coordinator:
+//!
+//! * [`AdapterStore`] — named task adapters (scale/zero vectors) with disk
+//!   persistence; the multi-tenant registry.
+//! * [`Coordinator`] — request queue + task-aware dynamic batcher +
+//!   batched greedy decode over a logits artifact. On the quantized path
+//!   (`logits_q`) a task switch swaps only the s/z device buffers; the
+//!   fp fallback path must rebuild every weight buffer (the "Slow"
+//!   switching column of Table 1, measurable in the serving bench).
+//! * [`server`] — thread + channel wrapper for concurrent clients.
+
+pub mod server;
+
+use std::collections::{HashMap, VecDeque};
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::eval::EvalModel;
+use crate::model::Checkpoint;
+use crate::runtime::Runtime;
+use crate::tokenizer::PAD;
+use crate::util::stats::{mean, percentile};
+
+/// Named task adapters (the paper's s₀+Δs per task).
+#[derive(Default)]
+pub struct AdapterStore {
+    adapters: HashMap<String, Checkpoint>,
+}
+
+impl AdapterStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, task: impl Into<String>, adapter: Checkpoint) {
+        self.adapters.insert(task.into(), adapter);
+    }
+
+    pub fn get(&self, task: &str) -> Option<&Checkpoint> {
+        self.adapters.get(task)
+    }
+
+    pub fn tasks(&self) -> Vec<&str> {
+        let mut t: Vec<&str> = self.adapters.keys().map(|s| s.as_str()).collect();
+        t.sort();
+        t
+    }
+
+    /// Total bytes across all adapters (they are tiny — that's the point).
+    pub fn total_bytes(&self) -> u64 {
+        self.adapters
+            .values()
+            .map(|a| a.n_params() as u64 * 4)
+            .sum()
+    }
+
+    pub fn save_all(&self, dir: &Path) -> Result<()> {
+        for (task, a) in &self.adapters {
+            a.save(&dir.join(format!("{task}.adapter")))?;
+        }
+        Ok(())
+    }
+
+    pub fn load_dir(dir: &Path) -> Result<AdapterStore> {
+        let mut store = AdapterStore::new();
+        for entry in std::fs::read_dir(dir)? {
+            let p = entry?.path();
+            if let Some(name) = p.file_name().and_then(|s| s.to_str()) {
+                if let Some(task) = name.strip_suffix(".adapter") {
+                    store.insert(task.to_string(), Checkpoint::load(&p)?);
+                }
+            }
+        }
+        Ok(store)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub id: u64,
+    pub task: String,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    pub stop: u32,
+}
+
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub id: u64,
+    pub task: String,
+    pub tokens: Vec<u32>,
+    pub queue_s: f64,
+    pub latency_s: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Max requests decoded together (≤ the artifact's batch dim).
+    pub max_batch: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8 }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    pub completed: usize,
+    pub generated_tokens: usize,
+    pub latencies_s: Vec<f64>,
+    pub queue_s: Vec<f64>,
+    pub swap_times_s: Vec<f64>,
+    pub decode_steps: usize,
+    pub wall_s: f64,
+}
+
+impl ServeMetrics {
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.wall_s > 0.0 { self.generated_tokens as f64 / self.wall_s } else { 0.0 }
+    }
+
+    pub fn p50_latency(&self) -> f64 {
+        if self.latencies_s.is_empty() { 0.0 } else { percentile(&self.latencies_s, 50.0) }
+    }
+
+    pub fn p99_latency(&self) -> f64 {
+        if self.latencies_s.is_empty() { 0.0 } else { percentile(&self.latencies_s, 99.0) }
+    }
+
+    pub fn mean_swap_s(&self) -> f64 {
+        mean(&self.swap_times_s)
+    }
+}
+
+/// How task switches reach the device (the Table 1 "Task-Switching" axis).
+pub enum SwitchMode {
+    /// PEQA: swap only the adapter's s/z buffers on the quantized model.
+    ScaleSwap,
+    /// Merged-weights serving (PEFT+PTQ analog): any task change requires
+    /// re-uploading every weight buffer of the dequantized model.
+    FullReload,
+}
+
+pub struct Coordinator {
+    rt: std::rc::Rc<Runtime>,
+    model: EvalModel,
+    artifact_name: String,
+    base: Checkpoint,
+    adapters: AdapterStore,
+    mode: SwitchMode,
+    current_task: Option<String>,
+    queue: VecDeque<(GenRequest, Instant)>,
+    next_id: u64,
+    pub batcher: BatcherConfig,
+    pub metrics: ServeMetrics,
+}
+
+impl Coordinator {
+    /// `base` must be in the layout of `artifact_name` (peqa layout for
+    /// `logits_q` — the fast path; fp layout for plain `logits`, in which
+    /// case adapters trigger a dequantize + full reload).
+    pub fn new(
+        rt: std::rc::Rc<Runtime>,
+        artifact_name: &str,
+        base: Checkpoint,
+        adapters: AdapterStore,
+        mode: SwitchMode,
+        batcher: BatcherConfig,
+    ) -> Result<Coordinator> {
+        let serving_ck = match mode {
+            SwitchMode::ScaleSwap => base.clone(),
+            SwitchMode::FullReload => base.dequantize()?,
+        };
+        let model = EvalModel::new(&rt, artifact_name, &serving_ck)?;
+        let max_b = model.batch_size();
+        Ok(Coordinator {
+            rt,
+            model,
+            artifact_name: artifact_name.to_string(),
+            base,
+            adapters,
+            mode,
+            current_task: None,
+            queue: VecDeque::new(),
+            next_id: 1,
+            batcher: BatcherConfig { max_batch: batcher.max_batch.min(max_b) },
+            metrics: ServeMetrics::default(),
+        })
+    }
+
+    pub fn submit(&mut self, task: &str, prompt: Vec<u32>, max_new: usize, stop: u32) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back((
+            GenRequest { id, task: task.to_string(), prompt, max_new, stop },
+            Instant::now(),
+        ));
+        id
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Switch the served task; returns the swap wall time.
+    fn switch_task(&mut self, task: &str) -> Result<f64> {
+        if self.current_task.as_deref() == Some(task) {
+            return Ok(0.0);
+        }
+        let t0 = Instant::now();
+        let adapter = self
+            .adapters
+            .get(task)
+            .ok_or_else(|| anyhow!("no adapter registered for task '{task}'"))?
+            .clone();
+        match self.mode {
+            SwitchMode::ScaleSwap => {
+                // Only the s/z buffers move — the integer matrix stays.
+                for (name, t) in adapter.iter() {
+                    self.model.swap_param(&self.rt, name, t)?;
+                }
+            }
+            SwitchMode::FullReload => {
+                let mut ck = self.base.clone();
+                ck.apply_adapter(&adapter)?;
+                let fp = ck.dequantize()?;
+                self.model = EvalModel::new(&self.rt, &self.artifact_name, &fp)?;
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        self.metrics.swap_times_s.push(dt);
+        self.current_task = Some(task.to_string());
+        Ok(dt)
+    }
+
+    /// Pull the next same-task group (FIFO head decides the task).
+    fn next_group(&mut self) -> Option<Vec<(GenRequest, Instant)>> {
+        let task = self.queue.front()?.0.task.clone();
+        let mut group = Vec::new();
+        let mut rest = VecDeque::new();
+        while let Some(item) = self.queue.pop_front() {
+            if item.0.task == task && group.len() < self.batcher.max_batch {
+                group.push(item);
+            } else {
+                rest.push_back(item);
+            }
+        }
+        self.queue = rest;
+        Some(group)
+    }
+
+    /// Drain the queue; returns responses in completion order.
+    pub fn run_until_idle(&mut self) -> Result<Vec<GenResponse>> {
+        let wall0 = Instant::now();
+        let mut responses = Vec::new();
+        while let Some(group) = self.next_group() {
+            let task = group[0].0.task.clone();
+            self.switch_task(&task)?;
+            let started = Instant::now();
+            let outputs = self.decode_group(&group)?;
+            for ((req, submitted), tokens) in group.into_iter().zip(outputs) {
+                self.metrics.completed += 1;
+                self.metrics.generated_tokens += tokens.len();
+                let queue_s = (started - submitted).as_secs_f64();
+                let latency_s = submitted.elapsed().as_secs_f64();
+                self.metrics.latencies_s.push(latency_s);
+                self.metrics.queue_s.push(queue_s);
+                responses.push(GenResponse { id: req.id, task: task.clone(), tokens, queue_s, latency_s });
+            }
+        }
+        self.metrics.wall_s += wall0.elapsed().as_secs_f64();
+        Ok(responses)
+    }
+
+    /// Synchronized batched greedy decode for one same-task group.
+    fn decode_group(&mut self, group: &[(GenRequest, Instant)]) -> Result<Vec<Vec<u32>>> {
+        let b = self.model.batch_size();
+        let t = self.model.seq_len();
+        let vocab = self.model.meta().outputs[0].shape[2];
+        let mut seqs: Vec<Vec<u32>> = group.iter().map(|(r, _)| r.prompt.clone()).collect();
+        let mut outs: Vec<Vec<u32>> = vec![Vec::new(); group.len()];
+        let mut done: Vec<bool> = group
+            .iter()
+            .map(|(r, _)| r.max_new == 0 || r.prompt.is_empty())
+            .collect();
+        let max_new = group.iter().map(|(r, _)| r.max_new).max().unwrap_or(0);
+
+        for _ in 0..max_new {
+            if done.iter().all(|&d| d) {
+                break;
+            }
+            // Build the (B, T) token block: each live row is its window.
+            let mut tokens = vec![PAD as i32; b * t];
+            let mut positions = vec![0usize; group.len()];
+            for (i, seq) in seqs.iter().enumerate() {
+                if done[i] {
+                    continue;
+                }
+                let window = if seq.len() > t { &seq[seq.len() - t..] } else { &seq[..] };
+                for (j, &id) in window.iter().enumerate() {
+                    tokens[i * t + j] = id as i32;
+                }
+                positions[i] = window.len() - 1;
+            }
+            let logits = self.model.logits(&self.rt, &tokens)?;
+            self.metrics.decode_steps += 1;
+            for i in 0..group.len() {
+                if done[i] {
+                    continue;
+                }
+                let row = &logits[(i * t + positions[i]) * vocab..(i * t + positions[i] + 1) * vocab];
+                let next = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, c| a.1.partial_cmp(c.1).unwrap())
+                    .unwrap()
+                    .0 as u32;
+                let (req, _) = &group[i];
+                if next == req.stop || outs[i].len() + 1 >= req.max_new {
+                    if next != req.stop {
+                        outs[i].push(next);
+                        seqs[i].push(next);
+                    }
+                    done[i] = true;
+                } else {
+                    outs[i].push(next);
+                    seqs[i].push(next);
+                }
+            }
+        }
+        Ok(outs)
+    }
+
+    pub fn tasks(&self) -> Vec<&str> {
+        self.adapters.tasks()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn adapter_store_roundtrip() {
+        let mut store = AdapterStore::new();
+        let mut a = Checkpoint::new();
+        a.insert("l.s", Tensor::full(&[4, 1], 0.5));
+        store.insert("taskA", a);
+        let mut b = Checkpoint::new();
+        b.insert("l.s", Tensor::full(&[4, 1], 0.9));
+        store.insert("taskB", b);
+        assert_eq!(store.tasks(), vec!["taskA", "taskB"]);
+        assert_eq!(store.total_bytes(), 2 * 4 * 4);
+
+        let dir = std::env::temp_dir().join("peqa_test_adapters");
+        std::fs::create_dir_all(&dir).unwrap();
+        store.save_all(&dir).unwrap();
+        let back = AdapterStore::load_dir(&dir).unwrap();
+        assert_eq!(back.tasks(), vec!["taskA", "taskB"]);
+        assert_eq!(back.get("taskB").unwrap().req("l.s").unwrap().data()[0], 0.9);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn metrics_aggregation() {
+        let mut m = ServeMetrics::default();
+        m.generated_tokens = 100;
+        m.wall_s = 2.0;
+        m.latencies_s = vec![0.1, 0.2, 0.3, 0.4];
+        assert_eq!(m.tokens_per_s(), 50.0);
+        assert!((m.p50_latency() - 0.25).abs() < 1e-9);
+    }
+}

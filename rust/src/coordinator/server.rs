@@ -1,0 +1,187 @@
+//! Threaded server wrapper around the single-threaded [`Coordinator`].
+//!
+//! PJRT handles are not `Send`, so the whole engine (runtime + compiled
+//! executables + device buffers) lives on one engine thread; clients talk
+//! to it over channels — the same frontend/engine split vLLM's router
+//! uses. Requests carry a oneshot-style response channel.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::{AdapterStore, BatcherConfig, Coordinator, GenResponse, ServeMetrics, SwitchMode};
+use crate::model::Checkpoint;
+use crate::runtime::Runtime;
+
+enum Msg {
+    Generate {
+        task: String,
+        prompt: Vec<u32>,
+        max_new: usize,
+        stop: u32,
+        reply: mpsc::Sender<Result<GenResponse, String>>,
+    },
+    Metrics {
+        reply: mpsc::Sender<ServeMetrics>,
+    },
+    Shutdown,
+}
+
+/// Client handle (cheaply cloneable; safe to move across threads).
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: mpsc::Sender<Msg>,
+}
+
+impl ServerHandle {
+    /// Blocking generate call.
+    pub fn generate(
+        &self,
+        task: &str,
+        prompt: Vec<u32>,
+        max_new: usize,
+        stop: u32,
+    ) -> Result<GenResponse> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Generate { task: task.to_string(), prompt, max_new, stop, reply })
+            .map_err(|_| anyhow!("server is down"))?;
+        rx.recv().map_err(|_| anyhow!("server dropped request"))?.map_err(|e| anyhow!(e))
+    }
+
+    pub fn metrics(&self) -> Result<ServeMetrics> {
+        let (reply, rx) = mpsc::channel();
+        self.tx.send(Msg::Metrics { reply }).map_err(|_| anyhow!("server is down"))?;
+        rx.recv().map_err(|_| anyhow!("server dropped request"))
+    }
+}
+
+pub struct Server {
+    handle: ServerHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+pub struct ServerConfig {
+    pub artifacts_dir: PathBuf,
+    pub artifact_name: String,
+    pub base_path: PathBuf,
+    pub adapters_dir: PathBuf,
+    pub scale_swap: bool,
+    pub max_batch: usize,
+}
+
+impl Server {
+    /// Spawn the engine thread. Construction errors surface on first call.
+    pub fn spawn(cfg: ServerConfig) -> Result<Server> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let join = std::thread::Builder::new()
+            .name("peqa-engine".into())
+            .spawn(move || engine_main(cfg, rx))?;
+        Ok(Server { handle: ServerHandle { tx }, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.clone()
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn engine_main(cfg: ServerConfig, rx: mpsc::Receiver<Msg>) {
+    let build = || -> Result<Coordinator> {
+        let rt = std::rc::Rc::new(Runtime::new(&cfg.artifacts_dir)?);
+        let base = Checkpoint::load(&cfg.base_path)?;
+        let adapters = AdapterStore::load_dir(&cfg.adapters_dir)?;
+        Coordinator::new(
+            rt,
+            &cfg.artifact_name,
+            base,
+            adapters,
+            if cfg.scale_swap { SwitchMode::ScaleSwap } else { SwitchMode::FullReload },
+            BatcherConfig { max_batch: cfg.max_batch },
+        )
+    };
+    let mut coord = match build() {
+        Ok(c) => c,
+        Err(e) => {
+            // Fail every request with the construction error.
+            let msg = format!("engine init failed: {e:#}");
+            for m in rx.iter() {
+                match m {
+                    Msg::Generate { reply, .. } => {
+                        let _ = reply.send(Err(msg.clone()));
+                    }
+                    Msg::Metrics { reply } => {
+                        let _ = reply.send(ServeMetrics::default());
+                    }
+                    Msg::Shutdown => return,
+                }
+            }
+            return;
+        }
+    };
+
+    // Collect a burst of requests, then batch-decode — the dynamic batcher.
+    let mut waiting: Vec<(u64, mpsc::Sender<Result<GenResponse, String>>)> = Vec::new();
+    loop {
+        // Block for at least one message; then drain whatever arrived.
+        let first = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => return,
+        };
+        let mut batch_msgs = vec![first];
+        while let Ok(m) = rx.try_recv() {
+            batch_msgs.push(m);
+        }
+        let mut shutdown = false;
+        for m in batch_msgs {
+            match m {
+                Msg::Generate { task, prompt, max_new, stop, reply } => {
+                    let id = coord.submit(&task, prompt, max_new, stop);
+                    waiting.push((id, reply));
+                }
+                Msg::Metrics { reply } => {
+                    let _ = reply.send(coord.metrics.clone());
+                }
+                Msg::Shutdown => shutdown = true,
+            }
+        }
+        if coord.pending() > 0 {
+            match coord.run_until_idle() {
+                Ok(responses) => {
+                    for resp in responses {
+                        if let Some(pos) = waiting.iter().position(|(id, _)| *id == resp.id) {
+                            let (_, reply) = waiting.swap_remove(pos);
+                            let _ = reply.send(Ok(resp));
+                        }
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("decode failed: {e:#}");
+                    for (_, reply) in waiting.drain(..) {
+                        let _ = reply.send(Err(msg.clone()));
+                    }
+                }
+            }
+        }
+        if shutdown {
+            return;
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Token batching: corpora → (B, T) i32 batches for the train/eval
+//! artifacts, and instruction examples → masked batches (loss only on
+//! response tokens, appendix-H style).
+
+use crate::tokenizer::{Tokenizer, BOS, EOS, PAD};
+use crate::util::Pcg32;
+
+use super::tasks::Instruction;
+
+/// A (B, T) token batch plus the (B, T−1) loss mask the artifacts expect.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub tokens: Vec<i32>, // row-major (B, T)
+    pub mask: Vec<f32>,   // row-major (B, T−1)
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl Batch {
+    pub fn n_loss_tokens(&self) -> f32 {
+        self.mask.iter().sum()
+    }
+}
+
+/// Random-window language-model batcher over a contiguous token stream
+/// (training); windows are seeded so runs are reproducible.
+pub struct LmBatcher {
+    stream: Vec<u32>,
+    batch: usize,
+    seq: usize,
+    rng: Pcg32,
+}
+
+impl LmBatcher {
+    pub fn new(stream: Vec<u32>, batch: usize, seq: usize, seed: u64) -> Self {
+        assert!(stream.len() > seq + 1, "stream too short: {}", stream.len());
+        LmBatcher { stream, batch, seq, rng: Pcg32::seeded(seed, 0xba7c4) }
+    }
+
+    pub fn next_batch(&mut self) -> Batch {
+        let mut tokens = Vec::with_capacity(self.batch * self.seq);
+        for _ in 0..self.batch {
+            let start = self.rng.usize_below(self.stream.len() - self.seq);
+            tokens.extend(self.stream[start..start + self.seq].iter().map(|&t| t as i32));
+        }
+        Batch {
+            tokens,
+            mask: vec![1.0; self.batch * (self.seq - 1)],
+            batch: self.batch,
+            seq: self.seq,
+        }
+    }
+}
+
+/// Deterministic non-overlapping eval windows (perplexity measurement).
+/// Returns ⌈len/(B·T)⌉ batches; the final partial batch is mask-padded so
+/// every token is counted exactly once.
+pub fn eval_batches(stream: &[u32], batch: usize, seq: usize) -> Vec<Batch> {
+    let mut out = Vec::new();
+    let mut pos = 0usize;
+    while pos + 1 < stream.len() {
+        let mut tokens = vec![PAD as i32; batch * seq];
+        let mut mask = vec![0.0f32; batch * (seq - 1)];
+        for b in 0..batch {
+            if pos + 1 >= stream.len() {
+                break;
+            }
+            let take = (stream.len() - pos).min(seq);
+            for j in 0..take {
+                tokens[b * seq + j] = stream[pos + j] as i32;
+            }
+            for j in 0..take.saturating_sub(1) {
+                mask[b * (seq - 1) + j] = 1.0;
+            }
+            // Windows overlap by 1 token so every next-token prediction in
+            // the stream is scored exactly once.
+            pos += take - 1;
+            if take < seq {
+                pos = stream.len();
+            }
+        }
+        if mask.iter().all(|&m| m == 0.0) {
+            break;
+        }
+        out.push(Batch { tokens, mask, batch, seq });
+    }
+    out
+}
+
+/// Instruction examples → batches: BOS + prompt + response + EOS, padded
+/// to T; loss mask covers only response tokens (and the EOS).
+pub fn instruction_batches(
+    tok: &Tokenizer,
+    data: &[Instruction],
+    batch: usize,
+    seq: usize,
+) -> Vec<Batch> {
+    let mut out = Vec::new();
+    for group in data.chunks(batch) {
+        let mut tokens = vec![PAD as i32; batch * seq];
+        let mut mask = vec![0.0f32; batch * (seq - 1)];
+        for (b, ins) in group.iter().enumerate() {
+            let p = tok.encode(&ins.prompt);
+            let r = tok.encode(&ins.response);
+            let mut ids = vec![BOS];
+            ids.extend(&p);
+            let resp_start = ids.len(); // first response position
+            ids.extend(&r);
+            ids.push(EOS);
+            ids.truncate(seq);
+            for (j, &id) in ids.iter().enumerate() {
+                tokens[b * seq + j] = id as i32;
+            }
+            // Predicting token j+1 from position j: response tokens sit at
+            // positions resp_start..; their predictors are resp_start-1..
+            for j in resp_start.saturating_sub(1)..ids.len().saturating_sub(1) {
+                mask[b * (seq - 1) + j] = 1.0;
+            }
+        }
+        out.push(Batch { tokens, mask, batch, seq });
+    }
+    out
+}
+
+/// Encode a corpus with BOS separators at document-ish boundaries.
+pub fn encode_stream(tok: &Tokenizer, text: &str) -> Vec<u32> {
+    let mut stream = vec![BOS];
+    stream.extend(tok.encode(text));
+    stream.push(EOS);
+    stream
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::world::World;
+
+    fn tok() -> Tokenizer {
+        Tokenizer::byte_level(512)
+    }
+
+    #[test]
+    fn lm_batcher_shapes_and_determinism() {
+        let stream: Vec<u32> = (0..500u32).map(|i| i % 200).collect();
+        let mut b1 = LmBatcher::new(stream.clone(), 4, 32, 9);
+        let mut b2 = LmBatcher::new(stream, 4, 32, 9);
+        let x = b1.next_batch();
+        let y = b2.next_batch();
+        assert_eq!(x.tokens, y.tokens);
+        assert_eq!(x.tokens.len(), 4 * 32);
+        assert_eq!(x.mask.len(), 4 * 31);
+        assert_eq!(x.n_loss_tokens(), 124.0);
+    }
+
+    #[test]
+    fn eval_batches_cover_stream_exactly_once() {
+        let stream: Vec<u32> = (0..1000u32).map(|i| i % 100).collect();
+        let batches = eval_batches(&stream, 4, 64);
+        let scored: f32 = batches.iter().map(|b| b.n_loss_tokens()).sum();
+        // Every next-token transition scored once: len-1 predictions.
+        assert_eq!(scored as usize, stream.len() - 1);
+    }
+
+    #[test]
+    fn eval_batches_small_tail() {
+        let stream: Vec<u32> = (0..70u32).collect();
+        let batches = eval_batches(&stream, 2, 64);
+        let scored: f32 = batches.iter().map(|b| b.n_loss_tokens()).sum();
+        assert_eq!(scored as usize, 69);
+    }
+
+    #[test]
+    fn instruction_mask_covers_response_only() {
+        let t = tok();
+        let w = World::new(1, 16);
+        let data = crate::data::tasks::alpaca_sim(&w, 1, 3);
+        let batches = instruction_batches(&t, &data, 4, 96);
+        assert_eq!(batches.len(), 1);
+        let b = &batches[0];
+        let ins = &data[0];
+        let p_len = t.encode(&ins.prompt).len();
+        let r_len = t.encode(&ins.response).len();
+        // Mask length == response tokens + EOS.
+        let row_mask: f32 = b.mask[0..95].iter().sum();
+        assert_eq!(row_mask as usize, r_len + 1);
+        // Mask starts exactly at the last prompt position (predicting the
+        // first response token).
+        assert_eq!(b.mask[p_len], 1.0);
+        assert_eq!(b.mask[p_len - 1], 0.0);
+    }
+
+    #[test]
+    fn truncation_safe() {
+        let t = tok();
+        let w = World::new(1, 16);
+        let data = crate::data::tasks::alpaca_sim(&w, 1, 2);
+        let batches = instruction_batches(&t, &data, 2, 16); // tiny seq
+        assert_eq!(batches[0].tokens.len(), 2 * 16);
+    }
+}

@@ -1,0 +1,205 @@
+//! Synthetic corpora (DESIGN §Substitutions).
+//!
+//! Three text distributions play the roles of the paper's datasets:
+//!
+//! * `pretrain` — the general mixture the base models are pretrained on:
+//!   template grammar text + the world's fact sentences (so the facts the
+//!   MC suites query are *in* the base model).
+//! * `wikitext_sim` — encyclopedic templates over a distinct word bank
+//!   (the task-adaptation target standing in for Wikitext2).
+//! * `ptb_sim` — newswire-flavored templates (standing in for PTB).
+//!
+//! Each generator is a seeded stochastic template grammar: deterministic,
+//! license-free, and distributionally distinct (validated by test:
+//! cross-corpus PPL > in-corpus PPL).
+
+use crate::util::Pcg32;
+
+use super::world::{Domain, World, NUMBERS, TOOLS};
+
+/// Stochastic template grammar: pick a template, fill slots from banks.
+struct Grammar {
+    templates: &'static [&'static str],
+    banks: &'static [(&'static str, &'static [&'static str])],
+}
+
+impl Grammar {
+    fn sentence(&self, rng: &mut Pcg32, out: &mut String) {
+        let t = rng.choose(self.templates);
+        let mut rest = *t;
+        while let Some(pos) = rest.find('<') {
+            out.push_str(&rest[..pos]);
+            let end = rest[pos..].find('>').expect("unclosed slot") + pos;
+            let slot = &rest[pos + 1..end];
+            let bank = self
+                .banks
+                .iter()
+                .find(|(k, _)| *k == slot)
+                .unwrap_or_else(|| panic!("unknown slot {slot}"))
+                .1;
+            let choice: &&str = rng.choose(bank);
+            out.push_str(choice);
+            rest = &rest[end + 1..];
+        }
+        out.push_str(rest);
+    }
+
+    fn generate(&self, rng: &mut Pcg32, target_len: usize) -> String {
+        let mut out = String::with_capacity(target_len + 64);
+        while out.len() < target_len {
+            self.sentence(rng, &mut out);
+        }
+        out
+    }
+}
+
+const PRETRAIN: Grammar = Grammar {
+    templates: &[
+        "the <adj> <noun> <verb> near the <noun>. ",
+        "a <noun> can <act> when the <noun> is <adj>. ",
+        "<name> said the <noun> was <adj>. ",
+        "every <noun> <verb> before the <noun>. ",
+        "the <noun> and the <noun> <verb> together. ",
+        "if the <noun> is <adj> then the <noun> <verb>. ",
+        "some <noun> <verb> while others <act>. ",
+    ],
+    banks: &[
+        ("adj", &["quick", "calm", "bright", "heavy", "soft", "cold", "warm", "dark"]),
+        ("noun", &["river", "forest", "tower", "garden", "market", "valley", "bridge", "meadow"]),
+        ("verb", &["moves", "rests", "grows", "turns", "waits", "falls", "rises", "sings"]),
+        ("act", &["run", "hide", "float", "gather", "wander", "sleep"]),
+        ("name", &["mara", "odin", "pell", "sira", "tomas", "vela"]),
+    ],
+};
+
+const WIKITEXT_SIM: Grammar = Grammar {
+    templates: &[
+        "the <realm> of <place> was founded in the year <year>. ",
+        "<person> served as the <role> of <place> until <year>. ",
+        "the <realm> expanded its <asset> across the <region>. ",
+        "historians note that <person> reformed the <asset> in <year>. ",
+        "the battle of <place> ended the <realm> in <year>. ",
+        "<place> is known for its ancient <asset> and vast <region>. ",
+    ],
+    banks: &[
+        ("realm", &["empire", "kingdom", "republic", "duchy", "league"]),
+        ("place", &["arvon", "belmar", "cardem", "dolvia", "elstan", "farholt"]),
+        ("person", &["queen lira", "king aldo", "duke haren", "lady mirel", "consul brin"]),
+        ("role", &["ruler", "regent", "governor", "chancellor"]),
+        ("asset", &["roads", "temples", "archives", "harbors", "mints"]),
+        ("region", &["north", "south", "east", "west", "coast", "highlands"]),
+        ("year", &["three", "seven", "twelve", "forty", "ninety"]),
+    ],
+};
+
+const PTB_SIM: Grammar = Grammar {
+    templates: &[
+        "shares of <firm> <moved> <num> percent in <period> trading. ",
+        "<firm> posted <num> million in <metric> for the <period>. ",
+        "analysts expect <firm> to <plan> its <metric> next <period>. ",
+        "the <metric> of <firm> <moved> after the <period> report. ",
+        "<firm> agreed to <plan> a unit of <firm>. ",
+    ],
+    banks: &[
+        ("firm", &["acme corp", "zenix inc", "norvel group", "talos ltd", "quill co"]),
+        ("moved", &["rose", "fell", "gained", "slipped", "jumped"]),
+        ("num", &["two", "five", "nine", "twelve", "thirty"]),
+        ("metric", &["revenue", "earnings", "output", "margins", "sales"]),
+        ("period", &["morning", "quarter", "year", "week"]),
+        ("plan", &["expand", "sell", "merge", "spin off", "buy"]),
+    ],
+};
+
+/// Fact sentences stating the world's attributes (mixed into pretraining).
+pub fn fact_sentences(world: &World, rng: &mut Pcg32, n: usize) -> String {
+    let mut out = String::new();
+    for _ in 0..n {
+        let e = rng.choose(&world.entities);
+        match rng.below(7) {
+            0 => out.push_str(&format!("the color of the {} is {}. ", e.name,
+                world.attr(e, Domain::Color))),
+            1 => out.push_str(&format!("the {} lives in the {}. ", e.name,
+                world.attr(e, Domain::Place))),
+            2 => out.push_str(&format!("the {} is a kind of {}. ", e.name,
+                world.attr(e, Domain::Category))),
+            3 => out.push_str(&format!("the {} is {} in size. ", e.name,
+                world.attr(e, Domain::Size))),
+            4 => out.push_str(&format!("the {} makes a {} sound. ", e.name,
+                world.attr(e, Domain::Sound))),
+            5 => {
+                let (tool, act) = rng.choose(&TOOLS);
+                out.push_str(&format!("people use the {tool} to {act}. "));
+            }
+            _ => {
+                let a = rng.below(5) as usize;
+                let b = rng.below(5) as usize;
+                out.push_str(&format!("{} plus {} is {}. ",
+                    NUMBERS[a], NUMBERS[b], NUMBERS[a + b]));
+            }
+        }
+    }
+    out
+}
+
+/// General pretraining mixture: grammar text + world facts, interleaved.
+pub fn pretrain(world: &World, seed: u64, target_len: usize) -> String {
+    let mut rng = Pcg32::seeded(seed, 0x90);
+    let mut out = String::with_capacity(target_len + 256);
+    while out.len() < target_len {
+        PRETRAIN.sentence(&mut rng, &mut out);
+        if rng.below(3) == 0 {
+            out.push_str(&fact_sentences(world, &mut rng, 2));
+        }
+    }
+    out
+}
+
+pub fn wikitext_sim(seed: u64, target_len: usize) -> String {
+    WIKITEXT_SIM.generate(&mut Pcg32::seeded(seed, 0x11), target_len)
+}
+
+pub fn ptb_sim(seed: u64, target_len: usize) -> String {
+    PTB_SIM.generate(&mut Pcg32::seeded(seed, 0x22), target_len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_are_deterministic() {
+        let w = World::new(1, 32);
+        assert_eq!(pretrain(&w, 5, 2000), pretrain(&w, 5, 2000));
+        assert_eq!(wikitext_sim(5, 2000), wikitext_sim(5, 2000));
+        assert_ne!(wikitext_sim(5, 2000), wikitext_sim(6, 2000));
+    }
+
+    #[test]
+    fn distributions_differ() {
+        // Disjoint content-word banks → corpora share few words.
+        let a = wikitext_sim(1, 4000);
+        let b = ptb_sim(1, 4000);
+        let set = |s: &str| {
+            s.split_whitespace().map(|w| w.to_string()).collect::<std::collections::HashSet<_>>()
+        };
+        let (sa, sb) = (set(&a), set(&b));
+        let inter = sa.intersection(&sb).count();
+        assert!(inter * 3 < sa.len().min(sb.len()), "{inter} shared");
+    }
+
+    #[test]
+    fn pretrain_contains_facts() {
+        let w = World::new(1, 32);
+        let text = pretrain(&w, 7, 60_000);
+        assert!(text.contains("the color of the"));
+        assert!(text.contains("plus"));
+        assert!(text.contains("people use the"));
+    }
+
+    #[test]
+    fn target_length_respected() {
+        let w = World::new(1, 16);
+        let t = pretrain(&w, 3, 10_000);
+        assert!(t.len() >= 10_000 && t.len() < 11_000);
+    }
+}

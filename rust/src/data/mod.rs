@@ -1,0 +1,14 @@
+//! Data substrate: the synthetic knowledge world, corpus generators,
+//! instruction / multiple-choice task suites, and token batching.
+//!
+//! Everything is seeded and deterministic; see DESIGN §Substitutions for
+//! how each generator maps to the paper's datasets.
+
+pub mod batch;
+pub mod corpus;
+pub mod tasks;
+pub mod world;
+
+pub use batch::{encode_stream, eval_batches, instruction_batches, Batch, LmBatcher};
+pub use tasks::{alpaca_sim, csr_suite, mmlu_sim, ni_sim, Instruction, McItem, McTask};
+pub use world::{Domain, World};

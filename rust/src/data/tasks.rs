@@ -1,0 +1,337 @@
+//! Instruction-following data and evaluation suites (DESIGN §Substitutions).
+//!
+//! * `alpaca_sim`    — instruction/response pairs over *seen* task families
+//!                     (color, place, addition, copy, tool-use): the
+//!                     instruction-tuning set of Section 4.3.
+//! * `ni_sim`        — *held-out* families (category, size): zero-shot task
+//!                     generalization measured with ROUGE-L (Table 14).
+//! * `csr_suite`     — five multiple-choice tasks standing in for
+//!                     PIQA / HellaSwag / ARC-C / ARC-E / OBQA (Table 6).
+//! * `mmlu_sim`      — four knowledge domains scored like MMLU (Table 7).
+//!
+//! MC items are scored by option log-likelihood (lm-eval-harness style) in
+//! eval::mc; few-shot prompts prepend k solved examples from the same task.
+
+use crate::util::Pcg32;
+
+use super::world::{Domain, World, NUMBERS, TOOLS};
+
+#[derive(Clone, Debug)]
+pub struct Instruction {
+    pub prompt: String,
+    pub response: String,
+    pub family: &'static str,
+}
+
+#[derive(Clone, Debug)]
+pub struct McItem {
+    /// Context ending right before the answer span.
+    pub prompt: String,
+    pub options: Vec<String>,
+    pub correct: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct McTask {
+    pub name: &'static str,
+    pub items: Vec<McItem>,
+}
+
+fn fmt_instruction(q: &str) -> String {
+    // The Alpaca-style prompt format (fixed, learned during tuning).
+    format!("instruction: {q} response:")
+}
+
+fn gen_one(world: &World, rng: &mut Pcg32, family: &'static str) -> Instruction {
+    let e = rng.choose(&world.entities);
+    let (q, a) = match family {
+        "color" => (
+            format!("what is the color of the {}?", e.name),
+            format!(" {}", world.attr(e, Domain::Color)),
+        ),
+        "place" => (
+            format!("where does the {} live?", e.name),
+            format!(" the {}", world.attr(e, Domain::Place)),
+        ),
+        "add" => {
+            let a = rng.below(5) as usize;
+            let b = rng.below(5) as usize;
+            (
+                format!("what is {} plus {}?", NUMBERS[a], NUMBERS[b]),
+                format!(" {}", NUMBERS[a + b]),
+            )
+        }
+        "copy" => {
+            let w1 = rng.choose(&world.entities).name.clone();
+            (format!("repeat the word {w1}."), format!(" {w1}"))
+        }
+        "tool" => {
+            let (tool, act) = rng.choose(&TOOLS);
+            (format!("what do people use the {tool} for?"), format!(" to {act}"))
+        }
+        "category" => (
+            format!("what kind of thing is the {}?", e.name),
+            format!(" a {}", world.attr(e, Domain::Category)),
+        ),
+        "size" => (
+            format!("what is the size of the {}?", e.name),
+            format!(" {}", world.attr(e, Domain::Size)),
+        ),
+        _ => unreachable!("unknown family {family}"),
+    };
+    Instruction { prompt: fmt_instruction(&q), response: a, family }
+}
+
+pub const SEEN_FAMILIES: [&str; 5] = ["color", "place", "add", "copy", "tool"];
+pub const HELDOUT_FAMILIES: [&str; 2] = ["category", "size"];
+
+/// Instruction-tuning set over the seen families.
+pub fn alpaca_sim(world: &World, seed: u64, n: usize) -> Vec<Instruction> {
+    let mut rng = Pcg32::seeded(seed, 0xa1);
+    (0..n).map(|i| gen_one(world, &mut rng, SEEN_FAMILIES[i % SEEN_FAMILIES.len()])).collect()
+}
+
+/// Held-out generalization set (Natural-Instruction analog).
+pub fn ni_sim(world: &World, seed: u64, n: usize) -> Vec<Instruction> {
+    let mut rng = Pcg32::seeded(seed, 0xa2);
+    (0..n)
+        .map(|i| gen_one(world, &mut rng, HELDOUT_FAMILIES[i % HELDOUT_FAMILIES.len()]))
+        .collect()
+}
+
+fn mc_from_domain(
+    world: &World,
+    rng: &mut Pcg32,
+    domain: Domain,
+    template: impl Fn(&str) -> String,
+    n: usize,
+    n_options: usize,
+) -> Vec<McItem> {
+    (0..n)
+        .map(|_| {
+            let e = rng.choose(&world.entities);
+            let opts_bank = world.options(domain);
+            let correct_word = world.attr(e, domain);
+            let mut distractors: Vec<&str> =
+                opts_bank.iter().copied().filter(|w| *w != correct_word).collect();
+            rng.shuffle(&mut distractors);
+            let mut options: Vec<String> =
+                distractors.into_iter().take(n_options - 1).map(|s| format!(" {s}")).collect();
+            let pos = rng.usize_below(n_options);
+            options.insert(pos, format!(" {correct_word}"));
+            McItem { prompt: template(&e.name), options, correct: pos }
+        })
+        .collect()
+}
+
+/// Five common-sense-reasoning-analog tasks (Table 6).
+pub fn csr_suite(world: &World, seed: u64, n_per_task: usize) -> Vec<McTask> {
+    let mut rng = Pcg32::seeded(seed, 0xc5);
+    let mut tasks = Vec::new();
+
+    // piqa-sim: physical tool use.
+    let items = (0..n_per_task)
+        .map(|_| {
+            let (tool, act) = *rng.choose(&TOOLS);
+            let mut distractors: Vec<&str> = TOOLS
+                .iter()
+                .map(|(_, a)| *a)
+                .filter(|a| *a != act)
+                .collect();
+            rng.shuffle(&mut distractors);
+            let mut options: Vec<String> =
+                distractors.into_iter().take(3).map(|s| format!(" {s}")).collect();
+            let pos = rng.usize_below(4);
+            options.insert(pos, format!(" {act}"));
+            McItem { prompt: format!("people use the {tool} to"), options, correct: pos }
+        })
+        .collect();
+    tasks.push(McTask { name: "piqa-sim", items });
+
+    // hella-sim: scene continuation (place attribute, pretrain format).
+    let items = mc_from_domain(
+        world, &mut rng, Domain::Place,
+        |name| format!("the {name} lives in the"), n_per_task, 4,
+    );
+    tasks.push(McTask { name: "hella-sim", items });
+
+    // arc-c-sim: two-step arithmetic (hardest: degrades first).
+    let items = (0..n_per_task)
+        .map(|_| {
+            let a = rng.below(4) as usize;
+            let b = rng.below(3) as usize;
+            let c = rng.below(3) as usize;
+            let correct = a + b + c;
+            let mut wrong: Vec<usize> =
+                (0..10).filter(|&x| x != correct).collect();
+            rng.shuffle(&mut wrong);
+            let mut options: Vec<String> =
+                wrong.into_iter().take(3).map(|x| format!(" {}", NUMBERS[x])).collect();
+            let pos = rng.usize_below(4);
+            options.insert(pos, format!(" {}", NUMBERS[correct]));
+            McItem {
+                prompt: format!(
+                    "{} plus {} plus {} is", NUMBERS[a], NUMBERS[b], NUMBERS[c]
+                ),
+                options,
+                correct: pos,
+            }
+        })
+        .collect();
+    tasks.push(McTask { name: "arc-c-sim", items });
+
+    // arc-e-sim: color facts.
+    let items = mc_from_domain(
+        world, &mut rng, Domain::Color,
+        |name| format!("the color of the {name} is"), n_per_task, 4,
+    );
+    tasks.push(McTask { name: "arc-e-sim", items });
+
+    // obqa-sim: category facts.
+    let items = mc_from_domain(
+        world, &mut rng, Domain::Category,
+        |name| format!("the {name} is a kind of"), n_per_task, 4,
+    );
+    tasks.push(McTask { name: "obqa-sim", items });
+
+    tasks
+}
+
+/// Four knowledge domains scored like MMLU (Table 7). Prompts use the
+/// exact declarative forms the pretraining corpus states the facts in
+/// (corpus::fact_sentences), so accuracy measures *knowledge retention* —
+/// the quantity RTN damages and PEQA restores — not format familiarity.
+pub fn mmlu_sim(world: &World, seed: u64, n_per_domain: usize) -> Vec<McTask> {
+    let mut rng = Pcg32::seeded(seed, 0xd7);
+    let items_c = mc_from_domain(
+        world, &mut rng, Domain::Color,
+        |n| format!("the color of the {n} is"), n_per_domain, 4,
+    );
+    let items_p = mc_from_domain(
+        world, &mut rng, Domain::Place,
+        |n| format!("the {n} lives in the"), n_per_domain, 4,
+    );
+    let items_s = mc_from_domain(
+        world, &mut rng, Domain::Size,
+        |n| format!("the {n} is"), n_per_domain, 4,
+    );
+    let items_n = mc_from_domain(
+        world, &mut rng, Domain::Sound,
+        |n| format!("the {n} makes a"), n_per_domain, 4,
+    );
+    vec![
+        McTask { name: "colors", items: items_c },
+        McTask { name: "places", items: items_p },
+        McTask { name: "sizes", items: items_s },
+        McTask { name: "sounds", items: items_n },
+    ]
+}
+
+/// k-shot prompt prefix: k solved items of the same task joined in front.
+pub fn few_shot_prefix(task: &McTask, k: usize, rng: &mut Pcg32) -> String {
+    let mut prefix = String::new();
+    for _ in 0..k {
+        let ex = &task.items[rng.usize_below(task.items.len())];
+        prefix.push_str(&ex.prompt);
+        prefix.push_str(&ex.options[ex.correct]);
+        prefix.push_str(". ");
+    }
+    prefix
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn world() -> World {
+        World::new(1, 32)
+    }
+
+    #[test]
+    fn instructions_deterministic_and_well_formed() {
+        let w = world();
+        let a = alpaca_sim(&w, 3, 50);
+        let b = alpaca_sim(&w, 3, 50);
+        assert_eq!(a.len(), 50);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.response, y.response);
+            assert!(x.prompt.starts_with("instruction:"));
+            assert!(x.prompt.ends_with("response:"));
+            assert!(x.response.starts_with(' '));
+        }
+    }
+
+    #[test]
+    fn heldout_families_disjoint_from_seen() {
+        for f in HELDOUT_FAMILIES {
+            assert!(!SEEN_FAMILIES.contains(&f));
+        }
+        let w = world();
+        for ins in ni_sim(&w, 1, 20) {
+            assert!(HELDOUT_FAMILIES.contains(&ins.family));
+        }
+    }
+
+    #[test]
+    fn mc_items_have_unique_options_and_valid_correct() {
+        let w = world();
+        for task in csr_suite(&w, 5, 20).iter().chain(mmlu_sim(&w, 5, 20).iter()) {
+            assert!(!task.items.is_empty());
+            for item in &task.items {
+                assert_eq!(item.options.len(), 4, "{}", task.name);
+                assert!(item.correct < 4);
+                let mut o = item.options.clone();
+                o.sort();
+                o.dedup();
+                assert_eq!(o.len(), 4, "dup options in {}: {:?}", task.name, item);
+            }
+        }
+    }
+
+    #[test]
+    fn answers_consistent_with_world() {
+        let w = world();
+        let tasks = mmlu_sim(&w, 9, 30);
+        for item in &tasks[0].items {
+            // colors domain: the correct option really is the entity's color.
+            let ename = item
+                .prompt
+                .split("of the ")
+                .nth(1)
+                .unwrap()
+                .split(' ')
+                .next()
+                .unwrap();
+            let e = w.entities.iter().find(|e| e.name == ename).unwrap();
+            assert_eq!(
+                item.options[item.correct].trim(),
+                w.attr(e, Domain::Color)
+            );
+        }
+    }
+
+    #[test]
+    fn few_shot_prefix_contains_k_examples() {
+        let w = world();
+        let tasks = csr_suite(&w, 2, 16);
+        let mut rng = Pcg32::new(4);
+        let p = few_shot_prefix(&tasks[0], 5, &mut rng);
+        assert_eq!(p.matches("people use the").count(), 5);
+    }
+
+    #[test]
+    fn correct_position_not_biased() {
+        let w = world();
+        let tasks = mmlu_sim(&w, 11, 200);
+        let mut counts = [0usize; 4];
+        for t in &tasks {
+            for i in &t.items {
+                counts[i.correct] += 1;
+            }
+        }
+        for c in counts {
+            assert!(c > 120, "position bias: {counts:?}");
+        }
+    }
+}

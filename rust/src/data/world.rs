@@ -1,0 +1,163 @@
+//! The synthetic knowledge world.
+//!
+//! A deterministic universe of entities with attributes (color, place,
+//! category, size, sound) plus a tool→use table and number words. The
+//! pretraining corpus states these facts declaratively; the MC suites
+//! (csr-sim / mmlu-sim) and instruction datasets query them. Because the
+//! mapping is fixed by the seed, "knowledge" is measurable: a model that
+//! memorized the facts scores high, a quantization-damaged model drops,
+//! and PEQA-tuning can restore it — the Table 6/7 dynamic.
+
+use crate::util::Pcg32;
+
+pub const COLORS: [&str; 8] =
+    ["red", "blue", "green", "gold", "black", "white", "pink", "gray"];
+pub const PLACES: [&str; 8] =
+    ["cave", "lake", "hill", "barn", "nest", "dune", "reef", "glen"];
+pub const CATEGORIES: [&str; 6] = ["bird", "fish", "beast", "plant", "stone", "cloud"];
+pub const SIZES: [&str; 4] = ["tiny", "small", "large", "huge"];
+pub const SOUNDS: [&str; 6] = ["hum", "roar", "chirp", "buzz", "howl", "click"];
+pub const TOOLS: [(&str, &str); 8] = [
+    ("knife", "cut"),
+    ("spoon", "stir"),
+    ("lamp", "light"),
+    ("rope", "tie"),
+    ("broom", "sweep"),
+    ("pen", "write"),
+    ("saw", "split"),
+    ("net", "catch"),
+];
+pub const NUMBERS: [&str; 10] =
+    ["zero", "one", "two", "three", "four", "five", "six", "seven", "eight", "nine"];
+
+const ONSETS: [&str; 10] = ["bl", "dor", "fen", "gri", "lum", "mer", "pol", "ras", "tav", "zor"];
+const CODAS: [&str; 8] = ["im", "ax", "or", "ek", "un", "ish", "ol", "ar"];
+
+/// One entity with its fixed attributes.
+#[derive(Clone, Debug)]
+pub struct Entity {
+    pub name: String,
+    pub color: usize,
+    pub place: usize,
+    pub category: usize,
+    pub size: usize,
+    pub sound: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct World {
+    pub entities: Vec<Entity>,
+}
+
+impl World {
+    /// Deterministic world of `n` uniquely named entities.
+    pub fn new(seed: u64, n: usize) -> Self {
+        assert!(n <= ONSETS.len() * CODAS.len());
+        let mut rng = Pcg32::seeded(seed, 0x77071d);
+        let mut names: Vec<String> = ONSETS
+            .iter()
+            .flat_map(|o| CODAS.iter().map(move |c| format!("{o}{c}")))
+            .collect();
+        rng.shuffle(&mut names);
+        let entities = names
+            .into_iter()
+            .take(n)
+            .map(|name| Entity {
+                name,
+                color: rng.usize_below(COLORS.len()),
+                place: rng.usize_below(PLACES.len()),
+                category: rng.usize_below(CATEGORIES.len()),
+                size: rng.usize_below(SIZES.len()),
+                sound: rng.usize_below(SOUNDS.len()),
+            })
+            .collect();
+        World { entities }
+    }
+
+    pub fn attr(&self, e: &Entity, domain: Domain) -> &'static str {
+        match domain {
+            Domain::Color => COLORS[e.color],
+            Domain::Place => PLACES[e.place],
+            Domain::Category => CATEGORIES[e.category],
+            Domain::Size => SIZES[e.size],
+            Domain::Sound => SOUNDS[e.sound],
+        }
+    }
+
+    pub fn options(&self, domain: Domain) -> &'static [&'static str] {
+        match domain {
+            Domain::Color => &COLORS,
+            Domain::Place => &PLACES,
+            Domain::Category => &CATEGORIES,
+            Domain::Size => &SIZES,
+            Domain::Sound => &SOUNDS,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Domain {
+    Color,
+    Place,
+    Category,
+    Size,
+    Sound,
+}
+
+impl Domain {
+    pub const ALL: [Domain; 5] =
+        [Domain::Color, Domain::Place, Domain::Category, Domain::Size, Domain::Sound];
+
+    pub fn noun(self) -> &'static str {
+        match self {
+            Domain::Color => "color",
+            Domain::Place => "home",
+            Domain::Category => "kind",
+            Domain::Size => "size",
+            Domain::Sound => "sound",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_unique_names() {
+        let w1 = World::new(7, 48);
+        let w2 = World::new(7, 48);
+        assert_eq!(w1.entities.len(), 48);
+        for (a, b) in w1.entities.iter().zip(&w2.entities) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.color, b.color);
+        }
+        let mut names: Vec<_> = w1.entities.iter().map(|e| e.name.clone()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 48);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let w1 = World::new(1, 32);
+        let w2 = World::new(2, 32);
+        let same = w1
+            .entities
+            .iter()
+            .zip(&w2.entities)
+            .filter(|(a, b)| a.name == b.name && a.color == b.color)
+            .count();
+        assert!(same < 8);
+    }
+
+    #[test]
+    fn attributes_cover_domains() {
+        let w = World::new(3, 48);
+        for d in Domain::ALL {
+            let opts = w.options(d);
+            let e = &w.entities[0];
+            assert!(opts.contains(&w.attr(e, d)));
+        }
+    }
+}

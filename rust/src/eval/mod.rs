@@ -1,0 +1,328 @@
+//! Evaluation harness: perplexity, multiple-choice likelihood scoring
+//! (lm-eval-harness analog) and ROUGE-L generation scoring.
+//!
+//! All scoring goes through the shared fp-layout `*_eval` / `*_logits_b8`
+//! artifacts; quantized models are dequantized once into that layout
+//! (model::Checkpoint::dequantize), which pytest proved bit-compatible
+//! with the quantized forward.
+
+use anyhow::{bail, Result};
+
+use crate::data::batch::{eval_batches, Batch};
+use crate::data::tasks::{few_shot_prefix, McTask};
+use crate::model::Checkpoint;
+use crate::runtime::{
+    literal_to_f32, Artifact, Runtime,
+};
+use crate::tokenizer::{Tokenizer, BOS, PAD};
+use crate::util::Pcg32;
+
+/// Device-resident parameters for repeated evaluation calls.
+pub struct EvalModel {
+    art: std::rc::Rc<Artifact>,
+    params: Vec<xla::PjRtBuffer>,
+}
+
+impl EvalModel {
+    /// `artifact_name` must be an eval / logits / logits_q artifact;
+    /// `ck` must be in the artifact's param layout.
+    pub fn new(rt: &Runtime, artifact_name: &str, ck: &Checkpoint) -> Result<EvalModel> {
+        let art = rt.load(artifact_name)?;
+        if !matches!(art.meta.kind.as_str(), "eval" | "logits" | "logits_q") {
+            bail!("{artifact_name} is not an eval/logits artifact");
+        }
+        let metas: Vec<_> = art.meta.layout();
+        let tensors = ck.assemble_strict(&metas)?;
+        let params = tensors
+            .iter()
+            .map(|t| rt.tensor_to_device(t))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(EvalModel { art, params })
+    }
+
+    pub fn meta(&self) -> &crate::runtime::ArtifactMeta {
+        &self.art.meta
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.art.meta.inputs[0].shape[0]
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.art.meta.inputs[0].shape[1]
+    }
+
+    /// (sum_nll, n_tokens) over one masked batch (eval artifacts).
+    pub fn nll_batch(&self, rt: &Runtime, batch: &Batch) -> Result<(f64, f64)> {
+        let meta = &self.art.meta;
+        if meta.kind != "eval" {
+            bail!("nll_batch needs an eval artifact, got {}", meta.kind);
+        }
+        let tok = rt.to_device_i32(&batch.tokens, &meta.inputs[0].shape)?;
+        let mask = rt.to_device_f32(&batch.mask, &meta.inputs[1].shape)?;
+        let mut inputs: Vec<&xla::PjRtBuffer> = vec![&tok, &mask];
+        inputs.extend(self.params.iter());
+        let outs = self.art.run_b(&inputs)?;
+        Ok((literal_to_f32(&outs[0])? as f64, literal_to_f32(&outs[1])? as f64))
+    }
+
+    /// Full logits (B, T, V) for a token batch (logits artifacts).
+    pub fn logits(&self, rt: &Runtime, tokens: &[i32]) -> Result<Vec<f32>> {
+        let meta = &self.art.meta;
+        if !matches!(meta.kind.as_str(), "logits" | "logits_q") {
+            bail!("logits needs a logits artifact, got {}", meta.kind);
+        }
+        let tok = rt.to_device_i32(tokens, &meta.inputs[0].shape)?;
+        let mut inputs: Vec<&xla::PjRtBuffer> = vec![&tok];
+        inputs.extend(self.params.iter());
+        let outs = self.art.run_b(&inputs)?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+
+    /// Swap one named parameter buffer in place (PEQA task switching on
+    /// the quantized serving path: only s / z tensors move).
+    pub fn swap_param(&mut self, rt: &Runtime, name: &str, t: &crate::tensor::Tensor) -> Result<()> {
+        let metas = self.art.meta.layout();
+        let idx = metas
+            .iter()
+            .position(|p| p.name == name)
+            .ok_or_else(|| anyhow::anyhow!("no param '{name}' in {}", self.art.meta.name))?;
+        if metas[idx].shape != t.shape() {
+            bail!("swap_param '{name}': shape mismatch");
+        }
+        self.params[idx] = rt.tensor_to_device(t)?;
+        Ok(())
+    }
+}
+
+/// Perplexity of `ck` (fp layout) over a token stream.
+pub fn perplexity(rt: &Runtime, eval_art: &str, ck: &Checkpoint, stream: &[u32]) -> Result<f64> {
+    let model = EvalModel::new(rt, eval_art, ck)?;
+    let (b, t) = (model.batch_size(), model.seq_len());
+    let mut sum = 0.0;
+    let mut count = 0.0;
+    for batch in eval_batches(stream, b, t) {
+        let (s, c) = model.nll_batch(rt, &batch)?;
+        sum += s;
+        count += c;
+    }
+    if count == 0.0 {
+        bail!("empty eval stream");
+    }
+    Ok((sum / count).exp())
+}
+
+fn log_softmax_row(row: &[f32]) -> Vec<f32> {
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse = row.iter().map(|&x| (x - max).exp()).sum::<f32>().ln() + max;
+    row.iter().map(|&x| x - lse).collect()
+}
+
+/// Sum log-prob of `target` tokens at positions [start, start+len) given
+/// flat (T, V) logits for one sequence. Position p predicts token p+1.
+fn continuation_logprob(
+    logits: &[f32],
+    vocab: usize,
+    tokens: &[i32],
+    start: usize,
+    len: usize,
+) -> f32 {
+    let mut total = 0.0;
+    for p in start..start + len {
+        let row = &logits[(p - 1) * vocab..p * vocab];
+        let ls = log_softmax_row(row);
+        total += ls[tokens[p] as usize];
+    }
+    total
+}
+
+/// Multiple-choice accuracy by option likelihood, k-shot.
+pub fn mc_accuracy(
+    rt: &Runtime,
+    logits_art: &str,
+    ck: &Checkpoint,
+    tok: &Tokenizer,
+    task: &McTask,
+    k_shot: usize,
+    seed: u64,
+) -> Result<f64> {
+    let model = EvalModel::new(rt, logits_art, ck)?;
+    let (b, t, vocab) = (
+        model.batch_size(),
+        model.seq_len(),
+        model.meta().outputs[0].shape[2],
+    );
+    let mut rng = Pcg32::seeded(seed, 0x5c0e);
+
+    // Flatten (item, option) pairs into scoring jobs.
+    struct Job {
+        tokens: Vec<i32>,
+        start: usize,
+        len: usize,
+        item: usize,
+        option: usize,
+    }
+    let mut jobs = Vec::new();
+    for (i, item) in task.items.iter().enumerate() {
+        let prefix = few_shot_prefix(task, k_shot, &mut rng);
+        let prompt_ids = {
+            let mut v = vec![BOS];
+            v.extend(tok.encode(&format!("{prefix}{}", item.prompt)));
+            v
+        };
+        for (o, opt) in item.options.iter().enumerate() {
+            let opt_ids = tok.encode(opt);
+            let mut ids: Vec<i32> = prompt_ids.iter().map(|&x| x as i32).collect();
+            let start = ids.len();
+            ids.extend(opt_ids.iter().map(|&x| x as i32));
+            // Left-truncate long few-shot prompts, keeping the continuation.
+            let (ids, start) = if ids.len() > t {
+                let cut = ids.len() - t;
+                if cut >= start {
+                    bail!("option longer than context window");
+                }
+                (ids[cut..].to_vec(), start - cut)
+            } else {
+                (ids, start)
+            };
+            let len = ids.len() - start;
+            let mut padded = ids;
+            padded.resize(t, PAD as i32);
+            jobs.push(Job { tokens: padded, start, len, item: i, option: o });
+        }
+    }
+
+    // Score jobs in batches of `b`.
+    let mut scores = vec![vec![f32::NEG_INFINITY; 4]; task.items.len()];
+    for chunk in jobs.chunks(b) {
+        let mut tokens = Vec::with_capacity(b * t);
+        for j in chunk {
+            tokens.extend(&j.tokens);
+        }
+        // Pad the final partial batch by repeating the last job.
+        while tokens.len() < b * t {
+            tokens.extend(&chunk.last().unwrap().tokens);
+        }
+        let logits = model.logits(rt, &tokens)?;
+        for (bi, j) in chunk.iter().enumerate() {
+            let seq_logits = &logits[bi * t * vocab..(bi + 1) * t * vocab];
+            scores[j.item][j.option] =
+                continuation_logprob(seq_logits, vocab, &j.tokens, j.start, j.len);
+        }
+    }
+
+    let mut correct = 0usize;
+    for (i, item) in task.items.iter().enumerate() {
+        let pred = scores[i]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if pred == item.correct {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / task.items.len() as f64)
+}
+
+/// Greedy generation through a logits artifact (window decode: re-feeds
+/// the last T tokens each step — fine at reproduction scale).
+pub fn generate(
+    model: &EvalModel,
+    rt: &Runtime,
+    prompt: &[u32],
+    max_new: usize,
+    stop: u32,
+) -> Result<Vec<u32>> {
+    let (b, t, vocab) = (
+        model.batch_size(),
+        model.seq_len(),
+        model.meta().outputs[0].shape[2],
+    );
+    let mut ids: Vec<u32> = prompt.to_vec();
+    let mut out = Vec::new();
+    for _ in 0..max_new {
+        let window: Vec<u32> = if ids.len() > t {
+            ids[ids.len() - t..].to_vec()
+        } else {
+            ids.clone()
+        };
+        let pos = window.len() - 1;
+        let mut tokens: Vec<i32> = window.iter().map(|&x| x as i32).collect();
+        tokens.resize(t, PAD as i32);
+        let mut batch_tokens = tokens.clone();
+        for _ in 1..b {
+            batch_tokens.extend(&tokens);
+        }
+        let logits = model.logits(rt, &batch_tokens)?;
+        let row = &logits[pos * vocab..(pos + 1) * vocab];
+        let next = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0 as u32;
+        if next == stop {
+            break;
+        }
+        out.push(next);
+        ids.push(next);
+    }
+    Ok(out)
+}
+
+/// ROUGE-L F1 over whitespace tokens (Table 14 metric).
+pub fn rouge_l(candidate: &str, reference: &str) -> f64 {
+    let c: Vec<&str> = candidate.split_whitespace().collect();
+    let r: Vec<&str> = reference.split_whitespace().collect();
+    if c.is_empty() || r.is_empty() {
+        return 0.0;
+    }
+    // LCS length by DP.
+    let mut dp = vec![0usize; r.len() + 1];
+    for ci in &c {
+        let mut prev = 0;
+        for (j, rj) in r.iter().enumerate() {
+            let cur = dp[j + 1];
+            dp[j + 1] = if ci == rj { prev + 1 } else { dp[j + 1].max(dp[j]) };
+            prev = cur;
+        }
+    }
+    let lcs = dp[r.len()] as f64;
+    let p = lcs / c.len() as f64;
+    let rec = lcs / r.len() as f64;
+    if p + rec == 0.0 { 0.0 } else { 2.0 * p * rec / (p + rec) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let ls = log_softmax_row(&[1.0, 2.0, 3.0]);
+        let total: f32 = ls.iter().map(|x| x.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+        assert!(ls[2] > ls[1] && ls[1] > ls[0]);
+    }
+
+    #[test]
+    fn rouge_l_cases() {
+        assert!((rouge_l("the cat sat", "the cat sat") - 1.0).abs() < 1e-9);
+        assert_eq!(rouge_l("", "x"), 0.0);
+        assert_eq!(rouge_l("a b c", "d e f"), 0.0);
+        // partial overlap: LCS("the red cat", "the cat") = 2 →
+        // P=2/3, R=1 → F1 = 0.8.
+        assert!((rouge_l("the red cat", "the cat") - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn continuation_logprob_indexing() {
+        // vocab=2, T=3, uniform logits → each token logprob = ln(1/2).
+        let logits = vec![0.0f32; 3 * 2];
+        let tokens = vec![0i32, 1, 0];
+        let lp = continuation_logprob(&logits, 2, &tokens, 1, 2);
+        assert!((lp - 2.0 * (0.5f32).ln()).abs() < 1e-5);
+    }
+}

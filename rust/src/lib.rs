@@ -1,0 +1,32 @@
+//! # peqa — Memory-Efficient Fine-Tuning of Compressed LLMs (PEQA)
+//!
+//! Rust reproduction of *Memory-Efficient Fine-Tuning of Compressed Large
+//! Language Models via sub-4-bit Integer Quantization* (NeurIPS 2023) —
+//! the L3 coordinator of a three-layer rust + JAX + Pallas stack.
+//!
+//! Layers (see DESIGN.md):
+//! - **L1** Pallas kernels (`python/compile/kernels/`): RTN quantization,
+//!   fused dequant-matmul, fused scale gradients.
+//! - **L2** jax transformer + in-graph AdamW (`python/compile/`), AOT-lowered
+//!   once to HLO text artifacts (`make artifacts`).
+//! - **L3** this crate: PJRT runtime, data pipeline, trainer, quantization
+//!   toolchain (RTN / OPTQ / sub-4-bit packing), multi-task serving
+//!   coordinator, eval harness, memory model and bench framework. Python
+//!   never runs at request time.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod json;
+pub mod memmodel;
+pub mod model;
+pub mod pipeline;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod tokenizer;
+pub mod train;
+pub mod util;

@@ -1,0 +1,266 @@
+//! `peqa` CLI — the leader entrypoint of the L3 coordinator.
+//!
+//! Commands:
+//!   list-artifacts                      show AOT artifacts + signatures
+//!   pretrain   --size n3 [--steps N]    pretrain + cache the fp base model
+//!   finetune   --size n3 --method peqa_b4_gc --dataset wikitext [--steps N]
+//!   eval       --size n3 --ckpt path --dataset wikitext
+//!   quantize   --size n3 --ckpt path --bits 4 [--group g] [--optq]
+//!   pack       --ckpt path --bits 4 --out model.packed
+//!   serve-demo --size n3 [--requests N] multi-task adapter-swap serving demo
+//!   memreport                           Table-1 style DRAM model (paper dims)
+
+use anyhow::{bail, Result};
+use peqa::cli::Args;
+use peqa::coordinator::{AdapterStore, BatcherConfig, Coordinator, SwitchMode};
+use peqa::info;
+use peqa::memmodel;
+use peqa::model::Checkpoint;
+use peqa::pipeline::{self, Ctx};
+use peqa::tokenizer::EOS;
+
+fn main() {
+    let code = match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+const USAGE: &str = "\
+peqa — PEQA (NeurIPS 2023) reproduction CLI
+
+  peqa list-artifacts
+  peqa pretrain   --size n1..n6|o1..o6 [--steps 600]
+  peqa finetune   --size n3 --method peqa_b4_gc --dataset wikitext|ptb
+                  [--steps 150] [--lr 2e-3] [--out path.peqa]
+  peqa eval       --size n3 --ckpt path.peqa --dataset wikitext|ptb
+  peqa quantize   --size n3 --ckpt path.peqa --bits 4 [--group 32] [--optq]
+                  [--out path.peqa]
+  peqa pack       --ckpt path.peqa --bits 4 --out model.packed
+  peqa serve-demo --size n3 [--requests 16] [--full-reload]
+  peqa memreport
+
+Methods: full | lora_qv4 | lora_qkvo16 | qat_b{3,4} | peqa_b{3,4}_{gc,g16,g32,g64}
+         | peqa_zp_b4_gc | peqa_szp_b4_gc | alpha_b{3,4}
+";
+
+fn run() -> Result<()> {
+    let mut args = Args::from_env()?;
+    let Some(cmd) = args.command.clone() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    match cmd.as_str() {
+        "list-artifacts" => {
+            let ctx = Ctx::new()?;
+            for name in ctx.rt.list()? {
+                let m = ctx.rt.meta(&name)?;
+                println!(
+                    "{name:44} {:8} in={:<3} out={:<3} {}",
+                    m.kind,
+                    m.inputs.len(),
+                    m.outputs.len(),
+                    m.display.unwrap_or_default()
+                );
+            }
+            args.finish()
+        }
+        "pretrain" => {
+            let size = args.require("size")?;
+            let steps = args.get_usize("steps", 600)?;
+            args.finish()?;
+            let ctx = Ctx::new()?;
+            let ck = pipeline::ensure_base(&ctx, &size, steps)?;
+            let (_, eval_stream) = ctx.split("pretrain", pipeline::PRETRAIN_BYTES)?;
+            let ppl = pipeline::ppl(&ctx, &size, &ck, &eval_stream)?;
+            println!("{size} base ready: held-out pretrain ppl {ppl:.3}");
+            Ok(())
+        }
+        "finetune" => {
+            let size = args.require("size")?;
+            let method = args.require("method")?;
+            let dataset = args.get("dataset", "wikitext");
+            let steps = args.get_usize("steps", 150)?;
+            let lr = args.get_f64("lr", 0.0)?;
+            let out = args.opt("out");
+            args.finish()?;
+            let ctx = Ctx::new()?;
+            let base = pipeline::ensure_base(&ctx, &size, pipeline::pretrain_steps())?;
+            let (train_s, eval_s) = ctx.split(&dataset, pipeline::ADAPT_BYTES)?;
+            let mut cfg = pipeline::default_cfg(&method, steps, 42);
+            if lr > 0.0 {
+                cfg.lr = lr;
+            }
+            cfg.log_every = 25;
+            let (ck, losses) = pipeline::finetune(&ctx, &size, &method, &base, &train_s, &cfg)?;
+            info!(
+                "finetune {size}/{method}: loss {:.4} → {:.4}",
+                losses.first().copied().unwrap_or(0.0),
+                losses.last().copied().unwrap_or(0.0)
+            );
+            let ppl = if method.starts_with("lora") {
+                let (alpha, rank) = pipeline::lora_hparams(&ctx, &size, &method)?;
+                pipeline::ppl(&ctx, &size, &ck.merge_lora(alpha, rank)?, &eval_s)?
+            } else {
+                pipeline::ppl(&ctx, &size, &ck, &eval_s)?
+            };
+            println!("{size} {method} {dataset}: eval ppl {ppl:.4}");
+            let out = out.unwrap_or_else(|| {
+                ctx.paths
+                    .checkpoints
+                    .join(format!("{size}_{method}_{dataset}.peqa"))
+                    .to_string_lossy()
+                    .into_owned()
+            });
+            ck.save(std::path::Path::new(&out))?;
+            info!("saved {out}");
+            Ok(())
+        }
+        "eval" => {
+            let size = args.require("size")?;
+            let ckpt = args.require("ckpt")?;
+            let dataset = args.get("dataset", "wikitext");
+            args.finish()?;
+            let ctx = Ctx::new()?;
+            let ck = Checkpoint::load(std::path::Path::new(&ckpt))?;
+            let (_, eval_s) = ctx.split(&dataset, pipeline::ADAPT_BYTES)?;
+            let ppl = pipeline::ppl(&ctx, &size, &ck, &eval_s)?;
+            println!("{size} {ckpt} on {dataset}: ppl {ppl:.4}");
+            Ok(())
+        }
+        "quantize" => {
+            let size = args.require("size")?;
+            let ckpt = args.require("ckpt")?;
+            let bits = args.get_usize("bits", 4)? as u8;
+            let group = args.opt("group").map(|g| g.parse::<usize>()).transpose()?;
+            let use_optq = args.flag("optq");
+            let out = args.opt("out");
+            args.finish()?;
+            let ctx = Ctx::new()?;
+            let fp = Checkpoint::load(std::path::Path::new(&ckpt))?;
+            let q = if use_optq {
+                let calib = ctx.stream("pretrain", 40_000)?;
+                let h = pipeline::hessians(&ctx, &size, &fp, &calib, 8)?;
+                pipeline::optq_quantize(&fp, &h, bits, group)?
+            } else {
+                pipeline::rtn_quantize(&fp, bits, group)?
+            };
+            let out = out.unwrap_or_else(|| format!("{ckpt}.q{bits}"));
+            q.save(std::path::Path::new(&out))?;
+            println!("quantized → {out}");
+            Ok(())
+        }
+        "pack" => {
+            let ckpt = args.require("ckpt")?;
+            let bits = args.get_usize("bits", 4)? as u8;
+            let out = args.require("out")?;
+            args.finish()?;
+            let ck = Checkpoint::load(std::path::Path::new(&ckpt))?;
+            if ck.quantized_prefixes().is_empty() {
+                bail!("{ckpt} has no quantized tensors — run `peqa quantize` first");
+            }
+            let bytes = ck.save_packed(std::path::Path::new(&out), bits)?;
+            println!("packed model: {out} ({})", peqa::util::human_bytes(bytes));
+            Ok(())
+        }
+        "serve-demo" => {
+            let size = args.get("size", "n3");
+            let n_req = args.get_usize("requests", 16)?;
+            let full_reload = args.flag("full-reload");
+            args.finish()?;
+            serve_demo(&size, n_req, full_reload)
+        }
+        "memreport" => {
+            args.finish()?;
+            memreport();
+            Ok(())
+        }
+        other => {
+            print!("{USAGE}");
+            bail!("unknown command '{other}'")
+        }
+    }
+}
+
+/// Fine-tune two tiny task adapters, register them, serve a mixed request
+/// stream, report throughput / latency / swap cost.
+fn serve_demo(size: &str, n_req: usize, full_reload: bool) -> Result<()> {
+    let ctx = Ctx::new()?;
+    let base = pipeline::ensure_base(&ctx, size, pipeline::pretrain_steps())?;
+    info!("building task adapters (wikitext, ptb)…");
+    let mut adapters = AdapterStore::new();
+    let mut base_q: Option<Checkpoint> = None;
+    for task in ["wikitext", "ptb"] {
+        let (train_s, _) = ctx.split(task, pipeline::ADAPT_BYTES)?;
+        let cfg = pipeline::default_cfg("peqa_b4_gc", 60, 1);
+        let (ck, _) = pipeline::finetune(&ctx, size, "peqa_b4_gc", &base, &train_s, &cfg)?;
+        if base_q.is_none() {
+            base_q = Some(ck.clone());
+        }
+        adapters.insert(task, ck.extract_adapter(false));
+    }
+    // Scale-swap serving needs the quantized-layout artifact; sizes
+    // without one (only n3/n4 ship logits_q) fall back to full-reload.
+    let quant_art = format!("{size}_logits_q_b4_gc_b8");
+    let have_quant = ctx.rt.meta(&quant_art).is_ok();
+    let use_scale_swap = !full_reload && have_quant;
+    let artifact = if use_scale_swap { quant_art } else { format!("{size}_logits_b8") };
+    let mode = if use_scale_swap { SwitchMode::ScaleSwap } else { SwitchMode::FullReload };
+    let mut coord = Coordinator::new(
+        ctx.rt.clone(),
+        &artifact,
+        base_q.unwrap(),
+        adapters,
+        mode,
+        BatcherConfig { max_batch: 8 },
+    )?;
+    let mut rng = peqa::util::Pcg32::new(5);
+    let prompts = ["the empire of", "shares of acme", "the battle of", "analysts expect"];
+    for i in 0..n_req {
+        let task = if rng.below(2) == 0 { "wikitext" } else { "ptb" };
+        let prompt = ctx.tok.encode(prompts[i % prompts.len()]);
+        coord.submit(task, prompt, 24, EOS);
+    }
+    let responses = coord.run_until_idle()?;
+    for r in responses.iter().take(4) {
+        let text = ctx.tok.decode(&r.tokens).unwrap_or_default();
+        println!("[{}] {:10} {:?}", r.id, r.task, text);
+    }
+    let m = &coord.metrics;
+    println!(
+        "\nserved {} requests | {:.1} tok/s | p50 latency {:.3}s p99 {:.3}s | \
+         {} task swaps, mean swap {:.4}s | mode: {}",
+        m.completed,
+        m.tokens_per_s(),
+        m.p50_latency(),
+        m.p99_latency(),
+        m.swap_times_s.len(),
+        m.mean_swap_s(),
+        if use_scale_swap { "scale-swap (PEQA)" } else { "full-reload (PEFT+PTQ analog)" },
+    );
+    Ok(())
+}
+
+/// Table 1 / Fig. 2a at real LLaMA-65B dimensions.
+fn memreport() {
+    let geom = memmodel::Geometry::llama_65b();
+    let lora_t = memmodel::lora_trainable(8192, 80, 2, 4);
+    println!("LLaMA-65B ({} params)", geom.n_params());
+    println!(
+        "{:18} {:>10} {:>10}   {:9} {:9}   {:>12}",
+        "Method", "FT DRAM", "Deploy", "Inference", "Switching", "Trainable"
+    );
+    for r in [
+        memmodel::report(&geom, memmodel::Method::FullFt),
+        memmodel::report(&geom, memmodel::Method::Peft { trainable_params: lora_t }),
+        memmodel::report(&geom, memmodel::Method::PeftPtq { trainable_params: lora_t, bits: 4 }),
+        memmodel::report(&geom, memmodel::Method::PtqPeft { trainable_params: lora_t, bits: 4 }),
+        memmodel::report(&geom, memmodel::Method::Peqa { bits: 4, group: None }),
+    ] {
+        println!("{}", memmodel::fmt_row(&r));
+    }
+}

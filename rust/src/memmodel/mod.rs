@@ -1,0 +1,249 @@
+//! Analytic DRAM model — reproduces Table 1, Table 4 and Figure 2a.
+//!
+//! The paper's memory numbers decompose into: model weights (fp16 or
+//! b-bit packed + fp scales), optimizer state (AdamW m+v over trainable
+//! params only), gradients over trainable params, and (for full FT)
+//! fp32 master weights. This module computes those for *any* model
+//! geometry, so the benches can print both the paper's real LLaMA-65B
+//! dims and our scaled family from the same code.
+
+use crate::util::decimal_gb;
+
+/// Model geometry: one entry per weight matrix (rows = out, cols = in).
+#[derive(Clone, Debug)]
+pub struct Geometry {
+    pub name: String,
+    /// (rows, cols, quantizable) for every parameter tensor.
+    pub tensors: Vec<(usize, usize, bool)>,
+}
+
+impl Geometry {
+    /// LLaMA-style decoder geometry from hyperparameters.
+    pub fn llama(name: &str, vocab: usize, d: usize, layers: usize, d_ff: usize) -> Self {
+        let mut tensors = vec![(vocab, d, false)]; // embedding
+        for _ in 0..layers {
+            tensors.push((1, d, false)); // ln1
+            for _ in 0..4 {
+                tensors.push((d, d, true)); // q,k,v,o
+            }
+            tensors.push((1, d, false)); // ln2
+            tensors.push((d_ff, d, true)); // gate
+            tensors.push((d_ff, d, true)); // up
+            tensors.push((d, d_ff, true)); // down
+        }
+        tensors.push((1, d, false)); // final norm
+        tensors.push((vocab, d, false)); // lm head
+        Geometry { name: name.to_string(), tensors }
+    }
+
+    /// The real LLaMA-65B geometry (for paper-dims sanity rows).
+    pub fn llama_65b() -> Self {
+        Geometry::llama("LLaMA-65B", 32000, 8192, 80, 22016)
+    }
+
+    pub fn n_params(&self) -> u64 {
+        self.tensors.iter().map(|&(n, m, _)| (n * m) as u64).sum()
+    }
+
+    pub fn n_quantizable(&self) -> u64 {
+        self.tensors.iter().filter(|t| t.2).map(|&(n, m, _)| (n * m) as u64).sum()
+    }
+}
+
+/// Fine-tuning method for memory accounting.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    FullFt,
+    /// LoRA with (#target matrices per layer × layers, rank) already folded
+    /// into `trainable_params`.
+    Peft { trainable_params: u64 },
+    PeftPtq { trainable_params: u64, bits: u8 },
+    PtqPeft { trainable_params: u64, bits: u8 },
+    Peqa { bits: u8, group: Option<usize> },
+}
+
+#[derive(Clone, Debug)]
+pub struct MemoryReport {
+    pub method: &'static str,
+    pub finetune_bytes: u64,
+    pub deploy_bytes: u64,
+    pub trainable_params: u64,
+    pub fast_inference: bool,
+    pub fast_switching: bool,
+}
+
+const FP16: u64 = 2;
+const FP32: u64 = 4;
+
+fn packed_weight_bytes(geom: &Geometry, bits: u8, group: Option<usize>) -> u64 {
+    // Quantizable tensors: packed codes + fp16 scale/zero per (row, group);
+    // everything else stays fp16.
+    let mut total = 0u64;
+    for &(n, m, quant) in &geom.tensors {
+        let params = (n * m) as u64;
+        if quant {
+            let g = group.unwrap_or(m);
+            let groups = (n as u64) * (m / g) as u64;
+            total += (params * bits as u64).div_ceil(8) + 2 * groups * FP16;
+        } else {
+            total += params * FP16;
+        }
+    }
+    total
+}
+
+/// PEQA trainable-parameter count: one scale per (channel, group).
+pub fn peqa_trainable(geom: &Geometry, group: Option<usize>) -> u64 {
+    geom.tensors
+        .iter()
+        .filter(|t| t.2)
+        .map(|&(n, m, _)| (n as u64) * (m / group.unwrap_or(m)) as u64)
+        .sum()
+}
+
+/// LoRA trainable-parameter count for `targets_per_layer` adapted (d×d)
+/// matrices across `layers` layers at `rank`.
+pub fn lora_trainable(d: usize, layers: usize, targets_per_layer: usize, rank: usize) -> u64 {
+    (2 * d * rank * targets_per_layer * layers) as u64
+}
+
+/// DRAM for fine-tuning and deployment (Table 1 semantics: weights +
+/// gradients + AdamW state; activations excluded as in the paper).
+pub fn report(geom: &Geometry, method: Method) -> MemoryReport {
+    let fp16_model = geom.n_params() * FP16;
+    match method {
+        Method::FullFt => MemoryReport {
+            method: "Full Fine-Tuning",
+            // Pure-fp16 AdamW: weights + grads + m + v, all fp16 (8 B/param
+            // ≈ 521 GB at 65B; the paper measured 457 GB with DeepSpeed —
+            // same order, and the 14× gap to PEQA is preserved).
+            finetune_bytes: fp16_model * 4,
+            deploy_bytes: fp16_model,
+            trainable_params: geom.n_params(),
+            fast_inference: false,
+            fast_switching: false,
+        },
+        Method::Peft { trainable_params: t } => MemoryReport {
+            method: "PEFT",
+            finetune_bytes: fp16_model + t * (FP16 + 2 * FP32),
+            deploy_bytes: fp16_model,
+            trainable_params: t,
+            fast_inference: false,
+            fast_switching: true,
+        },
+        Method::PeftPtq { trainable_params: t, bits } => MemoryReport {
+            method: "PEFT+PTQ",
+            finetune_bytes: fp16_model + t * (FP16 + 2 * FP32),
+            deploy_bytes: packed_weight_bytes(geom, bits, None),
+            trainable_params: t,
+            fast_inference: true,
+            fast_switching: false, // PTQ after PEFT is non-reversible
+        },
+        Method::PtqPeft { trainable_params: t, bits } => MemoryReport {
+            method: "PTQ+PEFT",
+            finetune_bytes: packed_weight_bytes(geom, bits, None) + t * (FP16 + 2 * FP32),
+            deploy_bytes: packed_weight_bytes(geom, bits, None),
+            trainable_params: t,
+            fast_inference: false, // fp adapters stay outside the int kernel
+            fast_switching: true,
+        },
+        Method::Peqa { bits, group } => {
+            let t = peqa_trainable(geom, group);
+            let packed = packed_weight_bytes(geom, bits, group);
+            MemoryReport {
+                method: "PEQA (Ours)",
+                finetune_bytes: packed + t * (FP16 + 2 * FP32),
+                deploy_bytes: packed,
+                trainable_params: t,
+                fast_inference: true,
+                fast_switching: true,
+            }
+        }
+    }
+}
+
+pub fn fmt_row(r: &MemoryReport) -> String {
+    format!(
+        "{:18} {:>10} {:>10}   {:9} {:9}   {:>12}",
+        r.method,
+        decimal_gb(r.finetune_bytes),
+        decimal_gb(r.deploy_bytes),
+        if r.fast_inference { "Fast" } else { "Slow" },
+        if r.fast_switching { "Fast" } else { "Slow" },
+        r.trainable_params,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama65b_matches_paper_scale() {
+        let g = Geometry::llama_65b();
+        // ~65B params (the public model is 65.2B).
+        let p = g.n_params() as f64 / 1e9;
+        assert!((60.0..70.0).contains(&p), "{p}B");
+        // fp16 model ≈ 131 GB (Table 1 deploy row for full FT / PEFT).
+        let full = report(&g, Method::FullFt);
+        let gb = full.deploy_bytes as f64 / 1e9;
+        assert!((120.0..140.0).contains(&gb), "{gb} GB");
+        // 4-bit PEQA deploy ≈ 33 GB (Table 1 last row).
+        let peqa = report(&g, Method::Peqa { bits: 4, group: None });
+        let gb = peqa.deploy_bytes as f64 / 1e9;
+        assert!((30.0..36.0).contains(&gb), "{gb} GB");
+        // Full fine-tuning ≈ 457 GB DRAM (Table 1 first row; our analytic
+        // pure-fp16-AdamW model gives ~521 GB — same order).
+        let gb = full.finetune_bytes as f64 / 1e9;
+        assert!((420.0..560.0).contains(&gb), "{gb} GB");
+    }
+
+    #[test]
+    fn peqa_trainable_close_to_paper() {
+        // Paper Table 4: LLaMA-65B has 6.8M PEQA-trainable params
+        // (per-channel) vs 10.49M for LoRA QV4 — ratio ≈ 1.54.
+        let g = Geometry::llama_65b();
+        let peqa = peqa_trainable(&g, None) as f64 / 1e6;
+        assert!((6.0..7.5).contains(&peqa), "{peqa}M");
+        let lora = lora_trainable(8192, 80, 2, 4) as f64 / 1e6;
+        assert!((10.0..11.0).contains(&lora), "{lora}M");
+        assert!((lora / peqa - 1.54).abs() < 0.15);
+    }
+
+    #[test]
+    fn table1_orderings() {
+        let g = Geometry::llama_65b();
+        let lora_t = lora_trainable(8192, 80, 2, 4);
+        let full = report(&g, Method::FullFt);
+        let peft = report(&g, Method::Peft { trainable_params: lora_t });
+        let peft_ptq = report(&g, Method::PeftPtq { trainable_params: lora_t, bits: 4 });
+        let ptq_peft = report(&g, Method::PtqPeft { trainable_params: lora_t, bits: 4 });
+        let peqa = report(&g, Method::Peqa { bits: 4, group: None });
+        // Fine-tuning DRAM: full >> peft == peft_ptq > ptq_peft ≈ peqa.
+        assert!(full.finetune_bytes > 3 * peft.finetune_bytes);
+        assert_eq!(peft.finetune_bytes, peft_ptq.finetune_bytes);
+        assert!(ptq_peft.finetune_bytes < peft.finetune_bytes / 3);
+        assert!(peqa.finetune_bytes < peft.finetune_bytes / 3);
+        // Only PEQA is fast on both axes (the Table 1 punchline).
+        assert!(peqa.fast_inference && peqa.fast_switching);
+        assert!(!peft_ptq.fast_switching && !ptq_peft.fast_inference);
+    }
+
+    #[test]
+    fn three_bit_smaller_than_four_bit() {
+        let g = Geometry::llama_65b();
+        let b4 = report(&g, Method::Peqa { bits: 4, group: None }).deploy_bytes;
+        let b3 = report(&g, Method::Peqa { bits: 3, group: None }).deploy_bytes;
+        assert!(b3 < b4);
+        // Paper Table 4: 33.45 GB vs 25.35 GB for 65B — ratio ~0.76.
+        let ratio = b3 as f64 / b4 as f64;
+        assert!((0.72..0.80).contains(&ratio), "{ratio}");
+    }
+
+    #[test]
+    fn grouping_adds_scale_params() {
+        let g = Geometry::llama_65b();
+        assert!(peqa_trainable(&g, Some(256)) > peqa_trainable(&g, None));
+        assert!(peqa_trainable(&g, Some(64)) > peqa_trainable(&g, Some(256)));
+    }
+}

@@ -1,0 +1,563 @@
+//! Checkpoints: named parameter collections + the `.peqa` on-disk formats.
+//!
+//! Three related formats:
+//! * `.peqa`  — full checkpoint: JSON header + raw little-endian f32 blobs,
+//!   one per named tensor (any method layout).
+//! * `.adapter` — a PEQA task adapter: only the scale (and optionally
+//!   zero-point) vectors. Kilobytes; this is the paper's "fast task
+//!   switching" object.
+//! * `.packed` — deployment format: integer codes bit-packed at b bits
+//!   (quant::pack) + f32 scales/zeros; its file size is the "Model Size"
+//!   column of Tables 4/6/7.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::json::Value;
+use crate::quant::{pack_codes, packed_size, unpack_codes};
+use crate::runtime::ParamMeta;
+use crate::tensor::Tensor;
+use crate::util::Pcg32;
+
+/// Ordered, named parameter collection.
+#[derive(Clone, Debug, Default)]
+pub struct Checkpoint {
+    names: Vec<String>,
+    tensors: Vec<Tensor>,
+    index: HashMap<String, usize>,
+}
+
+impl Checkpoint {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, t: Tensor) {
+        let name = name.into();
+        if let Some(&i) = self.index.get(&name) {
+            self.tensors[i] = t;
+        } else {
+            self.index.insert(name.clone(), self.tensors.len());
+            self.names.push(name);
+            self.tensors.push(t);
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.index.get(name).map(|&i| &self.tensors[i])
+    }
+
+    pub fn req(&self, name: &str) -> Result<&Tensor> {
+        self.get(name).ok_or_else(|| anyhow!("checkpoint missing tensor '{name}'"))
+    }
+
+    pub fn remove(&mut self, name: &str) -> Option<Tensor> {
+        let i = self.index.remove(name)?;
+        let t = self.tensors.remove(i);
+        self.names.remove(i);
+        for v in self.index.values_mut() {
+            if *v > i {
+                *v -= 1;
+            }
+        }
+        Some(t)
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Tensor)> {
+        self.names.iter().zip(self.tensors.iter())
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Initialize from a param table's init specs (pretraining from
+    /// scratch; also LoRA adapter init).
+    pub fn init_from_meta(metas: &[&ParamMeta], seed: u64) -> Result<Checkpoint> {
+        let mut rng = Pcg32::seeded(seed, 0x1417);
+        let mut ck = Checkpoint::new();
+        for p in metas {
+            let t = init_tensor(p, &mut rng)?;
+            ck.insert(p.name.clone(), t);
+        }
+        Ok(ck)
+    }
+
+    /// Assemble the flat tensor list for an artifact's param layout:
+    /// tensors come from the checkpoint by name; missing *trainable*
+    /// tensors (e.g. fresh LoRA adapters) fall back to their init spec.
+    /// Missing frozen tensors are an error — they can never be legitimate.
+    pub fn assemble(&self, layout: &[&ParamMeta], seed: u64) -> Result<Vec<Tensor>> {
+        let mut rng = Pcg32::seeded(seed, 0xa55e);
+        let mut out = Vec::with_capacity(layout.len());
+        for p in layout {
+            match self.get(&p.name) {
+                Some(t) => {
+                    if t.shape() != p.shape.as_slice() {
+                        bail!(
+                            "tensor '{}': checkpoint shape {:?} != artifact shape {:?}",
+                            p.name, t.shape(), p.shape
+                        );
+                    }
+                    out.push(t.clone());
+                }
+                None if p.trainable => out.push(init_tensor(p, &mut rng)?),
+                None => bail!(
+                    "checkpoint is missing frozen tensor '{}' required by the artifact \
+                     (wrong layout? quantized vs fp?)",
+                    p.name
+                ),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Strict assembly: every tensor must be present (evaluation paths).
+    pub fn assemble_strict(&self, layout: &[&ParamMeta]) -> Result<Vec<Tensor>> {
+        let mut out = Vec::with_capacity(layout.len());
+        for p in layout {
+            let t = self.req(&p.name)?;
+            if t.shape() != p.shape.as_slice() {
+                bail!(
+                    "tensor '{}': checkpoint shape {:?} != artifact shape {:?}",
+                    p.name, t.shape(), p.shape
+                );
+            }
+            out.push(t.clone());
+        }
+        Ok(out)
+    }
+
+    // -- .peqa binary format -------------------------------------------------
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        let header = Value::Arr(
+            self.iter()
+                .map(|(n, t)| {
+                    Value::obj(vec![
+                        ("name", Value::str(n.clone())),
+                        (
+                            "shape",
+                            Value::Arr(
+                                t.shape().iter().map(|&d| Value::num(d as f64)).collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        )
+        .to_string();
+        f.write_all(b"PEQA1\n")?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for t in &self.tensors {
+            for x in t.data() {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut magic = [0u8; 6];
+        f.read_exact(&mut magic)?;
+        if &magic != b"PEQA1\n" {
+            bail!("{} is not a .peqa checkpoint", path.display());
+        }
+        let mut len8 = [0u8; 8];
+        f.read_exact(&mut len8)?;
+        let hlen = u64::from_le_bytes(len8) as usize;
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = Value::parse(std::str::from_utf8(&hbuf)?)?;
+        let mut ck = Checkpoint::new();
+        for item in header.as_arr().ok_or_else(|| anyhow!("bad header"))? {
+            let name = item.str_of("name")?;
+            let shape: Vec<usize> = item
+                .arr_of("shape")?
+                .iter()
+                .map(|x| x.as_usize().context("shape"))
+                .collect::<Result<_>>()?;
+            let numel: usize = shape.iter().product();
+            let mut bytes = vec![0u8; numel * 4];
+            f.read_exact(&mut bytes)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            ck.insert(name.to_string(), Tensor::new(&shape, data));
+        }
+        Ok(ck)
+    }
+
+    // -- PEQA-layout helpers ---------------------------------------------------
+
+    /// Dotted prefixes of quantized projections present in this checkpoint.
+    pub fn quantized_prefixes(&self) -> Vec<String> {
+        self.names
+            .iter()
+            .filter_map(|n| n.strip_suffix(".wq").map(String::from))
+            .collect()
+    }
+
+    /// Quantized layout → fp layout: every PEQA (wq, s, z) triple becomes
+    /// the dense Ŵ = s·(wq − z); every BCQ (alpha1, alpha_rest, code)
+    /// triple becomes Σ_k α_k ⊙ B_k; other tensors pass through. This is
+    /// what lets the shared fp eval/logits artifacts score any model.
+    pub fn dequantize(&self) -> Result<Checkpoint> {
+        let mut out = Checkpoint::new();
+        for (name, t) in self.iter() {
+            if [".wq", ".s", ".z", ".alpha1", ".alpha_rest", ".code"]
+                .iter()
+                .any(|suf| name.ends_with(suf))
+            {
+                continue;
+            }
+            out.insert(name.clone(), t.clone());
+        }
+        for prefix in self.quantized_prefixes() {
+            let wq = self.req(&format!("{prefix}.wq"))?;
+            let s = self.req(&format!("{prefix}.s"))?;
+            let z = self.req(&format!("{prefix}.z"))?;
+            out.insert(format!("{prefix}.w"), dequantize_tensor(wq, s, z)?);
+        }
+        for name in &self.names {
+            if let Some(prefix) = name.strip_suffix(".code") {
+                let a1 = self.req(&format!("{prefix}.alpha1"))?;
+                let ar = self.req(&format!("{prefix}.alpha_rest"))?;
+                let code = self.req(name)?;
+                out.insert(format!("{prefix}.w"), bcq_dequant(a1, ar, code)?);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Extract the task adapter (trainable s / z vectors) from a
+    /// PEQA-layout checkpoint.
+    pub fn extract_adapter(&self, include_zeros: bool) -> Checkpoint {
+        let mut out = Checkpoint::new();
+        for (name, t) in self.iter() {
+            if name.ends_with(".s") || (include_zeros && name.ends_with(".z")) {
+                out.insert(name.clone(), t.clone());
+            }
+        }
+        out
+    }
+
+    /// Overlay an adapter's tensors onto this checkpoint (task switch).
+    pub fn apply_adapter(&mut self, adapter: &Checkpoint) -> Result<()> {
+        for (name, t) in adapter.iter() {
+            let Some(&i) = self.index.get(name) else {
+                bail!("adapter tensor '{name}' not present in base model");
+            };
+            if self.tensors[i].shape() != t.shape() {
+                bail!("adapter tensor '{name}' shape mismatch");
+            }
+            self.tensors[i] = t.clone();
+        }
+        Ok(())
+    }
+
+    /// Merge LoRA adapters into base weights: W += (α/r)·B·A.
+    pub fn merge_lora(&self, alpha: f64, rank: usize) -> Result<Checkpoint> {
+        let mut out = Checkpoint::new();
+        for (name, t) in self.iter() {
+            if name.ends_with(".lora_a") || name.ends_with(".lora_b") {
+                continue;
+            }
+            out.insert(name.clone(), t.clone());
+        }
+        for name in &self.names {
+            if let Some(prefix) = name.strip_suffix(".lora_a") {
+                let a = self.req(name)?;
+                let b = self.req(&format!("{prefix}.lora_b"))?;
+                let w = self.req(&format!("{prefix}.w"))?;
+                let mut merged = w.clone();
+                let delta = b.matmul(a)?;
+                merged.add_scaled(&delta, (alpha / rank as f64) as f32)?;
+                out.insert(format!("{prefix}.w"), merged);
+            }
+        }
+        Ok(out)
+    }
+
+    // -- packed deployment format ---------------------------------------------
+
+    /// Write the deployment file: quantized projections bit-packed at
+    /// `bits`, fp tensors raw. Returns bytes written (the "Model Size").
+    pub fn save_packed(&self, path: &Path, bits: u8) -> Result<u64> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        let mut entries = Vec::new();
+        for (name, t) in self.iter() {
+            let kind = if name.ends_with(".wq") { "packed" } else { "f32" };
+            entries.push(Value::obj(vec![
+                ("name", Value::str(name.clone())),
+                (
+                    "shape",
+                    Value::Arr(t.shape().iter().map(|&d| Value::num(d as f64)).collect()),
+                ),
+                ("kind", Value::str(kind)),
+            ]));
+        }
+        let header = Value::obj(vec![
+            ("bits", Value::num(bits as f64)),
+            ("tensors", Value::Arr(entries)),
+        ])
+        .to_string();
+        let mut written = 0u64;
+        f.write_all(b"PEQAP1\n")?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        written += 7 + 8 + header.len() as u64;
+        for (name, t) in self.iter() {
+            if name.ends_with(".wq") {
+                let codes: Vec<u8> = t.data().iter().map(|&x| x as u8).collect();
+                let packed = pack_codes(&codes, bits);
+                debug_assert_eq!(packed.len(), packed_size(codes.len(), bits));
+                f.write_all(&packed)?;
+                written += packed.len() as u64;
+            } else {
+                for x in t.data() {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+                written += 4 * t.len() as u64;
+            }
+        }
+        Ok(written)
+    }
+
+    /// Load a `.packed` deployment file back into a PEQA-layout checkpoint.
+    pub fn load_packed(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 7];
+        f.read_exact(&mut magic)?;
+        if &magic != b"PEQAP1\n" {
+            bail!("{} is not a packed model", path.display());
+        }
+        let mut len8 = [0u8; 8];
+        f.read_exact(&mut len8)?;
+        let mut hbuf = vec![0u8; u64::from_le_bytes(len8) as usize];
+        f.read_exact(&mut hbuf)?;
+        let header = Value::parse(std::str::from_utf8(&hbuf)?)?;
+        let bits = header.usize_of("bits")? as u8;
+        let mut ck = Checkpoint::new();
+        for item in header.arr_of("tensors")? {
+            let name = item.str_of("name")?;
+            let shape: Vec<usize> = item
+                .arr_of("shape")?
+                .iter()
+                .map(|x| x.as_usize().context("shape"))
+                .collect::<Result<_>>()?;
+            let numel: usize = shape.iter().product();
+            let data = if item.str_of("kind")? == "packed" {
+                let mut buf = vec![0u8; packed_size(numel, bits)];
+                f.read_exact(&mut buf)?;
+                unpack_codes(&buf, bits, numel)?.into_iter().map(|c| c as f32).collect()
+            } else {
+                let mut buf = vec![0u8; numel * 4];
+                f.read_exact(&mut buf)?;
+                buf.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect()
+            };
+            ck.insert(name.to_string(), Tensor::new(&shape, data));
+        }
+        Ok(ck)
+    }
+}
+
+fn init_tensor(p: &ParamMeta, rng: &mut Pcg32) -> Result<Tensor> {
+    if let Some(std) = p.init.strip_prefix("normal:") {
+        let std: f32 = std.parse().context("init std")?;
+        Ok(Tensor::normal(&p.shape, std, rng))
+    } else {
+        match p.init.as_str() {
+            "zeros" => Ok(Tensor::zeros(&p.shape)),
+            "ones" => Ok(Tensor::ones(&p.shape)),
+            other => bail!("unknown init spec '{other}'"),
+        }
+    }
+}
+
+/// BCQ dequant: Ŵ = Σ_k α_k ⊙ B_k with α split (alpha1 (n,1) trainable,
+/// alpha_rest (n, b−1) frozen) and codes (n, m, b) in {−1, +1}.
+pub fn bcq_dequant(alpha1: &Tensor, alpha_rest: &Tensor, code: &Tensor) -> Result<Tensor> {
+    let (n, _one) = alpha1.dims2()?;
+    let (n2, brest) = alpha_rest.dims2()?;
+    let b = brest + 1;
+    let shape = code.shape();
+    if shape.len() != 3 || shape[0] != n || n2 != n || shape[2] != b {
+        bail!("bcq shape mismatch: alpha {n}x{b}, code {shape:?}");
+    }
+    let m = shape[1];
+    let mut out = vec![0.0f32; n * m];
+    for i in 0..n {
+        let mut alphas = Vec::with_capacity(b);
+        alphas.push(alpha1.data()[i]);
+        alphas.extend_from_slice(&alpha_rest.data()[i * brest..(i + 1) * brest]);
+        for j in 0..m {
+            let base = (i * m + j) * b;
+            let mut acc = 0.0;
+            for (k, &a) in alphas.iter().enumerate() {
+                acc += a * code.data()[base + k];
+            }
+            out[i * m + j] = acc;
+        }
+    }
+    Ok(Tensor::new(&[n, m], out))
+}
+
+/// Ŵ = s · (wq − z) with (n, G) params broadcast over groups.
+pub fn dequantize_tensor(wq: &Tensor, s: &Tensor, z: &Tensor) -> Result<Tensor> {
+    let (n, m) = wq.dims2()?;
+    let (n2, ng) = s.dims2()?;
+    if n2 != n || m % ng != 0 {
+        bail!("dequantize shape mismatch: wq {:?}, s {:?}", wq.shape(), s.shape());
+    }
+    let g = m / ng;
+    let mut out = vec![0.0f32; n * m];
+    for i in 0..n {
+        for k in 0..ng {
+            let sv = s.at2(i, k);
+            let zv = z.at2(i, k);
+            for j in 0..g {
+                let idx = i * m + k * g + j;
+                out[idx] = sv * (wq.data()[idx] - zv);
+            }
+        }
+    }
+    Ok(Tensor::new(&[n, m], out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(name: &str, shape: &[usize], init: &str) -> ParamMeta {
+        ParamMeta {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            trainable: true,
+            init: init.to_string(),
+        }
+    }
+
+    #[test]
+    fn init_respects_specs() {
+        let metas = [
+            meta("w", &[8, 8], "normal:0.02"),
+            meta("g", &[8], "ones"),
+            meta("b", &[8], "zeros"),
+        ];
+        let refs: Vec<&ParamMeta> = metas.iter().collect();
+        let ck = Checkpoint::init_from_meta(&refs, 1).unwrap();
+        assert!(ck.req("w").unwrap().data().iter().any(|&x| x != 0.0));
+        assert!(ck.req("w").unwrap().data().iter().all(|&x| x.abs() < 0.2));
+        assert!(ck.req("g").unwrap().data().iter().all(|&x| x == 1.0));
+        assert!(ck.req("b").unwrap().data().iter().all(|&x| x == 0.0));
+        // determinism
+        let ck2 = Checkpoint::init_from_meta(&refs, 1).unwrap();
+        assert_eq!(ck.req("w").unwrap(), ck2.req("w").unwrap());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("peqa_test_ckpt");
+        let path = dir.join("a.peqa");
+        let mut ck = Checkpoint::new();
+        let mut rng = Pcg32::new(3);
+        ck.insert("x.w", Tensor::normal(&[4, 6], 1.0, &mut rng));
+        ck.insert("y.g", Tensor::ones(&[6]));
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.names(), ck.names());
+        assert_eq!(back.req("x.w").unwrap(), ck.req("x.w").unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dequantize_matches_quant_module() {
+        let mut rng = Pcg32::new(5);
+        let w = Tensor::normal(&[8, 16], 0.3, &mut rng);
+        let q = crate::quant::quantize_rtn(&w, 4, Some(8)).unwrap();
+        let wq = Tensor::new(&[8, 16], q.codes.iter().map(|&c| c as f32).collect());
+        let dq = dequantize_tensor(&wq, &q.scales, &q.zeros).unwrap();
+        assert!(dq.max_abs_diff(&q.dequantize()) < 1e-6);
+    }
+
+    #[test]
+    fn adapter_roundtrip_and_apply() {
+        let mut base = Checkpoint::new();
+        base.insert("l.wq", Tensor::full(&[2, 4], 3.0));
+        base.insert("l.s", Tensor::full(&[2, 1], 0.5));
+        base.insert("l.z", Tensor::zeros(&[2, 1]));
+        let mut tuned = base.clone();
+        tuned.insert("l.s", Tensor::full(&[2, 1], 0.7));
+        let adapter = tuned.extract_adapter(false);
+        assert_eq!(adapter.len(), 1);
+        base.apply_adapter(&adapter).unwrap();
+        assert_eq!(base.req("l.s").unwrap().data()[0], 0.7);
+        // unknown tensor rejected
+        let mut bogus = Checkpoint::new();
+        bogus.insert("nope.s", Tensor::zeros(&[1, 1]));
+        assert!(base.apply_adapter(&bogus).is_err());
+    }
+
+    #[test]
+    fn packed_roundtrip_and_size() {
+        let dir = std::env::temp_dir().join("peqa_test_packed");
+        let path = dir.join("m.packed");
+        let mut ck = Checkpoint::new();
+        let mut rng = Pcg32::new(7);
+        let w = Tensor::normal(&[16, 32], 0.4, &mut rng);
+        let q = crate::quant::quantize_rtn(&w, 3, None).unwrap();
+        ck.insert("l.wq", Tensor::new(&[16, 32], q.codes.iter().map(|&c| c as f32).collect()));
+        ck.insert("l.s", q.scales.clone());
+        ck.insert("l.z", q.zeros.clone());
+        let bytes = ck.save_packed(&path, 3).unwrap();
+        assert_eq!(bytes, std::fs::metadata(&path).unwrap().len());
+        // 16·32 3-bit codes = 192 bytes — far less than 2048 f32 bytes.
+        let back = Checkpoint::load_packed(&path).unwrap();
+        assert_eq!(back.req("l.wq").unwrap(), ck.req("l.wq").unwrap());
+        assert_eq!(back.req("l.s").unwrap(), ck.req("l.s").unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn merge_lora_identity_when_b_zero() {
+        let mut ck = Checkpoint::new();
+        let mut rng = Pcg32::new(9);
+        let w = Tensor::normal(&[4, 4], 0.1, &mut rng);
+        ck.insert("p.w", w.clone());
+        ck.insert("p.lora_a", Tensor::normal(&[2, 4], 0.1, &mut rng));
+        ck.insert("p.lora_b", Tensor::zeros(&[4, 2]));
+        let merged = ck.merge_lora(8.0, 2).unwrap();
+        assert!(merged.req("p.w").unwrap().max_abs_diff(&w) < 1e-7);
+        assert!(merged.get("p.lora_a").is_none());
+    }
+}

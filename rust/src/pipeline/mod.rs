@@ -1,0 +1,446 @@
+//! Experiment pipeline: the orchestration layer every bench, example and
+//! CLI command shares.
+//!
+//! Responsibilities:
+//! * pretraining + caching the base models (`ensure_base`),
+//! * running any fine-tuning method end-to-end (`finetune`),
+//! * the PTQ paths: RTN (rust), OPTQ with artifact-accumulated Hessians,
+//! * evaluation glue (perplexity of any method-layout checkpoint).
+//!
+//! Method tags mirror python/compile (MethodConfig.tag): `full`,
+//! `lora_qv4`, `lora_qkvo16`, `qat_b{3,4}`, `peqa_b{bits}_{gc|gN}`,
+//! `peqa_zp_b4_gc`, `peqa_szp_b4_gc`, `alpha_b{3,4}`.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Paths, TrainConfig};
+use crate::data::batch::LmBatcher;
+use crate::data::{corpus, Batch, World};
+use crate::eval;
+use crate::model::Checkpoint;
+use crate::quant;
+use crate::runtime::{literal_to_tensor, tensor_to_literal, Runtime};  // tensor_to_literal: prep artifacts only (literals stay alive across run)
+use crate::tensor::Tensor;
+use crate::tokenizer::Tokenizer;
+use crate::train::Trainer;
+
+pub const WORLD_SEED: u64 = 2023;
+pub const WORLD_ENTITIES: usize = 48;
+pub const PRETRAIN_BYTES: usize = 400_000;
+pub const ADAPT_BYTES: usize = 120_000;
+
+/// Shared experiment context: runtime + tokenizer + world + paths.
+pub struct Ctx {
+    pub rt: Rc<Runtime>,
+    pub tok: Tokenizer,
+    pub world: World,
+    pub paths: Paths,
+}
+
+impl Ctx {
+    pub fn new() -> Result<Ctx> {
+        let paths = Paths::default();
+        let rt = Rc::new(Runtime::new(&paths.artifacts)?);
+        Ok(Ctx {
+            rt,
+            // Byte-level keeps every experiment tokenizer-stable; the BPE
+            // trainer is exercised by its own tests and the CLI.
+            tok: Tokenizer::byte_level(512),
+            world: World::new(WORLD_SEED, WORLD_ENTITIES),
+            paths,
+        })
+    }
+
+    /// Token stream for a named dataset.
+    pub fn stream(&self, dataset: &str, bytes: usize) -> Result<Vec<u32>> {
+        let text = match dataset {
+            "pretrain" => corpus::pretrain(&self.world, 11, bytes),
+            "wikitext" => corpus::wikitext_sim(12, bytes),
+            "ptb" => corpus::ptb_sim(13, bytes),
+            other => bail!("unknown dataset '{other}'"),
+        };
+        Ok(crate::data::encode_stream(&self.tok, &text))
+    }
+
+    /// Train/eval split of a dataset (last ~20% held out for PPL).
+    pub fn split(&self, dataset: &str, bytes: usize) -> Result<(Vec<u32>, Vec<u32>)> {
+        let s = self.stream(dataset, bytes)?;
+        let cut = s.len() * 4 / 5;
+        Ok((s[..cut].to_vec(), s[cut..].to_vec()))
+    }
+}
+
+/// Pretrain (or load the cached) fp base model for `size`.
+pub fn ensure_base(ctx: &Ctx, size: &str, steps: usize) -> Result<Checkpoint> {
+    let path = ctx.paths.checkpoints.join(format!("{size}_base.peqa"));
+    if path.exists() {
+        return Checkpoint::load(&path);
+    }
+    crate::info!("pretraining {size} base model ({steps} steps) → {}", path.display());
+    let art_name = format!("{size}_train_full");
+    let meta = ctx.rt.meta(&art_name)?;
+    let metas: Vec<_> = meta.params_trainable.iter().collect();
+    let init = Checkpoint::init_from_meta(&metas, 7 + size.len() as u64)?;
+    let cfg = TrainConfig {
+        steps,
+        lr: TrainConfig::default_lr("full"),
+        warmup_steps: steps / 20 + 1,
+        log_every: 100,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(&ctx.rt, &art_name, &init, cfg)?;
+    let stream = ctx.stream("pretrain", PRETRAIN_BYTES)?;
+    let (b, t) = batch_dims(&meta);
+    let mut batcher = LmBatcher::new(stream, b, t, 91);
+    trainer.run(|| batcher.next_batch())?;
+    let ck = trainer.finish()?;
+    ck.save(&path)?;
+    Ok(ck)
+}
+
+fn batch_dims(meta: &crate::runtime::ArtifactMeta) -> (usize, usize) {
+    (meta.inputs[0].shape[0], meta.inputs[0].shape[1])
+}
+
+/// Run a `prep` artifact: fp checkpoint → method-layout checkpoint.
+pub fn prep(ctx: &Ctx, size: &str, prep_tag: &str, fp: &Checkpoint) -> Result<Checkpoint> {
+    let art = ctx.rt.load(&format!("{size}_prep_{prep_tag}"))?;
+    let metas: Vec<_> = art.meta.inputs.iter().collect();
+    let mut inputs = Vec::with_capacity(metas.len());
+    for io in &art.meta.inputs {
+        let t = fp.req(&io.name)?;
+        inputs.push(tensor_to_literal(t)?);
+    }
+    let outs = art.run(&inputs)?;
+    let mut ck = Checkpoint::new();
+    for (io, lit) in art.meta.outputs.iter().zip(&outs) {
+        ck.insert(io.name.clone(), literal_to_tensor(lit, &io.shape)?);
+    }
+    Ok(ck)
+}
+
+/// Method tag → (train artifact name, prep tag if the base must be
+/// transformed first).
+fn plan(size: &str, tag: &str) -> (String, Option<String>) {
+    let train = format!("{size}_train_{tag}");
+    let prep = if tag.starts_with("peqa") {
+        // peqa / peqa_zp / peqa_szp all share the plain peqa prep
+        // (quantization is method-independent; only trainability differs).
+        let bits_group = tag
+            .trim_start_matches("peqa")
+            .trim_start_matches("_zp")
+            .trim_start_matches("_szp");
+        Some(format!("peqa{bits_group}"))
+    } else if tag.starts_with("alpha") {
+        Some(tag.to_string())
+    } else {
+        None
+    };
+    (train, prep)
+}
+
+/// Fine-tune `base` (fp layout) with the given method on token stream
+/// batches. Returns the method-layout tuned checkpoint.
+pub fn finetune(
+    ctx: &Ctx,
+    size: &str,
+    tag: &str,
+    base: &Checkpoint,
+    train_stream: &[u32],
+    cfg: &TrainConfig,
+) -> Result<(Checkpoint, Vec<f32>)> {
+    let (train_art, prep_tag) = plan(size, tag);
+    let start = match &prep_tag {
+        Some(p) => prep(ctx, size, p, base).with_context(|| format!("prep {p}"))?,
+        None => base.clone(),
+    };
+    let meta = ctx.rt.meta(&train_art)?;
+    let (b, t) = batch_dims(&meta);
+    let mut trainer = Trainer::new(&ctx.rt, &train_art, &start, cfg.clone())?;
+    let mut batcher = LmBatcher::new(train_stream.to_vec(), b, t, cfg.seed ^ 0x5eed);
+    trainer.run(|| batcher.next_batch())?;
+    let losses = trainer.losses.clone();
+    Ok((trainer.finish()?, losses))
+}
+
+/// Fine-tune on pre-built batches (instruction tuning).
+pub fn finetune_batches(
+    ctx: &Ctx,
+    size: &str,
+    tag: &str,
+    base: &Checkpoint,
+    batches: &[Batch],
+    cfg: &TrainConfig,
+) -> Result<Checkpoint> {
+    let (train_art, prep_tag) = plan(size, tag);
+    let start = match &prep_tag {
+        Some(p) => prep(ctx, size, p, base)?,
+        None => base.clone(),
+    };
+    let mut trainer = Trainer::new(&ctx.rt, &train_art, &start, cfg.clone())?;
+    let mut i = 0usize;
+    trainer.run(|| {
+        let b = batches[i % batches.len()].clone();
+        i += 1;
+        b
+    })?;
+    trainer.finish()
+}
+
+/// Perplexity of any method-layout checkpoint on a token stream.
+pub fn ppl(ctx: &Ctx, size: &str, ck: &Checkpoint, stream: &[u32]) -> Result<f64> {
+    let fp = if ck.quantized_prefixes().is_empty()
+        && !ck.names().iter().any(|n| n.ends_with(".code"))
+    {
+        // fp or LoRA layout: merge adapters if present, else as-is.
+        if ck.names().iter().any(|n| n.ends_with(".lora_a")) {
+            // rank/alpha from any lora train artifact meta isn't needed:
+            // adapters store their effect once merged with the meta below.
+            bail!("ppl() needs LoRA checkpoints merged first (merge_lora)")
+        } else {
+            ck.clone()
+        }
+    } else {
+        ck.dequantize()?
+    };
+    eval::perplexity(&ctx.rt, &format!("{size}_eval"), &fp, stream)
+}
+
+/// Accumulate OPTQ Hessians for `fp` over calibration batches.
+pub fn hessians(
+    ctx: &Ctx,
+    size: &str,
+    fp: &Checkpoint,
+    calib: &[u32],
+    n_batches: usize,
+) -> Result<Vec<(String, Tensor)>> {
+    let art = ctx.rt.load(&format!("{size}_hess"))?;
+    let (b, t) = batch_dims(&art.meta);
+    let metas: Vec<_> = art.meta.layout();
+    let params = fp.assemble(&metas, 0)?;
+    let param_bufs = params
+        .iter()
+        .map(|t| ctx.rt.tensor_to_device(t))
+        .collect::<Result<Vec<_>>>()?;
+    let mut batcher = LmBatcher::new(calib.to_vec(), b, t, 0xca11b);
+    let mut acc: Vec<(String, Tensor)> = art
+        .meta
+        .outputs
+        .iter()
+        .map(|io| (io.name.clone(), Tensor::zeros(&io.shape)))
+        .collect();
+    for _ in 0..n_batches {
+        let batch = batcher.next_batch();
+        let tok = ctx.rt.to_device_i32(&batch.tokens, &art.meta.inputs[0].shape)?;
+        let mut inputs: Vec<&xla::PjRtBuffer> = vec![&tok];
+        inputs.extend(param_bufs.iter());
+        let outs = art.run_b(&inputs)?;
+        for ((_, a), (lit, io)) in acc.iter_mut().zip(outs.iter().zip(art.meta.outputs.iter())) {
+            a.add_scaled(&literal_to_tensor(lit, &io.shape)?, 1.0)?;
+        }
+    }
+    Ok(acc)
+}
+
+/// Which Hessian family covers a projection prefix like "layers.0.attn.q".
+fn hess_key(prefix: &str) -> Result<String> {
+    let (layer, proj) = prefix
+        .rsplit_once('.')
+        .and_then(|(lp, p)| lp.rsplit_once('.').map(|(l, fam)| (l, format!("{fam}.{p}"))))
+        .ok_or_else(|| anyhow::anyhow!("bad prefix {prefix}"))?;
+    let fam = match proj.as_str() {
+        "attn.q" | "attn.k" | "attn.v" => "qkv",
+        "attn.o" => "o",
+        "mlp.gate" | "mlp.up" => "gateup",
+        "mlp.down" => "down",
+        "mlp.fc1" => "fc1",
+        "mlp.fc2" => "fc2",
+        other => bail!("unknown projection {other}"),
+    };
+    Ok(format!("{layer}.hess.{fam}"))
+}
+
+/// PTQ of an fp checkpoint with OPTQ (paper's LoRA+OPTQ deployment path).
+pub fn optq_quantize(
+    fp: &Checkpoint,
+    hessians: &[(String, Tensor)],
+    bits: u8,
+    group: Option<usize>,
+) -> Result<Checkpoint> {
+    let hmap: std::collections::HashMap<&str, &Tensor> =
+        hessians.iter().map(|(n, t)| (n.as_str(), t)).collect();
+    quantize_with(fp, |prefix, w| {
+        let key = hess_key(prefix)?;
+        let h = hmap
+            .get(key.as_str())
+            .ok_or_else(|| anyhow::anyhow!("missing hessian {key}"))?;
+        quant::quantize_optq(w, h, bits, group, 0.01)
+    })
+}
+
+/// PTQ with plain RTN (the paper's RTN rows; also PEQA's init).
+pub fn rtn_quantize(fp: &Checkpoint, bits: u8, group: Option<usize>) -> Result<Checkpoint> {
+    quantize_with(fp, |_, w| quant::quantize_rtn(w, bits, group))
+}
+
+fn quantize_with(
+    fp: &Checkpoint,
+    mut f: impl FnMut(&str, &Tensor) -> Result<quant::QuantizedMatrix>,
+) -> Result<Checkpoint> {
+    let mut out = Checkpoint::new();
+    for (name, t) in fp.iter() {
+        match name.strip_suffix(".w") {
+            // Block projections are quantized; embeddings/norms/head are
+            // not ".w"-suffixed block linears … but embed/lm_head have no
+            // ".w" suffix at all, so matching ".w" is exactly the paper's
+            // "every fully-connected layer of the blocks".
+            Some(prefix) if name.starts_with("layers.") => {
+                let q = f(prefix, t)?;
+                out.insert(
+                    format!("{prefix}.wq"),
+                    Tensor::new(t.shape(), q.codes.iter().map(|&c| c as f32).collect()),
+                );
+                out.insert(format!("{prefix}.s"), q.scales);
+                out.insert(format!("{prefix}.z"), q.zeros);
+            }
+            _ => out.insert(name.clone(), t.clone()),
+        }
+    }
+    Ok(out)
+}
+
+/// LoRA rank/alpha from the train artifact that produced a checkpoint.
+pub fn lora_hparams(ctx: &Ctx, size: &str, tag: &str) -> Result<(f64, usize)> {
+    let meta = ctx.rt.meta(&format!("{size}_train_{tag}"))?;
+    let m = meta.method.as_ref().ok_or_else(|| anyhow::anyhow!("no method meta"))?;
+    Ok((m.lora_alpha, m.rank))
+}
+
+/// Instruction-tune (alpaca-sim) with caching — Section 4.3 pipeline.
+/// `tag` may also be "rtn_b4": RTN-quantize the base with NO tuning
+/// (the Table 7 degradation baseline).
+pub fn instruct_tuned(
+    ctx: &Ctx,
+    size: &str,
+    tag: &str,
+    n_examples: usize,
+    steps: usize,
+) -> Result<Checkpoint> {
+    let path = ctx
+        .paths
+        .checkpoints
+        .join("ft")
+        .join(format!("{size}_{tag}_alpaca_{steps}.peqa"));
+    if path.exists() {
+        return Checkpoint::load(&path);
+    }
+    let base = ensure_base(ctx, size, pretrain_steps())?;
+    let ck = if tag == "base" {
+        base
+    } else if let Some(bits) = tag.strip_prefix("rtn_b") {
+        rtn_quantize(&base, bits.parse()?, None)?
+    } else {
+        let meta = ctx.rt.meta(&format!("{size}_train_{tag}"))?;
+        let (b, t) = batch_dims(&meta);
+        let data = crate::data::alpaca_sim(&ctx.world, 77, n_examples);
+        let batches = crate::data::instruction_batches(&ctx.tok, &data, b, t);
+        let cfg = default_cfg(tag, steps, 7);
+        finetune_batches(ctx, size, tag, &base, &batches, &cfg)?
+    };
+    ck.save(&path)?;
+    Ok(ck)
+}
+
+/// Pretraining step budget (env PEQA_PRETRAIN_STEPS; default 500).
+pub fn pretrain_steps() -> usize {
+    std::env::var("PEQA_PRETRAIN_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(500)
+}
+
+/// Cached fine-tune: benches share tuned checkpoints across tables.
+/// Cache key = (size, method, dataset, steps) under checkpoints/ft/.
+pub fn finetune_cached(
+    ctx: &Ctx,
+    size: &str,
+    tag: &str,
+    dataset: &str,
+    steps: usize,
+) -> Result<Checkpoint> {
+    let cfg = default_cfg(tag, steps, 42);
+    // Cache key carries the effective recipe so recipe changes invalidate.
+    let path = ctx.paths.checkpoints.join("ft").join(format!(
+        "{size}_{tag}_{dataset}_{}_lr{:.0e}.peqa",
+        cfg.steps, cfg.lr
+    ));
+    if path.exists() {
+        return Checkpoint::load(&path);
+    }
+    let base = ensure_base(ctx, size, pretrain_steps())?;
+    let (train_s, _) = ctx.split(dataset, ADAPT_BYTES)?;
+    let (ck, _) = finetune(ctx, size, tag, &base, &train_s, &cfg)?;
+    ck.save(&path)?;
+    Ok(ck)
+}
+
+/// Full "LoRA + OPTQ" baseline (Tables 2/3, Fig. 3): LoRA fine-tune in fp,
+/// merge adapters, OPTQ-quantize the merged weights on calibration data.
+/// Returns the quantized (peqa-layout) checkpoint.
+pub fn lora_optq(
+    ctx: &Ctx,
+    size: &str,
+    lora_tag: &str,
+    dataset: &str,
+    steps: usize,
+    bits: u8,
+    group: Option<usize>,
+) -> Result<Checkpoint> {
+    let lora_ck = finetune_cached(ctx, size, lora_tag, dataset, steps)?;
+    let (alpha, rank) = lora_hparams(ctx, size, lora_tag)?;
+    let merged = lora_ck.merge_lora(alpha, rank)?;
+    // Calibrate on the *adaptation* distribution, like the paper's OPTQ
+    // runs which calibrate on the task data.
+    let (calib, _) = ctx.split(dataset, ADAPT_BYTES)?;
+    let h = hessians(ctx, size, &merged, &calib, 8)?;
+    optq_quantize(&merged, &h, bits, group)
+}
+
+/// PPL of a fine-tuned LoRA checkpoint (merges adapters first).
+pub fn lora_ppl(
+    ctx: &Ctx,
+    size: &str,
+    lora_tag: &str,
+    ck: &Checkpoint,
+    stream: &[u32],
+) -> Result<f64> {
+    let (alpha, rank) = lora_hparams(ctx, size, lora_tag)?;
+    ppl(ctx, size, &ck.merge_lora(alpha, rank)?, stream)
+}
+
+/// Convenience: default fine-tune recipe for a method tag.
+///
+/// LoRA gets 2× the steps and a larger peak LR: with B initialized to
+/// zero the adapters see no gradient on step one and rank-constrained
+/// updates converge visibly slower at these scales — the paper similarly
+/// tunes per-method recipes (appendix C) and trains 15 epochs.
+pub fn default_cfg(tag: &str, steps: usize, seed: u64) -> TrainConfig {
+    let kind = tag.split('_').next().unwrap_or("full");
+    let steps = if kind == "lora" { steps * 2 } else { steps };
+    TrainConfig {
+        steps,
+        lr: if kind == "lora" { 5e-2 } else { TrainConfig::default_lr(kind) },
+        warmup_steps: (steps / 20).max(1),
+        seed,
+        log_every: 0,
+        ..Default::default()
+    }
+}
+
+/// Cached fine-tune directory helper used by benches.
+pub fn results_dir(ctx: &Ctx) -> &Path {
+    &ctx.paths.results
+}

@@ -1,0 +1,208 @@
+//! Dense symmetric-positive-definite linear algebra for OPTQ: Cholesky
+//! factorization, triangular solves, SPD inversion. f64 throughout — the
+//! Hessians OPTQ consumes are ill-conditioned enough that f32 Cholesky
+//! visibly degrades the quantization.
+
+use anyhow::{bail, Result};
+
+/// Row-major square matrix of f64.
+#[derive(Clone, Debug)]
+pub struct MatF64 {
+    pub n: usize,
+    pub a: Vec<f64>,
+}
+
+impl MatF64 {
+    pub fn zeros(n: usize) -> Self {
+        MatF64 { n, a: vec![0.0; n * n] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n);
+        for i in 0..n {
+            m.a[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_f32(n: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), n * n);
+        MatF64 { n, a: data.iter().map(|&x| x as f64).collect() }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.a[i * self.n + j] = v;
+    }
+
+    pub fn transpose(&self) -> MatF64 {
+        let n = self.n;
+        let mut t = MatF64::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                t.a[j * n + i] = self.a[i * n + j];
+            }
+        }
+        t
+    }
+
+    pub fn matmul(&self, b: &MatF64) -> MatF64 {
+        let n = self.n;
+        let mut c = MatF64::zeros(n);
+        for i in 0..n {
+            for k in 0..n {
+                let aik = self.a[i * n + k];
+                if aik == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    c.a[i * n + j] += aik * b.a[k * n + j];
+                }
+            }
+        }
+        c
+    }
+}
+
+/// Lower Cholesky factor L with A = L·Lᵀ. Fails on non-PD input.
+pub fn cholesky_lower(a: &MatF64) -> Result<MatF64> {
+    let n = a.n;
+    let mut l = MatF64::zeros(n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at(i, j);
+            for k in 0..j {
+                sum -= l.at(i, k) * l.at(j, k);
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    bail!("matrix not positive definite at pivot {i} (sum={sum})");
+                }
+                l.set(i, j, sum.sqrt());
+            } else {
+                l.set(i, j, sum / l.at(j, j));
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L·x = b (forward substitution), L lower-triangular.
+pub fn solve_lower(l: &MatF64, b: &[f64]) -> Vec<f64> {
+    let n = l.n;
+    let mut x = b.to_vec();
+    for i in 0..n {
+        for k in 0..i {
+            x[i] -= l.at(i, k) * x[k];
+        }
+        x[i] /= l.at(i, i);
+    }
+    x
+}
+
+/// Solve Lᵀ·x = b (back substitution), L lower-triangular.
+pub fn solve_lower_t(l: &MatF64, b: &[f64]) -> Vec<f64> {
+    let n = l.n;
+    let mut x = b.to_vec();
+    for i in (0..n).rev() {
+        for k in i + 1..n {
+            x[i] -= l.at(k, i) * x[k];
+        }
+        x[i] /= l.at(i, i);
+    }
+    x
+}
+
+/// A⁻¹ for SPD A via Cholesky (column-by-column solves).
+pub fn invert_spd(a: &MatF64) -> Result<MatF64> {
+    let n = a.n;
+    let l = cholesky_lower(a)?;
+    let mut inv = MatF64::zeros(n);
+    let mut e = vec![0.0; n];
+    for j in 0..n {
+        e[j] = 1.0;
+        let y = solve_lower(&l, &e);
+        let x = solve_lower_t(&l, &y);
+        for i in 0..n {
+            inv.set(i, j, x[i]);
+        }
+        e[j] = 0.0;
+    }
+    Ok(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn random_spd(n: usize, seed: u64) -> MatF64 {
+        let mut rng = Pcg32::new(seed);
+        let mut b = MatF64::zeros(n);
+        for v in b.a.iter_mut() {
+            *v = rng.normal() as f64;
+        }
+        let mut a = b.matmul(&b.transpose());
+        for i in 0..n {
+            a.a[i * n + i] += n as f64 * 0.1;
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = random_spd(12, 3);
+        let l = cholesky_lower(&a).unwrap();
+        let rec = l.matmul(&l.transpose());
+        for (x, y) in a.a.iter().zip(&rec.a) {
+            assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let a = random_spd(10, 7);
+        let inv = invert_spd(&a).unwrap();
+        let prod = a.matmul(&inv);
+        let eye = MatF64::eye(10);
+        for (x, y) in prod.a.iter().zip(&eye.a) {
+            assert!((x - y).abs() < 1e-8, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let a = random_spd(8, 9);
+        let l = cholesky_lower(&a).unwrap();
+        let b: Vec<f64> = (0..8).map(|i| i as f64 + 1.0).collect();
+        let y = solve_lower(&l, &b);
+        // L·y == b
+        for i in 0..8 {
+            let mut s = 0.0;
+            for k in 0..=i {
+                s += l.at(i, k) * y[k];
+            }
+            assert!((s - b[i]).abs() < 1e-10);
+        }
+        let x = solve_lower_t(&l, &b);
+        for i in 0..8 {
+            let mut s = 0.0;
+            for k in i..8 {
+                s += l.at(k, i) * x[k];
+            }
+            assert!((s - b[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn non_pd_rejected() {
+        let mut a = MatF64::eye(3);
+        a.set(2, 2, -1.0);
+        assert!(cholesky_lower(&a).is_err());
+    }
+}

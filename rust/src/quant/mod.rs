@@ -1,0 +1,11 @@
+//! Quantization substrate: RTN (paper Eq. 1), OPTQ/GPTQ baseline, packed
+//! sub-4-bit storage, and SPD linear algebra.
+
+pub mod linalg;
+pub mod optq;
+pub mod pack;
+pub mod rtn;
+
+pub use optq::{quantize_optq, weighted_error};
+pub use pack::{pack_codes, packed_size, unpack_codes};
+pub use rtn::{quantize_rtn, QuantizedMatrix};

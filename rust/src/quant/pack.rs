@@ -1,0 +1,100 @@
+//! Packed sub-4-bit integer storage — where the paper's model-size numbers
+//! come from (Tables 1/4, Fig. 2a).
+//!
+//! Codes are bit-packed little-endian within a byte stream: b bits per
+//! code, codes crossing byte boundaries allowed, so storage is exactly
+//! ⌈n·b/8⌉ bytes for n codes (3-bit: 8 codes in 3 bytes; 4-bit: 2/byte).
+//! Scales and zero-points stay f32 (they are the per-task adapter).
+
+use anyhow::{bail, Result};
+
+/// Pack `codes` (each < 2^bits) into a bit stream.
+pub fn pack_codes(codes: &[u8], bits: u8) -> Vec<u8> {
+    assert!((1..=8).contains(&bits));
+    let total_bits = codes.len() * bits as usize;
+    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    let mask = ((1u16 << bits) - 1) as u8;
+    let mut bitpos = 0usize;
+    for &c in codes {
+        let c = c & mask;
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        out[byte] |= c << off;
+        if off + bits as usize > 8 {
+            out[byte + 1] |= c >> (8 - off);
+        }
+        bitpos += bits as usize;
+    }
+    out
+}
+
+/// Inverse of `pack_codes`.
+pub fn unpack_codes(packed: &[u8], bits: u8, n: usize) -> Result<Vec<u8>> {
+    assert!((1..=8).contains(&bits));
+    let need = (n * bits as usize).div_ceil(8);
+    if packed.len() < need {
+        bail!("packed stream too short: {} < {need}", packed.len());
+    }
+    let mask = ((1u16 << bits) - 1) as u8;
+    let mut out = Vec::with_capacity(n);
+    let mut bitpos = 0usize;
+    for _ in 0..n {
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        let mut v = packed[byte] >> off;
+        if off + bits as usize > 8 {
+            v |= packed[byte + 1] << (8 - off);
+        }
+        out.push(v & mask);
+        bitpos += bits as usize;
+    }
+    Ok(out)
+}
+
+/// Exact packed size in bytes for `n` codes at `bits` width.
+pub fn packed_size(n: usize, bits: u8) -> usize {
+    (n * bits as usize).div_ceil(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn roundtrip_all_bit_widths() {
+        let mut rng = Pcg32::new(17);
+        for bits in 1..=8u8 {
+            for n in [0usize, 1, 7, 8, 9, 64, 1000, 1023] {
+                let codes: Vec<u8> =
+                    (0..n).map(|_| (rng.next_u32() & ((1 << bits) - 1)) as u8).collect();
+                let packed = pack_codes(&codes, bits);
+                assert_eq!(packed.len(), packed_size(n, bits));
+                let back = unpack_codes(&packed, bits, n).unwrap();
+                assert_eq!(back, codes, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn three_bit_density() {
+        // 8 × 3-bit codes in exactly 3 bytes — the "sub-4-bit" headline.
+        assert_eq!(packed_size(8, 3), 3);
+        assert_eq!(packed_size(1024, 3), 384);
+        assert_eq!(packed_size(1024, 4), 512);
+        assert_eq!(packed_size(1024, 16), 2048); // fp16 reference
+    }
+
+    #[test]
+    fn known_bit_pattern() {
+        // 4-bit codes [0x1, 0xF] -> single byte 0xF1 (little-endian in byte).
+        assert_eq!(pack_codes(&[0x1, 0xF], 4), vec![0xF1]);
+        // 3-bit codes [7, 7, 7] -> bits 111_111_111 -> bytes [0xFF, 0x01].
+        assert_eq!(pack_codes(&[7, 7, 7], 3), vec![0xFF, 0x01]);
+    }
+
+    #[test]
+    fn short_stream_rejected() {
+        assert!(unpack_codes(&[0xFF], 4, 3).is_err());
+    }
+}

@@ -1,0 +1,200 @@
+//! Round-to-nearest asymmetric quantization (paper Eq. 1) — rust mirror of
+//! the Pallas kernel `python/compile/kernels/quantize.py`.
+//!
+//! Used on the deployment path (`peqa quantize`, PTQ of LoRA-merged
+//! checkpoints) so quantization never needs Python at runtime. Bit-exact
+//! agreement with the Pallas kernel is asserted by an integration test
+//! that executes the `kernel_rtn_256` artifact on the same input.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+/// Same degenerate-group guard as kernels/ref.py.
+pub const EPS: f32 = 1e-8;
+
+/// Quantized representation of one weight matrix: unsigned integer codes
+/// plus per-(channel, group) scales and zero-points. `Ŵ = s · (codes − z)`.
+#[derive(Clone, Debug)]
+pub struct QuantizedMatrix {
+    /// Codes in [0, 2^bits − 1], stored unpacked (one f32-exact int per u8).
+    pub codes: Vec<u8>,
+    pub scales: Tensor,  // (n, G)
+    pub zeros: Tensor,   // (n, G)
+    pub rows: usize,
+    pub cols: usize,
+    pub bits: u8,
+    pub group: usize,    // cols for per-channel
+}
+
+impl QuantizedMatrix {
+    pub fn n_groups(&self) -> usize {
+        self.cols / self.group
+    }
+
+    /// Ŵ = s · (codes − z) as a dense tensor (rust mirror of dequant_ref).
+    pub fn dequantize(&self) -> Tensor {
+        let g = self.group;
+        let ng = self.n_groups();
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for i in 0..self.rows {
+            for k in 0..ng {
+                let s = self.scales.at2(i, k);
+                let z = self.zeros.at2(i, k);
+                for j in 0..g {
+                    let idx = i * self.cols + k * g + j;
+                    out[idx] = s * (self.codes[idx] as f32 - z);
+                }
+            }
+        }
+        Tensor::new(&[self.rows, self.cols], out)
+    }
+
+    /// Dequantize with *replacement* scales/zeros — this is PEQA task
+    /// switching: the shared integer matrix stays, only s/z swap.
+    pub fn dequantize_with(&self, scales: &Tensor, zeros: &Tensor) -> Tensor {
+        let mut q = self.clone();
+        q.scales = scales.clone();
+        q.zeros = zeros.clone();
+        q.dequantize()
+    }
+}
+
+/// Quantize a (n, m) weight matrix; `group == None` means per-channel.
+pub fn quantize_rtn(w: &Tensor, bits: u8, group: Option<usize>) -> Result<QuantizedMatrix> {
+    let (n, m) = w.dims2()?;
+    let g = group.unwrap_or(m);
+    if m % g != 0 {
+        bail!("group {g} must divide cols {m}");
+    }
+    if !(2..=8).contains(&bits) {
+        bail!("bits must be in 2..=8, got {bits}");
+    }
+    let ng = m / g;
+    let qmax = ((1u32 << bits) - 1) as f32;
+    let mut codes = vec![0u8; n * m];
+    let mut scales = Tensor::zeros(&[n, ng]);
+    let mut zeros = Tensor::zeros(&[n, ng]);
+    for i in 0..n {
+        for k in 0..ng {
+            let row = &w.data()[i * m + k * g..i * m + (k + 1) * g];
+            // Zero forced into range — matches kernels/ref.py.
+            let mut wmin = 0.0f32;
+            let mut wmax = 0.0f32;
+            for &x in row {
+                wmin = wmin.min(x);
+                wmax = wmax.max(x);
+            }
+            let s = ((wmax - wmin) / qmax).max(EPS);
+            let z = (-wmin / s).round().clamp(0.0, qmax);
+            scales.set2(i, k, s);
+            zeros.set2(i, k, z);
+            for (j, &x) in row.iter().enumerate() {
+                let q = ((x / s).round() + z).clamp(0.0, qmax);
+                codes[i * m + k * g + j] = q as u8;
+            }
+        }
+    }
+    Ok(QuantizedMatrix { codes, scales, zeros, rows: n, cols: m, bits, group: g })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn rand_w(n: usize, m: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg32::new(seed);
+        Tensor::normal(&[n, m], 0.5, &mut rng)
+    }
+
+    #[test]
+    fn reconstruction_error_bounded_by_scale() {
+        for (bits, group) in [(4u8, None), (3, None), (4, Some(16)), (2, Some(8))] {
+            let w = rand_w(16, 32, 7);
+            let q = quantize_rtn(&w, bits, group).unwrap();
+            let wh = q.dequantize();
+            let g = q.group;
+            for i in 0..16 {
+                for k in 0..q.n_groups() {
+                    let s = q.scales.at2(i, k);
+                    for j in 0..g {
+                        let col = k * g + j;
+                        let err = (w.at2(i, col) - wh.at2(i, col)).abs();
+                        assert!(err <= s + 1e-6, "bits={bits} err={err} s={s}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn codes_in_range_and_error_decreases_with_bits() {
+        let w = rand_w(32, 64, 3);
+        let mut errs = vec![];
+        for bits in [2u8, 3, 4, 8] {
+            let q = quantize_rtn(&w, bits, None).unwrap();
+            assert!(q.codes.iter().all(|&c| (c as u32) < (1 << bits)));
+            errs.push((w.data().iter().zip(q.dequantize().data()))
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>());
+        }
+        for i in 1..errs.len() {
+            assert!(errs[i] < errs[i - 1], "{errs:?}");
+        }
+    }
+
+    #[test]
+    fn grouping_reduces_error() {
+        // Smaller groups = more scales = lower reconstruction error
+        // (the Table 5 premise).
+        let w = rand_w(16, 64, 11);
+        let e = |group: Option<usize>| {
+            let q = quantize_rtn(&w, 3, group).unwrap();
+            let wh = q.dequantize();
+            w.data().iter().zip(wh.data()).map(|(a, b)| (a - b) * (a - b)).sum::<f32>()
+        };
+        let (e_chan, e_g32, e_g16, e_g8) = (e(None), e(Some(32)), e(Some(16)), e(Some(8)));
+        assert!(e_g32 <= e_chan && e_g16 <= e_g32 && e_g8 <= e_g16,
+                "{e_chan} {e_g32} {e_g16} {e_g8}");
+    }
+
+    #[test]
+    fn idempotent() {
+        let w = rand_w(8, 16, 5);
+        let q1 = quantize_rtn(&w, 4, None).unwrap();
+        let q2 = quantize_rtn(&q1.dequantize(), 4, None).unwrap();
+        assert!(q1.dequantize().max_abs_diff(&q2.dequantize()) < 1e-5);
+    }
+
+    #[test]
+    fn constant_rows_reconstruct_exactly() {
+        let w = Tensor::full(&[4, 16], 0.75);
+        let q = quantize_rtn(&w, 4, Some(8)).unwrap();
+        assert!(q.dequantize().max_abs_diff(&w) < 1e-6);
+    }
+
+    #[test]
+    fn task_switch_is_scale_swap() {
+        let w = rand_w(8, 16, 9);
+        let q = quantize_rtn(&w, 4, None).unwrap();
+        let mut s2 = q.scales.clone();
+        for v in s2.data_mut() {
+            *v *= 1.5;
+        }
+        let wh2 = q.dequantize_with(&s2, &q.zeros);
+        let wh1 = q.dequantize();
+        for (a, b) in wh1.data().iter().zip(wh2.data()) {
+            // Ŵ scales linearly in s around the (shared) zero-point.
+            assert!((b - 1.5 * a).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn invalid_inputs_rejected() {
+        let w = Tensor::zeros(&[4, 10]);
+        assert!(quantize_rtn(&w, 4, Some(3)).is_err());
+        assert!(quantize_rtn(&w, 1, None).is_err());
+        assert!(quantize_rtn(&w, 9, None).is_err());
+    }
+}

@@ -1,0 +1,286 @@
+//! Artifact metadata: the typed view of `artifacts/<name>.meta.json`.
+//!
+//! meta.json is produced by `python/compile/aot.py` and is the single
+//! source of truth for model geometry, method configuration and — most
+//! importantly — the *ordered* parameter layout of each artifact's flat
+//! HLO argument list.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Value;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub trainable: bool,
+    pub init: String,
+}
+
+impl ParamMeta {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub family: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub n_params: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct MethodMeta {
+    pub kind: String,
+    pub bits: u8,
+    pub group: Option<usize>,
+    pub tag: String,
+    pub train_scales: bool,
+    pub train_zeros: bool,
+    pub rank: usize,
+    pub lora_targets: Vec<String>,
+    pub lora_alpha: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String, // train | eval | logits | logits_q | hess | prep | kernel
+    pub size: Option<String>,
+    pub display: Option<String>,
+    pub batch: usize,
+    pub model: Option<ModelMeta>,
+    pub method: Option<MethodMeta>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    /// Full canonical param table (eval/logits/prep kinds).
+    pub params: Vec<ParamMeta>,
+    /// Split tables for train kind (trainable first in the flat layout).
+    pub params_trainable: Vec<ParamMeta>,
+    pub params_frozen: Vec<ParamMeta>,
+}
+
+fn io_list(v: &Value, key: &str) -> Result<Vec<IoSpec>> {
+    let mut out = Vec::new();
+    for item in v.arr_of(key)? {
+        out.push(IoSpec {
+            name: item.str_of("name")?.to_string(),
+            shape: item
+                .arr_of("shape")?
+                .iter()
+                .map(|x| x.as_usize().context("shape element"))
+                .collect::<Result<_>>()?,
+            dtype: item.str_of("dtype").unwrap_or("f32").to_string(),
+        });
+    }
+    Ok(out)
+}
+
+fn param_list(v: &Value, key: &str) -> Result<Vec<ParamMeta>> {
+    let Some(arr) = v.get(key).and_then(|x| x.as_arr()) else {
+        return Ok(vec![]);
+    };
+    let mut out = Vec::new();
+    for item in arr {
+        out.push(ParamMeta {
+            name: item.str_of("name")?.to_string(),
+            shape: item
+                .arr_of("shape")?
+                .iter()
+                .map(|x| x.as_usize().context("shape element"))
+                .collect::<Result<_>>()?,
+            trainable: item.bool_of("trainable")?,
+            init: item.str_of("init")?.to_string(),
+        });
+    }
+    Ok(out)
+}
+
+impl ArtifactMeta {
+    pub fn parse(text: &str) -> Result<ArtifactMeta> {
+        let v = Value::parse(text)?;
+        let model = match v.get("model") {
+            Some(m) if *m != Value::Null => Some(ModelMeta {
+                family: m.str_of("family")?.to_string(),
+                vocab: m.usize_of("vocab")?,
+                d_model: m.usize_of("d_model")?,
+                n_layers: m.usize_of("n_layers")?,
+                n_heads: m.usize_of("n_heads")?,
+                d_ff: m.usize_of("d_ff")?,
+                seq_len: m.usize_of("seq_len")?,
+                n_params: m.usize_of("n_params")?,
+            }),
+            _ => None,
+        };
+        let method = match v.get("method") {
+            Some(m) if *m != Value::Null => Some(MethodMeta {
+                kind: m.str_of("kind")?.to_string(),
+                bits: m.usize_of("bits")? as u8,
+                group: match m.req("group")? {
+                    Value::Null => None,
+                    g => Some(g.as_usize().context("group")?),
+                },
+                tag: m.str_of("tag")?.to_string(),
+                train_scales: m.bool_of("train_scales")?,
+                train_zeros: m.bool_of("train_zeros")?,
+                rank: m.usize_of("rank")?,
+                lora_targets: m
+                    .arr_of("lora_targets")?
+                    .iter()
+                    .map(|x| x.as_str().unwrap_or_default().to_string())
+                    .collect(),
+                lora_alpha: m.f64_of("lora_alpha")?,
+            }),
+            _ => None,
+        };
+        let meta = ArtifactMeta {
+            name: v.str_of("name")?.to_string(),
+            kind: v.str_of("kind")?.to_string(),
+            size: v.get("size").and_then(|x| x.as_str()).map(String::from),
+            display: v.get("display").and_then(|x| x.as_str()).map(String::from),
+            batch: v.usize_of("batch")?,
+            model,
+            method,
+            inputs: io_list(&v, "inputs")?,
+            outputs: io_list(&v, "outputs")?,
+            params: param_list(&v, "params")?,
+            params_trainable: param_list(&v, "params_trainable")?,
+            params_frozen: param_list(&v, "params_frozen")?,
+        };
+        meta.validate()?;
+        Ok(meta)
+    }
+
+    pub fn load(path: &Path) -> Result<ArtifactMeta> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.inputs.is_empty() || self.outputs.is_empty() {
+            bail!("artifact {} has empty io signature", self.name);
+        }
+        if self.kind == "train" {
+            if self.params_trainable.is_empty() {
+                bail!("train artifact {} without trainable params", self.name);
+            }
+            // inputs = tokens, mask, lr, step + trainable + frozen + m + v
+            let expect = 4 + 3 * self.params_trainable.len() + self.params_frozen.len();
+            if self.inputs.len() != expect {
+                bail!(
+                    "train artifact {}: {} inputs, expected {expect}",
+                    self.name,
+                    self.inputs.len()
+                );
+            }
+            let expect_out = 1 + 3 * self.params_trainable.len();
+            if self.outputs.len() != expect_out {
+                bail!("train artifact {}: bad output count", self.name);
+            }
+        }
+        Ok(())
+    }
+
+    /// The artifact's full param table in flat-argument order.
+    pub fn layout(&self) -> Vec<&ParamMeta> {
+        if self.kind == "train" {
+            self.params_trainable.iter().chain(self.params_frozen.iter()).collect()
+        } else {
+            self.params.iter().collect()
+        }
+    }
+
+    /// Index of the first parameter tensor in `inputs`.
+    pub fn first_param_input(&self) -> usize {
+        match self.kind.as_str() {
+            "train" => 4,                      // tokens, mask, lr, step
+            "eval" => 2,                       // tokens, mask
+            "logits" | "logits_q" | "hess" => 1, // tokens
+            _ => 0,                            // prep, kernel: params only
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "name": "t_train", "kind": "train", "size": "n1", "batch": 8,
+      "display": "X-sim",
+      "model": {"family":"llama","vocab":512,"d_model":64,"n_layers":2,
+                "n_heads":4,"d_ff":192,"seq_len":64,"n_params":100},
+      "method": {"kind":"peqa","bits":4,"group":null,"tag":"peqa_b4_gc",
+                 "train_scales":true,"train_zeros":false,"rank":4,
+                 "lora_targets":["attn.q"],"lora_alpha":8.0},
+      "inputs": [
+        {"name":"tokens","shape":[8,64],"dtype":"i32"},
+        {"name":"mask","shape":[8,63],"dtype":"f32"},
+        {"name":"lr","shape":[],"dtype":"f32"},
+        {"name":"step","shape":[],"dtype":"f32"},
+        {"name":"a.s","shape":[4,1],"dtype":"f32"},
+        {"name":"a.wq","shape":[4,8],"dtype":"f32"},
+        {"name":"m.a.s","shape":[4,1],"dtype":"f32"},
+        {"name":"v.a.s","shape":[4,1],"dtype":"f32"}
+      ],
+      "outputs": [
+        {"name":"loss","shape":[],"dtype":"f32"},
+        {"name":"a.s","shape":[4,1],"dtype":"f32"},
+        {"name":"m.a.s","shape":[4,1],"dtype":"f32"},
+        {"name":"v.a.s","shape":[4,1],"dtype":"f32"}
+      ],
+      "params_trainable": [{"name":"a.s","shape":[4,1],"trainable":true,"init":"ones"}],
+      "params_frozen": [{"name":"a.wq","shape":[4,8],"trainable":false,"init":"zeros"}]
+    }"#;
+
+    #[test]
+    fn parses_train_meta() {
+        let m = ArtifactMeta::parse(DOC).unwrap();
+        assert_eq!(m.kind, "train");
+        assert_eq!(m.model.as_ref().unwrap().d_model, 64);
+        let meth = m.method.as_ref().unwrap();
+        assert_eq!(meth.bits, 4);
+        assert_eq!(meth.group, None);
+        assert!(meth.train_scales && !meth.train_zeros);
+        assert_eq!(m.layout().len(), 2);
+        assert_eq!(m.layout()[0].name, "a.s");
+        assert_eq!(m.first_param_input(), 4);
+        assert_eq!(m.inputs[0].numel(), 512);
+    }
+
+    #[test]
+    fn validation_catches_bad_counts() {
+        let bad = DOC.replace(
+            r#"{"name":"v.a.s","shape":[4,1],"dtype":"f32"}
+      ],
+      "outputs""#,
+            r#"{"name":"v.a.s","shape":[4,1],"dtype":"f32"},
+        {"name":"extra","shape":[1],"dtype":"f32"}
+      ],
+      "outputs""#,
+        );
+        assert!(ArtifactMeta::parse(&bad).is_err());
+    }
+}

@@ -1,0 +1,197 @@
+//! Host-side f32 tensors: shape-checked buffers with exactly the linear
+//! algebra the coordinator needs (checkpoint transforms, LoRA merging,
+//! OPTQ, dequantization). Heavy math belongs in the AOT'd XLA artifacts;
+//! this module is deliberately small and obvious.
+
+use anyhow::{bail, Result};
+
+use crate::util::Pcg32;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor::new(shape, vec![0.0; shape.iter().product()])
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        Tensor::new(shape, vec![1.0; shape.iter().product()])
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Tensor::new(shape, vec![v; shape.iter().product()])
+    }
+
+    pub fn normal(shape: &[usize], std: f32, rng: &mut Pcg32) -> Self {
+        let mut data = vec![0.0; shape.iter().product()];
+        rng.fill_normal(&mut data, std);
+        Tensor::new(shape, data)
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Number of rows/cols for 2-D tensors.
+    pub fn dims2(&self) -> Result<(usize, usize)> {
+        match self.shape.as_slice() {
+            [n, m] => Ok((*n, *m)),
+            s => bail!("expected 2-D tensor, got {s:?}"),
+        }
+    }
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        if shape.iter().product::<usize>() != self.data.len() {
+            bail!("reshape {:?} -> {:?} size mismatch", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    pub fn t(&self) -> Tensor {
+        let (n, m) = self.dims2().expect("transpose needs 2-D");
+        let mut out = vec![0.0f32; n * m];
+        for i in 0..n {
+            for j in 0..m {
+                out[j * n + i] = self.data[i * m + j];
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+
+    /// C = A @ B for 2-D tensors — straightforward ikj loop; used only on
+    /// checkpoint-transform paths (LoRA merge, OPTQ), never per-token.
+    pub fn matmul(&self, b: &Tensor) -> Result<Tensor> {
+        let (n, k) = self.dims2()?;
+        let (k2, m) = b.dims2()?;
+        if k != k2 {
+            bail!("matmul {:?} @ {:?}", self.shape, b.shape);
+        }
+        let mut out = vec![0.0f32; n * m];
+        for i in 0..n {
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[p * m..(p + 1) * m];
+                let orow = &mut out[i * m..(i + 1) * m];
+                for j in 0..m {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        Ok(Tensor::new(&[n, m], out))
+    }
+
+    pub fn add_scaled(&mut self, other: &Tensor, scale: f32) -> Result<()> {
+        if self.shape != other.shape {
+            bail!("add_scaled shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += scale * b;
+        }
+        Ok(())
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::new(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_rectangular_and_transpose() {
+        let a = Tensor::new(&[1, 3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::new(&[3, 2], vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.shape(), &[1, 2]);
+        assert_eq!(c.data(), &[4.0, 5.0]);
+        let bt = b.t();
+        assert_eq!(bt.shape(), &[2, 3]);
+        assert_eq!(bt.at2(0, 2), 1.0);
+        assert_eq!(bt.at2(1, 1), 1.0);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg32::new(1);
+        let a = Tensor::normal(&[5, 7], 1.0, &mut rng);
+        assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn shape_errors() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 3]);
+        assert!(a.matmul(&b).is_err());
+        assert!(a.clone().reshape(&[7]).is_err());
+        assert!(a.clone().reshape(&[3, 2]).is_ok());
+    }
+
+    #[test]
+    fn add_scaled() {
+        let mut a = Tensor::ones(&[2, 2]);
+        let b = Tensor::full(&[2, 2], 2.0);
+        a.add_scaled(&b, 0.5).unwrap();
+        assert_eq!(a.data(), &[2.0, 2.0, 2.0, 2.0]);
+    }
+}

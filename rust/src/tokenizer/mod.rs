@@ -1,0 +1,264 @@
+//! Byte-level tokenizer with trainable BPE merges.
+//!
+//! Vocabulary layout (fixed 512 ids, matching the models' vocab):
+//!   0..=255   raw bytes
+//!   256..=259 specials: PAD, BOS, EOS, SEP
+//!   260..     learned BPE merges (up to vocab_size)
+//!
+//! The BPE trainer is the classic greedy most-frequent-pair loop over a
+//! training corpus; `encode` applies merges by rank within
+//! whitespace-delimited chunks (spaces attach to the following word,
+//! GPT-2 style) so tokenization is stable under concatenation.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+pub const PAD: u32 = 256;
+pub const BOS: u32 = 257;
+pub const EOS: u32 = 258;
+pub const SEP: u32 = 259;
+pub const FIRST_MERGE: u32 = 260;
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    /// merge rank -> (left id, right id); new id = FIRST_MERGE + rank.
+    merges: Vec<(u32, u32)>,
+    /// (left, right) -> rank, for O(1) lookup during encode.
+    ranks: HashMap<(u32, u32), usize>,
+    vocab_size: usize,
+}
+
+impl Tokenizer {
+    /// Byte-level tokenizer with no merges.
+    pub fn byte_level(vocab_size: usize) -> Self {
+        assert!(vocab_size >= FIRST_MERGE as usize);
+        Tokenizer { merges: vec![], ranks: HashMap::new(), vocab_size }
+    }
+
+    /// Train BPE merges on `corpus` until the vocab is full (or no pair
+    /// repeats). Deterministic: ties break toward the lexicographically
+    /// smaller pair.
+    pub fn train_bpe(corpus: &str, vocab_size: usize) -> Self {
+        let mut tok = Tokenizer::byte_level(vocab_size);
+        let n_merges = vocab_size - FIRST_MERGE as usize;
+        // Work over whitespace chunks (dedup by count) for speed.
+        let mut chunk_counts: HashMap<Vec<u32>, usize> = HashMap::new();
+        for chunk in split_chunks(corpus) {
+            *chunk_counts.entry(chunk.bytes().map(|b| b as u32).collect()).or_insert(0) += 1;
+        }
+        let mut chunks: Vec<(Vec<u32>, usize)> = chunk_counts.into_iter().collect();
+        chunks.sort(); // determinism independent of hash order
+        for rank in 0..n_merges {
+            let mut pair_counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for (seq, cnt) in &chunks {
+                for w in seq.windows(2) {
+                    *pair_counts.entry((w[0], w[1])).or_insert(0) += cnt;
+                }
+            }
+            let best = pair_counts
+                .into_iter()
+                .filter(|&(_, c)| c >= 2)
+                .max_by(|a, b| a.1.cmp(&b.1).then_with(|| b.0.cmp(&a.0)));
+            let Some((pair, _)) = best else { break };
+            let new_id = FIRST_MERGE + rank as u32;
+            tok.merges.push(pair);
+            tok.ranks.insert(pair, rank);
+            for (seq, _) in chunks.iter_mut() {
+                merge_in_place(seq, pair, new_id);
+            }
+        }
+        tok
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab_size
+    }
+
+    pub fn n_merges(&self) -> usize {
+        self.merges.len()
+    }
+
+    /// Text → token ids (no specials added).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::with_capacity(text.len() / 2 + 1);
+        for chunk in split_chunks(text) {
+            let mut seq: Vec<u32> = chunk.bytes().map(|b| b as u32).collect();
+            // Repeatedly apply the lowest-rank applicable merge.
+            loop {
+                let mut best: Option<(usize, usize)> = None; // (rank, pos)
+                for (i, w) in seq.windows(2).enumerate() {
+                    if let Some(&r) = self.ranks.get(&(w[0], w[1])) {
+                        if best.map_or(true, |(br, _)| r < br) {
+                            best = Some((r, i));
+                        }
+                    }
+                }
+                match best {
+                    Some((rank, _)) => {
+                        let pair = self.merges[rank];
+                        merge_in_place(&mut seq, pair, FIRST_MERGE + rank as u32);
+                    }
+                    None => break,
+                }
+            }
+            out.extend(seq);
+        }
+        out
+    }
+
+    /// Token ids → text. Specials map to readable placeholders; merge ids
+    /// expand recursively back to bytes.
+    pub fn decode(&self, ids: &[u32]) -> Result<String> {
+        let mut bytes = Vec::with_capacity(ids.len() * 2);
+        for &id in ids {
+            self.expand(id, &mut bytes)?;
+        }
+        Ok(String::from_utf8_lossy(&bytes).into_owned())
+    }
+
+    fn expand(&self, id: u32, out: &mut Vec<u8>) -> Result<()> {
+        if id < 256 {
+            out.push(id as u8);
+        } else if id < FIRST_MERGE {
+            // Specials decode to nothing (PAD) or markers.
+            match id {
+                PAD => {}
+                BOS => {}
+                EOS => {}
+                SEP => out.push(b'\n'),
+                _ => unreachable!(),
+            }
+        } else {
+            let rank = (id - FIRST_MERGE) as usize;
+            if rank >= self.merges.len() {
+                bail!("token id {id} out of vocabulary");
+            }
+            let (l, r) = self.merges[rank];
+            self.expand(l, out)?;
+            self.expand(r, out)?;
+        }
+        Ok(())
+    }
+
+    /// Serialize merges (for embedding the tokenizer in checkpoints).
+    pub fn to_lines(&self) -> String {
+        self.merges.iter().map(|(l, r)| format!("{l} {r}\n")).collect()
+    }
+
+    pub fn from_lines(lines: &str, vocab_size: usize) -> Result<Self> {
+        let mut tok = Tokenizer::byte_level(vocab_size);
+        for (rank, line) in lines.lines().enumerate() {
+            let mut it = line.split_whitespace();
+            let (Some(l), Some(r)) = (it.next(), it.next()) else {
+                bail!("bad merge line '{line}'");
+            };
+            let pair = (l.parse()?, r.parse()?);
+            tok.merges.push(pair);
+            tok.ranks.insert(pair, rank);
+        }
+        Ok(tok)
+    }
+}
+
+/// Split text into chunks where a leading space sticks to the word.
+fn split_chunks(text: &str) -> Vec<&str> {
+    let b = text.as_bytes();
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut i = 0;
+    while i < b.len() {
+        // A chunk begins at a space (or start) and runs to just before the
+        // next space.
+        i += 1;
+        while i < b.len() && b[i] != b' ' {
+            i += 1;
+        }
+        out.push(&text[start..i]);
+        start = i;
+    }
+    out
+}
+
+fn merge_in_place(seq: &mut Vec<u32>, pair: (u32, u32), new_id: u32) {
+    let mut w = 0;
+    let mut r = 0;
+    while r < seq.len() {
+        if r + 1 < seq.len() && seq[r] == pair.0 && seq[r + 1] == pair.1 {
+            seq[w] = new_id;
+            r += 2;
+        } else {
+            seq[w] = seq[r];
+            r += 1;
+        }
+        w += 1;
+    }
+    seq.truncate(w);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_level_roundtrip() {
+        let tok = Tokenizer::byte_level(512);
+        let text = "hello world! ünïcode ok.";
+        let ids = tok.encode(text);
+        assert_eq!(tok.decode(&ids).unwrap(), text);
+    }
+
+    #[test]
+    fn bpe_compresses_and_roundtrips() {
+        let corpus = "the cat sat on the mat. the cat ate the rat. the mat was flat. "
+            .repeat(50);
+        let tok = Tokenizer::train_bpe(&corpus, 300);
+        assert!(tok.n_merges() > 10);
+        let ids = tok.encode(&corpus);
+        assert!(ids.len() < corpus.len() / 2, "{} vs {}", ids.len(), corpus.len());
+        assert_eq!(tok.decode(&ids).unwrap(), corpus);
+        // " the" should be among the earliest merges' products.
+        let the_ids = tok.encode(" the");
+        assert!(the_ids.len() <= 2, "{the_ids:?}");
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let corpus = "aa bb aa bb cc aa".repeat(20);
+        let t1 = Tokenizer::train_bpe(&corpus, 280);
+        let t2 = Tokenizer::train_bpe(&corpus, 280);
+        assert_eq!(t1.to_lines(), t2.to_lines());
+    }
+
+    #[test]
+    fn encode_stable_under_concatenation() {
+        let corpus = "alpha beta gamma delta ".repeat(40);
+        let tok = Tokenizer::train_bpe(&corpus, 320);
+        let a = tok.encode("alpha beta");
+        let b = tok.encode(" gamma");
+        let joined = tok.encode("alpha beta gamma");
+        assert_eq!(joined, [a, b].concat());
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let corpus = "foo bar foo bar baz foo ".repeat(30);
+        let tok = Tokenizer::train_bpe(&corpus, 300);
+        let tok2 = Tokenizer::from_lines(&tok.to_lines(), 300).unwrap();
+        assert_eq!(tok.encode(&corpus), tok2.encode(&corpus));
+    }
+
+    #[test]
+    fn out_of_vocab_decode_fails() {
+        let tok = Tokenizer::byte_level(512);
+        assert!(tok.decode(&[400]).is_err());
+    }
+
+    #[test]
+    fn specials_do_not_collide() {
+        let corpus = "x y z ".repeat(100);
+        let tok = Tokenizer::train_bpe(&corpus, 512);
+        let ids = tok.encode(&corpus);
+        assert!(ids.iter().all(|&i| i < 256 || i >= FIRST_MERGE));
+    }
+}

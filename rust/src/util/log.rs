@@ -1,0 +1,126 @@
+//! Minimal leveled logger + wall-clock timers.
+//!
+//! `PEQA_LOG={error,warn,info,debug,trace}` controls verbosity (default
+//! `info`). All output goes to stderr so stdout stays machine-parseable
+//! (bench tables, CSV dumps).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Clone, Copy, PartialEq, PartialOrd, Debug)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+
+fn level() -> u8 {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v != u8::MAX {
+        return v;
+    }
+    let parsed = match std::env::var("PEQA_LOG").as_deref() {
+        Ok("error") => 0,
+        Ok("warn") => 1,
+        Ok("debug") => 3,
+        Ok("trace") => 4,
+        _ => 2,
+    };
+    LEVEL.store(parsed, Ordering::Relaxed);
+    parsed
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= level()
+}
+
+pub fn log(l: Level, module: &str, msg: std::fmt::Arguments) {
+    if enabled(l) {
+        eprintln!("[{:5}] {}: {}", format!("{l:?}").to_lowercase(), module, msg);
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug, module_path!(), format_args!($($arg)*))
+    };
+}
+
+/// RAII wall-clock timer: logs at Debug on drop; `elapsed_s()` for manual use.
+pub struct Timer {
+    label: String,
+    start: Instant,
+    logged: bool,
+}
+
+impl Timer {
+    pub fn new(label: impl Into<String>) -> Self {
+        Timer { label: label.into(), start: Instant::now(), logged: false }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn stop(mut self) -> f64 {
+        self.logged = true;
+        let dt = self.elapsed_s();
+        log(Level::Debug, "timer", format_args!("{}: {:.3}s", self.label, dt));
+        dt
+    }
+}
+
+impl Drop for Timer {
+    fn drop(&mut self) {
+        if !self.logged {
+            let dt = self.elapsed_s();
+            log(Level::Debug, "timer", format_args!("{}: {:.3}s", self.label, dt));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order() {
+        assert!(Level::Error < Level::Trace);
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+    }
+
+    #[test]
+    fn timer_measures() {
+        let t = Timer::new("t");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.stop() >= 0.004);
+    }
+}

@@ -1,0 +1,39 @@
+//! Substrate utilities built from scratch (the vendored registry carries
+//! no rand/log/serde): deterministic RNG, leveled logging, statistics.
+
+pub mod log;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Pcg32;
+
+/// Human-readable byte sizes for memory tables ("33.4 GB", "1.2 MB").
+pub fn human_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 { format!("{b} B") } else { format!("{v:.2} {}", UNITS[u]) }
+}
+
+/// Decimal gigabytes, the unit the paper's tables use (LLaMA-65B fp16 =
+/// "131 GB", 4-bit PEQA = "33.45 GB").
+pub fn decimal_gb(b: u64) -> String {
+    format!("{:.2} GB", b as f64 / 1e9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KB");
+        assert_eq!(human_bytes(33 * 1024 * 1024 * 1024), "33.00 GB");
+        assert_eq!(decimal_gb(33_450_000_000), "33.45 GB");
+    }
+}
