@@ -1,21 +1,150 @@
-//! Kernel & runtime micro-benchmarks (the §Perf instrumentation):
-//!  * qmatmul artifact (Pallas fused dequant-matmul) vs fp logits forward,
-//!  * train-step latency per method (PEQA vs LoRA vs full — paper's
-//!    "training cost parity" claim),
-//!  * decode-step latency fp vs quantized path,
-//!  * adapter swap vs full reload wall time (Table 1 switching axis),
-//!  * HBM-traffic model: weight bytes moved per decode step at 16/4/3 bit.
+//! Kernel micro-benchmarks (the §Perf instrumentation), host edition:
+//!
+//! * fused packed GEMM (`quant::kernels::PackedMatrix::matmul_t`) vs the
+//!   seed's reference unpack → dequantize → naive-matmul path, across
+//!   bits ∈ {2, 3, 4} × group ∈ {per-channel, 128, 64};
+//! * the blocked/parallel dense `Tensor::matmul` for context;
+//! * writes `BENCH_kernels.json` at the repo root so every PR leaves a
+//!   perf datapoint (scripts/ci.sh runs this in quick mode).
+//!
+//! Defaults to the acceptance shape — 4096×4096 weights, batch 8.
+//! `PEQA_BENCH_QUICK=1` shrinks to a smoke run; `PEQA_BENCH_DIM`
+//! overrides the matrix dimension; `PEQA_THREADS` pins the worker count.
+//!
+//! With `--features xla` it additionally runs the original artifact
+//! micro-bench (Pallas qmatmul / decode / train-step / adapter-swap) when
+//! artifacts are present.
 
-use peqa::bench::{steps, time_fn, Table};
-use peqa::config::TrainConfig;
-use peqa::coordinator::{AdapterStore, BatcherConfig, Coordinator, SwitchMode};
-use peqa::data::LmBatcher;
-use peqa::eval::EvalModel;
-use peqa::pipeline::{self, Ctx};
-use peqa::train::Trainer;
+use peqa::bench::{quick_mode, save_json, time_fn, Table, Timing};
+use peqa::config;
+use peqa::json::Value;
+use peqa::quant::{quantize_rtn, reference_dequant_matmul, PackedMatrix};
+use peqa::tensor::Tensor;
 use peqa::util::Pcg32;
 
+fn row(table: &mut Table, bits: u8, group: &str, t: &Timing, speedup: Option<f64>) {
+    table.row(&[
+        bits.to_string(),
+        group.to_string(),
+        t.label.clone(),
+        format!("{:.2}", t.mean_s() * 1e3),
+        format!("{:.2}", t.min_s() * 1e3),
+        speedup.map(|s| format!("{s:.2}x")).unwrap_or_default(),
+    ]);
+}
+
+fn json_entry(bits: u8, group: &str, path: &str, t: &Timing, speedup: Option<f64>) -> Value {
+    let mut fields = vec![
+        ("bits", Value::num(bits as f64)),
+        ("group", Value::str(group)),
+        ("path", Value::str(path)),
+        ("mean_s", Value::num(t.mean_s())),
+        ("min_s", Value::num(t.min_s())),
+        ("p50_s", Value::num(t.p50_s())),
+    ];
+    if let Some(s) = speedup {
+        fields.push(("speedup_vs_reference", Value::num(s)));
+    }
+    Value::obj(fields)
+}
+
 fn main() -> anyhow::Result<()> {
+    let quick = quick_mode();
+    // Rounded up to a multiple of the largest bench group (128) so every
+    // (bits, group) config divides evenly.
+    let dim: usize = std::env::var("PEQA_BENCH_DIM")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if quick { 512 } else { 4096 })
+        .div_ceil(128)
+        * 128;
+    let batch = 8usize;
+    let (warmup, iters) = if quick { (1, 2) } else { (1, 5) };
+    let threads = peqa::util::num_threads();
+
+    let mut rng = Pcg32::new(3);
+    let w = Tensor::normal(&[dim, dim], 0.3, &mut rng);
+    let x = Tensor::normal(&[batch, dim], 1.0, &mut rng);
+
+    let mut table = Table::new(
+        &format!("§Perf — fused packed GEMM vs reference ({dim}x{dim}, batch {batch}, {threads} threads)"),
+        &["bits", "group", "path", "mean ms", "min ms", "speedup"],
+    );
+    let mut entries: Vec<Value> = Vec::new();
+
+    for bits in [2u8, 3, 4] {
+        for group in [None, Some(128), Some(64)] {
+            let gname = group.map(|g| format!("g{g}")).unwrap_or_else(|| "per-channel".into());
+            let q = quantize_rtn(&w, bits, group)?;
+            let pm = PackedMatrix::from_quantized(&q);
+
+            let t_ref = time_fn(
+                &format!("reference unpack+dequant+matmul b{bits}/{gname}"),
+                warmup,
+                iters,
+                || {
+                    std::hint::black_box(reference_dequant_matmul(&x, &pm).unwrap());
+                },
+            );
+            let t_fused = time_fn(&format!("fused packed gemm b{bits}/{gname}"), warmup, iters, || {
+                std::hint::black_box(pm.matmul_t(&x).unwrap());
+            });
+            let speedup = t_ref.mean_s() / t_fused.mean_s().max(1e-12);
+            row(&mut table, bits, &gname, &t_ref, None);
+            row(&mut table, bits, &gname, &t_fused, Some(speedup));
+            entries.push(json_entry(bits, &gname, "reference", &t_ref, None));
+            entries.push(json_entry(bits, &gname, "fused", &t_fused, Some(speedup)));
+        }
+    }
+
+    // Dense parallel matmul for context (bits/group independent).
+    let dense = quantize_rtn(&w, 4, Some(64))?.dequantize();
+    let dense_t = dense.t();
+    let t_dense = time_fn("dense blocked/parallel matmul", warmup, iters, || {
+        std::hint::black_box(x.matmul(&dense_t).unwrap());
+    });
+    row(&mut table, 32, "-", &t_dense, None);
+    entries.push(json_entry(32, "-", "dense_parallel", &t_dense, None));
+
+    table.print();
+    let paths = config::Paths::default();
+    table.save(&paths.results, "kernels_micro").ok();
+
+    let out = std::env::var("PEQA_BENCH_OUT")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| config::repo_root().join("BENCH_kernels.json"));
+    let doc = Value::obj(vec![
+        ("bench", Value::str("kernels_micro")),
+        ("dim", Value::num(dim as f64)),
+        ("batch", Value::num(batch as f64)),
+        ("threads", Value::num(threads as f64)),
+        ("iters", Value::num(iters as f64)),
+        ("quick", Value::str(if quick { "1" } else { "0" })),
+        ("results", Value::Arr(entries)),
+    ]);
+    save_json(&out, &doc)?;
+    println!("\nwrote {}", out.display());
+
+    #[cfg(feature = "xla")]
+    if let Err(e) = artifact_micro() {
+        eprintln!("artifact micro-bench skipped: {e:#}");
+    }
+    Ok(())
+}
+
+/// The original artifact-driven micro-bench (needs `make artifacts`):
+/// Pallas qmatmul kernel, fp-vs-quantized decode, per-method train steps,
+/// adapter swap vs full reload, HBM-traffic model.
+#[cfg(feature = "xla")]
+fn artifact_micro() -> anyhow::Result<()> {
+    use peqa::bench::steps;
+    use peqa::config::TrainConfig;
+    use peqa::coordinator::{AdapterStore, BatcherConfig, Coordinator, SwitchMode};
+    use peqa::data::LmBatcher;
+    use peqa::eval::EvalModel;
+    use peqa::pipeline::{self, Ctx};
+    use peqa::train::Trainer;
+
     let ctx = Ctx::new()?;
     let size = "n3";
     let base = pipeline::ensure_base(&ctx, size, pipeline::pretrain_steps())?;
@@ -25,10 +154,10 @@ fn main() -> anyhow::Result<()> {
     // ---- kernel artifact micro-bench ----
     let art = ctx.rt.load("kernel_qmatmul_256")?;
     let mut rng = Pcg32::new(3);
-    let w = peqa::tensor::Tensor::normal(&[256, 256], 0.3, &mut rng);
-    let q = peqa::quant::quantize_rtn(&w, 4, Some(64))?;
-    let x = peqa::tensor::Tensor::normal(&[8, 256], 1.0, &mut rng);
-    let wq = peqa::tensor::Tensor::new(&[256, 256], q.codes.iter().map(|&c| c as f32).collect());
+    let w = Tensor::normal(&[256, 256], 0.3, &mut rng);
+    let q = quantize_rtn(&w, 4, Some(64))?;
+    let x = Tensor::normal(&[8, 256], 1.0, &mut rng);
+    let wq = Tensor::new(&[256, 256], q.codes.iter().map(|&c| c as f32).collect());
     let xb = ctx.rt.tensor_to_device(&x)?;
     let wqb = ctx.rt.tensor_to_device(&wq)?;
     let sb = ctx.rt.tensor_to_device(&q.scales)?;
@@ -51,7 +180,7 @@ fn main() -> anyhow::Result<()> {
     // ---- train-step latency per method ----
     let (train_s, _) = ctx.split("wikitext", pipeline::ADAPT_BYTES)?;
     let mut table = Table::new(
-        "§Perf — hot-path latencies (n3, CPU PJRT; see EXPERIMENTS.md §Perf)",
+        "§Perf — artifact hot-path latencies (n3, CPU PJRT; see EXPERIMENTS.md §Perf)",
         &["Path", "mean ms", "p50 ms", "min ms"],
     );
     for tm in [t_kernel, t_fp, t_q] {

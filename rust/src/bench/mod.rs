@@ -159,6 +159,18 @@ impl Table {
     }
 }
 
+/// Write a JSON value to an explicit path (bench result files like
+/// BENCH_kernels.json that live at the repo root rather than results/).
+pub fn save_json(path: &std::path::Path, v: &Value) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, v.to_string())?;
+    Ok(())
+}
+
 /// `PEQA_BENCH_QUICK=1` shrinks bench workloads (CI-speed smoke runs).
 pub fn quick_mode() -> bool {
     std::env::var("PEQA_BENCH_QUICK").as_deref() == Ok("1")

@@ -30,16 +30,24 @@ fn env_path(var: &str, default: PathBuf) -> PathBuf {
     std::env::var_os(var).map(PathBuf::from).unwrap_or(default)
 }
 
-/// Locate the repo root: walk up from cwd looking for `artifacts/` or
-/// `Cargo.toml` so binaries work from any subdirectory (incl. cargo test).
+/// Locate the repo root: walk up from cwd preferring `.git`/`artifacts/`
+/// markers, falling back to the *topmost* `Cargo.toml` so binaries work
+/// from any subdirectory. Cargo runs test/bench executables with cwd =
+/// the package root (rust/), which has its own manifest — stopping at the
+/// *first* Cargo.toml would strand artifacts/results/BENCH_kernels.json
+/// under rust/ instead of the repo root.
 pub fn repo_root() -> PathBuf {
     let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    let mut topmost_manifest: Option<PathBuf> = None;
     loop {
-        if dir.join("Cargo.toml").exists() || dir.join("artifacts").is_dir() {
+        if dir.join(".git").exists() || dir.join("artifacts").is_dir() {
             return dir;
         }
+        if dir.join("Cargo.toml").exists() {
+            topmost_manifest = Some(dir.clone());
+        }
         if !dir.pop() {
-            return PathBuf::from(".");
+            return topmost_manifest.unwrap_or_else(|| PathBuf::from("."));
         }
     }
 }

@@ -21,7 +21,7 @@ use std::collections::{HashMap, VecDeque};
 use std::path::Path;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::eval::EvalModel;
 use crate::model::Checkpoint;
@@ -156,6 +156,11 @@ pub struct Coordinator {
     model: EvalModel,
     artifact_name: String,
     base: Checkpoint,
+    /// FullReload only: the base dequantized once at startup through the
+    /// fused kernel layer. A task switch then re-dequantizes only the
+    /// projections the adapter actually touches instead of the whole model
+    /// (memory-for-latency trade on the deliberately-slow baseline path).
+    fp_base: Option<Checkpoint>,
     adapters: AdapterStore,
     mode: SwitchMode,
     current_task: Option<String>,
@@ -177,17 +182,19 @@ impl Coordinator {
         mode: SwitchMode,
         batcher: BatcherConfig,
     ) -> Result<Coordinator> {
-        let serving_ck = match mode {
-            SwitchMode::ScaleSwap => base.clone(),
-            SwitchMode::FullReload => base.dequantize()?,
+        let fp_base = match mode {
+            SwitchMode::ScaleSwap => None,
+            SwitchMode::FullReload => Some(base.dequantize()?),
         };
-        let model = EvalModel::new(&rt, artifact_name, &serving_ck)?;
+        let serving_ck = fp_base.as_ref().unwrap_or(&base);
+        let model = EvalModel::new(&rt, artifact_name, serving_ck)?;
         let max_b = model.batch_size();
         Ok(Coordinator {
             rt,
             model,
             artifact_name: artifact_name.to_string(),
             base,
+            fp_base,
             adapters,
             mode,
             current_task: None,
@@ -231,10 +238,68 @@ impl Coordinator {
                 }
             }
             SwitchMode::FullReload => {
-                let mut ck = self.base.clone();
-                ck.apply_adapter(&adapter)?;
-                let fp = ck.dequantize()?;
-                self.model = EvalModel::new(&self.rt, &self.artifact_name, &fp)?;
+                // An adapter that replaces integer codes or BCQ tensors
+                // changes derived weights the incremental path below does
+                // not recompute — take the full apply + dequantize route.
+                let replaces_codes = adapter.names().iter().any(|n| {
+                    n.ends_with(".wq")
+                        || n.ends_with(".alpha1")
+                        || n.ends_with(".alpha_rest")
+                        || n.ends_with(".code")
+                });
+                if replaces_codes {
+                    let mut ck = self.base.clone();
+                    ck.apply_adapter(&adapter)?;
+                    let fp = ck.dequantize()?;
+                    self.model = EvalModel::new(&self.rt, &self.artifact_name, &fp)?;
+                } else {
+                    // Scale/zero-only adapter (the common case): rebuild
+                    // from the cached fused-dequantized base,
+                    // re-dequantizing only the projections this adapter
+                    // touches (kernels layer) instead of the seed's
+                    // clone → apply → dequantize-everything per switch.
+                    let fp_base = self
+                        .fp_base
+                        .as_ref()
+                        .ok_or_else(|| anyhow!("FullReload without fp_base"))?;
+                    let mut ck = fp_base.clone();
+                    let mut prefixes: Vec<String> = Vec::new();
+                    for (name, t) in adapter.iter() {
+                        let Some(base_t) = self.base.get(name) else {
+                            bail!("adapter tensor '{name}' not present in base model");
+                        };
+                        // Same shape contract apply_adapter enforced:
+                        // a mis-grouped s/z must fail loudly, not serve
+                        // weights dequantized with the wrong grouping.
+                        if base_t.shape() != t.shape() {
+                            bail!("adapter tensor '{name}' shape mismatch");
+                        }
+                        let quant_prefix = name
+                            .strip_suffix(".s")
+                            .or_else(|| name.strip_suffix(".z"))
+                            .filter(|p| self.base.get(&format!("{p}.wq")).is_some());
+                        if let Some(p) = quant_prefix {
+                            if !prefixes.iter().any(|q| q == p) {
+                                prefixes.push(p.to_string());
+                            }
+                        } else if ck.get(name).is_some() {
+                            ck.insert(name.clone(), t.clone());
+                        }
+                        // else: quant bookkeeping tensor with no fp-layout
+                        // counterpart — nothing to overlay.
+                    }
+                    for p in &prefixes {
+                        let wq = self.base.req(&format!("{p}.wq"))?;
+                        let s_name = format!("{p}.s");
+                        let z_name = format!("{p}.z");
+                        let s =
+                            adapter.get(&s_name).map(Ok).unwrap_or_else(|| self.base.req(&s_name))?;
+                        let z =
+                            adapter.get(&z_name).map(Ok).unwrap_or_else(|| self.base.req(&z_name))?;
+                        ck.insert(format!("{p}.w"), crate::model::dequantize_tensor(wq, s, z)?);
+                    }
+                    self.model = EvalModel::new(&self.rt, &self.artifact_name, &ck)?;
+                }
             }
         }
         let dt = t0.elapsed().as_secs_f64();

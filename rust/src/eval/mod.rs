@@ -6,23 +6,37 @@
 //! (model::Checkpoint::dequantize), which pytest proved bit-compatible
 //! with the quantized forward.
 
+//! The artifact-driven scorers ([`EvalModel`], [`perplexity`],
+//! [`mc_accuracy`], [`generate`]) need the PJRT runtime and are gated on
+//! the `xla` feature; the pure scoring math (log-softmax, continuation
+//! log-prob, ROUGE-L) is always available. Host-side dequantization on
+//! the way into the fp-layout artifacts goes through the fused
+//! quant::kernels layer via `model::Checkpoint::dequantize`.
+
+#[cfg(feature = "xla")]
 use anyhow::{bail, Result};
 
+#[cfg(feature = "xla")]
 use crate::data::batch::{eval_batches, Batch};
+#[cfg(feature = "xla")]
 use crate::data::tasks::{few_shot_prefix, McTask};
+#[cfg(feature = "xla")]
 use crate::model::Checkpoint;
-use crate::runtime::{
-    literal_to_f32, Artifact, Runtime,
-};
+#[cfg(feature = "xla")]
+use crate::runtime::{literal_to_f32, Artifact, Runtime};
+#[cfg(feature = "xla")]
 use crate::tokenizer::{Tokenizer, BOS, PAD};
+#[cfg(feature = "xla")]
 use crate::util::Pcg32;
 
 /// Device-resident parameters for repeated evaluation calls.
+#[cfg(feature = "xla")]
 pub struct EvalModel {
     art: std::rc::Rc<Artifact>,
     params: Vec<xla::PjRtBuffer>,
 }
 
+#[cfg(feature = "xla")]
 impl EvalModel {
     /// `artifact_name` must be an eval / logits / logits_q artifact;
     /// `ck` must be in the artifact's param layout.
@@ -96,6 +110,7 @@ impl EvalModel {
 }
 
 /// Perplexity of `ck` (fp layout) over a token stream.
+#[cfg(feature = "xla")]
 pub fn perplexity(rt: &Runtime, eval_art: &str, ck: &Checkpoint, stream: &[u32]) -> Result<f64> {
     let model = EvalModel::new(rt, eval_art, ck)?;
     let (b, t) = (model.batch_size(), model.seq_len());
@@ -112,6 +127,7 @@ pub fn perplexity(rt: &Runtime, eval_art: &str, ck: &Checkpoint, stream: &[u32])
     Ok((sum / count).exp())
 }
 
+#[cfg_attr(not(feature = "xla"), allow(dead_code))]
 fn log_softmax_row(row: &[f32]) -> Vec<f32> {
     let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
     let lse = row.iter().map(|&x| (x - max).exp()).sum::<f32>().ln() + max;
@@ -120,6 +136,7 @@ fn log_softmax_row(row: &[f32]) -> Vec<f32> {
 
 /// Sum log-prob of `target` tokens at positions [start, start+len) given
 /// flat (T, V) logits for one sequence. Position p predicts token p+1.
+#[cfg_attr(not(feature = "xla"), allow(dead_code))]
 fn continuation_logprob(
     logits: &[f32],
     vocab: usize,
@@ -137,6 +154,7 @@ fn continuation_logprob(
 }
 
 /// Multiple-choice accuracy by option likelihood, k-shot.
+#[cfg(feature = "xla")]
 pub fn mc_accuracy(
     rt: &Runtime,
     logits_art: &str,
@@ -228,6 +246,7 @@ pub fn mc_accuracy(
 
 /// Greedy generation through a logits artifact (window decode: re-feeds
 /// the last T tokens each step — fine at reproduction scale).
+#[cfg(feature = "xla")]
 pub fn generate(
     model: &EvalModel,
     rt: &Runtime,

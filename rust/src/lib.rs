@@ -13,10 +13,35 @@
 //!   toolchain (RTN / OPTQ / sub-4-bit packing), multi-task serving
 //!   coordinator, eval harness, memory model and bench framework. Python
 //!   never runs at request time.
+//!
+//! ## Host kernel layer (`quant::kernels`)
+//!
+//! The crate's own hot path is the fused quantized GEMM
+//! `y = X · (s·(codes − z))ᵀ`, computed **directly from bit-packed
+//! sub-4-bit codes** — word-at-a-time unpacking into per-thread group
+//! tiles, scale/zero application fused into the inner product via the
+//! group-sum identity, cache-blocked, and row-parallel over
+//! `std::thread::scope`. `quant::PackedMatrix` is the packed in-memory
+//! weight format (row-aligned bit-packed codes + f32 scale/zero tensors);
+//! `model::PackedModel` is the `.packed`-file load path that keeps codes
+//! packed end to end. Dense fallbacks (`tensor::Tensor::matmul`, the OPTQ
+//! linear algebra in `quant::linalg`) are blocked and parallelized with
+//! the same deterministic row-sharding, so every result is bit-identical
+//! at any thread count (`PEQA_THREADS` pins the worker count).
+//!
+//! ## Feature `xla`
+//!
+//! The PJRT execution half (`runtime::pjrt`, `train`, `coordinator`, and
+//! the artifact-driven parts of `eval`/`pipeline`) is gated behind the
+//! `xla` feature because it needs the vendored `xla` crate, which is not
+//! in the public registry (see rust/Cargo.toml). The default build is the
+//! full host-side stack: tensors, quantization, packed formats, fused
+//! kernels, data/tokenizer, memory model, and the bench framework.
 
 pub mod bench;
 pub mod cli;
 pub mod config;
+#[cfg(feature = "xla")]
 pub mod coordinator;
 pub mod data;
 pub mod eval;
@@ -28,5 +53,6 @@ pub mod quant;
 pub mod runtime;
 pub mod tensor;
 pub mod tokenizer;
+#[cfg(feature = "xla")]
 pub mod train;
 pub mod util;

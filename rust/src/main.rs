@@ -1,22 +1,33 @@
 //! `peqa` CLI — the leader entrypoint of the L3 coordinator.
 //!
 //! Commands:
-//!   list-artifacts                      show AOT artifacts + signatures
-//!   pretrain   --size n3 [--steps N]    pretrain + cache the fp base model
-//!   finetune   --size n3 --method peqa_b4_gc --dataset wikitext [--steps N]
-//!   eval       --size n3 --ckpt path --dataset wikitext
-//!   quantize   --size n3 --ckpt path --bits 4 [--group g] [--optq]
+//!   list-artifacts                      show AOT artifacts + signatures   [xla]
+//!   pretrain   --size n3 [--steps N]    pretrain + cache the fp base model [xla]
+//!   finetune   --size n3 --method peqa_b4_gc --dataset wikitext [--steps N] [xla]
+//!   eval       --size n3 --ckpt path --dataset wikitext                  [xla]
+//!   quantize   --ckpt path --bits 4 [--group g] [--optq --size n3]
 //!   pack       --ckpt path --bits 4 --out model.packed
-//!   serve-demo --size n3 [--requests N] multi-task adapter-swap serving demo
+//!   serve-demo --size n3 [--requests N] multi-task adapter-swap serving demo [xla]
 //!   memreport                           Table-1 style DRAM model (paper dims)
+//!
+//! Commands marked [xla] drive AOT artifacts through the PJRT runtime and
+//! need the `xla` feature (see rust/Cargo.toml); the rest — including RTN
+//! quantization and packing, which run on the host quant/kernels stack —
+//! work in the default build.
 
 use anyhow::{bail, Result};
 use peqa::cli::Args;
-use peqa::coordinator::{AdapterStore, BatcherConfig, Coordinator, SwitchMode};
-use peqa::info;
 use peqa::memmodel;
 use peqa::model::Checkpoint;
-use peqa::pipeline::{self, Ctx};
+use peqa::pipeline;
+
+#[cfg(feature = "xla")]
+use peqa::coordinator::{AdapterStore, BatcherConfig, Coordinator, SwitchMode};
+#[cfg(feature = "xla")]
+use peqa::info;
+#[cfg(feature = "xla")]
+use peqa::pipeline::Ctx;
+#[cfg(feature = "xla")]
 use peqa::tokenizer::EOS;
 
 fn main() {
@@ -33,19 +44,21 @@ fn main() {
 const USAGE: &str = "\
 peqa — PEQA (NeurIPS 2023) reproduction CLI
 
-  peqa list-artifacts
-  peqa pretrain   --size n1..n6|o1..o6 [--steps 600]
+  peqa list-artifacts                                            [xla]
+  peqa pretrain   --size n1..n6|o1..o6 [--steps 600]             [xla]
   peqa finetune   --size n3 --method peqa_b4_gc --dataset wikitext|ptb
-                  [--steps 150] [--lr 2e-3] [--out path.peqa]
-  peqa eval       --size n3 --ckpt path.peqa --dataset wikitext|ptb
-  peqa quantize   --size n3 --ckpt path.peqa --bits 4 [--group 32] [--optq]
-                  [--out path.peqa]
+                  [--steps 150] [--lr 2e-3] [--out path.peqa]    [xla]
+  peqa eval       --size n3 --ckpt path.peqa --dataset wikitext|ptb [xla]
+  peqa quantize   --ckpt path.peqa --bits 4 [--group 32]
+                  [--optq --size n3] [--out path.peqa]
   peqa pack       --ckpt path.peqa --bits 4 --out model.packed
-  peqa serve-demo --size n3 [--requests 16] [--full-reload]
+  peqa serve-demo --size n3 [--requests 16] [--full-reload]      [xla]
   peqa memreport
 
 Methods: full | lora_qv4 | lora_qkvo16 | qat_b{3,4} | peqa_b{3,4}_{gc,g16,g32,g64}
          | peqa_zp_b4_gc | peqa_szp_b4_gc | alpha_b{3,4}
+
+[xla] commands need a build with `--features xla` (vendored PJRT bindings).
 ";
 
 fn run() -> Result<()> {
@@ -55,6 +68,7 @@ fn run() -> Result<()> {
         return Ok(());
     };
     match cmd.as_str() {
+        #[cfg(feature = "xla")]
         "list-artifacts" => {
             let ctx = Ctx::new()?;
             for name in ctx.rt.list()? {
@@ -69,6 +83,7 @@ fn run() -> Result<()> {
             }
             args.finish()
         }
+        #[cfg(feature = "xla")]
         "pretrain" => {
             let size = args.require("size")?;
             let steps = args.get_usize("steps", 600)?;
@@ -80,6 +95,7 @@ fn run() -> Result<()> {
             println!("{size} base ready: held-out pretrain ppl {ppl:.3}");
             Ok(())
         }
+        #[cfg(feature = "xla")]
         "finetune" => {
             let size = args.require("size")?;
             let method = args.require("method")?;
@@ -120,6 +136,7 @@ fn run() -> Result<()> {
             info!("saved {out}");
             Ok(())
         }
+        #[cfg(feature = "xla")]
         "eval" => {
             let size = args.require("size")?;
             let ckpt = args.require("ckpt")?;
@@ -133,20 +150,19 @@ fn run() -> Result<()> {
             Ok(())
         }
         "quantize" => {
-            let size = args.require("size")?;
             let ckpt = args.require("ckpt")?;
             let bits = args.get_usize("bits", 4)? as u8;
             let group = args.opt("group").map(|g| g.parse::<usize>()).transpose()?;
             let use_optq = args.flag("optq");
+            let size = args.opt("size");
             let out = args.opt("out");
             args.finish()?;
-            let ctx = Ctx::new()?;
             let fp = Checkpoint::load(std::path::Path::new(&ckpt))?;
             let q = if use_optq {
-                let calib = ctx.stream("pretrain", 40_000)?;
-                let h = pipeline::hessians(&ctx, &size, &fp, &calib, 8)?;
-                pipeline::optq_quantize(&fp, &h, bits, group)?
+                let size = size.ok_or_else(|| anyhow::anyhow!("--optq needs --size"))?;
+                optq_cmd(&size, &fp, bits, group)?
             } else {
+                // RTN runs entirely on the host quant stack.
                 pipeline::rtn_quantize(&fp, bits, group)?
             };
             let out = out.unwrap_or_else(|| format!("{ckpt}.q{bits}"));
@@ -167,6 +183,7 @@ fn run() -> Result<()> {
             println!("packed model: {out} ({})", peqa::util::human_bytes(bytes));
             Ok(())
         }
+        #[cfg(feature = "xla")]
         "serve-demo" => {
             let size = args.get("size", "n3");
             let n_req = args.get_usize("requests", 16)?;
@@ -179,6 +196,11 @@ fn run() -> Result<()> {
             memreport();
             Ok(())
         }
+        #[cfg(not(feature = "xla"))]
+        c @ ("list-artifacts" | "pretrain" | "finetune" | "eval" | "serve-demo") => {
+            bail!("'{c}' drives AOT artifacts and needs a build with `--features xla` \
+                   (see rust/Cargo.toml)")
+        }
         other => {
             print!("{USAGE}");
             bail!("unknown command '{other}'")
@@ -186,8 +208,34 @@ fn run() -> Result<()> {
     }
 }
 
+/// OPTQ quantization needs calibration Hessians from the `<size>_hess`
+/// artifact, hence the PJRT runtime.
+#[cfg(feature = "xla")]
+fn optq_cmd(
+    size: &str,
+    fp: &Checkpoint,
+    bits: u8,
+    group: Option<usize>,
+) -> Result<Checkpoint> {
+    let ctx = Ctx::new()?;
+    let calib = ctx.stream("pretrain", 40_000)?;
+    let h = pipeline::hessians(&ctx, size, fp, &calib, 8)?;
+    pipeline::optq_quantize(fp, &h, bits, group)
+}
+
+#[cfg(not(feature = "xla"))]
+fn optq_cmd(
+    _size: &str,
+    _fp: &Checkpoint,
+    _bits: u8,
+    _group: Option<usize>,
+) -> Result<Checkpoint> {
+    bail!("--optq needs calibration artifacts — rebuild with `--features xla`")
+}
+
 /// Fine-tune two tiny task adapters, register them, serve a mixed request
 /// stream, report throughput / latency / swap cost.
+#[cfg(feature = "xla")]
 fn serve_demo(size: &str, n_req: usize, full_reload: bool) -> Result<()> {
     let ctx = Ctx::new()?;
     let base = pipeline::ensure_base(&ctx, size, pipeline::pretrain_steps())?;

@@ -17,7 +17,7 @@ use std::path::Path;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::json::Value;
-use crate::quant::{pack_codes, packed_size, unpack_codes};
+use crate::quant::{pack_codes, packed_size, PackedMatrix};
 use crate::runtime::ParamMeta;
 use crate::tensor::Tensor;
 use crate::util::Pcg32;
@@ -351,8 +351,34 @@ impl Checkpoint {
         Ok(written)
     }
 
-    /// Load a `.packed` deployment file back into a PEQA-layout checkpoint.
+    /// Load a `.packed` deployment file back into a PEQA-layout checkpoint
+    /// (codes expanded to one f32 per code). Serving paths that want the
+    /// codes to *stay* packed should load a [`PackedModel`] instead.
     pub fn load_packed(path: &Path) -> Result<Checkpoint> {
+        Ok(PackedModel::load(path)?.to_checkpoint())
+    }
+}
+
+/// In-memory deployment model: the parsed `.packed` file with quantized
+/// projections kept as bit-packed [`PackedMatrix`] entries (fused
+/// dequant-GEMM ready; see quant::kernels) and fp tensors dense. This is
+/// the serving-side load path — the integer codes are never expanded to
+/// one-f32-per-code unless a checkpoint view is explicitly requested.
+pub struct PackedModel {
+    pub bits: u8,
+    /// Tensor names in original file order (wq/s/z names included).
+    names: Vec<String>,
+    /// Quantized projections by dotted prefix (name minus ".wq").
+    matrices: HashMap<String, PackedMatrix>,
+    /// Every tensor that is not part of a (wq, s, z) triple.
+    fp: Checkpoint,
+}
+
+impl PackedModel {
+    /// Parse a `.packed` file (see [`Checkpoint::save_packed`] for the
+    /// format): JSON header, then per-tensor payloads — bit-packed code
+    /// streams for `.wq` entries, raw little-endian f32 otherwise.
+    pub fn load(path: &Path) -> Result<PackedModel> {
         let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
         let mut magic = [0u8; 7];
         f.read_exact(&mut magic)?;
@@ -365,29 +391,123 @@ impl Checkpoint {
         f.read_exact(&mut hbuf)?;
         let header = Value::parse(std::str::from_utf8(&hbuf)?)?;
         let bits = header.usize_of("bits")? as u8;
-        let mut ck = Checkpoint::new();
+        let mut names = Vec::new();
+        let mut streams: Vec<(String, Vec<usize>, Vec<u8>)> = Vec::new();
+        let mut dense: HashMap<String, Tensor> = HashMap::new();
         for item in header.arr_of("tensors")? {
-            let name = item.str_of("name")?;
+            let name = item.str_of("name")?.to_string();
             let shape: Vec<usize> = item
                 .arr_of("shape")?
                 .iter()
                 .map(|x| x.as_usize().context("shape"))
                 .collect::<Result<_>>()?;
             let numel: usize = shape.iter().product();
-            let data = if item.str_of("kind")? == "packed" {
+            if item.str_of("kind")? == "packed" {
                 let mut buf = vec![0u8; packed_size(numel, bits)];
                 f.read_exact(&mut buf)?;
-                unpack_codes(&buf, bits, numel)?.into_iter().map(|c| c as f32).collect()
+                streams.push((name.clone(), shape, buf));
             } else {
                 let mut buf = vec![0u8; numel * 4];
                 f.read_exact(&mut buf)?;
-                buf.chunks_exact(4)
+                let data: Vec<f32> = buf
+                    .chunks_exact(4)
                     .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                    .collect()
-            };
-            ck.insert(name.to_string(), Tensor::new(&shape, data));
+                    .collect();
+                dense.insert(name.clone(), Tensor::new(&shape, data));
+            }
+            names.push(name);
         }
-        Ok(ck)
+        // Assemble (wq, s, z) triples into packed matrices; whatever is
+        // left over is a plain fp tensor.
+        let mut matrices = HashMap::new();
+        for (name, shape, stream) in streams {
+            let prefix = name
+                .strip_suffix(".wq")
+                .ok_or_else(|| anyhow!("packed tensor '{name}' is not a .wq projection"))?;
+            let &[rows, cols] = shape.as_slice() else {
+                bail!("packed tensor '{name}' is not 2-D: {shape:?}");
+            };
+            let s = dense
+                .remove(&format!("{prefix}.s"))
+                .ok_or_else(|| anyhow!("packed model missing '{prefix}.s'"))?;
+            let z = dense
+                .remove(&format!("{prefix}.z"))
+                .ok_or_else(|| anyhow!("packed model missing '{prefix}.z'"))?;
+            let m = PackedMatrix::from_contiguous(&stream, rows, cols, bits, s, z)?;
+            matrices.insert(prefix.to_string(), m);
+        }
+        let mut fp = Checkpoint::new();
+        for name in &names {
+            if let Some(t) = dense.remove(name) {
+                fp.insert(name.clone(), t);
+            }
+        }
+        Ok(PackedModel { bits, names, matrices, fp })
+    }
+
+    /// Dotted prefixes of the packed projections, in file order.
+    pub fn prefixes(&self) -> Vec<String> {
+        self.names
+            .iter()
+            .filter_map(|n| n.strip_suffix(".wq").map(String::from))
+            .collect()
+    }
+
+    pub fn matrix(&self, prefix: &str) -> Option<&PackedMatrix> {
+        self.matrices.get(prefix)
+    }
+
+    /// Fused y = X·Ŵᵀ straight from the packed codes of one projection.
+    pub fn fused_matmul(&self, prefix: &str, x: &Tensor) -> Result<Tensor> {
+        self.matrices
+            .get(prefix)
+            .ok_or_else(|| anyhow!("no packed projection '{prefix}'"))?
+            .matmul_t(x)
+    }
+
+    /// Bytes of packed code storage across all projections.
+    pub fn packed_bytes(&self) -> usize {
+        self.matrices.values().map(|m| m.packed_bytes()).sum()
+    }
+
+    /// Expand to a PEQA-layout [`Checkpoint`] (codes as one f32 each) in
+    /// the original tensor order — the tooling/compat view.
+    pub fn to_checkpoint(&self) -> Checkpoint {
+        let mut ck = Checkpoint::new();
+        for name in &self.names {
+            if let Some(prefix) = name.strip_suffix(".wq") {
+                let m = &self.matrices[prefix];
+                let q = m.to_quantized().expect("packed rows validated at load");
+                ck.insert(
+                    name.clone(),
+                    Tensor::new(&[m.rows, m.cols], q.codes.iter().map(|&c| c as f32).collect()),
+                );
+            } else if let Some(m) = name.strip_suffix(".s").and_then(|p| self.matrices.get(p)) {
+                ck.insert(name.clone(), m.scales.clone());
+            } else if let Some(m) = name.strip_suffix(".z").and_then(|p| self.matrices.get(p)) {
+                ck.insert(name.clone(), m.zeros.clone());
+            } else if let Some(t) = self.fp.get(name) {
+                ck.insert(name.clone(), t.clone());
+            }
+        }
+        ck
+    }
+
+    /// Fp-layout checkpoint: every packed projection dequantized with the
+    /// fused kernel directly from the packed codes (`{p}.w` = s·(codes−z)),
+    /// everything else handled exactly like [`Checkpoint::dequantize`]
+    /// (BCQ triples expanded, adapter bookkeeping dropped) — without ever
+    /// materializing the integer codes as f32.
+    pub fn dequantize(&self) -> Result<Checkpoint> {
+        // self.fp holds no (wq, s, z) triples — those live in `matrices` —
+        // so its dequantize() is passthrough + BCQ expansion.
+        let mut out = self.fp.dequantize()?;
+        for name in &self.names {
+            if let Some(prefix) = name.strip_suffix(".wq") {
+                out.insert(format!("{prefix}.w"), self.matrices[prefix].dequantize());
+            }
+        }
+        Ok(out)
     }
 }
 
@@ -432,25 +552,19 @@ pub fn bcq_dequant(alpha1: &Tensor, alpha_rest: &Tensor, code: &Tensor) -> Resul
     Ok(Tensor::new(&[n, m], out))
 }
 
-/// Ŵ = s · (wq − z) with (n, G) params broadcast over groups.
+/// Ŵ = s · (wq − z) with (n, G) params broadcast over groups, via the
+/// fused row-parallel kernel (quant::kernels).
 pub fn dequantize_tensor(wq: &Tensor, s: &Tensor, z: &Tensor) -> Result<Tensor> {
     let (n, m) = wq.dims2()?;
     let (n2, ng) = s.dims2()?;
-    if n2 != n || m % ng != 0 {
+    if n2 != n || ng == 0 || m % ng != 0 {
         bail!("dequantize shape mismatch: wq {:?}, s {:?}", wq.shape(), s.shape());
     }
-    let g = m / ng;
-    let mut out = vec![0.0f32; n * m];
-    for i in 0..n {
-        for k in 0..ng {
-            let sv = s.at2(i, k);
-            let zv = z.at2(i, k);
-            for j in 0..g {
-                let idx = i * m + k * g + j;
-                out[idx] = sv * (wq.data()[idx] - zv);
-            }
-        }
+    if z.shape() != s.shape() {
+        bail!("dequantize shape mismatch: s {:?}, z {:?}", s.shape(), z.shape());
     }
+    let g = m / ng;
+    let out = crate::quant::kernels::dequantize_f32_codes(wq.data(), s.data(), z.data(), n, m, g);
     Ok(Tensor::new(&[n, m], out))
 }
 
@@ -545,6 +659,49 @@ mod tests {
         let back = Checkpoint::load_packed(&path).unwrap();
         assert_eq!(back.req("l.wq").unwrap(), ck.req("l.wq").unwrap());
         assert_eq!(back.req("l.s").unwrap(), ck.req("l.s").unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn packed_model_keeps_codes_packed_and_matches_checkpoint_view() {
+        let dir = std::env::temp_dir().join("peqa_test_packed_model");
+        let path = dir.join("m.packed");
+        let mut ck = Checkpoint::new();
+        let mut rng = Pcg32::new(13);
+        // cols=20 at 3 bits → rows are not byte-aligned in the contiguous
+        // file stream, exercising the re-pack branch of the loader.
+        let w = Tensor::normal(&[16, 20], 0.4, &mut rng);
+        let q = crate::quant::quantize_rtn(&w, 3, None).unwrap();
+        ck.insert("l.wq", Tensor::new(&[16, 20], q.codes.iter().map(|&c| c as f32).collect()));
+        ck.insert("l.s", q.scales.clone());
+        ck.insert("l.z", q.zeros.clone());
+        ck.insert("head", Tensor::normal(&[4, 4], 1.0, &mut rng));
+        ck.save_packed(&path, 3).unwrap();
+
+        let pm = PackedModel::load(&path).unwrap();
+        assert_eq!(pm.prefixes(), vec!["l".to_string()]);
+        // Packed storage is rows × ⌈20·3/8⌉ bytes — never 4 bytes/code.
+        assert_eq!(pm.packed_bytes(), 16 * 8);
+
+        // Checkpoint view equals the compat loader.
+        let via_ck = Checkpoint::load_packed(&path).unwrap();
+        let via_pm = pm.to_checkpoint();
+        assert_eq!(via_ck.names(), via_pm.names());
+        for (name, t) in via_ck.iter() {
+            assert_eq!(t, via_pm.req(name).unwrap(), "{name}");
+        }
+
+        // Fused dequantize from packed codes == dequantize of the view.
+        let fp = pm.dequantize().unwrap();
+        let fp_ref = via_ck.dequantize().unwrap();
+        assert_eq!(fp.req("l.w").unwrap(), fp_ref.req("l.w").unwrap());
+        assert_eq!(fp.req("head").unwrap(), ck.req("head").unwrap());
+
+        // Fused GEMM straight off the packed codes matches dense matmul.
+        let x = Tensor::normal(&[4, 20], 1.0, &mut rng);
+        let y = pm.fused_matmul("l", &x).unwrap();
+        let y_ref = x.matmul(&fp_ref.req("l.w").unwrap().t()).unwrap();
+        assert!(y.max_abs_diff(&y_ref) <= 1e-4);
         std::fs::remove_dir_all(&dir).ok();
     }
 

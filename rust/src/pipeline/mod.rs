@@ -11,20 +11,38 @@
 //! `lora_qv4`, `lora_qkvo16`, `qat_b{3,4}`, `peqa_b{bits}_{gc|gN}`,
 //! `peqa_zp_b4_gc`, `peqa_szp_b4_gc`, `alpha_b{3,4}`.
 
+//! The PTQ quantizers (`rtn_quantize`, `optq_quantize`) and recipe
+//! helpers are pure host code and always available — they feed the fused
+//! quant::kernels layer. Everything that drives AOT artifacts (pretrain,
+//! fine-tune, Hessian accumulation, perplexity) needs the PJRT runtime
+//! and is gated on the `xla` feature.
+
+#[cfg(feature = "xla")]
 use std::path::Path;
+#[cfg(feature = "xla")]
 use std::rc::Rc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
+#[cfg(feature = "xla")]
+use anyhow::Context;
 
-use crate::config::{Paths, TrainConfig};
+use crate::config::TrainConfig;
+#[cfg(feature = "xla")]
+use crate::config::Paths;
+#[cfg(feature = "xla")]
 use crate::data::batch::LmBatcher;
+#[cfg(feature = "xla")]
 use crate::data::{corpus, Batch, World};
+#[cfg(feature = "xla")]
 use crate::eval;
 use crate::model::Checkpoint;
 use crate::quant;
+#[cfg(feature = "xla")]
 use crate::runtime::{literal_to_tensor, tensor_to_literal, Runtime};  // tensor_to_literal: prep artifacts only (literals stay alive across run)
 use crate::tensor::Tensor;
+#[cfg(feature = "xla")]
 use crate::tokenizer::Tokenizer;
+#[cfg(feature = "xla")]
 use crate::train::Trainer;
 
 pub const WORLD_SEED: u64 = 2023;
@@ -32,6 +50,7 @@ pub const WORLD_ENTITIES: usize = 48;
 pub const PRETRAIN_BYTES: usize = 400_000;
 pub const ADAPT_BYTES: usize = 120_000;
 
+#[cfg(feature = "xla")]
 /// Shared experiment context: runtime + tokenizer + world + paths.
 pub struct Ctx {
     pub rt: Rc<Runtime>,
@@ -40,6 +59,7 @@ pub struct Ctx {
     pub paths: Paths,
 }
 
+#[cfg(feature = "xla")]
 impl Ctx {
     pub fn new() -> Result<Ctx> {
         let paths = Paths::default();
@@ -73,6 +93,7 @@ impl Ctx {
     }
 }
 
+#[cfg(feature = "xla")]
 /// Pretrain (or load the cached) fp base model for `size`.
 pub fn ensure_base(ctx: &Ctx, size: &str, steps: usize) -> Result<Checkpoint> {
     let path = ctx.paths.checkpoints.join(format!("{size}_base.peqa"));
@@ -101,10 +122,12 @@ pub fn ensure_base(ctx: &Ctx, size: &str, steps: usize) -> Result<Checkpoint> {
     Ok(ck)
 }
 
+#[cfg(feature = "xla")]
 fn batch_dims(meta: &crate::runtime::ArtifactMeta) -> (usize, usize) {
     (meta.inputs[0].shape[0], meta.inputs[0].shape[1])
 }
 
+#[cfg(feature = "xla")]
 /// Run a `prep` artifact: fp checkpoint → method-layout checkpoint.
 pub fn prep(ctx: &Ctx, size: &str, prep_tag: &str, fp: &Checkpoint) -> Result<Checkpoint> {
     let art = ctx.rt.load(&format!("{size}_prep_{prep_tag}"))?;
@@ -124,6 +147,7 @@ pub fn prep(ctx: &Ctx, size: &str, prep_tag: &str, fp: &Checkpoint) -> Result<Ch
 
 /// Method tag → (train artifact name, prep tag if the base must be
 /// transformed first).
+#[cfg(feature = "xla")]
 fn plan(size: &str, tag: &str) -> (String, Option<String>) {
     let train = format!("{size}_train_{tag}");
     let prep = if tag.starts_with("peqa") {
@@ -142,6 +166,7 @@ fn plan(size: &str, tag: &str) -> (String, Option<String>) {
     (train, prep)
 }
 
+#[cfg(feature = "xla")]
 /// Fine-tune `base` (fp layout) with the given method on token stream
 /// batches. Returns the method-layout tuned checkpoint.
 pub fn finetune(
@@ -166,6 +191,7 @@ pub fn finetune(
     Ok((trainer.finish()?, losses))
 }
 
+#[cfg(feature = "xla")]
 /// Fine-tune on pre-built batches (instruction tuning).
 pub fn finetune_batches(
     ctx: &Ctx,
@@ -190,6 +216,7 @@ pub fn finetune_batches(
     trainer.finish()
 }
 
+#[cfg(feature = "xla")]
 /// Perplexity of any method-layout checkpoint on a token stream.
 pub fn ppl(ctx: &Ctx, size: &str, ck: &Checkpoint, stream: &[u32]) -> Result<f64> {
     let fp = if ck.quantized_prefixes().is_empty()
@@ -209,6 +236,7 @@ pub fn ppl(ctx: &Ctx, size: &str, ck: &Checkpoint, stream: &[u32]) -> Result<f64
     eval::perplexity(&ctx.rt, &format!("{size}_eval"), &fp, stream)
 }
 
+#[cfg(feature = "xla")]
 /// Accumulate OPTQ Hessians for `fp` over calibration batches.
 pub fn hessians(
     ctx: &Ctx,
@@ -312,6 +340,7 @@ fn quantize_with(
     Ok(out)
 }
 
+#[cfg(feature = "xla")]
 /// LoRA rank/alpha from the train artifact that produced a checkpoint.
 pub fn lora_hparams(ctx: &Ctx, size: &str, tag: &str) -> Result<(f64, usize)> {
     let meta = ctx.rt.meta(&format!("{size}_train_{tag}"))?;
@@ -322,6 +351,7 @@ pub fn lora_hparams(ctx: &Ctx, size: &str, tag: &str) -> Result<(f64, usize)> {
 /// Instruction-tune (alpaca-sim) with caching — Section 4.3 pipeline.
 /// `tag` may also be "rtn_b4": RTN-quantize the base with NO tuning
 /// (the Table 7 degradation baseline).
+#[cfg(feature = "xla")]
 pub fn instruct_tuned(
     ctx: &Ctx,
     size: &str,
@@ -362,6 +392,7 @@ pub fn pretrain_steps() -> usize {
         .unwrap_or(500)
 }
 
+#[cfg(feature = "xla")]
 /// Cached fine-tune: benches share tuned checkpoints across tables.
 /// Cache key = (size, method, dataset, steps) under checkpoints/ft/.
 pub fn finetune_cached(
@@ -390,6 +421,7 @@ pub fn finetune_cached(
 /// Full "LoRA + OPTQ" baseline (Tables 2/3, Fig. 3): LoRA fine-tune in fp,
 /// merge adapters, OPTQ-quantize the merged weights on calibration data.
 /// Returns the quantized (peqa-layout) checkpoint.
+#[cfg(feature = "xla")]
 pub fn lora_optq(
     ctx: &Ctx,
     size: &str,
@@ -409,6 +441,7 @@ pub fn lora_optq(
     optq_quantize(&merged, &h, bits, group)
 }
 
+#[cfg(feature = "xla")]
 /// PPL of a fine-tuned LoRA checkpoint (merges adapters first).
 pub fn lora_ppl(
     ctx: &Ctx,
@@ -440,6 +473,7 @@ pub fn default_cfg(tag: &str, steps: usize, seed: u64) -> TrainConfig {
     }
 }
 
+#[cfg(feature = "xla")]
 /// Cached fine-tune directory helper used by benches.
 pub fn results_dir(ctx: &Ctx) -> &Path {
     &ctx.paths.results

@@ -1,0 +1,520 @@
+//! Fused, blocked, multithreaded quantized kernels — the host-side
+//! deployment hot path (paper §"accelerated inference", Tables 1/4,
+//! Fig. 2a).
+//!
+//! The paper's serving story keeps weights as packed sub-4-bit integer
+//! codes; only the per-task scales/zero-points ever change. The seed
+//! repo honored that for *storage* but not for *compute*: every forward
+//! materialized a dense f32 Ŵ with scalar loops and then ran a naive
+//! single-threaded matmul. This module computes
+//!
+//! ```text
+//! y = X · Ŵᵀ,   Ŵ = s · (codes − z)
+//! ```
+//!
+//! directly from the packed codes:
+//!
+//! * **word-at-a-time unpacking** — 2/3/4-bit groups are expanded with
+//!   u64 loads (`pack::unpack_into_f32`) into a small per-thread group
+//!   tile that stays in L1 and is reused across the whole batch;
+//! * **fused scale/zero application** — per (row, group) the zero-point
+//!   is folded through the algebraic identity
+//!   `Σⱼ xⱼ·s·(cⱼ−z) = s·(Σⱼ xⱼ·cⱼ − z·Σⱼ xⱼ)`, so the inner loop is a
+//!   pure code dot product and the precomputed group sums `Σⱼ xⱼ` pay
+//!   the zero-point once per group instead of once per element;
+//! * **cache blocking** — the group structure *is* the K-blocking (one
+//!   tile of ≤ `group` codes at a time), and the output is computed as
+//!   yᵀ in contiguous per-row slabs;
+//! * **row parallelism** — output rows are sharded over
+//!   `std::thread::scope` workers (no rayon in the vendored registry);
+//!   each Ŵ row is owned by exactly one worker and accumulated in a
+//!   fixed order, so results are **bit-identical for any thread count**.
+//!
+//! # Packed memory layout
+//!
+//! [`PackedMatrix`] stores codes **row-aligned**: row `r` occupies bytes
+//! `[r·row_stride, (r+1)·row_stride)` with `row_stride =
+//! packed_size(cols, bits)`; within a row, codes are bit-packed
+//! little-endian exactly as `quant::pack` defines (code `j` starts at bit
+//! `j·bits`). Row alignment costs at most 7 padding bits per row and buys
+//! independent per-row access — the property the row-parallel kernels and
+//! the `.packed` loader rely on. Scales/zeros stay f32 `(rows, n_groups)`
+//! tensors: they are the task adapter and are swapped, never repacked.
+//!
+//! `reference_dequant_matmul` preserves the seed's scalar
+//! unpack → dequantize → transpose → naive-matmul path verbatim; it is the
+//! parity baseline for the tests and the "before" column of
+//! `BENCH_kernels.json` (benches/kernels_micro.rs).
+
+use anyhow::{bail, Result};
+
+use super::pack;
+use super::rtn::QuantizedMatrix;
+use crate::tensor::Tensor;
+
+/// A weight matrix held as bit-packed integer codes plus per-(row, group)
+/// f32 scales and zero-points. See the module docs for the byte layout.
+#[derive(Clone, Debug)]
+pub struct PackedMatrix {
+    packed: Vec<u8>,
+    row_stride: usize,
+    pub scales: Tensor, // (rows, n_groups)
+    pub zeros: Tensor,  // (rows, n_groups)
+    pub rows: usize,
+    pub cols: usize,
+    pub bits: u8,
+    pub group: usize,
+}
+
+impl PackedMatrix {
+    /// Pack an unpacked [`QuantizedMatrix`] row by row.
+    pub fn from_quantized(q: &QuantizedMatrix) -> PackedMatrix {
+        let row_stride = pack::packed_size(q.cols, q.bits);
+        let mut packed = Vec::with_capacity(row_stride * q.rows);
+        for r in 0..q.rows {
+            let row = &q.codes[r * q.cols..(r + 1) * q.cols];
+            packed.extend_from_slice(&pack::pack_codes(row, q.bits));
+        }
+        PackedMatrix {
+            packed,
+            row_stride,
+            scales: q.scales.clone(),
+            zeros: q.zeros.clone(),
+            rows: q.rows,
+            cols: q.cols,
+            bits: q.bits,
+            group: q.group,
+        }
+    }
+
+    /// Build from a *contiguous* packed stream (the `.packed` file format,
+    /// which bit-packs all `rows·cols` codes back to back). When a row is
+    /// a whole number of bytes the stream is adopted as-is; otherwise the
+    /// codes are re-packed once into the row-aligned layout.
+    pub fn from_contiguous(
+        stream: &[u8],
+        rows: usize,
+        cols: usize,
+        bits: u8,
+        scales: Tensor,
+        zeros: Tensor,
+    ) -> Result<PackedMatrix> {
+        if !(1..=8).contains(&bits) {
+            bail!("packed matrix: bits must be in 1..=8, got {bits}");
+        }
+        let (sn, ng) = scales.dims2()?;
+        if sn != rows || ng == 0 || cols % ng != 0 {
+            bail!(
+                "packed matrix: scales {:?} do not tile a {rows}x{cols} matrix",
+                scales.shape()
+            );
+        }
+        if zeros.shape() != scales.shape() {
+            bail!("packed matrix: zeros {:?} != scales {:?}", zeros.shape(), scales.shape());
+        }
+        let need = pack::packed_size(rows * cols, bits);
+        if stream.len() < need {
+            bail!("packed stream too short: {} < {need}", stream.len());
+        }
+        let group = cols / ng;
+        let row_stride = pack::packed_size(cols, bits);
+        let packed = if (cols * bits as usize) % 8 == 0 {
+            stream[..rows * row_stride].to_vec()
+        } else {
+            let codes = pack::unpack_codes(stream, bits, rows * cols)?;
+            let mut p = Vec::with_capacity(rows * row_stride);
+            for r in 0..rows {
+                p.extend_from_slice(&pack::pack_codes(&codes[r * cols..(r + 1) * cols], bits));
+            }
+            p
+        };
+        Ok(PackedMatrix { packed, row_stride, scales, zeros, rows, cols, bits, group })
+    }
+
+    /// Expand back to the unpacked representation (tooling/tests; the
+    /// serving path never needs this).
+    pub fn to_quantized(&self) -> Result<QuantizedMatrix> {
+        let mut codes = Vec::with_capacity(self.rows * self.cols);
+        for r in 0..self.rows {
+            codes.extend(pack::unpack_codes(self.row_bytes(r), self.bits, self.cols)?);
+        }
+        Ok(QuantizedMatrix {
+            codes,
+            scales: self.scales.clone(),
+            zeros: self.zeros.clone(),
+            rows: self.rows,
+            cols: self.cols,
+            bits: self.bits,
+            group: self.group,
+        })
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.cols / self.group
+    }
+
+    /// Bytes of packed code storage (the "Model Size" contribution).
+    pub fn packed_bytes(&self) -> usize {
+        self.packed.len()
+    }
+
+    #[inline]
+    fn row_bytes(&self, r: usize) -> &[u8] {
+        &self.packed[r * self.row_stride..(r + 1) * self.row_stride]
+    }
+
+    /// Ŵ = s·(codes − z) as a dense tensor, fused unpack + scale,
+    /// row-parallel.
+    pub fn dequantize(&self) -> Tensor {
+        self.dequantize_with(&self.scales, &self.zeros)
+            .expect("scales/zeros shape is a struct invariant")
+    }
+
+    /// Dequantize with *replacement* scales/zeros (PEQA task switching:
+    /// the packed codes are shared and untouched — no buffer clone).
+    pub fn dequantize_with(&self, scales: &Tensor, zeros: &Tensor) -> Result<Tensor> {
+        self.dequantize_with_threads(scales, zeros, crate::util::num_threads())
+    }
+
+    /// [`Self::dequantize_with`] with an explicit worker count (the
+    /// thread-invariance tests and benches pin this).
+    pub fn dequantize_with_threads(
+        &self,
+        scales: &Tensor,
+        zeros: &Tensor,
+        threads: usize,
+    ) -> Result<Tensor> {
+        let (rows, cols, g) = (self.rows, self.cols, self.group);
+        let ng = self.n_groups();
+        check_adapter_shape(scales, zeros, rows, ng)?;
+        let mut out = vec![0.0f32; rows * cols];
+        let (sd, zd) = (scales.data(), zeros.data());
+        par_row_chunks(&mut out, cols, rows, threads, |r0, chunk| {
+            for (ri, orow) in chunk.chunks_mut(cols).enumerate() {
+                let prow = self.row_bytes(r0 + ri);
+                for kg in 0..ng {
+                    let seg = &mut orow[kg * g..(kg + 1) * g];
+                    pack::unpack_into_f32(prow, self.bits, kg * g, seg);
+                    let sc = sd[(r0 + ri) * ng + kg];
+                    let zp = zd[(r0 + ri) * ng + kg];
+                    for v in seg.iter_mut() {
+                        *v = sc * (*v - zp);
+                    }
+                }
+            }
+        });
+        Ok(Tensor::new(&[rows, cols], out))
+    }
+
+    /// Fused quantized GEMM: y = X · Ŵᵀ computed directly from the packed
+    /// codes (X is (batch, cols); y is (batch, rows)). See module docs.
+    pub fn matmul_t(&self, x: &Tensor) -> Result<Tensor> {
+        self.matmul_t_threads(x, crate::util::num_threads())
+    }
+
+    /// [`Self::matmul_t`] with an explicit worker count. Results are
+    /// bit-identical for every `threads` value.
+    pub fn matmul_t_threads(&self, x: &Tensor, threads: usize) -> Result<Tensor> {
+        let (b, k) = x.dims2()?;
+        if k != self.cols {
+            bail!("fused matmul: x is {:?} but matrix has {} cols", x.shape(), self.cols);
+        }
+        let (rows, g) = (self.rows, self.group);
+        if b == 0 || rows == 0 {
+            return Ok(Tensor::zeros(&[b, rows]));
+        }
+        let ng = self.n_groups();
+        let xd = x.data();
+        // Per-(x-row, group) sums: the zero-point term z·Σx is paid once
+        // per group instead of once per element.
+        let mut sx = vec![0.0f32; b * ng];
+        for bi in 0..b {
+            for kg in 0..ng {
+                sx[bi * ng + kg] = xd[bi * k + kg * g..bi * k + (kg + 1) * g].iter().sum();
+            }
+        }
+        // yᵀ (rows, b): each worker owns a contiguous slab of output rows.
+        let mut yt = vec![0.0f32; rows * b];
+        let (sd, zd) = (self.scales.data(), self.zeros.data());
+        let (bits, sx_ref) = (self.bits, &sx);
+        par_row_chunks(&mut yt, b, rows, threads, |r0, chunk| {
+            let mut tile = vec![0.0f32; g]; // reusable per-thread group tile
+            for (ri, yrow) in chunk.chunks_mut(b).enumerate() {
+                let r = r0 + ri;
+                let prow = self.row_bytes(r);
+                for kg in 0..ng {
+                    pack::unpack_into_f32(prow, bits, kg * g, &mut tile);
+                    let sc = sd[r * ng + kg];
+                    let zp = zd[r * ng + kg];
+                    for bi in 0..b {
+                        let xseg = &xd[bi * k + kg * g..bi * k + (kg + 1) * g];
+                        let mut dot = 0.0f32;
+                        for j in 0..g {
+                            dot += xseg[j] * tile[j];
+                        }
+                        yrow[bi] += sc * (dot - zp * sx_ref[bi * ng + kg]);
+                    }
+                }
+            }
+        });
+        // Transpose yᵀ (rows, b) → y (b, rows).
+        let mut y = vec![0.0f32; b * rows];
+        for r in 0..rows {
+            for bi in 0..b {
+                y[bi * rows + r] = yt[r * b + bi];
+            }
+        }
+        Ok(Tensor::new(&[b, rows], y))
+    }
+}
+
+/// Dequantize unpacked u8 codes (the [`QuantizedMatrix`] hot path):
+/// out = s·(codes − z), fused scale application, row-parallel.
+pub fn dequantize_codes(
+    codes: &[u8],
+    scales: &Tensor,
+    zeros: &Tensor,
+    rows: usize,
+    cols: usize,
+    group: usize,
+) -> Tensor {
+    assert_eq!(codes.len(), rows * cols, "codes/shape mismatch");
+    let ng = if group == 0 { 0 } else { cols / group };
+    assert_eq!(scales.shape(), [rows, ng].as_slice(), "scales shape");
+    assert_eq!(zeros.shape(), [rows, ng].as_slice(), "zeros shape");
+    let mut out = vec![0.0f32; rows * cols];
+    let (sd, zd) = (scales.data(), zeros.data());
+    par_row_chunks(&mut out, cols, rows, crate::util::num_threads(), |r0, chunk| {
+        for (ri, orow) in chunk.chunks_mut(cols).enumerate() {
+            let r = r0 + ri;
+            let crow = &codes[r * cols..(r + 1) * cols];
+            for kg in 0..ng {
+                let sc = sd[r * ng + kg];
+                let zp = zd[r * ng + kg];
+                for j in kg * group..(kg + 1) * group {
+                    orow[j] = sc * (crow[j] as f32 - zp);
+                }
+            }
+        }
+    });
+    Tensor::new(&[rows, cols], out)
+}
+
+/// Dequantize f32-stored codes (checkpoint `.wq` tensors): same fused
+/// kernel over a f32 code buffer. Caller has validated the shapes.
+pub fn dequantize_f32_codes(
+    wq: &[f32],
+    scales: &[f32],
+    zeros: &[f32],
+    rows: usize,
+    cols: usize,
+    group: usize,
+) -> Vec<f32> {
+    let ng = if group == 0 { 0 } else { cols / group };
+    let mut out = vec![0.0f32; rows * cols];
+    par_row_chunks(&mut out, cols, rows, crate::util::num_threads(), |r0, chunk| {
+        for (ri, orow) in chunk.chunks_mut(cols).enumerate() {
+            let r = r0 + ri;
+            let wrow = &wq[r * cols..(r + 1) * cols];
+            for kg in 0..ng {
+                let sc = scales[r * ng + kg];
+                let zp = zeros[r * ng + kg];
+                for j in kg * group..(kg + 1) * group {
+                    orow[j] = sc * (wrow[j] - zp);
+                }
+            }
+        }
+    });
+    out
+}
+
+/// The seed's scalar path, preserved verbatim: unpack codes with the
+/// bit-cursor loop, materialize dense Ŵ with scalar dequant loops,
+/// transpose, then the naive single-threaded ikj matmul. This is the
+/// parity baseline for the tests and the reference side of the
+/// kernels_micro bench.
+pub fn reference_dequant_matmul(x: &Tensor, w: &PackedMatrix) -> Result<Tensor> {
+    let (g, ng) = (w.group, w.n_groups());
+    let mut dense = vec![0.0f32; w.rows * w.cols];
+    for r in 0..w.rows {
+        let codes = pack::unpack_codes_generic(w.row_bytes(r), w.bits, w.cols)?;
+        for kg in 0..ng {
+            let sc = w.scales.at2(r, kg);
+            let zp = w.zeros.at2(r, kg);
+            for j in 0..g {
+                dense[r * w.cols + kg * g + j] = sc * (codes[kg * g + j] as f32 - zp);
+            }
+        }
+    }
+    let dense = Tensor::new(&[w.rows, w.cols], dense);
+    x.matmul_naive(&dense.t())
+}
+
+fn check_adapter_shape(scales: &Tensor, zeros: &Tensor, rows: usize, ng: usize) -> Result<()> {
+    if scales.shape() != [rows, ng].as_slice() {
+        bail!("scales {:?}, expected [{rows}, {ng}]", scales.shape());
+    }
+    if zeros.shape() != [rows, ng].as_slice() {
+        bail!("zeros {:?}, expected [{rows}, {ng}]", zeros.shape());
+    }
+    Ok(())
+}
+
+/// Shard `out` (a `rows × elems_per_row` row-major buffer) into contiguous
+/// per-worker row slabs and run `f(first_row, slab)` on scoped threads.
+/// With `threads <= 1` (or a single row) the closure runs inline — the
+/// compute path per row is identical either way, which is what makes every
+/// kernel in this module thread-count invariant.
+fn par_row_chunks<F>(out: &mut [f32], elems_per_row: usize, rows: usize, threads: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    if rows == 0 || elems_per_row == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(rows);
+    if threads == 1 {
+        f(0, out);
+        return;
+    }
+    let chunk_rows = rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, chunk) in out.chunks_mut(chunk_rows * elems_per_row).enumerate() {
+            let f = &f;
+            s.spawn(move || f(t * chunk_rows, chunk));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quantize_rtn;
+    use crate::util::Pcg32;
+
+    fn setup(
+        rows: usize,
+        cols: usize,
+        batch: usize,
+        bits: u8,
+        group: Option<usize>,
+        seed: u64,
+    ) -> (Tensor, PackedMatrix) {
+        let mut rng = Pcg32::new(seed);
+        let w = Tensor::normal(&[rows, cols], 0.4, &mut rng);
+        let x = Tensor::normal(&[batch, cols], 1.0, &mut rng);
+        let q = quantize_rtn(&w, bits, group).unwrap();
+        (x, PackedMatrix::from_quantized(&q))
+    }
+
+    #[test]
+    fn fused_matches_reference_across_bits_groups_and_odd_shapes() {
+        // Odd row counts / batch sizes so no dimension is a multiple of
+        // the worker shard size.
+        for (rows, cols, batch) in [(37usize, 192usize, 5usize), (64, 64, 8), (3, 192, 1)] {
+            for bits in [2u8, 3, 4] {
+                for group in [None, Some(64), Some(16)] {
+                    let (x, pm) = setup(rows, cols, batch, bits, group, 7 + bits as u64);
+                    let y_ref = reference_dequant_matmul(&x, &pm).unwrap();
+                    let y = pm.matmul_t(&x).unwrap();
+                    assert_eq!(y.shape(), &[batch, rows]);
+                    let d = y.max_abs_diff(&y_ref);
+                    assert!(
+                        d <= 1e-4,
+                        "bits={bits} group={group:?} shape=({rows},{cols},{batch}): {d}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_single_row_edges() {
+        // Empty batch.
+        let (_, pm) = setup(6, 32, 4, 4, Some(16), 3);
+        let x0 = Tensor::zeros(&[0, 32]);
+        let y0 = pm.matmul_t(&x0).unwrap();
+        assert_eq!(y0.shape(), &[0, 6]);
+        // Single-row X and single-row W.
+        let (x1, pm1) = setup(1, 48, 1, 3, None, 5);
+        let y1 = pm1.matmul_t(&x1).unwrap();
+        let yr = reference_dequant_matmul(&x1, &pm1).unwrap();
+        assert_eq!(y1.shape(), &[1, 1]);
+        assert!(y1.max_abs_diff(&yr) <= 1e-4);
+    }
+
+    #[test]
+    fn thread_count_invariance_is_bitwise() {
+        let (x, pm) = setup(53, 128, 7, 3, Some(64), 11);
+        let y1 = pm.matmul_t_threads(&x, 1).unwrap();
+        for threads in [2usize, 3, 8, 64] {
+            let yn = pm.matmul_t_threads(&x, threads).unwrap();
+            assert_eq!(y1.data(), yn.data(), "threads={threads}");
+        }
+        let d1 = pm.dequantize_with_threads(&pm.scales, &pm.zeros, 1).unwrap();
+        let dn = pm.dequantize_with_threads(&pm.scales, &pm.zeros, 5).unwrap();
+        assert_eq!(d1.data(), dn.data());
+    }
+
+    #[test]
+    fn pack_roundtrip_and_contiguous_loader() {
+        for (bits, cols) in [(3u8, 20usize), (4, 24), (2, 17)] {
+            let mut rng = Pcg32::new(31 + bits as u64);
+            let w = Tensor::normal(&[5, cols], 0.5, &mut rng);
+            let q = quantize_rtn(&w, bits, None).unwrap();
+            let pm = PackedMatrix::from_quantized(&q);
+            assert_eq!(pm.to_quantized().unwrap().codes, q.codes, "bits={bits}");
+            // The .packed file stream is contiguous (not row-aligned);
+            // from_contiguous must land on the same matrix.
+            let stream = pack::pack_codes(&q.codes, bits);
+            let pm2 = PackedMatrix::from_contiguous(
+                &stream,
+                5,
+                cols,
+                bits,
+                q.scales.clone(),
+                q.zeros.clone(),
+            )
+            .unwrap();
+            assert_eq!(pm2.to_quantized().unwrap().codes, q.codes);
+            assert_eq!(pm.dequantize().data(), pm2.dequantize().data());
+        }
+    }
+
+    #[test]
+    fn dequantize_matches_unpacked_matrix_bitwise() {
+        let (_, pm) = setup(19, 96, 1, 3, Some(16), 13);
+        let q = pm.to_quantized().unwrap();
+        // Same fused formula on both paths — element-wise, so exact.
+        assert_eq!(pm.dequantize().data(), q.dequantize().data());
+    }
+
+    #[test]
+    fn dequantize_with_swaps_scales_without_touching_codes() {
+        let (_, pm) = setup(8, 32, 1, 4, None, 17);
+        let mut s2 = pm.scales.clone();
+        for v in s2.data_mut() {
+            *v *= 2.0;
+        }
+        let a = pm.dequantize();
+        let b = pm.dequantize_with(&s2, &pm.zeros).unwrap();
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert!((y - 2.0 * x).abs() < 1e-5);
+        }
+        // Shape mismatch is rejected, not silently mis-indexed.
+        assert!(pm.dequantize_with(&Tensor::zeros(&[8, 2]), &pm.zeros).is_err());
+    }
+
+    #[test]
+    fn contiguous_loader_rejects_bad_input() {
+        let scales = Tensor::ones(&[4, 1]);
+        let zeros = Tensor::zeros(&[4, 1]);
+        // Stream too short.
+        assert!(PackedMatrix::from_contiguous(&[0u8; 2], 4, 16, 4, scales.clone(), zeros.clone())
+            .is_err());
+        // Scales that do not tile the matrix.
+        let bad_s = Tensor::ones(&[4, 3]);
+        let bad_z = Tensor::zeros(&[4, 3]);
+        assert!(PackedMatrix::from_contiguous(&[0u8; 32], 4, 16, 4, bad_s, bad_z).is_err());
+    }
+}

@@ -51,48 +51,118 @@ impl MatF64 {
         t
     }
 
+    /// C = A·B, column-blocked and row-parallel (same scheme as
+    /// `Tensor::matmul`; OPTQ Hessian products are the big consumers).
     pub fn matmul(&self, b: &MatF64) -> MatF64 {
         let n = self.n;
         let mut c = MatF64::zeros(n);
-        for i in 0..n {
-            for k in 0..n {
-                let aik = self.a[i * n + k];
-                if aik == 0.0 {
-                    continue;
-                }
-                for j in 0..n {
-                    c.a[i * n + j] += aik * b.a[k * n + j];
+        if n == 0 {
+            return c;
+        }
+        const JB: usize = 256;
+        let row_block = |i0: usize, crows: &mut [f64]| {
+            for (ii, crow) in crows.chunks_mut(n).enumerate() {
+                let arow = &self.a[(i0 + ii) * n..(i0 + ii + 1) * n];
+                for j0 in (0..n).step_by(JB) {
+                    let j1 = (j0 + JB).min(n);
+                    for (k, &aik) in arow.iter().enumerate() {
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let brow = &b.a[k * n + j0..k * n + j1];
+                        for (o, &bv) in crow[j0..j1].iter_mut().zip(brow) {
+                            *o += aik * bv;
+                        }
+                    }
                 }
             }
+        };
+        let threads = crate::util::num_threads().min(n).max(1);
+        if threads == 1 || n * n * n < (1 << 16) {
+            row_block(0, &mut c.a);
+        } else {
+            let chunk_rows = n.div_ceil(threads);
+            std::thread::scope(|s| {
+                for (t, chunk) in c.a.chunks_mut(chunk_rows * n).enumerate() {
+                    let row_block = &row_block;
+                    s.spawn(move || row_block(t * chunk_rows, chunk));
+                }
+            });
         }
         c
     }
 }
 
+#[inline]
+fn dot(x: &[f64], y: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for (a, b) in x.iter().zip(y) {
+        s += a * b;
+    }
+    s
+}
+
 /// Lower Cholesky factor L with A = L·Lᵀ. Fails on non-PD input.
+///
+/// Column-oriented (left-looking) formulation: after the diagonal pivot of
+/// column j is fixed, every sub-diagonal entry of the column depends only
+/// on already-final rows, so the column is computed in parallel row chunks
+/// when it is large enough to pay for the spawns. Each entry is one
+/// sequential dot product — results do not depend on the thread count.
 pub fn cholesky_lower(a: &MatF64) -> Result<MatF64> {
+    cholesky_lower_impl(a, crate::util::num_threads(), 1 << 17)
+}
+
+/// `par_work`: minimum column work (rows-below × dot-length) before a
+/// column is sharded across threads. Exposed for the tests, which force
+/// the parallel branch on small matrices.
+fn cholesky_lower_impl(a: &MatF64, threads: usize, par_work: usize) -> Result<MatF64> {
     let n = a.n;
     let mut l = MatF64::zeros(n);
-    for i in 0..n {
-        for j in 0..=i {
-            let mut sum = a.at(i, j);
-            for k in 0..j {
-                sum -= l.at(i, k) * l.at(j, k);
+    for j in 0..n {
+        let d = {
+            let lrow_j = &l.a[j * n..j * n + j];
+            a.at(j, j) - dot(lrow_j, lrow_j)
+        };
+        if d <= 0.0 {
+            bail!("matrix not positive definite at pivot {j} (sum={d})");
+        }
+        let ljj = d.sqrt();
+        l.a[j * n + j] = ljj;
+        let below = n - j - 1;
+        if below == 0 {
+            continue;
+        }
+        // Rows 0..=j are read-only history; rows j+1.. are this column's
+        // disjoint write targets.
+        let (head, tail) = l.a.split_at_mut((j + 1) * n);
+        let lrow_j = &head[j * n..j * n + j];
+        let col = |base: usize, rows: &mut [f64]| {
+            for (ri, lrow) in rows.chunks_mut(n).enumerate() {
+                let i = base + ri;
+                let s = a.at(i, j) - dot(&lrow[..j], lrow_j);
+                lrow[j] = s / ljj;
             }
-            if i == j {
-                if sum <= 0.0 {
-                    bail!("matrix not positive definite at pivot {i} (sum={sum})");
+        };
+        if threads > 1 && below * j >= par_work {
+            let chunk_rows = below.div_ceil(threads.min(below));
+            std::thread::scope(|s| {
+                for (t, chunk) in tail.chunks_mut(chunk_rows * n).enumerate() {
+                    let col = &col;
+                    s.spawn(move || col(j + 1 + t * chunk_rows, chunk));
                 }
-                l.set(i, j, sum.sqrt());
-            } else {
-                l.set(i, j, sum / l.at(j, j));
-            }
+            });
+        } else {
+            col(j + 1, tail);
         }
     }
     Ok(l)
 }
 
-/// Solve L·x = b (forward substitution), L lower-triangular.
+/// Solve L·x = b (forward substitution), L lower-triangular. Inherently
+/// sequential (each entry depends on all previous); O(n²), not worth
+/// parallelizing — callers parallelize across independent right-hand sides
+/// instead (see `invert_spd`).
 pub fn solve_lower(l: &MatF64, b: &[f64]) -> Vec<f64> {
     let n = l.n;
     let mut x = b.to_vec();
@@ -118,20 +188,43 @@ pub fn solve_lower_t(l: &MatF64, b: &[f64]) -> Vec<f64> {
     x
 }
 
-/// A⁻¹ for SPD A via Cholesky (column-by-column solves).
+/// A⁻¹ for SPD A via Cholesky. The n unit-vector solves are independent,
+/// so they run in parallel column chunks (each worker writes rows of the
+/// transposed result, then one transpose lays out A⁻¹ — identical values
+/// to the sequential column-by-column loop).
 pub fn invert_spd(a: &MatF64) -> Result<MatF64> {
     let n = a.n;
     let l = cholesky_lower(a)?;
-    let mut inv = MatF64::zeros(n);
-    let mut e = vec![0.0; n];
-    for j in 0..n {
-        e[j] = 1.0;
-        let y = solve_lower(&l, &e);
-        let x = solve_lower_t(&l, &y);
-        for i in 0..n {
-            inv.set(i, j, x[i]);
+    if n == 0 {
+        return Ok(MatF64::zeros(0));
+    }
+    let mut invt = vec![0.0f64; n * n]; // row j = A⁻¹·e_j
+    let solve_cols = |c0: usize, rows: &mut [f64]| {
+        let mut e = vec![0.0f64; n];
+        for (ri, row) in rows.chunks_mut(n).enumerate() {
+            e[c0 + ri] = 1.0;
+            let y = solve_lower(&l, &e);
+            row.copy_from_slice(&solve_lower_t(&l, &y));
+            e[c0 + ri] = 0.0;
         }
-        e[j] = 0.0;
+    };
+    let threads = crate::util::num_threads().min(n).max(1);
+    if threads == 1 || n < 64 {
+        solve_cols(0, &mut invt);
+    } else {
+        let chunk_cols = n.div_ceil(threads);
+        std::thread::scope(|s| {
+            for (t, chunk) in invt.chunks_mut(chunk_cols * n).enumerate() {
+                let solve_cols = &solve_cols;
+                s.spawn(move || solve_cols(t * chunk_cols, chunk));
+            }
+        });
+    }
+    let mut inv = MatF64::zeros(n);
+    for j in 0..n {
+        for i in 0..n {
+            inv.a[i * n + j] = invt[j * n + i];
+        }
     }
     Ok(inv)
 }
@@ -196,6 +289,28 @@ mod tests {
                 s += l.at(k, i) * x[k];
             }
             assert!((s - b[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn parallel_cholesky_matches_serial_bitwise() {
+        let a = random_spd(64, 13);
+        let serial = cholesky_lower_impl(&a, 1, usize::MAX).unwrap();
+        for threads in [2usize, 4, 7] {
+            let par = cholesky_lower_impl(&a, threads, 0).unwrap();
+            assert_eq!(par.a, serial.a, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_invert_and_matmul_stay_exact() {
+        // n = 96 crosses the invert/matmul parallel thresholds.
+        let a = random_spd(96, 21);
+        let inv = invert_spd(&a).unwrap();
+        let prod = a.matmul(&inv);
+        let eye = MatF64::eye(96);
+        for (x, y) in prod.a.iter().zip(&eye.a) {
+            assert!((x - y).abs() < 1e-7, "{x} vs {y}");
         }
     }
 

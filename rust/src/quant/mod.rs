@@ -1,11 +1,14 @@
 //! Quantization substrate: RTN (paper Eq. 1), OPTQ/GPTQ baseline, packed
-//! sub-4-bit storage, and SPD linear algebra.
+//! sub-4-bit storage, the fused quantized kernel layer, and SPD linear
+//! algebra.
 
+pub mod kernels;
 pub mod linalg;
 pub mod optq;
 pub mod pack;
 pub mod rtn;
 
+pub use kernels::{reference_dequant_matmul, PackedMatrix};
 pub use optq::{quantize_optq, weighted_error};
 pub use pack::{pack_codes, packed_size, unpack_codes};
 pub use rtn::{quantize_rtn, QuantizedMatrix};

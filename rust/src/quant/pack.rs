@@ -5,11 +5,72 @@
 //! code, codes crossing byte boundaries allowed, so storage is exactly
 //! ⌈n·b/8⌉ bytes for n codes (3-bit: 8 codes in 3 bytes; 4-bit: 2/byte).
 //! Scales and zero-points stay f32 (they are the per-task adapter).
+//!
+//! Two implementations share the format:
+//! * a u64 word-wise fast path for bits ∈ {2, 3, 4, 8} (the widths the
+//!   paper and the kernel layer use) that extracts up to ⌊57/b⌋ codes per
+//!   64-bit load instead of doing per-code byte read-modify-writes, and
+//! * the original scalar bit-cursor path, kept as `pack_codes_generic` /
+//!   `unpack_codes_generic` — the fallback for other widths and the
+//!   correctness baseline the tests compare against.
 
 use anyhow::{bail, Result};
 
+/// Bit widths the word-wise fast path covers.
+#[inline]
+fn has_fast_path(bits: u8) -> bool {
+    matches!(bits, 2 | 3 | 4 | 8)
+}
+
+/// Read up to 8 bytes at `byte` as a little-endian u64, zero-padding past
+/// the end of the stream (safe for tail reads).
+#[inline]
+fn read_word(packed: &[u8], byte: usize) -> u64 {
+    if byte + 8 <= packed.len() {
+        u64::from_le_bytes(packed[byte..byte + 8].try_into().unwrap())
+    } else {
+        let mut buf = [0u8; 8];
+        let n = packed.len().saturating_sub(byte);
+        buf[..n].copy_from_slice(&packed[byte..byte + n]);
+        u64::from_le_bytes(buf)
+    }
+}
+
 /// Pack `codes` (each < 2^bits) into a bit stream.
 pub fn pack_codes(codes: &[u8], bits: u8) -> Vec<u8> {
+    assert!((1..=8).contains(&bits));
+    if has_fast_path(bits) {
+        pack_codes_words(codes, bits)
+    } else {
+        pack_codes_generic(codes, bits)
+    }
+}
+
+/// Word-wise packing: accumulate codes into a u64 shift register and emit
+/// full bytes, instead of per-code masked read-modify-writes on the output.
+fn pack_codes_words(codes: &[u8], bits: u8) -> Vec<u8> {
+    let b = bits as usize;
+    let mask = ((1u16 << bits) - 1) as u8;
+    let mut out = Vec::with_capacity(packed_size(codes.len(), bits));
+    let mut acc: u64 = 0;
+    let mut nbits: usize = 0;
+    for &c in codes {
+        acc |= ((c & mask) as u64) << nbits;
+        nbits += b;
+        while nbits >= 8 {
+            out.push(acc as u8);
+            acc >>= 8;
+            nbits -= 8;
+        }
+    }
+    if nbits > 0 {
+        out.push(acc as u8);
+    }
+    out
+}
+
+/// Scalar bit-cursor packing (all widths; the original implementation).
+pub fn pack_codes_generic(codes: &[u8], bits: u8) -> Vec<u8> {
     assert!((1..=8).contains(&bits));
     let total_bits = codes.len() * bits as usize;
     let mut out = vec![0u8; total_bits.div_ceil(8)];
@@ -35,6 +96,43 @@ pub fn unpack_codes(packed: &[u8], bits: u8, n: usize) -> Result<Vec<u8>> {
     if packed.len() < need {
         bail!("packed stream too short: {} < {need}", packed.len());
     }
+    if has_fast_path(bits) {
+        Ok(unpack_codes_words(packed, bits, n))
+    } else {
+        unpack_codes_generic(packed, bits, n)
+    }
+}
+
+/// Word-wise unpacking: one u64 load yields up to ⌊(64−7)/b⌋ codes
+/// (19 codes per load at 3-bit) instead of 1–2 byte loads per code.
+fn unpack_codes_words(packed: &[u8], bits: u8, n: usize) -> Vec<u8> {
+    let b = bits as usize;
+    let mask = ((1u64 << bits) - 1) as u64;
+    let mut out = Vec::with_capacity(n);
+    let mut i = 0usize;
+    let mut bitpos = 0usize;
+    while i < n {
+        let byte = bitpos >> 3;
+        let off = bitpos & 7;
+        let mut w = read_word(packed, byte) >> off;
+        let take = ((64 - off) / b).min(n - i);
+        for _ in 0..take {
+            out.push((w & mask) as u8);
+            w >>= b;
+        }
+        i += take;
+        bitpos += take * b;
+    }
+    out
+}
+
+/// Scalar bit-cursor unpacking (all widths; the original implementation).
+pub fn unpack_codes_generic(packed: &[u8], bits: u8, n: usize) -> Result<Vec<u8>> {
+    assert!((1..=8).contains(&bits));
+    let need = (n * bits as usize).div_ceil(8);
+    if packed.len() < need {
+        bail!("packed stream too short: {} < {need}", packed.len());
+    }
     let mask = ((1u16 << bits) - 1) as u8;
     let mut out = Vec::with_capacity(n);
     let mut bitpos = 0usize;
@@ -49,6 +147,30 @@ pub fn unpack_codes(packed: &[u8], bits: u8, n: usize) -> Result<Vec<u8>> {
         bitpos += bits as usize;
     }
     Ok(out)
+}
+
+/// Unpack `out.len()` codes starting at code index `start` directly into an
+/// f32 tile — the kernel layer's inner unpacker (quant::kernels), word-wise
+/// for every width. The caller guarantees the stream covers the range.
+#[inline]
+pub fn unpack_into_f32(packed: &[u8], bits: u8, start: usize, out: &mut [f32]) {
+    let b = bits as usize;
+    let mask = (1u64 << bits) - 1;
+    let n = out.len();
+    let mut i = 0usize;
+    let mut bitpos = start * b;
+    while i < n {
+        let byte = bitpos >> 3;
+        let off = bitpos & 7;
+        let mut w = read_word(packed, byte) >> off;
+        let take = ((64 - off) / b).min(n - i);
+        for _ in 0..take {
+            out[i] = (w & mask) as f32;
+            w >>= b;
+            i += 1;
+        }
+        bitpos += take * b;
+    }
 }
 
 /// Exact packed size in bytes for `n` codes at `bits` width.
@@ -77,6 +199,44 @@ mod tests {
     }
 
     #[test]
+    fn fast_paths_match_generic() {
+        // Word-wise and scalar implementations must produce identical
+        // streams and identical codes for every width/length combination.
+        let mut rng = Pcg32::new(23);
+        for bits in 1..=8u8 {
+            for n in [1usize, 3, 8, 17, 63, 64, 65, 509] {
+                let codes: Vec<u8> =
+                    (0..n).map(|_| (rng.next_u32() & ((1 << bits) - 1)) as u8).collect();
+                let fast = pack_codes(&codes, bits);
+                let slow = pack_codes_generic(&codes, bits);
+                assert_eq!(fast, slow, "pack bits={bits} n={n}");
+                let back_fast = unpack_codes(&fast, bits, n).unwrap();
+                let back_slow = unpack_codes_generic(&slow, bits, n).unwrap();
+                assert_eq!(back_fast, back_slow, "unpack bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn unpack_into_f32_matches_unpack_codes() {
+        let mut rng = Pcg32::new(29);
+        for bits in [2u8, 3, 4, 5, 8] {
+            let n = 200usize;
+            let codes: Vec<u8> =
+                (0..n).map(|_| (rng.next_u32() & ((1 << bits) - 1)) as u8).collect();
+            let packed = pack_codes(&codes, bits);
+            // Whole stream and unaligned interior ranges.
+            for (start, len) in [(0usize, n), (7, 64), (33, 13), (n - 1, 1)] {
+                let mut tile = vec![0.0f32; len];
+                unpack_into_f32(&packed, bits, start, &mut tile);
+                for (j, &v) in tile.iter().enumerate() {
+                    assert_eq!(v, codes[start + j] as f32, "bits={bits} start={start} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn three_bit_density() {
         // 8 × 3-bit codes in exactly 3 bytes — the "sub-4-bit" headline.
         assert_eq!(packed_size(8, 3), 3);
@@ -96,5 +256,6 @@ mod tests {
     #[test]
     fn short_stream_rejected() {
         assert!(unpack_codes(&[0xFF], 4, 3).is_err());
+        assert!(unpack_codes_generic(&[0xFF], 4, 3).is_err());
     }
 }

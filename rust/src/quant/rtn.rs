@@ -32,31 +32,21 @@ impl QuantizedMatrix {
         self.cols / self.group
     }
 
-    /// Ŵ = s · (codes − z) as a dense tensor (rust mirror of dequant_ref).
+    /// Ŵ = s · (codes − z) as a dense tensor (rust mirror of dequant_ref),
+    /// via the fused row-parallel kernel (quant::kernels).
     pub fn dequantize(&self) -> Tensor {
-        let g = self.group;
-        let ng = self.n_groups();
-        let mut out = vec![0.0f32; self.rows * self.cols];
-        for i in 0..self.rows {
-            for k in 0..ng {
-                let s = self.scales.at2(i, k);
-                let z = self.zeros.at2(i, k);
-                for j in 0..g {
-                    let idx = i * self.cols + k * g + j;
-                    out[idx] = s * (self.codes[idx] as f32 - z);
-                }
-            }
-        }
-        Tensor::new(&[self.rows, self.cols], out)
+        super::kernels::dequantize_codes(
+            &self.codes, &self.scales, &self.zeros, self.rows, self.cols, self.group,
+        )
     }
 
     /// Dequantize with *replacement* scales/zeros — this is PEQA task
-    /// switching: the shared integer matrix stays, only s/z swap.
+    /// switching: the shared integer matrix stays, only s/z swap. The code
+    /// buffer is borrowed, never cloned (task switching is the cheap path).
     pub fn dequantize_with(&self, scales: &Tensor, zeros: &Tensor) -> Tensor {
-        let mut q = self.clone();
-        q.scales = scales.clone();
-        q.zeros = zeros.clone();
-        q.dequantize()
+        super::kernels::dequantize_codes(
+            &self.codes, scales, zeros, self.rows, self.cols, self.group,
+        )
     }
 }
 

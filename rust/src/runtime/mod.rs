@@ -1,211 +1,23 @@
-//! PJRT runtime: load AOT'd HLO-text artifacts, compile once, execute from
-//! the rust hot path. Adapted from /opt/xla-example/load_hlo (see
-//! DESIGN.md): HLO *text* is the interchange format because jax ≥ 0.5
-//! serialized protos are rejected by xla_extension 0.5.1.
+//! Runtime layer, split in two:
+//!
+//! * [`meta`] — the typed view of `artifacts/<name>.meta.json` (model
+//!   geometry, method config, ordered parameter layouts). Pure host code,
+//!   always compiled: checkpoints, the quant toolchain and the memory
+//!   model all consume it.
+//! * [`pjrt`] (feature `xla`) — the PJRT client, artifact compilation and
+//!   execution, literal/buffer conversions. Needs the vendored `xla`
+//!   crate (xla_extension 0.5.1 bindings); see rust/Cargo.toml for how to
+//!   enable it.
 
 pub mod meta;
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::rc::Rc;
-
-use anyhow::{anyhow, bail, Context, Result};
-
 pub use meta::{ArtifactMeta, IoSpec, MethodMeta, ModelMeta, ParamMeta};
 
-use crate::tensor::Tensor;
+#[cfg(feature = "xla")]
+pub mod pjrt;
 
-/// A compiled artifact: metadata + PJRT executable.
-pub struct Artifact {
-    pub meta: ArtifactMeta,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-impl Artifact {
-    /// Execute with host literals; returns the decomposed output tuple.
-    /// Counts (and 2-D-ness of shapes) are validated against the meta.
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        if inputs.len() != self.meta.inputs.len() {
-            bail!(
-                "artifact {}: {} inputs given, signature has {}",
-                self.meta.name,
-                inputs.len(),
-                self.meta.inputs.len()
-            );
-        }
-        let result = self.exe.execute::<xla::Literal>(inputs)?;
-        self.collect(result)
-    }
-
-    /// Execute with device-resident buffers (frozen params stay uploaded
-    /// across steps — the trainer's fast path).
-    pub fn run_b(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
-        if inputs.len() != self.meta.inputs.len() {
-            bail!(
-                "artifact {}: {} buffer inputs given, signature has {}",
-                self.meta.name,
-                inputs.len(),
-                self.meta.inputs.len()
-            );
-        }
-        let result = self.exe.execute_b::<&xla::PjRtBuffer>(inputs)?;
-        self.collect(result)
-    }
-
-    fn collect(&self, result: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<xla::Literal>> {
-        // Single replica; aot.py lowers with return_tuple=True so the one
-        // output buffer is a tuple literal we decompose.
-        let buf = result
-            .first()
-            .and_then(|r| r.first())
-            .ok_or_else(|| anyhow!("no output buffers from {}", self.meta.name))?;
-        let lit = buf.to_literal_sync()?;
-        let outs = lit.to_tuple()?;
-        if outs.len() != self.meta.outputs.len() {
-            bail!(
-                "artifact {}: {} outputs, signature has {}",
-                self.meta.name,
-                outs.len(),
-                self.meta.outputs.len()
-            );
-        }
-        Ok(outs)
-    }
-}
-
-/// The PJRT CPU client plus a compile cache over the artifacts directory.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    cache: std::cell::RefCell<HashMap<String, Rc<Artifact>>>,
-}
-
-impl Runtime {
-    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
-        let dir = artifacts_dir.as_ref().to_path_buf();
-        if !dir.is_dir() {
-            bail!(
-                "artifacts directory {} not found — run `make artifacts` first",
-                dir.display()
-            );
-        }
-        xla::set_tf_min_log_level(xla::TfLogLevel::Error);
-        Ok(Runtime {
-            client: xla::PjRtClient::cpu()?,
-            dir,
-            cache: Default::default(),
-        })
-    }
-
-    pub fn artifacts_dir(&self) -> &Path {
-        &self.dir
-    }
-
-    pub fn client(&self) -> &xla::PjRtClient {
-        &self.client
-    }
-
-    /// Names of all artifacts present on disk.
-    pub fn list(&self) -> Result<Vec<String>> {
-        let mut names = Vec::new();
-        for entry in std::fs::read_dir(&self.dir)? {
-            let p = entry?.path();
-            if let Some(n) = p.file_name().and_then(|s| s.to_str()) {
-                if let Some(stem) = n.strip_suffix(".meta.json") {
-                    names.push(stem.to_string());
-                }
-            }
-        }
-        names.sort();
-        Ok(names)
-    }
-
-    /// Load metadata only (cheap; no compilation).
-    pub fn meta(&self, name: &str) -> Result<ArtifactMeta> {
-        ArtifactMeta::load(&self.dir.join(format!("{name}.meta.json")))
-    }
-
-    /// Load + compile an artifact (cached).
-    pub fn load(&self, name: &str) -> Result<Rc<Artifact>> {
-        if let Some(a) = self.cache.borrow().get(name) {
-            return Ok(a.clone());
-        }
-        let meta = self.meta(name)?;
-        let hlo_path = self.dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(
-            hlo_path
-                .to_str()
-                .ok_or_else(|| anyhow!("non-utf8 path {}", hlo_path.display()))?,
-        )
-        .with_context(|| format!("loading {}", hlo_path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact {name}"))?;
-        let art = Rc::new(Artifact { meta, exe });
-        self.cache.borrow_mut().insert(name.to_string(), art.clone());
-        Ok(art)
-    }
-
-    /// Upload f32 data to the device.
-    ///
-    /// NOTE: always goes through `buffer_from_host_buffer`, whose
-    /// `kImmutableOnlyDuringCall` semantics copy the host data before
-    /// returning. The literal-based upload in the xla crate is *async*
-    /// without exposing the ready-future — dropping the literal before
-    /// execution is a use-after-free (segfault), so we never use it.
-    pub fn to_device_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
-    }
-
-    pub fn to_device_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
-    }
-
-    pub fn tensor_to_device(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
-        self.to_device_f32(t.data(), t.shape())
-    }
-
-    pub fn scalar_to_device(&self, x: f32) -> Result<xla::PjRtBuffer> {
-        self.to_device_f32(&[x], &[])
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Literal <-> host conversions
-// ---------------------------------------------------------------------------
-
-/// f32 tensor → literal with the tensor's shape.
-pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
-    let lit = xla::Literal::vec1(t.data());
-    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
-    Ok(lit.reshape(&dims)?)
-}
-
-/// i32 token batch → literal of the given shape.
-pub fn tokens_to_literal(tokens: &[i32], shape: &[usize]) -> Result<xla::Literal> {
-    assert_eq!(tokens.len(), shape.iter().product::<usize>());
-    let lit = xla::Literal::vec1(tokens);
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    Ok(lit.reshape(&dims)?)
-}
-
-pub fn scalar_literal(x: f32) -> xla::Literal {
-    xla::Literal::scalar(x)
-}
-
-/// literal → f32 tensor using the expected shape from the signature.
-pub fn literal_to_tensor(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
-    let v = lit.to_vec::<f32>()?;
-    if v.len() != shape.iter().product::<usize>() {
-        bail!("literal has {} elements, shape {:?} expects {}", v.len(), shape,
-              shape.iter().product::<usize>());
-    }
-    Ok(Tensor::new(shape, v))
-}
-
-pub fn literal_to_f32(lit: &xla::Literal) -> Result<f32> {
-    let v = lit.to_vec::<f32>()?;
-    v.first().copied().ok_or_else(|| anyhow!("empty literal"))
-}
+#[cfg(feature = "xla")]
+pub use pjrt::{
+    literal_to_f32, literal_to_tensor, scalar_literal, tensor_to_literal, tokens_to_literal,
+    Artifact, Runtime,
+};

@@ -98,9 +98,60 @@ impl Tensor {
         Tensor::new(&[m, n], out)
     }
 
-    /// C = A @ B for 2-D tensors — straightforward ikj loop; used only on
-    /// checkpoint-transform paths (LoRA merge, OPTQ), never per-token.
+    /// C = A @ B for 2-D tensors — cache-blocked over output columns and
+    /// parallelized over output rows (std::thread::scope; no rayon in the
+    /// vendored registry). Each output row keeps the naive ikj accumulation
+    /// order, so results are bit-identical to [`Self::matmul_naive`] and
+    /// invariant to the thread count.
     pub fn matmul(&self, b: &Tensor) -> Result<Tensor> {
+        let (n, k) = self.dims2()?;
+        let (k2, m) = b.dims2()?;
+        if k != k2 {
+            bail!("matmul {:?} @ {:?}", self.shape, b.shape);
+        }
+        let mut out = vec![0.0f32; n * m];
+        if n == 0 || m == 0 || k == 0 {
+            return Ok(Tensor::new(&[n, m], out));
+        }
+        // Column blocks keep one out/B stripe pair L1-resident for big m.
+        const JB: usize = 512;
+        let row_block = |i0: usize, orows: &mut [f32]| {
+            for (ii, orow) in orows.chunks_mut(m).enumerate() {
+                let arow = &self.data[(i0 + ii) * k..(i0 + ii + 1) * k];
+                for j0 in (0..m).step_by(JB) {
+                    let j1 = (j0 + JB).min(m);
+                    for (p, &a) in arow.iter().enumerate() {
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let brow = &b.data[p * m + j0..p * m + j1];
+                        for (o, &bv) in orow[j0..j1].iter_mut().zip(brow) {
+                            *o += a * bv;
+                        }
+                    }
+                }
+            }
+        };
+        let threads = crate::util::num_threads().min(n).max(1);
+        // Small products are not worth the spawn overhead.
+        if threads == 1 || n * k * m < (1 << 16) {
+            row_block(0, &mut out);
+        } else {
+            let chunk_rows = n.div_ceil(threads);
+            std::thread::scope(|s| {
+                for (t, chunk) in out.chunks_mut(chunk_rows * m).enumerate() {
+                    let row_block = &row_block;
+                    s.spawn(move || row_block(t * chunk_rows, chunk));
+                }
+            });
+        }
+        Ok(Tensor::new(&[n, m], out))
+    }
+
+    /// The seed's single-threaded ikj matmul, kept as the numerics
+    /// baseline: `matmul` must match it bitwise (tested), and the kernel
+    /// benches use it as the "before" reference path.
+    pub fn matmul_naive(&self, b: &Tensor) -> Result<Tensor> {
         let (n, k) = self.dims2()?;
         let (k2, m) = b.dims2()?;
         if k != k2 {
@@ -169,6 +220,20 @@ mod tests {
         assert_eq!(bt.shape(), &[2, 3]);
         assert_eq!(bt.at2(0, 2), 1.0);
         assert_eq!(bt.at2(1, 1), 1.0);
+    }
+
+    #[test]
+    fn blocked_parallel_matmul_is_bitwise_naive() {
+        let mut rng = Pcg32::new(9);
+        // Odd sizes straddle the column-block and row-chunk boundaries;
+        // the large case crosses the parallel threshold.
+        for (n, k, m) in [(3usize, 5usize, 7usize), (33, 65, 129), (40, 64, 1030)] {
+            let a = Tensor::normal(&[n, k], 1.0, &mut rng);
+            let b = Tensor::normal(&[k, m], 1.0, &mut rng);
+            let fast = a.matmul(&b).unwrap();
+            let slow = a.matmul_naive(&b).unwrap();
+            assert_eq!(fast.data(), slow.data(), "({n},{k},{m})");
+        }
     }
 
     #[test]

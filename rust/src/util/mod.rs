@@ -7,6 +7,16 @@ pub mod stats;
 
 pub use rng::Pcg32;
 
+/// Worker-thread count for the host kernel layer (quant::kernels, the
+/// blocked matmuls, the OPTQ linear algebra). `PEQA_THREADS` overrides;
+/// defaults to the machine's available parallelism.
+pub fn num_threads() -> usize {
+    if let Some(n) = std::env::var("PEQA_THREADS").ok().and_then(|s| s.parse::<usize>().ok()) {
+        return n.max(1);
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
 /// Human-readable byte sizes for memory tables ("33.4 GB", "1.2 MB").
 pub fn human_bytes(b: u64) -> String {
     const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];

@@ -2,7 +2,10 @@
 //! (pytest-verified python quantization ↔ rust quantization, HLO train
 //! steps, eval, serving coordinator) is cross-checked here.
 //!
-//! Requires `make artifacts` to have run (skipped gracefully otherwise).
+//! Requires `make artifacts` to have run (skipped gracefully otherwise)
+//! and a build with the `xla` feature (the whole file is gated on it —
+//! the host kernel layer has its own in-crate tests).
+#![cfg(feature = "xla")]
 
 use peqa::config::TrainConfig;
 use peqa::coordinator::{AdapterStore, BatcherConfig, Coordinator, SwitchMode};

@@ -1,0 +1,65 @@
+//! Host-side end-to-end integration: RTN quantize a checkpoint, write the
+//! `.packed` deployment file, load it back as a `PackedModel` (codes stay
+//! bit-packed), and check the fused dequant-GEMM against the seed's
+//! scalar unpack → dequantize → matmul reference. Runs in the default
+//! build — no artifacts, no xla feature.
+
+use peqa::model::{Checkpoint, PackedModel};
+use peqa::pipeline;
+use peqa::quant::{quantize_rtn, reference_dequant_matmul, PackedMatrix};
+use peqa::tensor::Tensor;
+use peqa::util::Pcg32;
+
+#[test]
+fn quantize_pack_load_fused_roundtrip() {
+    let dir = std::env::temp_dir().join("peqa_test_kernels_host");
+    for (bits, group) in [(2u8, None), (3, Some(16)), (4, Some(64))] {
+        let mut rng = Pcg32::new(40 + bits as u64);
+        // Odd row count; cols divisible by every tested group.
+        let w = Tensor::normal(&[37, 64], 0.4, &mut rng);
+        let x = Tensor::normal(&[5, 64], 1.0, &mut rng);
+
+        let mut fp = Checkpoint::new();
+        fp.insert("layers.0.attn.q.w", w.clone());
+        fp.insert("embed", Tensor::normal(&[8, 4], 1.0, &mut rng));
+        let qck = pipeline::rtn_quantize(&fp, bits, group).unwrap();
+        assert_eq!(qck.quantized_prefixes(), vec!["layers.0.attn.q".to_string()]);
+
+        let path = dir.join(format!("m_b{bits}.packed"));
+        qck.save_packed(&path, bits).unwrap();
+        let pm = PackedModel::load(&path).unwrap();
+        assert_eq!(pm.bits, bits);
+
+        // Fused GEMM from packed codes vs the scalar reference path.
+        let mat = pm.matrix("layers.0.attn.q").unwrap();
+        let y = mat.matmul_t(&x).unwrap();
+        let y_ref = reference_dequant_matmul(&x, mat).unwrap();
+        assert!(
+            y.max_abs_diff(&y_ref) <= 1e-4,
+            "bits={bits} group={group:?}: {}",
+            y.max_abs_diff(&y_ref)
+        );
+
+        // And vs a dense matmul over the compat checkpoint loader.
+        let via_ck = Checkpoint::load_packed(&path).unwrap();
+        let dense = via_ck.dequantize().unwrap();
+        let y_dense = x.matmul(&dense.req("layers.0.attn.q.w").unwrap().t()).unwrap();
+        assert!(y.max_abs_diff(&y_dense) <= 1e-4);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fused_gemm_agrees_with_in_memory_quantization() {
+    // No file round trip: QuantizedMatrix → PackedMatrix directly.
+    let mut rng = Pcg32::new(77);
+    let w = Tensor::normal(&[96, 192], 0.3, &mut rng);
+    let x = Tensor::normal(&[8, 192], 1.0, &mut rng);
+    for bits in [2u8, 3, 4] {
+        let q = quantize_rtn(&w, bits, Some(64)).unwrap();
+        let pm = PackedMatrix::from_quantized(&q);
+        let y = pm.matmul_t(&x).unwrap();
+        let y_dense = x.matmul(&q.dequantize().t()).unwrap();
+        assert!(y.max_abs_diff(&y_dense) <= 1e-4, "bits={bits}");
+    }
+}

@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# CI entrypoint: tier-1 verify plus a smoke-mode kernel bench so every PR
+# leaves a perf datapoint (BENCH_kernels.json at the repo root).
+#
+#   scripts/ci.sh            tier-1 + quick kernels_micro bench
+#   scripts/ci.sh --full     same, but the bench runs at full size
+#                            (4096x4096, the acceptance measurement)
+#
+# The default build has no xla feature (the vendored PJRT crate is not in
+# the registry); artifact-driven tests skip themselves.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+QUICK=1
+if [[ "${1:-}" == "--full" ]]; then
+  QUICK=0
+fi
+
+echo "== kernels_micro bench (PEQA_BENCH_QUICK=$QUICK) =="
+# PEQA_BENCH_OUT pins the output path regardless of the bench's cwd
+# (cargo runs bench binaries with cwd = the package root, rust/).
+PEQA_BENCH_QUICK=$QUICK PEQA_BENCH_OUT="$PWD/BENCH_kernels.json" \
+  cargo bench -p peqa --bench kernels_micro
+
+test -s BENCH_kernels.json
+echo "== ok: BENCH_kernels.json written =="
