@@ -1,0 +1,113 @@
+//! Serving decode benchmark (host, no xla): end-to-end multi-task
+//! decode through `serve::Scheduler` → `serve::Engine` → the fused
+//! packed GEMM, measuring the numbers the ROADMAP's serving items track:
+//!
+//! * decode throughput (tokens/s) and per-request latency p50/p99,
+//! * scale-swap task-switch cost (mean + p99 of `swap_times_s`) — the
+//!   "adapter-bytes moved" budget of the PEQA deployment story.
+//!
+//! Requests are submitted in task-rotating rounds so every round forces
+//! one adapter swap. Writes `BENCH_serve.json` (at `PEQA_BENCH_OUT` or
+//! the repo root) so every PR leaves a serving perf datapoint;
+//! `scripts/ci.sh` runs this in quick mode and `scripts/bench_diff.py`
+//! fails CI on regressions. `PEQA_BENCH_QUICK=1` shrinks the model and
+//! the request volume; `PEQA_THREADS` pins the kernel worker count.
+
+use peqa::bench::{quick_mode, save_json, Table};
+use peqa::config;
+use peqa::json::Value;
+use peqa::serve::{self, Engine, ModelGeom, Sampling, Scheduler, SchedulerConfig};
+use peqa::tokenizer::EOS;
+use peqa::util::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    let quick = quick_mode();
+    let geom = if quick {
+        ModelGeom { vocab: 512, d_model: 64, n_layers: 2, n_heads: 4, d_ff: 192 }
+    } else {
+        ModelGeom { vocab: 512, d_model: 256, n_layers: 4, n_heads: 8, d_ff: 1024 }
+    };
+    let bits = 4u8;
+    let group = Some(64);
+    let (rounds, per_round, max_new) = if quick { (4, 6, 16) } else { (12, 16, 32) };
+    let threads = peqa::util::num_threads();
+
+    let (pm, base_q) = serve::synth_packed(&geom, bits, group, 11)?;
+    let engine = Engine::from_packed(pm, geom, threads)?;
+    let packed_bytes = engine.packed_bytes();
+    let tasks = ["wikitext", "ptb", "alpaca"];
+    let adapters = serve::synth_adapters(&base_q, &tasks, 5);
+    let adapter_bytes = adapters.total_bytes();
+    let mut sched = Scheduler::new(
+        engine,
+        adapters,
+        SchedulerConfig { max_batch: 8, window: 128, sampling: Sampling::Greedy, seed: 3 },
+    );
+
+    // Task-rotating request rounds: each round drains one task, so every
+    // round boundary is a real scale swap.
+    let mut rng = Pcg32::new(17);
+    for round in 0..rounds {
+        let task = tasks[round % tasks.len()];
+        for _ in 0..per_round {
+            let len = 8 + rng.usize_below(16);
+            let prompt: Vec<u32> = (0..len).map(|_| rng.below(256)).collect();
+            sched.submit(task, prompt, max_new, EOS);
+        }
+        sched.run_until_idle()?;
+    }
+
+    let m = sched.metrics.clone();
+    let mut table = Table::new(
+        &format!(
+            "§Perf — host serving decode (L{} d{} h{} b{}g{:?}, {} req × {} rounds, {} threads)",
+            geom.n_layers, geom.d_model, geom.n_heads, bits, group, per_round, rounds, threads
+        ),
+        &["metric", "value"],
+    );
+    let rowf = |t: &mut Table, k: &str, v: String| t.row(&[k.to_string(), v]);
+    rowf(&mut table, "requests completed", format!("{}", m.completed));
+    rowf(&mut table, "generated tokens", format!("{}", m.generated_tokens));
+    rowf(&mut table, "tokens/s", format!("{:.1}", m.tokens_per_s()));
+    rowf(&mut table, "latency p50 (ms)", format!("{:.3}", m.p50_latency() * 1e3));
+    rowf(&mut table, "latency p99 (ms)", format!("{:.3}", m.p99_latency() * 1e3));
+    rowf(&mut table, "scale swaps", format!("{}", m.swap_times_s.len()));
+    rowf(&mut table, "swap mean (ms)", format!("{:.4}", m.mean_swap_s() * 1e3));
+    rowf(&mut table, "swap p99 (ms)", format!("{:.4}", m.p99_swap_s() * 1e3));
+    rowf(&mut table, "decode steps", format!("{}", m.decode_steps));
+    rowf(&mut table, "packed code bytes", format!("{packed_bytes}"));
+    rowf(&mut table, "adapter bytes (3 tasks)", format!("{adapter_bytes}"));
+    table.print();
+    let paths = config::Paths::default();
+    table.save(&paths.results, "serve_decode").ok();
+
+    let out = std::env::var("PEQA_BENCH_OUT")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| config::repo_root().join("BENCH_serve.json"));
+    let doc = Value::obj(vec![
+        ("bench", Value::str("serve_decode")),
+        ("quick", Value::str(if quick { "1" } else { "0" })),
+        ("threads", Value::num(threads as f64)),
+        ("n_layers", Value::num(geom.n_layers as f64)),
+        ("d_model", Value::num(geom.d_model as f64)),
+        ("n_heads", Value::num(geom.n_heads as f64)),
+        ("d_ff", Value::num(geom.d_ff as f64)),
+        ("vocab", Value::num(geom.vocab as f64)),
+        ("bits", Value::num(bits as f64)),
+        ("group", Value::num(64.0)),
+        ("requests", Value::num(m.completed as f64)),
+        ("generated_tokens", Value::num(m.generated_tokens as f64)),
+        ("decode_steps", Value::num(m.decode_steps as f64)),
+        ("tokens_per_s", Value::num(m.tokens_per_s())),
+        ("p50_latency_s", Value::num(m.p50_latency())),
+        ("p99_latency_s", Value::num(m.p99_latency())),
+        ("swaps", Value::num(m.swap_times_s.len() as f64)),
+        ("swap_mean_s", Value::num(m.mean_swap_s())),
+        ("swap_p99_s", Value::num(m.p99_swap_s())),
+        ("packed_bytes", Value::num(packed_bytes as f64)),
+        ("adapter_bytes", Value::num(adapter_bytes as f64)),
+    ]);
+    save_json(&out, &doc)?;
+    println!("\nwrote {}", out.display());
+    Ok(())
+}

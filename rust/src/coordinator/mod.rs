@@ -6,8 +6,11 @@
 //! inference runs through the quantized kernel. This module implements
 //! that as a serving coordinator:
 //!
-//! * [`AdapterStore`] — named task adapters (scale/zero vectors) with disk
-//!   persistence; the multi-tenant registry.
+//! * [`AdapterStore`] / [`GenRequest`] / [`GenResponse`] /
+//!   [`BatcherConfig`] / [`ServeMetrics`] — the serving vocabulary,
+//!   re-exported from [`crate::serve::types`] so this artifact-driven
+//!   coordinator and the host `serve` engine speak one request/metrics
+//!   language (the types compile without the `xla` feature).
 //! * [`Coordinator`] — request queue + task-aware dynamic batcher +
 //!   batched greedy decode over a logits artifact. On the quantized path
 //!   (`logits_q`) a task switch swaps only the s/z device buffers; the
@@ -17,8 +20,7 @@
 
 pub mod server;
 
-use std::collections::{HashMap, VecDeque};
-use std::path::Path;
+use std::collections::VecDeque;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
@@ -27,120 +29,8 @@ use crate::eval::EvalModel;
 use crate::model::Checkpoint;
 use crate::runtime::Runtime;
 use crate::tokenizer::PAD;
-use crate::util::stats::{mean, percentile};
 
-/// Named task adapters (the paper's s₀+Δs per task).
-#[derive(Default)]
-pub struct AdapterStore {
-    adapters: HashMap<String, Checkpoint>,
-}
-
-impl AdapterStore {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    pub fn insert(&mut self, task: impl Into<String>, adapter: Checkpoint) {
-        self.adapters.insert(task.into(), adapter);
-    }
-
-    pub fn get(&self, task: &str) -> Option<&Checkpoint> {
-        self.adapters.get(task)
-    }
-
-    pub fn tasks(&self) -> Vec<&str> {
-        let mut t: Vec<&str> = self.adapters.keys().map(|s| s.as_str()).collect();
-        t.sort();
-        t
-    }
-
-    /// Total bytes across all adapters (they are tiny — that's the point).
-    pub fn total_bytes(&self) -> u64 {
-        self.adapters
-            .values()
-            .map(|a| a.n_params() as u64 * 4)
-            .sum()
-    }
-
-    pub fn save_all(&self, dir: &Path) -> Result<()> {
-        for (task, a) in &self.adapters {
-            a.save(&dir.join(format!("{task}.adapter")))?;
-        }
-        Ok(())
-    }
-
-    pub fn load_dir(dir: &Path) -> Result<AdapterStore> {
-        let mut store = AdapterStore::new();
-        for entry in std::fs::read_dir(dir)? {
-            let p = entry?.path();
-            if let Some(name) = p.file_name().and_then(|s| s.to_str()) {
-                if let Some(task) = name.strip_suffix(".adapter") {
-                    store.insert(task.to_string(), Checkpoint::load(&p)?);
-                }
-            }
-        }
-        Ok(store)
-    }
-}
-
-#[derive(Clone, Debug)]
-pub struct GenRequest {
-    pub id: u64,
-    pub task: String,
-    pub prompt: Vec<u32>,
-    pub max_new: usize,
-    pub stop: u32,
-}
-
-#[derive(Clone, Debug)]
-pub struct GenResponse {
-    pub id: u64,
-    pub task: String,
-    pub tokens: Vec<u32>,
-    pub queue_s: f64,
-    pub latency_s: f64,
-}
-
-#[derive(Clone, Debug)]
-pub struct BatcherConfig {
-    /// Max requests decoded together (≤ the artifact's batch dim).
-    pub max_batch: usize,
-}
-
-impl Default for BatcherConfig {
-    fn default() -> Self {
-        BatcherConfig { max_batch: 8 }
-    }
-}
-
-#[derive(Clone, Debug, Default)]
-pub struct ServeMetrics {
-    pub completed: usize,
-    pub generated_tokens: usize,
-    pub latencies_s: Vec<f64>,
-    pub queue_s: Vec<f64>,
-    pub swap_times_s: Vec<f64>,
-    pub decode_steps: usize,
-    pub wall_s: f64,
-}
-
-impl ServeMetrics {
-    pub fn tokens_per_s(&self) -> f64 {
-        if self.wall_s > 0.0 { self.generated_tokens as f64 / self.wall_s } else { 0.0 }
-    }
-
-    pub fn p50_latency(&self) -> f64 {
-        if self.latencies_s.is_empty() { 0.0 } else { percentile(&self.latencies_s, 50.0) }
-    }
-
-    pub fn p99_latency(&self) -> f64 {
-        if self.latencies_s.is_empty() { 0.0 } else { percentile(&self.latencies_s, 99.0) }
-    }
-
-    pub fn mean_swap_s(&self) -> f64 {
-        mean(&self.swap_times_s)
-    }
-}
+pub use crate::serve::types::{AdapterStore, BatcherConfig, GenRequest, GenResponse, ServeMetrics};
 
 /// How task switches reach the device (the Table 1 "Task-Switching" axis).
 pub enum SwitchMode {
@@ -411,39 +301,5 @@ impl Coordinator {
     }
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::tensor::Tensor;
-
-    #[test]
-    fn adapter_store_roundtrip() {
-        let mut store = AdapterStore::new();
-        let mut a = Checkpoint::new();
-        a.insert("l.s", Tensor::full(&[4, 1], 0.5));
-        store.insert("taskA", a);
-        let mut b = Checkpoint::new();
-        b.insert("l.s", Tensor::full(&[4, 1], 0.9));
-        store.insert("taskB", b);
-        assert_eq!(store.tasks(), vec!["taskA", "taskB"]);
-        assert_eq!(store.total_bytes(), 2 * 4 * 4);
-
-        let dir = std::env::temp_dir().join("peqa_test_adapters");
-        std::fs::create_dir_all(&dir).unwrap();
-        store.save_all(&dir).unwrap();
-        let back = AdapterStore::load_dir(&dir).unwrap();
-        assert_eq!(back.tasks(), vec!["taskA", "taskB"]);
-        assert_eq!(back.get("taskB").unwrap().req("l.s").unwrap().data()[0], 0.9);
-        std::fs::remove_dir_all(&dir).ok();
-    }
-
-    #[test]
-    fn metrics_aggregation() {
-        let mut m = ServeMetrics::default();
-        m.generated_tokens = 100;
-        m.wall_s = 2.0;
-        m.latencies_s = vec![0.1, 0.2, 0.3, 0.4];
-        assert_eq!(m.tokens_per_s(), 50.0);
-        assert!((m.p50_latency() - 0.25).abs() < 1e-9);
-    }
-}
+// The AdapterStore / ServeMetrics unit tests moved with the types to
+// serve::types, where they run in the default (no-xla) tier-1 build.

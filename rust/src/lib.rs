@@ -29,6 +29,20 @@
 //! the same deterministic row-sharding, so every result is bit-identical
 //! at any thread count (`PEQA_THREADS` pins the worker count).
 //!
+//! ## Host serving (`serve`)
+//!
+//! The default build *serves*, not just quantizes/packs: `serve::engine`
+//! decodes autoregressively from a `model::PackedModel` with every block
+//! projection running through the fused packed GEMM (embedding gather,
+//! RMSNorm, rotary attention over per-sequence `serve::kvcache` ring
+//! buffers, SwiGLU MLP, fp LM head), and `serve::scheduler` continuously
+//! batches multi-task traffic, switching tasks by swapping only the f32
+//! scale/zero tensors — the packed integer codes are immutable (the
+//! paper's scale-swap deployment contract). The request/response/metrics
+//! vocabulary lives in `serve::types` and is shared with the xla
+//! coordinator. `peqa serve` runs the CLI demo; `benches/serve_decode.rs`
+//! writes `BENCH_serve.json` (tokens/s, latency p50/p99, swap p99).
+//!
 //! ## Feature `xla`
 //!
 //! The PJRT execution half (`runtime::pjrt`, `train`, `coordinator`, and
@@ -36,7 +50,8 @@
 //! `xla` feature because it needs the vendored `xla` crate, which is not
 //! in the public registry (see rust/Cargo.toml). The default build is the
 //! full host-side stack: tensors, quantization, packed formats, fused
-//! kernels, data/tokenizer, memory model, and the bench framework.
+//! kernels, the `serve` decode engine and scheduler, data/tokenizer,
+//! memory model, and the bench framework.
 
 pub mod bench;
 pub mod cli;
@@ -51,6 +66,7 @@ pub mod model;
 pub mod pipeline;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod tokenizer;
 #[cfg(feature = "xla")]

@@ -7,13 +7,14 @@
 //!   eval       --size n3 --ckpt path --dataset wikitext                  [xla]
 //!   quantize   --ckpt path --bits 4 [--group g] [--optq --size n3]
 //!   pack       --ckpt path --bits 4 --out model.packed
+//!   serve      [--model m.packed] host multi-task packed-decode serving
 //!   serve-demo --size n3 [--requests N] multi-task adapter-swap serving demo [xla]
 //!   memreport                           Table-1 style DRAM model (paper dims)
 //!
 //! Commands marked [xla] drive AOT artifacts through the PJRT runtime and
 //! need the `xla` feature (see rust/Cargo.toml); the rest — including RTN
-//! quantization and packing, which run on the host quant/kernels stack —
-//! work in the default build.
+//! quantization, packing, and the `serve` host decode engine, which run
+//! on the host quant/kernels + serve stack — work in the default build.
 
 use anyhow::{bail, Result};
 use peqa::cli::Args;
@@ -52,6 +53,11 @@ peqa — PEQA (NeurIPS 2023) reproduction CLI
   peqa quantize   --ckpt path.peqa --bits 4 [--group 32]
                   [--optq --size n3] [--out path.peqa]
   peqa pack       --ckpt path.peqa --bits 4 --out model.packed
+  peqa serve      [--model m.packed] [--adapters dir] [--heads 4]
+                  [--tasks 3] [--requests 24] [--max-new 24] [--batch 8]
+                  [--topk 0] [--temp 0.8] [--window 256] [--seed 7]
+                  [--bits 4] [--group g] [--layers 2] [--d-model 64]
+                  [--d-ff 192] [--vocab 512]
   peqa serve-demo --size n3 [--requests 16] [--full-reload]      [xla]
   peqa memreport
 
@@ -183,6 +189,29 @@ fn run() -> Result<()> {
             println!("packed model: {out} ({})", peqa::util::human_bytes(bytes));
             Ok(())
         }
+        "serve" => {
+            let opts = ServeOpts {
+                model: args.opt("model"),
+                adapters: args.opt("adapters"),
+                heads: args.get_usize("heads", 4)?,
+                tasks: args.get_usize("tasks", 3)?,
+                requests: args.get_usize("requests", 24)?,
+                max_new: args.get_usize("max-new", 24)?,
+                batch: args.get_usize("batch", 8)?,
+                topk: args.get_usize("topk", 0)?,
+                temp: args.get_f64("temp", 0.8)?,
+                window: args.get_usize("window", 256)?,
+                seed: args.get_u64("seed", 7)?,
+                bits: args.get_usize("bits", 4)? as u8,
+                group: args.opt("group").map(|g| g.parse::<usize>()).transpose()?,
+                layers: args.get_usize("layers", 2)?,
+                d_model: args.get_usize("d-model", 64)?,
+                d_ff: args.get_usize("d-ff", 192)?,
+                vocab: args.get_usize("vocab", 512)?,
+            };
+            args.finish()?;
+            serve_host(opts)
+        }
         #[cfg(feature = "xla")]
         "serve-demo" => {
             let size = args.get("size", "n3");
@@ -289,6 +318,153 @@ fn serve_demo(size: &str, n_req: usize, full_reload: bool) -> Result<()> {
         m.swap_times_s.len(),
         m.mean_swap_s(),
         if use_scale_swap { "scale-swap (PEQA)" } else { "full-reload (PEFT+PTQ analog)" },
+    );
+    Ok(())
+}
+
+struct ServeOpts {
+    model: Option<String>,
+    adapters: Option<String>,
+    heads: usize,
+    tasks: usize,
+    requests: usize,
+    max_new: usize,
+    batch: usize,
+    topk: usize,
+    temp: f64,
+    window: usize,
+    seed: u64,
+    bits: u8,
+    group: Option<usize>,
+    layers: usize,
+    d_model: usize,
+    d_ff: usize,
+    vocab: usize,
+}
+
+/// Host serving demo (no `xla` feature): decode a mixed multi-task
+/// request stream from a packed model entirely through the fused
+/// `quant::kernels` path, switching tasks by scale swap only.
+///
+/// With `--model`, serves an on-disk `.packed` file (adapters from
+/// `--adapters <dir>` of `.adapter` files, or synthesized from the
+/// model's own scales). Without it, synthesizes, RTN-quantizes and packs
+/// a small base model in-process.
+fn serve_host(o: ServeOpts) -> Result<()> {
+    use peqa::model::PackedModel;
+    use peqa::serve::{
+        self, AdapterStore, Engine, ModelGeom, Sampling, Scheduler, SchedulerConfig,
+    };
+    use peqa::tokenizer::{Tokenizer, EOS};
+
+    let tok = Tokenizer::byte_level(512);
+    let task_names: Vec<String> = ["wikitext", "ptb", "alpaca"]
+        .iter()
+        .map(|s| s.to_string())
+        .chain((3..).map(|i| format!("task{i}")))
+        .take(o.tasks.max(1))
+        .collect();
+
+    // Base model + per-task adapters.
+    let (pm, base_view) = match &o.model {
+        Some(p) => {
+            let pm = PackedModel::load(std::path::Path::new(p))?;
+            let view = pm.to_checkpoint();
+            (pm, view)
+        }
+        None => {
+            let geom = ModelGeom {
+                vocab: o.vocab,
+                d_model: o.d_model,
+                n_layers: o.layers,
+                n_heads: o.heads,
+                d_ff: o.d_ff,
+            };
+            let (pm, q) = serve::synth_packed(&geom, o.bits, o.group, o.seed)?;
+            (pm, q)
+        }
+    };
+    let geom = ModelGeom::infer(&pm, o.heads)?;
+    let adapters = match &o.adapters {
+        Some(dir) => AdapterStore::load_dir(std::path::Path::new(dir))?,
+        None => {
+            let names: Vec<&str> = task_names.iter().map(|s| s.as_str()).collect();
+            serve::synth_adapters(&base_view, &names, o.seed ^ 0xad)
+        }
+    };
+    let tasks: Vec<String> = adapters.tasks().iter().map(|s| s.to_string()).collect();
+    if tasks.is_empty() {
+        bail!("no task adapters available");
+    }
+    let threads = peqa::util::num_threads();
+    let engine = Engine::from_packed(pm, geom, threads)?;
+    let packed_bytes = engine.packed_bytes();
+    let adapter_bytes = adapters.total_bytes();
+    let sampling = if o.topk == 0 {
+        Sampling::Greedy
+    } else {
+        Sampling::TopK { k: o.topk, temperature: o.temp as f32 }
+    };
+    let mut sched = Scheduler::new(
+        engine,
+        adapters,
+        SchedulerConfig {
+            max_batch: o.batch.max(1),
+            window: o.window.max(1),
+            sampling,
+            seed: o.seed,
+        },
+    );
+
+    // Text prompts need the byte-level id range; a served model with a
+    // smaller vocab gets deterministic in-vocab token prompts instead.
+    let byte_level = geom.vocab >= 260;
+    let texts = ["the empire of", "shares of acme", "the battle of", "analysts expect"];
+    let prompts: Vec<Vec<u32>> = if byte_level {
+        texts.iter().map(|t| tok.encode(t)).collect()
+    } else {
+        let mut rng = peqa::util::Pcg32::seeded(o.seed, 0x9207);
+        (0..texts.len())
+            .map(|_| (0..12).map(|_| rng.below(geom.vocab as u32)).collect())
+            .collect()
+    };
+    for i in 0..o.requests {
+        let task = &tasks[i % tasks.len()];
+        let prompt = prompts[i % prompts.len()].clone();
+        sched.submit(task, prompt, o.max_new, EOS);
+    }
+    let responses = sched.run_until_idle()?;
+    for r in responses.iter().take(4) {
+        if byte_level {
+            let text = tok.decode(&r.tokens).unwrap_or_default();
+            println!("[{}] {:10} {:?}", r.id, r.task, text);
+        } else {
+            println!("[{}] {:10} {:?}", r.id, r.task, r.tokens);
+        }
+    }
+    let m = &sched.metrics;
+    println!(
+        "\nserved {} requests over {} tasks | {:.1} tok/s | p50 latency {:.4}s p99 {:.4}s | \
+         {} scale swaps, mean {:.6}s p99 {:.6}s | {} decode steps | mode: scale-swap (PEQA, host)",
+        m.completed,
+        tasks.len(),
+        m.tokens_per_s(),
+        m.p50_latency(),
+        m.p99_latency(),
+        m.swap_times_s.len(),
+        m.mean_swap_s(),
+        m.p99_swap_s(),
+        m.decode_steps,
+    );
+    println!(
+        "model: {} layers, d_model {}, {} heads, vocab {} | packed codes {} | adapters {} ({} tasks)",
+        geom.n_layers,
+        geom.d_model,
+        geom.n_heads,
+        geom.vocab,
+        peqa::util::human_bytes(packed_bytes as u64),
+        peqa::util::human_bytes(adapter_bytes),
+        tasks.len(),
     );
     Ok(())
 }

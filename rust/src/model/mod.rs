@@ -17,7 +17,7 @@ use std::path::Path;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::json::Value;
-use crate::quant::{pack_codes, packed_size, PackedMatrix};
+use crate::quant::{pack_codes, packed_size, PackedMatrix, QuantizedMatrix};
 use crate::runtime::ParamMeta;
 use crate::tensor::Tensor;
 use crate::util::Pcg32;
@@ -445,6 +445,65 @@ impl PackedModel {
         Ok(PackedModel { bits, names, matrices, fp })
     }
 
+    /// Build the in-memory deployment model directly from a PEQA-layout
+    /// checkpoint (codes stored one-f32-per-code) without touching disk —
+    /// the in-process analog of [`Checkpoint::save_packed`] + [`Self::load`],
+    /// used by the host serving path to stand up an engine from a
+    /// just-quantized model.
+    pub fn from_checkpoint(ck: &Checkpoint, bits: u8) -> Result<PackedModel> {
+        if !(1..=8).contains(&bits) {
+            bail!("packed model: bits must be in 1..=8, got {bits}");
+        }
+        let qmax = (1u16 << bits) - 1;
+        let names: Vec<String> = ck.names().to_vec();
+        let mut matrices = HashMap::new();
+        let mut fp = Checkpoint::new();
+        for (name, t) in ck.iter() {
+            if let Some(prefix) = name.strip_suffix(".wq") {
+                let (rows, cols) = t.dims2()?;
+                let s = ck.req(&format!("{prefix}.s"))?.clone();
+                let z = ck.req(&format!("{prefix}.z"))?.clone();
+                let (sn, ng) = s.dims2()?;
+                if sn != rows || ng == 0 || cols % ng != 0 {
+                    bail!("'{name}': scales {:?} do not tile {rows}x{cols}", s.shape());
+                }
+                if z.shape() != s.shape() {
+                    bail!("'{name}': zeros {:?} != scales {:?}", z.shape(), s.shape());
+                }
+                // A code that does not fit `bits` means the checkpoint was
+                // quantized at a wider width — packing would silently mask
+                // the high bits and serve garbage weights.
+                if let Some(&bad) = t.data().iter().find(|&&x| x < 0.0 || x > qmax as f32) {
+                    bail!(
+                        "'{name}': code {bad} does not fit {bits} bits \
+                         (checkpoint quantized at a different width?)"
+                    );
+                }
+                let codes: Vec<u8> = t.data().iter().map(|&x| x as u8).collect();
+                let q = QuantizedMatrix {
+                    codes,
+                    scales: s,
+                    zeros: z,
+                    rows,
+                    cols,
+                    bits,
+                    group: cols / ng,
+                };
+                matrices.insert(prefix.to_string(), PackedMatrix::from_quantized(&q));
+            } else if name.ends_with(".s") || name.ends_with(".z") {
+                // s/z of a (wq, s, z) triple live inside the matrix; an
+                // orphaned s/z stays a plain fp tensor.
+                let p = &name[..name.len() - 2];
+                if ck.get(&format!("{p}.wq")).is_none() {
+                    fp.insert(name.clone(), t.clone());
+                }
+            } else {
+                fp.insert(name.clone(), t.clone());
+            }
+        }
+        Ok(PackedModel { bits, names, matrices, fp })
+    }
+
     /// Dotted prefixes of the packed projections, in file order.
     pub fn prefixes(&self) -> Vec<String> {
         self.names
@@ -455,6 +514,23 @@ impl PackedModel {
 
     pub fn matrix(&self, prefix: &str) -> Option<&PackedMatrix> {
         self.matrices.get(prefix)
+    }
+
+    /// Mutable access to one packed projection — the host scale-swap
+    /// path: callers replace only the f32 `scales`/`zeros` tensors; the
+    /// packed code bytes are not reachable for mutation.
+    pub fn matrix_mut(&mut self, prefix: &str) -> Option<&mut PackedMatrix> {
+        self.matrices.get_mut(prefix)
+    }
+
+    /// A non-projection fp tensor by name (embeddings, norms, LM head).
+    pub fn fp_tensor(&self, name: &str) -> Option<&Tensor> {
+        self.fp.get(name)
+    }
+
+    /// All tensor names in original file order (wq/s/z names included).
+    pub fn tensor_names(&self) -> &[String] {
+        &self.names
     }
 
     /// Fused y = X·Ŵᵀ straight from the packed codes of one projection.
@@ -702,6 +778,55 @@ mod tests {
         let y = pm.fused_matmul("l", &x).unwrap();
         let y_ref = x.matmul(&fp_ref.req("l.w").unwrap().t()).unwrap();
         assert!(y.max_abs_diff(&y_ref) <= 1e-4);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn packed_model_from_checkpoint_matches_file_roundtrip() {
+        let dir = std::env::temp_dir().join("peqa_test_packed_mem");
+        let path = dir.join("m.packed");
+        let mut ck = Checkpoint::new();
+        let mut rng = Pcg32::new(21);
+        let w = Tensor::normal(&[12, 24], 0.4, &mut rng);
+        let q = crate::quant::quantize_rtn(&w, 3, Some(8)).unwrap();
+        ck.insert("layers.0.attn.q.wq", Tensor::new(&[12, 24], q.codes.iter().map(|&c| c as f32).collect()));
+        ck.insert("layers.0.attn.q.s", q.scales.clone());
+        ck.insert("layers.0.attn.q.z", q.zeros.clone());
+        ck.insert("embed", Tensor::normal(&[6, 4], 1.0, &mut rng));
+        ck.save_packed(&path, 3).unwrap();
+
+        let via_file = PackedModel::load(&path).unwrap();
+        let via_mem = PackedModel::from_checkpoint(&ck, 3).unwrap();
+        assert_eq!(via_mem.tensor_names(), via_file.tensor_names());
+        assert_eq!(via_mem.packed_bytes(), via_file.packed_bytes());
+        let a = via_mem.to_checkpoint();
+        let b = via_file.to_checkpoint();
+        for (name, t) in a.iter() {
+            assert_eq!(t, b.req(name).unwrap(), "{name}");
+        }
+        assert_eq!(via_mem.fp_tensor("embed").unwrap(), ck.req("embed").unwrap());
+
+        // matrix_mut swaps scales without touching the codes.
+        let mut pm = via_mem;
+        let before_bytes = pm.packed_bytes();
+        let m = pm.matrix_mut("layers.0.attn.q").unwrap();
+        let mut s2 = m.scales.clone();
+        for v in s2.data_mut() {
+            *v *= 2.0;
+        }
+        m.scales = s2;
+        assert_eq!(pm.packed_bytes(), before_bytes);
+        assert_eq!(
+            pm.to_checkpoint().req("layers.0.attn.q.wq").unwrap(),
+            ck.req("layers.0.attn.q.wq").unwrap()
+        );
+        // Missing s/z triple member is rejected.
+        let mut bad = Checkpoint::new();
+        bad.insert("p.wq", Tensor::zeros(&[2, 8]));
+        assert!(PackedModel::from_checkpoint(&bad, 4).is_err());
+        // Codes that do not fit the requested width are rejected, not
+        // silently masked (ck holds 3-bit codes; 2 bits can't hold 4..7).
+        assert!(PackedModel::from_checkpoint(&ck, 2).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

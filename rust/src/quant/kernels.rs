@@ -219,12 +219,69 @@ impl PackedMatrix {
         if k != self.cols {
             bail!("fused matmul: x is {:?} but matrix has {} cols", x.shape(), self.cols);
         }
-        let (rows, g) = (self.rows, self.group);
-        if b == 0 || rows == 0 {
-            return Ok(Tensor::zeros(&[b, rows]));
+        let rows = self.rows;
+        let mut y = vec![0.0f32; b * rows];
+        self.matmul_t_rows(x.data(), b, threads, &mut y)?;
+        Ok(Tensor::new(&[b, rows], y))
+    }
+
+    /// Batched decode entry point (serve::engine): y = X·Ŵᵀ over raw
+    /// slices, written into a caller buffer laid out `(batch, rows)` —
+    /// no `Tensor` wrapper on the per-token hot path. Bitwise identical
+    /// to [`Self::matmul_t`] on the same data: each output element is
+    /// accumulated by the same per-row group loop.
+    pub fn matmul_t_rows(
+        &self,
+        x: &[f32],
+        batch: usize,
+        threads: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        if x.len() != batch * self.cols {
+            bail!("matmul_t_rows: x has {} elems, expected {}x{}", x.len(), batch, self.cols);
         }
+        if out.len() != batch * self.rows {
+            bail!("matmul_t_rows: out has {} elems, expected {}x{}", out.len(), batch, self.rows);
+        }
+        if batch == 0 || self.rows == 0 {
+            return Ok(());
+        }
+        let mut yt = vec![0.0f32; self.rows * batch];
+        self.matmul_t_yt(x, batch, threads, &mut yt);
+        for r in 0..self.rows {
+            for bi in 0..batch {
+                out[bi * self.rows + r] = yt[r * batch + bi];
+            }
+        }
+        Ok(())
+    }
+
+    /// Single-row fused matvec: y = Ŵ·x for one activation row — the
+    /// autoregressive decode hot path (one token per step). Row-parallel
+    /// over the output rows and bitwise identical to a batch-1
+    /// [`Self::matmul_t`].
+    pub fn matvec_t(&self, x: &[f32], threads: usize, out: &mut [f32]) -> Result<()> {
+        if x.len() != self.cols {
+            bail!("matvec_t: x has {} elems, matrix has {} cols", x.len(), self.cols);
+        }
+        if out.len() != self.rows {
+            bail!("matvec_t: out has {} elems, matrix has {} rows", out.len(), self.rows);
+        }
+        if self.rows == 0 {
+            return Ok(());
+        }
+        out.fill(0.0);
+        // For b = 1 the yᵀ (rows, 1) layout *is* y — no transpose needed.
+        self.matmul_t_yt(x, 1, threads, out);
+        Ok(())
+    }
+
+    /// Shared fused core: accumulate yᵀ (rows, b) += X·Ŵᵀ directly from
+    /// the packed codes. `yt` must be zero-initialized by the caller; see
+    /// the module docs for the group-sum zero-point identity.
+    fn matmul_t_yt(&self, xd: &[f32], b: usize, threads: usize, yt: &mut [f32]) {
+        let (rows, g, k) = (self.rows, self.group, self.cols);
         let ng = self.n_groups();
-        let xd = x.data();
         // Per-(x-row, group) sums: the zero-point term z·Σx is paid once
         // per group instead of once per element.
         let mut sx = vec![0.0f32; b * ng];
@@ -234,10 +291,9 @@ impl PackedMatrix {
             }
         }
         // yᵀ (rows, b): each worker owns a contiguous slab of output rows.
-        let mut yt = vec![0.0f32; rows * b];
         let (sd, zd) = (self.scales.data(), self.zeros.data());
         let (bits, sx_ref) = (self.bits, &sx);
-        par_row_chunks(&mut yt, b, rows, threads, |r0, chunk| {
+        par_row_chunks(yt, b, rows, threads, |r0, chunk| {
             let mut tile = vec![0.0f32; g]; // reusable per-thread group tile
             for (ri, yrow) in chunk.chunks_mut(b).enumerate() {
                 let r = r0 + ri;
@@ -257,14 +313,6 @@ impl PackedMatrix {
                 }
             }
         });
-        // Transpose yᵀ (rows, b) → y (b, rows).
-        let mut y = vec![0.0f32; b * rows];
-        for r in 0..rows {
-            for bi in 0..b {
-                y[bi * rows + r] = yt[r * b + bi];
-            }
-        }
-        Ok(Tensor::new(&[b, rows], y))
     }
 }
 
@@ -454,6 +502,31 @@ mod tests {
         let d1 = pm.dequantize_with_threads(&pm.scales, &pm.zeros, 1).unwrap();
         let dn = pm.dequantize_with_threads(&pm.scales, &pm.zeros, 5).unwrap();
         assert_eq!(d1.data(), dn.data());
+    }
+
+    #[test]
+    fn matvec_and_row_entry_points_match_matmul_bitwise() {
+        let (x, pm) = setup(41, 96, 6, 3, Some(16), 19);
+        let y = pm.matmul_t(&x).unwrap();
+        let (b, k) = x.dims2().unwrap();
+        // Batched raw-slice path.
+        for threads in [1usize, 4] {
+            let mut out = vec![0.0f32; b * pm.rows];
+            pm.matmul_t_rows(x.data(), b, threads, &mut out).unwrap();
+            assert_eq!(out.as_slice(), y.data(), "threads={threads}");
+        }
+        // Single-row matvec path, row by row.
+        for bi in 0..b {
+            let mut row = vec![0.0f32; pm.rows];
+            pm.matvec_t(&x.data()[bi * k..(bi + 1) * k], 3, &mut row).unwrap();
+            assert_eq!(row.as_slice(), &y.data()[bi * pm.rows..(bi + 1) * pm.rows], "bi={bi}");
+        }
+        // Shape errors are rejected, not mis-indexed.
+        let mut bad = vec![0.0f32; pm.rows + 1];
+        assert!(pm.matvec_t(&x.data()[..k], 1, &mut bad).is_err());
+        assert!(pm.matvec_t(&x.data()[..k - 1], 1, &mut bad[..pm.rows]).is_err());
+        let mut out = vec![0.0f32; b * pm.rows];
+        assert!(pm.matmul_t_rows(&x.data()[1..], b, 1, &mut out).is_err());
     }
 
     #[test]

@@ -1,0 +1,780 @@
+//! Host autoregressive decode engine over the fused packed kernel layer.
+//!
+//! The paper's deployment claim is that a PEQA model *serves* in its
+//! quantized form: sub-4-bit integer codes stay bit-packed in memory,
+//! every block projection runs through the fused quantized GEMM
+//! (`quant::kernels::PackedMatrix::matmul_t` and its decode entry points
+//! `matvec_t` / `matmul_t_rows`), and a task is nothing but a set of f32
+//! scale/zero vectors. This module is that claim executed on a plain
+//! host, no `xla` feature required:
+//!
+//! * [`Engine`] — llama-family transformer forward from a
+//!   [`PackedModel`]: embedding gather, RMSNorm, rotary positions,
+//!   causal attention over a per-sequence [`KvCache`], SwiGLU MLP,
+//!   fp LM head. [`Engine::prefill`] consumes a block of prompt tokens
+//!   (projections batched over the block through the fused GEMM),
+//!   [`Engine::decode_batch`] advances several *sequences* one token
+//!   each. Per-sequence math is independent of batch composition and of
+//!   the worker-thread count, so greedy decode is **bit-identical**
+//!   across batch sizes and across `PEQA_THREADS` settings.
+//! * [`Engine::apply_adapter`] — PEQA task switching: replaces only the
+//!   f32 scale/zero tensors of adapter-covered projections. The packed
+//!   code buffers are never touched, cloned, or re-packed.
+//! * [`Sampling`] / [`sample`] — greedy argmax and seeded top-k.
+//! * [`reference_forward`] — the parity baseline: full causal attention
+//!   over *dense dequantized* weights via the seed's `matmul_naive`.
+//!   The engine must agree with it to ≤ 1e-4 (tests/serve_host.rs).
+//!
+//! Model geometry comes from [`ModelGeom`]: either a typed artifact
+//! meta.json ([`ModelGeom::from_artifact`]) or inferred from the packed
+//! tensors themselves ([`ModelGeom::infer`]; only `n_heads` cannot be
+//! recovered from shapes).
+
+use anyhow::{anyhow, bail, Result};
+
+use super::kvcache::KvCache;
+use crate::model::{Checkpoint, PackedModel};
+use crate::runtime::ArtifactMeta;
+use crate::tensor::Tensor;
+use crate::util::Pcg32;
+
+const RMS_EPS: f32 = 1e-6;
+
+/// Static transformer geometry of a served model (llama family:
+/// RMSNorm + rotary + SwiGLU — the architecture the paper quantizes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelGeom {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+}
+
+impl ModelGeom {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    fn validated(self) -> Result<ModelGeom> {
+        if self.vocab == 0 || self.d_model == 0 || self.n_layers == 0 || self.d_ff == 0 {
+            bail!("degenerate model geometry {self:?}");
+        }
+        if self.n_heads == 0 || self.d_model % self.n_heads != 0 {
+            bail!("n_heads {} must divide d_model {}", self.n_heads, self.d_model);
+        }
+        if self.head_dim() % 2 != 0 {
+            bail!("rotary positions need an even head_dim, got {}", self.head_dim());
+        }
+        Ok(self)
+    }
+
+    /// Geometry from a typed artifact meta.json (the canonical source —
+    /// python/compile is the single source of truth for model shape).
+    pub fn from_artifact(meta: &ArtifactMeta) -> Result<ModelGeom> {
+        let m = meta
+            .model
+            .as_ref()
+            .ok_or_else(|| anyhow!("artifact '{}' carries no model geometry", meta.name))?;
+        if m.family != "llama" {
+            bail!(
+                "host engine serves the llama family (RMSNorm/rope/SwiGLU); \
+                 artifact '{}' is '{}'",
+                meta.name,
+                m.family
+            );
+        }
+        ModelGeom {
+            vocab: m.vocab,
+            d_model: m.d_model,
+            n_layers: m.n_layers,
+            n_heads: m.n_heads,
+            d_ff: m.d_ff,
+        }
+        .validated()
+    }
+
+    /// Infer geometry from a packed model's tensors. `n_heads` cannot be
+    /// recovered from shapes and must be supplied by the caller.
+    pub fn infer(model: &PackedModel, n_heads: usize) -> Result<ModelGeom> {
+        let embed = model
+            .fp_tensor("embed")
+            .ok_or_else(|| anyhow!("packed model has no 'embed' tensor"))?;
+        let (vocab, d_model) = embed.dims2()?;
+        let mut n_layers = 0usize;
+        for name in model.tensor_names() {
+            if let Some(rest) = name.strip_prefix("layers.") {
+                if let Some(i) = rest.split('.').next().and_then(|s| s.parse::<usize>().ok()) {
+                    n_layers = n_layers.max(i + 1);
+                }
+            }
+        }
+        if n_layers == 0 {
+            bail!("packed model has no 'layers.*' tensors — nothing to serve");
+        }
+        let d_ff = if let Some(m) = model.matrix("layers.0.mlp.gate") {
+            m.rows
+        } else if let Some(t) = model.fp_tensor("layers.0.mlp.gate.w") {
+            t.dims2()?.0
+        } else {
+            bail!(
+                "packed model has no 'layers.0.mlp.gate' projection \
+                 (host engine serves the llama family)"
+            );
+        };
+        ModelGeom { vocab, d_model, n_layers, n_heads, d_ff }.validated()
+    }
+}
+
+/// Token selection policy for the decode loop.
+#[derive(Clone, Copy, Debug)]
+pub enum Sampling {
+    /// Deterministic argmax (first index wins ties) — the mode the
+    /// bit-identical batch/thread invariance guarantees apply to.
+    Greedy,
+    /// Sample from the `k` highest logits at `temperature`, drawn from a
+    /// seeded [`Pcg32`] stream (deterministic given the stream order).
+    TopK { k: usize, temperature: f32 },
+}
+
+/// Select the next token from one logits row.
+pub fn sample(logits: &[f32], sampling: Sampling, rng: &mut Pcg32) -> u32 {
+    match sampling {
+        Sampling::Greedy => argmax(logits),
+        Sampling::TopK { k, temperature } => {
+            let k = k.max(1).min(logits.len());
+            // Descending by logit, ties broken by index — a total order,
+            // so partitioning the top k and then sorting only those k
+            // gives exactly the full-sort prefix at O(V) instead of
+            // O(V log V) per sampled token.
+            let cmp = |a: &usize, b: &usize| {
+                logits[*b]
+                    .partial_cmp(&logits[*a])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(b))
+            };
+            let mut idx: Vec<usize> = (0..logits.len()).collect();
+            if k < idx.len() {
+                idx.select_nth_unstable_by(k - 1, cmp);
+                idx.truncate(k);
+            }
+            idx.sort_by(cmp);
+            let t = temperature.max(1e-6);
+            let top = logits[idx[0]];
+            let ws: Vec<f32> = idx.iter().map(|&i| ((logits[i] - top) / t).exp()).collect();
+            let total: f32 = ws.iter().sum();
+            let mut r = rng.f32() * total;
+            for (j, &w) in ws.iter().enumerate() {
+                r -= w;
+                if r <= 0.0 {
+                    return idx[j] as u32;
+                }
+            }
+            idx[k - 1] as u32
+        }
+    }
+}
+
+/// First-index argmax (NaN-safe: comparisons against NaN keep the best).
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for i in 1..logits.len() {
+        if logits[i] > logits[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+/// Host decode engine over a [`PackedModel`] (see module docs).
+pub struct Engine {
+    model: PackedModel,
+    geom: ModelGeom,
+    threads: usize,
+    /// Rotary frequency table, head_dim/2 entries.
+    freqs: Vec<f32>,
+    /// "lm_head" or "embed" (tied head).
+    head_name: &'static str,
+    /// Per-layer tensor names resolved once at construction, so the
+    /// per-token decode loop does no string formatting.
+    layer_names: Vec<LayerNames>,
+}
+
+struct LayerNames {
+    ln1: String,
+    ln2: String,
+    q: String,
+    k: String,
+    v: String,
+    o: String,
+    gate: String,
+    up: String,
+    down: String,
+}
+
+impl Engine {
+    /// Validate that `model` carries a complete llama-family layout for
+    /// `geom` and wrap it for serving. `threads` pins the fused-kernel
+    /// worker count (results are bit-identical for any value).
+    pub fn from_packed(model: PackedModel, geom: ModelGeom, threads: usize) -> Result<Engine> {
+        let geom = geom.validated()?;
+        let d = geom.d_model;
+        let embed = model
+            .fp_tensor("embed")
+            .ok_or_else(|| anyhow!("packed model missing fp tensor 'embed'"))?;
+        if embed.shape() != [geom.vocab, d].as_slice() {
+            bail!("'embed' is {:?}, geometry wants [{}, {d}]", embed.shape(), geom.vocab);
+        }
+        let head_name = if let Some(h) = model.fp_tensor("lm_head") {
+            if h.shape() != [geom.vocab, d].as_slice() {
+                bail!("'lm_head' is {:?}, geometry wants [{}, {d}]", h.shape(), geom.vocab);
+            }
+            "lm_head"
+        } else {
+            "embed" // tied head
+        };
+        let fg = model
+            .fp_tensor("final_norm.g")
+            .ok_or_else(|| anyhow!("packed model missing 'final_norm.g'"))?;
+        if fg.shape() != [d].as_slice() {
+            bail!("'final_norm.g' is {:?}, expected [{d}]", fg.shape());
+        }
+        let mut layer_names = Vec::with_capacity(geom.n_layers);
+        for i in 0..geom.n_layers {
+            let lp = format!("layers.{i}");
+            for ln in ["ln1", "ln2"] {
+                let name = format!("{lp}.{ln}.g");
+                let t = model.fp_tensor(&name).ok_or_else(|| {
+                    anyhow!("packed model missing '{name}' (host engine serves the llama family)")
+                })?;
+                if t.shape() != [d].as_slice() {
+                    bail!("'{name}' is {:?}, expected [{d}]", t.shape());
+                }
+            }
+            for (p, rows, cols) in [
+                ("attn.q", d, d),
+                ("attn.k", d, d),
+                ("attn.v", d, d),
+                ("attn.o", d, d),
+                ("mlp.gate", geom.d_ff, d),
+                ("mlp.up", geom.d_ff, d),
+                ("mlp.down", d, geom.d_ff),
+            ] {
+                let prefix = format!("{lp}.{p}");
+                let dims = if let Some(m) = model.matrix(&prefix) {
+                    (m.rows, m.cols)
+                } else if let Some(t) = model.fp_tensor(&format!("{prefix}.w")) {
+                    t.dims2()?
+                } else {
+                    bail!("packed model missing projection '{prefix}'");
+                };
+                if dims != (rows, cols) {
+                    bail!("projection '{prefix}' is {dims:?}, geometry wants ({rows}, {cols})");
+                }
+            }
+            layer_names.push(LayerNames {
+                ln1: format!("{lp}.ln1.g"),
+                ln2: format!("{lp}.ln2.g"),
+                q: format!("{lp}.attn.q"),
+                k: format!("{lp}.attn.k"),
+                v: format!("{lp}.attn.v"),
+                o: format!("{lp}.attn.o"),
+                gate: format!("{lp}.mlp.gate"),
+                up: format!("{lp}.mlp.up"),
+                down: format!("{lp}.mlp.down"),
+            });
+        }
+        let half = geom.head_dim() / 2;
+        let freqs = (0..half)
+            .map(|i| 10000.0f32.powf(-(i as f32) / half as f32))
+            .collect();
+        Ok(Engine { model, geom, threads: threads.max(1), freqs, head_name, layer_names })
+    }
+
+    pub fn geom(&self) -> &ModelGeom {
+        &self.geom
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn model(&self) -> &PackedModel {
+        &self.model
+    }
+
+    /// Bytes of bit-packed code storage being served (never changes over
+    /// the engine's lifetime — adapters only swap f32 scale/zero tensors).
+    pub fn packed_bytes(&self) -> usize {
+        self.model.packed_bytes()
+    }
+
+    /// A fresh K/V cache sized for this model with the given window.
+    pub fn new_cache(&self, capacity: usize) -> KvCache {
+        KvCache::new(self.geom.n_layers, self.geom.d_model, capacity)
+    }
+
+    /// PEQA task switch: overlay an adapter's scale/zero tensors onto the
+    /// packed projections. Only `{prefix}.s` / `{prefix}.z` tensors are
+    /// accepted and only the f32 scale/zero tensors move — the packed
+    /// integer codes are immutable. Validates everything before mutating
+    /// anything, so a failed swap leaves the engine unchanged. Returns
+    /// the number of tensors swapped.
+    pub fn apply_adapter(&mut self, adapter: &Checkpoint) -> Result<usize> {
+        let mut plan: Vec<(String, bool, &Tensor)> = Vec::with_capacity(adapter.len());
+        for (name, t) in adapter.iter() {
+            let (prefix, is_scale) = if let Some(p) = name.strip_suffix(".s") {
+                (p, true)
+            } else if let Some(p) = name.strip_suffix(".z") {
+                (p, false)
+            } else {
+                bail!(
+                    "scale-swap adapter may only carry .s/.z tensors of packed \
+                     projections, got '{name}'"
+                );
+            };
+            let m = self
+                .model
+                .matrix(prefix)
+                .ok_or_else(|| anyhow!("adapter tensor '{name}' covers no packed projection"))?;
+            if t.shape() != m.scales.shape() {
+                bail!(
+                    "adapter tensor '{name}': shape {:?} != projection's {:?}",
+                    t.shape(),
+                    m.scales.shape()
+                );
+            }
+            plan.push((prefix.to_string(), is_scale, t));
+        }
+        let n = plan.len();
+        for (prefix, is_scale, t) in plan {
+            let m = self.model.matrix_mut(&prefix).expect("validated above");
+            if is_scale {
+                m.scales = t.clone();
+            } else {
+                m.zeros = t.clone();
+            }
+        }
+        Ok(n)
+    }
+
+    /// Feed a block of tokens of ONE sequence through the model,
+    /// appending K/V to `cache`, and return the logits of the last
+    /// position (`vocab` floats). Used both for prompt prefill (the
+    /// projections run batched over the whole block through the fused
+    /// GEMM) and — with a single token — for unbatched decode.
+    pub fn prefill(&self, tokens: &[u32], cache: &mut KvCache) -> Result<Vec<f32>> {
+        let t_new = tokens.len();
+        if t_new == 0 {
+            bail!("prefill needs at least one token");
+        }
+        let d = self.geom.d_model;
+        let base = cache.pos();
+        let mut x = self.gather_embed(tokens)?;
+        for layer in 0..self.geom.n_layers {
+            let ln = &self.layer_names[layer];
+            let (mut q, mut k, v) = self.qkv(ln, &x, t_new)?;
+            let mut ctx = vec![0.0f32; t_new * d];
+            for ti in 0..t_new {
+                let abs = base + ti;
+                self.rope_row(&mut q[ti * d..(ti + 1) * d], abs);
+                self.rope_row(&mut k[ti * d..(ti + 1) * d], abs);
+                cache.write(layer, abs, &k[ti * d..(ti + 1) * d], &v[ti * d..(ti + 1) * d]);
+                self.attend_one(
+                    cache,
+                    layer,
+                    abs,
+                    &q[ti * d..(ti + 1) * d],
+                    &mut ctx[ti * d..(ti + 1) * d],
+                );
+            }
+            self.finish_block(ln, &mut x, &ctx, t_new)?;
+        }
+        cache.advance(t_new);
+        self.head_logits(&x[(t_new - 1) * d..], 1)
+    }
+
+    /// Advance `tokens.len()` sequences by one token each (continuous
+    /// batching decode step). Returns the concatenated logits rows
+    /// `(batch · vocab)`. Per-sequence results are bitwise independent of
+    /// the batch composition: row `i` equals a batch-1 call for that
+    /// sequence alone.
+    pub fn decode_batch(
+        &self,
+        tokens: &[u32],
+        caches: &mut [&mut KvCache],
+    ) -> Result<Vec<f32>> {
+        let b = tokens.len();
+        if b != caches.len() {
+            bail!("decode_batch: {} tokens but {} caches", b, caches.len());
+        }
+        if b == 0 {
+            return Ok(Vec::new());
+        }
+        let d = self.geom.d_model;
+        let mut x = self.gather_embed(tokens)?;
+        for layer in 0..self.geom.n_layers {
+            let ln = &self.layer_names[layer];
+            let (mut q, mut k, v) = self.qkv(ln, &x, b)?;
+            let mut ctx = vec![0.0f32; b * d];
+            for bi in 0..b {
+                let abs = caches[bi].pos();
+                self.rope_row(&mut q[bi * d..(bi + 1) * d], abs);
+                self.rope_row(&mut k[bi * d..(bi + 1) * d], abs);
+                caches[bi].write(layer, abs, &k[bi * d..(bi + 1) * d], &v[bi * d..(bi + 1) * d]);
+                self.attend_one(
+                    &*caches[bi],
+                    layer,
+                    abs,
+                    &q[bi * d..(bi + 1) * d],
+                    &mut ctx[bi * d..(bi + 1) * d],
+                );
+            }
+            self.finish_block(ln, &mut x, &ctx, b)?;
+        }
+        for cache in caches.iter_mut() {
+            cache.advance(1);
+        }
+        self.head_logits(&x, b)
+    }
+
+    // -- forward building blocks ---------------------------------------------
+
+    fn gather_embed(&self, tokens: &[u32]) -> Result<Vec<f32>> {
+        let d = self.geom.d_model;
+        let ed = self.model.fp_tensor("embed").expect("validated at construction").data();
+        let mut x = vec![0.0f32; tokens.len() * d];
+        for (ti, &tok) in tokens.iter().enumerate() {
+            let tok = tok as usize;
+            if tok >= self.geom.vocab {
+                bail!("token id {tok} out of vocab {}", self.geom.vocab);
+            }
+            x[ti * d..(ti + 1) * d].copy_from_slice(&ed[tok * d..(tok + 1) * d]);
+        }
+        Ok(x)
+    }
+
+    /// Pre-norm + the three attention input projections for `b` rows.
+    fn qkv(&self, ln: &LayerNames, x: &[f32], b: usize) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let d = self.geom.d_model;
+        let g1 = self.model.fp_tensor(&ln.ln1).expect("validated");
+        let h = rms_norm_rows(x, g1.data(), b, d);
+        let q = self.proj(&ln.q, &h, b)?;
+        let k = self.proj(&ln.k, &h, b)?;
+        let v = self.proj(&ln.v, &h, b)?;
+        Ok((q, k, v))
+    }
+
+    /// Attention output projection + residual, then the SwiGLU MLP +
+    /// residual, for `b` rows in place on `x`.
+    fn finish_block(&self, ln: &LayerNames, x: &mut [f32], ctx: &[f32], b: usize) -> Result<()> {
+        let o = self.proj(&ln.o, ctx, b)?;
+        for (xv, ov) in x.iter_mut().zip(&o) {
+            *xv += ov;
+        }
+        let d = self.geom.d_model;
+        let g2 = self.model.fp_tensor(&ln.ln2).expect("validated");
+        let h = rms_norm_rows(x, g2.data(), b, d);
+        let gate = self.proj(&ln.gate, &h, b)?;
+        let up = self.proj(&ln.up, &h, b)?;
+        let mut act = vec![0.0f32; gate.len()];
+        for j in 0..gate.len() {
+            act[j] = silu(gate[j]) * up[j];
+        }
+        let down = self.proj(&ln.down, &act, b)?;
+        for (xv, dv) in x.iter_mut().zip(&down) {
+            *xv += dv;
+        }
+        Ok(())
+    }
+
+    /// One projection over `b` activation rows: fused packed GEMM when the
+    /// projection is quantized, dense row-dot fallback otherwise.
+    fn proj(&self, prefix: &str, x: &[f32], b: usize) -> Result<Vec<f32>> {
+        if let Some(m) = self.model.matrix(prefix) {
+            let mut out = vec![0.0f32; b * m.rows];
+            if b == 1 {
+                m.matvec_t(x, self.threads, &mut out)?;
+            } else {
+                m.matmul_t_rows(x, b, self.threads, &mut out)?;
+            }
+            Ok(out)
+        } else {
+            let w = self
+                .model
+                .fp_tensor(&format!("{prefix}.w"))
+                .ok_or_else(|| anyhow!("no projection '{prefix}'"))?;
+            Ok(dense_rows(w, x, b))
+        }
+    }
+
+    /// Rotate one (d_model,) row in place at absolute position `pos`
+    /// (per-head half-split rotary, matching python/compile/model.py).
+    fn rope_row(&self, row: &mut [f32], pos: usize) {
+        let hd = self.geom.head_dim();
+        let half = hd / 2;
+        let p = pos as f32;
+        for h in 0..self.geom.n_heads {
+            let s = &mut row[h * hd..(h + 1) * hd];
+            for i in 0..half {
+                let (sin, cos) = (p * self.freqs[i]).sin_cos();
+                let (x1, x2) = (s[i], s[i + half]);
+                s[i] = x1 * cos - x2 * sin;
+                s[i + half] = x1 * sin + x2 * cos;
+            }
+        }
+    }
+
+    /// Causal attention of one already-roped query row at absolute
+    /// position `abs` over the cache window (which already contains
+    /// `abs`). Writes the (d_model,) context row.
+    fn attend_one(&self, cache: &KvCache, layer: usize, abs: usize, q: &[f32], ctx: &mut [f32]) {
+        let (hh, hd) = (self.geom.n_heads, self.geom.head_dim());
+        let inv = 1.0 / (hd as f32).sqrt();
+        let n = cache.window_len(abs);
+        let start = abs + 1 - n;
+        let mut scores = vec![0.0f32; n];
+        for h in 0..hh {
+            let qh = &q[h * hd..(h + 1) * hd];
+            let mut maxs = f32::NEG_INFINITY;
+            for (j, sc) in scores.iter_mut().enumerate() {
+                let kh = &cache.k_row(layer, start + j)[h * hd..(h + 1) * hd];
+                let mut dot = 0.0f32;
+                for t in 0..hd {
+                    dot += qh[t] * kh[t];
+                }
+                *sc = dot * inv;
+                if *sc > maxs {
+                    maxs = *sc;
+                }
+            }
+            let mut denom = 0.0f32;
+            for sc in scores.iter_mut() {
+                *sc = (*sc - maxs).exp();
+                denom += *sc;
+            }
+            let cxh = &mut ctx[h * hd..(h + 1) * hd];
+            cxh.fill(0.0);
+            for (j, &w) in scores.iter().enumerate() {
+                let p = w / denom;
+                let vh = &cache.v_row(layer, start + j)[h * hd..(h + 1) * hd];
+                for t in 0..hd {
+                    cxh[t] += p * vh[t];
+                }
+            }
+        }
+    }
+
+    /// Final RMSNorm + LM head over `b` rows → `(b, vocab)` logits.
+    fn head_logits(&self, x: &[f32], b: usize) -> Result<Vec<f32>> {
+        let d = self.geom.d_model;
+        let gf = self.model.fp_tensor("final_norm.g").expect("validated");
+        let xn = rms_norm_rows(&x[..b * d], gf.data(), b, d);
+        let head = self.model.fp_tensor(self.head_name).expect("validated");
+        Ok(dense_rows(head, &xn, b))
+    }
+}
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// RMSNorm over `b` rows of width `d`: g · x · rsqrt(mean(x²) + ε).
+fn rms_norm_rows(x: &[f32], g: &[f32], b: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; b * d];
+    for bi in 0..b {
+        let xr = &x[bi * d..(bi + 1) * d];
+        let mut ss = 0.0f32;
+        for &v in xr {
+            ss += v * v;
+        }
+        let inv = 1.0 / (ss / d as f32 + RMS_EPS).sqrt();
+        let orow = &mut out[bi * d..(bi + 1) * d];
+        for j in 0..d {
+            orow[j] = g[j] * xr[j] * inv;
+        }
+    }
+    out
+}
+
+/// Dense projection fallback and LM head: y (b, out) = X · Wᵀ with
+/// W row-major (out, in), accumulated row by row in a fixed order
+/// (deterministic, batch-row independent).
+fn dense_rows(w: &Tensor, x: &[f32], b: usize) -> Vec<f32> {
+    let (o, i) = w.dims2().expect("dense projection is 2-D");
+    let wd = w.data();
+    let mut y = vec![0.0f32; b * o];
+    for bi in 0..b {
+        let xr = &x[bi * i..(bi + 1) * i];
+        let yr = &mut y[bi * o..(bi + 1) * o];
+        for (r, yv) in yr.iter_mut().enumerate() {
+            let wr = &wd[r * i..(r + 1) * i];
+            let mut acc = 0.0f32;
+            for j in 0..i {
+                acc += xr[j] * wr[j];
+            }
+            *yv = acc;
+        }
+    }
+    y
+}
+
+/// Parity baseline: full causal forward over a *dense* fp checkpoint
+/// (the dequantized view of the packed model) using the seed's
+/// single-threaded `matmul_naive` for every projection. Returns the
+/// `(T, vocab)` logits tensor. No KV cache, no packed codes — this is
+/// the "unpack → dequantize → naive matmul" path the fused engine is
+/// verified against (decode parity ≤ 1e-4).
+pub fn reference_forward(fp: &Checkpoint, geom: &ModelGeom, tokens: &[u32]) -> Result<Tensor> {
+    let t_len = tokens.len();
+    if t_len == 0 {
+        bail!("reference_forward needs at least one token");
+    }
+    let d = geom.d_model;
+    let (hh, hd) = (geom.n_heads, geom.head_dim());
+    let half = hd / 2;
+    let embed = fp.req("embed")?;
+    let mut x = vec![0.0f32; t_len * d];
+    for (ti, &tok) in tokens.iter().enumerate() {
+        x[ti * d..(ti + 1) * d]
+            .copy_from_slice(&embed.data()[tok as usize * d..(tok as usize + 1) * d]);
+    }
+    let freqs: Vec<f32> = (0..half)
+        .map(|i| 10000.0f32.powf(-(i as f32) / half as f32))
+        .collect();
+    let rope = |row: &mut [f32], pos: usize| {
+        let p = pos as f32;
+        for h in 0..hh {
+            let s = &mut row[h * hd..(h + 1) * hd];
+            for i in 0..half {
+                let (sin, cos) = (p * freqs[i]).sin_cos();
+                let (x1, x2) = (s[i], s[i + half]);
+                s[i] = x1 * cos - x2 * sin;
+                s[i + half] = x1 * sin + x2 * cos;
+            }
+        }
+    };
+    let proj = |name: String, h: &[f32]| -> Result<Vec<f32>> {
+        let w = fp.req(&name)?;
+        let (_, cin) = w.dims2()?;
+        let ht = Tensor::new(&[h.len() / cin, cin], h.to_vec());
+        Ok(ht.matmul_naive(&w.t())?.into_data())
+    };
+    let inv = 1.0 / (hd as f32).sqrt();
+    for layer in 0..geom.n_layers {
+        let lp = format!("layers.{layer}");
+        let h = rms_norm_rows(&x, fp.req(&format!("{lp}.ln1.g"))?.data(), t_len, d);
+        let mut q = proj(format!("{lp}.attn.q.w"), &h)?;
+        let mut k = proj(format!("{lp}.attn.k.w"), &h)?;
+        let v = proj(format!("{lp}.attn.v.w"), &h)?;
+        for ti in 0..t_len {
+            rope(&mut q[ti * d..(ti + 1) * d], ti);
+            rope(&mut k[ti * d..(ti + 1) * d], ti);
+        }
+        let mut ctx = vec![0.0f32; t_len * d];
+        for ti in 0..t_len {
+            for hi in 0..hh {
+                let qh = &q[ti * d + hi * hd..ti * d + (hi + 1) * hd];
+                let mut scores = vec![0.0f32; ti + 1];
+                let mut maxs = f32::NEG_INFINITY;
+                for (j, sc) in scores.iter_mut().enumerate() {
+                    let kh = &k[j * d + hi * hd..j * d + (hi + 1) * hd];
+                    let mut dot = 0.0f32;
+                    for t in 0..hd {
+                        dot += qh[t] * kh[t];
+                    }
+                    *sc = dot * inv;
+                    if *sc > maxs {
+                        maxs = *sc;
+                    }
+                }
+                let mut denom = 0.0f32;
+                for sc in scores.iter_mut() {
+                    *sc = (*sc - maxs).exp();
+                    denom += *sc;
+                }
+                let cxh = &mut ctx[ti * d + hi * hd..ti * d + (hi + 1) * hd];
+                for (j, &w) in scores.iter().enumerate() {
+                    let p = w / denom;
+                    let vh = &v[j * d + hi * hd..j * d + (hi + 1) * hd];
+                    for t in 0..hd {
+                        cxh[t] += p * vh[t];
+                    }
+                }
+            }
+        }
+        let o = proj(format!("{lp}.attn.o.w"), &ctx)?;
+        for (xv, ov) in x.iter_mut().zip(&o) {
+            *xv += ov;
+        }
+        let h2 = rms_norm_rows(&x, fp.req(&format!("{lp}.ln2.g"))?.data(), t_len, d);
+        let gate = proj(format!("{lp}.mlp.gate.w"), &h2)?;
+        let up = proj(format!("{lp}.mlp.up.w"), &h2)?;
+        let mut act = vec![0.0f32; gate.len()];
+        for j in 0..gate.len() {
+            act[j] = silu(gate[j]) * up[j];
+        }
+        let down = proj(format!("{lp}.mlp.down.w"), &act)?;
+        for (xv, dv) in x.iter_mut().zip(&down) {
+            *xv += dv;
+        }
+    }
+    let xn = rms_norm_rows(&x, fp.req("final_norm.g")?.data(), t_len, d);
+    let head = match fp.get("lm_head") {
+        Some(h) => h,
+        None => embed,
+    };
+    Tensor::new(&[t_len, d], xn).matmul_naive(&head.t())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_first_max_wins_ties() {
+        assert_eq!(argmax(&[0.0, 3.0, 3.0, 1.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+        // NaN never compares greater, so it neither wins nor crashes:
+        // a leading NaN stays "best", an interior NaN is skipped.
+        assert_eq!(argmax(&[f32::NAN, 2.0, 2.0]), 0);
+        assert_eq!(argmax(&[1.0, f32::NAN, 3.0]), 2);
+    }
+
+    #[test]
+    fn topk_sampling_is_seeded_and_respects_k() {
+        let logits = vec![0.1, 5.0, 4.0, -2.0, 3.0];
+        // k = 1 degenerates to greedy regardless of the rng.
+        let mut rng = Pcg32::new(1);
+        for _ in 0..8 {
+            assert_eq!(sample(&logits, Sampling::TopK { k: 1, temperature: 1.0 }, &mut rng), 1);
+        }
+        // Same seed → same draws; all draws land in the top-3 set.
+        let draws = |seed: u64| -> Vec<u32> {
+            let mut rng = Pcg32::new(seed);
+            (0..32)
+                .map(|_| sample(&logits, Sampling::TopK { k: 3, temperature: 1.0 }, &mut rng))
+                .collect()
+        };
+        let a = draws(7);
+        assert_eq!(a, draws(7));
+        assert!(a.iter().all(|t| [1u32, 2, 4].contains(t)), "{a:?}");
+        assert_ne!(a, draws(8));
+    }
+
+    #[test]
+    fn geometry_validation() {
+        let ok = ModelGeom { vocab: 16, d_model: 8, n_layers: 1, n_heads: 2, d_ff: 12 };
+        assert!(ok.validated().is_ok());
+        assert_eq!(ok.head_dim(), 4);
+        let odd_head = ModelGeom { n_heads: 4, ..ok }; // head_dim 2 ok
+        assert!(odd_head.validated().is_ok());
+        let bad_div = ModelGeom { n_heads: 3, ..ok };
+        assert!(bad_div.validated().is_err());
+        let odd = ModelGeom { d_model: 6, n_heads: 2, ..ok }; // head_dim 3
+        assert!(odd.validated().is_err());
+        let zero = ModelGeom { n_layers: 0, ..ok };
+        assert!(zero.validated().is_err());
+    }
+}

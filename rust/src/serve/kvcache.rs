@@ -1,0 +1,170 @@
+//! Per-sequence K/V ring buffers for incremental autoregressive decode.
+//!
+//! One [`KvCache`] belongs to one sequence. Storage is preallocated up
+//! front as two `(n_layers, capacity, d_model)` f32 slabs and never
+//! reallocated during decode — appending position `t` writes slot
+//! `t % capacity`, so a sequence longer than `capacity` degrades to
+//! sliding-window attention over the most recent `capacity` tokens
+//! (keys are stored already rotated at their *absolute* RoPE position,
+//! which keeps relative offsets correct across the wrap).
+//!
+//! The write/advance split exists because the engine processes all of a
+//! token's layers before the token counts as appended: during a forward
+//! step the engine calls [`KvCache::write`] once per layer at the same
+//! absolute position, then [`KvCache::advance`] once the token (or
+//! prefill block) is fully processed.
+
+/// Preallocated per-sequence K/V ring buffer (see module docs).
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    n_layers: usize,
+    d: usize,
+    capacity: usize,
+    /// Absolute sequence length appended so far (monotonic; slots ring).
+    pos: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl KvCache {
+    /// `d` is the per-position row width (n_heads · head_dim).
+    pub fn new(n_layers: usize, d: usize, capacity: usize) -> KvCache {
+        assert!(n_layers > 0 && d > 0 && capacity > 0, "degenerate kv cache");
+        KvCache {
+            n_layers,
+            d,
+            capacity,
+            pos: 0,
+            k: vec![0.0; n_layers * capacity * d],
+            v: vec![0.0; n_layers * capacity * d],
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Absolute sequence length appended so far (RoPE position of the
+    /// *next* token).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Number of positions currently resident (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.pos.min(self.capacity)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pos == 0
+    }
+
+    /// How many positions are attendable when the query sits at absolute
+    /// position `abs` (inclusive of `abs` itself).
+    pub fn window_len(&self, abs: usize) -> usize {
+        (abs + 1).min(self.capacity)
+    }
+
+    #[inline]
+    fn offset(&self, layer: usize, abs: usize) -> usize {
+        debug_assert!(layer < self.n_layers);
+        (layer * self.capacity + abs % self.capacity) * self.d
+    }
+
+    /// Store the K/V rows of absolute position `abs` for `layer`
+    /// (overwrites position `abs − capacity` once the ring wraps).
+    pub fn write(&mut self, layer: usize, abs: usize, k: &[f32], v: &[f32]) {
+        debug_assert_eq!(k.len(), self.d);
+        debug_assert_eq!(v.len(), self.d);
+        let o = self.offset(layer, abs);
+        self.k[o..o + self.d].copy_from_slice(k);
+        self.v[o..o + self.d].copy_from_slice(v);
+    }
+
+    pub fn k_row(&self, layer: usize, abs: usize) -> &[f32] {
+        let o = self.offset(layer, abs);
+        &self.k[o..o + self.d]
+    }
+
+    pub fn v_row(&self, layer: usize, abs: usize) -> &[f32] {
+        let o = self.offset(layer, abs);
+        &self.v[o..o + self.d]
+    }
+
+    /// Mark `n` more positions as fully appended (all layers written).
+    pub fn advance(&mut self, n: usize) {
+        self.pos += n;
+    }
+
+    /// Forget the sequence but keep the allocation (slot reuse between
+    /// requests in the scheduler).
+    pub fn reset(&mut self) {
+        self.pos = 0;
+    }
+
+    /// Preallocated bytes across K and V and all layers.
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(tag: f32, d: usize) -> Vec<f32> {
+        (0..d).map(|j| tag + j as f32).collect()
+    }
+
+    #[test]
+    fn write_read_roundtrip_across_layers() {
+        let d = 4;
+        let mut c = KvCache::new(2, d, 8);
+        assert!(c.is_empty());
+        for t in 0..3usize {
+            for layer in 0..2 {
+                let tag = (10 * layer + t) as f32;
+                c.write(layer, t, &row(tag, d), &row(tag + 0.5, d));
+            }
+            c.advance(1);
+        }
+        assert_eq!(c.pos(), 3);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.k_row(1, 2), row(12.0, d).as_slice());
+        assert_eq!(c.v_row(0, 1), row(1.5, d).as_slice());
+        assert_eq!(c.bytes(), 2 * 2 * 8 * d * 4);
+    }
+
+    #[test]
+    fn ring_wraps_and_window_shrinks_to_capacity() {
+        let d = 2;
+        let cap = 4;
+        let mut c = KvCache::new(1, d, cap);
+        for t in 0..6usize {
+            c.write(0, t, &row(t as f32, d), &row(t as f32, d));
+            c.advance(1);
+        }
+        assert_eq!(c.pos(), 6);
+        assert_eq!(c.len(), cap);
+        // Window at abs=5 covers abs 2..=5; abs 4 reuses slot of abs 0.
+        assert_eq!(c.window_len(5), cap);
+        assert_eq!(c.window_len(1), 2);
+        for t in 2..6usize {
+            assert_eq!(c.k_row(0, t), row(t as f32, d).as_slice(), "abs={t}");
+        }
+        // Slot aliasing: abs 4 and abs 0 share slot 0, latest write wins.
+        assert_eq!(c.k_row(0, 4), c.k_row(0, 0));
+    }
+
+    #[test]
+    fn reset_keeps_allocation() {
+        let mut c = KvCache::new(1, 2, 4);
+        c.write(0, 0, &[1.0, 2.0], &[3.0, 4.0]);
+        c.advance(1);
+        let bytes = c.bytes();
+        c.reset();
+        assert!(c.is_empty());
+        assert_eq!(c.bytes(), bytes);
+        assert_eq!(c.capacity(), 4);
+    }
+}

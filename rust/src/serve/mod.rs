@@ -1,0 +1,146 @@
+//! Host serving engine — packed transformer decode + KV cache +
+//! multi-task scale-swap scheduling, no `xla` feature required.
+//!
+//! This subsystem is the paper's deployment story executed end to end on
+//! a plain host: a [`model::PackedModel`](crate::model::PackedModel)
+//! keeps its sub-4-bit integer codes bit-packed in memory, every block
+//! projection of the decode loop runs through the fused quantized GEMM
+//! (`quant::kernels`), and a task is nothing but f32 scale/zero vectors
+//! that swap in microseconds while the codes never move.
+//!
+//! Layout:
+//! * [`types`] — the serving vocabulary ([`AdapterStore`], [`GenRequest`],
+//!   [`GenResponse`], [`BatcherConfig`], [`ServeMetrics`]) shared with the
+//!   xla `coordinator`, compiled unconditionally.
+//! * [`kvcache`] — preallocated per-sequence K/V ring buffers with
+//!   incremental append (sliding-window attention past capacity).
+//! * [`engine`] — the transformer forward from a packed model
+//!   (embedding gather, RMSNorm, rotary, causal attention over the cache,
+//!   SwiGLU MLP, fp LM head), scale-swap task switching, greedy/top-k
+//!   sampling, and the dense `matmul_naive` reference the engine is
+//!   parity-tested against.
+//! * [`scheduler`] — continuous batching over multiple tasks with swap
+//!   latency recorded into `ServeMetrics::swap_times_s`.
+//!
+//! ## Scale-swap contract
+//!
+//! Packed integer codes are immutable for the life of an [`Engine`];
+//! [`Engine::apply_adapter`] replaces only the f32 scale/zero tensors of
+//! the projections the adapter covers, and adapters for different tasks
+//! are expected to cover the same tensor set (a partial adapter leaves
+//! the uncovered projections on the previously-applied task's scales).
+//!
+//! Entry points: `peqa serve` (CLI demo over a synthesized or on-disk
+//! `.packed` model), `benches/serve_decode.rs` (writes BENCH_serve.json),
+//! `tests/serve_host.rs` (decode parity + determinism).
+
+pub mod engine;
+pub mod kvcache;
+pub mod scheduler;
+pub mod types;
+
+pub use engine::{argmax, reference_forward, sample, Engine, ModelGeom, Sampling};
+pub use kvcache::KvCache;
+pub use scheduler::{Scheduler, SchedulerConfig};
+pub use types::{AdapterStore, BatcherConfig, GenRequest, GenResponse, ServeMetrics};
+
+use anyhow::Result;
+
+use crate::model::{Checkpoint, PackedModel};
+use crate::tensor::Tensor;
+use crate::util::Pcg32;
+
+/// Deterministically initialize a small fp llama-family checkpoint with
+/// the canonical PEQA tensor names — the base model for serving demos,
+/// benches and tests when no pretrained `.packed` file is at hand.
+pub fn synth_fp_base(geom: &ModelGeom, seed: u64) -> Checkpoint {
+    let mut rng = Pcg32::seeded(seed, 0x5e7e);
+    let (v, d, f) = (geom.vocab, geom.d_model, geom.d_ff);
+    let mut ck = Checkpoint::new();
+    ck.insert("embed", Tensor::normal(&[v, d], 0.06, &mut rng));
+    for i in 0..geom.n_layers {
+        let lp = format!("layers.{i}");
+        ck.insert(format!("{lp}.ln1.g"), Tensor::ones(&[d]));
+        ck.insert(format!("{lp}.ln2.g"), Tensor::ones(&[d]));
+        for p in ["attn.q", "attn.k", "attn.v", "attn.o"] {
+            ck.insert(format!("{lp}.{p}.w"), Tensor::normal(&[d, d], 0.08, &mut rng));
+        }
+        ck.insert(format!("{lp}.mlp.gate.w"), Tensor::normal(&[f, d], 0.08, &mut rng));
+        ck.insert(format!("{lp}.mlp.up.w"), Tensor::normal(&[f, d], 0.08, &mut rng));
+        ck.insert(format!("{lp}.mlp.down.w"), Tensor::normal(&[d, f], 0.08, &mut rng));
+    }
+    ck.insert("final_norm.g", Tensor::ones(&[d]));
+    ck.insert("lm_head", Tensor::normal(&[v, d], 0.06, &mut rng));
+    ck
+}
+
+/// Synthesize, RTN-quantize and pack a demo model in one step. Returns
+/// the in-memory [`PackedModel`] plus the PEQA-layout quantized
+/// checkpoint it was packed from (the source of adapters and of the
+/// dequantized parity reference).
+pub fn synth_packed(
+    geom: &ModelGeom,
+    bits: u8,
+    group: Option<usize>,
+    seed: u64,
+) -> Result<(PackedModel, Checkpoint)> {
+    let fp = synth_fp_base(geom, seed);
+    let q = crate::pipeline::rtn_quantize(&fp, bits, group)?;
+    let pm = PackedModel::from_checkpoint(&q, bits)?;
+    Ok((pm, q))
+}
+
+/// Build one adapter per task from a quantized base checkpoint. The
+/// first task serves the base scales unchanged; each later task applies
+/// a deterministic per-element jitter to the scale tensors, standing in
+/// for per-task fine-tuned s₀+Δs. Zero-points ride along unchanged, so
+/// every adapter covers the full (s, z) tensor set of every projection.
+pub fn synth_adapters(base_q: &Checkpoint, tasks: &[&str], seed: u64) -> AdapterStore {
+    let mut store = AdapterStore::new();
+    let mut rng = Pcg32::seeded(seed, 0xada9);
+    for (ti, task) in tasks.iter().enumerate() {
+        let mut adapter = base_q.extract_adapter(true);
+        if ti > 0 {
+            let names = adapter.names().to_vec();
+            for name in names {
+                if name.ends_with(".s") {
+                    let mut t = adapter.get(&name).expect("just listed").clone();
+                    for v in t.data_mut() {
+                        *v *= 1.0 + 0.2 * (rng.f32() - 0.5);
+                    }
+                    adapter.insert(name, t);
+                }
+            }
+        }
+        store.insert(*task, adapter);
+    }
+    store
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_model_serves_and_adapters_differ() {
+        let geom = ModelGeom { vocab: 48, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32 };
+        let (pm, base_q) = synth_packed(&geom, 3, Some(8), 9).unwrap();
+        let inferred = ModelGeom::infer(&pm, 2).unwrap();
+        assert_eq!(inferred, geom);
+        let store = synth_adapters(&base_q, &["x", "y", "z"], 1);
+        assert_eq!(store.tasks(), vec!["x", "y", "z"]);
+        // Task x is the base; y and z are perturbed and mutually distinct.
+        let s0 = store.get("x").unwrap().req("layers.0.attn.q.s").unwrap();
+        let s1 = store.get("y").unwrap().req("layers.0.attn.q.s").unwrap();
+        let s2 = store.get("z").unwrap().req("layers.0.attn.q.s").unwrap();
+        assert_eq!(s0, base_q.req("layers.0.attn.q.s").unwrap());
+        assert!(s0.max_abs_diff(s1) > 0.0);
+        assert!(s1.max_abs_diff(s2) > 0.0);
+        // Determinism: same seed, same adapters.
+        let store2 = synth_adapters(&base_q, &["x", "y", "z"], 1);
+        assert_eq!(
+            store.get("y").unwrap().req("layers.0.attn.q.s").unwrap(),
+            store2.get("y").unwrap().req("layers.0.attn.q.s").unwrap()
+        );
+    }
+}

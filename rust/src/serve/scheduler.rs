@@ -1,0 +1,314 @@
+//! Multi-task continuous-batching scheduler over the host decode engine.
+//!
+//! The serving loop the paper's Table 1 sketches, realized on the host
+//! path: many tasks share one packed integer model; a task switch moves
+//! only the f32 scale/zero tensors of the adapter-covered projections
+//! ([`Engine::apply_adapter`] — codes never move) and its wall time is
+//! recorded into [`ServeMetrics::swap_times_s`].
+//!
+//! Scheduling policy:
+//! * Requests queue FIFO; the task of the queue head selects the next
+//!   adapter. To minimize swaps the scheduler then drains *every* queued
+//!   request of that task before switching again (task-greedy).
+//! * Within a task, decoding is **continuous batching**: up to
+//!   `max_batch` sequences advance together one token per step, and the
+//!   moment one finishes, the next queued same-task request is admitted
+//!   (prefilled) into the freed slot — the batch never drains to empty
+//!   between requests.
+//! * With [`Sampling::Greedy`] the generated tokens of every request are
+//!   bit-identical regardless of `max_batch` and of the engine's worker
+//!   thread count (the engine's per-sequence math is batch-independent);
+//!   top-k sampling is deterministic given the scheduler seed but its
+//!   draw order depends on batch composition.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::engine::{sample, Engine, Sampling};
+use super::kvcache::KvCache;
+use super::types::{AdapterStore, BatcherConfig, GenRequest, GenResponse, ServeMetrics};
+use crate::util::Pcg32;
+
+/// Scheduler knobs beyond the shared [`BatcherConfig`].
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    pub max_batch: usize,
+    /// Per-sequence KV-cache capacity (attention window); sequences
+    /// longer than this degrade to sliding-window attention.
+    pub window: usize,
+    pub sampling: Sampling,
+    /// Seed of the top-k sampling stream.
+    pub seed: u64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            max_batch: BatcherConfig::default().max_batch,
+            window: 256,
+            sampling: Sampling::Greedy,
+            seed: 0,
+        }
+    }
+}
+
+struct Slot {
+    req: GenRequest,
+    submitted: Instant,
+    started: Instant,
+    cache: KvCache,
+    /// The token to feed at the next decode step (last sampled).
+    next_token: u32,
+    out: Vec<u32>,
+}
+
+/// Multi-task serving loop: queue + scale-swap + continuous batching.
+pub struct Scheduler {
+    engine: Engine,
+    adapters: AdapterStore,
+    cfg: SchedulerConfig,
+    current_task: Option<String>,
+    queue: VecDeque<(GenRequest, Instant)>,
+    next_id: u64,
+    rng: Pcg32,
+    /// Reset KV caches of finished requests, reused by later admits so
+    /// steady-state serving stops allocating window-sized buffers.
+    spare_caches: Vec<KvCache>,
+    pub metrics: ServeMetrics,
+}
+
+impl Scheduler {
+    pub fn new(engine: Engine, adapters: AdapterStore, cfg: SchedulerConfig) -> Scheduler {
+        Scheduler {
+            engine,
+            adapters,
+            cfg,
+            current_task: None,
+            queue: VecDeque::new(),
+            next_id: 1,
+            rng: Pcg32::seeded(cfg.seed, 0x5c4ed),
+            spare_caches: Vec::new(),
+            metrics: ServeMetrics::default(),
+        }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    pub fn tasks(&self) -> Vec<&str> {
+        self.adapters.tasks()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn submit(&mut self, task: &str, prompt: Vec<u32>, max_new: usize, stop: u32) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back((
+            GenRequest { id, task: task.to_string(), prompt, max_new, stop },
+            Instant::now(),
+        ));
+        id
+    }
+
+    /// Switch the served task by scale swap; returns the swap wall time
+    /// (0 and unrecorded when the task is already current).
+    fn switch_task(&mut self, task: &str) -> Result<f64> {
+        if self.current_task.as_deref() == Some(task) {
+            return Ok(0.0);
+        }
+        let t0 = Instant::now();
+        // The measured swap is exactly the adapter bytes moved once:
+        // apply_adapter clones each s/z tensor into the packed matrices.
+        let adapter = self
+            .adapters
+            .get(task)
+            .ok_or_else(|| anyhow!("no adapter registered for task '{task}'"))?;
+        self.engine.apply_adapter(adapter)?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.metrics.swap_times_s.push(dt);
+        self.current_task = Some(task.to_string());
+        Ok(dt)
+    }
+
+    /// Drain the queue; returns responses in completion order.
+    pub fn run_until_idle(&mut self) -> Result<Vec<GenResponse>> {
+        let wall0 = Instant::now();
+        let mut responses = Vec::new();
+        while let Some(task) = self.queue.front().map(|(r, _)| r.task.clone()) {
+            self.switch_task(&task)?;
+            let mut active: Vec<Slot> = Vec::new();
+            loop {
+                self.admit(&task, &mut active, &mut responses)?;
+                if active.is_empty() {
+                    break;
+                }
+                // One synchronized decode step over the live slots.
+                let tokens: Vec<u32> = active.iter().map(|s| s.next_token).collect();
+                {
+                    let mut caches: Vec<&mut KvCache> =
+                        active.iter_mut().map(|s| &mut s.cache).collect();
+                    let logits = self.engine.decode_batch(&tokens, &mut caches)?;
+                    drop(caches);
+                    self.metrics.decode_steps += 1;
+                    let vocab = self.engine.geom().vocab;
+                    let mut i = 0;
+                    while i < active.len() {
+                        let next =
+                            sample(&logits[i * vocab..(i + 1) * vocab], self.cfg.sampling, &mut self.rng);
+                        let slot = &mut active[i];
+                        let mut done = false;
+                        if next == slot.req.stop {
+                            // Stop id never reaches the output tokens.
+                            done = true;
+                        } else {
+                            slot.out.push(next);
+                            slot.next_token = next;
+                            if slot.out.len() >= slot.req.max_new {
+                                done = true;
+                            }
+                        }
+                        if done {
+                            let finished = active.swap_remove(i);
+                            responses.push(self.finish_slot(finished));
+                        } else {
+                            i += 1;
+                        }
+                    }
+                }
+            }
+        }
+        self.metrics.wall_s += wall0.elapsed().as_secs_f64();
+        Ok(responses)
+    }
+
+    /// Pull queued `task` requests into free batch slots, prefilling each
+    /// prompt. Degenerate requests (empty prompt, `max_new == 0`, or a
+    /// stop token predicted straight from the prompt) complete here.
+    fn admit(
+        &mut self,
+        task: &str,
+        active: &mut Vec<Slot>,
+        responses: &mut Vec<GenResponse>,
+    ) -> Result<()> {
+        while active.len() < self.cfg.max_batch.max(1) {
+            let Some(idx) = self.queue.iter().position(|(r, _)| r.task == task) else {
+                break;
+            };
+            let (req, submitted) = self.queue.remove(idx).expect("position is in range");
+            let started = Instant::now();
+            if req.prompt.is_empty() || req.max_new == 0 {
+                // Degenerate request: completes without touching the engine.
+                let resp = self.finish(req, submitted, started, Vec::new());
+                responses.push(resp);
+                continue;
+            }
+            let mut cache = self
+                .spare_caches
+                .pop()
+                .unwrap_or_else(|| self.engine.new_cache(self.cfg.window.max(1)));
+            let logits = self.engine.prefill(&req.prompt, &mut cache)?;
+            let first = sample(&logits, self.cfg.sampling, &mut self.rng);
+            let mut slot = Slot { req, submitted, started, cache, next_token: first, out: Vec::new() };
+            if first == slot.req.stop {
+                responses.push(self.finish_slot(slot));
+                continue;
+            }
+            slot.out.push(first);
+            if slot.out.len() >= slot.req.max_new {
+                responses.push(self.finish_slot(slot));
+                continue;
+            }
+            active.push(slot);
+        }
+        Ok(())
+    }
+
+    fn finish_slot(&mut self, slot: Slot) -> GenResponse {
+        let Slot { req, submitted, started, mut cache, out, .. } = slot;
+        // Recycle the window-sized allocation for the next admit.
+        if cache.capacity() == self.cfg.window.max(1) {
+            cache.reset();
+            self.spare_caches.push(cache);
+        }
+        self.finish(req, submitted, started, out)
+    }
+
+    fn finish(
+        &mut self,
+        req: GenRequest,
+        submitted: Instant,
+        started: Instant,
+        out: Vec<u32>,
+    ) -> GenResponse {
+        let queue_s = (started - submitted).as_secs_f64();
+        let latency_s = submitted.elapsed().as_secs_f64();
+        self.metrics.completed += 1;
+        self.metrics.generated_tokens += out.len();
+        self.metrics.latencies_s.push(latency_s);
+        self.metrics.queue_s.push(queue_s);
+        GenResponse { id: req.id, task: req.task, tokens: out, queue_s, latency_s }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{synth_adapters, synth_packed};
+    use crate::serve::engine::ModelGeom;
+
+    fn tiny() -> (Engine, AdapterStore) {
+        let geom = ModelGeom { vocab: 64, d_model: 16, n_layers: 1, n_heads: 2, d_ff: 32 };
+        let (pm, base_q) = synth_packed(&geom, 4, None, 3).unwrap();
+        let engine = Engine::from_packed(pm, geom, 2).unwrap();
+        let adapters = synth_adapters(&base_q, &["a", "b", "c"], 5);
+        (engine, adapters)
+    }
+
+    #[test]
+    fn drains_mixed_tasks_with_scale_swaps() {
+        let (engine, adapters) = tiny();
+        let mut sched = Scheduler::new(engine, adapters, SchedulerConfig::default());
+        for i in 0..9u32 {
+            let task = ["a", "b", "c"][(i % 3) as usize];
+            sched.submit(task, vec![1 + i, 2, 3], 5, u32::MAX);
+        }
+        let responses = sched.run_until_idle().unwrap();
+        assert_eq!(responses.len(), 9);
+        assert_eq!(sched.metrics.completed, 9);
+        assert_eq!(sched.metrics.generated_tokens, 9 * 5);
+        // Task-greedy drain: one swap per distinct task.
+        assert_eq!(sched.metrics.swap_times_s.len(), 3);
+        assert_eq!(sched.pending(), 0);
+        assert!(sched.metrics.wall_s > 0.0);
+        assert!(sched.metrics.decode_steps > 0);
+    }
+
+    #[test]
+    fn degenerate_requests_complete_without_decoding() {
+        let (engine, adapters) = tiny();
+        let mut sched = Scheduler::new(engine, adapters, SchedulerConfig::default());
+        let id_empty = sched.submit("a", vec![], 5, u32::MAX);
+        let id_zero = sched.submit("a", vec![1, 2], 0, u32::MAX);
+        let responses = sched.run_until_idle().unwrap();
+        assert_eq!(responses.len(), 2);
+        for r in &responses {
+            assert!(r.tokens.is_empty(), "id {}", r.id);
+            assert!([id_empty, id_zero].contains(&r.id));
+        }
+        assert_eq!(sched.metrics.decode_steps, 0);
+    }
+
+    #[test]
+    fn unknown_task_is_an_error() {
+        let (engine, adapters) = tiny();
+        let mut sched = Scheduler::new(engine, adapters, SchedulerConfig::default());
+        sched.submit("nope", vec![1], 3, u32::MAX);
+        assert!(sched.run_until_idle().is_err());
+    }
+}

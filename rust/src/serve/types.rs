@@ -1,0 +1,191 @@
+//! Shared serving vocabulary — the request/response/metrics/adapter types
+//! used by *both* serving paths: the host decode engine
+//! ([`serve::engine`](crate::serve::engine) / [`serve::scheduler`](crate::serve::scheduler))
+//! and, with `--features xla`, the artifact-driven `coordinator`.
+//!
+//! These types used to live inside the `coordinator` module and were
+//! therefore gated behind the `xla` feature; the host engine and the
+//! coordinator now share one vocabulary (the coordinator re-exports them),
+//! so a request produced for one backend is valid for the other.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::model::Checkpoint;
+use crate::util::stats::{mean, percentile};
+
+/// Named task adapters (the paper's s₀+Δs per task). An adapter is a
+/// [`Checkpoint`] holding only the f32 scale (and optionally zero-point)
+/// vectors of the quantized projections — kilobytes per task. The packed
+/// integer codes are shared by every task and are never part of an
+/// adapter: task switching is a scale swap, codes never move.
+#[derive(Default)]
+pub struct AdapterStore {
+    adapters: HashMap<String, Checkpoint>,
+}
+
+impl AdapterStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, task: impl Into<String>, adapter: Checkpoint) {
+        self.adapters.insert(task.into(), adapter);
+    }
+
+    pub fn get(&self, task: &str) -> Option<&Checkpoint> {
+        self.adapters.get(task)
+    }
+
+    pub fn tasks(&self) -> Vec<&str> {
+        let mut t: Vec<&str> = self.adapters.keys().map(|s| s.as_str()).collect();
+        t.sort();
+        t
+    }
+
+    /// Total bytes across all adapters (they are tiny — that's the point).
+    pub fn total_bytes(&self) -> u64 {
+        self.adapters
+            .values()
+            .map(|a| a.n_params() as u64 * 4)
+            .sum()
+    }
+
+    pub fn save_all(&self, dir: &Path) -> Result<()> {
+        for (task, a) in &self.adapters {
+            a.save(&dir.join(format!("{task}.adapter")))?;
+        }
+        Ok(())
+    }
+
+    pub fn load_dir(dir: &Path) -> Result<AdapterStore> {
+        let mut store = AdapterStore::new();
+        for entry in std::fs::read_dir(dir)? {
+            let p = entry?.path();
+            if let Some(name) = p.file_name().and_then(|s| s.to_str()) {
+                if let Some(task) = name.strip_suffix(".adapter") {
+                    store.insert(task.to_string(), Checkpoint::load(&p)?);
+                }
+            }
+        }
+        Ok(store)
+    }
+}
+
+/// One generation request: decode up to `max_new` tokens after `prompt`
+/// with task `task`'s adapter, stopping early if `stop` is sampled (the
+/// stop id itself never appears in the response tokens).
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub id: u64,
+    pub task: String,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    pub stop: u32,
+}
+
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub id: u64,
+    pub task: String,
+    pub tokens: Vec<u32>,
+    pub queue_s: f64,
+    pub latency_s: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Max requests decoded together (host: engine batch; xla: ≤ the
+    /// artifact's batch dim).
+    pub max_batch: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8 }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    pub completed: usize,
+    pub generated_tokens: usize,
+    pub latencies_s: Vec<f64>,
+    pub queue_s: Vec<f64>,
+    /// Wall time of each real task switch (scale swap or full reload);
+    /// same-task groups record nothing.
+    pub swap_times_s: Vec<f64>,
+    pub decode_steps: usize,
+    pub wall_s: f64,
+}
+
+impl ServeMetrics {
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.wall_s > 0.0 { self.generated_tokens as f64 / self.wall_s } else { 0.0 }
+    }
+
+    pub fn p50_latency(&self) -> f64 {
+        if self.latencies_s.is_empty() { 0.0 } else { percentile(&self.latencies_s, 50.0) }
+    }
+
+    pub fn p99_latency(&self) -> f64 {
+        if self.latencies_s.is_empty() { 0.0 } else { percentile(&self.latencies_s, 99.0) }
+    }
+
+    pub fn mean_swap_s(&self) -> f64 {
+        mean(&self.swap_times_s)
+    }
+
+    /// p99 task-switch wall time — the ROADMAP's switch-latency target.
+    pub fn p99_swap_s(&self) -> f64 {
+        if self.swap_times_s.is_empty() { 0.0 } else { percentile(&self.swap_times_s, 99.0) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn adapter_store_roundtrip() {
+        let mut store = AdapterStore::new();
+        let mut a = Checkpoint::new();
+        a.insert("l.s", Tensor::full(&[4, 1], 0.5));
+        store.insert("taskA", a);
+        let mut b = Checkpoint::new();
+        b.insert("l.s", Tensor::full(&[4, 1], 0.9));
+        store.insert("taskB", b);
+        assert_eq!(store.tasks(), vec!["taskA", "taskB"]);
+        assert_eq!(store.total_bytes(), 2 * 4 * 4);
+
+        let dir = std::env::temp_dir().join("peqa_test_adapters");
+        std::fs::create_dir_all(&dir).unwrap();
+        store.save_all(&dir).unwrap();
+        let back = AdapterStore::load_dir(&dir).unwrap();
+        assert_eq!(back.tasks(), vec!["taskA", "taskB"]);
+        assert_eq!(back.get("taskB").unwrap().req("l.s").unwrap().data()[0], 0.9);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn metrics_aggregation() {
+        let mut m = ServeMetrics::default();
+        m.generated_tokens = 100;
+        m.wall_s = 2.0;
+        m.latencies_s = vec![0.1, 0.2, 0.3, 0.4];
+        m.swap_times_s = vec![0.001, 0.002, 0.003];
+        assert_eq!(m.tokens_per_s(), 50.0);
+        assert!((m.p50_latency() - 0.25).abs() < 1e-9);
+        assert!(m.p99_latency() <= 0.4 && m.p99_latency() > 0.39);
+        assert!((m.mean_swap_s() - 0.002).abs() < 1e-9);
+        assert!(m.p99_swap_s() <= 0.003 && m.p99_swap_s() > 0.0029);
+        // Empty metrics never divide by zero.
+        let e = ServeMetrics::default();
+        assert_eq!(e.tokens_per_s(), 0.0);
+        assert_eq!(e.p50_latency(), 0.0);
+        assert_eq!(e.p99_swap_s(), 0.0);
+    }
+}

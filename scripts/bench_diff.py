@@ -1,0 +1,143 @@
+#!/usr/bin/env python3
+"""Bench trend diff — fail CI on perf regressions of the fused path.
+
+Compares the bench result files the CI run just wrote at the repo root
+(BENCH_kernels.json from benches/kernels_micro.rs, BENCH_serve.json from
+benches/serve_decode.rs) against committed baselines under
+scripts/baselines/, and exits non-zero when the fused hot path regressed
+by more than the threshold (default 20%):
+
+* kernels: per (bits, group) config, the fused packed GEMM's mean_s may
+  not exceed baseline * (1 + threshold);
+* serve: tokens_per_s may not drop below baseline * (1 - threshold).
+  Swap-time drift is reported but only warns (microsecond-scale numbers
+  are too noisy to gate on).
+
+Baselines are only comparable when they were produced with the same
+bench configuration (dim/threads/quick for kernels; geometry/threads/
+quick for serve); a config mismatch skips the comparison with a notice
+instead of failing, since CI machines differ.
+
+Usage:
+  scripts/bench_diff.py [--threshold 0.2] [--update]
+
+--update copies the current result files into scripts/baselines/
+(seeding them on first run, refreshing after an accepted perf change).
+A missing baseline or missing current file is a notice, not a failure.
+"""
+
+import argparse
+import json
+import pathlib
+import shutil
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+BASELINES = ROOT / "scripts" / "baselines"
+FILES = ["BENCH_kernels.json", "BENCH_serve.json"]
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def config_matches(cur, base, keys):
+    diffs = [k for k in keys if cur.get(k) != base.get(k)]
+    if diffs:
+        print(f"  config changed ({', '.join(diffs)}) — baseline not comparable, skipping")
+        return False
+    return True
+
+
+def diff_kernels(cur, base, thr):
+    fails = []
+    if not config_matches(cur, base, ["dim", "threads", "quick"]):
+        return fails
+    bidx = {
+        (e.get("bits"), e.get("group"), e.get("path")): e for e in base.get("results", [])
+    }
+    for e in cur.get("results", []):
+        if e.get("path") != "fused":
+            continue
+        b = bidx.get((e.get("bits"), e.get("group"), e.get("path")))
+        if b is None or not b.get("mean_s"):
+            continue
+        ratio = e["mean_s"] / b["mean_s"]
+        line = (
+            f"  fused b{e['bits']}/{e['group']}: {e['mean_s'] * 1e3:.2f} ms "
+            f"vs baseline {b['mean_s'] * 1e3:.2f} ms ({ratio:.0%} of baseline)"
+        )
+        if ratio > 1.0 + thr:
+            fails.append(line + f"  REGRESSION > +{thr:.0%}")
+            print(line + "  ** REGRESSION **")
+        else:
+            print(line)
+    return fails
+
+
+def diff_serve(cur, base, thr):
+    fails = []
+    if not config_matches(
+        cur, base, ["quick", "threads", "n_layers", "d_model", "bits", "requests"]
+    ):
+        return fails
+    tps_cur, tps_base = cur.get("tokens_per_s", 0.0), base.get("tokens_per_s", 0.0)
+    if tps_base > 0:
+        ratio = tps_cur / tps_base
+        line = f"  tokens/s: {tps_cur:.1f} vs baseline {tps_base:.1f} ({ratio:.0%} of baseline)"
+        if ratio < 1.0 - thr:
+            fails.append(line + f"  REGRESSION > -{thr:.0%}")
+            print(line + "  ** REGRESSION **")
+        else:
+            print(line)
+    sw_cur, sw_base = cur.get("swap_p99_s", 0.0), base.get("swap_p99_s", 0.0)
+    if sw_base > 0:
+        drift = sw_cur / sw_base
+        note = " (warn only — not gated)" if drift > 1.0 + thr else ""
+        print(f"  swap p99: {sw_cur * 1e3:.4f} ms vs baseline {sw_base * 1e3:.4f} ms{note}")
+    return fails
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--threshold", type=float, default=0.2)
+    ap.add_argument("--update", action="store_true", help="refresh the committed baselines")
+    args = ap.parse_args()
+
+    fails = []
+    for name in FILES:
+        cur_path = ROOT / name
+        base_path = BASELINES / name
+        print(f"== {name} ==")
+        if not cur_path.exists():
+            print(f"  {cur_path} not found (bench not run) — skipping")
+            continue
+        if args.update:
+            BASELINES.mkdir(parents=True, exist_ok=True)
+            shutil.copyfile(cur_path, base_path)
+            print(f"  baseline updated → {base_path.relative_to(ROOT)}")
+            continue
+        if not base_path.exists():
+            print(
+                f"  no committed baseline ({base_path.relative_to(ROOT)}); "
+                "run scripts/bench_diff.py --update to seed it"
+            )
+            continue
+        cur, base = load(cur_path), load(base_path)
+        if name == "BENCH_kernels.json":
+            fails += diff_kernels(cur, base, args.threshold)
+        else:
+            fails += diff_serve(cur, base, args.threshold)
+
+    if fails:
+        print(f"\nFAIL: {len(fails)} fused-path regression(s) beyond {args.threshold:.0%}:")
+        for f in fails:
+            print(f)
+        return 1
+    print("\nbench trend ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

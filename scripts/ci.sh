@@ -1,10 +1,12 @@
 #!/usr/bin/env bash
-# CI entrypoint: tier-1 verify plus a smoke-mode kernel bench so every PR
-# leaves a perf datapoint (BENCH_kernels.json at the repo root).
+# CI entrypoint: tier-1 verify plus smoke-mode benches so every PR leaves
+# perf datapoints (BENCH_kernels.json + BENCH_serve.json at the repo
+# root), then the trend diff that fails on >20% fused-path regressions.
 #
-#   scripts/ci.sh            tier-1 + quick kernels_micro bench
-#   scripts/ci.sh --full     same, but the bench runs at full size
-#                            (4096x4096, the acceptance measurement)
+#   scripts/ci.sh            tier-1 + quick kernels_micro + serve_decode
+#   scripts/ci.sh --full     same, but the benches run at full size
+#                            (4096x4096 GEMM / 4-layer serve model — the
+#                            acceptance measurements)
 #
 # The default build has no xla feature (the vendored PJRT crate is not in
 # the registry); artifact-driven tests skip themselves.
@@ -30,3 +32,17 @@ PEQA_BENCH_QUICK=$QUICK PEQA_BENCH_OUT="$PWD/BENCH_kernels.json" \
 
 test -s BENCH_kernels.json
 echo "== ok: BENCH_kernels.json written =="
+
+echo "== serve_decode bench (PEQA_BENCH_QUICK=$QUICK) =="
+PEQA_BENCH_QUICK=$QUICK PEQA_BENCH_OUT="$PWD/BENCH_serve.json" \
+  cargo bench -p peqa --bench serve_decode
+
+test -s BENCH_serve.json
+echo "== ok: BENCH_serve.json written =="
+
+echo "== bench trend diff (scripts/baselines/) =="
+if command -v python3 >/dev/null 2>&1; then
+  python3 scripts/bench_diff.py
+else
+  echo "python3 not found; skipping bench trend diff"
+fi
