@@ -75,6 +75,8 @@ fn main() -> anyhow::Result<()> {
     rowf(&mut table, "swap mean (ms)", format!("{:.4}", m.mean_swap_s() * 1e3));
     rowf(&mut table, "swap p99 (ms)", format!("{:.4}", m.p99_swap_s() * 1e3));
     rowf(&mut table, "decode steps", format!("{}", m.decode_steps));
+    rowf(&mut table, "prefill batches", format!("{}", m.prefill_batches));
+    rowf(&mut table, "prefill tokens", format!("{}", m.prefill_tokens));
     rowf(&mut table, "packed code bytes", format!("{packed_bytes}"));
     rowf(&mut table, "adapter bytes (3 tasks)", format!("{adapter_bytes}"));
     table.print();
@@ -98,6 +100,8 @@ fn main() -> anyhow::Result<()> {
         ("requests", Value::num(m.completed as f64)),
         ("generated_tokens", Value::num(m.generated_tokens as f64)),
         ("decode_steps", Value::num(m.decode_steps as f64)),
+        ("prefill_batches", Value::num(m.prefill_batches as f64)),
+        ("prefill_tokens", Value::num(m.prefill_tokens as f64)),
         ("tokens_per_s", Value::num(m.tokens_per_s())),
         ("p50_latency_s", Value::num(m.p50_latency())),
         ("p99_latency_s", Value::num(m.p99_latency())),

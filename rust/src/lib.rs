@@ -34,14 +34,34 @@
 //! The default build *serves*, not just quantizes/packs: `serve::engine`
 //! decodes autoregressively from a `model::PackedModel` with every block
 //! projection running through the fused packed GEMM (embedding gather,
-//! RMSNorm, rotary attention over per-sequence `serve::kvcache` ring
-//! buffers, SwiGLU MLP, fp LM head), and `serve::scheduler` continuously
-//! batches multi-task traffic, switching tasks by swapping only the f32
-//! scale/zero tensors — the packed integer codes are immutable (the
-//! paper's scale-swap deployment contract). The request/response/metrics
-//! vocabulary lives in `serve::types` and is shared with the xla
-//! coordinator. `peqa serve` runs the CLI demo; `benches/serve_decode.rs`
-//! writes `BENCH_serve.json` (tokens/s, latency p50/p99, swap p99).
+//! RMSNorm, head-blocked rotary attention over per-sequence
+//! `serve::kvcache` ring buffers, SwiGLU MLP, fp LM head) out of a
+//! per-engine scratch arena (no steady-state allocation), and
+//! `serve::scheduler` continuously batches multi-task traffic with
+//! cross-request prefill batching, switching tasks by swapping only the
+//! f32 scale/zero tensors — the packed integer codes are immutable and
+//! uncovered projections revert to base scales (the paper's scale-swap
+//! deployment contract, residue-free). `serve::server` wraps the
+//! scheduler in a worker thread so concurrent clients submit/await over
+//! a channel. The request/response/metrics vocabulary lives in
+//! `serve::types` and is shared with the xla coordinator. `peqa serve`
+//! runs the CLI demo; `benches/serve_decode.rs` writes
+//! `BENCH_serve.json` (tokens/s, latency p50/p99, swap p99).
+//!
+//! ## Environment knobs
+//!
+//! The single reference for every `PEQA_*` variable the crate and its
+//! scripts read:
+//!
+//! | Variable | Effect |
+//! |---|---|
+//! | `PEQA_THREADS` | Worker-thread count of the host kernel layer ([`util::num_threads`]); results are bit-identical at any value. Defaults to available parallelism. |
+//! | `PEQA_BENCH_QUICK` | `1` shrinks every bench (model size / request volume) to smoke scale; `0`/unset runs full size ([`bench::quick_mode`]). `scripts/ci.sh` sets it (`--full` clears it). |
+//! | `PEQA_BENCH_OUT` | Absolute output path for a bench's JSON result file (`BENCH_kernels.json`, `BENCH_serve.json`); defaults to the repo root. |
+//! | `PEQA_BENCH_DIM` | Overrides the GEMM dimension of `benches/kernels_micro.rs`. |
+//! | `PEQA_BENCH_STEPS` / `PEQA_PRETRAIN_STEPS` | Step-count overrides for the xla train benches/pipeline. |
+//! | `PEQA_LOG` | Log level of [`util::log`] (`debug`/`info`/`warn`/`error`). |
+//! | `PEQA_SKIP_TREND` | `1` lets `scripts/ci.sh` pass without `python3` by skipping the bench trend diff (otherwise a missing interpreter fails CI loudly). |
 //!
 //! ## Feature `xla`
 //!

@@ -57,7 +57,9 @@ peqa — PEQA (NeurIPS 2023) reproduction CLI
                   [--tasks 3] [--requests 24] [--max-new 24] [--batch 8]
                   [--topk 0] [--temp 0.8] [--window 256] [--seed 7]
                   [--bits 4] [--group g] [--layers 2] [--d-model 64]
-                  [--d-ff 192] [--vocab 512]
+                  [--d-ff 192] [--vocab 512] [--clients 0]
+                  (--clients N > 0 serves the same load through the
+                   threaded serve::server with N concurrent clients)
   peqa serve-demo --size n3 [--requests 16] [--full-reload]      [xla]
   peqa memreport
 
@@ -208,6 +210,7 @@ fn run() -> Result<()> {
                 d_model: args.get_usize("d-model", 64)?,
                 d_ff: args.get_usize("d-ff", 192)?,
                 vocab: args.get_usize("vocab", 512)?,
+                clients: args.get_usize("clients", 0)?,
             };
             args.finish()?;
             serve_host(opts)
@@ -340,6 +343,7 @@ struct ServeOpts {
     d_model: usize,
     d_ff: usize,
     vocab: usize,
+    clients: usize,
 }
 
 /// Host serving demo (no `xla` feature): decode a mixed multi-task
@@ -349,11 +353,13 @@ struct ServeOpts {
 /// With `--model`, serves an on-disk `.packed` file (adapters from
 /// `--adapters <dir>` of `.adapter` files, or synthesized from the
 /// model's own scales). Without it, synthesizes, RTN-quantizes and packs
-/// a small base model in-process.
+/// a small base model in-process. With `--clients N` (N > 0) the same
+/// request load is driven through the threaded `serve::Server` by N
+/// concurrent client threads instead of the direct scheduler loop.
 fn serve_host(o: ServeOpts) -> Result<()> {
     use peqa::model::PackedModel;
     use peqa::serve::{
-        self, AdapterStore, Engine, ModelGeom, Sampling, Scheduler, SchedulerConfig,
+        self, AdapterStore, Engine, ModelGeom, Sampling, Scheduler, SchedulerConfig, Server,
     };
     use peqa::tokenizer::{Tokenizer, EOS};
 
@@ -428,12 +434,47 @@ fn serve_host(o: ServeOpts) -> Result<()> {
             .map(|_| (0..12).map(|_| rng.below(geom.vocab as u32)).collect())
             .collect()
     };
-    for i in 0..o.requests {
-        let task = &tasks[i % tasks.len()];
-        let prompt = prompts[i % prompts.len()].clone();
-        sched.submit(task, prompt, o.max_new, EOS);
-    }
-    let responses = sched.run_until_idle()?;
+    let (responses, m) = if o.clients > 0 {
+        // Concurrent-client mode: one worker thread owns the scheduler;
+        // N clients submit over the server's mpsc channel and block on
+        // their own replies. Bursts admitted together share prefill GEMMs.
+        let server = Server::spawn(sched)?;
+        let mut responses = Vec::new();
+        std::thread::scope(|s| -> Result<()> {
+            let mut joins = Vec::new();
+            for c in 0..o.clients {
+                let handle = server.handle();
+                let (tasks, prompts) = (&tasks, &prompts);
+                joins.push(s.spawn(move || -> Result<Vec<peqa::serve::GenResponse>> {
+                    let mut got = Vec::new();
+                    // Client c takes every o.clients-th request.
+                    for i in (c..o.requests).step_by(o.clients) {
+                        let task = &tasks[i % tasks.len()];
+                        let prompt = prompts[i % prompts.len()].clone();
+                        got.push(handle.generate(task, prompt, o.max_new, EOS)?);
+                    }
+                    Ok(got)
+                }));
+            }
+            for j in joins {
+                responses.extend(j.join().expect("client thread panicked")?);
+            }
+            Ok(())
+        })?;
+        let m = server.handle().metrics()?;
+        server.shutdown();
+        responses.sort_by_key(|r| r.id);
+        (responses, m)
+    } else {
+        for i in 0..o.requests {
+            let task = &tasks[i % tasks.len()];
+            let prompt = prompts[i % prompts.len()].clone();
+            sched.submit(task, prompt, o.max_new, EOS);
+        }
+        let responses = sched.run_until_idle()?;
+        let m = sched.metrics.clone();
+        (responses, m)
+    };
     for r in responses.iter().take(4) {
         if byte_level {
             let text = tok.decode(&r.tokens).unwrap_or_default();
@@ -442,10 +483,11 @@ fn serve_host(o: ServeOpts) -> Result<()> {
             println!("[{}] {:10} {:?}", r.id, r.task, r.tokens);
         }
     }
-    let m = &sched.metrics;
+    let m = &m;
     println!(
         "\nserved {} requests over {} tasks | {:.1} tok/s | p50 latency {:.4}s p99 {:.4}s | \
-         {} scale swaps, mean {:.6}s p99 {:.6}s | {} decode steps | mode: scale-swap (PEQA, host)",
+         {} scale swaps, mean {:.6}s p99 {:.6}s | {} decode steps | {} prefill batches \
+         ({} prompt tokens) | mode: scale-swap (PEQA, host{})",
         m.completed,
         tasks.len(),
         m.tokens_per_s(),
@@ -455,6 +497,13 @@ fn serve_host(o: ServeOpts) -> Result<()> {
         m.mean_swap_s(),
         m.p99_swap_s(),
         m.decode_steps,
+        m.prefill_batches,
+        m.prefill_tokens,
+        if o.clients > 0 {
+            format!(", {} concurrent clients", o.clients)
+        } else {
+            String::new()
+        },
     );
     println!(
         "model: {} layers, d_model {}, {} heads, vocab {} | packed codes {} | adapters {} ({} tasks)",

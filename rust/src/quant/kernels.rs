@@ -237,6 +237,24 @@ impl PackedMatrix {
         threads: usize,
         out: &mut [f32],
     ) -> Result<()> {
+        let mut yt = Vec::new();
+        self.matmul_t_rows_scratch(x, batch, threads, out, &mut yt)
+    }
+
+    /// Serving prefill-batch/decode entry point: [`Self::matmul_t_rows`]
+    /// accumulating through a caller-owned yᵀ scratch buffer, so the
+    /// steady-state decode loop (serve::engine, which reuses one scratch
+    /// arena across steps and prefill chunks) does no per-call kernel
+    /// allocation. Bitwise identical to [`Self::matmul_t`] on the same
+    /// data for any `batch`, `threads`, or prior scratch contents.
+    pub fn matmul_t_rows_scratch(
+        &self,
+        x: &[f32],
+        batch: usize,
+        threads: usize,
+        out: &mut [f32],
+        yt: &mut Vec<f32>,
+    ) -> Result<()> {
         if x.len() != batch * self.cols {
             bail!("matmul_t_rows: x has {} elems, expected {}x{}", x.len(), batch, self.cols);
         }
@@ -246,8 +264,15 @@ impl PackedMatrix {
         if batch == 0 || self.rows == 0 {
             return Ok(());
         }
-        let mut yt = vec![0.0f32; self.rows * batch];
-        self.matmul_t_yt(x, batch, threads, &mut yt);
+        if batch == 1 {
+            // yᵀ (rows, 1) *is* y — accumulate straight into `out`.
+            out.fill(0.0);
+            self.matmul_t_yt(x, 1, threads, out);
+            return Ok(());
+        }
+        yt.clear();
+        yt.resize(self.rows * batch, 0.0);
+        self.matmul_t_yt(x, batch, threads, yt);
         for r in 0..self.rows {
             for bi in 0..batch {
                 out[bi * self.rows + r] = yt[r * batch + bi];
@@ -527,6 +552,22 @@ mod tests {
         assert!(pm.matvec_t(&x.data()[..k - 1], 1, &mut bad[..pm.rows]).is_err());
         let mut out = vec![0.0f32; b * pm.rows];
         assert!(pm.matmul_t_rows(&x.data()[1..], b, 1, &mut out).is_err());
+    }
+
+    #[test]
+    fn scratch_entry_point_reuses_buffer_and_stays_bitwise() {
+        // One scratch vec carried across calls of different batch sizes
+        // and matrices (the serving pattern) must never change results.
+        let mut yt = Vec::new();
+        for (rows, cols, batch, seed) in
+            [(23usize, 64usize, 9usize, 3u64), (40, 96, 2, 5), (7, 32, 1, 8)]
+        {
+            let (x, pm) = setup(rows, cols, batch, 3, Some(16), seed);
+            let y = pm.matmul_t(&x).unwrap();
+            let mut out = vec![f32::NAN; batch * rows]; // stale garbage
+            pm.matmul_t_rows_scratch(x.data(), batch, 4, &mut out, &mut yt).unwrap();
+            assert_eq!(out.as_slice(), y.data(), "rows={rows} batch={batch}");
+        }
     }
 
     #[test]

@@ -3,27 +3,46 @@
 //! The paper's deployment claim is that a PEQA model *serves* in its
 //! quantized form: sub-4-bit integer codes stay bit-packed in memory,
 //! every block projection runs through the fused quantized GEMM
-//! (`quant::kernels::PackedMatrix::matmul_t` and its decode entry points
-//! `matvec_t` / `matmul_t_rows`), and a task is nothing but a set of f32
+//! (`quant::kernels::PackedMatrix::matmul_t` and its serving entry point
+//! `matmul_t_rows_scratch`), and a task is nothing but a set of f32
 //! scale/zero vectors. This module is that claim executed on a plain
 //! host, no `xla` feature required:
 //!
 //! * [`Engine`] — llama-family transformer forward from a
 //!   [`PackedModel`]: embedding gather, RMSNorm, rotary positions,
-//!   causal attention over a per-sequence [`KvCache`], SwiGLU MLP,
-//!   fp LM head. [`Engine::prefill`] consumes a block of prompt tokens
-//!   (projections batched over the block through the fused GEMM),
-//!   [`Engine::decode_batch`] advances several *sequences* one token
-//!   each. Per-sequence math is independent of batch composition and of
-//!   the worker-thread count, so greedy decode is **bit-identical**
-//!   across batch sizes and across `PEQA_THREADS` settings.
-//! * [`Engine::apply_adapter`] — PEQA task switching: replaces only the
-//!   f32 scale/zero tensors of adapter-covered projections. The packed
-//!   code buffers are never touched, cloned, or re-packed.
-//! * [`Sampling`] / [`sample`] — greedy argmax and seeded top-k.
-//! * [`reference_forward`] — the parity baseline: full causal attention
-//!   over *dense dequantized* weights via the seed's `matmul_naive`.
-//!   The engine must agree with it to ≤ 1e-4 (tests/serve_host.rs).
+//!   causal attention over per-sequence [`KvCache`]s, SwiGLU MLP,
+//!   fp LM head. One multi-sequence core drives all three entry points:
+//!   [`Engine::prefill`] consumes a block of prompt tokens of one
+//!   sequence, [`Engine::prefill_batch`] prefills *several* queued
+//!   prompts through the same fused GEMM calls (cross-request prefill
+//!   batching), and [`Engine::decode_batch`] advances several sequences
+//!   one token each. Per-sequence math is independent of batch
+//!   composition and of the worker-thread count, so greedy decode is
+//!   **bit-identical** across batch sizes, across prefill groupings,
+//!   and across `PEQA_THREADS` settings.
+//! * **Scratch arena** — every activation slab of the forward pass
+//!   (normed rows, q/k/v, attention scores/context, gate/up/act/down,
+//!   the kernel's yᵀ transpose buffer) lives in a per-engine [`Scratch`]
+//!   that is grown once and reused across decode steps and prefill
+//!   chunks; the steady-state loop performs no per-call allocation
+//!   besides the returned logits.
+//! * **Head-blocked attention** — instead of a scalar head-by-head loop
+//!   that re-walks the KV window once per head, the kernel streams the
+//!   window's contiguous K/V slabs ([`KvCache::window_slabs`]) once and
+//!   scores/accumulates *all heads* per cached row with 4-way blocked
+//!   dot products.
+//! * [`Engine::apply_adapter`] — PEQA task switching: replaces the f32
+//!   scale/zero tensors of adapter-covered projections and restores the
+//!   construction-time base scales/zeros on every projection the
+//!   adapter does *not* cover, so a swap never leaves the previous
+//!   task's residue behind. The packed code buffers are never touched,
+//!   cloned, or re-packed.
+//! * [`Sampling`] / [`sample`] — greedy argmax and seeded top-k (total
+//!   order even with NaN logits: NaN sorts last, never panics).
+//! * [`reference_forward`] / [`reference_forward_windowed`] — the parity
+//!   baselines: full (or sliding-window) causal attention over *dense
+//!   dequantized* weights via the seed's `matmul_naive`. The engine must
+//!   agree with them to ≤ 1e-4 (tests/serve_host.rs).
 //!
 //! Model geometry comes from [`ModelGeom`]: either a typed artifact
 //! meta.json ([`ModelGeom::from_artifact`]) or inferred from the packed
@@ -143,15 +162,21 @@ pub fn sample(logits: &[f32], sampling: Sampling, rng: &mut Pcg32) -> u32 {
         Sampling::Greedy => argmax(logits),
         Sampling::TopK { k, temperature } => {
             let k = k.max(1).min(logits.len());
-            // Descending by logit, ties broken by index — a total order,
-            // so partitioning the top k and then sorting only those k
-            // gives exactly the full-sort prefix at O(V) instead of
-            // O(V log V) per sampled token.
+            // Descending by logit with NaN sorting LAST and ties broken
+            // by index. `partial_cmp(..).unwrap_or(Equal)` is NOT a total
+            // order once NaN and non-NaN mix (NaN == everything breaks
+            // transitivity) and can make `select_nth_unstable_by` /
+            // `sort_by` panic; keying on (is_nan, total_cmp desc, index)
+            // is total, so a NaN-poisoned logits row degrades to
+            // "ignore the NaNs" instead of aborting the server.
             let cmp = |a: &usize, b: &usize| {
-                logits[*b]
-                    .partial_cmp(&logits[*a])
-                    .unwrap_or(std::cmp::Ordering::Equal)
-                    .then(a.cmp(b))
+                let (fa, fb) = (logits[*a], logits[*b]);
+                match (fa.is_nan(), fb.is_nan()) {
+                    (true, true) => a.cmp(b),
+                    (true, false) => std::cmp::Ordering::Greater,
+                    (false, true) => std::cmp::Ordering::Less,
+                    (false, false) => fb.total_cmp(&fa).then(a.cmp(b)),
+                }
             };
             let mut idx: Vec<usize> = (0..logits.len()).collect();
             if k < idx.len() {
@@ -159,18 +184,39 @@ pub fn sample(logits: &[f32], sampling: Sampling, rng: &mut Pcg32) -> u32 {
                 idx.truncate(k);
             }
             idx.sort_by(cmp);
-            let t = temperature.max(1e-6);
             let top = logits[idx[0]];
-            let ws: Vec<f32> = idx.iter().map(|&i| ((logits[i] - top) / t).exp()).collect();
+            if top.is_nan() {
+                // Every candidate is NaN — nothing to weight; pick the
+                // lowest index deterministically.
+                return idx[0] as u32;
+            }
+            let t = temperature.max(1e-6);
+            let ws: Vec<f32> = idx
+                .iter()
+                .map(|&i| {
+                    let v = logits[i];
+                    if v.is_nan() { 0.0 } else { ((v - top) / t).exp() }
+                })
+                .collect();
             let total: f32 = ws.iter().sum();
+            if !(total > 0.0) || !total.is_finite() {
+                return idx[0] as u32;
+            }
             let mut r = rng.f32() * total;
+            // Fallback for fp rounding (r can stay > 0 after the last
+            // positive weight): the last positively-weighted index, never
+            // a zero-weight NaN candidate at the tail.
+            let mut last_pos = 0usize;
             for (j, &w) in ws.iter().enumerate() {
+                if w > 0.0 {
+                    last_pos = j;
+                }
                 r -= w;
                 if r <= 0.0 {
                     return idx[j] as u32;
                 }
             }
-            idx[k - 1] as u32
+            idx[last_pos] as u32
         }
     }
 }
@@ -198,6 +244,20 @@ pub struct Engine {
     /// Per-layer tensor names resolved once at construction, so the
     /// per-token decode loop does no string formatting.
     layer_names: Vec<LayerNames>,
+    /// Construction-time (scales, zeros) snapshot per packed projection,
+    /// restored on every [`Engine::apply_adapter`] for projections the
+    /// incoming adapter does not cover — a partial adapter must never
+    /// leave the previous task's scales behind.
+    base_sz: Vec<(String, Tensor, Tensor)>,
+    /// Prefixes whose scales / zeros currently hold *adapter* values
+    /// (everything else is at base). Lets a swap restore only what the
+    /// previous adapter actually touched, keeping partial-adapter swap
+    /// cost O(changed tensors) instead of O(all scales).
+    swapped_s: std::collections::HashSet<String>,
+    swapped_z: std::collections::HashSet<String>,
+    /// Reused activation slabs (see module docs) — the reason the decode
+    /// entry points take `&mut self`.
+    scratch: Scratch,
 }
 
 struct LayerNames {
@@ -210,6 +270,45 @@ struct LayerNames {
     gate: String,
     up: String,
     down: String,
+}
+
+/// Per-engine activation arena: grown to the high-water mark once, then
+/// reused across decode steps and prefill chunks. Buffers hold stale
+/// data between calls; every consumer writes its full `[..len]` range
+/// before reading, which keeps results bitwise independent of history.
+#[derive(Default)]
+struct Scratch {
+    /// Residual-stream rows, `(rows, d_model)`.
+    x: Vec<f32>,
+    /// Pre-norm rows shared by the attention and MLP halves.
+    h: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Attention context rows.
+    ctx: Vec<f32>,
+    o: Vec<f32>,
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    act: Vec<f32>,
+    down: Vec<f32>,
+    /// Attention score matrix, `(n_heads, window)`.
+    scores: Vec<f32>,
+    /// Per-head running max / softmax denominator.
+    head_max: Vec<f32>,
+    head_den: Vec<f32>,
+    /// Last-position rows gathered for the LM head, `(n_seqs, d_model)`.
+    last: Vec<f32>,
+    /// yᵀ transpose scratch of the fused kernel
+    /// (`PackedMatrix::matmul_t_rows_scratch`).
+    yt: Vec<f32>,
+}
+
+#[inline]
+fn ensure(buf: &mut Vec<f32>, n: usize) {
+    if buf.len() < n {
+        buf.resize(n, 0.0);
+    }
 }
 
 impl Engine {
@@ -288,7 +387,28 @@ impl Engine {
         let freqs = (0..half)
             .map(|i| 10000.0f32.powf(-(i as f32) / half as f32))
             .collect();
-        Ok(Engine { model, geom, threads: threads.max(1), freqs, head_name, layer_names })
+        // Snapshot the base task's scales/zeros of every packed
+        // projection: apply_adapter restores these on projections an
+        // adapter does not cover.
+        let base_sz = model
+            .prefixes()
+            .into_iter()
+            .filter_map(|p| {
+                model.matrix(&p).map(|m| (p.clone(), m.scales.clone(), m.zeros.clone()))
+            })
+            .collect();
+        Ok(Engine {
+            model,
+            geom,
+            threads: threads.max(1),
+            freqs,
+            head_name,
+            layer_names,
+            base_sz,
+            swapped_s: std::collections::HashSet::new(),
+            swapped_z: std::collections::HashSet::new(),
+            scratch: Scratch::default(),
+        })
     }
 
     pub fn geom(&self) -> &ModelGeom {
@@ -317,9 +437,14 @@ impl Engine {
     /// PEQA task switch: overlay an adapter's scale/zero tensors onto the
     /// packed projections. Only `{prefix}.s` / `{prefix}.z` tensors are
     /// accepted and only the f32 scale/zero tensors move — the packed
-    /// integer codes are immutable. Validates everything before mutating
-    /// anything, so a failed swap leaves the engine unchanged. Returns
-    /// the number of tensors swapped.
+    /// integer codes are immutable. Every packed projection the adapter
+    /// does **not** cover is restored to the construction-time base
+    /// scales/zeros, so switching from task A to a partial-coverage task
+    /// B never serves B with A's residue: the engine state after a swap
+    /// depends only on the adapter applied, never on swap history.
+    /// Validates everything before mutating anything, so a failed swap
+    /// leaves the engine unchanged. Returns the number of adapter
+    /// tensors applied (restores are not counted).
     pub fn apply_adapter(&mut self, adapter: &Checkpoint) -> Result<usize> {
         let mut plan: Vec<(String, bool, &Tensor)> = Vec::with_capacity(adapter.len());
         for (name, t) in adapter.iter() {
@@ -347,14 +472,39 @@ impl Engine {
             plan.push((prefix.to_string(), is_scale, t));
         }
         let n = plan.len();
-        for (prefix, is_scale, t) in plan {
-            let m = self.model.matrix_mut(&prefix).expect("validated above");
-            if is_scale {
-                m.scales = t.clone();
+        let Engine { model, base_sz, swapped_s, swapped_z, .. } = self;
+        for (prefix, is_scale, t) in &plan {
+            let m = model.matrix_mut(prefix).expect("validated above");
+            if *is_scale {
+                m.scales = (*t).clone();
             } else {
-                m.zeros = t.clone();
+                m.zeros = (*t).clone();
             }
         }
+        // Residue fix: every (s, z) the PREVIOUS adapter touched that this
+        // adapter leaves untouched reverts to the base snapshot taken at
+        // engine construction. Projections outside both coverage sets
+        // already hold base values, so the restore cost tracks the
+        // adapters' coverage, not the model size.
+        let covered_s: std::collections::HashSet<String> =
+            plan.iter().filter(|p| p.1).map(|p| p.0.clone()).collect();
+        let covered_z: std::collections::HashSet<String> =
+            plan.iter().filter(|p| !p.1).map(|p| p.0.clone()).collect();
+        for (prefix, s0, z0) in base_sz.iter() {
+            let stale_s = swapped_s.contains(prefix) && !covered_s.contains(prefix);
+            let stale_z = swapped_z.contains(prefix) && !covered_z.contains(prefix);
+            if stale_s || stale_z {
+                let m = model.matrix_mut(prefix).expect("snapshot taken from this model");
+                if stale_s {
+                    m.scales = s0.clone();
+                }
+                if stale_z {
+                    m.zeros = z0.clone();
+                }
+            }
+        }
+        *swapped_s = covered_s;
+        *swapped_z = covered_z;
         Ok(n)
     }
 
@@ -363,35 +513,30 @@ impl Engine {
     /// position (`vocab` floats). Used both for prompt prefill (the
     /// projections run batched over the whole block through the fused
     /// GEMM) and — with a single token — for unbatched decode.
-    pub fn prefill(&self, tokens: &[u32], cache: &mut KvCache) -> Result<Vec<f32>> {
-        let t_new = tokens.len();
-        if t_new == 0 {
+    pub fn prefill(&mut self, tokens: &[u32], cache: &mut KvCache) -> Result<Vec<f32>> {
+        if tokens.is_empty() {
             bail!("prefill needs at least one token");
         }
-        let d = self.geom.d_model;
-        let base = cache.pos();
-        let mut x = self.gather_embed(tokens)?;
-        for layer in 0..self.geom.n_layers {
-            let ln = &self.layer_names[layer];
-            let (mut q, mut k, v) = self.qkv(ln, &x, t_new)?;
-            let mut ctx = vec![0.0f32; t_new * d];
-            for ti in 0..t_new {
-                let abs = base + ti;
-                self.rope_row(&mut q[ti * d..(ti + 1) * d], abs);
-                self.rope_row(&mut k[ti * d..(ti + 1) * d], abs);
-                cache.write(layer, abs, &k[ti * d..(ti + 1) * d], &v[ti * d..(ti + 1) * d]);
-                self.attend_one(
-                    cache,
-                    layer,
-                    abs,
-                    &q[ti * d..(ti + 1) * d],
-                    &mut ctx[ti * d..(ti + 1) * d],
-                );
-            }
-            self.finish_block(ln, &mut x, &ctx, t_new)?;
+        let mut caches = [cache];
+        self.forward_multi(&[tokens], &mut caches)
+    }
+
+    /// Cross-request prefill batching: feed the prompt blocks of SEVERAL
+    /// sequences (each with its own cache) through the model, with every
+    /// projection batched over the concatenated token rows of all
+    /// prompts in one fused GEMM call. Returns the concatenated
+    /// last-position logits, `(prompts.len() · vocab)`. Per-sequence
+    /// rows are bitwise identical to prefilling each prompt alone —
+    /// grouping is a throughput decision, never a numerics one.
+    pub fn prefill_batch(
+        &mut self,
+        prompts: &[&[u32]],
+        caches: &mut [&mut KvCache],
+    ) -> Result<Vec<f32>> {
+        if prompts.iter().any(|p| p.is_empty()) {
+            bail!("prefill_batch needs at least one token per prompt");
         }
-        cache.advance(t_new);
-        self.head_logits(&x[(t_new - 1) * d..], 1)
+        self.forward_multi(prompts, caches)
     }
 
     /// Advance `tokens.len()` sequences by one token each (continuous
@@ -400,178 +545,302 @@ impl Engine {
     /// the batch composition: row `i` equals a batch-1 call for that
     /// sequence alone.
     pub fn decode_batch(
-        &self,
+        &mut self,
         tokens: &[u32],
         caches: &mut [&mut KvCache],
     ) -> Result<Vec<f32>> {
-        let b = tokens.len();
-        if b != caches.len() {
-            bail!("decode_batch: {} tokens but {} caches", b, caches.len());
+        let seqs: Vec<&[u32]> = tokens.chunks(1).collect();
+        self.forward_multi(&seqs, caches)
+    }
+
+    /// The shared multi-sequence forward: `seqs[i]` appends its tokens to
+    /// `caches[i]`; returns the last-position logits row per sequence.
+    /// All dense work (norms, projections, LM head) runs batched over the
+    /// concatenated rows of every sequence; rotary/cache/attention run
+    /// per sequence token-by-token (each over its own cache only), which
+    /// is what makes every row bitwise independent of how sequences are
+    /// grouped into calls.
+    fn forward_multi(
+        &mut self,
+        seqs: &[&[u32]],
+        caches: &mut [&mut KvCache],
+    ) -> Result<Vec<f32>> {
+        let n_seqs = seqs.len();
+        if n_seqs != caches.len() {
+            bail!("forward: {} sequences but {} caches", n_seqs, caches.len());
         }
-        if b == 0 {
+        if n_seqs == 0 {
             return Ok(Vec::new());
         }
-        let d = self.geom.d_model;
-        let mut x = self.gather_embed(tokens)?;
-        for layer in 0..self.geom.n_layers {
-            let ln = &self.layer_names[layer];
-            let (mut q, mut k, v) = self.qkv(ln, &x, b)?;
-            let mut ctx = vec![0.0f32; b * d];
-            for bi in 0..b {
-                let abs = caches[bi].pos();
-                self.rope_row(&mut q[bi * d..(bi + 1) * d], abs);
-                self.rope_row(&mut k[bi * d..(bi + 1) * d], abs);
-                caches[bi].write(layer, abs, &k[bi * d..(bi + 1) * d], &v[bi * d..(bi + 1) * d]);
-                self.attend_one(
-                    &*caches[bi],
-                    layer,
-                    abs,
-                    &q[bi * d..(bi + 1) * d],
-                    &mut ctx[bi * d..(bi + 1) * d],
-                );
+        let Engine { model, geom, threads, freqs, head_name, layer_names, scratch, .. } = self;
+        let (geom, threads, head_name) = (*geom, *threads, *head_name);
+        let d = geom.d_model;
+        let (hh, hd) = (geom.n_heads, geom.head_dim());
+        let m: usize = seqs.iter().map(|s| s.len()).sum();
+
+        // Embedding gather over the concatenated token rows.
+        ensure(&mut scratch.x, m * d);
+        let ed = model.fp_tensor("embed").expect("validated at construction").data();
+        let mut row = 0usize;
+        for seq in seqs {
+            for &tok in *seq {
+                let tok = tok as usize;
+                if tok >= geom.vocab {
+                    bail!("token id {tok} out of vocab {}", geom.vocab);
+                }
+                scratch.x[row * d..(row + 1) * d].copy_from_slice(&ed[tok * d..(tok + 1) * d]);
+                row += 1;
             }
-            self.finish_block(ln, &mut x, &ctx, b)?;
         }
-        for cache in caches.iter_mut() {
-            cache.advance(1);
-        }
-        self.head_logits(&x, b)
-    }
 
-    // -- forward building blocks ---------------------------------------------
-
-    fn gather_embed(&self, tokens: &[u32]) -> Result<Vec<f32>> {
-        let d = self.geom.d_model;
-        let ed = self.model.fp_tensor("embed").expect("validated at construction").data();
-        let mut x = vec![0.0f32; tokens.len() * d];
-        for (ti, &tok) in tokens.iter().enumerate() {
-            let tok = tok as usize;
-            if tok >= self.geom.vocab {
-                bail!("token id {tok} out of vocab {}", self.geom.vocab);
+        for layer in 0..geom.n_layers {
+            let ln = &layer_names[layer];
+            // Pre-norm + the three attention input projections, batched
+            // over every row of every sequence.
+            let g1 = model.fp_tensor(&ln.ln1).expect("validated").data();
+            rms_norm_rows_into(&scratch.x[..m * d], g1, m, d, &mut scratch.h);
+            proj_into(model, threads, &ln.q, &scratch.h[..m * d], m, &mut scratch.q, &mut scratch.yt)?;
+            proj_into(model, threads, &ln.k, &scratch.h[..m * d], m, &mut scratch.k, &mut scratch.yt)?;
+            proj_into(model, threads, &ln.v, &scratch.h[..m * d], m, &mut scratch.v, &mut scratch.yt)?;
+            ensure(&mut scratch.ctx, m * d);
+            // Rotary + cache append + attention, per sequence and token.
+            let mut r0 = 0usize;
+            for (si, seq) in seqs.iter().enumerate() {
+                let cache = &mut *caches[si];
+                let base = cache.pos();
+                for ti in 0..seq.len() {
+                    let r = r0 + ti;
+                    let abs = base + ti;
+                    rope_row_at(freqs, hh, hd, &mut scratch.q[r * d..(r + 1) * d], abs);
+                    rope_row_at(freqs, hh, hd, &mut scratch.k[r * d..(r + 1) * d], abs);
+                    cache.write(
+                        layer,
+                        abs,
+                        &scratch.k[r * d..(r + 1) * d],
+                        &scratch.v[r * d..(r + 1) * d],
+                    );
+                    attend_row(
+                        hh,
+                        hd,
+                        cache,
+                        layer,
+                        abs,
+                        &scratch.q[r * d..(r + 1) * d],
+                        &mut scratch.ctx[r * d..(r + 1) * d],
+                        &mut scratch.scores,
+                        &mut scratch.head_max,
+                        &mut scratch.head_den,
+                    );
+                }
+                r0 += seq.len();
             }
-            x[ti * d..(ti + 1) * d].copy_from_slice(&ed[tok * d..(tok + 1) * d]);
+            // Attention output + residual, then the SwiGLU MLP + residual.
+            proj_into(model, threads, &ln.o, &scratch.ctx[..m * d], m, &mut scratch.o, &mut scratch.yt)?;
+            for (xv, ov) in scratch.x[..m * d].iter_mut().zip(&scratch.o[..m * d]) {
+                *xv += ov;
+            }
+            let g2 = model.fp_tensor(&ln.ln2).expect("validated").data();
+            rms_norm_rows_into(&scratch.x[..m * d], g2, m, d, &mut scratch.h);
+            proj_into(model, threads, &ln.gate, &scratch.h[..m * d], m, &mut scratch.gate, &mut scratch.yt)?;
+            proj_into(model, threads, &ln.up, &scratch.h[..m * d], m, &mut scratch.up, &mut scratch.yt)?;
+            let mf = m * geom.d_ff;
+            ensure(&mut scratch.act, mf);
+            for j in 0..mf {
+                scratch.act[j] = silu(scratch.gate[j]) * scratch.up[j];
+            }
+            proj_into(model, threads, &ln.down, &scratch.act[..mf], m, &mut scratch.down, &mut scratch.yt)?;
+            for (xv, dv) in scratch.x[..m * d].iter_mut().zip(&scratch.down[..m * d]) {
+                *xv += dv;
+            }
         }
-        Ok(x)
-    }
 
-    /// Pre-norm + the three attention input projections for `b` rows.
-    fn qkv(&self, ln: &LayerNames, x: &[f32], b: usize) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
-        let d = self.geom.d_model;
-        let g1 = self.model.fp_tensor(&ln.ln1).expect("validated");
-        let h = rms_norm_rows(x, g1.data(), b, d);
-        let q = self.proj(&ln.q, &h, b)?;
-        let k = self.proj(&ln.k, &h, b)?;
-        let v = self.proj(&ln.v, &h, b)?;
-        Ok((q, k, v))
+        // Gather each sequence's last position, mark the tokens appended,
+        // and run final norm + LM head batched over the gathered rows.
+        ensure(&mut scratch.last, n_seqs * d);
+        let mut r0 = 0usize;
+        for (si, seq) in seqs.iter().enumerate() {
+            let r = r0 + seq.len() - 1;
+            scratch.last[si * d..(si + 1) * d].copy_from_slice(&scratch.x[r * d..(r + 1) * d]);
+            r0 += seq.len();
+        }
+        for (cache, seq) in caches.iter_mut().zip(seqs) {
+            cache.advance(seq.len());
+        }
+        let gf = model.fp_tensor("final_norm.g").expect("validated").data();
+        rms_norm_rows_into(&scratch.last[..n_seqs * d], gf, n_seqs, d, &mut scratch.h);
+        let head = model.fp_tensor(head_name).expect("validated");
+        let mut logits = vec![0.0f32; n_seqs * geom.vocab];
+        dense_rows_into(head, &scratch.h[..n_seqs * d], n_seqs, &mut logits);
+        Ok(logits)
     }
+}
 
-    /// Attention output projection + residual, then the SwiGLU MLP +
-    /// residual, for `b` rows in place on `x`.
-    fn finish_block(&self, ln: &LayerNames, x: &mut [f32], ctx: &[f32], b: usize) -> Result<()> {
-        let o = self.proj(&ln.o, ctx, b)?;
-        for (xv, ov) in x.iter_mut().zip(&o) {
-            *xv += ov;
-        }
-        let d = self.geom.d_model;
-        let g2 = self.model.fp_tensor(&ln.ln2).expect("validated");
-        let h = rms_norm_rows(x, g2.data(), b, d);
-        let gate = self.proj(&ln.gate, &h, b)?;
-        let up = self.proj(&ln.up, &h, b)?;
-        let mut act = vec![0.0f32; gate.len()];
-        for j in 0..gate.len() {
-            act[j] = silu(gate[j]) * up[j];
-        }
-        let down = self.proj(&ln.down, &act, b)?;
-        for (xv, dv) in x.iter_mut().zip(&down) {
-            *xv += dv;
-        }
+/// One projection over `b` activation rows into a scratch-backed output
+/// slab: fused packed GEMM when the projection is quantized (through the
+/// kernel's scratch entry point — no per-call allocation), dense row-dot
+/// fallback otherwise.
+fn proj_into(
+    model: &PackedModel,
+    threads: usize,
+    prefix: &str,
+    x: &[f32],
+    b: usize,
+    out: &mut Vec<f32>,
+    yt: &mut Vec<f32>,
+) -> Result<()> {
+    if let Some(m) = model.matrix(prefix) {
+        ensure(out, b * m.rows);
+        m.matmul_t_rows_scratch(x, b, threads, &mut out[..b * m.rows], yt)
+    } else {
+        let w = model
+            .fp_tensor(&format!("{prefix}.w"))
+            .ok_or_else(|| anyhow!("no projection '{prefix}'"))?;
+        let (o, _) = w.dims2()?;
+        ensure(out, b * o);
+        dense_rows_into(w, x, b, &mut out[..b * o]);
         Ok(())
     }
+}
 
-    /// One projection over `b` activation rows: fused packed GEMM when the
-    /// projection is quantized, dense row-dot fallback otherwise.
-    fn proj(&self, prefix: &str, x: &[f32], b: usize) -> Result<Vec<f32>> {
-        if let Some(m) = self.model.matrix(prefix) {
-            let mut out = vec![0.0f32; b * m.rows];
-            if b == 1 {
-                m.matvec_t(x, self.threads, &mut out)?;
-            } else {
-                m.matmul_t_rows(x, b, self.threads, &mut out)?;
-            }
-            Ok(out)
-        } else {
-            let w = self
-                .model
-                .fp_tensor(&format!("{prefix}.w"))
-                .ok_or_else(|| anyhow!("no projection '{prefix}'"))?;
-            Ok(dense_rows(w, x, b))
+/// Rotate one (d_model,) row in place at absolute position `pos`
+/// (per-head half-split rotary, matching python/compile/model.py).
+fn rope_row_at(freqs: &[f32], n_heads: usize, head_dim: usize, row: &mut [f32], pos: usize) {
+    let half = head_dim / 2;
+    let p = pos as f32;
+    for h in 0..n_heads {
+        let s = &mut row[h * head_dim..(h + 1) * head_dim];
+        for i in 0..half {
+            let (sin, cos) = (p * freqs[i]).sin_cos();
+            let (x1, x2) = (s[i], s[i + half]);
+            s[i] = x1 * cos - x2 * sin;
+            s[i + half] = x1 * sin + x2 * cos;
         }
     }
+}
 
-    /// Rotate one (d_model,) row in place at absolute position `pos`
-    /// (per-head half-split rotary, matching python/compile/model.py).
-    fn rope_row(&self, row: &mut [f32], pos: usize) {
-        let hd = self.geom.head_dim();
-        let half = hd / 2;
-        let p = pos as f32;
-        for h in 0..self.geom.n_heads {
-            let s = &mut row[h * hd..(h + 1) * hd];
-            for i in 0..half {
-                let (sin, cos) = (p * self.freqs[i]).sin_cos();
-                let (x1, x2) = (s[i], s[i + half]);
-                s[i] = x1 * cos - x2 * sin;
-                s[i + half] = x1 * sin + x2 * cos;
+/// Head-blocked causal attention of one already-roped query row at
+/// absolute position `abs` over the cache window (which already contains
+/// `abs`). Writes the (d_model,) context row.
+///
+/// The window's K/V rows are streamed as contiguous slabs
+/// ([`KvCache::window_slabs`]) and each cached row is visited ONCE for
+/// all heads (score pass over K, accumulate pass over V) with 4-way
+/// blocked dots — versus the scalar per-head loop that re-walked the
+/// whole window `n_heads` times. Scores/max/denominator live in
+/// caller-provided scratch. The arithmetic per (head, position) is a
+/// fixed-order reduction independent of batch composition and thread
+/// count, preserving the engine's bitwise invariances.
+#[allow(clippy::too_many_arguments)]
+fn attend_row(
+    n_heads: usize,
+    head_dim: usize,
+    cache: &KvCache,
+    layer: usize,
+    abs: usize,
+    q: &[f32],
+    ctx: &mut [f32],
+    scores: &mut Vec<f32>,
+    head_max: &mut Vec<f32>,
+    head_den: &mut Vec<f32>,
+) {
+    let n = cache.window_len(abs);
+    let d = n_heads * head_dim;
+    let inv = 1.0 / (head_dim as f32).sqrt();
+    scores.clear();
+    scores.resize(n_heads * n, 0.0);
+    head_max.clear();
+    head_max.resize(n_heads, f32::NEG_INFINITY);
+    head_den.clear();
+    head_den.resize(n_heads, 0.0);
+    let slabs = cache.window_slabs(layer, abs);
+
+    // Score pass: one sweep over the contiguous K slabs, all heads per row.
+    let mut j = 0usize;
+    for (kseg, _) in &slabs {
+        for krow in kseg.chunks_exact(d) {
+            for h in 0..n_heads {
+                let sc = inv
+                    * dot_blocked(
+                        &q[h * head_dim..(h + 1) * head_dim],
+                        &krow[h * head_dim..(h + 1) * head_dim],
+                    );
+                scores[h * n + j] = sc;
+                if sc > head_max[h] {
+                    head_max[h] = sc;
+                }
             }
+            j += 1;
         }
     }
-
-    /// Causal attention of one already-roped query row at absolute
-    /// position `abs` over the cache window (which already contains
-    /// `abs`). Writes the (d_model,) context row.
-    fn attend_one(&self, cache: &KvCache, layer: usize, abs: usize, q: &[f32], ctx: &mut [f32]) {
-        let (hh, hd) = (self.geom.n_heads, self.geom.head_dim());
-        let inv = 1.0 / (hd as f32).sqrt();
-        let n = cache.window_len(abs);
-        let start = abs + 1 - n;
-        let mut scores = vec![0.0f32; n];
-        for h in 0..hh {
-            let qh = &q[h * hd..(h + 1) * hd];
-            let mut maxs = f32::NEG_INFINITY;
-            for (j, sc) in scores.iter_mut().enumerate() {
-                let kh = &cache.k_row(layer, start + j)[h * hd..(h + 1) * hd];
-                let mut dot = 0.0f32;
-                for t in 0..hd {
-                    dot += qh[t] * kh[t];
-                }
-                *sc = dot * inv;
-                if *sc > maxs {
-                    maxs = *sc;
-                }
+    // Stable softmax numerators + denominators, per head.
+    for h in 0..n_heads {
+        let mx = head_max[h];
+        let mut den = 0.0f32;
+        for sc in scores[h * n..(h + 1) * n].iter_mut() {
+            *sc = (*sc - mx).exp();
+            den += *sc;
+        }
+        head_den[h] = den;
+    }
+    // Accumulate pass: one sweep over the contiguous V slabs, then one
+    // division per head (Σ wⱼ·vⱼ / Σ wⱼ).
+    ctx[..d].fill(0.0);
+    let mut j = 0usize;
+    for (_, vseg) in &slabs {
+        for vrow in vseg.chunks_exact(d) {
+            for h in 0..n_heads {
+                axpy_blocked(
+                    scores[h * n + j],
+                    &vrow[h * head_dim..(h + 1) * head_dim],
+                    &mut ctx[h * head_dim..(h + 1) * head_dim],
+                );
             }
-            let mut denom = 0.0f32;
-            for sc in scores.iter_mut() {
-                *sc = (*sc - maxs).exp();
-                denom += *sc;
-            }
-            let cxh = &mut ctx[h * hd..(h + 1) * hd];
-            cxh.fill(0.0);
-            for (j, &w) in scores.iter().enumerate() {
-                let p = w / denom;
-                let vh = &cache.v_row(layer, start + j)[h * hd..(h + 1) * hd];
-                for t in 0..hd {
-                    cxh[t] += p * vh[t];
-                }
-            }
+            j += 1;
         }
     }
+    for h in 0..n_heads {
+        let id = 1.0 / head_den[h];
+        for t in ctx[h * head_dim..(h + 1) * head_dim].iter_mut() {
+            *t *= id;
+        }
+    }
+}
 
-    /// Final RMSNorm + LM head over `b` rows → `(b, vocab)` logits.
-    fn head_logits(&self, x: &[f32], b: usize) -> Result<Vec<f32>> {
-        let d = self.geom.d_model;
-        let gf = self.model.fp_tensor("final_norm.g").expect("validated");
-        let xn = rms_norm_rows(&x[..b * d], gf.data(), b, d);
-        let head = self.model.fp_tensor(self.head_name).expect("validated");
-        Ok(dense_rows(head, &xn, b))
+/// Fixed-order 4-accumulator dot product (deterministic; lets the
+/// autovectorizer keep four independent FMA chains in flight).
+#[inline]
+fn dot_blocked(a: &[f32], b: &[f32]) -> f32 {
+    let n4 = a.len() / 4 * 4;
+    let mut acc = [0.0f32; 4];
+    let mut i = 0;
+    while i < n4 {
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+        i += 4;
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for k in n4..a.len() {
+        s += a[k] * b[k];
+    }
+    s
+}
+
+/// y += w · v, 4-way blocked, fixed order.
+#[inline]
+fn axpy_blocked(w: f32, v: &[f32], y: &mut [f32]) {
+    let n4 = v.len() / 4 * 4;
+    let mut i = 0;
+    while i < n4 {
+        y[i] += w * v[i];
+        y[i + 1] += w * v[i + 1];
+        y[i + 2] += w * v[i + 2];
+        y[i + 3] += w * v[i + 3];
+        i += 4;
+    }
+    for k in n4..v.len() {
+        y[k] += w * v[k];
     }
 }
 
@@ -580,9 +849,10 @@ fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
-/// RMSNorm over `b` rows of width `d`: g · x · rsqrt(mean(x²) + ε).
-fn rms_norm_rows(x: &[f32], g: &[f32], b: usize, d: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; b * d];
+/// RMSNorm over `b` rows of width `d` into a scratch-backed output slab:
+/// g · x · rsqrt(mean(x²) + ε).
+fn rms_norm_rows_into(x: &[f32], g: &[f32], b: usize, d: usize, out: &mut Vec<f32>) {
+    ensure(out, b * d);
     for bi in 0..b {
         let xr = &x[bi * d..(bi + 1) * d];
         let mut ss = 0.0f32;
@@ -595,16 +865,21 @@ fn rms_norm_rows(x: &[f32], g: &[f32], b: usize, d: usize) -> Vec<f32> {
             orow[j] = g[j] * xr[j] * inv;
         }
     }
+}
+
+/// Allocating [`rms_norm_rows_into`] (reference path + tests).
+fn rms_norm_rows(x: &[f32], g: &[f32], b: usize, d: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    rms_norm_rows_into(x, g, b, d, &mut out);
     out
 }
 
 /// Dense projection fallback and LM head: y (b, out) = X · Wᵀ with
 /// W row-major (out, in), accumulated row by row in a fixed order
 /// (deterministic, batch-row independent).
-fn dense_rows(w: &Tensor, x: &[f32], b: usize) -> Vec<f32> {
+fn dense_rows_into(w: &Tensor, x: &[f32], b: usize, y: &mut [f32]) {
     let (o, i) = w.dims2().expect("dense projection is 2-D");
     let wd = w.data();
-    let mut y = vec![0.0f32; b * o];
     for bi in 0..b {
         let xr = &x[bi * i..(bi + 1) * i];
         let yr = &mut y[bi * o..(bi + 1) * o];
@@ -617,7 +892,6 @@ fn dense_rows(w: &Tensor, x: &[f32], b: usize) -> Vec<f32> {
             *yv = acc;
         }
     }
-    y
 }
 
 /// Parity baseline: full causal forward over a *dense* fp checkpoint
@@ -627,10 +901,24 @@ fn dense_rows(w: &Tensor, x: &[f32], b: usize) -> Vec<f32> {
 /// the "unpack → dequantize → naive matmul" path the fused engine is
 /// verified against (decode parity ≤ 1e-4).
 pub fn reference_forward(fp: &Checkpoint, geom: &ModelGeom, tokens: &[u32]) -> Result<Tensor> {
+    reference_forward_windowed(fp, geom, tokens, usize::MAX)
+}
+
+/// [`reference_forward`] restricted to sliding-window attention: each
+/// query position attends only to the most recent `window` positions
+/// (itself included) — the dense mirror of a [`KvCache`] whose ring
+/// capacity is `window`, used to pin ring-wrap prefill/decode parity.
+pub fn reference_forward_windowed(
+    fp: &Checkpoint,
+    geom: &ModelGeom,
+    tokens: &[u32],
+    window: usize,
+) -> Result<Tensor> {
     let t_len = tokens.len();
     if t_len == 0 {
         bail!("reference_forward needs at least one token");
     }
+    let window = window.max(1);
     let d = geom.d_model;
     let (hh, hd) = (geom.n_heads, geom.head_dim());
     let half = hd / 2;
@@ -674,12 +962,14 @@ pub fn reference_forward(fp: &Checkpoint, geom: &ModelGeom, tokens: &[u32]) -> R
         }
         let mut ctx = vec![0.0f32; t_len * d];
         for ti in 0..t_len {
+            let start = (ti + 1).saturating_sub(window);
             for hi in 0..hh {
                 let qh = &q[ti * d + hi * hd..ti * d + (hi + 1) * hd];
-                let mut scores = vec![0.0f32; ti + 1];
+                let mut scores = vec![0.0f32; ti + 1 - start];
                 let mut maxs = f32::NEG_INFINITY;
                 for (j, sc) in scores.iter_mut().enumerate() {
-                    let kh = &k[j * d + hi * hd..j * d + (hi + 1) * hd];
+                    let p = start + j;
+                    let kh = &k[p * d + hi * hd..p * d + (hi + 1) * hd];
                     let mut dot = 0.0f32;
                     for t in 0..hd {
                         dot += qh[t] * kh[t];
@@ -696,10 +986,11 @@ pub fn reference_forward(fp: &Checkpoint, geom: &ModelGeom, tokens: &[u32]) -> R
                 }
                 let cxh = &mut ctx[ti * d + hi * hd..ti * d + (hi + 1) * hd];
                 for (j, &w) in scores.iter().enumerate() {
-                    let p = w / denom;
-                    let vh = &v[j * d + hi * hd..j * d + (hi + 1) * hd];
+                    let p = start + j;
+                    let pw = w / denom;
+                    let vh = &v[p * d + hi * hd..p * d + (hi + 1) * hd];
                     for t in 0..hd {
-                        cxh[t] += p * vh[t];
+                        cxh[t] += pw * vh[t];
                     }
                 }
             }
@@ -764,6 +1055,31 @@ mod tests {
     }
 
     #[test]
+    fn topk_sampling_survives_nan_logits() {
+        // NaN mixed into the row: the comparator must stay a total order
+        // (the old partial_cmp fallback could panic select_nth/sort) and
+        // draws must never land on a NaN index.
+        let logits = vec![f32::NAN, 1.0, f32::NAN, 5.0, 2.0, f32::NAN, 0.5];
+        let mut rng = Pcg32::new(3);
+        for _ in 0..64 {
+            let t = sample(&logits, Sampling::TopK { k: 4, temperature: 1.0 }, &mut rng);
+            assert!([1u32, 3, 4, 6].contains(&t), "drew NaN index {t}");
+        }
+        // k larger than the non-NaN count: NaN candidates weigh zero.
+        for _ in 0..32 {
+            let t = sample(&logits, Sampling::TopK { k: 7, temperature: 0.7 }, &mut rng);
+            assert!(!logits[t as usize].is_nan(), "drew NaN index {t}");
+        }
+        // All-NaN row: deterministic lowest index, no panic.
+        let all_nan = vec![f32::NAN; 5];
+        for _ in 0..4 {
+            assert_eq!(sample(&all_nan, Sampling::TopK { k: 3, temperature: 1.0 }, &mut rng), 0);
+        }
+        // NaN rows under greedy stay panic-free too.
+        assert_eq!(sample(&all_nan, Sampling::Greedy, &mut rng), 0);
+    }
+
+    #[test]
     fn geometry_validation() {
         let ok = ModelGeom { vocab: 16, d_model: 8, n_layers: 1, n_heads: 2, d_ff: 12 };
         assert!(ok.validated().is_ok());
@@ -776,5 +1092,22 @@ mod tests {
         assert!(odd.validated().is_err());
         let zero = ModelGeom { n_layers: 0, ..ok };
         assert!(zero.validated().is_err());
+    }
+
+    #[test]
+    fn blocked_dot_and_axpy_match_scalar() {
+        let a: Vec<f32> = (0..23).map(|i| (i as f32) * 0.3 - 2.0).collect();
+        let b: Vec<f32> = (0..23).map(|i| 1.5 - (i as f32) * 0.11).collect();
+        let scalar: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot_blocked(&a, &b) - scalar).abs() < 1e-4);
+        let mut y = vec![0.5f32; 23];
+        let mut y_ref = y.clone();
+        axpy_blocked(0.7, &a, &mut y);
+        for (yr, av) in y_ref.iter_mut().zip(&a) {
+            *yr += 0.7 * av;
+        }
+        for (u, v) in y.iter().zip(&y_ref) {
+            assert!((u - v).abs() < 1e-6);
+        }
     }
 }

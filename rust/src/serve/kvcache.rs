@@ -91,6 +91,28 @@ impl KvCache {
         &self.v[o..o + self.d]
     }
 
+    /// The attention window of a query at absolute position `abs` as at
+    /// most two contiguous `(k, v)` row slabs in position order: the ring
+    /// wraps at most once, so the window `[abs+1−window_len(abs), abs]`
+    /// occupies one slab up to the end of the ring plus (possibly empty)
+    /// one from its start. Row `j` of the concatenated slabs is position
+    /// `abs + 1 − window_len(abs) + j`. This is what lets the engine's
+    /// head-blocked attention stream K/V with contiguous reads instead of
+    /// a per-position `k_row` offset computation.
+    pub fn window_slabs(&self, layer: usize, abs: usize) -> [(&[f32], &[f32]); 2] {
+        let n = self.window_len(abs);
+        let start = abs + 1 - n;
+        let s0 = start % self.capacity;
+        let first = n.min(self.capacity - s0);
+        let base = layer * self.capacity * self.d;
+        let a = base + s0 * self.d;
+        let rest = n - first;
+        [
+            (&self.k[a..a + first * self.d], &self.v[a..a + first * self.d]),
+            (&self.k[base..base + rest * self.d], &self.v[base..base + rest * self.d]),
+        ]
+    }
+
     /// Mark `n` more positions as fully appended (all layers written).
     pub fn advance(&mut self, n: usize) {
         self.pos += n;
@@ -154,6 +176,37 @@ mod tests {
         }
         // Slot aliasing: abs 4 and abs 0 share slot 0, latest write wins.
         assert_eq!(c.k_row(0, 4), c.k_row(0, 0));
+    }
+
+    #[test]
+    fn window_slabs_cover_the_window_in_position_order() {
+        let d = 2;
+        let cap = 4;
+        let mut c = KvCache::new(2, d, cap);
+        for t in 0..7usize {
+            for layer in 0..2 {
+                let tag = (100 * layer + t) as f32;
+                c.write(layer, t, &row(tag, d), &row(tag + 0.5, d));
+            }
+            c.advance(1);
+        }
+        for layer in 0..2 {
+            for abs in [0usize, 2, 3, 5, 6] {
+                let n = c.window_len(abs);
+                let start = abs + 1 - n;
+                let [(k1, v1), (k2, v2)] = c.window_slabs(layer, abs);
+                assert_eq!(k1.len() + k2.len(), n * d, "abs={abs}");
+                assert_eq!(v1.len() + v2.len(), n * d);
+                let rows: Vec<&[f32]> =
+                    k1.chunks_exact(d).chain(k2.chunks_exact(d)).collect();
+                let vrows: Vec<&[f32]> =
+                    v1.chunks_exact(d).chain(v2.chunks_exact(d)).collect();
+                for (j, (kr, vr)) in rows.iter().zip(&vrows).enumerate() {
+                    assert_eq!(*kr, c.k_row(layer, start + j), "layer={layer} abs={abs} j={j}");
+                    assert_eq!(*vr, c.v_row(layer, start + j));
+                }
+            }
+        }
     }
 
     #[test]

@@ -13,35 +13,51 @@
 //!   [`GenResponse`], [`BatcherConfig`], [`ServeMetrics`]) shared with the
 //!   xla `coordinator`, compiled unconditionally.
 //! * [`kvcache`] — preallocated per-sequence K/V ring buffers with
-//!   incremental append (sliding-window attention past capacity).
+//!   incremental append (sliding-window attention past capacity) and
+//!   contiguous window-slab access for the head-blocked attention kernel.
 //! * [`engine`] — the transformer forward from a packed model
-//!   (embedding gather, RMSNorm, rotary, causal attention over the cache,
-//!   SwiGLU MLP, fp LM head), scale-swap task switching, greedy/top-k
-//!   sampling, and the dense `matmul_naive` reference the engine is
+//!   (embedding gather, RMSNorm, rotary, head-blocked causal attention
+//!   over the cache, SwiGLU MLP, fp LM head) with a per-engine scratch
+//!   arena (activation slabs reused across decode steps and prefill
+//!   chunks — no per-call allocation on the steady-state loop),
+//!   cross-request prefill batching ([`Engine::prefill_batch`]),
+//!   scale-swap task switching, greedy/top-k sampling, and the dense
+//!   `matmul_naive` references (full and sliding-window) the engine is
 //!   parity-tested against.
-//! * [`scheduler`] — continuous batching over multiple tasks with swap
-//!   latency recorded into `ServeMetrics::swap_times_s`.
+//! * [`scheduler`] — continuous batching over multiple tasks (per-task
+//!   indexed queue, capacity-keyed KV-cache recycling, cross-request
+//!   prefill admission) with swap latency recorded into
+//!   `ServeMetrics::swap_times_s`.
+//! * [`server`] — the concurrent-client wrapper: one worker thread owns
+//!   the [`Scheduler`], clients submit/await over an mpsc channel
+//!   (bursts of concurrent requests become one batched drain).
 //!
 //! ## Scale-swap contract
 //!
 //! Packed integer codes are immutable for the life of an [`Engine`];
-//! [`Engine::apply_adapter`] replaces only the f32 scale/zero tensors of
-//! the projections the adapter covers, and adapters for different tasks
-//! are expected to cover the same tensor set (a partial adapter leaves
-//! the uncovered projections on the previously-applied task's scales).
+//! [`Engine::apply_adapter`] replaces the f32 scale/zero tensors of the
+//! projections the adapter covers and restores the construction-time
+//! base scales/zeros on every projection it does not cover — engine
+//! state after a swap depends only on the adapter applied, never on the
+//! sequence of previous swaps (no partial-coverage residue).
 //!
 //! Entry points: `peqa serve` (CLI demo over a synthesized or on-disk
-//! `.packed` model), `benches/serve_decode.rs` (writes BENCH_serve.json),
-//! `tests/serve_host.rs` (decode parity + determinism).
+//! `.packed` model; `--clients N` routes it through the threaded
+//! [`server`]), `benches/serve_decode.rs` (writes BENCH_serve.json),
+//! `tests/serve_host.rs` (decode parity + determinism + concurrency).
 
 pub mod engine;
 pub mod kvcache;
 pub mod scheduler;
+pub mod server;
 pub mod types;
 
-pub use engine::{argmax, reference_forward, sample, Engine, ModelGeom, Sampling};
+pub use engine::{
+    argmax, reference_forward, reference_forward_windowed, sample, Engine, ModelGeom, Sampling,
+};
 pub use kvcache::KvCache;
 pub use scheduler::{Scheduler, SchedulerConfig};
+pub use server::{Server, ServerHandle};
 pub use types::{AdapterStore, BatcherConfig, GenRequest, GenResponse, ServeMetrics};
 
 use anyhow::Result;

@@ -3,25 +3,40 @@
 //! The serving loop the paper's Table 1 sketches, realized on the host
 //! path: many tasks share one packed integer model; a task switch moves
 //! only the f32 scale/zero tensors of the adapter-covered projections
-//! ([`Engine::apply_adapter`] — codes never move) and its wall time is
-//! recorded into [`ServeMetrics::swap_times_s`].
+//! ([`Engine::apply_adapter`] — codes never move, uncovered projections
+//! revert to the base scales) and its wall time is recorded into
+//! [`ServeMetrics::swap_times_s`].
 //!
 //! Scheduling policy:
-//! * Requests queue FIFO; the task of the queue head selects the next
-//!   adapter. To minimize swaps the scheduler then drains *every* queued
-//!   request of that task before switching again (task-greedy).
+//! * Requests queue FIFO. The queue is **indexed per task** (one
+//!   `VecDeque` per task name plus a global arrival sequence number), so
+//!   admitting into a freed slot pops the next same-task request in O(1)
+//!   instead of re-scanning the whole queue per slot; the task whose
+//!   front request arrived earliest selects the next adapter. To
+//!   minimize swaps the scheduler then drains *every* queued request of
+//!   that task before switching again (task-greedy).
+//! * Admission is **cross-request prefill batched**: all prompts staffed
+//!   into free slots in one admit pass go through a single
+//!   [`Engine::prefill_batch`] call — one fused GEMM per projection over
+//!   the concatenated prompt tokens of every admitted request, instead
+//!   of one engine pass per prompt ([`ServeMetrics::prefill_batches`] /
+//!   [`ServeMetrics::prefill_tokens`] record the grouping).
 //! * Within a task, decoding is **continuous batching**: up to
 //!   `max_batch` sequences advance together one token per step, and the
-//!   moment one finishes, the next queued same-task request is admitted
-//!   (prefilled) into the freed slot — the batch never drains to empty
-//!   between requests.
+//!   moment slots free up, the next queued same-task requests are
+//!   admitted (batch-prefilled) into them — the batch never drains to
+//!   empty between requests.
+//! * Finished requests return their KV cache to a **capacity-keyed spare
+//!   pool**, so steady-state serving stops allocating window-sized
+//!   buffers even across config changes (caches are recycled per
+//!   capacity, never dropped for having the "wrong" one).
 //! * With [`Sampling::Greedy`] the generated tokens of every request are
-//!   bit-identical regardless of `max_batch` and of the engine's worker
-//!   thread count (the engine's per-sequence math is batch-independent);
-//!   top-k sampling is deterministic given the scheduler seed but its
-//!   draw order depends on batch composition.
+//!   bit-identical regardless of `max_batch`, of prefill grouping, and
+//!   of the engine's worker thread count (the engine's per-sequence math
+//!   is batch-independent); top-k sampling is deterministic given the
+//!   scheduler seed but its draw order depends on batch composition.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
@@ -64,18 +79,29 @@ struct Slot {
     out: Vec<u32>,
 }
 
-/// Multi-task serving loop: queue + scale-swap + continuous batching.
+/// One queued request. Arrival order is the (monotonic) `req.id`.
+struct Queued {
+    req: GenRequest,
+    submitted: Instant,
+}
+
+/// Multi-task serving loop: indexed queue + scale-swap + continuous
+/// batching with cross-request prefill.
 pub struct Scheduler {
     engine: Engine,
     adapters: AdapterStore,
     cfg: SchedulerConfig,
     current_task: Option<String>,
-    queue: VecDeque<(GenRequest, Instant)>,
+    /// Per-task FIFO queues; the monotonic request id preserves global
+    /// arrival order, so head-of-line selection stays FIFO across tasks.
+    queues: HashMap<String, VecDeque<Queued>>,
+    queued: usize,
     next_id: u64,
     rng: Pcg32,
-    /// Reset KV caches of finished requests, reused by later admits so
-    /// steady-state serving stops allocating window-sized buffers.
-    spare_caches: Vec<KvCache>,
+    /// Reset KV caches of finished requests keyed by capacity, reused by
+    /// later admits so steady-state serving stops allocating
+    /// window-sized buffers.
+    spare_caches: HashMap<usize, Vec<KvCache>>,
     pub metrics: ServeMetrics,
 }
 
@@ -86,10 +112,11 @@ impl Scheduler {
             adapters,
             cfg,
             current_task: None,
-            queue: VecDeque::new(),
+            queues: HashMap::new(),
+            queued: 0,
             next_id: 1,
             rng: Pcg32::seeded(cfg.seed, 0x5c4ed),
-            spare_caches: Vec::new(),
+            spare_caches: HashMap::new(),
             metrics: ServeMetrics::default(),
         }
     }
@@ -102,18 +129,47 @@ impl Scheduler {
         self.adapters.tasks()
     }
 
+    /// Whether an adapter is registered for `task` (the server wrapper
+    /// rejects unknown tasks at submit time instead of poisoning the
+    /// drain loop).
+    pub fn has_task(&self, task: &str) -> bool {
+        self.adapters.get(task).is_some()
+    }
+
     pub fn pending(&self) -> usize {
-        self.queue.len()
+        self.queued
+    }
+
+    /// Drop every queued (not-yet-admitted) request, returning how many
+    /// were discarded. The server wrapper calls this after a drain error
+    /// so clients whose requests were failed-by-error are not silently
+    /// re-decoded for nobody on the next drain.
+    pub fn clear_queue(&mut self) -> usize {
+        let dropped = self.queued;
+        self.queues.clear();
+        self.queued = 0;
+        dropped
     }
 
     pub fn submit(&mut self, task: &str, prompt: Vec<u32>, max_new: usize, stop: u32) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
-        self.queue.push_back((
-            GenRequest { id, task: task.to_string(), prompt, max_new, stop },
-            Instant::now(),
-        ));
+        self.queues.entry(task.to_string()).or_default().push_back(Queued {
+            req: GenRequest { id, task: task.to_string(), prompt, max_new, stop },
+            submitted: Instant::now(),
+        });
+        self.queued += 1;
         id
+    }
+
+    /// The task whose queue front arrived earliest (global FIFO head —
+    /// ids are assigned in arrival order).
+    fn head_task(&self) -> Option<String> {
+        self.queues
+            .iter()
+            .filter_map(|(task, q)| q.front().map(|h| (h.req.id, task)))
+            .min_by_key(|(id, _)| *id)
+            .map(|(_, task)| task.clone())
     }
 
     /// Switch the served task by scale swap; returns the swap wall time
@@ -124,7 +180,8 @@ impl Scheduler {
         }
         let t0 = Instant::now();
         // The measured swap is exactly the adapter bytes moved once:
-        // apply_adapter clones each s/z tensor into the packed matrices.
+        // apply_adapter clones each s/z tensor into the packed matrices
+        // (plus base restores for projections the adapter leaves out).
         let adapter = self
             .adapters
             .get(task)
@@ -140,7 +197,7 @@ impl Scheduler {
     pub fn run_until_idle(&mut self) -> Result<Vec<GenResponse>> {
         let wall0 = Instant::now();
         let mut responses = Vec::new();
-        while let Some(task) = self.queue.front().map(|(r, _)| r.task.clone()) {
+        while let Some(task) = self.head_task() {
             self.switch_task(&task)?;
             let mut active: Vec<Slot> = Vec::new();
             loop {
@@ -187,55 +244,92 @@ impl Scheduler {
         Ok(responses)
     }
 
-    /// Pull queued `task` requests into free batch slots, prefilling each
-    /// prompt. Degenerate requests (empty prompt, `max_new == 0`, or a
-    /// stop token predicted straight from the prompt) complete here.
+    /// Pull queued `task` requests into free batch slots and prefill all
+    /// their prompts through ONE [`Engine::prefill_batch`] call per admit
+    /// pass (cross-request prefill batching). Degenerate requests (empty
+    /// prompt, `max_new == 0`) complete here without touching the
+    /// engine; requests whose first sampled token already stops them (or
+    /// whose `max_new` is 1) complete at prefill and free their slot for
+    /// the next pass of the loop.
     fn admit(
         &mut self,
         task: &str,
         active: &mut Vec<Slot>,
         responses: &mut Vec<GenResponse>,
     ) -> Result<()> {
-        while active.len() < self.cfg.max_batch.max(1) {
-            let Some(idx) = self.queue.iter().position(|(r, _)| r.task == task) else {
-                break;
+        loop {
+            let cap = self.cfg.max_batch.max(1);
+            // Staff every free slot from the per-task queue: O(1) pops
+            // instead of an O(queue) scan per freed slot.
+            let mut pending: Vec<(GenRequest, Instant, Instant)> = Vec::new();
+            let mut caches: Vec<KvCache> = Vec::new();
+            while active.len() + pending.len() < cap {
+                let Some(q) = self.queues.get_mut(task).and_then(VecDeque::pop_front) else {
+                    break;
+                };
+                self.queued -= 1;
+                let started = Instant::now();
+                if q.req.prompt.is_empty() || q.req.max_new == 0 {
+                    // Degenerate request: completes without the engine.
+                    let resp = self.finish(q.req, q.submitted, started, Vec::new());
+                    responses.push(resp);
+                    continue;
+                }
+                let window = self.cfg.window.max(1);
+                let cache = self
+                    .spare_caches
+                    .get_mut(&window)
+                    .and_then(Vec::pop)
+                    .unwrap_or_else(|| self.engine.new_cache(window));
+                pending.push((q.req, q.submitted, started));
+                caches.push(cache);
+            }
+            if pending.is_empty() {
+                return Ok(());
+            }
+            // One fused prefill over every admitted prompt. Row i of the
+            // returned logits is bitwise what a lone prefill of prompt i
+            // would produce, so grouping never changes generations.
+            let logits = {
+                let prompts: Vec<&[u32]> =
+                    pending.iter().map(|(r, _, _)| r.prompt.as_slice()).collect();
+                let mut cache_refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+                self.engine.prefill_batch(&prompts, &mut cache_refs)?
             };
-            let (req, submitted) = self.queue.remove(idx).expect("position is in range");
-            let started = Instant::now();
-            if req.prompt.is_empty() || req.max_new == 0 {
-                // Degenerate request: completes without touching the engine.
-                let resp = self.finish(req, submitted, started, Vec::new());
-                responses.push(resp);
-                continue;
+            self.metrics.prefill_batches += 1;
+            self.metrics.prefill_tokens +=
+                pending.iter().map(|(r, _, _)| r.prompt.len()).sum::<usize>();
+            let vocab = self.engine.geom().vocab;
+            for (i, ((req, submitted, started), cache)) in
+                pending.into_iter().zip(caches).enumerate()
+            {
+                let first =
+                    sample(&logits[i * vocab..(i + 1) * vocab], self.cfg.sampling, &mut self.rng);
+                let mut slot =
+                    Slot { req, submitted, started, cache, next_token: first, out: Vec::new() };
+                if first == slot.req.stop {
+                    responses.push(self.finish_slot(slot));
+                    continue;
+                }
+                slot.out.push(first);
+                if slot.out.len() >= slot.req.max_new {
+                    responses.push(self.finish_slot(slot));
+                    continue;
+                }
+                active.push(slot);
             }
-            let mut cache = self
-                .spare_caches
-                .pop()
-                .unwrap_or_else(|| self.engine.new_cache(self.cfg.window.max(1)));
-            let logits = self.engine.prefill(&req.prompt, &mut cache)?;
-            let first = sample(&logits, self.cfg.sampling, &mut self.rng);
-            let mut slot = Slot { req, submitted, started, cache, next_token: first, out: Vec::new() };
-            if first == slot.req.stop {
-                responses.push(self.finish_slot(slot));
-                continue;
-            }
-            slot.out.push(first);
-            if slot.out.len() >= slot.req.max_new {
-                responses.push(self.finish_slot(slot));
-                continue;
-            }
-            active.push(slot);
+            // Requests that completed at prefill freed capacity — loop to
+            // staff those slots too before the first decode step.
         }
-        Ok(())
     }
 
     fn finish_slot(&mut self, slot: Slot) -> GenResponse {
         let Slot { req, submitted, started, mut cache, out, .. } = slot;
-        // Recycle the window-sized allocation for the next admit.
-        if cache.capacity() == self.cfg.window.max(1) {
-            cache.reset();
-            self.spare_caches.push(cache);
-        }
+        // Recycle the window-sized allocation for a later admit. Keyed by
+        // capacity so a cache sized under a different window config is
+        // kept for same-capacity reuse instead of being dropped.
+        cache.reset();
+        self.spare_caches.entry(cache.capacity()).or_default().push(cache);
         self.finish(req, submitted, started, out)
     }
 
@@ -287,6 +381,45 @@ mod tests {
         assert_eq!(sched.pending(), 0);
         assert!(sched.metrics.wall_s > 0.0);
         assert!(sched.metrics.decode_steps > 0);
+        // Every prefill pass covered multiple same-task prompts at once.
+        assert!(sched.metrics.prefill_batches <= 3, "{}", sched.metrics.prefill_batches);
+        assert_eq!(sched.metrics.prefill_tokens, 9 * 3);
+    }
+
+    #[test]
+    fn many_request_admission_is_indexed_and_recycles_caches() {
+        let (engine, adapters) = tiny();
+        let cfg = SchedulerConfig {
+            max_batch: 4,
+            window: 32,
+            sampling: Sampling::Greedy,
+            seed: 0,
+        };
+        let mut sched = Scheduler::new(engine, adapters, cfg);
+        // 60 interleaved requests over 3 tasks: per-task pops must stay
+        // O(1) (indexed queues) and FIFO head selection must still be
+        // global-arrival order.
+        for i in 0..60u32 {
+            let task = ["a", "b", "c"][(i % 3) as usize];
+            sched.submit(task, vec![1 + (i % 50), 2, 3], 3, u32::MAX);
+        }
+        assert_eq!(sched.pending(), 60);
+        let responses = sched.run_until_idle().unwrap();
+        assert_eq!(responses.len(), 60);
+        assert_eq!(sched.pending(), 0);
+        assert_eq!(sched.metrics.completed, 60);
+        assert_eq!(sched.metrics.generated_tokens, 60 * 3);
+        // Task-greedy drain still groups by task: one swap each.
+        assert_eq!(sched.metrics.swap_times_s.len(), 3);
+        // Cross-request prefill: 20 same-task requests at max_batch 4 →
+        // 5 admit batches per task, not one engine pass per request.
+        assert_eq!(sched.metrics.prefill_batches, 15);
+        assert_eq!(sched.metrics.prefill_tokens, 60 * 3);
+        // Caches were recycled through the capacity-keyed pool: the
+        // whole run never held more than one batch worth of caches.
+        let spares: usize = sched.spare_caches.values().map(Vec::len).sum();
+        assert!(spares <= 4, "spare caches grew to {spares}");
+        assert!(sched.spare_caches.keys().all(|&c| c == 32));
     }
 
     #[test]
@@ -302,12 +435,15 @@ mod tests {
             assert!([id_empty, id_zero].contains(&r.id));
         }
         assert_eq!(sched.metrics.decode_steps, 0);
+        assert_eq!(sched.metrics.prefill_batches, 0);
     }
 
     #[test]
     fn unknown_task_is_an_error() {
         let (engine, adapters) = tiny();
         let mut sched = Scheduler::new(engine, adapters, SchedulerConfig::default());
+        assert!(!sched.has_task("nope"));
+        assert!(sched.has_task("a"));
         sched.submit("nope", vec![1], 3, u32::MAX);
         assert!(sched.run_until_idle().is_err());
     }

@@ -1,0 +1,215 @@
+//! Threaded server wrapper around the single-threaded host [`Scheduler`].
+//!
+//! The same frontend/engine split as `coordinator::server` (the xla
+//! path), applied to the host decode engine: the whole serving stack
+//! (packed model + scratch arena + KV caches + scheduler queue) lives on
+//! ONE worker thread; any number of concurrent clients talk to it over an
+//! mpsc request channel without ever holding an engine lock. Requests
+//! carry a oneshot-style reply channel.
+//!
+//! The worker collects each burst of queued messages before draining, so
+//! requests submitted concurrently by different clients land in the
+//! scheduler queue together — which is exactly what the scheduler's
+//! cross-request prefill batching and task-greedy continuous batching
+//! feed on: concurrency translates into larger fused GEMM batches, not
+//! into contention.
+//!
+//! Unknown tasks are rejected at submit time (the scheduler's drain loop
+//! never sees them), and a decode error fails the in-flight requests
+//! instead of killing the worker. Dropping [`Server`] (or calling
+//! [`Server::shutdown`]) stops the worker after the current drain.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::scheduler::Scheduler;
+use super::types::{GenResponse, ServeMetrics};
+
+enum Msg {
+    Generate {
+        task: String,
+        prompt: Vec<u32>,
+        max_new: usize,
+        stop: u32,
+        reply: mpsc::Sender<Result<GenResponse, String>>,
+    },
+    Metrics {
+        reply: mpsc::Sender<ServeMetrics>,
+    },
+    Shutdown,
+}
+
+/// Client handle (cheaply cloneable; safe to move across threads).
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: mpsc::Sender<Msg>,
+}
+
+impl ServerHandle {
+    /// Blocking generate call: submits one request and waits for its
+    /// response. Call from as many client threads as you like — the
+    /// worker batches whatever arrives together.
+    pub fn generate(
+        &self,
+        task: &str,
+        prompt: Vec<u32>,
+        max_new: usize,
+        stop: u32,
+    ) -> Result<GenResponse> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Generate { task: task.to_string(), prompt, max_new, stop, reply })
+            .map_err(|_| anyhow!("server is down"))?;
+        rx.recv().map_err(|_| anyhow!("server dropped request"))?.map_err(|e| anyhow!(e))
+    }
+
+    /// Snapshot of the scheduler's accumulated [`ServeMetrics`].
+    pub fn metrics(&self) -> Result<ServeMetrics> {
+        let (reply, rx) = mpsc::channel();
+        self.tx.send(Msg::Metrics { reply }).map_err(|_| anyhow!("server is down"))?;
+        rx.recv().map_err(|_| anyhow!("server dropped request"))
+    }
+}
+
+/// Owning handle of the worker thread (see module docs).
+pub struct Server {
+    handle: ServerHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Move an already-built scheduler onto a dedicated worker thread and
+    /// start serving.
+    pub fn spawn(scheduler: Scheduler) -> Result<Server> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let join = std::thread::Builder::new()
+            .name("peqa-serve".into())
+            .spawn(move || worker_main(scheduler, rx))?;
+        Ok(Server { handle: ServerHandle { tx }, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.clone()
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn worker_main(mut sched: Scheduler, rx: mpsc::Receiver<Msg>) {
+    let mut waiting: Vec<(u64, mpsc::Sender<Result<GenResponse, String>>)> = Vec::new();
+    loop {
+        // Block for at least one message; then drain whatever arrived —
+        // the burst becomes one scheduler drain (continuous batching +
+        // cross-request prefill over every request in it).
+        let first = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => return, // every handle dropped
+        };
+        let mut batch_msgs = vec![first];
+        while let Ok(m) = rx.try_recv() {
+            batch_msgs.push(m);
+        }
+        let mut shutdown = false;
+        for m in batch_msgs {
+            match m {
+                Msg::Generate { task, prompt, max_new, stop, reply } => {
+                    if !sched.has_task(&task) {
+                        let _ = reply.send(Err(format!(
+                            "no adapter registered for task '{task}'"
+                        )));
+                        continue;
+                    }
+                    let id = sched.submit(&task, prompt, max_new, stop);
+                    waiting.push((id, reply));
+                }
+                Msg::Metrics { reply } => {
+                    let _ = reply.send(sched.metrics.clone());
+                }
+                Msg::Shutdown => shutdown = true,
+            }
+        }
+        if sched.pending() > 0 {
+            match sched.run_until_idle() {
+                Ok(responses) => {
+                    for resp in responses {
+                        if let Some(pos) = waiting.iter().position(|(id, _)| *id == resp.id) {
+                            let (_, reply) = waiting.swap_remove(pos);
+                            let _ = reply.send(Ok(resp));
+                        }
+                    }
+                }
+                Err(e) => {
+                    // Every in-flight client gets the error — including
+                    // ones whose requests were still queued behind the
+                    // failing batch, so those must leave the scheduler
+                    // queue too (decoding them later would burn steps on
+                    // responses nobody is waiting for).
+                    sched.clear_queue();
+                    let msg = format!("decode failed: {e:#}");
+                    for (_, reply) in waiting.drain(..) {
+                        let _ = reply.send(Err(msg.clone()));
+                    }
+                }
+            }
+        }
+        if shutdown {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::engine::{Engine, ModelGeom};
+    use crate::serve::scheduler::SchedulerConfig;
+    use crate::serve::{synth_adapters, synth_packed};
+
+    fn tiny_scheduler() -> Scheduler {
+        let geom = ModelGeom { vocab: 64, d_model: 16, n_layers: 1, n_heads: 2, d_ff: 32 };
+        let (pm, base_q) = synth_packed(&geom, 4, None, 3).unwrap();
+        let engine = Engine::from_packed(pm, geom, 2).unwrap();
+        let adapters = synth_adapters(&base_q, &["a", "b"], 5);
+        Scheduler::new(engine, adapters, SchedulerConfig::default())
+    }
+
+    #[test]
+    fn serves_and_shuts_down() {
+        let server = Server::spawn(tiny_scheduler()).unwrap();
+        let h = server.handle();
+        let r = h.generate("a", vec![1, 2, 3], 4, u32::MAX).unwrap();
+        assert_eq!(r.tokens.len(), 4);
+        assert_eq!(r.task, "a");
+        let m = h.metrics().unwrap();
+        assert_eq!(m.completed, 1);
+        server.shutdown();
+        assert!(h.generate("a", vec![1], 1, u32::MAX).is_err());
+    }
+
+    #[test]
+    fn unknown_task_fails_the_request_not_the_server() {
+        let server = Server::spawn(tiny_scheduler()).unwrap();
+        let h = server.handle();
+        assert!(h.generate("nope", vec![1, 2], 3, u32::MAX).is_err());
+        // The worker survives and keeps serving known tasks.
+        let r = h.generate("b", vec![4, 5], 2, u32::MAX).unwrap();
+        assert_eq!(r.tokens.len(), 2);
+        server.shutdown();
+    }
+}

@@ -118,6 +118,11 @@ pub struct ServeMetrics {
     /// same-task groups record nothing.
     pub swap_times_s: Vec<f64>,
     pub decode_steps: usize,
+    /// Engine prefill passes (host path: one per cross-request admit
+    /// batch — fewer than `completed` means prompts shared fused GEMMs).
+    pub prefill_batches: usize,
+    /// Prompt tokens consumed across all prefill passes.
+    pub prefill_tokens: usize,
     pub wall_s: f64,
 }
 

@@ -2,18 +2,28 @@
 //!
 //! * decode parity: the packed engine's logits match the reference
 //!   dequantize-then-`matmul_naive` forward to ≤ 1e-4, at prefill and at
-//!   every incremental decode step;
+//!   every incremental decode step — including prefills longer than the
+//!   KV capacity (ring-wrap mid-prefill) against the sliding-window
+//!   reference;
 //! * determinism: greedy decode is bit-identical across kernel worker
-//!   thread counts (the PEQA_THREADS axis, pinned explicitly here) and
-//!   across scheduler batch sizes;
+//!   thread counts (the PEQA_THREADS axis, pinned explicitly here),
+//!   across scheduler batch sizes, and across cross-request prefill
+//!   groupings;
 //! * scale-swap contract: task switches replace only f32 scale/zero
-//!   tensors, are exactly revertible, and never touch packed codes;
+//!   tensors, are exactly revertible, never touch packed codes, and a
+//!   swap to a partial-coverage adapter restores base scales on every
+//!   projection it does not cover (no residue from the previous task);
+//! * concurrency: the threaded `serve::Server` serves parallel clients
+//!   the same tokens as a direct scheduler drain;
 //! * tokenizer round-trip on the demo corpus and stop-token truncation
 //!   (a stop id sampled mid-batch must not leak into the response).
 
+use std::collections::HashMap;
+
 use peqa::data::corpus;
 use peqa::serve::{
-    self, reference_forward, Engine, ModelGeom, Sampling, Scheduler, SchedulerConfig,
+    self, reference_forward, reference_forward_windowed, Engine, KvCache, ModelGeom, Sampling,
+    Scheduler, SchedulerConfig, Server,
 };
 use peqa::tokenizer::Tokenizer;
 
@@ -26,7 +36,7 @@ fn engine(threads: usize, seed: u64) -> (Engine, peqa::model::Checkpoint) {
 
 #[test]
 fn decode_parity_with_dequantized_reference() {
-    let (eng, base_q) = engine(2, 41);
+    let (mut eng, base_q) = engine(2, 41);
     let fp_ref = base_q.dequantize().unwrap();
     let mut seq: Vec<u32> = vec![10, 7, 42, 99, 3, 250, 31];
 
@@ -55,11 +65,88 @@ fn decode_parity_with_dequantized_reference() {
 }
 
 #[test]
+fn ring_wrap_prefill_matches_sliding_window_reference() {
+    // Prompt 21 tokens into a capacity-8 cache: the ring wraps twice
+    // DURING the prefill block. Every logits row must match the dense
+    // sliding-window reference (window == capacity) to ≤ 1e-4, through
+    // the prefill and through decode steps that keep wrapping.
+    let (mut eng, base_q) = engine(2, 71);
+    let fp_ref = base_q.dequantize().unwrap();
+    let cap = 8usize;
+    let mut seq: Vec<u32> = (0..21).map(|i| ((i * 13 + 5) % 256) as u32).collect();
+    let mut cache = eng.new_cache(cap);
+    let mut logits = eng.prefill(&seq, &mut cache).unwrap();
+    let r = reference_forward_windowed(&fp_ref, &GEOM, &seq, cap).unwrap();
+    let last = &r.data()[(seq.len() - 1) * GEOM.vocab..];
+    let d0 = max_abs(&logits, last);
+    assert!(d0 <= 1e-4, "ring-wrap prefill parity: {d0}");
+    for step in 0..5 {
+        let next = serve::argmax(&logits);
+        seq.push(next);
+        let mut refs = [&mut cache];
+        logits = eng.decode_batch(&[next], &mut refs).unwrap();
+        let r = reference_forward_windowed(&fp_ref, &GEOM, &seq, cap).unwrap();
+        let last = &r.data()[(seq.len() - 1) * GEOM.vocab..];
+        let d = max_abs(&logits, last);
+        assert!(d <= 1e-4, "wrap step {step} parity: {d}");
+    }
+    assert_eq!(cache.pos(), seq.len());
+    assert_eq!(cache.len(), cap);
+}
+
+#[test]
+fn cross_request_prefill_batching_is_bitwise() {
+    // Batched prefill of several ragged prompts must produce, per
+    // sequence, exactly the logits and cache state of prefilling each
+    // prompt alone.
+    let (mut eng, _) = engine(3, 83);
+    let prompts: Vec<Vec<u32>> =
+        vec![vec![1, 2, 3], vec![9, 8, 7, 6, 5], vec![100], vec![42, 250, 17, 3]];
+    let vocab = GEOM.vocab;
+
+    let mut solo_logits = Vec::new();
+    let mut solo_caches: Vec<KvCache> = Vec::new();
+    for p in &prompts {
+        let mut c = eng.new_cache(16);
+        solo_logits.push(eng.prefill(p, &mut c).unwrap());
+        solo_caches.push(c);
+    }
+
+    let mut batch_caches: Vec<KvCache> = (0..prompts.len()).map(|_| eng.new_cache(16)).collect();
+    let prompt_refs: Vec<&[u32]> = prompts.iter().map(|p| p.as_slice()).collect();
+    let mut cache_refs: Vec<&mut KvCache> = batch_caches.iter_mut().collect();
+    let logits = eng.prefill_batch(&prompt_refs, &mut cache_refs).unwrap();
+    for (i, solo) in solo_logits.iter().enumerate() {
+        assert_eq!(
+            &logits[i * vocab..(i + 1) * vocab],
+            solo.as_slice(),
+            "prompt {i}: batched prefill must be bitwise equal to solo prefill"
+        );
+    }
+
+    // The caches must be interchangeable: one more decode step from the
+    // batched caches equals the step from the solo caches, bitwise.
+    let next: Vec<u32> =
+        (0..prompts.len()).map(|i| serve::argmax(&logits[i * vocab..(i + 1) * vocab])).collect();
+    let mut refs: Vec<&mut KvCache> = batch_caches.iter_mut().collect();
+    let step_batched = eng.decode_batch(&next, &mut refs).unwrap();
+    for (i, c) in solo_caches.iter_mut().enumerate() {
+        let mut refs = [&mut *c];
+        let step_solo = eng.decode_batch(&next[i..i + 1], &mut refs).unwrap();
+        assert_eq!(
+            &step_batched[i * vocab..(i + 1) * vocab],
+            step_solo.as_slice(),
+            "seq {i}: decode after batched vs solo prefill"
+        );
+    }
+}
+
+#[test]
 fn greedy_decode_is_thread_count_invariant() {
     // PEQA_THREADS=1 vs 4, pinned through the engine's explicit worker
     // count (the env var feeds the same parameter in production).
-    let (e1, _) = engine(1, 13);
-    let (e4, _) = engine(4, 13);
+    let (mut e1, _) = engine(1, 13);
+    let (mut e4, _) = engine(4, 13);
     let prompt: Vec<u32> = vec![5, 200, 17, 63];
     let mut c1 = e1.new_cache(64);
     let mut c4 = e4.new_cache(64);
@@ -81,7 +168,9 @@ fn greedy_decode_is_thread_count_invariant() {
 #[test]
 fn greedy_decode_is_batch_size_invariant() {
     // The same mixed-task request set must generate bit-identical token
-    // sequences whether the scheduler runs it at batch 1 or batch 4.
+    // sequences whether the scheduler runs it at batch 1 or batch 4
+    // (which also varies the cross-request prefill grouping: batch 1
+    // prefills each prompt alone, batch 4 fuses up to 4 prompts).
     let run = |max_batch: usize| -> Vec<(u64, Vec<u32>)> {
         let (eng, base_q) = engine(2, 29);
         let adapters = serve::synth_adapters(&base_q, &["a", "b", "c"], 7);
@@ -119,23 +208,23 @@ fn scale_swap_changes_outputs_revertibly_and_leaves_codes_alone() {
     let (mut eng, base_q) = engine(2, 57);
     let adapters = serve::synth_adapters(&base_q, &["base", "tuned"], 3);
     let prompt: Vec<u32> = vec![9, 100, 4];
-    let logits_of = |eng: &Engine| {
+    let logits_of = |eng: &mut Engine| {
         let mut c = eng.new_cache(16);
         eng.prefill(&prompt, &mut c).unwrap()
     };
     let bytes0 = eng.packed_bytes();
-    let base_logits = logits_of(&eng);
+    let base_logits = logits_of(&mut eng);
 
     let n = eng.apply_adapter(adapters.get("tuned").unwrap()).unwrap();
     // Every projection contributes one .s and one .z tensor.
     assert_eq!(n, GEOM.n_layers * 7 * 2);
-    let tuned_logits = logits_of(&eng);
+    let tuned_logits = logits_of(&mut eng);
     assert!(max_abs(&base_logits, &tuned_logits) > 0.0, "tuned adapter must change logits");
     assert_eq!(eng.packed_bytes(), bytes0, "codes never move on a swap");
 
     // Swapping back restores the exact base behavior.
     eng.apply_adapter(adapters.get("base").unwrap()).unwrap();
-    assert_eq!(logits_of(&eng), base_logits, "scale swap must be exactly revertible");
+    assert_eq!(logits_of(&mut eng), base_logits, "scale swap must be exactly revertible");
 
     // Malformed adapters are rejected before any mutation.
     let mut bad = peqa::model::Checkpoint::new();
@@ -144,15 +233,80 @@ fn scale_swap_changes_outputs_revertibly_and_leaves_codes_alone() {
     let mut bad_shape = peqa::model::Checkpoint::new();
     bad_shape.insert("layers.0.attn.q.s", peqa::tensor::Tensor::zeros(&[1, 1]));
     assert!(eng.apply_adapter(&bad_shape).is_err());
-    assert_eq!(logits_of(&eng), base_logits, "failed swap leaves the engine unchanged");
+    assert_eq!(logits_of(&mut eng), base_logits, "failed swap leaves the engine unchanged");
+}
+
+#[test]
+fn asymmetric_adapter_swaps_leave_no_residue() {
+    // THE residue regression: adapter `full` covers every projection,
+    // adapter `partial` covers only layers.0.attn.q.s and
+    // layers.1.mlp.gate.z. Swapping full → partial on one engine must
+    // produce exactly the logits of a fresh engine that only ever
+    // applied `partial` — i.e. the projections `partial` does not cover
+    // revert to base scales instead of keeping `full`'s.
+    let seed = 57u64;
+    let prompt: Vec<u32> = vec![9, 100, 4, 33, 7];
+    let (_, base_q) = engine(2, seed);
+    let full =
+        serve::synth_adapters(&base_q, &["base", "full"], 3).get("full").unwrap().clone();
+    let mut partial = peqa::model::Checkpoint::new();
+    let mut s = base_q.req("layers.0.attn.q.s").unwrap().clone();
+    for v in s.data_mut() {
+        *v *= 1.7;
+    }
+    partial.insert("layers.0.attn.q.s", s);
+    let mut z = base_q.req("layers.1.mlp.gate.z").unwrap().clone();
+    for v in z.data_mut() {
+        *v += 0.25;
+    }
+    partial.insert("layers.1.mlp.gate.z", z);
+
+    let logits_with = |adapter: Option<&peqa::model::Checkpoint>| -> Vec<f32> {
+        let (mut eng, _) = engine(2, seed);
+        if let Some(a) = adapter {
+            eng.apply_adapter(a).unwrap();
+        }
+        let mut c = eng.new_cache(32);
+        eng.prefill(&prompt, &mut c).unwrap()
+    };
+    let l_base = logits_with(None);
+    let l_full = logits_with(Some(&full));
+    let l_partial = logits_with(Some(&partial));
+    // The three behaviors are genuinely distinct, so residue would show.
+    assert!(max_abs(&l_base, &l_full) > 0.0);
+    assert!(max_abs(&l_base, &l_partial) > 0.0);
+    assert!(max_abs(&l_full, &l_partial) > 0.0);
+
+    // One engine, both swap orders.
+    let (mut eng, _) = engine(2, seed);
+    eng.apply_adapter(&full).unwrap();
+    eng.apply_adapter(&partial).unwrap();
+    let mut c = eng.new_cache(32);
+    assert_eq!(
+        eng.prefill(&prompt, &mut c).unwrap(),
+        l_partial,
+        "full → partial must equal partial applied to a fresh engine"
+    );
+    eng.apply_adapter(&full).unwrap();
+    let mut c = eng.new_cache(32);
+    assert_eq!(
+        eng.prefill(&prompt, &mut c).unwrap(),
+        l_full,
+        "partial → full must equal full applied to a fresh engine"
+    );
+    // And partial → base-coverage-only round trip: applying an EMPTY
+    // adapter restores the pristine base engine.
+    eng.apply_adapter(&peqa::model::Checkpoint::new()).unwrap();
+    let mut c = eng.new_cache(32);
+    assert_eq!(eng.prefill(&prompt, &mut c).unwrap(), l_base);
 }
 
 #[test]
 fn sliding_window_decode_stays_finite_and_deterministic() {
     // Sequences longer than the KV capacity wrap the ring; decode must
     // keep producing finite logits and stay thread-invariant.
-    let (e1, _) = engine(1, 71);
-    let (e3, _) = engine(3, 71);
+    let (mut e1, _) = engine(1, 71);
+    let (mut e3, _) = engine(3, 71);
     let prompt: Vec<u32> = (0..20).map(|i| (i * 13 + 5) % 256).collect();
     let mut c1 = e1.new_cache(8);
     let mut c3 = e3.new_cache(8);
@@ -170,6 +324,70 @@ fn sliding_window_decode_stays_finite_and_deterministic() {
     }
     assert_eq!(c1.pos(), prompt.len() + 6);
     assert_eq!(c1.len(), 8);
+}
+
+#[test]
+fn threaded_server_matches_direct_scheduler_under_concurrency() {
+    let mk = || {
+        let (eng, base_q) = engine(2, 29);
+        let adapters = serve::synth_adapters(&base_q, &["a", "b", "c"], 7);
+        Scheduler::new(
+            eng,
+            adapters,
+            SchedulerConfig { max_batch: 4, window: 64, sampling: Sampling::Greedy, seed: 0 },
+        )
+    };
+    let req = |i: u32| -> (&'static str, Vec<u32>) {
+        (["a", "b", "c"][(i % 3) as usize], vec![1 + i, 40 + i, 7])
+    };
+    const N: u32 = 12;
+
+    // Ground truth: direct scheduler drain (greedy ⇒ tokens depend only
+    // on (task, prompt), not on batching or arrival order).
+    let mut expected: HashMap<(String, Vec<u32>), Vec<u32>> = HashMap::new();
+    {
+        let mut sched = mk();
+        let mut keys: HashMap<u64, (String, Vec<u32>)> = HashMap::new();
+        for i in 0..N {
+            let (task, prompt) = req(i);
+            let id = sched.submit(task, prompt.clone(), 6, u32::MAX);
+            keys.insert(id, (task.to_string(), prompt));
+        }
+        for r in sched.run_until_idle().unwrap() {
+            expected.insert(keys.remove(&r.id).unwrap(), r.tokens);
+        }
+    }
+    assert_eq!(expected.len(), N as usize);
+
+    // 4 concurrent clients × 3 requests each against the threaded server.
+    let server = Server::spawn(mk()).unwrap();
+    let expected = &expected;
+    std::thread::scope(|s| {
+        for c in 0..4u32 {
+            let h = server.handle();
+            s.spawn(move || {
+                for j in 0..3u32 {
+                    let i = c * 3 + j;
+                    let (task, prompt) = req(i);
+                    let r = h.generate(task, prompt.clone(), 6, u32::MAX).unwrap();
+                    assert_eq!(r.task, task);
+                    assert_eq!(
+                        &r.tokens,
+                        expected.get(&(task.to_string(), prompt)).unwrap(),
+                        "client {c} request {j}: server tokens diverge from direct drain"
+                    );
+                }
+            });
+        }
+    });
+    let m = server.handle().metrics().unwrap();
+    assert_eq!(m.completed, N as usize);
+    assert!(
+        (1..=N as usize).contains(&m.prefill_batches),
+        "every admit pass prefills at least one request (got {})",
+        m.prefill_batches
+    );
+    server.shutdown();
 }
 
 #[test]

@@ -19,10 +19,12 @@ quick for serve); a config mismatch skips the comparison with a notice
 instead of failing, since CI machines differ.
 
 Usage:
-  scripts/bench_diff.py [--threshold 0.2] [--update]
+  scripts/bench_diff.py [--threshold 0.2] [--update] [--only FILE]
 
 --update copies the current result files into scripts/baselines/
 (seeding them on first run, refreshing after an accepted perf change).
+--only restricts the run to one result file (repeatable) — ci.sh uses
+it to seed a missing baseline without touching a committed one.
 A missing baseline or missing current file is a notice, not a failure.
 """
 
@@ -103,10 +105,16 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--threshold", type=float, default=0.2)
     ap.add_argument("--update", action="store_true", help="refresh the committed baselines")
+    ap.add_argument(
+        "--only",
+        action="append",
+        choices=FILES,
+        help="restrict to one result file (repeatable)",
+    )
     args = ap.parse_args()
 
     fails = []
-    for name in FILES:
+    for name in args.only or FILES:
         cur_path = ROOT / name
         base_path = BASELINES / name
         print(f"== {name} ==")

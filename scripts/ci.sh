@@ -42,7 +42,28 @@ echo "== ok: BENCH_serve.json written =="
 
 echo "== bench trend diff (scripts/baselines/) =="
 if command -v python3 >/dev/null 2>&1; then
-  python3 scripts/bench_diff.py
+  # Per result file: no committed baseline yet → seed it from the result
+  # this run just produced (and remind the operator to commit it);
+  # baseline present → diff against it and fail on >20% fused-path
+  # regressions. Per-file so seeding one missing baseline never
+  # overwrites a committed one.
+  SEEDED=0
+  for bf in BENCH_kernels.json BENCH_serve.json; do
+    if [[ ! -f "scripts/baselines/$bf" ]]; then
+      python3 scripts/bench_diff.py --update --only "$bf"
+      SEEDED=1
+    else
+      python3 scripts/bench_diff.py --only "$bf"
+    fi
+  done
+  if [[ "$SEEDED" == "1" ]]; then
+    echo "== seeded scripts/baselines/ from this run — commit them so the trend diff gates =="
+  fi
+elif [[ "${PEQA_SKIP_TREND:-0}" == "1" ]]; then
+  echo "python3 not found; PEQA_SKIP_TREND=1 — skipping bench trend diff"
 else
-  echo "python3 not found; skipping bench trend diff"
+  echo "ERROR: python3 not found — the bench trend diff cannot run, so perf" >&2
+  echo "regressions would pass silently. Install python3 or set PEQA_SKIP_TREND=1" >&2
+  echo "to skip the gate knowingly." >&2
+  exit 1
 fi
