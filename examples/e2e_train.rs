@@ -16,7 +16,7 @@ use peqa::config::TrainConfig;
 use peqa::data::LmBatcher;
 use peqa::model::Checkpoint;
 use peqa::pipeline::{self, Ctx};
-use peqa::train::Trainer;
+use peqa::train::{Trainer, Tuner};
 
 fn main() -> anyhow::Result<()> {
     let mut args = Args::parse(std::env::args().skip(1))?;
@@ -47,8 +47,8 @@ fn main() -> anyhow::Result<()> {
     let stream = ctx.stream("pretrain", pipeline::PRETRAIN_BYTES)?;
     let (b, t) = (meta.inputs[0].shape[0], meta.inputs[0].shape[1]);
     let mut batcher = LmBatcher::new(stream, b, t, 77);
-    trainer.run(|| batcher.next_batch())?;
-    let losses = trainer.losses.clone();
+    trainer.run(steps, || batcher.next_batch())?;
+    let losses = trainer.losses().to_vec();
     let base = trainer.finish()?;
     let pretrain_s = t0.elapsed().as_secs_f64();
     let tokens_seen = steps * b * t;

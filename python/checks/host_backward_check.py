@@ -1,0 +1,301 @@
+#!/usr/bin/env python3
+"""Numerics cross-check for the host PEQA backward (rust/src/train/host.rs).
+
+Standalone (numpy only — no jax): run `python3 python/checks/host_backward_check.py`.
+
+Mirrors, in f64 numpy, EXACTLY the formulas the Rust implements:
+  * fused projection y = X @ (s*(c - z)).T with per-(row, group) s/z
+  * grad_input        dX = dY @ W_hat
+  * grad_scales_zeros ds[r,g], dz[r,g] reductions
+  * rmsnorm fwd/bwd, rope fwd/bwd, causal attention fwd/bwd,
+    SwiGLU fwd/bwd, masked-CE loss + dlogits
+then finite-difference-verifies every gradient in f64 (so any algebra
+error in the ported formulas shows as O(1) relative error), and finally
+simulates the e2e test's scale-only Adam training run to confirm the
+loss-decrease margins asserted in tests/train_host.rs.
+"""
+import numpy as np
+
+rng = np.random.default_rng(0)
+
+# ---------------------------------------------------------------- quant
+def quantize(W, bits, group):
+    rows, cols = W.shape
+    g = group or cols
+    ng = cols // g
+    Wg = W.reshape(rows, ng, g)
+    mn, mx = Wg.min(-1), Wg.max(-1)
+    qmax = (1 << bits) - 1
+    s = np.maximum((mx - mn) / qmax, 1e-8)
+    z = -mn / s
+    c = np.clip(np.round(Wg / s[..., None] + z[..., None]), 0, qmax)
+    return c, s, z  # c: (rows, ng, g)
+
+def dequant(c, s, z):
+    return (s[..., None] * (c - z[..., None])).reshape(c.shape[0], -1)
+
+def proj(x, c, s, z):
+    return x @ dequant(c, s, z).T
+
+def grad_input(dy, c, s, z):
+    return dy @ dequant(c, s, z)
+
+def grad_sz(x, dy, c, s, z):
+    rows, ng, g = c.shape
+    xg = x.reshape(x.shape[0], ng, g)
+    sx = xg.sum(-1)                                  # (b, ng)
+    dot = np.einsum('big,rig->bri', xg, c)           # (b, rows, ng)
+    ds = np.einsum('br,bri->ri', dy, dot) - z * np.einsum('br,bi->ri', dy, sx)
+    dz = -s * np.einsum('br,bi->ri', dy, sx)
+    return ds, dz
+
+# kernel-level fd check (linear loss)
+for bits, group in [(2, None), (3, 16), (4, 128)]:
+    cols = 256
+    W = rng.normal(0, 0.4, (12, cols))
+    c, s, z = quantize(W, bits, group)
+    x = rng.normal(0, 1, (5, cols))
+    wts = rng.normal(0, 1, (5, 12))
+    loss = lambda s_, z_: float((proj(x, c, s_, z_) * wts).sum())
+    ds, dz = grad_sz(x, wts, c, s, z)
+    h = 1e-5
+    for (r, g_) in [(0, 0), (5, s.shape[1]//2), (11, s.shape[1]-1)]:
+        for which, grad in [("s", ds), ("z", dz)]:
+            t = s if which == "s" else z
+            t2 = t.copy(); t2[r, g_] += h
+            lp = loss(t2 if which == "s" else s, t2 if which == "z" else z)
+            t2[r, g_] -= 2*h
+            lm = loss(t2 if which == "s" else s, t2 if which == "z" else z)
+            fd = (lp - lm) / (2*h)
+            assert abs(fd - grad[r, g_]) <= 1e-6 * max(1, abs(fd)), (bits, group, which, r, g_, fd, grad[r, g_])
+    # grad_input vs dense
+    dy = rng.normal(0, 1, (5, 12))
+    assert np.allclose(grad_input(dy, c, s, z), dy @ dequant(c, s, z))
+print("kernel-level grads: OK")
+
+# ------------------------------------------------------------- model fwd/bwd
+RMS_EPS = 1e-6
+
+def rms(x, g):
+    inv = 1.0 / np.sqrt((x*x).mean(-1, keepdims=True) + RMS_EPS)
+    return g * x * inv, inv[..., 0]
+
+def rms_bwd(dy, x, g, inv):
+    d = x.shape[-1]
+    ssum = (dy * g * x).sum(-1, keepdims=True)
+    return inv[..., None] * g * dy - x * (inv[..., None]**3) * ssum / d
+
+def rope_mat(T, hh, hd):
+    half = hd // 2
+    freqs = 10000.0 ** (-np.arange(half) / half)
+    ang = np.arange(T)[:, None] * freqs[None, :]   # (T, half)
+    return np.sin(ang), np.cos(ang)
+
+def rope(x, sin, cos, hh, hd, sign=1.0):
+    # x: (B, T, d); per head half-split rotation; sign=-1 is backward.
+    B, T, d = x.shape
+    half = hd // 2
+    xh = x.reshape(B, T, hh, hd).copy()
+    x1 = xh[..., :half].copy(); x2 = xh[..., half:].copy()
+    s = sign * sin[None, :, None, :]; c_ = cos[None, :, None, :]
+    xh[..., :half] = x1 * c_ - x2 * s
+    xh[..., half:] = x1 * s + x2 * c_
+    return xh.reshape(B, T, d)
+
+def silu(x): return x / (1 + np.exp(-x))
+def silu_grad(x):
+    s = 1/(1+np.exp(-x)); return s * (1 + x * (1 - s))
+
+class Model:
+    def __init__(self, vocab, d, L, hh, dff, bits=4, group=8):
+        self.vocab, self.d, self.L, self.hh, self.dff = vocab, d, L, hh, dff
+        self.hd = d // hh
+        self.embed = rng.normal(0, 0.06, (vocab, d))
+        self.head = rng.normal(0, 0.06, (vocab, d))
+        self.gf = np.ones(d)
+        self.layers = []
+        for _ in range(L):
+            lay = {"g1": np.ones(d), "g2": np.ones(d)}
+            for name, shape in [("q", (d, d)), ("k", (d, d)), ("v", (d, d)), ("o", (d, d)),
+                                ("gate", (dff, d)), ("up", (dff, d)), ("down", (d, dff))]:
+                W = rng.normal(0, 0.08, shape)
+                lay[name] = quantize(W, bits, group)
+            self.layers.append(lay)
+
+    def params(self):
+        out = []
+        for li, lay in enumerate(self.layers):
+            for n in ["q", "k", "v", "o", "gate", "up", "down"]:
+                out.append((li, n))
+        return out
+
+    def forward(self, tokens, tape=None):
+        B, T = tokens.shape
+        d, hh, hd = self.d, self.hh, self.hd
+        sin, cos = rope_mat(T, hh, hd)
+        x = self.embed[tokens]
+        inv_sqrt = 1/np.sqrt(hd)
+        tp_layers = []
+        for lay in self.layers:
+            t = {"x_in": x.copy()}
+            h1, inv1 = rms(x, lay["g1"])
+            t["h1"], t["inv1"] = h1, inv1
+            q = proj(h1.reshape(-1, d), *lay["q"]).reshape(B, T, d)
+            k = proj(h1.reshape(-1, d), *lay["k"]).reshape(B, T, d)
+            v = proj(h1.reshape(-1, d), *lay["v"]).reshape(B, T, d)
+            q = rope(q, sin, cos, hh, hd); k = rope(k, sin, cos, hh, hd)
+            t["q"], t["k"], t["v"] = q, k, v
+            # causal attention per head
+            qh = q.reshape(B, T, hh, hd).transpose(0, 2, 1, 3)
+            kh = k.reshape(B, T, hh, hd).transpose(0, 2, 1, 3)
+            vh = v.reshape(B, T, hh, hd).transpose(0, 2, 1, 3)
+            sc = np.einsum('bhtd,bhjd->bhtj', qh, kh) * inv_sqrt
+            mask = np.tril(np.ones((T, T), bool))
+            sc = np.where(mask, sc, -np.inf)
+            sc -= sc.max(-1, keepdims=True)
+            P = np.exp(sc); P /= P.sum(-1, keepdims=True)
+            t["P"] = P
+            ctx = np.einsum('bhtj,bhjd->bhtd', P, vh).transpose(0, 2, 1, 3).reshape(B, T, d)
+            t["ctx"] = ctx
+            o = proj(ctx.reshape(-1, d), *lay["o"]).reshape(B, T, d)
+            x = x + o
+            t["x_mid"] = x.copy()
+            h2, inv2 = rms(x, lay["g2"])
+            t["h2"], t["inv2"] = h2, inv2
+            gate = proj(h2.reshape(-1, d), *lay["gate"]).reshape(B, T, self.dff)
+            up = proj(h2.reshape(-1, d), *lay["up"]).reshape(B, T, self.dff)
+            act = silu(gate) * up
+            t["gate"], t["up"], t["act"] = gate, up, act
+            dn = proj(act.reshape(-1, self.dff), *lay["down"]).reshape(B, T, d)
+            x = x + dn
+            tp_layers.append(t)
+        x_final = x
+        xn, invf = rms(x_final, self.gf)
+        logits = xn @ self.head.T
+        if tape is not None:
+            tape.update(layers=tp_layers, x_final=x_final, invf=invf, logits=logits)
+        return logits
+
+    def loss(self, tokens, mask):
+        logits = self.forward(tokens)
+        return self._loss_from(logits, tokens, mask)
+
+    def _loss_from(self, logits, tokens, mask):
+        B, T = tokens.shape
+        lg = logits[:, :-1]
+        tg = tokens[:, 1:]
+        mx = lg.max(-1, keepdims=True)
+        lse = np.log(np.exp(lg - mx).sum(-1)) + mx[..., 0]
+        nll = lse - np.take_along_axis(lg, tg[..., None], -1)[..., 0]
+        return (nll * mask).sum() / mask.sum()
+
+    def backward(self, tokens, mask):
+        B, T = tokens.shape
+        d, hh, hd, dff = self.d, self.hh, self.hd, self.dff
+        sin, cos = rope_mat(T, hh, hd)
+        tape = {}
+        logits = self.forward(tokens, tape)
+        denom = mask.sum()
+        # dlogits
+        lg = logits[:, :-1]
+        mx = lg.max(-1, keepdims=True)
+        e = np.exp(lg - mx); sm = e / e.sum(-1, keepdims=True)
+        dl = sm * (mask[..., None] / denom)
+        np.put_along_axis(dl, tokens[:, 1:][..., None],
+                          np.take_along_axis(dl, tokens[:, 1:][..., None], -1) - mask[..., None]/denom, -1)
+        dlogits = np.zeros_like(logits)
+        dlogits[:, :-1] = dl
+        grads = {}
+        dxn = dlogits @ self.head
+        dx = rms_bwd(dxn, tape["x_final"], self.gf, tape["invf"])
+        inv_sqrt = 1/np.sqrt(hd)
+        for li in reversed(range(self.L)):
+            lay, t = self.layers[li], tape["layers"][li]
+            def pb(name, x_in, dy):
+                c, s, z = lay[name]
+                grads[(li, name)] = grad_sz(x_in.reshape(-1, x_in.shape[-1]), dy.reshape(-1, dy.shape[-1]), c, s, z)
+                return grad_input(dy.reshape(-1, dy.shape[-1]), c, s, z).reshape(x_in.shape)
+            da = pb("down", t["act"], dx)
+            dgate = da * t["up"] * silu_grad(t["gate"])
+            dup = da * silu(t["gate"])
+            dh2 = pb("gate", t["h2"], dgate) + pb("up", t["h2"], dup)
+            dx2 = rms_bwd(dh2, t["x_mid"], lay["g2"], t["inv2"]) + dx
+            dctx = pb("o", t["ctx"], dx2)
+            # attention backward
+            P = t["P"]
+            vh = t["v"].reshape(B, T, hh, hd).transpose(0, 2, 1, 3)
+            qh = t["q"].reshape(B, T, hh, hd).transpose(0, 2, 1, 3)
+            kh = t["k"].reshape(B, T, hh, hd).transpose(0, 2, 1, 3)
+            dctx_h = dctx.reshape(B, T, hh, hd).transpose(0, 2, 1, 3)
+            dP = np.einsum('bhtd,bhjd->bhtj', dctx_h, vh)
+            dV = np.einsum('bhtj,bhtd->bhjd', P, dctx_h)
+            row = (dP * P).sum(-1, keepdims=True)
+            dS = P * (dP - row) * inv_sqrt
+            dQ = np.einsum('bhtj,bhjd->bhtd', dS, kh)
+            dK = np.einsum('bhtj,bhtd->bhjd', dS, qh)
+            dq = dQ.transpose(0, 2, 1, 3).reshape(B, T, d)
+            dk = dK.transpose(0, 2, 1, 3).reshape(B, T, d)
+            dv = dV.transpose(0, 2, 1, 3).reshape(B, T, d)
+            dq = rope(dq, sin, cos, hh, hd, sign=-1.0)
+            dk = rope(dk, sin, cos, hh, hd, sign=-1.0)
+            dh1 = pb("q", t["h1"], dq) + pb("k", t["h1"], dk) + pb("v", t["h1"], dv)
+            dx = rms_bwd(dh1, t["x_in"], lay["g1"], t["inv1"]) + dx2
+        return grads
+
+# fd check of the full model gradient
+m = Model(64, 16, 2, 2, 32)
+tokens = rng.integers(0, 64, (3, 10))
+mask = np.ones((3, 9))
+grads = m.backward(tokens, mask)
+h = 1e-6
+worst = 0.0
+for (li, name) in [(0, "q"), (0, "down"), (1, "o"), (1, "gate"), (0, "v"), (1, "up"), (0, "k")]:
+    c, s, z = m.layers[li][name]
+    ds, dz = grads[(li, name)]
+    for which, t, g in [("s", s, ds), ("z", z, dz)]:
+        idx = np.unravel_index(np.argmax(np.abs(g)), g.shape)
+        orig = t[idx]
+        t[idx] = orig + h; lp = m.loss(tokens, mask)
+        t[idx] = orig - h; lm = m.loss(tokens, mask)
+        t[idx] = orig
+        fd = (lp - lm) / (2*h)
+        rel = abs(fd - g[idx]) / max(abs(fd), 1e-10)
+        worst = max(worst, rel)
+        assert rel < 1e-4, (li, name, which, idx, fd, g[idx], rel)
+print(f"full-model grads: OK (worst rel {worst:.2e})")
+
+# --------------------------------------------- e2e training simulation
+# Mirror tests/train_host.rs::finetune_then_serve_closes_the_loop scale:
+# vocab 512, d 32, L 2, H 2, dff 64, motif-16 data, B3 T24, 30 steps,
+# Adam lr 5e-3 warmup 2 linear decay, scales only.
+m = Model(512, 32, 2, 2, 64, bits=4, group=16)
+motif = (np.arange(16) * 37 + 11) % 500
+stream = np.tile(motif, 150)
+B, T, steps, lr0 = 3, 24, 30, 5e-3
+adam = {}
+losses = []
+srng = np.random.default_rng(7)
+for step in range(1, steps+1):
+    starts = srng.integers(0, len(stream) - T, B)
+    tokens = np.stack([stream[s0:s0+T] for s0 in starts])
+    mask = np.ones((B, T-1))
+    grads = m.backward(tokens, mask)
+    losses.append(m.loss(tokens, mask))
+    # lr schedule: warmup 2 then linear decay to 0 (lr_final_frac 0)
+    warm = 2
+    if step <= warm:
+        lr = lr0 * step / warm
+    else:
+        frac = max(0.0, min(1.0, (steps - step) / max(1.0, steps - warm)))
+        lr = lr0 * frac
+    for key, (ds, dz) in grads.items():
+        c, s, z = m.layers[key[0]][key[1]]
+        st = adam.setdefault(key, [np.zeros_like(s), np.zeros_like(s)])
+        st[0] = 0.9*st[0] + 0.1*ds
+        st[1] = 0.999*st[1] + 0.001*ds*ds
+        mh = st[0]/(1-0.9**step); vh = st[1]/(1-0.999**step)
+        s -= lr * mh / (np.sqrt(vh) + 1e-8)
+first, tail = losses[0], np.mean(losses[-5:])
+print(f"train sim: loss {first:.4f} -> last5 {tail:.4f} (drop {first-tail:.4f})")
+assert tail < first - 0.05, "e2e loss-drop margin would fail"
+print("e2e training margin: OK")

@@ -10,7 +10,7 @@ use peqa::bench::{steps, Table};
 use peqa::config::TrainConfig;
 use peqa::data::LmBatcher;
 use peqa::pipeline::{self, Ctx};
-use peqa::train::Trainer;
+use peqa::train::{Trainer, Tuner};
 use peqa::util::human_bytes;
 
 fn rss_kb() -> u64 {

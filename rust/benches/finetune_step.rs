@@ -1,0 +1,125 @@
+//! Host PEQA fine-tuning benchmark (default build, no xla): end-to-end
+//! optimizer steps through `train::HostPeqaTuner` — forward on the
+//! fused packed kernels, full host backward, scale-only Adam — measuring
+//! the numbers the paper's training story hangs on:
+//!
+//! * per-step wall time (mean / p50),
+//! * trainable + optimizer bytes vs packed code bytes (the Table 1
+//!   "optimizer memory is kilobytes" ratio),
+//! * the loss trajectory (first / final) as a sanity signal that the
+//!   gradients keep doing work at bench scale.
+//!
+//! Writes `BENCH_finetune.json` (at `PEQA_BENCH_OUT` or the repo root)
+//! so every PR leaves a training perf datapoint; `scripts/ci.sh` runs
+//! this in quick mode and `scripts/bench_diff.py` fails CI when the
+//! step time regresses. `PEQA_BENCH_QUICK=1` shrinks the model and step
+//! count; `PEQA_BENCH_STEPS` overrides the step budget; `PEQA_THREADS`
+//! pins the kernel worker count.
+
+use peqa::bench::{quick_mode, save_json, steps as bench_steps, Table};
+use peqa::config::{self, TrainConfig};
+use peqa::data::LmBatcher;
+use peqa::json::Value;
+use peqa::pipeline;
+use peqa::serve::{self, ModelGeom};
+use peqa::train::{HostPeqaTuner, Tuner};
+
+fn main() -> anyhow::Result<()> {
+    let quick = quick_mode();
+    let geom = if quick {
+        ModelGeom { vocab: 512, d_model: 64, n_layers: 2, n_heads: 4, d_ff: 192 }
+    } else {
+        ModelGeom { vocab: 512, d_model: 128, n_layers: 4, n_heads: 8, d_ff: 384 }
+    };
+    let bits = 4u8;
+    let group = Some(64);
+    let steps = bench_steps(40);
+    let (batch, seq) = if quick { (4usize, 32usize) } else { (4, 64) };
+    let threads = peqa::util::num_threads();
+
+    let (pm, _) = serve::synth_packed(&geom, bits, group, 11)?;
+    let packed_bytes = pm.packed_bytes();
+    let cfg = TrainConfig {
+        steps,
+        lr: TrainConfig::default_lr("peqa"),
+        warmup_steps: (steps / 10).max(1),
+        log_every: 0,
+        ..Default::default()
+    };
+    let mut tuner = HostPeqaTuner::from_packed(pm, geom, cfg, false, threads)?;
+    let trainable = tuner.trainable_params();
+    let state_bytes = tuner.trainable_state_bytes();
+
+    let train_s = pipeline::host_stream("wikitext", 60_000)?;
+    let mut batcher = LmBatcher::new(train_s, batch, seq, 91);
+    let mut samples = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let b = batcher.next_batch();
+        let t0 = std::time::Instant::now();
+        tuner.step(&b)?;
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let losses = tuner.losses().to_vec();
+    let (first_loss, final_loss) =
+        (losses.first().copied().unwrap_or(0.0), losses.last().copied().unwrap_or(0.0));
+    let mean_s = samples.iter().sum::<f64>() / samples.len().max(1) as f64;
+    let p50_s = {
+        let mut s = samples.clone();
+        s.sort_by(f64::total_cmp);
+        s[s.len() / 2]
+    };
+
+    let mut table = Table::new(
+        &format!(
+            "§Train — host PEQA finetune step (L{} d{} h{} b{bits}g{:?}, B{batch}×T{seq}, \
+             {steps} steps, {threads} threads)",
+            geom.n_layers, geom.d_model, geom.n_heads, group
+        ),
+        &["metric", "value"],
+    );
+    let rowf = |t: &mut Table, k: &str, v: String| t.row(&[k.to_string(), v]);
+    rowf(&mut table, "step mean (ms)", format!("{:.2}", mean_s * 1e3));
+    rowf(&mut table, "step p50 (ms)", format!("{:.2}", p50_s * 1e3));
+    rowf(&mut table, "loss first → final", format!("{first_loss:.4} → {final_loss:.4}"));
+    rowf(&mut table, "trainable params (s only)", format!("{trainable}"));
+    rowf(&mut table, "trainable+Adam bytes", format!("{state_bytes}"));
+    rowf(&mut table, "packed code bytes", format!("{packed_bytes}"));
+    rowf(
+        &mut table,
+        "codes / trainable-state ratio",
+        format!("{:.1}x", packed_bytes as f64 / state_bytes.max(1) as f64),
+    );
+    table.print();
+    let paths = config::Paths::default();
+    table.save(&paths.results, "finetune_step").ok();
+
+    let out = std::env::var("PEQA_BENCH_OUT")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| config::repo_root().join("BENCH_finetune.json"));
+    let doc = Value::obj(vec![
+        ("bench", Value::str("finetune_step")),
+        ("quick", Value::str(if quick { "1" } else { "0" })),
+        ("threads", Value::num(threads as f64)),
+        ("n_layers", Value::num(geom.n_layers as f64)),
+        ("d_model", Value::num(geom.d_model as f64)),
+        ("n_heads", Value::num(geom.n_heads as f64)),
+        ("d_ff", Value::num(geom.d_ff as f64)),
+        ("vocab", Value::num(geom.vocab as f64)),
+        ("bits", Value::num(bits as f64)),
+        // 0 = per-channel (no grouping).
+        ("group", Value::num(group.unwrap_or(0) as f64)),
+        ("steps", Value::num(steps as f64)),
+        ("batch", Value::num(batch as f64)),
+        ("seq", Value::num(seq as f64)),
+        ("step_mean_s", Value::num(mean_s)),
+        ("step_p50_s", Value::num(p50_s)),
+        ("first_loss", Value::num(first_loss as f64)),
+        ("final_loss", Value::num(final_loss as f64)),
+        ("trainable_params", Value::num(trainable as f64)),
+        ("trainable_state_bytes", Value::num(state_bytes as f64)),
+        ("packed_bytes", Value::num(packed_bytes as f64)),
+    ]);
+    save_json(&out, &doc)?;
+    println!("\nwrote {}", out.display());
+    Ok(())
+}

@@ -143,7 +143,7 @@ fn artifact_micro() -> anyhow::Result<()> {
     use peqa::data::LmBatcher;
     use peqa::eval::EvalModel;
     use peqa::pipeline::{self, Ctx};
-    use peqa::train::Trainer;
+    use peqa::train::{Trainer, Tuner};
 
     let ctx = Ctx::new()?;
     let size = "n3";
@@ -233,7 +233,7 @@ fn artifact_micro() -> anyhow::Result<()> {
             qck.clone(),
             adapters,
             mode,
-            BatcherConfig { max_batch: 8 },
+            BatcherConfig { max_batch: 8, ..Default::default() },
         )?;
         // Alternate tasks so every group forces a swap.
         for i in 0..8 {

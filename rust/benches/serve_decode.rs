@@ -41,8 +41,8 @@ fn main() -> anyhow::Result<()> {
     let mut sched = Scheduler::new(
         engine,
         adapters,
-        SchedulerConfig { max_batch: 8, window: 128, sampling: Sampling::Greedy, seed: 3 },
-    );
+        SchedulerConfig { max_batch: 8, window: 128, sampling: Sampling::Greedy, seed: 3, ..SchedulerConfig::default() },
+    )?;
 
     // Task-rotating request rounds: each round drains one task, so every
     // round boundary is a real scale swap.

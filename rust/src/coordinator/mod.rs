@@ -72,6 +72,11 @@ impl Coordinator {
         mode: SwitchMode,
         batcher: BatcherConfig,
     ) -> Result<Coordinator> {
+        if batcher.strict_coverage {
+            // Same registration contract as the host serve::Scheduler
+            // (one shared gate: serve::types::validate_coverage).
+            crate::serve::types::validate_coverage(&base.quantized_prefixes(), &adapters)?;
+        }
         let fp_base = match mode {
             SwitchMode::ScaleSwap => None,
             SwitchMode::FullReload => Some(base.dequantize()?),
@@ -90,7 +95,7 @@ impl Coordinator {
             current_task: None,
             queue: VecDeque::new(),
             next_id: 1,
-            batcher: BatcherConfig { max_batch: batcher.max_batch.min(max_b) },
+            batcher: BatcherConfig { max_batch: batcher.max_batch.min(max_b), ..batcher },
             metrics: ServeMetrics::default(),
         })
     }

@@ -114,7 +114,7 @@ fn engine_main(cfg: ServerConfig, rx: mpsc::Receiver<Msg>) {
             base,
             adapters,
             if cfg.scale_swap { SwitchMode::ScaleSwap } else { SwitchMode::FullReload },
-            BatcherConfig { max_batch: cfg.max_batch },
+            BatcherConfig { max_batch: cfg.max_batch, ..Default::default() },
         )
     };
     let mut coord = match build() {

@@ -13,15 +13,17 @@
 //! the way into the fp-layout artifacts goes through the fused
 //! quant::kernels layer via `model::Checkpoint::dequantize`.
 
-#[cfg(feature = "xla")]
 use anyhow::{bail, Result};
 
 #[cfg(feature = "xla")]
-use crate::data::batch::{eval_batches, Batch};
+use crate::data::batch::Batch;
+use crate::data::batch::eval_batches;
 #[cfg(feature = "xla")]
 use crate::data::tasks::{few_shot_prefix, McTask};
 #[cfg(feature = "xla")]
 use crate::model::Checkpoint;
+use crate::model::PackedModel;
+use crate::serve::ModelGeom;
 #[cfg(feature = "xla")]
 use crate::runtime::{literal_to_f32, Artifact, Runtime};
 #[cfg(feature = "xla")]
@@ -118,6 +120,47 @@ pub fn perplexity(rt: &Runtime, eval_art: &str, ck: &Checkpoint, stream: &[u32])
     let mut count = 0.0;
     for batch in eval_batches(stream, b, t) {
         let (s, c) = model.nll_batch(rt, &batch)?;
+        sum += s;
+        count += c;
+    }
+    if count == 0.0 {
+        bail!("empty eval stream");
+    }
+    Ok((sum / count).exp())
+}
+
+/// Host perplexity of a packed model over a token stream — the
+/// tune→eval half of the loop that needs no artifacts: deterministic
+/// non-overlapping eval windows ([`eval_batches`]) scored by the host
+/// training forward (`train::host::batch_nll`), every projection running
+/// through the fused packed kernels. `n_heads` disambiguates the
+/// geometry ([`ModelGeom::infer`]). The *stream* tokens must fit the
+/// model's vocab; the PAD filler `eval_batches` writes into unfilled
+/// tails (always mask-0) is remapped to token 0 here so models with
+/// vocab ≤ PAD still score — padded positions sit after every scored
+/// transition of their row, so under causal attention the remap cannot
+/// change any masked-in logit.
+pub fn host_perplexity(
+    model: &PackedModel,
+    n_heads: usize,
+    stream: &[u32],
+    batch: usize,
+    seq: usize,
+    threads: usize,
+) -> Result<f64> {
+    let geom = ModelGeom::infer(model, n_heads)?;
+    if let Some(&bad) = stream.iter().find(|&&t| t as usize >= geom.vocab) {
+        bail!("stream token {bad} out of the model's vocab {}", geom.vocab);
+    }
+    let mut sum = 0.0;
+    let mut count = 0.0;
+    for mut b in eval_batches(stream, batch.max(1), seq.max(2)) {
+        for t in b.tokens.iter_mut() {
+            if *t as usize >= geom.vocab {
+                *t = 0; // PAD filler of an unfilled tail (mask 0)
+            }
+        }
+        let (s, c) = crate::train::host::batch_nll(model, &geom, threads, &b)?;
         sum += s;
         count += c;
     }

@@ -48,6 +48,25 @@
 //! runs the CLI demo; `benches/serve_decode.rs` writes
 //! `BENCH_serve.json` (tokens/s, latency p50/p99, swap p99).
 //!
+//! ## Training backends (`train`)
+//!
+//! Fine-tuning sits behind the backend-agnostic `train::Tuner` trait.
+//! The default build ships the **host PEQA backend**
+//! (`train::HostPeqaTuner`): forward through the fused packed kernels,
+//! full host backward, gradients only w.r.t. the per-(row, group)
+//! scale/zero tensors (straight-through estimator, integer codes
+//! frozen), shared `train::Adam` state that is kilobytes next to the
+//! packed codes. A training step is bit-identical at any `PEQA_THREADS`
+//! value. `peqa finetune` drives it end to end: quantized model + task
+//! corpus → a `.adapter` file that `peqa serve` scale-swaps directly;
+//! `eval::host_perplexity` scores the result in the same build, so the
+//! paper's quantize → PEQA-tune → scale-swap-serve loop closes on host.
+//! With `--features xla` the artifact-driven `train::Trainer` implements
+//! the same trait (`peqa finetune --backend xla`).
+//! `benches/finetune_step.rs` writes `BENCH_finetune.json` (step time,
+//! trainable+optimizer bytes, loss trajectory) and is gated by
+//! `scripts/bench_diff.py` like the kernel/serve benches.
+//!
 //! ## Environment knobs
 //!
 //! The single reference for every `PEQA_*` variable the crate and its
@@ -55,11 +74,12 @@
 //!
 //! | Variable | Effect |
 //! |---|---|
-//! | `PEQA_THREADS` | Worker-thread count of the host kernel layer ([`util::num_threads`]); results are bit-identical at any value. Defaults to available parallelism. |
-//! | `PEQA_BENCH_QUICK` | `1` shrinks every bench (model size / request volume) to smoke scale; `0`/unset runs full size ([`bench::quick_mode`]). `scripts/ci.sh` sets it (`--full` clears it). |
-//! | `PEQA_BENCH_OUT` | Absolute output path for a bench's JSON result file (`BENCH_kernels.json`, `BENCH_serve.json`); defaults to the repo root. |
+//! | `PEQA_THREADS` | Worker-thread count of the host kernel layer ([`util::num_threads`]) — serving *and* the host training backend; results are bit-identical at any value. Defaults to available parallelism. |
+//! | `PEQA_BENCH_QUICK` | `1` shrinks every bench (model size / request volume / step count) to smoke scale; `0`/unset runs full size ([`bench::quick_mode`]). `scripts/ci.sh` sets it (`--full` clears it). |
+//! | `PEQA_BENCH_OUT` | Absolute output path for a bench's JSON result file (`BENCH_kernels.json`, `BENCH_serve.json`, `BENCH_finetune.json`); defaults to the repo root. |
 //! | `PEQA_BENCH_DIM` | Overrides the GEMM dimension of `benches/kernels_micro.rs`. |
-//! | `PEQA_BENCH_STEPS` / `PEQA_PRETRAIN_STEPS` | Step-count overrides for the xla train benches/pipeline. |
+//! | `PEQA_BENCH_STEPS` | Step-count override for the train benches ([`bench::steps`]), including `benches/finetune_step.rs`. |
+//! | `PEQA_PRETRAIN_STEPS` | Step-count override for the xla pretraining pipeline. |
 //! | `PEQA_LOG` | Log level of [`util::log`] (`debug`/`info`/`warn`/`error`). |
 //! | `PEQA_SKIP_TREND` | `1` lets `scripts/ci.sh` pass without `python3` by skipping the bench trend diff (otherwise a missing interpreter fails CI loudly). |
 //!
@@ -89,6 +109,5 @@ pub mod runtime;
 pub mod serve;
 pub mod tensor;
 pub mod tokenizer;
-#[cfg(feature = "xla")]
 pub mod train;
 pub mod util;

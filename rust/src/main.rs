@@ -3,7 +3,8 @@
 //! Commands:
 //!   list-artifacts                      show AOT artifacts + signatures   [xla]
 //!   pretrain   --size n3 [--steps N]    pretrain + cache the fp base model [xla]
-//!   finetune   --size n3 --method peqa_b4_gc --dataset wikitext [--steps N] [xla]
+//!   finetune   host PEQA scale-only fine-tuning on a packed model (default
+//!              build) or, with --backend xla, the artifact-driven trainer
 //!   eval       --size n3 --ckpt path --dataset wikitext                  [xla]
 //!   quantize   --ckpt path --bits 4 [--group g] [--optq --size n3]
 //!   pack       --ckpt path --bits 4 --out model.packed
@@ -13,8 +14,10 @@
 //!
 //! Commands marked [xla] drive AOT artifacts through the PJRT runtime and
 //! need the `xla` feature (see rust/Cargo.toml); the rest — including RTN
-//! quantization, packing, and the `serve` host decode engine, which run
-//! on the host quant/kernels + serve stack — work in the default build.
+//! quantization, packing, host `finetune` (scale-only PEQA training via
+//! train::HostPeqaTuner) and the `serve` host decode engine — work in the
+//! default build, closing the quantize → PEQA-tune → scale-swap-serve loop
+//! without any device runtime.
 
 use anyhow::{bail, Result};
 use peqa::cli::Args;
@@ -47,8 +50,19 @@ peqa — PEQA (NeurIPS 2023) reproduction CLI
 
   peqa list-artifacts                                            [xla]
   peqa pretrain   --size n1..n6|o1..o6 [--steps 600]             [xla]
-  peqa finetune   --size n3 --method peqa_b4_gc --dataset wikitext|ptb
-                  [--steps 150] [--lr 2e-3] [--out path.peqa]    [xla]
+  peqa finetune   (host backend — default build)
+                  [--model m.packed] [--dataset wikitext|ptb|pretrain]
+                  [--steps 60] [--lr 2e-3] [--batch 4] [--seq 48]
+                  [--heads 4] [--train-zeros] [--task NAME]
+                  [--out adapters] [--save-model base.packed]
+                  [--eval-tokens 8192] [--seed 7]
+                  [--bits 4] [--group g] [--layers 2] [--d-model 64]
+                  [--d-ff 192] [--vocab 512]
+                  (no --model: synthesizes + RTN-quantizes a base model;
+                   writes <task>.adapter servable by `peqa serve`)
+  peqa finetune   --backend xla --size n3 --method peqa_b4_gc
+                  --dataset wikitext|ptb [--steps 150] [--lr 2e-3]
+                  [--out path.peqa]                              [xla]
   peqa eval       --size n3 --ckpt path.peqa --dataset wikitext|ptb [xla]
   peqa quantize   --ckpt path.peqa --bits 4 [--group 32]
                   [--optq --size n3] [--out path.peqa]
@@ -57,9 +71,11 @@ peqa — PEQA (NeurIPS 2023) reproduction CLI
                   [--tasks 3] [--requests 24] [--max-new 24] [--batch 8]
                   [--topk 0] [--temp 0.8] [--window 256] [--seed 7]
                   [--bits 4] [--group g] [--layers 2] [--d-model 64]
-                  [--d-ff 192] [--vocab 512] [--clients 0]
+                  [--d-ff 192] [--vocab 512] [--clients 0] [--strict]
                   (--clients N > 0 serves the same load through the
-                   threaded serve::server with N concurrent clients)
+                   threaded serve::server with N concurrent clients;
+                   --strict rejects partial-coverage adapters at
+                   registration instead of basing uncovered projections)
   peqa serve-demo --size n3 [--requests 16] [--full-reload]      [xla]
   peqa memreport
 
@@ -103,46 +119,24 @@ fn run() -> Result<()> {
             println!("{size} base ready: held-out pretrain ppl {ppl:.3}");
             Ok(())
         }
-        #[cfg(feature = "xla")]
         "finetune" => {
-            let size = args.require("size")?;
-            let method = args.require("method")?;
-            let dataset = args.get("dataset", "wikitext");
-            let steps = args.get_usize("steps", 150)?;
-            let lr = args.get_f64("lr", 0.0)?;
-            let out = args.opt("out");
-            args.finish()?;
-            let ctx = Ctx::new()?;
-            let base = pipeline::ensure_base(&ctx, &size, pipeline::pretrain_steps())?;
-            let (train_s, eval_s) = ctx.split(&dataset, pipeline::ADAPT_BYTES)?;
-            let mut cfg = pipeline::default_cfg(&method, steps, 42);
-            if lr > 0.0 {
-                cfg.lr = lr;
+            // Default backend: host in the default build (the loop
+            // closes without a device runtime), xla when the feature is
+            // on (preserves the original artifact-driven behavior).
+            let default_backend = if cfg!(feature = "xla") { "xla" } else { "host" };
+            let backend = args.get("backend", default_backend);
+            match backend.as_str() {
+                "host" => finetune_host(args),
+                #[cfg(feature = "xla")]
+                "xla" => finetune_xla(args),
+                #[cfg(not(feature = "xla"))]
+                "xla" => bail!(
+                    "--backend xla drives AOT artifacts and needs a build with \
+                     `--features xla`; the host backend (--backend host) runs in \
+                     this build"
+                ),
+                other => bail!("unknown training backend '{other}' (host | xla)"),
             }
-            cfg.log_every = 25;
-            let (ck, losses) = pipeline::finetune(&ctx, &size, &method, &base, &train_s, &cfg)?;
-            info!(
-                "finetune {size}/{method}: loss {:.4} → {:.4}",
-                losses.first().copied().unwrap_or(0.0),
-                losses.last().copied().unwrap_or(0.0)
-            );
-            let ppl = if method.starts_with("lora") {
-                let (alpha, rank) = pipeline::lora_hparams(&ctx, &size, &method)?;
-                pipeline::ppl(&ctx, &size, &ck.merge_lora(alpha, rank)?, &eval_s)?
-            } else {
-                pipeline::ppl(&ctx, &size, &ck, &eval_s)?
-            };
-            println!("{size} {method} {dataset}: eval ppl {ppl:.4}");
-            let out = out.unwrap_or_else(|| {
-                ctx.paths
-                    .checkpoints
-                    .join(format!("{size}_{method}_{dataset}.peqa"))
-                    .to_string_lossy()
-                    .into_owned()
-            });
-            ck.save(std::path::Path::new(&out))?;
-            info!("saved {out}");
-            Ok(())
         }
         #[cfg(feature = "xla")]
         "eval" => {
@@ -211,6 +205,7 @@ fn run() -> Result<()> {
                 d_ff: args.get_usize("d-ff", 192)?,
                 vocab: args.get_usize("vocab", 512)?,
                 clients: args.get_usize("clients", 0)?,
+                strict: args.flag("strict"),
             };
             args.finish()?;
             serve_host(opts)
@@ -229,7 +224,7 @@ fn run() -> Result<()> {
             Ok(())
         }
         #[cfg(not(feature = "xla"))]
-        c @ ("list-artifacts" | "pretrain" | "finetune" | "eval" | "serve-demo") => {
+        c @ ("list-artifacts" | "pretrain" | "eval" | "serve-demo") => {
             bail!("'{c}' drives AOT artifacts and needs a build with `--features xla` \
                    (see rust/Cargo.toml)")
         }
@@ -238,6 +233,194 @@ fn run() -> Result<()> {
             bail!("unknown command '{other}'")
         }
     }
+}
+
+/// The original artifact-driven fine-tune path (`--backend xla`).
+#[cfg(feature = "xla")]
+fn finetune_xla(mut args: peqa::cli::Args) -> Result<()> {
+    let size = args.require("size")?;
+    let method = args.require("method")?;
+    let dataset = args.get("dataset", "wikitext");
+    let steps = args.get_usize("steps", 150)?;
+    let lr = args.get_f64("lr", 0.0)?;
+    let out = args.opt("out");
+    args.finish()?;
+    let ctx = Ctx::new()?;
+    let base = pipeline::ensure_base(&ctx, &size, pipeline::pretrain_steps())?;
+    let (train_s, eval_s) = ctx.split(&dataset, pipeline::ADAPT_BYTES)?;
+    let mut cfg = pipeline::default_cfg(&method, steps, 42);
+    if lr > 0.0 {
+        cfg.lr = lr;
+    }
+    cfg.log_every = 25;
+    let (ck, losses) = pipeline::finetune(&ctx, &size, &method, &base, &train_s, &cfg)?;
+    info!(
+        "finetune {size}/{method}: loss {:.4} → {:.4}",
+        losses.first().copied().unwrap_or(0.0),
+        losses.last().copied().unwrap_or(0.0)
+    );
+    let ppl = if method.starts_with("lora") {
+        let (alpha, rank) = pipeline::lora_hparams(&ctx, &size, &method)?;
+        pipeline::ppl(&ctx, &size, &ck.merge_lora(alpha, rank)?, &eval_s)?
+    } else {
+        pipeline::ppl(&ctx, &size, &ck, &eval_s)?
+    };
+    println!("{size} {method} {dataset}: eval ppl {ppl:.4}");
+    let out = out.unwrap_or_else(|| {
+        ctx.paths
+            .checkpoints
+            .join(format!("{size}_{method}_{dataset}.peqa"))
+            .to_string_lossy()
+            .into_owned()
+    });
+    ck.save(std::path::Path::new(&out))?;
+    info!("saved {out}");
+    Ok(())
+}
+
+/// Host PEQA fine-tuning (default build): quantized packed model + task
+/// corpus → per-task `.adapter` file, immediately servable by
+/// `peqa serve --model <base.packed> --adapters <dir>`. Only the f32
+/// scale (and with --train-zeros, zero-point) tensors train; codes and
+/// fp tensors are frozen, so the trainable + Adam state is kilobytes
+/// (printed against the packed-code bytes — the paper's Table 1
+/// optimizer-memory story).
+fn finetune_host(mut args: peqa::cli::Args) -> Result<()> {
+    use peqa::model::PackedModel;
+    use peqa::serve::{self, ModelGeom};
+    use peqa::train::{HostPeqaTuner, Tuner};
+
+    let model_path = args.opt("model");
+    let dataset = args.get("dataset", "wikitext");
+    let steps = args.get_usize("steps", 60)?;
+    let lr = args.get_f64("lr", 0.0)?;
+    let batch = args.get_usize("batch", 4)?.max(1);
+    let seq = args.get_usize("seq", 48)?.max(2);
+    let heads = args.get_usize("heads", 4)?;
+    let train_zeros = args.flag("train-zeros");
+    let task = args.get("task", &dataset);
+    let out_dir = args.get("out", "adapters");
+    let save_model = args.opt("save-model");
+    let eval_tokens = args.get_usize("eval-tokens", 8192)?;
+    let seed = args.get_u64("seed", 7)?;
+    // Synth-model shape flags: meaningful only without --model (a loaded
+    // .packed file fixes its own bits/grouping/geometry) — rejecting the
+    // combination beats silently tuning a different config than asked.
+    let bits_opt = args.opt("bits");
+    let group = args.opt("group").map(|g| g.parse::<usize>()).transpose()?;
+    let layers_opt = args.opt("layers");
+    let d_model_opt = args.opt("d-model");
+    let d_ff_opt = args.opt("d-ff");
+    let vocab_opt = args.opt("vocab");
+    args.finish()?;
+    let parse_or = |v: &Option<String>, name: &str, default: usize| -> Result<usize> {
+        match v {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{s}'")),
+        }
+    };
+    let bits = parse_or(&bits_opt, "bits", 4)? as u8;
+    let layers = parse_or(&layers_opt, "layers", 2)?;
+    let d_model = parse_or(&d_model_opt, "d-model", 64)?;
+    let d_ff = parse_or(&d_ff_opt, "d-ff", 192)?;
+    let vocab = parse_or(&vocab_opt, "vocab", 512)?;
+    if model_path.is_some() {
+        let synth_flags = [
+            ("bits", bits_opt.is_some()),
+            ("group", group.is_some()),
+            ("layers", layers_opt.is_some()),
+            ("d-model", d_model_opt.is_some()),
+            ("d-ff", d_ff_opt.is_some()),
+            ("vocab", vocab_opt.is_some()),
+        ];
+        if let Some((name, _)) = synth_flags.iter().find(|(_, set)| *set) {
+            bail!(
+                "--{name} configures the synthesized base model and conflicts with \
+                 --model (a .packed file fixes its own bits/grouping/geometry)"
+            );
+        }
+    }
+
+    let pm = match &model_path {
+        Some(p) => PackedModel::load(std::path::Path::new(p))?,
+        None => {
+            let geom = ModelGeom { vocab, d_model, n_layers: layers, n_heads: heads, d_ff };
+            serve::synth_packed(&geom, bits, group, seed)?.0
+        }
+    };
+    let geom = ModelGeom::infer(&pm, heads)?;
+    // The byte-level corpus streams use token ids up to 512.
+    if geom.vocab < 512 {
+        bail!(
+            "host finetune streams byte-level corpora (vocab 512); the model's \
+             vocab is {} — rebuild the model with --vocab >= 512",
+            geom.vocab
+        );
+    }
+    let (train_s, eval_s) = pipeline::host_split(&dataset, pipeline::ADAPT_BYTES)?;
+    let threads = peqa::util::num_threads();
+    // Serve the BASE model + trained adapter: save it before tuning.
+    if let Some(p) = &save_model {
+        let bytes = pm.to_checkpoint().save_packed(std::path::Path::new(p), pm.bits)?;
+        println!("base model: {p} ({})", peqa::util::human_bytes(bytes));
+    }
+    let base_model = pm.clone();
+
+    let mut cfg = pipeline::default_cfg(&format!("peqa_b{}_host", pm.bits), steps, seed);
+    if lr > 0.0 {
+        cfg.lr = lr;
+    }
+    cfg.log_every = (steps / 10).max(1);
+    let mut tuner = HostPeqaTuner::from_packed(pm, geom, cfg, train_zeros, threads)?;
+    let mut batcher = peqa::data::LmBatcher::new(train_s, batch, seq, seed ^ 0x5eed);
+    let t0 = std::time::Instant::now();
+    tuner.run(steps, || batcher.next_batch())?;
+    let train_wall = t0.elapsed().as_secs_f64();
+
+    let losses = tuner.losses();
+    let adapter = tuner.extract_adapter();
+    let out_path = std::path::Path::new(&out_dir).join(format!("{task}.adapter"));
+    adapter.save(&out_path)?;
+
+    println!(
+        "finetune host: task '{task}' on {dataset} | {} steps in {train_wall:.1}s \
+         ({:.3}s/step) | loss {:.4} → {:.4} (ema {:.4})",
+        steps,
+        train_wall / steps.max(1) as f64,
+        losses.first().copied().unwrap_or(0.0),
+        losses.last().copied().unwrap_or(0.0),
+        tuner.smoothed_loss().unwrap_or(0.0),
+    );
+    println!(
+        "trainable: {} params (s{}) | trainable+Adam {} vs packed codes {} \
+         ({}x smaller)",
+        tuner.trainable_params(),
+        if train_zeros { "+z" } else { " only" },
+        peqa::util::human_bytes(tuner.trainable_state_bytes()),
+        peqa::util::human_bytes(tuner.model().packed_bytes() as u64),
+        tuner.model().packed_bytes() as u64 / tuner.trainable_state_bytes().max(1),
+    );
+    if eval_tokens > 0 {
+        let slice = &eval_s[..eval_s.len().min(eval_tokens)];
+        let base_ppl =
+            peqa::eval::host_perplexity(&base_model, heads, slice, batch, seq, threads)?;
+        let tuned_ppl =
+            peqa::eval::host_perplexity(tuner.model(), heads, slice, batch, seq, threads)?;
+        println!(
+            "held-out ppl ({} tokens): base {base_ppl:.3} → tuned {tuned_ppl:.3}",
+            slice.len()
+        );
+    }
+    println!("adapter → {}", out_path.display());
+    if let Some(p) = &save_model {
+        println!(
+            "serve it: peqa serve --model {p} --adapters {out_dir} --heads {heads} \
+             --tasks 1"
+        );
+    }
+    Ok(())
 }
 
 /// OPTQ quantization needs calibration Hessians from the `<size>_hess`
@@ -296,7 +479,7 @@ fn serve_demo(size: &str, n_req: usize, full_reload: bool) -> Result<()> {
         base_q.unwrap(),
         adapters,
         mode,
-        BatcherConfig { max_batch: 8 },
+        BatcherConfig { max_batch: 8, ..Default::default() },
     )?;
     let mut rng = peqa::util::Pcg32::new(5);
     let prompts = ["the empire of", "shares of acme", "the battle of", "analysts expect"];
@@ -344,6 +527,7 @@ struct ServeOpts {
     d_ff: usize,
     vocab: usize,
     clients: usize,
+    strict: bool,
 }
 
 /// Host serving demo (no `xla` feature): decode a mixed multi-task
@@ -419,8 +603,9 @@ fn serve_host(o: ServeOpts) -> Result<()> {
             window: o.window.max(1),
             sampling,
             seed: o.seed,
+            strict_coverage: o.strict,
         },
-    );
+    )?;
 
     // Text prompts need the byte-level id range; a served model with a
     // smaller vocab gets deterministic in-vocab token prompts instead.

@@ -364,6 +364,7 @@ impl Checkpoint {
 /// dequant-GEMM ready; see quant::kernels) and fp tensors dense. This is
 /// the serving-side load path — the integer codes are never expanded to
 /// one-f32-per-code unless a checkpoint view is explicitly requested.
+#[derive(Clone)]
 pub struct PackedModel {
     pub bits: u8,
     /// Tensor names in original file order (wq/s/z names included).
@@ -544,6 +545,26 @@ impl PackedModel {
     /// Bytes of packed code storage across all projections.
     pub fn packed_bytes(&self) -> usize {
         self.matrices.values().map(|m| m.packed_bytes()).sum()
+    }
+
+    /// This model's task adapter in the exact `serve::AdapterStore`
+    /// format: the current `{prefix}.s` (and, when `include_zeros`, the
+    /// `{prefix}.z`) tensor of every packed projection, in file order.
+    /// After host PEQA tuning this is the trained adapter — registering
+    /// it with an engine built from the *base* model reproduces the
+    /// tuned model by scale swap alone.
+    pub fn extract_adapter(&self, include_zeros: bool) -> Checkpoint {
+        let mut out = Checkpoint::new();
+        for name in &self.names {
+            if let Some(p) = name.strip_suffix(".wq") {
+                let m = &self.matrices[p];
+                out.insert(format!("{p}.s"), m.scales.clone());
+                if include_zeros {
+                    out.insert(format!("{p}.z"), m.zeros.clone());
+                }
+            }
+        }
+        out
     }
 
     /// Expand to a PEQA-layout [`Checkpoint`] (codes as one f32 each) in
@@ -828,6 +849,31 @@ mod tests {
         // silently masked (ck holds 3-bit codes; 2 bits can't hold 4..7).
         assert!(PackedModel::from_checkpoint(&ck, 2).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn packed_model_extract_adapter_is_store_format() {
+        let mut ck = Checkpoint::new();
+        let mut rng = Pcg32::new(33);
+        let w = Tensor::normal(&[8, 16], 0.4, &mut rng);
+        let q = crate::quant::quantize_rtn(&w, 4, Some(8)).unwrap();
+        ck.insert("layers.0.attn.q.wq", Tensor::new(&[8, 16], q.codes.iter().map(|&c| c as f32).collect()));
+        ck.insert("layers.0.attn.q.s", q.scales.clone());
+        ck.insert("layers.0.attn.q.z", q.zeros.clone());
+        ck.insert("embed", Tensor::normal(&[4, 4], 1.0, &mut rng));
+        let pm = PackedModel::from_checkpoint(&ck, 4).unwrap();
+        let a = pm.extract_adapter(false);
+        assert_eq!(a.names(), &["layers.0.attn.q.s".to_string()]);
+        assert_eq!(a.req("layers.0.attn.q.s").unwrap(), &q.scales);
+        let az = pm.extract_adapter(true);
+        assert_eq!(az.len(), 2);
+        assert_eq!(az.req("layers.0.attn.q.z").unwrap(), &q.zeros);
+        // Same shape contract as Checkpoint::extract_adapter (the xla
+        // path's adapter source) — the two serving paths share one format.
+        let via_ck = pm.to_checkpoint().extract_adapter(true);
+        for (name, t) in az.iter() {
+            assert_eq!(t, via_ck.req(name).unwrap(), "{name}");
+        }
     }
 
     #[test]

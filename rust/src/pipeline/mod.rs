@@ -32,7 +32,8 @@ use crate::config::Paths;
 #[cfg(feature = "xla")]
 use crate::data::batch::LmBatcher;
 #[cfg(feature = "xla")]
-use crate::data::{corpus, Batch, World};
+use crate::data::Batch;
+use crate::data::{corpus, World};
 #[cfg(feature = "xla")]
 use crate::eval;
 use crate::model::Checkpoint;
@@ -40,15 +41,36 @@ use crate::quant;
 #[cfg(feature = "xla")]
 use crate::runtime::{literal_to_tensor, tensor_to_literal, Runtime};  // tensor_to_literal: prep artifacts only (literals stay alive across run)
 use crate::tensor::Tensor;
-#[cfg(feature = "xla")]
 use crate::tokenizer::Tokenizer;
 #[cfg(feature = "xla")]
-use crate::train::Trainer;
+use crate::train::{Trainer, Tuner};
 
 pub const WORLD_SEED: u64 = 2023;
 pub const WORLD_ENTITIES: usize = 48;
 pub const PRETRAIN_BYTES: usize = 400_000;
 pub const ADAPT_BYTES: usize = 120_000;
+
+/// Token stream for a named dataset on the host stack — no runtime, no
+/// artifacts: the synthetic corpus generators + the byte-level
+/// tokenizer, with the same seeds as the xla [`Ctx::stream`] path so a
+/// host fine-tune and an artifact fine-tune see the same data.
+pub fn host_stream(dataset: &str, bytes: usize) -> Result<Vec<u32>> {
+    let text = match dataset {
+        "pretrain" => corpus::pretrain(&World::new(WORLD_SEED, WORLD_ENTITIES), 11, bytes),
+        "wikitext" => corpus::wikitext_sim(12, bytes),
+        "ptb" => corpus::ptb_sim(13, bytes),
+        other => bail!("unknown dataset '{other}'"),
+    };
+    Ok(crate::data::encode_stream(&Tokenizer::byte_level(512), &text))
+}
+
+/// Train/eval split of a host dataset (last ~20% held out), mirroring
+/// [`Ctx::split`].
+pub fn host_split(dataset: &str, bytes: usize) -> Result<(Vec<u32>, Vec<u32>)> {
+    let s = host_stream(dataset, bytes)?;
+    let cut = s.len() * 4 / 5;
+    Ok((s[..cut].to_vec(), s[cut..].to_vec()))
+}
 
 #[cfg(feature = "xla")]
 /// Shared experiment context: runtime + tokenizer + world + paths.
@@ -74,22 +96,17 @@ impl Ctx {
         })
     }
 
-    /// Token stream for a named dataset.
+    /// Token stream for a named dataset. Delegates to [`host_stream`]
+    /// (the `Ctx` world/tokenizer are constructed with the same seeds),
+    /// so host and artifact fine-tunes see identical data by
+    /// construction, not by copy-paste.
     pub fn stream(&self, dataset: &str, bytes: usize) -> Result<Vec<u32>> {
-        let text = match dataset {
-            "pretrain" => corpus::pretrain(&self.world, 11, bytes),
-            "wikitext" => corpus::wikitext_sim(12, bytes),
-            "ptb" => corpus::ptb_sim(13, bytes),
-            other => bail!("unknown dataset '{other}'"),
-        };
-        Ok(crate::data::encode_stream(&self.tok, &text))
+        host_stream(dataset, bytes)
     }
 
     /// Train/eval split of a dataset (last ~20% held out for PPL).
     pub fn split(&self, dataset: &str, bytes: usize) -> Result<(Vec<u32>, Vec<u32>)> {
-        let s = self.stream(dataset, bytes)?;
-        let cut = s.len() * 4 / 5;
-        Ok((s[..cut].to_vec(), s[cut..].to_vec()))
+        host_split(dataset, bytes)
     }
 }
 
@@ -116,7 +133,8 @@ pub fn ensure_base(ctx: &Ctx, size: &str, steps: usize) -> Result<Checkpoint> {
     let stream = ctx.stream("pretrain", PRETRAIN_BYTES)?;
     let (b, t) = batch_dims(&meta);
     let mut batcher = LmBatcher::new(stream, b, t, 91);
-    trainer.run(|| batcher.next_batch())?;
+    let n_steps = trainer.cfg.steps;
+    trainer.run(n_steps, || batcher.next_batch())?;
     let ck = trainer.finish()?;
     ck.save(&path)?;
     Ok(ck)
@@ -186,8 +204,8 @@ pub fn finetune(
     let (b, t) = batch_dims(&meta);
     let mut trainer = Trainer::new(&ctx.rt, &train_art, &start, cfg.clone())?;
     let mut batcher = LmBatcher::new(train_stream.to_vec(), b, t, cfg.seed ^ 0x5eed);
-    trainer.run(|| batcher.next_batch())?;
-    let losses = trainer.losses.clone();
+    trainer.run(cfg.steps, || batcher.next_batch())?;
+    let losses = trainer.losses().to_vec();
     Ok((trainer.finish()?, losses))
 }
 
@@ -208,7 +226,7 @@ pub fn finetune_batches(
     };
     let mut trainer = Trainer::new(&ctx.rt, &train_art, &start, cfg.clone())?;
     let mut i = 0usize;
-    trainer.run(|| {
+    trainer.run(cfg.steps, || {
         let b = batches[i % batches.len()].clone();
         i += 1;
         b

@@ -301,6 +301,146 @@ impl PackedMatrix {
         Ok(())
     }
 
+    /// Training backward, input side: dX = dY · Ŵ accumulated directly
+    /// from the packed codes (dY is `(batch, rows)`, dX is
+    /// `(batch, cols)`, overwritten). With Ŵ = s·(c − z) this is
+    /// dX[i,j] = Σ_r dY[i,r]·s[r,g(j)]·(c[r,j] − z[r,g(j)]) — the
+    /// gradient the host PEQA backend propagates to earlier layers while
+    /// the codes stay frozen (train::host).
+    ///
+    /// Sharded over the *batch* rows of dX (each worker owns a
+    /// contiguous dX slab); the weight-row loop is OUTER so each
+    /// (row, group) code tile is unpacked once per worker and reused
+    /// across the worker's whole dX chunk. Per dX row the accumulation
+    /// order is (r, kg, j) ascending regardless of chunking, so results
+    /// are bit-identical for any `threads` value.
+    pub fn grad_input(
+        &self,
+        dy: &[f32],
+        batch: usize,
+        threads: usize,
+        dx: &mut [f32],
+    ) -> Result<()> {
+        let (rows, cols, g) = (self.rows, self.cols, self.group);
+        let ng = self.n_groups();
+        if dy.len() != batch * rows {
+            bail!("grad_input: dy has {} elems, expected {}x{}", dy.len(), batch, rows);
+        }
+        if dx.len() != batch * cols {
+            bail!("grad_input: dx has {} elems, expected {}x{}", dx.len(), batch, cols);
+        }
+        dx.fill(0.0);
+        if batch == 0 || rows == 0 {
+            return Ok(());
+        }
+        let (sd, zd) = (self.scales.data(), self.zeros.data());
+        let bits = self.bits;
+        par_row_chunks(dx, cols, batch, threads, |i0, chunk| {
+            let nb = chunk.len() / cols;
+            let mut tile = vec![0.0f32; g];
+            for r in 0..rows {
+                let prow = self.row_bytes(r);
+                for kg in 0..ng {
+                    pack::unpack_into_f32(prow, bits, kg * g, &mut tile);
+                    let sc = sd[r * ng + kg];
+                    let zp = zd[r * ng + kg];
+                    for ii in 0..nb {
+                        let a = dy[(i0 + ii) * rows + r];
+                        if a == 0.0 {
+                            continue; // adding a·Ŵ with a == 0 is exact identity
+                        }
+                        let asc = a * sc;
+                        let seg = &mut chunk[ii * cols + kg * g..ii * cols + (kg + 1) * g];
+                        for j in 0..g {
+                            seg[j] += asc * (tile[j] - zp);
+                        }
+                    }
+                }
+            }
+        });
+        Ok(())
+    }
+
+    /// Training backward, adapter side: the straight-through-estimator
+    /// gradients of y = X·(s·(c − z))ᵀ w.r.t. the per-(row, group) scale
+    /// and zero tensors, with the integer codes frozen (y is exactly
+    /// linear in s and z, so these are exact, not approximate):
+    ///
+    /// ```text
+    /// ds[r,g] = Σᵢ dY[i,r]·(Σ_{j∈g} X[i,j]·c[r,j] − z[r,g]·Σ_{j∈g} X[i,j])
+    /// dz[r,g] = −s[r,g]·Σᵢ dY[i,r]·Σ_{j∈g} X[i,j]
+    /// ```
+    ///
+    /// Returns `(ds, dz)` shaped like `scales`/`zeros`. One pass over the
+    /// packed codes (each (row, group) tile unpacked once for the whole
+    /// batch), sharded over weight rows with fixed-order accumulation —
+    /// bit-identical for any `threads` value.
+    pub fn grad_scales_zeros(
+        &self,
+        x: &[f32],
+        dy: &[f32],
+        batch: usize,
+        threads: usize,
+    ) -> Result<(Tensor, Tensor)> {
+        let (rows, k, g) = (self.rows, self.cols, self.group);
+        let ng = self.n_groups();
+        if x.len() != batch * k {
+            bail!("grad_scales_zeros: x has {} elems, expected {}x{}", x.len(), batch, k);
+        }
+        if dy.len() != batch * rows {
+            bail!("grad_scales_zeros: dy has {} elems, expected {}x{}", dy.len(), batch, rows);
+        }
+        // Interleaved per-row [ds…, dz…] buffer so one row-parallel pass
+        // fills both tensors.
+        let mut dsz = vec![0.0f32; rows * 2 * ng];
+        if batch > 0 && rows > 0 {
+            // Per-(x-row, group) sums Σ_{j∈g} X[i,j], shared by all rows.
+            let mut sx = vec![0.0f32; batch * ng];
+            for bi in 0..batch {
+                for kg in 0..ng {
+                    sx[bi * ng + kg] =
+                        x[bi * k + kg * g..bi * k + (kg + 1) * g].iter().sum();
+                }
+            }
+            let (sd, zd) = (self.scales.data(), self.zeros.data());
+            let (bits, sx_ref) = (self.bits, &sx);
+            par_row_chunks(&mut dsz, 2 * ng, rows, threads, |r0, chunk| {
+                let mut tile = vec![0.0f32; g];
+                for (ri, drow) in chunk.chunks_mut(2 * ng).enumerate() {
+                    let r = r0 + ri;
+                    let prow = self.row_bytes(r);
+                    for kg in 0..ng {
+                        pack::unpack_into_f32(prow, bits, kg * g, &mut tile);
+                        let sc = sd[r * ng + kg];
+                        let zp = zd[r * ng + kg];
+                        let mut acc_s = 0.0f32;
+                        let mut acc_z = 0.0f32;
+                        for bi in 0..batch {
+                            let dyv = dy[bi * rows + r];
+                            let xseg = &x[bi * k + kg * g..bi * k + (kg + 1) * g];
+                            let mut dot = 0.0f32;
+                            for j in 0..g {
+                                dot += xseg[j] * tile[j];
+                            }
+                            acc_s += dyv * (dot - zp * sx_ref[bi * ng + kg]);
+                            acc_z += dyv * sx_ref[bi * ng + kg];
+                        }
+                        drow[kg] = acc_s;
+                        drow[ng + kg] = -sc * acc_z;
+                    }
+                }
+            });
+        }
+        let mut ds = vec![0.0f32; rows * ng];
+        let mut dz = vec![0.0f32; rows * ng];
+        for r in 0..rows {
+            ds[r * ng..(r + 1) * ng].copy_from_slice(&dsz[r * 2 * ng..r * 2 * ng + ng]);
+            dz[r * ng..(r + 1) * ng]
+                .copy_from_slice(&dsz[r * 2 * ng + ng..(r + 1) * 2 * ng]);
+        }
+        Ok((Tensor::new(&[rows, ng], ds), Tensor::new(&[rows, ng], dz)))
+    }
+
     /// Shared fused core: accumulate yᵀ (rows, b) += X·Ŵᵀ directly from
     /// the packed codes. `yt` must be zero-initialized by the caller; see
     /// the module docs for the group-sum zero-point identity.
@@ -567,6 +707,93 @@ mod tests {
             let mut out = vec![f32::NAN; batch * rows]; // stale garbage
             pm.matmul_t_rows_scratch(x.data(), batch, 4, &mut out, &mut yt).unwrap();
             assert_eq!(out.as_slice(), y.data(), "rows={rows} batch={batch}");
+        }
+    }
+
+    #[test]
+    fn grad_input_matches_dense_backward() {
+        // dX = dY · Ŵ against the dense reference (dequantize, then an
+        // explicit f64-accumulated matmul), across widths and groupings.
+        for bits in [2u8, 3, 4] {
+            for group in [None, Some(16)] {
+                let (x, pm) = setup(13, 64, 5, bits, group, 43 + bits as u64);
+                let (b, _) = x.dims2().unwrap();
+                let mut rng = Pcg32::new(91);
+                let dy = Tensor::normal(&[b, pm.rows], 1.0, &mut rng);
+                let mut dx = vec![f32::NAN; b * pm.cols];
+                pm.grad_input(dy.data(), b, 3, &mut dx).unwrap();
+                let w = pm.dequantize();
+                for i in 0..b {
+                    for j in 0..pm.cols {
+                        let mut acc = 0.0f64;
+                        for r in 0..pm.rows {
+                            acc += dy.at2(i, r) as f64 * w.at2(r, j) as f64;
+                        }
+                        let d = (dx[i * pm.cols + j] as f64 - acc).abs();
+                        assert!(
+                            d <= 1e-3 * acc.abs().max(1.0),
+                            "bits={bits} group={group:?} ({i},{j}): {d}"
+                        );
+                    }
+                }
+                // Thread invariance is bitwise.
+                let mut dx1 = vec![0.0f32; b * pm.cols];
+                pm.grad_input(dy.data(), b, 1, &mut dx1).unwrap();
+                assert_eq!(dx, dx1);
+                // Shape errors rejected.
+                assert!(pm.grad_input(&dy.data()[1..], b, 1, &mut dx).is_err());
+                assert!(pm.grad_input(dy.data(), b, 1, &mut dx[1..]).is_err());
+            }
+        }
+    }
+
+    #[test]
+    fn scale_zero_grads_match_finite_differences() {
+        // L(s, z) = Σ w ⊙ (X·Ŵᵀ) is linear in s and z (codes frozen), so
+        // central differences are exact up to f32 rounding; the analytic
+        // reductions must land within 1e-3 relative of them. This is the
+        // kernel half of the acceptance gradcheck (the model-level check
+        // lives in tests/train_host.rs).
+        for bits in [2u8, 3, 4] {
+            for group in [None, Some(16)] {
+                let (x, pm) = setup(9, 48, 4, bits, group, 7 + bits as u64);
+                let (b, _) = x.dims2().unwrap();
+                let mut rng = Pcg32::new(5);
+                let dy = Tensor::normal(&[b, pm.rows], 1.0, &mut rng);
+                let loss = |m: &PackedMatrix| -> f64 {
+                    let y = m.matmul_t(&x).unwrap();
+                    y.data().iter().zip(dy.data()).map(|(&a, &w)| (a * w) as f64).sum()
+                };
+                let (ds, dz) = pm.grad_scales_zeros(x.data(), dy.data(), b, 4).unwrap();
+                let ng = pm.n_groups();
+                for r in 0..pm.rows {
+                    for kg in 0..ng {
+                        for (which, grad) in [("s", ds.at2(r, kg)), ("z", dz.at2(r, kg))] {
+                            let mut hi = pm.clone();
+                            let mut lo = pm.clone();
+                            let (t_hi, t_lo, v) = if which == "s" {
+                                (&mut hi.scales, &mut lo.scales, pm.scales.at2(r, kg))
+                            } else {
+                                (&mut hi.zeros, &mut lo.zeros, pm.zeros.at2(r, kg))
+                            };
+                            let h = (0.01 * v.abs()).max(1e-3);
+                            t_hi.set2(r, kg, v + h);
+                            t_lo.set2(r, kg, v - h);
+                            let fd = (loss(&hi) - loss(&lo)) / (2.0 * h as f64);
+                            let d = (grad as f64 - fd).abs();
+                            assert!(
+                                d <= 1e-3 * fd.abs().max(1e-2),
+                                "bits={bits} group={group:?} {which}[{r},{kg}]: \
+                                 analytic {grad} vs fd {fd}"
+                            );
+                        }
+                    }
+                }
+                // Bitwise thread invariance of the reductions.
+                let (ds1, dz1) = pm.grad_scales_zeros(x.data(), dy.data(), b, 1).unwrap();
+                assert_eq!(ds.data(), ds1.data());
+                assert_eq!(dz.data(), dz1.data());
+            }
         }
     }
 

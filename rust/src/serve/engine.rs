@@ -57,7 +57,17 @@ use crate::runtime::ArtifactMeta;
 use crate::tensor::Tensor;
 use crate::util::Pcg32;
 
-const RMS_EPS: f32 = 1e-6;
+/// RMS-norm epsilon — shared with the host training backend
+/// (`train::host`): a model is tuned under exactly the norm it is
+/// served with.
+pub(crate) const RMS_EPS: f32 = 1e-6;
+
+/// The rotary frequency table for a head dimension — the one formula
+/// both the serving engine and the host training backend rotate with.
+pub(crate) fn rope_freqs(head_dim: usize) -> Vec<f32> {
+    let half = head_dim / 2;
+    (0..half).map(|i| 10000.0f32.powf(-(i as f32) / half as f32)).collect()
+}
 
 /// Static transformer geometry of a served model (llama family:
 /// RMSNorm + rotary + SwiGLU — the architecture the paper quantizes).
@@ -292,16 +302,24 @@ struct Scratch {
     up: Vec<f32>,
     act: Vec<f32>,
     down: Vec<f32>,
-    /// Attention score matrix, `(n_heads, window)`.
-    scores: Vec<f32>,
-    /// Per-head running max / softmax denominator.
-    head_max: Vec<f32>,
-    head_den: Vec<f32>,
+    /// Per-worker attention scratch: the attention pass shards batch
+    /// rows (sequences) over `std::thread::scope` workers, and each
+    /// worker owns one of these (grown to the worker count once).
+    attn: Vec<AttnScratch>,
     /// Last-position rows gathered for the LM head, `(n_seqs, d_model)`.
     last: Vec<f32>,
     /// yᵀ transpose scratch of the fused kernel
     /// (`PackedMatrix::matmul_t_rows_scratch`).
     yt: Vec<f32>,
+}
+
+/// One worker's attention scratch: the `(n_heads, window)` score matrix
+/// plus per-head running max / softmax denominator.
+#[derive(Default)]
+struct AttnScratch {
+    scores: Vec<f32>,
+    head_max: Vec<f32>,
+    head_den: Vec<f32>,
 }
 
 #[inline]
@@ -383,10 +401,7 @@ impl Engine {
                 down: format!("{lp}.mlp.down"),
             });
         }
-        let half = geom.head_dim() / 2;
-        let freqs = (0..half)
-            .map(|i| 10000.0f32.powf(-(i as f32) / half as f32))
-            .collect();
+        let freqs = rope_freqs(geom.head_dim());
         // Snapshot the base task's scales/zeros of every packed
         // projection: apply_adapter restores these on projections an
         // adapter does not cover.
@@ -432,6 +447,17 @@ impl Engine {
     /// A fresh K/V cache sized for this model with the given window.
     pub fn new_cache(&self, capacity: usize) -> KvCache {
         KvCache::new(self.geom.n_layers, self.geom.d_model, capacity)
+    }
+
+    /// Coverage gaps of `adapter` against this engine's packed
+    /// projections — the strict-coverage registration check
+    /// (`BatcherConfig::strict_coverage`), shared with the xla
+    /// coordinator via [`super::types::adapter_coverage_gaps`]. Returns
+    /// the missing tensor names; empty means full coverage.
+    /// [`Engine::apply_adapter`] itself stays partial-tolerant —
+    /// uncovered projections revert to base scales.
+    pub fn adapter_coverage_gaps(&self, adapter: &Checkpoint) -> Vec<String> {
+        super::types::adapter_coverage_gaps(&self.model.prefixes(), adapter)
     }
 
     /// PEQA task switch: overlay an adapter's scale/zero tensors onto the
@@ -574,6 +600,8 @@ impl Engine {
         }
         let Engine { model, geom, threads, freqs, head_name, layer_names, scratch, .. } = self;
         let (geom, threads, head_name) = (*geom, *threads, *head_name);
+        // Shared-borrow view so the attention worker closure stays `Fn`.
+        let freqs: &[f32] = freqs;
         let d = geom.d_model;
         let (hh, hd) = (geom.n_heads, geom.head_dim());
         let m: usize = seqs.iter().map(|s| s.len()).sum();
@@ -603,36 +631,82 @@ impl Engine {
             proj_into(model, threads, &ln.k, &scratch.h[..m * d], m, &mut scratch.k, &mut scratch.yt)?;
             proj_into(model, threads, &ln.v, &scratch.h[..m * d], m, &mut scratch.v, &mut scratch.yt)?;
             ensure(&mut scratch.ctx, m * d);
-            // Rotary + cache append + attention, per sequence and token.
-            let mut r0 = 0usize;
-            for (si, seq) in seqs.iter().enumerate() {
-                let cache = &mut *caches[si];
-                let base = cache.pos();
-                for ti in 0..seq.len() {
-                    let r = r0 + ti;
-                    let abs = base + ti;
-                    rope_row_at(freqs, hh, hd, &mut scratch.q[r * d..(r + 1) * d], abs);
-                    rope_row_at(freqs, hh, hd, &mut scratch.k[r * d..(r + 1) * d], abs);
-                    cache.write(
-                        layer,
-                        abs,
-                        &scratch.k[r * d..(r + 1) * d],
-                        &scratch.v[r * d..(r + 1) * d],
-                    );
-                    attend_row(
-                        hh,
-                        hd,
-                        cache,
-                        layer,
-                        abs,
-                        &scratch.q[r * d..(r + 1) * d],
-                        &mut scratch.ctx[r * d..(r + 1) * d],
-                        &mut scratch.scores,
-                        &mut scratch.head_max,
-                        &mut scratch.head_den,
-                    );
-                }
-                r0 += seq.len();
+            // Rotary + cache append + attention, sharded across batch
+            // rows: sequences are mutually independent (each attends
+            // only over its own cache), so contiguous sequence ranges go
+            // to scoped workers. Each worker owns disjoint q/k/ctx row
+            // slabs, its own caches and its own AttnScratch, and runs
+            // exactly the single-worker code per sequence — results are
+            // bitwise identical at any worker count.
+            let workers = threads.min(n_seqs).max(1);
+            if scratch.attn.len() < workers {
+                scratch.attn.resize_with(workers, AttnScratch::default);
+            }
+            let per = n_seqs.div_ceil(workers);
+            if workers == 1 {
+                attend_seq_chunk(
+                    freqs,
+                    hh,
+                    hd,
+                    d,
+                    layer,
+                    seqs,
+                    caches,
+                    &mut scratch.q[..m * d],
+                    &mut scratch.k[..m * d],
+                    &scratch.v[..m * d],
+                    &mut scratch.ctx[..m * d],
+                    &mut scratch.attn[0],
+                );
+            } else {
+                let mut seqs_rem: &[&[u32]] = seqs;
+                let mut caches_rem: &mut [&mut KvCache] = &mut *caches;
+                let mut q_rem: &mut [f32] = &mut scratch.q[..m * d];
+                let mut k_rem: &mut [f32] = &mut scratch.k[..m * d];
+                let mut ctx_rem: &mut [f32] = &mut scratch.ctx[..m * d];
+                let v_all: &[f32] = &scratch.v[..m * d];
+                let mut attn_rem: &mut [AttnScratch] = &mut scratch.attn[..workers];
+                let mut row0 = 0usize;
+                std::thread::scope(|s| {
+                    while !seqs_rem.is_empty() {
+                        let take = per.min(seqs_rem.len());
+                        let rows: usize = seqs_rem[..take].iter().map(|s| s.len()).sum();
+                        let (seq_c, sr) = seqs_rem.split_at(take);
+                        seqs_rem = sr;
+                        // mem::take moves each remainder slice out so the
+                        // split halves keep the outer lifetime the scoped
+                        // threads need (a plain reborrow would not).
+                        let (cache_c, cr) =
+                            std::mem::take(&mut caches_rem).split_at_mut(take);
+                        caches_rem = cr;
+                        let (q_c, qr) = std::mem::take(&mut q_rem).split_at_mut(rows * d);
+                        q_rem = qr;
+                        let (k_c, kr) = std::mem::take(&mut k_rem).split_at_mut(rows * d);
+                        k_rem = kr;
+                        let (ctx_c, xr) = std::mem::take(&mut ctx_rem).split_at_mut(rows * d);
+                        ctx_rem = xr;
+                        let (attn_c, ar) = std::mem::take(&mut attn_rem).split_at_mut(1);
+                        attn_rem = ar;
+                        let v_c = &v_all[row0 * d..(row0 + rows) * d];
+                        row0 += rows;
+                        s.spawn(move || {
+                            attend_seq_chunk(
+                                freqs,
+                                hh,
+                                hd,
+                                d,
+                                layer,
+                                seq_c,
+                                cache_c,
+                                q_c,
+                                k_c,
+                                v_c,
+                                ctx_c,
+                                &mut attn_c[0],
+                            );
+                        });
+                    }
+                });
             }
             // Attention output + residual, then the SwiGLU MLP + residual.
             proj_into(model, threads, &ln.o, &scratch.ctx[..m * d], m, &mut scratch.o, &mut scratch.yt)?;
@@ -702,6 +776,51 @@ fn proj_into(
     }
 }
 
+/// One worker's share of the attention pass: rotary + cache append +
+/// [`attend_row`] for a contiguous range of sequences. `q_c`/`k_c`/
+/// `v_c`/`ctx_c` are that range's row slabs; every sequence only
+/// touches its own cache, so chunks run concurrently and the
+/// per-sequence arithmetic is identical at any worker count.
+#[allow(clippy::too_many_arguments)]
+fn attend_seq_chunk(
+    freqs: &[f32],
+    hh: usize,
+    hd: usize,
+    d: usize,
+    layer: usize,
+    seq_chunk: &[&[u32]],
+    cache_chunk: &mut [&mut KvCache],
+    q_c: &mut [f32],
+    k_c: &mut [f32],
+    v_c: &[f32],
+    ctx_c: &mut [f32],
+    attn: &mut AttnScratch,
+) {
+    let mut r0 = 0usize;
+    for (si, seq) in seq_chunk.iter().enumerate() {
+        let cache = &mut *cache_chunk[si];
+        let base = cache.pos();
+        for ti in 0..seq.len() {
+            let r = r0 + ti;
+            let abs = base + ti;
+            rope_row_at(freqs, hh, hd, &mut q_c[r * d..(r + 1) * d], abs);
+            rope_row_at(freqs, hh, hd, &mut k_c[r * d..(r + 1) * d], abs);
+            cache.write(layer, abs, &k_c[r * d..(r + 1) * d], &v_c[r * d..(r + 1) * d]);
+            attend_row(
+                hh,
+                hd,
+                cache,
+                layer,
+                abs,
+                &q_c[r * d..(r + 1) * d],
+                &mut ctx_c[r * d..(r + 1) * d],
+                attn,
+            );
+        }
+        r0 += seq.len();
+    }
+}
+
 /// Rotate one (d_model,) row in place at absolute position `pos`
 /// (per-head half-split rotary, matching python/compile/model.py).
 fn rope_row_at(freqs: &[f32], n_heads: usize, head_dim: usize, row: &mut [f32], pos: usize) {
@@ -726,10 +845,10 @@ fn rope_row_at(freqs: &[f32], n_heads: usize, head_dim: usize, row: &mut [f32], 
 /// ([`KvCache::window_slabs`]) and each cached row is visited ONCE for
 /// all heads (score pass over K, accumulate pass over V) with 4-way
 /// blocked dots — versus the scalar per-head loop that re-walked the
-/// whole window `n_heads` times. Scores/max/denominator live in
-/// caller-provided scratch. The arithmetic per (head, position) is a
-/// fixed-order reduction independent of batch composition and thread
-/// count, preserving the engine's bitwise invariances.
+/// whole window `n_heads` times. Scores/max/denominator live in the
+/// calling worker's [`AttnScratch`]. The arithmetic per (head, position)
+/// is a fixed-order reduction independent of batch composition and
+/// thread count, preserving the engine's bitwise invariances.
 #[allow(clippy::too_many_arguments)]
 fn attend_row(
     n_heads: usize,
@@ -739,10 +858,9 @@ fn attend_row(
     abs: usize,
     q: &[f32],
     ctx: &mut [f32],
-    scores: &mut Vec<f32>,
-    head_max: &mut Vec<f32>,
-    head_den: &mut Vec<f32>,
+    scratch: &mut AttnScratch,
 ) {
+    let AttnScratch { scores, head_max, head_den } = scratch;
     let n = cache.window_len(abs);
     let d = n_heads * head_dim;
     let inv = 1.0 / (head_dim as f32).sqrt();
@@ -928,9 +1046,7 @@ pub fn reference_forward_windowed(
         x[ti * d..(ti + 1) * d]
             .copy_from_slice(&embed.data()[tok as usize * d..(tok as usize + 1) * d]);
     }
-    let freqs: Vec<f32> = (0..half)
-        .map(|i| 10000.0f32.powf(-(i as f32) / half as f32))
-        .collect();
+    let freqs = rope_freqs(hd);
     let rope = |row: &mut [f32], pos: usize| {
         let p = pos as f32;
         for h in 0..hh {

@@ -39,7 +39,15 @@
 //! projections the adapter covers and restores the construction-time
 //! base scales/zeros on every projection it does not cover — engine
 //! state after a swap depends only on the adapter applied, never on the
-//! sequence of previous swaps (no partial-coverage residue).
+//! sequence of previous swaps (no partial-coverage residue). Deployments
+//! that would rather surface coverage mismatches than serve base
+//! fallbacks set `BatcherConfig::strict_coverage` /
+//! `SchedulerConfig::strict_coverage` (CLI: `peqa serve --strict`):
+//! registration then rejects any adapter with coverage gaps
+//! ([`Engine::adapter_coverage_gaps`]). Adapters need not be
+//! hand-built: `train::HostPeqaTuner` / `peqa finetune` produce them
+//! directly from host PEQA fine-tuning
+//! (`model::PackedModel::extract_adapter`).
 //!
 //! Entry points: `peqa serve` (CLI demo over a synthesized or on-disk
 //! `.packed` model; `--clients N` routes it through the threaded

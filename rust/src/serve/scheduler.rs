@@ -56,15 +56,22 @@ pub struct SchedulerConfig {
     pub sampling: Sampling,
     /// Seed of the top-k sampling stream.
     pub seed: u64,
+    /// Strict adapter coverage (`BatcherConfig::strict_coverage`):
+    /// [`Scheduler::new`] rejects any registered adapter that does not
+    /// cover every packed projection, instead of serving uncovered
+    /// projections at base scales.
+    pub strict_coverage: bool,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
+        let batcher = BatcherConfig::default();
         SchedulerConfig {
-            max_batch: BatcherConfig::default().max_batch,
+            max_batch: batcher.max_batch,
             window: 256,
             sampling: Sampling::Greedy,
             seed: 0,
+            strict_coverage: batcher.strict_coverage,
         }
     }
 }
@@ -106,8 +113,16 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
-    pub fn new(engine: Engine, adapters: AdapterStore, cfg: SchedulerConfig) -> Scheduler {
-        Scheduler {
+    /// Build the serving loop. In strict-coverage mode
+    /// (`cfg.strict_coverage`) every registered adapter is validated
+    /// against the engine's packed projections up front
+    /// ([`Engine::adapter_coverage_gaps`]) — a partial adapter is a
+    /// registration error, never a silently-based task.
+    pub fn new(engine: Engine, adapters: AdapterStore, cfg: SchedulerConfig) -> Result<Scheduler> {
+        if cfg.strict_coverage {
+            super::types::validate_coverage(&engine.model().prefixes(), &adapters)?;
+        }
+        Ok(Scheduler {
             engine,
             adapters,
             cfg,
@@ -118,7 +133,7 @@ impl Scheduler {
             rng: Pcg32::seeded(cfg.seed, 0x5c4ed),
             spare_caches: HashMap::new(),
             metrics: ServeMetrics::default(),
-        }
+        })
     }
 
     pub fn engine(&self) -> &Engine {
@@ -367,7 +382,7 @@ mod tests {
     #[test]
     fn drains_mixed_tasks_with_scale_swaps() {
         let (engine, adapters) = tiny();
-        let mut sched = Scheduler::new(engine, adapters, SchedulerConfig::default());
+        let mut sched = Scheduler::new(engine, adapters, SchedulerConfig::default()).unwrap();
         for i in 0..9u32 {
             let task = ["a", "b", "c"][(i % 3) as usize];
             sched.submit(task, vec![1 + i, 2, 3], 5, u32::MAX);
@@ -392,10 +407,9 @@ mod tests {
         let cfg = SchedulerConfig {
             max_batch: 4,
             window: 32,
-            sampling: Sampling::Greedy,
-            seed: 0,
+            ..SchedulerConfig::default()
         };
-        let mut sched = Scheduler::new(engine, adapters, cfg);
+        let mut sched = Scheduler::new(engine, adapters, cfg).unwrap();
         // 60 interleaved requests over 3 tasks: per-task pops must stay
         // O(1) (indexed queues) and FIFO head selection must still be
         // global-arrival order.
@@ -425,7 +439,7 @@ mod tests {
     #[test]
     fn degenerate_requests_complete_without_decoding() {
         let (engine, adapters) = tiny();
-        let mut sched = Scheduler::new(engine, adapters, SchedulerConfig::default());
+        let mut sched = Scheduler::new(engine, adapters, SchedulerConfig::default()).unwrap();
         let id_empty = sched.submit("a", vec![], 5, u32::MAX);
         let id_zero = sched.submit("a", vec![1, 2], 0, u32::MAX);
         let responses = sched.run_until_idle().unwrap();
@@ -441,10 +455,58 @@ mod tests {
     #[test]
     fn unknown_task_is_an_error() {
         let (engine, adapters) = tiny();
-        let mut sched = Scheduler::new(engine, adapters, SchedulerConfig::default());
+        let mut sched = Scheduler::new(engine, adapters, SchedulerConfig::default()).unwrap();
         assert!(!sched.has_task("nope"));
         assert!(sched.has_task("a"));
         sched.submit("nope", vec![1], 3, u32::MAX);
         assert!(sched.run_until_idle().is_err());
+    }
+
+    #[test]
+    fn strict_coverage_rejects_partial_adapters_at_registration() {
+        use crate::model::Checkpoint;
+        // A partial adapter (one projection's scales only) registers
+        // fine by default and serves with base fallback…
+        let partial_store = |engine: &Engine| {
+            let mut a = Checkpoint::new();
+            let m = engine.model().matrix("layers.0.attn.q").unwrap();
+            a.insert("layers.0.attn.q.s", m.scales.clone());
+            let mut store = AdapterStore::new();
+            store.insert("partial", a);
+            store
+        };
+        let (engine, _) = tiny();
+        let store = partial_store(&engine);
+        let mut sched = Scheduler::new(engine, store, SchedulerConfig::default()).unwrap();
+        sched.submit("partial", vec![1, 2, 3], 3, u32::MAX);
+        let r = sched.run_until_idle().unwrap();
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].tokens.len(), 3);
+
+        // …but strict-coverage mode rejects it at registration.
+        let (engine, _) = tiny();
+        let store = partial_store(&engine);
+        let strict = SchedulerConfig { strict_coverage: true, ..SchedulerConfig::default() };
+        let err = Scheduler::new(engine, store, strict);
+        assert!(err.is_err());
+        let msg = format!("{:#}", err.err().unwrap());
+        assert!(msg.contains("strict adapter coverage"), "{msg}");
+        assert!(msg.contains("partial"), "{msg}");
+
+        // Full-coverage adapters pass strict mode (synth adapters carry
+        // every s and z tensor), and an s-only full adapter also passes
+        // (all-or-none zero coverage).
+        let (engine, adapters) = tiny();
+        let mut sched = Scheduler::new(engine, adapters, strict).unwrap();
+        sched.submit("a", vec![4, 5], 2, u32::MAX);
+        assert_eq!(sched.run_until_idle().unwrap().len(), 1);
+        let (engine, _) = tiny();
+        let s_only = engine.model().extract_adapter(false);
+        assert!(engine.adapter_coverage_gaps(&s_only).is_empty());
+        // Mixed zero coverage is a gap even with all scales present.
+        let mut mixed = engine.model().extract_adapter(false);
+        let m = engine.model().matrix("layers.0.attn.q").unwrap();
+        mixed.insert("layers.0.attn.q.z", m.zeros.clone());
+        assert!(!engine.adapter_coverage_gaps(&mixed).is_empty());
     }
 }

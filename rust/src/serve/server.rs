@@ -186,7 +186,7 @@ mod tests {
         let (pm, base_q) = synth_packed(&geom, 4, None, 3).unwrap();
         let engine = Engine::from_packed(pm, geom, 2).unwrap();
         let adapters = synth_adapters(&base_q, &["a", "b"], 5);
-        Scheduler::new(engine, adapters, SchedulerConfig::default())
+        Scheduler::new(engine, adapters, SchedulerConfig::default()).unwrap()
     }
 
     #[test]

@@ -74,6 +74,49 @@ impl AdapterStore {
     }
 }
 
+/// Coverage gaps of `adapter` against a set of quantized projection
+/// prefixes — the ONE strict-coverage rule both serving paths enforce
+/// at registration (host `serve::Scheduler`, xla `Coordinator`): every
+/// prefix must receive a `.s` tensor, and `.z` tensors must cover
+/// either every prefix or none (mixed zero coverage is as much a
+/// layout drift as a missing scale). Returns the missing tensor names;
+/// empty means full coverage.
+pub fn adapter_coverage_gaps(prefixes: &[String], adapter: &Checkpoint) -> Vec<String> {
+    let any_z = prefixes.iter().any(|p| adapter.get(&format!("{p}.z")).is_some());
+    let mut gaps = Vec::new();
+    for p in prefixes {
+        if adapter.get(&format!("{p}.s")).is_none() {
+            gaps.push(format!("{p}.s"));
+        }
+        if any_z && adapter.get(&format!("{p}.z")).is_none() {
+            gaps.push(format!("{p}.z"));
+        }
+    }
+    gaps
+}
+
+/// Strict-coverage registration check over a whole [`AdapterStore`]:
+/// errors on the first task whose adapter leaves
+/// [`adapter_coverage_gaps`] against `prefixes` — the shared gate both
+/// the host `serve::Scheduler` and the xla `Coordinator` run when
+/// [`BatcherConfig::strict_coverage`] is set.
+pub fn validate_coverage(prefixes: &[String], adapters: &AdapterStore) -> Result<()> {
+    for task in adapters.tasks() {
+        let a = adapters.get(task).expect("task listed by the store");
+        let gaps = adapter_coverage_gaps(prefixes, a);
+        if !gaps.is_empty() {
+            anyhow::bail!(
+                "strict adapter coverage: task '{task}' leaves {} projection \
+                 tensor(s) uncovered (first: {}) — re-export the adapter with \
+                 full coverage or disable strict_coverage",
+                gaps.len(),
+                gaps[0]
+            );
+        }
+    }
+    Ok(())
+}
+
 /// One generation request: decode up to `max_new` tokens after `prompt`
 /// with task `task`'s adapter, stopping early if `stop` is sampled (the
 /// stop id itself never appears in the response tokens).
@@ -100,11 +143,19 @@ pub struct BatcherConfig {
     /// Max requests decoded together (host: engine batch; xla: ≤ the
     /// artifact's batch dim).
     pub max_batch: usize,
+    /// Strict adapter-coverage mode: reject adapters that do not cover
+    /// every packed projection at registration, instead of silently
+    /// serving uncovered projections at base scales. Deployments that
+    /// want coverage mismatches surfaced (a truncated adapter file, a
+    /// layout drift between tuner and server) turn this on; the default
+    /// keeps the partial-adapter behavior (uncovered projections revert
+    /// to base — see `Engine::apply_adapter`).
+    pub strict_coverage: bool,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_batch: 8 }
+        BatcherConfig { max_batch: 8, strict_coverage: false }
     }
 }
 

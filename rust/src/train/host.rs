@@ -1,0 +1,966 @@
+//! Host PEQA training backend — fine-tunes *only the quantization
+//! scales* (and optionally zero-points) of a packed model, no `xla`
+//! feature required.
+//!
+//! This is the paper's §3 algorithm executed on the host stack: the
+//! forward pass runs the llama-family transformer straight off a
+//! [`PackedModel`]'s bit-packed integer codes through the fused
+//! `quant::kernels` GEMMs; the backward pass is full reverse-mode
+//! through RMSNorm / rotary / causal attention / SwiGLU, but parameter
+//! gradients exist **only for the per-(row, group) scale and zero
+//! tensors** — the straight-through estimator with the codes `c`
+//! frozen. Because `y = X·(s·(c − z))ᵀ` is exactly linear in `s` and
+//! `z` once `c` is frozen, those gradients are exact
+//! (`∂y/∂s = X·(c − z)ᵀ`-shaped reductions,
+//! [`PackedMatrix::grad_scales_zeros`]); activation gradients flow
+//! through [`PackedMatrix::grad_input`] without ever materializing a
+//! dense Ŵ.
+//!
+//! Consequences the tests pin:
+//! * the packed integer codes and every fp tensor (embeddings, norms,
+//!   LM head) are bit-identical before and after training — only
+//!   `scales`/`zeros` move;
+//! * trainable + Adam state is `3 × 4 ×` (#scale [+ #zero]) bytes —
+//!   kilobytes against the megabytes of packed codes
+//!   ([`Tuner::trainable_state_bytes`], the paper's Table 1 optimizer
+//!   memory story, cross-checkable against `memmodel::peqa_trainable`);
+//! * every kernel on both passes accumulates in a fixed order, so a
+//!   training step is **bit-identical at any `PEQA_THREADS` value**;
+//! * the tuned scales, extracted with
+//!   [`PackedModel::extract_adapter`], are a drop-in
+//!   `serve::AdapterStore` adapter: `peqa finetune` writes a file that
+//!   `peqa serve` scale-swaps without conversion.
+//!
+//! The forward here mirrors `serve::engine` (same RMS epsilon, rotary
+//! table and SwiGLU) but recomputes full-sequence activations with a
+//! tape instead of decoding through KV caches — training wants every
+//! position's logits and the saved activations for backward.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::optim::Adam;
+use super::{StepState, Tuner};
+use crate::config::TrainConfig;
+use crate::data::Batch;
+use crate::model::{Checkpoint, PackedModel};
+use crate::quant::PackedMatrix;
+// RMS_EPS and rope_freqs are shared with the serving engine: a model is
+// tuned under exactly the norm and rotary table it is served with
+// (tests/train_host.rs pins train-forward vs engine parity).
+use crate::serve::engine::{rope_freqs, RMS_EPS};
+use crate::serve::ModelGeom;
+use crate::tensor::Tensor;
+
+/// Host scale-only PEQA tuner (see module docs).
+pub struct HostPeqaTuner {
+    model: PackedModel,
+    geom: ModelGeom,
+    pub cfg: TrainConfig,
+    train_zeros: bool,
+    threads: usize,
+    /// Trainable projection prefixes in deterministic (layer, slot) order.
+    prefixes: Vec<String>,
+    opt: Adam,
+    state: StepState,
+}
+
+impl HostPeqaTuner {
+    /// Wrap a packed model for scale-only fine-tuning. Every block
+    /// projection must be *packed* (a dense fp projection has no scales
+    /// to tune). `train_zeros` additionally trains the zero-points
+    /// (the paper's PEQA+zp variant); `threads` pins the kernel worker
+    /// count — results are bit-identical for any value.
+    pub fn from_packed(
+        model: PackedModel,
+        geom: ModelGeom,
+        cfg: TrainConfig,
+        train_zeros: bool,
+        threads: usize,
+    ) -> Result<HostPeqaTuner> {
+        validate_geom(&geom)?;
+        let d = geom.d_model;
+        let embed = model
+            .fp_tensor("embed")
+            .ok_or_else(|| anyhow!("packed model missing fp tensor 'embed'"))?;
+        if embed.shape() != [geom.vocab, d].as_slice() {
+            bail!("'embed' is {:?}, geometry wants [{}, {d}]", embed.shape(), geom.vocab);
+        }
+        if let Some(h) = model.fp_tensor("lm_head") {
+            if h.shape() != [geom.vocab, d].as_slice() {
+                bail!("'lm_head' is {:?}, geometry wants [{}, {d}]", h.shape(), geom.vocab);
+            }
+        }
+        if model.fp_tensor("final_norm.g").is_none() {
+            bail!("packed model missing 'final_norm.g'");
+        }
+        let mut prefixes = Vec::with_capacity(geom.n_layers * 7);
+        for i in 0..geom.n_layers {
+            let lp = format!("layers.{i}");
+            for ln in ["ln1", "ln2"] {
+                if model.fp_tensor(&format!("{lp}.{ln}.g")).is_none() {
+                    bail!("packed model missing '{lp}.{ln}.g'");
+                }
+            }
+            for (p, rows, cols) in [
+                ("attn.q", d, d),
+                ("attn.k", d, d),
+                ("attn.v", d, d),
+                ("attn.o", d, d),
+                ("mlp.gate", geom.d_ff, d),
+                ("mlp.up", geom.d_ff, d),
+                ("mlp.down", d, geom.d_ff),
+            ] {
+                let prefix = format!("{lp}.{p}");
+                let m = model.matrix(&prefix).ok_or_else(|| {
+                    anyhow!(
+                        "projection '{prefix}' is not packed — the host PEQA tuner \
+                         trains quantization scales and needs every block projection \
+                         quantized (run quantize + pack first)"
+                    )
+                })?;
+                if (m.rows, m.cols) != (rows, cols) {
+                    bail!(
+                        "projection '{prefix}' is ({}, {}), geometry wants ({rows}, {cols})",
+                        m.rows,
+                        m.cols
+                    );
+                }
+                prefixes.push(prefix);
+            }
+        }
+        let mut sizes = Vec::new();
+        for p in &prefixes {
+            let m = model.matrix(p).expect("validated above");
+            sizes.push(m.scales.len());
+            if train_zeros {
+                sizes.push(m.zeros.len());
+            }
+        }
+        let state = StepState::new(cfg.log_every);
+        Ok(HostPeqaTuner {
+            model,
+            geom,
+            cfg,
+            train_zeros,
+            threads: threads.max(1),
+            prefixes,
+            opt: Adam::new(&sizes),
+            state,
+        })
+    }
+
+    pub fn geom(&self) -> &ModelGeom {
+        &self.geom
+    }
+
+    pub fn train_zeros(&self) -> bool {
+        self.train_zeros
+    }
+
+    pub fn model(&self) -> &PackedModel {
+        &self.model
+    }
+
+    /// Mutable model access (tests perturb scales for finite-difference
+    /// checks; the packed code bytes stay unreachable for mutation).
+    pub fn model_mut(&mut self) -> &mut PackedModel {
+        &mut self.model
+    }
+
+    /// Surrender the tuned model (codes + tuned scales) for serving.
+    pub fn into_model(self) -> PackedModel {
+        self.model
+    }
+
+    /// The tuned task adapter in the exact `serve::AdapterStore` format
+    /// (zeros ride along only when they were trained).
+    pub fn extract_adapter(&self) -> Checkpoint {
+        self.model.extract_adapter(self.train_zeros)
+    }
+
+    /// Forward-only masked loss of one batch (no gradients, no state).
+    pub fn loss(&self, batch: &Batch) -> Result<f32> {
+        let (sum, count) = batch_nll(&self.model, &self.geom, self.threads, batch)?;
+        if count == 0.0 {
+            bail!("batch mask is all zero — no loss tokens");
+        }
+        Ok((sum / count) as f32)
+    }
+
+    /// Loss and the per-projection (ds, dz) gradients of one batch,
+    /// without touching optimizer or model state — what `step` consumes
+    /// and what the gradcheck tests probe directly. Gradients come back
+    /// in `prefixes` order.
+    pub fn forward_backward(&self, batch: &Batch) -> Result<(f32, Vec<(String, Tensor, Tensor)>)> {
+        let (bsz, t_len, tokens) = check_batch(batch, self.geom.vocab)?;
+        let tape = forward_tape(&self.model, &self.geom, self.threads, &tokens, bsz, t_len, true)?;
+        let denom: f32 = batch.mask.iter().sum();
+        if denom <= 0.0 {
+            bail!("batch mask is all zero — nothing to train on");
+        }
+        let (loss, dlogits) =
+            loss_and_dlogits(&tape.logits, &tokens, &batch.mask, bsz, t_len, self.geom.vocab);
+        let by_prefix = backward(&self.model, &self.geom, self.threads, &tape, &dlogits, bsz, t_len)?;
+        let mut out = Vec::with_capacity(self.prefixes.len());
+        for p in &self.prefixes {
+            let (ds, dz) = by_prefix
+                .get(p)
+                .ok_or_else(|| anyhow!("backward produced no gradient for '{p}'"))?;
+            out.push((p.clone(), ds.clone(), dz.clone()));
+        }
+        Ok((loss, out))
+    }
+}
+
+impl Tuner for HostPeqaTuner {
+    fn step(&mut self, batch: &Batch) -> Result<f32> {
+        let (loss, grads) = self.forward_backward(batch)?;
+        if !loss.is_finite() {
+            bail!(
+                "non-finite loss {loss} at step {} — reduce the learning rate",
+                self.state.step + 1
+            );
+        }
+        self.state.step += 1;
+        let t = self.state.step;
+        let lr = self.cfg.lr_at(t) as f32;
+        let Self { model, opt, train_zeros, .. } = self;
+        let mut idx = 0usize;
+        for (prefix, ds, dz) in &grads {
+            let m = model.matrix_mut(prefix).expect("validated at construction");
+            opt.step_tensor(idx, t, lr, m.scales.data_mut(), ds.data());
+            idx += 1;
+            if *train_zeros {
+                opt.step_tensor(idx, t, lr, m.zeros.data_mut(), dz.data());
+                idx += 1;
+            }
+        }
+        self.state.record(loss, lr as f64);
+        Ok(loss)
+    }
+
+    fn step_count(&self) -> usize {
+        self.state.step
+    }
+
+    fn losses(&self) -> &[f32] {
+        &self.state.losses
+    }
+
+    fn smoothed_loss(&self) -> Option<f64> {
+        self.state.smoothed()
+    }
+
+    fn trainable_params(&self) -> usize {
+        self.opt.n_params()
+    }
+
+    fn trainable_state_bytes(&self) -> u64 {
+        // param + Adam m + v, all f32 — only s (and optionally z).
+        3 * 4 * self.opt.n_params() as u64
+    }
+
+    fn finish(self) -> Result<Checkpoint> {
+        Ok(self.model.to_checkpoint())
+    }
+}
+
+/// Full-sequence logits of ONE sequence under the training forward,
+/// `(tokens.len() · vocab)` row-major — the parity surface the tests
+/// compare against `serve::Engine::prefill` and the dense
+/// `reference_forward`: the model a tuner trains must be the model the
+/// engine serves.
+pub fn forward_logits(
+    model: &PackedModel,
+    geom: &ModelGeom,
+    threads: usize,
+    tokens: &[u32],
+) -> Result<Vec<f32>> {
+    if tokens.is_empty() {
+        bail!("forward_logits needs at least one token");
+    }
+    let toks: Vec<usize> = tokens
+        .iter()
+        .map(|&t| {
+            let t = t as usize;
+            if t >= geom.vocab {
+                bail!("token id {t} out of vocab {}", geom.vocab);
+            }
+            Ok(t)
+        })
+        .collect::<Result<_>>()?;
+    let tape = forward_tape(model, geom, threads, &toks, 1, toks.len(), false)?;
+    Ok(tape.logits)
+}
+
+/// Masked NLL of one batch under a packed model's forward — the host
+/// evaluation primitive shared with `eval::host_perplexity`. Returns
+/// `(Σ mask·nll, Σ mask)`.
+pub fn batch_nll(
+    model: &PackedModel,
+    geom: &ModelGeom,
+    threads: usize,
+    batch: &Batch,
+) -> Result<(f64, f64)> {
+    let (bsz, t_len, tokens) = check_batch(batch, geom.vocab)?;
+    // Forward-only: no activation tape retained (eval pays for logits,
+    // not for backward state).
+    let tape = forward_tape(model, geom, threads, &tokens, bsz, t_len, false)?;
+    let vocab = geom.vocab;
+    let mut sum = 0.0f64;
+    let mut count = 0.0f64;
+    for b in 0..bsz {
+        for t in 0..t_len - 1 {
+            let m = batch.mask[b * (t_len - 1) + t];
+            if m == 0.0 {
+                continue;
+            }
+            let row = &tape.logits[(b * t_len + t) * vocab..(b * t_len + t + 1) * vocab];
+            let target = tokens[b * t_len + t + 1];
+            sum += m as f64 * nll_row(row, target);
+            count += m as f64;
+        }
+    }
+    Ok((sum, count))
+}
+
+fn validate_geom(geom: &ModelGeom) -> Result<()> {
+    if geom.vocab == 0 || geom.d_model == 0 || geom.n_layers == 0 || geom.d_ff == 0 {
+        bail!("degenerate model geometry {geom:?}");
+    }
+    if geom.n_heads == 0 || geom.d_model % geom.n_heads != 0 {
+        bail!("n_heads {} must divide d_model {}", geom.n_heads, geom.d_model);
+    }
+    if geom.head_dim() % 2 != 0 {
+        bail!("rotary positions need an even head_dim, got {}", geom.head_dim());
+    }
+    Ok(())
+}
+
+/// Validate batch shapes and convert tokens to indices.
+fn check_batch(batch: &Batch, vocab: usize) -> Result<(usize, usize, Vec<usize>)> {
+    let (bsz, t_len) = (batch.batch, batch.seq);
+    if t_len < 2 {
+        bail!("training needs seq >= 2, got {t_len}");
+    }
+    if batch.tokens.len() != bsz * t_len {
+        bail!("batch tokens {} != {}x{}", batch.tokens.len(), bsz, t_len);
+    }
+    if batch.mask.len() != bsz * (t_len - 1) {
+        bail!("batch mask {} != {}x{}", batch.mask.len(), bsz, t_len - 1);
+    }
+    let mut tokens = Vec::with_capacity(bsz * t_len);
+    for &t in &batch.tokens {
+        if t < 0 || t as usize >= vocab {
+            bail!("token id {t} out of vocab {vocab}");
+        }
+        tokens.push(t as usize);
+    }
+    Ok((bsz, t_len, tokens))
+}
+
+/// Saved forward activations of one batch (all row-major over the
+/// `bsz·t_len` concatenated rows, batch-major).
+struct Tape {
+    layers: Vec<LayerTape>,
+    /// Output of the last layer (input to the final norm).
+    x_final: Vec<f32>,
+    inv_final: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+struct LayerTape {
+    /// Layer input (residual stream).
+    x_in: Vec<f32>,
+    /// Post-ln1 rows — input to the q/k/v projections.
+    h1: Vec<f32>,
+    inv1: Vec<f32>,
+    /// Post-rope q/k and raw v.
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Causal softmax probabilities, `(bsz, heads, T, T)` (zero above
+    /// the diagonal).
+    probs: Vec<f32>,
+    /// Attention context rows — input to the o projection.
+    ctx: Vec<f32>,
+    /// Residual stream after attention — input to ln2.
+    x_mid: Vec<f32>,
+    h2: Vec<f32>,
+    inv2: Vec<f32>,
+    /// Pre-activation gate/up and act = silu(gate)·up — input to down.
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    act: Vec<f32>,
+}
+
+/// Fused packed projection over `m` rows.
+fn proj(
+    model: &PackedModel,
+    threads: usize,
+    prefix: &str,
+    x: &[f32],
+    m: usize,
+) -> Result<Vec<f32>> {
+    let pm = matrix(model, prefix)?;
+    let mut out = vec![0.0f32; m * pm.rows];
+    pm.matmul_t_rows(x, m, threads, &mut out)?;
+    Ok(out)
+}
+
+fn matrix<'a>(model: &'a PackedModel, prefix: &str) -> Result<&'a PackedMatrix> {
+    model.matrix(prefix).ok_or_else(|| anyhow!("no packed projection '{prefix}'"))
+}
+
+fn fp<'a>(model: &'a PackedModel, name: &str) -> Result<&'a Tensor> {
+    model.fp_tensor(name).ok_or_else(|| anyhow!("packed model missing fp tensor '{name}'"))
+}
+
+/// RMSNorm over `m` rows, returning (normed, per-row inverse factor).
+fn rms_norm(x: &[f32], g: &[f32], m: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut out = vec![0.0f32; m * d];
+    let mut invs = vec![0.0f32; m];
+    for bi in 0..m {
+        let xr = &x[bi * d..(bi + 1) * d];
+        let mut ss = 0.0f32;
+        for &v in xr {
+            ss += v * v;
+        }
+        let inv = 1.0 / (ss / d as f32 + RMS_EPS).sqrt();
+        invs[bi] = inv;
+        let orow = &mut out[bi * d..(bi + 1) * d];
+        for j in 0..d {
+            orow[j] = g[j] * xr[j] * inv;
+        }
+    }
+    (out, invs)
+}
+
+/// RMSNorm backward: dx_j = inv·g_j·dy_j − x_j·inv³/d · Σ_k dy_k·g_k·x_k.
+fn rms_backward(dy: &[f32], x: &[f32], g: &[f32], invs: &[f32], m: usize, d: usize) -> Vec<f32> {
+    let mut dx = vec![0.0f32; m * d];
+    for bi in 0..m {
+        let xr = &x[bi * d..(bi + 1) * d];
+        let dyr = &dy[bi * d..(bi + 1) * d];
+        let inv = invs[bi];
+        let mut s = 0.0f32;
+        for j in 0..d {
+            s += dyr[j] * g[j] * xr[j];
+        }
+        let c = inv * inv * inv * s / d as f32;
+        let dxr = &mut dx[bi * d..(bi + 1) * d];
+        for j in 0..d {
+            dxr[j] = inv * g[j] * dyr[j] - xr[j] * c;
+        }
+    }
+    dx
+}
+
+/// Rotate rows in place at per-row position `row % t_len` (training
+/// sequences all start at absolute position 0; matches
+/// `serve::engine::rope_row_at`).
+fn rope_rows(freqs: &[f32], hh: usize, hd: usize, rows: &mut [f32], t_len: usize, d: usize) {
+    let half = hd / 2;
+    for (r, row) in rows.chunks_mut(d).enumerate() {
+        let p = (r % t_len) as f32;
+        for h in 0..hh {
+            let s = &mut row[h * hd..(h + 1) * hd];
+            for i in 0..half {
+                let (sin, cos) = (p * freqs[i]).sin_cos();
+                let (x1, x2) = (s[i], s[i + half]);
+                s[i] = x1 * cos - x2 * sin;
+                s[i + half] = x1 * sin + x2 * cos;
+            }
+        }
+    }
+}
+
+/// Backward of [`rope_rows`]: the rotation is orthogonal, so the
+/// gradient rotates by −θ (transpose of the rotation).
+fn rope_backward_rows(
+    freqs: &[f32],
+    hh: usize,
+    hd: usize,
+    rows: &mut [f32],
+    t_len: usize,
+    d: usize,
+) {
+    let half = hd / 2;
+    for (r, row) in rows.chunks_mut(d).enumerate() {
+        let p = (r % t_len) as f32;
+        for h in 0..hh {
+            let s = &mut row[h * hd..(h + 1) * hd];
+            for i in 0..half {
+                let (sin, cos) = (p * freqs[i]).sin_cos();
+                let (g1, g2) = (s[i], s[i + half]);
+                s[i] = g1 * cos + g2 * sin;
+                s[i + half] = -g1 * sin + g2 * cos;
+            }
+        }
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    x * sigmoid(x)
+}
+
+/// d silu(x)/dx = σ(x)·(1 + x·(1 − σ(x))).
+#[inline]
+fn silu_grad(x: f32) -> f32 {
+    let s = sigmoid(x);
+    s * (1.0 + x * (1.0 - s))
+}
+
+/// Dense y (m, out) = X · Wᵀ with W row-major (out, in) — LM-head
+/// forward, fixed-order accumulation.
+fn dense_rows(w: &Tensor, x: &[f32], m: usize) -> Vec<f32> {
+    let (o, i) = w.dims2().expect("dense projection is 2-D");
+    let wd = w.data();
+    let mut y = vec![0.0f32; m * o];
+    for bi in 0..m {
+        let xr = &x[bi * i..(bi + 1) * i];
+        let yr = &mut y[bi * o..(bi + 1) * o];
+        for (r, yv) in yr.iter_mut().enumerate() {
+            let wr = &wd[r * i..(r + 1) * i];
+            let mut acc = 0.0f32;
+            for j in 0..i {
+                acc += xr[j] * wr[j];
+            }
+            *yv = acc;
+        }
+    }
+    y
+}
+
+/// Full-sequence training forward. With `keep_tape` the per-layer
+/// activations are saved for [`backward`]; without it (loss/ppl
+/// evaluation, [`forward_logits`]) they are dropped as each layer
+/// completes and `Tape::layers` comes back empty.
+fn forward_tape(
+    model: &PackedModel,
+    geom: &ModelGeom,
+    threads: usize,
+    tokens: &[usize],
+    bsz: usize,
+    t_len: usize,
+    keep_tape: bool,
+) -> Result<Tape> {
+    let d = geom.d_model;
+    let (hh, hd) = (geom.n_heads, geom.head_dim());
+    let m = bsz * t_len;
+    let freqs = rope_freqs(hd);
+    let embed = fp(model, "embed")?;
+    let ed = embed.data();
+    let mut x = vec![0.0f32; m * d];
+    for (r, &tok) in tokens.iter().enumerate() {
+        x[r * d..(r + 1) * d].copy_from_slice(&ed[tok * d..(tok + 1) * d]);
+    }
+    let inv_sqrt = 1.0 / (hd as f32).sqrt();
+    let mut layers = Vec::with_capacity(geom.n_layers);
+    for layer in 0..geom.n_layers {
+        let lp = format!("layers.{layer}");
+        let x_in = if keep_tape { x.clone() } else { Vec::new() };
+        let g1 = fp(model, &format!("{lp}.ln1.g"))?.data();
+        let (h1, inv1) = rms_norm(&x, g1, m, d);
+        let mut q = proj(model, threads, &format!("{lp}.attn.q"), &h1, m)?;
+        let mut k = proj(model, threads, &format!("{lp}.attn.k"), &h1, m)?;
+        let v = proj(model, threads, &format!("{lp}.attn.v"), &h1, m)?;
+        rope_rows(&freqs, hh, hd, &mut q, t_len, d);
+        rope_rows(&freqs, hh, hd, &mut k, t_len, d);
+        // Causal attention. The (bsz, heads, T, T) probability tensor is
+        // backward state: without the tape only one T-length score row is
+        // ever live, so forward-only mode (loss/ppl eval) reuses a single
+        // row scratch and stays linear in T.
+        let mut probs =
+            if keep_tape { vec![0.0f32; bsz * hh * t_len * t_len] } else { Vec::new() };
+        let mut prow_scratch = vec![0.0f32; t_len];
+        let mut ctx = vec![0.0f32; m * d];
+        for b in 0..bsz {
+            for h in 0..hh {
+                for t in 0..t_len {
+                    let qr = &q[(b * t_len + t) * d + h * hd..(b * t_len + t) * d + (h + 1) * hd];
+                    let prow: &mut [f32] = if keep_tape {
+                        &mut probs[((b * hh + h) * t_len + t) * t_len
+                            ..((b * hh + h) * t_len + t + 1) * t_len]
+                    } else {
+                        // Stale beyond ..=t is never read: every j <= t is
+                        // written below before any read.
+                        &mut prow_scratch
+                    };
+                    let mut mx = f32::NEG_INFINITY;
+                    for j in 0..=t {
+                        let kr = &k
+                            [(b * t_len + j) * d + h * hd..(b * t_len + j) * d + (h + 1) * hd];
+                        let mut dot = 0.0f32;
+                        for u in 0..hd {
+                            dot += qr[u] * kr[u];
+                        }
+                        let sc = dot * inv_sqrt;
+                        prow[j] = sc;
+                        if sc > mx {
+                            mx = sc;
+                        }
+                    }
+                    let mut den = 0.0f32;
+                    for p in prow[..=t].iter_mut() {
+                        *p = (*p - mx).exp();
+                        den += *p;
+                    }
+                    let cxr = &mut ctx
+                        [(b * t_len + t) * d + h * hd..(b * t_len + t) * d + (h + 1) * hd];
+                    for j in 0..=t {
+                        prow[j] /= den;
+                        let w = prow[j];
+                        let vr = &v
+                            [(b * t_len + j) * d + h * hd..(b * t_len + j) * d + (h + 1) * hd];
+                        for u in 0..hd {
+                            cxr[u] += w * vr[u];
+                        }
+                    }
+                }
+            }
+        }
+        let o = proj(model, threads, &format!("{lp}.attn.o"), &ctx, m)?;
+        for (xv, ov) in x.iter_mut().zip(&o) {
+            *xv += ov;
+        }
+        let x_mid = if keep_tape { x.clone() } else { Vec::new() };
+        let g2 = fp(model, &format!("{lp}.ln2.g"))?.data();
+        let (h2, inv2) = rms_norm(&x, g2, m, d);
+        let gate = proj(model, threads, &format!("{lp}.mlp.gate"), &h2, m)?;
+        let up = proj(model, threads, &format!("{lp}.mlp.up"), &h2, m)?;
+        let mut act = vec![0.0f32; gate.len()];
+        for j in 0..gate.len() {
+            act[j] = silu(gate[j]) * up[j];
+        }
+        let down = proj(model, threads, &format!("{lp}.mlp.down"), &act, m)?;
+        for (xv, dv) in x.iter_mut().zip(&down) {
+            *xv += dv;
+        }
+        if keep_tape {
+            layers.push(LayerTape {
+                x_in,
+                h1,
+                inv1,
+                q,
+                k,
+                v,
+                probs,
+                ctx,
+                x_mid,
+                h2,
+                inv2,
+                gate,
+                up,
+                act,
+            });
+        }
+    }
+    let x_final = x;
+    let gf = fp(model, "final_norm.g")?.data();
+    let (xn, inv_final) = rms_norm(&x_final, gf, m, d);
+    let head = match model.fp_tensor("lm_head") {
+        Some(h) => h,
+        None => embed, // tied head
+    };
+    let logits = dense_rows(head, &xn, m);
+    Ok(Tape { layers, x_final, inv_final, logits })
+}
+
+/// −log softmax(row)[target], numerically stable.
+fn nll_row(row: &[f32], target: usize) -> f64 {
+    let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut z = 0.0f64;
+    for &v in row {
+        z += ((v - mx) as f64).exp();
+    }
+    z.ln() - (row[target] - mx) as f64
+}
+
+/// Masked mean cross-entropy and its gradient w.r.t. the logits:
+/// dlogits[b,t] = mask[b,t]/Σmask · (softmax(row) − onehot(target)).
+fn loss_and_dlogits(
+    logits: &[f32],
+    tokens: &[usize],
+    mask: &[f32],
+    bsz: usize,
+    t_len: usize,
+    vocab: usize,
+) -> (f32, Vec<f32>) {
+    let denom: f32 = mask.iter().sum();
+    let mut dlogits = vec![0.0f32; bsz * t_len * vocab];
+    let mut loss = 0.0f64;
+    for b in 0..bsz {
+        for t in 0..t_len - 1 {
+            let w = mask[b * (t_len - 1) + t];
+            if w == 0.0 {
+                continue;
+            }
+            let target = tokens[b * t_len + t + 1];
+            let row = &logits[(b * t_len + t) * vocab..(b * t_len + t + 1) * vocab];
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            // One exp per logit: stash the numerators in drow while
+            // accumulating the denominator, then scale in place.
+            let drow =
+                &mut dlogits[(b * t_len + t) * vocab..(b * t_len + t + 1) * vocab];
+            let mut z = 0.0f32;
+            for (dv, &v) in drow.iter_mut().zip(row) {
+                let e = (v - mx).exp();
+                *dv = e;
+                z += e;
+            }
+            loss += (w as f64) * ((z as f64).ln() - (row[target] - mx) as f64);
+            let scale = w / denom;
+            let inv = scale / z;
+            for dv in drow.iter_mut() {
+                *dv *= inv;
+            }
+            drow[target] -= scale;
+        }
+    }
+    ((loss / denom as f64) as f32, dlogits)
+}
+
+/// Full reverse-mode backward: activation gradients flow through every
+/// layer; parameter gradients are collected only for the scale/zero
+/// tensors of each packed projection.
+fn backward(
+    model: &PackedModel,
+    geom: &ModelGeom,
+    threads: usize,
+    tape: &Tape,
+    dlogits: &[f32],
+    bsz: usize,
+    t_len: usize,
+) -> Result<HashMap<String, (Tensor, Tensor)>> {
+    let d = geom.d_model;
+    let (hh, hd) = (geom.n_heads, geom.head_dim());
+    let m = bsz * t_len;
+    let freqs = rope_freqs(hd);
+    let inv_sqrt = 1.0 / (hd as f32).sqrt();
+    let mut grads: HashMap<String, (Tensor, Tensor)> = HashMap::new();
+
+    // LM head backward: dxn = dlogits · head (head itself is frozen).
+    let head = match model.fp_tensor("lm_head") {
+        Some(h) => h,
+        None => fp(model, "embed")?,
+    };
+    let dxn = Tensor::new(&[m, geom.vocab], dlogits.to_vec())
+        .matmul(head)?
+        .into_data();
+    let gf = fp(model, "final_norm.g")?.data();
+    let mut dx = rms_backward(&dxn, &tape.x_final, gf, &tape.inv_final, m, d);
+
+    // A projection's backward: dX into `dx_out` (overwritten), (ds, dz)
+    // recorded under the prefix.
+    let mut proj_back = |prefix: String,
+                         x_in: &[f32],
+                         dy: &[f32],
+                         dx_out: &mut Vec<f32>|
+     -> Result<()> {
+        let pm = matrix(model, &prefix)?;
+        dx_out.resize(m * pm.cols, 0.0);
+        pm.grad_input(dy, m, threads, dx_out)?;
+        let (ds, dz) = pm.grad_scales_zeros(x_in, dy, m, threads)?;
+        grads.insert(prefix, (ds, dz));
+        Ok(())
+    };
+
+    for layer in (0..geom.n_layers).rev() {
+        let lp = format!("layers.{layer}");
+        let tp = &tape.layers[layer];
+
+        // x3 = x_mid + down(act): dx currently holds d(x3).
+        let mut da = Vec::new();
+        proj_back(format!("{lp}.mlp.down"), &tp.act, &dx, &mut da)?;
+        // act = silu(gate) ⊙ up.
+        let mf = m * geom.d_ff;
+        let mut dgate = vec![0.0f32; mf];
+        let mut dup = vec![0.0f32; mf];
+        for j in 0..mf {
+            dgate[j] = da[j] * tp.up[j] * silu_grad(tp.gate[j]);
+            dup[j] = da[j] * silu(tp.gate[j]);
+        }
+        let mut dh2 = Vec::new();
+        proj_back(format!("{lp}.mlp.gate"), &tp.h2, &dgate, &mut dh2)?;
+        let mut dh2_up = Vec::new();
+        proj_back(format!("{lp}.mlp.up"), &tp.h2, &dup, &mut dh2_up)?;
+        for (a, b) in dh2.iter_mut().zip(&dh2_up) {
+            *a += b;
+        }
+        // x_mid feeds both the residual and ln2.
+        let g2 = fp(model, &format!("{lp}.ln2.g"))?.data();
+        let mut dx2 = rms_backward(&dh2, &tp.x_mid, g2, &tp.inv2, m, d);
+        for (a, b) in dx2.iter_mut().zip(&dx) {
+            *a += b;
+        }
+
+        // x_mid = x_in + o(ctx): d(o out) = dx2.
+        let mut dctx = Vec::new();
+        proj_back(format!("{lp}.attn.o"), &tp.ctx, &dx2, &mut dctx)?;
+
+        // Attention backward (per batch row and head, fixed order).
+        let mut dq = vec![0.0f32; m * d];
+        let mut dk = vec![0.0f32; m * d];
+        let mut dv = vec![0.0f32; m * d];
+        let mut dp = vec![0.0f32; t_len];
+        for b in 0..bsz {
+            for h in 0..hh {
+                for t in 0..t_len {
+                    let prow = &tp.probs
+                        [((b * hh + h) * t_len + t) * t_len..((b * hh + h) * t_len + t + 1) * t_len];
+                    let dcx = &dctx
+                        [(b * t_len + t) * d + h * hd..(b * t_len + t) * d + (h + 1) * hd];
+                    // dP and dV.
+                    let mut row_dot = 0.0f32;
+                    for j in 0..=t {
+                        let vr = &tp.v
+                            [(b * t_len + j) * d + h * hd..(b * t_len + j) * d + (h + 1) * hd];
+                        let mut acc = 0.0f32;
+                        for u in 0..hd {
+                            acc += dcx[u] * vr[u];
+                        }
+                        dp[j] = acc;
+                        row_dot += acc * prow[j];
+                        let dvr = &mut dv
+                            [(b * t_len + j) * d + h * hd..(b * t_len + j) * d + (h + 1) * hd];
+                        for u in 0..hd {
+                            dvr[u] += prow[j] * dcx[u];
+                        }
+                    }
+                    // Softmax backward → dS, then dQ / dK.
+                    let qr = &tp.q
+                        [(b * t_len + t) * d + h * hd..(b * t_len + t) * d + (h + 1) * hd];
+                    let dqr_base = (b * t_len + t) * d + h * hd;
+                    for j in 0..=t {
+                        let dsc = prow[j] * (dp[j] - row_dot) * inv_sqrt;
+                        if dsc == 0.0 {
+                            continue;
+                        }
+                        let kr = &tp.k
+                            [(b * t_len + j) * d + h * hd..(b * t_len + j) * d + (h + 1) * hd];
+                        for u in 0..hd {
+                            dq[dqr_base + u] += dsc * kr[u];
+                        }
+                        let dkr = &mut dk
+                            [(b * t_len + j) * d + h * hd..(b * t_len + j) * d + (h + 1) * hd];
+                        for u in 0..hd {
+                            dkr[u] += dsc * qr[u];
+                        }
+                    }
+                }
+            }
+        }
+        // Undo the rotation on the q/k gradients, then project back.
+        rope_backward_rows(&freqs, hh, hd, &mut dq, t_len, d);
+        rope_backward_rows(&freqs, hh, hd, &mut dk, t_len, d);
+        let mut dh1 = Vec::new();
+        proj_back(format!("{lp}.attn.q"), &tp.h1, &dq, &mut dh1)?;
+        let mut dh1_k = Vec::new();
+        proj_back(format!("{lp}.attn.k"), &tp.h1, &dk, &mut dh1_k)?;
+        let mut dh1_v = Vec::new();
+        proj_back(format!("{lp}.attn.v"), &tp.h1, &dv, &mut dh1_v)?;
+        for (a, (b_, c)) in dh1.iter_mut().zip(dh1_k.iter().zip(&dh1_v)) {
+            *a += b_ + c;
+        }
+        let g1 = fp(model, &format!("{lp}.ln1.g"))?.data();
+        let mut dx1 = rms_backward(&dh1, &tp.x_in, g1, &tp.inv1, m, d);
+        for (a, b) in dx1.iter_mut().zip(&dx2) {
+            *a += b;
+        }
+        dx = dx1;
+    }
+    Ok(grads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve;
+
+    fn tiny_batch(bsz: usize, t_len: usize, vocab: u32, seed: u64) -> Batch {
+        let mut rng = crate::util::Pcg32::new(seed);
+        Batch {
+            tokens: (0..bsz * t_len).map(|_| rng.below(vocab) as i32).collect(),
+            mask: vec![1.0; bsz * (t_len - 1)],
+            batch: bsz,
+            seq: t_len,
+        }
+    }
+
+    fn tiny_tuner(seed: u64, train_zeros: bool, threads: usize) -> HostPeqaTuner {
+        let geom = ModelGeom { vocab: 64, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32 };
+        let (pm, _) = serve::synth_packed(&geom, 4, Some(8), seed).unwrap();
+        let cfg = TrainConfig { steps: 8, lr: 2e-3, warmup_steps: 1, log_every: 0, ..Default::default() };
+        HostPeqaTuner::from_packed(pm, geom, cfg, train_zeros, threads).unwrap()
+    }
+
+    #[test]
+    fn forward_loss_is_finite_and_near_uniform_at_init() {
+        let tuner = tiny_tuner(3, false, 2);
+        let batch = tiny_batch(2, 8, 64, 5);
+        let loss = tuner.loss(&batch).unwrap();
+        // A random quantized model is near-uniform over 64 tokens.
+        assert!(loss.is_finite());
+        assert!((loss - (64f32).ln()).abs() < 2.0, "loss {loss}");
+    }
+
+    #[test]
+    fn step_reduces_state_and_counts_only_scales() {
+        let mut tuner = tiny_tuner(3, false, 2);
+        // 7 projections × 2 layers, per-group scales only.
+        let expect: usize = (0..2)
+            .flat_map(|_| [16 * 2, 16 * 2, 16 * 2, 16 * 2, 32 * 2, 32 * 2, 16 * 4])
+            .sum();
+        assert_eq!(tuner.trainable_params(), expect);
+        assert_eq!(tuner.trainable_state_bytes(), 3 * 4 * expect as u64);
+        let with_z = tiny_tuner(3, true, 2);
+        assert_eq!(with_z.trainable_params(), 2 * expect);
+        let batch = tiny_batch(2, 8, 64, 5);
+        let l0 = tuner.step(&batch).unwrap();
+        assert!(l0.is_finite());
+        assert_eq!(tuner.step_count(), 1);
+        assert_eq!(tuner.losses().len(), 1);
+        assert!(tuner.smoothed_loss().is_some());
+    }
+
+    #[test]
+    fn malformed_batches_are_rejected() {
+        let tuner = tiny_tuner(9, false, 1);
+        // Out-of-vocab token.
+        let mut b = tiny_batch(1, 4, 64, 1);
+        b.tokens[0] = 64;
+        assert!(tuner.loss(&b).is_err());
+        // seq too short.
+        let b = Batch { tokens: vec![1], mask: vec![], batch: 1, seq: 1 };
+        assert!(tuner.loss(&b).is_err());
+        // All-zero mask.
+        let mut b = tiny_batch(1, 4, 64, 1);
+        b.mask.iter_mut().for_each(|m| *m = 0.0);
+        assert!(tuner.forward_backward(&b).is_err());
+    }
+
+    #[test]
+    fn unquantized_projection_is_rejected_at_construction() {
+        let geom = ModelGeom { vocab: 32, d_model: 8, n_layers: 1, n_heads: 2, d_ff: 16 };
+        let fp_ck = serve::synth_fp_base(&geom, 1);
+        // A dense (never-quantized) model has no packed projections.
+        let pm = PackedModel::from_checkpoint(&fp_ck, 4).unwrap();
+        let err = HostPeqaTuner::from_packed(
+            pm,
+            geom,
+            TrainConfig::default(),
+            false,
+            1,
+        );
+        assert!(err.is_err());
+    }
+}

@@ -1,156 +1,114 @@
-//! Training orchestrator: drives a `*_train_*` artifact step by step.
+//! Fine-tuning backends behind one backend-agnostic surface.
 //!
-//! The division of labor (DESIGN.md): the AOT'd XLA graph owns forward,
-//! backward and AdamW; rust owns the data pipeline, the LR schedule, the
-//! step loop, metrics and checkpointing. Frozen parameters are uploaded
-//! to the device once and stay resident across all steps (`execute_b`);
-//! only the trainable/optimizer tensors round-trip per step, which for
-//! PEQA means kilobytes — the paper's training-memory story, visible in
-//! the process RSS (appendix L bench).
+//! The paper's training story is that PEQA fine-tunes *only the
+//! quantization scales* (and optionally zero-points) of a frozen integer
+//! model, so the trainable + optimizer state is kilobytes while the
+//! codes never move. This module makes that story backend-agnostic:
+//!
+//! * [`Tuner`] — the training API every backend implements: one
+//!   optimizer [`Tuner::step`] per batch, loss bookkeeping, the
+//!   trainable/optimizer byte accounting of the appendix-L memory
+//!   tables, and [`Tuner::finish`] into a method-layout
+//!   [`Checkpoint`](crate::model::Checkpoint).
+//! * [`host::HostPeqaTuner`] — the **host PEQA backend** (default
+//!   build): forward through the fused packed kernels
+//!   (`quant::kernels::PackedMatrix`), full reverse-mode backward on the
+//!   host, gradients taken *only* w.r.t. the per-(row, group) scale and
+//!   zero tensors via the straight-through estimator (codes frozen), and
+//!   a shared-[`optim::Adam`] update. Bit-identical at any
+//!   `PEQA_THREADS` value.
+//! * [`xla::Trainer`] — the original artifact-driven XLA backend
+//!   (`--features xla`): the AOT'd graph owns forward/backward/AdamW,
+//!   rust owns data, schedule and the step loop.
+//!
+//! Shared plumbing lives here and in [`optim`]: the Adam optimizer, the
+//! LR schedule (in [`TrainConfig`](crate::config::TrainConfig)) and the
+//! per-step loss/EMA bookkeeping ([`StepState`]), so the two backends
+//! report identically shaped training runs.
 
-use anyhow::{bail, Result};
+pub mod host;
+pub mod optim;
+#[cfg(feature = "xla")]
+pub mod xla;
 
-use crate::config::TrainConfig;
+pub use host::HostPeqaTuner;
+pub use optim::Adam;
+#[cfg(feature = "xla")]
+pub use xla::Trainer;
+
+use anyhow::Result;
+
 use crate::data::Batch;
 use crate::model::Checkpoint;
-use crate::runtime::{literal_to_f32, literal_to_tensor, Artifact, Runtime};
-use crate::tensor::Tensor;
 use crate::util::stats::Ema;
 
-pub struct Trainer<'rt> {
-    rt: &'rt Runtime,
-    art: std::rc::Rc<Artifact>,
-    pub cfg: TrainConfig,
-    trainable: Vec<Tensor>,
-    m: Vec<Tensor>,
-    v: Vec<Tensor>,
-    frozen_host: Vec<Tensor>,
-    frozen_dev: Vec<xla::PjRtBuffer>,
-    step: usize,
-    pub losses: Vec<f32>,
-    ema: Ema,
-    /// Checkpoint tensors the artifact doesn't consume (returned intact).
-    passthrough: Checkpoint,
+/// Backend-agnostic fine-tuning surface (see module docs). Backends are
+/// used by static dispatch; `finish`/`run` consume or borrow `self`
+/// directly rather than through trait objects.
+pub trait Tuner {
+    /// One optimizer step on `batch`; returns the batch loss.
+    fn step(&mut self, batch: &Batch) -> Result<f32>;
+
+    /// Steps taken so far.
+    fn step_count(&self) -> usize;
+
+    /// Every per-step loss, in order.
+    fn losses(&self) -> &[f32];
+
+    /// EMA-smoothed loss (None before the first step).
+    fn smoothed_loss(&self) -> Option<f64>;
+
+    /// Number of trainable parameters (for PEQA: scale [+ zero] entries —
+    /// the Table 4 "# trainable params" column).
+    fn trainable_params(&self) -> usize;
+
+    /// Bytes of trainable + optimizer state this backend carries per step
+    /// (param + Adam m + v) — the appendix-L "training memory" number;
+    /// for PEQA this is kilobytes against megabytes of packed codes.
+    fn trainable_state_bytes(&self) -> u64;
+
+    /// Final method-layout checkpoint: trained + frozen tensors.
+    fn finish(self) -> Result<Checkpoint>
+    where
+        Self: Sized;
+
+    /// Drive [`Tuner::step`] until `steps` total steps have run.
+    fn run<F: FnMut() -> Batch>(&mut self, steps: usize, mut next_batch: F) -> Result<()>
+    where
+        Self: Sized,
+    {
+        while self.step_count() < steps {
+            let b = next_batch();
+            self.step(&b)?;
+        }
+        Ok(())
+    }
 }
 
-impl<'rt> Trainer<'rt> {
-    /// `ck` must contain the artifact's frozen tensors; missing trainable
-    /// tensors are created from their init spec (fresh LoRA adapters).
-    pub fn new(
-        rt: &'rt Runtime,
-        artifact_name: &str,
-        ck: &Checkpoint,
-        cfg: TrainConfig,
-    ) -> Result<Trainer<'rt>> {
-        let art = rt.load(artifact_name)?;
-        if art.meta.kind != "train" {
-            bail!("{artifact_name} is not a train artifact");
-        }
-        let tr_metas: Vec<_> = art.meta.params_trainable.iter().collect();
-        let fz_metas: Vec<_> = art.meta.params_frozen.iter().collect();
-        let trainable = ck.assemble(&tr_metas, cfg.seed)?;
-        let frozen_host = ck.assemble(&fz_metas, cfg.seed)?;
-        let m: Vec<Tensor> = trainable.iter().map(|t| Tensor::zeros(t.shape())).collect();
-        let v = m.clone();
-        let frozen_dev = frozen_host
-            .iter()
-            .map(|t| rt.tensor_to_device(t))
-            .collect::<Result<Vec<_>>>()?;
+/// Per-step bookkeeping shared by every backend: step counter, loss
+/// history, EMA smoothing and periodic logging.
+pub struct StepState {
+    pub step: usize,
+    pub losses: Vec<f32>,
+    ema: Ema,
+    log_every: usize,
+}
 
-        let known: std::collections::HashSet<&str> =
-            art.meta.layout().iter().map(|p| p.name.as_str()).collect();
-        let mut passthrough = Checkpoint::new();
-        for (name, t) in ck.iter() {
-            if !known.contains(name.as_str()) {
-                passthrough.insert(name.clone(), t.clone());
-            }
-        }
-
-        Ok(Trainer {
-            rt,
-            art,
-            cfg,
-            trainable,
-            m,
-            v,
-            frozen_host,
-            frozen_dev,
-            step: 0,
-            losses: Vec::new(),
-            ema: Ema::new(0.05),
-            passthrough,
-        })
+impl StepState {
+    pub fn new(log_every: usize) -> StepState {
+        StepState { step: 0, losses: Vec::new(), ema: Ema::new(0.05), log_every }
     }
 
-    pub fn artifact(&self) -> &Artifact {
-        &self.art
-    }
-
-    pub fn step_count(&self) -> usize {
-        self.step
-    }
-
-    pub fn smoothed_loss(&self) -> Option<f64> {
+    pub fn smoothed(&self) -> Option<f64> {
         self.ema.get()
     }
 
-    /// Bytes of trainable + optimizer state this trainer round-trips per
-    /// step — the appendix-L "training memory" number.
-    pub fn trainable_state_bytes(&self) -> u64 {
-        3 * self.trainable.iter().map(|t| 4 * t.len() as u64).sum::<u64>()
-    }
-
-    /// One optimizer step; returns the batch loss.
-    pub fn step(&mut self, batch: &Batch) -> Result<f32> {
-        let meta_inputs = &self.art.meta.inputs;
-        let tok_spec = &meta_inputs[0];
-        if batch.tokens.len() != tok_spec.numel() {
-            bail!(
-                "batch shape mismatch: {} tokens, artifact expects {:?}",
-                batch.tokens.len(),
-                tok_spec.shape
-            );
-        }
-        self.step += 1;
-        let lr = self.cfg.lr_at(self.step) as f32;
-
-        // Upload per-step inputs; frozen params are already resident.
-        let mut bufs: Vec<xla::PjRtBuffer> =
-            Vec::with_capacity(4 + 3 * self.trainable.len());
-        bufs.push(self.rt.to_device_i32(&batch.tokens, &tok_spec.shape)?);
-        bufs.push(self.rt.to_device_f32(&batch.mask, &meta_inputs[1].shape)?);
-        bufs.push(self.rt.scalar_to_device(lr)?);
-        bufs.push(self.rt.scalar_to_device(self.step as f32)?);
-        for t in self.trainable.iter().chain(self.m.iter()).chain(self.v.iter()) {
-            bufs.push(self.rt.tensor_to_device(t)?);
-        }
-
-        // Input order: tokens, mask, lr, step, trainable…, frozen…, m…, v…
-        let nt = self.trainable.len();
-        let mut inputs: Vec<&xla::PjRtBuffer> =
-            Vec::with_capacity(bufs.len() + self.frozen_dev.len());
-        inputs.extend(bufs[..4 + nt].iter());
-        inputs.extend(self.frozen_dev.iter());
-        inputs.extend(bufs[4 + nt..].iter());
-
-        let outs = self.art.run_b(&inputs)?;
-        let loss = literal_to_f32(&outs[0])?;
-        if !loss.is_finite() {
-            bail!(
-                "non-finite loss {loss} at step {} — reduce the learning rate",
-                self.step
-            );
-        }
-        let metas = &self.art.meta.params_trainable;
-        for (i, p) in metas.iter().enumerate() {
-            self.trainable[i] = literal_to_tensor(&outs[1 + i], &p.shape)?;
-            self.m[i] = literal_to_tensor(&outs[1 + nt + i], &p.shape)?;
-            self.v[i] = literal_to_tensor(&outs[1 + 2 * nt + i], &p.shape)?;
-        }
-
+    /// Record one finished step's loss (the caller has already advanced
+    /// `self.step`) and emit the periodic log line.
+    pub fn record(&mut self, loss: f32, lr: f64) {
         self.losses.push(loss);
         self.ema.push(loss as f64);
-        if self.cfg.log_every > 0 && self.step % self.cfg.log_every == 0 {
+        if self.log_every > 0 && self.step % self.log_every == 0 {
             crate::info!(
                 "step {:>5}  loss {:.4}  (ema {:.4})  lr {:.2e}",
                 self.step,
@@ -159,28 +117,23 @@ impl<'rt> Trainer<'rt> {
                 lr
             );
         }
-        Ok(loss)
     }
+}
 
-    /// Run `cfg.steps` steps pulling batches from `next_batch`.
-    pub fn run(&mut self, mut next_batch: impl FnMut() -> Batch) -> Result<()> {
-        for _ in self.step..self.cfg.steps {
-            let b = next_batch();
-            self.step(&b)?;
-        }
-        Ok(())
-    }
+#[cfg(test)]
+mod tests {
+    use super::*;
 
-    /// Final method-layout checkpoint: trained + frozen + passthrough.
-    pub fn finish(self) -> Result<Checkpoint> {
-        let meta = &self.art.meta;
-        let mut ck = self.passthrough.clone();
-        for (p, t) in meta.params_trainable.iter().zip(&self.trainable) {
-            ck.insert(p.name.clone(), t.clone());
+    #[test]
+    fn step_state_tracks_losses_and_ema() {
+        let mut st = StepState::new(0);
+        assert!(st.smoothed().is_none());
+        for (i, l) in [2.0f32, 1.5, 1.0].iter().enumerate() {
+            st.step = i + 1;
+            st.record(*l, 1e-3);
         }
-        for (p, t) in meta.params_frozen.iter().zip(&self.frozen_host) {
-            ck.insert(p.name.clone(), t.clone());
-        }
-        Ok(ck)
+        assert_eq!(st.losses, vec![2.0, 1.5, 1.0]);
+        let ema = st.smoothed().unwrap();
+        assert!(ema < 2.0 && ema > 1.0);
     }
 }

@@ -1,0 +1,104 @@
+//! Shared host optimizer: Adam with bias correction.
+//!
+//! The xla backend runs AdamW inside the AOT graph; the host backend
+//! runs this implementation. For PEQA the parameter set is the scale
+//! (and optionally zero-point) vectors only, so `m`/`v` together are a
+//! few kilobytes — the optimizer-memory story of the paper's Table 1,
+//! reported through [`Adam::state_bytes`]. No weight decay: decaying
+//! quantization scales toward zero would collapse the weight magnitudes
+//! they carry (the paper fine-tunes s₀+Δs without decay).
+//!
+//! The update is element-wise and sequential per tensor, so it is
+//! trivially bit-identical at any thread count.
+
+/// Adam state over a fixed list of flat parameter tensors.
+pub struct Adam {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    /// Fresh zeroed state for parameters of the given flat sizes.
+    pub fn new(sizes: &[usize]) -> Adam {
+        Adam {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: sizes.iter().map(|&n| vec![0.0; n]).collect(),
+            v: sizes.iter().map(|&n| vec![0.0; n]).collect(),
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.m.iter().map(Vec::len).sum()
+    }
+
+    /// Bytes of optimizer state (m + v, f32).
+    pub fn state_bytes(&self) -> u64 {
+        2 * 4 * self.n_params() as u64
+    }
+
+    /// One bias-corrected Adam step at (1-based) step `t`:
+    /// `p -= lr · m̂ / (√v̂ + ε)`. `params[i]` and `grads[i]` must match
+    /// the construction-time size of tensor `i`.
+    pub fn step(&mut self, t: usize, lr: f32, params: &mut [&mut [f32]], grads: &[&[f32]]) {
+        assert_eq!(params.len(), self.m.len(), "param/state arity");
+        assert_eq!(grads.len(), self.m.len(), "grad/state arity");
+        for (idx, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+            self.step_tensor(idx, t, lr, p, g);
+        }
+    }
+
+    /// [`Self::step`] for one tensor at state slot `idx` — lets a caller
+    /// whose parameters live inside other structures (the packed
+    /// matrices' scale/zero tensors) update them one mutable borrow at a
+    /// time. All tensors of a step must share the same `t`.
+    pub fn step_tensor(&mut self, idx: usize, t: usize, lr: f32, param: &mut [f32], grad: &[f32]) {
+        let (m, v) = (&mut self.m[idx], &mut self.v[idx]);
+        assert_eq!(param.len(), m.len(), "param size changed under the optimizer");
+        assert_eq!(grad.len(), m.len(), "grad size mismatch");
+        let bc1 = 1.0 - self.beta1.powi(t as i32);
+        let bc2 = 1.0 - self.beta2.powi(t as i32);
+        for j in 0..m.len() {
+            let gj = grad[j];
+            m[j] = self.beta1 * m[j] + (1.0 - self.beta1) * gj;
+            v[j] = self.beta2 * v[j] + (1.0 - self.beta2) * gj * gj;
+            let mh = m[j] / bc1;
+            let vh = v[j] / bc2;
+            param[j] -= lr * mh / (vh.sqrt() + self.eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_descends_a_quadratic() {
+        // min ½(p − 3)² from p = 0: gradient p − 3.
+        let mut p = vec![0.0f32];
+        let mut opt = Adam::new(&[1]);
+        for t in 1..=400 {
+            let g = vec![p[0] - 3.0];
+            opt.step(t, 0.05, &mut [p.as_mut_slice()], &[g.as_slice()]);
+        }
+        assert!((p[0] - 3.0).abs() < 0.05, "p = {}", p[0]);
+        assert_eq!(opt.state_bytes(), 8);
+        assert_eq!(opt.n_params(), 1);
+    }
+
+    #[test]
+    fn first_step_moves_by_about_lr() {
+        // Bias correction makes the first update ≈ lr · sign(g).
+        let mut p = vec![1.0f32, -2.0];
+        let mut opt = Adam::new(&[2]);
+        let g = vec![10.0f32, -0.01];
+        opt.step(1, 0.1, &mut [p.as_mut_slice()], &[g.as_slice()]);
+        assert!((p[0] - 0.9).abs() < 1e-3, "{}", p[0]);
+        assert!((p[1] + 1.9).abs() < 1e-3, "{}", p[1]);
+    }
+}

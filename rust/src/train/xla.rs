@@ -1,0 +1,178 @@
+//! XLA training backend: drives a `*_train_*` artifact step by step.
+//!
+//! The division of labor (DESIGN.md): the AOT'd XLA graph owns forward,
+//! backward and AdamW; rust owns the data pipeline, the LR schedule, the
+//! step loop, metrics and checkpointing. Frozen parameters are uploaded
+//! to the device once and stay resident across all steps (`execute_b`);
+//! only the trainable/optimizer tensors round-trip per step, which for
+//! PEQA means kilobytes — the paper's training-memory story, visible in
+//! the process RSS (appendix L bench).
+//!
+//! This backend sits behind the backend-agnostic [`Tuner`] trait; the
+//! host equivalent that needs no device runtime is
+//! [`super::host::HostPeqaTuner`].
+
+use anyhow::{bail, Result};
+
+use super::{StepState, Tuner};
+use crate::config::TrainConfig;
+use crate::data::Batch;
+use crate::model::Checkpoint;
+use crate::runtime::{literal_to_f32, literal_to_tensor, Artifact, Runtime};
+use crate::tensor::Tensor;
+
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    art: std::rc::Rc<Artifact>,
+    pub cfg: TrainConfig,
+    trainable: Vec<Tensor>,
+    m: Vec<Tensor>,
+    v: Vec<Tensor>,
+    frozen_host: Vec<Tensor>,
+    frozen_dev: Vec<xla::PjRtBuffer>,
+    state: StepState,
+    /// Checkpoint tensors the artifact doesn't consume (returned intact).
+    passthrough: Checkpoint,
+}
+
+impl<'rt> Trainer<'rt> {
+    /// `ck` must contain the artifact's frozen tensors; missing trainable
+    /// tensors are created from their init spec (fresh LoRA adapters).
+    pub fn new(
+        rt: &'rt Runtime,
+        artifact_name: &str,
+        ck: &Checkpoint,
+        cfg: TrainConfig,
+    ) -> Result<Trainer<'rt>> {
+        let art = rt.load(artifact_name)?;
+        if art.meta.kind != "train" {
+            bail!("{artifact_name} is not a train artifact");
+        }
+        let tr_metas: Vec<_> = art.meta.params_trainable.iter().collect();
+        let fz_metas: Vec<_> = art.meta.params_frozen.iter().collect();
+        let trainable = ck.assemble(&tr_metas, cfg.seed)?;
+        let frozen_host = ck.assemble(&fz_metas, cfg.seed)?;
+        let m: Vec<Tensor> = trainable.iter().map(|t| Tensor::zeros(t.shape())).collect();
+        let v = m.clone();
+        let frozen_dev = frozen_host
+            .iter()
+            .map(|t| rt.tensor_to_device(t))
+            .collect::<Result<Vec<_>>>()?;
+
+        let known: std::collections::HashSet<&str> =
+            art.meta.layout().iter().map(|p| p.name.as_str()).collect();
+        let mut passthrough = Checkpoint::new();
+        for (name, t) in ck.iter() {
+            if !known.contains(name.as_str()) {
+                passthrough.insert(name.clone(), t.clone());
+            }
+        }
+
+        let state = StepState::new(cfg.log_every);
+        Ok(Trainer {
+            rt,
+            art,
+            cfg,
+            trainable,
+            m,
+            v,
+            frozen_host,
+            frozen_dev,
+            state,
+            passthrough,
+        })
+    }
+
+    pub fn artifact(&self) -> &Artifact {
+        &self.art
+    }
+}
+
+impl Tuner for Trainer<'_> {
+    fn step_count(&self) -> usize {
+        self.state.step
+    }
+
+    fn losses(&self) -> &[f32] {
+        &self.state.losses
+    }
+
+    fn smoothed_loss(&self) -> Option<f64> {
+        self.state.smoothed()
+    }
+
+    fn trainable_params(&self) -> usize {
+        self.trainable.iter().map(|t| t.len()).sum()
+    }
+
+    /// Bytes of trainable + optimizer state this trainer round-trips per
+    /// step — the appendix-L "training memory" number.
+    fn trainable_state_bytes(&self) -> u64 {
+        3 * self.trainable.iter().map(|t| 4 * t.len() as u64).sum::<u64>()
+    }
+
+    /// One optimizer step; returns the batch loss.
+    fn step(&mut self, batch: &Batch) -> Result<f32> {
+        let meta_inputs = &self.art.meta.inputs;
+        let tok_spec = &meta_inputs[0];
+        if batch.tokens.len() != tok_spec.numel() {
+            bail!(
+                "batch shape mismatch: {} tokens, artifact expects {:?}",
+                batch.tokens.len(),
+                tok_spec.shape
+            );
+        }
+        self.state.step += 1;
+        let lr = self.cfg.lr_at(self.state.step) as f32;
+
+        // Upload per-step inputs; frozen params are already resident.
+        let mut bufs: Vec<xla::PjRtBuffer> =
+            Vec::with_capacity(4 + 3 * self.trainable.len());
+        bufs.push(self.rt.to_device_i32(&batch.tokens, &tok_spec.shape)?);
+        bufs.push(self.rt.to_device_f32(&batch.mask, &meta_inputs[1].shape)?);
+        bufs.push(self.rt.scalar_to_device(lr)?);
+        bufs.push(self.rt.scalar_to_device(self.state.step as f32)?);
+        for t in self.trainable.iter().chain(self.m.iter()).chain(self.v.iter()) {
+            bufs.push(self.rt.tensor_to_device(t)?);
+        }
+
+        // Input order: tokens, mask, lr, step, trainable…, frozen…, m…, v…
+        let nt = self.trainable.len();
+        let mut inputs: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(bufs.len() + self.frozen_dev.len());
+        inputs.extend(bufs[..4 + nt].iter());
+        inputs.extend(self.frozen_dev.iter());
+        inputs.extend(bufs[4 + nt..].iter());
+
+        let outs = self.art.run_b(&inputs)?;
+        let loss = literal_to_f32(&outs[0])?;
+        if !loss.is_finite() {
+            bail!(
+                "non-finite loss {loss} at step {} — reduce the learning rate",
+                self.state.step
+            );
+        }
+        let metas = &self.art.meta.params_trainable;
+        for (i, p) in metas.iter().enumerate() {
+            self.trainable[i] = literal_to_tensor(&outs[1 + i], &p.shape)?;
+            self.m[i] = literal_to_tensor(&outs[1 + nt + i], &p.shape)?;
+            self.v[i] = literal_to_tensor(&outs[1 + 2 * nt + i], &p.shape)?;
+        }
+
+        self.state.record(loss, lr as f64);
+        Ok(loss)
+    }
+
+    /// Final method-layout checkpoint: trained + frozen + passthrough.
+    fn finish(self) -> Result<Checkpoint> {
+        let meta = &self.art.meta;
+        let mut ck = self.passthrough.clone();
+        for (p, t) in meta.params_trainable.iter().zip(&self.trainable) {
+            ck.insert(p.name.clone(), t.clone());
+        }
+        for (p, t) in meta.params_frozen.iter().zip(&self.frozen_host) {
+            ck.insert(p.name.clone(), t.clone());
+        }
+        Ok(ck)
+    }
+}

@@ -15,7 +15,7 @@ use peqa::model::Checkpoint;
 use peqa::pipeline::{self, Ctx};
 use peqa::runtime::{literal_to_tensor, tensor_to_literal, Runtime};
 use peqa::tensor::Tensor;
-use peqa::train::Trainer;
+use peqa::train::{Trainer, Tuner};
 use peqa::util::Pcg32;
 
 fn ctx() -> Option<Ctx> {
@@ -101,8 +101,8 @@ fn train_step_decreases_loss_and_freezes_codes() {
     let stream: Vec<u32> = (0..6000u32).map(|i| (i * 17 + 3) % 500).collect();
     let (b, t) = (meta.inputs[0].shape[0], meta.inputs[0].shape[1]);
     let mut batcher = LmBatcher::new(stream, b, t, 2);
-    trainer.run(|| batcher.next_batch()).unwrap();
-    let losses = trainer.losses.clone();
+    trainer.run(8, || batcher.next_batch()).unwrap();
+    let losses = trainer.losses().to_vec();
     assert!(
         losses.last().unwrap() < losses.first().unwrap(),
         "{losses:?}"
@@ -235,7 +235,7 @@ fn coordinator_scale_swap_equals_fresh_model() {
             base,
             store,
             SwitchMode::ScaleSwap,
-            BatcherConfig { max_batch: 8 },
+            BatcherConfig { max_batch: 8, ..Default::default() },
         )
         .unwrap();
         coord.submit(task, vec![5, 6, 7, 8], 6, 0);
@@ -248,7 +248,7 @@ fn coordinator_scale_swap_equals_fresh_model() {
         qck.clone(),
         adapters,
         SwitchMode::ScaleSwap,
-        BatcherConfig { max_batch: 8 },
+        BatcherConfig { max_batch: 8, ..Default::default() },
     )
     .unwrap();
     coord.submit("a", vec![5, 6, 7, 8], 6, 0);
@@ -284,7 +284,7 @@ fn batcher_groups_by_task_and_preserves_all_requests() {
         qck,
         adapters,
         SwitchMode::FullReload,
-        BatcherConfig { max_batch: 4 },
+        BatcherConfig { max_batch: 4, ..Default::default() },
     )
     .unwrap();
     let mut rng = Pcg32::new(3);

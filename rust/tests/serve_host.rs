@@ -22,7 +22,7 @@ use std::collections::HashMap;
 
 use peqa::data::corpus;
 use peqa::serve::{
-    self, reference_forward, reference_forward_windowed, Engine, KvCache, ModelGeom, Sampling,
+    self, reference_forward, reference_forward_windowed, Engine, KvCache, ModelGeom,
     Scheduler, SchedulerConfig, Server,
 };
 use peqa::tokenizer::Tokenizer;
@@ -166,6 +166,42 @@ fn greedy_decode_is_thread_count_invariant() {
 }
 
 #[test]
+fn batched_attention_is_thread_count_invariant() {
+    // The attention pass shards batch rows (sequences) over workers;
+    // a ragged multi-sequence batch must produce bitwise-identical
+    // logits at 1, 2, 3 and 8 workers, through batched prefill AND
+    // batched decode steps (worker counts above the sequence count
+    // exercise the clamp; ragged lengths exercise uneven row chunks).
+    let prompts: Vec<Vec<u32>> =
+        vec![vec![1, 2, 3], vec![9, 8, 7, 6, 5], vec![100], vec![42, 250, 17, 3], vec![5, 6]];
+    let run = |threads: usize| -> (Vec<f32>, Vec<Vec<f32>>) {
+        let (mut eng, _) = engine(threads, 83);
+        let mut caches: Vec<KvCache> = (0..prompts.len()).map(|_| eng.new_cache(16)).collect();
+        let prompt_refs: Vec<&[u32]> = prompts.iter().map(|p| p.as_slice()).collect();
+        let mut cache_refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+        let mut logits = eng.prefill_batch(&prompt_refs, &mut cache_refs).unwrap();
+        let prefill = logits.clone();
+        let vocab = GEOM.vocab;
+        let mut steps = Vec::new();
+        for _ in 0..4 {
+            let next: Vec<u32> = (0..prompts.len())
+                .map(|i| serve::argmax(&logits[i * vocab..(i + 1) * vocab]))
+                .collect();
+            let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+            logits = eng.decode_batch(&next, &mut refs).unwrap();
+            steps.push(logits.clone());
+        }
+        (prefill, steps)
+    };
+    let base = run(1);
+    for threads in [2usize, 3, 8] {
+        let got = run(threads);
+        assert_eq!(base.0, got.0, "prefill logits diverge at {threads} workers");
+        assert_eq!(base.1, got.1, "decode logits diverge at {threads} workers");
+    }
+}
+
+#[test]
 fn greedy_decode_is_batch_size_invariant() {
     // The same mixed-task request set must generate bit-identical token
     // sequences whether the scheduler runs it at batch 1 or batch 4
@@ -180,10 +216,10 @@ fn greedy_decode_is_batch_size_invariant() {
             SchedulerConfig {
                 max_batch,
                 window: 64,
-                sampling: Sampling::Greedy,
-                seed: 0,
+                ..SchedulerConfig::default()
             },
-        );
+        )
+        .unwrap();
         for i in 0..9u32 {
             let task = ["a", "b", "c"][(i % 3) as usize];
             sched.submit(task, vec![1 + i, 40 + i, 7], 10, u32::MAX);
@@ -334,8 +370,9 @@ fn threaded_server_matches_direct_scheduler_under_concurrency() {
         Scheduler::new(
             eng,
             adapters,
-            SchedulerConfig { max_batch: 4, window: 64, sampling: Sampling::Greedy, seed: 0 },
+            SchedulerConfig { max_batch: 4, window: 64, ..SchedulerConfig::default() },
         )
+        .unwrap()
     };
     let req = |i: u32| -> (&'static str, Vec<u32>) {
         (["a", "b", "c"][(i % 3) as usize], vec![1 + i, 40 + i, 7])
@@ -402,8 +439,8 @@ fn tokenizer_roundtrips_demo_corpus_and_stop_token_truncates() {
     let (eng, base_q) = engine(2, 97);
     let adapters = serve::synth_adapters(&base_q, &["a"], 1);
     let prompt: Vec<u32> = vec![12, 34, 56];
-    let cfg = SchedulerConfig { max_batch: 4, window: 64, sampling: Sampling::Greedy, seed: 0 };
-    let mut free_run = Scheduler::new(eng, adapters, cfg);
+    let cfg = SchedulerConfig { max_batch: 4, window: 64, ..SchedulerConfig::default() };
+    let mut free_run = Scheduler::new(eng, adapters, cfg).unwrap();
     free_run.submit("a", prompt.clone(), 8, u32::MAX);
     let unstopped = free_run.run_until_idle().unwrap().remove(0).tokens;
     assert_eq!(unstopped.len(), 8);
@@ -420,7 +457,7 @@ fn tokenizer_roundtrips_demo_corpus_and_stop_token_truncates() {
     let stop = unstopped[pos];
     let (eng, base_q) = engine(2, 97);
     let adapters = serve::synth_adapters(&base_q, &["a"], 1);
-    let mut sched = Scheduler::new(eng, adapters, cfg);
+    let mut sched = Scheduler::new(eng, adapters, cfg).unwrap();
     let id_stopped = sched.submit("a", prompt.clone(), 8, stop);
     let id_free1 = sched.submit("a", prompt.clone(), 8, u32::MAX);
     let id_free2 = sched.submit("a", prompt.clone(), 8, u32::MAX);

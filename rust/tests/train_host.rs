@@ -1,0 +1,327 @@
+//! Host PEQA training end-to-end tests (default build — no artifacts,
+//! no xla):
+//!
+//! * gradient checks: the kernel-level scale/zero reductions match
+//!   central finite differences to ≤ 1e-3 relative error per bit-width
+//!   (2/3/4) for per-channel and g128 grouping (the loss is linear in
+//!   s/z with frozen codes, so fd is exact up to f32 rounding); the
+//!   full-model cross-entropy gradient matches a directional fd probe;
+//! * determinism: a training step is bit-identical across kernel worker
+//!   thread counts (the PEQA_THREADS axis, pinned explicitly);
+//! * the STE contract: packed codes, fp tensors and (without
+//!   --train-zeros) zero-points are bitwise frozen; only scales move;
+//!   the trainable count matches the analytic memmodel count;
+//! * the paper's loop closes: finetune a tiny synth model on one task,
+//!   register the extracted adapter (which passes strict coverage),
+//!   and the served greedy decode changes vs base while training loss
+//!   and held-out perplexity on the task distribution drop; serving
+//!   base-model + adapter is bitwise the tuned model.
+
+use peqa::config::TrainConfig;
+use peqa::data::{Batch, LmBatcher};
+use peqa::memmodel;
+use peqa::quant::{quantize_rtn, PackedMatrix};
+use peqa::serve::{self, Engine, ModelGeom, Scheduler, SchedulerConfig};
+use peqa::tensor::Tensor;
+use peqa::train::{HostPeqaTuner, Tuner};
+use peqa::util::Pcg32;
+
+fn full_batch(bsz: usize, t_len: usize, vocab: u32, seed: u64) -> Batch {
+    let mut rng = Pcg32::new(seed);
+    Batch {
+        tokens: (0..bsz * t_len).map(|_| rng.below(vocab) as i32).collect(),
+        mask: vec![1.0; bsz * (t_len - 1)],
+        batch: bsz,
+        seq: t_len,
+    }
+}
+
+#[test]
+fn kernel_scale_zero_grads_match_fd_per_width_and_grouping() {
+    // The acceptance gradcheck: per bit-width 2/3/4, per-channel and
+    // g128, analytic (ds, dz) within 1e-3 relative of central finite
+    // differences of L = Σ w ⊙ (X·Ŵᵀ). L is linear in s and z (codes
+    // frozen), so fd error is pure f32 rounding.
+    let cols = 256usize;
+    for bits in [2u8, 3, 4] {
+        for group in [None, Some(128)] {
+            let mut rng = Pcg32::new(100 + bits as u64);
+            let w = Tensor::normal(&[12, cols], 0.4, &mut rng);
+            let x = Tensor::normal(&[5, cols], 1.0, &mut rng);
+            let dy = Tensor::normal(&[5, 12], 1.0, &mut rng);
+            let q = quantize_rtn(&w, bits, group).unwrap();
+            let pm = PackedMatrix::from_quantized(&q);
+            let loss = |m: &PackedMatrix| -> f64 {
+                let y = m.matmul_t(&x).unwrap();
+                y.data().iter().zip(dy.data()).map(|(&a, &b)| (a * b) as f64).sum()
+            };
+            let (ds, dz) = pm.grad_scales_zeros(x.data(), dy.data(), 5, 4).unwrap();
+            let ng = pm.n_groups();
+            let mut checked = 0usize;
+            for r in 0..pm.rows {
+                for kg in 0..ng {
+                    for (which, grad) in [("s", ds.at2(r, kg)), ("z", dz.at2(r, kg))] {
+                        let mut hi = pm.clone();
+                        let mut lo = pm.clone();
+                        let (th, tl, v) = if which == "s" {
+                            (&mut hi.scales, &mut lo.scales, pm.scales.at2(r, kg))
+                        } else {
+                            (&mut hi.zeros, &mut lo.zeros, pm.zeros.at2(r, kg))
+                        };
+                        let h = (0.01 * v.abs()).max(1e-3);
+                        th.set2(r, kg, v + h);
+                        tl.set2(r, kg, v - h);
+                        let fd = (loss(&hi) - loss(&lo)) / (2.0 * h as f64);
+                        let rel = (grad as f64 - fd).abs() / fd.abs().max(1e-2);
+                        assert!(
+                            rel <= 1e-3,
+                            "bits={bits} group={group:?} {which}[{r},{kg}]: \
+                             analytic {grad} vs fd {fd} (rel {rel:.2e})"
+                        );
+                        checked += 1;
+                    }
+                }
+            }
+            assert!(checked >= 24, "too few entries checked: {checked}");
+        }
+    }
+}
+
+fn tiny_tuner(
+    geom: &ModelGeom,
+    bits: u8,
+    group: Option<usize>,
+    seed: u64,
+    train_zeros: bool,
+    threads: usize,
+    steps: usize,
+    lr: f64,
+) -> HostPeqaTuner {
+    let (pm, _) = serve::synth_packed(geom, bits, group, seed).unwrap();
+    let cfg = TrainConfig {
+        steps,
+        lr,
+        warmup_steps: (steps / 10).max(1),
+        log_every: 0,
+        ..Default::default()
+    };
+    HostPeqaTuner::from_packed(pm, *geom, cfg, train_zeros, threads).unwrap()
+}
+
+#[test]
+fn training_forward_matches_serving_engine_and_dense_reference() {
+    // The model the tuner trains must BE the model the engine serves:
+    // same RMS epsilon, rotary table, attention and head. Compare the
+    // training forward's logits per position against the dense
+    // reference_forward, and its last position against Engine::prefill.
+    let geom = ModelGeom { vocab: 300, d_model: 32, n_layers: 2, n_heads: 2, d_ff: 64 };
+    let (pm, base_q) = serve::synth_packed(&geom, 4, Some(16), 41).unwrap();
+    let tokens: Vec<u32> = vec![10, 7, 42, 99, 3, 250, 31];
+    let logits = peqa::train::host::forward_logits(&pm, &geom, 2, &tokens).unwrap();
+    assert_eq!(logits.len(), tokens.len() * geom.vocab);
+
+    let fp_ref = base_q.dequantize().unwrap();
+    let dense = serve::reference_forward(&fp_ref, &geom, &tokens).unwrap();
+    let max_d = logits
+        .iter()
+        .zip(dense.data())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_d <= 1e-4, "train forward vs dense reference: {max_d}");
+
+    let mut eng = Engine::from_packed(pm, geom, 2).unwrap();
+    let mut cache = eng.new_cache(32);
+    let served = eng.prefill(&tokens, &mut cache).unwrap();
+    let last = &logits[(tokens.len() - 1) * geom.vocab..];
+    let max_d = served
+        .iter()
+        .zip(last)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_d <= 1e-4, "train forward vs engine prefill: {max_d}");
+}
+
+#[test]
+fn full_model_gradient_matches_directional_fd() {
+    // Directional probe through the whole network: perturb EVERY scale
+    // by ±h·sign(ds) and compare the loss delta against Σ|ds|. The
+    // aggregate keeps the fd signal far above f32 forward noise, so a
+    // single wrong backward stage (rmsnorm, rope, softmax, SwiGLU,
+    // either kernel reduction) shows up at O(1) relative error.
+    let geom = ModelGeom { vocab: 64, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32 };
+    for train_zeros in [false, true] {
+        let mut tuner = tiny_tuner(&geom, 4, Some(8), 21, train_zeros, 2, 8, 2e-3);
+        let batch = full_batch(3, 10, 64, 9);
+        let (_, grads) = tuner.forward_backward(&batch).unwrap();
+        let h = 5e-3f32;
+        for which in ["s", "z"] {
+            if which == "z" && !train_zeros {
+                continue;
+            }
+            let directional: f64 = grads
+                .iter()
+                .flat_map(|(_, ds, dz)| {
+                    (if which == "s" { ds } else { dz }).data().iter().map(|g| g.abs() as f64)
+                })
+                .sum();
+            assert!(directional > 1e-3, "{which}: gradient vanished ({directional})");
+            let shift = |sign: f32, tuner: &mut HostPeqaTuner| {
+                for (prefix, ds, dz) in &grads {
+                    let m = tuner.model_mut().matrix_mut(prefix).unwrap();
+                    let (t, g) = if which == "s" { (&mut m.scales, ds) } else { (&mut m.zeros, dz) };
+                    for (pv, gv) in t.data_mut().iter_mut().zip(g.data()) {
+                        *pv += sign * h * gv.signum();
+                    }
+                }
+            };
+            shift(1.0, &mut tuner);
+            let lp = tuner.loss(&batch).unwrap() as f64;
+            shift(-2.0, &mut tuner);
+            let lm = tuner.loss(&batch).unwrap() as f64;
+            shift(1.0, &mut tuner); // restore
+            let fd = (lp - lm) / (2.0 * h as f64);
+            let rel = (fd - directional).abs() / directional;
+            assert!(
+                rel <= 1e-2,
+                "{which} (train_zeros={train_zeros}): directional {directional} \
+                 vs fd {fd} (rel {rel:.2e})"
+            );
+        }
+    }
+}
+
+#[test]
+fn training_step_is_bitwise_thread_invariant() {
+    let geom = ModelGeom { vocab: 64, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32 };
+    let run = |threads: usize| {
+        let mut tuner = tiny_tuner(&geom, 3, Some(8), 7, true, threads, 3, 3e-3);
+        let mut losses = Vec::new();
+        for step in 0..3u64 {
+            losses.push(tuner.step(&full_batch(2, 8, 64, 40 + step)).unwrap());
+        }
+        (losses, tuner.finish().unwrap())
+    };
+    let (l1, ck1) = run(1);
+    for threads in [2usize, 4, 8] {
+        let (ln, ckn) = run(threads);
+        assert_eq!(l1, ln, "losses diverge at {threads} threads");
+        assert_eq!(ck1.names(), ckn.names());
+        for (name, t) in ck1.iter() {
+            assert_eq!(
+                t.data(),
+                ckn.req(name).unwrap().data(),
+                "'{name}' diverges at {threads} threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn only_scales_move_and_counts_match_memmodel() {
+    let geom = ModelGeom { vocab: 64, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32 };
+    let mut tuner = tiny_tuner(&geom, 4, None, 13, false, 2, 4, 5e-3);
+    // Trainable count: one scale per (row, group) over exactly the
+    // quantizable block tensors — the same count memmodel's Table 4
+    // analytics produce for this geometry (per-channel: group == cols).
+    let mg = memmodel::Geometry::llama("t", geom.vocab, geom.d_model, geom.n_layers, geom.d_ff);
+    assert_eq!(tuner.trainable_params() as u64, memmodel::peqa_trainable(&mg, None));
+    assert_eq!(tuner.trainable_state_bytes(), 3 * 4 * tuner.trainable_params() as u64);
+
+    let before = tuner.model().to_checkpoint();
+    let packed_before = tuner.model().packed_bytes();
+    for step in 0..4u64 {
+        tuner.step(&full_batch(2, 8, 64, 70 + step)).unwrap();
+    }
+    assert_eq!(tuner.step_count(), 4);
+    let after = tuner.model().to_checkpoint();
+    assert_eq!(tuner.model().packed_bytes(), packed_before, "codes reallocated");
+    let mut scales_moved = 0usize;
+    for (name, t0) in before.iter() {
+        let t1 = after.req(name).unwrap();
+        if name.ends_with(".s") {
+            if t0.max_abs_diff(t1) > 0.0 {
+                scales_moved += 1;
+            }
+        } else {
+            // Codes, zero-points (not trained here), embeddings, norms,
+            // LM head: bitwise frozen.
+            assert_eq!(t0.data(), t1.data(), "'{name}' must be frozen");
+        }
+    }
+    assert_eq!(scales_moved, geom.n_layers * 7, "every projection's scales should move");
+}
+
+#[test]
+fn finetune_then_serve_closes_the_loop() {
+    // The paper's loop on one host: quantize (synth) → PEQA-tune scales
+    // on a task → extract the adapter → scale-swap-serve it.
+    let geom = ModelGeom { vocab: 512, d_model: 32, n_layers: 2, n_heads: 2, d_ff: 64 };
+    let (pm, _) = serve::synth_packed(&geom, 4, Some(16), 11).unwrap();
+    let base_model = pm.clone();
+    let cfg = TrainConfig { steps: 30, lr: 5e-3, warmup_steps: 2, log_every: 0, ..Default::default() };
+    let mut tuner = HostPeqaTuner::from_packed(pm, geom, cfg, false, 2).unwrap();
+
+    // Task corpus: a repeating 16-token motif — strongly learnable
+    // structure so 30 scale-only steps visibly reduce the loss.
+    let motif: Vec<u32> = (0..16u32).map(|i| (i * 37 + 11) % 500).collect();
+    let stream: Vec<u32> = motif.iter().cycle().take(2400).cloned().collect();
+    let mut batcher = LmBatcher::new(stream.clone(), 3, 24, 5);
+    tuner.run(30, || batcher.next_batch()).unwrap();
+
+    let losses = tuner.losses().to_vec();
+    let first = losses[0];
+    let tail: f32 = losses[losses.len() - 5..].iter().sum::<f32>() / 5.0;
+    assert!(
+        tail < first - 0.05,
+        "training loss must drop: first {first}, last-5 mean {tail} ({losses:?})"
+    );
+
+    // Held-out ppl on the task distribution drops too.
+    let eval_slice = &stream[..500];
+    let base_ppl = peqa::eval::host_perplexity(&base_model, 2, eval_slice, 2, 24, 2).unwrap();
+    let tuned_ppl = peqa::eval::host_perplexity(tuner.model(), 2, eval_slice, 2, 24, 2).unwrap();
+    assert!(
+        tuned_ppl < base_ppl,
+        "ppl must improve on the task: base {base_ppl:.3} tuned {tuned_ppl:.3}"
+    );
+
+    // The extracted adapter passes strict coverage and serves: greedy
+    // decode changes vs base, and base-engine + adapter is bitwise the
+    // tuned model.
+    let adapter = tuner.extract_adapter();
+    let tuned_model = tuner.into_model();
+    let prompt: Vec<u32> = motif[..6].to_vec();
+    let logits_of = |eng: &mut Engine| {
+        let mut c = eng.new_cache(32);
+        eng.prefill(&prompt, &mut c).unwrap()
+    };
+    let mut eng_base = Engine::from_packed(base_model.clone(), geom, 2).unwrap();
+    let base_logits = logits_of(&mut eng_base);
+    let mut eng_tuned = Engine::from_packed(tuned_model, geom, 2).unwrap();
+    let tuned_logits = logits_of(&mut eng_tuned);
+    assert!(eng_base.adapter_coverage_gaps(&adapter).is_empty());
+    eng_base.apply_adapter(&adapter).unwrap();
+    let swapped_logits = logits_of(&mut eng_base);
+    assert_eq!(swapped_logits, tuned_logits, "base + adapter must BE the tuned model");
+    let max_delta = base_logits
+        .iter()
+        .zip(&swapped_logits)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_delta > 0.0, "tuning must change served logits");
+
+    // End to end through the scheduler in strict-coverage mode: the
+    // trained adapter registers cleanly and generations differ from the
+    // base task's.
+    let mut store = serve::AdapterStore::new();
+    store.insert("base", base_model.extract_adapter(false));
+    store.insert("tuned", adapter);
+    let eng = Engine::from_packed(base_model, geom, 2).unwrap();
+    let cfg = SchedulerConfig { max_batch: 2, window: 64, strict_coverage: true, ..SchedulerConfig::default() };
+    let mut sched = Scheduler::new(eng, store, cfg).unwrap();
+    let id_base = sched.submit("base", prompt.clone(), 12, u32::MAX);
+    let id_tuned = sched.submit("tuned", prompt.clone(), 12, u32::MAX);
+    let responses = sched.run_until_idle().unwrap();
+    let tok = |id: u64| responses.iter().find(|r| r.id == id).unwrap().tokens.clone();
+    assert_ne!(tok(id_base), tok(id_tuned), "served greedy decode must change with the adapter");
+}

@@ -3,7 +3,8 @@
 
 Compares the bench result files the CI run just wrote at the repo root
 (BENCH_kernels.json from benches/kernels_micro.rs, BENCH_serve.json from
-benches/serve_decode.rs) against committed baselines under
+benches/serve_decode.rs, BENCH_finetune.json from
+benches/finetune_step.rs) against committed baselines under
 scripts/baselines/, and exits non-zero when the fused hot path regressed
 by more than the threshold (default 20%):
 
@@ -11,7 +12,10 @@ by more than the threshold (default 20%):
   not exceed baseline * (1 + threshold);
 * serve: tokens_per_s may not drop below baseline * (1 - threshold).
   Swap-time drift is reported but only warns (microsecond-scale numbers
-  are too noisy to gate on).
+  are too noisy to gate on);
+* finetune: the host PEQA training step's step_mean_s may not exceed
+  baseline * (1 + threshold); final-loss drift is reported but only
+  warns (it tracks data/seed config, not the hot path).
 
 Baselines are only comparable when they were produced with the same
 bench configuration (dim/threads/quick for kernels; geometry/threads/
@@ -36,7 +40,7 @@ import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 BASELINES = ROOT / "scripts" / "baselines"
-FILES = ["BENCH_kernels.json", "BENCH_serve.json"]
+FILES = ["BENCH_kernels.json", "BENCH_serve.json", "BENCH_finetune.json"]
 
 
 def load(path):
@@ -101,6 +105,34 @@ def diff_serve(cur, base, thr):
     return fails
 
 
+def diff_finetune(cur, base, thr):
+    fails = []
+    if not config_matches(
+        cur,
+        base,
+        ["quick", "threads", "n_layers", "d_model", "d_ff", "bits", "group", "steps", "batch", "seq"],
+    ):
+        return fails
+    st_cur, st_base = cur.get("step_mean_s", 0.0), base.get("step_mean_s", 0.0)
+    if st_base > 0:
+        ratio = st_cur / st_base
+        line = (
+            f"  finetune step: {st_cur * 1e3:.2f} ms vs baseline "
+            f"{st_base * 1e3:.2f} ms ({ratio:.0%} of baseline)"
+        )
+        if ratio > 1.0 + thr:
+            fails.append(line + f"  REGRESSION > +{thr:.0%}")
+            print(line + "  ** REGRESSION **")
+        else:
+            print(line)
+    fl_cur, fl_base = cur.get("final_loss", 0.0), base.get("final_loss", 0.0)
+    if fl_base > 0:
+        drift = fl_cur / fl_base
+        note = " (warn only — not gated)" if abs(drift - 1.0) > thr else ""
+        print(f"  final loss: {fl_cur:.4f} vs baseline {fl_base:.4f}{note}")
+    return fails
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--threshold", type=float, default=0.2)
@@ -135,8 +167,10 @@ def main():
         cur, base = load(cur_path), load(base_path)
         if name == "BENCH_kernels.json":
             fails += diff_kernels(cur, base, args.threshold)
-        else:
+        elif name == "BENCH_serve.json":
             fails += diff_serve(cur, base, args.threshold)
+        else:
+            fails += diff_finetune(cur, base, args.threshold)
 
     if fails:
         print(f"\nFAIL: {len(fails)} fused-path regression(s) beyond {args.threshold:.0%}:")

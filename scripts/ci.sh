@@ -1,12 +1,14 @@
 #!/usr/bin/env bash
 # CI entrypoint: tier-1 verify plus smoke-mode benches so every PR leaves
-# perf datapoints (BENCH_kernels.json + BENCH_serve.json at the repo
-# root), then the trend diff that fails on >20% fused-path regressions.
+# perf datapoints (BENCH_kernels.json + BENCH_serve.json +
+# BENCH_finetune.json at the repo root), then the trend diff that fails
+# on >20% fused-path regressions.
 #
 #   scripts/ci.sh            tier-1 + quick kernels_micro + serve_decode
+#                            + finetune_step (host PEQA training smoke)
 #   scripts/ci.sh --full     same, but the benches run at full size
-#                            (4096x4096 GEMM / 4-layer serve model — the
-#                            acceptance measurements)
+#                            (4096x4096 GEMM / 4-layer serve model / 4-layer
+#                            40-step finetune — the acceptance measurements)
 #
 # The default build has no xla feature (the vendored PJRT crate is not in
 # the registry); artifact-driven tests skip themselves.
@@ -40,6 +42,13 @@ PEQA_BENCH_QUICK=$QUICK PEQA_BENCH_OUT="$PWD/BENCH_serve.json" \
 test -s BENCH_serve.json
 echo "== ok: BENCH_serve.json written =="
 
+echo "== finetune_step bench — host PEQA training smoke (PEQA_BENCH_QUICK=$QUICK) =="
+PEQA_BENCH_QUICK=$QUICK PEQA_BENCH_OUT="$PWD/BENCH_finetune.json" \
+  cargo bench -p peqa --bench finetune_step
+
+test -s BENCH_finetune.json
+echo "== ok: BENCH_finetune.json written =="
+
 echo "== bench trend diff (scripts/baselines/) =="
 if command -v python3 >/dev/null 2>&1; then
   # Per result file: no committed baseline yet → seed it from the result
@@ -48,7 +57,7 @@ if command -v python3 >/dev/null 2>&1; then
   # regressions. Per-file so seeding one missing baseline never
   # overwrites a committed one.
   SEEDED=0
-  for bf in BENCH_kernels.json BENCH_serve.json; do
+  for bf in BENCH_kernels.json BENCH_serve.json BENCH_finetune.json; do
     if [[ ! -f "scripts/baselines/$bf" ]]; then
       python3 scripts/bench_diff.py --update --only "$bf"
       SEEDED=1
