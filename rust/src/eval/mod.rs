@@ -132,8 +132,12 @@ pub fn perplexity(rt: &Runtime, eval_art: &str, ck: &Checkpoint, stream: &[u32])
 /// Host perplexity of a packed model over a token stream — the
 /// tune→eval half of the loop that needs no artifacts: deterministic
 /// non-overlapping eval windows ([`eval_batches`]) scored by the host
-/// training forward (`train::host::batch_nll`), every projection running
-/// through the fused packed kernels. `n_heads` disambiguates the
+/// training forward (`train::host::batch_nll` over the shared
+/// `model::blocks` compute core), every projection running
+/// through the fused packed kernels. One `train::TapeArena` is reused
+/// across ALL eval batches — forward-only mode retains no tape, so the
+/// whole perplexity sweep runs out of one set of activation slabs
+/// instead of allocating per batch. `n_heads` disambiguates the
 /// geometry ([`ModelGeom::infer`]). The *stream* tokens must fit the
 /// model's vocab; the PAD filler `eval_batches` writes into unfilled
 /// tails (always mask-0) is remapped to token 0 here so models with
@@ -152,6 +156,7 @@ pub fn host_perplexity(
     if let Some(&bad) = stream.iter().find(|&&t| t as usize >= geom.vocab) {
         bail!("stream token {bad} out of the model's vocab {}", geom.vocab);
     }
+    let mut arena = crate::train::TapeArena::new();
     let mut sum = 0.0;
     let mut count = 0.0;
     for mut b in eval_batches(stream, batch.max(1), seq.max(2)) {
@@ -160,7 +165,7 @@ pub fn host_perplexity(
                 *t = 0; // PAD filler of an unfilled tail (mask 0)
             }
         }
-        let (s, c) = crate::train::host::batch_nll(model, &geom, threads, &b)?;
+        let (s, c) = crate::train::host::batch_nll(model, &geom, threads, &b, &mut arena)?;
         sum += s;
         count += c;
     }

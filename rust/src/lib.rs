@@ -29,6 +29,27 @@
 //! the same deterministic row-sharding, so every result is bit-identical
 //! at any thread count (`PEQA_THREADS` pins the worker count).
 //!
+//! ## The transformer compute core (`model::blocks`)
+//!
+//! One set of llama-family block primitives — RMSNorm (+ inverse-norm
+//! capture), rotary apply/backward, fixed-order head-blocked causal
+//! attention over either a KV-cache window or a full-sequence tape
+//! (`blocks::Tape`), SwiGLU forward/backward, the dense LM-head
+//! kernels, and the packed-projection call (fused GEMM through a shared
+//! `ProjScratch`, picking the ragged direct-layout entry
+//! `PackedMatrix::matmul_t_ragged` or the yᵀ scratch entry — bitwise
+//! identical either way). Its consumers:
+//!
+//! | Consumer | Drives the core as |
+//! |---|---|
+//! | `serve::engine` | KV-cache decode/prefill (`Tape`-less windowed attention) |
+//! | `train::HostPeqaTuner` | full-sequence forward + tape, reverse mode (`TapeArena`) |
+//! | `eval::host_perplexity` | forward-only loss (tape-less, one arena across batches) |
+//!
+//! Because both forwards are the same fixed-order functions, the
+//! trainer-vs-engine parity test pins **bitwise** equality and every
+//! numeric or perf change to the block math lands exactly once.
+//!
 //! ## Host serving (`serve`)
 //!
 //! The default build *serves*, not just quantizes/packs: `serve::engine`
@@ -52,12 +73,19 @@
 //!
 //! Fine-tuning sits behind the backend-agnostic `train::Tuner` trait.
 //! The default build ships the **host PEQA backend**
-//! (`train::HostPeqaTuner`): forward through the fused packed kernels,
-//! full host backward, gradients only w.r.t. the per-(row, group)
+//! (`train::HostPeqaTuner`): forward AND backward through the shared
+//! `model::blocks` compute core (the serving forward plus a tape),
+//! activations in a reusable `train::TapeArena` (no per-step activation
+//! allocation; `benches/finetune_step.rs` counts allocator traffic),
+//! attention forward/backward sharded over `std::thread::scope`
+//! workers, gradients only w.r.t. the per-(row, group)
 //! scale/zero tensors (straight-through estimator, integer codes
 //! frozen), shared `train::Adam` state that is kilobytes next to the
 //! packed codes. A training step is bit-identical at any `PEQA_THREADS`
-//! value. `peqa finetune` drives it end to end: quantized model + task
+//! value. `train::MultiTaskTuner` round-robins N per-task scale/zero +
+//! Adam states over ONE shared packed model (`peqa finetune --tasks`),
+//! bitwise equal to N independent runs. `peqa finetune` drives it end
+//! to end: quantized model + task
 //! corpus → a `.adapter` file that `peqa serve` scale-swaps directly;
 //! `eval::host_perplexity` scores the result in the same build, so the
 //! paper's quantize → PEQA-tune → scale-swap-serve loop closes on host.
@@ -82,6 +110,7 @@
 //! | `PEQA_PRETRAIN_STEPS` | Step-count override for the xla pretraining pipeline. |
 //! | `PEQA_LOG` | Log level of [`util::log`] (`debug`/`info`/`warn`/`error`). |
 //! | `PEQA_SKIP_TREND` | `1` lets `scripts/ci.sh` pass without `python3` by skipping the bench trend diff (otherwise a missing interpreter fails CI loudly). |
+//! | `PEQA_SKIP_PYCHECK` | `1` skips the f64 numpy cross-check of the host backward (`python/checks/host_backward_check.py`) in `scripts/ci.sh`; it runs whenever `python3 -c "import numpy"` succeeds. |
 //!
 //! ## Feature `xla`
 //!

@@ -54,12 +54,17 @@ peqa — PEQA (NeurIPS 2023) reproduction CLI
                   [--model m.packed] [--dataset wikitext|ptb|pretrain]
                   [--steps 60] [--lr 2e-3] [--batch 4] [--seq 48]
                   [--heads 4] [--train-zeros] [--task NAME]
-                  [--out adapters] [--save-model base.packed]
+                  [--tasks t1,t2,...] [--out adapters]
+                  [--save-model base.packed]
                   [--eval-tokens 8192] [--seed 7]
                   [--bits 4] [--group g] [--layers 2] [--d-model 64]
                   [--d-ff 192] [--vocab 512]
                   (no --model: synthesizes + RTN-quantizes a base model;
-                   writes <task>.adapter servable by `peqa serve`)
+                   writes <task>.adapter servable by `peqa serve`.
+                   --tasks tunes N adapters round-robin out of ONE shared
+                   packed model — known dataset names use their corpus,
+                   other names get deterministic synthetic task corpora —
+                   all servable by one `peqa serve --adapters` run)
   peqa finetune   --backend xla --size n3 --method peqa_b4_gc
                   --dataset wikitext|ptb [--steps 150] [--lr 2e-3]
                   [--out path.peqa]                              [xla]
@@ -291,14 +296,17 @@ fn finetune_host(mut args: peqa::cli::Args) -> Result<()> {
     use peqa::train::{HostPeqaTuner, Tuner};
 
     let model_path = args.opt("model");
-    let dataset = args.get("dataset", "wikitext");
+    let dataset_opt = args.opt("dataset");
+    let dataset = dataset_opt.clone().unwrap_or_else(|| "wikitext".to_string());
     let steps = args.get_usize("steps", 60)?;
     let lr = args.get_f64("lr", 0.0)?;
     let batch = args.get_usize("batch", 4)?.max(1);
     let seq = args.get_usize("seq", 48)?.max(2);
     let heads = args.get_usize("heads", 4)?;
     let train_zeros = args.flag("train-zeros");
-    let task = args.get("task", &dataset);
+    let task_opt = args.opt("task");
+    let tasks_opt = args.opt("tasks");
+    let task = task_opt.clone().unwrap_or_else(|| dataset.clone());
     let out_dir = args.get("out", "adapters");
     let save_model = args.opt("save-model");
     let eval_tokens = args.get_usize("eval-tokens", 8192)?;
@@ -343,6 +351,18 @@ fn finetune_host(mut args: peqa::cli::Args) -> Result<()> {
         }
     }
 
+    if tasks_opt.is_some() && task_opt.is_some() {
+        bail!("--task names the single-task adapter and conflicts with --tasks");
+    }
+    if tasks_opt.is_some() && dataset_opt.is_some() {
+        bail!(
+            "--dataset feeds the single-task path and conflicts with --tasks \
+             (each multi-task corpus is derived from its task name: known \
+             dataset names stream their corpus, others get deterministic \
+             synthetic task corpora)"
+        );
+    }
+
     let pm = match &model_path {
         Some(p) => PackedModel::load(std::path::Path::new(p))?,
         None => {
@@ -359,13 +379,42 @@ fn finetune_host(mut args: peqa::cli::Args) -> Result<()> {
             geom.vocab
         );
     }
-    let (train_s, eval_s) = pipeline::host_split(&dataset, pipeline::ADAPT_BYTES)?;
     let threads = peqa::util::num_threads();
-    // Serve the BASE model + trained adapter: save it before tuning.
+    // Serve the BASE model + trained adapter(s): save it before tuning.
     if let Some(p) = &save_model {
         let bytes = pm.to_checkpoint().save_packed(std::path::Path::new(p), pm.bits)?;
         println!("base model: {p} ({})", peqa::util::human_bytes(bytes));
     }
+
+    // Multi-task round-robin: N adapters out of ONE shared packed model.
+    if let Some(list) = &tasks_opt {
+        let names: Vec<String> = list
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        if names.is_empty() {
+            bail!("--tasks expects a comma-separated task list, got '{list}'");
+        }
+        return finetune_host_multi(FinetuneMultiOpts {
+            pm,
+            geom,
+            names,
+            steps,
+            lr,
+            batch,
+            seq,
+            heads,
+            train_zeros,
+            out_dir,
+            save_model,
+            eval_tokens,
+            seed,
+            threads,
+        });
+    }
+
+    let (train_s, eval_s) = pipeline::host_split(&dataset, pipeline::ADAPT_BYTES)?;
     let base_model = pm.clone();
 
     let mut cfg = pipeline::default_cfg(&format!("peqa_b{}_host", pm.bits), steps, seed);
@@ -418,6 +467,140 @@ fn finetune_host(mut args: peqa::cli::Args) -> Result<()> {
         println!(
             "serve it: peqa serve --model {p} --adapters {out_dir} --heads {heads} \
              --tasks 1"
+        );
+    }
+    Ok(())
+}
+
+struct FinetuneMultiOpts {
+    pm: peqa::model::PackedModel,
+    geom: peqa::serve::ModelGeom,
+    names: Vec<String>,
+    steps: usize,
+    lr: f64,
+    batch: usize,
+    seq: usize,
+    heads: usize,
+    train_zeros: bool,
+    out_dir: String,
+    save_model: Option<String>,
+    eval_tokens: usize,
+    seed: u64,
+    threads: usize,
+}
+
+/// Task corpus for multi-task tuning: named host datasets
+/// (wikitext/ptb/pretrain) stream their corpus; any other task name gets
+/// a deterministic synthetic motif corpus derived from the name —
+/// distinct tasks get distinct learnable structure, so N-task demos do
+/// not require N real datasets. Returns (train, eval) token streams.
+fn task_split(name: &str, bytes: usize) -> Result<(Vec<u32>, Vec<u32>)> {
+    if let Ok(split) = pipeline::host_split(name, bytes) {
+        return Ok(split);
+    }
+    // FNV-1a over the task name seeds a repeating token motif.
+    let mut seed = 0xcbf29ce484222325u64;
+    for b in name.bytes() {
+        seed ^= b as u64;
+        seed = seed.wrapping_mul(0x100000001b3);
+    }
+    let mut rng = peqa::util::Pcg32::seeded(seed, 0x7a5c);
+    let motif: Vec<u32> = (0..24).map(|_| rng.below(500)).collect();
+    let stream: Vec<u32> = motif.iter().cycle().take(bytes.max(2_000)).cloned().collect();
+    let cut = stream.len() * 4 / 5;
+    Ok((stream[..cut].to_vec(), stream[cut..].to_vec()))
+}
+
+/// Multi-task round-robin PEQA tuning: N per-task scale/zero + Adam
+/// states drive ONE shared packed model (`train::MultiTaskTuner`) —
+/// each round steps every task once on its own corpus; each task's
+/// trajectory is bitwise the single-task run, while the packed codes
+/// are held in memory once. Writes `<task>.adapter` per task, all
+/// servable together by one `peqa serve --adapters` invocation.
+fn finetune_host_multi(o: FinetuneMultiOpts) -> Result<()> {
+    use peqa::data::LmBatcher;
+    use peqa::train::{HostPeqaTuner, MultiTaskTuner};
+
+    let n = o.names.len();
+    let mut cfg = pipeline::default_cfg(&format!("peqa_b{}_host", o.pm.bits), o.steps, o.seed);
+    if o.lr > 0.0 {
+        cfg.lr = o.lr;
+    }
+    cfg.log_every = 0; // per-task summaries are printed below
+    let base_model = o.pm.clone();
+    let tuner = HostPeqaTuner::from_packed(o.pm, o.geom, cfg, o.train_zeros, o.threads)?;
+    let mut mt = MultiTaskTuner::new(tuner, &o.names)?;
+
+    let mut batchers = Vec::with_capacity(n);
+    let mut evals = Vec::with_capacity(n);
+    for (ti, name) in o.names.iter().enumerate() {
+        let (train_s, eval_s) = task_split(name, pipeline::ADAPT_BYTES)?;
+        batchers.push(LmBatcher::new(train_s, o.batch, o.seq, o.seed ^ 0x5eed ^ ti as u64));
+        evals.push(eval_s);
+    }
+
+    let t0 = std::time::Instant::now();
+    for _ in 0..o.steps {
+        for (ti, batcher) in batchers.iter_mut().enumerate() {
+            let b = batcher.next_batch();
+            mt.step_task(ti, &b)?;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "finetune host multi-task: {n} tasks × {} steps round-robin in {wall:.1}s \
+         ({:.3}s/step) | one shared packed model ({}), per-task trainable+Adam {} \
+         (total {})",
+        o.steps,
+        wall / (o.steps * n).max(1) as f64,
+        peqa::util::human_bytes(mt.packed_bytes() as u64),
+        peqa::util::human_bytes(mt.trainable_state_bytes()),
+        peqa::util::human_bytes(mt.trainable_state_bytes_total()),
+    );
+
+    std::fs::create_dir_all(&o.out_dir)?;
+    for ti in 0..n {
+        let name = o.names[ti].clone();
+        let losses = mt.losses(ti).to_vec();
+        let adapter = mt.extract_adapter(ti);
+        let out_path = std::path::Path::new(&o.out_dir).join(format!("{name}.adapter"));
+        adapter.save(&out_path)?;
+        let ppl_note = if o.eval_tokens > 0 {
+            let slice = &evals[ti][..evals[ti].len().min(o.eval_tokens)];
+            let base_ppl = peqa::eval::host_perplexity(
+                &base_model,
+                o.heads,
+                slice,
+                o.batch,
+                o.seq,
+                o.threads,
+            )?;
+            let tuned_ppl = peqa::eval::host_perplexity(
+                mt.model(ti),
+                o.heads,
+                slice,
+                o.batch,
+                o.seq,
+                o.threads,
+            )?;
+            format!(" | ppl {base_ppl:.3} → {tuned_ppl:.3}")
+        } else {
+            String::new()
+        };
+        println!(
+            "  task '{}': loss {:.4} → {:.4}{} | adapter → {}",
+            name,
+            losses.first().copied().unwrap_or(0.0),
+            losses.last().copied().unwrap_or(0.0),
+            ppl_note,
+            out_path.display()
+        );
+    }
+    if let Some(p) = &o.save_model {
+        println!(
+            "serve all {n} tasks: peqa serve --model {p} --adapters {} --heads {} \
+             --tasks {n}",
+            o.out_dir, o.heads
         );
     }
     Ok(())

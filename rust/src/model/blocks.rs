@@ -1,0 +1,849 @@
+//! The **transformer compute core** — one set of llama-family block
+//! primitives shared by the serving engine (`serve::engine`) and the
+//! host training backend (`train::host`).
+//!
+//! PEQA's whole premise is that the *same* quantized weights serve both
+//! fine-tuning (scale-only gradients) and deployment (scale-swap
+//! serving). Before this module, the repo maintained two hand-rolled
+//! forwards — the engine's KV-cache decode and the trainer's
+//! full-sequence tape — that each reimplemented RMSNorm, rotary
+//! positions, causal attention and SwiGLU, held together only by a
+//! ≤ 1e-4 parity test. Now both are thin drivers over the functions
+//! here, so the training forward *is* the inference forward plus a
+//! tape: same epsilon, same rotary table, same fixed-order reductions —
+//! and the trainer-vs-engine parity test pins **bitwise** equality
+//! (tests/train_host.rs).
+//!
+//! Contents:
+//! * [`RMS_EPS`] / [`rope_freqs`] — the shared norm epsilon and rotary
+//!   frequency table.
+//! * [`rms_norm_rows_into`] (with optional inverse-norm capture for the
+//!   backward tape) and [`rms_backward_into`].
+//! * [`rope_row_at`] / [`rope_backward_rows`] — per-head half-split
+//!   rotary apply and its transpose.
+//! * Fixed-order causal attention over either a [`KvCache`] window
+//!   ([`attend_row`], [`attend_seq_chunk`] — the serving pass) or a
+//!   full-sequence tape ([`attend_seq_tape`], parameterized by
+//!   [`Tape`]; [`attend_seq_backward`] is its reverse mode). Both sides
+//!   stream K/V as contiguous slabs through the same
+//!   [`attend_row_slabs`] kernel: one sweep per cached row for *all*
+//!   heads with 4-way blocked dots, per-head divide-at-end softmax.
+//!   The arithmetic per (head, position) is a fixed-order reduction
+//!   independent of batch composition and worker count, which is what
+//!   makes every consumer bitwise thread/batch invariant.
+//! * SwiGLU forward/backward ([`swiglu_rows_into`],
+//!   [`swiglu_backward_into`]) and the dense LM-head kernels
+//!   ([`dense_rows_into`], [`dense_grad_rows_into`]).
+//! * [`proj_into`] — the packed-projection call both drivers make:
+//!   fused quantized GEMM through a caller-owned [`ProjScratch`], using
+//!   the ragged direct-layout kernel entry
+//!   (`quant::kernels::PackedMatrix::matmul_t_ragged`) when the batch
+//!   amortizes it and the yᵀ scratch entry otherwise — the two entries
+//!   are bitwise identical, so the policy is purely a throughput
+//!   decision.
+//!
+//! Consumers: `serve::engine::forward_multi` (decode/prefill),
+//! `train::host::forward_tape`/`backward` (tuning + `eval`'s host
+//! perplexity). Every future numeric or perf change to the block math
+//! lands here exactly once.
+
+use anyhow::{anyhow, Result};
+
+use super::PackedModel;
+use crate::serve::kvcache::KvCache;
+use crate::tensor::Tensor;
+
+/// RMS-norm epsilon shared by serving and training: a model is tuned
+/// under exactly the norm it is served with.
+pub const RMS_EPS: f32 = 1e-6;
+
+/// The rotary frequency table for a head dimension — the one formula
+/// both the serving engine and the host training backend rotate with.
+pub fn rope_freqs(head_dim: usize) -> Vec<f32> {
+    let half = head_dim / 2;
+    (0..half).map(|i| 10000.0f32.powf(-(i as f32) / half as f32)).collect()
+}
+
+/// Grow-only buffer sizing: slabs hold stale data between calls; every
+/// consumer writes its full `[..len]` range before reading, which keeps
+/// results bitwise independent of buffer history.
+#[inline]
+pub(crate) fn ensure(buf: &mut Vec<f32>, n: usize) {
+    if buf.len() < n {
+        buf.resize(n, 0.0);
+    }
+}
+
+/// Per-layer tensor names resolved once at construction so the per-step
+/// hot loops do no string formatting (shared by engine and tuner).
+pub(crate) struct LayerNames {
+    pub ln1: String,
+    pub ln2: String,
+    pub q: String,
+    pub k: String,
+    pub v: String,
+    pub o: String,
+    pub gate: String,
+    pub up: String,
+    pub down: String,
+}
+
+impl LayerNames {
+    pub fn new(layer: usize) -> LayerNames {
+        let lp = format!("layers.{layer}");
+        LayerNames {
+            ln1: format!("{lp}.ln1.g"),
+            ln2: format!("{lp}.ln2.g"),
+            q: format!("{lp}.attn.q"),
+            k: format!("{lp}.attn.k"),
+            v: format!("{lp}.attn.v"),
+            o: format!("{lp}.attn.o"),
+            gate: format!("{lp}.mlp.gate"),
+            up: format!("{lp}.mlp.up"),
+            down: format!("{lp}.mlp.down"),
+        }
+    }
+}
+
+/// Shared projection scratch: the fused kernel's yᵀ transpose buffer —
+/// the batch-sized allocation — owned by the caller's arena
+/// (`serve::engine::Scratch`, `train::host::TapeArena`) and reused
+/// across calls. The kernels' small internal buffers (per-(row, group)
+/// sums, per-worker code tiles — kilobytes) are still allocated per
+/// call on every GEMM path; `benches/finetune_step.rs` counts them, and
+/// pooling them through this type is a noted follow-up (ROADMAP).
+#[derive(Default)]
+pub struct ProjScratch {
+    yt: Vec<f32>,
+}
+
+/// One worker's attention scratch: the `(n_heads, window)` score matrix
+/// plus per-head running max / softmax denominator. The score buffer
+/// doubles as the dP row scratch of [`attend_seq_backward`].
+#[derive(Default)]
+pub struct AttnScratch {
+    scores: Vec<f32>,
+    head_max: Vec<f32>,
+    head_den: Vec<f32>,
+}
+
+/// Tape policy of the full-sequence attention primitive
+/// ([`attend_seq_tape`]): `None` is the inference/eval shape (one
+/// O(window) score row lives at a time — linear in T); `Keep` saves the
+/// causal softmax probabilities into the caller's `(heads, T, T)` slab
+/// for reverse mode (entries above the diagonal are never written nor
+/// read). This is the *only* difference between the forward a request
+/// decodes through and the forward a tuner differentiates.
+pub enum Tape<'a> {
+    None,
+    Keep(&'a mut [f32]),
+}
+
+/// One packed (or dense-fallback) projection over the concatenated rows
+/// of ragged sequence spans, into a scratch-backed output slab.
+///
+/// Packed projections run the fused quantized GEMM: the ragged
+/// direct-layout entry (`matmul_t_ragged` — no yᵀ transpose, each
+/// worker walks whole per-sequence row spans) once every worker
+/// amortizes its code-tile unpack over ≥ 4 rows, the yᵀ scratch entry
+/// (`matmul_t_rows_scratch`) otherwise — single-row decode is already
+/// transpose-free there. Both entries accumulate every output element
+/// in the same fixed order, so the choice never changes a bit of the
+/// result.
+pub fn proj_into(
+    model: &PackedModel,
+    threads: usize,
+    name: &str,
+    x: &[f32],
+    spans: &[usize],
+    out: &mut Vec<f32>,
+    scratch: &mut ProjScratch,
+) -> Result<()> {
+    let m: usize = spans.iter().sum();
+    if let Some(pm) = model.matrix(name) {
+        ensure(out, m * pm.rows);
+        if m > 1 && m >= 4 * threads.max(1) {
+            pm.matmul_t_ragged(x, spans, threads, &mut out[..m * pm.rows])
+        } else {
+            pm.matmul_t_rows_scratch(x, m, threads, &mut out[..m * pm.rows], &mut scratch.yt)
+        }
+    } else {
+        let w = model
+            .fp_tensor(&format!("{name}.w"))
+            .ok_or_else(|| anyhow!("no projection '{name}'"))?;
+        let (o, _) = w.dims2()?;
+        ensure(out, m * o);
+        dense_rows_into(w, x, m, &mut out[..m * o]);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------- norms
+
+/// RMSNorm over `b` rows of width `d` into a scratch-backed output slab:
+/// g · x · rsqrt(mean(x²) + ε). With `invs` the per-row inverse factor
+/// is captured for the backward tape (the same factor the forward used —
+/// no recompute drift).
+pub fn rms_norm_rows_into(
+    x: &[f32],
+    g: &[f32],
+    b: usize,
+    d: usize,
+    out: &mut Vec<f32>,
+    mut invs: Option<&mut Vec<f32>>,
+) {
+    ensure(out, b * d);
+    if let Some(iv) = invs.as_mut() {
+        ensure(iv, b);
+    }
+    for bi in 0..b {
+        let xr = &x[bi * d..(bi + 1) * d];
+        let mut ss = 0.0f32;
+        for &v in xr {
+            ss += v * v;
+        }
+        let inv = 1.0 / (ss / d as f32 + RMS_EPS).sqrt();
+        if let Some(iv) = invs.as_mut() {
+            iv[bi] = inv;
+        }
+        let orow = &mut out[bi * d..(bi + 1) * d];
+        for j in 0..d {
+            orow[j] = g[j] * xr[j] * inv;
+        }
+    }
+}
+
+/// Allocating [`rms_norm_rows_into`] (reference paths + tests).
+pub fn rms_norm_rows(x: &[f32], g: &[f32], b: usize, d: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    rms_norm_rows_into(x, g, b, d, &mut out, None);
+    out
+}
+
+/// RMSNorm backward into a scratch-backed slab:
+/// dx_j = inv·g_j·dy_j − x_j·inv³/d · Σ_k dy_k·g_k·x_k.
+pub fn rms_backward_into(
+    dy: &[f32],
+    x: &[f32],
+    g: &[f32],
+    invs: &[f32],
+    b: usize,
+    d: usize,
+    dx: &mut Vec<f32>,
+) {
+    ensure(dx, b * d);
+    for bi in 0..b {
+        let xr = &x[bi * d..(bi + 1) * d];
+        let dyr = &dy[bi * d..(bi + 1) * d];
+        let inv = invs[bi];
+        let mut s = 0.0f32;
+        for j in 0..d {
+            s += dyr[j] * g[j] * xr[j];
+        }
+        let c = inv * inv * inv * s / d as f32;
+        let dxr = &mut dx[bi * d..(bi + 1) * d];
+        for j in 0..d {
+            dxr[j] = inv * g[j] * dyr[j] - xr[j] * c;
+        }
+    }
+}
+
+// ---------------------------------------------------------------- rotary
+
+/// Rotate one (d_model,) row in place at absolute position `pos`
+/// (per-head half-split rotary, matching python/compile/model.py).
+pub fn rope_row_at(freqs: &[f32], n_heads: usize, head_dim: usize, row: &mut [f32], pos: usize) {
+    let half = head_dim / 2;
+    let p = pos as f32;
+    for h in 0..n_heads {
+        let s = &mut row[h * head_dim..(h + 1) * head_dim];
+        for i in 0..half {
+            let (sin, cos) = (p * freqs[i]).sin_cos();
+            let (x1, x2) = (s[i], s[i + half]);
+            s[i] = x1 * cos - x2 * sin;
+            s[i + half] = x1 * sin + x2 * cos;
+        }
+    }
+}
+
+/// Backward of the rotary apply over full-sequence rows (row `r` sits at
+/// position `r % t_len`): the rotation is orthogonal, so the gradient
+/// rotates by −θ (the transpose).
+pub fn rope_backward_rows(
+    freqs: &[f32],
+    n_heads: usize,
+    head_dim: usize,
+    rows: &mut [f32],
+    t_len: usize,
+    d: usize,
+) {
+    let half = head_dim / 2;
+    for (r, row) in rows.chunks_mut(d).enumerate() {
+        let p = (r % t_len) as f32;
+        for h in 0..n_heads {
+            let s = &mut row[h * head_dim..(h + 1) * head_dim];
+            for i in 0..half {
+                let (sin, cos) = (p * freqs[i]).sin_cos();
+                let (g1, g2) = (s[i], s[i + half]);
+                s[i] = g1 * cos + g2 * sin;
+                s[i + half] = -g1 * sin + g2 * cos;
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- attention
+
+/// Head-blocked causal attention of one already-roped query row over a
+/// window of `n` K/V rows supplied as at most two contiguous slabs in
+/// position order. Writes the (d_model,) context row.
+///
+/// Each cached row is visited ONCE for all heads (score pass over K,
+/// accumulate pass over V) with 4-way blocked dots; softmax divides once
+/// per head at the end. Scores/max/denominator live in the calling
+/// worker's [`AttnScratch`]. The arithmetic per (head, position) is a
+/// fixed-order reduction independent of batch composition, thread count
+/// and slab segmentation, preserving every consumer's bitwise
+/// invariances.
+pub(crate) fn attend_row_slabs(
+    n_heads: usize,
+    head_dim: usize,
+    n: usize,
+    slabs: &[(&[f32], &[f32]); 2],
+    q: &[f32],
+    ctx: &mut [f32],
+    scratch: &mut AttnScratch,
+) {
+    let AttnScratch { scores, head_max, head_den } = scratch;
+    let d = n_heads * head_dim;
+    let inv = 1.0 / (head_dim as f32).sqrt();
+    scores.clear();
+    scores.resize(n_heads * n, 0.0);
+    head_max.clear();
+    head_max.resize(n_heads, f32::NEG_INFINITY);
+    head_den.clear();
+    head_den.resize(n_heads, 0.0);
+
+    // Score pass: one sweep over the contiguous K slabs, all heads per row.
+    let mut j = 0usize;
+    for (kseg, _) in slabs {
+        for krow in kseg.chunks_exact(d) {
+            for h in 0..n_heads {
+                let sc = inv
+                    * dot_blocked(
+                        &q[h * head_dim..(h + 1) * head_dim],
+                        &krow[h * head_dim..(h + 1) * head_dim],
+                    );
+                scores[h * n + j] = sc;
+                if sc > head_max[h] {
+                    head_max[h] = sc;
+                }
+            }
+            j += 1;
+        }
+    }
+    // Stable softmax numerators + denominators, per head.
+    for h in 0..n_heads {
+        let mx = head_max[h];
+        let mut den = 0.0f32;
+        for sc in scores[h * n..(h + 1) * n].iter_mut() {
+            *sc = (*sc - mx).exp();
+            den += *sc;
+        }
+        head_den[h] = den;
+    }
+    // Accumulate pass: one sweep over the contiguous V slabs, then one
+    // division per head (Σ wⱼ·vⱼ / Σ wⱼ).
+    ctx[..d].fill(0.0);
+    let mut j = 0usize;
+    for (_, vseg) in slabs {
+        for vrow in vseg.chunks_exact(d) {
+            for h in 0..n_heads {
+                axpy_blocked(
+                    scores[h * n + j],
+                    &vrow[h * head_dim..(h + 1) * head_dim],
+                    &mut ctx[h * head_dim..(h + 1) * head_dim],
+                );
+            }
+            j += 1;
+        }
+    }
+    for h in 0..n_heads {
+        let id = 1.0 / head_den[h];
+        for t in ctx[h * head_dim..(h + 1) * head_dim].iter_mut() {
+            *t *= id;
+        }
+    }
+}
+
+/// [`attend_row_slabs`] over a [`KvCache`] window: the serving decode
+/// shape. The cache's ring wraps at most once, so the window arrives as
+/// the cache's two contiguous slabs.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attend_row(
+    n_heads: usize,
+    head_dim: usize,
+    cache: &KvCache,
+    layer: usize,
+    abs: usize,
+    q: &[f32],
+    ctx: &mut [f32],
+    scratch: &mut AttnScratch,
+) {
+    let n = cache.window_len(abs);
+    let slabs = cache.window_slabs(layer, abs);
+    attend_row_slabs(n_heads, head_dim, n, &slabs, q, ctx, scratch);
+}
+
+/// One worker's share of the serving attention pass: rotary + cache
+/// append + [`attend_row`] for a contiguous range of sequences.
+/// `q_c`/`k_c`/`v_c`/`ctx_c` are that range's row slabs; every sequence
+/// only touches its own cache, so chunks run concurrently and the
+/// per-sequence arithmetic is identical at any worker count.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attend_seq_chunk(
+    freqs: &[f32],
+    hh: usize,
+    hd: usize,
+    d: usize,
+    layer: usize,
+    seq_chunk: &[&[u32]],
+    cache_chunk: &mut [&mut KvCache],
+    q_c: &mut [f32],
+    k_c: &mut [f32],
+    v_c: &[f32],
+    ctx_c: &mut [f32],
+    attn: &mut AttnScratch,
+) {
+    let mut r0 = 0usize;
+    for (si, seq) in seq_chunk.iter().enumerate() {
+        let cache = &mut *cache_chunk[si];
+        let base = cache.pos();
+        for ti in 0..seq.len() {
+            let r = r0 + ti;
+            let abs = base + ti;
+            rope_row_at(freqs, hh, hd, &mut q_c[r * d..(r + 1) * d], abs);
+            rope_row_at(freqs, hh, hd, &mut k_c[r * d..(r + 1) * d], abs);
+            cache.write(layer, abs, &k_c[r * d..(r + 1) * d], &v_c[r * d..(r + 1) * d]);
+            attend_row(
+                hh,
+                hd,
+                cache,
+                layer,
+                abs,
+                &q_c[r * d..(r + 1) * d],
+                &mut ctx_c[r * d..(r + 1) * d],
+                attn,
+            );
+        }
+        r0 += seq.len();
+    }
+}
+
+/// Rotary + fixed-order causal attention over ONE full sequence of
+/// `t_len` rows — the training-forward shape. `q`/`k` are roped in
+/// place at positions `0..t_len`; position `t` then attends over
+/// `k/v[0..=t]` through exactly the windowed kernel the serving engine
+/// uses ([`attend_row_slabs`] with the sequence prefix as one contiguous
+/// slab), so a training forward is bitwise the engine's prefill of the
+/// same tokens. With [`Tape::Keep`] the per-(head, position) softmax
+/// probabilities are saved into the caller's `(heads, T, T)` slab for
+/// [`attend_seq_backward`]; with [`Tape::None`] only the O(window)
+/// score row in `scratch` is ever live (loss/perplexity evaluation
+/// stays linear in T).
+#[allow(clippy::too_many_arguments)]
+pub fn attend_seq_tape(
+    freqs: &[f32],
+    hh: usize,
+    hd: usize,
+    t_len: usize,
+    q: &mut [f32],
+    k: &mut [f32],
+    v: &[f32],
+    ctx: &mut [f32],
+    scratch: &mut AttnScratch,
+    mut tape: Tape<'_>,
+) {
+    let d = hh * hd;
+    for t in 0..t_len {
+        rope_row_at(freqs, hh, hd, &mut q[t * d..(t + 1) * d], t);
+        rope_row_at(freqs, hh, hd, &mut k[t * d..(t + 1) * d], t);
+        let n = t + 1;
+        let slabs = [(&k[..n * d], &v[..n * d]), (&[][..], &[][..])];
+        attend_row_slabs(
+            hh,
+            hd,
+            n,
+            &slabs,
+            &q[t * d..(t + 1) * d],
+            &mut ctx[t * d..(t + 1) * d],
+            scratch,
+        );
+        if let Tape::Keep(probs) = &mut tape {
+            // softmax probabilities = exp numerators / per-head denom —
+            // exactly what the score buffer holds after the attend.
+            for h in 0..hh {
+                let den = scratch.head_den[h];
+                let prow = &mut probs[(h * t_len + t) * t_len..(h * t_len + t) * t_len + n];
+                for (pj, &e) in prow.iter_mut().zip(&scratch.scores[h * n..h * n + n]) {
+                    *pj = e / den;
+                }
+            }
+        }
+    }
+}
+
+/// Reverse mode of [`attend_seq_tape`] for one sequence, rotary
+/// included: given the taped softmax probabilities and the roped q/k
+/// plus raw v rows, accumulates dQ/dK/dV (overwritten) from the
+/// context-row gradient `dctx`, then un-rotates dQ/dK. Fixed
+/// (head, position) order — bitwise identical however sequences are
+/// sharded over workers. The worker's [`AttnScratch`] score buffer is
+/// reused as the dP row scratch.
+#[allow(clippy::too_many_arguments)]
+pub fn attend_seq_backward(
+    freqs: &[f32],
+    hh: usize,
+    hd: usize,
+    t_len: usize,
+    probs: &[f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    dctx: &[f32],
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+    scratch: &mut AttnScratch,
+) {
+    let d = hh * hd;
+    let inv_sqrt = 1.0 / (hd as f32).sqrt();
+    dq.fill(0.0);
+    dk.fill(0.0);
+    dv.fill(0.0);
+    let dp = &mut scratch.scores;
+    dp.clear();
+    dp.resize(t_len, 0.0);
+    for h in 0..hh {
+        for t in 0..t_len {
+            let prow = &probs[(h * t_len + t) * t_len..(h * t_len + t) * t_len + t + 1];
+            let dcx = &dctx[t * d + h * hd..t * d + (h + 1) * hd];
+            // dP and dV.
+            let mut row_dot = 0.0f32;
+            for j in 0..=t {
+                let vr = &v[j * d + h * hd..j * d + (h + 1) * hd];
+                let mut acc = 0.0f32;
+                for u in 0..hd {
+                    acc += dcx[u] * vr[u];
+                }
+                dp[j] = acc;
+                row_dot += acc * prow[j];
+                let dvr = &mut dv[j * d + h * hd..j * d + (h + 1) * hd];
+                for u in 0..hd {
+                    dvr[u] += prow[j] * dcx[u];
+                }
+            }
+            // Softmax backward → dS, then dQ / dK.
+            let qr = &q[t * d + h * hd..t * d + (h + 1) * hd];
+            let dqr_base = t * d + h * hd;
+            for j in 0..=t {
+                let dsc = prow[j] * (dp[j] - row_dot) * inv_sqrt;
+                if dsc == 0.0 {
+                    continue;
+                }
+                let kr = &k[j * d + h * hd..j * d + (h + 1) * hd];
+                for u in 0..hd {
+                    dq[dqr_base + u] += dsc * kr[u];
+                }
+                let dkr = &mut dk[j * d + h * hd..j * d + (h + 1) * hd];
+                for u in 0..hd {
+                    dkr[u] += dsc * qr[u];
+                }
+            }
+        }
+    }
+    // Undo the rotation on the q/k gradients.
+    rope_backward_rows(freqs, hh, hd, dq, t_len, d);
+    rope_backward_rows(freqs, hh, hd, dk, t_len, d);
+}
+
+// --------------------------------------------------------------- swiglu
+
+#[inline]
+pub(crate) fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[inline]
+pub(crate) fn silu(x: f32) -> f32 {
+    x * sigmoid(x)
+}
+
+/// d silu(x)/dx = σ(x)·(1 + x·(1 − σ(x))).
+#[inline]
+pub(crate) fn silu_grad(x: f32) -> f32 {
+    let s = sigmoid(x);
+    s * (1.0 + x * (1.0 - s))
+}
+
+/// SwiGLU gating over `n` elements: act = silu(gate) ⊙ up.
+pub fn swiglu_rows_into(gate: &[f32], up: &[f32], n: usize, act: &mut Vec<f32>) {
+    ensure(act, n);
+    for j in 0..n {
+        act[j] = silu(gate[j]) * up[j];
+    }
+}
+
+/// Backward of [`swiglu_rows_into`]: given d(act), the pre-activation
+/// gate/up rows, writes d(gate) and d(up).
+pub fn swiglu_backward_into(
+    da: &[f32],
+    gate: &[f32],
+    up: &[f32],
+    n: usize,
+    dgate: &mut Vec<f32>,
+    dup: &mut Vec<f32>,
+) {
+    ensure(dgate, n);
+    ensure(dup, n);
+    for j in 0..n {
+        dgate[j] = da[j] * up[j] * silu_grad(gate[j]);
+        dup[j] = da[j] * silu(gate[j]);
+    }
+}
+
+// ---------------------------------------------------------- dense heads
+
+/// Dense projection / LM head: y (b, out) = X · Wᵀ with W row-major
+/// (out, in), accumulated row by row in a fixed order (deterministic,
+/// batch-row independent).
+pub fn dense_rows_into(w: &Tensor, x: &[f32], b: usize, y: &mut [f32]) {
+    let (o, i) = w.dims2().expect("dense projection is 2-D");
+    let wd = w.data();
+    for bi in 0..b {
+        let xr = &x[bi * i..(bi + 1) * i];
+        let yr = &mut y[bi * o..(bi + 1) * o];
+        for (r, yv) in yr.iter_mut().enumerate() {
+            let wr = &wd[r * i..(r + 1) * i];
+            let mut acc = 0.0f32;
+            for j in 0..i {
+                acc += xr[j] * wr[j];
+            }
+            *yv = acc;
+        }
+    }
+}
+
+/// Gradient through a frozen dense projection: dX (b, in) = dY · W with
+/// W row-major (out, in) — the LM-head backward. Rows of dX are
+/// independent, so they are sharded over the kernel layer's shared
+/// row-parallel helper; per row the accumulation walks the weight rows
+/// in ascending order (skipping exact-zero dY entries, an exact
+/// identity), so results are bit-identical at any `threads` value.
+pub fn dense_grad_rows_into(w: &Tensor, dy: &[f32], b: usize, threads: usize, dx: &mut [f32]) {
+    let (o, i) = w.dims2().expect("dense projection is 2-D");
+    assert_eq!(dy.len(), b * o, "dense_grad_rows_into: dy shape");
+    assert_eq!(dx.len(), b * i, "dense_grad_rows_into: dx shape");
+    let wd = w.data();
+    crate::quant::kernels::par_row_chunks(dx, i, b, threads, |b0, chunk| {
+        for (ci, dxr) in chunk.chunks_mut(i).enumerate() {
+            dxr.fill(0.0);
+            let dyr = &dy[(b0 + ci) * o..(b0 + ci + 1) * o];
+            for (r, &a) in dyr.iter().enumerate() {
+                if a == 0.0 {
+                    continue; // masked-out logits rows are all-zero
+                }
+                axpy_blocked(a, &wd[r * i..(r + 1) * i], dxr);
+            }
+        }
+    });
+}
+
+// ------------------------------------------------------- blocked kernels
+
+/// Fixed-order 4-accumulator dot product (deterministic; lets the
+/// autovectorizer keep four independent FMA chains in flight).
+#[inline]
+pub(crate) fn dot_blocked(a: &[f32], b: &[f32]) -> f32 {
+    let n4 = a.len() / 4 * 4;
+    let mut acc = [0.0f32; 4];
+    let mut i = 0;
+    while i < n4 {
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+        i += 4;
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for k in n4..a.len() {
+        s += a[k] * b[k];
+    }
+    s
+}
+
+/// y += w · v, 4-way blocked, fixed order.
+#[inline]
+pub(crate) fn axpy_blocked(w: f32, v: &[f32], y: &mut [f32]) {
+    let n4 = v.len() / 4 * 4;
+    let mut i = 0;
+    while i < n4 {
+        y[i] += w * v[i];
+        y[i + 1] += w * v[i + 1];
+        y[i + 2] += w * v[i + 2];
+        y[i + 3] += w * v[i + 3];
+        i += 4;
+    }
+    for k in n4..v.len() {
+        y[k] += w * v[k];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn blocked_dot_and_axpy_match_scalar() {
+        let a: Vec<f32> = (0..23).map(|i| (i as f32) * 0.3 - 2.0).collect();
+        let b: Vec<f32> = (0..23).map(|i| 1.5 - (i as f32) * 0.11).collect();
+        let scalar: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot_blocked(&a, &b) - scalar).abs() < 1e-4);
+        let mut y = vec![0.5f32; 23];
+        let mut y_ref = y.clone();
+        axpy_blocked(0.7, &a, &mut y);
+        for (yr, av) in y_ref.iter_mut().zip(&a) {
+            *yr += 0.7 * av;
+        }
+        for (u, v) in y.iter().zip(&y_ref) {
+            assert!((u - v).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rms_norm_captures_the_exact_forward_inverse() {
+        let mut rng = Pcg32::new(3);
+        let x = Tensor::normal(&[3, 8], 1.0, &mut rng);
+        let g = Tensor::ones(&[8]);
+        let mut out = Vec::new();
+        let mut invs = Vec::new();
+        rms_norm_rows_into(x.data(), g.data(), 3, 8, &mut out, Some(&mut invs));
+        let plain = rms_norm_rows(x.data(), g.data(), 3, 8);
+        assert_eq!(out[..24], plain[..]);
+        for bi in 0..3 {
+            let xr = &x.data()[bi * 8..(bi + 1) * 8];
+            let ss: f32 = xr.iter().map(|v| v * v).sum();
+            let inv = 1.0 / (ss / 8.0 + RMS_EPS).sqrt();
+            assert_eq!(invs[bi], inv);
+        }
+    }
+
+    #[test]
+    fn full_sequence_attention_matches_windowed_kernel_bitwise() {
+        // attend_seq_tape over t_len rows must produce, per position,
+        // exactly attend_row_slabs over the growing prefix slab — and
+        // Tape::Keep vs Tape::None must not change the context rows.
+        let (hh, hd, t_len) = (2usize, 4usize, 5usize);
+        let d = hh * hd;
+        let mut rng = Pcg32::new(9);
+        let q0 = Tensor::normal(&[t_len, d], 1.0, &mut rng);
+        let k0 = Tensor::normal(&[t_len, d], 1.0, &mut rng);
+        let v0 = Tensor::normal(&[t_len, d], 1.0, &mut rng);
+        let freqs = rope_freqs(hd);
+
+        let run = |keep: bool| -> (Vec<f32>, Vec<f32>) {
+            let mut q = q0.data().to_vec();
+            let mut k = k0.data().to_vec();
+            let mut ctx = vec![0.0f32; t_len * d];
+            let mut probs = vec![0.0f32; hh * t_len * t_len];
+            let mut scr = AttnScratch::default();
+            let tape = if keep { Tape::Keep(&mut probs) } else { Tape::None };
+            attend_seq_tape(&freqs, hh, hd, t_len, &mut q, &mut k, v0.data(), &mut ctx, &mut scr, tape);
+            (ctx, probs)
+        };
+        let (ctx_keep, probs) = run(true);
+        let (ctx_none, _) = run(false);
+        assert_eq!(ctx_keep, ctx_none, "tape mode must not change the forward");
+
+        // Probabilities are a valid causal softmax: rows sum to 1.
+        for h in 0..hh {
+            for t in 0..t_len {
+                let row = &probs[(h * t_len + t) * t_len..(h * t_len + t) * t_len + t + 1];
+                let s: f32 = row.iter().sum();
+                assert!((s - 1.0).abs() < 1e-5, "h={h} t={t}: Σp = {s}");
+            }
+        }
+
+        // Per position, the shared windowed kernel over the prefix slab
+        // reproduces the context row bitwise.
+        let mut q = q0.data().to_vec();
+        let mut k = k0.data().to_vec();
+        for t in 0..t_len {
+            rope_row_at(&freqs, hh, hd, &mut q[t * d..(t + 1) * d], t);
+            rope_row_at(&freqs, hh, hd, &mut k[t * d..(t + 1) * d], t);
+            let n = t + 1;
+            let slabs = [(&k[..n * d], &v0.data()[..n * d]), (&[][..], &[][..])];
+            let mut ctx = vec![0.0f32; d];
+            let mut scr = AttnScratch::default();
+            attend_row_slabs(hh, hd, n, &slabs, &q[t * d..(t + 1) * d], &mut ctx, &mut scr);
+            assert_eq!(ctx[..], ctx_keep[t * d..(t + 1) * d], "t={t}");
+        }
+    }
+
+    #[test]
+    fn dense_grad_is_thread_invariant_and_matches_f64() {
+        let (b, o, i) = (5usize, 7usize, 6usize);
+        let mut rng = Pcg32::new(17);
+        let w = Tensor::normal(&[o, i], 0.5, &mut rng);
+        let dy = Tensor::normal(&[b, o], 1.0, &mut rng);
+        let mut dx1 = vec![f32::NAN; b * i];
+        dense_grad_rows_into(&w, dy.data(), b, 1, &mut dx1);
+        for threads in [2usize, 4, 16] {
+            let mut dxn = vec![f32::NAN; b * i];
+            dense_grad_rows_into(&w, dy.data(), b, threads, &mut dxn);
+            assert_eq!(dx1, dxn, "threads={threads}");
+        }
+        for bi in 0..b {
+            for j in 0..i {
+                let mut acc = 0.0f64;
+                for r in 0..o {
+                    acc += dy.at2(bi, r) as f64 * w.at2(r, j) as f64;
+                }
+                assert!((dx1[bi * i + j] as f64 - acc).abs() <= 1e-4 * acc.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn swiglu_backward_matches_finite_differences() {
+        let n = 9usize;
+        let mut rng = Pcg32::new(23);
+        let gate = Tensor::normal(&[n], 1.0, &mut rng);
+        let up = Tensor::normal(&[n], 1.0, &mut rng);
+        let da = Tensor::normal(&[n], 1.0, &mut rng);
+        let mut dgate = Vec::new();
+        let mut dup = Vec::new();
+        swiglu_backward_into(da.data(), gate.data(), up.data(), n, &mut dgate, &mut dup);
+        let loss = |g: &[f32], u: &[f32]| -> f64 {
+            let mut act = Vec::new();
+            swiglu_rows_into(g, u, n, &mut act);
+            act.iter().zip(da.data()).map(|(&a, &w)| (a * w) as f64).sum()
+        };
+        let h = 1e-3f32;
+        for j in 0..n {
+            let mut gp = gate.data().to_vec();
+            let mut gm = gate.data().to_vec();
+            gp[j] += h;
+            gm[j] -= h;
+            let fd = (loss(&gp, up.data()) - loss(&gm, up.data())) / (2.0 * h as f64);
+            assert!((dgate[j] as f64 - fd).abs() <= 1e-2 * fd.abs().max(1e-2), "gate[{j}]");
+            let mut up_p = up.data().to_vec();
+            let mut up_m = up.data().to_vec();
+            up_p[j] += h;
+            up_m[j] -= h;
+            let fd = (loss(gate.data(), &up_p) - loss(gate.data(), &up_m)) / (2.0 * h as f64);
+            assert!((dup[j] as f64 - fd).abs() <= 1e-2 * fd.abs().max(1e-2), "up[{j}]");
+        }
+    }
+}

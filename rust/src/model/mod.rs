@@ -10,6 +10,8 @@
 //!   (quant::pack) + f32 scales/zeros; its file size is the "Model Size"
 //!   column of Tables 4/6/7.
 
+pub mod blocks;
+
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::path::Path;

@@ -281,6 +281,89 @@ impl PackedMatrix {
         Ok(())
     }
 
+    /// Ragged direct-layout fused GEMM: y = X·Ŵᵀ over the concatenated
+    /// token rows of several sequences (`spans[i]` rows belong to
+    /// sequence `i`), written straight into `out` laid out
+    /// `(Σ spans, rows)` — **no yᵀ transpose buffer**. This is the
+    /// serving/training projection entry for mixed prefill+decode
+    /// steps: the kernel walks per-sequence row spans directly, sharding
+    /// the concatenated rows over `std::thread::scope` workers at span
+    /// granularity (a span larger than a worker's budget is split by
+    /// rows — output rows are mutually independent). Within a worker the
+    /// weight-row loop is OUTER, so each (row, group) code tile is
+    /// unpacked once per worker and reused across the worker's whole row
+    /// chunk (the same locality trick as [`Self::grad_input`]).
+    ///
+    /// Every output element accumulates `s·(Σxⱼcⱼ − z·Σxⱼ)` over the
+    /// groups in ascending order — exactly the order of
+    /// [`Self::matmul_t`] / [`Self::matmul_t_rows`] — so the result is
+    /// **bitwise identical** to those entry points for any span shape
+    /// and any `threads` value.
+    pub fn matmul_t_ragged(
+        &self,
+        x: &[f32],
+        spans: &[usize],
+        threads: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let (rows, k, g) = (self.rows, self.cols, self.group);
+        let ng = self.n_groups();
+        let m: usize = spans.iter().sum();
+        if spans.iter().any(|&s| s == 0) {
+            bail!("matmul_t_ragged: empty sequence span");
+        }
+        if x.len() != m * k {
+            bail!("matmul_t_ragged: x has {} elems, expected {}x{}", x.len(), m, k);
+        }
+        if out.len() != m * rows {
+            bail!("matmul_t_ragged: out has {} elems, expected {}x{}", out.len(), m, rows);
+        }
+        if m == 0 || rows == 0 {
+            return Ok(());
+        }
+        let sx = group_sums(x, m, k, g, ng);
+        let (sd, zd) = (self.scales.data(), self.zeros.data());
+        let (bits, sx_ref) = (self.bits, &sx);
+        // One worker's contiguous row chunk starting at x row `row0`.
+        let work = |row0: usize, chunk: &mut [f32]| {
+            let nb = chunk.len() / rows;
+            chunk.fill(0.0);
+            let mut tile = vec![0.0f32; g];
+            for r in 0..rows {
+                let prow = self.row_bytes(r);
+                for kg in 0..ng {
+                    pack::unpack_into_f32(prow, bits, kg * g, &mut tile);
+                    let sc = sd[r * ng + kg];
+                    let zp = zd[r * ng + kg];
+                    for ii in 0..nb {
+                        let xseg = &x[(row0 + ii) * k + kg * g..(row0 + ii) * k + (kg + 1) * g];
+                        let mut dot = 0.0f32;
+                        for j in 0..g {
+                            dot += xseg[j] * tile[j];
+                        }
+                        chunk[ii * rows + r] += sc * (dot - zp * sx_ref[(row0 + ii) * ng + kg]);
+                    }
+                }
+            }
+        };
+        let cuts = ragged_cuts(spans, threads, m);
+        if cuts.len() == 2 {
+            work(0, out);
+            return Ok(());
+        }
+        std::thread::scope(|s| {
+            let mut rest = out;
+            for w in cuts.windows(2) {
+                let (chunk, r) = std::mem::take(&mut rest).split_at_mut((w[1] - w[0]) * rows);
+                rest = r;
+                let work = &work;
+                let row0 = w[0];
+                s.spawn(move || work(row0, chunk));
+            }
+        });
+        Ok(())
+    }
+
     /// Single-row fused matvec: y = Ŵ·x for one activation row — the
     /// autoregressive decode hot path (one token per step). Row-parallel
     /// over the output rows and bitwise identical to a batch-1
@@ -394,14 +477,7 @@ impl PackedMatrix {
         // fills both tensors.
         let mut dsz = vec![0.0f32; rows * 2 * ng];
         if batch > 0 && rows > 0 {
-            // Per-(x-row, group) sums Σ_{j∈g} X[i,j], shared by all rows.
-            let mut sx = vec![0.0f32; batch * ng];
-            for bi in 0..batch {
-                for kg in 0..ng {
-                    sx[bi * ng + kg] =
-                        x[bi * k + kg * g..bi * k + (kg + 1) * g].iter().sum();
-                }
-            }
+            let sx = group_sums(x, batch, k, g, ng);
             let (sd, zd) = (self.scales.data(), self.zeros.data());
             let (bits, sx_ref) = (self.bits, &sx);
             par_row_chunks(&mut dsz, 2 * ng, rows, threads, |r0, chunk| {
@@ -447,14 +523,7 @@ impl PackedMatrix {
     fn matmul_t_yt(&self, xd: &[f32], b: usize, threads: usize, yt: &mut [f32]) {
         let (rows, g, k) = (self.rows, self.group, self.cols);
         let ng = self.n_groups();
-        // Per-(x-row, group) sums: the zero-point term z·Σx is paid once
-        // per group instead of once per element.
-        let mut sx = vec![0.0f32; b * ng];
-        for bi in 0..b {
-            for kg in 0..ng {
-                sx[bi * ng + kg] = xd[bi * k + kg * g..bi * k + (kg + 1) * g].iter().sum();
-            }
-        }
+        let sx = group_sums(xd, b, k, g, ng);
         // yᵀ (rows, b): each worker owns a contiguous slab of output rows.
         let (sd, zd) = (self.scales.data(), self.zeros.data());
         let (bits, sx_ref) = (self.bits, &sx);
@@ -573,12 +642,63 @@ fn check_adapter_shape(scales: &Tensor, zeros: &Tensor, rows: usize, ng: usize) 
     Ok(())
 }
 
+/// Per-(x-row, group) sums `Σ_{j∈g} X[i,j]`, accumulated in sequential
+/// element order — the zero-point folding term `z·Σx` every fused entry
+/// point pays once per group instead of once per element (module docs).
+/// Lives exactly once: the bitwise-equality contract between
+/// `matmul_t`/`matmul_t_rows`/`matmul_t_ragged`/`grad_scales_zeros`
+/// depends on all of them folding the zero point through the SAME
+/// reduction order.
+fn group_sums(x: &[f32], m: usize, k: usize, g: usize, ng: usize) -> Vec<f32> {
+    let mut sx = vec![0.0f32; m * ng];
+    for bi in 0..m {
+        for kg in 0..ng {
+            sx[bi * ng + kg] = x[bi * k + kg * g..bi * k + (kg + 1) * g].iter().sum();
+        }
+    }
+    sx
+}
+
+/// Worker boundaries for [`PackedMatrix::matmul_t_ragged`]: cut the
+/// `m` concatenated rows into ≈`threads` contiguous chunks of at most
+/// `⌈m/threads⌉` rows each, closing a chunk at a sequence-span boundary
+/// when one lands on the budget and splitting inside a span otherwise
+/// (any row cut is exact — output rows are mutually independent), so a
+/// single long prefill span still fans out over all `threads` workers.
+/// Returns ascending cut rows starting at 0 and ending at `m`.
+fn ragged_cuts(spans: &[usize], threads: usize, m: usize) -> Vec<usize> {
+    let threads = threads.max(1).min(m);
+    let budget = m.div_ceil(threads);
+    let mut cuts = vec![0usize];
+    let mut end = 0usize;
+    for &sp in spans {
+        end += sp;
+        loop {
+            let last = *cuts.last().unwrap();
+            if end - last > budget {
+                cuts.push(last + budget);
+            } else {
+                if end - last == budget && end < m {
+                    cuts.push(end);
+                }
+                break;
+            }
+        }
+    }
+    if *cuts.last().unwrap() != m {
+        cuts.push(m);
+    }
+    cuts
+}
+
 /// Shard `out` (a `rows × elems_per_row` row-major buffer) into contiguous
 /// per-worker row slabs and run `f(first_row, slab)` on scoped threads.
 /// With `threads <= 1` (or a single row) the closure runs inline — the
 /// compute path per row is identical either way, which is what makes every
-/// kernel in this module thread-count invariant.
-fn par_row_chunks<F>(out: &mut [f32], elems_per_row: usize, rows: usize, threads: usize, f: F)
+/// kernel in this module thread-count invariant. Shared with the other
+/// row-parallel host kernels (`model::blocks::dense_grad_rows_into`) so
+/// there is one sharding policy.
+pub(crate) fn par_row_chunks<F>(out: &mut [f32], elems_per_row: usize, rows: usize, threads: usize, f: F)
 where
     F: Fn(usize, &mut [f32]) + Sync,
 {
@@ -708,6 +828,73 @@ mod tests {
             pm.matmul_t_rows_scratch(x.data(), batch, 4, &mut out, &mut yt).unwrap();
             assert_eq!(out.as_slice(), y.data(), "rows={rows} batch={batch}");
         }
+    }
+
+    #[test]
+    fn ragged_entry_is_bitwise_equal_to_rows_entry() {
+        // matmul_t_ragged must reproduce matmul_t_rows bit for bit across
+        // bit-widths, groupings, span shapes (single long prefill, pure
+        // decode, mixed ragged) and worker counts.
+        for bits in [2u8, 3, 4] {
+            for group in [None, Some(16)] {
+                let (x, pm) = setup(21, 64, 9, bits, group, 51 + bits as u64);
+                let (b, _) = x.dims2().unwrap();
+                let mut expect = vec![0.0f32; b * pm.rows];
+                pm.matmul_t_rows(x.data(), b, 1, &mut expect).unwrap();
+                for spans in [
+                    vec![9usize],                // one long prefill block
+                    vec![1usize; 9],             // pure decode batch
+                    vec![5usize, 1, 2, 1],       // mixed prefill + decode
+                    vec![2usize, 7],
+                ] {
+                    for threads in [1usize, 2, 3, 8] {
+                        let mut out = vec![f32::NAN; b * pm.rows]; // stale garbage
+                        pm.matmul_t_ragged(x.data(), &spans, threads, &mut out).unwrap();
+                        assert_eq!(
+                            out, expect,
+                            "bits={bits} group={group:?} spans={spans:?} threads={threads}"
+                        );
+                    }
+                }
+            }
+        }
+        // Shape errors are rejected, not mis-indexed.
+        let (x, pm) = setup(6, 32, 4, 4, Some(16), 3);
+        let mut out = vec![0.0f32; 4 * pm.rows];
+        assert!(pm.matmul_t_ragged(x.data(), &[2, 0, 2], 2, &mut out).is_err());
+        assert!(pm.matmul_t_ragged(x.data(), &[3], 2, &mut out).is_err());
+        assert!(pm.matmul_t_ragged(&x.data()[1..], &[4], 2, &mut out).is_err());
+        assert!(pm.matmul_t_ragged(x.data(), &[4], 2, &mut out[1..]).is_err());
+    }
+
+    #[test]
+    fn ragged_cuts_cover_rows_and_fan_out_every_shape() {
+        // Pure decode: every span is its own chunk at enough threads.
+        assert_eq!(ragged_cuts(&[1, 1, 1, 1], 4, 4), vec![0, 1, 2, 3, 4]);
+        // One long prefill splits by rows across all workers.
+        let c = ragged_cuts(&[48], 8, 48);
+        assert_eq!(c, vec![0, 6, 12, 18, 24, 30, 36, 42, 48]);
+        // A single span that is not a multiple of the budget still fans
+        // out (the shape that would lose parallelism with a
+        // boundary-only rule).
+        assert_eq!(ragged_cuts(&[9], 2, 9), vec![0, 5, 9]);
+        assert_eq!(ragged_cuts(&[31, 31], 4, 62), vec![0, 16, 32, 48, 62]);
+        // Mixed prefill + decode: boundaries close chunks when they land
+        // on the budget.
+        let c = ragged_cuts(&[5, 1, 2, 1], 3, 9);
+        assert_eq!(c, vec![0, 3, 6, 9]);
+        // Never more chunks than threads; always cover [0, m] ascending.
+        for (spans, threads) in
+            [(vec![7usize, 1, 1, 3], 3usize), (vec![2, 9, 2], 5), (vec![4], 16)]
+        {
+            let m: usize = spans.iter().sum();
+            let c = ragged_cuts(&spans, threads, m);
+            assert_eq!((c[0], *c.last().unwrap()), (0, m), "{spans:?}");
+            assert!(c.windows(2).all(|w| w[0] < w[1]), "{spans:?}: {c:?}");
+            assert!(c.len() - 1 <= threads.min(m), "{spans:?}: {c:?}");
+        }
+        // Single thread: one chunk.
+        assert_eq!(ragged_cuts(&[3, 3], 1, 6), vec![0, 6]);
     }
 
     #[test]

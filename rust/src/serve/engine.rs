@@ -6,7 +6,15 @@
 //! (`quant::kernels::PackedMatrix::matmul_t` and its serving entry point
 //! `matmul_t_rows_scratch`), and a task is nothing but a set of f32
 //! scale/zero vectors. This module is that claim executed on a plain
-//! host, no `xla` feature required:
+//! host, no `xla` feature required.
+//!
+//! All block math — RMSNorm, rotary, the head-blocked causal attention
+//! kernel, SwiGLU, the packed-projection call — lives in the shared
+//! transformer compute core [`crate::model::blocks`]; this module is
+//! the *serving driver* over it (KV caches, batching, scale swaps,
+//! sampling). The host training backend (`train::host`) drives the very
+//! same functions with a tape, so train-forward vs engine-prefill
+//! parity is **bitwise** (tests/train_host.rs).
 //!
 //! * [`Engine`] — llama-family transformer forward from a
 //!   [`PackedModel`]: embedding gather, RMSNorm, rotary positions,
@@ -52,22 +60,14 @@
 use anyhow::{anyhow, bail, Result};
 
 use super::kvcache::KvCache;
+use crate::model::blocks::{
+    self, attend_seq_chunk, dense_rows_into, ensure, proj_into, rms_norm_rows,
+    rms_norm_rows_into, rope_freqs, silu, AttnScratch, LayerNames, ProjScratch,
+};
 use crate::model::{Checkpoint, PackedModel};
 use crate::runtime::ArtifactMeta;
 use crate::tensor::Tensor;
 use crate::util::Pcg32;
-
-/// RMS-norm epsilon — shared with the host training backend
-/// (`train::host`): a model is tuned under exactly the norm it is
-/// served with.
-pub(crate) const RMS_EPS: f32 = 1e-6;
-
-/// The rotary frequency table for a head dimension — the one formula
-/// both the serving engine and the host training backend rotate with.
-pub(crate) fn rope_freqs(head_dim: usize) -> Vec<f32> {
-    let half = head_dim / 2;
-    (0..half).map(|i| 10000.0f32.powf(-(i as f32) / half as f32)).collect()
-}
 
 /// Static transformer geometry of a served model (llama family:
 /// RMSNorm + rotary + SwiGLU — the architecture the paper quantizes).
@@ -270,18 +270,6 @@ pub struct Engine {
     scratch: Scratch,
 }
 
-struct LayerNames {
-    ln1: String,
-    ln2: String,
-    q: String,
-    k: String,
-    v: String,
-    o: String,
-    gate: String,
-    up: String,
-    down: String,
-}
-
 /// Per-engine activation arena: grown to the high-water mark once, then
 /// reused across decode steps and prefill chunks. Buffers hold stale
 /// data between calls; every consumer writes its full `[..len]` range
@@ -308,25 +296,13 @@ struct Scratch {
     attn: Vec<AttnScratch>,
     /// Last-position rows gathered for the LM head, `(n_seqs, d_model)`.
     last: Vec<f32>,
-    /// yᵀ transpose scratch of the fused kernel
-    /// (`PackedMatrix::matmul_t_rows_scratch`).
-    yt: Vec<f32>,
-}
-
-/// One worker's attention scratch: the `(n_heads, window)` score matrix
-/// plus per-head running max / softmax denominator.
-#[derive(Default)]
-struct AttnScratch {
-    scores: Vec<f32>,
-    head_max: Vec<f32>,
-    head_den: Vec<f32>,
-}
-
-#[inline]
-fn ensure(buf: &mut Vec<f32>, n: usize) {
-    if buf.len() < n {
-        buf.resize(n, 0.0);
-    }
+    /// Per-sequence token counts of the current call — the ragged span
+    /// shape handed to the shared projection call
+    /// ([`blocks::proj_into`]).
+    spans: Vec<usize>,
+    /// Shared kernel scratch (the fused GEMM's yᵀ buffer), owned here so
+    /// the steady-state decode loop does no per-call kernel allocation.
+    proj: ProjScratch,
 }
 
 impl Engine {
@@ -389,17 +365,7 @@ impl Engine {
                     bail!("projection '{prefix}' is {dims:?}, geometry wants ({rows}, {cols})");
                 }
             }
-            layer_names.push(LayerNames {
-                ln1: format!("{lp}.ln1.g"),
-                ln2: format!("{lp}.ln2.g"),
-                q: format!("{lp}.attn.q"),
-                k: format!("{lp}.attn.k"),
-                v: format!("{lp}.attn.v"),
-                o: format!("{lp}.attn.o"),
-                gate: format!("{lp}.mlp.gate"),
-                up: format!("{lp}.mlp.up"),
-                down: format!("{lp}.mlp.down"),
-            });
+            layer_names.push(LayerNames::new(i));
         }
         let freqs = rope_freqs(geom.head_dim());
         // Snapshot the base task's scales/zeros of every packed
@@ -604,7 +570,9 @@ impl Engine {
         let freqs: &[f32] = freqs;
         let d = geom.d_model;
         let (hh, hd) = (geom.n_heads, geom.head_dim());
-        let m: usize = seqs.iter().map(|s| s.len()).sum();
+        scratch.spans.clear();
+        scratch.spans.extend(seqs.iter().map(|s| s.len()));
+        let m: usize = scratch.spans.iter().sum();
 
         // Embedding gather over the concatenated token rows.
         ensure(&mut scratch.x, m * d);
@@ -626,10 +594,10 @@ impl Engine {
             // Pre-norm + the three attention input projections, batched
             // over every row of every sequence.
             let g1 = model.fp_tensor(&ln.ln1).expect("validated").data();
-            rms_norm_rows_into(&scratch.x[..m * d], g1, m, d, &mut scratch.h);
-            proj_into(model, threads, &ln.q, &scratch.h[..m * d], m, &mut scratch.q, &mut scratch.yt)?;
-            proj_into(model, threads, &ln.k, &scratch.h[..m * d], m, &mut scratch.k, &mut scratch.yt)?;
-            proj_into(model, threads, &ln.v, &scratch.h[..m * d], m, &mut scratch.v, &mut scratch.yt)?;
+            rms_norm_rows_into(&scratch.x[..m * d], g1, m, d, &mut scratch.h, None);
+            proj_into(model, threads, &ln.q, &scratch.h[..m * d], &scratch.spans, &mut scratch.q, &mut scratch.proj)?;
+            proj_into(model, threads, &ln.k, &scratch.h[..m * d], &scratch.spans, &mut scratch.k, &mut scratch.proj)?;
+            proj_into(model, threads, &ln.v, &scratch.h[..m * d], &scratch.spans, &mut scratch.v, &mut scratch.proj)?;
             ensure(&mut scratch.ctx, m * d);
             // Rotary + cache append + attention, sharded across batch
             // rows: sequences are mutually independent (each attends
@@ -709,20 +677,17 @@ impl Engine {
                 });
             }
             // Attention output + residual, then the SwiGLU MLP + residual.
-            proj_into(model, threads, &ln.o, &scratch.ctx[..m * d], m, &mut scratch.o, &mut scratch.yt)?;
+            proj_into(model, threads, &ln.o, &scratch.ctx[..m * d], &scratch.spans, &mut scratch.o, &mut scratch.proj)?;
             for (xv, ov) in scratch.x[..m * d].iter_mut().zip(&scratch.o[..m * d]) {
                 *xv += ov;
             }
             let g2 = model.fp_tensor(&ln.ln2).expect("validated").data();
-            rms_norm_rows_into(&scratch.x[..m * d], g2, m, d, &mut scratch.h);
-            proj_into(model, threads, &ln.gate, &scratch.h[..m * d], m, &mut scratch.gate, &mut scratch.yt)?;
-            proj_into(model, threads, &ln.up, &scratch.h[..m * d], m, &mut scratch.up, &mut scratch.yt)?;
+            rms_norm_rows_into(&scratch.x[..m * d], g2, m, d, &mut scratch.h, None);
+            proj_into(model, threads, &ln.gate, &scratch.h[..m * d], &scratch.spans, &mut scratch.gate, &mut scratch.proj)?;
+            proj_into(model, threads, &ln.up, &scratch.h[..m * d], &scratch.spans, &mut scratch.up, &mut scratch.proj)?;
             let mf = m * geom.d_ff;
-            ensure(&mut scratch.act, mf);
-            for j in 0..mf {
-                scratch.act[j] = silu(scratch.gate[j]) * scratch.up[j];
-            }
-            proj_into(model, threads, &ln.down, &scratch.act[..mf], m, &mut scratch.down, &mut scratch.yt)?;
+            blocks::swiglu_rows_into(&scratch.gate[..mf], &scratch.up[..mf], mf, &mut scratch.act);
+            proj_into(model, threads, &ln.down, &scratch.act[..mf], &scratch.spans, &mut scratch.down, &mut scratch.proj)?;
             for (xv, dv) in scratch.x[..m * d].iter_mut().zip(&scratch.down[..m * d]) {
                 *xv += dv;
             }
@@ -741,274 +706,11 @@ impl Engine {
             cache.advance(seq.len());
         }
         let gf = model.fp_tensor("final_norm.g").expect("validated").data();
-        rms_norm_rows_into(&scratch.last[..n_seqs * d], gf, n_seqs, d, &mut scratch.h);
+        rms_norm_rows_into(&scratch.last[..n_seqs * d], gf, n_seqs, d, &mut scratch.h, None);
         let head = model.fp_tensor(head_name).expect("validated");
         let mut logits = vec![0.0f32; n_seqs * geom.vocab];
         dense_rows_into(head, &scratch.h[..n_seqs * d], n_seqs, &mut logits);
         Ok(logits)
-    }
-}
-
-/// One projection over `b` activation rows into a scratch-backed output
-/// slab: fused packed GEMM when the projection is quantized (through the
-/// kernel's scratch entry point — no per-call allocation), dense row-dot
-/// fallback otherwise.
-fn proj_into(
-    model: &PackedModel,
-    threads: usize,
-    prefix: &str,
-    x: &[f32],
-    b: usize,
-    out: &mut Vec<f32>,
-    yt: &mut Vec<f32>,
-) -> Result<()> {
-    if let Some(m) = model.matrix(prefix) {
-        ensure(out, b * m.rows);
-        m.matmul_t_rows_scratch(x, b, threads, &mut out[..b * m.rows], yt)
-    } else {
-        let w = model
-            .fp_tensor(&format!("{prefix}.w"))
-            .ok_or_else(|| anyhow!("no projection '{prefix}'"))?;
-        let (o, _) = w.dims2()?;
-        ensure(out, b * o);
-        dense_rows_into(w, x, b, &mut out[..b * o]);
-        Ok(())
-    }
-}
-
-/// One worker's share of the attention pass: rotary + cache append +
-/// [`attend_row`] for a contiguous range of sequences. `q_c`/`k_c`/
-/// `v_c`/`ctx_c` are that range's row slabs; every sequence only
-/// touches its own cache, so chunks run concurrently and the
-/// per-sequence arithmetic is identical at any worker count.
-#[allow(clippy::too_many_arguments)]
-fn attend_seq_chunk(
-    freqs: &[f32],
-    hh: usize,
-    hd: usize,
-    d: usize,
-    layer: usize,
-    seq_chunk: &[&[u32]],
-    cache_chunk: &mut [&mut KvCache],
-    q_c: &mut [f32],
-    k_c: &mut [f32],
-    v_c: &[f32],
-    ctx_c: &mut [f32],
-    attn: &mut AttnScratch,
-) {
-    let mut r0 = 0usize;
-    for (si, seq) in seq_chunk.iter().enumerate() {
-        let cache = &mut *cache_chunk[si];
-        let base = cache.pos();
-        for ti in 0..seq.len() {
-            let r = r0 + ti;
-            let abs = base + ti;
-            rope_row_at(freqs, hh, hd, &mut q_c[r * d..(r + 1) * d], abs);
-            rope_row_at(freqs, hh, hd, &mut k_c[r * d..(r + 1) * d], abs);
-            cache.write(layer, abs, &k_c[r * d..(r + 1) * d], &v_c[r * d..(r + 1) * d]);
-            attend_row(
-                hh,
-                hd,
-                cache,
-                layer,
-                abs,
-                &q_c[r * d..(r + 1) * d],
-                &mut ctx_c[r * d..(r + 1) * d],
-                attn,
-            );
-        }
-        r0 += seq.len();
-    }
-}
-
-/// Rotate one (d_model,) row in place at absolute position `pos`
-/// (per-head half-split rotary, matching python/compile/model.py).
-fn rope_row_at(freqs: &[f32], n_heads: usize, head_dim: usize, row: &mut [f32], pos: usize) {
-    let half = head_dim / 2;
-    let p = pos as f32;
-    for h in 0..n_heads {
-        let s = &mut row[h * head_dim..(h + 1) * head_dim];
-        for i in 0..half {
-            let (sin, cos) = (p * freqs[i]).sin_cos();
-            let (x1, x2) = (s[i], s[i + half]);
-            s[i] = x1 * cos - x2 * sin;
-            s[i + half] = x1 * sin + x2 * cos;
-        }
-    }
-}
-
-/// Head-blocked causal attention of one already-roped query row at
-/// absolute position `abs` over the cache window (which already contains
-/// `abs`). Writes the (d_model,) context row.
-///
-/// The window's K/V rows are streamed as contiguous slabs
-/// ([`KvCache::window_slabs`]) and each cached row is visited ONCE for
-/// all heads (score pass over K, accumulate pass over V) with 4-way
-/// blocked dots — versus the scalar per-head loop that re-walked the
-/// whole window `n_heads` times. Scores/max/denominator live in the
-/// calling worker's [`AttnScratch`]. The arithmetic per (head, position)
-/// is a fixed-order reduction independent of batch composition and
-/// thread count, preserving the engine's bitwise invariances.
-#[allow(clippy::too_many_arguments)]
-fn attend_row(
-    n_heads: usize,
-    head_dim: usize,
-    cache: &KvCache,
-    layer: usize,
-    abs: usize,
-    q: &[f32],
-    ctx: &mut [f32],
-    scratch: &mut AttnScratch,
-) {
-    let AttnScratch { scores, head_max, head_den } = scratch;
-    let n = cache.window_len(abs);
-    let d = n_heads * head_dim;
-    let inv = 1.0 / (head_dim as f32).sqrt();
-    scores.clear();
-    scores.resize(n_heads * n, 0.0);
-    head_max.clear();
-    head_max.resize(n_heads, f32::NEG_INFINITY);
-    head_den.clear();
-    head_den.resize(n_heads, 0.0);
-    let slabs = cache.window_slabs(layer, abs);
-
-    // Score pass: one sweep over the contiguous K slabs, all heads per row.
-    let mut j = 0usize;
-    for (kseg, _) in &slabs {
-        for krow in kseg.chunks_exact(d) {
-            for h in 0..n_heads {
-                let sc = inv
-                    * dot_blocked(
-                        &q[h * head_dim..(h + 1) * head_dim],
-                        &krow[h * head_dim..(h + 1) * head_dim],
-                    );
-                scores[h * n + j] = sc;
-                if sc > head_max[h] {
-                    head_max[h] = sc;
-                }
-            }
-            j += 1;
-        }
-    }
-    // Stable softmax numerators + denominators, per head.
-    for h in 0..n_heads {
-        let mx = head_max[h];
-        let mut den = 0.0f32;
-        for sc in scores[h * n..(h + 1) * n].iter_mut() {
-            *sc = (*sc - mx).exp();
-            den += *sc;
-        }
-        head_den[h] = den;
-    }
-    // Accumulate pass: one sweep over the contiguous V slabs, then one
-    // division per head (Σ wⱼ·vⱼ / Σ wⱼ).
-    ctx[..d].fill(0.0);
-    let mut j = 0usize;
-    for (_, vseg) in &slabs {
-        for vrow in vseg.chunks_exact(d) {
-            for h in 0..n_heads {
-                axpy_blocked(
-                    scores[h * n + j],
-                    &vrow[h * head_dim..(h + 1) * head_dim],
-                    &mut ctx[h * head_dim..(h + 1) * head_dim],
-                );
-            }
-            j += 1;
-        }
-    }
-    for h in 0..n_heads {
-        let id = 1.0 / head_den[h];
-        for t in ctx[h * head_dim..(h + 1) * head_dim].iter_mut() {
-            *t *= id;
-        }
-    }
-}
-
-/// Fixed-order 4-accumulator dot product (deterministic; lets the
-/// autovectorizer keep four independent FMA chains in flight).
-#[inline]
-fn dot_blocked(a: &[f32], b: &[f32]) -> f32 {
-    let n4 = a.len() / 4 * 4;
-    let mut acc = [0.0f32; 4];
-    let mut i = 0;
-    while i < n4 {
-        acc[0] += a[i] * b[i];
-        acc[1] += a[i + 1] * b[i + 1];
-        acc[2] += a[i + 2] * b[i + 2];
-        acc[3] += a[i + 3] * b[i + 3];
-        i += 4;
-    }
-    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
-    for k in n4..a.len() {
-        s += a[k] * b[k];
-    }
-    s
-}
-
-/// y += w · v, 4-way blocked, fixed order.
-#[inline]
-fn axpy_blocked(w: f32, v: &[f32], y: &mut [f32]) {
-    let n4 = v.len() / 4 * 4;
-    let mut i = 0;
-    while i < n4 {
-        y[i] += w * v[i];
-        y[i + 1] += w * v[i + 1];
-        y[i + 2] += w * v[i + 2];
-        y[i + 3] += w * v[i + 3];
-        i += 4;
-    }
-    for k in n4..v.len() {
-        y[k] += w * v[k];
-    }
-}
-
-#[inline]
-fn silu(x: f32) -> f32 {
-    x / (1.0 + (-x).exp())
-}
-
-/// RMSNorm over `b` rows of width `d` into a scratch-backed output slab:
-/// g · x · rsqrt(mean(x²) + ε).
-fn rms_norm_rows_into(x: &[f32], g: &[f32], b: usize, d: usize, out: &mut Vec<f32>) {
-    ensure(out, b * d);
-    for bi in 0..b {
-        let xr = &x[bi * d..(bi + 1) * d];
-        let mut ss = 0.0f32;
-        for &v in xr {
-            ss += v * v;
-        }
-        let inv = 1.0 / (ss / d as f32 + RMS_EPS).sqrt();
-        let orow = &mut out[bi * d..(bi + 1) * d];
-        for j in 0..d {
-            orow[j] = g[j] * xr[j] * inv;
-        }
-    }
-}
-
-/// Allocating [`rms_norm_rows_into`] (reference path + tests).
-fn rms_norm_rows(x: &[f32], g: &[f32], b: usize, d: usize) -> Vec<f32> {
-    let mut out = Vec::new();
-    rms_norm_rows_into(x, g, b, d, &mut out);
-    out
-}
-
-/// Dense projection fallback and LM head: y (b, out) = X · Wᵀ with
-/// W row-major (out, in), accumulated row by row in a fixed order
-/// (deterministic, batch-row independent).
-fn dense_rows_into(w: &Tensor, x: &[f32], b: usize, y: &mut [f32]) {
-    let (o, i) = w.dims2().expect("dense projection is 2-D");
-    let wd = w.data();
-    for bi in 0..b {
-        let xr = &x[bi * i..(bi + 1) * i];
-        let yr = &mut y[bi * o..(bi + 1) * o];
-        for (r, yv) in yr.iter_mut().enumerate() {
-            let wr = &wd[r * i..(r + 1) * i];
-            let mut acc = 0.0f32;
-            for j in 0..i {
-                acc += xr[j] * wr[j];
-            }
-            *yv = acc;
-        }
     }
 }
 
@@ -1208,22 +910,5 @@ mod tests {
         assert!(odd.validated().is_err());
         let zero = ModelGeom { n_layers: 0, ..ok };
         assert!(zero.validated().is_err());
-    }
-
-    #[test]
-    fn blocked_dot_and_axpy_match_scalar() {
-        let a: Vec<f32> = (0..23).map(|i| (i as f32) * 0.3 - 2.0).collect();
-        let b: Vec<f32> = (0..23).map(|i| 1.5 - (i as f32) * 0.11).collect();
-        let scalar: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
-        assert!((dot_blocked(&a, &b) - scalar).abs() < 1e-4);
-        let mut y = vec![0.5f32; 23];
-        let mut y_ref = y.clone();
-        axpy_blocked(0.7, &a, &mut y);
-        for (yr, av) in y_ref.iter_mut().zip(&a) {
-            *yr += 0.7 * av;
-        }
-        for (u, v) in y.iter().zip(&y_ref) {
-            assert!((u - v).abs() < 1e-6);
-        }
     }
 }

@@ -16,6 +16,34 @@
 //! through [`PackedMatrix::grad_input`] without ever materializing a
 //! dense Ŵ.
 //!
+//! **The training forward IS the serving forward plus a tape.** Every
+//! block primitive — RMSNorm, rotary, the head-blocked fixed-order
+//! causal attention kernel, SwiGLU, the packed-projection call — comes
+//! from the shared transformer compute core
+//! ([`crate::model::blocks`]), the same functions `serve::engine`
+//! decodes through. The only training-side difference is
+//! [`blocks::Tape`]: with `Tape::Keep` the attention kernel saves the
+//! causal softmax probabilities for reverse mode, with `Tape::None`
+//! (loss/perplexity evaluation) only one O(window) score row is ever
+//! live. Consequently the trainer-vs-engine forward parity test pins
+//! **bitwise** equality, not a tolerance (tests/train_host.rs).
+//!
+//! Steady-state memory discipline mirrors the engine's scratch arena:
+//! a [`TapeArena`] owns every activation slab of forward *and*
+//! backward (tape layers, probs tensors, gradient slabs, per-worker
+//! attention scratch, the kernel's yᵀ buffer, the resolved per-layer
+//! tensor names), grown to the high-water mark once and reused across
+//! training steps and eval batches — the training loop performs no
+//! per-step activation allocation (benches/finetune_step.rs counts
+//! allocator traffic per step to keep this honest).
+//!
+//! The attention pass — forward *and* backward — shards batch rows
+//! (sequences) over `std::thread::scope` workers with per-worker
+//! scratch, exactly like the engine's `attend_seq_chunk`: sequences
+//! are mutually independent and every per-(head, position) reduction
+//! has a fixed order, so a training step is **bit-identical at any
+//! `PEQA_THREADS` value**.
+//!
 //! Consequences the tests pin:
 //! * the packed integer codes and every fp tensor (embeddings, norms,
 //!   LM head) are bit-identical before and after training — only
@@ -24,19 +52,19 @@
 //!   kilobytes against the megabytes of packed codes
 //!   ([`Tuner::trainable_state_bytes`], the paper's Table 1 optimizer
 //!   memory story, cross-checkable against `memmodel::peqa_trainable`);
-//! * every kernel on both passes accumulates in a fixed order, so a
-//!   training step is **bit-identical at any `PEQA_THREADS` value**;
 //! * the tuned scales, extracted with
 //!   [`PackedModel::extract_adapter`], are a drop-in
 //!   `serve::AdapterStore` adapter: `peqa finetune` writes a file that
 //!   `peqa serve` scale-swaps without conversion.
 //!
-//! The forward here mirrors `serve::engine` (same RMS epsilon, rotary
-//! table and SwiGLU) but recomputes full-sequence activations with a
-//! tape instead of decoding through KV caches — training wants every
-//! position's logits and the saved activations for backward.
-
-use std::collections::HashMap;
+//! [`MultiTaskTuner`] stacks N per-task scale/zero + Adam states onto
+//! ONE shared [`HostPeqaTuner`] (and thus one shared packed model):
+//! switching the active task swaps only kilobytes of f32 tensors —
+//! training-side scale swap, the mirror of the serving scheduler's.
+//! Because a task's step depends only on its own scales/zeros plus the
+//! frozen codes, round-robin multi-task tuning is *bitwise* the N
+//! independent single-task runs while holding the packed codes in
+//! memory once.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -44,14 +72,19 @@ use super::optim::Adam;
 use super::{StepState, Tuner};
 use crate::config::TrainConfig;
 use crate::data::Batch;
+use crate::model::blocks::{
+    attend_seq_backward, attend_seq_tape, dense_grad_rows_into, dense_rows_into, ensure,
+    proj_into, rms_backward_into, rms_norm_rows_into, rope_freqs, swiglu_backward_into,
+    swiglu_rows_into, AttnScratch, LayerNames, ProjScratch, Tape,
+};
 use crate::model::{Checkpoint, PackedModel};
 use crate::quant::PackedMatrix;
-// RMS_EPS and rope_freqs are shared with the serving engine: a model is
-// tuned under exactly the norm and rotary table it is served with
-// (tests/train_host.rs pins train-forward vs engine parity).
-use crate::serve::engine::{rope_freqs, RMS_EPS};
 use crate::serve::ModelGeom;
 use crate::tensor::Tensor;
+
+/// Projection slots per layer, in `prefixes` order (q k v o gate up
+/// down) — the index base of [`TapeArena`]'s gradient table.
+const SLOTS: usize = 7;
 
 /// Host scale-only PEQA tuner (see module docs).
 pub struct HostPeqaTuner {
@@ -64,6 +97,7 @@ pub struct HostPeqaTuner {
     prefixes: Vec<String>,
     opt: Adam,
     state: StepState,
+    arena: TapeArena,
 }
 
 impl HostPeqaTuner {
@@ -95,7 +129,7 @@ impl HostPeqaTuner {
         if model.fp_tensor("final_norm.g").is_none() {
             bail!("packed model missing 'final_norm.g'");
         }
-        let mut prefixes = Vec::with_capacity(geom.n_layers * 7);
+        let mut prefixes = Vec::with_capacity(geom.n_layers * SLOTS);
         for i in 0..geom.n_layers {
             let lp = format!("layers.{i}");
             for ln in ["ln1", "ln2"] {
@@ -130,14 +164,7 @@ impl HostPeqaTuner {
                 prefixes.push(prefix);
             }
         }
-        let mut sizes = Vec::new();
-        for p in &prefixes {
-            let m = model.matrix(p).expect("validated above");
-            sizes.push(m.scales.len());
-            if train_zeros {
-                sizes.push(m.zeros.len());
-            }
-        }
+        let sizes = opt_sizes(&model, &prefixes, train_zeros);
         let state = StepState::new(cfg.log_every);
         Ok(HostPeqaTuner {
             model,
@@ -148,6 +175,7 @@ impl HostPeqaTuner {
             prefixes,
             opt: Adam::new(&sizes),
             state,
+            arena: TapeArena::new(),
         })
     }
 
@@ -180,9 +208,12 @@ impl HostPeqaTuner {
         self.model.extract_adapter(self.train_zeros)
     }
 
-    /// Forward-only masked loss of one batch (no gradients, no state).
-    pub fn loss(&self, batch: &Batch) -> Result<f32> {
-        let (sum, count) = batch_nll(&self.model, &self.geom, self.threads, batch)?;
+    /// Forward-only masked loss of one batch (no gradients, no
+    /// optimizer state — but the activation arena is reused, hence
+    /// `&mut self`).
+    pub fn loss(&mut self, batch: &Batch) -> Result<f32> {
+        let Self { model, geom, threads, arena, .. } = self;
+        let (sum, count) = batch_nll(model, geom, *threads, batch, arena)?;
         if count == 0.0 {
             bail!("batch mask is all zero — no loss tokens");
         }
@@ -190,33 +221,54 @@ impl HostPeqaTuner {
     }
 
     /// Loss and the per-projection (ds, dz) gradients of one batch,
-    /// without touching optimizer or model state — what `step` consumes
-    /// and what the gradcheck tests probe directly. Gradients come back
-    /// in `prefixes` order.
-    pub fn forward_backward(&self, batch: &Batch) -> Result<(f32, Vec<(String, Tensor, Tensor)>)> {
-        let (bsz, t_len, tokens) = check_batch(batch, self.geom.vocab)?;
-        let tape = forward_tape(&self.model, &self.geom, self.threads, &tokens, bsz, t_len, true)?;
-        let denom: f32 = batch.mask.iter().sum();
-        if denom <= 0.0 {
-            bail!("batch mask is all zero — nothing to train on");
-        }
-        let (loss, dlogits) =
-            loss_and_dlogits(&tape.logits, &tokens, &batch.mask, bsz, t_len, self.geom.vocab);
-        let by_prefix = backward(&self.model, &self.geom, self.threads, &tape, &dlogits, bsz, t_len)?;
+    /// without touching optimizer or model state — the diagnostic
+    /// surface the gradcheck tests probe directly. Gradients come back
+    /// in `prefixes` order. ([`Tuner::step`] uses the same pass but
+    /// leaves the gradients in the arena instead of cloning them out.)
+    pub fn forward_backward(
+        &mut self,
+        batch: &Batch,
+    ) -> Result<(f32, Vec<(String, Tensor, Tensor)>)> {
+        let loss = self.forward_backward_into(batch)?;
         let mut out = Vec::with_capacity(self.prefixes.len());
-        for p in &self.prefixes {
-            let (ds, dz) = by_prefix
-                .get(p)
+        for (gi, p) in self.prefixes.iter().enumerate() {
+            let (ds, dz) = self.arena.grads[gi]
+                .as_ref()
                 .ok_or_else(|| anyhow!("backward produced no gradient for '{p}'"))?;
             out.push((p.clone(), ds.clone(), dz.clone()));
         }
         Ok((loss, out))
     }
+
+    /// One forward + backward: loss returned, (ds, dz) gradients left in
+    /// `self.arena.grads` (per projection, `prefixes` order).
+    fn forward_backward_into(&mut self, batch: &Batch) -> Result<f32> {
+        let Self { model, geom, threads, arena, .. } = self;
+        let (bsz, t_len) = check_batch_into(batch, geom.vocab, &mut arena.tokens)?;
+        let denom: f32 = batch.mask.iter().sum();
+        if denom <= 0.0 {
+            bail!("batch mask is all zero — nothing to train on");
+        }
+        forward_tape(model, geom, *threads, bsz, t_len, true, arena)?;
+        let m = bsz * t_len;
+        let TapeArena { tokens, logits, dlogits, .. } = arena;
+        let loss = loss_and_dlogits_into(
+            &logits[..m * geom.vocab],
+            tokens,
+            &batch.mask,
+            bsz,
+            t_len,
+            geom.vocab,
+            dlogits,
+        );
+        backward(model, geom, *threads, bsz, t_len, arena)?;
+        Ok(loss)
+    }
 }
 
 impl Tuner for HostPeqaTuner {
     fn step(&mut self, batch: &Batch) -> Result<f32> {
-        let (loss, grads) = self.forward_backward(batch)?;
+        let loss = self.forward_backward_into(batch)?;
         if !loss.is_finite() {
             bail!(
                 "non-finite loss {loss} at step {} — reduce the learning rate",
@@ -226,9 +278,10 @@ impl Tuner for HostPeqaTuner {
         self.state.step += 1;
         let t = self.state.step;
         let lr = self.cfg.lr_at(t) as f32;
-        let Self { model, opt, train_zeros, .. } = self;
+        let Self { model, opt, train_zeros, prefixes, arena, .. } = self;
         let mut idx = 0usize;
-        for (prefix, ds, dz) in &grads {
+        for (gi, prefix) in prefixes.iter().enumerate() {
+            let (ds, dz) = arena.grads[gi].as_ref().expect("backward fills every projection");
             let m = model.matrix_mut(prefix).expect("validated at construction");
             opt.step_tensor(idx, t, lr, m.scales.data_mut(), ds.data());
             idx += 1;
@@ -267,11 +320,197 @@ impl Tuner for HostPeqaTuner {
     }
 }
 
+/// Adam slot sizes for `prefixes` over `model` (scales, then zeros when
+/// trained, per projection — the layout `step` walks).
+fn opt_sizes(model: &PackedModel, prefixes: &[String], train_zeros: bool) -> Vec<usize> {
+    let mut sizes = Vec::new();
+    for p in prefixes {
+        let m = model.matrix(p).expect("validated at construction");
+        sizes.push(m.scales.len());
+        if train_zeros {
+            sizes.push(m.zeros.len());
+        }
+    }
+    sizes
+}
+
+// ------------------------------------------------------ multi-task tuner
+
+/// Round-robin multi-task PEQA tuning over ONE shared packed model.
+///
+/// Each task owns exactly what the paper says a task is — per-(row,
+/// group) scale/zero tensors — plus its Adam moments and step
+/// bookkeeping. The packed integer codes, embeddings, norms and LM head
+/// are shared by every task and never move. Switching the active task
+/// swaps only those kilobyte-scale f32 buffers into the shared
+/// [`HostPeqaTuner`] (the training-side mirror of the serving
+/// scheduler's scale swap). A task's gradient depends only on its own
+/// scales/zeros and the frozen shared tensors, so interleaving tasks
+/// round-robin is **bitwise identical** to N independent single-task
+/// runs — pinned by tests/train_host.rs — while the code bytes are held
+/// once.
+pub struct MultiTaskTuner {
+    tuner: HostPeqaTuner,
+    slots: Vec<TaskSlot>,
+    active: usize,
+}
+
+struct TaskSlot {
+    name: String,
+    /// The task's per-projection (scales, zeros), parked here while the
+    /// task is inactive. The ACTIVE task's tensors live in the shared
+    /// model; its slot holds the buffers last swapped out (garbage by
+    /// invariant, reused as swap space).
+    sz: Vec<(Tensor, Tensor)>,
+    opt: Adam,
+    state: StepState,
+}
+
+impl MultiTaskTuner {
+    /// Stack one task state per `names` entry onto `tuner`, every task
+    /// starting from the tuner's current scales/zeros (the shared base)
+    /// with fresh Adam/step state. The tuner must be unstepped —
+    /// otherwise task 0 would silently inherit its warm optimizer
+    /// moments and mid-schedule step counter while the other tasks
+    /// start fresh, breaking the "round-robin ≡ N independent runs"
+    /// invariant.
+    pub fn new(tuner: HostPeqaTuner, names: &[String]) -> Result<MultiTaskTuner> {
+        if names.is_empty() {
+            bail!("multi-task tuning needs at least one task");
+        }
+        if tuner.step_count() != 0 {
+            bail!(
+                "multi-task tuning must start from an unstepped tuner \
+                 (this one has taken {} steps — its warm Adam/step state \
+                 would leak into task 0 only)",
+                tuner.step_count()
+            );
+        }
+        for (i, n) in names.iter().enumerate() {
+            if names[..i].contains(n) {
+                bail!("duplicate task name '{n}'");
+            }
+        }
+        let base_sz: Vec<(Tensor, Tensor)> = tuner
+            .prefixes
+            .iter()
+            .map(|p| {
+                let m = tuner.model.matrix(p).expect("validated at construction");
+                (m.scales.clone(), m.zeros.clone())
+            })
+            .collect();
+        let sizes = opt_sizes(&tuner.model, &tuner.prefixes, tuner.train_zeros);
+        let log_every = tuner.cfg.log_every;
+        let slots = names
+            .iter()
+            .map(|n| TaskSlot {
+                name: n.clone(),
+                sz: base_sz.clone(),
+                opt: Adam::new(&sizes),
+                state: StepState::new(log_every),
+            })
+            .collect();
+        Ok(MultiTaskTuner { tuner, slots, active: 0 })
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn task_names(&self) -> Vec<&str> {
+        self.slots.iter().map(|s| s.name.as_str()).collect()
+    }
+
+    /// Trainable parameters per task (every task trains the same shape).
+    pub fn trainable_params(&self) -> usize {
+        self.tuner.trainable_params()
+    }
+
+    /// Trainable + Adam bytes of ONE task (the shared tuner's formula).
+    pub fn trainable_state_bytes(&self) -> u64 {
+        self.tuner.trainable_state_bytes()
+    }
+
+    /// Trainable + Adam bytes across ALL tasks — still kilobytes each,
+    /// N of them, against ONE copy of the packed codes.
+    pub fn trainable_state_bytes_total(&self) -> u64 {
+        self.tuner.trainable_state_bytes() * self.slots.len() as u64
+    }
+
+    pub fn packed_bytes(&self) -> usize {
+        self.tuner.model().packed_bytes()
+    }
+
+    /// One optimizer step for task `idx` on `batch` (activates the task
+    /// first — a kilobyte-scale swap when the task changes).
+    pub fn step_task(&mut self, idx: usize, batch: &Batch) -> Result<f32> {
+        self.activate(idx);
+        self.tuner.step(batch)
+    }
+
+    /// Forward-only masked loss of `batch` under task `idx`.
+    pub fn loss(&mut self, idx: usize, batch: &Batch) -> Result<f32> {
+        self.activate(idx);
+        self.tuner.loss(batch)
+    }
+
+    /// Per-step losses of task `idx`, in order.
+    pub fn losses(&mut self, idx: usize) -> &[f32] {
+        self.activate(idx);
+        self.tuner.losses()
+    }
+
+    pub fn step_count(&mut self, idx: usize) -> usize {
+        self.activate(idx);
+        self.tuner.step_count()
+    }
+
+    /// Task `idx`'s adapter in the exact `serve::AdapterStore` format —
+    /// N of these out of one shared model is the multi-task serving
+    /// story's training half.
+    pub fn extract_adapter(&mut self, idx: usize) -> Checkpoint {
+        self.activate(idx);
+        self.tuner.extract_adapter()
+    }
+
+    /// The shared model with task `idx`'s scales/zeros active
+    /// (evaluation: `eval::host_perplexity` on a task's view).
+    pub fn model(&mut self, idx: usize) -> &PackedModel {
+        self.activate(idx);
+        self.tuner.model()
+    }
+
+    /// Make task `idx` the live state of the shared tuner: swap the
+    /// previous task's scale/zero tensors + Adam + step bookkeeping out
+    /// and `idx`'s in. O(#projections) pointer swaps of kilobyte f32
+    /// tensors — the packed codes never move.
+    fn activate(&mut self, idx: usize) {
+        assert!(idx < self.slots.len(), "task index {idx} out of {}", self.slots.len());
+        if idx == self.active {
+            return;
+        }
+        let MultiTaskTuner { tuner, slots, active } = self;
+        for who in [*active, idx] {
+            let slot = &mut slots[who];
+            for (i, prefix) in tuner.prefixes.iter().enumerate() {
+                let m = tuner.model.matrix_mut(prefix).expect("validated at construction");
+                std::mem::swap(&mut m.scales, &mut slot.sz[i].0);
+                std::mem::swap(&mut m.zeros, &mut slot.sz[i].1);
+            }
+            std::mem::swap(&mut tuner.opt, &mut slot.opt);
+            std::mem::swap(&mut tuner.state, &mut slot.state);
+        }
+        self.active = idx;
+    }
+}
+
+// ------------------------------------------------------------ free fns
+
 /// Full-sequence logits of ONE sequence under the training forward,
 /// `(tokens.len() · vocab)` row-major — the parity surface the tests
-/// compare against `serve::Engine::prefill` and the dense
-/// `reference_forward`: the model a tuner trains must be the model the
-/// engine serves.
+/// compare against `serve::Engine::prefill` (bitwise — same compute
+/// core) and the dense `reference_forward` (≤ 1e-4): the model a tuner
+/// trains must BE the model the engine serves.
 pub fn forward_logits(
     model: &PackedModel,
     geom: &ModelGeom,
@@ -281,33 +520,37 @@ pub fn forward_logits(
     if tokens.is_empty() {
         bail!("forward_logits needs at least one token");
     }
-    let toks: Vec<usize> = tokens
-        .iter()
-        .map(|&t| {
-            let t = t as usize;
-            if t >= geom.vocab {
-                bail!("token id {t} out of vocab {}", geom.vocab);
-            }
-            Ok(t)
-        })
-        .collect::<Result<_>>()?;
-    let tape = forward_tape(model, geom, threads, &toks, 1, toks.len(), false)?;
-    Ok(tape.logits)
+    let mut arena = TapeArena::new();
+    arena.tokens.clear();
+    for &t in tokens {
+        let t = t as usize;
+        if t >= geom.vocab {
+            bail!("token id {t} out of vocab {}", geom.vocab);
+        }
+        arena.tokens.push(t);
+    }
+    let t_len = tokens.len();
+    forward_tape(model, geom, threads, 1, t_len, false, &mut arena)?;
+    arena.logits.truncate(t_len * geom.vocab);
+    Ok(arena.logits)
 }
 
 /// Masked NLL of one batch under a packed model's forward — the host
 /// evaluation primitive shared with `eval::host_perplexity`. Returns
-/// `(Σ mask·nll, Σ mask)`.
+/// `(Σ mask·nll, Σ mask)`. The caller owns the [`TapeArena`] so
+/// repeated evaluation (perplexity over many batches) reuses one set of
+/// activation slabs instead of allocating per batch.
 pub fn batch_nll(
     model: &PackedModel,
     geom: &ModelGeom,
     threads: usize,
     batch: &Batch,
+    arena: &mut TapeArena,
 ) -> Result<(f64, f64)> {
-    let (bsz, t_len, tokens) = check_batch(batch, geom.vocab)?;
+    let (bsz, t_len) = check_batch_into(batch, geom.vocab, &mut arena.tokens)?;
     // Forward-only: no activation tape retained (eval pays for logits,
     // not for backward state).
-    let tape = forward_tape(model, geom, threads, &tokens, bsz, t_len, false)?;
+    forward_tape(model, geom, threads, bsz, t_len, false, arena)?;
     let vocab = geom.vocab;
     let mut sum = 0.0f64;
     let mut count = 0.0f64;
@@ -317,8 +560,8 @@ pub fn batch_nll(
             if m == 0.0 {
                 continue;
             }
-            let row = &tape.logits[(b * t_len + t) * vocab..(b * t_len + t + 1) * vocab];
-            let target = tokens[b * t_len + t + 1];
+            let row = &arena.logits[(b * t_len + t) * vocab..(b * t_len + t + 1) * vocab];
+            let target = arena.tokens[b * t_len + t + 1];
             sum += m as f64 * nll_row(row, target);
             count += m as f64;
         }
@@ -339,8 +582,9 @@ fn validate_geom(geom: &ModelGeom) -> Result<()> {
     Ok(())
 }
 
-/// Validate batch shapes and convert tokens to indices.
-fn check_batch(batch: &Batch, vocab: usize) -> Result<(usize, usize, Vec<usize>)> {
+/// Validate batch shapes and write the token indices into `tokens`
+/// (reused across steps — no per-step allocation).
+fn check_batch_into(batch: &Batch, vocab: usize, tokens: &mut Vec<usize>) -> Result<(usize, usize)> {
     let (bsz, t_len) = (batch.batch, batch.seq);
     if t_len < 2 {
         bail!("training needs seq >= 2, got {t_len}");
@@ -351,27 +595,23 @@ fn check_batch(batch: &Batch, vocab: usize) -> Result<(usize, usize, Vec<usize>)
     if batch.mask.len() != bsz * (t_len - 1) {
         bail!("batch mask {} != {}x{}", batch.mask.len(), bsz, t_len - 1);
     }
-    let mut tokens = Vec::with_capacity(bsz * t_len);
+    tokens.clear();
+    tokens.reserve(bsz * t_len);
     for &t in &batch.tokens {
         if t < 0 || t as usize >= vocab {
             bail!("token id {t} out of vocab {vocab}");
         }
         tokens.push(t as usize);
     }
-    Ok((bsz, t_len, tokens))
+    Ok((bsz, t_len))
 }
 
-/// Saved forward activations of one batch (all row-major over the
+// ---------------------------------------------------------------- arena
+
+/// Saved activations of one forward layer (all row-major over the
 /// `bsz·t_len` concatenated rows, batch-major).
-struct Tape {
-    layers: Vec<LayerTape>,
-    /// Output of the last layer (input to the final norm).
-    x_final: Vec<f32>,
-    inv_final: Vec<f32>,
-    logits: Vec<f32>,
-}
-
-struct LayerTape {
+#[derive(Default)]
+struct LayerSlabs {
     /// Layer input (residual stream).
     x_in: Vec<f32>,
     /// Post-ln1 rows — input to the q/k/v projections.
@@ -381,8 +621,8 @@ struct LayerTape {
     q: Vec<f32>,
     k: Vec<f32>,
     v: Vec<f32>,
-    /// Causal softmax probabilities, `(bsz, heads, T, T)` (zero above
-    /// the diagonal).
+    /// Causal softmax probabilities, `(bsz, heads, T, T)` (entries above
+    /// the diagonal are never written nor read).
     probs: Vec<f32>,
     /// Attention context rows — input to the o projection.
     ctx: Vec<f32>,
@@ -396,19 +636,380 @@ struct LayerTape {
     act: Vec<f32>,
 }
 
-/// Fused packed projection over `m` rows.
-fn proj(
-    model: &PackedModel,
-    threads: usize,
-    prefix: &str,
-    x: &[f32],
-    m: usize,
-) -> Result<Vec<f32>> {
-    let pm = matrix(model, prefix)?;
-    let mut out = vec![0.0f32; m * pm.rows];
-    pm.matmul_t_rows(x, m, threads, &mut out)?;
-    Ok(out)
+/// Reusable training arena, modeled on the serving engine's `Scratch`:
+/// every activation slab of the training forward (the per-layer tape),
+/// every gradient slab of the backward, the per-worker attention
+/// scratch, the fused kernel's yᵀ buffer, the rotary table and the
+/// resolved per-layer tensor names — grown to the high-water mark once
+/// and reused across training steps and eval batches. Buffers hold
+/// stale data between calls; every consumer writes its full range
+/// before reading, so results are bitwise independent of arena history.
+pub struct TapeArena {
+    /// Resolved per-layer tensor names (no per-step string formatting).
+    names: Vec<LayerNames>,
+    /// Rotary table (rebuilt only when head_dim changes).
+    freqs: Vec<f32>,
+    /// Token indices of the current batch.
+    tokens: Vec<usize>,
+    /// Per-sequence row spans (`[t_len; bsz]`) for the ragged
+    /// projection call.
+    spans: Vec<usize>,
+    /// Residual stream; holds the final-layer output after a forward.
+    x: Vec<f32>,
+    /// Per-layer tape slabs. Forward-only mode reuses slab 0 for every
+    /// layer (nothing is kept); tape mode uses one slab per layer.
+    layers: Vec<LayerSlabs>,
+    /// Final-norm output rows (LM-head input) and per-row inverse norms.
+    xn: Vec<f32>,
+    inv_final: Vec<f32>,
+    /// `(bsz·t_len, vocab)` logits of the last forward.
+    logits: Vec<f32>,
+    /// Shared output slab for the non-taped projection outputs (o, down).
+    tmp: Vec<f32>,
+    // -- backward slabs --
+    dlogits: Vec<f32>,
+    dx: Vec<f32>,
+    dx2: Vec<f32>,
+    dh: Vec<f32>,
+    dh_b: Vec<f32>,
+    da: Vec<f32>,
+    dgate: Vec<f32>,
+    dup: Vec<f32>,
+    dctx: Vec<f32>,
+    dq: Vec<f32>,
+    dk: Vec<f32>,
+    dv: Vec<f32>,
+    /// Per-projection (ds, dz) of the last backward, indexed
+    /// `layer·7 + slot` in `prefixes` order.
+    grads: Vec<Option<(Tensor, Tensor)>>,
+    /// Per-worker attention scratch (forward and backward sharding).
+    attn: Vec<AttnScratch>,
+    /// Shared kernel scratch (the fused GEMM's yᵀ buffer).
+    proj: ProjScratch,
 }
+
+impl TapeArena {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> TapeArena {
+        TapeArena {
+            names: Vec::new(),
+            freqs: Vec::new(),
+            tokens: Vec::new(),
+            spans: Vec::new(),
+            x: Vec::new(),
+            layers: Vec::new(),
+            xn: Vec::new(),
+            inv_final: Vec::new(),
+            logits: Vec::new(),
+            tmp: Vec::new(),
+            dlogits: Vec::new(),
+            dx: Vec::new(),
+            dx2: Vec::new(),
+            dh: Vec::new(),
+            dh_b: Vec::new(),
+            da: Vec::new(),
+            dgate: Vec::new(),
+            dup: Vec::new(),
+            dctx: Vec::new(),
+            dq: Vec::new(),
+            dk: Vec::new(),
+            dv: Vec::new(),
+            grads: Vec::new(),
+            attn: Vec::new(),
+            proj: ProjScratch::default(),
+        }
+    }
+}
+
+// -------------------------------------------------------------- forward
+
+/// Full-sequence training forward over `arena.tokens` (`bsz` sequences
+/// of `t_len`), entirely through the shared compute core. With
+/// `keep_tape` the per-layer activations land in `arena.layers[layer]`
+/// for [`backward`]; without it (loss/ppl evaluation,
+/// [`forward_logits`]) one slab is reused per layer and the O(T²)
+/// probability tensors are never materialized. Logits land in
+/// `arena.logits`.
+fn forward_tape(
+    model: &PackedModel,
+    geom: &ModelGeom,
+    threads: usize,
+    bsz: usize,
+    t_len: usize,
+    keep_tape: bool,
+    arena: &mut TapeArena,
+) -> Result<()> {
+    let d = geom.d_model;
+    let (hh, hd) = (geom.n_heads, geom.head_dim());
+    let m = bsz * t_len;
+    let TapeArena {
+        names, freqs, tokens, spans, x, layers, xn, inv_final, logits, tmp, attn, proj, ..
+    } = arena;
+    debug_assert_eq!(tokens.len(), m);
+    while names.len() < geom.n_layers {
+        names.push(LayerNames::new(names.len()));
+    }
+    if freqs.len() != hd / 2 {
+        *freqs = rope_freqs(hd);
+    }
+    spans.clear();
+    spans.resize(bsz, t_len);
+    let slabs_needed = if keep_tape { geom.n_layers } else { 1 };
+    if layers.len() < slabs_needed {
+        layers.resize_with(slabs_needed, LayerSlabs::default);
+    }
+
+    let embed = fp(model, "embed")?;
+    let ed = embed.data();
+    ensure(x, m * d);
+    for (r, &tok) in tokens.iter().enumerate() {
+        x[r * d..(r + 1) * d].copy_from_slice(&ed[tok * d..(tok + 1) * d]);
+    }
+
+    for layer in 0..geom.n_layers {
+        let ln = &names[layer];
+        let slab = &mut layers[if keep_tape { layer } else { 0 }];
+        if keep_tape {
+            ensure(&mut slab.x_in, m * d);
+            slab.x_in[..m * d].copy_from_slice(&x[..m * d]);
+        }
+        let g1 = fp(model, &ln.ln1)?.data();
+        rms_norm_rows_into(&x[..m * d], g1, m, d, &mut slab.h1, Some(&mut slab.inv1));
+        proj_into(model, threads, &ln.q, &slab.h1[..m * d], spans, &mut slab.q, proj)?;
+        proj_into(model, threads, &ln.k, &slab.h1[..m * d], spans, &mut slab.k, proj)?;
+        proj_into(model, threads, &ln.v, &slab.h1[..m * d], spans, &mut slab.v, proj)?;
+        ensure(&mut slab.ctx, m * d);
+        let pt = hh * t_len * t_len;
+        if keep_tape {
+            ensure(&mut slab.probs, bsz * pt);
+        }
+        attend_all(
+            freqs,
+            hh,
+            hd,
+            d,
+            t_len,
+            bsz,
+            threads,
+            &mut slab.q[..m * d],
+            &mut slab.k[..m * d],
+            &slab.v[..m * d],
+            &mut slab.ctx[..m * d],
+            if keep_tape { Some(&mut slab.probs[..bsz * pt]) } else { None },
+            attn,
+        );
+        // Attention output + residual, then the SwiGLU MLP + residual.
+        proj_into(model, threads, &ln.o, &slab.ctx[..m * d], spans, tmp, proj)?;
+        for (xv, ov) in x[..m * d].iter_mut().zip(&tmp[..m * d]) {
+            *xv += ov;
+        }
+        if keep_tape {
+            ensure(&mut slab.x_mid, m * d);
+            slab.x_mid[..m * d].copy_from_slice(&x[..m * d]);
+        }
+        let g2 = fp(model, &ln.ln2)?.data();
+        rms_norm_rows_into(&x[..m * d], g2, m, d, &mut slab.h2, Some(&mut slab.inv2));
+        proj_into(model, threads, &ln.gate, &slab.h2[..m * d], spans, &mut slab.gate, proj)?;
+        proj_into(model, threads, &ln.up, &slab.h2[..m * d], spans, &mut slab.up, proj)?;
+        let mf = m * geom.d_ff;
+        swiglu_rows_into(&slab.gate[..mf], &slab.up[..mf], mf, &mut slab.act);
+        proj_into(model, threads, &ln.down, &slab.act[..mf], spans, tmp, proj)?;
+        for (xv, dv) in x[..m * d].iter_mut().zip(&tmp[..m * d]) {
+            *xv += dv;
+        }
+    }
+
+    let gf = fp(model, "final_norm.g")?.data();
+    rms_norm_rows_into(&x[..m * d], gf, m, d, xn, Some(inv_final));
+    let head = match model.fp_tensor("lm_head") {
+        Some(h) => h,
+        None => embed, // tied head
+    };
+    ensure(logits, m * geom.vocab);
+    dense_rows_into(head, &xn[..m * d], m, &mut logits[..m * geom.vocab]);
+    Ok(())
+}
+
+/// The trainer's attention pass: shard the `bsz` sequences over
+/// `std::thread::scope` workers, each running [`attend_seq_tape`] (the
+/// shared core's full-sequence kernel — rotary + fixed-order causal
+/// attention, optional probability tape) per sequence with its own
+/// [`AttnScratch`]. Sequences are mutually independent, so results are
+/// bitwise identical at any worker count — the same argument as the
+/// serving engine's `attend_seq_chunk` sharding.
+#[allow(clippy::too_many_arguments)]
+fn attend_all(
+    freqs: &[f32],
+    hh: usize,
+    hd: usize,
+    d: usize,
+    t_len: usize,
+    bsz: usize,
+    threads: usize,
+    q: &mut [f32],
+    k: &mut [f32],
+    v: &[f32],
+    ctx: &mut [f32],
+    probs: Option<&mut [f32]>,
+    attn: &mut Vec<AttnScratch>,
+) {
+    let workers = threads.min(bsz).max(1);
+    if attn.len() < workers {
+        attn.resize_with(workers, AttnScratch::default);
+    }
+    let pt = hh * t_len * t_len;
+    let sd = t_len * d;
+    let run_chunk = |b0: usize,
+                     take: usize,
+                     q_c: &mut [f32],
+                     k_c: &mut [f32],
+                     ctx_c: &mut [f32],
+                     mut p_c: Option<&mut [f32]>,
+                     scr: &mut AttnScratch| {
+        for si in 0..take {
+            let r0 = si * sd;
+            let tape = match p_c.as_deref_mut() {
+                Some(p) => Tape::Keep(&mut p[si * pt..(si + 1) * pt]),
+                None => Tape::None,
+            };
+            attend_seq_tape(
+                freqs,
+                hh,
+                hd,
+                t_len,
+                &mut q_c[r0..r0 + sd],
+                &mut k_c[r0..r0 + sd],
+                &v[(b0 + si) * sd..(b0 + si + 1) * sd],
+                &mut ctx_c[r0..r0 + sd],
+                scr,
+                tape,
+            );
+        }
+    };
+    if workers == 1 {
+        run_chunk(0, bsz, q, k, ctx, probs, &mut attn[0]);
+        return;
+    }
+    let per = bsz.div_ceil(workers);
+    let mut q_rem: &mut [f32] = q;
+    let mut k_rem: &mut [f32] = k;
+    let mut ctx_rem: &mut [f32] = ctx;
+    let mut probs_rem: Option<&mut [f32]> = probs;
+    let mut attn_rem: &mut [AttnScratch] = &mut attn[..workers];
+    let mut b0 = 0usize;
+    std::thread::scope(|s| {
+        while b0 < bsz {
+            let take = per.min(bsz - b0);
+            // mem::take moves each remainder slice out so the split
+            // halves keep the outer lifetime the scoped threads need.
+            let (q_c, qr) = std::mem::take(&mut q_rem).split_at_mut(take * sd);
+            q_rem = qr;
+            let (k_c, kr) = std::mem::take(&mut k_rem).split_at_mut(take * sd);
+            k_rem = kr;
+            let (ctx_c, xr) = std::mem::take(&mut ctx_rem).split_at_mut(take * sd);
+            ctx_rem = xr;
+            let p_c = match probs_rem.take() {
+                Some(p) => {
+                    let (a, b) = p.split_at_mut(take * pt);
+                    probs_rem = Some(b);
+                    Some(a)
+                }
+                None => None,
+            };
+            let (attn_c, ar) = std::mem::take(&mut attn_rem).split_at_mut(1);
+            attn_rem = ar;
+            let start = b0;
+            b0 += take;
+            let run_chunk = &run_chunk;
+            s.spawn(move || run_chunk(start, take, q_c, k_c, ctx_c, p_c, &mut attn_c[0]));
+        }
+    });
+}
+
+/// Backward of [`attend_all`]: the same sequence sharding, each worker
+/// running the shared core's [`attend_seq_backward`] per sequence.
+/// Bitwise identical at any worker count.
+#[allow(clippy::too_many_arguments)]
+fn attend_backward_all(
+    freqs: &[f32],
+    hh: usize,
+    hd: usize,
+    d: usize,
+    t_len: usize,
+    bsz: usize,
+    threads: usize,
+    probs: &[f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    dctx: &[f32],
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+    attn: &mut Vec<AttnScratch>,
+) {
+    let workers = threads.min(bsz).max(1);
+    if attn.len() < workers {
+        attn.resize_with(workers, AttnScratch::default);
+    }
+    let pt = hh * t_len * t_len;
+    let sd = t_len * d;
+    let run_chunk = |b0: usize,
+                     take: usize,
+                     dq_c: &mut [f32],
+                     dk_c: &mut [f32],
+                     dv_c: &mut [f32],
+                     scr: &mut AttnScratch| {
+        for si in 0..take {
+            let b = b0 + si;
+            let r0 = si * sd;
+            attend_seq_backward(
+                freqs,
+                hh,
+                hd,
+                t_len,
+                &probs[b * pt..(b + 1) * pt],
+                &q[b * sd..(b + 1) * sd],
+                &k[b * sd..(b + 1) * sd],
+                &v[b * sd..(b + 1) * sd],
+                &dctx[b * sd..(b + 1) * sd],
+                &mut dq_c[r0..r0 + sd],
+                &mut dk_c[r0..r0 + sd],
+                &mut dv_c[r0..r0 + sd],
+                scr,
+            );
+        }
+    };
+    if workers == 1 {
+        run_chunk(0, bsz, dq, dk, dv, &mut attn[0]);
+        return;
+    }
+    let per = bsz.div_ceil(workers);
+    let mut dq_rem: &mut [f32] = dq;
+    let mut dk_rem: &mut [f32] = dk;
+    let mut dv_rem: &mut [f32] = dv;
+    let mut attn_rem: &mut [AttnScratch] = &mut attn[..workers];
+    let mut b0 = 0usize;
+    std::thread::scope(|s| {
+        while b0 < bsz {
+            let take = per.min(bsz - b0);
+            let (dq_c, qr) = std::mem::take(&mut dq_rem).split_at_mut(take * sd);
+            dq_rem = qr;
+            let (dk_c, kr) = std::mem::take(&mut dk_rem).split_at_mut(take * sd);
+            dk_rem = kr;
+            let (dv_c, vr) = std::mem::take(&mut dv_rem).split_at_mut(take * sd);
+            dv_rem = vr;
+            let (attn_c, ar) = std::mem::take(&mut attn_rem).split_at_mut(1);
+            attn_rem = ar;
+            let start = b0;
+            b0 += take;
+            let run_chunk = &run_chunk;
+            s.spawn(move || run_chunk(start, take, dq_c, dk_c, dv_c, &mut attn_c[0]));
+        }
+    });
+}
+
+// ------------------------------------------------------------- backward
 
 fn matrix<'a>(model: &'a PackedModel, prefix: &str) -> Result<&'a PackedMatrix> {
     model.matrix(prefix).ok_or_else(|| anyhow!("no packed projection '{prefix}'"))
@@ -416,263 +1017,6 @@ fn matrix<'a>(model: &'a PackedModel, prefix: &str) -> Result<&'a PackedMatrix> 
 
 fn fp<'a>(model: &'a PackedModel, name: &str) -> Result<&'a Tensor> {
     model.fp_tensor(name).ok_or_else(|| anyhow!("packed model missing fp tensor '{name}'"))
-}
-
-/// RMSNorm over `m` rows, returning (normed, per-row inverse factor).
-fn rms_norm(x: &[f32], g: &[f32], m: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
-    let mut out = vec![0.0f32; m * d];
-    let mut invs = vec![0.0f32; m];
-    for bi in 0..m {
-        let xr = &x[bi * d..(bi + 1) * d];
-        let mut ss = 0.0f32;
-        for &v in xr {
-            ss += v * v;
-        }
-        let inv = 1.0 / (ss / d as f32 + RMS_EPS).sqrt();
-        invs[bi] = inv;
-        let orow = &mut out[bi * d..(bi + 1) * d];
-        for j in 0..d {
-            orow[j] = g[j] * xr[j] * inv;
-        }
-    }
-    (out, invs)
-}
-
-/// RMSNorm backward: dx_j = inv·g_j·dy_j − x_j·inv³/d · Σ_k dy_k·g_k·x_k.
-fn rms_backward(dy: &[f32], x: &[f32], g: &[f32], invs: &[f32], m: usize, d: usize) -> Vec<f32> {
-    let mut dx = vec![0.0f32; m * d];
-    for bi in 0..m {
-        let xr = &x[bi * d..(bi + 1) * d];
-        let dyr = &dy[bi * d..(bi + 1) * d];
-        let inv = invs[bi];
-        let mut s = 0.0f32;
-        for j in 0..d {
-            s += dyr[j] * g[j] * xr[j];
-        }
-        let c = inv * inv * inv * s / d as f32;
-        let dxr = &mut dx[bi * d..(bi + 1) * d];
-        for j in 0..d {
-            dxr[j] = inv * g[j] * dyr[j] - xr[j] * c;
-        }
-    }
-    dx
-}
-
-/// Rotate rows in place at per-row position `row % t_len` (training
-/// sequences all start at absolute position 0; matches
-/// `serve::engine::rope_row_at`).
-fn rope_rows(freqs: &[f32], hh: usize, hd: usize, rows: &mut [f32], t_len: usize, d: usize) {
-    let half = hd / 2;
-    for (r, row) in rows.chunks_mut(d).enumerate() {
-        let p = (r % t_len) as f32;
-        for h in 0..hh {
-            let s = &mut row[h * hd..(h + 1) * hd];
-            for i in 0..half {
-                let (sin, cos) = (p * freqs[i]).sin_cos();
-                let (x1, x2) = (s[i], s[i + half]);
-                s[i] = x1 * cos - x2 * sin;
-                s[i + half] = x1 * sin + x2 * cos;
-            }
-        }
-    }
-}
-
-/// Backward of [`rope_rows`]: the rotation is orthogonal, so the
-/// gradient rotates by −θ (transpose of the rotation).
-fn rope_backward_rows(
-    freqs: &[f32],
-    hh: usize,
-    hd: usize,
-    rows: &mut [f32],
-    t_len: usize,
-    d: usize,
-) {
-    let half = hd / 2;
-    for (r, row) in rows.chunks_mut(d).enumerate() {
-        let p = (r % t_len) as f32;
-        for h in 0..hh {
-            let s = &mut row[h * hd..(h + 1) * hd];
-            for i in 0..half {
-                let (sin, cos) = (p * freqs[i]).sin_cos();
-                let (g1, g2) = (s[i], s[i + half]);
-                s[i] = g1 * cos + g2 * sin;
-                s[i + half] = -g1 * sin + g2 * cos;
-            }
-        }
-    }
-}
-
-#[inline]
-fn sigmoid(x: f32) -> f32 {
-    1.0 / (1.0 + (-x).exp())
-}
-
-#[inline]
-fn silu(x: f32) -> f32 {
-    x * sigmoid(x)
-}
-
-/// d silu(x)/dx = σ(x)·(1 + x·(1 − σ(x))).
-#[inline]
-fn silu_grad(x: f32) -> f32 {
-    let s = sigmoid(x);
-    s * (1.0 + x * (1.0 - s))
-}
-
-/// Dense y (m, out) = X · Wᵀ with W row-major (out, in) — LM-head
-/// forward, fixed-order accumulation.
-fn dense_rows(w: &Tensor, x: &[f32], m: usize) -> Vec<f32> {
-    let (o, i) = w.dims2().expect("dense projection is 2-D");
-    let wd = w.data();
-    let mut y = vec![0.0f32; m * o];
-    for bi in 0..m {
-        let xr = &x[bi * i..(bi + 1) * i];
-        let yr = &mut y[bi * o..(bi + 1) * o];
-        for (r, yv) in yr.iter_mut().enumerate() {
-            let wr = &wd[r * i..(r + 1) * i];
-            let mut acc = 0.0f32;
-            for j in 0..i {
-                acc += xr[j] * wr[j];
-            }
-            *yv = acc;
-        }
-    }
-    y
-}
-
-/// Full-sequence training forward. With `keep_tape` the per-layer
-/// activations are saved for [`backward`]; without it (loss/ppl
-/// evaluation, [`forward_logits`]) they are dropped as each layer
-/// completes and `Tape::layers` comes back empty.
-fn forward_tape(
-    model: &PackedModel,
-    geom: &ModelGeom,
-    threads: usize,
-    tokens: &[usize],
-    bsz: usize,
-    t_len: usize,
-    keep_tape: bool,
-) -> Result<Tape> {
-    let d = geom.d_model;
-    let (hh, hd) = (geom.n_heads, geom.head_dim());
-    let m = bsz * t_len;
-    let freqs = rope_freqs(hd);
-    let embed = fp(model, "embed")?;
-    let ed = embed.data();
-    let mut x = vec![0.0f32; m * d];
-    for (r, &tok) in tokens.iter().enumerate() {
-        x[r * d..(r + 1) * d].copy_from_slice(&ed[tok * d..(tok + 1) * d]);
-    }
-    let inv_sqrt = 1.0 / (hd as f32).sqrt();
-    let mut layers = Vec::with_capacity(geom.n_layers);
-    for layer in 0..geom.n_layers {
-        let lp = format!("layers.{layer}");
-        let x_in = if keep_tape { x.clone() } else { Vec::new() };
-        let g1 = fp(model, &format!("{lp}.ln1.g"))?.data();
-        let (h1, inv1) = rms_norm(&x, g1, m, d);
-        let mut q = proj(model, threads, &format!("{lp}.attn.q"), &h1, m)?;
-        let mut k = proj(model, threads, &format!("{lp}.attn.k"), &h1, m)?;
-        let v = proj(model, threads, &format!("{lp}.attn.v"), &h1, m)?;
-        rope_rows(&freqs, hh, hd, &mut q, t_len, d);
-        rope_rows(&freqs, hh, hd, &mut k, t_len, d);
-        // Causal attention. The (bsz, heads, T, T) probability tensor is
-        // backward state: without the tape only one T-length score row is
-        // ever live, so forward-only mode (loss/ppl eval) reuses a single
-        // row scratch and stays linear in T.
-        let mut probs =
-            if keep_tape { vec![0.0f32; bsz * hh * t_len * t_len] } else { Vec::new() };
-        let mut prow_scratch = vec![0.0f32; t_len];
-        let mut ctx = vec![0.0f32; m * d];
-        for b in 0..bsz {
-            for h in 0..hh {
-                for t in 0..t_len {
-                    let qr = &q[(b * t_len + t) * d + h * hd..(b * t_len + t) * d + (h + 1) * hd];
-                    let prow: &mut [f32] = if keep_tape {
-                        &mut probs[((b * hh + h) * t_len + t) * t_len
-                            ..((b * hh + h) * t_len + t + 1) * t_len]
-                    } else {
-                        // Stale beyond ..=t is never read: every j <= t is
-                        // written below before any read.
-                        &mut prow_scratch
-                    };
-                    let mut mx = f32::NEG_INFINITY;
-                    for j in 0..=t {
-                        let kr = &k
-                            [(b * t_len + j) * d + h * hd..(b * t_len + j) * d + (h + 1) * hd];
-                        let mut dot = 0.0f32;
-                        for u in 0..hd {
-                            dot += qr[u] * kr[u];
-                        }
-                        let sc = dot * inv_sqrt;
-                        prow[j] = sc;
-                        if sc > mx {
-                            mx = sc;
-                        }
-                    }
-                    let mut den = 0.0f32;
-                    for p in prow[..=t].iter_mut() {
-                        *p = (*p - mx).exp();
-                        den += *p;
-                    }
-                    let cxr = &mut ctx
-                        [(b * t_len + t) * d + h * hd..(b * t_len + t) * d + (h + 1) * hd];
-                    for j in 0..=t {
-                        prow[j] /= den;
-                        let w = prow[j];
-                        let vr = &v
-                            [(b * t_len + j) * d + h * hd..(b * t_len + j) * d + (h + 1) * hd];
-                        for u in 0..hd {
-                            cxr[u] += w * vr[u];
-                        }
-                    }
-                }
-            }
-        }
-        let o = proj(model, threads, &format!("{lp}.attn.o"), &ctx, m)?;
-        for (xv, ov) in x.iter_mut().zip(&o) {
-            *xv += ov;
-        }
-        let x_mid = if keep_tape { x.clone() } else { Vec::new() };
-        let g2 = fp(model, &format!("{lp}.ln2.g"))?.data();
-        let (h2, inv2) = rms_norm(&x, g2, m, d);
-        let gate = proj(model, threads, &format!("{lp}.mlp.gate"), &h2, m)?;
-        let up = proj(model, threads, &format!("{lp}.mlp.up"), &h2, m)?;
-        let mut act = vec![0.0f32; gate.len()];
-        for j in 0..gate.len() {
-            act[j] = silu(gate[j]) * up[j];
-        }
-        let down = proj(model, threads, &format!("{lp}.mlp.down"), &act, m)?;
-        for (xv, dv) in x.iter_mut().zip(&down) {
-            *xv += dv;
-        }
-        if keep_tape {
-            layers.push(LayerTape {
-                x_in,
-                h1,
-                inv1,
-                q,
-                k,
-                v,
-                probs,
-                ctx,
-                x_mid,
-                h2,
-                inv2,
-                gate,
-                up,
-                act,
-            });
-        }
-    }
-    let x_final = x;
-    let gf = fp(model, "final_norm.g")?.data();
-    let (xn, inv_final) = rms_norm(&x_final, gf, m, d);
-    let head = match model.fp_tensor("lm_head") {
-        Some(h) => h,
-        None => embed, // tied head
-    };
-    let logits = dense_rows(head, &xn, m);
-    Ok(Tape { layers, x_final, inv_final, logits })
 }
 
 /// −log softmax(row)[target], numerically stable.
@@ -685,18 +1029,24 @@ fn nll_row(row: &[f32], target: usize) -> f64 {
     z.ln() - (row[target] - mx) as f64
 }
 
-/// Masked mean cross-entropy and its gradient w.r.t. the logits:
+/// Masked mean cross-entropy and its gradient w.r.t. the logits, into
+/// the arena's dlogits slab:
 /// dlogits[b,t] = mask[b,t]/Σmask · (softmax(row) − onehot(target)).
-fn loss_and_dlogits(
+/// Rows outside the mask (and every row's stale arena content) are
+/// zeroed.
+fn loss_and_dlogits_into(
     logits: &[f32],
     tokens: &[usize],
     mask: &[f32],
     bsz: usize,
     t_len: usize,
     vocab: usize,
-) -> (f32, Vec<f32>) {
+    dlogits: &mut Vec<f32>,
+) -> f32 {
+    let n = bsz * t_len * vocab;
+    ensure(dlogits, n);
+    dlogits[..n].fill(0.0);
     let denom: f32 = mask.iter().sum();
-    let mut dlogits = vec![0.0f32; bsz * t_len * vocab];
     let mut loss = 0.0f64;
     for b in 0..bsz {
         for t in 0..t_len - 1 {
@@ -709,8 +1059,7 @@ fn loss_and_dlogits(
             let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
             // One exp per logit: stash the numerators in drow while
             // accumulating the denominator, then scale in place.
-            let drow =
-                &mut dlogits[(b * t_len + t) * vocab..(b * t_len + t + 1) * vocab];
+            let drow = &mut dlogits[(b * t_len + t) * vocab..(b * t_len + t + 1) * vocab];
             let mut z = 0.0f32;
             for (dv, &v) in drow.iter_mut().zip(row) {
                 let e = (v - mx).exp();
@@ -726,159 +1075,148 @@ fn loss_and_dlogits(
             drow[target] -= scale;
         }
     }
-    ((loss / denom as f64) as f32, dlogits)
+    (loss / denom as f64) as f32
 }
 
-/// Full reverse-mode backward: activation gradients flow through every
-/// layer; parameter gradients are collected only for the scale/zero
-/// tensors of each packed projection.
+/// One projection's backward: dX into `dx_out` (overwritten), the exact
+/// (ds, dz) STE reductions recorded at `grads[gi]`.
+#[allow(clippy::too_many_arguments)]
+fn proj_back(
+    model: &PackedModel,
+    threads: usize,
+    name: &str,
+    gi: usize,
+    x_in: &[f32],
+    dy: &[f32],
+    m: usize,
+    dx_out: &mut Vec<f32>,
+    grads: &mut [Option<(Tensor, Tensor)>],
+) -> Result<()> {
+    let pm = matrix(model, name)?;
+    ensure(dx_out, m * pm.cols);
+    pm.grad_input(dy, m, threads, &mut dx_out[..m * pm.cols])?;
+    let (ds, dz) = pm.grad_scales_zeros(x_in, dy, m, threads)?;
+    grads[gi] = Some((ds, dz));
+    Ok(())
+}
+
+/// Full reverse-mode backward over the taped forward in `arena`:
+/// activation gradients flow through every layer entirely in arena
+/// slabs; parameter gradients are collected only for the scale/zero
+/// tensors of each packed projection (into `arena.grads`, `prefixes`
+/// order).
 fn backward(
     model: &PackedModel,
     geom: &ModelGeom,
     threads: usize,
-    tape: &Tape,
-    dlogits: &[f32],
     bsz: usize,
     t_len: usize,
-) -> Result<HashMap<String, (Tensor, Tensor)>> {
+    arena: &mut TapeArena,
+) -> Result<()> {
     let d = geom.d_model;
     let (hh, hd) = (geom.n_heads, geom.head_dim());
     let m = bsz * t_len;
-    let freqs = rope_freqs(hd);
-    let inv_sqrt = 1.0 / (hd as f32).sqrt();
-    let mut grads: HashMap<String, (Tensor, Tensor)> = HashMap::new();
+    let mf = m * geom.d_ff;
+    let TapeArena {
+        names,
+        freqs,
+        x,
+        layers,
+        xn: _,
+        inv_final,
+        dlogits,
+        dx,
+        dx2,
+        dh,
+        dh_b,
+        da,
+        dgate,
+        dup,
+        dctx,
+        dq,
+        dk,
+        dv,
+        grads,
+        attn,
+        ..
+    } = arena;
+    grads.clear();
+    grads.resize_with(geom.n_layers * SLOTS, || None);
 
-    // LM head backward: dxn = dlogits · head (head itself is frozen).
+    // LM head backward: dxn = dlogits · head (head itself is frozen),
+    // then the final norm. `x` still holds the last layer's output.
     let head = match model.fp_tensor("lm_head") {
         Some(h) => h,
         None => fp(model, "embed")?,
     };
-    let dxn = Tensor::new(&[m, geom.vocab], dlogits.to_vec())
-        .matmul(head)?
-        .into_data();
+    ensure(dh, m * d);
+    dense_grad_rows_into(head, &dlogits[..m * geom.vocab], m, threads, &mut dh[..m * d]);
     let gf = fp(model, "final_norm.g")?.data();
-    let mut dx = rms_backward(&dxn, &tape.x_final, gf, &tape.inv_final, m, d);
-
-    // A projection's backward: dX into `dx_out` (overwritten), (ds, dz)
-    // recorded under the prefix.
-    let mut proj_back = |prefix: String,
-                         x_in: &[f32],
-                         dy: &[f32],
-                         dx_out: &mut Vec<f32>|
-     -> Result<()> {
-        let pm = matrix(model, &prefix)?;
-        dx_out.resize(m * pm.cols, 0.0);
-        pm.grad_input(dy, m, threads, dx_out)?;
-        let (ds, dz) = pm.grad_scales_zeros(x_in, dy, m, threads)?;
-        grads.insert(prefix, (ds, dz));
-        Ok(())
-    };
+    rms_backward_into(&dh[..m * d], &x[..m * d], gf, &inv_final[..m], m, d, dx);
 
     for layer in (0..geom.n_layers).rev() {
-        let lp = format!("layers.{layer}");
-        let tp = &tape.layers[layer];
+        let ln = &names[layer];
+        let tp = &layers[layer];
+        let g0 = layer * SLOTS;
 
         // x3 = x_mid + down(act): dx currently holds d(x3).
-        let mut da = Vec::new();
-        proj_back(format!("{lp}.mlp.down"), &tp.act, &dx, &mut da)?;
+        proj_back(model, threads, &ln.down, g0 + 6, &tp.act[..mf], &dx[..m * d], m, da, grads)?;
         // act = silu(gate) ⊙ up.
-        let mf = m * geom.d_ff;
-        let mut dgate = vec![0.0f32; mf];
-        let mut dup = vec![0.0f32; mf];
-        for j in 0..mf {
-            dgate[j] = da[j] * tp.up[j] * silu_grad(tp.gate[j]);
-            dup[j] = da[j] * silu(tp.gate[j]);
-        }
-        let mut dh2 = Vec::new();
-        proj_back(format!("{lp}.mlp.gate"), &tp.h2, &dgate, &mut dh2)?;
-        let mut dh2_up = Vec::new();
-        proj_back(format!("{lp}.mlp.up"), &tp.h2, &dup, &mut dh2_up)?;
-        for (a, b) in dh2.iter_mut().zip(&dh2_up) {
+        swiglu_backward_into(&da[..mf], &tp.gate[..mf], &tp.up[..mf], mf, dgate, dup);
+        proj_back(model, threads, &ln.gate, g0 + 4, &tp.h2[..m * d], &dgate[..mf], m, dh, grads)?;
+        proj_back(model, threads, &ln.up, g0 + 5, &tp.h2[..m * d], &dup[..mf], m, dh_b, grads)?;
+        for (a, b) in dh[..m * d].iter_mut().zip(&dh_b[..m * d]) {
             *a += b;
         }
         // x_mid feeds both the residual and ln2.
-        let g2 = fp(model, &format!("{lp}.ln2.g"))?.data();
-        let mut dx2 = rms_backward(&dh2, &tp.x_mid, g2, &tp.inv2, m, d);
-        for (a, b) in dx2.iter_mut().zip(&dx) {
+        let g2 = fp(model, &ln.ln2)?.data();
+        rms_backward_into(&dh[..m * d], &tp.x_mid[..m * d], g2, &tp.inv2[..m], m, d, dx2);
+        for (a, b) in dx2[..m * d].iter_mut().zip(&dx[..m * d]) {
             *a += b;
         }
 
         // x_mid = x_in + o(ctx): d(o out) = dx2.
-        let mut dctx = Vec::new();
-        proj_back(format!("{lp}.attn.o"), &tp.ctx, &dx2, &mut dctx)?;
+        proj_back(model, threads, &ln.o, g0 + 3, &tp.ctx[..m * d], &dx2[..m * d], m, dctx, grads)?;
 
-        // Attention backward (per batch row and head, fixed order).
-        let mut dq = vec![0.0f32; m * d];
-        let mut dk = vec![0.0f32; m * d];
-        let mut dv = vec![0.0f32; m * d];
-        let mut dp = vec![0.0f32; t_len];
-        for b in 0..bsz {
-            for h in 0..hh {
-                for t in 0..t_len {
-                    let prow = &tp.probs
-                        [((b * hh + h) * t_len + t) * t_len..((b * hh + h) * t_len + t + 1) * t_len];
-                    let dcx = &dctx
-                        [(b * t_len + t) * d + h * hd..(b * t_len + t) * d + (h + 1) * hd];
-                    // dP and dV.
-                    let mut row_dot = 0.0f32;
-                    for j in 0..=t {
-                        let vr = &tp.v
-                            [(b * t_len + j) * d + h * hd..(b * t_len + j) * d + (h + 1) * hd];
-                        let mut acc = 0.0f32;
-                        for u in 0..hd {
-                            acc += dcx[u] * vr[u];
-                        }
-                        dp[j] = acc;
-                        row_dot += acc * prow[j];
-                        let dvr = &mut dv
-                            [(b * t_len + j) * d + h * hd..(b * t_len + j) * d + (h + 1) * hd];
-                        for u in 0..hd {
-                            dvr[u] += prow[j] * dcx[u];
-                        }
-                    }
-                    // Softmax backward → dS, then dQ / dK.
-                    let qr = &tp.q
-                        [(b * t_len + t) * d + h * hd..(b * t_len + t) * d + (h + 1) * hd];
-                    let dqr_base = (b * t_len + t) * d + h * hd;
-                    for j in 0..=t {
-                        let dsc = prow[j] * (dp[j] - row_dot) * inv_sqrt;
-                        if dsc == 0.0 {
-                            continue;
-                        }
-                        let kr = &tp.k
-                            [(b * t_len + j) * d + h * hd..(b * t_len + j) * d + (h + 1) * hd];
-                        for u in 0..hd {
-                            dq[dqr_base + u] += dsc * kr[u];
-                        }
-                        let dkr = &mut dk
-                            [(b * t_len + j) * d + h * hd..(b * t_len + j) * d + (h + 1) * hd];
-                        for u in 0..hd {
-                            dkr[u] += dsc * qr[u];
-                        }
-                    }
-                }
-            }
-        }
-        // Undo the rotation on the q/k gradients, then project back.
-        rope_backward_rows(&freqs, hh, hd, &mut dq, t_len, d);
-        rope_backward_rows(&freqs, hh, hd, &mut dk, t_len, d);
-        let mut dh1 = Vec::new();
-        proj_back(format!("{lp}.attn.q"), &tp.h1, &dq, &mut dh1)?;
-        let mut dh1_k = Vec::new();
-        proj_back(format!("{lp}.attn.k"), &tp.h1, &dk, &mut dh1_k)?;
-        let mut dh1_v = Vec::new();
-        proj_back(format!("{lp}.attn.v"), &tp.h1, &dv, &mut dh1_v)?;
-        for (a, (b_, c)) in dh1.iter_mut().zip(dh1_k.iter().zip(&dh1_v)) {
-            *a += b_ + c;
-        }
-        let g1 = fp(model, &format!("{lp}.ln1.g"))?.data();
-        let mut dx1 = rms_backward(&dh1, &tp.x_in, g1, &tp.inv1, m, d);
-        for (a, b) in dx1.iter_mut().zip(&dx2) {
+        // Attention backward, sharded over sequences (shared core).
+        ensure(dq, m * d);
+        ensure(dk, m * d);
+        ensure(dv, m * d);
+        let pt = hh * t_len * t_len;
+        attend_backward_all(
+            freqs,
+            hh,
+            hd,
+            d,
+            t_len,
+            bsz,
+            threads,
+            &tp.probs[..bsz * pt],
+            &tp.q[..m * d],
+            &tp.k[..m * d],
+            &tp.v[..m * d],
+            &dctx[..m * d],
+            &mut dq[..m * d],
+            &mut dk[..m * d],
+            &mut dv[..m * d],
+            attn,
+        );
+        proj_back(model, threads, &ln.q, g0, &tp.h1[..m * d], &dq[..m * d], m, dh, grads)?;
+        proj_back(model, threads, &ln.k, g0 + 1, &tp.h1[..m * d], &dk[..m * d], m, dh_b, grads)?;
+        for (a, b) in dh[..m * d].iter_mut().zip(&dh_b[..m * d]) {
             *a += b;
         }
-        dx = dx1;
+        proj_back(model, threads, &ln.v, g0 + 2, &tp.h1[..m * d], &dv[..m * d], m, dh_b, grads)?;
+        for (a, b) in dh[..m * d].iter_mut().zip(&dh_b[..m * d]) {
+            *a += b;
+        }
+        let g1 = fp(model, &ln.ln1)?.data();
+        rms_backward_into(&dh[..m * d], &tp.x_in[..m * d], g1, &tp.inv1[..m], m, d, dx);
+        for (a, b) in dx[..m * d].iter_mut().zip(&dx2[..m * d]) {
+            *a += b;
+        }
     }
-    Ok(grads)
+    Ok(())
 }
 
 #[cfg(test)]
@@ -905,7 +1243,7 @@ mod tests {
 
     #[test]
     fn forward_loss_is_finite_and_near_uniform_at_init() {
-        let tuner = tiny_tuner(3, false, 2);
+        let mut tuner = tiny_tuner(3, false, 2);
         let batch = tiny_batch(2, 8, 64, 5);
         let loss = tuner.loss(&batch).unwrap();
         // A random quantized model is near-uniform over 64 tokens.
@@ -933,8 +1271,31 @@ mod tests {
     }
 
     #[test]
+    fn arena_reuse_is_bitwise_invisible() {
+        // Same batch through a fresh tuner vs a tuner whose arena is
+        // warm from different-shaped work: identical loss and
+        // gradients bit for bit (stale slab content is never read).
+        let batch = tiny_batch(2, 8, 64, 5);
+        let mut fresh = tiny_tuner(3, true, 2);
+        let (l_fresh, g_fresh) = fresh.forward_backward(&batch).unwrap();
+        let mut warm = tiny_tuner(3, true, 2);
+        // Warm the arena with other shapes (bigger batch, longer seq,
+        // forward-only eval) before the probe batch.
+        warm.loss(&tiny_batch(3, 12, 64, 9)).unwrap();
+        warm.forward_backward(&tiny_batch(1, 4, 64, 11)).unwrap();
+        let (l_warm, g_warm) = warm.forward_backward(&batch).unwrap();
+        assert_eq!(l_fresh, l_warm);
+        assert_eq!(g_fresh.len(), g_warm.len());
+        for ((pa, dsa, dza), (pb, dsb, dzb)) in g_fresh.iter().zip(&g_warm) {
+            assert_eq!(pa, pb);
+            assert_eq!(dsa.data(), dsb.data(), "{pa} ds");
+            assert_eq!(dza.data(), dzb.data(), "{pa} dz");
+        }
+    }
+
+    #[test]
     fn malformed_batches_are_rejected() {
-        let tuner = tiny_tuner(9, false, 1);
+        let mut tuner = tiny_tuner(9, false, 1);
         // Out-of-vocab token.
         let mut b = tiny_batch(1, 4, 64, 1);
         b.tokens[0] = 64;
@@ -962,5 +1323,53 @@ mod tests {
             1,
         );
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn multi_task_switching_is_exact_and_isolated() {
+        let geom = ModelGeom { vocab: 64, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32 };
+        let (pm, _) = serve::synth_packed(&geom, 4, Some(8), 13).unwrap();
+        let cfg = TrainConfig { steps: 8, lr: 3e-3, warmup_steps: 1, log_every: 0, ..Default::default() };
+        let tuner = HostPeqaTuner::from_packed(pm, geom, cfg, false, 2).unwrap();
+        let names = vec!["a".to_string(), "b".to_string()];
+        let mut mt = MultiTaskTuner::new(tuner, &names).unwrap();
+        assert_eq!(mt.n_tasks(), 2);
+        let base_a = mt.extract_adapter(0);
+        let base_b = mt.extract_adapter(1);
+        // Both tasks start from the shared base.
+        for (n, t) in base_a.iter() {
+            assert_eq!(t.data(), base_b.req(n).unwrap().data());
+        }
+        // Train only task a on distinct batches; b must stay at base.
+        for step in 0..3u64 {
+            mt.step_task(0, &tiny_batch(2, 8, 64, 90 + step)).unwrap();
+        }
+        assert_eq!(mt.step_count(0), 3);
+        assert_eq!(mt.step_count(1), 0);
+        let tuned_a = mt.extract_adapter(0);
+        let still_b = mt.extract_adapter(1);
+        let mut moved = 0usize;
+        for (n, t) in tuned_a.iter() {
+            if t.max_abs_diff(base_a.req(n).unwrap()) > 0.0 {
+                moved += 1;
+            }
+            assert_eq!(
+                still_b.req(n).unwrap().data(),
+                base_b.req(n).unwrap().data(),
+                "task b must be untouched by task a's steps"
+            );
+        }
+        assert_eq!(moved, geom.n_layers * 7, "every projection's scales should move");
+        // Switching away and back is exact: adapter a is bitwise stable.
+        mt.loss(1, &tiny_batch(2, 8, 64, 70)).unwrap();
+        let again_a = mt.extract_adapter(0);
+        for (n, t) in tuned_a.iter() {
+            assert_eq!(t.data(), again_a.req(n).unwrap().data(), "{n}");
+        }
+        // Duplicate / empty task lists are rejected.
+        let t2 = tiny_tuner(13, false, 1);
+        assert!(MultiTaskTuner::new(t2, &["x".into(), "x".into()]).is_err());
+        let t3 = tiny_tuner(13, false, 1);
+        assert!(MultiTaskTuner::new(t3, &[]).is_err());
     }
 }

@@ -11,12 +11,20 @@
 //!   tables, and [`Tuner::finish`] into a method-layout
 //!   [`Checkpoint`](crate::model::Checkpoint).
 //! * [`host::HostPeqaTuner`] — the **host PEQA backend** (default
-//!   build): forward through the fused packed kernels
-//!   (`quant::kernels::PackedMatrix`), full reverse-mode backward on the
-//!   host, gradients taken *only* w.r.t. the per-(row, group) scale and
+//!   build): forward AND backward through the shared transformer
+//!   compute core (`model::blocks` — the same block math the serving
+//!   engine decodes with, plus a tape), activations in a reusable
+//!   [`host::TapeArena`] (no per-step activation allocation), attention
+//!   forward/backward sharded over `std::thread::scope` workers,
+//!   gradients taken *only* w.r.t. the per-(row, group) scale and
 //!   zero tensors via the straight-through estimator (codes frozen), and
 //!   a shared-[`optim::Adam`] update. Bit-identical at any
 //!   `PEQA_THREADS` value.
+//! * [`host::MultiTaskTuner`] — N per-task scale/zero + Adam states
+//!   round-robin over ONE shared packed model: multi-task PEQA tuning
+//!   whose task switch is a kilobyte-scale swap (the training-side
+//!   mirror of the serving scheduler's scale swap), bitwise equal to N
+//!   independent runs.
 //! * [`xla::Trainer`] — the original artifact-driven XLA backend
 //!   (`--features xla`): the AOT'd graph owns forward/backward/AdamW,
 //!   rust owns data, schedule and the step loop.
@@ -31,7 +39,7 @@ pub mod optim;
 #[cfg(feature = "xla")]
 pub mod xla;
 
-pub use host::HostPeqaTuner;
+pub use host::{HostPeqaTuner, MultiTaskTuner, TapeArena};
 pub use optim::Adam;
 #[cfg(feature = "xla")]
 pub use xla::Trainer;

@@ -50,6 +50,43 @@ fn quantize_pack_load_fused_roundtrip() {
 }
 
 #[test]
+fn ragged_gemm_is_bitwise_equal_to_rows_gemm_across_widths_and_groupings() {
+    // The serving/training projection entry for mixed prefill+decode
+    // steps: matmul_t_ragged (direct (rows, out) layout, span-sharded,
+    // no yᵀ transpose) must be bit-for-bit the batched matmul_t_rows
+    // result for every bit-width 2/3/4 × per-channel/g128 × ragged span
+    // shape × worker count.
+    let cols = 256usize;
+    let mut rng = Pcg32::new(2024);
+    let w = Tensor::normal(&[23, cols], 0.4, &mut rng);
+    let x = Tensor::normal(&[12, cols], 1.0, &mut rng);
+    let spans_shapes: Vec<Vec<usize>> = vec![
+        vec![12],                 // one prefill block
+        vec![1; 12],              // pure decode batch
+        vec![7, 1, 1, 3],         // mixed prefill + decode
+        vec![1, 10, 1],
+    ];
+    for bits in [2u8, 3, 4] {
+        for group in [None, Some(128)] {
+            let q = quantize_rtn(&w, bits, group).unwrap();
+            let pm = PackedMatrix::from_quantized(&q);
+            let mut expect = vec![0.0f32; 12 * pm.rows];
+            pm.matmul_t_rows(x.data(), 12, 3, &mut expect).unwrap();
+            for spans in &spans_shapes {
+                for threads in [1usize, 2, 5, 16] {
+                    let mut out = vec![f32::NAN; 12 * pm.rows];
+                    pm.matmul_t_ragged(x.data(), spans, threads, &mut out).unwrap();
+                    assert_eq!(
+                        out, expect,
+                        "bits={bits} group={group:?} spans={spans:?} threads={threads}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn fused_gemm_agrees_with_in_memory_quantization() {
     // No file round trip: QuantizedMatrix → PackedMatrix directly.
     let mut rng = Pcg32::new(77);

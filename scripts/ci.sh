@@ -21,6 +21,19 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+echo "== host backward numerics cross-check (python/checks) =="
+# The f64 numpy finite-difference cross-check of the host PEQA backward
+# (rust/src/train/host.rs + model/blocks.rs). Guards the refactored
+# backward on every CI run that has numpy; PEQA_SKIP_PYCHECK=1 opts out.
+if [[ "${PEQA_SKIP_PYCHECK:-0}" == "1" ]]; then
+  echo "PEQA_SKIP_PYCHECK=1 — skipping host_backward_check.py"
+elif command -v python3 >/dev/null 2>&1 && python3 -c "import numpy" >/dev/null 2>&1; then
+  python3 python/checks/host_backward_check.py
+else
+  echo "python3 with numpy not available — skipping host_backward_check.py"
+  echo "(install numpy to arm the backward cross-check, or set PEQA_SKIP_PYCHECK=1 to silence)"
+fi
+
 QUICK=1
 if [[ "${1:-}" == "--full" ]]; then
   QUICK=0
