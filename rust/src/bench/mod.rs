@@ -161,13 +161,11 @@ impl Table {
 
 /// Write a JSON value to an explicit path (bench result files like
 /// BENCH_kernels.json that live at the repo root rather than results/).
+/// Atomic (temp sibling + rename via [`crate::store::atomic_write`]):
+/// a killed bench never leaves a half-written JSON for the trend diff
+/// to choke on.
 pub fn save_json(path: &std::path::Path, v: &Value) -> anyhow::Result<()> {
-    if let Some(dir) = path.parent() {
-        if !dir.as_os_str().is_empty() {
-            std::fs::create_dir_all(dir)?;
-        }
-    }
-    std::fs::write(path, v.to_string())?;
+    crate::store::atomic_write(path, v.to_string().as_bytes())?;
     Ok(())
 }
 

@@ -37,6 +37,18 @@ impl LmBatcher {
         LmBatcher { stream, batch, seq, rng: Pcg32::seeded(seed, 0xba7c4) }
     }
 
+    /// The window RNG's exact `(state, inc)` position — the journal's
+    /// data-stream cursor: restoring it via [`Self::set_rng_state`]
+    /// makes the batch sequence continue bit-for-bit.
+    pub fn rng_state(&self) -> (u64, u64) {
+        self.rng.state_raw()
+    }
+
+    /// Jump the window RNG to a position captured by [`Self::rng_state`].
+    pub fn set_rng_state(&mut self, state: u64, inc: u64) {
+        self.rng = Pcg32::from_state(state, inc);
+    }
+
     pub fn next_batch(&mut self) -> Batch {
         let mut tokens = Vec::with_capacity(self.batch * self.seq);
         for _ in 0..self.batch {

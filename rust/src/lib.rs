@@ -95,6 +95,42 @@
 //! trainable+optimizer bytes, loss trajectory) and is gated by
 //! `scripts/bench_diff.py` like the kernel/serve benches.
 //!
+//! ## Artifact formats & durability (`store`)
+//!
+//! Every artifact the crate writes — `.peqa` checkpoints, `.adapter`
+//! task adapters, `.packed` deployment models, the adapter-registry
+//! manifest — goes inside one checksummed container (`store::format`):
+//!
+//! ```text
+//! "PEQAS1\n" | u32 version | kind | section table (name, len, crc32)
+//!   | u32 header-crc | payloads | u32 trailer-crc(header+payloads)
+//! ```
+//!
+//! Writes are atomic (temp sibling + fsync + rename), so a crash never
+//! leaves a half-written artifact under the real name; any flipped or
+//! truncated byte is detected at load with the file, section and
+//! expected-vs-actual checksum in the error. Legacy `PEQA1`/`PEQAP1`
+//! files still load, flagged unverified. `peqa fsck <path>` verifies any
+//! artifact and prints its header.
+//!
+//! **Crash-safe training** (`store::journal`): `peqa finetune
+//! --save-every N` writes a base `.peqa` snapshot plus an append-only
+//! journal (`PEQAJ1\n` header, then per-record `[len | crc32 | payload]`
+//! frames carrying step, full scale/zero state, Adam moments, loss/EMA
+//! bookkeeping and the batcher RNG cursor). `--resume` replays snapshot
+//! + journal — truncating a torn tail frame — and continues **bitwise
+//! identically** to a run that never stopped, via
+//! `train::Tuner::{export_state, import_state}`.
+//!
+//! **Atomic adapter hot-reload** (`store::registry`): `peqa finetune
+//! --publish DIR` publishes adapters into a registry directory under a
+//! generation-numbered manifest (manifest written last, atomically, so
+//! readers see either the old or the new generation, never a mix). A
+//! live `serve::Server` watches the registry between request bursts and
+//! swaps adapters in without restart; an invalid or torn adapter set is
+//! rejected (strict `serve::types::validate_coverage`) and the previous
+//! generation keeps serving.
+//!
 //! ## Environment knobs
 //!
 //! The single reference for every `PEQA_*` variable the crate and its
@@ -136,6 +172,7 @@ pub mod pipeline;
 pub mod quant;
 pub mod runtime;
 pub mod serve;
+pub mod store;
 pub mod tensor;
 pub mod tokenizer;
 pub mod train;

@@ -10,6 +10,7 @@
 //!   pack       --ckpt path --bits 4 --out model.packed
 //!   serve      [--model m.packed] host multi-task packed-decode serving
 //!   serve-demo --size n3 [--requests N] multi-task adapter-swap serving demo [xla]
+//!   fsck       <artifact|dir> […]       verify artifact checksums, print headers
 //!   memreport                           Table-1 style DRAM model (paper dims)
 //!
 //! Commands marked [xla] drive AOT artifacts through the PJRT runtime and
@@ -57,6 +58,8 @@ peqa — PEQA (NeurIPS 2023) reproduction CLI
                   [--tasks t1,t2,...] [--out adapters]
                   [--save-model base.packed]
                   [--eval-tokens 8192] [--seed 7]
+                  [--save-every N] [--resume] [--halt-after N]
+                  [--publish registry]
                   [--bits 4] [--group g] [--layers 2] [--d-model 64]
                   [--d-ff 192] [--vocab 512]
                   (no --model: synthesizes + RTN-quantizes a base model;
@@ -64,7 +67,14 @@ peqa — PEQA (NeurIPS 2023) reproduction CLI
                    --tasks tunes N adapters round-robin out of ONE shared
                    packed model — known dataset names use their corpus,
                    other names get deterministic synthetic task corpora —
-                   all servable by one `peqa serve --adapters` run)
+                   all servable by one `peqa serve --adapters` run.
+                   --save-every N journals the full training state every
+                   N steps next to a base snapshot in --out; --resume
+                   replays the journal — truncating a torn tail — and
+                   finishes bitwise identical to an uninterrupted run;
+                   --halt-after N exits after step N (simulated crash);
+                   --publish DIR publishes the adapter(s) as one atomic
+                   generation servable by `peqa serve --registry DIR`)
   peqa finetune   --backend xla --size n3 --method peqa_b4_gc
                   --dataset wikitext|ptb [--steps 150] [--lr 2e-3]
                   [--out path.peqa]                              [xla]
@@ -72,7 +82,8 @@ peqa — PEQA (NeurIPS 2023) reproduction CLI
   peqa quantize   --ckpt path.peqa --bits 4 [--group 32]
                   [--optq --size n3] [--out path.peqa]
   peqa pack       --ckpt path.peqa --bits 4 --out model.packed
-  peqa serve      [--model m.packed] [--adapters dir] [--heads 4]
+  peqa serve      [--model m.packed] [--adapters dir] [--registry dir]
+                  [--heads 4]
                   [--tasks 3] [--requests 24] [--max-new 24] [--batch 8]
                   [--topk 0] [--temp 0.8] [--window 256] [--seed 7]
                   [--bits 4] [--group g] [--layers 2] [--d-model 64]
@@ -80,8 +91,16 @@ peqa — PEQA (NeurIPS 2023) reproduction CLI
                   (--clients N > 0 serves the same load through the
                    threaded serve::server with N concurrent clients;
                    --strict rejects partial-coverage adapters at
-                   registration instead of basing uncovered projections)
+                   registration instead of basing uncovered projections;
+                   --registry serves the current published generation
+                   and — with --clients N — hot-reloads newly published
+                   generations between request bursts without restart)
   peqa serve-demo --size n3 [--requests 16] [--full-reload]      [xla]
+  peqa fsck       <artifact|dir> [...]
+                  (verify checksums and print headers of .peqa /
+                   .adapter / .packed / journal / registry artifacts;
+                   exits nonzero on corruption, directories expand to
+                   their files)
   peqa memreport
 
 Methods: full | lora_qv4 | lora_qkvo16 | qat_b{3,4} | peqa_b{3,4}_{gc,g16,g32,g64}
@@ -194,6 +213,7 @@ fn run() -> Result<()> {
             let opts = ServeOpts {
                 model: args.opt("model"),
                 adapters: args.opt("adapters"),
+                registry: args.opt("registry"),
                 heads: args.get_usize("heads", 4)?,
                 tasks: args.get_usize("tasks", 3)?,
                 requests: args.get_usize("requests", 24)?,
@@ -222,6 +242,11 @@ fn run() -> Result<()> {
             let full_reload = args.flag("full-reload");
             args.finish()?;
             serve_demo(&size, n_req, full_reload)
+        }
+        "fsck" => {
+            let paths = args.positional.clone();
+            args.finish()?;
+            fsck_cmd(&paths)
         }
         "memreport" => {
             args.finish()?;
@@ -293,16 +318,19 @@ fn finetune_xla(mut args: peqa::cli::Args) -> Result<()> {
 fn finetune_host(mut args: peqa::cli::Args) -> Result<()> {
     use peqa::model::PackedModel;
     use peqa::serve::{self, ModelGeom};
-    use peqa::train::{HostPeqaTuner, Tuner};
+    use peqa::train::HostPeqaTuner;
 
     let model_path = args.opt("model");
     let dataset_opt = args.opt("dataset");
     let dataset = dataset_opt.clone().unwrap_or_else(|| "wikitext".to_string());
-    let steps = args.get_usize("steps", 60)?;
-    let lr = args.get_f64("lr", 0.0)?;
-    let batch = args.get_usize("batch", 4)?.max(1);
-    let seq = args.get_usize("seq", 48)?.max(2);
-    let heads = args.get_usize("heads", 4)?;
+    // Numeric flags are captured as Option first: `--resume` must know
+    // which flags the user *explicitly* passed to cross-check them
+    // against the journal meta.
+    let steps_opt = args.opt("steps");
+    let lr_opt = args.opt("lr");
+    let batch_opt = args.opt("batch");
+    let seq_opt = args.opt("seq");
+    let heads_opt = args.opt("heads");
     let train_zeros = args.flag("train-zeros");
     let task_opt = args.opt("task");
     let tasks_opt = args.opt("tasks");
@@ -310,7 +338,11 @@ fn finetune_host(mut args: peqa::cli::Args) -> Result<()> {
     let out_dir = args.get("out", "adapters");
     let save_model = args.opt("save-model");
     let eval_tokens = args.get_usize("eval-tokens", 8192)?;
-    let seed = args.get_u64("seed", 7)?;
+    let seed_opt = args.opt("seed");
+    let save_every = args.get_usize("save-every", 0)?;
+    let resume = args.flag("resume");
+    let halt_after = args.get_usize("halt-after", 0)?;
+    let publish = args.opt("publish");
     // Synth-model shape flags: meaningful only without --model (a loaded
     // .packed file fixes its own bits/grouping/geometry) — rejecting the
     // combination beats silently tuning a different config than asked.
@@ -321,19 +353,32 @@ fn finetune_host(mut args: peqa::cli::Args) -> Result<()> {
     let d_ff_opt = args.opt("d-ff");
     let vocab_opt = args.opt("vocab");
     args.finish()?;
-    let parse_or = |v: &Option<String>, name: &str, default: usize| -> Result<usize> {
+    fn parse_num<T: std::str::FromStr>(v: &Option<String>, name: &str) -> Result<Option<T>> {
         match v {
-            None => Ok(default),
+            None => Ok(None),
             Some(s) => s
                 .parse()
-                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{s}'")),
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{s}'")),
         }
-    };
-    let bits = parse_or(&bits_opt, "bits", 4)? as u8;
-    let layers = parse_or(&layers_opt, "layers", 2)?;
-    let d_model = parse_or(&d_model_opt, "d-model", 64)?;
-    let d_ff = parse_or(&d_ff_opt, "d-ff", 192)?;
-    let vocab = parse_or(&vocab_opt, "vocab", 512)?;
+    }
+    let steps_o: Option<usize> = parse_num(&steps_opt, "steps")?;
+    let lr_o: Option<f64> = parse_num(&lr_opt, "lr")?;
+    let batch_o: Option<usize> = parse_num(&batch_opt, "batch")?;
+    let seq_o: Option<usize> = parse_num(&seq_opt, "seq")?;
+    let heads_o: Option<usize> = parse_num(&heads_opt, "heads")?;
+    let seed_o: Option<u64> = parse_num(&seed_opt, "seed")?;
+    let steps = steps_o.unwrap_or(60);
+    let lr = lr_o.unwrap_or(0.0);
+    let batch = batch_o.unwrap_or(4).max(1);
+    let seq = seq_o.unwrap_or(48).max(2);
+    let heads = heads_o.unwrap_or(4);
+    let seed = seed_o.unwrap_or(7);
+    let bits = parse_num::<usize>(&bits_opt, "bits")?.unwrap_or(4) as u8;
+    let layers = parse_num::<usize>(&layers_opt, "layers")?.unwrap_or(2);
+    let d_model = parse_num::<usize>(&d_model_opt, "d-model")?.unwrap_or(64);
+    let d_ff = parse_num::<usize>(&d_ff_opt, "d-ff")?.unwrap_or(192);
+    let vocab = parse_num::<usize>(&vocab_opt, "vocab")?.unwrap_or(512);
     if model_path.is_some() {
         let synth_flags = [
             ("bits", bits_opt.is_some()),
@@ -361,6 +406,62 @@ fn finetune_host(mut args: peqa::cli::Args) -> Result<()> {
              dataset names stream their corpus, others get deterministic \
              synthetic task corpora)"
         );
+    }
+    if tasks_opt.is_some() {
+        for (name, set) in [
+            ("save-every", save_every > 0),
+            ("resume", resume),
+            ("halt-after", halt_after > 0),
+        ] {
+            if set {
+                bail!(
+                    "--{name} drives the single-task journaled training loop and is \
+                     not supported with --tasks (multi-task journaling is a ROADMAP \
+                     follow-up; --publish works for both)"
+                );
+            }
+        }
+    }
+    if resume {
+        if model_path.is_some() {
+            bail!(
+                "--resume rebuilds the model from the journal's base snapshot and \
+                 conflicts with --model"
+            );
+        }
+        if save_model.is_some() {
+            bail!(
+                "--resume conflicts with --save-model — the base model was already \
+                 saved next to the journal when the run started"
+            );
+        }
+        let synth = [
+            ("bits", bits_opt.is_some()),
+            ("group", group.is_some()),
+            ("layers", layers_opt.is_some()),
+            ("d-model", d_model_opt.is_some()),
+            ("d-ff", d_ff_opt.is_some()),
+            ("vocab", vocab_opt.is_some()),
+        ];
+        if let Some((name, _)) = synth.iter().find(|(_, set)| *set) {
+            bail!("--{name} conflicts with --resume (geometry comes from the journal)");
+        }
+        return finetune_host_resume(ResumeOpts {
+            out_dir,
+            task,
+            dataset: dataset_opt,
+            eval_tokens,
+            halt_after,
+            publish,
+            steps: steps_o,
+            lr: lr_o,
+            batch: batch_o,
+            seq: seq_o,
+            heads: heads_o,
+            seed: seed_o,
+            save_every: (save_every > 0).then_some(save_every),
+            train_zeros,
+        });
     }
 
     let pm = match &model_path {
@@ -411,6 +512,7 @@ fn finetune_host(mut args: peqa::cli::Args) -> Result<()> {
             eval_tokens,
             seed,
             threads,
+            publish,
         });
     }
 
@@ -422,54 +524,363 @@ fn finetune_host(mut args: peqa::cli::Args) -> Result<()> {
         cfg.lr = lr;
     }
     cfg.log_every = (steps / 10).max(1);
-    let mut tuner = HostPeqaTuner::from_packed(pm, geom, cfg, train_zeros, threads)?;
-    let mut batcher = peqa::data::LmBatcher::new(train_s, batch, seq, seed ^ 0x5eed);
-    let t0 = std::time::Instant::now();
-    tuner.run(steps, || batcher.next_batch())?;
-    let train_wall = t0.elapsed().as_secs_f64();
 
-    let losses = tuner.losses();
-    let adapter = tuner.extract_adapter();
-    let out_path = std::path::Path::new(&out_dir).join(format!("{task}.adapter"));
+    // Crash-safe mode: before the first step, write the base snapshot
+    // and open the append-only journal in --out; a crash at any later
+    // point resumes bitwise from the last durable record
+    // (store::journal module docs).
+    let writer = if save_every > 0 {
+        let out = std::path::Path::new(&out_dir);
+        let base_name = format!("{task}.base.packed");
+        base_model.to_checkpoint().save_packed(&out.join(&base_name), base_model.bits)?;
+        let meta = peqa::store::JournalMeta {
+            task: task.clone(),
+            dataset: dataset.clone(),
+            base: base_name,
+            seed,
+            steps,
+            save_every,
+            batch,
+            seq,
+            lr_bits: cfg.lr.to_bits(),
+            warmup_steps: cfg.warmup_steps,
+            train_zeros,
+            vocab: geom.vocab,
+            d_model: geom.d_model,
+            n_layers: geom.n_layers,
+            n_heads: geom.n_heads,
+            d_ff: geom.d_ff,
+        };
+        let w = peqa::store::JournalWriter::create(&out.join(format!("{task}.journal")), &meta)?;
+        println!(
+            "journal: {} (full state every {save_every} step(s), base snapshot {})",
+            w.path().display(),
+            meta.base
+        );
+        Some(w)
+    } else {
+        None
+    };
+
+    let tuner = HostPeqaTuner::from_packed(pm, geom, cfg, train_zeros, threads)?;
+    let batcher = peqa::data::LmBatcher::new(train_s, batch, seq, seed ^ 0x5eed);
+    run_single_task(SingleRun {
+        tuner,
+        batcher,
+        writer,
+        base_model,
+        eval_s,
+        task,
+        dataset,
+        out_dir,
+        steps,
+        save_every,
+        halt_after,
+        publish,
+        eval_tokens,
+        heads,
+        batch,
+        seq,
+        threads,
+        train_zeros,
+        save_model,
+    })
+}
+
+/// Shared single-task training drive: the step loop with optional
+/// journal appends every `save_every` steps (plus one at the final
+/// step), an optional simulated crash (`--halt-after`), then the final
+/// adapter + eval + publish. Both the fresh path and `--resume` funnel
+/// here, so an interrupted-and-resumed run takes exactly the code path
+/// of an uninterrupted one.
+struct SingleRun {
+    tuner: peqa::train::HostPeqaTuner,
+    batcher: peqa::data::LmBatcher,
+    writer: Option<peqa::store::JournalWriter>,
+    base_model: peqa::model::PackedModel,
+    eval_s: Vec<u32>,
+    task: String,
+    dataset: String,
+    out_dir: String,
+    steps: usize,
+    save_every: usize,
+    halt_after: usize,
+    publish: Option<String>,
+    eval_tokens: usize,
+    heads: usize,
+    batch: usize,
+    seq: usize,
+    threads: usize,
+    train_zeros: bool,
+    save_model: Option<String>,
+}
+
+fn run_single_task(mut o: SingleRun) -> Result<()> {
+    use peqa::store::TrainRecord;
+    use peqa::train::Tuner;
+
+    let start_step = o.tuner.step_count();
+    let mut last_recorded = start_step;
+    let t0 = std::time::Instant::now();
+    while o.tuner.step_count() < o.steps {
+        let b = o.batcher.next_batch();
+        o.tuner.step(&b)?;
+        let step = o.tuner.step_count();
+        if let Some(w) = o.writer.as_mut() {
+            if (o.save_every > 0 && step % o.save_every == 0) || step == o.steps {
+                let st = o.tuner.export_state()?;
+                w.append(&TrainRecord {
+                    step: step as u64,
+                    rng: o.batcher.rng_state(),
+                    ema: st.ema,
+                    losses: st.losses[last_recorded..].to_vec(),
+                    params: st.params,
+                    opt_m: st.opt_m,
+                    opt_v: st.opt_v,
+                })?;
+                last_recorded = step;
+            }
+        }
+        if o.halt_after > 0 && step >= o.halt_after && step < o.steps {
+            println!(
+                "halted after step {step}/{} (simulated crash; journal durable through \
+                 step {last_recorded}) — continue with: peqa finetune --resume \
+                 --task {} --out {}",
+                o.steps, o.task, o.out_dir
+            );
+            return Ok(());
+        }
+    }
+    let train_wall = t0.elapsed().as_secs_f64();
+    let steps_run = o.tuner.step_count() - start_step;
+
+    let losses = o.tuner.losses();
+    let adapter = o.tuner.extract_adapter();
+    let out_path = std::path::Path::new(&o.out_dir).join(format!("{}.adapter", o.task));
     adapter.save(&out_path)?;
 
     println!(
-        "finetune host: task '{task}' on {dataset} | {} steps in {train_wall:.1}s \
+        "finetune host: task '{}' on {} | {} steps in {train_wall:.1}s \
          ({:.3}s/step) | loss {:.4} → {:.4} (ema {:.4})",
-        steps,
-        train_wall / steps.max(1) as f64,
+        o.task,
+        o.dataset,
+        steps_run,
+        train_wall / steps_run.max(1) as f64,
         losses.first().copied().unwrap_or(0.0),
         losses.last().copied().unwrap_or(0.0),
-        tuner.smoothed_loss().unwrap_or(0.0),
+        o.tuner.smoothed_loss().unwrap_or(0.0),
     );
     println!(
         "trainable: {} params (s{}) | trainable+Adam {} vs packed codes {} \
          ({}x smaller)",
-        tuner.trainable_params(),
-        if train_zeros { "+z" } else { " only" },
-        peqa::util::human_bytes(tuner.trainable_state_bytes()),
-        peqa::util::human_bytes(tuner.model().packed_bytes() as u64),
-        tuner.model().packed_bytes() as u64 / tuner.trainable_state_bytes().max(1),
+        o.tuner.trainable_params(),
+        if o.train_zeros { "+z" } else { " only" },
+        peqa::util::human_bytes(o.tuner.trainable_state_bytes()),
+        peqa::util::human_bytes(o.tuner.model().packed_bytes() as u64),
+        o.tuner.model().packed_bytes() as u64 / o.tuner.trainable_state_bytes().max(1),
     );
-    if eval_tokens > 0 {
-        let slice = &eval_s[..eval_s.len().min(eval_tokens)];
-        let base_ppl =
-            peqa::eval::host_perplexity(&base_model, heads, slice, batch, seq, threads)?;
-        let tuned_ppl =
-            peqa::eval::host_perplexity(tuner.model(), heads, slice, batch, seq, threads)?;
+    if o.eval_tokens > 0 {
+        let slice = &o.eval_s[..o.eval_s.len().min(o.eval_tokens)];
+        let base_ppl = peqa::eval::host_perplexity(
+            &o.base_model,
+            o.heads,
+            slice,
+            o.batch,
+            o.seq,
+            o.threads,
+        )?;
+        let tuned_ppl = peqa::eval::host_perplexity(
+            o.tuner.model(),
+            o.heads,
+            slice,
+            o.batch,
+            o.seq,
+            o.threads,
+        )?;
         println!(
             "held-out ppl ({} tokens): base {base_ppl:.3} → tuned {tuned_ppl:.3}",
             slice.len()
         );
     }
     println!("adapter → {}", out_path.display());
-    if let Some(p) = &save_model {
+    if let Some(dir) = &o.publish {
+        let reg = peqa::store::Registry::open(dir.as_str());
+        let generation = reg.publish(&[(o.task.clone(), &adapter)])?;
         println!(
-            "serve it: peqa serve --model {p} --adapters {out_dir} --heads {heads} \
-             --tasks 1"
+            "published: {dir} generation {generation} (task '{}') — a watching \
+             `peqa serve --registry {dir}` hot-reloads it",
+            o.task
+        );
+    }
+    if let Some(p) = &o.save_model {
+        println!(
+            "serve it: peqa serve --model {p} --adapters {} --heads {} --tasks 1",
+            o.out_dir, o.heads
         );
     }
     Ok(())
+}
+
+/// Flags the user passed explicitly on a `--resume` invocation. Each is
+/// cross-checked against the journal meta before anything runs — the
+/// journal is authoritative, and a silently different flag would break
+/// the bitwise resume contract.
+struct ResumeOpts {
+    out_dir: String,
+    task: String,
+    dataset: Option<String>,
+    eval_tokens: usize,
+    halt_after: usize,
+    publish: Option<String>,
+    steps: Option<usize>,
+    lr: Option<f64>,
+    batch: Option<usize>,
+    seq: Option<usize>,
+    heads: Option<usize>,
+    seed: Option<u64>,
+    save_every: Option<usize>,
+    train_zeros: bool,
+}
+
+/// Resume a journaled single-task run: verify the journal (truncating a
+/// torn tail), rebuild the tuner from the base snapshot, restore the
+/// last durable record (scales/zeros, Adam moments, loss bookkeeping,
+/// batcher RNG cursor), and drive the same loop to completion — bitwise
+/// identical to a run that was never interrupted.
+fn finetune_host_resume(o: ResumeOpts) -> Result<()> {
+    use peqa::model::PackedModel;
+    use peqa::serve::ModelGeom;
+    use peqa::store::journal;
+    use peqa::train::{HostPeqaTuner, Tuner, TunerState};
+
+    let out = std::path::Path::new(&o.out_dir);
+    let jpath = out.join(format!("{}.journal", o.task));
+    if !jpath.is_file() {
+        bail!(
+            "--resume: no journal at {} — start the run with --save-every N \
+             (and pass the same --task/--out)",
+            jpath.display()
+        );
+    }
+    let (meta, records, writer) = journal::open_resume(&jpath)?;
+
+    fn pin<T: PartialEq + std::fmt::Display>(
+        name: &str,
+        cli: &Option<T>,
+        journal: &T,
+    ) -> Result<()> {
+        if let Some(v) = cli {
+            if v != journal {
+                bail!(
+                    "--{name} {v} disagrees with the journal's {journal} — drop the \
+                     flag (the journal is authoritative) or start a fresh run"
+                );
+            }
+        }
+        Ok(())
+    }
+    pin("steps", &o.steps, &meta.steps)?;
+    pin("batch", &o.batch, &meta.batch)?;
+    pin("seq", &o.seq, &meta.seq)?;
+    pin("heads", &o.heads, &meta.n_heads)?;
+    pin("seed", &o.seed, &meta.seed)?;
+    pin("save-every", &o.save_every, &meta.save_every)?;
+    pin("dataset", &o.dataset, &meta.dataset)?;
+    if let Some(lr) = o.lr {
+        if lr.to_bits() != meta.lr_bits {
+            bail!(
+                "--lr {lr} disagrees with the journal's {} — drop the flag or start \
+                 a fresh run",
+                meta.lr()
+            );
+        }
+    }
+    if o.train_zeros && !meta.train_zeros {
+        bail!(
+            "--train-zeros disagrees with the journal (the run trains scales only) — \
+             drop the flag or start a fresh run"
+        );
+    }
+
+    let base_path = out.join(&meta.base);
+    let pm = PackedModel::load(&base_path)?;
+    let geom = ModelGeom::infer(&pm, meta.n_heads)?;
+    let jgeom = ModelGeom {
+        vocab: meta.vocab,
+        d_model: meta.d_model,
+        n_layers: meta.n_layers,
+        n_heads: meta.n_heads,
+        d_ff: meta.d_ff,
+    };
+    if geom != jgeom {
+        bail!(
+            "base snapshot {} has geometry {:?} but the journal pins {:?} — the \
+             snapshot was replaced after the run started",
+            base_path.display(),
+            geom,
+            jgeom
+        );
+    }
+    let threads = peqa::util::num_threads();
+    let mut cfg = pipeline::default_cfg(&format!("peqa_b{}_host", pm.bits), meta.steps, meta.seed);
+    cfg.lr = meta.lr();
+    cfg.warmup_steps = meta.warmup_steps;
+    cfg.log_every = (meta.steps / 10).max(1);
+    let base_model = pm.clone();
+    let mut tuner = HostPeqaTuner::from_packed(pm, geom, cfg, meta.train_zeros, threads)?;
+    let (train_s, eval_s) = pipeline::host_split(&meta.dataset, pipeline::ADAPT_BYTES)?;
+    let mut batcher = peqa::data::LmBatcher::new(train_s, meta.batch, meta.seq, meta.seed ^ 0x5eed);
+
+    if let Some((last, losses)) = journal::final_state(&records) {
+        let step = usize::try_from(last.step)
+            .map_err(|_| anyhow::anyhow!("journal step {} overflows usize", last.step))?;
+        tuner.import_state(&TunerState {
+            step,
+            losses,
+            ema: last.ema,
+            params: last.params.clone(),
+            opt_m: last.opt_m.clone(),
+            opt_v: last.opt_v.clone(),
+        })?;
+        batcher.set_rng_state(last.rng.0, last.rng.1);
+        println!(
+            "resume: '{}' at step {}/{} from {} (+ base snapshot {})",
+            meta.task,
+            last.step,
+            meta.steps,
+            jpath.display(),
+            meta.base
+        );
+    } else {
+        println!(
+            "resume: journal {} holds no durable records yet — replaying '{}' from \
+             step 0",
+            jpath.display(),
+            meta.task
+        );
+    }
+
+    run_single_task(SingleRun {
+        tuner,
+        batcher,
+        writer: Some(writer),
+        base_model,
+        eval_s,
+        task: meta.task.clone(),
+        dataset: meta.dataset.clone(),
+        out_dir: o.out_dir,
+        steps: meta.steps,
+        save_every: meta.save_every,
+        halt_after: o.halt_after,
+        publish: o.publish,
+        eval_tokens: o.eval_tokens,
+        heads: meta.n_heads,
+        batch: meta.batch,
+        seq: meta.seq,
+        threads,
+        train_zeros: meta.train_zeros,
+        save_model: None,
+    })
 }
 
 struct FinetuneMultiOpts {
@@ -487,6 +898,7 @@ struct FinetuneMultiOpts {
     eval_tokens: usize,
     seed: u64,
     threads: usize,
+    publish: Option<String>,
 }
 
 /// Task corpus for multi-task tuning: named host datasets
@@ -559,12 +971,16 @@ fn finetune_host_multi(o: FinetuneMultiOpts) -> Result<()> {
     );
 
     std::fs::create_dir_all(&o.out_dir)?;
+    let mut published: Vec<(String, Checkpoint)> = Vec::new();
     for ti in 0..n {
         let name = o.names[ti].clone();
         let losses = mt.losses(ti).to_vec();
         let adapter = mt.extract_adapter(ti);
         let out_path = std::path::Path::new(&o.out_dir).join(format!("{name}.adapter"));
         adapter.save(&out_path)?;
+        if o.publish.is_some() {
+            published.push((name.clone(), adapter.clone()));
+        }
         let ppl_note = if o.eval_tokens > 0 {
             let slice = &evals[ti][..evals[ti].len().min(o.eval_tokens)];
             let base_ppl = peqa::eval::host_perplexity(
@@ -596,12 +1012,85 @@ fn finetune_host_multi(o: FinetuneMultiOpts) -> Result<()> {
             out_path.display()
         );
     }
+    if let Some(dir) = &o.publish {
+        let reg = peqa::store::Registry::open(dir.as_str());
+        let refs: Vec<(String, &Checkpoint)> =
+            published.iter().map(|(t, a)| (t.clone(), a)).collect();
+        let generation = reg.publish(&refs)?;
+        println!(
+            "published: {dir} generation {generation} ({n} task(s) in one atomic \
+             generation) — a watching `peqa serve --registry {dir}` hot-reloads it"
+        );
+    }
     if let Some(p) = &o.save_model {
         println!(
             "serve all {n} tasks: peqa serve --model {p} --adapters {} --heads {} \
              --tasks {n}",
             o.out_dir, o.heads
         );
+    }
+    Ok(())
+}
+
+/// `peqa fsck`: verify every named artifact (directories expand to
+/// their visible files) via [`peqa::store::fsck`]. Legacy formats print
+/// as unverified but do not fail the command; corruption or truncation
+/// anywhere exits nonzero.
+fn fsck_cmd(paths: &[String]) -> Result<()> {
+    use std::path::PathBuf;
+
+    if paths.is_empty() {
+        bail!("usage: peqa fsck <artifact|dir> [...]");
+    }
+    let mut files: Vec<PathBuf> = Vec::new();
+    for p in paths {
+        let pb = PathBuf::from(p);
+        if pb.is_dir() {
+            let mut entries: Vec<PathBuf> = std::fs::read_dir(&pb)
+                .map_err(|e| anyhow::anyhow!("reading {}: {e}", pb.display()))?
+                .filter_map(|e| e.ok().map(|e| e.path()))
+                .filter(|p| p.is_file())
+                .filter(|p| {
+                    p.file_name()
+                        .and_then(|s| s.to_str())
+                        .is_some_and(|n| !n.starts_with('.'))
+                })
+                .collect();
+            entries.sort();
+            if entries.is_empty() {
+                bail!("fsck: directory {} holds no files", pb.display());
+            }
+            files.extend(entries);
+        } else {
+            files.push(pb);
+        }
+    }
+    let (mut corrupt, mut unverified) = (0usize, 0usize);
+    for f in &files {
+        match peqa::store::fsck(f) {
+            Ok(r) => {
+                for line in &r.lines {
+                    println!("{line}");
+                }
+                if !r.verified {
+                    unverified += 1;
+                }
+            }
+            Err(e) => {
+                println!("{}: FAILED — {e:#}", f.display());
+                corrupt += 1;
+            }
+        }
+    }
+    println!(
+        "fsck: {} file(s): {} verified, {} unverified, {} corrupt",
+        files.len(),
+        files.len() - corrupt - unverified,
+        unverified,
+        corrupt
+    );
+    if corrupt > 0 {
+        bail!("fsck: {corrupt} corrupt file(s)");
     }
     Ok(())
 }
@@ -694,6 +1183,7 @@ fn serve_demo(size: &str, n_req: usize, full_reload: bool) -> Result<()> {
 struct ServeOpts {
     model: Option<String>,
     adapters: Option<String>,
+    registry: Option<String>,
     heads: usize,
     tasks: usize,
     requests: usize,
@@ -758,11 +1248,32 @@ fn serve_host(o: ServeOpts) -> Result<()> {
         }
     };
     let geom = ModelGeom::infer(&pm, o.heads)?;
-    let adapters = match &o.adapters {
-        Some(dir) => AdapterStore::load_dir(std::path::Path::new(dir))?,
-        None => {
-            let names: Vec<&str> = task_names.iter().map(|s| s.as_str()).collect();
-            serve::synth_adapters(&base_view, &names, o.seed ^ 0xad)
+    if o.registry.is_some() && o.adapters.is_some() {
+        bail!("--registry and --adapters both name the adapter source; pick one");
+    }
+    let registry = o.registry.as_ref().map(|d| peqa::store::Registry::open(d.as_str()));
+    let adapters = if let Some(reg) = &registry {
+        // Registry mode: serve the current published generation (every
+        // adapter checksum-verified by Registry::load); with --clients
+        // the server also watches for newly published generations.
+        let (generation, list) = reg.load()?;
+        let mut store = AdapterStore::new();
+        for (task, ck) in list {
+            store.insert(task, ck);
+        }
+        println!(
+            "registry: {} generation {generation} ({} task(s))",
+            reg.dir().display(),
+            store.tasks().len()
+        );
+        store
+    } else {
+        match &o.adapters {
+            Some(dir) => AdapterStore::load_dir(std::path::Path::new(dir))?,
+            None => {
+                let names: Vec<&str> = task_names.iter().map(|s| s.as_str()).collect();
+                serve::synth_adapters(&base_view, &names, o.seed ^ 0xad)
+            }
         }
     };
     let tasks: Vec<String> = adapters.tasks().iter().map(|s| s.to_string()).collect();
@@ -805,8 +1316,13 @@ fn serve_host(o: ServeOpts) -> Result<()> {
     let (responses, m) = if o.clients > 0 {
         // Concurrent-client mode: one worker thread owns the scheduler;
         // N clients submit over the server's mpsc channel and block on
-        // their own replies. Bursts admitted together share prefill GEMMs.
-        let server = Server::spawn(sched)?;
+        // their own replies. Bursts admitted together share prefill
+        // GEMMs. In registry mode the worker also polls the manifest
+        // between bursts and hot-reloads new generations.
+        let server = match registry {
+            Some(reg) => Server::spawn_watching(sched, reg)?,
+            None => Server::spawn(sched)?,
+        };
         let mut responses = Vec::new();
         std::thread::scope(|s| -> Result<()> {
             let mut joins = Vec::new();

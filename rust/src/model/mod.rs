@@ -1,19 +1,28 @@
 //! Checkpoints: named parameter collections + the `.peqa` on-disk formats.
 //!
-//! Three related formats:
-//! * `.peqa`  — full checkpoint: JSON header + raw little-endian f32 blobs,
-//!   one per named tensor (any method layout).
+//! Three related artifact kinds:
+//! * `.peqa`  — full checkpoint: the JSON name/shape header plus raw
+//!   little-endian f32 blobs, one per named tensor (any method layout).
 //! * `.adapter` — a PEQA task adapter: only the scale (and optionally
 //!   zero-point) vectors. Kilobytes; this is the paper's "fast task
-//!   switching" object.
+//!   switching" object. Same layout as `.peqa`, different role.
 //! * `.packed` — deployment format: integer codes bit-packed at b bits
 //!   (quant::pack) + f32 scales/zeros; its file size is the "Model Size"
 //!   column of Tables 4/6/7.
+//!
+//! All three are written inside the checksummed `PEQAS1` container
+//! (`store::format`): per-section CRC32s plus a whole-file trailer, and
+//! every write is atomic (temp file + fsync + rename), so a torn or
+//! bit-flipped artifact is *detected at load* with the file, section and
+//! expected-vs-actual checksum in the error. The pre-container formats
+//! (`PEQA1` checkpoints/adapters, `PEQAP1` packed streams) still load
+//! through the same entry points but are flagged **unverified** — see
+//! [`Checkpoint::load_flagged`] / [`PackedModel::load_flagged`];
+//! re-saving upgrades them.
 
 pub mod blocks;
 
 use std::collections::HashMap;
-use std::io::{Read, Write};
 use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -21,6 +30,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::json::Value;
 use crate::quant::{pack_codes, packed_size, PackedMatrix, QuantizedMatrix};
 use crate::runtime::ParamMeta;
+use crate::store::format::{is_container, Container, ContainerWriter};
 use crate::tensor::Tensor;
 use crate::util::Pcg32;
 
@@ -147,12 +157,24 @@ impl Checkpoint {
 
     // -- .peqa binary format -------------------------------------------------
 
+    /// Write a checksummed checkpoint container (`store::format`): the
+    /// JSON name/shape header in the "meta" section, one `t:<name>`
+    /// section of raw little-endian f32 per tensor, every byte covered
+    /// by CRC32, written atomically (temp file + fsync + rename).
     pub fn save(&self, path: &Path) -> Result<()> {
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
+        let mut w = ContainerWriter::new("checkpoint");
+        w.section("meta", self.header_json().into_bytes());
+        for (n, t) in self.iter() {
+            w.section(&format!("t:{n}"), tensor_le_bytes(t));
         }
-        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        let header = Value::Arr(
+        w.write_atomic(path)?;
+        Ok(())
+    }
+
+    /// The JSON `[{name, shape}]` header (shared by the container and
+    /// legacy writers' formats).
+    fn header_json(&self) -> String {
+        Value::Arr(
             self.iter()
                 .map(|(n, t)| {
                     Value::obj(vec![
@@ -167,35 +189,70 @@ impl Checkpoint {
                 })
                 .collect(),
         )
-        .to_string();
-        f.write_all(b"PEQA1\n")?;
-        f.write_all(&(header.len() as u64).to_le_bytes())?;
-        f.write_all(header.as_bytes())?;
-        for t in &self.tensors {
-            for x in t.data() {
-                f.write_all(&x.to_le_bytes())?;
-            }
-        }
-        Ok(())
+        .to_string()
     }
 
+    /// Load a checkpoint, warning when it is a legacy (unchecksummed)
+    /// file — see [`Self::load_flagged`] to branch on that instead.
     pub fn load(path: &Path) -> Result<Checkpoint> {
-        let mut f = std::io::BufReader::new(
-            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
-        );
-        let mut magic = [0u8; 6];
-        f.read_exact(&mut magic)?;
-        if &magic != b"PEQA1\n" {
-            bail!("{} is not a .peqa checkpoint", path.display());
+        let (ck, verified) = Self::load_flagged(path)?;
+        if !verified {
+            crate::info!(
+                "{}: legacy PEQA1 format carries no checksums — loaded UNVERIFIED \
+                 (re-save to upgrade)",
+                path.display()
+            );
         }
-        let mut len8 = [0u8; 8];
-        f.read_exact(&mut len8)?;
-        let hlen = u64::from_le_bytes(len8) as usize;
-        let mut hbuf = vec![0u8; hlen];
-        f.read_exact(&mut hbuf)?;
-        let header = Value::parse(std::str::from_utf8(&hbuf)?)?;
+        Ok(ck)
+    }
+
+    /// Load a checkpoint and report whether its bytes were checksum-
+    /// verified: `true` for the `PEQAS1` container, `false` for legacy
+    /// `PEQA1` files (still parsed, flagged unverified).
+    pub fn load_flagged(path: &Path) -> Result<(Checkpoint, bool)> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("opening {}", path.display()))?;
+        let label = path.display().to_string();
+        if is_container(&bytes) {
+            let c = Container::from_bytes(&bytes, &label)?;
+            Ok((Self::from_container(&c, &label)?, true))
+        } else if bytes.starts_with(b"PEQA1\n") {
+            Ok((Self::load_legacy(&bytes, &label)?, false))
+        } else {
+            bail!("{label} is not a .peqa checkpoint (no PEQAS1/PEQA1 magic)")
+        }
+    }
+
+    fn from_container(c: &Container, label: &str) -> Result<Checkpoint> {
+        if c.kind != "checkpoint" {
+            bail!("{label}: container kind '{}' is not 'checkpoint'", c.kind);
+        }
+        let header = parse_header_sections(c, label)?;
         let mut ck = Checkpoint::new();
-        for item in header.as_arr().ok_or_else(|| anyhow!("bad header"))? {
+        for (name, shape) in header {
+            let numel: usize = shape.iter().product();
+            let payload = c
+                .section(&format!("t:{name}"))
+                .with_context(|| label.to_string())?;
+            if payload.len() != numel * 4 {
+                bail!(
+                    "{label}: tensor '{name}': section has {} byte(s), shape {shape:?} \
+                     wants {}",
+                    payload.len(),
+                    numel * 4
+                );
+            }
+            ck.insert(name, Tensor::new(&shape, le_bytes_to_f32(payload)));
+        }
+        Ok(ck)
+    }
+
+    /// Parse the legacy `PEQA1` stream with full error context: a short
+    /// file names the tensor, its byte offset, and expected-vs-got.
+    fn load_legacy(bytes: &[u8], label: &str) -> Result<Checkpoint> {
+        let (header, mut off) = legacy_header(bytes, label, b"PEQA1\n")?;
+        let mut ck = Checkpoint::new();
+        for item in header.as_arr().ok_or_else(|| anyhow!("{label}: bad header"))? {
             let name = item.str_of("name")?;
             let shape: Vec<usize> = item
                 .arr_of("shape")?
@@ -203,13 +260,19 @@ impl Checkpoint {
                 .map(|x| x.as_usize().context("shape"))
                 .collect::<Result<_>>()?;
             let numel: usize = shape.iter().product();
-            let mut bytes = vec![0u8; numel * 4];
-            f.read_exact(&mut bytes)?;
-            let data: Vec<f32> = bytes
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect();
-            ck.insert(name.to_string(), Tensor::new(&shape, data));
+            let want = numel * 4;
+            if off + want > bytes.len() {
+                bail!(
+                    "{label}: truncated reading tensor '{name}' at byte offset {off}: \
+                     expected {want} byte(s) ({numel} f32), only {} available",
+                    bytes.len() - off
+                );
+            }
+            ck.insert(
+                name.to_string(),
+                Tensor::new(&shape, le_bytes_to_f32(&bytes[off..off + want])),
+            );
+            off += want;
         }
         Ok(ck)
     }
@@ -307,13 +370,11 @@ impl Checkpoint {
 
     // -- packed deployment format ---------------------------------------------
 
-    /// Write the deployment file: quantized projections bit-packed at
-    /// `bits`, fp tensors raw. Returns bytes written (the "Model Size").
+    /// Write the deployment file as a checksummed container: quantized
+    /// projections bit-packed at `bits`, fp tensors raw f32, one
+    /// `t:<name>` section each, written atomically. Returns total file
+    /// bytes (the "Model Size").
     pub fn save_packed(&self, path: &Path, bits: u8) -> Result<u64> {
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
         let mut entries = Vec::new();
         for (name, t) in self.iter() {
             let kind = if name.ends_with(".wq") { "packed" } else { "f32" };
@@ -331,26 +392,19 @@ impl Checkpoint {
             ("tensors", Value::Arr(entries)),
         ])
         .to_string();
-        let mut written = 0u64;
-        f.write_all(b"PEQAP1\n")?;
-        f.write_all(&(header.len() as u64).to_le_bytes())?;
-        f.write_all(header.as_bytes())?;
-        written += 7 + 8 + header.len() as u64;
+        let mut w = ContainerWriter::new("packed");
+        w.section("meta", header.into_bytes());
         for (name, t) in self.iter() {
             if name.ends_with(".wq") {
                 let codes: Vec<u8> = t.data().iter().map(|&x| x as u8).collect();
                 let packed = pack_codes(&codes, bits);
                 debug_assert_eq!(packed.len(), packed_size(codes.len(), bits));
-                f.write_all(&packed)?;
-                written += packed.len() as u64;
+                w.section(&format!("t:{name}"), packed);
             } else {
-                for x in t.data() {
-                    f.write_all(&x.to_le_bytes())?;
-                }
-                written += 4 * t.len() as u64;
+                w.section(&format!("t:{name}"), tensor_le_bytes(t));
             }
         }
-        Ok(written)
+        w.write_atomic(path)
     }
 
     /// Load a `.packed` deployment file back into a PEQA-layout checkpoint
@@ -379,20 +433,81 @@ pub struct PackedModel {
 
 impl PackedModel {
     /// Parse a `.packed` file (see [`Checkpoint::save_packed`] for the
-    /// format): JSON header, then per-tensor payloads — bit-packed code
-    /// streams for `.wq` entries, raw little-endian f32 otherwise.
+    /// format): checksum-verified `PEQAS1` container or legacy
+    /// `PEQAP1` stream (parsed unverified, with a warning) — JSON
+    /// header, then per-tensor payloads: bit-packed code streams for
+    /// `.wq` entries, raw little-endian f32 otherwise.
     pub fn load(path: &Path) -> Result<PackedModel> {
-        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
-        let mut magic = [0u8; 7];
-        f.read_exact(&mut magic)?;
-        if &magic != b"PEQAP1\n" {
-            bail!("{} is not a packed model", path.display());
+        let (pm, verified) = Self::load_flagged(path)?;
+        if !verified {
+            crate::info!(
+                "{}: legacy PEQAP1 format carries no checksums — loaded UNVERIFIED \
+                 (re-save to upgrade)",
+                path.display()
+            );
         }
-        let mut len8 = [0u8; 8];
-        f.read_exact(&mut len8)?;
-        let mut hbuf = vec![0u8; u64::from_le_bytes(len8) as usize];
-        f.read_exact(&mut hbuf)?;
-        let header = Value::parse(std::str::from_utf8(&hbuf)?)?;
+        Ok(pm)
+    }
+
+    /// [`Self::load`] plus whether the bytes were checksum-verified
+    /// (`false` for legacy `PEQAP1` files).
+    pub fn load_flagged(path: &Path) -> Result<(PackedModel, bool)> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("opening {}", path.display()))?;
+        let label = path.display().to_string();
+        if is_container(&bytes) {
+            let c = Container::from_bytes(&bytes, &label)?;
+            if c.kind != "packed" {
+                bail!("{label}: container kind '{}' is not 'packed'", c.kind);
+            }
+            let text = std::str::from_utf8(c.section("meta").with_context(|| label.clone())?)
+                .with_context(|| format!("{label}: meta is not UTF-8"))?;
+            let header = Value::parse(text).with_context(|| format!("{label}: meta JSON"))?;
+            let take = |name: &str, want: usize| -> Result<Vec<u8>> {
+                let payload =
+                    c.section(&format!("t:{name}")).with_context(|| label.clone())?;
+                if payload.len() != want {
+                    bail!(
+                        "{label}: tensor '{name}': section has {} byte(s), expected {want}",
+                        payload.len()
+                    );
+                }
+                Ok(payload.to_vec())
+            };
+            let pm = Self::assemble_from_header(&header, take)?;
+            return Ok((pm, true));
+        }
+        if !bytes.starts_with(b"PEQAP1\n") {
+            bail!("{label} is not a packed model (no PEQAS1/PEQAP1 magic)");
+        }
+        let (header, start) = legacy_header(&bytes, &label, b"PEQAP1\n")?;
+        // The legacy stream is positional: payloads follow the header in
+        // tensor order. `assemble_from_header` requests each tensor
+        // exactly once, in header order, so one walking offset suffices.
+        let mut off = start;
+        let take = |name: &str, want: usize| -> Result<Vec<u8>> {
+            if off + want > bytes.len() {
+                bail!(
+                    "{label}: truncated reading tensor '{name}' at byte offset {off}: \
+                     expected {want} byte(s), only {} available",
+                    bytes.len() - off
+                );
+            }
+            let buf = bytes[off..off + want].to_vec();
+            off += want;
+            Ok(buf)
+        };
+        let pm = Self::assemble_from_header(&header, take)?;
+        Ok((pm, false))
+    }
+
+    /// Shared header-driven assembly for both on-disk formats: `take`
+    /// yields each tensor's exact payload bytes (container section or
+    /// legacy stream slice).
+    fn assemble_from_header(
+        header: &Value,
+        mut take: impl FnMut(&str, usize) -> Result<Vec<u8>>,
+    ) -> Result<PackedModel> {
         let bits = header.usize_of("bits")? as u8;
         let mut names = Vec::new();
         let mut streams: Vec<(String, Vec<usize>, Vec<u8>)> = Vec::new();
@@ -406,16 +521,10 @@ impl PackedModel {
                 .collect::<Result<_>>()?;
             let numel: usize = shape.iter().product();
             if item.str_of("kind")? == "packed" {
-                let mut buf = vec![0u8; packed_size(numel, bits)];
-                f.read_exact(&mut buf)?;
+                let buf = take(&name, packed_size(numel, bits))?;
                 streams.push((name.clone(), shape, buf));
             } else {
-                let mut buf = vec![0u8; numel * 4];
-                f.read_exact(&mut buf)?;
-                let data: Vec<f32> = buf
-                    .chunks_exact(4)
-                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                    .collect();
+                let data = le_bytes_to_f32(&take(&name, numel * 4)?);
                 dense.insert(name.clone(), Tensor::new(&shape, data));
             }
             names.push(name);
@@ -608,6 +717,70 @@ impl PackedModel {
         }
         Ok(out)
     }
+}
+
+/// A tensor's data as raw little-endian f32 bytes.
+fn tensor_le_bytes(t: &Tensor) -> Vec<u8> {
+    let mut out = Vec::with_capacity(t.len() * 4);
+    for x in t.data() {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Raw little-endian f32 bytes back into values (`bytes.len()` must be
+/// a multiple of 4 — callers validate lengths first).
+fn le_bytes_to_f32(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// Parse a legacy `magic + u64 header-len + JSON` prelude with
+/// truncation errors carrying offsets. Returns the header value and
+/// the offset of the first payload byte.
+fn legacy_header(bytes: &[u8], label: &str, magic: &[u8]) -> Result<(Value, usize)> {
+    let mut off = magic.len();
+    debug_assert!(bytes.starts_with(magic));
+    if bytes.len() < off + 8 {
+        bail!(
+            "{label}: truncated header: need 8-byte header length at offset {off}, \
+             file has {} byte(s)",
+            bytes.len()
+        );
+    }
+    let hlen = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()) as usize;
+    off += 8;
+    if off + hlen > bytes.len() {
+        bail!(
+            "{label}: truncated header: JSON header claims {hlen} byte(s) at offset \
+             {off}, only {} available",
+            bytes.len() - off
+        );
+    }
+    let text = std::str::from_utf8(&bytes[off..off + hlen])
+        .with_context(|| format!("{label}: header is not UTF-8"))?;
+    let header = Value::parse(text).with_context(|| format!("{label}: header JSON"))?;
+    Ok((header, off + hlen))
+}
+
+/// The checkpoint container's "meta" section as `(name, shape)` pairs.
+fn parse_header_sections(c: &Container, label: &str) -> Result<Vec<(String, Vec<usize>)>> {
+    let text = std::str::from_utf8(c.section("meta").with_context(|| label.to_string())?)
+        .with_context(|| format!("{label}: meta is not UTF-8"))?;
+    let header = Value::parse(text).with_context(|| format!("{label}: meta JSON"))?;
+    let mut out = Vec::new();
+    for item in header.as_arr().ok_or_else(|| anyhow!("{label}: bad header"))? {
+        let name = item.str_of("name")?.to_string();
+        let shape: Vec<usize> = item
+            .arr_of("shape")?
+            .iter()
+            .map(|x| x.as_usize().context("shape"))
+            .collect::<Result<_>>()?;
+        out.push((name, shape));
+    }
+    Ok(out)
 }
 
 fn init_tensor(p: &ParamMeta, rng: &mut Pcg32) -> Result<Tensor> {
@@ -876,6 +1049,98 @@ mod tests {
         for (name, t) in az.iter() {
             assert_eq!(t, via_ck.req(name).unwrap(), "{name}");
         }
+    }
+
+    /// Hand-built legacy `PEQA1` stream: magic + u64 header-len + JSON
+    /// header + raw little-endian f32 payloads in header order.
+    fn legacy_peqa1_bytes(header: &str, payload: &[f32]) -> Vec<u8> {
+        let mut bytes = b"PEQA1\n".to_vec();
+        bytes.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        for x in payload {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        bytes
+    }
+
+    #[test]
+    fn legacy_peqa1_loads_unverified_with_contextual_truncation_errors() {
+        let dir = std::env::temp_dir().join("peqa_test_legacy");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("old.peqa");
+        let header = r#"[{"name":"a.w","shape":[2,3]},{"name":"b.g","shape":[4]}]"#;
+        let data: Vec<f32> = (0..10).map(|i| i as f32 * 0.5).collect();
+        std::fs::write(&path, legacy_peqa1_bytes(header, &data)).unwrap();
+
+        let (ck, verified) = Checkpoint::load_flagged(&path).unwrap();
+        assert!(!verified, "legacy files must be flagged unverified");
+        assert_eq!(ck.req("a.w").unwrap(), &Tensor::new(&[2, 3], data[..6].to_vec()));
+        assert_eq!(ck.req("b.g").unwrap(), &Tensor::new(&[4], data[6..].to_vec()));
+
+        // Re-saving upgrades to the checksummed container.
+        let upgraded = dir.join("new.peqa");
+        ck.save(&upgraded).unwrap();
+        let bytes = std::fs::read(&upgraded).unwrap();
+        assert!(is_container(&bytes));
+        let (back, verified) = Checkpoint::load_flagged(&upgraded).unwrap();
+        assert!(verified);
+        assert_eq!(back.req("a.w").unwrap(), ck.req("a.w").unwrap());
+
+        // A short legacy file names the tensor and byte offset.
+        let full = legacy_peqa1_bytes(header, &data);
+        std::fs::write(&path, &full[..full.len() - 8]).unwrap();
+        let err = Checkpoint::load_flagged(&path).unwrap_err().to_string();
+        assert!(err.contains("'b.g'"), "{err}");
+        assert!(err.contains("byte offset"), "{err}");
+        assert!(err.contains("expected 16 byte"), "{err}");
+
+        // Garbage magic is neither format.
+        std::fs::write(&path, b"NOPE").unwrap();
+        let err = Checkpoint::load_flagged(&path).unwrap_err().to_string();
+        assert!(err.contains("no PEQAS1/PEQA1 magic"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn legacy_peqap1_packed_loads_unverified() {
+        let dir = std::env::temp_dir().join("peqa_test_legacy_packed");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("old.packed");
+        // Build the reference model, then re-serialize it as a legacy
+        // positional PEQAP1 stream.
+        let mut ck = Checkpoint::new();
+        let mut rng = Pcg32::new(11);
+        let w = Tensor::normal(&[8, 16], 0.4, &mut rng);
+        let q = crate::quant::quantize_rtn(&w, 3, None).unwrap();
+        ck.insert("l.wq", Tensor::new(&[8, 16], q.codes.iter().map(|&c| c as f32).collect()));
+        ck.insert("l.s", q.scales.clone());
+        ck.insert("l.z", q.zeros.clone());
+        let header = format!(
+            r#"{{"bits":3,"tensors":[{{"name":"l.wq","shape":[8,16],"kind":"packed"}},{{"name":"l.s","shape":{s},"kind":"f32"}},{{"name":"l.z","shape":{s},"kind":"f32"}}]}}"#,
+            s = format!("[{},{}]", q.scales.shape()[0], q.scales.shape()[1]),
+        );
+        let mut bytes = b"PEQAP1\n".to_vec();
+        bytes.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.extend_from_slice(&pack_codes(&q.codes, 3));
+        for t in [&q.scales, &q.zeros] {
+            bytes.extend_from_slice(&tensor_le_bytes(t));
+        }
+        std::fs::write(&path, &bytes).unwrap();
+
+        let (pm, verified) = PackedModel::load_flagged(&path).unwrap();
+        assert!(!verified, "legacy packed files must be flagged unverified");
+        let view = pm.to_checkpoint();
+        for (name, t) in ck.iter() {
+            assert_eq!(t, view.req(name).unwrap(), "{name}");
+        }
+
+        // Truncated legacy stream names the tensor it fell short in.
+        std::fs::write(&path, &bytes[..bytes.len() - 8]).unwrap();
+        let err = PackedModel::load_flagged(&path).unwrap_err().to_string();
+        assert!(err.contains("'l.z'"), "{err}");
+        assert!(err.contains("byte offset"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -155,6 +155,24 @@ impl Scheduler {
         self.queued
     }
 
+    /// Replace the registered adapter set in place (adapter hot-reload —
+    /// the registry watcher's entry point). The incoming store is
+    /// **always** validated through the strict-coverage path regardless
+    /// of `cfg.strict_coverage`: a hot-reload that silently serves
+    /// uncovered projections at base scales is a deployment hazard, not
+    /// a convenience. On validation failure the current adapters keep
+    /// serving, untouched. On success returns the new task count; the
+    /// current-task marker is cleared so the next drain re-applies the
+    /// (possibly re-trained) adapter instead of trusting stale scales
+    /// already in the engine.
+    pub fn reload_adapters(&mut self, adapters: AdapterStore) -> Result<usize> {
+        super::types::validate_coverage(&self.engine.model().prefixes(), &adapters)?;
+        let n = adapters.tasks().len();
+        self.adapters = adapters;
+        self.current_task = None;
+        Ok(n)
+    }
+
     /// Drop every queued (not-yet-admitted) request, returning how many
     /// were discarded. The server wrapper calls this after a drain error
     /// so clients whose requests were failed-by-error are not silently
@@ -450,6 +468,41 @@ mod tests {
         }
         assert_eq!(sched.metrics.decode_steps, 0);
         assert_eq!(sched.metrics.prefill_batches, 0);
+    }
+
+    #[test]
+    fn reload_adapters_swaps_generations_and_rejects_bad_sets() {
+        use crate::model::Checkpoint;
+        let (engine, adapters) = tiny();
+        let mut sched = Scheduler::new(engine, adapters, SchedulerConfig::default()).unwrap();
+        sched.submit("a", vec![1, 2, 3], 3, u32::MAX);
+        let before = sched.run_until_idle().unwrap();
+        assert_eq!(before.len(), 1);
+
+        // New generation: full-coverage adapters under new task names.
+        let new_store = {
+            let mut s = AdapterStore::new();
+            s.insert("x", sched.engine().model().extract_adapter(true));
+            s
+        };
+        assert_eq!(sched.reload_adapters(new_store).unwrap(), 1);
+        assert!(sched.has_task("x"));
+        assert!(!sched.has_task("a"), "old generation replaced");
+        sched.submit("x", vec![1, 2], 2, u32::MAX);
+        assert_eq!(sched.run_until_idle().unwrap().len(), 1);
+
+        // A partial adapter set is rejected even though the scheduler
+        // itself is not in strict mode — and the live set keeps serving.
+        let mut bad = AdapterStore::new();
+        let mut partial = Checkpoint::new();
+        let m = sched.engine().model().matrix("layers.0.attn.q").unwrap();
+        partial.insert("layers.0.attn.q.s", m.scales.clone());
+        bad.insert("broken", partial);
+        let err = sched.reload_adapters(bad).unwrap_err().to_string();
+        assert!(err.contains("strict adapter coverage"), "{err}");
+        assert!(sched.has_task("x"), "failed reload must leave the live set");
+        sched.submit("x", vec![3], 2, u32::MAX);
+        assert_eq!(sched.run_until_idle().unwrap().len(), 1);
     }
 
     #[test]

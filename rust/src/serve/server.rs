@@ -18,6 +18,17 @@
 //! never sees them), and a decode error fails the in-flight requests
 //! instead of killing the worker. Dropping [`Server`] (or calling
 //! [`Server::shutdown`]) stops the worker after the current drain.
+//!
+//! **Adapter hot-reload**: [`Server::spawn_watching`] attaches a
+//! [`Registry`] (`store::registry`). The worker polls the registry's
+//! manifest generation at the start of every message burst — between
+//! requests, never mid-decode — and when a new generation appears it
+//! loads the checksummed adapters and swaps them in via
+//! [`Scheduler::reload_adapters`] (always strict-validated). A bad
+//! generation (torn file, checksum mismatch, partial coverage) is
+//! rejected with a warning and the previous generation keeps serving;
+//! that generation is not re-attempted until the publisher bumps again
+//! or a client forces [`ServerHandle::reload`].
 
 use std::sync::mpsc;
 use std::thread::JoinHandle;
@@ -25,7 +36,8 @@ use std::thread::JoinHandle;
 use anyhow::{anyhow, Result};
 
 use super::scheduler::Scheduler;
-use super::types::{GenResponse, ServeMetrics};
+use super::types::{AdapterStore, GenResponse, ServeMetrics};
+use crate::store::Registry;
 
 enum Msg {
     Generate {
@@ -38,7 +50,52 @@ enum Msg {
     Metrics {
         reply: mpsc::Sender<ServeMetrics>,
     },
+    Reload {
+        reply: mpsc::Sender<Result<u64, String>>,
+    },
     Shutdown,
+}
+
+/// Registry-watch state of a [`Server::spawn_watching`] worker.
+struct RegistryWatch {
+    registry: Registry,
+    /// Last generation a reload was *attempted* for, successful or not —
+    /// a rejected generation is warned about once, not every burst.
+    last_attempted: u64,
+    /// Generation currently serving.
+    live: u64,
+}
+
+impl RegistryWatch {
+    /// Poll the registry and hot-reload if a new generation appeared
+    /// (`force` re-attempts the current generation too). Returns the
+    /// generation serving after the call; on error the scheduler's
+    /// current adapters are untouched.
+    fn poll(&mut self, sched: &mut Scheduler, force: bool) -> Result<u64, String> {
+        let gen = self
+            .registry
+            .generation()
+            .map_err(|e| format!("registry manifest: {e:#}"))?;
+        if !force && gen == self.last_attempted {
+            return Ok(self.live);
+        }
+        self.last_attempted = gen;
+        let (g, pairs) = self.registry.load().map_err(|e| format!("registry load: {e:#}"))?;
+        if pairs.is_empty() {
+            return Err(format!("registry generation {g} has no published adapters"));
+        }
+        let mut store = AdapterStore::new();
+        let n_tasks = pairs.len();
+        for (task, ck) in pairs {
+            store.insert(task, ck);
+        }
+        sched
+            .reload_adapters(store)
+            .map_err(|e| format!("adapter generation {g} rejected: {e:#}"))?;
+        self.live = g;
+        crate::info!("hot-reloaded adapter generation {g} ({n_tasks} task(s))");
+        Ok(g)
+    }
 }
 
 /// Client handle (cheaply cloneable; safe to move across threads).
@@ -71,6 +128,18 @@ impl ServerHandle {
         self.tx.send(Msg::Metrics { reply }).map_err(|_| anyhow!("server is down"))?;
         rx.recv().map_err(|_| anyhow!("server dropped request"))
     }
+
+    /// Force a registry poll right now (the worker also polls at every
+    /// message burst). Returns the generation serving after the attempt;
+    /// errors — including a rejected adapter set, which leaves the
+    /// previous generation serving — are returned without killing the
+    /// worker. Errors immediately if the server was not started with
+    /// [`Server::spawn_watching`].
+    pub fn reload(&self) -> Result<u64> {
+        let (reply, rx) = mpsc::channel();
+        self.tx.send(Msg::Reload { reply }).map_err(|_| anyhow!("server is down"))?;
+        rx.recv().map_err(|_| anyhow!("server dropped request"))?.map_err(|e| anyhow!(e))
+    }
 }
 
 /// Owning handle of the worker thread (see module docs).
@@ -83,10 +152,28 @@ impl Server {
     /// Move an already-built scheduler onto a dedicated worker thread and
     /// start serving.
     pub fn spawn(scheduler: Scheduler) -> Result<Server> {
+        Self::spawn_inner(scheduler, None)
+    }
+
+    /// [`Self::spawn`] plus a registry watch: the worker picks up newly
+    /// published adapter generations between request bursts without a
+    /// restart (see module docs). The registry's *current* generation is
+    /// taken as the already-live baseline — callers typically built
+    /// `scheduler` from it — so only a later publish (or a forced
+    /// [`ServerHandle::reload`]) triggers a swap.
+    pub fn spawn_watching(scheduler: Scheduler, registry: Registry) -> Result<Server> {
+        let gen = registry.generation().map_err(|e| {
+            anyhow!("registry {} is unreadable: {e:#}", registry.dir().display())
+        })?;
+        let watch = RegistryWatch { registry, last_attempted: gen, live: gen };
+        Self::spawn_inner(scheduler, Some(watch))
+    }
+
+    fn spawn_inner(scheduler: Scheduler, watch: Option<RegistryWatch>) -> Result<Server> {
         let (tx, rx) = mpsc::channel::<Msg>();
         let join = std::thread::Builder::new()
             .name("peqa-serve".into())
-            .spawn(move || worker_main(scheduler, rx))?;
+            .spawn(move || worker_main(scheduler, rx, watch))?;
         Ok(Server { handle: ServerHandle { tx }, join: Some(join) })
     }
 
@@ -111,7 +198,11 @@ impl Drop for Server {
     }
 }
 
-fn worker_main(mut sched: Scheduler, rx: mpsc::Receiver<Msg>) {
+fn worker_main(
+    mut sched: Scheduler,
+    rx: mpsc::Receiver<Msg>,
+    mut watch: Option<RegistryWatch>,
+) {
     let mut waiting: Vec<(u64, mpsc::Sender<Result<GenResponse, String>>)> = Vec::new();
     loop {
         // Block for at least one message; then drain whatever arrived —
@@ -124,6 +215,18 @@ fn worker_main(mut sched: Scheduler, rx: mpsc::Receiver<Msg>) {
         let mut batch_msgs = vec![first];
         while let Ok(m) = rx.try_recv() {
             batch_msgs.push(m);
+        }
+        // Between bursts — before any of this burst's submits are
+        // checked against the task set — pick up a newly published
+        // adapter generation. A bad one is warned about once and the
+        // previous generation keeps serving.
+        if let Some(w) = watch.as_mut() {
+            if let Err(e) = w.poll(&mut sched, false) {
+                crate::warn!(
+                    "adapter hot-reload skipped: {e} — still serving generation {}",
+                    w.live
+                );
+            }
         }
         let mut shutdown = false;
         for m in batch_msgs {
@@ -140,6 +243,16 @@ fn worker_main(mut sched: Scheduler, rx: mpsc::Receiver<Msg>) {
                 }
                 Msg::Metrics { reply } => {
                     let _ = reply.send(sched.metrics.clone());
+                }
+                Msg::Reload { reply } => {
+                    let res = match watch.as_mut() {
+                        Some(w) => w.poll(&mut sched, true),
+                        None => Err(
+                            "server is not watching a registry (serve with --registry)"
+                                .to_string(),
+                        ),
+                    };
+                    let _ = reply.send(res);
                 }
                 Msg::Shutdown => shutdown = true,
             }
@@ -200,6 +313,66 @@ mod tests {
         assert_eq!(m.completed, 1);
         server.shutdown();
         assert!(h.generate("a", vec![1], 1, u32::MAX).is_err());
+    }
+
+    #[test]
+    fn hot_reload_picks_up_new_generation_and_rejects_bad_ones() {
+        use crate::model::Checkpoint;
+        use crate::store::Registry;
+        let dir = std::env::temp_dir().join("peqa_test_server_registry");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let reg = Registry::open(&dir);
+
+        // Scheduler + a matching full-coverage adapter source.
+        let geom = ModelGeom { vocab: 64, d_model: 16, n_layers: 1, n_heads: 2, d_ff: 32 };
+        let (pm, base_q) = synth_packed(&geom, 4, None, 3).unwrap();
+        let full = base_q.extract_adapter(true);
+        let engine = Engine::from_packed(pm, geom, 2).unwrap();
+        let adapters = synth_adapters(&base_q, &["a"], 5);
+        let sched = Scheduler::new(engine, adapters, SchedulerConfig::default()).unwrap();
+
+        let server = Server::spawn_watching(sched, Registry::open(&dir)).unwrap();
+        let h = server.handle();
+        assert!(h.generate("a", vec![1, 2], 2, u32::MAX).is_ok());
+        assert!(h.generate("fresh", vec![1], 1, u32::MAX).is_err());
+
+        // Publish generation 1; the very next burst serves it — no
+        // restart, no explicit reload call.
+        assert_eq!(reg.publish(&[("fresh".to_string(), &full)]).unwrap(), 1);
+        let r = h.generate("fresh", vec![1, 2, 3], 2, u32::MAX).unwrap();
+        assert_eq!(r.tokens.len(), 2);
+        assert!(h.generate("a", vec![1], 1, u32::MAX).is_err(), "old set replaced");
+
+        // Generation 2 contains a partial-coverage adapter: the whole
+        // generation is rejected and generation 1 keeps serving.
+        let s_name = full.names().iter().find(|n| n.ends_with(".s")).unwrap().clone();
+        let mut partial = Checkpoint::new();
+        partial.insert(s_name.clone(), full.req(&s_name).unwrap().clone());
+        assert_eq!(reg.publish(&[("broken".to_string(), &partial)]).unwrap(), 2);
+        let err = h.reload().unwrap_err().to_string();
+        assert!(err.contains("rejected"), "{err}");
+        assert!(h.generate("fresh", vec![4, 5], 2, u32::MAX).is_ok());
+        assert!(h.generate("broken", vec![1], 1, u32::MAX).is_err());
+
+        // Generation 3 fixes it; the forced reload reports the new
+        // generation and both tasks serve.
+        assert_eq!(reg.publish(&[("broken".to_string(), &full)]).unwrap(), 3);
+        assert_eq!(h.reload().unwrap(), 3);
+        assert!(h.generate("broken", vec![2, 3], 2, u32::MAX).is_ok());
+        assert!(h.generate("fresh", vec![2], 1, u32::MAX).is_ok());
+        server.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reload_without_registry_is_an_error_not_a_crash() {
+        let server = Server::spawn(tiny_scheduler()).unwrap();
+        let h = server.handle();
+        let err = h.reload().unwrap_err().to_string();
+        assert!(err.contains("not watching a registry"), "{err}");
+        assert!(h.generate("a", vec![1, 2], 2, u32::MAX).is_ok());
+        server.shutdown();
     }
 
     #[test]

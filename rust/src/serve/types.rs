@@ -53,6 +53,10 @@ impl AdapterStore {
             .sum()
     }
 
+    /// Write every adapter as `<task>.adapter` into `dir`. Each file is
+    /// a checksummed container written atomically
+    /// ([`Checkpoint::save`] goes through `store::format::atomic_write`),
+    /// so a crash mid-save never leaves a torn adapter under a real name.
     pub fn save_all(&self, dir: &Path) -> Result<()> {
         for (task, a) in &self.adapters {
             a.save(&dir.join(format!("{task}.adapter")))?;
@@ -60,14 +64,36 @@ impl AdapterStore {
         Ok(())
     }
 
+    /// Load every `*.adapter` in `dir`. Hidden files (dotfiles — editor
+    /// swap, in-progress temp writes) and entries without the `.adapter`
+    /// suffix are skipped silently; a file that *is* named like an
+    /// adapter but fails to load (truncated, checksum mismatch, not a
+    /// checkpoint) is skipped with a warning naming the offending path —
+    /// one bad file never aborts the whole directory load.
     pub fn load_dir(dir: &Path) -> Result<AdapterStore> {
         let mut store = AdapterStore::new();
-        for entry in std::fs::read_dir(dir)? {
+        for entry in std::fs::read_dir(dir)
+            .map_err(|e| anyhow::anyhow!("reading adapter dir {}: {e}", dir.display()))?
+        {
             let p = entry?.path();
-            if let Some(name) = p.file_name().and_then(|s| s.to_str()) {
-                if let Some(task) = name.strip_suffix(".adapter") {
-                    store.insert(task.to_string(), Checkpoint::load(&p)?);
-                }
+            if !p.is_file() {
+                continue;
+            }
+            let Some(name) = p.file_name().and_then(|s| s.to_str()) else {
+                continue;
+            };
+            if name.starts_with('.') {
+                continue;
+            }
+            let Some(task) = name.strip_suffix(".adapter") else {
+                continue;
+            };
+            match Checkpoint::load(&p) {
+                Ok(ck) => store.insert(task.to_string(), ck),
+                Err(e) => crate::warn!(
+                    "skipping adapter {}: {e:#} (task '{task}' will not be served)",
+                    p.display()
+                ),
             }
         }
         Ok(store)
@@ -223,6 +249,24 @@ mod tests {
         let back = AdapterStore::load_dir(&dir).unwrap();
         assert_eq!(back.tasks(), vec!["taskA", "taskB"]);
         assert_eq!(back.get("taskB").unwrap().req("l.s").unwrap().data()[0], 0.9);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_dir_skips_junk_and_bad_files_without_aborting() {
+        let dir = std::env::temp_dir().join("peqa_test_adapters_junk");
+        std::fs::create_dir_all(dir.join("sub")).unwrap();
+        let mut a = Checkpoint::new();
+        a.insert("l.s", Tensor::full(&[4, 1], 0.5));
+        a.save(&dir.join("good.adapter")).unwrap();
+        // Junk that must be ignored: hidden files, wrong suffixes,
+        // subdirectories, and a torn/garbage .adapter.
+        std::fs::write(dir.join(".hidden.adapter"), b"editor swap").unwrap();
+        std::fs::write(dir.join("notes.txt"), b"not an adapter").unwrap();
+        std::fs::write(dir.join("torn.adapter"), b"PEQAS1\n\x01").unwrap();
+        let store = AdapterStore::load_dir(&dir).unwrap();
+        assert_eq!(store.tasks(), vec!["good"]);
+        assert_eq!(store.get("good").unwrap().req("l.s").unwrap().data()[0], 0.5);
         std::fs::remove_dir_all(&dir).ok();
     }
 

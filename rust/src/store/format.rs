@@ -1,0 +1,451 @@
+//! The checksummed artifact container (`PEQAS1`) and the atomic-write
+//! discipline every on-disk artifact goes through.
+//!
+//! Layout (all integers little-endian), modeled on pippin's snapshot
+//! format (magic + per-section identifiers + checksum-of-header):
+//!
+//! ```text
+//! magic    b"PEQAS1\n"                      (7 bytes)
+//! version  u32                              (currently 1)
+//! kind     u8 length + ASCII bytes          ("checkpoint" | "packed" | "registry" | …)
+//! nsect    u32
+//! per section:
+//!   name   u16 length + UTF-8 bytes         ("meta", "t:<tensor name>", …)
+//!   len    u64   payload byte length
+//!   crc    u32   CRC32 (IEEE) of the payload
+//! hcrc     u32   CRC32 of every header byte above
+//! payloads … concatenated in section order …
+//! tcrc     u32   CRC32 trailer over header + payloads
+//! ```
+//!
+//! Every byte of the file is covered by at least one checksum, so any
+//! single bit flip is detected at load — with an error naming the file,
+//! the section, and the expected-vs-actual checksum. Truncation anywhere
+//! fails the length bookkeeping with the offset and the expected-vs-got
+//! byte counts.
+//!
+//! Writes never touch the destination path directly: [`atomic_write`]
+//! writes a sibling temp file, fsyncs it, and renames it into place, so
+//! a crash mid-write can never leave a short artifact under the real
+//! name — the previous version (or nothing) survives instead.
+
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Context, Result};
+
+/// Magic of the checksummed container format.
+pub const CONTAINER_MAGIC: &[u8; 7] = b"PEQAS1\n";
+/// Current container format version.
+pub const CONTAINER_VERSION: u32 = 1;
+
+// -- CRC32 (IEEE 802.3, the zlib polynomial) -------------------------------
+//
+// The vendored registry has no checksum crate, so the table lives here.
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// Incremental CRC32 (IEEE) — the journal streams records through it.
+#[derive(Clone, Debug)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Crc32 {
+    pub fn new() -> Crc32 {
+        Crc32 { state: 0xFFFF_FFFF }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state = CRC_TABLE[((self.state ^ b as u32) & 0xFF) as usize] ^ (self.state >> 8);
+        }
+    }
+
+    pub fn finish(&self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+/// One-shot CRC32 of a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finish()
+}
+
+// -- atomic writes ----------------------------------------------------------
+
+static TMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Durably replace `path` with `bytes`: write a sibling temp file, fsync
+/// it, rename it over `path`, then (best-effort) fsync the directory.
+/// Returns the byte count written. A crash at any point leaves either
+/// the old file or the new one — never a truncated mix.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<u64> {
+    let dir = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => {
+            std::fs::create_dir_all(d)
+                .with_context(|| format!("creating directory {}", d.display()))?;
+            Some(d)
+        }
+        _ => None,
+    };
+    let file_name = path
+        .file_name()
+        .and_then(|s| s.to_str())
+        .with_context(|| format!("atomic_write: bad path {}", path.display()))?;
+    let tmp_name = format!(
+        ".{file_name}.tmp.{}.{}",
+        std::process::id(),
+        TMP_COUNTER.fetch_add(1, Ordering::Relaxed)
+    );
+    let tmp = match dir {
+        Some(d) => d.join(&tmp_name),
+        None => std::path::PathBuf::from(&tmp_name),
+    };
+    let write = || -> Result<()> {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+        Ok(())
+    };
+    if let Err(e) = write() {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    if let Some(d) = dir {
+        // Persist the rename itself; some filesystems cannot open a
+        // directory for sync — the data fsync above already happened.
+        if let Ok(df) = std::fs::File::open(d) {
+            let _ = df.sync_all();
+        }
+    }
+    Ok(bytes.len() as u64)
+}
+
+// -- container write --------------------------------------------------------
+
+/// Builder for one container file: a kind tag plus named payload
+/// sections, serialized with the checksums of the module docs.
+pub struct ContainerWriter {
+    kind: String,
+    sections: Vec<(String, Vec<u8>)>,
+}
+
+impl ContainerWriter {
+    pub fn new(kind: &str) -> ContainerWriter {
+        assert!(kind.len() < 256, "container kind too long");
+        ContainerWriter { kind: kind.to_string(), sections: Vec::new() }
+    }
+
+    /// Append one named payload section (order is preserved).
+    pub fn section(&mut self, name: &str, payload: Vec<u8>) -> &mut Self {
+        assert!(name.len() <= u16::MAX as usize, "section name too long");
+        self.sections.push((name.to_string(), payload));
+        self
+    }
+
+    /// Serialize header + payloads + checksums.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(CONTAINER_MAGIC);
+        out.extend_from_slice(&CONTAINER_VERSION.to_le_bytes());
+        out.push(self.kind.len() as u8);
+        out.extend_from_slice(self.kind.as_bytes());
+        out.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
+        for (name, payload) in &self.sections {
+            out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+            out.extend_from_slice(&crc32(payload).to_le_bytes());
+        }
+        let hcrc = crc32(&out);
+        out.extend_from_slice(&hcrc.to_le_bytes());
+        for (_, payload) in &self.sections {
+            out.extend_from_slice(payload);
+        }
+        let tcrc = crc32(&out);
+        out.extend_from_slice(&tcrc.to_le_bytes());
+        out
+    }
+
+    /// Serialize and [`atomic_write`] to `path`; returns file bytes.
+    pub fn write_atomic(&self, path: &Path) -> Result<u64> {
+        atomic_write(path, &self.to_bytes())
+    }
+}
+
+// -- container read ---------------------------------------------------------
+
+/// One verified section of a read container.
+pub struct Section {
+    pub name: String,
+    pub crc: u32,
+    pub payload: Vec<u8>,
+}
+
+/// A fully verified container: every checksum (header, per-section,
+/// whole-file trailer) has been checked before this value exists.
+pub struct Container {
+    pub kind: String,
+    pub version: u32,
+    sections: Vec<Section>,
+}
+
+/// Whether `bytes` starts with the container magic (format dispatch —
+/// legacy files start with `PEQA1\n` / `PEQAP1\n` instead).
+pub fn is_container(bytes: &[u8]) -> bool {
+    bytes.len() >= CONTAINER_MAGIC.len() && &bytes[..CONTAINER_MAGIC.len()] == CONTAINER_MAGIC
+}
+
+impl Container {
+    /// Read and verify a container file.
+    pub fn read(path: &Path) -> Result<Container> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        Self::from_bytes(&bytes, &path.display().to_string())
+    }
+
+    /// Parse + verify from bytes; `label` names the source in errors
+    /// (normally the file path).
+    pub fn from_bytes(bytes: &[u8], label: &str) -> Result<Container> {
+        let need = |off: usize, n: usize, what: &str| -> Result<()> {
+            if off + n > bytes.len() {
+                bail!(
+                    "{label}: truncated container: {what} needs {n} byte(s) at offset \
+                     {off}, file has {} ({} available)",
+                    bytes.len(),
+                    bytes.len().saturating_sub(off)
+                );
+            }
+            Ok(())
+        };
+        need(0, CONTAINER_MAGIC.len(), "magic")?;
+        if !is_container(bytes) {
+            bail!("{label}: not a PEQA store container (bad magic)");
+        }
+        let mut off = CONTAINER_MAGIC.len();
+        need(off, 4, "format version")?;
+        let version = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+        off += 4;
+        if version != CONTAINER_VERSION {
+            bail!("{label}: container format version {version} (this build reads {CONTAINER_VERSION})");
+        }
+        need(off, 1, "kind length")?;
+        let klen = bytes[off] as usize;
+        off += 1;
+        need(off, klen, "kind")?;
+        let kind = std::str::from_utf8(&bytes[off..off + klen])
+            .with_context(|| format!("{label}: container kind is not UTF-8"))?
+            .to_string();
+        off += klen;
+        need(off, 4, "section count")?;
+        let nsect = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+        off += 4;
+        let mut metas: Vec<(String, u64, u32)> = Vec::with_capacity(nsect);
+        for i in 0..nsect {
+            need(off, 2, "section name length")?;
+            let nlen = u16::from_le_bytes(bytes[off..off + 2].try_into().unwrap()) as usize;
+            off += 2;
+            need(off, nlen, "section name")?;
+            let name = std::str::from_utf8(&bytes[off..off + nlen])
+                .with_context(|| format!("{label}: section {i} name is not UTF-8"))?
+                .to_string();
+            off += nlen;
+            need(off, 12, "section length + checksum")?;
+            let len = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
+            let crc = u32::from_le_bytes(bytes[off + 8..off + 12].try_into().unwrap());
+            off += 12;
+            metas.push((name, len, crc));
+        }
+        need(off, 4, "header checksum")?;
+        let hcrc = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+        let actual_hcrc = crc32(&bytes[..off]);
+        if hcrc != actual_hcrc {
+            bail!(
+                "{label}: header checksum mismatch: expected {hcrc:08x}, got \
+                 {actual_hcrc:08x} — the header is corrupt"
+            );
+        }
+        off += 4;
+        let mut sections = Vec::with_capacity(nsect);
+        for (name, len, crc) in metas {
+            let len = usize::try_from(len)
+                .ok()
+                .filter(|&l| off + l <= bytes.len().saturating_sub(4))
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "{label}: truncated container: section '{name}' expects {len} \
+                         byte(s) at offset {off}, file has {} ({} available before the \
+                         trailer)",
+                        bytes.len(),
+                        bytes.len().saturating_sub(4).saturating_sub(off)
+                    )
+                })?;
+            let payload = bytes[off..off + len].to_vec();
+            let actual = crc32(&payload);
+            if actual != crc {
+                bail!(
+                    "{label}: checksum mismatch in section '{name}': expected \
+                     {crc:08x}, got {actual:08x} — the payload is corrupt"
+                );
+            }
+            off += len;
+            sections.push(Section { name, crc, payload });
+        }
+        need(off, 4, "trailer checksum")?;
+        let tcrc = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+        let actual_tcrc = crc32(&bytes[..off]);
+        if tcrc != actual_tcrc {
+            bail!(
+                "{label}: trailer checksum mismatch: expected {tcrc:08x}, got \
+                 {actual_tcrc:08x}"
+            );
+        }
+        if off + 4 != bytes.len() {
+            bail!(
+                "{label}: {} trailing byte(s) after the container trailer",
+                bytes.len() - off - 4
+            );
+        }
+        Ok(Container { kind, version, sections })
+    }
+
+    pub fn sections(&self) -> &[Section] {
+        &self.sections
+    }
+
+    /// A section's payload by name.
+    pub fn section(&self, name: &str) -> Result<&[u8]> {
+        self.sections
+            .iter()
+            .find(|s| s.name == name)
+            .map(|s| s.payload.as_slice())
+            .ok_or_else(|| anyhow::anyhow!("container has no section '{name}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<u8> {
+        let mut w = ContainerWriter::new("checkpoint");
+        w.section("meta", b"{\"hello\":1}".to_vec());
+        w.section("t:x.w", vec![1, 2, 3, 4, 5, 6, 7, 8]);
+        w.section("t:empty", Vec::new());
+        w.to_bytes()
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // IEEE CRC32 of "123456789" is the classic check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        let mut inc = Crc32::new();
+        inc.update(b"1234");
+        inc.update(b"56789");
+        assert_eq!(inc.finish(), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let bytes = sample();
+        let c = Container::from_bytes(&bytes, "mem").unwrap();
+        assert_eq!(c.kind, "checkpoint");
+        assert_eq!(c.version, CONTAINER_VERSION);
+        assert_eq!(c.sections().len(), 3);
+        assert_eq!(c.section("meta").unwrap(), b"{\"hello\":1}");
+        assert_eq!(c.section("t:x.w").unwrap(), &[1, 2, 3, 4, 5, 6, 7, 8]);
+        assert!(c.section("t:empty").unwrap().is_empty());
+        assert!(c.section("nope").is_err());
+    }
+
+    #[test]
+    fn every_single_byte_flip_is_detected() {
+        let bytes = sample();
+        for i in 0..bytes.len() {
+            for bit in [0x01u8, 0x80] {
+                let mut bad = bytes.clone();
+                bad[i] ^= bit;
+                let err = Container::from_bytes(&bad, "mem")
+                    .err()
+                    .unwrap_or_else(|| panic!("flip at byte {i} went undetected"));
+                let msg = format!("{err:#}");
+                assert!(msg.contains("mem"), "error names the source: {msg}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_truncation_length_is_detected() {
+        let bytes = sample();
+        for cut in 0..bytes.len() {
+            assert!(
+                Container::from_bytes(&bytes[..cut], "mem").is_err(),
+                "truncation to {cut} bytes went undetected"
+            );
+        }
+    }
+
+    #[test]
+    fn corrupt_section_error_names_section_and_checksums() {
+        let bytes = sample();
+        // Find the t:x.w payload (the 8 known bytes) and flip one.
+        let pos = bytes
+            .windows(8)
+            .rposition(|w| w == [1, 2, 3, 4, 5, 6, 7, 8])
+            .unwrap();
+        let mut bad = bytes.clone();
+        bad[pos] ^= 0xFF;
+        let msg = format!("{:#}", Container::from_bytes(&bad, "mem").unwrap_err());
+        assert!(msg.contains("t:x.w"), "{msg}");
+        assert!(msg.contains("expected"), "{msg}");
+    }
+
+    #[test]
+    fn atomic_write_replaces_and_cleans_up(){
+        let dir = std::env::temp_dir().join("peqa_test_atomic_write");
+        let path = dir.join("f.bin");
+        atomic_write(&path, b"one").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"one");
+        atomic_write(&path, b"two-longer").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"two-longer");
+        // No temp litter left behind.
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

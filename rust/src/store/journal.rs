@@ -1,0 +1,614 @@
+//! Crash-safe resumable fine-tuning: an append-only, per-record
+//! checksummed commit log next to a base snapshot (sworndisk's
+//! checkpoint-region discipline applied to PEQA training).
+//!
+//! Because PEQA trains only the per-(row, group) scale/zero vectors, the
+//! *entire* mutable training state — trainable tensors, Adam moments,
+//! loss bookkeeping, data-stream RNG position — is kilobytes (the
+//! paper's Table 1 memory story applied to durability). So the journal
+//! does not bother with deltas: every record is a full state snapshot,
+//! and resume is "replay the last record", not "replay them all".
+//!
+//! File layout (integers little-endian):
+//!
+//! ```text
+//! magic  b"PEQAJ1\n"             (7 bytes)
+//! ver    u32                     (currently 1)
+//! mlen   u64 + JSON meta          (task, base snapshot, seed, steps, …)
+//! hcrc   u32                     CRC32 of every header byte above
+//! then zero or more framed records:
+//!   len  u32   payload byte length
+//!   crc  u32   CRC32 of the payload
+//!   payload    (see TrainRecord::to_bytes)
+//! ```
+//!
+//! Torn-tail rule: a record that runs past EOF, or whose checksum fails
+//! **and** which is the last thing in the file, is a torn tail — the
+//! crash happened mid-append; [`read_journal`] reports it and
+//! [`open_resume`] truncates it (the previous record is the durable
+//! state). A checksum failure anywhere *before* the tail cannot be a
+//! torn write and is a hard corruption error naming the record and the
+//! expected-vs-actual checksum.
+//!
+//! Exact-resume contract: the meta block pins every input that shapes
+//! the run bit-for-bit — the LR schedule horizon (`steps`), the batcher
+//! seed/geometry, the base snapshot — and u64/f64 values that JSON
+//! cannot round-trip exactly (seed, lr) are stored as decimal strings
+//! of their raw value. A resumed run killed at any step therefore
+//! replays to a final adapter **bitwise identical** to the
+//! uninterrupted run (pinned by tests/store_host.rs).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::format::{crc32, Crc32};
+use crate::json::Value;
+
+/// Magic of the journal format.
+pub const JOURNAL_MAGIC: &[u8; 7] = b"PEQAJ1\n";
+/// Current journal format version.
+pub const JOURNAL_VERSION: u32 = 1;
+
+/// Everything a resumed run must replicate exactly. `seed` and
+/// `lr_bits` (the `f64::to_bits` of the learning rate) are serialized
+/// as decimal strings — JSON numbers are f64 and cannot hold them
+/// exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JournalMeta {
+    pub task: String,
+    /// Corpus the run streams — pinned separately from `task` because a
+    /// run may name its adapter differently from its dataset.
+    pub dataset: String,
+    /// Base snapshot file name, relative to the journal's directory.
+    pub base: String,
+    pub seed: u64,
+    /// Total step budget — the LR decay horizon; resume must keep it.
+    pub steps: usize,
+    pub save_every: usize,
+    pub batch: usize,
+    pub seq: usize,
+    /// `f64::to_bits` of the learning rate.
+    pub lr_bits: u64,
+    pub warmup_steps: usize,
+    pub train_zeros: bool,
+    // Model geometry — the resumed tuner is rebuilt from these, not
+    // from CLI flags that could silently drift.
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+}
+
+impl JournalMeta {
+    pub fn lr(&self) -> f64 {
+        f64::from_bits(self.lr_bits)
+    }
+
+    fn to_json(&self) -> String {
+        Value::obj(vec![
+            ("task", Value::str(self.task.clone())),
+            ("dataset", Value::str(self.dataset.clone())),
+            ("base", Value::str(self.base.clone())),
+            ("seed", Value::str(self.seed.to_string())),
+            ("steps", Value::num(self.steps as f64)),
+            ("save_every", Value::num(self.save_every as f64)),
+            ("batch", Value::num(self.batch as f64)),
+            ("seq", Value::num(self.seq as f64)),
+            ("lr_bits", Value::str(self.lr_bits.to_string())),
+            ("warmup_steps", Value::num(self.warmup_steps as f64)),
+            ("train_zeros", Value::Bool(self.train_zeros)),
+            ("vocab", Value::num(self.vocab as f64)),
+            ("d_model", Value::num(self.d_model as f64)),
+            ("n_layers", Value::num(self.n_layers as f64)),
+            ("n_heads", Value::num(self.n_heads as f64)),
+            ("d_ff", Value::num(self.d_ff as f64)),
+        ])
+        .to_string()
+    }
+
+    fn from_json(text: &str) -> Result<JournalMeta> {
+        let v = Value::parse(text).context("journal meta JSON")?;
+        Ok(JournalMeta {
+            task: v.str_of("task")?.to_string(),
+            dataset: v.str_of("dataset")?.to_string(),
+            base: v.str_of("base")?.to_string(),
+            seed: v.str_of("seed")?.parse().context("journal meta seed")?,
+            steps: v.usize_of("steps")?,
+            save_every: v.usize_of("save_every")?,
+            batch: v.usize_of("batch")?,
+            seq: v.usize_of("seq")?,
+            lr_bits: v.str_of("lr_bits")?.parse().context("journal meta lr_bits")?,
+            warmup_steps: v.usize_of("warmup_steps")?,
+            train_zeros: v.bool_of("train_zeros")?,
+            vocab: v.usize_of("vocab")?,
+            d_model: v.usize_of("d_model")?,
+            n_layers: v.usize_of("n_layers")?,
+            n_heads: v.usize_of("n_heads")?,
+            d_ff: v.usize_of("d_ff")?,
+        })
+    }
+}
+
+/// One full-state record: everything [`Tuner::import_state`]
+/// (`crate::train::Tuner`) and the data batcher need to continue
+/// bit-for-bit. `params`/`opt_m`/`opt_v` are in the backend's optimizer
+/// slot order (per projection: scales, then zeros when trained).
+/// `losses` holds only the losses recorded *since the previous record*;
+/// the reader accumulates them into the full history.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainRecord {
+    pub step: u64,
+    /// Data-stream position: the batcher RNG's raw (state, inc).
+    pub rng: (u64, u64),
+    /// EMA-smoothed loss (bit-exact via f64 bits).
+    pub ema: Option<f64>,
+    pub losses: Vec<f32>,
+    pub params: Vec<Vec<f32>>,
+    pub opt_m: Vec<Vec<f32>>,
+    pub opt_v: Vec<Vec<f32>>,
+}
+
+impl TrainRecord {
+    fn to_bytes(&self) -> Vec<u8> {
+        assert_eq!(self.params.len(), self.opt_m.len(), "record slot arity");
+        assert_eq!(self.params.len(), self.opt_v.len(), "record slot arity");
+        let mut b = Vec::new();
+        b.extend_from_slice(&self.step.to_le_bytes());
+        b.extend_from_slice(&self.rng.0.to_le_bytes());
+        b.extend_from_slice(&self.rng.1.to_le_bytes());
+        b.push(self.ema.is_some() as u8);
+        b.extend_from_slice(&self.ema.unwrap_or(0.0).to_bits().to_le_bytes());
+        b.extend_from_slice(&(self.losses.len() as u32).to_le_bytes());
+        for &l in &self.losses {
+            b.extend_from_slice(&l.to_le_bytes());
+        }
+        b.extend_from_slice(&(self.params.len() as u32).to_le_bytes());
+        for (i, p) in self.params.iter().enumerate() {
+            assert_eq!(p.len(), self.opt_m[i].len(), "slot {i} m size");
+            assert_eq!(p.len(), self.opt_v[i].len(), "slot {i} v size");
+            b.extend_from_slice(&(p.len() as u64).to_le_bytes());
+            for vec in [p, &self.opt_m[i], &self.opt_v[i]] {
+                for &x in vec.iter() {
+                    b.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        b
+    }
+
+    fn from_bytes(b: &[u8]) -> Result<TrainRecord> {
+        let mut r = Reader { b, off: 0 };
+        let step = r.u64("step")?;
+        let rng = (r.u64("rng state")?, r.u64("rng inc")?);
+        let ema_flag = r.u8("ema flag")?;
+        let ema_bits = r.u64("ema bits")?;
+        let ema = (ema_flag != 0).then(|| f64::from_bits(ema_bits));
+        let n_losses = r.u32("loss count")? as usize;
+        let losses = r.f32s(n_losses, "losses")?;
+        let n_slots = r.u32("slot count")? as usize;
+        let mut params = Vec::with_capacity(n_slots);
+        let mut opt_m = Vec::with_capacity(n_slots);
+        let mut opt_v = Vec::with_capacity(n_slots);
+        for i in 0..n_slots {
+            let len = usize::try_from(r.u64("slot length")?)
+                .map_err(|_| anyhow!("slot {i} length overflows"))?;
+            params.push(r.f32s(len, "slot params")?);
+            opt_m.push(r.f32s(len, "slot m")?);
+            opt_v.push(r.f32s(len, "slot v")?);
+        }
+        if r.off != b.len() {
+            bail!("record has {} trailing byte(s)", b.len() - r.off);
+        }
+        Ok(TrainRecord { step, rng, ema, losses, params, opt_m, opt_v })
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.off + n > self.b.len() {
+            bail!(
+                "record truncated: {what} needs {n} byte(s) at offset {}, record has {}",
+                self.off,
+                self.b.len()
+            );
+        }
+        let s = &self.b[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self, n: usize, what: &str) -> Result<Vec<f32>> {
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| anyhow!("{what}: size overflow"))?, what)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+/// A torn tail found at the end of a journal: bytes past `valid_len`
+/// belong to an append the crash interrupted.
+#[derive(Debug)]
+pub struct TornTail {
+    pub valid_len: u64,
+    pub reason: String,
+}
+
+fn header_bytes(meta: &JournalMeta) -> Vec<u8> {
+    let mj = meta.to_json();
+    let mut h = Vec::new();
+    h.extend_from_slice(JOURNAL_MAGIC);
+    h.extend_from_slice(&JOURNAL_VERSION.to_le_bytes());
+    h.extend_from_slice(&(mj.len() as u64).to_le_bytes());
+    h.extend_from_slice(mj.as_bytes());
+    h.extend_from_slice(&crc32(&h).to_le_bytes());
+    h
+}
+
+/// Open handle that appends checksummed records, fsyncing each one
+/// before returning — a record that `append` has acked is durable.
+pub struct JournalWriter {
+    file: std::fs::File,
+    path: PathBuf,
+    last_step: Option<u64>,
+}
+
+impl JournalWriter {
+    /// Start a fresh journal at `path` (truncating any previous one) and
+    /// durably write its header.
+    pub fn create(path: &Path, meta: &JournalMeta) -> Result<JournalWriter> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating directory {}", dir.display()))?;
+            }
+        }
+        let mut file = std::fs::File::create(path)
+            .with_context(|| format!("creating journal {}", path.display()))?;
+        file.write_all(&header_bytes(meta))?;
+        file.sync_all()?;
+        Ok(JournalWriter { file, path: path.to_path_buf(), last_step: None })
+    }
+
+    /// Append one record frame (`len | crc | payload`) and fsync it.
+    pub fn append(&mut self, rec: &TrainRecord) -> Result<()> {
+        if let Some(last) = self.last_step {
+            if rec.step <= last {
+                bail!(
+                    "{}: journal steps must be monotonic (appending step {} after {})",
+                    self.path.display(),
+                    rec.step,
+                    last
+                );
+            }
+        }
+        let payload = rec.to_bytes();
+        let mut frame = Vec::with_capacity(8 + payload.len());
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&crc32(&payload).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        self.file
+            .write_all(&frame)
+            .with_context(|| format!("appending to journal {}", self.path.display()))?;
+        self.file.sync_data()?;
+        self.last_step = Some(rec.step);
+        Ok(())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Parse + verify a journal. Returns the meta, every intact record in
+/// order, and `Some(TornTail)` if the file ends in an interrupted
+/// append. Mid-file corruption (a bad checksum that is *not* the last
+/// thing in the file) is a hard error naming the record and checksums.
+pub fn read_journal(path: &Path) -> Result<(JournalMeta, Vec<TrainRecord>, Option<TornTail>)> {
+    let bytes = std::fs::read(path).with_context(|| format!("opening {}", path.display()))?;
+    let label = path.display().to_string();
+    let need = |off: usize, n: usize, what: &str| -> Result<()> {
+        if off + n > bytes.len() {
+            bail!(
+                "{label}: truncated journal header: {what} needs {n} byte(s) at offset {off}, \
+                 file has {}",
+                bytes.len()
+            );
+        }
+        Ok(())
+    };
+    need(0, JOURNAL_MAGIC.len(), "magic")?;
+    if &bytes[..JOURNAL_MAGIC.len()] != JOURNAL_MAGIC {
+        bail!("{label}: not a PEQA training journal (bad magic)");
+    }
+    let mut off = JOURNAL_MAGIC.len();
+    need(off, 4, "format version")?;
+    let version = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+    off += 4;
+    if version != JOURNAL_VERSION {
+        bail!("{label}: journal format version {version} (this build reads {JOURNAL_VERSION})");
+    }
+    need(off, 8, "meta length")?;
+    let mlen = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()) as usize;
+    off += 8;
+    need(off, mlen, "meta JSON")?;
+    let meta_str = std::str::from_utf8(&bytes[off..off + mlen])
+        .with_context(|| format!("{label}: journal meta is not UTF-8"))?;
+    off += mlen;
+    need(off, 4, "header checksum")?;
+    let hcrc = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+    let actual = crc32(&bytes[..off]);
+    if hcrc != actual {
+        bail!(
+            "{label}: header checksum mismatch: expected {hcrc:08x}, got {actual:08x} — \
+             the journal header is corrupt"
+        );
+    }
+    off += 4;
+    let meta = JournalMeta::from_json(meta_str).with_context(|| format!("{label}: meta"))?;
+
+    let mut records = Vec::new();
+    let mut torn = None;
+    let mut last_step: Option<u64> = None;
+    let mut idx = 0usize;
+    while off < bytes.len() {
+        let frame_start = off;
+        if bytes.len() - off < 8 {
+            torn = Some(TornTail {
+                valid_len: frame_start as u64,
+                reason: format!(
+                    "incomplete frame header at offset {frame_start} ({} byte(s) left)",
+                    bytes.len() - off
+                ),
+            });
+            break;
+        }
+        let plen = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(bytes[off + 4..off + 8].try_into().unwrap());
+        off += 8;
+        if off + plen > bytes.len() {
+            torn = Some(TornTail {
+                valid_len: frame_start as u64,
+                reason: format!(
+                    "record {idx} at offset {frame_start} expects {plen} payload byte(s), \
+                     {} left",
+                    bytes.len() - off
+                ),
+            });
+            break;
+        }
+        let payload = &bytes[off..off + plen];
+        let actual = crc32(payload);
+        if actual != crc {
+            if off + plen == bytes.len() {
+                // Nothing after the bad record: indistinguishable from a
+                // crash mid-append — torn tail, not corruption.
+                torn = Some(TornTail {
+                    valid_len: frame_start as u64,
+                    reason: format!(
+                        "record {idx} at offset {frame_start} checksum mismatch at EOF \
+                         (expected {crc:08x}, got {actual:08x})"
+                    ),
+                });
+                break;
+            }
+            bail!(
+                "{label}: checksum mismatch in record {idx} at offset {frame_start}: \
+                 expected {crc:08x}, got {actual:08x} — the journal is corrupt \
+                 mid-file (not a torn tail)"
+            );
+        }
+        let rec = TrainRecord::from_bytes(payload)
+            .with_context(|| format!("{label}: record {idx} at offset {frame_start}"))?;
+        if let Some(last) = last_step {
+            if rec.step <= last {
+                bail!(
+                    "{label}: record {idx} step {} is not after previous step {last}",
+                    rec.step
+                );
+            }
+        }
+        last_step = Some(rec.step);
+        records.push(rec);
+        off += plen;
+        idx += 1;
+    }
+    Ok((meta, records, torn))
+}
+
+/// Read a journal for resumption: verify it, truncate a torn tail in
+/// place, and reopen for appending. Returns the meta, the surviving
+/// records, and a writer positioned after the last intact record.
+pub fn open_resume(path: &Path) -> Result<(JournalMeta, Vec<TrainRecord>, JournalWriter)> {
+    let (meta, records, torn) = read_journal(path)?;
+    let file = std::fs::OpenOptions::new()
+        .read(true)
+        .write(true)
+        .open(path)
+        .with_context(|| format!("reopening journal {}", path.display()))?;
+    if let Some(t) = &torn {
+        crate::info!(
+            "{}: truncating torn tail at byte {} ({})",
+            path.display(),
+            t.valid_len,
+            t.reason
+        );
+        file.set_len(t.valid_len)
+            .with_context(|| format!("truncating torn tail of {}", path.display()))?;
+        file.sync_all()?;
+    }
+    let mut file = file;
+    use std::io::Seek;
+    file.seek(std::io::SeekFrom::End(0))?;
+    let last_step = records.last().map(|r| r.step);
+    Ok((meta, records, JournalWriter { file, path: path.to_path_buf(), last_step }))
+}
+
+/// Fold the record stream into the final resumable state: the last
+/// record's tensors/step/rng with the loss history accumulated across
+/// *all* records. Returns `None` on an empty journal.
+pub fn final_state(records: &[TrainRecord]) -> Option<(TrainRecord, Vec<f32>)> {
+    let last = records.last()?;
+    let mut losses = Vec::new();
+    for r in records {
+        losses.extend_from_slice(&r.losses);
+    }
+    Some((last.clone(), losses))
+}
+
+/// Incremental whole-journal checksum helper used by fsck reporting.
+pub fn journal_content_crc(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> JournalMeta {
+        JournalMeta {
+            task: "alpaca".into(),
+            dataset: "wikitext".into(),
+            base: "alpaca.base.packed".into(),
+            seed: u64::MAX - 7,
+            steps: 12,
+            save_every: 3,
+            batch: 2,
+            seq: 16,
+            lr_bits: (2e-3f64).to_bits(),
+            warmup_steps: 1,
+            train_zeros: true,
+            vocab: 64,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+        }
+    }
+
+    fn rec(step: u64) -> TrainRecord {
+        TrainRecord {
+            step,
+            rng: (0xDEAD_BEEF_0000_0000 + step, 0x5EED | 1),
+            ema: (step > 0).then_some(1.25 + step as f64),
+            losses: vec![step as f32, step as f32 + 0.5],
+            params: vec![vec![1.0, 2.0], vec![3.0; 3]],
+            opt_m: vec![vec![0.1, 0.2], vec![0.3; 3]],
+            opt_v: vec![vec![0.01, 0.02], vec![0.03; 3]],
+        }
+    }
+
+    #[test]
+    fn meta_roundtrips_u64_and_f64_exactly() {
+        let m = meta();
+        let back = JournalMeta::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.seed, u64::MAX - 7);
+        assert_eq!(back.lr(), 2e-3);
+    }
+
+    #[test]
+    fn write_read_roundtrip_and_final_state() {
+        let dir = std::env::temp_dir().join("peqa_test_journal_rt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.journal");
+        let mut w = JournalWriter::create(&path, &meta()).unwrap();
+        w.append(&rec(3)).unwrap();
+        w.append(&rec(6)).unwrap();
+        drop(w);
+        let (m, recs, torn) = read_journal(&path).unwrap();
+        assert_eq!(m, meta());
+        assert!(torn.is_none());
+        assert_eq!(recs, vec![rec(3), rec(6)]);
+        let (last, losses) = final_state(&recs).unwrap();
+        assert_eq!(last, rec(6));
+        assert_eq!(losses, vec![3.0, 3.5, 6.0, 6.5]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_reported_and_truncated_mid_file_corruption_is_fatal() {
+        let dir = std::env::temp_dir().join("peqa_test_journal_torn");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.journal");
+        let mut w = JournalWriter::create(&path, &meta()).unwrap();
+        w.append(&rec(3)).unwrap();
+        drop(w);
+        let good_len = std::fs::metadata(&path).unwrap().len();
+
+        // Simulate a crash mid-append: garbage tail bytes.
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(&[0xAB, 0xCD, 0xEF]);
+        std::fs::write(&path, &bytes).unwrap();
+        let (_, recs, torn) = read_journal(&path).unwrap();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(torn.as_ref().unwrap().valid_len, good_len);
+
+        // open_resume truncates the tail and can append again.
+        let (_, recs, mut w) = open_resume(&path).unwrap();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), good_len);
+        w.append(&rec(6)).unwrap();
+        drop(w);
+        let (_, recs, torn) = read_journal(&path).unwrap();
+        assert!(torn.is_none());
+        assert_eq!(recs.len(), 2);
+
+        // Flip a byte inside the FIRST record (not the tail): hard error.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let hdr = header_bytes(&meta()).len();
+        bytes[hdr + 8 + 4] ^= 0xFF; // inside record 0's payload
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_journal(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("record 0"), "{msg}");
+        assert!(msg.contains("expected"), "{msg}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn non_monotonic_steps_rejected_on_write_and_read() {
+        let dir = std::env::temp_dir().join("peqa_test_journal_mono");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.journal");
+        let mut w = JournalWriter::create(&path, &meta()).unwrap();
+        w.append(&rec(5)).unwrap();
+        assert!(w.append(&rec(5)).is_err());
+        assert!(w.append(&rec(4)).is_err());
+        w.append(&rec(6)).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn header_corruption_is_detected() {
+        let dir = std::env::temp_dir().join("peqa_test_journal_hdr");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.journal");
+        JournalWriter::create(&path, &meta()).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[JOURNAL_MAGIC.len() + 4 + 8 + 2] ^= 0x10; // inside meta JSON
+        std::fs::write(&path, &bytes).unwrap();
+        let msg = format!("{:#}", read_journal(&path).unwrap_err());
+        assert!(msg.contains("header checksum"), "{msg}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

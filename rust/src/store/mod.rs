@@ -1,0 +1,155 @@
+//! Durable artifact storage: checksummed containers, the crash-safe
+//! training journal, and versioned adapter publication.
+//!
+//! Three layers (ROADMAP Open item 2; formats modeled on pippin's
+//! checksummed snapshot/commit-log and sworndisk's checkpoint region):
+//!
+//! * [`format`] — the `PEQAS1` container every artifact
+//!   (`.peqa`/`.packed`/`.adapter`) is written in: magic + version +
+//!   per-section length/CRC32 headers + whole-file trailer, written via
+//!   temp-file → fsync → atomic rename. Any single flipped bit is
+//!   detected at load; a crash mid-write can never leave a truncated
+//!   file under the artifact's name. Legacy `PEQA1`/`PEQAP1` files
+//!   still load (flagged unverified).
+//! * [`journal`] — the `PEQAJ1` append-only commit log behind
+//!   `peqa finetune --save-every N` / `--resume`: per-record-checksummed
+//!   full training state (scales/zeros, Adam moments, loss bookkeeping,
+//!   data-stream RNG), torn tails truncated on resume, resumed runs
+//!   bitwise identical to uninterrupted ones.
+//! * [`registry`] — generation-numbered adapter publication
+//!   (`registry.manifest` + immutable `<task>.g<N>.adapter` files) that
+//!   a live `peqa serve --registry` hot-reloads between requests.
+//!
+//! [`fsck`] verifies any of these (plus legacy files, best-effort) and
+//! backs the `peqa fsck` subcommand.
+
+pub mod format;
+pub mod journal;
+pub mod registry;
+
+pub use format::{atomic_write, crc32, is_container, Container, ContainerWriter, Crc32};
+pub use journal::{
+    open_resume, read_journal, JournalMeta, JournalWriter, TornTail, TrainRecord,
+};
+pub use registry::{Manifest, Registry};
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// What `fsck` concluded about one file.
+pub struct FsckReport {
+    /// Every byte covered by a verified checksum (false for legacy
+    /// formats, which parse but carry no checksums, and for journals
+    /// with a torn tail).
+    pub verified: bool,
+    /// Human-readable report lines (header fields, sections, warnings).
+    pub lines: Vec<String>,
+}
+
+/// Verify one artifact's checksums and describe its header. Understands
+/// the `PEQAS1` container, the `PEQAJ1` journal, and the legacy
+/// `PEQA1`/`PEQAP1` formats (parsed best-effort, reported unverified).
+/// Corruption/truncation anywhere is an `Err` naming the damage.
+pub fn fsck(path: &Path) -> Result<FsckReport> {
+    let bytes = std::fs::read(path).with_context(|| format!("opening {}", path.display()))?;
+    let disp = path.display();
+    if is_container(&bytes) {
+        let c = Container::from_bytes(&bytes, &disp.to_string())?;
+        let mut lines = vec![format!(
+            "{disp}: PEQAS1 container, kind '{}', version {}, {} section(s), {} bytes — all checksums OK",
+            c.kind,
+            c.version,
+            c.sections().len(),
+            bytes.len()
+        )];
+        for s in c.sections() {
+            lines.push(format!("  section '{}': {} bytes, crc32 {:08x}", s.name, s.payload.len(), s.crc));
+        }
+        return Ok(FsckReport { verified: true, lines });
+    }
+    if bytes.starts_with(journal::JOURNAL_MAGIC) {
+        let (meta, records, torn) = journal::read_journal(path)?;
+        let mut lines = vec![format!(
+            "{disp}: PEQAJ1 training journal, task '{}', base '{}', {} record(s), {} bytes",
+            meta.task,
+            meta.base,
+            records.len(),
+            bytes.len()
+        )];
+        if let Some(last) = records.last() {
+            lines.push(format!(
+                "  last record: step {}/{} ({} optimizer slot(s))",
+                last.step,
+                meta.steps,
+                last.params.len()
+            ));
+        }
+        if let Some(t) = &torn {
+            lines.push(format!(
+                "  WARNING: torn tail after byte {} ({}) — resume will truncate it",
+                t.valid_len, t.reason
+            ));
+        }
+        return Ok(FsckReport { verified: torn.is_none(), lines });
+    }
+    if bytes.starts_with(b"PEQA1\n") {
+        let ck = crate::model::Checkpoint::load(path)?;
+        return Ok(FsckReport {
+            verified: false,
+            lines: vec![format!(
+                "{disp}: legacy PEQA1 checkpoint ({} tensor(s), {} params, {} bytes) — \
+                 parsed OK but the format carries NO checksums (unverified); re-save to \
+                 upgrade to the checksummed container",
+                ck.len(),
+                ck.n_params(),
+                bytes.len()
+            )],
+        });
+    }
+    if bytes.starts_with(b"PEQAP1\n") {
+        let pm = crate::model::PackedModel::load(path)?;
+        return Ok(FsckReport {
+            verified: false,
+            lines: vec![format!(
+                "{disp}: legacy PEQAP1 packed model ({}-bit, {} projection(s), {} bytes) — \
+                 parsed OK but the format carries NO checksums (unverified); re-save to \
+                 upgrade to the checksummed container",
+                pm.bits,
+                pm.prefixes().len(),
+                bytes.len()
+            )],
+        });
+    }
+    bail!("{disp}: unrecognized artifact (no PEQAS1/PEQAJ1/PEQA1/PEQAP1 magic)");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fsck_reports_container_journal_and_garbage() {
+        let dir = std::env::temp_dir().join("peqa_test_fsck");
+        std::fs::create_dir_all(&dir).unwrap();
+        // Container.
+        let cpath = dir.join("x.adapter");
+        let mut w = ContainerWriter::new("checkpoint");
+        w.section("meta", b"[]".to_vec());
+        w.write_atomic(&cpath).unwrap();
+        let r = fsck(&cpath).unwrap();
+        assert!(r.verified);
+        assert!(r.lines[0].contains("checkpoint"), "{}", r.lines[0]);
+        // Corrupt it → fsck errors.
+        let mut bytes = std::fs::read(&cpath).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        std::fs::write(&cpath, &bytes).unwrap();
+        assert!(fsck(&cpath).is_err());
+        // Garbage.
+        let gpath = dir.join("junk.bin");
+        std::fs::write(&gpath, b"hello world").unwrap();
+        assert!(fsck(&gpath).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,265 @@
+//! Versioned adapter publication: a directory of immutable per-task
+//! adapter files named by generation, fronted by a single
+//! `registry.manifest` container that is replaced atomically.
+//!
+//! Publication protocol (crash-safe by ordering):
+//! 1. every new adapter is written first, to a fresh
+//!    `<task>.g<N>.adapter` name (checksummed container, atomic rename);
+//! 2. the manifest — `{generation, tasks: {name → file}}` — is written
+//!    last, also atomically.
+//!
+//! A crash between (1) and (2) leaves orphan adapter files but the old
+//! manifest intact: readers never observe a partial generation. Tasks
+//! not republished carry forward, still pointing at their previous
+//! generation's files. Consumers ([`Registry::load`]) verify every
+//! adapter's checksums before returning — a corrupt or half-written
+//! adapter fails the *load*, and a watching server keeps serving the
+//! generation it already has (store::registry never makes a server
+//! crash; see `serve::server`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::format::{Container, ContainerWriter};
+use crate::json::Value;
+use crate::model::Checkpoint;
+
+/// Manifest file name inside a registry directory.
+pub const MANIFEST_NAME: &str = "registry.manifest";
+
+/// A parsed manifest: the generation counter and task → file table.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Manifest {
+    pub generation: u64,
+    /// (task, adapter file name) pairs, sorted by task.
+    pub tasks: Vec<(String, String)>,
+}
+
+impl Manifest {
+    fn to_json(&self) -> String {
+        Value::obj(vec![
+            ("generation", Value::str(self.generation.to_string())),
+            (
+                "tasks",
+                Value::Obj(
+                    self.tasks
+                        .iter()
+                        .map(|(t, f)| (t.clone(), Value::str(f.clone())))
+                        .collect(),
+                ),
+            ),
+        ])
+        .to_string()
+    }
+
+    fn from_json(text: &str) -> Result<Manifest> {
+        let v = Value::parse(text).context("manifest JSON")?;
+        let generation = v.str_of("generation")?.parse().context("manifest generation")?;
+        let tasks_v = v.req("tasks")?;
+        let Value::Obj(map) = tasks_v else { bail!("manifest 'tasks' is not an object") };
+        let mut tasks = Vec::with_capacity(map.len());
+        for (t, f) in map {
+            let f = f.as_str().ok_or_else(|| anyhow::anyhow!("manifest task '{t}' file not a string"))?;
+            tasks.push((t.clone(), f.to_string()));
+        }
+        Ok(Manifest { generation, tasks })
+    }
+}
+
+/// Reject task names that could escape the registry directory or
+/// collide with its bookkeeping.
+pub fn validate_task_name(name: &str) -> Result<()> {
+    if name.is_empty() {
+        bail!("task name is empty");
+    }
+    if name.starts_with('.') {
+        bail!("task name '{name}' must not start with '.'");
+    }
+    if name.contains(['/', '\\']) || name.contains('\0') {
+        bail!("task name '{name}' must not contain path separators");
+    }
+    Ok(())
+}
+
+/// Handle on a registry directory. Opening never touches the
+/// filesystem; an empty/missing directory is generation 0 with no
+/// tasks.
+pub struct Registry {
+    dir: PathBuf,
+}
+
+impl Registry {
+    pub fn open(dir: impl Into<PathBuf>) -> Registry {
+        Registry { dir: dir.into() }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn manifest_path(&self) -> PathBuf {
+        self.dir.join(MANIFEST_NAME)
+    }
+
+    /// The current manifest; `Manifest::default()` (generation 0, no
+    /// tasks) when none has been published yet. A *corrupt* manifest is
+    /// an error, not an empty registry.
+    pub fn manifest(&self) -> Result<Manifest> {
+        let path = self.manifest_path();
+        if !path.exists() {
+            return Ok(Manifest::default());
+        }
+        let c = Container::read(&path)?;
+        if c.kind != "registry" {
+            bail!("{}: container kind '{}' is not 'registry'", path.display(), c.kind);
+        }
+        let text = std::str::from_utf8(c.section("manifest")?)
+            .with_context(|| format!("{}: manifest is not UTF-8", path.display()))?;
+        Manifest::from_json(text).with_context(|| path.display().to_string())
+    }
+
+    /// Cheap poll for watchers: the published generation (0 when no
+    /// manifest exists). Errors on a corrupt manifest.
+    pub fn generation(&self) -> Result<u64> {
+        Ok(self.manifest()?.generation)
+    }
+
+    /// Publish `adapters` as the next generation: adapter files first,
+    /// manifest last (see module docs). Tasks already in the registry
+    /// but absent from `adapters` carry forward unchanged. Returns the
+    /// new generation number.
+    pub fn publish(&self, adapters: &[(String, &Checkpoint)]) -> Result<u64> {
+        if adapters.is_empty() {
+            bail!("refusing to publish an empty adapter set");
+        }
+        for (i, (name, ck)) in adapters.iter().enumerate() {
+            validate_task_name(name)?;
+            if adapters[..i].iter().any(|(n, _)| n == name) {
+                bail!("duplicate task '{name}' in publish set");
+            }
+            if ck.is_empty() {
+                bail!("task '{name}': refusing to publish an empty adapter");
+            }
+        }
+        let prev = self.manifest()?;
+        let generation = prev.generation + 1;
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating registry {}", self.dir.display()))?;
+        let mut tasks: Vec<(String, String)> = prev
+            .tasks
+            .iter()
+            .filter(|(t, _)| !adapters.iter().any(|(n, _)| n == t))
+            .cloned()
+            .collect();
+        for (name, ck) in adapters {
+            let file = format!("{name}.g{generation}.adapter");
+            ck.save(&self.dir.join(&file))
+                .with_context(|| format!("publishing adapter '{name}'"))?;
+            tasks.push((name.clone(), file));
+        }
+        tasks.sort_by(|a, b| a.0.cmp(&b.0));
+        let manifest = Manifest { generation, tasks };
+        let mut w = ContainerWriter::new("registry");
+        w.section("manifest", manifest.to_json().into_bytes());
+        w.write_atomic(&self.manifest_path())?;
+        Ok(generation)
+    }
+
+    /// Load and fully verify the current generation: the manifest plus
+    /// every adapter it references (each a checksummed container; any
+    /// corruption or missing file fails the whole load). Returns
+    /// `(generation, [(task, adapter)])`.
+    pub fn load(&self) -> Result<(u64, Vec<(String, Checkpoint)>)> {
+        let m = self.manifest()?;
+        let mut out = Vec::with_capacity(m.tasks.len());
+        for (task, file) in &m.tasks {
+            let path = self.dir.join(file);
+            let ck = Checkpoint::load(&path)
+                .with_context(|| format!("registry task '{task}' (generation {})", m.generation))?;
+            out.push((task.clone(), ck));
+        }
+        Ok((m.generation, out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn adapter(v: f32) -> Checkpoint {
+        let mut ck = Checkpoint::new();
+        ck.insert("layers.0.attn.q.s", Tensor::full(&[2, 1], v));
+        ck
+    }
+
+    #[test]
+    fn publish_load_and_carry_forward() {
+        let dir = std::env::temp_dir().join("peqa_test_registry_pub");
+        std::fs::remove_dir_all(&dir).ok();
+        let reg = Registry::open(&dir);
+        assert_eq!(reg.generation().unwrap(), 0);
+        assert!(reg.load().unwrap().1.is_empty());
+
+        let a1 = adapter(1.0);
+        let b1 = adapter(2.0);
+        let g = reg
+            .publish(&[("a".to_string(), &a1), ("b".to_string(), &b1)])
+            .unwrap();
+        assert_eq!(g, 1);
+        let (g, tasks) = reg.load().unwrap();
+        assert_eq!(g, 1);
+        assert_eq!(tasks.len(), 2);
+
+        // Republish only 'a': 'b' carries forward from generation 1.
+        let a2 = adapter(3.0);
+        let g = reg.publish(&[("a".to_string(), &a2)]).unwrap();
+        assert_eq!(g, 2);
+        let (_, tasks) = reg.load().unwrap();
+        let a = &tasks.iter().find(|(t, _)| t == "a").unwrap().1;
+        let b = &tasks.iter().find(|(t, _)| t == "b").unwrap().1;
+        assert_eq!(a.req("layers.0.attn.q.s").unwrap().data()[0], 3.0);
+        assert_eq!(b.req("layers.0.attn.q.s").unwrap().data()[0], 2.0);
+        // Old generation's files are untouched (immutable history).
+        assert!(dir.join("a.g1.adapter").exists());
+        assert!(dir.join("a.g2.adapter").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_adapter_fails_load_but_manifest_survives() {
+        let dir = std::env::temp_dir().join("peqa_test_registry_bad");
+        std::fs::remove_dir_all(&dir).ok();
+        let reg = Registry::open(&dir);
+        reg.publish(&[("a".to_string(), &adapter(1.0))]).unwrap();
+        // Flip one byte of the adapter payload.
+        let p = dir.join("a.g1.adapter");
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = reg.load().unwrap_err();
+        assert!(format!("{err:#}").contains("a"), "{err:#}");
+        // The generation counter is still readable.
+        assert_eq!(reg.generation().unwrap(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bad_task_names_rejected() {
+        let dir = std::env::temp_dir().join("peqa_test_registry_names");
+        std::fs::remove_dir_all(&dir).ok();
+        let reg = Registry::open(&dir);
+        let a = adapter(1.0);
+        for bad in ["", ".hidden", "a/b", "a\\b"] {
+            assert!(reg.publish(&[(bad.to_string(), &a)]).is_err(), "{bad:?}");
+        }
+        assert!(reg
+            .publish(&[("x".to_string(), &a), ("x".to_string(), &a)])
+            .is_err());
+        assert!(reg.publish(&[]).is_err());
+        assert!(reg.publish(&[("e".to_string(), &Checkpoint::new())]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

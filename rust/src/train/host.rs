@@ -69,7 +69,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use super::optim::Adam;
-use super::{StepState, Tuner};
+use super::{StepState, Tuner, TunerState};
 use crate::config::TrainConfig;
 use crate::data::Batch;
 use crate::model::blocks::{
@@ -313,6 +313,71 @@ impl Tuner for HostPeqaTuner {
     fn trainable_state_bytes(&self) -> u64 {
         // param + Adam m + v, all f32 — only s (and optionally z).
         3 * 4 * self.opt.n_params() as u64
+    }
+
+    fn export_state(&self) -> Result<TunerState> {
+        // Slot order must mirror `step`: per prefix, scales then (when
+        // trained) zeros — the same layout `opt_sizes` built Adam with.
+        let mut params = Vec::new();
+        for p in &self.prefixes {
+            let m = self.model.matrix(p).expect("validated at construction");
+            params.push(m.scales.data().to_vec());
+            if self.train_zeros {
+                params.push(m.zeros.data().to_vec());
+            }
+        }
+        let (opt_m, opt_v) = self.opt.export_moments();
+        Ok(TunerState {
+            step: self.state.step,
+            losses: self.state.losses.clone(),
+            ema: self.state.smoothed(),
+            params,
+            opt_m,
+            opt_v,
+        })
+    }
+
+    fn import_state(&mut self, st: &TunerState) -> Result<()> {
+        let expected = opt_sizes(&self.model, &self.prefixes, self.train_zeros);
+        if st.params.len() != expected.len() {
+            bail!(
+                "resume state has {} trainable slot(s), this model trains {} \
+                 (train_zeros or model mismatch?)",
+                st.params.len(),
+                expected.len()
+            );
+        }
+        for (i, (&want, got)) in expected.iter().zip(&st.params).enumerate() {
+            if got.len() != want {
+                bail!(
+                    "resume state slot {i} has {} value(s), this model wants {want} \
+                     (different quantization grouping?)",
+                    got.len()
+                );
+            }
+        }
+        if st.losses.len() != st.step {
+            bail!(
+                "resume state is inconsistent: {} loss value(s) for step {}",
+                st.losses.len(),
+                st.step
+            );
+        }
+        // import_moments re-validates against Adam's slots and either
+        // applies fully or not at all; only then touch the model.
+        self.opt.import_moments(&st.opt_m, &st.opt_v)?;
+        let mut idx = 0usize;
+        for p in &self.prefixes {
+            let m = self.model.matrix_mut(p).expect("validated at construction");
+            m.scales.data_mut().copy_from_slice(&st.params[idx]);
+            idx += 1;
+            if self.train_zeros {
+                m.zeros.data_mut().copy_from_slice(&st.params[idx]);
+                idx += 1;
+            }
+        }
+        self.state.restore(st.step, st.losses.clone(), st.ema);
+        Ok(())
     }
 
     fn finish(self) -> Result<Checkpoint> {
@@ -1291,6 +1356,47 @@ mod tests {
             assert_eq!(dsa.data(), dsb.data(), "{pa} ds");
             assert_eq!(dza.data(), dzb.data(), "{pa} dz");
         }
+    }
+
+    #[test]
+    fn export_import_state_resumes_bitwise() {
+        // Uninterrupted: 6 steps. Interrupted: 3 steps, state exported
+        // into a FRESH tuner, 3 more steps. Scales, zeros, losses and
+        // EMA must match bit for bit — the in-process core of the
+        // journal's kill-and-resume guarantee.
+        let batches: Vec<Batch> = (0..6).map(|i| tiny_batch(2, 8, 64, 40 + i)).collect();
+        let mut full = tiny_tuner(17, true, 2);
+        for b in &batches {
+            full.step(b).unwrap();
+        }
+        let mut first = tiny_tuner(17, true, 2);
+        for b in &batches[..3] {
+            first.step(b).unwrap();
+        }
+        let st = first.export_state().unwrap();
+        drop(first);
+        let mut resumed = tiny_tuner(17, true, 2);
+        resumed.import_state(&st).unwrap();
+        assert_eq!(resumed.step_count(), 3);
+        for b in &batches[3..] {
+            resumed.step(b).unwrap();
+        }
+        assert_eq!(resumed.losses(), full.losses());
+        assert_eq!(resumed.smoothed_loss(), full.smoothed_loss());
+        let a = resumed.extract_adapter();
+        let b = full.extract_adapter();
+        assert_eq!(a.names(), b.names());
+        for (n, t) in a.iter() {
+            assert_eq!(t.data(), b.req(n).unwrap().data(), "{n}");
+        }
+        // Shape-mismatched state is rejected without touching the tuner.
+        let mut other = tiny_tuner(17, false, 1); // train_zeros differs
+        assert!(other.import_state(&st).is_err());
+        assert_eq!(other.step_count(), 0);
+        let mut bad = st.clone();
+        bad.losses.pop();
+        let mut t2 = tiny_tuner(17, true, 1);
+        assert!(t2.import_state(&bad).is_err());
     }
 
     #[test]

@@ -44,11 +44,30 @@ pub use optim::Adam;
 #[cfg(feature = "xla")]
 pub use xla::Trainer;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::data::Batch;
 use crate::model::Checkpoint;
 use crate::util::stats::Ema;
+
+/// A backend's complete mutable training state, exported for the
+/// crash-safe journal (`store::journal`) and re-imported on resume.
+/// `params`/`opt_m`/`opt_v` are parallel per-optimizer-slot vectors in
+/// the backend's own slot order (for the host PEQA backend: per
+/// projection prefix, scales then — when trained — zeros, exactly the
+/// order [`optim::Adam`] steps them). Importing a state a backend
+/// exported reproduces subsequent steps **bitwise**.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TunerState {
+    pub step: usize,
+    /// Full per-step loss history.
+    pub losses: Vec<f32>,
+    /// EMA-smoothed loss (exact f64).
+    pub ema: Option<f64>,
+    pub params: Vec<Vec<f32>>,
+    pub opt_m: Vec<Vec<f32>>,
+    pub opt_v: Vec<Vec<f32>>,
+}
 
 /// Backend-agnostic fine-tuning surface (see module docs). Backends are
 /// used by static dispatch; `finish`/`run` consume or borrow `self`
@@ -74,6 +93,25 @@ pub trait Tuner {
     /// (param + Adam m + v) — the appendix-L "training memory" number;
     /// for PEQA this is kilobytes against megabytes of packed codes.
     fn trainable_state_bytes(&self) -> u64;
+
+    /// Snapshot the complete mutable training state (see [`TunerState`])
+    /// for the crash-safe journal. Backends that cannot export state
+    /// (the artifact-driven xla backend keeps its optimizer moments
+    /// device-side) keep the default and resumable training is refused
+    /// up front rather than silently wrong.
+    fn export_state(&self) -> Result<TunerState> {
+        bail!("this training backend does not support state export/resume")
+    }
+
+    /// Restore a state captured by [`Tuner::export_state`] — shapes are
+    /// validated against this tuner before anything is overwritten, so
+    /// a failed import leaves the tuner untouched. After a successful
+    /// import, subsequent steps are bitwise identical to a run that
+    /// never stopped.
+    fn import_state(&mut self, state: &TunerState) -> Result<()> {
+        let _ = state;
+        bail!("this training backend does not support state export/resume")
+    }
 
     /// Final method-layout checkpoint: trained + frozen tensors.
     fn finish(self) -> Result<Checkpoint>
@@ -109,6 +147,14 @@ impl StepState {
 
     pub fn smoothed(&self) -> Option<f64> {
         self.ema.get()
+    }
+
+    /// Overwrite the bookkeeping with journaled values (training
+    /// resume): step counter, full loss history, exact EMA.
+    pub fn restore(&mut self, step: usize, losses: Vec<f32>, ema: Option<f64>) {
+        self.step = step;
+        self.losses = losses;
+        self.ema.set(ema);
     }
 
     /// Record one finished step's loss (the caller has already advanced

@@ -41,6 +41,44 @@ impl Adam {
         2 * 4 * self.n_params() as u64
     }
 
+    /// Clone out the per-slot first/second moments — the optimizer half
+    /// of the training journal's full-state records.
+    pub fn export_moments(&self) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        (self.m.clone(), self.v.clone())
+    }
+
+    /// Restore moments captured by [`Self::export_moments`]. Slot count
+    /// and every slot size must match this optimizer's construction —
+    /// validated before anything is overwritten, so a failed import
+    /// leaves the state untouched.
+    pub fn import_moments(&mut self, m: &[Vec<f32>], v: &[Vec<f32>]) -> anyhow::Result<()> {
+        if m.len() != self.m.len() || v.len() != self.v.len() {
+            anyhow::bail!(
+                "optimizer state arity mismatch: restoring {}/{} slots into {}",
+                m.len(),
+                v.len(),
+                self.m.len()
+            );
+        }
+        for (i, (mi, vi)) in m.iter().zip(v).enumerate() {
+            if mi.len() != self.m[i].len() || vi.len() != self.m[i].len() {
+                anyhow::bail!(
+                    "optimizer slot {i} size mismatch: restoring {}/{} into {}",
+                    mi.len(),
+                    vi.len(),
+                    self.m[i].len()
+                );
+            }
+        }
+        for (dst, src) in self.m.iter_mut().zip(m) {
+            dst.copy_from_slice(src);
+        }
+        for (dst, src) in self.v.iter_mut().zip(v) {
+            dst.copy_from_slice(src);
+        }
+        Ok(())
+    }
+
     /// One bias-corrected Adam step at (1-based) step `t`:
     /// `p -= lr · m̂ / (√v̂ + ε)`. `params[i]` and `grads[i]` must match
     /// the construction-time size of tensor `i`.
@@ -89,6 +127,34 @@ mod tests {
         assert!((p[0] - 3.0).abs() < 0.05, "p = {}", p[0]);
         assert_eq!(opt.state_bytes(), 8);
         assert_eq!(opt.n_params(), 1);
+    }
+
+    #[test]
+    fn moments_export_import_roundtrip_bitwise() {
+        let mut p = vec![0.0f32, 1.0, 2.0];
+        let mut opt = Adam::new(&[3]);
+        for t in 1..=5 {
+            let g: Vec<f32> = p.iter().map(|x| x - 3.0).collect();
+            opt.step(t, 0.05, &mut [p.as_mut_slice()], &[g.as_slice()]);
+        }
+        let (m, v) = opt.export_moments();
+        // A fresh optimizer with the imported moments continues bitwise
+        // identically to the original.
+        let mut opt2 = Adam::new(&[3]);
+        opt2.import_moments(&m, &v).unwrap();
+        let mut p2 = p.clone();
+        for t in 6..=8 {
+            let g: Vec<f32> = p.iter().map(|x| x - 3.0).collect();
+            opt.step(t, 0.05, &mut [p.as_mut_slice()], &[g.as_slice()]);
+            let g2: Vec<f32> = p2.iter().map(|x| x - 3.0).collect();
+            opt2.step(t, 0.05, &mut [p2.as_mut_slice()], &[g2.as_slice()]);
+        }
+        assert_eq!(p, p2);
+        // Mismatched arity / sizes are rejected before any mutation.
+        let mut opt3 = Adam::new(&[2]);
+        assert!(opt3.import_moments(&m, &v).is_err());
+        let mut opt4 = Adam::new(&[3, 1]);
+        assert!(opt4.import_moments(&m, &v).is_err());
     }
 
     #[test]

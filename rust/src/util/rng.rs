@@ -33,6 +33,20 @@ impl Pcg32 {
         Self::seeded(seed, 0xda3e39cb94b95bdb)
     }
 
+    /// The raw `(state, inc)` pair — the exact stream position, for
+    /// checkpointing (the training journal's data-stream cursor).
+    pub fn state_raw(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator at an exact `(state, inc)` position captured
+    /// by [`Self::state_raw`] — the restored stream continues
+    /// bit-for-bit. `inc` must be odd (every constructor makes it so).
+    pub fn from_state(state: u64, inc: u64) -> Pcg32 {
+        assert!(inc & 1 == 1, "PCG increment must be odd (got {inc:#x})");
+        Pcg32 { state, inc }
+    }
+
     /// Derive an independent child generator (for per-task streams).
     pub fn fork(&mut self, tag: u64) -> Pcg32 {
         let seed = (self.next_u32() as u64) << 32 | self.next_u32() as u64;

@@ -81,6 +81,12 @@ impl Ema {
     pub fn get(&self) -> Option<f64> {
         self.value
     }
+
+    /// Overwrite the smoothed value — state restore (training resume)
+    /// only; normal updates go through [`Self::push`].
+    pub fn set(&mut self, value: Option<f64>) {
+        self.value = value;
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,330 @@
+//! Durability integration tests (default build — no artifacts, no xla):
+//! the ISSUE-6 acceptance gates for `store::`.
+//!
+//! * kill-and-resume: a journaled training run killed at an arbitrary
+//!   step — with a simulated torn tail from the interrupted append —
+//!   resumes from the base snapshot + journal alone and finishes
+//!   **bitwise identical** to a run that was never interrupted (loss
+//!   history, EMA, every adapter tensor, the serialized adapter file,
+//!   and the journal record stream itself);
+//! * corruption: any single flipped byte and every possible truncation
+//!   of a checkpoint/adapter container, a packed-model container, and a
+//!   training journal is detected at load — an error or a reported torn
+//!   tail, never a panic or silently-wrong tensors;
+//! * publication: a tuned adapter published through `store::Registry`
+//!   loads back checksum-verified, passes the serving scheduler's
+//!   strict coverage, decodes, and `store::fsck` signs off on every
+//!   artifact the flow wrote; a flipped byte in a published adapter
+//!   fails the next load while the generation counter stays readable.
+
+use std::path::{Path, PathBuf};
+
+use peqa::config::TrainConfig;
+use peqa::data::LmBatcher;
+use peqa::model::{Checkpoint, PackedModel};
+use peqa::serve::{self, Engine, ModelGeom, Scheduler, SchedulerConfig};
+use peqa::store::journal::{self, JournalMeta, JournalWriter, TrainRecord};
+use peqa::store::Registry;
+use peqa::tensor::Tensor;
+use peqa::train::{HostPeqaTuner, Tuner, TunerState};
+use peqa::util::Pcg32;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+const GEOM: ModelGeom = ModelGeom { vocab: 64, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32 };
+
+fn token_stream(n: usize, seed: u64) -> Vec<u32> {
+    let mut rng = Pcg32::new(seed);
+    (0..n).map(|_| rng.below(GEOM.vocab as u32)).collect()
+}
+
+fn cfg(steps: usize) -> TrainConfig {
+    TrainConfig { steps, lr: 2e-3, warmup_steps: 2, log_every: 0, ..Default::default() }
+}
+
+/// The CLI's journaled step loop (`run_single_task` in main.rs), in
+/// miniature: step, append a full-state record every `save_every` steps
+/// plus at the final step, optionally stop after `halt_after` steps.
+fn drive(
+    tuner: &mut HostPeqaTuner,
+    batcher: &mut LmBatcher,
+    writer: &mut JournalWriter,
+    steps: usize,
+    save_every: usize,
+    halt_after: usize,
+) {
+    let mut last_recorded = tuner.step_count();
+    while tuner.step_count() < steps {
+        let b = batcher.next_batch();
+        tuner.step(&b).unwrap();
+        let step = tuner.step_count();
+        if step % save_every == 0 || step == steps {
+            let st = tuner.export_state().unwrap();
+            writer
+                .append(&TrainRecord {
+                    step: step as u64,
+                    rng: batcher.rng_state(),
+                    ema: st.ema,
+                    losses: st.losses[last_recorded..].to_vec(),
+                    params: st.params,
+                    opt_m: st.opt_m,
+                    opt_v: st.opt_v,
+                })
+                .unwrap();
+            last_recorded = step;
+        }
+        if halt_after > 0 && step >= halt_after {
+            return;
+        }
+    }
+}
+
+fn journal_meta() -> JournalMeta {
+    JournalMeta {
+        task: "t".into(),
+        dataset: "synth".into(),
+        base: "t.base.packed".into(),
+        seed: 5,
+        steps: 10,
+        save_every: 3,
+        batch: 2,
+        seq: 8,
+        lr_bits: (2e-3f64).to_bits(),
+        warmup_steps: 2,
+        train_zeros: true,
+        vocab: GEOM.vocab,
+        d_model: GEOM.d_model,
+        n_layers: GEOM.n_layers,
+        n_heads: GEOM.n_heads,
+        d_ff: GEOM.d_ff,
+    }
+}
+
+#[test]
+fn killed_and_resumed_run_is_bitwise_identical_including_torn_tail() {
+    let dir = tmp("peqa_test_store_resume");
+    let meta = journal_meta();
+    let stream = token_stream(4_000, 99);
+
+    // Uninterrupted reference: 10 steps, records at 3/6/9/10.
+    let (pm, _) = serve::synth_packed(&GEOM, 4, Some(8), meta.seed).unwrap();
+    pm.to_checkpoint().save_packed(&dir.join(&meta.base), 4).unwrap();
+    let mut full = HostPeqaTuner::from_packed(pm, GEOM, cfg(10), true, 2).unwrap();
+    let mut batcher = LmBatcher::new(stream.clone(), 2, 8, meta.seed ^ 0x5eed);
+    let mut w = JournalWriter::create(&dir.join("full.journal"), &meta).unwrap();
+    drive(&mut full, &mut batcher, &mut w, 10, 3, 0);
+    drop(w);
+    let full_adapter = full.extract_adapter();
+    full_adapter.save(&dir.join("full.adapter")).unwrap();
+
+    // Interrupted run over the same inputs: killed after step 7 (last
+    // durable record is step 6) mid-append — garbage tail bytes.
+    let (pm, _) = serve::synth_packed(&GEOM, 4, Some(8), meta.seed).unwrap();
+    let mut part = HostPeqaTuner::from_packed(pm, GEOM, cfg(10), true, 2).unwrap();
+    let mut batcher = LmBatcher::new(stream.clone(), 2, 8, meta.seed ^ 0x5eed);
+    let jpath = dir.join("t.journal");
+    let mut w = JournalWriter::create(&jpath, &meta).unwrap();
+    drive(&mut part, &mut batcher, &mut w, 10, 3, 7);
+    drop((part, w));
+    let mut bytes = std::fs::read(&jpath).unwrap();
+    bytes.extend_from_slice(&[0x17, 0x42, 0xFE, 0x00, 0x99]);
+    std::fs::write(&jpath, &bytes).unwrap();
+
+    // Resume from disk alone: base snapshot + journal (torn tail
+    // truncated by open_resume). Thread count deliberately differs —
+    // results are pinned bit-identical across PEQA_THREADS.
+    let pm = PackedModel::load(&dir.join(&meta.base)).unwrap();
+    let (m2, records, mut w) = journal::open_resume(&jpath).unwrap();
+    assert_eq!(m2, meta);
+    let (last, losses) = journal::final_state(&records).unwrap();
+    assert_eq!(last.step, 6);
+    let mut resumed = HostPeqaTuner::from_packed(pm, GEOM, cfg(10), m2.train_zeros, 3).unwrap();
+    resumed
+        .import_state(&TunerState {
+            step: last.step as usize,
+            losses,
+            ema: last.ema,
+            params: last.params.clone(),
+            opt_m: last.opt_m.clone(),
+            opt_v: last.opt_v.clone(),
+        })
+        .unwrap();
+    let mut batcher = LmBatcher::new(stream, m2.batch, m2.seq, m2.seed ^ 0x5eed);
+    batcher.set_rng_state(last.rng.0, last.rng.1);
+    drive(&mut resumed, &mut batcher, &mut w, 10, 3, 0);
+    drop(w);
+
+    // Bitwise identical: losses, EMA, every adapter tensor, the
+    // serialized adapter container, and the journal record stream.
+    assert_eq!(resumed.losses(), full.losses());
+    assert_eq!(resumed.smoothed_loss(), full.smoothed_loss());
+    let r_adapter = resumed.extract_adapter();
+    assert_eq!(r_adapter.names(), full_adapter.names());
+    for (n, t) in r_adapter.iter() {
+        assert_eq!(t.data(), full_adapter.req(n).unwrap().data(), "{n}");
+    }
+    r_adapter.save(&dir.join("resumed.adapter")).unwrap();
+    assert_eq!(
+        std::fs::read(dir.join("resumed.adapter")).unwrap(),
+        std::fs::read(dir.join("full.adapter")).unwrap(),
+        "serialized adapters differ"
+    );
+    let (_, full_recs, _) = journal::read_journal(&dir.join("full.journal")).unwrap();
+    let (_, res_recs, torn) = journal::read_journal(&jpath).unwrap();
+    assert!(torn.is_none(), "resume left a torn tail behind");
+    assert_eq!(full_recs, res_recs);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn flipped_bytes_and_truncations_never_pass_verification() {
+    let dir = tmp("peqa_test_store_fuzz");
+
+    // Checkpoint container (.peqa and .adapter share the format).
+    let mut ck = Checkpoint::new();
+    ck.insert("layers.0.attn.q.s", Tensor::full(&[4, 1], 0.25));
+    ck.insert("layers.0.attn.q.z", Tensor::full(&[4, 1], 1.5));
+    let ck_path = dir.join("a.adapter");
+    ck.save(&ck_path).unwrap();
+    fuzz_file(&ck_path, |p: &Path| Checkpoint::load(p).map(|_| ()));
+
+    // Packed-model container (small geometry keeps the byte sweep fast).
+    let small = ModelGeom { vocab: 32, d_model: 8, n_layers: 1, n_heads: 2, d_ff: 16 };
+    let (_, q) = serve::synth_packed(&small, 3, Some(8), 9).unwrap();
+    let pk_path = dir.join("m.packed");
+    q.save_packed(&pk_path, 3).unwrap();
+    fuzz_file(&pk_path, |p: &Path| PackedModel::load(p).map(|_| ()));
+
+    // Journal: a flip is an error OR a reported torn tail OR visibly
+    // different content — never the original records passed off as
+    // intact; a truncation is an error, a torn tail, or fewer records.
+    let jpath = dir.join("t.journal");
+    let mut w = JournalWriter::create(&jpath, &journal_meta()).unwrap();
+    let rec = |step: u64| TrainRecord {
+        step,
+        rng: (11 * step, 0x5EED | 1),
+        ema: Some(0.5 + step as f64),
+        losses: vec![step as f32],
+        params: vec![vec![1.0, 2.0]],
+        opt_m: vec![vec![0.1, 0.2]],
+        opt_v: vec![vec![0.01, 0.02]],
+    };
+    w.append(&rec(3)).unwrap();
+    w.append(&rec(6)).unwrap();
+    drop(w);
+    let orig = std::fs::read(&jpath).unwrap();
+    let (om, orecs, otorn) = journal::read_journal(&jpath).unwrap();
+    assert!(otorn.is_none());
+    for i in 0..orig.len() {
+        let mut b = orig.clone();
+        b[i] ^= 0x01;
+        std::fs::write(&jpath, &b).unwrap();
+        match journal::read_journal(&jpath) {
+            Err(_) => {}
+            Ok((m, recs, torn)) => assert!(
+                torn.is_some() || m != om || recs != orecs,
+                "flip at byte {i} silently accepted"
+            ),
+        }
+    }
+    for len in 0..orig.len() {
+        std::fs::write(&jpath, &orig[..len]).unwrap();
+        match journal::read_journal(&jpath) {
+            Err(_) => {}
+            Ok((_, recs, torn)) => assert!(
+                torn.is_some() || recs.len() < orecs.len(),
+                "truncation to {len} byte(s) silently accepted"
+            ),
+        }
+    }
+    std::fs::write(&jpath, &orig).unwrap();
+    assert!(journal::read_journal(&jpath).is_ok());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Flip every byte and try every truncation of `path`; `load` must
+/// error each time (and must not panic), then succeed again once the
+/// original bytes are restored.
+fn fuzz_file(path: &Path, load: impl Fn(&Path) -> anyhow::Result<()>) {
+    let orig = std::fs::read(path).unwrap();
+    for i in 0..orig.len() {
+        let mut b = orig.clone();
+        b[i] ^= 0x01;
+        std::fs::write(path, &b).unwrap();
+        assert!(
+            load(path).is_err(),
+            "{}: flip at byte {i}/{} went undetected",
+            path.display(),
+            orig.len()
+        );
+    }
+    for len in 0..orig.len() {
+        std::fs::write(path, &orig[..len]).unwrap();
+        assert!(
+            load(path).is_err(),
+            "{}: truncation to {len} byte(s) went undetected",
+            path.display()
+        );
+    }
+    std::fs::write(path, &orig).unwrap();
+    load(path).unwrap();
+}
+
+#[test]
+fn tuned_adapter_publishes_serves_strictly_and_fscks_clean() {
+    let dir = tmp("peqa_test_store_publish");
+    let (pm, _) = serve::synth_packed(&GEOM, 4, Some(8), 21).unwrap();
+    let base = pm.clone();
+    let mut tuner = HostPeqaTuner::from_packed(pm, GEOM, cfg(4), false, 2).unwrap();
+    let mut batcher = LmBatcher::new(token_stream(2_000, 7), 2, 8, 77);
+    for _ in 0..4 {
+        let b = batcher.next_batch();
+        tuner.step(&b).unwrap();
+    }
+    let adapter = tuner.extract_adapter();
+
+    let reg_dir = dir.join("registry");
+    let reg = Registry::open(&reg_dir);
+    assert_eq!(reg.publish(&[("news".to_string(), &adapter)]).unwrap(), 1);
+
+    // The published generation loads checksum-verified and registers
+    // under the scheduler's strict coverage gate; the adapter decodes.
+    let (generation, list) = reg.load().unwrap();
+    assert_eq!(generation, 1);
+    let mut adapters = serve::AdapterStore::new();
+    for (t, a) in list {
+        adapters.insert(t, a);
+    }
+    let eng = Engine::from_packed(base, GEOM, 2).unwrap();
+    let scfg =
+        SchedulerConfig { max_batch: 2, window: 64, strict_coverage: true, ..Default::default() };
+    let mut sched = Scheduler::new(eng, adapters, scfg).unwrap();
+    sched.submit("news", vec![3, 9, 27], 6, u32::MAX);
+    let rs = sched.run_until_idle().unwrap();
+    assert_eq!(rs.len(), 1);
+    assert_eq!(rs[0].tokens.len(), 6);
+
+    // fsck signs off on every artifact the flow wrote.
+    for f in [reg_dir.join("registry.manifest"), reg_dir.join("news.g1.adapter")] {
+        let r = peqa::store::fsck(&f).unwrap();
+        assert!(r.verified, "{} not verified", f.display());
+    }
+
+    // A flipped byte in the published adapter fails the next load (a
+    // watching server would keep its current generation), while the
+    // generation counter stays readable; fsck names the damage.
+    let p = reg_dir.join("news.g1.adapter");
+    let mut b = std::fs::read(&p).unwrap();
+    let mid = b.len() / 2;
+    b[mid] ^= 0x40;
+    std::fs::write(&p, &b).unwrap();
+    assert!(reg.load().is_err());
+    assert_eq!(reg.generation().unwrap(), 1);
+    assert!(peqa::store::fsck(&p).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}

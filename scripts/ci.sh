@@ -89,3 +89,25 @@ else
   echo "to skip the gate knowingly." >&2
   exit 1
 fi
+
+echo "== store durability smoke: kill+resume bitwise, publish, fsck =="
+# End-to-end check of the store:: guarantees through the real CLI: a
+# journaled run killed mid-flight (--halt-after simulates the crash) and
+# resumed must produce an adapter byte-identical to a run that was never
+# interrupted; every artifact the flow wrote must pass `peqa fsck`.
+PEQA_BIN=target/release/peqa
+SMOKE=$(mktemp -d)
+trap 'rm -rf "$SMOKE"' EXIT
+# Reference: one uninterrupted journaled run.
+"$PEQA_BIN" finetune --task smoke --out "$SMOKE/full" --steps 8 --save-every 3 \
+  --batch 2 --seq 16 --seed 11 --eval-tokens 0
+# Same run killed after step 4 (journal durable through step 3), then
+# resumed from disk alone and published.
+"$PEQA_BIN" finetune --task smoke --out "$SMOKE/part" --steps 8 --save-every 3 \
+  --batch 2 --seq 16 --seed 11 --eval-tokens 0 --halt-after 4
+"$PEQA_BIN" finetune --task smoke --out "$SMOKE/part" --resume --eval-tokens 0 \
+  --publish "$SMOKE/registry"
+cmp "$SMOKE/full/smoke.adapter" "$SMOKE/part/smoke.adapter"
+echo "== ok: resumed adapter is byte-identical to the uninterrupted run =="
+"$PEQA_BIN" fsck "$SMOKE/full" "$SMOKE/part" "$SMOKE/registry"
+echo "== ok: store durability smoke =="
