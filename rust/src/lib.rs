@@ -67,7 +67,61 @@
 //! a channel. The request/response/metrics vocabulary lives in
 //! `serve::types` and is shared with the xla coordinator. `peqa serve`
 //! runs the CLI demo; `benches/serve_decode.rs` writes
-//! `BENCH_serve.json` (tokens/s, latency p50/p99, swap p99).
+//! `BENCH_serve.json` (tokens/s, latency p50/p99, swap p99, pooled TTFT
+//! and inter-token percentiles).
+//!
+//! ## Serving at scale (`serve::pool` + `serve::dispatch`)
+//!
+//! One packed model, N engines: because a task is only f32 scale/zero
+//! vectors, `PackedModel::clone` shares the bit-packed codes behind an
+//! `Arc` and deep-copies kilobytes — so an N-worker pool costs one
+//! model's DRAM plus N adapter-sized slots, the paper's deployment
+//! economics applied to horizontal scale-out:
+//!
+//! ```text
+//!                         ┌──────────────────────────────┐
+//!  clients ── submit ──▶  │ dispatch::Dispatcher         │
+//!           (bounded      │  per-task FIFO queues        │
+//!            per-task     │  deadline shedding           │
+//!            ingress)     │  task-affine handout         │
+//!                         └──────┬───────────┬───────────┘
+//!                                ▼           ▼
+//!                         worker 0 …   worker N−1     (serve::pool)
+//!                         Scheduler    Scheduler    ← per-worker s/z,
+//!                         Engine+KV    Engine+KV      KV, arena
+//!                                └─── Arc<[u8]> ───┘ ← ONE copy of the
+//!                                                      packed codes
+//! ```
+//!
+//! * **Admission control** (`serve::dispatch`): every task gets a
+//!   bounded ingress queue; a submit past the cap is rejected *at submit
+//!   time* with the typed `ServeError::Overloaded` (nothing queued,
+//!   nothing decoded), and requests that sat queued past a deadline are
+//!   shed with `ServeError::DeadlineExceeded` instead of burning decode
+//!   steps on an answer nobody awaits.
+//! * **Task-affine dispatch**: a worker sticks with its current task for
+//!   up to `affinity_burst` batches while older work of another task
+//!   waits — each such batch is a scale swap avoided (counted in
+//!   `ServeMetrics::swaps_avoided`) — then yields to the oldest waiting
+//!   head, so no task starves.
+//! * **Token streaming**: `PoolHandle::submit_stream` returns a bounded
+//!   channel fed one `StreamEvent::Token` per accepted token, then a
+//!   terminal `Done` carrying the full response. Streaming is an extra
+//!   send at the acceptance site, never a different decode: the tokens
+//!   are bitwise what the non-streaming `submit` returns, and a slow
+//!   consumer blocks only its own decode slot (backpressure by
+//!   construction of the bounded channel).
+//! * **Hot-reload**: `EnginePool::spawn_watching` polls the adapter
+//!   registry between bursts (rate-limited by `watch_interval_ms`); one
+//!   worker validates a new generation against its own scheduler, then
+//!   every other worker adopts it lock-free via a version counter.
+//!
+//! Greedy decode is batch-composition- and thread-count-invariant, so a
+//! pooled response is bitwise the single-scheduler response regardless
+//! of which worker served it (`tests/serve_pool.rs` pins 1/2/4 engines
+//! against a direct drain). `peqa serve --engines N` drives the pool;
+//! `--queue-cap`, `--deadline-ms`, `--affinity-burst`, `--stream` and
+//! `--watch-interval-ms` expose the knobs above.
 //!
 //! ## Training backends (`train`)
 //!
@@ -147,6 +201,19 @@
 //! | `PEQA_LOG` | Log level of [`util::log`] (`debug`/`info`/`warn`/`error`). |
 //! | `PEQA_SKIP_TREND` | `1` lets `scripts/ci.sh` pass without `python3` by skipping the bench trend diff (otherwise a missing interpreter fails CI loudly). |
 //! | `PEQA_SKIP_PYCHECK` | `1` skips the f64 numpy cross-check of the host backward (`python/checks/host_backward_check.py`) in `scripts/ci.sh`; it runs whenever `python3 -c "import numpy"` succeeds. |
+//!
+//! And the serving-scale knobs of `peqa serve` (CLI flags, same names as
+//! the `serve::PoolConfig` fields):
+//!
+//! | Flag | Effect |
+//! |---|---|
+//! | `--engines N` | N > 0 serves through the sharded `serve::pool` (N workers over one `Arc`-shared set of packed codes) instead of a single scheduler. |
+//! | `--queue-cap M` | Bounded per-task ingress: submits past M queued requests are rejected with the typed `ServeError::Overloaded` (0 = unbounded). |
+//! | `--deadline-ms D` | Requests queued longer than D ms are shed with `ServeError::DeadlineExceeded` at dispatch (0 = no deadline). |
+//! | `--affinity-burst B` | Batches a worker may stay on its current task while older other-task work waits, each one a scale swap avoided (0 = plain FIFO). |
+//! | `--stream` | Clients receive tokens over a per-request bounded channel as they are accepted; tokens stay bitwise identical to non-streaming. |
+//! | `--watch-interval-ms W` | Minimum gap between registry hot-reload polls, for the pool and the `--clients` server (0 = poll every burst). |
+//! | `--gc-keep K` | (`peqa finetune --publish`) after publishing, prune superseded registry generation files, keeping each task's K newest plus the live manifest's. |
 //!
 //! ## Feature `xla`
 //!

@@ -59,7 +59,7 @@ peqa — PEQA (NeurIPS 2023) reproduction CLI
                   [--save-model base.packed]
                   [--eval-tokens 8192] [--seed 7]
                   [--save-every N] [--resume] [--halt-after N]
-                  [--publish registry]
+                  [--publish registry] [--gc-keep K]
                   [--bits 4] [--group g] [--layers 2] [--d-model 64]
                   [--d-ff 192] [--vocab 512]
                   (no --model: synthesizes + RTN-quantizes a base model;
@@ -74,7 +74,10 @@ peqa — PEQA (NeurIPS 2023) reproduction CLI
                    finishes bitwise identical to an uninterrupted run;
                    --halt-after N exits after step N (simulated crash);
                    --publish DIR publishes the adapter(s) as one atomic
-                   generation servable by `peqa serve --registry DIR`)
+                   generation servable by `peqa serve --registry DIR`;
+                   --gc-keep K prunes superseded generation files after
+                   the publish, keeping each task's K newest plus
+                   whatever the live manifest references)
   peqa finetune   --backend xla --size n3 --method peqa_b4_gc
                   --dataset wikitext|ptb [--steps 150] [--lr 2e-3]
                   [--out path.peqa]                              [xla]
@@ -88,13 +91,26 @@ peqa — PEQA (NeurIPS 2023) reproduction CLI
                   [--topk 0] [--temp 0.8] [--window 256] [--seed 7]
                   [--bits 4] [--group g] [--layers 2] [--d-model 64]
                   [--d-ff 192] [--vocab 512] [--clients 0] [--strict]
+                  [--engines 0] [--queue-cap 64] [--deadline-ms 0]
+                  [--affinity-burst 4] [--stream]
+                  [--watch-interval-ms 0]
                   (--clients N > 0 serves the same load through the
                    threaded serve::server with N concurrent clients;
                    --strict rejects partial-coverage adapters at
                    registration instead of basing uncovered projections;
                    --registry serves the current published generation
                    and — with --clients N — hot-reloads newly published
-                   generations between request bursts without restart)
+                   generations between request bursts without restart;
+                   --engines N > 0 serves through the sharded engine
+                   pool instead: N workers share ONE set of packed codes
+                   and get batches task-affine from a work queue with
+                   bounded per-task ingress — submits past --queue-cap
+                   are rejected typed, requests queued past
+                   --deadline-ms are shed; --stream delivers each
+                   client's tokens over a per-token channel (bitwise
+                   identical to non-streaming); --watch-interval-ms
+                   rate-limits registry hot-reload polls for both the
+                   pool and the --clients server, 0 = every burst)
   peqa serve-demo --size n3 [--requests 16] [--full-reload]      [xla]
   peqa fsck       <artifact|dir> [...]
                   (verify checksums and print headers of .peqa /
@@ -231,6 +247,12 @@ fn run() -> Result<()> {
                 vocab: args.get_usize("vocab", 512)?,
                 clients: args.get_usize("clients", 0)?,
                 strict: args.flag("strict"),
+                engines: args.get_usize("engines", 0)?,
+                queue_cap: args.get_usize("queue-cap", 64)?,
+                deadline_ms: args.get_u64("deadline-ms", 0)?,
+                affinity_burst: args.get_usize("affinity-burst", 4)?,
+                stream: args.flag("stream"),
+                watch_interval_ms: args.get_u64("watch-interval-ms", 0)?,
             };
             args.finish()?;
             serve_host(opts)
@@ -343,6 +365,7 @@ fn finetune_host(mut args: peqa::cli::Args) -> Result<()> {
     let resume = args.flag("resume");
     let halt_after = args.get_usize("halt-after", 0)?;
     let publish = args.opt("publish");
+    let gc_keep_opt = args.opt("gc-keep");
     // Synth-model shape flags: meaningful only without --model (a loaded
     // .packed file fixes its own bits/grouping/geometry) — rejecting the
     // combination beats silently tuning a different config than asked.
@@ -379,6 +402,10 @@ fn finetune_host(mut args: peqa::cli::Args) -> Result<()> {
     let d_model = parse_num::<usize>(&d_model_opt, "d-model")?.unwrap_or(64);
     let d_ff = parse_num::<usize>(&d_ff_opt, "d-ff")?.unwrap_or(192);
     let vocab = parse_num::<usize>(&vocab_opt, "vocab")?.unwrap_or(512);
+    let gc_keep: Option<usize> = parse_num(&gc_keep_opt, "gc-keep")?;
+    if gc_keep.is_some() && publish.is_none() {
+        bail!("--gc-keep prunes the publish registry and needs --publish");
+    }
     if model_path.is_some() {
         let synth_flags = [
             ("bits", bits_opt.is_some()),
@@ -453,6 +480,7 @@ fn finetune_host(mut args: peqa::cli::Args) -> Result<()> {
             eval_tokens,
             halt_after,
             publish,
+            gc_keep,
             steps: steps_o,
             lr: lr_o,
             batch: batch_o,
@@ -513,6 +541,7 @@ fn finetune_host(mut args: peqa::cli::Args) -> Result<()> {
             seed,
             threads,
             publish,
+            gc_keep,
         });
     }
 
@@ -577,6 +606,7 @@ fn finetune_host(mut args: peqa::cli::Args) -> Result<()> {
         save_every,
         halt_after,
         publish,
+        gc_keep,
         eval_tokens,
         heads,
         batch,
@@ -606,6 +636,7 @@ struct SingleRun {
     save_every: usize,
     halt_after: usize,
     publish: Option<String>,
+    gc_keep: Option<usize>,
     eval_tokens: usize,
     heads: usize,
     batch: usize,
@@ -711,6 +742,13 @@ fn run_single_task(mut o: SingleRun) -> Result<()> {
              `peqa serve --registry {dir}` hot-reloads it",
             o.task
         );
+        if let Some(k) = o.gc_keep {
+            let pruned = reg.gc(k)?;
+            println!(
+                "registry gc: pruned {} superseded adapter file(s) (keep-last {k})",
+                pruned.len()
+            );
+        }
     }
     if let Some(p) = &o.save_model {
         println!(
@@ -732,6 +770,7 @@ struct ResumeOpts {
     eval_tokens: usize,
     halt_after: usize,
     publish: Option<String>,
+    gc_keep: Option<usize>,
     steps: Option<usize>,
     lr: Option<f64>,
     batch: Option<usize>,
@@ -873,6 +912,7 @@ fn finetune_host_resume(o: ResumeOpts) -> Result<()> {
         save_every: meta.save_every,
         halt_after: o.halt_after,
         publish: o.publish,
+        gc_keep: o.gc_keep,
         eval_tokens: o.eval_tokens,
         heads: meta.n_heads,
         batch: meta.batch,
@@ -899,6 +939,7 @@ struct FinetuneMultiOpts {
     seed: u64,
     threads: usize,
     publish: Option<String>,
+    gc_keep: Option<usize>,
 }
 
 /// Task corpus for multi-task tuning: named host datasets
@@ -1021,6 +1062,13 @@ fn finetune_host_multi(o: FinetuneMultiOpts) -> Result<()> {
             "published: {dir} generation {generation} ({n} task(s) in one atomic \
              generation) — a watching `peqa serve --registry {dir}` hot-reloads it"
         );
+        if let Some(k) = o.gc_keep {
+            let pruned = reg.gc(k)?;
+            println!(
+                "registry gc: pruned {} superseded adapter file(s) (keep-last {k})",
+                pruned.len()
+            );
+        }
     }
     if let Some(p) = &o.save_model {
         println!(
@@ -1201,6 +1249,12 @@ struct ServeOpts {
     vocab: usize,
     clients: usize,
     strict: bool,
+    engines: usize,
+    queue_cap: usize,
+    deadline_ms: u64,
+    affinity_burst: usize,
+    stream: bool,
+    watch_interval_ms: u64,
 }
 
 /// Host serving demo (no `xla` feature): decode a mixed multi-task
@@ -1216,7 +1270,8 @@ struct ServeOpts {
 fn serve_host(o: ServeOpts) -> Result<()> {
     use peqa::model::PackedModel;
     use peqa::serve::{
-        self, AdapterStore, Engine, ModelGeom, Sampling, Scheduler, SchedulerConfig, Server,
+        self, collect_stream, AdapterStore, Engine, EnginePool, ModelGeom, PoolConfig, Sampling,
+        Scheduler, SchedulerConfig, ServeError, Server,
     };
     use peqa::tokenizer::{Tokenizer, EOS};
 
@@ -1281,25 +1336,21 @@ fn serve_host(o: ServeOpts) -> Result<()> {
         bail!("no task adapters available");
     }
     let threads = peqa::util::num_threads();
-    let engine = Engine::from_packed(pm, geom, threads)?;
-    let packed_bytes = engine.packed_bytes();
+    let packed_bytes = pm.packed_bytes();
     let adapter_bytes = adapters.total_bytes();
     let sampling = if o.topk == 0 {
         Sampling::Greedy
     } else {
         Sampling::TopK { k: o.topk, temperature: o.temp as f32 }
     };
-    let mut sched = Scheduler::new(
-        engine,
-        adapters,
-        SchedulerConfig {
-            max_batch: o.batch.max(1),
-            window: o.window.max(1),
-            sampling,
-            seed: o.seed,
-            strict_coverage: o.strict,
-        },
-    )?;
+
+    let sched_cfg = SchedulerConfig {
+        max_batch: o.batch.max(1),
+        window: o.window.max(1),
+        sampling,
+        seed: o.seed,
+        strict_coverage: o.strict,
+    };
 
     // Text prompts need the byte-level id range; a served model with a
     // smaller vocab gets deterministic in-vocab token prompts instead.
@@ -1313,14 +1364,87 @@ fn serve_host(o: ServeOpts) -> Result<()> {
             .map(|_| (0..12).map(|_| rng.below(geom.vocab as u32)).collect())
             .collect()
     };
-    let (responses, m) = if o.clients > 0 {
+    let (responses, m) = if o.engines > 0 {
+        // Pool mode: N workers share the packed codes (Arc), each with
+        // its own scales/zeros + KV + arena, fed task-affine from the
+        // dispatcher's bounded per-task queues. Intra-op threads are
+        // split across workers so N engines do not oversubscribe.
+        let cfg = PoolConfig {
+            engines: o.engines,
+            max_batch: o.batch.max(1),
+            window: o.window.max(1),
+            sampling,
+            seed: o.seed,
+            strict_coverage: o.strict,
+            queue_cap: o.queue_cap,
+            deadline_ms: o.deadline_ms,
+            affinity_burst: o.affinity_burst,
+            watch_interval_ms: o.watch_interval_ms,
+        };
+        let per_engine = (threads / o.engines).max(1);
+        let pool = match registry {
+            Some(reg) => EnginePool::spawn_watching(pm, geom, per_engine, adapters, cfg, reg)?,
+            None => EnginePool::spawn(pm, geom, per_engine, adapters, cfg)?,
+        };
+        let mut responses = Vec::new();
+        let mut shed = 0usize;
+        std::thread::scope(|s| -> Result<()> {
+            let mut joins = Vec::new();
+            for c in 0..o.clients.max(1) {
+                let handle = pool.handle();
+                let (tasks, prompts) = (&tasks, &prompts);
+                let clients = o.clients.max(1);
+                joins.push(s.spawn(
+                    move || -> Result<(Vec<peqa::serve::GenResponse>, usize)> {
+                        let mut got = Vec::new();
+                        let mut shed = 0usize;
+                        for i in (c..o.requests).step_by(clients) {
+                            let task = &tasks[i % tasks.len()];
+                            let prompt = prompts[i % prompts.len()].clone();
+                            let r = if o.stream {
+                                handle
+                                    .submit_stream(task, prompt, o.max_new, EOS)
+                                    .and_then(|rx| collect_stream(&rx).map(|(_, done)| done))
+                            } else {
+                                handle.submit(task, prompt, o.max_new, EOS)
+                            };
+                            match r {
+                                Ok(resp) => got.push(resp),
+                                // Admission control rejecting under load
+                                // is the feature, not a failure.
+                                Err(
+                                    ServeError::Overloaded { .. }
+                                    | ServeError::DeadlineExceeded { .. },
+                                ) => shed += 1,
+                                Err(e) => bail!("pool request failed: {e}"),
+                            }
+                        }
+                        Ok((got, shed))
+                    },
+                ));
+            }
+            for j in joins {
+                let (got, s) = j.join().expect("client thread panicked")?;
+                responses.extend(got);
+                shed += s;
+            }
+            Ok(())
+        })?;
+        let m = pool.shutdown();
+        if shed > 0 {
+            println!("admission control shed {shed} request(s) at the client");
+        }
+        responses.sort_by_key(|r| r.id);
+        (responses, m)
+    } else if o.clients > 0 {
         // Concurrent-client mode: one worker thread owns the scheduler;
         // N clients submit over the server's mpsc channel and block on
         // their own replies. Bursts admitted together share prefill
         // GEMMs. In registry mode the worker also polls the manifest
         // between bursts and hot-reloads new generations.
+        let sched = Scheduler::new(Engine::from_packed(pm, geom, threads)?, adapters, sched_cfg)?;
         let server = match registry {
-            Some(reg) => Server::spawn_watching(sched, reg)?,
+            Some(reg) => Server::spawn_watching_interval(sched, reg, o.watch_interval_ms)?,
             None => Server::spawn(sched)?,
         };
         let mut responses = Vec::new();
@@ -1350,6 +1474,8 @@ fn serve_host(o: ServeOpts) -> Result<()> {
         responses.sort_by_key(|r| r.id);
         (responses, m)
     } else {
+        let mut sched =
+            Scheduler::new(Engine::from_packed(pm, geom, threads)?, adapters, sched_cfg)?;
         for i in 0..o.requests {
             let task = &tasks[i % tasks.len()];
             let prompt = prompts[i % prompts.len()].clone();
@@ -1383,12 +1509,31 @@ fn serve_host(o: ServeOpts) -> Result<()> {
         m.decode_steps,
         m.prefill_batches,
         m.prefill_tokens,
-        if o.clients > 0 {
+        if o.engines > 0 {
+            format!(
+                ", {} pooled engines, {} client(s){}",
+                o.engines,
+                o.clients.max(1),
+                if o.stream { ", streaming" } else { "" }
+            )
+        } else if o.clients > 0 {
             format!(", {} concurrent clients", o.clients)
         } else {
             String::new()
         },
     );
+    if o.engines > 0 {
+        println!(
+            "pool: TTFT p50 {:.4}s p99 {:.4}s | inter-token p99 {:.6}s | queue depth max {} | \
+             {} shed | {} swaps avoided (task-affine dispatch)",
+            m.p50_ttft_s(),
+            m.p99_ttft_s(),
+            m.p99_inter_token_s(),
+            m.queue_depth_max,
+            m.shed_count,
+            m.swaps_avoided,
+        );
+    }
     println!(
         "model: {} layers, d_model {}, {} heads, vocab {} | packed codes {} | adapters {} ({} tasks)",
         geom.n_layers,

@@ -178,6 +178,52 @@ pub fn proj_into(
     }
 }
 
+/// Shard `total` independent items (batch rows, sequences) into
+/// contiguous chunks of `total.div_ceil(workers)` and run one chunk per
+/// scoped worker thread — the ONE home of the sequence-sharding
+/// scaffolding that the serving attention pass, the trainer attention
+/// pass and its backward all drive (they used to carry three hand-rolled
+/// copies of the `mem::take` + `split_at_mut` remainder walk).
+///
+/// `carve(start, take)` runs sequentially on the calling thread and
+/// splits off the chunk's payload — typically a tuple of disjoint
+/// `&mut` sub-slices peeled off remainder slices the closure holds
+/// (`std::mem::take` + `split_at_mut`, which keeps the outer lifetime
+/// the scoped threads need). `run(start, take, payload)` executes the
+/// chunk: inline on the calling thread when `workers <= 1` (the hot
+/// single-worker path never spawns), on a scoped thread otherwise.
+///
+/// Chunk boundaries depend only on `(total, workers)` and payloads are
+/// disjoint, so any bitwise-determinism guarantee of the per-chunk body
+/// extends unchanged to every worker count — the invariance argument
+/// every caller's tests pin.
+pub fn shard_chunks<T, C, R>(total: usize, workers: usize, mut carve: C, run: R)
+where
+    T: Send,
+    C: FnMut(usize, usize) -> T,
+    R: Fn(usize, usize, T) + Sync,
+{
+    if total == 0 {
+        return;
+    }
+    if workers <= 1 {
+        let payload = carve(0, total);
+        run(0, total, payload);
+        return;
+    }
+    let per = total.div_ceil(workers);
+    std::thread::scope(|s| {
+        let run = &run;
+        let mut start = 0usize;
+        while start < total {
+            let take = per.min(total - start);
+            let payload = carve(start, take);
+            s.spawn(move || run(start, take, payload));
+            start += take;
+        }
+    });
+}
+
 // ---------------------------------------------------------------- norms
 
 /// RMSNorm over `b` rows of width `d` into a scratch-backed output slab:

@@ -46,6 +46,8 @@
 //! parity baseline for the tests and the "before" column of
 //! `BENCH_kernels.json` (benches/kernels_micro.rs).
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use super::pack;
@@ -54,9 +56,16 @@ use crate::tensor::Tensor;
 
 /// A weight matrix held as bit-packed integer codes plus per-(row, group)
 /// f32 scales and zero-points. See the module docs for the byte layout.
+///
+/// The packed code bytes live behind an [`Arc`] and are **immutable for
+/// the life of the matrix** — `Clone` shares them by reference and
+/// deep-copies only the f32 scale/zero tensors. That is exactly the PEQA
+/// deployment memory model: N serving engines built from clones of one
+/// model share a single copy of the integer codes, and all per-engine
+/// mutable state (task adapters) is kilobytes of scales/zeros.
 #[derive(Clone, Debug)]
 pub struct PackedMatrix {
-    packed: Vec<u8>,
+    packed: Arc<[u8]>,
     row_stride: usize,
     pub scales: Tensor, // (rows, n_groups)
     pub zeros: Tensor,  // (rows, n_groups)
@@ -76,7 +85,7 @@ impl PackedMatrix {
             packed.extend_from_slice(&pack::pack_codes(row, q.bits));
         }
         PackedMatrix {
-            packed,
+            packed: packed.into(),
             row_stride,
             scales: q.scales.clone(),
             zeros: q.zeros.clone(),
@@ -128,7 +137,7 @@ impl PackedMatrix {
             }
             p
         };
-        Ok(PackedMatrix { packed, row_stride, scales, zeros, rows, cols, bits, group })
+        Ok(PackedMatrix { packed: packed.into(), row_stride, scales, zeros, rows, cols, bits, group })
     }
 
     /// Expand back to the unpacked representation (tooling/tests; the
@@ -156,6 +165,13 @@ impl PackedMatrix {
     /// Bytes of packed code storage (the "Model Size" contribution).
     pub fn packed_bytes(&self) -> usize {
         self.packed.len()
+    }
+
+    /// Whether `self` and `other` share one physical copy of the packed
+    /// codes (true for clones of one matrix — the engine-pool memory
+    /// contract: N engines, one code buffer).
+    pub fn codes_shared_with(&self, other: &PackedMatrix) -> bool {
+        Arc::ptr_eq(&self.packed, &other.packed)
     }
 
     #[inline]
@@ -1031,6 +1047,28 @@ mod tests {
         }
         // Shape mismatch is rejected, not silently mis-indexed.
         assert!(pm.dequantize_with(&Tensor::zeros(&[8, 2]), &pm.zeros).is_err());
+    }
+
+    #[test]
+    fn clone_shares_codes_but_owns_scales() {
+        // The engine-pool memory contract: cloning a packed matrix must
+        // share the one physical copy of the integer codes (Arc) while
+        // giving the clone its own scale/zero tensors to swap per task.
+        let (x, pm) = setup(4, 32, 2, 4, Some(16), 23);
+        let mut c = pm.clone();
+        assert!(pm.codes_shared_with(&c));
+        for v in c.scales.data_mut() {
+            *v *= 1.5;
+        }
+        // The original's scales (and its outputs) are untouched…
+        let y0 = pm.matmul_t(&x).unwrap();
+        let y1 = c.matmul_t(&x).unwrap();
+        assert!(y0.max_abs_diff(&y1) > 0.0, "clone's scale edit must not alias the original");
+        // …and the codes are still byte-identical (same buffer).
+        assert_eq!(pm.to_quantized().unwrap().codes, c.to_quantized().unwrap().codes);
+        // An independently built matrix does not share codes.
+        let (_, other) = setup(4, 32, 2, 4, Some(16), 23);
+        assert!(!pm.codes_shared_with(&other));
     }
 
     #[test]

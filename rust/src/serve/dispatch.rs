@@ -1,0 +1,407 @@
+//! Work-queue dispatcher for the engine pool: bounded per-task ingress
+//! queues with typed backpressure, deadline-based load shedding, and
+//! task-affine batch handout.
+//!
+//! The dispatcher is the admission-control half of [`super::pool`]: it
+//! owns everything that happens to a request *before* an engine sees it.
+//! Workers call [`Dispatcher::next_batch`] in a loop; clients call
+//! [`Dispatcher::submit`] from any thread.
+//!
+//! Policy, in dequeue order:
+//!
+//! 1. **Backpressure at submit.** Each task has a bounded FIFO queue
+//!    (`queue_cap`); a submit that finds the task's queue full is
+//!    rejected immediately with [`ServeError::Overloaded`] — it never
+//!    queues, nothing is decoded, and the client is told the depth it
+//!    hit. The bound is per task so one flooded task cannot starve the
+//!    admission of others.
+//! 2. **Deadline shedding at dispatch.** If `deadline_ms > 0`, requests
+//!    that sat queued past the deadline are dropped when a worker next
+//!    asks for work, each replied with [`ServeError::DeadlineExceeded`]
+//!    — decode steps are never spent on an answer nobody is still
+//!    waiting for. Per-queue FIFO order means expiry is checked at the
+//!    queue heads only (the head is always the oldest).
+//! 3. **Task-affine pick.** A PEQA task switch is cheap (a kilobyte
+//!    scale swap) but not free; the dispatcher keeps a worker on its
+//!    current task while that task has queued work, up to
+//!    `affinity_burst` consecutive batches taken while an *older*
+//!    request of another task waits (each such batch increments
+//!    [`ServeMetrics::swaps_avoided`] — it is a swap the policy dodged).
+//!    When the burst is spent, or the worker's task has no work, the
+//!    pick falls back to the task whose queue head arrived earliest
+//!    (global FIFO), which resets the burst. Staying on the current
+//!    task while *no* other task waits costs nothing and accrues no
+//!    burst debt.
+//!
+//! Shutdown is drain-then-exit: [`Dispatcher::close`] stops new
+//! submits, but `next_batch` keeps handing out queued work until the
+//! queues are empty and only then returns `None`.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::SyncSender;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use super::types::{ServeError, ServeMetrics, StreamEvent};
+
+/// Admission-control knobs of the engine pool.
+#[derive(Clone, Copy, Debug)]
+pub struct DispatchConfig {
+    /// Per-task ingress queue bound; a submit past it is rejected with
+    /// [`ServeError::Overloaded`]. `0` means unbounded.
+    pub queue_cap: usize,
+    /// Requests queued longer than this are shed at dispatch with
+    /// [`ServeError::DeadlineExceeded`]. `0` disables shedding.
+    pub deadline_ms: u64,
+    /// Max consecutive batches a worker stays on its current task while
+    /// an older request of another task waits. `0` is plain global
+    /// FIFO (every cross-task arrival forces a swap).
+    pub affinity_burst: usize,
+}
+
+impl Default for DispatchConfig {
+    fn default() -> Self {
+        DispatchConfig { queue_cap: 64, deadline_ms: 0, affinity_burst: 4 }
+    }
+}
+
+/// One admitted pool request, handed from the dispatcher to a worker.
+pub struct PoolRequest {
+    /// Pool-wide monotonic id (assigned at submit, in arrival order —
+    /// the FIFO key).
+    pub id: u64,
+    pub task: String,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    pub stop: u32,
+    /// When the request entered the ingress queue; workers thread this
+    /// through [`Scheduler::submit_queued_at`](super::scheduler::Scheduler::submit_queued_at)
+    /// so TTFT and latency cover dispatcher wait.
+    pub submitted: Instant,
+    /// Reply channel: [`StreamEvent::Token`]s while decoding (streaming
+    /// requests only), then exactly one terminal
+    /// [`StreamEvent::Done`] / [`StreamEvent::Error`].
+    pub reply: SyncSender<StreamEvent>,
+    /// Whether the decode loop should stream accepted tokens into
+    /// `reply` (non-streaming submits only want the terminal event).
+    pub stream: bool,
+}
+
+struct State {
+    /// Per-task FIFO queues; `PoolRequest::id` preserves global arrival
+    /// order across them.
+    queues: HashMap<String, VecDeque<PoolRequest>>,
+    /// Total queued across all tasks.
+    queued: usize,
+    next_id: u64,
+    open: bool,
+    queue_depth_max: usize,
+    shed_count: usize,
+    swaps_avoided: usize,
+}
+
+/// Shared work queue: `Mutex<State>` + condvar. Cheap to share — one
+/// per pool, touched only at request granularity (never per token).
+pub struct Dispatcher {
+    cfg: DispatchConfig,
+    state: Mutex<State>,
+    ready: Condvar,
+}
+
+impl Dispatcher {
+    pub fn new(cfg: DispatchConfig) -> Dispatcher {
+        Dispatcher {
+            cfg,
+            state: Mutex::new(State {
+                queues: HashMap::new(),
+                queued: 0,
+                next_id: 1,
+                open: true,
+                queue_depth_max: 0,
+                shed_count: 0,
+                swaps_avoided: 0,
+            }),
+            ready: Condvar::new(),
+        }
+    }
+
+    pub fn config(&self) -> &DispatchConfig {
+        &self.cfg
+    }
+
+    /// Enqueue a request, or reject it right here: `Overloaded` when the
+    /// task's bounded queue is full, `Failed` after [`Self::close`].
+    /// Rejected requests never queue and never touch an engine.
+    pub fn submit(
+        &self,
+        task: &str,
+        prompt: Vec<u32>,
+        max_new: usize,
+        stop: u32,
+        reply: SyncSender<StreamEvent>,
+        stream: bool,
+    ) -> Result<u64, ServeError> {
+        let mut st = self.state.lock().unwrap();
+        if !st.open {
+            return Err(ServeError::Failed("engine pool is shut down".into()));
+        }
+        let depth = st.queues.get(task).map_or(0, VecDeque::len);
+        if self.cfg.queue_cap > 0 && depth >= self.cfg.queue_cap {
+            st.shed_count += 1;
+            return Err(ServeError::Overloaded {
+                task: task.to_string(),
+                depth,
+                cap: self.cfg.queue_cap,
+            });
+        }
+        let id = st.next_id;
+        st.next_id += 1;
+        st.queues.entry(task.to_string()).or_default().push_back(PoolRequest {
+            id,
+            task: task.to_string(),
+            prompt,
+            max_new,
+            stop,
+            submitted: Instant::now(),
+            reply,
+            stream,
+        });
+        st.queued += 1;
+        st.queue_depth_max = st.queue_depth_max.max(st.queued);
+        drop(st);
+        self.ready.notify_one();
+        Ok(id)
+    }
+
+    /// Block until work is available (or the dispatcher is closed and
+    /// drained — then `None`), shed expired requests, and hand out up to
+    /// `max_batch` requests of one task.
+    ///
+    /// `current_task` is the task the calling worker's engine currently
+    /// has applied; `affinity_run` is that worker's consecutive-batch
+    /// counter, owned by the worker and threaded back in unchanged so
+    /// the dispatcher stays stateless about workers.
+    pub fn next_batch(
+        &self,
+        current_task: Option<&str>,
+        affinity_run: &mut usize,
+        max_batch: usize,
+    ) -> Option<(String, Vec<PoolRequest>)> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            self.shed_expired(&mut st);
+            if st.queued > 0 {
+                break;
+            }
+            if !st.open {
+                return None;
+            }
+            st = self.ready.wait(st).unwrap();
+        }
+        // Global FIFO head: the task whose front request arrived first.
+        let oldest = st
+            .queues
+            .iter()
+            .filter_map(|(t, q)| q.front().map(|r| (r.id, t.clone())))
+            .min_by_key(|(id, _)| *id)
+            .expect("queued > 0 implies a non-empty queue");
+        let pick = match current_task {
+            Some(cur) if st.queues.get(cur).is_some_and(|q| !q.is_empty()) => {
+                if oldest.1 == cur {
+                    // Current task IS the FIFO head — plain FIFO pick,
+                    // no one is being kept waiting, burst debt resets.
+                    *affinity_run = 0;
+                    cur.to_string()
+                } else if *affinity_run < self.cfg.affinity_burst {
+                    // Affinity: stick with the applied task although an
+                    // older other-task request waits — one scale swap
+                    // avoided, one unit of burst debt accrued.
+                    *affinity_run += 1;
+                    st.swaps_avoided += 1;
+                    cur.to_string()
+                } else {
+                    // Burst spent: fairness wins, switch to the oldest.
+                    *affinity_run = 0;
+                    oldest.1
+                }
+            }
+            _ => {
+                *affinity_run = 0;
+                oldest.1
+            }
+        };
+        let q = st.queues.get_mut(&pick).expect("picked task has queued work");
+        let n = max_batch.max(1).min(q.len());
+        let batch: Vec<PoolRequest> = q.drain(..n).collect();
+        st.queued -= n;
+        Some((pick, batch))
+    }
+
+    /// Drop queue-head requests older than the deadline, replying
+    /// `DeadlineExceeded` to each. FIFO per queue means heads are the
+    /// oldest — once a head is fresh, the rest of that queue is too.
+    fn shed_expired(&self, st: &mut State) {
+        if self.cfg.deadline_ms == 0 {
+            return;
+        }
+        let State { queues, queued, shed_count, .. } = st;
+        for q in queues.values_mut() {
+            while let Some(head) = q.front() {
+                let waited_ms = head.submitted.elapsed().as_millis() as u64;
+                if waited_ms <= self.cfg.deadline_ms {
+                    break;
+                }
+                let r = q.pop_front().expect("front was Some");
+                *queued -= 1;
+                *shed_count += 1;
+                // Dropped receiver = client gone; nothing to tell them.
+                let _ = r.reply.send(StreamEvent::Error(ServeError::DeadlineExceeded {
+                    task: r.task,
+                    waited_ms,
+                    deadline_ms: self.cfg.deadline_ms,
+                }));
+            }
+        }
+    }
+
+    /// Stop accepting submits and wake every worker. Queued work still
+    /// drains: workers keep getting batches until the queues are empty,
+    /// then [`Self::next_batch`] returns `None` and they exit.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.open = false;
+        drop(st);
+        self.ready.notify_all();
+    }
+
+    /// Total requests queued (not yet handed to a worker).
+    pub fn pending(&self) -> usize {
+        self.state.lock().unwrap().queued
+    }
+
+    /// Snapshot of the admission counters as a [`ServeMetrics`] block —
+    /// only the dispatcher-owned fields are set, ready to be
+    /// [`ServeMetrics::merge`]d with the per-worker scheduler metrics.
+    pub fn admission_metrics(&self) -> ServeMetrics {
+        let st = self.state.lock().unwrap();
+        ServeMetrics {
+            queue_depth_max: st.queue_depth_max,
+            shed_count: st.shed_count,
+            swaps_avoided: st.swaps_avoided,
+            ..ServeMetrics::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::{sync_channel, Receiver};
+    use std::time::Duration;
+
+    fn chan() -> (SyncSender<StreamEvent>, Receiver<StreamEvent>) {
+        sync_channel(8)
+    }
+
+    #[test]
+    fn bounded_ingress_rejects_past_cap_with_typed_error() {
+        let d = Dispatcher::new(DispatchConfig { queue_cap: 2, deadline_ms: 0, affinity_burst: 4 });
+        let (tx, _rx) = chan();
+        d.submit("a", vec![1], 4, u32::MAX, tx.clone(), false).unwrap();
+        d.submit("a", vec![2], 4, u32::MAX, tx.clone(), false).unwrap();
+        let err = d.submit("a", vec![3], 4, u32::MAX, tx.clone(), false).unwrap_err();
+        assert_eq!(err, ServeError::Overloaded { task: "a".into(), depth: 2, cap: 2 });
+        // The bound is per task: another task still admits.
+        d.submit("b", vec![4], 4, u32::MAX, tx, false).unwrap();
+        let m = d.admission_metrics();
+        assert_eq!(m.shed_count, 1);
+        assert_eq!(m.queue_depth_max, 3, "rejected request never counted as queued");
+        assert_eq!(d.pending(), 3);
+    }
+
+    #[test]
+    fn deadline_shed_drops_stale_requests_with_typed_reply() {
+        let d =
+            Dispatcher::new(DispatchConfig { queue_cap: 0, deadline_ms: 25, affinity_burst: 0 });
+        let (tx_old, rx_old) = chan();
+        d.submit("a", vec![1], 4, u32::MAX, tx_old, false).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        let (tx_new, _rx_new) = chan();
+        d.submit("a", vec![2], 4, u32::MAX, tx_new, false).unwrap();
+        let mut run = 0;
+        let (task, batch) = d.next_batch(None, &mut run, 8).unwrap();
+        assert_eq!(task, "a");
+        assert_eq!(batch.len(), 1, "stale request shed, fresh one dispatched");
+        assert_eq!(batch[0].prompt, vec![2]);
+        match rx_old.try_recv().unwrap() {
+            StreamEvent::Error(ServeError::DeadlineExceeded { waited_ms, deadline_ms, task }) => {
+                assert_eq!(task, "a");
+                assert_eq!(deadline_ms, 25);
+                assert!(waited_ms > deadline_ms, "{waited_ms} <= {deadline_ms}");
+            }
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        assert_eq!(d.admission_metrics().shed_count, 1);
+        assert_eq!(d.pending(), 0);
+    }
+
+    #[test]
+    fn affinity_sticks_within_burst_then_yields_to_older_task() {
+        let d =
+            Dispatcher::new(DispatchConfig { queue_cap: 0, deadline_ms: 0, affinity_burst: 2 });
+        let (tx, _rx) = chan();
+        for (task, p) in [("a", 1), ("b", 2), ("a", 3), ("a", 4), ("a", 5), ("b", 6)] {
+            d.submit(task, vec![p], 1, u32::MAX, tx.clone(), false).unwrap();
+        }
+        let mut run = 0usize;
+        let mut cur: Option<String> = None;
+        let mut order: Vec<(String, u32)> = Vec::new();
+        for _ in 0..6 {
+            let (task, batch) = d.next_batch(cur.as_deref(), &mut run, 1).unwrap();
+            assert_eq!(batch.len(), 1);
+            order.push((task.clone(), batch[0].prompt[0]));
+            cur = Some(task);
+        }
+        // FIFO would serve a,b,a,a,a,b (3 swaps after the first apply);
+        // affinity serves a,a,a,b,b,a (2 swaps), yielding to the older
+        // task "b" exactly when the 2-batch burst is spent, and never
+        // reordering within a task.
+        let want: Vec<(String, u32)> = [("a", 1), ("a", 3), ("a", 4), ("b", 2), ("b", 6), ("a", 5)]
+            .iter()
+            .map(|(t, p)| (t.to_string(), *p))
+            .collect();
+        assert_eq!(order, want);
+        assert_eq!(d.admission_metrics().swaps_avoided, 3);
+        assert_eq!(d.pending(), 0);
+    }
+
+    #[test]
+    fn close_drains_queued_work_then_returns_none() {
+        let d = Dispatcher::new(DispatchConfig::default());
+        let (tx, _rx) = chan();
+        d.submit("a", vec![1], 1, u32::MAX, tx.clone(), false).unwrap();
+        d.submit("b", vec![2], 1, u32::MAX, tx.clone(), false).unwrap();
+        d.close();
+        let mut run = 0;
+        assert!(d.next_batch(None, &mut run, 1).is_some());
+        assert!(d.next_batch(None, &mut run, 1).is_some());
+        assert!(d.next_batch(None, &mut run, 1).is_none(), "drained + closed = exit");
+        let err = d.submit("a", vec![3], 1, u32::MAX, tx, false).unwrap_err();
+        assert!(matches!(err, ServeError::Failed(_)), "{err}");
+    }
+
+    #[test]
+    fn next_batch_blocks_until_work_arrives() {
+        let d = std::sync::Arc::new(Dispatcher::new(DispatchConfig::default()));
+        let d2 = d.clone();
+        let (tx, _rx) = chan();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            d2.submit("a", vec![7], 1, u32::MAX, tx, false).unwrap();
+        });
+        let mut run = 0;
+        let (task, batch) = d.next_batch(None, &mut run, 4).unwrap();
+        assert_eq!(task, "a");
+        assert_eq!(batch[0].prompt, vec![7]);
+    }
+}

@@ -610,23 +610,10 @@ impl Engine {
             if scratch.attn.len() < workers {
                 scratch.attn.resize_with(workers, AttnScratch::default);
             }
-            let per = n_seqs.div_ceil(workers);
-            if workers == 1 {
-                attend_seq_chunk(
-                    freqs,
-                    hh,
-                    hd,
-                    d,
-                    layer,
-                    seqs,
-                    caches,
-                    &mut scratch.q[..m * d],
-                    &mut scratch.k[..m * d],
-                    &scratch.v[..m * d],
-                    &mut scratch.ctx[..m * d],
-                    &mut scratch.attn[0],
-                );
-            } else {
+            {
+                // Each carve peels the chunk's sequences plus their
+                // (ragged) activation row slabs off the remainders; every
+                // chunk runs exactly the single-worker code per sequence.
                 let mut seqs_rem: &[&[u32]] = seqs;
                 let mut caches_rem: &mut [&mut KvCache] = &mut *caches;
                 let mut q_rem: &mut [f32] = &mut scratch.q[..m * d];
@@ -635,15 +622,13 @@ impl Engine {
                 let v_all: &[f32] = &scratch.v[..m * d];
                 let mut attn_rem: &mut [AttnScratch] = &mut scratch.attn[..workers];
                 let mut row0 = 0usize;
-                std::thread::scope(|s| {
-                    while !seqs_rem.is_empty() {
-                        let take = per.min(seqs_rem.len());
+                blocks::shard_chunks(
+                    n_seqs,
+                    workers,
+                    |_, take| {
                         let rows: usize = seqs_rem[..take].iter().map(|s| s.len()).sum();
                         let (seq_c, sr) = seqs_rem.split_at(take);
                         seqs_rem = sr;
-                        // mem::take moves each remainder slice out so the
-                        // split halves keep the outer lifetime the scoped
-                        // threads need (a plain reborrow would not).
                         let (cache_c, cr) =
                             std::mem::take(&mut caches_rem).split_at_mut(take);
                         caches_rem = cr;
@@ -657,24 +642,25 @@ impl Engine {
                         attn_rem = ar;
                         let v_c = &v_all[row0 * d..(row0 + rows) * d];
                         row0 += rows;
-                        s.spawn(move || {
-                            attend_seq_chunk(
-                                freqs,
-                                hh,
-                                hd,
-                                d,
-                                layer,
-                                seq_c,
-                                cache_c,
-                                q_c,
-                                k_c,
-                                v_c,
-                                ctx_c,
-                                &mut attn_c[0],
-                            );
-                        });
-                    }
-                });
+                        (seq_c, cache_c, q_c, k_c, v_c, ctx_c, attn_c)
+                    },
+                    |_, _, (seq_c, cache_c, q_c, k_c, v_c, ctx_c, attn_c)| {
+                        attend_seq_chunk(
+                            freqs,
+                            hh,
+                            hd,
+                            d,
+                            layer,
+                            seq_c,
+                            cache_c,
+                            q_c,
+                            k_c,
+                            v_c,
+                            ctx_c,
+                            &mut attn_c[0],
+                        );
+                    },
+                );
             }
             // Attention output + residual, then the SwiGLU MLP + residual.
             proj_into(model, threads, &ln.o, &scratch.ctx[..m * d], &scratch.spans, &mut scratch.o, &mut scratch.proj)?;

@@ -30,7 +30,16 @@
 //!   `ServeMetrics::swap_times_s`.
 //! * [`server`] — the concurrent-client wrapper: one worker thread owns
 //!   the [`Scheduler`], clients submit/await over an mpsc channel
-//!   (bursts of concurrent requests become one batched drain).
+//!   (bursts of concurrent requests become one batched drain), with
+//!   optional token streaming ([`ServerHandle::submit_stream`]).
+//! * [`dispatch`] — the pool's admission control: bounded per-task
+//!   ingress queues (typed [`ServeError::Overloaded`] backpressure),
+//!   deadline shedding, task-affine batch handout.
+//! * [`pool`] — the sharded engine pool: N workers, each a full
+//!   [`Scheduler`] over a clone of the packed model (codes shared via
+//!   `Arc`, scales/zeros + KV + arena per worker), fed by one
+//!   [`dispatch::Dispatcher`]; token streaming and registry hot-reload
+//!   included. `peqa serve --engines N` routes here.
 //!
 //! ## Scale-swap contract
 //!
@@ -54,19 +63,26 @@
 //! [`server`]), `benches/serve_decode.rs` (writes BENCH_serve.json),
 //! `tests/serve_host.rs` (decode parity + determinism + concurrency).
 
+pub mod dispatch;
 pub mod engine;
 pub mod kvcache;
+pub mod pool;
 pub mod scheduler;
 pub mod server;
 pub mod types;
 
+pub use dispatch::{DispatchConfig, Dispatcher};
 pub use engine::{
     argmax, reference_forward, reference_forward_windowed, sample, Engine, ModelGeom, Sampling,
 };
 pub use kvcache::KvCache;
+pub use pool::{EnginePool, PoolConfig, PoolHandle, STREAM_CHANNEL_CAP};
 pub use scheduler::{Scheduler, SchedulerConfig};
 pub use server::{Server, ServerHandle};
-pub use types::{AdapterStore, BatcherConfig, GenRequest, GenResponse, ServeMetrics};
+pub use types::{
+    collect_stream, AdapterStore, BatcherConfig, GenRequest, GenResponse, ServeError,
+    ServeMetrics, StreamEvent,
+};
 
 use anyhow::Result;
 

@@ -37,13 +37,16 @@
 //!   scheduler seed but its draw order depends on batch composition.
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::SyncSender;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use super::engine::{sample, Engine, Sampling};
 use super::kvcache::KvCache;
-use super::types::{AdapterStore, BatcherConfig, GenRequest, GenResponse, ServeMetrics};
+use super::types::{
+    AdapterStore, BatcherConfig, GenRequest, GenResponse, ServeMetrics, StreamEvent,
+};
 use crate::util::Pcg32;
 
 /// Scheduler knobs beyond the shared [`BatcherConfig`].
@@ -84,12 +87,19 @@ struct Slot {
     /// The token to feed at the next decode step (last sampled).
     next_token: u32,
     out: Vec<u32>,
+    /// Streaming reply channel: every accepted token is sent the moment
+    /// the decode loop accepts it (the stop id is never sent — it never
+    /// reaches `out` either). `None` for non-streaming requests.
+    sink: Option<SyncSender<StreamEvent>>,
+    /// When the previous token was accepted (TTFT / inter-token gaps).
+    last_accept: Option<Instant>,
 }
 
 /// One queued request. Arrival order is the (monotonic) `req.id`.
 struct Queued {
     req: GenRequest,
     submitted: Instant,
+    sink: Option<SyncSender<StreamEvent>>,
 }
 
 /// Multi-task serving loop: indexed queue + scale-swap + continuous
@@ -185,13 +195,50 @@ impl Scheduler {
     }
 
     pub fn submit(&mut self, task: &str, prompt: Vec<u32>, max_new: usize, stop: u32) -> u64 {
+        self.submit_streaming(task, prompt, max_new, stop, None)
+    }
+
+    /// [`Self::submit`] with an optional streaming sink: every token the
+    /// decode loop accepts for this request is also sent as
+    /// [`StreamEvent::Token`] the moment it is accepted. The generated
+    /// tokens are bitwise identical to a sink-less submit — streaming is
+    /// an extra send at the acceptance site, never a different decode.
+    /// A full sink blocks the decode loop (bounded-channel backpressure:
+    /// a client that stops draining stalls its own batch); a dropped
+    /// sink is ignored and generation completes normally.
+    pub fn submit_streaming(
+        &mut self,
+        task: &str,
+        prompt: Vec<u32>,
+        max_new: usize,
+        stop: u32,
+        sink: Option<SyncSender<StreamEvent>>,
+    ) -> u64 {
+        self.submit_queued_at(task, prompt, max_new, stop, sink, Instant::now())
+    }
+
+    /// [`Self::submit_streaming`] with an explicit submission instant.
+    /// The engine pool passes the moment the request entered its ingress
+    /// queue, so `queue_s`, `latency_s` and TTFT cover dispatcher wait
+    /// time too — not just the slice spent inside this scheduler.
+    pub fn submit_queued_at(
+        &mut self,
+        task: &str,
+        prompt: Vec<u32>,
+        max_new: usize,
+        stop: u32,
+        sink: Option<SyncSender<StreamEvent>>,
+        submitted: Instant,
+    ) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
         self.queues.entry(task.to_string()).or_default().push_back(Queued {
             req: GenRequest { id, task: task.to_string(), prompt, max_new, stop },
-            submitted: Instant::now(),
+            submitted,
+            sink,
         });
         self.queued += 1;
+        self.metrics.queue_depth_max = self.metrics.queue_depth_max.max(self.queued);
         id
     }
 
@@ -257,7 +304,7 @@ impl Scheduler {
                             // Stop id never reaches the output tokens.
                             done = true;
                         } else {
-                            slot.out.push(next);
+                            accept_token(slot, next, &mut self.metrics);
                             slot.next_token = next;
                             if slot.out.len() >= slot.req.max_new {
                                 done = true;
@@ -294,8 +341,9 @@ impl Scheduler {
             let cap = self.cfg.max_batch.max(1);
             // Staff every free slot from the per-task queue: O(1) pops
             // instead of an O(queue) scan per freed slot.
-            let mut pending: Vec<(GenRequest, Instant, Instant)> = Vec::new();
+            let mut pending: Vec<Queued> = Vec::new();
             let mut caches: Vec<KvCache> = Vec::new();
+            let mut starts: Vec<Instant> = Vec::new();
             while active.len() + pending.len() < cap {
                 let Some(q) = self.queues.get_mut(task).and_then(VecDeque::pop_front) else {
                     break;
@@ -314,7 +362,8 @@ impl Scheduler {
                     .get_mut(&window)
                     .and_then(Vec::pop)
                     .unwrap_or_else(|| self.engine.new_cache(window));
-                pending.push((q.req, q.submitted, started));
+                pending.push(q);
+                starts.push(started);
                 caches.push(cache);
             }
             if pending.is_empty() {
@@ -325,26 +374,34 @@ impl Scheduler {
             // would produce, so grouping never changes generations.
             let logits = {
                 let prompts: Vec<&[u32]> =
-                    pending.iter().map(|(r, _, _)| r.prompt.as_slice()).collect();
+                    pending.iter().map(|q| q.req.prompt.as_slice()).collect();
                 let mut cache_refs: Vec<&mut KvCache> = caches.iter_mut().collect();
                 self.engine.prefill_batch(&prompts, &mut cache_refs)?
             };
             self.metrics.prefill_batches += 1;
             self.metrics.prefill_tokens +=
-                pending.iter().map(|(r, _, _)| r.prompt.len()).sum::<usize>();
+                pending.iter().map(|q| q.req.prompt.len()).sum::<usize>();
             let vocab = self.engine.geom().vocab;
-            for (i, ((req, submitted, started), cache)) in
-                pending.into_iter().zip(caches).enumerate()
+            for (i, ((q, started), cache)) in
+                pending.into_iter().zip(starts).zip(caches).enumerate()
             {
                 let first =
                     sample(&logits[i * vocab..(i + 1) * vocab], self.cfg.sampling, &mut self.rng);
-                let mut slot =
-                    Slot { req, submitted, started, cache, next_token: first, out: Vec::new() };
+                let mut slot = Slot {
+                    req: q.req,
+                    submitted: q.submitted,
+                    started,
+                    cache,
+                    next_token: first,
+                    out: Vec::new(),
+                    sink: q.sink,
+                    last_accept: None,
+                };
                 if first == slot.req.stop {
                     responses.push(self.finish_slot(slot));
                     continue;
                 }
-                slot.out.push(first);
+                accept_token(&mut slot, first, &mut self.metrics);
                 if slot.out.len() >= slot.req.max_new {
                     responses.push(self.finish_slot(slot));
                     continue;
@@ -383,6 +440,28 @@ impl Scheduler {
     }
 }
 
+/// Accept one generated token into a slot: record TTFT (first accepted
+/// token, measured from submit) or the inter-token gap, append it to
+/// the output, and feed the streaming sink if the request has one.
+/// Metrics and the sink send are pure observers — the token path is
+/// identical with or without them, which is what keeps streamed and
+/// non-streamed generations bitwise equal.
+fn accept_token(slot: &mut Slot, tok: u32, metrics: &mut ServeMetrics) {
+    let now = Instant::now();
+    match slot.last_accept {
+        None => metrics.ttft_s.push(now.duration_since(slot.submitted).as_secs_f64()),
+        Some(prev) => metrics.inter_token_s.push(now.duration_since(prev).as_secs_f64()),
+    }
+    slot.last_accept = Some(now);
+    slot.out.push(tok);
+    if let Some(sink) = &slot.sink {
+        // A dropped receiver (client went away) is not an error — the
+        // request still completes; a full bounded channel blocks here,
+        // so a client that stops draining backpressures its own batch.
+        let _ = sink.send(StreamEvent::Token(tok));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -417,6 +496,32 @@ mod tests {
         // Every prefill pass covered multiple same-task prompts at once.
         assert!(sched.metrics.prefill_batches <= 3, "{}", sched.metrics.prefill_batches);
         assert_eq!(sched.metrics.prefill_tokens, 9 * 3);
+        // Latency instrumentation: one TTFT sample per request, one
+        // inter-token gap per accepted token after the first.
+        assert_eq!(sched.metrics.ttft_s.len(), 9);
+        assert_eq!(sched.metrics.inter_token_s.len(), 9 * 4);
+        assert_eq!(sched.metrics.queue_depth_max, 9);
+        assert_eq!(sched.metrics.shed_count, 0);
+    }
+
+    #[test]
+    fn streaming_sink_receives_exactly_the_response_tokens() {
+        let (engine, adapters) = tiny();
+        let mut sched = Scheduler::new(engine, adapters, SchedulerConfig::default()).unwrap();
+        let (tx, rx) = std::sync::mpsc::sync_channel(64);
+        let id = sched.submit_streaming("a", vec![1, 2, 3], 6, u32::MAX, Some(tx));
+        sched.submit("b", vec![4, 5], 4, u32::MAX);
+        let responses = sched.run_until_idle().unwrap();
+        let resp = responses.iter().find(|r| r.id == id).unwrap();
+        let mut streamed = Vec::new();
+        while let Ok(ev) = rx.try_recv() {
+            match ev {
+                StreamEvent::Token(t) => streamed.push(t),
+                other => panic!("scheduler only sends Token events, got {other:?}"),
+            }
+        }
+        assert_eq!(streamed, resp.tokens, "stream must reassemble to the response bitwise");
+        assert_eq!(streamed.len(), 6);
     }
 
     #[test]

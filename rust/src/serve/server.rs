@@ -18,6 +18,10 @@
 //! never sees them), and a decode error fails the in-flight requests
 //! instead of killing the worker. Dropping [`Server`] (or calling
 //! [`Server::shutdown`]) stops the worker after the current drain.
+//! [`ServerHandle::submit_stream`] returns a bounded per-token
+//! [`StreamEvent`] channel instead of a oneshot reply; the generated
+//! tokens are bitwise identical either way. For multi-engine serving
+//! see [`super::pool`] — this wrapper stays the one-engine path.
 //!
 //! **Adapter hot-reload**: [`Server::spawn_watching`] attaches a
 //! [`Registry`] (`store::registry`). The worker polls the registry's
@@ -32,11 +36,13 @@
 
 use std::sync::mpsc;
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use super::pool::STREAM_CHANNEL_CAP;
 use super::scheduler::Scheduler;
-use super::types::{AdapterStore, GenResponse, ServeMetrics};
+use super::types::{AdapterStore, GenResponse, ServeError, ServeMetrics, StreamEvent};
 use crate::store::Registry;
 
 enum Msg {
@@ -45,7 +51,7 @@ enum Msg {
         prompt: Vec<u32>,
         max_new: usize,
         stop: u32,
-        reply: mpsc::Sender<Result<GenResponse, String>>,
+        reply: Reply,
     },
     Metrics {
         reply: mpsc::Sender<ServeMetrics>,
@@ -56,6 +62,39 @@ enum Msg {
     Shutdown,
 }
 
+/// Where one request's outcome goes: a oneshot result channel
+/// ([`ServerHandle::generate`]) or the client's [`StreamEvent`] channel
+/// ([`ServerHandle::submit_stream`] — per-token events are streamed by
+/// the scheduler; the worker appends the terminal `Done`/`Error`).
+enum Reply {
+    Oneshot(mpsc::Sender<Result<GenResponse, String>>),
+    Stream(mpsc::SyncSender<StreamEvent>),
+}
+
+impl Reply {
+    /// The scheduler-facing token sink (streaming replies only).
+    fn sink(&self) -> Option<mpsc::SyncSender<StreamEvent>> {
+        match self {
+            Reply::Stream(tx) => Some(tx.clone()),
+            Reply::Oneshot(_) => None,
+        }
+    }
+
+    fn ok(self, resp: GenResponse) {
+        match self {
+            Reply::Oneshot(tx) => drop(tx.send(Ok(resp))),
+            Reply::Stream(tx) => drop(tx.send(StreamEvent::Done(resp))),
+        }
+    }
+
+    fn err(self, msg: String) {
+        match self {
+            Reply::Oneshot(tx) => drop(tx.send(Err(msg))),
+            Reply::Stream(tx) => drop(tx.send(StreamEvent::Error(ServeError::Failed(msg)))),
+        }
+    }
+}
+
 /// Registry-watch state of a [`Server::spawn_watching`] worker.
 struct RegistryWatch {
     registry: Registry,
@@ -64,6 +103,10 @@ struct RegistryWatch {
     last_attempted: u64,
     /// Generation currently serving.
     live: u64,
+    /// Minimum ms between automatic polls (CLI `--watch-interval-ms`);
+    /// 0 polls at every message burst. A forced reload ignores it.
+    interval_ms: u64,
+    last_poll: Instant,
 }
 
 impl RegistryWatch {
@@ -72,6 +115,13 @@ impl RegistryWatch {
     /// generation serving after the call; on error the scheduler's
     /// current adapters are untouched.
     fn poll(&mut self, sched: &mut Scheduler, force: bool) -> Result<u64, String> {
+        if !force
+            && self.interval_ms > 0
+            && (self.last_poll.elapsed().as_millis() as u64) < self.interval_ms
+        {
+            return Ok(self.live);
+        }
+        self.last_poll = Instant::now();
         let gen = self
             .registry
             .generation()
@@ -117,9 +167,42 @@ impl ServerHandle {
     ) -> Result<GenResponse> {
         let (reply, rx) = mpsc::channel();
         self.tx
-            .send(Msg::Generate { task: task.to_string(), prompt, max_new, stop, reply })
+            .send(Msg::Generate {
+                task: task.to_string(),
+                prompt,
+                max_new,
+                stop,
+                reply: Reply::Oneshot(reply),
+            })
             .map_err(|_| anyhow!("server is down"))?;
         rx.recv().map_err(|_| anyhow!("server dropped request"))?.map_err(|e| anyhow!(e))
+    }
+
+    /// Streaming generate: returns immediately with a bounded channel of
+    /// [`StreamEvent`]s — one `Token` per accepted token the moment the
+    /// decode loop accepts it, then exactly one `Done` (whose `tokens`
+    /// are bitwise the concatenated `Token`s — streamed and
+    /// non-streamed generations are identical) or `Error`. A client
+    /// that stops draining eventually blocks the worker's decode batch
+    /// (bounded-channel backpressure).
+    pub fn submit_stream(
+        &self,
+        task: &str,
+        prompt: Vec<u32>,
+        max_new: usize,
+        stop: u32,
+    ) -> Result<mpsc::Receiver<StreamEvent>> {
+        let (tx, rx) = mpsc::sync_channel(STREAM_CHANNEL_CAP);
+        self.tx
+            .send(Msg::Generate {
+                task: task.to_string(),
+                prompt,
+                max_new,
+                stop,
+                reply: Reply::Stream(tx),
+            })
+            .map_err(|_| anyhow!("server is down"))?;
+        Ok(rx)
     }
 
     /// Snapshot of the scheduler's accumulated [`ServeMetrics`].
@@ -162,10 +245,28 @@ impl Server {
     /// `scheduler` from it — so only a later publish (or a forced
     /// [`ServerHandle::reload`]) triggers a swap.
     pub fn spawn_watching(scheduler: Scheduler, registry: Registry) -> Result<Server> {
+        Self::spawn_watching_interval(scheduler, registry, 0)
+    }
+
+    /// [`Self::spawn_watching`] with a minimum poll interval: automatic
+    /// registry checks run at most once per `interval_ms` (0 = every
+    /// message burst, the historical behavior). Forced
+    /// [`ServerHandle::reload`] calls always poll.
+    pub fn spawn_watching_interval(
+        scheduler: Scheduler,
+        registry: Registry,
+        interval_ms: u64,
+    ) -> Result<Server> {
         let gen = registry.generation().map_err(|e| {
             anyhow!("registry {} is unreadable: {e:#}", registry.dir().display())
         })?;
-        let watch = RegistryWatch { registry, last_attempted: gen, live: gen };
+        let watch = RegistryWatch {
+            registry,
+            last_attempted: gen,
+            live: gen,
+            interval_ms,
+            last_poll: Instant::now(),
+        };
         Self::spawn_inner(scheduler, Some(watch))
     }
 
@@ -203,7 +304,7 @@ fn worker_main(
     rx: mpsc::Receiver<Msg>,
     mut watch: Option<RegistryWatch>,
 ) {
-    let mut waiting: Vec<(u64, mpsc::Sender<Result<GenResponse, String>>)> = Vec::new();
+    let mut waiting: Vec<(u64, Reply)> = Vec::new();
     loop {
         // Block for at least one message; then drain whatever arrived —
         // the burst becomes one scheduler drain (continuous batching +
@@ -233,12 +334,11 @@ fn worker_main(
             match m {
                 Msg::Generate { task, prompt, max_new, stop, reply } => {
                     if !sched.has_task(&task) {
-                        let _ = reply.send(Err(format!(
-                            "no adapter registered for task '{task}'"
-                        )));
+                        reply.err(format!("no adapter registered for task '{task}'"));
                         continue;
                     }
-                    let id = sched.submit(&task, prompt, max_new, stop);
+                    let sink = reply.sink();
+                    let id = sched.submit_streaming(&task, prompt, max_new, stop, sink);
                     waiting.push((id, reply));
                 }
                 Msg::Metrics { reply } => {
@@ -263,7 +363,7 @@ fn worker_main(
                     for resp in responses {
                         if let Some(pos) = waiting.iter().position(|(id, _)| *id == resp.id) {
                             let (_, reply) = waiting.swap_remove(pos);
-                            let _ = reply.send(Ok(resp));
+                            reply.ok(resp);
                         }
                     }
                 }
@@ -276,7 +376,7 @@ fn worker_main(
                     sched.clear_queue();
                     let msg = format!("decode failed: {e:#}");
                     for (_, reply) in waiting.drain(..) {
-                        let _ = reply.send(Err(msg.clone()));
+                        reply.err(msg.clone());
                     }
                 }
             }
@@ -313,6 +413,24 @@ mod tests {
         assert_eq!(m.completed, 1);
         server.shutdown();
         assert!(h.generate("a", vec![1], 1, u32::MAX).is_err());
+    }
+
+    #[test]
+    fn streamed_tokens_match_nonstreaming_generate() {
+        use crate::serve::types::collect_stream;
+        let server = Server::spawn(tiny_scheduler()).unwrap();
+        let h = server.handle();
+        let direct = h.generate("a", vec![1, 2, 3], 5, u32::MAX).unwrap();
+        assert_eq!(direct.tokens.len(), 5);
+        let rx = h.submit_stream("a", vec![1, 2, 3], 5, u32::MAX).unwrap();
+        let (tokens, done) = collect_stream(&rx).unwrap();
+        assert_eq!(tokens, direct.tokens, "streamed decode must be bitwise the same");
+        assert_eq!(done.tokens, direct.tokens);
+        assert!(done.id != direct.id);
+        // An unknown task surfaces as a terminal Error event.
+        let rx = h.submit_stream("nope", vec![1], 2, u32::MAX).unwrap();
+        assert!(collect_stream(&rx).is_err());
+        server.shutdown();
     }
 
     #[test]

@@ -21,7 +21,11 @@ use crate::util::stats::{mean, percentile};
 /// vectors of the quantized projections — kilobytes per task. The packed
 /// integer codes are shared by every task and are never part of an
 /// adapter: task switching is a scale swap, codes never move.
-#[derive(Default)]
+///
+/// Cloning copies the f32 scale/zero checkpoints only — kilobytes per
+/// task — which is what lets every engine-pool worker own its own
+/// store while the packed codes stay shared.
+#[derive(Clone, Default)]
 pub struct AdapterStore {
     adapters: HashMap<String, Checkpoint>,
 }
@@ -164,6 +168,72 @@ pub struct GenResponse {
     pub latency_s: f64,
 }
 
+/// Typed serving failure — what admission control and the engine pool
+/// hand back instead of an unbounded queue or a stringly error.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Backpressure: the task's bounded ingress queue is full. The
+    /// request was rejected at submit time — it never queued, nothing
+    /// was decoded. Clients retry with backoff or route elsewhere.
+    Overloaded { task: String, depth: usize, cap: usize },
+    /// Deadline shedding: the request sat queued past its deadline and
+    /// was dropped at dispatch instead of burning decode steps on an
+    /// answer nobody is still waiting for.
+    DeadlineExceeded { task: String, waited_ms: u64, deadline_ms: u64 },
+    /// Everything else (unknown task, decode failure, shutdown),
+    /// carried as text.
+    Failed(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded { task, depth, cap } => write!(
+                f,
+                "overloaded: task '{task}' ingress queue at {depth}/{cap} — retry with backoff"
+            ),
+            ServeError::DeadlineExceeded { task, waited_ms, deadline_ms } => write!(
+                f,
+                "deadline exceeded: task '{task}' request queued {waited_ms} ms \
+                 (deadline {deadline_ms} ms) — shed at dispatch"
+            ),
+            ServeError::Failed(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// One event on a streaming reply channel ([`super::pool::PoolHandle::submit_stream`] /
+/// [`super::server::ServerHandle::submit_stream`]): zero or more
+/// `Token`s as they are accepted by the decode loop, terminated by
+/// exactly one `Done` (carrying the same response the non-streaming
+/// path returns — its `tokens` are bitwise the concatenated `Token`
+/// events) or one `Error`.
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    Token(u32),
+    Done(GenResponse),
+    Error(ServeError),
+}
+
+/// Drain a streaming reply to completion: returns the streamed tokens
+/// in arrival order plus the final response. Errors if the stream ends
+/// without a `Done` (worker died) or delivers an `Error` event.
+pub fn collect_stream(
+    rx: &std::sync::mpsc::Receiver<StreamEvent>,
+) -> Result<(Vec<u32>, GenResponse), ServeError> {
+    let mut tokens = Vec::new();
+    loop {
+        match rx.recv() {
+            Ok(StreamEvent::Token(t)) => tokens.push(t),
+            Ok(StreamEvent::Done(resp)) => return Ok((tokens, resp)),
+            Ok(StreamEvent::Error(e)) => return Err(e),
+            Err(_) => return Err(ServeError::Failed("stream dropped before Done".into())),
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct BatcherConfig {
     /// Max requests decoded together (host: engine batch; xla: ≤ the
@@ -201,6 +271,21 @@ pub struct ServeMetrics {
     /// Prompt tokens consumed across all prefill passes.
     pub prefill_tokens: usize,
     pub wall_s: f64,
+    /// Per-request time-to-first-token: submit → first accepted token
+    /// (requests that finish with zero tokens record nothing).
+    pub ttft_s: Vec<f64>,
+    /// Gaps between consecutive accepted tokens of one request (the
+    /// streaming cadence a client observes after the first token).
+    pub inter_token_s: Vec<f64>,
+    /// High-water mark of queued (not-yet-admitted) requests.
+    pub queue_depth_max: usize,
+    /// Requests rejected by admission control (bounded-queue overflow)
+    /// or dropped by deadline shedding — typed errors, never silent.
+    pub shed_count: usize,
+    /// Dispatcher batches kept on a worker's current task by affinity
+    /// while an older request of another task was waiting — each one is
+    /// a scale swap the affinity policy avoided.
+    pub swaps_avoided: usize,
 }
 
 impl ServeMetrics {
@@ -223,6 +308,43 @@ impl ServeMetrics {
     /// p99 task-switch wall time — the ROADMAP's switch-latency target.
     pub fn p99_swap_s(&self) -> f64 {
         if self.swap_times_s.is_empty() { 0.0 } else { percentile(&self.swap_times_s, 99.0) }
+    }
+
+    pub fn p50_ttft_s(&self) -> f64 {
+        if self.ttft_s.is_empty() { 0.0 } else { percentile(&self.ttft_s, 50.0) }
+    }
+
+    pub fn p99_ttft_s(&self) -> f64 {
+        if self.ttft_s.is_empty() { 0.0 } else { percentile(&self.ttft_s, 99.0) }
+    }
+
+    /// p99 inter-token gap — the streaming SLO metric (flat under load
+    /// is the pool's whole point).
+    pub fn p99_inter_token_s(&self) -> f64 {
+        if self.inter_token_s.is_empty() { 0.0 } else { percentile(&self.inter_token_s, 99.0) }
+    }
+
+    /// Fold another metrics block into this one (the engine pool merges
+    /// per-worker scheduler metrics plus the dispatcher's admission
+    /// counters into one client-visible snapshot). Counters add,
+    /// latency samples concatenate, high-water marks take the max;
+    /// `wall_s` takes the max too — workers run concurrently, so
+    /// summing their walls would overstate elapsed time.
+    pub fn merge(&mut self, other: &ServeMetrics) {
+        self.completed += other.completed;
+        self.generated_tokens += other.generated_tokens;
+        self.latencies_s.extend_from_slice(&other.latencies_s);
+        self.queue_s.extend_from_slice(&other.queue_s);
+        self.swap_times_s.extend_from_slice(&other.swap_times_s);
+        self.decode_steps += other.decode_steps;
+        self.prefill_batches += other.prefill_batches;
+        self.prefill_tokens += other.prefill_tokens;
+        self.wall_s = self.wall_s.max(other.wall_s);
+        self.ttft_s.extend_from_slice(&other.ttft_s);
+        self.inter_token_s.extend_from_slice(&other.inter_token_s);
+        self.queue_depth_max = self.queue_depth_max.max(other.queue_depth_max);
+        self.shed_count += other.shed_count;
+        self.swaps_avoided += other.swaps_avoided;
     }
 }
 
@@ -287,5 +409,65 @@ mod tests {
         assert_eq!(e.tokens_per_s(), 0.0);
         assert_eq!(e.p50_latency(), 0.0);
         assert_eq!(e.p99_swap_s(), 0.0);
+        assert_eq!(e.p50_ttft_s(), 0.0);
+        assert_eq!(e.p99_inter_token_s(), 0.0);
+    }
+
+    #[test]
+    fn metrics_merge_adds_counters_and_maxes_watermarks() {
+        let mut a = ServeMetrics::default();
+        a.completed = 3;
+        a.generated_tokens = 30;
+        a.wall_s = 2.0;
+        a.ttft_s = vec![0.01, 0.02];
+        a.inter_token_s = vec![0.001];
+        a.queue_depth_max = 4;
+        a.shed_count = 1;
+        a.swaps_avoided = 2;
+        let mut b = ServeMetrics::default();
+        b.completed = 2;
+        b.generated_tokens = 20;
+        b.wall_s = 3.0;
+        b.ttft_s = vec![0.03];
+        b.queue_depth_max = 7;
+        b.swaps_avoided = 1;
+        a.merge(&b);
+        assert_eq!(a.completed, 5);
+        assert_eq!(a.generated_tokens, 50);
+        assert_eq!(a.wall_s, 3.0, "concurrent workers: wall is a max, not a sum");
+        assert_eq!(a.ttft_s.len(), 3);
+        assert_eq!(a.inter_token_s.len(), 1);
+        assert_eq!(a.queue_depth_max, 7);
+        assert_eq!(a.shed_count, 1);
+        assert_eq!(a.swaps_avoided, 3);
+    }
+
+    #[test]
+    fn serve_error_display_and_stream_collect() {
+        let e = ServeError::Overloaded { task: "a".into(), depth: 8, cap: 8 };
+        assert!(e.to_string().contains("overloaded"));
+        assert!(e.to_string().contains("8/8"));
+        let d = ServeError::DeadlineExceeded { task: "a".into(), waited_ms: 50, deadline_ms: 10 };
+        assert!(d.to_string().contains("deadline"));
+
+        let (tx, rx) = std::sync::mpsc::sync_channel(8);
+        let resp = GenResponse {
+            id: 1,
+            task: "a".into(),
+            tokens: vec![5, 6],
+            queue_s: 0.0,
+            latency_s: 0.0,
+        };
+        tx.send(StreamEvent::Token(5)).unwrap();
+        tx.send(StreamEvent::Token(6)).unwrap();
+        tx.send(StreamEvent::Done(resp)).unwrap();
+        let (tokens, done) = collect_stream(&rx).unwrap();
+        assert_eq!(tokens, vec![5, 6]);
+        assert_eq!(done.tokens, tokens);
+
+        // A dropped sender before Done is a typed failure, not a hang.
+        let (tx2, rx2) = std::sync::mpsc::sync_channel::<StreamEvent>(1);
+        drop(tx2);
+        assert!(collect_stream(&rx2).is_err());
     }
 }

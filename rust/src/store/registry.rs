@@ -166,6 +166,51 @@ impl Registry {
         Ok(generation)
     }
 
+    /// Garbage-collect superseded adapter generations. For every task,
+    /// the union of (a) the file the live manifest references — which
+    /// for a carried-forward task can be generations old — and (b) the
+    /// `keep_last` newest `<task>.g<N>.adapter` files is kept; every
+    /// other generation file of that task is deleted. Files that do not
+    /// parse as `<task>.g<N>.adapter` (the manifest itself, stray
+    /// files, dotfiles) are never touched, so a publisher crash between
+    /// adapter writes and the manifest write leaves orphans that a
+    /// later `gc` reclaims. Returns the deleted file names, sorted.
+    pub fn gc(&self, keep_last: usize) -> Result<Vec<String>> {
+        if !self.dir.exists() {
+            return Ok(Vec::new());
+        }
+        let m = self.manifest()?;
+        let live: std::collections::HashSet<&str> =
+            m.tasks.iter().map(|(_, f)| f.as_str()).collect();
+        let mut by_task: std::collections::HashMap<String, Vec<(u64, String)>> =
+            std::collections::HashMap::new();
+        for entry in std::fs::read_dir(&self.dir)
+            .with_context(|| format!("reading registry {}", self.dir.display()))?
+        {
+            let p = entry?.path();
+            if !p.is_file() {
+                continue;
+            }
+            let Some(name) = p.file_name().and_then(|s| s.to_str()) else { continue };
+            let Some((task, gen)) = parse_adapter_file(name) else { continue };
+            by_task.entry(task).or_default().push((gen, name.to_string()));
+        }
+        let mut pruned = Vec::new();
+        for files in by_task.values_mut() {
+            files.sort_by_key(|(g, _)| std::cmp::Reverse(*g));
+            for (i, (_, file)) in files.iter().enumerate() {
+                if i < keep_last || live.contains(file.as_str()) {
+                    continue;
+                }
+                std::fs::remove_file(self.dir.join(file))
+                    .with_context(|| format!("pruning {file}"))?;
+                pruned.push(file.clone());
+            }
+        }
+        pruned.sort();
+        Ok(pruned)
+    }
+
     /// Load and fully verify the current generation: the manifest plus
     /// every adapter it references (each a checksummed container; any
     /// corruption or missing file fails the whole load). Returns
@@ -181,6 +226,19 @@ impl Registry {
         }
         Ok((m.generation, out))
     }
+}
+
+/// Parse `<task>.g<N>.adapter` into `(task, N)`; anything else is
+/// `None` (and therefore invisible to [`Registry::gc`]).
+fn parse_adapter_file(name: &str) -> Option<(String, u64)> {
+    let stem = name.strip_suffix(".adapter")?;
+    let pos = stem.rfind(".g")?;
+    let gen: u64 = stem[pos + 2..].parse().ok()?;
+    let task = &stem[..pos];
+    if task.is_empty() || validate_task_name(task).is_err() {
+        return None;
+    }
+    Some((task.to_string(), gen))
 }
 
 #[cfg(test)]
@@ -243,6 +301,53 @@ mod tests {
         assert!(format!("{err:#}").contains("a"), "{err:#}");
         // The generation counter is still readable.
         assert_eq!(reg.generation().unwrap(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gc_keeps_live_and_recent_generations_including_carry_forward() {
+        let dir = std::env::temp_dir().join("peqa_test_registry_gc");
+        std::fs::remove_dir_all(&dir).ok();
+        let reg = Registry::open(&dir);
+        // b publishes once at generation 1 and carries forward while a
+        // is republished through generation 4.
+        reg.publish(&[("a".to_string(), &adapter(1.0)), ("b".to_string(), &adapter(9.0))])
+            .unwrap();
+        for v in [2.0, 3.0, 4.0] {
+            reg.publish(&[("a".to_string(), &adapter(v))]).unwrap();
+        }
+        std::fs::write(dir.join("notes.txt"), b"not an adapter").unwrap();
+        let pruned = reg.gc(2).unwrap();
+        // a keeps its 2 newest (g3, g4 — g4 is also live); g1, g2 go.
+        assert_eq!(pruned, vec!["a.g1.adapter", "a.g2.adapter"]);
+        assert!(dir.join("a.g3.adapter").exists());
+        assert!(dir.join("a.g4.adapter").exists());
+        // b's only file is generations old but live via carry-forward.
+        assert!(dir.join("b.g1.adapter").exists());
+        assert!(dir.join("notes.txt").exists(), "gc only touches adapter files");
+        // The registry still loads and verifies completely.
+        let (g, tasks) = reg.load().unwrap();
+        assert_eq!(g, 4);
+        assert_eq!(tasks.len(), 2);
+        // keep_last 0 keeps exactly the live set.
+        let pruned = reg.gc(0).unwrap();
+        assert_eq!(pruned, vec!["a.g3.adapter"]);
+        assert!(dir.join("a.g4.adapter").exists());
+        assert!(dir.join("b.g1.adapter").exists());
+        assert_eq!(reg.load().unwrap().1.len(), 2);
+        // Idempotent: nothing left to prune.
+        assert!(reg.gc(0).unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gc_on_missing_or_empty_registry_is_a_noop() {
+        let dir = std::env::temp_dir().join("peqa_test_registry_gc_empty");
+        std::fs::remove_dir_all(&dir).ok();
+        let reg = Registry::open(&dir);
+        assert!(reg.gc(2).unwrap().is_empty(), "missing dir");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(reg.gc(2).unwrap().is_empty(), "empty dir");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -74,8 +74,8 @@ use crate::config::TrainConfig;
 use crate::data::Batch;
 use crate::model::blocks::{
     attend_seq_backward, attend_seq_tape, dense_grad_rows_into, dense_rows_into, ensure,
-    proj_into, rms_backward_into, rms_norm_rows_into, rope_freqs, swiglu_backward_into,
-    swiglu_rows_into, AttnScratch, LayerNames, ProjScratch, Tape,
+    proj_into, rms_backward_into, rms_norm_rows_into, rope_freqs, shard_chunks,
+    swiglu_backward_into, swiglu_rows_into, AttnScratch, LayerNames, ProjScratch, Tape,
 };
 use crate::model::{Checkpoint, PackedModel};
 use crate::quant::PackedMatrix;
@@ -895,8 +895,8 @@ fn forward_tape(
     Ok(())
 }
 
-/// The trainer's attention pass: shard the `bsz` sequences over
-/// `std::thread::scope` workers, each running [`attend_seq_tape`] (the
+/// The trainer's attention pass: shard the `bsz` sequences over scoped
+/// workers ([`shard_chunks`]), each running [`attend_seq_tape`] (the
 /// shared core's full-sequence kernel — rotary + fixed-order causal
 /// attention, optional probability tape) per sequence with its own
 /// [`AttnScratch`]. Sequences are mutually independent, so results are
@@ -951,22 +951,15 @@ fn attend_all(
             );
         }
     };
-    if workers == 1 {
-        run_chunk(0, bsz, q, k, ctx, probs, &mut attn[0]);
-        return;
-    }
-    let per = bsz.div_ceil(workers);
     let mut q_rem: &mut [f32] = q;
     let mut k_rem: &mut [f32] = k;
     let mut ctx_rem: &mut [f32] = ctx;
     let mut probs_rem: Option<&mut [f32]> = probs;
     let mut attn_rem: &mut [AttnScratch] = &mut attn[..workers];
-    let mut b0 = 0usize;
-    std::thread::scope(|s| {
-        while b0 < bsz {
-            let take = per.min(bsz - b0);
-            // mem::take moves each remainder slice out so the split
-            // halves keep the outer lifetime the scoped threads need.
+    shard_chunks(
+        bsz,
+        workers,
+        |_, take| {
             let (q_c, qr) = std::mem::take(&mut q_rem).split_at_mut(take * sd);
             q_rem = qr;
             let (k_c, kr) = std::mem::take(&mut k_rem).split_at_mut(take * sd);
@@ -983,16 +976,17 @@ fn attend_all(
             };
             let (attn_c, ar) = std::mem::take(&mut attn_rem).split_at_mut(1);
             attn_rem = ar;
-            let start = b0;
-            b0 += take;
-            let run_chunk = &run_chunk;
-            s.spawn(move || run_chunk(start, take, q_c, k_c, ctx_c, p_c, &mut attn_c[0]));
-        }
-    });
+            (q_c, k_c, ctx_c, p_c, attn_c)
+        },
+        |start, take, (q_c, k_c, ctx_c, p_c, attn_c)| {
+            run_chunk(start, take, q_c, k_c, ctx_c, p_c, &mut attn_c[0]);
+        },
+    );
 }
 
-/// Backward of [`attend_all`]: the same sequence sharding, each worker
-/// running the shared core's [`attend_seq_backward`] per sequence.
+/// Backward of [`attend_all`]: the same [`shard_chunks`] sequence
+/// sharding, each worker running the shared core's
+/// [`attend_seq_backward`] per sequence.
 /// Bitwise identical at any worker count.
 #[allow(clippy::too_many_arguments)]
 fn attend_backward_all(
@@ -1045,19 +1039,14 @@ fn attend_backward_all(
             );
         }
     };
-    if workers == 1 {
-        run_chunk(0, bsz, dq, dk, dv, &mut attn[0]);
-        return;
-    }
-    let per = bsz.div_ceil(workers);
     let mut dq_rem: &mut [f32] = dq;
     let mut dk_rem: &mut [f32] = dk;
     let mut dv_rem: &mut [f32] = dv;
     let mut attn_rem: &mut [AttnScratch] = &mut attn[..workers];
-    let mut b0 = 0usize;
-    std::thread::scope(|s| {
-        while b0 < bsz {
-            let take = per.min(bsz - b0);
+    shard_chunks(
+        bsz,
+        workers,
+        |_, take| {
             let (dq_c, qr) = std::mem::take(&mut dq_rem).split_at_mut(take * sd);
             dq_rem = qr;
             let (dk_c, kr) = std::mem::take(&mut dk_rem).split_at_mut(take * sd);
@@ -1066,12 +1055,12 @@ fn attend_backward_all(
             dv_rem = vr;
             let (attn_c, ar) = std::mem::take(&mut attn_rem).split_at_mut(1);
             attn_rem = ar;
-            let start = b0;
-            b0 += take;
-            let run_chunk = &run_chunk;
-            s.spawn(move || run_chunk(start, take, dq_c, dk_c, dv_c, &mut attn_c[0]));
-        }
-    });
+            (dq_c, dk_c, dv_c, attn_c)
+        },
+        |start, take, (dq_c, dk_c, dv_c, attn_c)| {
+            run_chunk(start, take, dq_c, dk_c, dv_c, &mut attn_c[0]);
+        },
+    );
 }
 
 // ------------------------------------------------------------- backward

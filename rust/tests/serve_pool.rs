@@ -1,0 +1,203 @@
+//! Engine-pool end-to-end tests (default build — no artifacts, no xla):
+//!
+//! * pooled decode is bitwise: the same mixed-task request set produces
+//!   token-identical responses at 1, 2 and 4 pooled engines as a direct
+//!   single-scheduler drain (greedy decode depends only on (task,
+//!   prompt) — never on which worker, batch or arrival order served it);
+//! * streaming is an observer: `submit_stream`'s Token events reassemble
+//!   to exactly the tokens `submit` returns for the same request, and
+//!   the terminal `Done` response carries the same sequence;
+//! * admission control: submits past the per-task ingress cap are
+//!   rejected at submit time with the typed [`ServeError::Overloaded`]
+//!   (nothing queued, nothing decoded), while queued work and other
+//!   tasks are unaffected;
+//! * hot-reload: a registry publish between bursts is adopted by the
+//!   pool without restart (`EnginePool::spawn_watching`).
+
+use std::collections::HashMap;
+
+use peqa::serve::{
+    self, collect_stream, Engine, EnginePool, ModelGeom, PoolConfig, Scheduler, SchedulerConfig,
+    ServeError,
+};
+
+const GEOM: ModelGeom = ModelGeom { vocab: 300, d_model: 32, n_layers: 2, n_heads: 2, d_ff: 64 };
+
+fn parts(seed: u64) -> (peqa::model::PackedModel, peqa::model::Checkpoint) {
+    serve::synth_packed(&GEOM, 4, Some(16), seed).unwrap()
+}
+
+fn req(i: u32) -> (&'static str, Vec<u32>) {
+    (["a", "b", "c"][(i % 3) as usize], vec![1 + i, 40 + i, 7])
+}
+
+/// Ground truth for the bitwise tests: one scheduler, one drain.
+fn direct_drain(n: u32) -> HashMap<(String, Vec<u32>), Vec<u32>> {
+    let (pm, base_q) = parts(29);
+    let adapters = serve::synth_adapters(&base_q, &["a", "b", "c"], 7);
+    let eng = Engine::from_packed(pm, GEOM, 2).unwrap();
+    let mut sched = Scheduler::new(
+        eng,
+        adapters,
+        SchedulerConfig { max_batch: 4, window: 64, ..SchedulerConfig::default() },
+    )
+    .unwrap();
+    let mut keys: HashMap<u64, (String, Vec<u32>)> = HashMap::new();
+    for i in 0..n {
+        let (task, prompt) = req(i);
+        let id = sched.submit(task, prompt.clone(), 6, u32::MAX);
+        keys.insert(id, (task.to_string(), prompt));
+    }
+    let mut expected = HashMap::new();
+    for r in sched.run_until_idle().unwrap() {
+        expected.insert(keys.remove(&r.id).unwrap(), r.tokens);
+    }
+    expected
+}
+
+fn pool_cfg(engines: usize) -> PoolConfig {
+    PoolConfig {
+        engines,
+        max_batch: 4,
+        window: 64,
+        queue_cap: 64,
+        ..PoolConfig::default()
+    }
+}
+
+#[test]
+fn pooled_engines_match_direct_scheduler_bitwise() {
+    const N: u32 = 12;
+    let expected = direct_drain(N);
+    assert_eq!(expected.len(), N as usize);
+
+    for engines in [1usize, 2, 4] {
+        let (pm, base_q) = parts(29);
+        let adapters = serve::synth_adapters(&base_q, &["a", "b", "c"], 7);
+        let pool = EnginePool::spawn(pm, GEOM, 2, adapters, pool_cfg(engines)).unwrap();
+        let expected = &expected;
+        // 4 concurrent clients × 3 requests each, racing across workers.
+        std::thread::scope(|s| {
+            for c in 0..4u32 {
+                let h = pool.handle();
+                s.spawn(move || {
+                    for j in 0..3u32 {
+                        let i = c * 3 + j;
+                        let (task, prompt) = req(i);
+                        let r = h.submit(task, prompt.clone(), 6, u32::MAX).unwrap();
+                        assert_eq!(r.task, task);
+                        assert_eq!(
+                            &r.tokens,
+                            expected.get(&(task.to_string(), prompt)).unwrap(),
+                            "{engines} engine(s), request {i}: pooled tokens diverge \
+                             from the direct drain"
+                        );
+                    }
+                });
+            }
+        });
+        let m = pool.shutdown();
+        assert_eq!(m.completed, N as usize, "{engines} engine(s)");
+        assert_eq!(m.shed_count, 0);
+        assert_eq!(m.ttft_s.len(), N as usize, "one TTFT sample per request");
+    }
+}
+
+#[test]
+fn streamed_tokens_match_nonstreaming_submit_bitwise() {
+    let (pm, base_q) = parts(29);
+    let adapters = serve::synth_adapters(&base_q, &["a", "b", "c"], 7);
+    let pool = EnginePool::spawn(pm, GEOM, 2, adapters, pool_cfg(2)).unwrap();
+    let h = pool.handle();
+    for i in 0..6u32 {
+        let (task, prompt) = req(i);
+        let plain = h.submit(task, prompt.clone(), 6, u32::MAX).unwrap();
+        let rx = h.submit_stream(task, prompt.clone(), 6, u32::MAX).unwrap();
+        let (streamed, done) = collect_stream(&rx).unwrap();
+        assert_eq!(streamed, plain.tokens, "request {i}: Token events must reassemble");
+        assert_eq!(done.tokens, plain.tokens, "request {i}: terminal Done must agree");
+        assert_eq!(done.task, task);
+    }
+    // An unknown task is a terminal stream error, not a pool crash.
+    let rx = h.submit_stream("nope", vec![1], 2, u32::MAX).unwrap();
+    assert!(collect_stream(&rx).is_err());
+    assert!(h.submit("a", vec![1, 2], 2, u32::MAX).is_ok(), "pool still serving");
+    pool.shutdown();
+}
+
+#[test]
+fn overload_rejects_at_submit_with_typed_error() {
+    let (pm, base_q) = parts(29);
+    let adapters = serve::synth_adapters(&base_q, &["a", "b"], 7);
+    let cfg = PoolConfig { queue_cap: 2, ..pool_cfg(1) };
+    let pool = EnginePool::spawn(pm, GEOM, 2, adapters, cfg).unwrap();
+    let h = pool.handle();
+
+    // Park the single worker deterministically: a streaming request
+    // generating more tokens than the stream channel buffers blocks the
+    // decode loop at the full channel until the client drains — classic
+    // slow-consumer backpressure. Waiting for the first Token proves the
+    // worker dequeued it, so everything submitted next queues behind it.
+    let max_new = serve::STREAM_CHANNEL_CAP + 8;
+    let rx_slow = h.submit_stream("a", vec![3, 5, 9], max_new, u32::MAX).unwrap();
+    let first = rx_slow.recv().unwrap();
+    assert!(matches!(first, peqa::serve::StreamEvent::Token(_)));
+
+    // Fill task a's ingress queue to its cap...
+    let rx2 = h.submit_stream("a", vec![1, 2], 4, u32::MAX).unwrap();
+    let rx3 = h.submit_stream("a", vec![2, 3], 4, u32::MAX).unwrap();
+    // ...and the next submit is rejected typed, at submit time.
+    let err = h.submit_stream("a", vec![4, 5], 4, u32::MAX).unwrap_err();
+    assert_eq!(err, ServeError::Overloaded { task: "a".into(), depth: 2, cap: 2 });
+
+    // Draining the slow consumer unblocks the worker; the queued
+    // requests (admitted before the cap) complete normally.
+    let (streamed, done) = collect_stream(&rx_slow).unwrap();
+    // One Token was already received before collect_stream took over.
+    assert_eq!(streamed.len() + 1, max_new);
+    assert_eq!(done.tokens.len(), max_new);
+    assert!(collect_stream(&rx2).is_ok());
+    assert!(collect_stream(&rx3).is_ok());
+
+    let m = pool.shutdown();
+    assert_eq!(m.completed, 3);
+    assert_eq!(m.shed_count, 1, "exactly the rejected submit");
+    assert_eq!(m.queue_depth_max, 2, "high-water is the cap, never past it");
+}
+
+#[test]
+fn watching_pool_adopts_published_generation_without_restart() {
+    let dir = std::env::temp_dir().join("peqa_test_pool_registry");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let reg = peqa::store::Registry::open(&dir);
+
+    let (pm, base_q) = parts(29);
+    let full = base_q.extract_adapter(true);
+    let adapters = serve::synth_adapters(&base_q, &["a"], 7);
+    let pool = EnginePool::spawn_watching(
+        pm,
+        GEOM,
+        2,
+        adapters,
+        pool_cfg(2),
+        peqa::store::Registry::open(&dir),
+    )
+    .unwrap();
+    let h = pool.handle();
+    assert!(h.submit("a", vec![1, 2], 2, u32::MAX).is_ok());
+    assert!(h.submit("fresh", vec![1], 1, u32::MAX).is_err());
+
+    // Publish generation 1: the burst that wakes a worker next already
+    // serves it — no restart, no explicit reload call.
+    assert_eq!(reg.publish(&[("fresh".to_string(), &full)]).unwrap(), 1);
+    let r = h.submit("fresh", vec![1, 2, 3], 2, u32::MAX).unwrap();
+    assert_eq!(r.tokens.len(), 2);
+    // The published generation replaced the synthesized set, on every
+    // worker (several bursts so both engines get woken at least once).
+    for _ in 0..4 {
+        assert!(h.submit("a", vec![1], 1, u32::MAX).is_err(), "old set replaced");
+    }
+    pool.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -102,6 +102,34 @@ def diff_serve(cur, base, thr):
         drift = sw_cur / sw_base
         note = " (warn only — not gated)" if drift > 1.0 + thr else ""
         print(f"  swap p99: {sw_cur * 1e3:.4f} ms vs baseline {sw_base * 1e3:.4f} ms{note}")
+    # Pooled-serving latency axes (engine pool, streaming clients): gated
+    # the same way as throughput — a baseline that predates the pool
+    # simply lacks the keys and skips. shed_count/queue_depth_max are
+    # load-shape facts, reported but not gated.
+    for key, label in [
+        ("ttft_p99_s", "pool TTFT p99"),
+        ("inter_token_p99_s", "pool inter-token p99"),
+    ]:
+        lat_cur, lat_base = cur.get(key, 0.0), base.get(key, 0.0)
+        if lat_base <= 0:
+            continue
+        ratio = lat_cur / lat_base
+        line = (
+            f"  {label}: {lat_cur * 1e3:.3f} ms vs baseline "
+            f"{lat_base * 1e3:.3f} ms ({ratio:.0%} of baseline)"
+        )
+        if ratio > 1.0 + thr:
+            fails.append(line + f"  REGRESSION > +{thr:.0%}")
+            print(line + "  ** REGRESSION **")
+        else:
+            print(line)
+    if base.get("shed_count") is not None:
+        print(
+            f"  pool shed: {cur.get('shed_count', 0):.0f} vs baseline "
+            f"{base.get('shed_count', 0):.0f}; queue depth max "
+            f"{cur.get('queue_depth_max', 0):.0f} vs {base.get('queue_depth_max', 0):.0f} "
+            "(reported only)"
+        )
     return fails
 
 

@@ -111,3 +111,22 @@ cmp "$SMOKE/full/smoke.adapter" "$SMOKE/part/smoke.adapter"
 echo "== ok: resumed adapter is byte-identical to the uninterrupted run =="
 "$PEQA_BIN" fsck "$SMOKE/full" "$SMOKE/part" "$SMOKE/registry"
 echo "== ok: store durability smoke =="
+
+echo "== registry gc smoke: prune superseded generations, keep the live set =="
+# Publish a second generation into the same registry, gc with keep-last
+# 1, and verify the registry still loads (the live manifest's files are
+# never pruned) and fsck stays green.
+"$PEQA_BIN" finetune --task smoke --out "$SMOKE/part2" --steps 8 --save-every 3 \
+  --batch 2 --seq 16 --seed 11 --eval-tokens 0
+"$PEQA_BIN" finetune --task smoke --out "$SMOKE/part2" --resume --eval-tokens 0 \
+  --publish "$SMOKE/registry" --gc-keep 1
+"$PEQA_BIN" fsck "$SMOKE/registry"
+echo "== ok: registry gc smoke =="
+
+echo "== pooled serve smoke: --engines 2, concurrent streaming clients =="
+# The sharded engine pool end to end through the CLI: 2 workers sharing
+# one set of packed codes, 2 concurrent streaming clients, bounded
+# ingress + task-affine dispatch. Greedy decode keeps it deterministic.
+"$PEQA_BIN" serve --engines 2 --clients 2 --stream --requests 12 \
+  --max-new 12 --tasks 3 --seed 7
+echo "== ok: pooled serve smoke =="
