@@ -279,12 +279,15 @@ pub fn mc_accuracy(
 
     let mut correct = 0usize;
     for (i, item) in task.items.iter().enumerate() {
+        // total_cmp: a NaN score (degenerate logits) must not panic the
+        // accuracy sweep — under a total order it just loses/wins
+        // deterministically.
         let pred = scores[i]
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap()
-            .0;
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(idx, _)| idx)
+            .unwrap_or(0);
         if pred == item.correct {
             correct += 1;
         }
@@ -324,12 +327,9 @@ pub fn generate(
         }
         let logits = model.logits(rt, &batch_tokens)?;
         let row = &logits[pos * vocab..(pos + 1) * vocab];
-        let next = row
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap()
-            .0 as u32;
+        // NaN-safe greedy argmax (total_cmp) — same fix class as
+        // serve::engine's sampler in PR 3.
+        let next = crate::util::argmax_f32(row).unwrap_or(0) as u32;
         if next == stop {
             break;
         }

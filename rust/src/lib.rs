@@ -185,6 +185,44 @@
 //! rejected (strict `serve::types::validate_coverage`) and the previous
 //! generation keeps serving.
 //!
+//! ## Correctness tooling (`lint`, `peqa lint`)
+//!
+//! The invariants above — bitwise reproducibility, panic-free
+//! serving/store paths, allocation-free compute cores — are enforced at
+//! the *source* level by an in-tree static analysis (`peqa lint
+//! [paths] [--rule NAME] [--list] [--json]`, module [`lint`]): a
+//! dependency-free hand-rolled Rust lexer plus token-pattern rules,
+//! deterministic `file:line: rule: msg` output, nonzero exit on any
+//! finding. `scripts/ci.sh` gates on `peqa lint rust/src` before the
+//! test suite, and the crate root pins `#![deny(unsafe_code)]` (zero
+//! `unsafe` in the library today; ROADMAP item 1's SIMD work will
+//! relax that deliberately, per-module).
+//!
+//! | Rule | Invariant it enforces | Why it is load-bearing for PEQA |
+//! |---|---|---|
+//! | `nan-comparator` | no `partial_cmp(..).unwrap()`-style comparators; key with `total_cmp` | metrics/logits can be NaN; a sort comparator that panics (or lies) turns one bad float into a crashed server — the exact bug class fixed in `serve::engine` (PR 3) and again in `util::stats`/`eval` here |
+//! | `panic-free-paths` | no `unwrap`/`expect`/`panic!`-family in non-test `serve::`/`store::` code | a panic in serving drops live traffic; in the store it can poison a checkpoint mid-write; mutex poison routes through `util::sync::{lock_clean, try_lock_clean, wait_clean}` |
+//! | `hot-path-alloc` | no `Vec::new`/`vec!`/`to_vec`/`format!`/`String::from`/`.clone()` in `quant::kernels`/`model::blocks` | `ProjScratch`/`TapeArena` exist precisely so steady-state decode/train steps never allocate (allocs/step is a gated bench metric) |
+//! | `float-reduction-order` | no iterator `.sum::<f32>()`/`.product`/float `fold` in the kernel modules | one explicit accumulation order is the bitwise thread/batch-invariance contract the parity tests pin |
+//! | `lock-across-blocking` | no mutex guard lexically live across `.recv()`/`.send()`/`.join()` in `serve::` | the pool's bounded channels make lock-then-block a real deadlock shape, not a style nit |
+//! | `nondeterminism-sources` | no `HashMap`/`HashSet` in artifact/numeric paths; no `Instant::now`/`SystemTime` outside bench/`util::stats`/`util::log`; no bare `thread::spawn` | hash-order iteration, wall-clock reads and detached threads are the three ways "bitwise identical" quietly stops being true |
+//!
+//! Exemptions are written in the source, next to the code, with a
+//! mandatory justification:
+//!
+//! ```text
+//! // peqa-lint: allow(<rule>[, <rule>]) -- <why this site is sound>
+//! ```
+//!
+//! on its own line directly above the exempted code; the allow covers
+//! the next syntactic unit (one statement, or a whole `fn`/`impl` body
+//! when placed above its header). A bare allow without `--
+//! justification`, an unknown rule name, or an allow trailing code on
+//! the same line is itself a finding (`allow-hygiene`) and suppresses
+//! nothing. Adding a rule = one entry in `lint::rules::all()` plus a
+//! positive/near-miss fixture pair in `rust/tests/fixtures/lint/`
+//! (see the module docs of [`lint`]).
+//!
 //! ## Environment knobs
 //!
 //! The single reference for every `PEQA_*` variable the crate and its
@@ -201,6 +239,7 @@
 //! | `PEQA_LOG` | Log level of [`util::log`] (`debug`/`info`/`warn`/`error`). |
 //! | `PEQA_SKIP_TREND` | `1` lets `scripts/ci.sh` pass without `python3` by skipping the bench trend diff (otherwise a missing interpreter fails CI loudly). |
 //! | `PEQA_SKIP_PYCHECK` | `1` skips the f64 numpy cross-check of the host backward (`python/checks/host_backward_check.py`) in `scripts/ci.sh`; it runs whenever `python3 -c "import numpy"` succeeds. |
+//! | `PEQA_SANITIZE` | `1` makes `scripts/ci.sh` additionally run the serve/store test suites under Miri (preferred) or ThreadSanitizer on hosts whose toolchain has them; prints a clear skip message otherwise. Off by default — the sanitizer pass is minutes, not seconds. |
 //!
 //! And the serving-scale knobs of `peqa serve` (CLI flags, same names as
 //! the `serve::PoolConfig` fields):
@@ -225,6 +264,8 @@
 //! kernels, the `serve` decode engine and scheduler, data/tokenizer,
 //! memory model, and the bench framework.
 
+#![deny(unsafe_code)]
+
 pub mod bench;
 pub mod cli;
 pub mod config;
@@ -233,6 +274,7 @@ pub mod coordinator;
 pub mod data;
 pub mod eval;
 pub mod json;
+pub mod lint;
 pub mod memmodel;
 pub mod model;
 pub mod pipeline;

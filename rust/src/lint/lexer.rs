@@ -1,0 +1,426 @@
+//! Hand-rolled Rust lexer for the lint pass (the vendored registry has
+//! no `syn` — see `lint/mod.rs` for why the rules are token-level).
+//!
+//! Produces a flat token stream with 1-based line numbers plus a
+//! separate comment list (suppression comments are parsed from line
+//! comments by the engine). The lexer understands exactly the surface
+//! syntax a *scanner* must not be fooled by:
+//!
+//! * line comments (`//`, `///`, `//!`) and **nested** block comments;
+//! * string literals with escapes, raw strings with any `#` count, and
+//!   the `b` / `r` / `br` / `c` / `cr` prefixes;
+//! * `'a'` char literals (incl. escapes like `'\n'`, `'\u{1F600}'`)
+//!   vs `'a` lifetime ticks;
+//! * numbers with suffixes (`1e-3`, `0.5f32`, `1_000u64`) without
+//!   swallowing range dots (`0..n`);
+//! * `::` joined into one path-separator token (rules match
+//!   `Vec::new`-style paths as three tokens).
+//!
+//! Everything else is a single-character punct. The lexer never fails:
+//! unterminated constructs run to end of input, which is the right
+//! behavior for a linter (the compiler owns syntax errors).
+
+/// One lexical token. Keywords are `Ident`s; rules match on text.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Tok {
+    /// Identifier or keyword (`fn`, `unwrap`, `HashMap`, …).
+    Ident(String),
+    /// `'a`, `'static`, `'_` — the tick without a closing quote.
+    Lifetime(String),
+    /// Numeric literal, raw text kept (suffix/exponent matter to rules).
+    Num(String),
+    /// Any string-like literal (`"…"`, `r#"…"#`, `b"…"`, `c"…"`).
+    Str,
+    /// Char or byte-char literal (`'x'`, `b'\n'`).
+    Char,
+    /// The `::` path separator, joined.
+    PathSep,
+    /// Any other single character (`{`, `.`, `!`, `<`, …).
+    Punct(char),
+}
+
+/// A token plus the 1-based source line it starts on.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: u32,
+}
+
+/// A comment, with its text (delimiters stripped) and line span.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    /// Line the comment starts on (1-based).
+    pub line: u32,
+    /// `true` for `//…` comments, `false` for `/* … */`.
+    pub line_comment: bool,
+    /// Text after `//` resp. between `/*` and `*/`.
+    pub text: String,
+}
+
+/// Lexer output: code tokens and comments, both in source order.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+/// Lex `src` into tokens + comments. Infallible by design.
+pub fn lex(src: &str) -> Lexed {
+    Lexer { chars: src.chars().collect(), i: 0, line: 1, out: Lexed::default() }.run()
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    i: usize,
+    line: u32,
+    out: Lexed,
+}
+
+impl Lexer {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.i + ahead).copied()
+    }
+
+    /// Advance one char, tracking newlines.
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.i).copied();
+        if let Some(c) = c {
+            self.i += 1;
+            if c == '\n' {
+                self.line += 1;
+            }
+        }
+        c
+    }
+
+    fn push(&mut self, tok: Tok, line: u32) {
+        self.out.tokens.push(Token { tok, line });
+    }
+
+    fn run(mut self) -> Lexed {
+        while let Some(c) = self.peek(0) {
+            let line = self.line;
+            match c {
+                c if c.is_whitespace() => {
+                    self.bump();
+                }
+                '/' if self.peek(1) == Some('/') => self.line_comment(line),
+                '/' if self.peek(1) == Some('*') => self.block_comment(line),
+                '"' => {
+                    self.bump();
+                    self.string_body();
+                    self.push(Tok::Str, line);
+                }
+                '\'' => self.char_or_lifetime(line),
+                c if c.is_ascii_digit() => self.number(line),
+                c if c == '_' || c.is_alphabetic() => self.ident_or_prefixed(line),
+                ':' if self.peek(1) == Some(':') => {
+                    self.bump();
+                    self.bump();
+                    self.push(Tok::PathSep, line);
+                }
+                c => {
+                    self.bump();
+                    self.push(Tok::Punct(c), line);
+                }
+            }
+        }
+        self.out
+    }
+
+    fn line_comment(&mut self, line: u32) {
+        self.bump(); // /
+        self.bump(); // /
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '\n' {
+                break;
+            }
+            text.push(c);
+            self.bump();
+        }
+        self.out.comments.push(Comment { line, line_comment: true, text });
+    }
+
+    fn block_comment(&mut self, line: u32) {
+        self.bump(); // /
+        self.bump(); // *
+        let mut depth = 1usize;
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '/' && self.peek(1) == Some('*') {
+                depth += 1;
+                self.bump();
+                self.bump();
+                text.push_str("/*");
+            } else if c == '*' && self.peek(1) == Some('/') {
+                depth -= 1;
+                self.bump();
+                self.bump();
+                if depth == 0 {
+                    break;
+                }
+                text.push_str("*/");
+            } else {
+                text.push(c);
+                self.bump();
+            }
+        }
+        self.out.comments.push(Comment { line, line_comment: false, text });
+    }
+
+    /// Body of a non-raw string, opening quote already consumed.
+    fn string_body(&mut self) {
+        while let Some(c) = self.bump() {
+            match c {
+                '\\' => {
+                    self.bump(); // escaped char, incl. \" and \\
+                }
+                '"' => break,
+                _ => {}
+            }
+        }
+    }
+
+    /// Raw string: at the first `#` or `"` after an `r`-carrying prefix.
+    fn raw_string_body(&mut self) {
+        let mut hashes = 0usize;
+        while self.peek(0) == Some('#') {
+            hashes += 1;
+            self.bump();
+        }
+        if self.peek(0) != Some('"') {
+            return; // `r#foo` raw identifier — prefix already emitted
+        }
+        self.bump(); // opening quote
+        'outer: while let Some(c) = self.bump() {
+            if c == '"' {
+                // Need exactly `hashes` following #s to close.
+                for k in 0..hashes {
+                    if self.peek(k) != Some('#') {
+                        continue 'outer;
+                    }
+                }
+                for _ in 0..hashes {
+                    self.bump();
+                }
+                break;
+            }
+        }
+    }
+
+    /// `'` starts either a char literal or a lifetime. A char literal is
+    /// `'<escape-or-one-char>'`; anything else (`'a`, `'static`, `'_`)
+    /// is a lifetime tick with no closing quote.
+    fn char_or_lifetime(&mut self, line: u32) {
+        self.bump(); // '
+        match self.peek(0) {
+            Some('\\') => {
+                // Escaped char literal: scan to the closing quote.
+                self.bump();
+                self.bump(); // the escaped character (or `u` of \u{…})
+                while let Some(c) = self.bump() {
+                    if c == '\'' {
+                        break;
+                    }
+                }
+                self.push(Tok::Char, line);
+            }
+            Some(c) if self.peek(1) == Some('\'') => {
+                // 'x' — one char then the closing quote.
+                let _ = c;
+                self.bump();
+                self.bump();
+                self.push(Tok::Char, line);
+            }
+            _ => {
+                // Lifetime: consume ident chars after the tick.
+                let mut name = String::new();
+                while let Some(c) = self.peek(0) {
+                    if c == '_' || c.is_alphanumeric() {
+                        name.push(c);
+                        self.bump();
+                    } else {
+                        break;
+                    }
+                }
+                self.push(Tok::Lifetime(name), line);
+            }
+        }
+    }
+
+    fn number(&mut self, line: u32) {
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c.is_ascii_alphanumeric() || c == '_' {
+                // Exponent sign: 1e-3 / 2E+5.
+                if (c == 'e' || c == 'E')
+                    && matches!(self.peek(1), Some('+') | Some('-'))
+                    && self.peek(2).is_some_and(|d| d.is_ascii_digit())
+                {
+                    text.push(c);
+                    self.bump();
+                    text.push(self.peek(0).unwrap_or('+'));
+                    self.bump();
+                    continue;
+                }
+                text.push(c);
+                self.bump();
+            } else if c == '.' && self.peek(1).is_some_and(|d| d.is_ascii_digit()) {
+                // 1.5 continues the number; 0..n leaves the dots alone.
+                text.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        self.push(Tok::Num(text), line);
+    }
+
+    /// Identifier — or a string prefix (`r""`, `b""`, `br#""#`, `c""`,
+    /// `b'x'`) when the quote follows with no gap.
+    fn ident_or_prefixed(&mut self, line: u32) {
+        let mut name = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '_' || c.is_alphanumeric() {
+                name.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        let raw = matches!(name.as_str(), "r" | "br" | "rb" | "cr" | "rc");
+        let stringy = raw || matches!(name.as_str(), "b" | "c");
+        match self.peek(0) {
+            Some('"') if stringy && raw => {
+                self.raw_string_body();
+                self.push(Tok::Str, line);
+            }
+            Some('"') if stringy => {
+                self.bump();
+                self.string_body();
+                self.push(Tok::Str, line);
+            }
+            Some('#') if raw && self.looks_like_raw_start() => {
+                self.raw_string_body();
+                self.push(Tok::Str, line);
+            }
+            Some('\'') if name == "b" => {
+                // Byte char b'x' — reuse the char path.
+                self.char_or_lifetime(line);
+                if let Some(t) = self.out.tokens.last_mut() {
+                    t.tok = Tok::Char;
+                }
+            }
+            _ => self.push(Tok::Ident(name), line),
+        }
+    }
+
+    /// After `r`: is the upcoming `#…#` run followed by a quote? If not
+    /// (e.g. the raw identifier `r#fn`), it is not a raw string.
+    fn looks_like_raw_start(&self) -> bool {
+        let mut k = 0;
+        while self.peek(k) == Some('#') {
+            k += 1;
+        }
+        self.peek(k) == Some('"')
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .into_iter()
+            .filter_map(|t| match t.tok {
+                Tok::Ident(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn raw_strings_hide_their_contents() {
+        // Tokens inside raw strings (any hash depth) must not leak.
+        let src = r####"let x = r#"a.unwrap() // peqa"#; let y = r"also.unwrap()";"####;
+        let ids = idents(src);
+        assert_eq!(ids, vec!["let", "x", "let", "y"]);
+        let l = lex(src);
+        assert_eq!(l.tokens.iter().filter(|t| t.tok == Tok::Str).count(), 2);
+        assert!(l.comments.is_empty(), "comment inside raw string leaked");
+    }
+
+    #[test]
+    fn nested_block_comments_close_at_depth_zero() {
+        let src = "a /* outer /* inner */ still comment */ b";
+        assert_eq!(idents(src), vec!["a", "b"]);
+        let l = lex("/* x /* y */ z */");
+        assert_eq!(l.comments.len(), 1);
+        assert!(l.comments[0].text.contains("y"));
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime_tick() {
+        let l = lex("let c = 'a'; fn f<'a>(x: &'a str) {} let n = '\\n'; let u = '\\u{1F600}';");
+        let chars = l.tokens.iter().filter(|t| t.tok == Tok::Char).count();
+        let lifetimes: Vec<_> = l
+            .tokens
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Lifetime(s) => Some(s.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(chars, 3, "'a', '\\n' and '\\u{{..}}' are char literals");
+        assert_eq!(lifetimes, vec!["a", "a"], "both <'a> ticks are lifetimes");
+    }
+
+    #[test]
+    fn byte_and_c_strings_and_byte_chars() {
+        let l = lex(r#"let a = b"bytes"; let b2 = br#lit; let c = b'x'; let d = c"cstr";"#);
+        assert_eq!(l.tokens.iter().filter(|t| t.tok == Tok::Str).count(), 2);
+        assert_eq!(l.tokens.iter().filter(|t| t.tok == Tok::Char).count(), 1);
+    }
+
+    #[test]
+    fn numbers_keep_suffixes_and_release_range_dots() {
+        let l = lex("0..n; 1.5f32; 1e-3; 1_000u64");
+        let nums: Vec<_> = l
+            .tokens
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Num(s) => Some(s.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(nums, vec!["0", "1.5f32", "1e-3", "1_000u64"]);
+        // `..` survives as two dots for the range in `0..n`.
+        let dots = l.tokens.iter().filter(|t| t.tok == Tok::Punct('.')).count();
+        assert_eq!(dots, 2);
+    }
+
+    #[test]
+    fn pathsep_is_one_token_and_lines_track() {
+        let l = lex("Vec::new()\n  .clone()");
+        assert!(l.tokens.iter().any(|t| t.tok == Tok::PathSep && t.line == 1));
+        let clone_tok = l
+            .tokens
+            .iter()
+            .find(|t| t.tok == Tok::Ident("clone".into()))
+            .expect("clone ident");
+        assert_eq!(clone_tok.line, 2);
+    }
+
+    #[test]
+    fn string_escapes_do_not_end_early() {
+        let l = lex(r#"let s = "quote \" then.unwrap()"; done"#);
+        assert_eq!(
+            idents(r#"let s = "quote \" then.unwrap()"; done"#),
+            vec!["let", "s", "done"]
+        );
+        assert_eq!(l.tokens.iter().filter(|t| t.tok == Tok::Str).count(), 1);
+    }
+}

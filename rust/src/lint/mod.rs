@@ -1,0 +1,654 @@
+//! `peqa lint` — in-tree static analysis enforcing the repo's
+//! determinism, panic-freedom, and hot-path invariants.
+//!
+//! Why in-tree and token-level: the vendored registry has no `syn`, and
+//! the invariants the PEQA story rests on (fixed-order float
+//! reductions, no panics in serving/store paths, no steady-state
+//! allocation in the compute cores, total-order comparators) are
+//! *lexically visible* — a hand-rolled lexer ([`lexer`]) plus
+//! token-pattern rules ([`rules`]) catches the class without a
+//! dependency. Runtime tests catch the instance; this catches the next
+//! copy of the instance before it runs.
+//!
+//! ## Pipeline
+//!
+//! For each `.rs` file (walk is sorted → deterministic output):
+//! 1. lex into tokens + comments;
+//! 2. parse `peqa-lint:` suppression comments into per-rule line
+//!    ranges (malformed / unjustified / unknown-rule allows become
+//!    `allow-hygiene` diagnostics, and an invalid allow suppresses
+//!    nothing);
+//! 3. strip test-only items (`#[test]` fns, `#[cfg(test)]` items and
+//!    mods — `#[cfg(not(test))]` is *not* stripped);
+//! 4. run every rule (or the `--rule` selection) over the stripped
+//!    stream; drop findings covered by a valid allow;
+//! 5. sort by (file, line, rule).
+//!
+//! ## Suppression syntax
+//!
+//! ```text
+//! // peqa-lint: allow(<rule>[, <rule>...]) -- <justification>
+//! ```
+//!
+//! on its own line directly above the code it exempts. The allow covers
+//! the next *syntactic unit*: the next code line through the line where
+//! its bracket nesting returns to balance — one line for a plain
+//! statement, the whole body when placed above an `fn`/`impl`/`mod`
+//! header (attributes on the item are skipped over). A bare allow with
+//! no `-- justification`, an unknown rule name, or an allow sharing a
+//! line with code is itself a diagnostic (`allow-hygiene`) and
+//! suppresses nothing — justifications are load-bearing, not optional.
+//! `allow-hygiene` runs even under `--rule`, and cannot be allowed.
+//!
+//! Adding a rule: append a `Rule` to [`rules::all`] (name, one-line
+//! invariant, `fn(&FileCtx, &mut Vec<Diagnostic>)` over the token
+//! stream), then add a positive + near-miss-negative fixture pair under
+//! `rust/tests/fixtures/lint/` and a row in `tests/lint_fixtures.rs`.
+//! The engine picks it up everywhere (`--list`, allows, CLI) from the
+//! registry alone.
+
+pub mod lexer;
+pub mod rules;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::json::Value;
+use lexer::{Comment, Tok, Token};
+
+/// Rule name reserved for problems with the suppression comments
+/// themselves. Always on, never suppressible.
+pub const ALLOW_HYGIENE: &str = "allow-hygiene";
+
+/// One finding: `file:line: rule: msg`.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+/// Per-file context handed to every rule: the display path, the module
+/// path derived from it (`src/serve/pool.rs` → `["serve", "pool"]`),
+/// and the test-stripped token stream.
+pub struct FileCtx {
+    pub path: String,
+    pub modpath: Vec<String>,
+    pub tokens: Vec<Token>,
+}
+
+impl FileCtx {
+    /// Ident text at token index `i`, if it is an ident.
+    pub fn ident(&self, i: usize) -> Option<&str> {
+        match self.tokens.get(i).map(|t| &t.tok) {
+            Some(Tok::Ident(s)) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    /// Is token `i` the punct `c`?
+    pub fn punct(&self, i: usize, c: char) -> bool {
+        matches!(self.tokens.get(i).map(|t| &t.tok), Some(Tok::Punct(p)) if *p == c)
+    }
+
+    /// Is token `i` the joined `::`?
+    pub fn pathsep(&self, i: usize) -> bool {
+        matches!(self.tokens.get(i).map(|t| &t.tok), Some(Tok::PathSep))
+    }
+
+    /// Module path starts with `prefix` (e.g. `["serve"]` covers
+    /// `serve`, `serve::pool`, …).
+    pub fn in_mod(&self, prefix: &[&str]) -> bool {
+        prefix.len() <= self.modpath.len()
+            && prefix.iter().zip(&self.modpath).all(|(a, b)| *a == b.as_str())
+    }
+
+    /// Module path equals `exact`.
+    pub fn is_mod(&self, exact: &[&str]) -> bool {
+        exact.len() == self.modpath.len() && self.in_mod(exact)
+    }
+
+    /// Closing index of the delimiter opened at token `open`
+    /// (`(`/`[`/`{`), counting all three kinds as nesting.
+    pub fn match_delim(&self, open: usize) -> Option<usize> {
+        match_delim_toks(&self.tokens, open)
+    }
+
+    /// For each token index, the index of the `}` closing its innermost
+    /// enclosing brace block (`usize::MAX` when at top level or the
+    /// brace is unclosed).
+    pub fn enclosing_brace_close(&self) -> Vec<usize> {
+        let n = self.tokens.len();
+        let mut close_of = vec![usize::MAX; n];
+        let mut stack: Vec<usize> = Vec::new();
+        for i in 0..n {
+            match self.tokens[i].tok {
+                Tok::Punct('{') => stack.push(i),
+                Tok::Punct('}') => {
+                    if let Some(o) = stack.pop() {
+                        close_of[o] = i;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let mut res = vec![usize::MAX; n];
+        stack.clear();
+        for i in 0..n {
+            match self.tokens[i].tok {
+                Tok::Punct('{') => {
+                    res[i] = stack.last().map(|&o| close_of[o]).unwrap_or(usize::MAX);
+                    stack.push(i);
+                }
+                Tok::Punct('}') => {
+                    stack.pop();
+                    res[i] = stack.last().map(|&o| close_of[o]).unwrap_or(usize::MAX);
+                }
+                _ => res[i] = stack.last().map(|&o| close_of[o]).unwrap_or(usize::MAX),
+            }
+        }
+        res
+    }
+
+    /// Emit a finding anchored at token `i`. The engine fills in the
+    /// rule name after the check returns.
+    pub fn diag(&self, out: &mut Vec<Diagnostic>, i: usize, msg: String) {
+        let line = self.tokens.get(i).map(|t| t.line).unwrap_or(0);
+        out.push(Diagnostic { file: self.path.clone(), line, rule: "", msg });
+    }
+}
+
+fn match_delim_toks(toks: &[Token], open: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    for (j, t) in toks.iter().enumerate().skip(open) {
+        match t.tok {
+            Tok::Punct('(') | Tok::Punct('[') | Tok::Punct('{') => depth += 1,
+            Tok::Punct(')') | Tok::Punct(']') | Tok::Punct('}') => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(j);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+fn is_p(toks: &[Token], i: usize, c: char) -> bool {
+    matches!(toks.get(i).map(|t| &t.tok), Some(Tok::Punct(p)) if *p == c)
+}
+
+// ------------------------------------------------------------- test strip
+
+/// `#[test]` on a bare item, or `#[cfg(..)]` that mentions `test`
+/// without `not` (so `#[cfg(not(test))]` survives). `#[cfg_attr(..)]`
+/// never strips: it conditions an attribute, not the item.
+fn is_test_attr(attr: &[Token]) -> bool {
+    let first = match attr.first().map(|t| &t.tok) {
+        Some(Tok::Ident(s)) => s.as_str(),
+        _ => return false,
+    };
+    let has = |name: &str| attr.iter().any(|t| matches!(&t.tok, Tok::Ident(s) if s == name));
+    match first {
+        "test" => attr.len() == 1,
+        "cfg" => has("test") && !has("not"),
+        _ => false,
+    }
+}
+
+/// Skip one item starting at `k` (after its test attribute): any
+/// further attributes, then everything through the matching `}` of its
+/// first top-level brace, or through a top-level `;`.
+fn skip_item(toks: &[Token], mut k: usize) -> usize {
+    let n = toks.len();
+    while k < n && is_p(toks, k, '#') && is_p(toks, k + 1, '[') {
+        match match_delim_toks(toks, k + 1) {
+            Some(c) => k = c + 1,
+            None => return n,
+        }
+    }
+    let mut depth = 0i64;
+    while k < n {
+        match toks[k].tok {
+            Tok::Punct('{') if depth == 0 => {
+                return match_delim_toks(toks, k).map(|c| c + 1).unwrap_or(n);
+            }
+            Tok::Punct('(') | Tok::Punct('[') | Tok::Punct('{') => depth += 1,
+            Tok::Punct(')') | Tok::Punct(']') | Tok::Punct('}') => depth -= 1,
+            Tok::Punct(';') if depth == 0 => return k + 1,
+            _ => {}
+        }
+        k += 1;
+    }
+    n
+}
+
+/// Remove test-only items from the stream (rules never see them).
+fn strip_tests(toks: Vec<Token>) -> Vec<Token> {
+    let n = toks.len();
+    let mut out = Vec::with_capacity(n);
+    let mut i = 0;
+    while i < n {
+        if is_p(&toks, i, '#') && is_p(&toks, i + 1, '[') {
+            if let Some(close) = match_delim_toks(&toks, i + 1) {
+                if is_test_attr(&toks[i + 2..close]) {
+                    i = skip_item(&toks, close + 1);
+                    continue;
+                }
+            }
+        }
+        out.push(toks[i].clone());
+        i += 1;
+    }
+    out
+}
+
+// ------------------------------------------------------------ suppression
+
+/// Valid allows per rule name, as inclusive line ranges.
+#[derive(Default)]
+struct Allows {
+    ranges: BTreeMap<String, Vec<(u32, u32)>>,
+}
+
+impl Allows {
+    fn covers(&self, rule: &str, line: u32) -> bool {
+        self.ranges
+            .get(rule)
+            .is_some_and(|rs| rs.iter().any(|&(s, e)| s <= line && line <= e))
+    }
+}
+
+/// The syntactic unit after `line`: from the first code line below the
+/// comment through the line where bracket nesting returns to balance.
+/// Attributes on the unit are stepped over so an allow above
+/// `#[derive(..)] struct S { .. }` covers the whole struct.
+fn extent_after(toks: &[Token], line: u32) -> (u32, u32) {
+    let n = toks.len();
+    let Some(mut k) = toks.iter().position(|t| t.line > line) else {
+        return (line + 1, line + 1);
+    };
+    let start = toks[k].line;
+    while k < n && is_p(toks, k, '#') && is_p(toks, k + 1, '[') {
+        match match_delim_toks(toks, k + 1) {
+            Some(c) => k = c + 1,
+            None => return (start, start),
+        }
+    }
+    let mut depth = 0i64;
+    let mut end = start;
+    while k < n {
+        match toks[k].tok {
+            Tok::Punct('(') | Tok::Punct('[') | Tok::Punct('{') => depth += 1,
+            Tok::Punct(')') | Tok::Punct(']') | Tok::Punct('}') => depth -= 1,
+            _ => {}
+        }
+        end = toks[k].line;
+        let next_same_line = toks.get(k + 1).map(|t| t.line) == Some(end);
+        if depth <= 0 && !next_same_line {
+            break;
+        }
+        k += 1;
+    }
+    (start, end)
+}
+
+/// Parse every `peqa-lint:` comment: build the allow map and emit
+/// `allow-hygiene` diagnostics for malformed/bare/unknown/misplaced
+/// ones (which then suppress nothing).
+fn parse_allows(path: &str, toks: &[Token], comments: &[Comment]) -> (Allows, Vec<Diagnostic>) {
+    let known: BTreeSet<&str> = rules::all().iter().map(|r| r.name).collect();
+    let token_lines: BTreeSet<u32> = toks.iter().map(|t| t.line).collect();
+    let mut allows = Allows::default();
+    let mut diags = Vec::new();
+    let mut hygiene = |line: u32, msg: String| {
+        diags.push(Diagnostic { file: path.to_string(), line, rule: ALLOW_HYGIENE, msg });
+    };
+    for c in comments {
+        let text = c.text.trim();
+        if !text.starts_with("peqa-lint") {
+            continue;
+        }
+        if !c.line_comment {
+            hygiene(c.line, "peqa-lint allows must be `//` line comments".into());
+            continue;
+        }
+        let mut ok = true;
+        let rest = match text.strip_prefix("peqa-lint:") {
+            Some(r) => r.trim_start(),
+            None => {
+                hygiene(
+                    c.line,
+                    "malformed peqa-lint comment (expected `peqa-lint: allow(<rule>) -- \
+                     <justification>`)"
+                        .into(),
+                );
+                continue;
+            }
+        };
+        let body = match rest.strip_prefix("allow").map(|b| b.trim_start()) {
+            Some(b) if b.starts_with('(') => &b[1..],
+            _ => {
+                hygiene(
+                    c.line,
+                    "malformed peqa-lint comment (expected `peqa-lint: allow(<rule>) -- \
+                     <justification>`)"
+                        .into(),
+                );
+                continue;
+            }
+        };
+        let Some(close) = body.find(')') else {
+            hygiene(c.line, "unclosed `allow(` in peqa-lint comment".into());
+            continue;
+        };
+        let names: Vec<String> =
+            body[..close].split(',').map(|s| s.trim().to_string()).collect();
+        for nm in &names {
+            if nm.is_empty() {
+                hygiene(c.line, "empty rule name in peqa-lint allow".into());
+                ok = false;
+            } else if !known.contains(nm.as_str()) {
+                hygiene(
+                    c.line,
+                    format!("unknown rule `{nm}` in peqa-lint allow (see `peqa lint --list`)"),
+                );
+                ok = false;
+            }
+        }
+        let justification =
+            body[close + 1..].trim_start().strip_prefix("--").map(str::trim).unwrap_or("");
+        if justification.is_empty() {
+            hygiene(
+                c.line,
+                "peqa-lint allow without a justification — write `allow(<rule>) -- <why this \
+                 site is sound>`; the exemption is suspended until it says why"
+                    .into(),
+            );
+            ok = false;
+        }
+        if token_lines.contains(&c.line) {
+            hygiene(
+                c.line,
+                "peqa-lint allow must be on its own line directly above the code it exempts"
+                    .into(),
+            );
+            ok = false;
+        }
+        if !ok {
+            continue;
+        }
+        let (s, e) = extent_after(toks, c.line);
+        for nm in names {
+            allows.ranges.entry(nm).or_default().push((s, e));
+        }
+    }
+    (allows, diags)
+}
+
+// -------------------------------------------------------------- front end
+
+/// `src/serve/pool.rs` → `["serve", "pool"]`; `mod.rs` drops its
+/// segment; `lib.rs` is the crate root (empty path); everything up to
+/// and including the last `src` component is ignored. Paths without a
+/// `src` component (fixture virtual paths) are taken as module paths
+/// directly.
+pub fn modpath_of(path: &str) -> Vec<String> {
+    let norm = path.replace('\\', "/");
+    let comps: Vec<&str> =
+        norm.split('/').filter(|c| !c.is_empty() && *c != ".").collect();
+    let start = comps.iter().rposition(|c| *c == "src").map(|p| p + 1).unwrap_or(0);
+    let mut segs: Vec<String> = comps[start..].iter().map(|s| s.to_string()).collect();
+    if let Some(last) = segs.last_mut() {
+        if let Some(stripped) = last.strip_suffix(".rs") {
+            *last = stripped.to_string();
+        }
+    }
+    if matches!(segs.last().map(|s| s.as_str()), Some("mod") | Some("lib")) {
+        segs.pop();
+    }
+    segs
+}
+
+/// Lint one source text under a (possibly virtual) path. The workhorse
+/// behind [`run`] and the fixture tests.
+pub fn lint_source(path: &str, src: &str, rule_filter: Option<&str>) -> Vec<Diagnostic> {
+    let lexed = lexer::lex(src);
+    let (allows, mut diags) = parse_allows(path, &lexed.tokens, &lexed.comments);
+    let ctx = FileCtx {
+        path: path.to_string(),
+        modpath: modpath_of(path),
+        tokens: strip_tests(lexed.tokens),
+    };
+    for r in rules::all() {
+        if let Some(want) = rule_filter {
+            if r.name != want {
+                continue;
+            }
+        }
+        let mut found = Vec::new();
+        (r.check)(&ctx, &mut found);
+        for mut d in found {
+            d.rule = r.name;
+            if !allows.covers(r.name, d.line) {
+                diags.push(d);
+            }
+        }
+    }
+    diags.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    diags
+}
+
+/// Collect `.rs` files under `root`, sorted, skipping build output and
+/// test/fixture trees (the lint contract covers shipped source; test
+/// code is stripped per-item anyway).
+fn collect_files(root: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    if root.is_dir() {
+        let mut entries: Vec<PathBuf> = fs::read_dir(root)
+            .with_context(|| format!("reading directory {}", root.display()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .collect();
+        entries.sort();
+        for e in entries {
+            let name = e.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default();
+            if e.is_dir() {
+                if matches!(
+                    name.as_str(),
+                    "target" | "fixtures" | "tests" | "benches" | "examples"
+                ) || name.starts_with('.')
+                {
+                    continue;
+                }
+                collect_files(&e, out)?;
+            } else if name.ends_with(".rs") {
+                out.push(e);
+            }
+        }
+    } else {
+        out.push(root.to_path_buf());
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `paths` (files or directories). Output
+/// is sorted by (file, line, rule) — byte-identical across runs.
+pub fn run(paths: &[String], rule_filter: Option<&str>) -> Result<Vec<Diagnostic>> {
+    if let Some(r) = rule_filter {
+        if rules::find(r).is_none() && r != ALLOW_HYGIENE {
+            anyhow::bail!("unknown rule `{r}` — `peqa lint --list` shows the registry");
+        }
+    }
+    let mut files = Vec::new();
+    for p in paths {
+        let path = Path::new(p);
+        if !path.exists() {
+            anyhow::bail!("no such path: {p}");
+        }
+        collect_files(path, &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+    let mut diags = Vec::new();
+    for f in files {
+        let src = fs::read_to_string(&f)
+            .with_context(|| format!("reading {}", f.display()))?;
+        diags.extend(lint_source(&f.to_string_lossy(), &src, rule_filter));
+    }
+    diags.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(diags)
+}
+
+/// Plain-text rendering: one `file:line: rule: msg` per finding.
+pub fn render_text(diags: &[Diagnostic]) -> String {
+    let mut s = String::new();
+    for d in diags {
+        s.push_str(&format!("{}:{}: {}: {}\n", d.file, d.line, d.rule, d.msg));
+    }
+    s
+}
+
+/// JSON rendering (the `--json` artifact): `{"count": N, "findings":
+/// [{"file", "line", "rule", "msg"}, ...]}` — keys sorted, findings in
+/// the deterministic text order.
+pub fn to_json(diags: &[Diagnostic]) -> Value {
+    Value::obj(vec![
+        ("count", Value::num(diags.len() as f64)),
+        (
+            "findings",
+            Value::Arr(
+                diags
+                    .iter()
+                    .map(|d| {
+                        Value::obj(vec![
+                            ("file", Value::str(d.file.as_str())),
+                            ("line", Value::num(f64::from(d.line))),
+                            ("rule", Value::str(d.rule)),
+                            ("msg", Value::str(d.msg.as_str())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn modpath_derivation() {
+        assert_eq!(modpath_of("rust/src/serve/pool.rs"), vec!["serve", "pool"]);
+        assert_eq!(modpath_of("rust/src/quant/mod.rs"), vec!["quant"]);
+        assert_eq!(modpath_of("rust/src/lib.rs"), Vec::<String>::new());
+        assert_eq!(modpath_of("rust/src/main.rs"), vec!["main"]);
+        assert_eq!(modpath_of("serve/dispatch.rs"), vec!["serve", "dispatch"]);
+        assert_eq!(modpath_of("/abs/repo/rust/src/util/stats.rs"), vec!["util", "stats"]);
+    }
+
+    const VIOLATION: &str = "fn f(v: &mut Vec<f32>) {\n    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+
+    #[test]
+    fn justified_allow_suppresses_next_unit() {
+        let src = format!(
+            "// peqa-lint: allow(nan-comparator) -- exercised on NaN-free unit data\n{VIOLATION}"
+        );
+        let diags = lint_source("util/x.rs", &src, None);
+        assert!(diags.is_empty(), "allow above the fn must cover its body: {diags:?}");
+    }
+
+    #[test]
+    fn bare_allow_is_a_diagnostic_and_suppresses_nothing() {
+        let src = format!("// peqa-lint: allow(nan-comparator)\n{VIOLATION}");
+        let diags = lint_source("util/x.rs", &src, None);
+        let rules: Vec<&str> = diags.iter().map(|d| d.rule).collect();
+        assert!(rules.contains(&ALLOW_HYGIENE), "bare allow must be flagged: {diags:?}");
+        assert!(
+            rules.contains(&"nan-comparator"),
+            "an invalid allow must not suppress: {diags:?}"
+        );
+    }
+
+    #[test]
+    fn unknown_rule_in_allow_is_flagged() {
+        let src = format!("// peqa-lint: allow(no-such-rule) -- because\n{VIOLATION}");
+        let diags = lint_source("util/x.rs", &src, None);
+        assert!(
+            diags.iter().any(|d| d.rule == ALLOW_HYGIENE && d.msg.contains("no-such-rule")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn allow_sharing_a_line_with_code_is_flagged() {
+        let src = "let x = 1; // peqa-lint: allow(nan-comparator) -- trailing\n";
+        let diags = lint_source("util/x.rs", src, None);
+        assert!(diags.iter().any(|d| d.rule == ALLOW_HYGIENE), "{diags:?}");
+    }
+
+    #[test]
+    fn allow_on_single_statement_does_not_leak_to_the_next() {
+        let src = "fn f(v: &mut Vec<f32>, w: &mut Vec<f32>) {\n\
+                   // peqa-lint: allow(nan-comparator) -- first sort only\n\
+                   v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n\
+                   w.sort_by(|a, b| a.partial_cmp(b).unwrap());\n\
+                   }\n";
+        let diags = lint_source("util/x.rs", src, None);
+        assert_eq!(diags.len(), 1, "second sort must still fire: {diags:?}");
+        assert_eq!(diags[0].line, 4);
+    }
+
+    #[test]
+    fn test_items_are_stripped_but_not_cfg_not_test() {
+        let src = "#[test]\nfn t() { let _ = a.partial_cmp(b).unwrap(); }\n\
+                   #[cfg(test)]\nmod tests {\n  fn u() { let _ = a.partial_cmp(b).unwrap(); }\n}\n\
+                   #[cfg(not(test))]\nfn real() { let _ = a.partial_cmp(b).unwrap(); }\n";
+        let diags = lint_source("util/x.rs", src, None);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].line, 8, "only the cfg(not(test)) body fires: {diags:?}");
+    }
+
+    #[test]
+    fn module_scoping_gates_hot_path_rules() {
+        let src = "fn f(n: usize) -> Vec<f32> { vec![0.0f32; n] }\n";
+        assert!(
+            lint_source("quant/kernels.rs", src, None)
+                .iter()
+                .any(|d| d.rule == "hot-path-alloc"),
+            "vec! must fire inside quant::kernels"
+        );
+        assert!(
+            lint_source("serve/engine.rs", src, None).is_empty(),
+            "vec! is fine outside the kernel modules"
+        );
+    }
+
+    #[test]
+    fn rule_filter_restricts_but_hygiene_stays_on() {
+        let src = format!("// peqa-lint: allow(nan-comparator)\n{VIOLATION}");
+        let diags = lint_source("util/x.rs", &src, Some("hot-path-alloc"));
+        let rules: Vec<&str> = diags.iter().map(|d| d.rule).collect();
+        assert!(rules.contains(&ALLOW_HYGIENE));
+        assert!(!rules.contains(&"nan-comparator"));
+    }
+
+    #[test]
+    fn json_roundtrips_through_the_in_tree_parser() {
+        let diags = lint_source("util/x.rs", VIOLATION, None);
+        assert_eq!(diags.len(), 1);
+        let text = to_json(&diags).to_string();
+        let v = Value::parse(&text).expect("lint --json must emit valid JSON");
+        assert_eq!(v.usize_of("count").unwrap(), 1);
+        assert_eq!(
+            v.arr_of("findings").unwrap()[0].str_of("rule").unwrap(),
+            "nan-comparator"
+        );
+    }
+}

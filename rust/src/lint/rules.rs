@@ -1,0 +1,432 @@
+//! The shipped rule set. Each rule is a pure function over a file's
+//! (test-stripped) token stream plus its module path; rules never do
+//! I/O and never look at other files, which keeps `peqa lint`
+//! deterministic and embarrassingly simple to test.
+//!
+//! Scoping philosophy: a rule fires only where its invariant is
+//! load-bearing. `panic-free-paths` covers `serve::` and `store::`
+//! (a panic there drops live traffic or corrupts a checkpoint);
+//! `hot-path-alloc` and `float-reduction-order` cover the two compute
+//! cores (`quant::kernels`, `model::blocks`) where ProjScratch /
+//! TapeArena exist precisely so steady-state code never allocates and
+//! reductions keep one fixed order; `nan-comparator` is global because
+//! a NaN comparator panic is wrong everywhere. See `lint::mod` docs
+//! for the suppression syntax.
+
+use super::lexer::Tok;
+use super::{Diagnostic, FileCtx};
+
+/// A named lint rule: `check` pushes diagnostics for `ctx`.
+pub struct Rule {
+    pub name: &'static str,
+    /// One-line invariant statement, shown by `peqa lint --list`.
+    pub invariant: &'static str,
+    pub check: fn(&FileCtx, &mut Vec<Diagnostic>),
+}
+
+/// Registry of all shipped rules, in stable display order.
+pub fn all() -> &'static [Rule] {
+    &[
+        Rule {
+            name: "nan-comparator",
+            invariant: "comparators must be total orders: `partial_cmp(..).unwrap()` \
+                        panics (or lies) on NaN — key with `total_cmp`",
+            check: nan_comparator,
+        },
+        Rule {
+            name: "panic-free-paths",
+            invariant: "no unwrap/expect/panic!/assert! in non-test serve::/store:: code \
+                        — a panic drops live traffic or poisons a checkpoint",
+            check: panic_free_paths,
+        },
+        Rule {
+            name: "hot-path-alloc",
+            invariant: "no per-call allocation (Vec::new/vec!/to_vec/format!/String::from/\
+                        .clone()) in quant::kernels / model::blocks — scratch is pooled",
+            check: hot_path_alloc,
+        },
+        Rule {
+            name: "float-reduction-order",
+            invariant: "no iterator float reductions (.sum::<f32>/fold) in kernel modules \
+                        — bitwise reproducibility requires one explicit accumulation order",
+            check: float_reduction_order,
+        },
+        Rule {
+            name: "lock-across-blocking",
+            invariant: "no mutex guard lexically live across recv/send/join in serve:: \
+                        — the pool's bounded channels make that a real deadlock shape",
+            check: lock_across_blocking,
+        },
+        Rule {
+            name: "nondeterminism-sources",
+            invariant: "no HashMap/HashSet in artifact/numeric paths, no Instant::now/\
+                        SystemTime outside bench//util::stats//util::log, no bare \
+                        thread::spawn (scoped threads are the house rule)",
+            check: nondeterminism_sources,
+        },
+    ]
+}
+
+/// Look up a rule by name.
+pub fn find(name: &str) -> Option<&'static Rule> {
+    all().iter().find(|r| r.name == name)
+}
+
+// ---------------------------------------------------------------- helpers
+
+fn floatish(text: &str) -> bool {
+    // Radix prefixes first: `0x1f32` is an integer despite its "suffix".
+    if text.starts_with("0x") || text.starts_with("0b") || text.starts_with("0o") {
+        return false;
+    }
+    if text.ends_with("f32") || text.ends_with("f64") {
+        return true;
+    }
+    // Integer suffixes would otherwise trip the exponent check below
+    // ("0usize" contains an 'e').
+    if ["usize", "isize", "u128", "i128", "u64", "i64", "u32", "i32", "u16", "i16", "u8", "i8"]
+        .iter()
+        .any(|s| text.ends_with(s))
+    {
+        return false;
+    }
+    text.contains('.') || text.contains('e') || text.contains('E')
+}
+
+// ------------------------------------------------------------------ rules
+
+/// `partial_cmp(..)` immediately unwrapped/defaulted in comparator
+/// position. The safe spelling is `a.total_cmp(b)`.
+fn nan_comparator(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
+    let n = ctx.tokens.len();
+    for i in 0..n {
+        if ctx.ident(i) != Some("partial_cmp") || !ctx.punct(i + 1, '(') {
+            continue;
+        }
+        let Some(close) = ctx.match_delim(i + 1) else { continue };
+        if ctx.punct(close + 1, '.') {
+            if let Some(m) = ctx.ident(close + 2) {
+                if matches!(m, "unwrap" | "expect" | "unwrap_or" | "unwrap_or_else") {
+                    ctx.diag(
+                        out,
+                        i,
+                        format!(
+                            "`partial_cmp(..).{m}(..)` is not a total order (NaN panics or \
+                             mis-sorts); key the comparison with `f32::total_cmp`/`f64::total_cmp`"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// unwrap/expect/panic-family macros in non-test `serve::` / `store::`.
+/// `debug_assert*` stays legal (stripped in release); mutex poison goes
+/// through `util::sync::{lock_clean, try_lock_clean, wait_clean}`.
+fn panic_free_paths(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
+    if !(ctx.in_mod(&["serve"]) || ctx.in_mod(&["store"])) {
+        return;
+    }
+    let n = ctx.tokens.len();
+    for i in 0..n {
+        if ctx.punct(i, '.') && ctx.punct(i + 2, '(') {
+            if let Some(m) = ctx.ident(i + 1) {
+                if m == "unwrap" || m == "expect" {
+                    ctx.diag(
+                        out,
+                        i + 1,
+                        format!(
+                            "`.{m}()` in a serve/store path can panic in production; return a \
+                             typed error, use util::sync for mutex poison, or allow with a \
+                             written invariant"
+                        ),
+                    );
+                }
+            }
+        }
+        if ctx.punct(i + 1, '!') {
+            if let Some(m) = ctx.ident(i) {
+                if matches!(
+                    m,
+                    "panic" | "unreachable" | "todo" | "unimplemented" | "assert" | "assert_eq"
+                        | "assert_ne"
+                ) {
+                    ctx.diag(
+                        out,
+                        i,
+                        format!(
+                            "`{m}!` in a serve/store path aborts live work; prefer a typed \
+                             error (`debug_assert*` is fine for invariants checked in tests)"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Per-call allocation in the two compute cores.
+fn hot_path_alloc(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
+    if !(ctx.is_mod(&["quant", "kernels"]) || ctx.is_mod(&["model", "blocks"])) {
+        return;
+    }
+    let n = ctx.tokens.len();
+    for i in 0..n {
+        if ctx.ident(i) == Some("Vec") && ctx.pathsep(i + 1) && ctx.ident(i + 2) == Some("new") {
+            ctx.diag(out, i, "`Vec::new` in a kernel module — pool the buffer through \
+                              ProjScratch/TapeArena or allocate once at entry".into());
+        }
+        if ctx.ident(i) == Some("String") && ctx.pathsep(i + 1) && ctx.ident(i + 2) == Some("from")
+        {
+            ctx.diag(out, i, "`String::from` allocates in a kernel module".into());
+        }
+        if ctx.punct(i + 1, '!') {
+            match ctx.ident(i) {
+                Some("vec") => ctx.diag(out, i, "`vec![..]` allocates in a kernel module — \
+                                                 pool it or allocate once at entry".into()),
+                Some("format") => {
+                    ctx.diag(out, i, "`format!` allocates in a kernel module".into())
+                }
+                _ => {}
+            }
+        }
+        if ctx.punct(i, '.') && ctx.punct(i + 2, '(') {
+            match ctx.ident(i + 1) {
+                Some("to_vec") => {
+                    ctx.diag(out, i + 1, "`.to_vec()` copies in a kernel module".into())
+                }
+                Some("clone") => ctx.diag(out, i + 1, "`.clone()` in a kernel module — \
+                                                       borrow or pool instead".into()),
+                _ => {}
+            }
+        }
+    }
+}
+
+/// Iterator float reductions in kernel modules: `.sum::<f32>()`,
+/// `.product::<f64>()`, or `.fold(<float literal>, ..)`. Order must be
+/// an explicit loop so the accumulation order is pinned.
+fn float_reduction_order(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
+    if !(ctx.is_mod(&["quant", "kernels"]) || ctx.is_mod(&["model", "blocks"])) {
+        return;
+    }
+    let n = ctx.tokens.len();
+    for i in 0..n {
+        if !ctx.punct(i, '.') {
+            continue;
+        }
+        let m = ctx.ident(i + 1);
+        if matches!(m, Some("sum") | Some("product"))
+            && ctx.pathsep(i + 2)
+            && ctx.punct(i + 3, '<')
+        {
+            if matches!(ctx.ident(i + 4), Some("f32") | Some("f64")) {
+                ctx.diag(
+                    out,
+                    i + 1,
+                    format!(
+                        "iterator `.{}::<float>()` leaves the accumulation order to the \
+                         iterator; write a fixed-order loop (bitwise-invariance contract)",
+                        m.unwrap_or("sum")
+                    ),
+                );
+            }
+        }
+        if m == Some("fold") && ctx.punct(i + 2, '(') {
+            let mut k = i + 3;
+            if ctx.punct(k, '-') {
+                k += 1;
+            }
+            if let Some(Tok::Num(t)) = ctx.tokens.get(k).map(|t| &t.tok) {
+                if floatish(t) {
+                    ctx.diag(
+                        out,
+                        i + 1,
+                        "`.fold` over a float accumulator hides the reduction order; \
+                         write a fixed-order loop (bitwise-invariance contract)"
+                            .into(),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// A mutex guard bound by `let` whose rhs acquires a lock
+/// (`.lock()`/`.try_lock()` or the util::sync helpers) and that stays
+/// lexically live while the same block calls `.recv()`/`.send()`/
+/// `.join()`. Lexical liveness over-approximates (an early `return`
+/// still counts) — `drop(guard)` before the blocking call, or an
+/// allow, resolves it.
+fn lock_across_blocking(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
+    if !ctx.in_mod(&["serve"]) {
+        return;
+    }
+    let n = ctx.tokens.len();
+    // Innermost enclosing '{' for every token, by index; usize::MAX = none.
+    let enclosing = ctx.enclosing_brace_close();
+    for i in 0..n {
+        if ctx.ident(i) != Some("let") {
+            continue;
+        }
+        // Find the binding '=' before any ';' / '{' / '}'.
+        let mut eq = None;
+        let mut j = i + 1;
+        while j < n {
+            match &ctx.tokens[j].tok {
+                Tok::Punct('=') => {
+                    // Skip `==`, `=>`, `<=`-style composites.
+                    if ctx.punct(j + 1, '=') || ctx.punct(j + 1, '>') || ctx.punct(j - 1, '=')
+                        || ctx.punct(j - 1, '<') || ctx.punct(j - 1, '>') || ctx.punct(j - 1, '!')
+                    {
+                        j += 1;
+                        continue;
+                    }
+                    eq = Some(j);
+                    break;
+                }
+                Tok::Punct(';') | Tok::Punct('{') | Tok::Punct('}') => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        let Some(eq) = eq else { continue };
+        // Guard name: last ident of the pattern that isn't `mut`/`Some`/`Ok`.
+        let guard = (i + 1..eq)
+            .rev()
+            .filter_map(|k| ctx.ident(k))
+            .find(|s| !matches!(*s, "mut" | "Some" | "Ok" | "Err" | "ref"));
+        let Some(guard) = guard else { continue };
+        // rhs: eq+1 until ';' or '{' at relative delimiter depth 0.
+        let mut depth = 0i32;
+        let mut k = eq + 1;
+        let mut acquires = false;
+        while k < n {
+            match &ctx.tokens[k].tok {
+                Tok::Punct('(') | Tok::Punct('[') => depth += 1,
+                Tok::Punct(')') | Tok::Punct(']') => depth -= 1,
+                Tok::Punct(';') | Tok::Punct('{') if depth <= 0 => break,
+                Tok::Ident(s)
+                    if matches!(
+                        s.as_str(),
+                        "lock" | "try_lock" | "lock_clean" | "try_lock_clean" | "wait_clean"
+                    ) =>
+                {
+                    acquires = true;
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        if !acquires {
+            continue;
+        }
+        let stmt_end = k;
+        let scope_end = enclosing.get(i).copied().unwrap_or(n).min(n);
+        // Scan the rest of the enclosing block for a blocking call,
+        // stopping early at an explicit drop(guard).
+        let mut p = stmt_end;
+        while p < scope_end {
+            if ctx.ident(p) == Some("drop")
+                && ctx.punct(p + 1, '(')
+                && ctx.ident(p + 2) == Some(guard)
+                && ctx.punct(p + 3, ')')
+            {
+                break;
+            }
+            if ctx.punct(p, '.') && ctx.punct(p + 2, '(') {
+                if let Some(m) = ctx.ident(p + 1) {
+                    if matches!(m, "recv" | "recv_timeout" | "send" | "join") {
+                        ctx.diag(
+                            out,
+                            p + 1,
+                            format!(
+                                "lock guard `{guard}` (bound above) is lexically live across \
+                                 `.{m}()` — blocking on a channel/thread while holding a lock \
+                                 is the pool deadlock shape; drop the guard first"
+                            ),
+                        );
+                        break;
+                    }
+                }
+            }
+            p += 1;
+        }
+    }
+}
+
+/// Hash-order iteration in artifact/numeric paths, ambient wall-clock
+/// reads outside the modules whose *job* is timing, and bare
+/// `thread::spawn` (scoped threads / `thread::Builder` are the rule).
+fn nondeterminism_sources(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
+    let hash_scoped = matches!(
+        ctx.modpath.first().map(|s| s.as_str()),
+        Some("store") | Some("model") | Some("tokenizer") | Some("data") | Some("json")
+            | Some("eval") | Some("quant") | Some("train") | Some("pipeline")
+            | Some("coordinator") | Some("bench")
+    );
+    let clock_ok = ctx.modpath.first().map(|s| s.as_str()) == Some("bench")
+        || ctx.is_mod(&["util", "stats"])
+        || ctx.is_mod(&["util", "log"]);
+    let n = ctx.tokens.len();
+    let mut in_use = false;
+    for i in 0..n {
+        match &ctx.tokens[i].tok {
+            Tok::Ident(s) if s == "use" => in_use = true,
+            Tok::Punct(';') => in_use = false,
+            _ => {}
+        }
+        if in_use {
+            continue;
+        }
+        if hash_scoped {
+            if let Some(s) = ctx.ident(i) {
+                if s == "HashMap" || s == "HashSet" {
+                    ctx.diag(
+                        out,
+                        i,
+                        format!(
+                            "`{s}` in an artifact/numeric path iterates in hash order; use \
+                             BTreeMap/BTreeSet or sort before output (or allow with a written \
+                             order-independence argument)"
+                        ),
+                    );
+                }
+            }
+        }
+        if !clock_ok {
+            if ctx.ident(i) == Some("Instant")
+                && ctx.pathsep(i + 1)
+                && ctx.ident(i + 2) == Some("now")
+            {
+                ctx.diag(
+                    out,
+                    i,
+                    "`Instant::now()` outside bench/util::stats/util::log makes output \
+                     wall-clock dependent; metrics sites carry an allow naming the metric"
+                        .into(),
+                );
+            }
+            if ctx.ident(i) == Some("SystemTime") {
+                ctx.diag(
+                    out,
+                    i,
+                    "`SystemTime` outside bench/util::stats/util::log makes output \
+                     wall-clock dependent"
+                        .into(),
+                );
+            }
+        }
+        if ctx.ident(i) == Some("thread") && ctx.pathsep(i + 1) && ctx.ident(i + 2) == Some("spawn")
+        {
+            ctx.diag(
+                out,
+                i,
+                "bare `thread::spawn` detaches from the panic/shutdown story; use \
+                 `thread::scope` or `thread::Builder` with a joined handle"
+                    .into(),
+            );
+        }
+    }
+}

@@ -11,6 +11,7 @@
 //!   serve      [--model m.packed] host multi-task packed-decode serving
 //!   serve-demo --size n3 [--requests N] multi-task adapter-swap serving demo [xla]
 //!   fsck       <artifact|dir> […]       verify artifact checksums, print headers
+//!   lint       [paths…]                 in-tree static analysis (peqa::lint)
 //!   memreport                           Table-1 style DRAM model (paper dims)
 //!
 //! Commands marked [xla] drive AOT artifacts through the PJRT runtime and
@@ -19,6 +20,8 @@
 //! train::HostPeqaTuner) and the `serve` host decode engine — work in the
 //! default build, closing the quantize → PEQA-tune → scale-swap-serve loop
 //! without any device runtime.
+
+#![deny(unsafe_code)]
 
 use anyhow::{bail, Result};
 use peqa::cli::Args;
@@ -117,6 +120,12 @@ peqa — PEQA (NeurIPS 2023) reproduction CLI
                    .adapter / .packed / journal / registry artifacts;
                    exits nonzero on corruption, directories expand to
                    their files)
+  peqa lint       [paths...] [--rule NAME] [--list] [--json]
+                  (in-tree static analysis: determinism, panic-freedom
+                   and hot-path invariants; paths default to rust/src;
+                   deterministic file:line:rule output, exits nonzero
+                   on any finding; exemptions are written in-source as
+                   `// peqa-lint: allow(<rule>) -- <justification>`)
   peqa memreport
 
 Methods: full | lora_qv4 | lora_qkvo16 | qat_b{3,4} | peqa_b{3,4}_{gc,g16,g32,g64}
@@ -269,6 +278,14 @@ fn run() -> Result<()> {
             let paths = args.positional.clone();
             args.finish()?;
             fsck_cmd(&paths)
+        }
+        "lint" => {
+            let paths = args.positional.clone();
+            let rule = args.opt("rule");
+            let list = args.flag("list");
+            let json = args.flag("json");
+            args.finish()?;
+            lint_cmd(&paths, rule.as_deref(), list, json)
         }
         "memreport" => {
             args.finish()?;
@@ -652,6 +669,8 @@ fn run_single_task(mut o: SingleRun) -> Result<()> {
 
     let start_step = o.tuner.step_count();
     let mut last_recorded = start_step;
+    // peqa-lint: allow(nondeterminism-sources) -- wall time for the
+    // steps/s progress line only; training math is seeded.
     let t0 = std::time::Instant::now();
     while o.tuner.step_count() < o.steps {
         let b = o.batcher.next_batch();
@@ -992,6 +1011,8 @@ fn finetune_host_multi(o: FinetuneMultiOpts) -> Result<()> {
         evals.push(eval_s);
     }
 
+    // peqa-lint: allow(nondeterminism-sources) -- wall time for the
+    // steps/s progress line only; training math is seeded.
     let t0 = std::time::Instant::now();
     for _ in 0..o.steps {
         for (ti, batcher) in batchers.iter_mut().enumerate() {
@@ -1139,6 +1160,47 @@ fn fsck_cmd(paths: &[String]) -> Result<()> {
     );
     if corrupt > 0 {
         bail!("fsck: {corrupt} corrupt file(s)");
+    }
+    Ok(())
+}
+
+/// `peqa lint`: run the in-tree static analysis ([`peqa::lint`]) over
+/// the given paths (default `rust/src`). Deterministic
+/// `file:line: rule: msg` output sorted by (file, line, rule); exits
+/// nonzero on any finding. `--json` prints the machine-readable report
+/// instead (same order); `--rule NAME` restricts to one rule
+/// (allow-hygiene diagnostics always run); `--list` prints the rule
+/// registry with the invariant each rule enforces.
+fn lint_cmd(paths: &[String], rule: Option<&str>, list: bool, json: bool) -> Result<()> {
+    if list {
+        for r in peqa::lint::rules::all() {
+            println!("{:24} {}", r.name, r.invariant);
+        }
+        println!(
+            "{:24} {}",
+            peqa::lint::ALLOW_HYGIENE,
+            "suppressions must parse, name a known rule, sit on their own line, and \
+             carry `-- <justification>` (always on, not suppressible)"
+        );
+        return Ok(());
+    }
+    let default_paths = vec!["rust/src".to_string()];
+    let paths = if paths.is_empty() { &default_paths } else { paths };
+    let diags = peqa::lint::run(paths, rule)?;
+    if json {
+        println!("{}", peqa::lint::to_json(&diags));
+    } else {
+        print!("{}", peqa::lint::render_text(&diags));
+    }
+    if !diags.is_empty() {
+        bail!(
+            "lint: {} finding(s) — fix, or exempt with \
+             `// peqa-lint: allow(<rule>) -- <justification>`",
+            diags.len()
+        );
+    }
+    if !json {
+        println!("lint: clean ({} path(s))", paths.len());
     }
     Ok(())
 }

@@ -89,6 +89,9 @@ pub(crate) struct LayerNames {
 }
 
 impl LayerNames {
+    // peqa-lint: allow(hot-path-alloc) -- construction-time only: these
+    // strings are built once per layer at engine/tuner setup precisely
+    // so the per-step loops never format names.
     pub fn new(layer: usize) -> LayerNames {
         let lp = format!("layers.{layer}");
         LayerNames {
@@ -168,8 +171,12 @@ pub fn proj_into(
             pm.matmul_t_rows_scratch(x, m, threads, &mut out[..m * pm.rows], &mut scratch.yt)
         }
     } else {
+        // peqa-lint: allow(hot-path-alloc) -- dense-fallback lookup only:
+        // packed models (the serving/training hot path) take the branch
+        // above; this branch exists for fp reference checkpoints.
+        let wname = format!("{name}.w");
         let w = model
-            .fp_tensor(&format!("{name}.w"))
+            .fp_tensor(&wname)
             .ok_or_else(|| anyhow!("no projection '{name}'"))?;
         let (o, _) = w.dims2()?;
         ensure(out, m * o);
@@ -260,6 +267,9 @@ pub fn rms_norm_rows_into(
 }
 
 /// Allocating [`rms_norm_rows_into`] (reference paths + tests).
+// peqa-lint: allow(hot-path-alloc) -- deliberately-allocating reference
+// wrapper; steady-state callers use rms_norm_rows_into with a pooled
+// slab.
 pub fn rms_norm_rows(x: &[f32], g: &[f32], b: usize, d: usize) -> Vec<f32> {
     let mut out = Vec::new();
     rms_norm_rows_into(x, g, b, d, &mut out, None);

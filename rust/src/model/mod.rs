@@ -39,6 +39,9 @@ use crate::util::Pcg32;
 pub struct Checkpoint {
     names: Vec<String>,
     tensors: Vec<Tensor>,
+    // peqa-lint: allow(nondeterminism-sources) -- pure lookup index,
+    // never iterated: every traversal (iter, save, names) walks the
+    // insertion-ordered `names` Vec.
     index: HashMap<String, usize>,
 }
 
@@ -426,6 +429,9 @@ pub struct PackedModel {
     /// Tensor names in original file order (wq/s/z names included).
     names: Vec<String>,
     /// Quantized projections by dotted prefix (name minus ".wq").
+    // peqa-lint: allow(nondeterminism-sources) -- pure lookup table,
+    // never iterated: ordered walks go through the file-ordered `names`
+    // Vec (prefixes(), save paths).
     matrices: HashMap<String, PackedMatrix>,
     /// Every tensor that is not part of a (wq, s, z) triple.
     fp: Checkpoint,
@@ -511,6 +517,9 @@ impl PackedModel {
         let bits = header.usize_of("bits")? as u8;
         let mut names = Vec::new();
         let mut streams: Vec<(String, Vec<usize>, Vec<u8>)> = Vec::new();
+        // peqa-lint: allow(nondeterminism-sources) -- assembly scratch:
+        // only `remove(key)` lookups; the build walks the file-ordered
+        // `streams`/`names` Vecs, never this map's iteration order.
         let mut dense: HashMap<String, Tensor> = HashMap::new();
         for item in header.arr_of("tensors")? {
             let name = item.str_of("name")?.to_string();
@@ -531,6 +540,9 @@ impl PackedModel {
         }
         // Assemble (wq, s, z) triples into packed matrices; whatever is
         // left over is a plain fp tensor.
+        // peqa-lint: allow(nondeterminism-sources) -- becomes the
+        // lookup-only `PackedModel::matrices` table; insertion here walks
+        // the file-ordered `streams` Vec and nothing iterates the map.
         let mut matrices = HashMap::new();
         for (name, shape, stream) in streams {
             let prefix = name
@@ -568,6 +580,8 @@ impl PackedModel {
         }
         let qmax = (1u16 << bits) - 1;
         let names: Vec<String> = ck.names().to_vec();
+        // peqa-lint: allow(nondeterminism-sources) -- lookup-only table
+        // (see PackedModel::matrices); built in checkpoint order.
         let mut matrices = HashMap::new();
         let mut fp = Checkpoint::new();
         for (name, t) in ck.iter() {

@@ -316,6 +316,9 @@ pub fn optq_quantize(
     bits: u8,
     group: Option<usize>,
 ) -> Result<Checkpoint> {
+    // peqa-lint: allow(nondeterminism-sources) -- lookup-only: keyed
+    // gets during quantize_with; the projection walk itself follows the
+    // checkpoint's ordered names, never this map.
     let hmap: std::collections::HashMap<&str, &Tensor> =
         hessians.iter().map(|(n, t)| (n.as_str(), t)).collect();
     quantize_with(fp, |prefix, w| {

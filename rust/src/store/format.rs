@@ -97,6 +97,39 @@ pub fn crc32(bytes: &[u8]) -> u32 {
     c.finish()
 }
 
+// -- little-endian field readers -------------------------------------------
+//
+// Store parsers bounds-check with `need()` before every field, but the
+// readers themselves still must not be able to panic on a short slice
+// (`panic-free-paths`): out-of-range bytes read as zero and the
+// surrounding length/checksum bookkeeping turns that into a typed error.
+
+/// First `N` bytes at `off`, zero-padded past the end of `bytes`.
+pub(crate) fn le_bytes<const N: usize>(bytes: &[u8], off: usize) -> [u8; N] {
+    let mut out = [0u8; N];
+    let end = off.saturating_add(N).min(bytes.len());
+    if off < end {
+        out[..end - off].copy_from_slice(&bytes[off..end]);
+    }
+    out
+}
+
+pub(crate) fn le_u16(bytes: &[u8], off: usize) -> u16 {
+    u16::from_le_bytes(le_bytes(bytes, off))
+}
+
+pub(crate) fn le_u32(bytes: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(le_bytes(bytes, off))
+}
+
+pub(crate) fn le_u64(bytes: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(le_bytes(bytes, off))
+}
+
+pub(crate) fn le_f32(bytes: &[u8], off: usize) -> f32 {
+    f32::from_le_bytes(le_bytes(bytes, off))
+}
+
 // -- atomic writes ----------------------------------------------------------
 
 static TMP_COUNTER: AtomicU64 = AtomicU64::new(0);
@@ -161,12 +194,18 @@ pub struct ContainerWriter {
 }
 
 impl ContainerWriter {
+    // peqa-lint: allow(panic-free-paths) -- writer-side programmer-error
+    // guard: kind strings are compile-time literals ("checkpoint",
+    // "packed", ...); a 256-byte kind is a bug in this crate, not input.
     pub fn new(kind: &str) -> ContainerWriter {
         assert!(kind.len() < 256, "container kind too long");
         ContainerWriter { kind: kind.to_string(), sections: Vec::new() }
     }
 
     /// Append one named payload section (order is preserved).
+    // peqa-lint: allow(panic-free-paths) -- writer-side programmer-error
+    // guard: section names come from tensor names already bounded far
+    // below u16::MAX; exceeding it is a bug, not corrupt input.
     pub fn section(&mut self, name: &str, payload: Vec<u8>) -> &mut Self {
         assert!(name.len() <= u16::MAX as usize, "section name too long");
         self.sections.push((name.to_string(), payload));
@@ -254,7 +293,7 @@ impl Container {
         }
         let mut off = CONTAINER_MAGIC.len();
         need(off, 4, "format version")?;
-        let version = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+        let version = le_u32(bytes, off);
         off += 4;
         if version != CONTAINER_VERSION {
             bail!("{label}: container format version {version} (this build reads {CONTAINER_VERSION})");
@@ -268,12 +307,12 @@ impl Container {
             .to_string();
         off += klen;
         need(off, 4, "section count")?;
-        let nsect = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+        let nsect = le_u32(bytes, off) as usize;
         off += 4;
         let mut metas: Vec<(String, u64, u32)> = Vec::with_capacity(nsect);
         for i in 0..nsect {
             need(off, 2, "section name length")?;
-            let nlen = u16::from_le_bytes(bytes[off..off + 2].try_into().unwrap()) as usize;
+            let nlen = le_u16(bytes, off) as usize;
             off += 2;
             need(off, nlen, "section name")?;
             let name = std::str::from_utf8(&bytes[off..off + nlen])
@@ -281,13 +320,13 @@ impl Container {
                 .to_string();
             off += nlen;
             need(off, 12, "section length + checksum")?;
-            let len = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
-            let crc = u32::from_le_bytes(bytes[off + 8..off + 12].try_into().unwrap());
+            let len = le_u64(bytes, off);
+            let crc = le_u32(bytes, off + 8);
             off += 12;
             metas.push((name, len, crc));
         }
         need(off, 4, "header checksum")?;
-        let hcrc = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+        let hcrc = le_u32(bytes, off);
         let actual_hcrc = crc32(&bytes[..off]);
         if hcrc != actual_hcrc {
             bail!(
@@ -322,7 +361,7 @@ impl Container {
             sections.push(Section { name, crc, payload });
         }
         need(off, 4, "trailer checksum")?;
-        let tcrc = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+        let tcrc = le_u32(bytes, off);
         let actual_tcrc = crc32(&bytes[..off]);
         if tcrc != actual_tcrc {
             bail!(

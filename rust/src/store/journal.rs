@@ -43,7 +43,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::format::{crc32, Crc32};
+use super::format::{crc32, le_f32, le_u32, le_u64, Crc32};
 use crate::json::Value;
 
 /// Magic of the journal format.
@@ -152,6 +152,10 @@ pub struct TrainRecord {
 }
 
 impl TrainRecord {
+    // peqa-lint: allow(panic-free-paths) -- writer-side invariant: the
+    // three optimizer slot vectors are built in lockstep by the trainer;
+    // a mismatch is a bug in this crate, and persisting a malformed
+    // record would be strictly worse than failing the writing run.
     fn to_bytes(&self) -> Vec<u8> {
         assert_eq!(self.params.len(), self.opt_m.len(), "record slot arity");
         assert_eq!(self.params.len(), self.opt_v.len(), "record slot arity");
@@ -230,16 +234,16 @@ impl<'a> Reader<'a> {
     }
 
     fn u32(&mut self, what: &str) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+        Ok(le_u32(self.take(4, what)?, 0))
     }
 
     fn u64(&mut self, what: &str) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+        Ok(le_u64(self.take(8, what)?, 0))
     }
 
     fn f32s(&mut self, n: usize, what: &str) -> Result<Vec<f32>> {
         let raw = self.take(n.checked_mul(4).ok_or_else(|| anyhow!("{what}: size overflow"))?, what)?;
-        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+        Ok(raw.chunks_exact(4).map(|c| le_f32(c, 0)).collect())
     }
 }
 
@@ -340,20 +344,20 @@ pub fn read_journal(path: &Path) -> Result<(JournalMeta, Vec<TrainRecord>, Optio
     }
     let mut off = JOURNAL_MAGIC.len();
     need(off, 4, "format version")?;
-    let version = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+    let version = le_u32(&bytes, off);
     off += 4;
     if version != JOURNAL_VERSION {
         bail!("{label}: journal format version {version} (this build reads {JOURNAL_VERSION})");
     }
     need(off, 8, "meta length")?;
-    let mlen = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()) as usize;
+    let mlen = le_u64(&bytes, off) as usize;
     off += 8;
     need(off, mlen, "meta JSON")?;
     let meta_str = std::str::from_utf8(&bytes[off..off + mlen])
         .with_context(|| format!("{label}: journal meta is not UTF-8"))?;
     off += mlen;
     need(off, 4, "header checksum")?;
-    let hcrc = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+    let hcrc = le_u32(&bytes, off);
     let actual = crc32(&bytes[..off]);
     if hcrc != actual {
         bail!(
@@ -380,8 +384,8 @@ pub fn read_journal(path: &Path) -> Result<(JournalMeta, Vec<TrainRecord>, Optio
             });
             break;
         }
-        let plen = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
-        let crc = u32::from_le_bytes(bytes[off + 4..off + 8].try_into().unwrap());
+        let plen = le_u32(&bytes, off) as usize;
+        let crc = le_u32(&bytes, off + 4);
         off += 8;
         if off + plen > bytes.len() {
             torn = Some(TornTail {

@@ -180,10 +180,15 @@ impl Registry {
             return Ok(Vec::new());
         }
         let m = self.manifest()?;
+        // peqa-lint: allow(nondeterminism-sources) -- membership-only:
+        // `contains` checks during the prune scan; never iterated.
         let live: std::collections::HashSet<&str> =
             m.tasks.iter().map(|(_, f)| f.as_str()).collect();
-        let mut by_task: std::collections::HashMap<String, Vec<(u64, String)>> =
-            std::collections::HashMap::new();
+        // peqa-lint: allow(nondeterminism-sources) -- the per-task prune
+        // decision depends only on that task's sorted files plus `live`,
+        // so visiting tasks in hash order deletes the same set, and the
+        // returned list is sorted below.
+        let mut by_task = std::collections::HashMap::<String, Vec<(u64, String)>>::new();
         for entry in std::fs::read_dir(&self.dir)
             .with_context(|| format!("reading registry {}", self.dir.display()))?
         {

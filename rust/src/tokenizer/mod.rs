@@ -25,6 +25,9 @@ pub struct Tokenizer {
     /// merge rank -> (left id, right id); new id = FIRST_MERGE + rank.
     merges: Vec<(u32, u32)>,
     /// (left, right) -> rank, for O(1) lookup during encode.
+    // peqa-lint: allow(nondeterminism-sources) -- lookup-only: encode
+    // scans token pairs in sequence order and `get`s ranks; nothing
+    // iterates this map.
     ranks: HashMap<(u32, u32), usize>,
     vocab_size: usize,
 }
@@ -33,6 +36,8 @@ impl Tokenizer {
     /// Byte-level tokenizer with no merges.
     pub fn byte_level(vocab_size: usize) -> Self {
         assert!(vocab_size >= FIRST_MERGE as usize);
+        // peqa-lint: allow(nondeterminism-sources) -- lookup-only rank
+        // index (see the field's note).
         Tokenizer { merges: vec![], ranks: HashMap::new(), vocab_size }
     }
 
@@ -43,6 +48,9 @@ impl Tokenizer {
         let mut tok = Tokenizer::byte_level(vocab_size);
         let n_merges = vocab_size - FIRST_MERGE as usize;
         // Work over whitespace chunks (dedup by count) for speed.
+        // peqa-lint: allow(nondeterminism-sources) -- counting scratch:
+        // drained into `chunks` which is sorted before any merge math,
+        // so hash order never reaches the trained merges.
         let mut chunk_counts: HashMap<Vec<u32>, usize> = HashMap::new();
         for chunk in split_chunks(corpus) {
             *chunk_counts.entry(chunk.bytes().map(|b| b as u32).collect()).or_insert(0) += 1;
@@ -50,6 +58,10 @@ impl Tokenizer {
         let mut chunks: Vec<(Vec<u32>, usize)> = chunk_counts.into_iter().collect();
         chunks.sort(); // determinism independent of hash order
         for rank in 0..n_merges {
+            // peqa-lint: allow(nondeterminism-sources) -- counting
+            // scratch: the winning pair is chosen by max_by with a total
+            // (count, then lexicographic) order, independent of hash
+            // iteration order.
             let mut pair_counts: HashMap<(u32, u32), usize> = HashMap::new();
             for (seq, cnt) in &chunks {
                 for w in seq.windows(2) {

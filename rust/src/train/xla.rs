@@ -59,6 +59,9 @@ impl<'rt> Trainer<'rt> {
             .map(|t| rt.tensor_to_device(t))
             .collect::<Result<Vec<_>>>()?;
 
+        // peqa-lint: allow(nondeterminism-sources) -- membership-only:
+        // `contains` checks while walking the checkpoint's ordered
+        // iterator; never iterated itself.
         let known: std::collections::HashSet<&str> =
             art.meta.layout().iter().map(|p| p.name.as_str()).collect();
         let mut passthrough = Checkpoint::new();

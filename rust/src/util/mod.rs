@@ -4,8 +4,28 @@
 pub mod log;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 
 pub use rng::Pcg32;
+
+/// Index of the maximum element under `total_cmp` — the NaN-safe
+/// argmax for logits/score rows (ties break to the lowest index, NaN
+/// sorts above every finite value instead of panicking the comparator).
+/// `None` only on an empty slice.
+pub fn argmax_f32(xs: &[f32]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, x) in xs.iter().enumerate() {
+        match best {
+            None => best = Some(i),
+            Some(b) => {
+                if x.total_cmp(&xs[b]) == std::cmp::Ordering::Greater {
+                    best = Some(i);
+                }
+            }
+        }
+    }
+    best
+}
 
 /// Worker-thread count for the host kernel layer (quant::kernels, the
 /// blocked matmuls, the OPTQ linear algebra). `PEQA_THREADS` overrides;
@@ -38,6 +58,17 @@ pub fn decimal_gb(b: u64) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn argmax_is_nan_safe_and_first_wins_ties() {
+        assert_eq!(argmax_f32(&[]), None);
+        assert_eq!(argmax_f32(&[1.0, 3.0, 2.0]), Some(1));
+        assert_eq!(argmax_f32(&[2.0, 2.0, 1.0]), Some(0));
+        // NaN sorts above finite values under total_cmp — but it must
+        // not panic, which is the property the old partial_cmp argmax
+        // lacked.
+        assert_eq!(argmax_f32(&[1.0, f32::NAN, 2.0]), Some(1));
+    }
 
     #[test]
     fn bytes_formatting() {

@@ -35,10 +35,15 @@ impl Welford {
 }
 
 /// Percentile by linear interpolation over a sorted copy (q in [0, 100]).
+///
+/// NaN-safe: samples come from latency/loss streams that can contain
+/// NaN (a failed step, a poisoned metric), and `total_cmp` orders them
+/// deterministically at the top instead of panicking mid-report the way
+/// a `partial_cmp(..).unwrap()` comparator does.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     assert!(!xs.is_empty());
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let pos = (q / 100.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -111,6 +116,20 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 4.0);
         assert_eq!(percentile(&xs, 50.0), 2.5);
+    }
+
+    #[test]
+    fn percentile_survives_nan_samples() {
+        // Regression: the old partial_cmp(..).unwrap() comparator
+        // panicked the moment a NaN metric sample reached a percentile
+        // report. total_cmp sorts NaN above every finite value, so low
+        // percentiles still answer from the finite samples.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+        assert!(percentile(&xs, 100.0).is_nan());
+        let all_nan = [f64::NAN, f64::NAN];
+        assert!(percentile(&all_nan, 50.0).is_nan());
     }
 
     #[test]

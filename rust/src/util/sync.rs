@@ -1,0 +1,79 @@
+//! Poison-recovering mutex/condvar helpers — the one sanctioned way to
+//! take a lock on the serving and store paths.
+//!
+//! Std mutexes poison when a holder panics, and the habitual
+//! `.lock().unwrap()` then *cascades* that panic into every other
+//! thread touching the lock — one crashed pool worker would take the
+//! dispatcher, the metrics merge, and ultimately the whole pool down
+//! with it. Every critical section in this crate holds plain data
+//! (queue state, metrics counters, adapter slots) with no multi-step
+//! invariant that a mid-section panic could tear, so recovery via
+//! [`std::sync::PoisonError::into_inner`] is sound: availability over
+//! poison propagation. The `peqa lint` rule `panic-free-paths` bans
+//! `lock().unwrap()` in `serve::`/`store::`; these helpers are the
+//! replacement (and keep the acquisition sites greppable).
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+pub fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Try-lock `m`: `None` only when the lock is genuinely held
+/// (`WouldBlock`); a poisoned-but-free lock is recovered like
+/// [`lock_clean`].
+pub fn try_lock_clean<T>(m: &Mutex<T>) -> Option<MutexGuard<'_, T>> {
+    use std::sync::TryLockError;
+    match m.try_lock() {
+        Ok(g) => Some(g),
+        Err(TryLockError::Poisoned(poisoned)) => Some(poisoned.into_inner()),
+        Err(TryLockError::WouldBlock) => None,
+    }
+}
+
+/// Block on `cv` with `g`, recovering the reacquired guard if another
+/// holder panicked while we slept.
+pub fn wait_clean<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    match cv.wait(g) {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn lock_clean_recovers_after_a_panicked_holder() {
+        let m = Mutex::new(7usize);
+        // Poison the mutex: a scoped thread panics while holding it.
+        let panicked = std::thread::scope(|s| {
+            s.spawn(|| {
+                let _g = m.lock().unwrap();
+                panic!("deliberate: poison the lock");
+            })
+            .join()
+        });
+        assert!(panicked.is_err(), "holder must have panicked");
+        assert!(m.is_poisoned());
+        // The plain unwrap path would now panic; lock_clean recovers.
+        assert_eq!(*lock_clean(&m), 7);
+        *lock_clean(&m) = 8;
+        assert_eq!(*lock_clean(&m), 8);
+    }
+
+    #[test]
+    fn try_lock_clean_distinguishes_held_from_poisoned() {
+        let m = Mutex::new(1usize);
+        let g = m.lock().unwrap();
+        assert!(try_lock_clean(&m).is_none(), "held lock is WouldBlock");
+        drop(g);
+        assert_eq!(*try_lock_clean(&m).expect("free lock"), 1);
+    }
+}

@@ -1,0 +1,39 @@
+//! Fixture: float-reduction-order. Linted under the virtual path
+//! `model/blocks.rs` (in scope) and re-linted under `eval/fixture.rs`
+//! (out of scope — everything silent). Lines tagged
+//! `//~ float-reduction-order` must fire in scope.
+
+pub fn iterator_reductions(xs: &[f32], ys: &[f64]) -> f64 {
+    let s = xs.iter().sum::<f32>(); //~ float-reduction-order
+    let p = ys.iter().product::<f64>(); //~ float-reduction-order
+    let f = xs.iter().fold(0.0f32, |a, b| a + b); //~ float-reduction-order
+    let m = xs.iter().fold(-1.0, |a, &b| if b > a { b } else { a }); //~ float-reduction-order
+    let e = xs.iter().fold(1e-6, |a, &b| a.max(b)); //~ float-reduction-order
+    s as f64 + p + f as f64 + m as f64 + e as f64
+}
+
+// ---- near misses: all silent ----
+
+pub fn integer_reductions(xs: &[usize]) -> usize {
+    // Integer addition is associative — order cannot change the result.
+    let s = xs.iter().sum::<usize>();
+    let f = xs.iter().fold(0usize, |a, b| a + b);
+    let h = xs.iter().fold(0x10, |a, b| a ^ b);
+    s + f + h
+}
+
+pub fn fixed_order(xs: &[f32]) -> f32 {
+    // The prescribed spelling: an explicit loop pins the order.
+    let mut acc = 0.0f32;
+    for &v in xs {
+        acc += v;
+    }
+    acc
+}
+
+pub fn non_float_fold(names: &[&str]) -> String {
+    names.iter().fold(String::new(), |mut a, n| {
+        a.push_str(n);
+        a
+    })
+}

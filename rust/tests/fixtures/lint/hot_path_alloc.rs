@@ -1,0 +1,38 @@
+//! Fixture: hot-path-alloc. Linted under the virtual path
+//! `quant/kernels.rs` (in scope) and re-linted under `eval/fixture.rs`
+//! (out of scope — everything silent). Lines tagged
+//! `//~ hot-path-alloc` must fire in scope.
+
+pub fn allocs_everywhere(xs: &[f32]) -> usize {
+    let grown: Vec<f32> = Vec::new(); //~ hot-path-alloc
+    let filled = vec![0.0f32; 8]; //~ hot-path-alloc
+    let copied = xs.to_vec(); //~ hot-path-alloc
+    let cloned = copied.clone(); //~ hot-path-alloc
+    let label = format!("tile-{}", cloned.len()); //~ hot-path-alloc
+    let owned = String::from("scratch"); //~ hot-path-alloc
+    grown.len() + filled.len() + label.len() + owned.len()
+}
+
+// ---- near misses: all silent ----
+
+pub fn pooled(scratch: &mut Vec<f32>, n: usize) {
+    // Reusing a caller-owned buffer is the house pattern.
+    scratch.clear();
+    scratch.resize(n, 0.0);
+}
+
+pub fn upfront(n: usize) -> Vec<f32> {
+    // `with_capacity` at an entry point is the "allocate once" idiom
+    // the rule's message prescribes.
+    Vec::with_capacity(n)
+}
+
+pub fn clone_as_trait_bound<T: Clone>(t: &T) -> &T {
+    // `Clone` the bound, not `.clone()` the call.
+    t
+}
+
+pub fn string_len(s: &str) -> usize {
+    // `String` as a type path that is not `String::from`.
+    s.len() + std::mem::size_of::<String>()
+}

@@ -1,0 +1,78 @@
+//! Fixture: lock-across-blocking. Linted under the virtual path
+//! `serve/fixture.rs` (in scope) and re-linted under `train/fixture.rs`
+//! (out of scope — everything silent). Lines tagged
+//! `//~ lock-across-blocking` must fire in scope. The fixture is lexed,
+//! never compiled, so `lock_clean` needs no import to be recognized.
+
+pub fn guard_across_recv(
+    m: &std::sync::Mutex<u64>,
+    rx: &std::sync::mpsc::Receiver<u64>,
+) -> u64 {
+    let g = m.lock().unwrap();
+    let v = rx.recv().unwrap_or(0); //~ lock-across-blocking
+    *g + v
+}
+
+pub fn guard_across_send(
+    m: &std::sync::Mutex<u64>,
+    tx: &std::sync::mpsc::SyncSender<u64>,
+) {
+    let held = lock_clean(m);
+    tx.send(*held).ok(); //~ lock-across-blocking
+}
+
+pub fn guard_across_join(
+    m: &std::sync::Mutex<u64>,
+    h: std::thread::JoinHandle<u64>,
+) -> u64 {
+    let _g = m.try_lock();
+    h.join().unwrap_or(0) //~ lock-across-blocking
+}
+
+pub fn guard_across_recv_timeout(
+    m: &std::sync::Mutex<u64>,
+    rx: &std::sync::mpsc::Receiver<u64>,
+) -> u64 {
+    let g = try_lock_clean(m);
+    let v = rx.recv_timeout(std::time::Duration::from_millis(1)).unwrap_or(0); //~ lock-across-blocking
+    g.map_or(v, |x| *x + v)
+}
+
+// ---- near misses: all silent ----
+
+pub fn dropped_before_recv(
+    m: &std::sync::Mutex<u64>,
+    rx: &std::sync::mpsc::Receiver<u64>,
+) -> u64 {
+    let g = m.lock().unwrap();
+    let held = *g;
+    drop(g);
+    rx.recv().unwrap_or(held)
+}
+
+pub fn scoped_guard_then_recv(
+    m: &std::sync::Mutex<u64>,
+    rx: &std::sync::mpsc::Receiver<u64>,
+) -> u64 {
+    let held = {
+        let g = m.lock().unwrap();
+        *g
+    };
+    rx.recv().unwrap_or(held)
+}
+
+pub fn try_send_is_nonblocking(
+    m: &std::sync::Mutex<u64>,
+    tx: &std::sync::mpsc::SyncSender<u64>,
+) {
+    let g = m.lock().unwrap();
+    tx.try_send(*g).ok();
+}
+
+pub fn non_guard_binding(
+    q: &std::collections::VecDeque<u64>,
+    rx: &std::sync::mpsc::Receiver<u64>,
+) -> u64 {
+    let head = q.front().copied().unwrap_or(0);
+    rx.recv().unwrap_or(head)
+}

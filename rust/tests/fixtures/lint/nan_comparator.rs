@@ -1,0 +1,46 @@
+//! Fixture: nan-comparator. Linted under the virtual path
+//! `eval/fixture.rs` (the rule is global — scope does not matter).
+//! Lines tagged `//~ nan-comparator` must fire; everything else must
+//! stay silent.
+
+pub fn sort_unwrap(xs: &mut [f32]) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap()); //~ nan-comparator
+}
+
+pub fn sort_expect(xs: &mut [f32]) {
+    xs.sort_by(|a, b| a.partial_cmp(b).expect("no NaN here")); //~ nan-comparator
+}
+
+pub fn max_by_defaulted(xs: &[f64]) -> Option<f64> {
+    // `unwrap_or(Equal)` does not panic — it silently mis-sorts NaN,
+    // which is the subtler half of the invariant.
+    xs.iter().copied().max_by(|a, b| {
+        a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal) //~ nan-comparator
+    })
+}
+
+pub fn min_by_key_lazy(xs: &[f32]) -> Option<f32> {
+    xs.iter().copied().min_by(|a, b| {
+        a.partial_cmp(b).unwrap_or_else(|| std::cmp::Ordering::Less) //~ nan-comparator
+    })
+}
+
+// ---- near misses: all silent ----
+
+pub fn total_order(xs: &mut [f32]) {
+    xs.sort_by(|a, b| a.total_cmp(b));
+}
+
+pub fn inspected_not_unwrapped(a: f32, b: f32) -> bool {
+    matches!(a.partial_cmp(&b), Some(std::cmp::Ordering::Less))
+}
+
+pub fn propagated_option(a: f64, b: f64) -> Option<std::cmp::Ordering> {
+    a.partial_cmp(&b)
+}
+
+pub fn unrelated_unwrap(v: Option<u32>) -> u32 {
+    // `.unwrap()` not on a `partial_cmp` result is this rule's
+    // non-business (panic-free-paths owns it, in its own scope).
+    v.unwrap()
+}

@@ -1,0 +1,49 @@
+//! Fixture: nondeterminism-sources. Linted under the virtual path
+//! `store/fixture.rs`: hash containers are in scope (artifact path),
+//! the clock exemption does not apply, and `thread::spawn` is banned
+//! everywhere. Lines tagged `//~ nondeterminism-sources` must fire.
+//! The scope flips (hash rules off in `serve::`, clocks legal in
+//! `bench::`/`util::stats`) are exercised inline by the test.
+
+use std::collections::HashMap;
+use std::collections::HashSet;
+use std::time::{Instant, SystemTime};
+
+pub fn hash_order_iteration() -> usize {
+    let by_name: HashMap<String, u64> = Default::default(); //~ nondeterminism-sources
+    let seen: HashSet<u64> = Default::default(); //~ nondeterminism-sources
+    by_name.len() + seen.len()
+}
+
+pub fn wall_clock_reads() -> u64 {
+    let t0 = Instant::now(); //~ nondeterminism-sources
+    let epoch = SystemTime::UNIX_EPOCH; //~ nondeterminism-sources
+    t0.elapsed().as_nanos() as u64 + format!("{epoch:?}").len() as u64
+}
+
+pub fn detached_thread() -> u64 {
+    let h = std::thread::spawn(|| 7); //~ nondeterminism-sources
+    h.join().unwrap_or(0)
+}
+
+// ---- near misses: all silent ----
+
+pub fn ordered_containers() -> usize {
+    let sorted: std::collections::BTreeMap<String, u64> = Default::default();
+    let dedup: std::collections::BTreeSet<u64> = Default::default();
+    sorted.len() + dedup.len()
+}
+
+pub fn scoped_threads(xs: &mut [f32]) {
+    std::thread::scope(|s| {
+        for chunk in xs.chunks_mut(8) {
+            s.spawn(move || chunk.iter_mut().for_each(|v| *v += 1.0));
+        }
+    });
+}
+
+pub fn built_and_joined_thread() -> std::io::Result<()> {
+    let h = std::thread::Builder::new().name("worker".into()).spawn(|| ())?;
+    let _ = h.join();
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Fixture: panic-free-paths. Linted under the virtual path
+//! `serve/fixture.rs` (in scope) and re-linted under `eval/fixture.rs`
+//! (out of scope — everything silent). Lines tagged
+//! `//~ panic-free-paths` must fire in scope.
+
+pub fn unwraps(v: Option<u32>) -> u32 {
+    v.unwrap() //~ panic-free-paths
+}
+
+pub fn expects(v: Option<u32>) -> u32 {
+    v.expect("present by construction") //~ panic-free-paths
+}
+
+pub fn panics(flag: bool) {
+    if flag {
+        panic!("boom"); //~ panic-free-paths
+    }
+}
+
+pub fn asserts(n: usize) {
+    assert!(n > 0, "degenerate"); //~ panic-free-paths
+}
+
+pub fn assert_eqs(n: usize) {
+    assert_eq!(n % 2, 0); //~ panic-free-paths
+}
+
+pub fn unreachable_arm(x: u8) -> u8 {
+    match x {
+        0 => 1,
+        _ => unreachable!(), //~ panic-free-paths
+    }
+}
+
+pub fn todo_stub() {
+    todo!() //~ panic-free-paths
+}
+
+// ---- near misses: all silent ----
+
+pub fn unwrap_or_is_fine(v: Option<u32>) -> u32 {
+    v.unwrap_or(0)
+}
+
+pub fn unwrap_or_default_is_fine(v: Option<u32>) -> u32 {
+    v.unwrap_or_default()
+}
+
+pub fn debug_asserts(n: usize) {
+    debug_assert!(n > 0);
+    debug_assert_eq!(n, n);
+    debug_assert_ne!(n, n + 1);
+}
+
+#[test]
+fn test_items_are_stripped() {
+    let v: Option<u32> = None;
+    v.unwrap();
+    panic!("test-only panic");
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn whole_test_module_is_stripped() {
+        assert!(false);
+    }
+}

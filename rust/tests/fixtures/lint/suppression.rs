@@ -1,0 +1,52 @@
+//! Fixture: suppression syntax and allow hygiene. Linted under the
+//! virtual path `serve/fixture.rs` with NO rule filter, so panic-free
+//! and nondeterminism findings are live and each `peqa-lint` comment
+//! below exercises one corner of the allow grammar. `//~` marks an
+//! expected finding on the same line, `//~^` one line up.
+
+pub fn justified_allow(v: Option<u32>) -> u32 {
+    // peqa-lint: allow(panic-free-paths) -- fixture: a well-formed
+    // allow with a written justification silences the next statement.
+    v.expect("covered by the allow above")
+}
+
+pub fn bare_allow_suppresses_nothing(v: Option<u32>) -> u32 {
+    // peqa-lint: allow(panic-free-paths)
+    //~^ allow-hygiene
+    v.expect("bare allow: hygiene fires AND the finding survives") //~ panic-free-paths
+}
+
+pub fn unknown_rule_allow(v: Option<u32>) -> u32 {
+    // peqa-lint: allow(no-such-rule) -- justification present, rule not
+    //~^ allow-hygiene
+    v.unwrap() //~ panic-free-paths
+}
+
+pub fn misplaced_allow(v: Option<u32>) -> u32 {
+    v.unwrap() // peqa-lint: allow(panic-free-paths) -- not on its own line
+    //~^ allow-hygiene panic-free-paths
+}
+
+pub fn block_comment_allow(v: Option<u32>) -> u32 {
+    /* peqa-lint: allow(panic-free-paths) -- block comments carry no allows */
+    //~^ allow-hygiene
+    v.unwrap() //~ panic-free-paths
+}
+
+pub fn multi_rule_allow(rx: &std::sync::mpsc::Receiver<u64>) -> u64 {
+    // peqa-lint: allow(panic-free-paths, nondeterminism-sources) -- fixture:
+    // one comment may exempt several rules, and its extent runs through
+    // the whole bracketed statement begun on the next line.
+    let when = (
+        std::time::Instant::now(),
+        rx.recv().unwrap(),
+    );
+    when.1 + when.0.elapsed().as_secs()
+}
+
+pub fn allow_stops_at_statement_end(v: Option<u32>) -> u32 {
+    // peqa-lint: allow(panic-free-paths) -- fixture: the extent is one
+    // syntactic unit; the statement after it is NOT covered.
+    let a = v.unwrap_or(1);
+    a + v.unwrap() //~ panic-free-paths
+}

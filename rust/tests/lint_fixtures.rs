@@ -1,0 +1,177 @@
+//! Fixture-driven tests for `peqa::lint` — the contract behind the
+//! `scripts/ci.sh` lint gate.
+//!
+//! Each file in `tests/fixtures/lint/` carries positive cases and
+//! near-miss negatives for one rule (plus one fixture for the
+//! suppression grammar). Expected findings are marked in-line:
+//! `//~ <rule>` expects a finding on the same line, `//~^ <rule>` one
+//! line up per `^`. A fixture passes only if the diagnostics match the
+//! markers EXACTLY — extras are as fatal as misses, which is what keeps
+//! the near-miss negatives honest.
+//!
+//! Fixtures are linted under *virtual* module paths (`lint::modpath_of`
+//! maps a path without a `src` component straight to a module path), so
+//! one file can be checked both in and out of a rule's scope.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use peqa::lint;
+
+fn fixture(name: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/lint").join(name);
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("reading {}: {e}", p.display()))
+}
+
+/// Parse `//~` markers. A marker is `//~` + optional `^`s + one or more
+/// kebab-case rule names and nothing else to end-of-line; prose that
+/// merely mentions ``//~`` (backticks, punctuation) is ignored.
+fn expected(src: &str) -> BTreeSet<(u32, String)> {
+    let mut want = BTreeSet::new();
+    for (i, line) in src.lines().enumerate() {
+        let Some(pos) = line.find("//~") else { continue };
+        let rest = &line[pos + 3..];
+        let carets = rest.chars().take_while(|&c| c == '^').count();
+        let names: Vec<&str> = rest[carets..].split_whitespace().collect();
+        if names.is_empty()
+            || !names
+                .iter()
+                .all(|n| n.chars().all(|c| c == '-' || c.is_ascii_lowercase()))
+        {
+            continue;
+        }
+        let target = (i + 1 - carets) as u32;
+        for n in names {
+            want.insert((target, n.to_string()));
+        }
+    }
+    want
+}
+
+/// Lint `name` under `vpath`; keep `rule` findings (always keeping
+/// allow-hygiene — suppression misuse must never pass unnoticed) and
+/// compare against the fixture's own markers.
+fn check(name: &str, vpath: &str, rule: Option<&str>) {
+    let src = fixture(name);
+    let got: BTreeSet<(u32, String)> = lint::lint_source(vpath, &src, rule)
+        .into_iter()
+        .map(|d| (d.line, d.rule.to_string()))
+        .collect();
+    let want = expected(&src);
+    assert_eq!(
+        got, want,
+        "fixture {name} under {vpath}: diagnostics do not match `//~` markers"
+    );
+}
+
+/// Lint `name` under an out-of-scope `vpath`: every rule silent.
+fn check_silent(name: &str, vpath: &str) {
+    let src = fixture(name);
+    let got = lint::lint_source(vpath, &src, None);
+    assert!(
+        got.is_empty(),
+        "fixture {name} must be silent under out-of-scope path {vpath}, got:\n{}",
+        lint::render_text(&got)
+    );
+}
+
+#[test]
+fn nan_comparator_fixture() {
+    // Global rule — any path is in scope.
+    check("nan_comparator.rs", "eval/fixture.rs", Some("nan-comparator"));
+    check("nan_comparator.rs", "serve/fixture.rs", Some("nan-comparator"));
+}
+
+#[test]
+fn panic_free_fixture() {
+    check("panic_free.rs", "serve/fixture.rs", Some("panic-free-paths"));
+    check("panic_free.rs", "store/fixture.rs", Some("panic-free-paths"));
+    check_silent("panic_free.rs", "eval/fixture.rs");
+}
+
+#[test]
+fn hot_path_alloc_fixture() {
+    check("hot_path_alloc.rs", "quant/kernels.rs", Some("hot-path-alloc"));
+    check("hot_path_alloc.rs", "model/blocks.rs", Some("hot-path-alloc"));
+    // Scope is exact-module: a sibling kernel-adjacent file is out.
+    check_silent("hot_path_alloc.rs", "quant/pack.rs");
+    check_silent("hot_path_alloc.rs", "eval/fixture.rs");
+}
+
+#[test]
+fn float_reduction_fixture() {
+    check("float_reduction.rs", "model/blocks.rs", Some("float-reduction-order"));
+    check("float_reduction.rs", "quant/kernels.rs", Some("float-reduction-order"));
+    check_silent("float_reduction.rs", "train/host.rs");
+}
+
+#[test]
+fn lock_across_blocking_fixture() {
+    check("lock_blocking.rs", "serve/fixture.rs", Some("lock-across-blocking"));
+    check_silent("lock_blocking.rs", "train/fixture.rs");
+}
+
+#[test]
+fn nondeterminism_fixture() {
+    check("nondeterminism.rs", "store/fixture.rs", Some("nondeterminism-sources"));
+}
+
+#[test]
+fn nondeterminism_scope_flips() {
+    // Hash containers are only an artifact-path concern: serve:: keeps
+    // its DashMap-free HashMaps behind locks and is out of hash scope.
+    let hash = "pub fn f() -> usize {\n    let m: HashMap<u32, u32> = Default::default();\n    m.len()\n}\n";
+    assert!(lint::lint_source("serve/fixture.rs", hash, None).is_empty());
+    assert_eq!(lint::lint_source("store/fixture.rs", hash, None).len(), 1);
+
+    // Clocks are the JOB of bench/util::stats/util::log.
+    let clock = "pub fn f() -> std::time::Instant {\n    Instant::now()\n}\n";
+    assert!(lint::lint_source("bench/decode.rs", clock, None).is_empty());
+    assert!(lint::lint_source("util/stats.rs", clock, None).is_empty());
+    assert!(lint::lint_source("util/log.rs", clock, None).is_empty());
+    assert_eq!(lint::lint_source("serve/fixture.rs", clock, None).len(), 1);
+    assert_eq!(lint::lint_source("util/mod.rs", clock, None).len(), 1);
+
+    // Bare thread::spawn is banned everywhere, even in bench.
+    let spawn = "pub fn f() {\n    let h = std::thread::spawn(|| ());\n    let _ = h.join();\n}\n";
+    assert_eq!(lint::lint_source("bench/decode.rs", spawn, None).len(), 1);
+}
+
+#[test]
+fn suppression_fixture() {
+    // No rule filter: the allow grammar is exercised against live rules.
+    check("suppression.rs", "serve/fixture.rs", None);
+}
+
+#[test]
+fn unknown_rule_filter_is_an_error() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("src/lint");
+    let err = lint::run(&[dir.to_string_lossy().into_owned()], Some("no-such-rule"))
+        .expect_err("unknown rule must be rejected, not silently match nothing");
+    assert!(err.to_string().contains("no-such-rule"), "{err:#}");
+}
+
+#[test]
+fn run_is_deterministic_and_json_is_stable() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("src/lint");
+    let paths = vec![dir.to_string_lossy().into_owned()];
+    let a = lint::run(&paths, None).expect("lint src/lint");
+    let b = lint::run(&paths, None).expect("lint src/lint");
+    assert_eq!(lint::render_text(&a), lint::render_text(&b));
+    assert_eq!(lint::to_json(&a).to_string(), lint::to_json(&b).to_string());
+}
+
+/// The acceptance gate itself: the shipped tree is lint-clean — every
+/// remaining exemption is a justified `peqa-lint: allow`, and CI runs
+/// the same check through `peqa lint rust/src`.
+#[test]
+fn shipped_tree_is_lint_clean() {
+    let src_dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let diags = lint::run(&[src_dir.to_string_lossy().into_owned()], None)
+        .expect("linting src tree");
+    assert!(
+        diags.is_empty(),
+        "shipped tree has lint findings — fix them or add a justified allow:\n{}",
+        lint::render_text(&diags)
+    );
+}

@@ -18,8 +18,46 @@ cd "$(dirname "$0")/.."
 echo "== tier-1: cargo build --release =="
 cargo build --release
 
+PEQA_BIN=target/release/peqa
+
+echo "== lint gate: peqa lint rust/src =="
+# The in-tree static analysis (rust/src/lint/): determinism,
+# panic-freedom, and hot-path invariants over the shipped sources. Runs
+# before the tests so a lint finding fails fast; the JSON artifact lands
+# next to the BENCH_*.json files for the trend tooling. Exit is nonzero
+# on any finding, so `set -e` gates; the artifact is written first so a
+# red run still leaves the machine-readable report.
+"$PEQA_BIN" lint rust/src --json > LINT.json || { cat LINT.json; exit 1; }
+"$PEQA_BIN" lint rust/src
+echo "== ok: lint clean, LINT.json written =="
+
 echo "== tier-1: cargo test -q =="
 cargo test -q
+
+echo "== sanitizer pass (opt-in: PEQA_SANITIZE=1) =="
+# Deep UB/race hunting is too slow for every CI run, so it is an opt-in
+# stage: Miri when the toolchain has it (UB, aliasing, leaks), TSan as
+# the fallback (data races across the serve::/store:: thread pools).
+# Both runs scope to the concurrent suites — the rest of the crate is
+# single-threaded safe code under #![deny(unsafe_code)].
+if [[ "${PEQA_SANITIZE:-0}" == "1" ]]; then
+  if cargo miri --version >/dev/null 2>&1; then
+    echo "== miri: serve + store test suites =="
+    MIRIFLAGS="-Zmiri-disable-isolation" \
+      cargo miri test -q -- serve:: store::
+  elif rustc +nightly --version >/dev/null 2>&1; then
+    echo "== tsan (nightly fallback): serve + store test suites =="
+    RUSTFLAGS="-Zsanitizer=thread" RUSTDOCFLAGS="-Zsanitizer=thread" \
+      cargo +nightly test -q --target "$(rustc -vV | sed -n 's/^host: //p')" \
+      -- serve:: store::
+  else
+    echo "PEQA_SANITIZE=1 set, but neither \`cargo miri\` nor a nightly"
+    echo "toolchain is installed — sanitizer stage skipped. Install one"
+    echo "(rustup +nightly component add miri) to arm it."
+  fi
+else
+  echo "PEQA_SANITIZE not set — skipping (set PEQA_SANITIZE=1 to run miri/TSan)"
+fi
 
 echo "== host backward numerics cross-check (python/checks) =="
 # The f64 numpy finite-difference cross-check of the host PEQA backward
@@ -95,7 +133,6 @@ echo "== store durability smoke: kill+resume bitwise, publish, fsck =="
 # journaled run killed mid-flight (--halt-after simulates the crash) and
 # resumed must produce an adapter byte-identical to a run that was never
 # interrupted; every artifact the flow wrote must pass `peqa fsck`.
-PEQA_BIN=target/release/peqa
 SMOKE=$(mktemp -d)
 trap 'rm -rf "$SMOKE"' EXIT
 # Reference: one uninterrupted journaled run.
