@@ -4,7 +4,10 @@
 //!
 //! * decode throughput (tokens/s) and per-request latency p50/p99,
 //! * scale-swap task-switch cost (mean + p99 of `swap_times_s`) — the
-//!   "adapter-bytes moved" budget of the PEQA deployment story.
+//!   "adapter-bytes moved" budget of the PEQA deployment story,
+//! * paged-KV same-prefix serving (`serve::kvpage`): pages peak /
+//!   shared / rejects for N clients forked from one prompt prefix
+//!   through a tight page pool.
 //!
 //! Requests are submitted in task-rotating rounds so every round forces
 //! one adapter swap. Writes `BENCH_serve.json` (at `PEQA_BENCH_OUT` or
@@ -55,7 +58,7 @@ fn main() -> anyhow::Result<()> {
         for _ in 0..per_round {
             let len = 8 + rng.usize_below(16);
             let prompt: Vec<u32> = (0..len).map(|_| rng.below(256)).collect();
-            sched.submit(task, prompt, max_new, EOS);
+            sched.submit(task, prompt, max_new, EOS)?;
         }
         sched.run_until_idle()?;
     }
@@ -103,6 +106,37 @@ fn main() -> anyhow::Result<()> {
     });
     let pool_m = pool.shutdown();
 
+    // Paged-KV same-prefix section: N same-task requests forked from a
+    // common prompt prefix through a page pool a fraction of the
+    // unshared footprint — the serve::kvpage memory claim (prefix pages
+    // attached copy-on-write, not duplicated) as a tracked datapoint.
+    let (kv_pages, page_tokens) = (24usize, 16usize);
+    let paged_clients = 8usize;
+    let (pm, base_q) = serve::synth_packed(&geom, bits, group, 11)?;
+    let engine = Engine::from_packed(pm, geom, threads)?;
+    let mut paged = Scheduler::new(
+        engine,
+        serve::synth_adapters(&base_q, &tasks, 5),
+        SchedulerConfig {
+            max_batch: 8,
+            window: 128,
+            sampling: Sampling::Greedy,
+            seed: 3,
+            kv_pages,
+            page_tokens,
+            ..SchedulerConfig::default()
+        },
+    )?;
+    let mut rng = Pcg32::new(29);
+    let prefix: Vec<u32> = (0..2 * page_tokens).map(|_| rng.below(256)).collect();
+    for c in 0..paged_clients as u32 {
+        let mut p = prefix.clone();
+        p.push(c % 256);
+        paged.submit(tasks[0], p, max_new, EOS)?;
+    }
+    paged.run_until_idle()?;
+    let paged_m = paged.metrics.clone();
+
     let mut table = Table::new(
         &format!(
             "§Perf — host serving decode (L{} d{} h{} b{}g{:?}, {} req × {} rounds, {} threads)",
@@ -136,6 +170,11 @@ fn main() -> anyhow::Result<()> {
     rowf(&mut table, "pool queue depth max", format!("{}", pool_m.queue_depth_max));
     rowf(&mut table, "pool shed", format!("{}", pool_m.shed_count));
     rowf(&mut table, "pool swaps avoided", format!("{}", pool_m.swaps_avoided));
+    rowf(&mut table, "paged kv pool (pages × tok/page)", format!("{kv_pages} × {page_tokens}"));
+    rowf(&mut table, "paged kv pages peak", format!("{}", paged_m.kv_pages_peak));
+    rowf(&mut table, "paged kv pages shared", format!("{}", paged_m.kv_pages_shared));
+    rowf(&mut table, "paged kv exhausted rejects", format!("{}", paged_m.kv_exhausted_count));
+    rowf(&mut table, "paged tokens/s", format!("{:.1}", paged_m.tokens_per_s()));
     table.print();
     let paths = config::Paths::default();
     table.save(&paths.results, "serve_decode").ok();
@@ -176,6 +215,12 @@ fn main() -> anyhow::Result<()> {
         ("queue_depth_max", Value::num(pool_m.queue_depth_max as f64)),
         ("shed_count", Value::num(pool_m.shed_count as f64)),
         ("pool_swaps_avoided", Value::num(pool_m.swaps_avoided as f64)),
+        ("kv_pages", Value::num(kv_pages as f64)),
+        ("page_tokens", Value::num(page_tokens as f64)),
+        ("kv_pages_peak", Value::num(paged_m.kv_pages_peak as f64)),
+        ("kv_pages_shared", Value::num(paged_m.kv_pages_shared as f64)),
+        ("kv_exhausted_count", Value::num(paged_m.kv_exhausted_count as f64)),
+        ("paged_tokens_per_s", Value::num(paged_m.tokens_per_s())),
     ]);
     save_json(&out, &doc)?;
     println!("\nwrote {}", out.display());

@@ -123,6 +123,46 @@
 //! `--queue-cap`, `--deadline-ms`, `--affinity-burst`, `--stream` and
 //! `--watch-interval-ms` expose the knobs above.
 //!
+//! ## Paged KV memory (`serve::kvpage`)
+//!
+//! With `--kv-pages P > 0` the per-sequence ring buffers give way to a
+//! paged KV backend: one fixed pool of `P` pages × `--page-tokens`
+//! tokens per engine, allocated by a word-scan bitmap
+//! (`kvpage::PageAllocator`), mapped per sequence through a page table
+//! (`kvpage::PagedKvCache`), and shared across same-task requests whose
+//! prompts fork from a common prefix — full prefix pages are attached
+//! copy-on-write (refcounted `Arc` pages + a hash trie keyed on (task,
+//! parent, token chunk)) instead of being prefilled again:
+//!
+//! ```text
+//!  seq A  [pg 7][pg 2][pg 9]          page table per sequence
+//!  seq B  [pg 7][pg 2][pg 4]...       shared prefix pages 7,2 (CoW,
+//!  seq C  [pg 7][pg 2][pg 4][pg 1]    refcounted; diverge → own page)
+//!              └── PagePool: bitmap allocator over P fixed pages ──┘
+//! ```
+//!
+//! The contract is the ring's: slot = abs_pos % window, window_len =
+//! min(abs_pos+1, window) — an N-segment page walk in ascending position
+//! order is bitwise the 2-slab ring attention, so paged decode emits
+//! **bitwise** the ring backend's tokens at any page size, thread count,
+//! or sharing pattern (`tests/serve_paged.rs`; the ring is kept as the
+//! oracle). Requests that could never fit (`ceil((prompt+max_new)/page)`
+//! capped at the window's pages > pool) are rejected at submit with the
+//! typed `ServeError::KvExhausted`; prompts past the window reject as
+//! `ServeError::PromptTooLong`. Completion recycles pages, so a pool a
+//! fraction of the offered load serves the whole backlog;
+//! `ServeMetrics::{kv_pages_peak, kv_pages_shared, kv_exhausted_count}`
+//! land in `BENCH_serve.json` and the `scripts/ci.sh` smoke asserts a
+//! same-prefix burst under a tight budget actually shares
+//! (`--require-shared`).
+//!
+//! | Flag | Effect |
+//! |---|---|
+//! | `--kv-pages P` | P > 0 serves from a P-page pool per engine (paged backend); 0 = per-sequence ring buffers. |
+//! | `--page-tokens T` | Tokens per KV page (default `serve::DEFAULT_PAGE_TOKENS`). |
+//! | `--prefix-tokens N` | Demo workload: every request shares one deterministic N-token prompt prefix (distinct final token) — the CoW sharing shape. |
+//! | `--require-shared` | Exit nonzero unless `kv_pages_shared > 0` — the CI assertion that prefix sharing really happened. |
+//!
 //! ## Training backends (`train`)
 //!
 //! Fine-tuning sits behind the backend-agnostic `train::Tuner` trait.
@@ -201,7 +241,7 @@
 //! | Rule | Invariant it enforces | Why it is load-bearing for PEQA |
 //! |---|---|---|
 //! | `nan-comparator` | no `partial_cmp(..).unwrap()`-style comparators; key with `total_cmp` | metrics/logits can be NaN; a sort comparator that panics (or lies) turns one bad float into a crashed server — the exact bug class fixed in `serve::engine` (PR 3) and again in `util::stats`/`eval` here |
-//! | `panic-free-paths` | no `unwrap`/`expect`/`panic!`-family in non-test `serve::`/`store::` code | a panic in serving drops live traffic; in the store it can poison a checkpoint mid-write; mutex poison routes through `util::sync::{lock_clean, try_lock_clean, wait_clean}` |
+//! | `panic-free-paths` | no `unwrap`/`expect`/`panic!`-family in non-test `serve::`/`store::` code (that includes the `serve::kvpage` allocator/page tables — a bad page index must surface as a typed error, not an indexing panic mid-decode) | a panic in serving drops live traffic; in the store it can poison a checkpoint mid-write; mutex poison routes through `util::sync::{lock_clean, try_lock_clean, wait_clean}` |
 //! | `hot-path-alloc` | no `Vec::new`/`vec!`/`to_vec`/`format!`/`String::from`/`.clone()` in `quant::kernels`/`model::blocks` | `ProjScratch`/`TapeArena` exist precisely so steady-state decode/train steps never allocate (allocs/step is a gated bench metric) |
 //! | `float-reduction-order` | no iterator `.sum::<f32>()`/`.product`/float `fold` in the kernel modules | one explicit accumulation order is the bitwise thread/batch-invariance contract the parity tests pin |
 //! | `lock-across-blocking` | no mutex guard lexically live across `.recv()`/`.send()`/`.join()` in `serve::` | the pool's bounded channels make lock-then-block a real deadlock shape, not a style nit |

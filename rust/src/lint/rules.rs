@@ -5,7 +5,9 @@
 //!
 //! Scoping philosophy: a rule fires only where its invariant is
 //! load-bearing. `panic-free-paths` covers `serve::` and `store::`
-//! (a panic there drops live traffic or corrupts a checkpoint);
+//! (a panic there drops live traffic or corrupts a checkpoint — that
+//! includes `serve::kvpage`, where a bad page index or a double free
+//! must surface as a typed error, not an indexing panic mid-decode);
 //! `hot-path-alloc` and `float-reduction-order` cover the two compute
 //! cores (`quant::kernels`, `model::blocks`) where ProjScratch /
 //! TapeArena exist precisely so steady-state code never allocates and

@@ -75,6 +75,9 @@ peqa — PEQA (NeurIPS 2023) reproduction CLI
                    N steps next to a base snapshot in --out; --resume
                    replays the journal — truncating a torn tail — and
                    finishes bitwise identical to an uninterrupted run;
+                   with --tasks the journal holds one slot per task and
+                   round-robin resume restores the last COMPLETE round
+                   (a partial round is dropped like a torn tail);
                    --halt-after N exits after step N (simulated crash);
                    --publish DIR publishes the adapter(s) as one atomic
                    generation servable by `peqa serve --registry DIR`;
@@ -97,6 +100,8 @@ peqa — PEQA (NeurIPS 2023) reproduction CLI
                   [--engines 0] [--queue-cap 64] [--deadline-ms 0]
                   [--affinity-burst 4] [--stream]
                   [--watch-interval-ms 0]
+                  [--kv-pages 0] [--page-tokens 16]
+                  [--prefix-tokens 0] [--require-shared]
                   (--clients N > 0 serves the same load through the
                    threaded serve::server with N concurrent clients;
                    --strict rejects partial-coverage adapters at
@@ -113,7 +118,15 @@ peqa — PEQA (NeurIPS 2023) reproduction CLI
                    client's tokens over a per-token channel (bitwise
                    identical to non-streaming); --watch-interval-ms
                    rate-limits registry hot-reload polls for both the
-                   pool and the --clients server, 0 = every burst)
+                   pool and the --clients server, 0 = every burst;
+                   --kv-pages N > 0 serves KV out of a paged pool of N
+                   fixed-size pages per engine (--page-tokens each)
+                   with copy-on-write prefix sharing — decoded tokens
+                   stay bitwise identical to the ring buffers, requests
+                   that can never fit are rejected typed at submit;
+                   --prefix-tokens P makes every request share a P-token
+                   prompt prefix, --require-shared fails the run unless
+                   the paged backend attached shared prefix pages)
   peqa serve-demo --size n3 [--requests 16] [--full-reload]      [xla]
   peqa fsck       <artifact|dir> [...]
                   (verify checksums and print headers of .peqa /
@@ -262,6 +275,11 @@ fn run() -> Result<()> {
                 affinity_burst: args.get_usize("affinity-burst", 4)?,
                 stream: args.flag("stream"),
                 watch_interval_ms: args.get_u64("watch-interval-ms", 0)?,
+                kv_pages: args.get_usize("kv-pages", 0)?,
+                page_tokens: args
+                    .get_usize("page-tokens", peqa::serve::DEFAULT_PAGE_TOKENS)?,
+                prefix_tokens: args.get_usize("prefix-tokens", 0)?,
+                require_shared: args.flag("require-shared"),
             };
             args.finish()?;
             serve_host(opts)
@@ -451,21 +469,20 @@ fn finetune_host(mut args: peqa::cli::Args) -> Result<()> {
              synthetic task corpora)"
         );
     }
-    if tasks_opt.is_some() {
-        for (name, set) in [
-            ("save-every", save_every > 0),
-            ("resume", resume),
-            ("halt-after", halt_after > 0),
-        ] {
-            if set {
-                bail!(
-                    "--{name} drives the single-task journaled training loop and is \
-                     not supported with --tasks (multi-task journaling is a ROADMAP \
-                     follow-up; --publish works for both)"
-                );
+    let multi_names: Option<Vec<String>> = match &tasks_opt {
+        None => None,
+        Some(list) => {
+            let names: Vec<String> = list
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            if names.is_empty() {
+                bail!("--tasks expects a comma-separated task list, got '{list}'");
             }
+            Some(names)
         }
-    }
+    };
     if resume {
         if model_path.is_some() {
             bail!(
@@ -489,6 +506,24 @@ fn finetune_host(mut args: peqa::cli::Args) -> Result<()> {
         ];
         if let Some((name, _)) = synth.iter().find(|(_, set)| *set) {
             bail!("--{name} conflicts with --resume (geometry comes from the journal)");
+        }
+        if let Some(names) = multi_names {
+            return finetune_host_multi_resume(MultiResumeOpts {
+                out_dir,
+                names,
+                eval_tokens,
+                halt_after,
+                publish,
+                gc_keep,
+                steps: steps_o,
+                lr: lr_o,
+                batch: batch_o,
+                seq: seq_o,
+                heads: heads_o,
+                seed: seed_o,
+                save_every: (save_every > 0).then_some(save_every),
+                train_zeros,
+            });
         }
         return finetune_host_resume(ResumeOpts {
             out_dir,
@@ -533,15 +568,7 @@ fn finetune_host(mut args: peqa::cli::Args) -> Result<()> {
     }
 
     // Multi-task round-robin: N adapters out of ONE shared packed model.
-    if let Some(list) = &tasks_opt {
-        let names: Vec<String> = list
-            .split(',')
-            .map(|s| s.trim().to_string())
-            .filter(|s| !s.is_empty())
-            .collect();
-        if names.is_empty() {
-            bail!("--tasks expects a comma-separated task list, got '{list}'");
-        }
+    if let Some(names) = multi_names {
         return finetune_host_multi(FinetuneMultiOpts {
             pm,
             geom,
@@ -559,6 +586,8 @@ fn finetune_host(mut args: peqa::cli::Args) -> Result<()> {
             threads,
             publish,
             gc_keep,
+            save_every,
+            halt_after,
         });
     }
 
@@ -581,6 +610,7 @@ fn finetune_host(mut args: peqa::cli::Args) -> Result<()> {
         base_model.to_checkpoint().save_packed(&out.join(&base_name), base_model.bits)?;
         let meta = peqa::store::JournalMeta {
             task: task.clone(),
+            tasks: Vec::new(),
             dataset: dataset.clone(),
             base: base_name,
             seed,
@@ -681,6 +711,7 @@ fn run_single_task(mut o: SingleRun) -> Result<()> {
                 let st = o.tuner.export_state()?;
                 w.append(&TrainRecord {
                     step: step as u64,
+                    task_idx: 0,
                     rng: o.batcher.rng_state(),
                     ema: st.ema,
                     losses: st.losses[last_recorded..].to_vec(),
@@ -959,6 +990,15 @@ struct FinetuneMultiOpts {
     threads: usize,
     publish: Option<String>,
     gc_keep: Option<usize>,
+    save_every: usize,
+    halt_after: usize,
+}
+
+/// Deterministic file stem for a multi-task run's journal + base
+/// snapshot: the task list joined with `+` (the list is pinned in the
+/// journal meta, so resume re-derives the same stem from `--tasks`).
+fn multi_stem(names: &[String]) -> String {
+    names.join("+")
 }
 
 /// Task corpus for multi-task tuning: named host datasets
@@ -1000,9 +1040,49 @@ fn finetune_host_multi(o: FinetuneMultiOpts) -> Result<()> {
     }
     cfg.log_every = 0; // per-task summaries are printed below
     let base_model = o.pm.clone();
-    let tuner = HostPeqaTuner::from_packed(o.pm, o.geom, cfg, o.train_zeros, o.threads)?;
-    let mut mt = MultiTaskTuner::new(tuner, &o.names)?;
 
+    // Crash-safe mode (mirrors the single-task path): base snapshot +
+    // ONE journal holding every task's slot, written before round 1.
+    let writer = if o.save_every > 0 {
+        let out = std::path::Path::new(&o.out_dir);
+        let stem = multi_stem(&o.names);
+        let base_name = format!("{stem}.base.packed");
+        base_model.to_checkpoint().save_packed(&out.join(&base_name), base_model.bits)?;
+        let meta = peqa::store::JournalMeta {
+            task: o.names.join(","),
+            tasks: o.names.clone(),
+            // Multi-task corpora derive from the task names themselves
+            // (task_split), so there is no separate dataset to pin.
+            dataset: "multi".into(),
+            base: base_name,
+            seed: o.seed,
+            steps: o.steps,
+            save_every: o.save_every,
+            batch: o.batch,
+            seq: o.seq,
+            lr_bits: cfg.lr.to_bits(),
+            warmup_steps: cfg.warmup_steps,
+            train_zeros: o.train_zeros,
+            vocab: o.geom.vocab,
+            d_model: o.geom.d_model,
+            n_layers: o.geom.n_layers,
+            n_heads: o.geom.n_heads,
+            d_ff: o.geom.d_ff,
+        };
+        let w = peqa::store::JournalWriter::create(&out.join(format!("{stem}.journal")), &meta)?;
+        println!(
+            "journal: {} ({n} task slot(s) every {} round(s), base snapshot {})",
+            w.path().display(),
+            o.save_every,
+            meta.base
+        );
+        Some(w)
+    } else {
+        None
+    };
+
+    let tuner = HostPeqaTuner::from_packed(o.pm, o.geom, cfg, o.train_zeros, o.threads)?;
+    let mt = MultiTaskTuner::new(tuner, &o.names)?;
     let mut batchers = Vec::with_capacity(n);
     let mut evals = Vec::with_capacity(n);
     for (ti, name) in o.names.iter().enumerate() {
@@ -1011,42 +1091,128 @@ fn finetune_host_multi(o: FinetuneMultiOpts) -> Result<()> {
         evals.push(eval_s);
     }
 
+    run_multi_task(MultiRun {
+        mt,
+        batchers,
+        evals,
+        writer,
+        base_model,
+        names: o.names,
+        out_dir: o.out_dir,
+        steps: o.steps,
+        save_every: o.save_every,
+        halt_after: o.halt_after,
+        publish: o.publish,
+        gc_keep: o.gc_keep,
+        eval_tokens: o.eval_tokens,
+        heads: o.heads,
+        batch: o.batch,
+        seq: o.seq,
+        threads: o.threads,
+        save_model: o.save_model,
+    })
+}
+
+/// Shared multi-task training drive (fresh and `--resume` runs both
+/// funnel here, like [`run_single_task`]): the round-robin loop with an
+/// optional per-round-checkpoint journal append of EVERY task slot, an
+/// optional simulated crash, then per-task adapters + eval + publish.
+struct MultiRun {
+    mt: peqa::train::MultiTaskTuner,
+    batchers: Vec<peqa::data::LmBatcher>,
+    evals: Vec<Vec<u32>>,
+    writer: Option<peqa::store::JournalWriter>,
+    base_model: peqa::model::PackedModel,
+    names: Vec<String>,
+    out_dir: String,
+    steps: usize,
+    save_every: usize,
+    halt_after: usize,
+    publish: Option<String>,
+    gc_keep: Option<usize>,
+    eval_tokens: usize,
+    heads: usize,
+    batch: usize,
+    seq: usize,
+    threads: usize,
+    save_model: Option<String>,
+}
+
+fn run_multi_task(mut o: MultiRun) -> Result<()> {
+    use peqa::store::TrainRecord;
+
+    let n = o.names.len();
+    // Round-robin lockstep: every task is at the same round (resume
+    // restores the last COMPLETE round, so this holds there too).
+    let start = o.mt.step_count(0);
+    let mut last_recorded = vec![start; n];
     // peqa-lint: allow(nondeterminism-sources) -- wall time for the
     // steps/s progress line only; training math is seeded.
     let t0 = std::time::Instant::now();
-    for _ in 0..o.steps {
-        for (ti, batcher) in batchers.iter_mut().enumerate() {
+    for round in (start + 1)..=o.steps {
+        for (ti, batcher) in o.batchers.iter_mut().enumerate() {
             let b = batcher.next_batch();
-            mt.step_task(ti, &b)?;
+            o.mt.step_task(ti, &b)?;
+        }
+        if let Some(w) = o.writer.as_mut() {
+            if (o.save_every > 0 && round % o.save_every == 0) || round == o.steps {
+                // One record per task slot, slot order, same step — a
+                // crash between these appends leaves a partial round
+                // that open_resume_multi drops.
+                for ti in 0..n {
+                    let st = o.mt.export_task_state(ti)?;
+                    w.append(&TrainRecord {
+                        step: round as u64,
+                        task_idx: ti as u32,
+                        rng: o.batchers[ti].rng_state(),
+                        ema: st.ema,
+                        losses: st.losses[last_recorded[ti]..].to_vec(),
+                        params: st.params,
+                        opt_m: st.opt_m,
+                        opt_v: st.opt_v,
+                    })?;
+                    last_recorded[ti] = round;
+                }
+            }
+        }
+        if o.halt_after > 0 && round >= o.halt_after && round < o.steps {
+            println!(
+                "halted after round {round}/{} (simulated crash) — continue with: \
+                 peqa finetune --resume --tasks {} --out {}",
+                o.steps,
+                o.names.join(","),
+                o.out_dir
+            );
+            return Ok(());
         }
     }
     let wall = t0.elapsed().as_secs_f64();
+    let rounds_run = o.steps - start;
     println!(
-        "finetune host multi-task: {n} tasks × {} steps round-robin in {wall:.1}s \
+        "finetune host multi-task: {n} tasks × {rounds_run} steps round-robin in {wall:.1}s \
          ({:.3}s/step) | one shared packed model ({}), per-task trainable+Adam {} \
          (total {})",
-        o.steps,
-        wall / (o.steps * n).max(1) as f64,
-        peqa::util::human_bytes(mt.packed_bytes() as u64),
-        peqa::util::human_bytes(mt.trainable_state_bytes()),
-        peqa::util::human_bytes(mt.trainable_state_bytes_total()),
+        wall / (rounds_run * n).max(1) as f64,
+        peqa::util::human_bytes(o.mt.packed_bytes() as u64),
+        peqa::util::human_bytes(o.mt.trainable_state_bytes()),
+        peqa::util::human_bytes(o.mt.trainable_state_bytes_total()),
     );
 
     std::fs::create_dir_all(&o.out_dir)?;
     let mut published: Vec<(String, Checkpoint)> = Vec::new();
     for ti in 0..n {
         let name = o.names[ti].clone();
-        let losses = mt.losses(ti).to_vec();
-        let adapter = mt.extract_adapter(ti);
+        let losses = o.mt.losses(ti).to_vec();
+        let adapter = o.mt.extract_adapter(ti);
         let out_path = std::path::Path::new(&o.out_dir).join(format!("{name}.adapter"));
         adapter.save(&out_path)?;
         if o.publish.is_some() {
             published.push((name.clone(), adapter.clone()));
         }
         let ppl_note = if o.eval_tokens > 0 {
-            let slice = &evals[ti][..evals[ti].len().min(o.eval_tokens)];
+            let slice = &o.evals[ti][..o.evals[ti].len().min(o.eval_tokens)];
             let base_ppl = peqa::eval::host_perplexity(
-                &base_model,
+                &o.base_model,
                 o.heads,
                 slice,
                 o.batch,
@@ -1054,7 +1220,7 @@ fn finetune_host_multi(o: FinetuneMultiOpts) -> Result<()> {
                 o.threads,
             )?;
             let tuned_ppl = peqa::eval::host_perplexity(
-                mt.model(ti),
+                o.mt.model(ti),
                 o.heads,
                 slice,
                 o.batch,
@@ -1099,6 +1265,192 @@ fn finetune_host_multi(o: FinetuneMultiOpts) -> Result<()> {
         );
     }
     Ok(())
+}
+
+struct MultiResumeOpts {
+    out_dir: String,
+    names: Vec<String>,
+    eval_tokens: usize,
+    halt_after: usize,
+    publish: Option<String>,
+    gc_keep: Option<usize>,
+    steps: Option<usize>,
+    lr: Option<f64>,
+    batch: Option<usize>,
+    seq: Option<usize>,
+    heads: Option<usize>,
+    seed: Option<u64>,
+    save_every: Option<usize>,
+    train_zeros: bool,
+}
+
+/// Resume a journaled multi-task run: verify the journal (truncating a
+/// torn tail AND any partial round), rebuild the shared packed model
+/// from the base snapshot, restore EVERY task slot (scales/zeros, Adam
+/// moments, batcher RNG, loss bookkeeping) from the last complete
+/// round, and funnel into [`run_multi_task`] — the continued
+/// round-robin is bitwise the uninterrupted run.
+fn finetune_host_multi_resume(o: MultiResumeOpts) -> Result<()> {
+    use peqa::model::PackedModel;
+    use peqa::serve::ModelGeom;
+    use peqa::store::journal;
+    use peqa::train::{HostPeqaTuner, MultiTaskTuner, TunerState};
+
+    let out = std::path::Path::new(&o.out_dir);
+    let jpath = out.join(format!("{}.journal", multi_stem(&o.names)));
+    if !jpath.is_file() {
+        bail!(
+            "--resume: no journal at {} — start the run with --save-every N \
+             (and pass the same --tasks/--out)",
+            jpath.display()
+        );
+    }
+    let n = o.names.len();
+    let (meta, records, writer) = journal::open_resume_multi(&jpath, n)?;
+    if meta.tasks.is_empty() {
+        bail!(
+            "{} is a single-task journal — resume it with --task {}, not --tasks",
+            jpath.display(),
+            meta.task
+        );
+    }
+    if meta.tasks != o.names {
+        bail!(
+            "--tasks {} disagrees with the journal's task list {} — the list (and \
+             its order) is pinned when the run starts",
+            o.names.join(","),
+            meta.tasks.join(",")
+        );
+    }
+
+    fn pin<T: PartialEq + std::fmt::Display>(
+        name: &str,
+        cli: &Option<T>,
+        journal: &T,
+    ) -> Result<()> {
+        if let Some(v) = cli {
+            if v != journal {
+                bail!(
+                    "--{name} {v} disagrees with the journal's {journal} — drop the \
+                     flag (the journal is authoritative) or start a fresh run"
+                );
+            }
+        }
+        Ok(())
+    }
+    pin("steps", &o.steps, &meta.steps)?;
+    pin("batch", &o.batch, &meta.batch)?;
+    pin("seq", &o.seq, &meta.seq)?;
+    pin("heads", &o.heads, &meta.n_heads)?;
+    pin("seed", &o.seed, &meta.seed)?;
+    pin("save-every", &o.save_every, &meta.save_every)?;
+    if let Some(lr) = o.lr {
+        if lr.to_bits() != meta.lr_bits {
+            bail!(
+                "--lr {lr} disagrees with the journal's {} — drop the flag or start \
+                 a fresh run",
+                meta.lr()
+            );
+        }
+    }
+    if o.train_zeros && !meta.train_zeros {
+        bail!(
+            "--train-zeros disagrees with the journal (the run trains scales only) — \
+             drop the flag or start a fresh run"
+        );
+    }
+
+    let base_path = out.join(&meta.base);
+    let pm = PackedModel::load(&base_path)?;
+    let geom = ModelGeom::infer(&pm, meta.n_heads)?;
+    let jgeom = ModelGeom {
+        vocab: meta.vocab,
+        d_model: meta.d_model,
+        n_layers: meta.n_layers,
+        n_heads: meta.n_heads,
+        d_ff: meta.d_ff,
+    };
+    if geom != jgeom {
+        bail!(
+            "base snapshot {} has geometry {:?} but the journal pins {:?} — the \
+             snapshot was replaced after the run started",
+            base_path.display(),
+            geom,
+            jgeom
+        );
+    }
+    let threads = peqa::util::num_threads();
+    let mut cfg = pipeline::default_cfg(&format!("peqa_b{}_host", pm.bits), meta.steps, meta.seed);
+    cfg.lr = meta.lr();
+    cfg.warmup_steps = meta.warmup_steps;
+    cfg.log_every = 0; // per-task summaries are printed by run_multi_task
+    let base_model = pm.clone();
+    let tuner = HostPeqaTuner::from_packed(pm, geom, cfg, meta.train_zeros, threads)?;
+    let mut mt = MultiTaskTuner::new(tuner, &meta.tasks)?;
+    let mut batchers = Vec::with_capacity(n);
+    let mut evals = Vec::with_capacity(n);
+    for (ti, name) in meta.tasks.iter().enumerate() {
+        let (train_s, eval_s) = task_split(name, pipeline::ADAPT_BYTES)?;
+        batchers.push(peqa::data::LmBatcher::new(
+            train_s,
+            meta.batch,
+            meta.seq,
+            meta.seed ^ 0x5eed ^ ti as u64,
+        ));
+        evals.push(eval_s);
+    }
+
+    if let Some((round, per_task)) = journal::final_multi_state(&records, n) {
+        for (ti, (rec, losses)) in per_task.iter().enumerate() {
+            let step = usize::try_from(rec.step)
+                .map_err(|_| anyhow::anyhow!("journal step {} overflows usize", rec.step))?;
+            mt.import_task_state(
+                ti,
+                &TunerState {
+                    step,
+                    losses: losses.clone(),
+                    ema: rec.ema,
+                    params: rec.params.clone(),
+                    opt_m: rec.opt_m.clone(),
+                    opt_v: rec.opt_v.clone(),
+                },
+            )?;
+            batchers[ti].set_rng_state(rec.rng.0, rec.rng.1);
+        }
+        println!(
+            "resume: {n} task(s) at round {round}/{} from {} (+ base snapshot {})",
+            meta.steps,
+            jpath.display(),
+            meta.base
+        );
+    } else {
+        println!(
+            "resume: journal {} holds no complete round yet — replaying all {n} \
+             task(s) from round 0",
+            jpath.display()
+        );
+    }
+
+    run_multi_task(MultiRun {
+        mt,
+        batchers,
+        evals,
+        writer: Some(writer),
+        base_model,
+        names: meta.tasks.clone(),
+        out_dir: o.out_dir,
+        steps: meta.steps,
+        save_every: meta.save_every,
+        halt_after: o.halt_after,
+        publish: o.publish,
+        gc_keep: o.gc_keep,
+        eval_tokens: o.eval_tokens,
+        heads: meta.n_heads,
+        batch: meta.batch,
+        seq: meta.seq,
+        threads,
+        save_model: None,
+    })
 }
 
 /// `peqa fsck`: verify every named artifact (directories expand to
@@ -1317,6 +1669,17 @@ struct ServeOpts {
     affinity_burst: usize,
     stream: bool,
     watch_interval_ms: u64,
+    /// Paged-KV pool size per engine; 0 serves per-sequence ring buffers.
+    kv_pages: usize,
+    /// Tokens per KV page (only read when `kv_pages > 0`).
+    page_tokens: usize,
+    /// When > 0, every request shares a deterministic prompt prefix of
+    /// this many tokens (distinct final token per request) — the
+    /// copy-on-write prefix-sharing workload.
+    prefix_tokens: usize,
+    /// Fail the run unless the paged backend actually attached shared
+    /// prefix pages (`kv_pages_shared > 0`) — the CI smoke's assertion.
+    require_shared: bool,
 }
 
 /// Host serving demo (no `xla` feature): decode a mixed multi-task
@@ -1412,13 +1775,30 @@ fn serve_host(o: ServeOpts) -> Result<()> {
         sampling,
         seed: o.seed,
         strict_coverage: o.strict,
+        kv_pages: o.kv_pages,
+        page_tokens: o.page_tokens,
     };
 
     // Text prompts need the byte-level id range; a served model with a
     // smaller vocab gets deterministic in-vocab token prompts instead.
     let byte_level = geom.vocab >= 260;
     let texts = ["the empire of", "shares of acme", "the battle of", "analysts expect"];
-    let prompts: Vec<Vec<u32>> = if byte_level {
+    let prompts: Vec<Vec<u32>> = if o.prefix_tokens > 0 {
+        // Prefix-sharing workload: every request repeats one
+        // deterministic prefix and diverges only at the final token, so
+        // a paged backend maps the prefix once (CoW-attached) while the
+        // ring backend pays it per sequence.
+        let mut rng = peqa::util::Pcg32::seeded(o.seed, 0x51a5);
+        let prefix: Vec<u32> =
+            (0..o.prefix_tokens).map(|_| rng.below(geom.vocab as u32)).collect();
+        (0..o.requests.max(1) as u32)
+            .map(|i| {
+                let mut p = prefix.clone();
+                p.push(i % geom.vocab as u32);
+                p
+            })
+            .collect()
+    } else if byte_level {
         texts.iter().map(|t| tok.encode(t)).collect()
     } else {
         let mut rng = peqa::util::Pcg32::seeded(o.seed, 0x9207);
@@ -1441,6 +1821,8 @@ fn serve_host(o: ServeOpts) -> Result<()> {
             queue_cap: o.queue_cap,
             deadline_ms: o.deadline_ms,
             affinity_burst: o.affinity_burst,
+            kv_pages: o.kv_pages,
+            page_tokens: o.page_tokens,
             watch_interval_ms: o.watch_interval_ms,
         };
         let per_engine = (threads / o.engines).max(1);
@@ -1541,7 +1923,9 @@ fn serve_host(o: ServeOpts) -> Result<()> {
         for i in 0..o.requests {
             let task = &tasks[i % tasks.len()];
             let prompt = prompts[i % prompts.len()].clone();
-            sched.submit(task, prompt, o.max_new, EOS);
+            sched
+                .submit(task, prompt, o.max_new, EOS)
+                .map_err(|e| anyhow::anyhow!("request {i} rejected: {e}"))?;
         }
         let responses = sched.run_until_idle()?;
         let m = sched.metrics.clone();
@@ -1595,6 +1979,23 @@ fn serve_host(o: ServeOpts) -> Result<()> {
             m.shed_count,
             m.swaps_avoided,
         );
+    }
+    if o.kv_pages > 0 {
+        println!(
+            "paged kv: {} pages × {} tokens/page per engine | peak {} pages mapped | \
+             {} shared prefix page(s) attached | {} request(s) rejected KvExhausted",
+            o.kv_pages,
+            o.page_tokens.max(1),
+            m.kv_pages_peak,
+            m.kv_pages_shared,
+            m.kv_exhausted_count,
+        );
+        if o.require_shared && m.kv_pages_shared == 0 {
+            bail!(
+                "--require-shared: no prefix pages were shared (kv_pages_shared = 0); \
+                 expected the paged backend to CoW-attach the common prompt prefix"
+            );
+        }
     }
     println!(
         "model: {} layers, d_model {}, {} heads, vocab {} | packed codes {} | adapters {} ({} tasks)",

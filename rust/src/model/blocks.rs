@@ -21,16 +21,18 @@
 //!   backward tape) and [`rms_backward_into`].
 //! * [`rope_row_at`] / [`rope_backward_rows`] — per-head half-split
 //!   rotary apply and its transpose.
-//! * Fixed-order causal attention over either a [`KvCache`] window
-//!   ([`attend_row`], [`attend_seq_chunk`] — the serving pass) or a
-//!   full-sequence tape ([`attend_seq_tape`], parameterized by
-//!   [`Tape`]; [`attend_seq_backward`] is its reverse mode). Both sides
-//!   stream K/V as contiguous slabs through the same
-//!   [`attend_row_slabs`] kernel: one sweep per cached row for *all*
-//!   heads with 4-way blocked dots, per-head divide-at-end softmax.
-//!   The arithmetic per (head, position) is a fixed-order reduction
-//!   independent of batch composition and worker count, which is what
-//!   makes every consumer bitwise thread/batch invariant.
+//! * Fixed-order causal attention over either a [`KvSeq`] window
+//!   ([`attend_row`], [`attend_seq_chunk`] — the serving pass, ring or
+//!   paged) or a full-sequence tape ([`attend_seq_tape`], parameterized
+//!   by [`Tape`]; [`attend_seq_backward`] is its reverse mode). Every
+//!   caller streams K/V as contiguous segments through the same
+//!   [`attend_row_slabs`] kernel — a cloneable segment iterator: two
+//!   slabs for the ring, one prefix slab for the tape, a page walk for
+//!   the paged cache. One sweep per cached row for *all* heads with
+//!   4-way blocked dots, per-head divide-at-end softmax. The arithmetic
+//!   per (head, position) is a fixed-order reduction independent of
+//!   batch composition, worker count and segmentation, which is what
+//!   makes every consumer bitwise thread/batch/page-size invariant.
 //! * SwiGLU forward/backward ([`swiglu_rows_into`],
 //!   [`swiglu_backward_into`]) and the dense LM-head kernels
 //!   ([`dense_rows_into`], [`dense_grad_rows_into`]).
@@ -50,7 +52,7 @@
 use anyhow::{anyhow, Result};
 
 use super::PackedModel;
-use crate::serve::kvcache::KvCache;
+use crate::serve::kvcache::KvSeq;
 use crate::tensor::Tensor;
 
 /// RMS-norm epsilon shared by serving and training: a model is tuned
@@ -351,25 +353,31 @@ pub fn rope_backward_rows(
 // ------------------------------------------------------------- attention
 
 /// Head-blocked causal attention of one already-roped query row over a
-/// window of `n` K/V rows supplied as at most two contiguous slabs in
-/// position order. Writes the (d_model,) context row.
+/// window of `n` K/V rows supplied as contiguous segments in position
+/// order. Writes the (d_model,) context row.
 ///
-/// Each cached row is visited ONCE for all heads (score pass over K,
-/// accumulate pass over V) with 4-way blocked dots; softmax divides once
-/// per head at the end. Scores/max/denominator live in the calling
-/// worker's [`AttnScratch`]. The arithmetic per (head, position) is a
-/// fixed-order reduction independent of batch composition, thread count
-/// and slab segmentation, preserving every consumer's bitwise
-/// invariances.
-pub(crate) fn attend_row_slabs(
+/// The segment source is any cloneable iterator of `(k, v)` row slabs:
+/// the ring cache yields its ≤ 2 wrap slabs, the full-sequence tape one
+/// prefix slab, and the paged cache a page walk of ≤ `window/P + 1`
+/// segments — the kernel clones the iterator for its two sweeps and
+/// never allocates. Each cached row is visited ONCE for all heads
+/// (score pass over K, accumulate pass over V) with 4-way blocked dots;
+/// softmax divides once per head at the end. Scores/max/denominator
+/// live in the calling worker's [`AttnScratch`]. The arithmetic per
+/// (head, position) is a fixed-order reduction independent of batch
+/// composition, thread count and slab segmentation, preserving every
+/// consumer's bitwise invariances.
+pub(crate) fn attend_row_slabs<'a, I>(
     n_heads: usize,
     head_dim: usize,
     n: usize,
-    slabs: &[(&[f32], &[f32]); 2],
+    slabs: I,
     q: &[f32],
     ctx: &mut [f32],
     scratch: &mut AttnScratch,
-) {
+) where
+    I: Iterator<Item = (&'a [f32], &'a [f32])> + Clone,
+{
     let AttnScratch { scores, head_max, head_den } = scratch;
     let d = n_heads * head_dim;
     let inv = 1.0 / (head_dim as f32).sqrt();
@@ -382,7 +390,7 @@ pub(crate) fn attend_row_slabs(
 
     // Score pass: one sweep over the contiguous K slabs, all heads per row.
     let mut j = 0usize;
-    for (kseg, _) in slabs {
+    for (kseg, _) in slabs.clone() {
         for krow in kseg.chunks_exact(d) {
             for h in 0..n_heads {
                 let sc = inv
@@ -432,14 +440,16 @@ pub(crate) fn attend_row_slabs(
     }
 }
 
-/// [`attend_row_slabs`] over a [`KvCache`] window: the serving decode
-/// shape. The cache's ring wraps at most once, so the window arrives as
-/// the cache's two contiguous slabs.
+/// [`attend_row_slabs`] over a [`KvSeq`] window: the serving decode
+/// shape. A ring cache wraps at most once, so its window arrives as two
+/// contiguous slabs; a paged cache streams its page walk. Either way
+/// the rows, their order, and the per-row arithmetic are identical —
+/// the bitwise paged-vs-ring parity the serve tests pin.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn attend_row(
     n_heads: usize,
     head_dim: usize,
-    cache: &KvCache,
+    cache: &KvSeq,
     layer: usize,
     abs: usize,
     q: &[f32],
@@ -447,8 +457,15 @@ pub(crate) fn attend_row(
     scratch: &mut AttnScratch,
 ) {
     let n = cache.window_len(abs);
-    let slabs = cache.window_slabs(layer, abs);
-    attend_row_slabs(n_heads, head_dim, n, &slabs, q, ctx, scratch);
+    match cache {
+        KvSeq::Ring(c) => {
+            let slabs = c.window_slabs(layer, abs);
+            attend_row_slabs(n_heads, head_dim, n, slabs.iter().copied(), q, ctx, scratch);
+        }
+        KvSeq::Paged(c) => {
+            attend_row_slabs(n_heads, head_dim, n, c.window_segments(layer, abs), q, ctx, scratch);
+        }
+    }
 }
 
 /// One worker's share of the serving attention pass: rotary + cache
@@ -464,7 +481,7 @@ pub(crate) fn attend_seq_chunk(
     d: usize,
     layer: usize,
     seq_chunk: &[&[u32]],
-    cache_chunk: &mut [&mut KvCache],
+    cache_chunk: &mut [&mut KvSeq],
     q_c: &mut [f32],
     k_c: &mut [f32],
     v_c: &[f32],
@@ -525,12 +542,12 @@ pub fn attend_seq_tape(
         rope_row_at(freqs, hh, hd, &mut q[t * d..(t + 1) * d], t);
         rope_row_at(freqs, hh, hd, &mut k[t * d..(t + 1) * d], t);
         let n = t + 1;
-        let slabs = [(&k[..n * d], &v[..n * d]), (&[][..], &[][..])];
+        let slabs = [(&k[..n * d], &v[..n * d])];
         attend_row_slabs(
             hh,
             hd,
             n,
-            &slabs,
+            slabs.iter().copied(),
             &q[t * d..(t + 1) * d],
             &mut ctx[t * d..(t + 1) * d],
             scratch,
@@ -839,10 +856,23 @@ mod tests {
             rope_row_at(&freqs, hh, hd, &mut q[t * d..(t + 1) * d], t);
             rope_row_at(&freqs, hh, hd, &mut k[t * d..(t + 1) * d], t);
             let n = t + 1;
-            let slabs = [(&k[..n * d], &v0.data()[..n * d]), (&[][..], &[][..])];
+            // Split the prefix at an arbitrary row boundary: segmentation
+            // must never change the result (the paged walk relies on it).
+            let cut = (t / 2) * d;
+            let kd = &k[..n * d];
+            let vd = &v0.data()[..n * d];
+            let slabs = [(&kd[..cut], &vd[..cut]), (&kd[cut..], &vd[cut..])];
             let mut ctx = vec![0.0f32; d];
             let mut scr = AttnScratch::default();
-            attend_row_slabs(hh, hd, n, &slabs, &q[t * d..(t + 1) * d], &mut ctx, &mut scr);
+            attend_row_slabs(
+                hh,
+                hd,
+                n,
+                slabs.iter().copied(),
+                &q[t * d..(t + 1) * d],
+                &mut ctx,
+                &mut scr,
+            );
             assert_eq!(ctx[..], ctx_keep[t * d..(t + 1) * d], "t={t}");
         }
     }

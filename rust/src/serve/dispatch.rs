@@ -42,6 +42,7 @@ use std::sync::mpsc::SyncSender;
 use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
+use super::kvpage::DEFAULT_PAGE_TOKENS;
 use super::types::{ServeError, ServeMetrics, StreamEvent};
 use crate::util::sync::{lock_clean, wait_clean};
 
@@ -58,11 +59,30 @@ pub struct DispatchConfig {
     /// an older request of another task waits. `0` is plain global
     /// FIFO (every cross-task arrival forces a swap).
     pub affinity_burst: usize,
+    /// Per-sequence KV window of the pool's workers; prompts longer
+    /// than this are rejected at submit with
+    /// [`ServeError::PromptTooLong`] instead of queueing toward a
+    /// worker-side failure. `0` disables the gate.
+    pub max_prompt: usize,
+    /// Per-worker paged-KV pool size (pages); requests that could never
+    /// fit it are rejected at submit with [`ServeError::KvExhausted`].
+    /// `0` means the workers serve ring buffers — no page gate.
+    pub kv_pages: usize,
+    /// Tokens per KV page (the feasibility gate's unit; only read when
+    /// `kv_pages > 0`).
+    pub page_tokens: usize,
 }
 
 impl Default for DispatchConfig {
     fn default() -> Self {
-        DispatchConfig { queue_cap: 64, deadline_ms: 0, affinity_burst: 4 }
+        DispatchConfig {
+            queue_cap: 64,
+            deadline_ms: 0,
+            affinity_burst: 4,
+            max_prompt: 0,
+            kv_pages: 0,
+            page_tokens: DEFAULT_PAGE_TOKENS,
+        }
     }
 }
 
@@ -99,6 +119,7 @@ struct State {
     queue_depth_max: usize,
     shed_count: usize,
     swaps_avoided: usize,
+    kv_exhausted: usize,
 }
 
 /// Shared work queue: `Mutex<State>` + condvar. Cheap to share — one
@@ -121,6 +142,7 @@ impl Dispatcher {
                 queue_depth_max: 0,
                 shed_count: 0,
                 swaps_avoided: 0,
+                kv_exhausted: 0,
             }),
             ready: Condvar::new(),
         }
@@ -148,6 +170,28 @@ impl Dispatcher {
         let mut st = lock_clean(&self.state);
         if !st.open {
             return Err(ServeError::Failed("engine pool is shut down".into()));
+        }
+        // Feasibility gates before load gates: a request no worker could
+        // ever serve is rejected typed, regardless of queue depth.
+        if self.cfg.max_prompt > 0 && prompt.len() > self.cfg.max_prompt {
+            return Err(ServeError::PromptTooLong { len: prompt.len(), cap: self.cfg.max_prompt });
+        }
+        if self.cfg.kv_pages > 0 {
+            let p = self.cfg.page_tokens.max(1);
+            let mut need = (prompt.len() + max_new).div_ceil(p);
+            if self.cfg.max_prompt > 0 {
+                // The ring overwrites in place past the window, so a
+                // sequence never maps more pages than the window spans.
+                need = need.min(self.cfg.max_prompt.div_ceil(p));
+            }
+            if need > self.cfg.kv_pages {
+                st.kv_exhausted += 1;
+                return Err(ServeError::KvExhausted {
+                    task: task.to_string(),
+                    need,
+                    total: self.cfg.kv_pages,
+                });
+            }
         }
         let depth = st.queues.get(task).map_or(0, VecDeque::len);
         if self.cfg.queue_cap > 0 && depth >= self.cfg.queue_cap {
@@ -305,6 +349,7 @@ impl Dispatcher {
             queue_depth_max: st.queue_depth_max,
             shed_count: st.shed_count,
             swaps_avoided: st.swaps_avoided,
+            kv_exhausted_count: st.kv_exhausted,
             ..ServeMetrics::default()
         }
     }
@@ -322,7 +367,7 @@ mod tests {
 
     #[test]
     fn bounded_ingress_rejects_past_cap_with_typed_error() {
-        let d = Dispatcher::new(DispatchConfig { queue_cap: 2, deadline_ms: 0, affinity_burst: 4 });
+        let d = Dispatcher::new(DispatchConfig { queue_cap: 2, ..DispatchConfig::default() });
         let (tx, _rx) = chan();
         d.submit("a", vec![1], 4, u32::MAX, tx.clone(), false).unwrap();
         d.submit("a", vec![2], 4, u32::MAX, tx.clone(), false).unwrap();
@@ -338,8 +383,12 @@ mod tests {
 
     #[test]
     fn deadline_shed_drops_stale_requests_with_typed_reply() {
-        let d =
-            Dispatcher::new(DispatchConfig { queue_cap: 0, deadline_ms: 25, affinity_burst: 0 });
+        let d = Dispatcher::new(DispatchConfig {
+            queue_cap: 0,
+            deadline_ms: 25,
+            affinity_burst: 0,
+            ..DispatchConfig::default()
+        });
         let (tx_old, rx_old) = chan();
         d.submit("a", vec![1], 4, u32::MAX, tx_old, false).unwrap();
         std::thread::sleep(Duration::from_millis(100));
@@ -364,8 +413,11 @@ mod tests {
 
     #[test]
     fn affinity_sticks_within_burst_then_yields_to_older_task() {
-        let d =
-            Dispatcher::new(DispatchConfig { queue_cap: 0, deadline_ms: 0, affinity_burst: 2 });
+        let d = Dispatcher::new(DispatchConfig {
+            queue_cap: 0,
+            affinity_burst: 2,
+            ..DispatchConfig::default()
+        });
         let (tx, _rx) = chan();
         for (task, p) in [("a", 1), ("b", 2), ("a", 3), ("a", 4), ("a", 5), ("b", 6)] {
             d.submit(task, vec![p], 1, u32::MAX, tx.clone(), false).unwrap();
@@ -390,6 +442,29 @@ mod tests {
         assert_eq!(order, want);
         assert_eq!(d.admission_metrics().swaps_avoided, 3);
         assert_eq!(d.pending(), 0);
+    }
+
+    #[test]
+    fn infeasible_requests_are_rejected_typed_at_ingress() {
+        let d = Dispatcher::new(DispatchConfig {
+            max_prompt: 16,
+            kv_pages: 3,
+            page_tokens: 4,
+            ..DispatchConfig::default()
+        });
+        let (tx, _rx) = chan();
+        // Prompt beyond the worker window: typed reject, nothing queued.
+        let err = d.submit("a", vec![0; 17], 1, u32::MAX, tx.clone(), false).unwrap_err();
+        assert_eq!(err, ServeError::PromptTooLong { len: 17, cap: 16 });
+        // 8 prompt + 8 new = 4 pages > 3 in the pool (window spans 4):
+        // no worker could ever map it, so it is shed before queueing.
+        let err = d.submit("a", vec![0; 8], 8, u32::MAX, tx.clone(), false).unwrap_err();
+        assert_eq!(err, ServeError::KvExhausted { task: "a".into(), need: 4, total: 3 });
+        assert_eq!(d.admission_metrics().kv_exhausted_count, 1);
+        // Within budget (8 + 4 = 3 pages): admitted.
+        d.submit("a", vec![0; 8], 4, u32::MAX, tx, false).unwrap();
+        assert_eq!(d.pending(), 1);
+        assert_eq!(d.admission_metrics().shed_count, 0, "feasibility rejects are not load sheds");
     }
 
     #[test]

@@ -59,7 +59,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use super::kvcache::KvCache;
+use super::kvcache::{KvCache, KvSeq};
 use crate::model::blocks::{
     self, attend_seq_chunk, dense_rows_into, ensure, proj_into, rms_norm_rows,
     rms_norm_rows_into, rope_freqs, silu, AttnScratch, LayerNames, ProjScratch,
@@ -410,9 +410,13 @@ impl Engine {
         self.model.packed_bytes()
     }
 
-    /// A fresh K/V cache sized for this model with the given window.
-    pub fn new_cache(&self, capacity: usize) -> KvCache {
-        KvCache::new(self.geom.n_layers, self.geom.d_model, capacity)
+    /// A fresh ring-buffer K/V sequence sized for this model with the
+    /// given window — the default backend (`--kv-pages 0`). Paged
+    /// sequences come from [`super::kvpage::PagePool::admit_seq`]
+    /// instead and wrap as [`KvSeq::Paged`]; the engine drives both
+    /// through the same [`KvSeq`] surface.
+    pub fn new_cache(&self, capacity: usize) -> KvSeq {
+        KvSeq::Ring(KvCache::new(self.geom.n_layers, self.geom.d_model, capacity))
     }
 
     /// Coverage gaps of `adapter` against this engine's packed
@@ -513,7 +517,7 @@ impl Engine {
     /// position (`vocab` floats). Used both for prompt prefill (the
     /// projections run batched over the whole block through the fused
     /// GEMM) and — with a single token — for unbatched decode.
-    pub fn prefill(&mut self, tokens: &[u32], cache: &mut KvCache) -> Result<Vec<f32>> {
+    pub fn prefill(&mut self, tokens: &[u32], cache: &mut KvSeq) -> Result<Vec<f32>> {
         if tokens.is_empty() {
             bail!("prefill needs at least one token");
         }
@@ -531,7 +535,7 @@ impl Engine {
     pub fn prefill_batch(
         &mut self,
         prompts: &[&[u32]],
-        caches: &mut [&mut KvCache],
+        caches: &mut [&mut KvSeq],
     ) -> Result<Vec<f32>> {
         if prompts.iter().any(|p| p.is_empty()) {
             bail!("prefill_batch needs at least one token per prompt");
@@ -547,7 +551,7 @@ impl Engine {
     pub fn decode_batch(
         &mut self,
         tokens: &[u32],
-        caches: &mut [&mut KvCache],
+        caches: &mut [&mut KvSeq],
     ) -> Result<Vec<f32>> {
         let seqs: Vec<&[u32]> = tokens.chunks(1).collect();
         self.forward_multi(&seqs, caches)
@@ -563,7 +567,7 @@ impl Engine {
     fn forward_multi(
         &mut self,
         seqs: &[&[u32]],
-        caches: &mut [&mut KvCache],
+        caches: &mut [&mut KvSeq],
     ) -> Result<Vec<f32>> {
         let n_seqs = seqs.len();
         if n_seqs != caches.len() {
@@ -629,7 +633,7 @@ impl Engine {
                 // (ragged) activation row slabs off the remainders; every
                 // chunk runs exactly the single-worker code per sequence.
                 let mut seqs_rem: &[&[u32]] = seqs;
-                let mut caches_rem: &mut [&mut KvCache] = &mut *caches;
+                let mut caches_rem: &mut [&mut KvSeq] = &mut *caches;
                 let mut q_rem: &mut [f32] = &mut scratch.q[..m * d];
                 let mut k_rem: &mut [f32] = &mut scratch.k[..m * d];
                 let mut ctx_rem: &mut [f32] = &mut scratch.ctx[..m * d];

@@ -13,6 +13,14 @@
 //! step the engine calls [`KvCache::write`] once per layer at the same
 //! absolute position, then [`KvCache::advance`] once the token (or
 //! prefill block) is fully processed.
+//!
+//! [`KvSeq`] is the engine-facing sum of the two KV backends: this ring
+//! (the bitwise oracle, and the default when `--kv-pages` is 0) and the
+//! paged table of [`super::kvpage`] (fixed-size pages, copy-on-write
+//! prefix sharing). Both store identical rows at identical ring slots,
+//! so the engine's decode is bitwise the same through either.
+
+use super::kvpage::PagedKvCache;
 
 /// Preallocated per-sequence K/V ring buffer (see module docs).
 #[derive(Clone, Debug)]
@@ -130,6 +138,80 @@ impl KvCache {
     /// Preallocated bytes across K and V and all layers.
     pub fn bytes(&self) -> usize {
         (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+/// One decoding sequence's KV state, over either backend (module docs).
+/// The engine writes and advances through this enum; the attention
+/// kernel dispatches on it to stream the window as contiguous segments
+/// (two slabs for the ring, a page walk for the paged table).
+#[derive(Debug)]
+pub enum KvSeq {
+    Ring(KvCache),
+    Paged(PagedKvCache),
+}
+
+impl KvSeq {
+    pub fn capacity(&self) -> usize {
+        match self {
+            KvSeq::Ring(c) => c.capacity(),
+            KvSeq::Paged(c) => c.capacity(),
+        }
+    }
+
+    /// Absolute sequence length appended so far (RoPE position of the
+    /// *next* token).
+    pub fn pos(&self) -> usize {
+        match self {
+            KvSeq::Ring(c) => c.pos(),
+            KvSeq::Paged(c) => c.pos(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            KvSeq::Ring(c) => c.len(),
+            KvSeq::Paged(c) => c.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pos() == 0
+    }
+
+    /// How many positions are attendable when the query sits at absolute
+    /// position `abs` (inclusive of `abs` itself).
+    pub fn window_len(&self, abs: usize) -> usize {
+        match self {
+            KvSeq::Ring(c) => c.window_len(abs),
+            KvSeq::Paged(c) => c.window_len(abs),
+        }
+    }
+
+    /// Store the K/V rows of absolute position `abs` for `layer`. Paged
+    /// sequences must have been [`PagedKvCache::prepare`]d for these
+    /// positions by the scheduler first.
+    pub fn write(&mut self, layer: usize, abs: usize, k: &[f32], v: &[f32]) {
+        match self {
+            KvSeq::Ring(c) => c.write(layer, abs, k, v),
+            KvSeq::Paged(c) => c.write(layer, abs, k, v),
+        }
+    }
+
+    /// Mark `n` more positions as fully appended (all layers written).
+    pub fn advance(&mut self, n: usize) {
+        match self {
+            KvSeq::Ring(c) => c.advance(n),
+            KvSeq::Paged(c) => c.advance(n),
+        }
+    }
+
+    /// KV storage bytes reachable from this sequence.
+    pub fn bytes(&self) -> usize {
+        match self {
+            KvSeq::Ring(c) => c.bytes(),
+            KvSeq::Paged(c) => c.bytes(),
+        }
     }
 }
 

@@ -1,0 +1,967 @@
+//! Paged KV memory — fixed-size pages, a word-scan bitmap allocator,
+//! and copy-on-write prompt-prefix sharing.
+//!
+//! The ring buffers in [`super::kvcache`] preallocate `window × layers ×
+//! d` floats per sequence, so serving RAM scales as worst-case context ×
+//! concurrency even when most requests use a fraction of the window.
+//! This module decouples the two, vLLM-style:
+//!
+//! * [`KvPage`] — one fixed-size block of K/V storage holding
+//!   `page_tokens` positions for every layer.
+//! * [`PageAllocator`] — a free-page bitmap (one bit per page, word-scan
+//!   with a rotating hint, modeled on segment-validity tables from
+//!   log-structured storage) handing out page ids from one pool sized by
+//!   `--kv-pages`.
+//! * [`PagePool`] — the allocator plus per-page refcounts, recycled page
+//!   buffers, a reservation counter (admission promises pages up front
+//!   so concurrent sequences can never over-commit the pool mid-decode),
+//!   and a hash-indexed prefix trie keyed on `(task, parent, token
+//!   chunk)` that lets same-task requests attach already-written prompt
+//!   pages instead of re-prefilling them.
+//! * [`PagedKvCache`] — the per-sequence page table: logical position →
+//!   page, same ring semantics as [`super::kvcache::KvCache`] (slot =
+//!   `abs % capacity`, sliding window past capacity), storage allocated
+//!   page-by-page as the sequence actually grows.
+//!
+//! ## Copy-on-write contract
+//!
+//! Shared pages are always *complete* prompt chunks (exactly
+//! `page_tokens` tokens), attached read-only by later same-task
+//! requests; a sequence writes into a shared page only when its ring
+//! wraps back onto it. [`PagedKvCache::prepare`] runs on the scheduler
+//! thread before every engine call and un-shares (allocates + copies)
+//! any page about to be written, so engine worker threads only ever
+//! write pages they own uniquely. [`std::sync::Arc::make_mut`] in the
+//! write path is the panic-free backstop: if `prepare` was somehow
+//! skipped the decode stays bitwise correct (the write clones privately)
+//! and only the pool accounting goes stale.
+//!
+//! ## Bitwise parity with the ring
+//!
+//! A paged sequence stores exactly the rows the ring stores, at the same
+//! ring slots; [`PagedKvCache::window_segments`] walks the attention
+//! window in ascending position order as ≤ `window/page_tokens + 1`
+//! contiguous segments. The attention kernel's per-(head, position)
+//! arithmetic is independent of slab segmentation, so paged decode is
+//! bitwise identical to the ring reference at any page size, thread
+//! count, and sharing pattern — the ring stays in-tree as the oracle.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Default tokens per page (CLI `--page-tokens`).
+pub const DEFAULT_PAGE_TOKENS: usize = 16;
+
+/// One fixed-size KV page: K and V storage for `page_tokens` positions
+/// × `n_layers` layers × `d` floats. Row `(layer, slot)` lives at
+/// `(layer * page_tokens + slot) * d`.
+#[derive(Clone, Debug)]
+pub struct KvPage {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl KvPage {
+    fn new(n_layers: usize, page_tokens: usize, d: usize) -> KvPage {
+        let n = n_layers * page_tokens * d;
+        KvPage { k: vec![0.0; n], v: vec![0.0; n] }
+    }
+
+    /// Bytes of K+V storage.
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+/// Free-page bitmap: bit set = page free. Allocation word-scans from a
+/// rotating hint (O(words) worst case, O(1) amortized); free flips one
+/// bit. Double-free and out-of-range are reported, never panicked on.
+#[derive(Clone, Debug)]
+pub struct PageAllocator {
+    words: Vec<u64>,
+    total: usize,
+    free: usize,
+    hint: usize,
+}
+
+impl PageAllocator {
+    pub fn new(total: usize) -> PageAllocator {
+        let n_words = total.div_ceil(64);
+        let mut words = vec![u64::MAX; n_words];
+        if total % 64 != 0 {
+            if let Some(last) = words.last_mut() {
+                *last = (1u64 << (total % 64)) - 1;
+            }
+        }
+        PageAllocator { words, total, free: total, hint: 0 }
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.free
+    }
+
+    /// Hand out a free page id, or `None` when the pool is exhausted.
+    pub fn alloc(&mut self) -> Option<u32> {
+        if self.free == 0 {
+            return None;
+        }
+        let n = self.words.len();
+        for i in 0..n {
+            let w = (self.hint + i) % n;
+            let word = self.words[w];
+            if word != 0 {
+                let bit = word.trailing_zeros() as usize;
+                self.words[w] = word & !(1u64 << bit);
+                self.hint = w;
+                self.free -= 1;
+                return Some((w * 64 + bit) as u32);
+            }
+        }
+        None
+    }
+
+    /// Return a page to the pool. `false` means double-free or
+    /// out-of-range — the bitmap is left unchanged (the caller treats it
+    /// as a logic error; nothing is ever handed out twice).
+    pub fn free(&mut self, id: u32) -> bool {
+        let id = id as usize;
+        if id >= self.total {
+            return false;
+        }
+        let (w, bit) = (id / 64, id % 64);
+        if self.words[w] & (1u64 << bit) != 0 {
+            return false;
+        }
+        self.words[w] |= 1u64 << bit;
+        self.free += 1;
+        true
+    }
+
+    pub fn is_free(&self, id: u32) -> bool {
+        let id = id as usize;
+        id < self.total && self.words[id / 64] & (1u64 << (id % 64)) != 0
+    }
+}
+
+/// Pool occupancy counters (see [`PagePool::stats`]). `shared_attached`
+/// is a cumulative event counter drained into `ServeMetrics` by the
+/// scheduler ([`PagePool::take_shared_count`]); `in_use`/`peak` are
+/// levels.
+#[derive(Clone, Debug, Default)]
+pub struct PoolStats {
+    /// Pages currently allocated (distinct ids handed out).
+    pub in_use: usize,
+    /// High-water mark of `in_use` over the pool's lifetime.
+    pub peak: usize,
+    /// Shared prompt pages attached by later requests (each attach of
+    /// one page counts once) — the savings counter.
+    pub shared_attached: usize,
+}
+
+/// Exact trie key: a prompt chunk is shared only between requests of
+/// the same task whose prompts agree token-for-token up to and
+/// including this chunk (`parent` chains the preceding chunk's node).
+#[derive(Clone, Debug, Hash, PartialEq, Eq)]
+struct PrefixKey {
+    task: String,
+    parent: Option<usize>,
+    chunk: Vec<u32>,
+}
+
+#[derive(Debug)]
+struct TrieNode {
+    key: PrefixKey,
+    /// The shared page, set by [`PagePool::publish_ready`] *after* the
+    /// registering request's prefill wrote it. While `None` the node
+    /// only marks the key as pending (matching requests defer), and the
+    /// writer's page keeps refcount 1 so its own `prepare` never
+    /// copy-on-writes the page it is about to fill.
+    page: Option<(u32, Arc<KvPage>)>,
+    /// False while the registering request's prefill is still in flight
+    /// this admit pass; matching requests defer instead of attaching.
+    ready: bool,
+    /// Sequences currently holding this node (writer + attachers). At
+    /// zero the node is removed and its page reference dropped.
+    live: usize,
+}
+
+/// One page-table entry: the pool id plus the shared storage handle.
+#[derive(Debug)]
+struct Entry {
+    id: u32,
+    page: Arc<KvPage>,
+}
+
+/// Transient page shortage surfaced by [`PagedKvCache::prepare`] — with
+/// correct admission reservations it cannot fire; it exists so the
+/// serve path stays panic-free even against accounting bugs.
+#[derive(Clone, Debug)]
+pub struct KvPressure {
+    pub need: usize,
+    pub available: usize,
+}
+
+impl std::fmt::Display for KvPressure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "kv page pool under-reserved: need {} page(s), {} available",
+            self.need, self.available
+        )
+    }
+}
+
+impl std::error::Error for KvPressure {}
+
+/// Outcome of [`PagePool::admit_seq`].
+pub enum SeqAdmit {
+    /// Staffed: the cache starts at `pos() == shared_tokens` — the
+    /// engine prefills only `prompt[cache.pos()..]`.
+    Ready(PagedKvCache),
+    /// The prompt prefix matches pages another request registered in
+    /// this very admit pass; retry after that request's prefill flips
+    /// them ready (only returned when `allow_defer`).
+    Defer,
+    /// Not enough unreserved free pages right now — leave the request
+    /// queued; finishing sequences will free pages.
+    NoPages { need: usize, available: usize },
+    /// The request can never fit the pool even alone — reject with a
+    /// typed error at submit/admit instead of over-admitting.
+    Never { need: usize, total: usize },
+}
+
+/// The shared page pool of one scheduler/worker (single-threaded
+/// access; engine worker threads never touch it — see module docs).
+#[derive(Debug)]
+pub struct PagePool {
+    n_layers: usize,
+    d: usize,
+    page_tokens: usize,
+    alloc: PageAllocator,
+    /// Per-id reference count: table entries + trie nodes. 0 = free.
+    refs: Vec<u32>,
+    /// Recycled page buffers (page recycling replaces the scheduler's
+    /// old capacity-keyed spare-cache pool).
+    spares: Vec<KvPage>,
+    /// Pages promised to admitted-but-not-yet-grown sequences.
+    reserved: usize,
+    stats: PoolStats,
+    nodes: Vec<Option<TrieNode>>,
+    free_nodes: Vec<usize>,
+    index: HashMap<PrefixKey, usize>,
+}
+
+impl PagePool {
+    /// `d` is the per-position KV row width (n_heads · head_dim).
+    pub fn new(n_layers: usize, d: usize, page_tokens: usize, total_pages: usize) -> PagePool {
+        PagePool {
+            n_layers,
+            d,
+            page_tokens: page_tokens.max(1),
+            alloc: PageAllocator::new(total_pages),
+            refs: vec![0; total_pages],
+            spares: Vec::new(),
+            reserved: 0,
+            stats: PoolStats::default(),
+            nodes: Vec::new(),
+            free_nodes: Vec::new(),
+            index: HashMap::new(),
+        }
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.alloc.total()
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.alloc.free_count()
+    }
+
+    /// Free pages not yet promised to an admitted sequence.
+    pub fn available(&self) -> usize {
+        self.alloc.free_count().saturating_sub(self.reserved)
+    }
+
+    pub fn stats(&self) -> &PoolStats {
+        &self.stats
+    }
+
+    /// Drain the cumulative shared-attach counter (delta reporting into
+    /// `ServeMetrics`, which adds across harvests).
+    pub fn take_shared_count(&mut self) -> usize {
+        std::mem::take(&mut self.stats.shared_attached)
+    }
+
+    /// Worst-case distinct pages a request may come to own privately:
+    /// `ceil((prompt+max_new)/P)` capped at the table length
+    /// `ceil(capacity/P)` (past that the ring overwrites in place).
+    pub fn demand_pages(&self, prompt_len: usize, max_new: usize, capacity: usize) -> usize {
+        let table_len = capacity.div_ceil(self.page_tokens);
+        (prompt_len + max_new).div_ceil(self.page_tokens).min(table_len)
+    }
+
+    /// Submit-time feasibility: `Some((need, total))` when the request
+    /// could never fit the pool even with every page free. Sharing can
+    /// only reduce the real footprint, never the worst case (shared
+    /// pages un-share on ring wrap), so this is the one rejection that
+    /// is safe to issue before seeing the pool's future state.
+    pub fn never_fits(
+        &self,
+        prompt_len: usize,
+        max_new: usize,
+        capacity: usize,
+    ) -> Option<(usize, usize)> {
+        let need = self.demand_pages(prompt_len, max_new, capacity);
+        if need > self.alloc.total() {
+            Some((need, self.alloc.total()))
+        } else {
+            None
+        }
+    }
+
+    fn ref_count(&self, id: u32) -> u32 {
+        self.refs.get(id as usize).copied().unwrap_or(0)
+    }
+
+    /// Allocate one page: bitmap id + a recycled (or fresh) buffer.
+    fn alloc_page(&mut self) -> Option<(u32, Arc<KvPage>)> {
+        let id = self.alloc.alloc()?;
+        let buf = match self.spares.pop() {
+            Some(b) => b,
+            None => KvPage::new(self.n_layers, self.page_tokens, self.d),
+        };
+        if let Some(r) = self.refs.get_mut(id as usize) {
+            *r = 1;
+        }
+        self.stats.in_use += 1;
+        if self.stats.in_use > self.stats.peak {
+            self.stats.peak = self.stats.in_use;
+        }
+        Some((id, Arc::new(buf)))
+    }
+
+    /// Allocate against a sequence's reservation, falling back to
+    /// unreserved free pages when the reservation is spent.
+    fn alloc_reserved(&mut self, reservation: &mut usize) -> Option<(u32, Arc<KvPage>)> {
+        if *reservation > 0 {
+            *reservation -= 1;
+            self.reserved = self.reserved.saturating_sub(1);
+        } else if self.available() == 0 {
+            return None;
+        }
+        self.alloc_page()
+    }
+
+    fn incref(&mut self, id: u32) {
+        if let Some(r) = self.refs.get_mut(id as usize) {
+            *r += 1;
+        }
+    }
+
+    /// Drop one reference; the last reference frees the bitmap slot and
+    /// recycles the buffer when this was the last `Arc` holder.
+    fn decref(&mut self, id: u32, page: Arc<KvPage>) {
+        let Some(r) = self.refs.get_mut(id as usize) else { return };
+        if *r == 0 {
+            return;
+        }
+        *r -= 1;
+        if *r == 0 {
+            if self.alloc.free(id) {
+                self.stats.in_use = self.stats.in_use.saturating_sub(1);
+            }
+            if let Some(buf) = Arc::into_inner(page) {
+                self.spares.push(buf);
+            }
+        }
+    }
+
+    fn insert_node(&mut self, node: TrieNode) -> usize {
+        match self.free_nodes.pop() {
+            Some(ni) => {
+                self.nodes[ni] = Some(node);
+                ni
+            }
+            None => {
+                self.nodes.push(Some(node));
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    fn release_node(&mut self, ni: usize) {
+        let dead = match self.nodes.get_mut(ni).and_then(|s| s.as_mut()) {
+            Some(nd) => {
+                nd.live = nd.live.saturating_sub(1);
+                nd.live == 0
+            }
+            None => false,
+        };
+        if dead {
+            if let Some(nd) = self.nodes[ni].take() {
+                self.index.remove(&nd.key);
+                self.free_nodes.push(ni);
+                if let Some((id, page)) = nd.page {
+                    self.decref(id, page);
+                }
+            }
+        }
+    }
+
+    /// Admission: reserve worst-case pages, attach any already-written
+    /// shared prefix chain, and register this prompt's own full chunks
+    /// as pending trie nodes so same-burst requests can share them (see
+    /// [`SeqAdmit`]). Runs on the scheduler thread only.
+    pub fn admit_seq(
+        &mut self,
+        task: &str,
+        prompt: &[u32],
+        max_new: usize,
+        capacity: usize,
+        allow_defer: bool,
+    ) -> SeqAdmit {
+        let p = self.page_tokens;
+        let table_len = capacity.div_ceil(p);
+        if let Some((need, total)) = self.never_fits(prompt.len(), max_new, capacity) {
+            return SeqAdmit::Never { need, total };
+        }
+        // Walk the trie over the attachable chunks: at most
+        // (len-1)/P, so the sequence always prefills ≥ 1 tail token
+        // (it needs its own last-prompt-row logits to sample from).
+        let attach_max = if prompt.is_empty() { 0 } else { (prompt.len() - 1) / p };
+        let mut matched: Vec<usize> = Vec::new();
+        let mut parent = None;
+        for ci in 0..attach_max {
+            let key = PrefixKey {
+                task: task.to_string(),
+                parent,
+                chunk: prompt[ci * p..(ci + 1) * p].to_vec(),
+            };
+            match self.index.get(&key) {
+                Some(&ni) => match self.nodes.get(ni).and_then(|s| s.as_ref()) {
+                    Some(nd) if nd.ready && nd.page.is_some() => {
+                        matched.push(ni);
+                        parent = Some(ni);
+                    }
+                    _ => {
+                        // Pending: registered earlier in this very admit
+                        // pass; its prefill flips it ready momentarily.
+                        if allow_defer {
+                            return SeqAdmit::Defer;
+                        }
+                        break;
+                    }
+                },
+                None => break,
+            }
+        }
+        let shared = matched.len();
+        // Worst-case *new* pages: a wrapping sequence may un-share every
+        // attached page, so sharing only discounts the non-wrap case.
+        let wraps = prompt.len() + max_new > capacity;
+        let need = if wraps {
+            table_len
+        } else {
+            self.demand_pages(prompt.len(), max_new, capacity).saturating_sub(shared)
+        };
+        if need > self.available() {
+            return SeqAdmit::NoPages { need, available: self.available() };
+        }
+        self.reserved += need;
+        let mut cache = PagedKvCache {
+            n_layers: self.n_layers,
+            d: self.d,
+            capacity,
+            page_tokens: p,
+            pos: shared * p,
+            table: (0..table_len).map(|_| None).collect(),
+            held_nodes: Vec::new(),
+            registered: Vec::new(),
+            reservation: need,
+        };
+        for (pi, &ni) in matched.iter().enumerate() {
+            if let Some(nd) = self.nodes[ni].as_mut() {
+                if let Some((id, page)) = nd.page.clone() {
+                    nd.live += 1;
+                    self.incref(id);
+                    cache.table[pi] = Some(Entry { id, page });
+                    cache.held_nodes.push(ni);
+                }
+            }
+        }
+        self.stats.shared_attached += shared;
+        // Writer path: allocate this prompt's remaining full chunks now
+        // (privately — refcount 1, so the writer's own `prepare` never
+        // copy-on-writes them) and register them pending; requests later
+        // in this burst defer-attach instead of re-prefilling the prefix.
+        let full_chunks = prompt.len() / p;
+        let mut reg_parent = matched.last().copied();
+        for ci in shared..full_chunks {
+            let key = PrefixKey {
+                task: task.to_string(),
+                parent: reg_parent,
+                chunk: prompt[ci * p..(ci + 1) * p].to_vec(),
+            };
+            if self.index.contains_key(&key) {
+                // Forced-miss duplicate (defer was disallowed): keep the
+                // pages private, stop registering deeper chunks.
+                break;
+            }
+            let Some((id, page)) = self.alloc_reserved(&mut cache.reservation) else {
+                break; // reservation spent — skip sharing, stay correct
+            };
+            cache.table[ci] = Some(Entry { id, page });
+            let ni = self.insert_node(TrieNode {
+                key: key.clone(),
+                page: None,
+                ready: false,
+                live: 1,
+            });
+            self.index.insert(key, ni);
+            cache.held_nodes.push(ni);
+            cache.registered.push((ni, ci));
+            reg_parent = Some(ni);
+        }
+        SeqAdmit::Ready(cache)
+    }
+
+    /// Flip the chunks `cache` registered in [`Self::admit_seq`] to
+    /// ready — call right after the sequence's prefill wrote them. Only
+    /// now does each trie node take its page reference (refcount 2:
+    /// writer table + node), so attachers see exactly the written rows.
+    pub fn publish_ready(&mut self, cache: &mut PagedKvCache) {
+        for (ni, pi) in cache.registered.drain(..) {
+            let Some(e) = cache.table.get(pi).and_then(|e| e.as_ref()) else {
+                continue;
+            };
+            let (id, page) = (e.id, e.page.clone());
+            if let Some(nd) = self.nodes.get_mut(ni).and_then(|s| s.as_mut()) {
+                if let Some(r) = self.refs.get_mut(id as usize) {
+                    *r += 1;
+                }
+                nd.page = Some((id, page));
+                nd.ready = true;
+            }
+        }
+    }
+
+    /// Return every page and trie reference a finished sequence holds
+    /// (page recycling on completion).
+    pub fn release_seq(&mut self, cache: &mut PagedKvCache) {
+        // Children before parents: a node's chain parents always outlive
+        // it, and held_nodes is chain-ordered root-first.
+        for ni in cache.held_nodes.drain(..).rev() {
+            self.release_node(ni);
+        }
+        cache.registered.clear();
+        for e in cache.table.iter_mut().filter_map(Option::take) {
+            self.decref(e.id, e.page);
+        }
+        self.reserved = self.reserved.saturating_sub(cache.reservation);
+        cache.reservation = 0;
+        cache.pos = 0;
+    }
+}
+
+/// Per-sequence page table over a [`PagePool`] — the paged replacement
+/// for [`super::kvcache::KvCache`], same ring semantics (module docs).
+#[derive(Debug)]
+pub struct PagedKvCache {
+    n_layers: usize,
+    d: usize,
+    capacity: usize,
+    page_tokens: usize,
+    /// Absolute sequence length appended so far (monotonic; slots ring).
+    pos: usize,
+    table: Vec<Option<Entry>>,
+    held_nodes: Vec<usize>,
+    /// `(trie node, table index)` of chunks this sequence registered
+    /// pending — drained by [`PagePool::publish_ready`].
+    registered: Vec<(usize, usize)>,
+    reservation: usize,
+}
+
+impl PagedKvCache {
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn len(&self) -> usize {
+        self.pos.min(self.capacity)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pos == 0
+    }
+
+    pub fn window_len(&self, abs: usize) -> usize {
+        (abs + 1).min(self.capacity)
+    }
+
+    /// Pages currently mapped by this sequence (shared + private).
+    pub fn pages_mapped(&self) -> usize {
+        self.table.iter().filter(|e| e.is_some()).count()
+    }
+
+    /// Make the next `n_tokens` positions writable: allocate boundary
+    /// pages and un-share (allocate + copy) any shared page the ring is
+    /// about to overwrite. Must run on the scheduler thread, before the
+    /// engine call that writes those positions.
+    pub fn prepare(&mut self, pool: &mut PagePool, n_tokens: usize) -> Result<(), KvPressure> {
+        let p = self.page_tokens;
+        let cap = self.capacity;
+        let mut pos = self.pos;
+        let end = self.pos + n_tokens;
+        while pos < end {
+            let slot = pos % cap;
+            let pi = slot / p;
+            let run = (p - slot % p).min(cap - slot).min(end - pos);
+            let needs_page = match &self.table[pi] {
+                None => true,
+                Some(e) => pool.ref_count(e.id) > 1,
+            };
+            if needs_page {
+                let Some((id, mut page)) = pool.alloc_reserved(&mut self.reservation) else {
+                    return Err(KvPressure { need: 1, available: pool.available() });
+                };
+                if let Some(old) = self.table[pi].take() {
+                    // Copy-on-write: carry the shared rows into the
+                    // private copy — the ring overwrites only some of
+                    // them, the rest stay attendable in the window.
+                    if let Some(pm) = Arc::get_mut(&mut page) {
+                        pm.k.copy_from_slice(&old.page.k);
+                        pm.v.copy_from_slice(&old.page.v);
+                    }
+                    pool.decref(old.id, old.page);
+                }
+                self.table[pi] = Some(Entry { id, page });
+            }
+            pos += run;
+        }
+        Ok(())
+    }
+
+    /// Store the K/V rows of absolute position `abs` for `layer` (same
+    /// contract as the ring's `write`). The target page is unique after
+    /// [`Self::prepare`]; `Arc::make_mut` keeps this panic-free (and
+    /// bitwise correct) even if it is unexpectedly still shared.
+    pub fn write(&mut self, layer: usize, abs: usize, k: &[f32], v: &[f32]) {
+        debug_assert_eq!(k.len(), self.d);
+        debug_assert_eq!(v.len(), self.d);
+        let p = self.page_tokens;
+        let slot = abs % self.capacity;
+        let pi = slot / p;
+        debug_assert!(self.table[pi].is_some(), "write before prepare at abs={abs}");
+        if let Some(e) = self.table[pi].as_mut() {
+            let pg = Arc::make_mut(&mut e.page);
+            let o = (layer * p + slot % p) * self.d;
+            pg.k[o..o + self.d].copy_from_slice(k);
+            pg.v[o..o + self.d].copy_from_slice(v);
+        }
+    }
+
+    /// The attention window of a query at absolute position `abs` as an
+    /// iterator of contiguous `(k, v)` row segments in ascending
+    /// position order — ≤ `capacity/page_tokens + 1` of them (one per
+    /// page touched, plus one extra split where the ring wraps). Row `j`
+    /// of the concatenation is position `abs + 1 − window_len(abs) + j`,
+    /// exactly the ring's `window_slabs` contract.
+    pub fn window_segments(&self, layer: usize, abs: usize) -> PageWalk<'_> {
+        let n = self.window_len(abs);
+        PageWalk { cache: self, layer, pos: abs + 1 - n, end: abs + 1 }
+    }
+
+    /// Mark `n` more positions as fully appended (all layers written).
+    pub fn advance(&mut self, n: usize) {
+        self.pos += n;
+    }
+
+    /// Bytes of page storage currently mapped by this sequence.
+    pub fn bytes(&self) -> usize {
+        self.table
+            .iter()
+            .flatten()
+            .map(|e| e.page.bytes())
+            .sum()
+    }
+}
+
+/// Iterator behind [`PagedKvCache::window_segments`] — computes each
+/// contiguous segment on the fly, no allocation (the attention kernel
+/// clones it for its two passes).
+#[derive(Clone)]
+pub struct PageWalk<'a> {
+    cache: &'a PagedKvCache,
+    layer: usize,
+    pos: usize,
+    end: usize,
+}
+
+impl<'a> Iterator for PageWalk<'a> {
+    type Item = (&'a [f32], &'a [f32]);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.pos >= self.end {
+            return None;
+        }
+        let c = self.cache;
+        let p = c.page_tokens;
+        let slot = self.pos % c.capacity;
+        let pi = slot / p;
+        let in_page = slot % p;
+        let run = (p - in_page).min(c.capacity - slot).min(self.end - self.pos);
+        self.pos += run;
+        // A missing entry is a prepare/write ordering bug; ending the
+        // walk early is the panic-free response (caught by the parity
+        // suites, which compare against the ring oracle bitwise).
+        let e = c.table[pi].as_ref()?;
+        let base = (self.layer * p + in_page) * c.d;
+        let len = run * c.d;
+        Some((&e.page.k[base..base + len], &e.page.v[base..base + len]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+    use std::collections::HashSet;
+
+    #[test]
+    fn bitmap_alloc_free_fuzz_never_double_hands_a_page() {
+        let total = 173; // off 64-boundary on purpose
+        let mut a = PageAllocator::new(total);
+        let mut held: HashSet<u32> = HashSet::new();
+        let mut rng = Pcg32::seeded(0xf42, 7);
+        for op in 0..2500 {
+            if rng.f32() < 0.55 {
+                match a.alloc() {
+                    Some(id) => {
+                        assert!((id as usize) < total, "op {op}: id {id} out of range");
+                        assert!(held.insert(id), "op {op}: page {id} double-handed");
+                        assert!(!a.is_free(id));
+                    }
+                    None => assert_eq!(held.len(), total, "op {op}: spurious exhaustion"),
+                }
+            } else if let Some(&id) = held.iter().next() {
+                held.remove(&id);
+                assert!(a.free(id), "op {op}: legitimate free rejected");
+                assert!(a.is_free(id));
+                // Double-free must be reported and change nothing.
+                assert!(!a.free(id), "op {op}: double-free accepted");
+            }
+            assert_eq!(a.free_count(), total - held.len(), "op {op}: free count drifted");
+        }
+        // Drain everything back and verify the pool is whole again.
+        for id in held.drain() {
+            assert!(a.free(id));
+        }
+        assert_eq!(a.free_count(), total);
+        assert!(!a.free(total as u32), "out-of-range free accepted");
+    }
+
+    #[test]
+    fn bitmap_exhausts_exactly_and_recovers() {
+        let mut a = PageAllocator::new(5);
+        let ids: Vec<u32> = (0..5).map(|_| a.alloc().unwrap()).collect();
+        assert_eq!(a.alloc(), None);
+        assert_eq!(a.free_count(), 0);
+        assert!(a.free(ids[2]));
+        assert_eq!(a.alloc(), Some(ids[2]));
+        assert_eq!(a.alloc(), None);
+    }
+
+    fn row(tag: f32, d: usize) -> Vec<f32> {
+        (0..d).map(|j| tag + j as f32).collect()
+    }
+
+    /// Admit a lone sequence (no sharing) and fill `n_tokens` positions.
+    fn grow(
+        pool: &mut PagePool,
+        cache: &mut PagedKvCache,
+        layers: usize,
+        d: usize,
+        from: usize,
+        to: usize,
+    ) {
+        for t in from..to {
+            cache.prepare(pool, 1).unwrap();
+            for layer in 0..layers {
+                let tag = (1000 * layer + t) as f32;
+                cache.write(layer, t, &row(tag, d), &row(tag + 0.5, d));
+            }
+            cache.advance(1);
+        }
+    }
+
+    #[test]
+    fn page_walk_matches_ring_rows_in_position_order() {
+        // Mirror kvcache's window_slabs test: every (layer, abs) window
+        // must concatenate to the written rows in ascending positions —
+        // including after the ring wraps and with capacity % P != 0.
+        let (layers, d, cap, p) = (2usize, 3usize, 10usize, 4usize);
+        let mut pool = PagePool::new(layers, d, p, 16);
+        let SeqAdmit::Ready(mut c) = pool.admit_seq("t", &[], 0, cap, false) else {
+            panic!("admit failed")
+        };
+        grow(&mut pool, &mut c, layers, d, 0, 17);
+        for layer in 0..layers {
+            for abs in [0usize, 3, 4, 9, 10, 13, 16] {
+                let n = c.window_len(abs);
+                let start = abs + 1 - n;
+                let mut rows: Vec<f32> = Vec::new();
+                let mut segs = 0;
+                for (k, _v) in c.window_segments(layer, abs) {
+                    rows.extend_from_slice(k);
+                    segs += 1;
+                }
+                assert!(segs <= cap.div_ceil(p) + 1, "abs={abs}: {segs} segments");
+                assert_eq!(rows.len(), n * d, "abs={abs}");
+                for j in 0..n {
+                    let tag = (1000 * layer + start + j) as f32;
+                    assert_eq!(&rows[j * d..(j + 1) * d], row(tag, d).as_slice(),
+                        "layer={layer} abs={abs} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prefix_sharing_attaches_and_cow_unshares_on_wrap() {
+        let (layers, d, cap, p) = (1usize, 2usize, 8usize, 4usize);
+        let mut pool = PagePool::new(layers, d, p, 8);
+        let prompt: Vec<u32> = (0..6).collect(); // one full chunk + 2 tail
+        // Writer admits, prefills, publishes.
+        let SeqAdmit::Ready(mut w) = pool.admit_seq("t", &prompt, 2, cap, true) else {
+            panic!("writer admit failed")
+        };
+        assert_eq!(w.pos(), 0);
+        grow(&mut pool, &mut w, layers, d, 0, prompt.len());
+        pool.publish_ready(&mut w);
+        let base_in_use = pool.stats().in_use;
+        // Attacher with the same prompt: hits the ready chunk, starts at
+        // pos 4, and the pool grows by its private tail only.
+        let SeqAdmit::Ready(mut a) = pool.admit_seq("t", &prompt, 2, cap, true) else {
+            panic!("attacher admit failed")
+        };
+        assert_eq!(a.pos(), p, "attacher starts after the shared chunk");
+        assert_eq!(pool.stats().shared_attached, 1);
+        grow(&mut pool, &mut a, layers, d, a.pos(), prompt.len());
+        // Shared page is one page, not two.
+        assert_eq!(pool.stats().in_use, base_in_use + 1);
+        // Shared rows read back bitwise from the attacher's walk.
+        let (k, _v) = a.window_segments(0, 3).next().unwrap();
+        assert_eq!(&k[0..d], row(1000.0 * 0.0, d).as_slice());
+        // Wrap: position 8 lands back on the shared page 0 → CoW copy.
+        let before = pool.stats().in_use;
+        grow(&mut pool, &mut a, layers, d, prompt.len(), cap + 1);
+        assert_eq!(pool.stats().in_use, before + 1, "un-share allocated one copy");
+        // Writer's view of position 0..4 is untouched by the attacher's wrap.
+        let (kw, _) = w.window_segments(0, 3).next().unwrap();
+        assert_eq!(&kw[0..d], row(0.0, d).as_slice());
+        // Releases drain everything back.
+        pool.release_seq(&mut a);
+        pool.release_seq(&mut w);
+        assert_eq!(pool.stats().in_use, 0);
+        assert_eq!(pool.free_pages(), pool.total_pages());
+        assert_eq!(pool.available(), pool.total_pages());
+    }
+
+    #[test]
+    fn same_pass_match_defers_then_attaches() {
+        let (layers, d, cap, p) = (1usize, 2usize, 8usize, 4usize);
+        let mut pool = PagePool::new(layers, d, p, 8);
+        let prompt: Vec<u32> = (10..16).collect();
+        let SeqAdmit::Ready(mut w) = pool.admit_seq("t", &prompt, 1, cap, true) else {
+            panic!("writer admit failed")
+        };
+        // Second request in the same pass: the chunk is pending → Defer.
+        assert!(matches!(pool.admit_seq("t", &prompt, 1, cap, true), SeqAdmit::Defer));
+        // Forced (no progress): proceeds privately, no duplicate node.
+        let SeqAdmit::Ready(mut forced) = pool.admit_seq("t", &prompt, 1, cap, false) else {
+            panic!("forced admit failed")
+        };
+        assert_eq!(forced.pos(), 0, "forced path prefills privately");
+        pool.release_seq(&mut forced);
+        // After the writer's prefill, the deferred request attaches.
+        grow(&mut pool, &mut w, layers, d, 0, prompt.len());
+        pool.publish_ready(&mut w);
+        let SeqAdmit::Ready(mut att) = pool.admit_seq("t", &prompt, 1, cap, true) else {
+            panic!("deferred attach failed")
+        };
+        assert_eq!(att.pos(), p);
+        // A different task never matches.
+        let SeqAdmit::Ready(mut other) = pool.admit_seq("u", &prompt, 1, cap, true) else {
+            panic!("other-task admit failed")
+        };
+        assert_eq!(other.pos(), 0);
+        pool.release_seq(&mut att);
+        pool.release_seq(&mut other);
+        pool.release_seq(&mut w);
+        assert_eq!(pool.stats().in_use, 0);
+    }
+
+    #[test]
+    fn admission_rejects_never_fits_and_waits_on_pressure() {
+        let (layers, d, cap, p) = (1usize, 2usize, 64usize, 4usize);
+        let mut pool = PagePool::new(layers, d, p, 4);
+        // 40 tokens → 10 pages > 4 total: Never.
+        assert!(matches!(
+            pool.admit_seq("t", &(0..32u32).collect::<Vec<_>>(), 8, cap, true),
+            SeqAdmit::Never { need: 10, total: 4 }
+        ));
+        assert!(pool.never_fits(32, 8, cap).is_some());
+        assert!(pool.never_fits(8, 4, cap).is_none());
+        // First request reserves 3 pages; second (needing 3) must wait.
+        let SeqAdmit::Ready(mut a) = pool.admit_seq("t", &[1, 2, 3], 6, cap, true) else {
+            panic!("admit failed")
+        };
+        assert!(matches!(
+            pool.admit_seq("t", &[4, 5, 6], 6, cap, true),
+            SeqAdmit::NoPages { .. }
+        ));
+        pool.release_seq(&mut a);
+        let SeqAdmit::Ready(mut b) = pool.admit_seq("t", &[4, 5, 6], 6, cap, true) else {
+            panic!("post-release admit failed")
+        };
+        pool.release_seq(&mut b);
+    }
+
+    #[test]
+    fn page_recycle_stress_bounds_the_high_water_mark() {
+        // Many short sequential requests: the pool must recycle pages
+        // (and buffers) instead of growing — peak stays at one
+        // request's footprint even after hundreds of requests.
+        let (layers, d, cap, p) = (2usize, 3usize, 32usize, 4usize);
+        let mut pool = PagePool::new(layers, d, p, 64);
+        let mut rng = Pcg32::seeded(0xabc, 3);
+        let mut max_single = 0usize;
+        for i in 0..300 {
+            let plen = 1 + (rng.next_u32() as usize) % 10;
+            let new = 1 + (rng.next_u32() as usize) % 6;
+            let prompt: Vec<u32> = (0..plen as u32).map(|t| t + i).collect();
+            let SeqAdmit::Ready(mut c) = pool.admit_seq("t", &prompt, new, cap, true) else {
+                panic!("admit {i} failed")
+            };
+            grow(&mut pool, &mut c, layers, d, c.pos(), plen + new);
+            max_single = max_single.max(c.pages_mapped());
+            pool.release_seq(&mut c);
+            assert_eq!(pool.stats().in_use, 0, "request {i} leaked pages");
+        }
+        assert!(pool.stats().peak <= max_single,
+            "peak {} exceeds one request's footprint {}", pool.stats().peak, max_single);
+        assert_eq!(pool.free_pages(), pool.total_pages());
+    }
+}

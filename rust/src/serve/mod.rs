@@ -14,7 +14,12 @@
 //!   xla `coordinator`, compiled unconditionally.
 //! * [`kvcache`] — preallocated per-sequence K/V ring buffers with
 //!   incremental append (sliding-window attention past capacity) and
-//!   contiguous window-slab access for the head-blocked attention kernel.
+//!   contiguous window-slab access for the head-blocked attention
+//!   kernel; [`KvSeq`] fronts both this ring and the paged backend.
+//! * [`kvpage`] — paged KV memory: fixed-size pages from a bitmap
+//!   allocator ([`PagePool`], `--kv-pages`/`--page-tokens`), per-sequence
+//!   page tables, and copy-on-write prompt-prefix sharing across
+//!   same-task requests. The ring stays in-tree as the bitwise oracle.
 //! * [`engine`] — the transformer forward from a packed model
 //!   (embedding gather, RMSNorm, rotary, head-blocked causal attention
 //!   over the cache, SwiGLU MLP, fp LM head) with a per-engine scratch
@@ -66,6 +71,7 @@
 pub mod dispatch;
 pub mod engine;
 pub mod kvcache;
+pub mod kvpage;
 pub mod pool;
 pub mod scheduler;
 pub mod server;
@@ -75,7 +81,8 @@ pub use dispatch::{DispatchConfig, Dispatcher};
 pub use engine::{
     argmax, reference_forward, reference_forward_windowed, sample, Engine, ModelGeom, Sampling,
 };
-pub use kvcache::KvCache;
+pub use kvcache::{KvCache, KvSeq};
+pub use kvpage::{PageAllocator, PagePool, PagedKvCache, DEFAULT_PAGE_TOKENS};
 pub use pool::{EnginePool, PoolConfig, PoolHandle, STREAM_CHANNEL_CAP};
 pub use scheduler::{Scheduler, SchedulerConfig};
 pub use server::{Server, ServerHandle};

@@ -45,6 +45,13 @@
 //! eventually blocks the worker decoding its batch — backpressure ends
 //! at the producer, queue growth is impossible by construction.
 //!
+//! Paged KV: with [`PoolConfig::kv_pages`] > 0 each worker's scheduler
+//! serves sequences out of its own [`PagePool`](super::kvpage::PagePool)
+//! (KV rows are engine-private, so pools are disjoint and merge-safe:
+//! `kv_pages_peak` maxes, `kv_pages_shared` sums), and the dispatcher
+//! rejects requests that could never fit the per-worker budget with
+//! [`ServeError::KvExhausted`] before they reach a queue.
+//!
 //! Hot reload: [`EnginePool::spawn_watching`] shares one registry watch
 //! across workers. Between bursts a due worker (interval elapsed,
 //! try-lock — pollers never queue behind each other) checks the
@@ -97,6 +104,13 @@ pub struct PoolConfig {
     pub deadline_ms: u64,
     /// Task-affinity burst ([`DispatchConfig::affinity_burst`]).
     pub affinity_burst: usize,
+    /// Per-worker paged-KV pool size ([`SchedulerConfig::kv_pages`]);
+    /// 0 keeps the per-sequence ring buffers. Each worker owns its own
+    /// page pool (KV rows are engine-private), so the pool-wide budget
+    /// is `engines × kv_pages` pages.
+    pub kv_pages: usize,
+    /// Tokens per KV page ([`SchedulerConfig::page_tokens`]).
+    pub page_tokens: usize,
     /// Minimum ms between registry hot-reload polls (spawn_watching
     /// only). 0 = check before every burst.
     pub watch_interval_ms: u64,
@@ -121,6 +135,8 @@ impl Default for PoolConfig {
             queue_cap: d.queue_cap,
             deadline_ms: d.deadline_ms,
             affinity_burst: d.affinity_burst,
+            kv_pages: s.kv_pages,
+            page_tokens: s.page_tokens,
             watch_interval_ms: 0,
             #[cfg(test)]
             panic_on_task: None,
@@ -280,6 +296,12 @@ impl EnginePool {
             queue_cap: cfg.queue_cap,
             deadline_ms: cfg.deadline_ms,
             affinity_burst: cfg.affinity_burst,
+            // Ingress feasibility gates: a request that could never fit a
+            // worker's window / page pool is rejected typed at submit
+            // instead of reaching (and failing on) a worker.
+            max_prompt: cfg.window,
+            kv_pages: cfg.kv_pages,
+            page_tokens: cfg.page_tokens,
         }));
         let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
         let mut joins = Vec::with_capacity(n);
@@ -295,6 +317,8 @@ impl EnginePool {
                 sampling: cfg.sampling,
                 seed: cfg.seed.wrapping_add(i as u64),
                 strict_coverage: cfg.strict_coverage,
+                kv_pages: cfg.kv_pages,
+                page_tokens: cfg.page_tokens,
             };
             let sched = Scheduler::new(engine, adapters.clone(), sched_cfg)?;
             let d = dispatcher.clone();
@@ -378,8 +402,15 @@ fn worker_main(
                 continue;
             }
             let sink = if stream { Some(reply.clone()) } else { None };
-            let sid = sched.submit_queued_at(&task, prompt, max_new, stop, sink, submitted);
-            waiting.push((sid, id, reply));
+            // The dispatcher's ingress gates mirror the scheduler's, so a
+            // reject here is a defensive backstop (config drift), not the
+            // normal path.
+            match sched.submit_queued_at(&task, prompt, max_new, stop, sink, submitted) {
+                Ok(sid) => waiting.push((sid, id, reply)),
+                Err(e) => {
+                    let _ = reply.send(StreamEvent::Error(e));
+                }
+            }
         }
         if sched.pending() > 0 {
             match sched.run_until_idle() {
@@ -535,6 +566,32 @@ mod tests {
         assert_eq!(m.generated_tokens, 7);
         assert_eq!(m.ttft_s.len(), 2);
         assert_eq!(m.shed_count, 0);
+    }
+
+    #[test]
+    fn paged_pool_serves_and_reports_page_metrics() {
+        let (pm, geom, adapters) = tiny_parts();
+        let cfg = PoolConfig {
+            engines: 2,
+            window: 32,
+            kv_pages: 6,
+            page_tokens: 4,
+            ..PoolConfig::default()
+        };
+        let pool = EnginePool::spawn(pm, geom, 1, adapters, cfg).unwrap();
+        let h = pool.handle();
+        let ra = h.submit("a", vec![1, 2, 3], 4, u32::MAX).unwrap();
+        assert_eq!(ra.tokens.len(), 4);
+        // 30 prompt + 64 new wraps the 32-token window, which spans 8
+        // pages of 4 — more than the 6-page worker budget, so ingress
+        // rejects it typed instead of queueing toward a worker failure.
+        let err = h.submit("a", vec![9; 30], 64, u32::MAX).unwrap_err();
+        assert!(matches!(err, ServeError::KvExhausted { .. }), "{err}");
+        let m = pool.shutdown();
+        assert_eq!(m.completed, 1);
+        assert!(m.kv_pages_peak > 0, "paged backend never mapped a page");
+        assert!(m.kv_pages_peak <= 6, "peak {} exceeds the pool", m.kv_pages_peak);
+        assert_eq!(m.kv_exhausted_count, 1);
     }
 
     #[test]

@@ -30,6 +30,14 @@
 //!   pool**, so steady-state serving stops allocating window-sized
 //!   buffers even across config changes (caches are recycled per
 //!   capacity, never dropped for having the "wrong" one).
+//! * With `kv_pages > 0` sequences draw fixed-size pages from a shared
+//!   [`PagePool`] instead of owning full-window rings: admission
+//!   reserves worst-case pages (page pressure leaves requests queued,
+//!   infeasible ones get a typed [`ServeError::KvExhausted`] at
+//!   submit), same-task requests attach already-written prompt-prefix
+//!   pages copy-on-write and prefill only their tails, and finished
+//!   sequences recycle pages through the pool's spare buffers. Decode
+//!   output is bitwise identical to the ring backend.
 //! * With [`Sampling::Greedy`] the generated tokens of every request are
 //!   bit-identical regardless of `max_batch`, of prefill grouping, and
 //!   of the engine's worker thread count (the engine's per-sequence math
@@ -43,9 +51,10 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use super::engine::{sample, Engine, Sampling};
-use super::kvcache::KvCache;
+use super::kvcache::{KvCache, KvSeq};
+use super::kvpage::{PagePool, SeqAdmit, DEFAULT_PAGE_TOKENS};
 use super::types::{
-    AdapterStore, BatcherConfig, GenRequest, GenResponse, ServeMetrics, StreamEvent,
+    AdapterStore, BatcherConfig, GenRequest, GenResponse, ServeError, ServeMetrics, StreamEvent,
 };
 use crate::util::Pcg32;
 
@@ -64,6 +73,14 @@ pub struct SchedulerConfig {
     /// cover every packed projection, instead of serving uncovered
     /// projections at base scales.
     pub strict_coverage: bool,
+    /// Paged-KV pool size in pages (CLI `--kv-pages`). 0 serves every
+    /// sequence from a full-window ring buffer (the bitwise oracle);
+    /// > 0 serves from a shared [`PagePool`] with copy-on-write
+    /// prompt-prefix sharing — generated tokens are bitwise identical
+    /// either way.
+    pub kv_pages: usize,
+    /// Tokens per KV page (CLI `--page-tokens`; paged backend only).
+    pub page_tokens: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -75,6 +92,8 @@ impl Default for SchedulerConfig {
             sampling: Sampling::Greedy,
             seed: 0,
             strict_coverage: batcher.strict_coverage,
+            kv_pages: 0,
+            page_tokens: DEFAULT_PAGE_TOKENS,
         }
     }
 }
@@ -83,7 +102,7 @@ struct Slot {
     req: GenRequest,
     submitted: Instant,
     started: Instant,
-    cache: KvCache,
+    cache: KvSeq,
     /// The token to feed at the next decode step (last sampled).
     next_token: u32,
     out: Vec<u32>,
@@ -117,8 +136,11 @@ pub struct Scheduler {
     rng: Pcg32,
     /// Reset KV caches of finished requests keyed by capacity, reused by
     /// later admits so steady-state serving stops allocating
-    /// window-sized buffers.
+    /// window-sized buffers (ring backend; the paged backend recycles
+    /// through the pool's page spares instead).
     spare_caches: HashMap<usize, Vec<KvCache>>,
+    /// The paged-KV page pool (`cfg.kv_pages > 0`); `None` serves rings.
+    pool: Option<PagePool>,
     pub metrics: ServeMetrics,
 }
 
@@ -132,6 +154,12 @@ impl Scheduler {
         if cfg.strict_coverage {
             super::types::validate_coverage(&engine.model().prefixes(), &adapters)?;
         }
+        let pool = if cfg.kv_pages > 0 {
+            let g = engine.geom();
+            Some(PagePool::new(g.n_layers, g.d_model, cfg.page_tokens.max(1), cfg.kv_pages))
+        } else {
+            None
+        };
         Ok(Scheduler {
             engine,
             adapters,
@@ -142,6 +170,7 @@ impl Scheduler {
             next_id: 1,
             rng: Pcg32::seeded(cfg.seed, 0x5c4ed),
             spare_caches: HashMap::new(),
+            pool,
             metrics: ServeMetrics::default(),
         })
     }
@@ -194,7 +223,13 @@ impl Scheduler {
         dropped
     }
 
-    pub fn submit(&mut self, task: &str, prompt: Vec<u32>, max_new: usize, stop: u32) -> u64 {
+    pub fn submit(
+        &mut self,
+        task: &str,
+        prompt: Vec<u32>,
+        max_new: usize,
+        stop: u32,
+    ) -> Result<u64, ServeError> {
         self.submit_streaming(task, prompt, max_new, stop, None)
     }
 
@@ -213,7 +248,7 @@ impl Scheduler {
         max_new: usize,
         stop: u32,
         sink: Option<SyncSender<StreamEvent>>,
-    ) -> u64 {
+    ) -> Result<u64, ServeError> {
         // peqa-lint: allow(nondeterminism-sources) -- submission stamp:
         // queue_s / latency_s / TTFT all key off it; it never reaches
         // decoded output.
@@ -224,6 +259,14 @@ impl Scheduler {
     /// The engine pool passes the moment the request entered its ingress
     /// queue, so `queue_s`, `latency_s` and TTFT cover dispatcher wait
     /// time too — not just the slice spent inside this scheduler.
+    ///
+    /// Typed rejects, both before anything queues or decodes:
+    /// * [`ServeError::PromptTooLong`] — the prompt alone exceeds the
+    ///   KV window, so decode would slide past the prompt's own tokens
+    ///   before the first generated one (historically this was accepted
+    ///   and silently served windowed-prompt generations).
+    /// * [`ServeError::KvExhausted`] — paged backend only: the request
+    ///   could never fit `--kv-pages` even with the pool entirely free.
     pub fn submit_queued_at(
         &mut self,
         task: &str,
@@ -232,7 +275,17 @@ impl Scheduler {
         stop: u32,
         sink: Option<SyncSender<StreamEvent>>,
         submitted: Instant,
-    ) -> u64 {
+    ) -> Result<u64, ServeError> {
+        let window = self.cfg.window.max(1);
+        if prompt.len() > window {
+            return Err(ServeError::PromptTooLong { len: prompt.len(), cap: window });
+        }
+        if let Some(pool) = &self.pool {
+            if let Some((need, total)) = pool.never_fits(prompt.len(), max_new, window) {
+                self.metrics.kv_exhausted_count += 1;
+                return Err(ServeError::KvExhausted { task: task.to_string(), need, total });
+            }
+        }
         let id = self.next_id;
         self.next_id += 1;
         self.queues.entry(task.to_string()).or_default().push_back(Queued {
@@ -242,7 +295,7 @@ impl Scheduler {
         });
         self.queued += 1;
         self.metrics.queue_depth_max = self.metrics.queue_depth_max.max(self.queued);
-        id
+        Ok(id)
     }
 
     /// The task whose queue front arrived earliest (global FIFO head —
@@ -294,10 +347,20 @@ impl Scheduler {
                 if active.is_empty() {
                     break;
                 }
-                // One synchronized decode step over the live slots.
+                // One synchronized decode step over the live slots. Paged
+                // sequences un-share / allocate their next position here,
+                // on this thread, before the engine's worker threads
+                // touch the caches (the CoW contract of serve::kvpage).
+                if let Some(pool) = self.pool.as_mut() {
+                    for slot in active.iter_mut() {
+                        if let KvSeq::Paged(pc) = &mut slot.cache {
+                            pc.prepare(pool, 1).map_err(|e| anyhow!("{e}"))?;
+                        }
+                    }
+                }
                 let tokens: Vec<u32> = active.iter().map(|s| s.next_token).collect();
                 {
-                    let mut caches: Vec<&mut KvCache> =
+                    let mut caches: Vec<&mut KvSeq> =
                         active.iter_mut().map(|s| &mut s.cache).collect();
                     let logits = self.engine.decode_batch(&tokens, &mut caches)?;
                     drop(caches);
@@ -330,7 +393,22 @@ impl Scheduler {
             }
         }
         self.metrics.wall_s += wall0.elapsed().as_secs_f64();
+        // Harvest pool counters: the peak is a level (merge takes max),
+        // the shared counter is drained as a delta so repeated drains
+        // never double-count.
+        if let Some(pool) = self.pool.as_mut() {
+            self.metrics.kv_pages_peak = self.metrics.kv_pages_peak.max(pool.stats().peak);
+            self.metrics.kv_pages_shared += pool.take_shared_count();
+        }
         Ok(responses)
+    }
+
+    /// Put a popped request back at the front of its task queue (paged
+    /// admission told us to wait: a pending same-pass prefix, or
+    /// transient page pressure a finishing slot will relieve).
+    fn requeue_front(&mut self, task: &str, q: Queued) {
+        self.queues.entry(task.to_string()).or_default().push_front(q);
+        self.queued += 1;
     }
 
     /// Pull queued `task` requests into free batch slots and prefill all
@@ -340,19 +418,29 @@ impl Scheduler {
     /// engine; requests whose first sampled token already stops them (or
     /// whose `max_new` is 1) complete at prefill and free their slot for
     /// the next pass of the loop.
+    ///
+    /// On the paged backend each staffing consults
+    /// [`PagePool::admit_seq`]: a request whose prompt prefix was
+    /// already written by an earlier same-task request attaches those
+    /// pages copy-on-write and prefills only its tail; a prefix
+    /// registered earlier in this very pass defers until that prefill
+    /// publishes; page pressure leaves the request queued until
+    /// finishing slots release pages.
     fn admit(
         &mut self,
         task: &str,
         active: &mut Vec<Slot>,
         responses: &mut Vec<GenResponse>,
     ) -> Result<()> {
+        let mut allow_defer = true;
         loop {
             let cap = self.cfg.max_batch.max(1);
             // Staff every free slot from the per-task queue: O(1) pops
             // instead of an O(queue) scan per freed slot.
             let mut pending: Vec<Queued> = Vec::new();
-            let mut caches: Vec<KvCache> = Vec::new();
+            let mut caches: Vec<KvSeq> = Vec::new();
             let mut starts: Vec<Instant> = Vec::new();
+            let mut deferred = false;
             while active.len() + pending.len() < cap {
                 let Some(q) = self.queues.get_mut(task).and_then(VecDeque::pop_front) else {
                     break;
@@ -368,30 +456,86 @@ impl Scheduler {
                     continue;
                 }
                 let window = self.cfg.window.max(1);
-                let cache = self
-                    .spare_caches
-                    .get_mut(&window)
-                    .and_then(Vec::pop)
-                    .unwrap_or_else(|| self.engine.new_cache(window));
+                let staffed = match self.pool.as_mut() {
+                    None => match self.spare_caches.get_mut(&window).and_then(Vec::pop) {
+                        Some(c) => Some(KvSeq::Ring(c)),
+                        None => Some(self.engine.new_cache(window)),
+                    },
+                    Some(pool) => {
+                        match pool.admit_seq(task, &q.req.prompt, q.req.max_new, window, allow_defer)
+                        {
+                            SeqAdmit::Ready(mut pc) => {
+                                // Grow the tail the prefill below will
+                                // write; attached prefix pages stay
+                                // shared and untouched.
+                                let tail = q.req.prompt.len() - pc.pos();
+                                pc.prepare(pool, tail).map_err(|e| anyhow!("{e}"))?;
+                                Some(KvSeq::Paged(pc))
+                            }
+                            SeqAdmit::Defer => {
+                                deferred = true;
+                                None
+                            }
+                            SeqAdmit::NoPages { .. } => None,
+                            SeqAdmit::Never { need, total } => {
+                                // Unreachable through submit (the same
+                                // never_fits gate runs there), but config
+                                // drift must fail loudly, not spin here.
+                                return Err(anyhow!(ServeError::KvExhausted {
+                                    task: task.to_string(),
+                                    need,
+                                    total,
+                                }));
+                            }
+                        }
+                    }
+                };
+                let Some(cache) = staffed else {
+                    self.requeue_front(task, q);
+                    break;
+                };
                 pending.push(q);
                 starts.push(started);
                 caches.push(cache);
             }
             if pending.is_empty() {
+                if deferred && active.is_empty() {
+                    // Livelock guard: nothing is decoding and nothing was
+                    // staffed, so no prefill in flight will ever publish
+                    // the pending chunks — re-admit without deferral (the
+                    // head request prefills its prompt privately).
+                    allow_defer = false;
+                    continue;
+                }
                 return Ok(());
             }
-            // One fused prefill over every admitted prompt. Row i of the
-            // returned logits is bitwise what a lone prefill of prompt i
-            // would produce, so grouping never changes generations.
+            allow_defer = true;
+            // One fused prefill over every admitted prompt tail. Row i of
+            // the returned logits is bitwise what a lone prefill of the
+            // whole prompt i would produce (attached prefix pages hold
+            // exactly the rows that lone prefill would have written), so
+            // neither grouping nor sharing ever changes generations.
             let logits = {
-                let prompts: Vec<&[u32]> =
-                    pending.iter().map(|q| q.req.prompt.as_slice()).collect();
-                let mut cache_refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+                let prompts: Vec<&[u32]> = pending
+                    .iter()
+                    .zip(&caches)
+                    .map(|(q, c)| &q.req.prompt[c.pos()..])
+                    .collect();
+                self.metrics.prefill_tokens += prompts.iter().map(|p| p.len()).sum::<usize>();
+                let mut cache_refs: Vec<&mut KvSeq> = caches.iter_mut().collect();
                 self.engine.prefill_batch(&prompts, &mut cache_refs)?
             };
             self.metrics.prefill_batches += 1;
-            self.metrics.prefill_tokens +=
-                pending.iter().map(|q| q.req.prompt.len()).sum::<usize>();
+            // Publish this pass's freshly-written prompt chunks so the
+            // next staffing pass (and every later request) can attach
+            // them instead of re-prefilling.
+            if let Some(pool) = self.pool.as_mut() {
+                for c in caches.iter_mut() {
+                    if let KvSeq::Paged(pc) = c {
+                        pool.publish_ready(pc);
+                    }
+                }
+            }
             let vocab = self.engine.geom().vocab;
             for (i, ((q, started), cache)) in
                 pending.into_iter().zip(starts).zip(caches).enumerate()
@@ -425,12 +569,24 @@ impl Scheduler {
     }
 
     fn finish_slot(&mut self, slot: Slot) -> GenResponse {
-        let Slot { req, submitted, started, mut cache, out, .. } = slot;
-        // Recycle the window-sized allocation for a later admit. Keyed by
-        // capacity so a cache sized under a different window config is
-        // kept for same-capacity reuse instead of being dropped.
-        cache.reset();
-        self.spare_caches.entry(cache.capacity()).or_default().push(cache);
+        let Slot { req, submitted, started, cache, out, .. } = slot;
+        match cache {
+            KvSeq::Ring(mut c) => {
+                // Recycle the window-sized allocation for a later admit.
+                // Keyed by capacity so a cache sized under a different
+                // window config is kept for same-capacity reuse instead
+                // of being dropped.
+                c.reset();
+                self.spare_caches.entry(c.capacity()).or_default().push(c);
+            }
+            KvSeq::Paged(mut pc) => {
+                // Page recycling: every page, reservation, and trie hold
+                // goes back to the pool the moment the request finishes.
+                if let Some(pool) = self.pool.as_mut() {
+                    pool.release_seq(&mut pc);
+                }
+            }
+        }
         self.finish(req, submitted, started, out)
     }
 
@@ -495,7 +651,7 @@ mod tests {
         let mut sched = Scheduler::new(engine, adapters, SchedulerConfig::default()).unwrap();
         for i in 0..9u32 {
             let task = ["a", "b", "c"][(i % 3) as usize];
-            sched.submit(task, vec![1 + i, 2, 3], 5, u32::MAX);
+            sched.submit(task, vec![1 + i, 2, 3], 5, u32::MAX).unwrap();
         }
         let responses = sched.run_until_idle().unwrap();
         assert_eq!(responses.len(), 9);
@@ -522,8 +678,8 @@ mod tests {
         let (engine, adapters) = tiny();
         let mut sched = Scheduler::new(engine, adapters, SchedulerConfig::default()).unwrap();
         let (tx, rx) = std::sync::mpsc::sync_channel(64);
-        let id = sched.submit_streaming("a", vec![1, 2, 3], 6, u32::MAX, Some(tx));
-        sched.submit("b", vec![4, 5], 4, u32::MAX);
+        let id = sched.submit_streaming("a", vec![1, 2, 3], 6, u32::MAX, Some(tx)).unwrap();
+        sched.submit("b", vec![4, 5], 4, u32::MAX).unwrap();
         let responses = sched.run_until_idle().unwrap();
         let resp = responses.iter().find(|r| r.id == id).unwrap();
         let mut streamed = Vec::new();
@@ -551,7 +707,7 @@ mod tests {
         // global-arrival order.
         for i in 0..60u32 {
             let task = ["a", "b", "c"][(i % 3) as usize];
-            sched.submit(task, vec![1 + (i % 50), 2, 3], 3, u32::MAX);
+            sched.submit(task, vec![1 + (i % 50), 2, 3], 3, u32::MAX).unwrap();
         }
         assert_eq!(sched.pending(), 60);
         let responses = sched.run_until_idle().unwrap();
@@ -573,11 +729,95 @@ mod tests {
     }
 
     #[test]
+    fn oversized_prompt_is_rejected_at_submit() {
+        let (engine, adapters) = tiny();
+        let cfg = SchedulerConfig { window: 8, ..SchedulerConfig::default() };
+        let mut sched = Scheduler::new(engine, adapters, cfg).unwrap();
+        // Regression: a prompt longer than the KV window used to queue
+        // and silently serve sliding-window generations of a prompt the
+        // cache could never hold; now it is a typed submit-time reject.
+        let err = sched.submit("a", (0..9).collect(), 4, u32::MAX).unwrap_err();
+        assert!(matches!(err, ServeError::PromptTooLong { len: 9, cap: 8 }), "{err}");
+        assert_eq!(sched.pending(), 0, "rejected request must never queue");
+        // At the boundary the prompt is accepted and serves fully.
+        sched.submit("a", (0..8).collect(), 2, u32::MAX).unwrap();
+        assert_eq!(sched.run_until_idle().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn kv_exhausted_is_rejected_at_submit_with_typed_error() {
+        let (engine, adapters) = tiny();
+        let cfg = SchedulerConfig {
+            window: 64,
+            kv_pages: 2,
+            page_tokens: 4,
+            ..SchedulerConfig::default()
+        };
+        let mut sched = Scheduler::new(engine, adapters, cfg).unwrap();
+        // 8 prompt + 4 new tokens need 3 pages; the pool holds 2 total.
+        let err = sched.submit("a", (0..8).collect(), 4, u32::MAX).unwrap_err();
+        assert!(matches!(err, ServeError::KvExhausted { need: 3, total: 2, .. }), "{err}");
+        assert_eq!(sched.metrics.kv_exhausted_count, 1);
+        assert_eq!(sched.pending(), 0);
+        // A fitting request on the same pool still serves.
+        sched.submit("a", vec![1, 2, 3], 4, u32::MAX).unwrap();
+        assert_eq!(sched.run_until_idle().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn paged_backend_matches_ring_bitwise_and_shares_prefixes() {
+        let (engine, adapters) = tiny();
+        let ring_cfg = SchedulerConfig { max_batch: 4, window: 32, ..SchedulerConfig::default() };
+        let mut ring = Scheduler::new(engine, adapters, ring_cfg).unwrap();
+        let (engine, adapters) = tiny();
+        let paged_cfg = SchedulerConfig {
+            max_batch: 4,
+            window: 32,
+            kv_pages: 24,
+            page_tokens: 4,
+            ..SchedulerConfig::default()
+        };
+        let mut paged = Scheduler::new(engine, adapters, paged_cfg).unwrap();
+        // Six same-task requests sharing an 8-token prefix (two full
+        // pages) with distinct final tokens.
+        let prefix: Vec<u32> = (1..9).collect();
+        for i in 0..6u32 {
+            let mut p = prefix.clone();
+            p.push(40 + i);
+            ring.submit("a", p.clone(), 6, u32::MAX).unwrap();
+            paged.submit("a", p, 6, u32::MAX).unwrap();
+        }
+        let mut r = ring.run_until_idle().unwrap();
+        let mut p = paged.run_until_idle().unwrap();
+        r.sort_by_key(|x| x.id);
+        p.sort_by_key(|x| x.id);
+        assert_eq!(r.len(), 6);
+        assert_eq!(p.len(), 6);
+        for (a, b) in r.iter().zip(&p) {
+            assert_eq!(a.tokens, b.tokens, "paged decode diverged from ring on id {}", a.id);
+            assert_eq!(a.tokens.len(), 6);
+        }
+        // The memory claim: prefix pages were attached, not duplicated,
+        // and the engine prefilled only the attachers' tails.
+        assert!(paged.metrics.kv_pages_shared > 0, "no prefix pages were shared");
+        assert!(paged.metrics.kv_pages_peak > 0);
+        assert!(paged.metrics.kv_pages_peak <= 24);
+        assert_eq!(ring.metrics.kv_pages_shared, 0);
+        assert_eq!(ring.metrics.kv_pages_peak, 0);
+        assert!(
+            paged.metrics.prefill_tokens < ring.metrics.prefill_tokens,
+            "sharing saved no prefill work: paged {} vs ring {}",
+            paged.metrics.prefill_tokens,
+            ring.metrics.prefill_tokens
+        );
+    }
+
+    #[test]
     fn degenerate_requests_complete_without_decoding() {
         let (engine, adapters) = tiny();
         let mut sched = Scheduler::new(engine, adapters, SchedulerConfig::default()).unwrap();
-        let id_empty = sched.submit("a", vec![], 5, u32::MAX);
-        let id_zero = sched.submit("a", vec![1, 2], 0, u32::MAX);
+        let id_empty = sched.submit("a", vec![], 5, u32::MAX).unwrap();
+        let id_zero = sched.submit("a", vec![1, 2], 0, u32::MAX).unwrap();
         let responses = sched.run_until_idle().unwrap();
         assert_eq!(responses.len(), 2);
         for r in &responses {
@@ -593,7 +833,7 @@ mod tests {
         use crate::model::Checkpoint;
         let (engine, adapters) = tiny();
         let mut sched = Scheduler::new(engine, adapters, SchedulerConfig::default()).unwrap();
-        sched.submit("a", vec![1, 2, 3], 3, u32::MAX);
+        sched.submit("a", vec![1, 2, 3], 3, u32::MAX).unwrap();
         let before = sched.run_until_idle().unwrap();
         assert_eq!(before.len(), 1);
 
@@ -606,7 +846,7 @@ mod tests {
         assert_eq!(sched.reload_adapters(new_store).unwrap(), 1);
         assert!(sched.has_task("x"));
         assert!(!sched.has_task("a"), "old generation replaced");
-        sched.submit("x", vec![1, 2], 2, u32::MAX);
+        sched.submit("x", vec![1, 2], 2, u32::MAX).unwrap();
         assert_eq!(sched.run_until_idle().unwrap().len(), 1);
 
         // A partial adapter set is rejected even though the scheduler
@@ -619,7 +859,7 @@ mod tests {
         let err = sched.reload_adapters(bad).unwrap_err().to_string();
         assert!(err.contains("strict adapter coverage"), "{err}");
         assert!(sched.has_task("x"), "failed reload must leave the live set");
-        sched.submit("x", vec![3], 2, u32::MAX);
+        sched.submit("x", vec![3], 2, u32::MAX).unwrap();
         assert_eq!(sched.run_until_idle().unwrap().len(), 1);
     }
 
@@ -629,7 +869,7 @@ mod tests {
         let mut sched = Scheduler::new(engine, adapters, SchedulerConfig::default()).unwrap();
         assert!(!sched.has_task("nope"));
         assert!(sched.has_task("a"));
-        sched.submit("nope", vec![1], 3, u32::MAX);
+        sched.submit("nope", vec![1], 3, u32::MAX).unwrap();
         assert!(sched.run_until_idle().is_err());
     }
 
@@ -649,7 +889,7 @@ mod tests {
         let (engine, _) = tiny();
         let store = partial_store(&engine);
         let mut sched = Scheduler::new(engine, store, SchedulerConfig::default()).unwrap();
-        sched.submit("partial", vec![1, 2, 3], 3, u32::MAX);
+        sched.submit("partial", vec![1, 2, 3], 3, u32::MAX).unwrap();
         let r = sched.run_until_idle().unwrap();
         assert_eq!(r.len(), 1);
         assert_eq!(r[0].tokens.len(), 3);
@@ -669,7 +909,7 @@ mod tests {
         // (all-or-none zero coverage).
         let (engine, adapters) = tiny();
         let mut sched = Scheduler::new(engine, adapters, strict).unwrap();
-        sched.submit("a", vec![4, 5], 2, u32::MAX);
+        sched.submit("a", vec![4, 5], 2, u32::MAX).unwrap();
         assert_eq!(sched.run_until_idle().unwrap().len(), 1);
         let (engine, _) = tiny();
         let s_only = engine.model().extract_adapter(false);

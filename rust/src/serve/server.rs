@@ -342,8 +342,13 @@ fn worker_main(
                         continue;
                     }
                     let sink = reply.sink();
-                    let id = sched.submit_streaming(&task, prompt, max_new, stop, sink);
-                    waiting.push((id, reply));
+                    match sched.submit_streaming(&task, prompt, max_new, stop, sink) {
+                        Ok(id) => waiting.push((id, reply)),
+                        // Typed submit-time rejects (PromptTooLong,
+                        // KvExhausted): the request never entered the
+                        // queue, so only this client hears about it.
+                        Err(e) => reply.err(e.to_string()),
+                    }
                 }
                 Msg::Metrics { reply } => {
                     let _ = reply.send(sched.metrics.clone());

@@ -183,6 +183,17 @@ pub enum ServeError {
     /// was dropped at dispatch instead of burning decode steps on an
     /// answer nobody is still waiting for.
     DeadlineExceeded { task: String, waited_ms: u64, deadline_ms: u64 },
+    /// The prompt alone exceeds the per-sequence KV capacity (attention
+    /// window): decoding would slide the window past the prompt's own
+    /// tokens before the first generated one. Rejected at submit time —
+    /// nothing was queued or decoded.
+    PromptTooLong { len: usize, cap: usize },
+    /// Paged-KV admission: the request needs more KV pages than the
+    /// pool will *ever* have free (`--kv-pages` too small for this
+    /// prompt+max_new at the configured page size). Transient pressure
+    /// waits in the queue instead; this variant is only for requests
+    /// that could never be staffed.
+    KvExhausted { task: String, need: usize, total: usize },
     /// Everything else (unknown task, decode failure, shutdown),
     /// carried as text.
     Failed(String),
@@ -199,6 +210,16 @@ impl std::fmt::Display for ServeError {
                 f,
                 "deadline exceeded: task '{task}' request queued {waited_ms} ms \
                  (deadline {deadline_ms} ms) — shed at dispatch"
+            ),
+            ServeError::PromptTooLong { len, cap } => write!(
+                f,
+                "prompt too long: {len} tokens exceed the KV window capacity {cap} — \
+                 raise --window or shorten the prompt"
+            ),
+            ServeError::KvExhausted { task, need, total } => write!(
+                f,
+                "kv exhausted: task '{task}' request needs {need} KV pages but the pool \
+                 only has {total} — raise --kv-pages or lower max_new"
             ),
             ServeError::Failed(msg) => write!(f, "{msg}"),
         }
@@ -289,6 +310,17 @@ pub struct ServeMetrics {
     /// while an older request of another task was waiting — each one is
     /// a scale swap the affinity policy avoided.
     pub swaps_avoided: usize,
+    /// Paged KV: high-water mark of pages in use at once (0 on the ring
+    /// backend). The memory claim of the paged design: N same-prefix
+    /// clients peak near 1× the prefix's pages, not N×.
+    pub kv_pages_peak: usize,
+    /// Paged KV: prompt-prefix pages attached via copy-on-write sharing
+    /// instead of being prefilled again (each is a page of prefill work
+    /// and a page of memory saved).
+    pub kv_pages_shared: usize,
+    /// Requests rejected at submit because they could never fit the
+    /// page pool ([`ServeError::KvExhausted`]).
+    pub kv_exhausted_count: usize,
 }
 
 impl ServeMetrics {
@@ -348,6 +380,12 @@ impl ServeMetrics {
         self.queue_depth_max = self.queue_depth_max.max(other.queue_depth_max);
         self.shed_count += other.shed_count;
         self.swaps_avoided += other.swaps_avoided;
+        // Per-worker page pools are disjoint, so the fleet-wide peak is
+        // conservatively the max of the worker peaks (each worker's pages
+        // never alias another's); shared/exhausted are plain counters.
+        self.kv_pages_peak = self.kv_pages_peak.max(other.kv_pages_peak);
+        self.kv_pages_shared += other.kv_pages_shared;
+        self.kv_exhausted_count += other.kv_exhausted_count;
     }
 }
 
@@ -427,6 +465,8 @@ mod tests {
         a.queue_depth_max = 4;
         a.shed_count = 1;
         a.swaps_avoided = 2;
+        a.kv_pages_peak = 12;
+        a.kv_pages_shared = 5;
         let mut b = ServeMetrics::default();
         b.completed = 2;
         b.generated_tokens = 20;
@@ -434,6 +474,9 @@ mod tests {
         b.ttft_s = vec![0.03];
         b.queue_depth_max = 7;
         b.swaps_avoided = 1;
+        b.kv_pages_peak = 9;
+        b.kv_pages_shared = 2;
+        b.kv_exhausted_count = 1;
         a.merge(&b);
         assert_eq!(a.completed, 5);
         assert_eq!(a.generated_tokens, 50);
@@ -443,6 +486,9 @@ mod tests {
         assert_eq!(a.queue_depth_max, 7);
         assert_eq!(a.shed_count, 1);
         assert_eq!(a.swaps_avoided, 3);
+        assert_eq!(a.kv_pages_peak, 12, "disjoint pools: peak is a max");
+        assert_eq!(a.kv_pages_shared, 7);
+        assert_eq!(a.kv_exhausted_count, 1);
     }
 
     #[test]
@@ -452,6 +498,12 @@ mod tests {
         assert!(e.to_string().contains("8/8"));
         let d = ServeError::DeadlineExceeded { task: "a".into(), waited_ms: 50, deadline_ms: 10 };
         assert!(d.to_string().contains("deadline"));
+        let p = ServeError::PromptTooLong { len: 300, cap: 256 };
+        assert!(p.to_string().contains("300"));
+        assert!(p.to_string().contains("256"));
+        let k = ServeError::KvExhausted { task: "a".into(), need: 9, total: 4 };
+        assert!(k.to_string().contains("9"));
+        assert!(k.to_string().contains("--kv-pages"));
 
         let (tx, rx) = std::sync::mpsc::sync_channel(8);
         let resp = GenResponse {

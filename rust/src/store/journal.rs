@@ -30,6 +30,14 @@
 //! torn write and is a hard corruption error naming the record and the
 //! expected-vs-actual checksum.
 //!
+//! Multi-task runs journal into the same file: the meta pins the task
+//! list (`tasks`), and each checkpoint appends one record per task slot
+//! (`TrainRecord::task_idx`, tasks in slot order at the same step). A
+//! crash between a checkpoint's per-task appends leaves a *partial
+//! round*; [`final_multi_state`] resumes from the last step at which
+//! every task is durable, which keeps the round-robin lockstep — and
+//! the bitwise-resume contract — intact.
+//!
 //! Exact-resume contract: the meta block pins every input that shapes
 //! the run bit-for-bit — the LR schedule horizon (`steps`), the batcher
 //! seed/geometry, the base snapshot — and u64/f64 values that JSON
@@ -58,6 +66,12 @@ pub const JOURNAL_VERSION: u32 = 1;
 #[derive(Clone, Debug, PartialEq)]
 pub struct JournalMeta {
     pub task: String,
+    /// Multi-task round-robin runs journal every task's slot into ONE
+    /// file: this pins the task list (order = `TrainRecord::task_idx`).
+    /// Empty for single-task journals — the key is then omitted from
+    /// the meta JSON, so single-task files are byte-identical to the
+    /// pre-multi-task format.
+    pub tasks: Vec<String>,
     /// Corpus the run streams — pinned separately from `task` because a
     /// run may name its adapter differently from its dataset.
     pub dataset: String,
@@ -88,8 +102,14 @@ impl JournalMeta {
     }
 
     fn to_json(&self) -> String {
-        Value::obj(vec![
-            ("task", Value::str(self.task.clone())),
+        let mut pairs = vec![("task", Value::str(self.task.clone()))];
+        if !self.tasks.is_empty() {
+            pairs.push((
+                "tasks",
+                Value::Arr(self.tasks.iter().map(|t| Value::str(t.clone())).collect()),
+            ));
+        }
+        pairs.extend(vec![
             ("dataset", Value::str(self.dataset.clone())),
             ("base", Value::str(self.base.clone())),
             ("seed", Value::str(self.seed.to_string())),
@@ -105,14 +125,28 @@ impl JournalMeta {
             ("n_layers", Value::num(self.n_layers as f64)),
             ("n_heads", Value::num(self.n_heads as f64)),
             ("d_ff", Value::num(self.d_ff as f64)),
-        ])
-        .to_string()
+        ]);
+        Value::obj(pairs).to_string()
     }
 
     fn from_json(text: &str) -> Result<JournalMeta> {
         let v = Value::parse(text).context("journal meta JSON")?;
+        let tasks = match v.get("tasks") {
+            None => Vec::new(),
+            Some(t) => t
+                .as_arr()
+                .ok_or_else(|| anyhow!("journal meta 'tasks' is not an array"))?
+                .iter()
+                .map(|e| {
+                    e.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| anyhow!("journal meta 'tasks' entry is not a string"))
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
         Ok(JournalMeta {
             task: v.str_of("task")?.to_string(),
+            tasks,
             dataset: v.str_of("dataset")?.to_string(),
             base: v.str_of("base")?.to_string(),
             seed: v.str_of("seed")?.parse().context("journal meta seed")?,
@@ -141,6 +175,11 @@ impl JournalMeta {
 #[derive(Clone, Debug, PartialEq)]
 pub struct TrainRecord {
     pub step: u64,
+    /// Which task slot this record snapshots (index into
+    /// [`JournalMeta::tasks`]); 0 for single-task journals. Serialized
+    /// as a trailing field only when nonzero, so records a pre-multi
+    /// build wrote (which never have trailing bytes) parse as task 0.
+    pub task_idx: u32,
     /// Data-stream position: the batcher RNG's raw (state, inc).
     pub rng: (u64, u64),
     /// EMA-smoothed loss (bit-exact via f64 bits).
@@ -180,6 +219,11 @@ impl TrainRecord {
                 }
             }
         }
+        // Trailing optional section: absent for task 0 keeps single-task
+        // records byte-identical to the pre-multi-task format.
+        if self.task_idx != 0 {
+            b.extend_from_slice(&self.task_idx.to_le_bytes());
+        }
         b
     }
 
@@ -203,10 +247,12 @@ impl TrainRecord {
             opt_m.push(r.f32s(len, "slot m")?);
             opt_v.push(r.f32s(len, "slot v")?);
         }
-        if r.off != b.len() {
-            bail!("record has {} trailing byte(s)", b.len() - r.off);
-        }
-        Ok(TrainRecord { step, rng, ema, losses, params, opt_m, opt_v })
+        let task_idx = match b.len() - r.off {
+            0 => 0,
+            4 => r.u32("task index")?,
+            n => bail!("record has {n} trailing byte(s)"),
+        };
+        Ok(TrainRecord { step, task_idx, rng, ema, losses, params, opt_m, opt_v })
     }
 }
 
@@ -271,7 +317,10 @@ fn header_bytes(meta: &JournalMeta) -> Vec<u8> {
 pub struct JournalWriter {
     file: std::fs::File,
     path: PathBuf,
-    last_step: Option<u64>,
+    /// Last appended (step, task_idx) — appends must grow
+    /// lexicographically, which reduces to strict step monotonicity for
+    /// single-task journals (every task_idx is 0).
+    last: Option<(u64, u32)>,
 }
 
 impl JournalWriter {
@@ -288,18 +337,21 @@ impl JournalWriter {
             .with_context(|| format!("creating journal {}", path.display()))?;
         file.write_all(&header_bytes(meta))?;
         file.sync_all()?;
-        Ok(JournalWriter { file, path: path.to_path_buf(), last_step: None })
+        Ok(JournalWriter { file, path: path.to_path_buf(), last: None })
     }
 
     /// Append one record frame (`len | crc | payload`) and fsync it.
     pub fn append(&mut self, rec: &TrainRecord) -> Result<()> {
-        if let Some(last) = self.last_step {
-            if rec.step <= last {
+        if let Some(last) = self.last {
+            if (rec.step, rec.task_idx) <= last {
                 bail!(
-                    "{}: journal steps must be monotonic (appending step {} after {})",
+                    "{}: journal records must be monotonic in (step, task) — appending \
+                     step {} task {} after step {} task {}",
                     self.path.display(),
                     rec.step,
-                    last
+                    rec.task_idx,
+                    last.0,
+                    last.1
                 );
             }
         }
@@ -312,7 +364,7 @@ impl JournalWriter {
             .write_all(&frame)
             .with_context(|| format!("appending to journal {}", self.path.display()))?;
         self.file.sync_data()?;
-        self.last_step = Some(rec.step);
+        self.last = Some((rec.step, rec.task_idx));
         Ok(())
     }
 
@@ -370,7 +422,7 @@ pub fn read_journal(path: &Path) -> Result<(JournalMeta, Vec<TrainRecord>, Optio
 
     let mut records = Vec::new();
     let mut torn = None;
-    let mut last_step: Option<u64> = None;
+    let mut last: Option<(u64, u32)> = None;
     let mut idx = 0usize;
     while off < bytes.len() {
         let frame_start = off;
@@ -421,15 +473,19 @@ pub fn read_journal(path: &Path) -> Result<(JournalMeta, Vec<TrainRecord>, Optio
         }
         let rec = TrainRecord::from_bytes(payload)
             .with_context(|| format!("{label}: record {idx} at offset {frame_start}"))?;
-        if let Some(last) = last_step {
-            if rec.step <= last {
+        if let Some(last) = last {
+            if (rec.step, rec.task_idx) <= last {
                 bail!(
-                    "{label}: record {idx} step {} is not after previous step {last}",
-                    rec.step
+                    "{label}: record {idx} (step {}, task {}) is not after the previous \
+                     record (step {}, task {})",
+                    rec.step,
+                    rec.task_idx,
+                    last.0,
+                    last.1
                 );
             }
         }
-        last_step = Some(rec.step);
+        last = Some((rec.step, rec.task_idx));
         records.push(rec);
         off += plen;
         idx += 1;
@@ -461,8 +517,8 @@ pub fn open_resume(path: &Path) -> Result<(JournalMeta, Vec<TrainRecord>, Journa
     let mut file = file;
     use std::io::Seek;
     file.seek(std::io::SeekFrom::End(0))?;
-    let last_step = records.last().map(|r| r.step);
-    Ok((meta, records, JournalWriter { file, path: path.to_path_buf(), last_step }))
+    let last = records.last().map(|r| (r.step, r.task_idx));
+    Ok((meta, records, JournalWriter { file, path: path.to_path_buf(), last }))
 }
 
 /// Fold the record stream into the final resumable state: the last
@@ -475,6 +531,105 @@ pub fn final_state(records: &[TrainRecord]) -> Option<(TrainRecord, Vec<f32>)> {
         losses.extend_from_slice(&r.losses);
     }
     Some((last.clone(), losses))
+}
+
+/// [`open_resume`] for multi-task journals: additionally truncates any
+/// records past the last **complete** round. A crash can land between a
+/// checkpoint's per-task appends, leaving a partial round at the tail
+/// (after the byte-level torn-tail cut); the resumed run restarts from
+/// the last complete round and re-appends the partial one, which the
+/// (step, task) monotonicity check would reject if the stale records
+/// were still in the file.
+pub fn open_resume_multi(
+    path: &Path,
+    n_tasks: usize,
+) -> Result<(JournalMeta, Vec<TrainRecord>, JournalWriter)> {
+    let (meta, mut records, writer) = open_resume(path)?;
+    let keep = match final_multi_state(&records, n_tasks) {
+        None => 0,
+        Some((s, _)) => records.iter().take_while(|r| r.step <= s).count(),
+    };
+    if keep == records.len() {
+        return Ok((meta, records, writer));
+    }
+    drop(writer);
+    // The record encoding is deterministic, so the surviving prefix's
+    // byte length is recomputable: header + each kept record's frame.
+    let mut valid = header_bytes(&meta).len() as u64;
+    for r in &records[..keep] {
+        valid += 8 + r.to_bytes().len() as u64;
+    }
+    crate::info!(
+        "{}: dropping {} record(s) of a partial round (durable through the previous \
+         complete round)",
+        path.display(),
+        records.len() - keep
+    );
+    let mut file = std::fs::OpenOptions::new()
+        .read(true)
+        .write(true)
+        .open(path)
+        .with_context(|| format!("reopening journal {}", path.display()))?;
+    file.set_len(valid)
+        .with_context(|| format!("truncating partial round of {}", path.display()))?;
+    file.sync_all()?;
+    use std::io::Seek;
+    file.seek(std::io::SeekFrom::End(0))?;
+    records.truncate(keep);
+    let last = records.last().map(|r| (r.step, r.task_idx));
+    Ok((meta, records, JournalWriter { file, path: path.to_path_buf(), last }))
+}
+
+/// Fold a MULTI-TASK record stream into per-task resumable state.
+///
+/// A multi-task checkpoint appends one record per task (task order 0..N)
+/// at the same step, and a crash can land between those appends — some
+/// tasks durable at step S, the rest still at the previous checkpoint.
+/// Resuming from that mixed state would break the round-robin lockstep,
+/// so the durable state is the last **complete** step: the largest step
+/// at which every one of the `n_tasks` slots has a record. Records past
+/// it (the torn checkpoint) are ignored; the resumed run re-steps and
+/// re-appends them identically.
+///
+/// Returns `(step, per-task (last record, accumulated losses))`, tasks
+/// in slot order, or `None` if no step is complete yet.
+pub fn final_multi_state(
+    records: &[TrainRecord],
+    n_tasks: usize,
+) -> Option<(u64, Vec<(TrainRecord, Vec<f32>)>)> {
+    if n_tasks == 0 {
+        return None;
+    }
+    // Records are (step, task) lexicographic (enforced on read), so each
+    // step's group is contiguous and its tasks are in slot order.
+    let mut last_complete: Option<u64> = None;
+    let mut i = 0usize;
+    while i < records.len() {
+        let step = records[i].step;
+        let mut j = i;
+        while j < records.len() && records[j].step == step {
+            j += 1;
+        }
+        let group = &records[i..j];
+        if group.len() == n_tasks
+            && group.iter().enumerate().all(|(k, r)| r.task_idx as usize == k)
+        {
+            last_complete = Some(step);
+        }
+        i = j;
+    }
+    let last = last_complete?;
+    let mut out = Vec::with_capacity(n_tasks);
+    for t in 0..n_tasks {
+        let mut losses = Vec::new();
+        let mut rec: Option<&TrainRecord> = None;
+        for r in records.iter().filter(|r| r.task_idx as usize == t && r.step <= last) {
+            losses.extend_from_slice(&r.losses);
+            rec = Some(r);
+        }
+        out.push((rec?.clone(), losses));
+    }
+    Some((last, out))
 }
 
 /// Incremental whole-journal checksum helper used by fsck reporting.
@@ -491,6 +646,7 @@ mod tests {
     fn meta() -> JournalMeta {
         JournalMeta {
             task: "alpaca".into(),
+            tasks: Vec::new(),
             dataset: "wikitext".into(),
             base: "alpaca.base.packed".into(),
             seed: u64::MAX - 7,
@@ -510,11 +666,16 @@ mod tests {
     }
 
     fn rec(step: u64) -> TrainRecord {
+        rec_t(step, 0)
+    }
+
+    fn rec_t(step: u64, task_idx: u32) -> TrainRecord {
         TrainRecord {
             step,
+            task_idx,
             rng: (0xDEAD_BEEF_0000_0000 + step, 0x5EED | 1),
             ema: (step > 0).then_some(1.25 + step as f64),
-            losses: vec![step as f32, step as f32 + 0.5],
+            losses: vec![step as f32 + 100.0 * task_idx as f32, step as f32 + 0.5],
             params: vec![vec![1.0, 2.0], vec![3.0; 3]],
             opt_m: vec![vec![0.1, 0.2], vec![0.3; 3]],
             opt_v: vec![vec![0.01, 0.02], vec![0.03; 3]],
@@ -546,6 +707,60 @@ mod tests {
         let (last, losses) = final_state(&recs).unwrap();
         assert_eq!(last, rec(6));
         assert_eq!(losses, vec![3.0, 3.5, 6.0, 6.5]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn multi_task_meta_and_records_roundtrip() {
+        let mut m = meta();
+        m.task = "a,b".into();
+        m.tasks = vec!["a".into(), "b".into()];
+        let back = JournalMeta::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+        // Single-task meta omits the key entirely (byte-stable format).
+        assert!(!meta().to_json().contains("tasks"));
+
+        let dir = std::env::temp_dir().join("peqa_test_journal_multi");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.journal");
+        let mut w = JournalWriter::create(&path, &m).unwrap();
+        // Round 3 complete, round 6 torn after task 0's append.
+        w.append(&rec_t(3, 0)).unwrap();
+        w.append(&rec_t(3, 1)).unwrap();
+        // Same (step, task) or going backwards is rejected.
+        assert!(w.append(&rec_t(3, 1)).is_err());
+        assert!(w.append(&rec_t(3, 0)).is_err());
+        w.append(&rec_t(6, 0)).unwrap();
+        drop(w);
+        let (back, recs, torn) = read_journal(&path).unwrap();
+        assert_eq!(back, m);
+        assert!(torn.is_none());
+        assert_eq!(recs, vec![rec_t(3, 0), rec_t(3, 1), rec_t(6, 0)]);
+        // The durable state is the last COMPLETE round: step 3, both
+        // tasks — task 0's lone step-6 record is ignored.
+        let (step, per_task) = final_multi_state(&recs, 2).unwrap();
+        assert_eq!(step, 3);
+        assert_eq!(per_task.len(), 2);
+        assert_eq!(per_task[0].0, rec_t(3, 0));
+        assert_eq!(per_task[1].0, rec_t(3, 1));
+        assert_eq!(per_task[0].1, vec![3.0, 3.5]);
+        assert_eq!(per_task[1].1, vec![103.0, 3.5]);
+        // A journal with no complete round yet has no durable state.
+        assert!(final_multi_state(&recs[..1], 2).is_none());
+
+        // open_resume_multi truncates the partial round so the resumed
+        // run can re-step and re-append it without tripping the
+        // monotonicity check.
+        let (m3, recs, mut w) = open_resume_multi(&path, 2).unwrap();
+        assert_eq!(m3, m);
+        assert_eq!(recs, vec![rec_t(3, 0), rec_t(3, 1)]);
+        w.append(&rec_t(6, 0)).unwrap();
+        w.append(&rec_t(6, 1)).unwrap();
+        drop(w);
+        let (_, recs, torn) = read_journal(&path).unwrap();
+        assert!(torn.is_none());
+        assert_eq!(recs.len(), 4);
+        assert_eq!(final_multi_state(&recs, 2).unwrap().0, 6);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -530,6 +530,23 @@ impl MultiTaskTuner {
         self.tuner.step_count()
     }
 
+    /// Full resumable state of task `idx` — scales/zeros, Adam moments,
+    /// loss bookkeeping — exactly what the journal persists per task
+    /// slot. Activates the task first, so the export sees its live
+    /// tensors.
+    pub fn export_task_state(&mut self, idx: usize) -> Result<TunerState> {
+        self.activate(idx);
+        self.tuner.export_state()
+    }
+
+    /// Restore task `idx` bit-for-bit from an exported state (journal
+    /// resume). Validates shapes against the shared model before
+    /// touching anything, like the single-task import.
+    pub fn import_task_state(&mut self, idx: usize, st: &TunerState) -> Result<()> {
+        self.activate(idx);
+        self.tuner.import_state(st)
+    }
+
     /// Task `idx`'s adapter in the exact `serve::AdapterStore` format —
     /// N of these out of one shared model is the multi-task serving
     /// story's training half.

@@ -222,7 +222,7 @@ fn greedy_decode_is_batch_size_invariant() {
         .unwrap();
         for i in 0..9u32 {
             let task = ["a", "b", "c"][(i % 3) as usize];
-            sched.submit(task, vec![1 + i, 40 + i, 7], 10, u32::MAX);
+            sched.submit(task, vec![1 + i, 40 + i, 7], 10, u32::MAX).unwrap();
         }
         let mut out: Vec<(u64, Vec<u32>)> = sched
             .run_until_idle()
@@ -387,7 +387,7 @@ fn threaded_server_matches_direct_scheduler_under_concurrency() {
         let mut keys: HashMap<u64, (String, Vec<u32>)> = HashMap::new();
         for i in 0..N {
             let (task, prompt) = req(i);
-            let id = sched.submit(task, prompt.clone(), 6, u32::MAX);
+            let id = sched.submit(task, prompt.clone(), 6, u32::MAX).unwrap();
             keys.insert(id, (task.to_string(), prompt));
         }
         for r in sched.run_until_idle().unwrap() {
@@ -441,7 +441,7 @@ fn tokenizer_roundtrips_demo_corpus_and_stop_token_truncates() {
     let prompt: Vec<u32> = vec![12, 34, 56];
     let cfg = SchedulerConfig { max_batch: 4, window: 64, ..SchedulerConfig::default() };
     let mut free_run = Scheduler::new(eng, adapters, cfg).unwrap();
-    free_run.submit("a", prompt.clone(), 8, u32::MAX);
+    free_run.submit("a", prompt.clone(), 8, u32::MAX).unwrap();
     let unstopped = free_run.run_until_idle().unwrap().remove(0).tokens;
     assert_eq!(unstopped.len(), 8);
 
@@ -458,9 +458,9 @@ fn tokenizer_roundtrips_demo_corpus_and_stop_token_truncates() {
     let (eng, base_q) = engine(2, 97);
     let adapters = serve::synth_adapters(&base_q, &["a"], 1);
     let mut sched = Scheduler::new(eng, adapters, cfg).unwrap();
-    let id_stopped = sched.submit("a", prompt.clone(), 8, stop);
-    let id_free1 = sched.submit("a", prompt.clone(), 8, u32::MAX);
-    let id_free2 = sched.submit("a", prompt.clone(), 8, u32::MAX);
+    let id_stopped = sched.submit("a", prompt.clone(), 8, stop).unwrap();
+    let id_free1 = sched.submit("a", prompt.clone(), 8, u32::MAX).unwrap();
+    let id_free2 = sched.submit("a", prompt.clone(), 8, u32::MAX).unwrap();
     let responses = sched.run_until_idle().unwrap();
     assert_eq!(responses.len(), 3);
     for r in &responses {

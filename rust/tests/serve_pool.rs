@@ -45,7 +45,7 @@ fn direct_drain(n: u32) -> HashMap<(String, Vec<u32>), Vec<u32>> {
     let mut keys: HashMap<u64, (String, Vec<u32>)> = HashMap::new();
     for i in 0..n {
         let (task, prompt) = req(i);
-        let id = sched.submit(task, prompt.clone(), 6, u32::MAX);
+        let id = sched.submit(task, prompt.clone(), 6, u32::MAX).unwrap();
         keys.insert(id, (task.to_string(), prompt));
     }
     let mut expected = HashMap::new();

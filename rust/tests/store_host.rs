@@ -26,7 +26,7 @@ use peqa::serve::{self, Engine, ModelGeom, Scheduler, SchedulerConfig};
 use peqa::store::journal::{self, JournalMeta, JournalWriter, TrainRecord};
 use peqa::store::Registry;
 use peqa::tensor::Tensor;
-use peqa::train::{HostPeqaTuner, Tuner, TunerState};
+use peqa::train::{HostPeqaTuner, MultiTaskTuner, Tuner, TunerState};
 use peqa::util::Pcg32;
 
 fn tmp(name: &str) -> PathBuf {
@@ -68,6 +68,7 @@ fn drive(
             writer
                 .append(&TrainRecord {
                     step: step as u64,
+                    task_idx: 0,
                     rng: batcher.rng_state(),
                     ema: st.ema,
                     losses: st.losses[last_recorded..].to_vec(),
@@ -87,6 +88,7 @@ fn drive(
 fn journal_meta() -> JournalMeta {
     JournalMeta {
         task: "t".into(),
+        tasks: Vec::new(),
         dataset: "synth".into(),
         base: "t.base.packed".into(),
         seed: 5,
@@ -181,6 +183,143 @@ fn killed_and_resumed_run_is_bitwise_identical_including_torn_tail() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// The CLI's journaled round-robin loop (`run_multi_task` in main.rs),
+/// in miniature: step every task once per round, append one record per
+/// task slot at every `save_every`-th round plus the final round.
+/// `crash_mid_round > 0` kills the run at that checkpoint round AFTER
+/// task 0's append but BEFORE task 1's — the on-disk partial round that
+/// `open_resume_multi` must drop.
+fn drive_multi(
+    mt: &mut MultiTaskTuner,
+    batchers: &mut [LmBatcher],
+    writer: &mut JournalWriter,
+    steps: usize,
+    save_every: usize,
+    crash_mid_round: usize,
+) {
+    let n = batchers.len();
+    let start = mt.step_count(0);
+    let mut last_recorded = vec![start; n];
+    for round in (start + 1)..=steps {
+        for (ti, batcher) in batchers.iter_mut().enumerate() {
+            let b = batcher.next_batch();
+            mt.step_task(ti, &b).unwrap();
+        }
+        if round % save_every == 0 || round == steps {
+            for ti in 0..n {
+                let st = mt.export_task_state(ti).unwrap();
+                writer
+                    .append(&TrainRecord {
+                        step: round as u64,
+                        task_idx: ti as u32,
+                        rng: batchers[ti].rng_state(),
+                        ema: st.ema,
+                        losses: st.losses[last_recorded[ti]..].to_vec(),
+                        params: st.params,
+                        opt_m: st.opt_m,
+                        opt_v: st.opt_v,
+                    })
+                    .unwrap();
+                last_recorded[ti] = round;
+                if round == crash_mid_round && ti == 0 {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn multi_task_killed_and_resumed_round_robin_is_bitwise_identical() {
+    let dir = tmp("peqa_test_store_resume_multi");
+    let names = vec!["a".to_string(), "b".to_string()];
+    let n = names.len();
+    let mut meta = journal_meta();
+    meta.task = "a,b".into();
+    meta.tasks = names.clone();
+    meta.dataset = "multi".into();
+    meta.base = "a+b.base.packed".into();
+    let streams: Vec<Vec<u32>> = (0..n).map(|ti| token_stream(4_000, 99 + ti as u64)).collect();
+    let mk_batchers = |m: &JournalMeta| -> Vec<LmBatcher> {
+        streams
+            .iter()
+            .enumerate()
+            .map(|(ti, s)| LmBatcher::new(s.clone(), m.batch, m.seq, m.seed ^ 0x5eed ^ ti as u64))
+            .collect()
+    };
+
+    // Uninterrupted reference: 10 rounds, per-task records at 3/6/9/10.
+    let (pm, _) = serve::synth_packed(&GEOM, 4, Some(8), meta.seed).unwrap();
+    pm.to_checkpoint().save_packed(&dir.join(&meta.base), 4).unwrap();
+    let tuner = HostPeqaTuner::from_packed(pm, GEOM, cfg(10), true, 2).unwrap();
+    let mut full = MultiTaskTuner::new(tuner, &names).unwrap();
+    let mut batchers = mk_batchers(&meta);
+    let mut w = JournalWriter::create(&dir.join("full.journal"), &meta).unwrap();
+    drive_multi(&mut full, &mut batchers, &mut w, 10, 3, 0);
+    drop(w);
+    let full_adapters: Vec<Checkpoint> = (0..n).map(|ti| full.extract_adapter(ti)).collect();
+
+    // Interrupted run over the same inputs: killed at checkpoint round 9
+    // BETWEEN the two task appends — (9, task 0) is durable without
+    // (9, task 1) — plus garbage bytes from the interrupted write.
+    let (pm, _) = serve::synth_packed(&GEOM, 4, Some(8), meta.seed).unwrap();
+    let tuner = HostPeqaTuner::from_packed(pm, GEOM, cfg(10), true, 2).unwrap();
+    let mut part = MultiTaskTuner::new(tuner, &names).unwrap();
+    let mut batchers = mk_batchers(&meta);
+    let jpath = dir.join("ab.journal");
+    let mut w = JournalWriter::create(&jpath, &meta).unwrap();
+    drive_multi(&mut part, &mut batchers, &mut w, 10, 3, 9);
+    drop((part, w));
+    let mut bytes = std::fs::read(&jpath).unwrap();
+    bytes.extend_from_slice(&[0x31, 0x41, 0x59]);
+    std::fs::write(&jpath, &bytes).unwrap();
+
+    // Resume from disk alone: the torn tail AND the partial round drop,
+    // every slot restores from round 6, and the continued round-robin
+    // is bitwise the uninterrupted run. Thread count deliberately
+    // differs — results are pinned bit-identical across PEQA_THREADS.
+    let pm = PackedModel::load(&dir.join(&meta.base)).unwrap();
+    let (m2, records, mut w) = journal::open_resume_multi(&jpath, n).unwrap();
+    assert_eq!(m2, meta);
+    let (round, per_task) = journal::final_multi_state(&records, n).unwrap();
+    assert_eq!(round, 6);
+    let tuner = HostPeqaTuner::from_packed(pm, GEOM, cfg(10), m2.train_zeros, 3).unwrap();
+    let mut resumed = MultiTaskTuner::new(tuner, &m2.tasks).unwrap();
+    let mut batchers = mk_batchers(&m2);
+    for (ti, (rec, losses)) in per_task.iter().enumerate() {
+        resumed
+            .import_task_state(
+                ti,
+                &TunerState {
+                    step: rec.step as usize,
+                    losses: losses.clone(),
+                    ema: rec.ema,
+                    params: rec.params.clone(),
+                    opt_m: rec.opt_m.clone(),
+                    opt_v: rec.opt_v.clone(),
+                },
+            )
+            .unwrap();
+        batchers[ti].set_rng_state(rec.rng.0, rec.rng.1);
+    }
+    drive_multi(&mut resumed, &mut batchers, &mut w, 10, 3, 0);
+    drop(w);
+
+    for ti in 0..n {
+        assert_eq!(resumed.losses(ti), full.losses(ti), "task {ti} loss history");
+        let r = resumed.extract_adapter(ti);
+        assert_eq!(r.names(), full_adapters[ti].names());
+        for (name, t) in r.iter() {
+            assert_eq!(t.data(), full_adapters[ti].req(name).unwrap().data(), "task {ti} {name}");
+        }
+    }
+    let (_, full_recs, _) = journal::read_journal(&dir.join("full.journal")).unwrap();
+    let (_, res_recs, torn) = journal::read_journal(&jpath).unwrap();
+    assert!(torn.is_none(), "resume left a torn tail behind");
+    assert_eq!(full_recs, res_recs);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn flipped_bytes_and_truncations_never_pass_verification() {
     let dir = tmp("peqa_test_store_fuzz");
@@ -207,6 +346,7 @@ fn flipped_bytes_and_truncations_never_pass_verification() {
     let mut w = JournalWriter::create(&jpath, &journal_meta()).unwrap();
     let rec = |step: u64| TrainRecord {
         step,
+        task_idx: 0,
         rng: (11 * step, 0x5EED | 1),
         ema: Some(0.5 + step as f64),
         losses: vec![step as f32],
@@ -304,7 +444,7 @@ fn tuned_adapter_publishes_serves_strictly_and_fscks_clean() {
     let scfg =
         SchedulerConfig { max_batch: 2, window: 64, strict_coverage: true, ..Default::default() };
     let mut sched = Scheduler::new(eng, adapters, scfg).unwrap();
-    sched.submit("news", vec![3, 9, 27], 6, u32::MAX);
+    sched.submit("news", vec![3, 9, 27], 6, u32::MAX).unwrap();
     let rs = sched.run_until_idle().unwrap();
     assert_eq!(rs.len(), 1);
     assert_eq!(rs[0].tokens.len(), 6);

@@ -341,7 +341,7 @@ fn multi_task_round_robin_is_bitwise_independent_and_serves_n_adapters() {
     let mut sched = Scheduler::new(eng, store, scfg).unwrap();
     let prompt: Vec<u32> = vec![7, 45, 11, 260, 3];
     for name in &names {
-        sched.submit(name, prompt.clone(), 8, u32::MAX);
+        sched.submit(name, prompt.clone(), 8, u32::MAX).unwrap();
     }
     let responses = sched.run_until_idle().unwrap();
     assert_eq!(responses.len(), names.len());
@@ -417,8 +417,8 @@ fn finetune_then_serve_closes_the_loop() {
     let eng = Engine::from_packed(base_model, geom, 2).unwrap();
     let cfg = SchedulerConfig { max_batch: 2, window: 64, strict_coverage: true, ..SchedulerConfig::default() };
     let mut sched = Scheduler::new(eng, store, cfg).unwrap();
-    let id_base = sched.submit("base", prompt.clone(), 12, u32::MAX);
-    let id_tuned = sched.submit("tuned", prompt.clone(), 12, u32::MAX);
+    let id_base = sched.submit("base", prompt.clone(), 12, u32::MAX).unwrap();
+    let id_tuned = sched.submit("tuned", prompt.clone(), 12, u32::MAX).unwrap();
     let responses = sched.run_until_idle().unwrap();
     let tok = |id: u64| responses.iter().find(|r| r.id == id).unwrap().tokens.clone();
     assert_ne!(tok(id_base), tok(id_tuned), "served greedy decode must change with the adapter");

@@ -12,7 +12,8 @@ by more than the threshold (default 20%):
   not exceed baseline * (1 + threshold);
 * serve: tokens_per_s may not drop below baseline * (1 - threshold).
   Swap-time drift is reported but only warns (microsecond-scale numbers
-  are too noisy to gate on);
+  are too noisy to gate on); paged-KV page accounting (kv_pages_peak /
+  kv_pages_shared / kv_exhausted_count) is reported only;
 * finetune: the host PEQA training step's step_mean_s may not exceed
   baseline * (1 + threshold); final-loss drift is reported but only
   warns (it tracks data/seed config, not the hot path).
@@ -129,6 +130,17 @@ def diff_serve(cur, base, thr):
             f"{base.get('shed_count', 0):.0f}; queue depth max "
             f"{cur.get('queue_depth_max', 0):.0f} vs {base.get('queue_depth_max', 0):.0f} "
             "(reported only)"
+        )
+    # Paged-KV same-prefix section (serve::kvpage): page accounting is a
+    # memory/admission shape, not a timing, so it is reported only — a
+    # baseline predating the paged backend lacks the keys and skips.
+    if base.get("kv_pages_peak") is not None:
+        print(
+            f"  paged kv: peak {cur.get('kv_pages_peak', 0):.0f} vs baseline "
+            f"{base.get('kv_pages_peak', 0):.0f} pages; shared "
+            f"{cur.get('kv_pages_shared', 0):.0f} vs {base.get('kv_pages_shared', 0):.0f}; "
+            f"exhausted rejects {cur.get('kv_exhausted_count', 0):.0f} vs "
+            f"{base.get('kv_exhausted_count', 0):.0f} (reported only)"
         )
     return fails
 

@@ -149,6 +149,21 @@ echo "== ok: resumed adapter is byte-identical to the uninterrupted run =="
 "$PEQA_BIN" fsck "$SMOKE/full" "$SMOKE/part" "$SMOKE/registry"
 echo "== ok: store durability smoke =="
 
+echo "== multi-task journal smoke: round-robin kill+resume bitwise =="
+# Satellite of the paged-KV PR: a journaled --tasks run (one journal,
+# one slot per task per checkpoint round) killed mid-run and resumed
+# must produce per-task adapters byte-identical to a run that was never
+# interrupted, and every artifact must pass fsck.
+"$PEQA_BIN" finetune --tasks ta,tb --out "$SMOKE/multi_full" --steps 8 --save-every 3 \
+  --batch 2 --seq 16 --seed 11 --eval-tokens 0
+"$PEQA_BIN" finetune --tasks ta,tb --out "$SMOKE/multi_part" --steps 8 --save-every 3 \
+  --batch 2 --seq 16 --seed 11 --eval-tokens 0 --halt-after 4
+"$PEQA_BIN" finetune --tasks ta,tb --out "$SMOKE/multi_part" --resume --eval-tokens 0
+cmp "$SMOKE/multi_full/ta.adapter" "$SMOKE/multi_part/ta.adapter"
+cmp "$SMOKE/multi_full/tb.adapter" "$SMOKE/multi_part/tb.adapter"
+"$PEQA_BIN" fsck "$SMOKE/multi_part"
+echo "== ok: multi-task resume is byte-identical per task =="
+
 echo "== registry gc smoke: prune superseded generations, keep the live set =="
 # Publish a second generation into the same registry, gc with keep-last
 # 1, and verify the registry still loads (the live manifest's files are
@@ -167,3 +182,16 @@ echo "== pooled serve smoke: --engines 2, concurrent streaming clients =="
 "$PEQA_BIN" serve --engines 2 --clients 2 --stream --requests 12 \
   --max-new 12 --tasks 3 --seed 7
 echo "== ok: pooled serve smoke =="
+
+echo "== paged-KV prefix-sharing smoke: tight page budget, CoW prefix =="
+# The serve::kvpage memory claim end to end through the CLI: 8 clients
+# of one task fork from a 32-token prompt prefix (prompt 33 + 8 new =
+# 11 pages each at 4 tokens/page). Unshared, the batch would need 88
+# pages — and 8 full-window ring buffers would hold 512 token slots —
+# but the pool holds only 40 pages (160 slots). The run can only fit by
+# CoW-attaching the shared prefix pages; --require-shared makes the
+# binary exit nonzero if kv_pages_shared stays 0.
+"$PEQA_BIN" serve --kv-pages 40 --page-tokens 4 --prefix-tokens 32 \
+  --requests 8 --max-new 8 --tasks 1 --batch 4 --window 64 --seed 7 \
+  --require-shared
+echo "== ok: paged-KV prefix-sharing smoke =="
