@@ -3,6 +3,9 @@
 //! * fused packed GEMM (`quant::kernels::PackedMatrix::matmul_t`) vs the
 //!   seed's reference unpack → dequantize → naive-matmul path, across
 //!   bits ∈ {2, 3, 4} × group ∈ {per-channel, 128, 64};
+//! * the same fused GEMM pinned to the scalar tier, so every result file
+//!   carries the SIMD-vs-scalar ratio (`speedup_vs_scalar`) next to the
+//!   dispatch tier it ran under (top-level `simd_path` key);
 //! * the blocked/parallel dense `Tensor::matmul` for context;
 //! * writes `BENCH_kernels.json` at the repo root so every PR leaves a
 //!   perf datapoint (scripts/ci.sh runs this in quick mode).
@@ -18,7 +21,7 @@
 use peqa::bench::{quick_mode, save_json, time_fn, Table, Timing};
 use peqa::config;
 use peqa::json::Value;
-use peqa::quant::{quantize_rtn, reference_dequant_matmul, PackedMatrix};
+use peqa::quant::{quantize_rtn, reference_dequant_matmul, simd, PackedMatrix};
 use peqa::tensor::Tensor;
 use peqa::util::Pcg32;
 
@@ -33,7 +36,14 @@ fn row(table: &mut Table, bits: u8, group: &str, t: &Timing, speedup: Option<f64
     ]);
 }
 
-fn json_entry(bits: u8, group: &str, path: &str, t: &Timing, speedup: Option<f64>) -> Value {
+fn json_entry(
+    bits: u8,
+    group: &str,
+    path: &str,
+    t: &Timing,
+    speedup: Option<f64>,
+    speedup_scalar: Option<f64>,
+) -> Value {
     let mut fields = vec![
         ("bits", Value::num(bits as f64)),
         ("group", Value::str(group)),
@@ -44,6 +54,9 @@ fn json_entry(bits: u8, group: &str, path: &str, t: &Timing, speedup: Option<f64
     ];
     if let Some(s) = speedup {
         fields.push(("speedup_vs_reference", Value::num(s)));
+    }
+    if let Some(s) = speedup_scalar {
+        fields.push(("speedup_vs_scalar", Value::num(s)));
     }
     Value::obj(fields)
 }
@@ -67,7 +80,11 @@ fn main() -> anyhow::Result<()> {
     let x = Tensor::normal(&[batch, dim], 1.0, &mut rng);
 
     let mut table = Table::new(
-        &format!("§Perf — fused packed GEMM vs reference ({dim}x{dim}, batch {batch}, {threads} threads)"),
+        &format!(
+            "§Perf — fused packed GEMM vs reference ({dim}x{dim}, batch {batch}, {threads} \
+             threads, simd {})",
+            simd::active().name
+        ),
         &["bits", "group", "path", "mean ms", "min ms", "speedup"],
     );
     let mut entries: Vec<Value> = Vec::new();
@@ -89,11 +106,34 @@ fn main() -> anyhow::Result<()> {
             let t_fused = time_fn(&format!("fused packed gemm b{bits}/{gname}"), warmup, iters, || {
                 std::hint::black_box(pm.matmul_t(&x).unwrap());
             });
+            // Same fused kernel pinned to the scalar tier: the
+            // SIMD-vs-scalar ratio is the roofline scoreboard, measured
+            // in-process so both tiers see identical inputs and threads.
+            let t_scalar = time_fn(
+                &format!("fused packed gemm (scalar tier) b{bits}/{gname}"),
+                warmup,
+                iters,
+                || {
+                    std::hint::black_box(
+                        pm.matmul_t_with_ops(&x, threads, simd::scalar()).unwrap(),
+                    );
+                },
+            );
             let speedup = t_ref.mean_s() / t_fused.mean_s().max(1e-12);
+            let speedup_scalar = t_scalar.mean_s() / t_fused.mean_s().max(1e-12);
             row(&mut table, bits, &gname, &t_ref, None);
             row(&mut table, bits, &gname, &t_fused, Some(speedup));
-            entries.push(json_entry(bits, &gname, "reference", &t_ref, None));
-            entries.push(json_entry(bits, &gname, "fused", &t_fused, Some(speedup)));
+            row(&mut table, bits, &gname, &t_scalar, None);
+            entries.push(json_entry(bits, &gname, "reference", &t_ref, None, None));
+            entries.push(json_entry(
+                bits,
+                &gname,
+                "fused",
+                &t_fused,
+                Some(speedup),
+                Some(speedup_scalar),
+            ));
+            entries.push(json_entry(bits, &gname, "fused_scalar", &t_scalar, None, None));
         }
     }
 
@@ -104,7 +144,7 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(x.matmul(&dense_t).unwrap());
     });
     row(&mut table, 32, "-", &t_dense, None);
-    entries.push(json_entry(32, "-", "dense_parallel", &t_dense, None));
+    entries.push(json_entry(32, "-", "dense_parallel", &t_dense, None, None));
 
     table.print();
     let paths = config::Paths::default();
@@ -118,6 +158,7 @@ fn main() -> anyhow::Result<()> {
         ("dim", Value::num(dim as f64)),
         ("batch", Value::num(batch as f64)),
         ("threads", Value::num(threads as f64)),
+        ("simd_path", Value::str(simd::active().name)),
         ("iters", Value::num(iters as f64)),
         ("quick", Value::str(if quick { "1" } else { "0" })),
         ("results", Value::Arr(entries)),

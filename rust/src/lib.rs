@@ -29,6 +29,44 @@
 //! the same deterministic row-sharding, so every result is bit-identical
 //! at any thread count (`PEQA_THREADS` pins the worker count).
 //!
+//! ### SIMD dispatch (`quant::simd`, `PEQA_SIMD`)
+//!
+//! The inner loops of the packed GEMM family (`matmul_t`,
+//! `matmul_t_ragged`, `matvec_t`, `grad_input`, `grad_scales_zeros`)
+//! and the dense LM-head kernels (`model::blocks::dense_rows_into` /
+//! `dense_grad_rows_into`) run through a function table
+//! ([`quant::simd::SimdOps`]) chosen **once per process**: AVX2 when
+//! `is_x86_feature_detected!("avx2")` says so, NEON on aarch64, the
+//! scalar baseline otherwise — `PEQA_SIMD=scalar` forces the baseline,
+//! `auto`/unset takes the detected tier. The contract is that every
+//! tier is **bitwise identical** to the scalar loops, which constrains
+//! the vectorization shape:
+//!
+//! - lanes run across *independent output elements* (batch columns,
+//!   weight rows), never across the reduction index, so each output
+//!   keeps exactly one accumulator advanced in the same ascending-j
+//!   order as the scalar code;
+//! - vector code uses separate multiply and add (`_mm256_mul_ps` +
+//!   `_mm256_add_ps`, `vmulq_f32` + `vaddq_f32`), **never FMA** — a
+//!   fused multiply-add skips the intermediate rounding the scalar
+//!   `mul` + `add` performs and changes low bits;
+//! - `a * b` vs `b * a` operand order may differ between tiers — IEEE
+//!   754 multiplication is commutative in value and bit pattern for
+//!   the non-NaN inputs these kernels see;
+//! - the 2-bit path additionally expands eight packed codes per 16-bit
+//!   load with two masked u64 multiplies ([`quant::simd::spread8`],
+//!   cross-checked in debug builds by a popcount identity). A full
+//!   popcount *dot product* restructure was deliberately not used: it
+//!   would reassociate the float accumulation and break bitwise parity
+//!   with the scalar tier.
+//!
+//! The scalar loops are kept verbatim as the reference; parity tests
+//! fuzz every tier against them across bits × grouping × shape ×
+//! thread count, and `tests/simd_dispatch.rs` re-runs a whole
+//! decode/train workload under `PEQA_SIMD=scalar` vs `auto` and
+//! compares digests. All `unsafe` in the crate is confined to
+//! `quant::simd` (lint rule `unsafe-confined`).
+//!
 //! ## The transformer compute core (`model::blocks`)
 //!
 //! One set of llama-family block primitives — RMSNorm (+ inverse-norm
@@ -234,16 +272,18 @@
 //! dependency-free hand-rolled Rust lexer plus token-pattern rules,
 //! deterministic `file:line: rule: msg` output, nonzero exit on any
 //! finding. `scripts/ci.sh` gates on `peqa lint rust/src` before the
-//! test suite, and the crate root pins `#![deny(unsafe_code)]` (zero
-//! `unsafe` in the library today; ROADMAP item 1's SIMD work will
-//! relax that deliberately, per-module).
+//! test suite. The crate root used to pin `#![deny(unsafe_code)]`;
+//! with the SIMD kernels that blanket ban became the `unsafe-confined`
+//! rule — `unsafe` is legal only inside `quant::simd`, and every
+//! occurrence there must sit under a `// SAFETY:` comment.
 //!
 //! | Rule | Invariant it enforces | Why it is load-bearing for PEQA |
 //! |---|---|---|
 //! | `nan-comparator` | no `partial_cmp(..).unwrap()`-style comparators; key with `total_cmp` | metrics/logits can be NaN; a sort comparator that panics (or lies) turns one bad float into a crashed server — the exact bug class fixed in `serve::engine` (PR 3) and again in `util::stats`/`eval` here |
 //! | `panic-free-paths` | no `unwrap`/`expect`/`panic!`-family in non-test `serve::`/`store::` code (that includes the `serve::kvpage` allocator/page tables — a bad page index must surface as a typed error, not an indexing panic mid-decode) | a panic in serving drops live traffic; in the store it can poison a checkpoint mid-write; mutex poison routes through `util::sync::{lock_clean, try_lock_clean, wait_clean}` |
-//! | `hot-path-alloc` | no `Vec::new`/`vec!`/`to_vec`/`format!`/`String::from`/`.clone()` in `quant::kernels`/`model::blocks` | `ProjScratch`/`TapeArena` exist precisely so steady-state decode/train steps never allocate (allocs/step is a gated bench metric) |
+//! | `hot-path-alloc` | no `Vec::new`/`vec!`/`to_vec`/`format!`/`String::from`/`.clone()` in `quant::kernels`/`model::blocks`/`quant::simd` | `ProjScratch`/`TapeArena`/`KernelScratch` exist precisely so steady-state decode/train steps never allocate (allocs/step is a gated bench metric) |
 //! | `float-reduction-order` | no iterator `.sum::<f32>()`/`.product`/float `fold` in the kernel modules | one explicit accumulation order is the bitwise thread/batch-invariance contract the parity tests pin |
+//! | `unsafe-confined` | `unsafe` only inside `quant::simd`, and there only under a `// SAFETY:` comment | the SIMD intrinsics are the one deliberate unsafe surface; the rule replaces the old crate-wide `#![deny(unsafe_code)]` without letting unsafe leak into the rest of the tree |
 //! | `lock-across-blocking` | no mutex guard lexically live across `.recv()`/`.send()`/`.join()` in `serve::` | the pool's bounded channels make lock-then-block a real deadlock shape, not a style nit |
 //! | `nondeterminism-sources` | no `HashMap`/`HashSet` in artifact/numeric paths; no `Instant::now`/`SystemTime` outside bench/`util::stats`/`util::log`; no bare `thread::spawn` | hash-order iteration, wall-clock reads and detached threads are the three ways "bitwise identical" quietly stops being true |
 //!
@@ -271,6 +311,7 @@
 //! | Variable | Effect |
 //! |---|---|
 //! | `PEQA_THREADS` | Worker-thread count of the host kernel layer ([`util::num_threads`]) — serving *and* the host training backend; results are bit-identical at any value. Defaults to available parallelism. |
+//! | `PEQA_SIMD` | Kernel tier of the packed/dense hot loops ([`quant::simd::active`]): `scalar` forces the baseline loops, `auto`/unset dispatches on the host (AVX2 / NEON / scalar). Read once per process; results are bit-identical either way. |
 //! | `PEQA_BENCH_QUICK` | `1` shrinks every bench (model size / request volume / step count) to smoke scale; `0`/unset runs full size ([`bench::quick_mode`]). `scripts/ci.sh` sets it (`--full` clears it). |
 //! | `PEQA_BENCH_OUT` | Absolute output path for a bench's JSON result file (`BENCH_kernels.json`, `BENCH_serve.json`, `BENCH_finetune.json`); defaults to the repo root. |
 //! | `PEQA_BENCH_DIM` | Overrides the GEMM dimension of `benches/kernels_micro.rs`. |
@@ -303,8 +344,6 @@
 //! full host-side stack: tensors, quantization, packed formats, fused
 //! kernels, the `serve` decode engine and scheduler, data/tokenizer,
 //! memory model, and the bench framework.
-
-#![deny(unsafe_code)]
 
 pub mod bench;
 pub mod cli;

@@ -74,11 +74,14 @@ pub struct Diagnostic {
 
 /// Per-file context handed to every rule: the display path, the module
 /// path derived from it (`src/serve/pool.rs` → `["serve", "pool"]`),
-/// and the test-stripped token stream.
+/// the test-stripped token stream, and the full comment list (rules
+/// that require justification comments — `unsafe-confined` — look for
+/// them here; comments are never stripped).
 pub struct FileCtx {
     pub path: String,
     pub modpath: Vec<String>,
     pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
 }
 
 impl FileCtx {
@@ -424,6 +427,7 @@ pub fn lint_source(path: &str, src: &str, rule_filter: Option<&str>) -> Vec<Diag
         path: path.to_string(),
         modpath: modpath_of(path),
         tokens: strip_tests(lexed.tokens),
+        comments: lexed.comments,
     };
     for r in rules::all() {
         if let Some(want) = rule_filter {

@@ -8,12 +8,16 @@
 //! (a panic there drops live traffic or corrupts a checkpoint — that
 //! includes `serve::kvpage`, where a bad page index or a double free
 //! must surface as a typed error, not an indexing panic mid-decode);
-//! `hot-path-alloc` and `float-reduction-order` cover the two compute
-//! cores (`quant::kernels`, `model::blocks`) where ProjScratch /
-//! TapeArena exist precisely so steady-state code never allocates and
-//! reductions keep one fixed order; `nan-comparator` is global because
-//! a NaN comparator panic is wrong everywhere. See `lint::mod` docs
-//! for the suppression syntax.
+//! `hot-path-alloc` and `float-reduction-order` cover the compute
+//! cores (`quant::kernels`, `model::blocks`, `quant::simd`) where
+//! ProjScratch / TapeArena exist precisely so steady-state code never
+//! allocates and reductions keep one fixed order; `unsafe-confined`
+//! is global in the opposite direction — `unsafe` may appear *only*
+//! in `quant::simd` (the intrinsics live there behind the runtime
+//! dispatch table), and even there every `unsafe` must sit under a
+//! `// SAFETY:` comment stating why the site is sound;
+//! `nan-comparator` is global because a NaN comparator panic is wrong
+//! everywhere. See `lint::mod` docs for the suppression syntax.
 
 use super::lexer::Tok;
 use super::{Diagnostic, FileCtx};
@@ -44,7 +48,8 @@ pub fn all() -> &'static [Rule] {
         Rule {
             name: "hot-path-alloc",
             invariant: "no per-call allocation (Vec::new/vec!/to_vec/format!/String::from/\
-                        .clone()) in quant::kernels / model::blocks — scratch is pooled",
+                        .clone()) in quant::kernels / model::blocks / quant::simd — \
+                        scratch is pooled",
             check: hot_path_alloc,
         },
         Rule {
@@ -52,6 +57,13 @@ pub fn all() -> &'static [Rule] {
             invariant: "no iterator float reductions (.sum::<f32>/fold) in kernel modules \
                         — bitwise reproducibility requires one explicit accumulation order",
             check: float_reduction_order,
+        },
+        Rule {
+            name: "unsafe-confined",
+            invariant: "`unsafe` is legal only inside quant::simd, and every occurrence \
+                        there must sit under a `// SAFETY:` comment stating why the site \
+                        is sound",
+            check: unsafe_confined,
         },
         Rule {
             name: "lock-across-blocking",
@@ -168,9 +180,12 @@ fn panic_free_paths(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
     }
 }
 
-/// Per-call allocation in the two compute cores.
+/// Per-call allocation in the compute cores.
 fn hot_path_alloc(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
-    if !(ctx.is_mod(&["quant", "kernels"]) || ctx.is_mod(&["model", "blocks"])) {
+    if !(ctx.is_mod(&["quant", "kernels"])
+        || ctx.is_mod(&["model", "blocks"])
+        || ctx.is_mod(&["quant", "simd"]))
+    {
         return;
     }
     let n = ctx.tokens.len();
@@ -210,7 +225,10 @@ fn hot_path_alloc(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
 /// `.product::<f64>()`, or `.fold(<float literal>, ..)`. Order must be
 /// an explicit loop so the accumulation order is pinned.
 fn float_reduction_order(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
-    if !(ctx.is_mod(&["quant", "kernels"]) || ctx.is_mod(&["model", "blocks"])) {
+    if !(ctx.is_mod(&["quant", "kernels"])
+        || ctx.is_mod(&["model", "blocks"])
+        || ctx.is_mod(&["quant", "simd"]))
+    {
         return;
     }
     let n = ctx.tokens.len();
@@ -251,6 +269,89 @@ fn float_reduction_order(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
                     );
                 }
             }
+        }
+    }
+}
+
+/// Line of the last code token before token `i` that is on an earlier
+/// line than token `i`, stepping over `#[...]` attribute groups as if
+/// they were not there (a `// SAFETY:` comment above
+/// `#[target_feature(..)] unsafe fn` must still count as "directly
+/// above"). Returns 0 when nothing precedes the token.
+fn prev_code_line(ctx: &FileCtx, i: usize) -> u32 {
+    let uline = ctx.tokens[i].line;
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        if ctx.tokens[j].line >= uline {
+            continue;
+        }
+        if ctx.punct(j, ']') {
+            // Walk back to the matching `[`; if a `#` precedes it, the
+            // whole group is an attribute — keep scanning above it.
+            let mut depth = 1i64;
+            let mut k = j;
+            while k > 0 && depth > 0 {
+                k -= 1;
+                match ctx.tokens[k].tok {
+                    Tok::Punct('[') => depth -= 1,
+                    Tok::Punct(']') => depth += 1,
+                    _ => {}
+                }
+            }
+            if depth == 0 && k > 0 && ctx.punct(k - 1, '#') {
+                j = k - 1;
+                continue;
+            }
+        }
+        return ctx.tokens[j].line;
+    }
+    0
+}
+
+/// `unsafe` anywhere outside `quant::simd` is a finding — the crate
+/// used to carry `#![deny(unsafe_code)]` and this rule is its
+/// replacement now that the SIMD kernels need intrinsics. Inside
+/// `quant::simd`, each `unsafe` must be covered by a `//` line comment
+/// whose text starts with `SAFETY`, on a line strictly after the
+/// previous code line and at or before the `unsafe` itself (attributes
+/// between the comment and the keyword are stepped over, so the
+/// comment may sit above `#[target_feature(..)] unsafe fn`).
+fn unsafe_confined(ctx: &FileCtx, out: &mut Vec<Diagnostic>) {
+    let in_simd = ctx.is_mod(&["quant", "simd"]);
+    let n = ctx.tokens.len();
+    for i in 0..n {
+        if ctx.ident(i) != Some("unsafe") {
+            continue;
+        }
+        if !in_simd {
+            ctx.diag(
+                out,
+                i,
+                "`unsafe` outside `quant::simd` — intrinsics and their justifications \
+                 live behind the dispatch table in quant::simd; everything else stays \
+                 safe Rust"
+                    .into(),
+            );
+            continue;
+        }
+        let uline = ctx.tokens[i].line;
+        let prev = prev_code_line(ctx, i);
+        let covered = ctx.comments.iter().any(|c| {
+            c.line_comment
+                && c.text.trim_start().starts_with("SAFETY")
+                && c.line > prev
+                && c.line <= uline
+        });
+        if !covered {
+            ctx.diag(
+                out,
+                i,
+                "`unsafe` in quant::simd without a `// SAFETY:` comment directly above \
+                 — state the precondition (feature detection, bounds) that makes this \
+                 site sound"
+                    .into(),
+            );
         }
     }
 }

@@ -52,6 +52,8 @@
 use anyhow::{anyhow, Result};
 
 use super::PackedModel;
+use crate::quant::kernels::KernelScratch;
+use crate::quant::simd::{self, SimdOps};
 use crate::serve::kvcache::KvSeq;
 use crate::tensor::Tensor;
 
@@ -110,16 +112,17 @@ impl LayerNames {
     }
 }
 
-/// Shared projection scratch: the fused kernel's yᵀ transpose buffer —
-/// the batch-sized allocation — owned by the caller's arena
+/// Shared projection scratch owned by the caller's arena
 /// (`serve::engine::Scratch`, `train::host::TapeArena`) and reused
-/// across calls. The kernels' small internal buffers (per-(row, group)
-/// sums, per-worker code tiles — kilobytes) are still allocated per
-/// call on every GEMM path; `benches/finetune_step.rs` counts them, and
-/// pooling them through this type is a noted follow-up (ROADMAP).
+/// across calls: the fused kernel's yᵀ transpose buffer plus the full
+/// [`KernelScratch`] pool (per-(row, group) sums, lane-tier transposes,
+/// per-worker code tiles, dense-head accumulators) — so a steady-state
+/// decode or training step does no per-call kernel allocation
+/// (`benches/finetune_step.rs` counts exactly this).
 #[derive(Default)]
 pub struct ProjScratch {
     yt: Vec<f32>,
+    pub(crate) kernel: KernelScratch,
 }
 
 /// One worker's attention scratch: the `(n_heads, window)` score matrix
@@ -165,12 +168,28 @@ pub fn proj_into(
     scratch: &mut ProjScratch,
 ) -> Result<()> {
     let m: usize = spans.iter().sum();
+    let ops = simd::active();
     if let Some(pm) = model.matrix(name) {
         ensure(out, m * pm.rows);
         if m > 1 && m >= 4 * threads.max(1) {
-            pm.matmul_t_ragged(x, spans, threads, &mut out[..m * pm.rows])
+            pm.matmul_t_ragged_core(
+                x,
+                spans,
+                threads,
+                &mut out[..m * pm.rows],
+                ops,
+                &mut scratch.kernel,
+            )
         } else {
-            pm.matmul_t_rows_scratch(x, m, threads, &mut out[..m * pm.rows], &mut scratch.yt)
+            pm.matmul_t_rows_core(
+                x,
+                m,
+                threads,
+                &mut out[..m * pm.rows],
+                &mut scratch.yt,
+                ops,
+                &mut scratch.kernel,
+            )
         }
     } else {
         // peqa-lint: allow(hot-path-alloc) -- dense-fallback lookup only:
@@ -182,7 +201,7 @@ pub fn proj_into(
             .ok_or_else(|| anyhow!("no projection '{name}'"))?;
         let (o, _) = w.dims2()?;
         ensure(out, m * o);
-        dense_rows_into(w, x, m, &mut out[..m * o]);
+        dense_rows_core(w, x, m, &mut out[..m * o], ops, &mut scratch.kernel);
         Ok(())
     }
 }
@@ -691,18 +710,79 @@ pub fn swiglu_backward_into(
 /// (out, in), accumulated row by row in a fixed order (deterministic,
 /// batch-row independent).
 pub fn dense_rows_into(w: &Tensor, x: &[f32], b: usize, y: &mut [f32]) {
+    let mut scr = KernelScratch::default();
+    dense_rows_core(w, x, b, y, simd::active(), &mut scr);
+}
+
+/// Columns of W interleaved per lane-tier j-block: small enough to stay
+/// in L1 yet wide enough to amortize the interleave over the batch.
+const DENSE_JB: usize = 256;
+
+/// [`dense_rows_into`] with pooled scratch and an explicit SIMD tier —
+/// the per-step LM-head entry (serve::engine, train::host). The lane
+/// tier runs weight-row lanes: a block of up to `lanes` W rows is
+/// interleaved j-block by j-block into a stack tile, and each batch
+/// row's per-(output, lane) accumulator extends across the j-blocks in
+/// ascending j with a single accumulator per output — exactly the scalar
+/// loop's reduction order, so results are bitwise identical at every
+/// tier. The interleave of one row block is reused across the whole
+/// batch (the win over per-(bi, r) scalar dots).
+pub(crate) fn dense_rows_core(
+    w: &Tensor,
+    x: &[f32],
+    b: usize,
+    y: &mut [f32],
+    ops: &SimdOps,
+    scr: &mut KernelScratch,
+) {
     let (o, i) = w.dims2().expect("dense projection is 2-D");
     let wd = w.data();
-    for bi in 0..b {
-        let xr = &x[bi * i..(bi + 1) * i];
-        let yr = &mut y[bi * o..(bi + 1) * o];
-        for (r, yv) in yr.iter_mut().enumerate() {
-            let wr = &wd[r * i..(r + 1) * i];
-            let mut acc = 0.0f32;
-            for j in 0..i {
-                acc += xr[j] * wr[j];
+    let lanes = ops.lanes;
+    if lanes > 1 && b > 0 {
+        let acc = &mut scr.acc;
+        acc.clear();
+        acc.resize(b * lanes, 0.0);
+        let mut wtile = [0.0f32; simd::MAX_LANES * DENSE_JB];
+        let mut r0 = 0usize;
+        while r0 < o {
+            let rl = lanes.min(o - r0);
+            acc[..b * lanes].fill(0.0);
+            let mut j0 = 0usize;
+            while j0 < i {
+                let jl = DENSE_JB.min(i - j0);
+                for l in 0..rl {
+                    let wr = &wd[(r0 + l) * i + j0..(r0 + l) * i + j0 + jl];
+                    for (j, &wv) in wr.iter().enumerate() {
+                        wtile[j * lanes + l] = wv;
+                    }
+                }
+                let mseg = &wtile[..(jl - 1) * lanes + lanes];
+                for bi in 0..b {
+                    let xseg = &x[bi * i + j0..bi * i + j0 + jl];
+                    ops.dot_lanes(&mut acc[bi * lanes..bi * lanes + rl], mseg, xseg, lanes);
+                }
+                j0 += jl;
             }
-            *yv = acc;
+            for bi in 0..b {
+                for l in 0..rl {
+                    y[bi * o + r0 + l] = acc[bi * lanes + l];
+                }
+            }
+            r0 += rl;
+        }
+    } else {
+        // Scalar tier: the seed's loop, verbatim.
+        for bi in 0..b {
+            let xr = &x[bi * i..(bi + 1) * i];
+            let yr = &mut y[bi * o..(bi + 1) * o];
+            for (r, yv) in yr.iter_mut().enumerate() {
+                let wr = &wd[r * i..(r + 1) * i];
+                let mut acc = 0.0f32;
+                for j in 0..i {
+                    acc += xr[j] * wr[j];
+                }
+                *yv = acc;
+            }
         }
     }
 }
@@ -712,12 +792,17 @@ pub fn dense_rows_into(w: &Tensor, x: &[f32], b: usize, y: &mut [f32]) {
 /// independent, so they are sharded over the kernel layer's shared
 /// row-parallel helper; per row the accumulation walks the weight rows
 /// in ascending order (skipping exact-zero dY entries, an exact
-/// identity), so results are bit-identical at any `threads` value.
+/// identity), so results are bit-identical at any `threads` value. The
+/// per-row update `dx[j] += a·w[j]` is element-independent, so it routes
+/// through the dispatched `axpy` — every tier performs the identical
+/// single mul+add per element, keeping the result bitwise invariant to
+/// the dispatch choice too.
 pub fn dense_grad_rows_into(w: &Tensor, dy: &[f32], b: usize, threads: usize, dx: &mut [f32]) {
     let (o, i) = w.dims2().expect("dense projection is 2-D");
     assert_eq!(dy.len(), b * o, "dense_grad_rows_into: dy shape");
     assert_eq!(dx.len(), b * i, "dense_grad_rows_into: dx shape");
     let wd = w.data();
+    let ops = simd::active();
     crate::quant::kernels::par_row_chunks(dx, i, b, threads, |b0, chunk| {
         for (ci, dxr) in chunk.chunks_mut(i).enumerate() {
             dxr.fill(0.0);
@@ -726,7 +811,7 @@ pub fn dense_grad_rows_into(w: &Tensor, dy: &[f32], b: usize, threads: usize, dx
                 if a == 0.0 {
                     continue; // masked-out logits rows are all-zero
                 }
-                axpy_blocked(a, &wd[r * i..(r + 1) * i], dxr);
+                ops.axpy(dxr, a, &wd[r * i..(r + 1) * i]);
             }
         }
     });
@@ -874,6 +959,28 @@ mod tests {
                 &mut scr,
             );
             assert_eq!(ctx[..], ctx_keep[t * d..(t + 1) * d], "t={t}");
+        }
+    }
+
+    #[test]
+    fn dense_head_simd_tier_is_bitwise_equal_to_scalar() {
+        // LM-head shapes: out large vs small, in not a j-block multiple,
+        // batch 0/1/odd — every (tier, shape) pair must agree bitwise.
+        let mut scr_s = KernelScratch::default();
+        let mut scr_v = KernelScratch::default();
+        for (b, o, i) in [(1usize, 33usize, 48usize), (5, 8, 300), (3, 7, 6), (0, 9, 16), (4, 64, 257)] {
+            let mut rng = Pcg32::new(7 + (b + o + i) as u64);
+            let w = Tensor::normal(&[o, i], 0.5, &mut rng);
+            let x = Tensor::normal(&[b.max(1), i], 1.0, &mut rng);
+            let mut ys = vec![f32::NAN; b * o];
+            let mut yv = vec![f32::NAN; b * o];
+            dense_rows_core(&w, &x.data()[..b * i], b, &mut ys, simd::scalar(), &mut scr_s);
+            dense_rows_core(&w, &x.data()[..b * i], b, &mut yv, simd::detected(), &mut scr_v);
+            assert_eq!(ys, yv, "b={b} o={o} i={i}");
+            // And the public wrapper (active dispatch) agrees with both.
+            let mut yw = vec![f32::NAN; b * o];
+            dense_rows_into(&w, &x.data()[..b * i], b, &mut yw);
+            assert_eq!(yw, ys, "wrapper b={b} o={o} i={i}");
         }
     }
 

@@ -28,7 +28,20 @@
 //! * **row parallelism** — output rows are sharded over
 //!   `std::thread::scope` workers (no rayon in the vendored registry);
 //!   each Ŵ row is owned by exactly one worker and accumulated in a
-//!   fixed order, so results are **bit-identical for any thread count**.
+//!   fixed order, so results are **bit-identical for any thread count**;
+//! * **runtime-dispatched SIMD** — the per-group code dot and the
+//!   backward updates route through the `quant::simd` function table
+//!   (AVX2/NEON, chosen once per process, `PEQA_SIMD=scalar|auto`
+//!   override). Lane tiers vectorize across *independent output
+//!   elements* — batch lanes when the batch is wide enough, weight-row
+//!   lanes otherwise — never across the per-group reduction, and use
+//!   separate mul+add (no FMA), so every tier is **bitwise identical**
+//!   to the scalar baseline, which is kept verbatim as the
+//!   `lanes == 1` path;
+//! * **pooled scratch** — per-call group sums, lane transposes, and
+//!   per-worker code tiles live in a caller-held [`KernelScratch`]
+//!   (threaded from `model::blocks::ProjScratch` / the trainer tape),
+//!   so steady-state decode/train steps do no kernel allocation.
 //!
 //! # Packed memory layout
 //!
@@ -52,7 +65,41 @@ use anyhow::{bail, Result};
 
 use super::pack;
 use super::rtn::QuantizedMatrix;
+use super::simd::{self, SimdOps};
 use crate::tensor::Tensor;
+
+/// Pooled per-call scratch for the fused kernels: the (row, group) sum
+/// buffers, lane-tier transposes, per-worker code-tile slabs, ragged cut
+/// indices, and gradient staging that the kernels previously allocated per
+/// call. Steady-state drivers (serve::engine's `Scratch`, train::host's
+/// `TapeArena`) hold one of these inside `model::blocks::ProjScratch` and
+/// thread it through every projection, so the decode/train hot loops do no
+/// per-call kernel allocation. `KernelScratch::default()` is allocation-free
+/// (empty vectors); buffers grow on first use and are then reused.
+///
+/// The public kernel entry points construct a transient default scratch so
+/// their signatures stay stable; anything on a per-token path goes through
+/// the `_core` variants with a pooled scratch.
+#[derive(Default)]
+pub struct KernelScratch {
+    /// Per-(x-row, group) sums Σx, `(m, n_groups)`.
+    pub(crate) sx: Vec<f32>,
+    /// `sx` transposed to `(n_groups, m)` — the lane tiers' combine reads
+    /// it contiguously along the lane axis.
+    pub(crate) sxt: Vec<f32>,
+    /// X transposed to `(cols, m)` — the batch-lane tiers load `lanes`
+    /// consecutive x-rows per vector op from it.
+    pub(crate) xt: Vec<f32>,
+    /// Per-worker code-tile slab, `workers × tile_len` (tile_len is `group`
+    /// for contiguous tiles, `lanes·group` for interleaved row-lane tiles).
+    pub(crate) tiles: Vec<f32>,
+    /// Dense LM-head per-(batch, lane) accumulators (model::blocks).
+    pub(crate) acc: Vec<f32>,
+    /// Ragged worker cut indices (`matmul_t_ragged`).
+    pub(crate) cuts: Vec<usize>,
+    /// Interleaved per-row `[ds…, dz…]` staging for `grad_scales_zeros`.
+    pub(crate) dsz: Vec<f32>,
+}
 
 /// A weight matrix held as bit-packed integer codes plus per-(row, group)
 /// f32 scales and zero-points. See the module docs for the byte layout.
@@ -240,6 +287,20 @@ impl PackedMatrix {
     /// [`Self::matmul_t`] with an explicit worker count. Results are
     /// bit-identical for every `threads` value.
     pub fn matmul_t_threads(&self, x: &Tensor, threads: usize) -> Result<Tensor> {
+        self.matmul_t_with_ops(x, threads, simd::active())
+    }
+
+    /// [`Self::matmul_t_threads`] pinned to an explicit SIMD tier
+    /// (`quant::simd::{scalar, detected}`) — the parity tests and the
+    /// kernels bench drive scalar vs vector dispatch in one process
+    /// through this; production callers use the `PEQA_SIMD`-resolved
+    /// [`simd::active`] table via the plain entries.
+    pub fn matmul_t_with_ops(
+        &self,
+        x: &Tensor,
+        threads: usize,
+        ops: &SimdOps,
+    ) -> Result<Tensor> {
         let (b, k) = x.dims2()?;
         if k != self.cols {
             bail!("fused matmul: x is {:?} but matrix has {} cols", x.shape(), self.cols);
@@ -247,9 +308,11 @@ impl PackedMatrix {
         let rows = self.rows;
         // peqa-lint: allow(hot-path-alloc) -- backing store of the
         // returned Tensor; the per-token decode loop goes through
-        // matmul_t_rows_scratch, which reuses caller buffers.
+        // matmul_t_rows_core, which reuses caller buffers.
         let mut y = vec![0.0f32; b * rows];
-        self.matmul_t_rows(x.data(), b, threads, &mut y)?;
+        let mut yt = Vec::default();
+        let mut scr = KernelScratch::default();
+        self.matmul_t_rows_core(x.data(), b, threads, &mut y, &mut yt, ops, &mut scr)?;
         Ok(Tensor::new(&[b, rows], y))
     }
 
@@ -265,19 +328,17 @@ impl PackedMatrix {
         threads: usize,
         out: &mut [f32],
     ) -> Result<()> {
-        // peqa-lint: allow(hot-path-alloc) -- zero-capacity Vec: no heap
-        // touch at all for batch == 1, and steady-state callers hold
-        // their own scratch via matmul_t_rows_scratch.
-        let mut yt = Vec::new();
+        let mut yt = Vec::default();
         self.matmul_t_rows_scratch(x, batch, threads, out, &mut yt)
     }
 
     /// Serving prefill-batch/decode entry point: [`Self::matmul_t_rows`]
-    /// accumulating through a caller-owned yᵀ scratch buffer, so the
-    /// steady-state decode loop (serve::engine, which reuses one scratch
-    /// arena across steps and prefill chunks) does no per-call kernel
-    /// allocation. Bitwise identical to [`Self::matmul_t`] on the same
-    /// data for any `batch`, `threads`, or prior scratch contents.
+    /// accumulating through a caller-owned yᵀ scratch buffer. Kept for
+    /// callers that only pool the transpose buffer; the steady-state
+    /// drivers go through [`Self::matmul_t_rows_core`] with a full
+    /// pooled [`KernelScratch`] (model::blocks::proj_into). Bitwise
+    /// identical to [`Self::matmul_t`] on the same data for any `batch`,
+    /// `threads`, or prior scratch contents.
     pub fn matmul_t_rows_scratch(
         &self,
         x: &[f32],
@@ -285,6 +346,26 @@ impl PackedMatrix {
         threads: usize,
         out: &mut [f32],
         yt: &mut Vec<f32>,
+    ) -> Result<()> {
+        let mut scr = KernelScratch::default();
+        self.matmul_t_rows_core(x, batch, threads, out, yt, simd::active(), &mut scr)
+    }
+
+    /// The pooled-scratch fused GEMM core every batched entry funnels
+    /// into: y = X·Ŵᵀ written `(batch, rows)` into `out`, accumulating
+    /// through the caller's yᵀ buffer, with group sums / lane transposes
+    /// / worker code tiles pooled in `scr` and the inner loops routed
+    /// through `ops`. Bitwise identical for any `batch`, `threads`,
+    /// dispatch tier, or prior scratch contents.
+    pub(crate) fn matmul_t_rows_core(
+        &self,
+        x: &[f32],
+        batch: usize,
+        threads: usize,
+        out: &mut [f32],
+        yt: &mut Vec<f32>,
+        ops: &SimdOps,
+        scr: &mut KernelScratch,
     ) -> Result<()> {
         if x.len() != batch * self.cols {
             bail!("matmul_t_rows: x has {} elems, expected {}x{}", x.len(), batch, self.cols);
@@ -298,12 +379,12 @@ impl PackedMatrix {
         if batch == 1 {
             // yᵀ (rows, 1) *is* y — accumulate straight into `out`.
             out.fill(0.0);
-            self.matmul_t_yt(x, 1, threads, out);
+            self.matmul_t_yt(x, 1, threads, out, ops, scr);
             return Ok(());
         }
         yt.clear();
         yt.resize(self.rows * batch, 0.0);
-        self.matmul_t_yt(x, batch, threads, yt);
+        self.matmul_t_yt(x, batch, threads, yt, ops, scr);
         for r in 0..self.rows {
             for bi in 0..batch {
                 out[bi * self.rows + r] = yt[r * batch + bi];
@@ -337,6 +418,27 @@ impl PackedMatrix {
         threads: usize,
         out: &mut [f32],
     ) -> Result<()> {
+        let mut scr = KernelScratch::default();
+        self.matmul_t_ragged_core(x, spans, threads, out, simd::active(), &mut scr)
+    }
+
+    /// [`Self::matmul_t_ragged`] with pooled scratch and an explicit
+    /// SIMD tier — the projection driver's entry (model::blocks). The
+    /// lane tier vectorizes across the concatenated x-rows (each lane
+    /// one output row of the worker's chunk); when the batch is
+    /// narrower than the lane width the scalar loop runs verbatim —
+    /// either way every output element keeps the ascending
+    /// (group, j) accumulation order, so results stay bitwise identical
+    /// to every other entry point at every dispatch tier.
+    pub(crate) fn matmul_t_ragged_core(
+        &self,
+        x: &[f32],
+        spans: &[usize],
+        threads: usize,
+        out: &mut [f32],
+        ops: &SimdOps,
+        scr: &mut KernelScratch,
+    ) -> Result<()> {
         let (rows, k, g) = (self.rows, self.cols, self.group);
         let ng = self.n_groups();
         let m: usize = spans.iter().sum();
@@ -352,47 +454,75 @@ impl PackedMatrix {
         if m == 0 || rows == 0 {
             return Ok(());
         }
-        let sx = group_sums(x, m, k, g, ng);
+        let KernelScratch { sx, sxt, xt, tiles, cuts, .. } = scr;
+        group_sums_into(x, m, k, g, ng, sx);
         let (sd, zd) = (self.scales.data(), self.zeros.data());
-        let (bits, sx_ref) = (self.bits, &sx);
+        let (bits, sx_ref) = (self.bits, &*sx);
+        let lanes = ops.lanes;
+        let lane_tier = lanes > 1 && m >= lanes;
+        if lane_tier {
+            transpose_into(x, m, k, xt);
+            transpose_into(sx_ref, m, ng, sxt);
+        }
+        let (xt_ref, sxt_ref) = (&*xt, &*sxt);
+        ragged_cuts_into(spans, threads, m, cuts);
+        let workers = cuts.len() - 1;
+        tiles.clear();
+        tiles.resize(workers * g, 0.0);
         // One worker's contiguous row chunk starting at x row `row0`.
-        let work = |row0: usize, chunk: &mut [f32]| {
+        let work = |row0: usize, chunk: &mut [f32], tile: &mut [f32]| {
             let nb = chunk.len() / rows;
             chunk.fill(0.0);
-            // peqa-lint: allow(hot-path-alloc) -- per-worker L1 group
-            // tile, one per call, reused across the worker's whole row
-            // chunk; pooling it is the noted ROADMAP follow-up.
-            let mut tile = vec![0.0f32; g];
             for r in 0..rows {
                 let prow = self.row_bytes(r);
                 for kg in 0..ng {
-                    pack::unpack_into_f32(prow, bits, kg * g, &mut tile);
+                    unpack_group(prow, bits, kg * g, tile, lane_tier);
                     let sc = sd[r * ng + kg];
                     let zp = zd[r * ng + kg];
-                    for ii in 0..nb {
-                        let xseg = &x[(row0 + ii) * k + kg * g..(row0 + ii) * k + (kg + 1) * g];
-                        let mut dot = 0.0f32;
-                        for j in 0..g {
-                            dot += xseg[j] * tile[j];
+                    if lane_tier {
+                        let xg = &xt_ref[kg * g * m..];
+                        let sxg = &sxt_ref[kg * m..(kg + 1) * m];
+                        let mut ii = 0usize;
+                        while ii < nb {
+                            let bl = lanes.min(nb - ii);
+                            let mut dots = [0.0f32; simd::MAX_LANES];
+                            ops.dot_lanes(&mut dots[..bl], &xg[row0 + ii..], tile, m);
+                            for (l, d) in dots[..bl].iter().enumerate() {
+                                chunk[(ii + l) * rows + r] +=
+                                    sc * (*d - zp * sxg[row0 + ii + l]);
+                            }
+                            ii += bl;
                         }
-                        chunk[ii * rows + r] += sc * (dot - zp * sx_ref[(row0 + ii) * ng + kg]);
+                    } else {
+                        for ii in 0..nb {
+                            let xseg =
+                                &x[(row0 + ii) * k + kg * g..(row0 + ii) * k + (kg + 1) * g];
+                            let mut dot = 0.0f32;
+                            for j in 0..g {
+                                dot += xseg[j] * tile[j];
+                            }
+                            chunk[ii * rows + r] +=
+                                sc * (dot - zp * sx_ref[(row0 + ii) * ng + kg]);
+                        }
                     }
                 }
             }
         };
-        let cuts = ragged_cuts(spans, threads, m);
-        if cuts.len() == 2 {
-            work(0, out);
+        if workers == 1 {
+            work(0, out, &mut tiles[..g]);
             return Ok(());
         }
         std::thread::scope(|s| {
             let mut rest = out;
+            let mut trest = tiles.as_mut_slice();
             for w in cuts.windows(2) {
                 let (chunk, r) = std::mem::take(&mut rest).split_at_mut((w[1] - w[0]) * rows);
                 rest = r;
+                let (tile, tr) = std::mem::take(&mut trest).split_at_mut(g);
+                trest = tr;
                 let work = &work;
                 let row0 = w[0];
-                s.spawn(move || work(row0, chunk));
+                s.spawn(move || work(row0, chunk, tile));
             }
         });
         Ok(())
@@ -403,6 +533,22 @@ impl PackedMatrix {
     /// over the output rows and bitwise identical to a batch-1
     /// [`Self::matmul_t`].
     pub fn matvec_t(&self, x: &[f32], threads: usize, out: &mut [f32]) -> Result<()> {
+        let mut scr = KernelScratch::default();
+        self.matvec_t_core(x, threads, out, simd::active(), &mut scr)
+    }
+
+    /// [`Self::matvec_t`] with pooled scratch and an explicit SIMD tier.
+    /// At batch 1 the lane tier runs weight-row lanes (each vector lane
+    /// one output row against the shared x segment) — the decode-step
+    /// shape where batch lanes cannot help.
+    pub(crate) fn matvec_t_core(
+        &self,
+        x: &[f32],
+        threads: usize,
+        out: &mut [f32],
+        ops: &SimdOps,
+        scr: &mut KernelScratch,
+    ) -> Result<()> {
         if x.len() != self.cols {
             bail!("matvec_t: x has {} elems, matrix has {} cols", x.len(), self.cols);
         }
@@ -414,7 +560,7 @@ impl PackedMatrix {
         }
         out.fill(0.0);
         // For b = 1 the yᵀ (rows, 1) layout *is* y — no transpose needed.
-        self.matmul_t_yt(x, 1, threads, out);
+        self.matmul_t_yt(x, 1, threads, out, ops, scr);
         Ok(())
     }
 
@@ -438,6 +584,25 @@ impl PackedMatrix {
         threads: usize,
         dx: &mut [f32],
     ) -> Result<()> {
+        let mut scr = KernelScratch::default();
+        self.grad_input_core(dy, batch, threads, dx, simd::active(), &mut scr)
+    }
+
+    /// [`Self::grad_input`] with pooled scratch and an explicit SIMD
+    /// tier — the trainer backward's entry (train::host). The inner
+    /// group update `seg[j] += a·s·(tile[j] − z)` is element-independent,
+    /// so it routes through `ops.axpy_sub` unconditionally: the scalar
+    /// tier's function *is* the verbatim baseline loop, and the vector
+    /// tiers keep the per-element sub→mul→add rounding sequence.
+    pub(crate) fn grad_input_core(
+        &self,
+        dy: &[f32],
+        batch: usize,
+        threads: usize,
+        dx: &mut [f32],
+        ops: &SimdOps,
+        scr: &mut KernelScratch,
+    ) -> Result<()> {
         let (rows, cols, g) = (self.rows, self.cols, self.group);
         let ng = self.n_groups();
         if dy.len() != batch * rows {
@@ -452,16 +617,16 @@ impl PackedMatrix {
         }
         let (sd, zd) = (self.scales.data(), self.zeros.data());
         let bits = self.bits;
-        par_row_chunks(dx, cols, batch, threads, |i0, chunk| {
+        let fast2 = ops.lanes > 1;
+        let tiles = &mut scr.tiles;
+        tiles.clear();
+        tiles.resize(n_workers(threads, batch) * g, 0.0);
+        par_row_chunks_tiled(dx, cols, batch, threads, tiles, g, |i0, chunk, tile| {
             let nb = chunk.len() / cols;
-            // peqa-lint: allow(hot-path-alloc) -- per-worker L1 group
-            // tile, one per call, reused across the worker's whole dX
-            // chunk; pooling it is the noted ROADMAP follow-up.
-            let mut tile = vec![0.0f32; g];
             for r in 0..rows {
                 let prow = self.row_bytes(r);
                 for kg in 0..ng {
-                    pack::unpack_into_f32(prow, bits, kg * g, &mut tile);
+                    unpack_group(prow, bits, kg * g, tile, fast2);
                     let sc = sd[r * ng + kg];
                     let zp = zd[r * ng + kg];
                     for ii in 0..nb {
@@ -471,9 +636,7 @@ impl PackedMatrix {
                         }
                         let asc = a * sc;
                         let seg = &mut chunk[ii * cols + kg * g..ii * cols + (kg + 1) * g];
-                        for j in 0..g {
-                            seg[j] += asc * (tile[j] - zp);
-                        }
+                        ops.axpy_sub(seg, asc, zp, tile);
                     }
                 }
             }
@@ -495,15 +658,35 @@ impl PackedMatrix {
     /// packed codes (each (row, group) tile unpacked once for the whole
     /// batch), sharded over weight rows with fixed-order accumulation —
     /// bit-identical for any `threads` value.
-    // peqa-lint: allow(hot-path-alloc) -- training backward: one
-    // adapter-gradient buffer set per optimizer step, amortized over
-    // the whole batch; never on the decode path.
     pub fn grad_scales_zeros(
         &self,
         x: &[f32],
         dy: &[f32],
         batch: usize,
         threads: usize,
+    ) -> Result<(Tensor, Tensor)> {
+        let mut scr = KernelScratch::default();
+        self.grad_scales_zeros_core(x, dy, batch, threads, simd::active(), &mut scr)
+    }
+
+    /// [`Self::grad_scales_zeros`] with pooled scratch and an explicit
+    /// SIMD tier — the trainer backward's entry (train::host). The lane
+    /// tier runs batch lanes for the per-(row, group) code dots; the
+    /// `acc_s`/`acc_z` reductions then consume the lane results in the
+    /// same ascending batch order as the scalar loop, so the gradients
+    /// stay bitwise identical at every dispatch tier.
+    // peqa-lint: allow(hot-path-alloc) -- training backward: one
+    // adapter-gradient tensor pair per optimizer step, amortized over
+    // the whole batch; never on the decode path. The staging buffers
+    // (group sums, lane transposes, dsz interleave) are pooled in `scr`.
+    pub(crate) fn grad_scales_zeros_core(
+        &self,
+        x: &[f32],
+        dy: &[f32],
+        batch: usize,
+        threads: usize,
+        ops: &SimdOps,
+        scr: &mut KernelScratch,
     ) -> Result<(Tensor, Tensor)> {
         let (rows, k, g) = (self.rows, self.cols, self.group);
         let ng = self.n_groups();
@@ -513,33 +696,60 @@ impl PackedMatrix {
         if dy.len() != batch * rows {
             bail!("grad_scales_zeros: dy has {} elems, expected {}x{}", dy.len(), batch, rows);
         }
-        // Interleaved per-row [ds…, dz…] buffer so one row-parallel pass
+        // Interleaved per-row [ds…, dz…] staging so one row-parallel pass
         // fills both tensors.
-        let mut dsz = vec![0.0f32; rows * 2 * ng];
+        let KernelScratch { sx, sxt, xt, tiles, dsz, .. } = scr;
+        dsz.clear();
+        dsz.resize(rows * 2 * ng, 0.0);
         if batch > 0 && rows > 0 {
-            let sx = group_sums(x, batch, k, g, ng);
+            group_sums_into(x, batch, k, g, ng, sx);
             let (sd, zd) = (self.scales.data(), self.zeros.data());
-            let (bits, sx_ref) = (self.bits, &sx);
-            par_row_chunks(&mut dsz, 2 * ng, rows, threads, |r0, chunk| {
-                let mut tile = vec![0.0f32; g];
+            let (bits, sx_ref) = (self.bits, &*sx);
+            let lanes = ops.lanes;
+            let lane_tier = lanes > 1 && batch >= lanes;
+            if lane_tier {
+                transpose_into(x, batch, k, xt);
+                transpose_into(sx_ref, batch, ng, sxt);
+            }
+            let (xt_ref, sxt_ref) = (&*xt, &*sxt);
+            tiles.clear();
+            tiles.resize(n_workers(threads, rows) * g, 0.0);
+            par_row_chunks_tiled(dsz, 2 * ng, rows, threads, tiles, g, |r0, chunk, tile| {
                 for (ri, drow) in chunk.chunks_mut(2 * ng).enumerate() {
                     let r = r0 + ri;
                     let prow = self.row_bytes(r);
                     for kg in 0..ng {
-                        pack::unpack_into_f32(prow, bits, kg * g, &mut tile);
+                        unpack_group(prow, bits, kg * g, tile, lane_tier);
                         let sc = sd[r * ng + kg];
                         let zp = zd[r * ng + kg];
                         let mut acc_s = 0.0f32;
                         let mut acc_z = 0.0f32;
-                        for bi in 0..batch {
-                            let dyv = dy[bi * rows + r];
-                            let xseg = &x[bi * k + kg * g..bi * k + (kg + 1) * g];
-                            let mut dot = 0.0f32;
-                            for j in 0..g {
-                                dot += xseg[j] * tile[j];
+                        if lane_tier {
+                            let xg = &xt_ref[kg * g * batch..];
+                            let sxg = &sxt_ref[kg * batch..(kg + 1) * batch];
+                            let mut bi = 0usize;
+                            while bi < batch {
+                                let bl = lanes.min(batch - bi);
+                                let mut dots = [0.0f32; simd::MAX_LANES];
+                                ops.dot_lanes(&mut dots[..bl], &xg[bi..], tile, batch);
+                                for (l, d) in dots[..bl].iter().enumerate() {
+                                    let dyv = dy[(bi + l) * rows + r];
+                                    acc_s += dyv * (*d - zp * sxg[bi + l]);
+                                    acc_z += dyv * sxg[bi + l];
+                                }
+                                bi += bl;
                             }
-                            acc_s += dyv * (dot - zp * sx_ref[bi * ng + kg]);
-                            acc_z += dyv * sx_ref[bi * ng + kg];
+                        } else {
+                            for bi in 0..batch {
+                                let dyv = dy[bi * rows + r];
+                                let xseg = &x[bi * k + kg * g..bi * k + (kg + 1) * g];
+                                let mut dot = 0.0f32;
+                                for j in 0..g {
+                                    dot += xseg[j] * tile[j];
+                                }
+                                acc_s += dyv * (dot - zp * sx_ref[bi * ng + kg]);
+                                acc_z += dyv * sx_ref[bi * ng + kg];
+                            }
                         }
                         drow[kg] = acc_s;
                         drow[ng + kg] = -sc * acc_z;
@@ -560,36 +770,129 @@ impl PackedMatrix {
     /// Shared fused core: accumulate yᵀ (rows, b) += X·Ŵᵀ directly from
     /// the packed codes. `yt` must be zero-initialized by the caller; see
     /// the module docs for the group-sum zero-point identity.
-    fn matmul_t_yt(&self, xd: &[f32], b: usize, threads: usize, yt: &mut [f32]) {
+    ///
+    /// Three tiers, picked per call from `ops` (see module docs):
+    /// * **batch lanes** (`b >= ops.lanes`) — X and the group sums are
+    ///   transposed once so consecutive batch elements sit in consecutive
+    ///   lanes; each group dot produces up to `lanes` output elements per
+    ///   vector op, and the scale/zero combine consumes the lane results
+    ///   in ascending batch order, matching the scalar loop.
+    /// * **weight-row lanes** (`1 < b < ops.lanes`, covering matvec) —
+    ///   up to `lanes` weight rows are unpacked into one interleaved tile
+    ///   (`tile[j·lanes + l]` = code j of row l) so each lane carries one
+    ///   output row's dot against the same x segment.
+    /// * **scalar** (`ops.lanes == 1`) — the seed's loop, verbatim.
+    fn matmul_t_yt(
+        &self,
+        xd: &[f32],
+        b: usize,
+        threads: usize,
+        yt: &mut [f32],
+        ops: &SimdOps,
+        scr: &mut KernelScratch,
+    ) {
         let (rows, g, k) = (self.rows, self.group, self.cols);
         let ng = self.n_groups();
-        let sx = group_sums(xd, b, k, g, ng);
+        let KernelScratch { sx, sxt, xt, tiles, .. } = scr;
+        group_sums_into(xd, b, k, g, ng, sx);
         // yᵀ (rows, b): each worker owns a contiguous slab of output rows.
         let (sd, zd) = (self.scales.data(), self.zeros.data());
-        let (bits, sx_ref) = (self.bits, &sx);
-        par_row_chunks(yt, b, rows, threads, |r0, chunk| {
-            // peqa-lint: allow(hot-path-alloc) -- reusable per-thread
-            // group tile, one per call, amortized over the worker's
-            // whole slab; pooling it is the noted ROADMAP follow-up.
-            let mut tile = vec![0.0f32; g];
-            for (ri, yrow) in chunk.chunks_mut(b).enumerate() {
-                let r = r0 + ri;
-                let prow = self.row_bytes(r);
-                for kg in 0..ng {
-                    pack::unpack_into_f32(prow, bits, kg * g, &mut tile);
-                    let sc = sd[r * ng + kg];
-                    let zp = zd[r * ng + kg];
-                    for bi in 0..b {
-                        let xseg = &xd[bi * k + kg * g..bi * k + (kg + 1) * g];
-                        let mut dot = 0.0f32;
-                        for j in 0..g {
-                            dot += xseg[j] * tile[j];
+        let (bits, sx_ref) = (self.bits, &*sx);
+        let lanes = ops.lanes;
+        if lanes > 1 && b >= lanes {
+            // Batch-lane tier: lanes run across batch elements.
+            transpose_into(xd, b, k, xt);
+            transpose_into(sx_ref, b, ng, sxt);
+            let (xt_ref, sxt_ref) = (&*xt, &*sxt);
+            tiles.clear();
+            tiles.resize(n_workers(threads, rows) * g, 0.0);
+            par_row_chunks_tiled(yt, b, rows, threads, tiles, g, |r0, chunk, tile| {
+                for (ri, yrow) in chunk.chunks_mut(b).enumerate() {
+                    let r = r0 + ri;
+                    let prow = self.row_bytes(r);
+                    for kg in 0..ng {
+                        unpack_group(prow, bits, kg * g, tile, true);
+                        let sc = sd[r * ng + kg];
+                        let zp = zd[r * ng + kg];
+                        // Column kg·g + j of xᵀ starts at xt[(kg·g + j)·b];
+                        // lane l of block bi reads xt[…·b + bi + l].
+                        let xg = &xt_ref[kg * g * b..];
+                        let sxg = &sxt_ref[kg * b..(kg + 1) * b];
+                        let mut bi = 0usize;
+                        while bi < b {
+                            let bl = lanes.min(b - bi);
+                            let mut dots = [0.0f32; simd::MAX_LANES];
+                            ops.dot_lanes(&mut dots[..bl], &xg[bi..], tile, b);
+                            for (l, d) in dots[..bl].iter().enumerate() {
+                                yrow[bi + l] += sc * (*d - zp * sxg[bi + l]);
+                            }
+                            bi += bl;
                         }
-                        yrow[bi] += sc * (dot - zp * sx_ref[bi * ng + kg]);
                     }
                 }
-            }
-        });
+            });
+        } else if lanes > 1 {
+            // Weight-row-lane tier (small b, incl. matvec): lanes run
+            // across output rows via an interleaved code tile.
+            tiles.clear();
+            tiles.resize(n_workers(threads, rows) * lanes * g, 0.0);
+            par_row_chunks_tiled(yt, b, rows, threads, tiles, lanes * g, |r0, chunk, tilei| {
+                let nr = chunk.len() / b;
+                let mut rb = 0usize;
+                while rb < nr {
+                    let rl = lanes.min(nr - rb);
+                    for kg in 0..ng {
+                        for l in 0..rl {
+                            let prow = self.row_bytes(r0 + rb + l);
+                            pack::unpack_into_f32_strided(
+                                prow,
+                                bits,
+                                kg * g,
+                                &mut tilei[l..],
+                                g,
+                                lanes,
+                            );
+                        }
+                        for bi in 0..b {
+                            let xseg = &xd[bi * k + kg * g..bi * k + (kg + 1) * g];
+                            let mut dots = [0.0f32; simd::MAX_LANES];
+                            ops.dot_lanes(&mut dots[..rl], tilei, xseg, lanes);
+                            for (l, d) in dots[..rl].iter().enumerate() {
+                                let r = r0 + rb + l;
+                                let sc = sd[r * ng + kg];
+                                let zp = zd[r * ng + kg];
+                                chunk[(rb + l) * b + bi] +=
+                                    sc * (*d - zp * sx_ref[bi * ng + kg]);
+                            }
+                        }
+                    }
+                    rb += rl;
+                }
+            });
+        } else {
+            // Scalar tier: the seed's loop, verbatim, over a pooled tile.
+            tiles.clear();
+            tiles.resize(n_workers(threads, rows) * g, 0.0);
+            par_row_chunks_tiled(yt, b, rows, threads, tiles, g, |r0, chunk, tile| {
+                for (ri, yrow) in chunk.chunks_mut(b).enumerate() {
+                    let r = r0 + ri;
+                    let prow = self.row_bytes(r);
+                    for kg in 0..ng {
+                        pack::unpack_into_f32(prow, bits, kg * g, tile);
+                        let sc = sd[r * ng + kg];
+                        let zp = zd[r * ng + kg];
+                        for bi in 0..b {
+                            let xseg = &xd[bi * k + kg * g..bi * k + (kg + 1) * g];
+                            let mut dot = 0.0f32;
+                            for j in 0..g {
+                                dot += xseg[j] * tile[j];
+                            }
+                            yrow[bi] += sc * (dot - zp * sx_ref[bi * ng + kg]);
+                        }
+                    }
+                }
+            });
+        }
     }
 }
 
@@ -699,17 +1002,50 @@ fn check_adapter_shape(scales: &Tensor, zeros: &Tensor, rows: usize, ng: usize) 
 /// `matmul_t`/`matmul_t_rows`/`matmul_t_ragged`/`grad_scales_zeros`
 /// depends on all of them folding the zero point through the SAME
 /// reduction order.
-fn group_sums(x: &[f32], m: usize, k: usize, g: usize, ng: usize) -> Vec<f32> {
-    // peqa-lint: allow(hot-path-alloc) -- one (m, n_groups) sum buffer
-    // per GEMM call, amortized over the rows·cols inner-loop work it
-    // saves (the zero-point folding identity).
-    let mut sx = vec![0.0f32; m * ng];
+fn group_sums_into(x: &[f32], m: usize, k: usize, g: usize, ng: usize, sx: &mut Vec<f32>) {
+    sx.clear();
+    sx.resize(m * ng, 0.0);
     for bi in 0..m {
         for kg in 0..ng {
             sx[bi * ng + kg] = x[bi * k + kg * g..bi * k + (kg + 1) * g].iter().sum();
         }
     }
-    sx
+}
+
+/// Transpose a row-major `rows × cols` matrix into `dst` (col-major, i.e.
+/// `dst[c·rows + r] = src[r·cols + c]`) — the once-per-call staging step
+/// of the batch-lane SIMD tier, so batch elements become the contiguous
+/// fast axis the lanes stride over.
+fn transpose_into(src: &[f32], rows: usize, cols: usize, dst: &mut Vec<f32>) {
+    dst.clear();
+    dst.resize(rows * cols, 0.0);
+    for r in 0..rows {
+        for c in 0..cols {
+            dst[c * rows + r] = src[r * cols + c];
+        }
+    }
+}
+
+/// Unpack one group of codes into an f32 tile, taking the 2-bit
+/// multiply-spread fast path ([`simd::unpack2_into_f32`]) only on lane
+/// tiers — the scalar tier keeps the seed's byte-wise unpacker verbatim.
+/// Both produce identical tiles (codes are exact small integers), so this
+/// split is about keeping the scalar path textually untouched, not about
+/// values.
+#[inline]
+fn unpack_group(prow: &[u8], bits: u8, start: usize, tile: &mut [f32], fast2: bool) {
+    if fast2 && bits == 2 {
+        simd::unpack2_into_f32(prow, start, tile);
+    } else {
+        pack::unpack_into_f32(prow, bits, start, tile);
+    }
+}
+
+/// Worker count [`par_row_chunks`]/[`par_row_chunks_tiled`] will actually
+/// use for a `rows`-row job — callers size per-worker tile slabs off this.
+#[inline]
+fn n_workers(threads: usize, rows: usize) -> usize {
+    threads.max(1).min(rows)
 }
 
 /// Worker boundaries for [`PackedMatrix::matmul_t_ragged`]: cut the
@@ -719,12 +1055,11 @@ fn group_sums(x: &[f32], m: usize, k: usize, g: usize, ng: usize) -> Vec<f32> {
 /// (any row cut is exact — output rows are mutually independent), so a
 /// single long prefill span still fans out over all `threads` workers.
 /// Returns ascending cut rows starting at 0 and ending at `m`.
-fn ragged_cuts(spans: &[usize], threads: usize, m: usize) -> Vec<usize> {
+fn ragged_cuts_into(spans: &[usize], threads: usize, m: usize, cuts: &mut Vec<usize>) {
     let threads = threads.max(1).min(m);
     let budget = m.div_ceil(threads);
-    // peqa-lint: allow(hot-path-alloc) -- a handful of worker cut
-    // indices (≤ threads + 1) per ragged call.
-    let mut cuts = vec![0usize];
+    cuts.clear();
+    cuts.push(0);
     let mut end = 0usize;
     for &sp in spans {
         end += sp;
@@ -743,7 +1078,6 @@ fn ragged_cuts(spans: &[usize], threads: usize, m: usize) -> Vec<usize> {
     if *cuts.last().unwrap() != m {
         cuts.push(m);
     }
-    cuts
 }
 
 /// Shard `out` (a `rows × elems_per_row` row-major buffer) into contiguous
@@ -774,6 +1108,43 @@ where
     });
 }
 
+/// [`par_row_chunks`] plus a per-worker tile: `tiles` is a pooled slab of
+/// at least `n_workers(threads, rows) · tile_len` floats, sliced into one
+/// disjoint `tile_len` window per worker and handed to
+/// `f(first_row, slab, tile)`. This is how the kernel entries reuse their
+/// group-code tiles across calls instead of allocating one per worker per
+/// call (the retired hot-path-alloc exemptions).
+pub(crate) fn par_row_chunks_tiled<F>(
+    out: &mut [f32],
+    elems_per_row: usize,
+    rows: usize,
+    threads: usize,
+    tiles: &mut [f32],
+    tile_len: usize,
+    f: F,
+) where
+    F: Fn(usize, &mut [f32], &mut [f32]) + Sync,
+{
+    if rows == 0 || elems_per_row == 0 {
+        return;
+    }
+    let workers = n_workers(threads, rows);
+    if workers == 1 {
+        f(0, out, &mut tiles[..tile_len]);
+        return;
+    }
+    let chunk_rows = rows.div_ceil(workers);
+    std::thread::scope(|s| {
+        let mut trest = tiles;
+        for (t, chunk) in out.chunks_mut(chunk_rows * elems_per_row).enumerate() {
+            let (tile, rest) = std::mem::take(&mut trest).split_at_mut(tile_len);
+            trest = rest;
+            let f = &f;
+            s.spawn(move || f(t * chunk_rows, chunk, tile));
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -793,6 +1164,109 @@ mod tests {
         let x = Tensor::normal(&[batch, cols], 1.0, &mut rng);
         let q = quantize_rtn(&w, bits, group).unwrap();
         (x, PackedMatrix::from_quantized(&q))
+    }
+
+    /// Test-side shim over [`ragged_cuts_into`] (the production entry
+    /// pools the cut vector; the cut-shape assertions below want a value).
+    fn ragged_cuts(spans: &[usize], threads: usize, m: usize) -> Vec<usize> {
+        let mut cuts = Vec::new();
+        ragged_cuts_into(spans, threads, m, &mut cuts);
+        cuts
+    }
+
+    /// The tentpole contract: every fused entry point must produce
+    /// bitwise-identical f32 results under the detected vector tier and
+    /// the scalar baseline, across bit widths, groupings, odd shapes
+    /// (cols not a lane multiple, batch below/above the lane width,
+    /// single row/col), thread counts, and a scratch reused across
+    /// mismatched shapes. On a host without AVX2/NEON `detected()` ==
+    /// `scalar()` and the test degenerates to self-consistency.
+    #[test]
+    fn simd_tiers_are_bitwise_equal_to_scalar_everywhere() {
+        let (sc_ops, vec_ops) = (simd::scalar(), simd::detected());
+        // One scratch pair reused across every shape: stale contents from
+        // a previous (larger or smaller) call must never leak into results.
+        let mut scr_s = KernelScratch::default();
+        let mut scr_v = KernelScratch::default();
+        for (rows, cols, batch) in [
+            (13usize, 128usize, 9usize),
+            (8, 48, 5),
+            (37, 192, 1),
+            (1, 64, 3),
+            (5, 80, 16),
+            (64, 64, 8),
+        ] {
+            for bits in [2u8, 3, 4] {
+                for group in [None, Some(16), Some(cols / 4)] {
+                    let tag = format!("rows={rows} cols={cols} b={batch} bits={bits} group={group:?}");
+                    let (x, pm) = setup(rows, cols, batch, bits, group, 77 + bits as u64);
+                    let mut rng = Pcg32::new(101);
+                    let dy = Tensor::normal(&[batch, rows], 1.0, &mut rng);
+                    for threads in [1usize, 3] {
+                        // Fused GEMM (yT core, both batch- and row-lane tiers).
+                        let ys = pm.matmul_t_with_ops(&x, threads, sc_ops).unwrap();
+                        let yv = pm.matmul_t_with_ops(&x, threads, vec_ops).unwrap();
+                        assert_eq!(ys.data(), yv.data(), "matmul {tag} threads={threads}");
+                        // Ragged direct-layout entry, several span shapes.
+                        let spans_set: &[Vec<usize>] = &[
+                            vec![batch],
+                            vec![1usize; batch],
+                            if batch >= 3 { vec![batch - 2, 1, 1] } else { vec![batch] },
+                        ];
+                        for spans in spans_set {
+                            let mut os = vec![f32::NAN; batch * rows];
+                            let mut ov = vec![f32::NAN; batch * rows];
+                            pm.matmul_t_ragged_core(x.data(), spans, threads, &mut os, sc_ops, &mut scr_s)
+                                .unwrap();
+                            pm.matmul_t_ragged_core(x.data(), spans, threads, &mut ov, vec_ops, &mut scr_v)
+                                .unwrap();
+                            assert_eq!(os, ov, "ragged {tag} spans={spans:?} threads={threads}");
+                            assert_eq!(os.as_slice(), ys.data(), "ragged-vs-matmul {tag}");
+                        }
+                        // Decode matvec (row-lane tier on the vector side).
+                        let mut rs = vec![0.0f32; rows];
+                        let mut rv = vec![0.0f32; rows];
+                        pm.matvec_t_core(&x.data()[..cols], threads, &mut rs, sc_ops, &mut scr_s)
+                            .unwrap();
+                        pm.matvec_t_core(&x.data()[..cols], threads, &mut rv, vec_ops, &mut scr_v)
+                            .unwrap();
+                        assert_eq!(rs, rv, "matvec {tag} threads={threads}");
+                        // Backward, input side.
+                        let mut dxs = vec![f32::NAN; batch * cols];
+                        let mut dxv = vec![f32::NAN; batch * cols];
+                        pm.grad_input_core(dy.data(), batch, threads, &mut dxs, sc_ops, &mut scr_s)
+                            .unwrap();
+                        pm.grad_input_core(dy.data(), batch, threads, &mut dxv, vec_ops, &mut scr_v)
+                            .unwrap();
+                        assert_eq!(dxs, dxv, "grad_input {tag} threads={threads}");
+                        // Backward, adapter side.
+                        let (dss, dzs) = pm
+                            .grad_scales_zeros_core(x.data(), dy.data(), batch, threads, sc_ops, &mut scr_s)
+                            .unwrap();
+                        let (dsv, dzv) = pm
+                            .grad_scales_zeros_core(x.data(), dy.data(), batch, threads, vec_ops, &mut scr_v)
+                            .unwrap();
+                        assert_eq!(dss.data(), dsv.data(), "ds {tag} threads={threads}");
+                        assert_eq!(dzs.data(), dzv.data(), "dz {tag} threads={threads}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_tier_is_the_seed_baseline_and_env_resolves_it() {
+        // `resolve` is the PEQA_SIMD entry: "scalar" must pin the
+        // lanes == 1 table (the verbatim seed loops); anything else is
+        // the detected table.
+        assert_eq!(simd::resolve(Some("scalar")).lanes, 1);
+        assert_eq!(simd::resolve(None).name, simd::detected().name);
+        // And the scalar table really drives the baseline path: results
+        // match the seed's reference matmul within its tolerance.
+        let (x, pm) = setup(11, 64, 4, 3, Some(16), 29);
+        let y = pm.matmul_t_with_ops(&x, 2, simd::scalar()).unwrap();
+        let yr = reference_dequant_matmul(&x, &pm).unwrap();
+        assert!(y.max_abs_diff(&yr) <= 1e-4);
     }
 
     #[test]

@@ -7,6 +7,7 @@ pub mod linalg;
 pub mod optq;
 pub mod pack;
 pub mod rtn;
+pub mod simd;
 
 pub use kernels::{reference_dequant_matmul, PackedMatrix};
 pub use optq::{quantize_optq, weighted_error};

@@ -173,6 +173,38 @@ pub fn unpack_into_f32(packed: &[u8], bits: u8, start: usize, out: &mut [f32]) {
     }
 }
 
+/// Strided variant of [`unpack_into_f32`]: code `i` lands at
+/// `out[i * stride]` (the interleaved lane tiles the SIMD kernel tiers
+/// build — one weight row per lane, `stride` = lane count). `count` codes
+/// are written; `out` must cover `(count - 1) * stride + 1` slots.
+#[inline]
+pub fn unpack_into_f32_strided(
+    packed: &[u8],
+    bits: u8,
+    start: usize,
+    out: &mut [f32],
+    count: usize,
+    stride: usize,
+) {
+    debug_assert!(count == 0 || out.len() > (count - 1) * stride);
+    let b = bits as usize;
+    let mask = (1u64 << bits) - 1;
+    let mut i = 0usize;
+    let mut bitpos = start * b;
+    while i < count {
+        let byte = bitpos >> 3;
+        let off = bitpos & 7;
+        let mut w = read_word(packed, byte) >> off;
+        let take = ((64 - off) / b).min(count - i);
+        for _ in 0..take {
+            out[i * stride] = (w & mask) as f32;
+            w >>= b;
+            i += 1;
+        }
+        bitpos += take * b;
+    }
+}
+
 /// Exact packed size in bytes for `n` codes at `bits` width.
 pub fn packed_size(n: usize, bits: u8) -> usize {
     (n * bits as usize).div_ceil(8)
@@ -231,6 +263,30 @@ mod tests {
                 unpack_into_f32(&packed, bits, start, &mut tile);
                 for (j, &v) in tile.iter().enumerate() {
                     assert_eq!(v, codes[start + j] as f32, "bits={bits} start={start} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn strided_unpack_matches_contiguous() {
+        let mut rng = Pcg32::new(31);
+        for bits in [2u8, 3, 4] {
+            let n = 150usize;
+            let codes: Vec<u8> =
+                (0..n).map(|_| (rng.next_u32() & ((1 << bits) - 1)) as u8).collect();
+            let packed = pack_codes(&codes, bits);
+            for (start, len, stride) in [(0usize, 64usize, 4usize), (5, 33, 8), (n - 3, 3, 2)] {
+                let mut flat = vec![0.0f32; len];
+                unpack_into_f32(&packed, bits, start, &mut flat);
+                let mut strided = vec![-1.0f32; len * stride];
+                unpack_into_f32_strided(&packed, bits, start, &mut strided, len, stride);
+                for j in 0..len {
+                    assert_eq!(
+                        strided[j * stride],
+                        flat[j],
+                        "bits={bits} start={start} stride={stride} j={j}"
+                    );
                 }
             }
         }

@@ -1,0 +1,562 @@
+//! Runtime-dispatched SIMD primitives for the packed hot loops.
+//!
+//! One function table ([`SimdOps`]) is chosen once per process and every
+//! packed kernel (`quant::kernels`) and dense LM-head kernel
+//! (`model::blocks`) routes its inner loop through it:
+//!
+//! * **scalar** — the verbatim baseline loops. `lanes == 1`; the packed
+//!   kernels keep their original contiguous code on this tier, so scalar
+//!   dispatch is byte-for-byte the pre-SIMD implementation.
+//! * **avx2** — x86_64, selected at runtime via
+//!   `is_x86_feature_detected!("avx2")`. 8 f32 lanes.
+//! * **neon** — aarch64, where NEON is a baseline ISA feature. 4 f32 lanes.
+//!
+//! # The bitwise contract
+//!
+//! Every SIMD path must produce results **bitwise identical** to the scalar
+//! baseline — the whole parity/invariance test suite (and the serve/train
+//! bitwise contracts built on it) inherits this. Two rules make that hold:
+//!
+//! 1. **Vectorize across independent output elements, never across a
+//!    reduction.** Each vector lane owns one output element's accumulator
+//!    and steps the reduction index `j` in the same order as the scalar
+//!    loop. No horizontal adds, no multi-accumulator splitting.
+//! 2. **Separate multiply and add, never FMA.** The scalar loops round
+//!    after the multiply and again after the add; a fused multiply-add
+//!    rounds once and diverges in the last ulp. The ~2× FMA throughput is
+//!    deliberately left on the table to keep f32 results bit-exact.
+//!
+//! Dispatch is resolved once ([`active`], honouring `PEQA_SIMD=scalar|auto`)
+//! and cached; tests drive [`scalar`] vs [`detected`] explicitly so both
+//! tiers are exercised in one process.
+//!
+//! # 2-bit fast unpack
+//!
+//! [`unpack2_into_f32`] specializes the code-tile unpack for the 2-bit
+//! width with a u64 multiply-spread: one 16-bit load holds 8 codes, and two
+//! masked multiplies fan them out to one byte each in a u64
+//! (see [`spread8`]). A popcount identity over the packed word
+//! ([`sum2_codes`]) cross-checks the expansion in debug builds. A full
+//! popcount *dot* restructuring (counting code-bit/sign agreements) would
+//! be faster still but changes the reduction order, so it is deliberately
+//! not used on the f32 path.
+
+use crate::quant::pack;
+use std::sync::OnceLock;
+
+/// Widest lane count any tier uses — size stack-allocated accumulator
+/// blocks (`[f32; MAX_LANES]`) with this.
+pub const MAX_LANES: usize = 8;
+
+/// The per-process kernel function table. Fields are function pointers so
+/// the choice is data, not branches, on the hot path.
+pub struct SimdOps {
+    /// Tier name as recorded in benches: `"scalar"`, `"avx2"`, `"neon"`.
+    pub name: &'static str,
+    /// f32 lanes per vector op (1 for the scalar tier).
+    pub lanes: usize,
+    dot_lanes_impl: fn(&mut [f32], &[f32], &[f32], usize),
+    axpy_impl: fn(&mut [f32], f32, &[f32]),
+    axpy_sub_impl: fn(&mut [f32], f32, f32, &[f32]),
+}
+
+impl SimdOps {
+    /// Lane-parallel dot: `dots[l] += Σ_j mat[j·stride + l] · vec[j]`,
+    /// `j` ascending — each lane is one output element's accumulator and
+    /// sees the exact scalar mul-then-add rounding sequence. `dots.len()`
+    /// may be anything up to [`MAX_LANES`]; partial blocks fall back to a
+    /// per-lane scalar loop with identical per-lane order.
+    #[inline]
+    pub fn dot_lanes(&self, dots: &mut [f32], mat: &[f32], vec: &[f32], stride: usize) {
+        assert!(
+            dots.is_empty()
+                || vec.is_empty()
+                || mat.len() >= (vec.len() - 1) * stride + dots.len(),
+            "dot_lanes: mat too short for {} lanes × {} steps at stride {stride}",
+            dots.len(),
+            vec.len(),
+        );
+        (self.dot_lanes_impl)(dots, mat, vec, stride);
+    }
+
+    /// `y[i] += a · x[i]` — element-independent, so any lane width is
+    /// bitwise-equal to the scalar loop.
+    #[inline]
+    pub fn axpy(&self, y: &mut [f32], a: f32, x: &[f32]) {
+        assert_eq!(y.len(), x.len(), "axpy: length mismatch");
+        (self.axpy_impl)(y, a, x);
+    }
+
+    /// `y[i] += a · (x[i] − z)` — the `grad_input` inner update. The
+    /// per-element op sequence (sub, mul, add) matches the scalar loop.
+    #[inline]
+    pub fn axpy_sub(&self, y: &mut [f32], a: f32, z: f32, x: &[f32]) {
+        assert_eq!(y.len(), x.len(), "axpy_sub: length mismatch");
+        (self.axpy_sub_impl)(y, a, z, x);
+    }
+}
+
+// ---------------------------------------------------------------- scalar
+
+fn dot_lanes_scalar(dots: &mut [f32], mat: &[f32], vec: &[f32], stride: usize) {
+    for (l, d) in dots.iter_mut().enumerate() {
+        let mut acc = *d;
+        for (j, &v) in vec.iter().enumerate() {
+            acc += mat[j * stride + l] * v;
+        }
+        *d = acc;
+    }
+}
+
+fn axpy_scalar(y: &mut [f32], a: f32, x: &[f32]) {
+    for (yi, &xi) in y.iter_mut().zip(x.iter()) {
+        *yi += a * xi;
+    }
+}
+
+fn axpy_sub_scalar(y: &mut [f32], a: f32, z: f32, x: &[f32]) {
+    for (yi, &xi) in y.iter_mut().zip(x.iter()) {
+        *yi += a * (xi - z);
+    }
+}
+
+static SCALAR: SimdOps = SimdOps {
+    name: "scalar",
+    lanes: 1,
+    dot_lanes_impl: dot_lanes_scalar,
+    axpy_impl: axpy_scalar,
+    axpy_sub_impl: axpy_sub_scalar,
+};
+
+// ----------------------------------------------------------------- avx2
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use core::arch::x86_64::{
+        _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_storeu_ps,
+        _mm256_sub_ps,
+    };
+
+    pub(super) const LANES: usize = 8;
+
+    // SAFETY: `unsafe fn` because of `#[target_feature]` — callers must
+    // ensure the host supports AVX2; the only callers are the shims below,
+    // reachable solely through the table installed by `detected()` after
+    // `is_x86_feature_detected!("avx2")`. All loads/stores stay inside the
+    // slice bounds the `SimdOps` wrappers assert before dispatch.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_lanes(dots: &mut [f32], mat: &[f32], vec: &[f32], stride: usize) {
+        if dots.len() != LANES {
+            super::dot_lanes_scalar(dots, mat, vec, stride);
+            return;
+        }
+        let mp = mat.as_ptr();
+        let mut acc = _mm256_loadu_ps(dots.as_ptr());
+        for (j, &v) in vec.iter().enumerate() {
+            let m = _mm256_loadu_ps(mp.add(j * stride));
+            // mul then add — NOT fmadd; see the bitwise contract.
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(m, _mm256_set1_ps(v)));
+        }
+        _mm256_storeu_ps(dots.as_mut_ptr(), acc);
+    }
+
+    // SAFETY: `unsafe fn` because of `#[target_feature]` — same AVX2
+    // precondition and in-bounds argument as `dot_lanes` above.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        let n = y.len();
+        let yp = y.as_mut_ptr();
+        let xp = x.as_ptr();
+        let av = _mm256_set1_ps(a);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let yv = _mm256_loadu_ps(yp.add(i));
+            let xv = _mm256_loadu_ps(xp.add(i));
+            _mm256_storeu_ps(yp.add(i), _mm256_add_ps(yv, _mm256_mul_ps(av, xv)));
+            i += LANES;
+        }
+        while i < n {
+            y[i] += a * x[i];
+            i += 1;
+        }
+    }
+
+    // SAFETY: `unsafe fn` because of `#[target_feature]` — same AVX2
+    // precondition and in-bounds argument as `dot_lanes` above.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy_sub(y: &mut [f32], a: f32, z: f32, x: &[f32]) {
+        let n = y.len();
+        let yp = y.as_mut_ptr();
+        let xp = x.as_ptr();
+        let av = _mm256_set1_ps(a);
+        let zv = _mm256_set1_ps(z);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let yv = _mm256_loadu_ps(yp.add(i));
+            let xv = _mm256_loadu_ps(xp.add(i));
+            // sub, mul, add — the exact scalar op sequence per element.
+            let t = _mm256_mul_ps(av, _mm256_sub_ps(xv, zv));
+            _mm256_storeu_ps(yp.add(i), _mm256_add_ps(yv, t));
+            i += LANES;
+        }
+        while i < n {
+            y[i] += a * (x[i] - z);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn dot_lanes_avx2(dots: &mut [f32], mat: &[f32], vec: &[f32], stride: usize) {
+    // SAFETY: only reachable through the AVX2 table, which `detected()`
+    // installs after `is_x86_feature_detected!("avx2")` returned true;
+    // bounds were asserted by the `SimdOps::dot_lanes` wrapper.
+    unsafe { avx2::dot_lanes(dots, mat, vec, stride) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn axpy_avx2(y: &mut [f32], a: f32, x: &[f32]) {
+    // SAFETY: AVX2 presence established by `detected()` (see above);
+    // lengths were asserted equal by the `SimdOps::axpy` wrapper.
+    unsafe { avx2::axpy(y, a, x) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn axpy_sub_avx2(y: &mut [f32], a: f32, z: f32, x: &[f32]) {
+    // SAFETY: AVX2 presence established by `detected()` (see above);
+    // lengths were asserted equal by the `SimdOps::axpy_sub` wrapper.
+    unsafe { avx2::axpy_sub(y, a, z, x) }
+}
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: SimdOps = SimdOps {
+    name: "avx2",
+    lanes: avx2::LANES,
+    dot_lanes_impl: dot_lanes_avx2,
+    axpy_impl: axpy_avx2,
+    axpy_sub_impl: axpy_sub_avx2,
+};
+
+// ----------------------------------------------------------------- neon
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use core::arch::aarch64::{vaddq_f32, vdupq_n_f32, vld1q_f32, vmulq_f32, vst1q_f32, vsubq_f32};
+
+    pub(super) const LANES: usize = 4;
+
+    // SAFETY: `unsafe fn` because the intrinsics are; NEON is a baseline
+    // aarch64 feature so there is no runtime precondition beyond the
+    // in-bounds arguments the `SimdOps` wrappers assert before dispatch.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot_lanes(dots: &mut [f32], mat: &[f32], vec: &[f32], stride: usize) {
+        if dots.len() != LANES {
+            super::dot_lanes_scalar(dots, mat, vec, stride);
+            return;
+        }
+        let mp = mat.as_ptr();
+        let mut acc = vld1q_f32(dots.as_ptr());
+        for (j, &v) in vec.iter().enumerate() {
+            let m = vld1q_f32(mp.add(j * stride));
+            // mul then add — NOT vfmaq; see the bitwise contract.
+            acc = vaddq_f32(acc, vmulq_f32(m, vdupq_n_f32(v)));
+        }
+        vst1q_f32(dots.as_mut_ptr(), acc);
+    }
+
+    // SAFETY: `unsafe fn` because the intrinsics are; same in-bounds
+    // argument as `dot_lanes` above.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        let n = y.len();
+        let yp = y.as_mut_ptr();
+        let xp = x.as_ptr();
+        let av = vdupq_n_f32(a);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let yv = vld1q_f32(yp.add(i));
+            let xv = vld1q_f32(xp.add(i));
+            vst1q_f32(yp.add(i), vaddq_f32(yv, vmulq_f32(av, xv)));
+            i += LANES;
+        }
+        while i < n {
+            y[i] += a * x[i];
+            i += 1;
+        }
+    }
+
+    // SAFETY: `unsafe fn` because the intrinsics are; same in-bounds
+    // argument as `dot_lanes` above.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn axpy_sub(y: &mut [f32], a: f32, z: f32, x: &[f32]) {
+        let n = y.len();
+        let yp = y.as_mut_ptr();
+        let xp = x.as_ptr();
+        let av = vdupq_n_f32(a);
+        let zv = vdupq_n_f32(z);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let yv = vld1q_f32(yp.add(i));
+            let xv = vld1q_f32(xp.add(i));
+            let t = vmulq_f32(av, vsubq_f32(xv, zv));
+            vst1q_f32(yp.add(i), vaddq_f32(yv, t));
+            i += LANES;
+        }
+        while i < n {
+            y[i] += a * (x[i] - z);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn dot_lanes_neon(dots: &mut [f32], mat: &[f32], vec: &[f32], stride: usize) {
+    // SAFETY: NEON is baseline on aarch64; bounds were asserted by the
+    // `SimdOps::dot_lanes` wrapper.
+    unsafe { neon::dot_lanes(dots, mat, vec, stride) }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn axpy_neon(y: &mut [f32], a: f32, x: &[f32]) {
+    // SAFETY: NEON is baseline on aarch64; lengths were asserted equal by
+    // the `SimdOps::axpy` wrapper.
+    unsafe { neon::axpy(y, a, x) }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn axpy_sub_neon(y: &mut [f32], a: f32, z: f32, x: &[f32]) {
+    // SAFETY: NEON is baseline on aarch64; lengths were asserted equal by
+    // the `SimdOps::axpy_sub` wrapper.
+    unsafe { neon::axpy_sub(y, a, z, x) }
+}
+
+#[cfg(target_arch = "aarch64")]
+static NEON: SimdOps = SimdOps {
+    name: "neon",
+    lanes: neon::LANES,
+    dot_lanes_impl: dot_lanes_neon,
+    axpy_impl: axpy_neon,
+    axpy_sub_impl: axpy_sub_neon,
+};
+
+// -------------------------------------------------------------- dispatch
+
+/// The verbatim scalar baseline — what every parity test compares against.
+pub fn scalar() -> &'static SimdOps {
+    &SCALAR
+}
+
+/// Best tier this host supports, ignoring the `PEQA_SIMD` override.
+pub fn detected() -> &'static SimdOps {
+    #[cfg(target_arch = "x86_64")]
+    if is_x86_feature_detected!("avx2") {
+        return &AVX2;
+    }
+    #[cfg(target_arch = "aarch64")]
+    return &NEON;
+    #[cfg(not(target_arch = "aarch64"))]
+    &SCALAR
+}
+
+/// Resolve a preference string (the `PEQA_SIMD` value) to a tier:
+/// `"scalar"` forces the baseline; `"auto"`, unset, or anything else uses
+/// [`detected`].
+pub fn resolve(pref: Option<&str>) -> &'static SimdOps {
+    match pref {
+        Some("scalar") => &SCALAR,
+        _ => detected(),
+    }
+}
+
+/// The process-wide table: `resolve(PEQA_SIMD)`, computed once and cached.
+/// In-process tests that need both tiers call [`scalar`]/[`detected`]
+/// directly instead of re-reading the environment.
+pub fn active() -> &'static SimdOps {
+    static ACTIVE: OnceLock<&'static SimdOps> = OnceLock::new();
+    ACTIVE.get_or_init(|| {
+        let pref = std::env::var("PEQA_SIMD").ok();
+        resolve(pref.as_deref())
+    })
+}
+
+// --------------------------------------------------- 2-bit fast unpack
+
+/// Spread 8 two-bit codes (one 16-bit little-endian load) into one byte
+/// each of a u64, in order: byte `c` of the result is code `c`.
+///
+/// Two masked multiplies do all eight extractions: the even codes
+/// `e = h & 0x3333` multiplied by `M = 1 + 2^12 + 2^24 + 2^36` place code
+/// `2c` at bit `16c` (the shifted copies overlap, but each 2-bit field's
+/// carries die in the zeroed gap bits below the next kept position, so the
+/// mask `K` recovers clean fields), and likewise for the odd codes shifted
+/// up one byte.
+#[inline]
+pub fn spread8(h: u16) -> u64 {
+    const M: u64 = 1 | 1 << 12 | 1 << 24 | 1 << 36;
+    const K: u64 = 0x0003_0003_0003_0003;
+    let e = (h & 0x3333) as u64;
+    let o = ((h >> 2) & 0x3333) as u64;
+    (e.wrapping_mul(M) & K) | ((o.wrapping_mul(M) & K) << 8)
+}
+
+/// Sum of the 2-bit codes in a packed word — a popcount identity
+/// (`Σ codes = popcount(even bits) + 2·popcount(odd bits)`) used to
+/// cross-check [`spread8`] expansions in debug builds.
+#[inline]
+pub fn sum2_codes(w: u64) -> u32 {
+    const EVEN: u64 = 0x5555_5555_5555_5555;
+    (w & EVEN).count_ones() + 2 * ((w >> 1) & EVEN).count_ones()
+}
+
+/// 2-bit specialization of [`pack::unpack_into_f32`]: expands 8 codes per
+/// 16-bit load via [`spread8`] instead of walking a 64-bit shift register.
+/// Byte-unaligned starts (start % 4 ≠ 0) fall back to the generic path;
+/// kernel group starts are always multiples of the group size, which the
+/// packed formats keep byte-aligned in practice.
+#[inline]
+pub fn unpack2_into_f32(packed: &[u8], start: usize, out: &mut [f32]) {
+    if start % 4 != 0 {
+        pack::unpack_into_f32(packed, 2, start, out);
+        return;
+    }
+    let n = out.len();
+    let mut byte = start / 4;
+    let mut i = 0usize;
+    while i < n {
+        let b0 = packed.get(byte).copied().unwrap_or(0);
+        let b1 = packed.get(byte + 1).copied().unwrap_or(0);
+        let h = u16::from_le_bytes([b0, b1]);
+        let w = spread8(h);
+        debug_assert_eq!(
+            sum2_codes(h as u64),
+            w.to_le_bytes().iter().map(|&b| b as u32).sum::<u32>(),
+            "spread8 expansion lost codes"
+        );
+        let bytes = w.to_le_bytes();
+        let take = (n - i).min(8);
+        for (o, &b) in out[i..i + take].iter_mut().zip(bytes.iter()) {
+            *o = b as f32;
+        }
+        i += take;
+        byte += 2;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn rand_f32s(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+        (0..n).map(|_| (rng.next_u32() as f32 / u32::MAX as f32) * 2.0 - 1.0).collect()
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn dot_lanes_detected_is_bitwise_equal_to_scalar() {
+        let mut rng = Pcg32::new(41);
+        let det = detected();
+        let sc = scalar();
+        for &steps in &[0usize, 1, 3, 7, 16, 33, 127] {
+            for &nl in &[1usize, 2, 3, 4, 5, 7, 8] {
+                let stride = nl + (steps % 3); // lanes packed tighter or looser
+                let mat = rand_f32s(&mut rng, steps.saturating_sub(1) * stride + nl + 4);
+                let vecv = rand_f32s(&mut rng, steps);
+                let init = rand_f32s(&mut rng, nl);
+                let mut a = init.clone();
+                let mut b = init.clone();
+                sc.dot_lanes(&mut a, &mat, &vecv, stride);
+                det.dot_lanes(&mut b, &mat, &vecv, stride);
+                assert_bits_eq(&a, &b, &format!("dot_lanes steps={steps} nl={nl}"));
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_variants_detected_are_bitwise_equal_to_scalar() {
+        let mut rng = Pcg32::new(43);
+        let det = detected();
+        let sc = scalar();
+        for &n in &[0usize, 1, 3, 4, 7, 8, 9, 31, 64, 65] {
+            let x = rand_f32s(&mut rng, n);
+            let init = rand_f32s(&mut rng, n);
+            let a = 0.731f32;
+            let z = -0.25f32;
+            let (mut y1, mut y2) = (init.clone(), init.clone());
+            sc.axpy(&mut y1, a, &x);
+            det.axpy(&mut y2, a, &x);
+            assert_bits_eq(&y1, &y2, &format!("axpy n={n}"));
+            let (mut y1, mut y2) = (init.clone(), init.clone());
+            sc.axpy_sub(&mut y1, a, z, &x);
+            det.axpy_sub(&mut y2, a, z, &x);
+            assert_bits_eq(&y1, &y2, &format!("axpy_sub n={n}"));
+        }
+    }
+
+    #[test]
+    fn resolver_honours_scalar_and_defaults_to_detected() {
+        assert_eq!(resolve(Some("scalar")).name, "scalar");
+        assert_eq!(resolve(Some("scalar")).lanes, 1);
+        assert_eq!(resolve(None).name, detected().name);
+        assert_eq!(resolve(Some("auto")).name, detected().name);
+        // Unknown values fall through to auto rather than failing a run.
+        assert_eq!(resolve(Some("avx512-someday")).name, detected().name);
+        // The cached process-wide choice is one of the known tiers.
+        assert!(matches!(active().name, "scalar" | "avx2" | "neon"));
+        assert!(active().lanes >= 1 && active().lanes <= MAX_LANES);
+    }
+
+    #[test]
+    fn spread8_matches_bit_extraction_exhaustively() {
+        for h in 0..=u16::MAX {
+            let bytes = spread8(h).to_le_bytes();
+            for (c, &b) in bytes.iter().enumerate() {
+                assert_eq!(b, ((h >> (2 * c)) & 0x3) as u8, "h={h:#06x} code {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn sum2_codes_matches_naive_sum() {
+        let mut rng = Pcg32::new(47);
+        for _ in 0..200 {
+            let w = ((rng.next_u32() as u64) << 32) | rng.next_u32() as u64;
+            let naive: u32 = (0..32).map(|c| ((w >> (2 * c)) & 0x3) as u32).sum();
+            assert_eq!(sum2_codes(w), naive, "w={w:#018x}");
+        }
+    }
+
+    #[test]
+    fn unpack2_matches_generic_unpack() {
+        let mut rng = Pcg32::new(53);
+        let n = 300usize;
+        let codes: Vec<u8> = (0..n).map(|_| (rng.next_u32() & 0x3) as u8).collect();
+        let packed = pack::pack_codes(&codes, 2);
+        // Aligned starts (the kernel case), unaligned starts (fallback),
+        // tail lengths that end mid-halfword and past the stream.
+        for &(start, len) in
+            &[(0usize, n), (0, 7), (4, 16), (8, 33), (12, 5), (1, 10), (3, 21), (n - 2, 2)]
+        {
+            let mut fast = vec![-1.0f32; len];
+            let mut slow = vec![-2.0f32; len];
+            unpack2_into_f32(&packed, start, &mut fast);
+            pack::unpack_into_f32(&packed, 2, start, &mut slow);
+            assert_bits_eq(&fast, &slow, &format!("unpack2 start={start} len={len}"));
+        }
+    }
+
+    #[test]
+    fn dot_lanes_wrapper_rejects_short_mat() {
+        let res = std::panic::catch_unwind(|| {
+            let mut dots = [0.0f32; 4];
+            scalar().dot_lanes(&mut dots, &[1.0; 5], &[1.0; 3], 4);
+        });
+        assert!(res.is_err(), "short mat must be rejected before dispatch");
+    }
+}

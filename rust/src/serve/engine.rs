@@ -61,8 +61,8 @@ use anyhow::{anyhow, bail, Result};
 
 use super::kvcache::{KvCache, KvSeq};
 use crate::model::blocks::{
-    self, attend_seq_chunk, dense_rows_into, ensure, proj_into, rms_norm_rows,
-    rms_norm_rows_into, rope_freqs, silu, AttnScratch, LayerNames, ProjScratch,
+    self, attend_seq_chunk, ensure, proj_into, rms_norm_rows, rms_norm_rows_into, rope_freqs,
+    silu, AttnScratch, LayerNames, ProjScratch,
 };
 use crate::model::{Checkpoint, PackedModel};
 use crate::runtime::ArtifactMeta;
@@ -721,7 +721,14 @@ impl Engine {
             .fp_tensor(head_name)
             .ok_or_else(|| anyhow!("packed model missing fp tensor '{head_name}'"))?;
         let mut logits = vec![0.0f32; n_seqs * geom.vocab];
-        dense_rows_into(head, &scratch.h[..n_seqs * d], n_seqs, &mut logits);
+        blocks::dense_rows_core(
+            head,
+            &scratch.h[..n_seqs * d],
+            n_seqs,
+            &mut logits,
+            crate::quant::simd::active(),
+            &mut scratch.proj.kernel,
+        );
         Ok(logits)
     }
 }

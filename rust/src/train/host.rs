@@ -73,7 +73,7 @@ use super::{StepState, Tuner, TunerState};
 use crate::config::TrainConfig;
 use crate::data::Batch;
 use crate::model::blocks::{
-    attend_seq_backward, attend_seq_tape, dense_grad_rows_into, dense_rows_into, ensure,
+    attend_seq_backward, attend_seq_tape, dense_grad_rows_into, dense_rows_core, ensure,
     proj_into, rms_backward_into, rms_norm_rows_into, rope_freqs, shard_chunks,
     swiglu_backward_into, swiglu_rows_into, AttnScratch, LayerNames, ProjScratch, Tape,
 };
@@ -908,7 +908,14 @@ fn forward_tape(
         None => embed, // tied head
     };
     ensure(logits, m * geom.vocab);
-    dense_rows_into(head, &xn[..m * d], m, &mut logits[..m * geom.vocab]);
+    dense_rows_core(
+        head,
+        &xn[..m * d],
+        m,
+        &mut logits[..m * geom.vocab],
+        crate::quant::simd::active(),
+        &mut proj.kernel,
+    );
     Ok(())
 }
 
@@ -1150,7 +1157,8 @@ fn loss_and_dlogits_into(
 }
 
 /// One projection's backward: dX into `dx_out` (overwritten), the exact
-/// (ds, dz) STE reductions recorded at `grads[gi]`.
+/// (ds, dz) STE reductions recorded at `grads[gi]` — both through the
+/// arena's pooled kernel scratch and the active SIMD tier.
 #[allow(clippy::too_many_arguments)]
 fn proj_back(
     model: &PackedModel,
@@ -1162,11 +1170,13 @@ fn proj_back(
     m: usize,
     dx_out: &mut Vec<f32>,
     grads: &mut [Option<(Tensor, Tensor)>],
+    proj: &mut ProjScratch,
 ) -> Result<()> {
     let pm = matrix(model, name)?;
+    let ops = crate::quant::simd::active();
     ensure(dx_out, m * pm.cols);
-    pm.grad_input(dy, m, threads, &mut dx_out[..m * pm.cols])?;
-    let (ds, dz) = pm.grad_scales_zeros(x_in, dy, m, threads)?;
+    pm.grad_input_core(dy, m, threads, &mut dx_out[..m * pm.cols], ops, &mut proj.kernel)?;
+    let (ds, dz) = pm.grad_scales_zeros_core(x_in, dy, m, threads, ops, &mut proj.kernel)?;
     grads[gi] = Some((ds, dz));
     Ok(())
 }
@@ -1209,6 +1219,7 @@ fn backward(
         dv,
         grads,
         attn,
+        proj,
         ..
     } = arena;
     grads.clear();
@@ -1231,11 +1242,11 @@ fn backward(
         let g0 = layer * SLOTS;
 
         // x3 = x_mid + down(act): dx currently holds d(x3).
-        proj_back(model, threads, &ln.down, g0 + 6, &tp.act[..mf], &dx[..m * d], m, da, grads)?;
+        proj_back(model, threads, &ln.down, g0 + 6, &tp.act[..mf], &dx[..m * d], m, da, grads, proj)?;
         // act = silu(gate) ⊙ up.
         swiglu_backward_into(&da[..mf], &tp.gate[..mf], &tp.up[..mf], mf, dgate, dup);
-        proj_back(model, threads, &ln.gate, g0 + 4, &tp.h2[..m * d], &dgate[..mf], m, dh, grads)?;
-        proj_back(model, threads, &ln.up, g0 + 5, &tp.h2[..m * d], &dup[..mf], m, dh_b, grads)?;
+        proj_back(model, threads, &ln.gate, g0 + 4, &tp.h2[..m * d], &dgate[..mf], m, dh, grads, proj)?;
+        proj_back(model, threads, &ln.up, g0 + 5, &tp.h2[..m * d], &dup[..mf], m, dh_b, grads, proj)?;
         for (a, b) in dh[..m * d].iter_mut().zip(&dh_b[..m * d]) {
             *a += b;
         }
@@ -1247,7 +1258,7 @@ fn backward(
         }
 
         // x_mid = x_in + o(ctx): d(o out) = dx2.
-        proj_back(model, threads, &ln.o, g0 + 3, &tp.ctx[..m * d], &dx2[..m * d], m, dctx, grads)?;
+        proj_back(model, threads, &ln.o, g0 + 3, &tp.ctx[..m * d], &dx2[..m * d], m, dctx, grads, proj)?;
 
         // Attention backward, sharded over sequences (shared core).
         ensure(dq, m * d);
@@ -1272,12 +1283,12 @@ fn backward(
             &mut dv[..m * d],
             attn,
         );
-        proj_back(model, threads, &ln.q, g0, &tp.h1[..m * d], &dq[..m * d], m, dh, grads)?;
-        proj_back(model, threads, &ln.k, g0 + 1, &tp.h1[..m * d], &dk[..m * d], m, dh_b, grads)?;
+        proj_back(model, threads, &ln.q, g0, &tp.h1[..m * d], &dq[..m * d], m, dh, grads, proj)?;
+        proj_back(model, threads, &ln.k, g0 + 1, &tp.h1[..m * d], &dk[..m * d], m, dh_b, grads, proj)?;
         for (a, b) in dh[..m * d].iter_mut().zip(&dh_b[..m * d]) {
             *a += b;
         }
-        proj_back(model, threads, &ln.v, g0 + 2, &tp.h1[..m * d], &dv[..m * d], m, dh_b, grads)?;
+        proj_back(model, threads, &ln.v, g0 + 2, &tp.h1[..m * d], &dv[..m * d], m, dh_b, grads, proj)?;
         for (a, b) in dh[..m * d].iter_mut().zip(&dh_b[..m * d]) {
             *a += b;
         }

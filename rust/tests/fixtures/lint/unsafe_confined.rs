@@ -1,0 +1,55 @@
+//! Fixture: unsafe-confined under the in-scope virtual path
+//! `quant/simd.rs` — the one module where `unsafe` is legal at all.
+//! There the rule enforces the `// SAFETY:` discipline: every `unsafe`
+//! must sit under a `//` line comment starting with `SAFETY`, directly
+//! above the keyword (attributes in between are stepped over, trailing
+//! on the same line counts). Lines tagged `//~ unsafe-confined` must
+//! fire; everything else is silent.
+
+pub fn covered(p: *const f32) -> f32 {
+    // SAFETY: caller guarantees `p` points at a live, aligned f32.
+    unsafe { *p }
+}
+
+// SAFETY: `unsafe fn` because of `#[target_feature]` — the comment
+// sits above the attribute and still counts as directly above.
+#[target_feature(enable = "avx2")]
+pub unsafe fn covered_through_attribute(p: *const f32) -> f32 {
+    *p
+}
+
+pub fn trailing_comment_counts(p: *const f32) -> f32 {
+    unsafe { *p } // SAFETY: same line as the keyword is still covered
+}
+
+pub fn bare(p: *const f32) -> f32 {
+    unsafe { *p } //~ unsafe-confined
+}
+
+pub fn stale_comment(p: *const f32) -> f32 {
+    // SAFETY: a code line intervenes, so this covers nothing below it
+    let q = p;
+    unsafe { *q } //~ unsafe-confined
+}
+
+pub fn wrong_comment_kind(p: *const f32) -> f32 {
+    /* SAFETY: block comments do not count — the discipline is `//` */
+    unsafe { *p } //~ unsafe-confined
+}
+
+pub fn wrong_case(p: *const f32) -> f32 {
+    // safety: lowercase is not the marker
+    unsafe { *p } //~ unsafe-confined
+}
+
+// ---- near misses: all silent ----
+
+pub fn keyword_in_string() -> &'static str {
+    // The word inside a string literal is not the keyword.
+    "unsafe { nope }"
+}
+
+pub fn keyword_adjacent_ident(unsafe_ish: usize) -> usize {
+    // `unsafe_ish` lexes as one identifier, not `unsafe` + `_ish`.
+    unsafe_ish + 1
+}

@@ -1,0 +1,23 @@
+//! Fixture: unsafe-confined outside `quant::simd` — any `unsafe` is a
+//! finding, SAFETY comment or not. Linted under the virtual paths
+//! `serve/fixture.rs` and `quant/kernels.rs` (the confinement is
+//! exact-module, so even a sibling of `quant::simd` is out).
+
+pub fn any_unsafe(p: *const f32) -> f32 {
+    unsafe { *p } //~ unsafe-confined
+}
+
+pub fn even_with_comment(p: *const f32) -> f32 {
+    // SAFETY: a justification does not make unsafe legal outside simd
+    unsafe { *p } //~ unsafe-confined
+}
+
+// ---- near misses: all silent ----
+
+pub fn spelled_out() -> &'static str {
+    "unsafe is only a word here"
+}
+
+pub fn keyword_flavored_ident(unsafe_count: usize) -> usize {
+    unsafe_count
+}

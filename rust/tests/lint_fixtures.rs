@@ -106,6 +106,16 @@ fn float_reduction_fixture() {
 }
 
 #[test]
+fn unsafe_confined_fixture() {
+    // Inside quant::simd the rule enforces the SAFETY-comment discipline.
+    check("unsafe_confined.rs", "quant/simd.rs", Some("unsafe-confined"));
+    // Anywhere else any `unsafe` is a finding, commented or not — even
+    // in a sibling module of quant::simd.
+    check("unsafe_outside.rs", "serve/fixture.rs", Some("unsafe-confined"));
+    check("unsafe_outside.rs", "quant/kernels.rs", Some("unsafe-confined"));
+}
+
+#[test]
 fn lock_across_blocking_fixture() {
     check("lock_blocking.rs", "serve/fixture.rs", Some("lock-across-blocking"));
     check_silent("lock_blocking.rs", "train/fixture.rs");

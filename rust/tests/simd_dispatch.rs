@@ -1,0 +1,140 @@
+//! Whole-run SIMD dispatch invariance (the `PEQA_SIMD` contract):
+//! decode and training outputs must be **bitwise identical** whether the
+//! kernels run on the scalar baseline or the host's detected vector
+//! tier, and `PEQA_SIMD=scalar` must actually force the baseline.
+//!
+//! `quant::simd::active()` reads `PEQA_SIMD` once per process, so each
+//! setting needs its own process: the parent test re-execs the current
+//! test binary twice (`PEQA_SIMD=scalar`, then `auto`), each child runs
+//! a small decode + train workload and prints an FNV digest of every
+//! f32 it produced plus the tier it dispatched to, and the parent
+//! compares the two reports.
+
+use peqa::config::TrainConfig;
+use peqa::data::Batch;
+use peqa::quant::simd;
+use peqa::serve::{self, Engine, ModelGeom};
+use peqa::train::{HostPeqaTuner, Tuner};
+use peqa::util::Pcg32;
+
+const GEOM: ModelGeom = ModelGeom { vocab: 300, d_model: 32, n_layers: 2, n_heads: 2, d_ff: 64 };
+
+fn fnv(h: &mut u64, bits: u32) {
+    *h ^= bits as u64;
+    *h = h.wrapping_mul(0x100_0000_01b3);
+}
+
+fn digest_f32s(vals: &[f32], h: &mut u64) {
+    for v in vals {
+        fnv(h, v.to_bits());
+    }
+}
+
+/// A small but representative run: batched prefill + greedy decode
+/// through the serving engine (packed GEMM, attention, dense LM head),
+/// then four host PEQA training steps (forward tape, backward through
+/// `grad_input` / `grad_scales_zeros`, Adam update). Every f32 the run
+/// produces folds into one digest.
+fn workload_digest() -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+
+    let (pm, _) = serve::synth_packed(&GEOM, 3, Some(16), 77).unwrap();
+    let mut eng = Engine::from_packed(pm.clone(), GEOM, 2).unwrap();
+    let mut cache = eng.new_cache(64);
+    let mut seq: Vec<u32> = vec![11, 7, 42, 99, 3, 250, 31, 18];
+    let mut logits = eng.prefill(&seq, &mut cache).unwrap();
+    digest_f32s(&logits, &mut h);
+    for _ in 0..8 {
+        let next = serve::argmax(&logits);
+        seq.push(next);
+        fnv(&mut h, next);
+        let mut refs = [&mut cache];
+        logits = eng.decode_batch(&[next], &mut refs).unwrap();
+        digest_f32s(&logits, &mut h);
+    }
+
+    let cfg = TrainConfig {
+        steps: 4,
+        lr: 2e-3,
+        warmup_steps: 1,
+        log_every: 0,
+        ..Default::default()
+    };
+    let mut tuner = HostPeqaTuner::from_packed(pm, GEOM, cfg, false, 2).unwrap();
+    let mut rng = Pcg32::new(5);
+    for _ in 0..4 {
+        let batch = Batch {
+            tokens: (0..3 * 12).map(|_| rng.below(GEOM.vocab as u32) as i32).collect(),
+            mask: vec![1.0; 3 * 11],
+            batch: 3,
+            seq: 12,
+        };
+        let loss = tuner.step(&batch).unwrap();
+        fnv(&mut h, loss.to_bits());
+    }
+    h
+}
+
+#[test]
+fn whole_run_outputs_are_bitwise_invariant_to_simd_dispatch() {
+    if std::env::var("PEQA_SIMD_CHILD").is_ok() {
+        // Child mode: run the workload under whatever PEQA_SIMD the
+        // parent pinned and report (digest, active tier) on stdout.
+        println!(
+            "dispatch-digest={:016x} simd={}",
+            workload_digest(),
+            simd::active().name
+        );
+        return;
+    }
+
+    let exe = std::env::current_exe().expect("current test binary path");
+    let run = |pref: &str| -> (String, String) {
+        let out = std::process::Command::new(&exe)
+            .args([
+                "whole_run_outputs_are_bitwise_invariant_to_simd_dispatch",
+                "--exact",
+                "--nocapture",
+            ])
+            .env("PEQA_SIMD", pref)
+            .env("PEQA_SIMD_CHILD", "1")
+            .output()
+            .expect("re-exec the test binary");
+        assert!(
+            out.status.success(),
+            "child run (PEQA_SIMD={pref}) failed:\n{}{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+        let line = stdout
+            .lines()
+            .find(|l| l.contains("dispatch-digest="))
+            .unwrap_or_else(|| panic!("no digest line in child output:\n{stdout}"));
+        let digest = line
+            .split("dispatch-digest=")
+            .nth(1)
+            .and_then(|r| r.split_whitespace().next())
+            .expect("digest value")
+            .to_string();
+        let tier = line
+            .split("simd=")
+            .nth(1)
+            .map(|r| r.trim().to_string())
+            .expect("tier name");
+        (digest, tier)
+    };
+
+    let (d_scalar, n_scalar) = run("scalar");
+    let (d_auto, n_auto) = run("auto");
+    assert_eq!(n_scalar, "scalar", "PEQA_SIMD=scalar must force the baseline tier");
+    assert_eq!(
+        n_auto,
+        simd::detected().name,
+        "PEQA_SIMD=auto must dispatch to the detected tier"
+    );
+    assert_eq!(
+        d_scalar, d_auto,
+        "decode+train digest diverged between scalar and {n_auto} dispatch"
+    );
+}

@@ -9,7 +9,10 @@ scripts/baselines/, and exits non-zero when the fused hot path regressed
 by more than the threshold (default 20%):
 
 * kernels: per (bits, group) config, the fused packed GEMM's mean_s may
-  not exceed baseline * (1 + threshold);
+  not exceed baseline * (1 + threshold). Gating requires the same SIMD
+  dispatch tier (top-level simd_path key) — a baseline that predates the
+  key or was recorded under another tier skips with a notice; the
+  in-process SIMD-vs-scalar speedup is reported alongside;
 * serve: tokens_per_s may not drop below baseline * (1 - threshold).
   Swap-time drift is reported but only warns (microsecond-scale numbers
   are too noisy to gate on); paged-KV page accounting (kv_pages_peak /
@@ -61,6 +64,22 @@ def diff_kernels(cur, base, thr):
     fails = []
     if not config_matches(cur, base, ["dim", "threads", "quick"]):
         return fails
+    # Timings are only comparable under the same SIMD dispatch tier. A
+    # baseline written before the simd work lacks the key entirely; a
+    # baseline recorded on a different host may carry another tier —
+    # both skip cleanly (reseed with --update on the gating host).
+    if cur.get("simd_path") != base.get("simd_path"):
+        if base.get("simd_path") is None:
+            print(
+                "  baseline predates the simd_path key — timings not comparable, "
+                "skipping (reseed with scripts/bench_diff.py --update)"
+            )
+        else:
+            print(
+                f"  simd dispatch differs (current {cur.get('simd_path')}, baseline "
+                f"{base.get('simd_path')}) — timings not comparable, skipping"
+            )
+        return fails
     bidx = {
         (e.get("bits"), e.get("group"), e.get("path")): e for e in base.get("results", [])
     }
@@ -75,6 +94,11 @@ def diff_kernels(cur, base, thr):
             f"  fused b{e['bits']}/{e['group']}: {e['mean_s'] * 1e3:.2f} ms "
             f"vs baseline {b['mean_s'] * 1e3:.2f} ms ({ratio:.0%} of baseline)"
         )
+        # The in-process SIMD-vs-scalar ratio rides along (reported only:
+        # it is a roofline scoreboard, not a regression axis of its own —
+        # a scalar-tier slowdown already shows up in the gated mean_s).
+        if e.get("speedup_vs_scalar"):
+            line += f", {e['speedup_vs_scalar']:.2f}x vs scalar tier"
         if ratio > 1.0 + thr:
             fails.append(line + f"  REGRESSION > +{thr:.0%}")
             print(line + "  ** REGRESSION **")

@@ -34,12 +34,24 @@ echo "== ok: lint clean, LINT.json written =="
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+echo "== simd dispatch slice: kernel/parity tests under scalar and auto =="
+# The SIMD tiers are bitwise-identical to the scalar baseline by
+# contract. The full suite above ran under the host default dispatch;
+# re-run the kernel + parity slice pinned to each end of the dispatch
+# (PEQA_SIMD is read once per process, so each setting needs its own
+# run). `simd` catches the tier parity fuzzers and the dispatch test,
+# `parity` the trainer-vs-engine / fused-vs-reference suites.
+PEQA_SIMD=scalar cargo test -q -- simd parity
+PEQA_SIMD=auto cargo test -q -- simd parity
+echo "== ok: dispatch-pinned test slice =="
+
 echo "== sanitizer pass (opt-in: PEQA_SANITIZE=1) =="
 # Deep UB/race hunting is too slow for every CI run, so it is an opt-in
 # stage: Miri when the toolchain has it (UB, aliasing, leaks), TSan as
 # the fallback (data races across the serve::/store:: thread pools).
-# Both runs scope to the concurrent suites — the rest of the crate is
-# single-threaded safe code under #![deny(unsafe_code)].
+# Both runs scope to the concurrent suites — all `unsafe` in the crate
+# is confined to quant::simd under the `unsafe-confined` lint rule
+# (each site carries a // SAFETY: argument); the rest is safe code.
 if [[ "${PEQA_SANITIZE:-0}" == "1" ]]; then
   if cargo miri --version >/dev/null 2>&1; then
     echo "== miri: serve + store test suites =="
